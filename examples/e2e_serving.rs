@@ -1,0 +1,120 @@
+//! END-TO-END serving driver (the EXPERIMENTS.md §E2E run): boots the full
+//! stack — AOT PJRT model, N+1 worker threads with an exponential
+//! straggler tail, dynamic batcher, TCP server — then drives it with
+//! concurrent TCP clients sending real test images at a Poisson rate, and
+//! reports accuracy, latency percentiles and throughput.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_serving
+//! ```
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use approxifer::coding::CodeParams;
+use approxifer::coordinator::{Service, ServiceConfig};
+use approxifer::data::TestSet;
+use approxifer::runtime::{CompiledModel, Manifest, Runtime};
+use approxifer::server::{Client, Server};
+use approxifer::util::stats::Summary;
+use approxifer::workers::{LatencyModel, PjrtEngine, WorkerSpec};
+
+fn main() -> Result<()> {
+    approxifer::util::logging::init();
+    let manifest = Manifest::load("artifacts")?;
+    let rt = Runtime::cpu()?;
+    let (arch, dataset) = ("resnet18_s", "syncifar");
+    let params = CodeParams::new(8, 1, 0);
+
+    // --- full stack -------------------------------------------------------
+    let entry = manifest.model(arch, dataset, 1)?;
+    let model = CompiledModel::load(&rt, &manifest.root, entry)?;
+    let payload = model.payload();
+    let testset = TestSet::load(&manifest, dataset)?;
+    let engine = Arc::new(PjrtEngine::new(model));
+    let mut cfg = ServiceConfig::new(params);
+    cfg.flush_after = Duration::from_millis(15);
+    // Exponential service tail on every worker: the environment the paper
+    // targets (coded redundancy rides out the tail).
+    cfg.worker_specs = vec![
+        WorkerSpec { latency: LatencyModel::Exponential { mean_ms: 4.0 } };
+        params.num_workers()
+    ];
+    let service = Arc::new(Service::start(engine, cfg));
+    let server = Server::start("127.0.0.1:0", service.clone(), payload)?;
+    let addr = server.addr();
+    println!(
+        "serving {arch}/{dataset} K={} S={} on {} ({} PJRT workers, exp(4ms) tail)",
+        params.k,
+        params.s,
+        addr,
+        params.num_workers()
+    );
+
+    // --- workload: 4 concurrent clients, 64 requests each ------------------
+    let n_clients = 4usize;
+    let per_client = 64usize;
+    let t0 = Instant::now();
+    let mut joins = Vec::new();
+    for c in 0..n_clients {
+        let labels = testset.labels.clone();
+        let images: Vec<Vec<f32>> = (0..per_client)
+            .map(|i| testset.image((c * per_client + i) % testset.len()).to_vec())
+            .collect();
+        joins.push(std::thread::spawn(move || -> Result<(usize, Vec<f64>)> {
+            let mut client = Client::connect(&addr)?;
+            client.ping()?;
+            let mut correct = 0usize;
+            let mut lat = Vec::with_capacity(per_client);
+            for (i, img) in images.iter().enumerate() {
+                let t = Instant::now();
+                let pred = client.predict(img)?;
+                lat.push(t.elapsed().as_secs_f64());
+                let arg = pred
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(j, _)| j)
+                    .unwrap();
+                let idx = (c * per_client + i) % labels.len();
+                if arg as i32 == labels[idx] {
+                    correct += 1;
+                }
+                // Poisson-ish pacing ~125 req/s aggregate.
+                std::thread::sleep(Duration::from_millis(8));
+            }
+            Ok((correct, lat))
+        }));
+    }
+    let mut correct = 0usize;
+    let mut latencies = Vec::new();
+    for j in joins {
+        let (c, lat) = j.join().expect("client thread")?;
+        correct += c;
+        latencies.extend(lat);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let total = n_clients * per_client;
+    let s = Summary::of(&latencies);
+    println!("\n=== E2E RESULTS ===");
+    println!("requests:   {total} over {wall:.2}s  ->  {:.1} req/s", total as f64 / wall);
+    println!(
+        "accuracy:   {}/{} = {:.1}%  (base model {:.1}%)",
+        correct,
+        total,
+        100.0 * correct as f64 / total as f64,
+        100.0 * manifest.model(arch, dataset, 1)?.base_test_acc
+    );
+    println!(
+        "latency:    p50={:.1}ms  p90={:.1}ms  p99={:.1}ms  max={:.1}ms",
+        s.p50 * 1e3,
+        s.p90 * 1e3,
+        s.p99 * 1e3,
+        s.max * 1e3
+    );
+    println!("\ncoordinator metrics:\n{}", service.metrics.report());
+    server.shutdown();
+    Ok(())
+}

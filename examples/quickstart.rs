@@ -1,0 +1,85 @@
+//! Quickstart: load the AOT-compiled hosted model, check it reproduces the
+//! build-time test accuracy, then serve one coded K-group through the full
+//! ApproxIFER pipeline (encode → workers → decode) and compare.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use approxifer::coding::CodeParams;
+use approxifer::coordinator::{FaultPlan, GroupPipeline};
+use approxifer::data::TestSet;
+use approxifer::metrics::ServingMetrics;
+use approxifer::runtime::{CompiledModel, Manifest, Runtime};
+use approxifer::tensor::Tensor;
+use approxifer::workers::{InferenceEngine, PjrtEngine, WorkerPool, WorkerSpec};
+
+fn main() -> Result<()> {
+    approxifer::util::logging::init();
+    let manifest = Manifest::load("artifacts")?;
+    let rt = Runtime::cpu()?;
+    let (arch, dataset) = ("resnet18_s", "syncifar");
+
+    // 1. The hosted model f, AOT-compiled at batch 1.
+    let entry = manifest.model(arch, dataset, 1)?;
+    let model = CompiledModel::load(&rt, &manifest.root, entry)?;
+    let testset = TestSet::load(&manifest, dataset)?;
+    let engine = Arc::new(PjrtEngine::new(model));
+
+    // Sanity: the compiled artifact must reproduce the build-time accuracy.
+    let n_check = 64;
+    let mut correct = 0;
+    for i in 0..n_check {
+        let logits = engine.infer1(testset.image(i))?;
+        let pred = Tensor::from_vec(&[logits.len()], logits).argmax();
+        if pred as i32 == testset.labels[i] {
+            correct += 1;
+        }
+    }
+    println!(
+        "base model ({arch}/{dataset}): {}/{} correct (build-time acc {:.3})",
+        correct, n_check, entry.base_test_acc
+    );
+    if i32::abs(correct as i32 - n_check as i32) > n_check as i32 / 10 {
+        println!("first-image logits: {:?}", engine.infer1(testset.image(0))?);
+    }
+
+    // 2. One coded group through the full pipeline: K=8 queries, S=1
+    //    straggler tolerated with only 9 workers (replication would need 16).
+    let params = CodeParams::new(8, 1, 0);
+    let pool = WorkerPool::spawn(
+        engine.clone(),
+        &vec![WorkerSpec::default(); params.num_workers()],
+        42,
+    );
+    let mut pipeline = GroupPipeline::new(params);
+    let metrics = ServingMetrics::new();
+    let queries: Vec<&[f32]> = (0..8).map(|i| testset.image(i)).collect();
+    let plan = FaultPlan {
+        stragglers: vec![4], // worker 4 is slow this group
+        straggler_delay: std::time::Duration::from_millis(200),
+        ..FaultPlan::none()
+    };
+    let out = pipeline.infer_group(&pool, &queries, &plan, &metrics)?;
+    let mut coded_correct = 0;
+    for (j, pred) in out.predictions.iter().enumerate() {
+        let t = Tensor::from_vec(&[pred.len()], pred.clone());
+        if t.argmax() as i32 == testset.labels[j] {
+            coded_correct += 1;
+        }
+    }
+    println!(
+        "coded group (K=8, S=1, worker 4 straggling): {}/8 correct, \
+         decoded from workers {:?} in {:.1}ms",
+        coded_correct,
+        out.decode_set,
+        out.latency.as_secs_f64() * 1e3
+    );
+    println!("{}", metrics.report());
+    pool.shutdown();
+    Ok(())
+}

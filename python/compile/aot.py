@@ -1,0 +1,190 @@
+"""AOT export: train (or load cached) models, lower to HLO text, export
+datasets + golden vectors + manifest. Runs ONCE under ``make artifacts``;
+the rust serving binary is self-contained afterwards.
+
+Interchange is HLO *text*, not serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids which the environment's xla_extension
+0.5.1 rejects; the text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Artifacts layout:
+    artifacts/
+      manifest.json                      # index the rust side parses
+      models/{arch}_{dataset}_b{B}.hlo.txt   # weights baked in as constants
+      params/{arch}_{dataset}.axp        # trained weights (cache + reuse)
+      data/{dataset}_images.bin, _labels.bin # exported test split
+      golden/*.bin                       # cross-language test vectors
+      encoder_k{K}_s{S}_d{D}.hlo.txt     # Pallas coded-combine artifact
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import datasets, models, train
+from .kernels import berrut as bk
+
+BATCHES = (1, 128)
+TEST_EXPORT_N = 1024
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (the 0.5.1-safe interchange).
+
+    ``print_large_constants=True`` is essential: the default HLO printer
+    elides big constants, silently dropping the baked model weights from
+    the artifact (the model then runs with garbage weights).
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_model(arch: str, params, batch: int, hwc) -> str:
+    """Lower the hosted model f (softmax soft-label outputs, paper Alg. 2)
+    with weights closed over (baked as constants)."""
+    h, w, c = hwc
+
+    def fwd(x):
+        return (models.apply_soft(arch, params, x, use_pallas=True),)
+
+    spec = jax.ShapeDtypeStruct((batch, h, w, c), jnp.float32)
+    return to_hlo_text(jax.jit(fwd).lower(spec))
+
+
+def lower_encoder(k: int, s: int, e: int, d: int) -> str:
+    """Lower the Pallas coded-combine with the (K,S,E) Berrut matrix baked."""
+    w = jnp.asarray(bk.encode_matrix(k, s, e))
+
+    def enc(x):
+        return (bk.coded_combine(w, x, interpret=True),)
+
+    spec = jax.ShapeDtypeStruct((k, d), jnp.float32)
+    return to_hlo_text(jax.jit(enc).lower(spec))
+
+
+def export_goldens(outdir: str) -> list[dict]:
+    """Cross-language golden vectors: rust asserts bit-near agreement."""
+    golden_dir = os.path.join(outdir, "golden")
+    os.makedirs(golden_dir, exist_ok=True)
+    entries = []
+    rng = np.random.default_rng(42)
+    for (k, s, e) in [(8, 1, 0), (12, 1, 0), (10, 1, 0), (8, 2, 0), (12, 0, 2), (8, 0, 2)]:
+        n = (k + s - 1) if e == 0 else (2 * (k + e) + s - 1)
+        w = bk.encode_matrix(k, s, e)                      # (n+1, k)
+        d = 24
+        x = rng.normal(size=(k, d)).astype(np.float32)     # queries
+        coded = (w.astype(np.float64) @ x.astype(np.float64)).astype(np.float32)
+        wait = k if e == 0 else 2 * (k + e)
+        avail = np.sort(rng.choice(n + 1, size=min(wait, n + 1), replace=False))
+        # Decode set: when e>0 the decoder excludes e (here arbitrary last e).
+        fset = avail[: (k if e == 0 else 2 * k + e)]
+        dm = bk.decode_matrix(k, s, e, fset)               # (k, |F|)
+        decoded = (dm.astype(np.float64) @ coded[fset].astype(np.float64)).astype(np.float32)
+        tag = f"k{k}_s{s}_e{e}"
+        datasets.export_binary(os.path.join(golden_dir, f"enc_w_{tag}.bin"), w)
+        datasets.export_binary(os.path.join(golden_dir, f"queries_{tag}.bin"), x)
+        datasets.export_binary(os.path.join(golden_dir, f"coded_{tag}.bin"), coded)
+        datasets.export_binary(
+            os.path.join(golden_dir, f"avail_{tag}.bin"), fset.astype(np.int32)
+        )
+        datasets.export_binary(os.path.join(golden_dir, f"decmat_{tag}.bin"), dm)
+        datasets.export_binary(os.path.join(golden_dir, f"decoded_{tag}.bin"), decoded)
+        entries.append({"k": k, "s": s, "e": e, "tag": tag, "payload": d})
+    return entries
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifacts directory")
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny training run (CI smoke, low accuracy)")
+    args = ap.parse_args()
+    outdir = args.out
+    for sub in ("models", "params", "data", "golden"):
+        os.makedirs(os.path.join(outdir, sub), exist_ok=True)
+
+    manifest: dict = {"version": 1, "models": [], "datasets": [], "golden": [],
+                      "encoders": []}
+
+    # ------------------------------------------------ datasets (test split)
+    for ds in datasets.DATASETS:
+        h, w, c = datasets.shape_of(ds)
+        images, labels = datasets.generate(ds, "test", TEST_EXPORT_N)
+        img_path, lab_path = f"data/{ds}_images.bin", f"data/{ds}_labels.bin"
+        datasets.export_binary(os.path.join(outdir, img_path), images)
+        datasets.export_binary(os.path.join(outdir, lab_path), labels)
+        manifest["datasets"].append({
+            "name": ds, "images": img_path, "labels": lab_path,
+            "count": TEST_EXPORT_N, "height": h, "width": w, "channels": c,
+            "num_classes": datasets.NUM_CLASSES,
+        })
+        print(f"[aot] dataset {ds}: exported {TEST_EXPORT_N} test samples")
+
+    # ------------------------------------------------ models: train + lower
+    epochs = 1 if args.quick else train.EPOCHS
+    train_n = 512 if args.quick else train.TRAIN_N
+    for arch, ds in train.PLAN:
+        hwc = datasets.shape_of(ds)
+        ppath = os.path.join(outdir, "params", f"{arch}_{ds}.axp")
+        apath_acc = ppath + ".acc"
+        if os.path.exists(ppath) and os.path.exists(apath_acc):
+            params = models.load_params(ppath)
+            base_acc = float(open(apath_acc).read())
+            print(f"[aot] {arch}/{ds}: cached params (base acc {base_acc:.4f})")
+        else:
+            t0 = time.time()
+            params, base_acc = train.train_one(
+                arch, ds, epochs=epochs, train_n=train_n, verbose=not args.quick
+            )
+            models.save_params(ppath, params)
+            with open(apath_acc, "w") as f:
+                f.write(f"{base_acc}")
+            print(f"[aot] {arch}/{ds}: trained, base acc {base_acc:.4f} "
+                  f"({time.time()-t0:.0f}s)")
+        for batch in BATCHES:
+            hlo = lower_model(arch, params, batch, hwc)
+            rel = f"models/{arch}_{ds}_b{batch}.hlo.txt"
+            with open(os.path.join(outdir, rel), "w") as f:
+                f.write(hlo)
+            manifest["models"].append({
+                "arch": arch, "dataset": ds, "batch": batch, "path": rel,
+                "input": [batch, *hwc], "num_classes": datasets.NUM_CLASSES,
+                "base_test_acc": base_acc,
+                "param_count": models.param_count(params),
+            })
+        print(f"[aot] {arch}/{ds}: lowered batches {BATCHES}")
+
+    # ------------------------------------------------ Pallas encoder artifact
+    for (k, s, ds) in [(8, 1, "syncifar")]:
+        h, w, c = datasets.shape_of(ds)
+        d = h * w * c
+        hlo = lower_encoder(k, s, 0, d)
+        rel = f"encoder_k{k}_s{s}_d{d}.hlo.txt"
+        with open(os.path.join(outdir, rel), "w") as f:
+            f.write(hlo)
+        manifest["encoders"].append({
+            "k": k, "s": s, "e": 0, "payload": d, "path": rel,
+            "workers": k + s,
+        })
+        print(f"[aot] encoder k={k} s={s} d={d} lowered")
+
+    # ------------------------------------------------ goldens + manifest
+    manifest["golden"] = export_goldens(outdir)
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] manifest written: {len(manifest['models'])} model artifacts")
+
+
+if __name__ == "__main__":
+    main()

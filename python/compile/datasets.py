@@ -1,0 +1,191 @@
+"""Synthetic stand-ins for MNIST / Fashion-MNIST / CIFAR-10.
+
+No dataset downloads are possible in this environment, so we substitute
+deterministic procedural datasets with the same shapes and class count
+(documented in DESIGN.md §3):
+
+- ``synmnist``   28x28x1, 10 classes — stroke-rendered digit-like glyphs.
+- ``synfashion`` 28x28x1, 10 classes — textured garment-like silhouettes.
+- ``syncifar``   32x32x3, 10 classes — colored shape/texture scenes.
+
+Each sample is a class template (fixed per class, seeded) under a random
+affine jitter, amplitude scaling, distractor field and pixel noise — enough
+variability that a CNN must actually learn, while staying learnable to
+high accuracy in a couple of build-time epochs. ApproxIFER's behaviour
+depends on the hosted model being a trained nonlinear classifier evaluated
+at off-manifold coded points, which these datasets exercise identically to
+the originals.
+
+Everything is generated with a deterministic numpy Generator per
+(dataset, split), so the exported test set is bit-stable across runs.
+"""
+
+from __future__ import annotations
+
+import zlib
+
+import numpy as np
+
+
+def _stable_seed(*parts: object) -> int:
+    """Process-stable seed (python's hash() is randomized per process)."""
+    return zlib.crc32("/".join(str(p) for p in parts).encode())
+
+DATASETS = ("synmnist", "synfashion", "syncifar")
+NUM_CLASSES = 10
+
+
+def shape_of(name: str) -> tuple[int, int, int]:
+    """(H, W, C) of one sample."""
+    if name == "syncifar":
+        return (32, 32, 3)
+    if name in ("synmnist", "synfashion"):
+        return (28, 28, 1)
+    raise ValueError(f"unknown dataset {name!r}")
+
+
+def _smooth_field(rng: np.random.Generator, h: int, w: int, cutoff: int) -> np.ndarray:
+    """Low-frequency random field in [-1, 1] via truncated 2-D Fourier basis."""
+    field = np.zeros((h, w))
+    ys = np.arange(h)[:, None] / h
+    xs = np.arange(w)[None, :] / w
+    for ky in range(cutoff):
+        for kx in range(cutoff):
+            amp = rng.normal() / (1.0 + ky + kx)
+            phase_y, phase_x = rng.uniform(0, 2 * np.pi, size=2)
+            field += amp * np.cos(2 * np.pi * ky * ys + phase_y) * np.cos(
+                2 * np.pi * kx * xs + phase_x
+            )
+    m = np.abs(field).max() + 1e-9
+    return field / m
+
+
+def _digit_glyph(c: int, h: int, w: int) -> np.ndarray:
+    """Seven-segment-style glyph for class c (digit-like strokes)."""
+    seg = {
+        0: "abcdef", 1: "bc", 2: "abged", 3: "abgcd", 4: "fgbc",
+        5: "afgcd", 6: "afgedc", 7: "abc", 8: "abcdefg", 9: "abcfgd",
+    }[c]
+    img = np.zeros((h, w))
+    t = max(2, h // 10)  # stroke thickness
+    x0, x1 = w // 4, 3 * w // 4
+    y0, y1, y2 = h // 6, h // 2, 5 * h // 6
+    if "a" in seg:
+        img[y0 - t // 2 : y0 + t // 2 + 1, x0:x1] = 1.0
+    if "g" in seg:
+        img[y1 - t // 2 : y1 + t // 2 + 1, x0:x1] = 1.0
+    if "d" in seg:
+        img[y2 - t // 2 : y2 + t // 2 + 1, x0:x1] = 1.0
+    if "f" in seg:
+        img[y0:y1, x0 - t // 2 : x0 + t // 2 + 1] = 1.0
+    if "b" in seg:
+        img[y0:y1, x1 - t // 2 : x1 + t // 2 + 1] = 1.0
+    if "e" in seg:
+        img[y1:y2, x0 - t // 2 : x0 + t // 2 + 1] = 1.0
+    if "c" in seg:
+        img[y1:y2, x1 - t // 2 : x1 + t // 2 + 1] = 1.0
+    return img
+
+
+def _silhouette(c: int, h: int, w: int) -> np.ndarray:
+    """Garment-like blocky silhouette masks, one per class."""
+    img = np.zeros((h, w))
+    ys = np.arange(h)[:, None]
+    xs = np.arange(w)[None, :]
+    cy, cx = h / 2, w / 2
+    if c % 5 == 0:  # "shirt": torso + arms
+        img[(ys > h * 0.3) & (ys < h * 0.9) & (xs > w * 0.3) & (xs < w * 0.7)] = 1
+        img[(ys > h * 0.3) & (ys < h * 0.55) & (xs > w * 0.1) & (xs < w * 0.9)] = 1
+    elif c % 5 == 1:  # "trouser": two legs
+        img[(ys > h * 0.15) & (xs > w * 0.3) & (xs < w * 0.45)] = 1
+        img[(ys > h * 0.15) & (xs > w * 0.55) & (xs < w * 0.7)] = 1
+        img[(ys > h * 0.15) & (ys < h * 0.35) & (xs > w * 0.3) & (xs < w * 0.7)] = 1
+    elif c % 5 == 2:  # "bag": trapezoid + handle
+        img[(ys > h * 0.45) & (ys < h * 0.85) & (xs > w * 0.2) & (xs < w * 0.8)] = 1
+        rr = ((ys - h * 0.42) ** 2 + (xs - cx) ** 2) ** 0.5
+        img[(rr > h * 0.12) & (rr < h * 0.2) & (ys < h * 0.45)] = 1
+    elif c % 5 == 3:  # "dress": triangle
+        width = (ys / h) * w * 0.45
+        img[(ys > h * 0.2) & (np.abs(xs - cx) < width)] = 1
+    else:  # "shoe": L-shape
+        img[(ys > h * 0.55) & (ys < h * 0.8) & (xs > w * 0.15) & (xs < w * 0.85)] = 1
+        img[(ys > h * 0.3) & (ys < h * 0.8) & (xs > w * 0.15) & (xs < w * 0.4)] = 1
+    if c >= 5:  # second family: same silhouettes, hollowed
+        inner = np.zeros_like(img)
+        inner[2:-2, 2:-2] = img[2:-2, 2:-2] * (img[:-4, 2:-2] * img[4:, 2:-2] > 0)
+        img = img - 0.6 * inner
+    return img
+
+
+def _class_template(name: str, c: int) -> np.ndarray:
+    """(H, W, C) template for class c of a dataset — deterministic."""
+    h, w, ch = shape_of(name)
+    rng = np.random.default_rng(_stable_seed(name, "template", c))
+    if name == "synmnist":
+        base = _digit_glyph(c, h, w)[..., None]
+    elif name == "synfashion":
+        tex = 0.25 * _smooth_field(rng, h, w, 4)
+        base = (_silhouette(c, h, w) * (0.8 + tex))[..., None]
+    else:  # syncifar: colored shape over textured background
+        mask = _silhouette(c % 10, h, w)
+        color = rng.uniform(0.3, 1.0, size=3)
+        tex = np.stack([_smooth_field(rng, h, w, 3) for _ in range(3)], axis=-1)
+        base = mask[..., None] * color[None, None, :] + 0.3 * tex
+    return base.astype(np.float32)
+
+
+_TEMPLATE_CACHE: dict[tuple[str, int], np.ndarray] = {}
+
+
+def class_template(name: str, c: int) -> np.ndarray:
+    key = (name, c)
+    if key not in _TEMPLATE_CACHE:
+        _TEMPLATE_CACHE[key] = _class_template(name, c)
+    return _TEMPLATE_CACHE[key]
+
+
+def _jitter(rng: np.random.Generator, img: np.ndarray) -> np.ndarray:
+    """Random integer shift plus horizontal flip (syncifar only upstream)."""
+    dy, dx = rng.integers(-3, 4, size=2)
+    out = np.roll(np.roll(img, dy, axis=0), dx, axis=1)
+    return out
+
+
+def generate(name: str, split: str, count: int) -> tuple[np.ndarray, np.ndarray]:
+    """Generate (images[count,H,W,C] float32 in ~[0,1.5], labels[count] int32).
+
+    Deterministic per (name, split): train/test are disjoint streams.
+    """
+    h, w, ch = shape_of(name)
+    rng = np.random.default_rng(_stable_seed(name, split, "v1"))
+    images = np.zeros((count, h, w, ch), dtype=np.float32)
+    labels = rng.integers(0, NUM_CLASSES, size=count).astype(np.int32)
+    distractor_pool = [
+        _smooth_field(np.random.default_rng(1000 + i), h, w, 3) for i in range(8)
+    ]
+    for i in range(count):
+        c = int(labels[i])
+        base = class_template(name, c)
+        amp = rng.uniform(0.7, 1.3)
+        x = amp * _jitter(rng, base)
+        d = distractor_pool[rng.integers(0, len(distractor_pool))][..., None]
+        x = x + 0.15 * rng.uniform() * d
+        x = x + rng.normal(0, 0.08, size=x.shape)
+        images[i] = np.clip(x, -0.5, 1.6)
+    return images, labels
+
+
+def export_binary(path: str, arr: np.ndarray) -> None:
+    """Write the simple tensor container the rust side reads:
+    magic 'AXT1' | u32 ndim | u32 dims[ndim] | f32/i32 data (LE)."""
+    with open(path, "wb") as f:
+        f.write(b"AXT1")
+        dims = np.array(arr.shape, dtype="<u4")
+        f.write(np.array([arr.ndim], dtype="<u4").tobytes())
+        f.write(dims.tobytes())
+        if arr.dtype == np.float32:
+            f.write(arr.astype("<f4").tobytes())
+        elif arr.dtype == np.int32:
+            f.write(arr.astype("<i4").tobytes())
+        else:
+            raise ValueError(f"unsupported dtype {arr.dtype}")

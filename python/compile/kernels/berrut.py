@@ -1,0 +1,109 @@
+"""Layer-1 Pallas kernel: Berrut coded-combine (the encoder hot spot).
+
+Computes ``X_tilde = W @ X`` where ``W`` is the (N+1, K) Berrut encode
+matrix (paper eqs. (4)-(8)) and ``X`` is the (K, D) matrix of flattened
+query payloads. N+1 and K are tiny (<= ~32) while D is the payload size
+(e.g. 3072 for 32x32x3), so the TPU mapping differs from the generic GEMM:
+the whole coefficient matrix stays resident in VMEM and the grid walks D in
+lane-aligned chunks, each step streaming one (K, bd) payload tile and
+producing one (N+1, bd) coded tile — an outer-product-accumulate schedule
+with W reused across the entire grid.
+
+Also provides the numpy construction of W itself (`encode_matrix`), which
+is the golden reference shared with the rust implementation
+(rust/src/coding/scheme.rs) via artifacts/golden/.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+# Payload chunk: one VPU lane-aligned slab.
+BD = 512
+
+
+def chebyshev_first(k: int) -> np.ndarray:
+    """alpha_j = cos((2j+1) pi / 2K), j in [K-1] (paper eq. (6))."""
+    j = np.arange(k)
+    return np.cos((2 * j + 1) * np.pi / (2 * k))
+
+
+def chebyshev_second(n: int) -> np.ndarray:
+    """beta_i = cos(i pi / N), i in [N] (paper eq. (8)); N+1 points."""
+    i = np.arange(n + 1)
+    return np.cos(i * np.pi / n)
+
+
+def berrut_weights(nodes: np.ndarray, z: float, signs: np.ndarray | None = None) -> np.ndarray:
+    """Barycentric basis l_i(z) with alternating signs (paper eq. (5))."""
+    if signs is None:
+        signs = np.arange(len(nodes))
+    guard = np.abs(z - nodes) < 1e-12
+    if guard.any():
+        w = np.zeros(len(nodes))
+        w[np.argmax(guard)] = 1.0
+        return w
+    raw = ((-1.0) ** (signs % 2)) / (z - nodes)
+    return raw / raw.sum()
+
+
+def encode_matrix(k: int, s: int, e: int) -> np.ndarray:
+    """The (N+1, K) ApproxIFER encode matrix W[i, j] = l_j(beta_i)."""
+    n = (k + s - 1) if e == 0 else (2 * (k + e) + s - 1)
+    alpha = chebyshev_first(k)
+    beta = chebyshev_second(n)
+    return np.stack([berrut_weights(alpha, b) for b in beta]).astype(np.float32)
+
+
+def decode_matrix(k: int, s: int, e: int, avail: np.ndarray) -> np.ndarray:
+    """The (K, |F|) decode matrix D[j, m] = l-hat_{avail[m]}(alpha_j) with
+    signs keyed to original worker indices (paper eq. (10))."""
+    n = (k + s - 1) if e == 0 else (2 * (k + e) + s - 1)
+    alpha = chebyshev_first(k)
+    beta = chebyshev_second(n)
+    nodes = beta[avail]
+    return np.stack(
+        [berrut_weights(nodes, a, signs=np.asarray(avail)) for a in alpha]
+    ).astype(np.float32)
+
+
+def _combine_kernel(w_ref, x_ref, o_ref):
+    """One grid step: o[N+1, bd] = W[N+1, K] @ x[K, bd]; W stays in VMEM."""
+    o_ref[...] = jnp.dot(w_ref[...], x_ref[...], preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("bd", "interpret"))
+def coded_combine(
+    w: jnp.ndarray, x: jnp.ndarray, *, bd: int = BD, interpret: bool = True
+) -> jnp.ndarray:
+    """Pallas coded combine: (N+1, K) @ (K, D) -> (N+1, D)."""
+    if w.ndim != 2 or x.ndim != 2 or w.shape[1] != x.shape[0]:
+        raise ValueError(f"coded_combine shapes {w.shape} @ {x.shape}")
+    nw, k = w.shape
+    _, d = x.shape
+    bd = min(bd, d)
+    dp = (d + bd - 1) // bd * bd
+    x_p = jnp.pad(x.astype(jnp.float32), ((0, 0), (0, dp - d)))
+    out = pl.pallas_call(
+        _combine_kernel,
+        grid=(dp // bd,),
+        in_specs=[
+            # W: whole matrix resident every step (index_map pins block 0).
+            pl.BlockSpec((nw, k), lambda t: (0, 0)),
+            pl.BlockSpec((k, bd), lambda t: (0, t)),
+        ],
+        out_specs=pl.BlockSpec((nw, bd), lambda t: (0, t)),
+        out_shape=jax.ShapeDtypeStruct((nw, dp), jnp.float32),
+        interpret=interpret,
+    )(w.astype(jnp.float32), x_p)
+    return out[:, :d]
+
+
+def vmem_bytes(nw: int, k: int, bd: int = BD) -> int:
+    """Structural VMEM footprint of one grid step (W + X-tile + O-tile)."""
+    return 4 * (nw * k + k * bd + nw * bd)

@@ -1,0 +1,98 @@
+"""Layer-1 Pallas kernel: tiled f32 matmul (the classifier-head hot spot).
+
+TPU-style design (DESIGN.md §4 Hardware-Adaptation): the grid walks
+(M/bm, N/bn, K/bk) tiles; each step pulls one (bm, bk) A-tile and one
+(bk, bn) B-tile from HBM into VMEM via BlockSpec, multiply-accumulates on
+the MXU into the resident (bm, bn) output tile, which is written back when
+the contraction loop finishes. Block shapes default to MXU-aligned 128s
+and are clamped/padded for small operands.
+
+On this image Pallas runs with ``interpret=True`` (the CPU PJRT client
+cannot execute Mosaic custom-calls), so the kernel is validated for
+correctness here and its TPU efficiency is estimated structurally
+(VMEM footprint / MXU alignment) in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-aligned default tile sizes.
+BM, BN, BK = 128, 128, 128
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, *, n_k: int):
+    """One grid step: o[bm,bn] (+)= a[bm,bk] @ b[bk,bn]."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def matmul(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    bm: int = BM,
+    bn: int = BN,
+    bk: int = BK,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Tiled Pallas GEMM: (M, K) @ (K, N) -> (M, N), f32 accumulate.
+
+    Operands are zero-padded up to tile multiples (zero rows/columns do not
+    change the product) and the result is sliced back.
+    """
+    if a.ndim != 2 or b.ndim != 2 or a.shape[1] != b.shape[0]:
+        raise ValueError(f"matmul shapes {a.shape} @ {b.shape}")
+    m, k = a.shape
+    _, n = b.shape
+    # Clamp blocks for small operands, keeping lane alignment where possible.
+    bm = min(bm, _ceil_to(m, 8))
+    bn = min(bn, _ceil_to(n, 8))
+    bk = min(bk, _ceil_to(k, 8))
+    mp, kp, np_ = _ceil_to(m, bm), _ceil_to(k, bk), _ceil_to(n, bn)
+    a_p = jnp.pad(a.astype(jnp.float32), ((0, mp - m), (0, kp - k)))
+    b_p = jnp.pad(b.astype(jnp.float32), ((0, kp - k), (0, np_ - n)))
+    n_k = kp // bk
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=n_k),
+        grid=(mp // bm, np_ // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=interpret,
+    )(a_p, b_p)
+    return out[:m, :n]
+
+
+def dense(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, *, interpret: bool = True):
+    """Classifier-head dense layer on the Pallas GEMM: x.W + b."""
+    return matmul(x, w, interpret=interpret) + b
+
+
+def vmem_bytes(bm: int = BM, bn: int = BN, bk: int = BK) -> int:
+    """Structural VMEM footprint of one grid step (A, B, O tiles, f32)."""
+    return 4 * (bm * bk + bk * bn + bm * bn)
+
+
+def mxu_aligned(bm: int = BM, bn: int = BN, bk: int = BK) -> bool:
+    """Whether the tile shape fills 128x128 MXU passes exactly."""
+    return bm % 128 == 0 and bn % 128 == 0 and bk % 128 == 0

@@ -1,0 +1,29 @@
+"""Pure-jnp oracles for the Pallas kernels — the correctness ground truth.
+
+Every Pallas kernel in this package has a reference implementation here;
+``python/tests/test_kernels.py`` sweeps shapes/dtypes with hypothesis and
+asserts allclose against these.
+"""
+
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Reference for kernels.matmul.matmul: plain f32 GEMM."""
+    return jnp.dot(a.astype(jnp.float32), b.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+
+
+def coded_combine_ref(w: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Reference for kernels.berrut.coded_combine: X-tilde = W . X.
+
+    ``w`` is the (N+1, K) Berrut encode matrix, ``x`` is (K, D) flattened
+    query payloads; output is (N+1, D) coded payloads.
+    """
+    return jnp.dot(w.astype(jnp.float32), x.astype(jnp.float32),
+                   preferred_element_type=jnp.float32)
+
+
+def dense_ref(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Reference for the classifier-head dense layer: x.W + b."""
+    return matmul_ref(x, w) + b

@@ -1,0 +1,355 @@
+"""Layer-2: the hosted models `f` — pure-JAX CNN classifiers.
+
+Scaled-down counterparts of the paper's architectures (DESIGN.md §3):
+``lenet5``, ``vgg_s`` (VGG-16-style conv blocks), ``resnet18_s`` /
+``resnet34_s`` (basic residual blocks), ``densenet_s`` (dense blocks +
+transition), ``googlenet_s`` (inception branches). All are BN-free with He
+init (keeps the build-time training loop stateless) and end in a dense
+classifier head that runs on the Layer-1 Pallas GEMM when
+``use_pallas=True`` (the AOT export path), or plain jnp during training.
+
+Every model is ``init(seed, dataset) -> params`` (nested dict of arrays)
+plus ``apply(arch, params, x, use_pallas) -> logits`` with
+``x: (B, H, W, C)`` NHWC float32 and 10 logits out.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp  # noqa: F401  (jax.nn used in apply_soft)
+import numpy as np
+from jax import lax
+
+from . import datasets
+from .kernels import matmul as pallas_mm
+
+ARCHS = ("lenet5", "vgg_s", "resnet18_s", "resnet34_s", "densenet_s", "googlenet_s")
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------- layers ---
+
+def _he(rng: np.random.Generator, shape, fan_in) -> jnp.ndarray:
+    return jnp.asarray(
+        rng.normal(0.0, math.sqrt(2.0 / fan_in), size=shape).astype(np.float32)
+    )
+
+
+def conv_init(rng, kh, kw, cin, cout) -> Params:
+    return {
+        "w": _he(rng, (kh, kw, cin, cout), kh * kw * cin),
+        "b": jnp.zeros((cout,), jnp.float32),
+    }
+
+
+def conv(p: Params, x: jnp.ndarray, stride: int = 1, padding: str = "SAME") -> jnp.ndarray:
+    y = lax.conv_general_dilated(
+        x, p["w"], (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return y + p["b"]
+
+
+def dense_init(rng, din, dout) -> Params:
+    return {
+        "w": _he(rng, (din, dout), din),
+        "b": jnp.zeros((dout,), jnp.float32),
+    }
+
+
+def dense(p: Params, x: jnp.ndarray, use_pallas: bool) -> jnp.ndarray:
+    if use_pallas:
+        return pallas_mm.dense(x, p["w"], p["b"], interpret=True)
+    return x @ p["w"] + p["b"]
+
+
+def max_pool(x: jnp.ndarray, k: int = 2) -> jnp.ndarray:
+    return lax.reduce_window(
+        x, -jnp.inf, lax.max, (1, k, k, 1), (1, k, k, 1), "VALID"
+    )
+
+
+def avg_pool(x: jnp.ndarray, k: int = 2) -> jnp.ndarray:
+    s = lax.reduce_window(x, 0.0, lax.add, (1, k, k, 1), (1, k, k, 1), "VALID")
+    return s / (k * k)
+
+
+def gap(x: jnp.ndarray) -> jnp.ndarray:
+    return x.mean(axis=(1, 2))
+
+
+def relu(x):
+    return jnp.maximum(x, 0.0)
+
+
+# ------------------------------------------------------------------ zoo ----
+
+def _rng_of(seed: int) -> np.random.Generator:
+    return np.random.default_rng(seed)
+
+
+def init_lenet5(seed: int, cin: int, hw: int = 28) -> Params:
+    r = _rng_of(seed)
+    flat = (hw // 4) * (hw // 4) * 16  # two 2x2 pools then flatten
+    return {
+        "c1": conv_init(r, 5, 5, cin, 6),
+        "c2": conv_init(r, 5, 5, 6, 16),
+        "f1": dense_init(r, flat, 120),
+        "f2": dense_init(r, 120, 84),
+        "head": dense_init(r, 84, 10),
+    }
+
+
+def apply_lenet5(p: Params, x, use_pallas: bool):
+    x = relu(conv(p["c1"], x))
+    x = max_pool(x)
+    x = relu(conv(p["c2"], x))
+    x = max_pool(x)
+    x = x.reshape(x.shape[0], -1)
+    x = relu(dense(p["f1"], x, False))
+    x = relu(dense(p["f2"], x, False))
+    return dense(p["head"], x, use_pallas)
+
+
+_VGG_PLAN = ((16, 2), (32, 2), (64, 2))  # (width, convs) per block — VGG-16 style
+
+
+def init_vgg_s(seed: int, cin: int) -> Params:
+    r = _rng_of(seed)
+    p: Params = {}
+    c = cin
+    for bi, (width, convs) in enumerate(_VGG_PLAN):
+        for ci in range(convs):
+            p[f"b{bi}c{ci}"] = conv_init(r, 3, 3, c, width)
+            c = width
+    p["fc"] = dense_init(r, c, 64)
+    p["head"] = dense_init(r, 64, 10)
+    return p
+
+
+def apply_vgg_s(p: Params, x, use_pallas: bool):
+    for bi, (width, convs) in enumerate(_VGG_PLAN):
+        for ci in range(convs):
+            x = relu(conv(p[f"b{bi}c{ci}"], x))
+        x = max_pool(x)
+    x = gap(x)
+    x = relu(dense(p["fc"], x, False))
+    return dense(p["head"], x, use_pallas)
+
+
+def _init_resnet(seed: int, cin: int, blocks_per_stage) -> Params:
+    r = _rng_of(seed)
+    widths = (16, 32, 64)
+    p: Params = {"stem": conv_init(r, 3, 3, cin, widths[0])}
+    c = widths[0]
+    for si, width in enumerate(widths):
+        for bi in range(blocks_per_stage[si]):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            p[f"s{si}b{bi}c1"] = conv_init(r, 3, 3, c, width)
+            p[f"s{si}b{bi}c2"] = conv_init(r, 3, 3, width, width)
+            if stride != 1 or c != width:
+                p[f"s{si}b{bi}proj"] = conv_init(r, 1, 1, c, width)
+            c = width
+    p["head"] = dense_init(r, c, 10)
+    return p
+
+
+def _apply_resnet(p: Params, x, blocks_per_stage, use_pallas: bool):
+    x = relu(conv(p["stem"], x))
+    widths = (16, 32, 64)
+    c = widths[0]
+    for si, width in enumerate(widths):
+        for bi in range(blocks_per_stage[si]):
+            stride = 2 if (si > 0 and bi == 0) else 1
+            h = relu(conv(p[f"s{si}b{bi}c1"], x, stride=stride))
+            h = conv(p[f"s{si}b{bi}c2"], h)
+            if f"s{si}b{bi}proj" in p:
+                x = conv(p[f"s{si}b{bi}proj"], x, stride=stride)
+            x = relu(x + h)
+            c = width
+    return dense(p["head"], gap(x), use_pallas)
+
+
+def init_resnet18_s(seed: int, cin: int) -> Params:
+    return _init_resnet(seed, cin, (2, 2, 2))
+
+
+def apply_resnet18_s(p, x, use_pallas):
+    return _apply_resnet(p, x, (2, 2, 2), use_pallas)
+
+
+def init_resnet34_s(seed: int, cin: int) -> Params:
+    return _init_resnet(seed, cin, (3, 4, 3))
+
+
+def apply_resnet34_s(p, x, use_pallas):
+    return _apply_resnet(p, x, (3, 4, 3), use_pallas)
+
+
+_DN_GROWTH, _DN_LAYERS = 12, (4, 4)
+
+
+def init_densenet_s(seed: int, cin: int) -> Params:
+    r = _rng_of(seed)
+    p: Params = {"stem": conv_init(r, 3, 3, cin, 16)}
+    c = 16
+    for bi, nlayers in enumerate(_DN_LAYERS):
+        for li in range(nlayers):
+            p[f"b{bi}l{li}"] = conv_init(r, 3, 3, c, _DN_GROWTH)
+            c += _DN_GROWTH
+        p[f"t{bi}"] = conv_init(r, 1, 1, c, c // 2)
+        c = c // 2
+    p["head"] = dense_init(r, c, 10)
+    return p
+
+
+def apply_densenet_s(p: Params, x, use_pallas: bool):
+    x = relu(conv(p["stem"], x))
+    for bi, nlayers in enumerate(_DN_LAYERS):
+        for li in range(nlayers):
+            y = relu(conv(p[f"b{bi}l{li}"], x))
+            x = jnp.concatenate([x, y], axis=-1)
+        x = relu(conv(p[f"t{bi}"], x))
+        x = avg_pool(x)
+    return dense(p["head"], gap(x), use_pallas)
+
+
+def _init_inception(r, cin, n1, n3r, n3, n5r, n5, npj) -> Params:
+    return {
+        "p1": conv_init(r, 1, 1, cin, n1),
+        "p3r": conv_init(r, 1, 1, cin, n3r),
+        "p3": conv_init(r, 3, 3, n3r, n3),
+        "p5r": conv_init(r, 1, 1, cin, n5r),
+        "p5": conv_init(r, 5, 5, n5r, n5),
+        "pp": conv_init(r, 1, 1, cin, npj),
+    }
+
+
+def _apply_inception(p: Params, x) -> jnp.ndarray:
+    b1 = relu(conv(p["p1"], x))
+    b3 = relu(conv(p["p3"], relu(conv(p["p3r"], x))))
+    b5 = relu(conv(p["p5"], relu(conv(p["p5r"], x))))
+    pooled = lax.reduce_window(
+        x, -jnp.inf, lax.max, (1, 3, 3, 1), (1, 1, 1, 1), "SAME"
+    )
+    bp = relu(conv(p["pp"], pooled))
+    return jnp.concatenate([b1, b3, b5, bp], axis=-1)
+
+
+def init_googlenet_s(seed: int, cin: int) -> Params:
+    r = _rng_of(seed)
+    p: Params = {"stem": conv_init(r, 3, 3, cin, 16)}
+    p["inc1"] = _init_inception(r, 16, 8, 8, 16, 4, 8, 8)     # -> 40
+    p["inc2"] = _init_inception(r, 40, 16, 12, 24, 4, 12, 12)  # -> 64
+    p["head"] = dense_init(r, 64, 10)
+    return p
+
+
+def apply_googlenet_s(p: Params, x, use_pallas: bool):
+    x = relu(conv(p["stem"], x))
+    x = max_pool(x)
+    x = _apply_inception(p["inc1"], x)
+    x = max_pool(x)
+    x = _apply_inception(p["inc2"], x)
+    return dense(p["head"], gap(x), use_pallas)
+
+
+_INIT = {
+    "lenet5": init_lenet5,
+    "vgg_s": init_vgg_s,
+    "resnet18_s": init_resnet18_s,
+    "resnet34_s": init_resnet34_s,
+    "densenet_s": init_densenet_s,
+    "googlenet_s": init_googlenet_s,
+}
+_APPLY = {
+    "lenet5": apply_lenet5,
+    "vgg_s": apply_vgg_s,
+    "resnet18_s": apply_resnet18_s,
+    "resnet34_s": apply_resnet34_s,
+    "densenet_s": apply_densenet_s,
+    "googlenet_s": apply_googlenet_s,
+}
+
+
+def init(arch: str, dataset: str, seed: int = 0) -> Params:
+    """Initialize parameters for an architecture on a dataset."""
+    h, _, cin = datasets.shape_of(dataset)
+    if arch == "lenet5":
+        return init_lenet5(seed, cin, hw=h)
+    return _INIT[arch](seed, cin)
+
+
+def apply(arch: str, params: Params, x: jnp.ndarray, use_pallas: bool = False):
+    """Forward pass: (B, H, W, C) -> (B, 10) logits."""
+    return _APPLY[arch](params, x, use_pallas)
+
+
+def apply_soft(arch: str, params: Params, x: jnp.ndarray, use_pallas: bool = False):
+    """Forward pass ending in softmax: (B, H, W, C) -> (B, 10) soft labels.
+
+    This is the `f` the serving system hosts (paper Algorithm 2 calls the
+    coordinates of f(X-tilde) "soft labels"): bounded [0,1] outputs are what
+    makes Berrut decoding and the sigma in {1,10,100} Byzantine experiments
+    behave as in the paper — raw logits from a converged classifier are
+    saturated (|logit| ~ 50) and interpolate poorly.
+    """
+    return jax.nn.softmax(apply(arch, params, x, use_pallas), axis=-1)
+
+
+def _flatten(params: Params, prefix: str = "") -> list[tuple[str, np.ndarray]]:
+    """Flatten an arbitrarily nested dict-of-arrays to (path, array) pairs."""
+    out: list[tuple[str, np.ndarray]] = []
+    for k in sorted(params):
+        v = params[k]
+        path = f"{prefix}{k}"
+        if isinstance(v, dict):
+            out.extend(_flatten(v, prefix=path + "/"))
+        else:
+            out.append((path, np.asarray(v)))
+    return out
+
+
+def param_count(params: Params) -> int:
+    return sum(int(np.prod(a.shape)) for _, a in _flatten(params))
+
+
+# ------------------------------------------------------- (de)serialization -
+
+def save_params(path: str, params: Params) -> None:
+    """Flat custom container (no pickle): repeated (name, shape, f32 data)."""
+    with open(path, "wb") as f:
+        f.write(b"AXP1")
+        flat = _flatten(params)
+        f.write(np.array([len(flat)], dtype="<u4").tobytes())
+        for name, arr in flat:
+            nb = name.encode()
+            f.write(np.array([len(nb)], dtype="<u4").tobytes())
+            f.write(nb)
+            f.write(np.array([arr.ndim], dtype="<u4").tobytes())
+            f.write(np.array(arr.shape, dtype="<u4").tobytes())
+            f.write(arr.astype("<f4").tobytes())
+
+
+def load_params(path: str) -> Params:
+    with open(path, "rb") as f:
+        assert f.read(4) == b"AXP1"
+        (count,) = np.frombuffer(f.read(4), "<u4")
+        params: Params = {}
+        for _ in range(int(count)):
+            (nlen,) = np.frombuffer(f.read(4), "<u4")
+            name = f.read(int(nlen)).decode()
+            (ndim,) = np.frombuffer(f.read(4), "<u4")
+            shape = tuple(int(d) for d in np.frombuffer(f.read(4 * int(ndim)), "<u4"))
+            size = int(np.prod(shape)) if ndim else 1
+            data = np.frombuffer(f.read(4 * size), "<f4").reshape(shape)
+            node = params
+            parts = name.split("/")
+            for part in parts[:-1]:
+                node = node.setdefault(part, {})
+            node[parts[-1]] = jnp.asarray(data.copy())
+        return params

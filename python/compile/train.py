@@ -1,0 +1,142 @@
+"""Build-time training for the hosted models.
+
+Runs ONCE under ``make artifacts`` (never at serving time): trains each
+(architecture, dataset) pair of DESIGN.md's experiment plan with SGD +
+momentum on the synthetic datasets, reports test accuracy (the paper's
+"base model / best case" line), and saves the parameters for aot.py to
+bake into the HLO artifacts.
+
+The training loop is deliberately simple (no BN state, no augmentation
+beyond the generator's jitter) — the goal is a well-trained nonlinear
+classifier per architecture, not SOTA.
+"""
+
+from __future__ import annotations
+
+import functools
+import time
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import datasets, models
+
+# (arch, dataset) pairs required by the figures (DESIGN.md §5):
+# resnet18_s on all three datasets (figs 3, 5-7, 9, 11); the architecture
+# sweep on syncifar (figs 8, 10).
+PLAN: Tuple[Tuple[str, str], ...] = (
+    ("resnet18_s", "synmnist"),
+    ("resnet18_s", "synfashion"),
+    ("resnet18_s", "syncifar"),
+    ("lenet5", "syncifar"),
+    ("vgg_s", "syncifar"),
+    ("resnet34_s", "syncifar"),
+    ("densenet_s", "syncifar"),
+    ("googlenet_s", "syncifar"),
+)
+
+TRAIN_N, TEST_N = 4096, 1024
+BATCH, EPOCHS, LR = 128, 8, 1e-3
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-8
+# Mixup (Beta(1,1) pair mixing on half the steps): the hosted models must
+# behave reasonably on *blended* inputs because ApproxIFER's coded queries
+# are (signed) linear combinations of real queries. Off-the-shelf natural-
+# image models have this property emergently; on synthetic data we train it
+# in explicitly. Base accuracy is unaffected; coded accuracy improves
+# substantially (EXPERIMENTS.md §Deviations).
+MIXUP_EVERY = 2
+
+
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    logz = jax.nn.log_softmax(logits)
+    return -logz[jnp.arange(labels.shape[0]), labels].mean()
+
+
+@functools.partial(jax.jit, static_argnames=("arch",))
+def _loss_and_grad(arch, params, x, y):
+    def loss_fn(p):
+        return cross_entropy(models.apply(arch, p, x, use_pallas=False), y)
+
+    return jax.value_and_grad(loss_fn)(params)
+
+
+@functools.partial(jax.jit, static_argnames=("arch",))
+def _mixup_loss_and_grad(arch, params, x, ya, yb, lam):
+    def loss_fn(p):
+        logz = jax.nn.log_softmax(models.apply(arch, p, x, use_pallas=False))
+        idx = jnp.arange(x.shape[0])
+        return (lam * -logz[idx, ya] + (1.0 - lam) * -logz[idx, yb]).mean()
+
+    return jax.value_and_grad(loss_fn)(params)
+
+
+@functools.partial(jax.jit, static_argnames=("arch",))
+def _accuracy_batch(arch, params, x, y):
+    pred = models.apply(arch, params, x, use_pallas=False).argmax(axis=1)
+    return (pred == y).mean()
+
+
+def evaluate(arch: str, params, images: np.ndarray, labels: np.ndarray,
+             batch: int = 256) -> float:
+    correct = 0.0
+    for i in range(0, len(images), batch):
+        xb = jnp.asarray(images[i : i + batch])
+        yb = jnp.asarray(labels[i : i + batch])
+        correct += float(_accuracy_batch(arch, params, xb, yb)) * len(xb)
+    return correct / len(images)
+
+
+def train_one(arch: str, dataset: str, *, epochs: int = EPOCHS,
+              train_n: int = TRAIN_N, test_n: int = TEST_N,
+              verbose: bool = True) -> Tuple[Dict, float]:
+    """Train one model; returns (params, test_accuracy)."""
+    xtr, ytr = datasets.generate(dataset, "train", train_n)
+    xte, yte = datasets.generate(dataset, "test", test_n)
+    params = models.init(arch, dataset, seed=17)
+    # Adam state (stabler than bare SGD-momentum across the arch zoo).
+    m = jax.tree.map(jnp.zeros_like, params)
+    v = jax.tree.map(jnp.zeros_like, params)
+    step = 0
+    rng = np.random.default_rng(7)
+    t0 = time.time()
+    for epoch in range(epochs):
+        order = rng.permutation(train_n)
+        ep_loss = 0.0
+        nb = 0
+        for i in range(0, train_n, BATCH):
+            idx = order[i : i + BATCH]
+            if (i // BATCH) % MIXUP_EVERY == 1:
+                perm = rng.permutation(len(idx))
+                lam = float(rng.beta(1.0, 1.0))
+                x = jnp.asarray(lam * xtr[idx] + (1.0 - lam) * xtr[idx][perm])
+                loss, grads = _mixup_loss_and_grad(
+                    arch, params, x,
+                    jnp.asarray(ytr[idx]), jnp.asarray(ytr[idx][perm]),
+                    jnp.asarray(lam),
+                )
+            else:
+                x = jnp.asarray(xtr[idx])
+                y = jnp.asarray(ytr[idx])
+                loss, grads = _loss_and_grad(arch, params, x, y)
+            step += 1
+            m = jax.tree.map(lambda mm, g: ADAM_B1 * mm + (1 - ADAM_B1) * g, m, grads)
+            v = jax.tree.map(lambda vv, g: ADAM_B2 * vv + (1 - ADAM_B2) * g * g, v, grads)
+            bc1 = 1 - ADAM_B1**step
+            bc2 = 1 - ADAM_B2**step
+            params = jax.tree.map(
+                lambda p, mm, vv: p - LR * (mm / bc1) / (jnp.sqrt(vv / bc2) + ADAM_EPS),
+                params, m, v,
+            )
+            ep_loss += float(loss)
+            nb += 1
+        if verbose:
+            acc = evaluate(arch, params, xte[:256], yte[:256])
+            print(f"  [{arch}/{dataset}] epoch {epoch+1}/{epochs} "
+                  f"loss={ep_loss/nb:.4f} acc~{acc:.3f} ({time.time()-t0:.0f}s)")
+    test_acc = evaluate(arch, params, xte, yte)
+    if verbose:
+        print(f"  [{arch}/{dataset}] final test acc {test_acc:.4f} "
+              f"({models.param_count(params)} params, {time.time()-t0:.0f}s)")
+    return params, test_acc

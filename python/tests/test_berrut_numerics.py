@@ -1,0 +1,76 @@
+"""Numpy-level numerics of the full ApproxIFER code path (mirrors the rust
+implementation; the golden vectors exported by aot.py tie the two)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import berrut as bk
+
+settings.register_profile("ci2", max_examples=25, deadline=None)
+settings.load_profile("ci2")
+
+
+@given(k=st.integers(2, 12), s=st.integers(1, 3))
+def test_encode_decode_identity_function_shrinks_with_subset_quality(k, s):
+    """With f = id and ALL the first K workers available (drop the last S),
+    decode must approximate the original queries with bounded error."""
+    n = k + s - 1
+    w = bk.encode_matrix(k, s, 0)
+    rng = np.random.default_rng(k * 100 + s)
+    # Smooth query family (what Berrut approximates well).
+    alpha = bk.chebyshev_first(k)
+    x = np.stack([np.sin(2 * alpha) + 0.3 * alpha, np.cos(alpha)], axis=1).astype(np.float32)
+    coded = w @ x
+    avail = np.arange(k)
+    d = bk.decode_matrix(k, s, 0, avail)
+    decoded = d @ coded[avail]
+    err = np.abs(decoded - x).max()
+    leb = np.abs(d).sum(axis=1).max()
+    # Berrut is O(h)-accurate, not exact; the subset's conditioning (leb)
+    # scales the attainable error.
+    assert err <= max(1.0, 1.5 * leb), f"err={err} leb={leb}"
+
+
+@given(k=st.integers(2, 10), s=st.integers(1, 3), seed=st.integers(0, 10**6))
+def test_decode_constant_exact(k, s, seed):
+    n = k + s - 1
+    rng = np.random.default_rng(seed)
+    avail = np.sort(rng.choice(n + 1, size=k, replace=False))
+    d = bk.decode_matrix(k, s, 0, avail)
+    const = np.full((k, 5), 3.25, dtype=np.float32)
+    out = d @ const
+    leb = np.abs(d).sum(axis=1).max()
+    np.testing.assert_allclose(out, 3.25, atol=1e-4 * max(leb, 1.0))
+
+
+def test_worker_count_formulas():
+    assert bk.encode_matrix(10, 1, 0).shape[0] == 11       # K+S
+    assert bk.encode_matrix(12, 0, 2).shape[0] == 28       # 2(K+E)
+    assert bk.encode_matrix(12, 1, 3).shape[0] == 31       # 2(K+E)+S
+
+
+@given(k=st.integers(2, 8))
+def test_encoded_queries_interpolate_originals(k):
+    """u(alpha_j) = X_j exactly: encoding evaluated AT the query nodes must
+    return the queries (the interpolant passes through them)."""
+    alpha = bk.chebyshev_first(k)
+    rng = np.random.default_rng(k)
+    x = rng.normal(size=(k, 7)).astype(np.float32)
+    for j in range(k):
+        wj = bk.berrut_weights(alpha, float(alpha[j]))
+        rec = wj @ x
+        np.testing.assert_allclose(rec, x[j], atol=1e-6)
+
+
+def test_signs_keyed_to_worker_indices_in_decode():
+    """Dropping a worker must keep (-1)^i of the survivors unchanged."""
+    k, s = 4, 2
+    n = k + s - 1
+    beta = bk.chebyshev_second(n)
+    avail = np.array([0, 2, 3, 5])
+    d = bk.decode_matrix(k, s, 0, avail)
+    alpha = bk.chebyshev_first(k)
+    # Manual eq. (10) at alpha_0.
+    raw = ((-1.0) ** (avail % 2)) / (alpha[0] - beta[avail])
+    manual = raw / raw.sum()
+    np.testing.assert_allclose(d[0], manual.astype(np.float32), atol=1e-6)

@@ -1,0 +1,88 @@
+"""Dataset generator tests: determinism, shapes, separability, export format."""
+
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+from compile import datasets
+
+
+@pytest.mark.parametrize("name", datasets.DATASETS)
+def test_shapes_and_ranges(name):
+    h, w, c = datasets.shape_of(name)
+    images, labels = datasets.generate(name, "test", 64)
+    assert images.shape == (64, h, w, c)
+    assert images.dtype == np.float32
+    assert labels.shape == (64,)
+    assert labels.dtype == np.int32
+    assert labels.min() >= 0 and labels.max() < datasets.NUM_CLASSES
+    assert np.isfinite(images).all()
+    assert images.min() >= -0.5 - 1e-6 and images.max() <= 1.6 + 1e-6
+
+
+@pytest.mark.parametrize("name", datasets.DATASETS)
+def test_deterministic_across_calls(name):
+    a_img, a_lab = datasets.generate(name, "test", 32)
+    b_img, b_lab = datasets.generate(name, "test", 32)
+    np.testing.assert_array_equal(a_img, b_img)
+    np.testing.assert_array_equal(a_lab, b_lab)
+
+
+def test_train_and_test_streams_differ():
+    a_img, _ = datasets.generate("synmnist", "train", 32)
+    b_img, _ = datasets.generate("synmnist", "test", 32)
+    assert not np.array_equal(a_img, b_img)
+
+
+def test_templates_are_class_distinct():
+    for name in datasets.DATASETS:
+        temps = [datasets.class_template(name, c) for c in range(10)]
+        for i in range(10):
+            for j in range(i + 1, 10):
+                diff = np.abs(temps[i] - temps[j]).mean()
+                assert diff > 0.01, f"{name}: classes {i},{j} too similar ({diff})"
+
+
+def test_templates_deterministic():
+    a = datasets.class_template("syncifar", 3)
+    b = datasets._class_template("syncifar", 3)  # bypass cache
+    np.testing.assert_array_equal(a, b)
+
+
+def test_export_binary_roundtrip_f32():
+    arr = np.arange(24, dtype=np.float32).reshape(2, 3, 4)
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "t.bin")
+        datasets.export_binary(path, arr)
+        with open(path, "rb") as f:
+            assert f.read(4) == b"AXT1"
+            ndim = np.frombuffer(f.read(4), "<u4")[0]
+            assert ndim == 3
+            dims = np.frombuffer(f.read(12), "<u4")
+            assert tuple(dims) == (2, 3, 4)
+            data = np.frombuffer(f.read(), "<f4").reshape(2, 3, 4)
+            np.testing.assert_array_equal(data, arr)
+
+
+def test_export_binary_rejects_unknown_dtype():
+    with tempfile.TemporaryDirectory() as d:
+        with pytest.raises(ValueError):
+            datasets.export_binary(os.path.join(d, "t.bin"), np.zeros(3, dtype=np.float64))
+
+
+def test_nearest_template_classifier_beats_chance():
+    """The generator must be learnable: a trivial nearest-template classifier
+    should already beat chance by a wide margin (the CNNs then do better)."""
+    for name in datasets.DATASETS:
+        images, labels = datasets.generate(name, "test", 200)
+        temps = np.stack([datasets.class_template(name, c) for c in range(10)])
+        t_flat = temps.reshape(10, -1)
+        x_flat = images.reshape(len(images), -1)
+        # Cosine similarity against each template.
+        t_norm = t_flat / (np.linalg.norm(t_flat, axis=1, keepdims=True) + 1e-9)
+        x_norm = x_flat / (np.linalg.norm(x_flat, axis=1, keepdims=True) + 1e-9)
+        pred = (x_norm @ t_norm.T).argmax(1)
+        acc = (pred == labels).mean()
+        assert acc > 0.4, f"{name}: nearest-template acc {acc}"

@@ -1,0 +1,152 @@
+"""Layer-1 Pallas kernels vs pure-jnp oracles (hypothesis shape sweeps)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import berrut as bk
+from compile.kernels import matmul as mk
+from compile.kernels.ref import coded_combine_ref, dense_ref, matmul_ref
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+# ----------------------------------------------------------------- matmul --
+
+@given(
+    m=st.integers(1, 150),
+    k=st.integers(1, 150),
+    n=st.integers(1, 150),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref_shape_sweep(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.normal(size=(m, k)).astype(np.float32)
+    b = rng.normal(size=(k, n)).astype(np.float32)
+    out = np.asarray(mk.matmul(jnp.asarray(a), jnp.asarray(b)))
+    ref = np.asarray(matmul_ref(jnp.asarray(a), jnp.asarray(b)))
+    # f32 accumulation order differs between the tiled contraction loop and
+    # the single dot; tolerance scales with contraction depth.
+    np.testing.assert_allclose(out, ref, rtol=2e-4, atol=1e-4 * max(1, k) ** 0.5)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float64, np.int32])
+def test_matmul_dtype_coercion(dtype):
+    a = np.ones((4, 4), dtype=dtype)
+    b = np.ones((4, 4), dtype=dtype)
+    out = np.asarray(mk.matmul(jnp.asarray(a), jnp.asarray(b)))
+    assert out.dtype == np.float32
+    np.testing.assert_allclose(out, 4.0 * np.ones((4, 4)))
+
+
+def test_matmul_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        mk.matmul(jnp.zeros((2, 3)), jnp.zeros((4, 5)))
+    with pytest.raises(ValueError):
+        mk.matmul(jnp.zeros((2,)), jnp.zeros((2, 2)))
+
+
+@given(
+    bm=st.sampled_from([8, 32, 128]),
+    bn=st.sampled_from([8, 32, 128]),
+    bk_=st.sampled_from([8, 32, 128]),
+)
+def test_matmul_block_shape_invariance(bm, bn, bk_):
+    """Result must not depend on the tiling — the schedule is semantics-free."""
+    rng = np.random.default_rng(7)
+    a = rng.normal(size=(65, 70)).astype(np.float32)
+    b = rng.normal(size=(70, 33)).astype(np.float32)
+    out = np.asarray(mk.matmul(jnp.asarray(a), jnp.asarray(b), bm=bm, bn=bn, bk=bk_))
+    ref = np.asarray(matmul_ref(jnp.asarray(a), jnp.asarray(b)))
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_dense_matches_ref():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(16, 24)).astype(np.float32)
+    w = rng.normal(size=(24, 10)).astype(np.float32)
+    b = rng.normal(size=(10,)).astype(np.float32)
+    out = np.asarray(mk.dense(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b)))
+    ref = np.asarray(dense_ref(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b)))
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_vmem_budget_structural():
+    """MXU-aligned default tiles fit comfortably in a 16 MiB VMEM."""
+    assert mk.mxu_aligned()
+    assert mk.vmem_bytes() <= 16 * 2**20 // 4  # 3 tiles of 64 KiB each
+
+
+# ---------------------------------------------------------- coded combine --
+
+@given(
+    k=st.integers(2, 16),
+    s=st.integers(1, 3),
+    e=st.integers(0, 3),
+    d=st.integers(1, 2000),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_coded_combine_matches_ref(k, s, e, d, seed):
+    w = bk.encode_matrix(k, s, e)
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(k, d)).astype(np.float32)
+    out = np.asarray(bk.coded_combine(jnp.asarray(w), jnp.asarray(x)))
+    ref = np.asarray(coded_combine_ref(jnp.asarray(w), jnp.asarray(x)))
+    np.testing.assert_allclose(out, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_coded_combine_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        bk.coded_combine(jnp.zeros((3, 4)), jnp.zeros((5, 6)))
+
+
+# -------------------------------------------------- encode/decode matrices --
+
+@given(k=st.integers(1, 16), s=st.integers(1, 4), e=st.integers(0, 3))
+def test_encode_matrix_partition_of_unity(k, s, e):
+    w = bk.encode_matrix(k, s, e)
+    n = (k + s - 1) if e == 0 else (2 * (k + e) + s - 1)
+    assert w.shape == (n + 1, k)
+    np.testing.assert_allclose(w.sum(axis=1), 1.0, atol=1e-5)
+
+
+def test_chebyshev_points_match_paper():
+    a = bk.chebyshev_first(2)
+    np.testing.assert_allclose(a, [np.cos(np.pi / 4), np.cos(3 * np.pi / 4)])
+    b = bk.chebyshev_second(4)
+    np.testing.assert_allclose(b[0], 1.0)
+    np.testing.assert_allclose(b[-1], -1.0)
+    np.testing.assert_allclose(b[2], 0.0, atol=1e-16)
+
+
+@given(k=st.integers(2, 12), s=st.integers(1, 3), seed=st.integers(0, 10**6))
+def test_decode_matrix_rows_sum_to_one(k, s, seed):
+    n = k + s - 1
+    rng = np.random.default_rng(seed)
+    avail = np.sort(rng.choice(n + 1, size=k, replace=False))
+    d = bk.decode_matrix(k, s, 0, avail)
+    assert d.shape == (k, k)
+    # f32 cancellation scales with the row's weight mass (ill-conditioned
+    # subsets have large +/- weights).
+    leb = np.abs(d).sum(axis=1)
+    np.testing.assert_allclose(d.sum(axis=1), 1.0, atol=2e-4 * np.maximum(1.0, leb).max())
+
+
+def test_decode_interpolatory_when_alpha_hits_beta():
+    """K=2,S=3 makes beta_1 == alpha_0 exactly: the decode weight row must be
+    the unit vector at that node (the guard path)."""
+    k, s = 2, 3
+    avail = np.array([0, 1])
+    d = bk.decode_matrix(k, s, 0, avail)
+    # alpha_0 = cos(pi/4) == beta_1 = cos(pi/4).
+    np.testing.assert_allclose(d[0], [0.0, 1.0], atol=1e-12)
+
+
+def test_berrut_weights_guard_at_node():
+    nodes = bk.chebyshev_second(5)
+    w = bk.berrut_weights(nodes, float(nodes[2]))
+    expect = np.zeros(6)
+    expect[2] = 1.0
+    np.testing.assert_allclose(w, expect)

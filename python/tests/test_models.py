@@ -1,0 +1,86 @@
+"""Layer-2 model zoo tests: shapes, pallas-head equivalence, serialization."""
+
+import os
+import tempfile
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import datasets, models
+
+
+@pytest.mark.parametrize("arch", models.ARCHS)
+@pytest.mark.parametrize("dataset", ["synmnist", "syncifar"])
+def test_apply_shapes(arch, dataset):
+    h, w, c = datasets.shape_of(dataset)
+    params = models.init(arch, dataset, seed=1)
+    x = jnp.zeros((3, h, w, c), jnp.float32)
+    out = models.apply(arch, params, x)
+    assert out.shape == (3, 10)
+    assert np.isfinite(np.asarray(out)).all()
+
+
+@pytest.mark.parametrize("arch", models.ARCHS)
+def test_pallas_head_matches_jnp_head(arch):
+    """use_pallas=True must be numerically identical (the AOT path runs the
+    L1 kernel; training ran plain jnp)."""
+    params = models.init(arch, "syncifar", seed=2)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(4, 32, 32, 3)).astype(np.float32))
+    a = np.asarray(models.apply(arch, params, x, use_pallas=False))
+    b = np.asarray(models.apply(arch, params, x, use_pallas=True))
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+def test_init_is_deterministic():
+    a = models.init("resnet18_s", "syncifar", seed=3)
+    b = models.init("resnet18_s", "syncifar", seed=3)
+    fa, fb = models._flatten(a), models._flatten(b)
+    assert [n for n, _ in fa] == [n for n, _ in fb]
+    for (_, x), (_, y) in zip(fa, fb):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_different_seeds_differ():
+    a = models.init("lenet5", "synmnist", seed=1)
+    b = models.init("lenet5", "synmnist", seed=2)
+    assert not np.array_equal(np.asarray(a["c1"]["w"]), np.asarray(b["c1"]["w"]))
+
+
+@pytest.mark.parametrize("arch", ["lenet5", "googlenet_s"])
+def test_params_save_load_roundtrip(arch):
+    params = models.init(arch, "syncifar", seed=4)
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "p.axp")
+        models.save_params(path, params)
+        loaded = models.load_params(path)
+    fa, fb = models._flatten(params), models._flatten(loaded)
+    assert [n for n, _ in fa] == [n for n, _ in fb]
+    for (_, x), (_, y) in zip(fa, fb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    # Behaviourally identical too.
+    x = jnp.asarray(np.random.default_rng(5).normal(size=(2, 32, 32, 3)).astype(np.float32))
+    np.testing.assert_allclose(
+        np.asarray(models.apply(arch, params, x)),
+        np.asarray(models.apply(arch, loaded, x)),
+        rtol=1e-6,
+    )
+
+
+def test_param_count_positive_and_stable():
+    counts = {arch: models.param_count(models.init(arch, "syncifar", 0)) for arch in models.ARCHS}
+    for arch, n in counts.items():
+        assert n > 1000, f"{arch}: {n}"
+    # Family ordering sanity: resnet34_s deeper than resnet18_s.
+    assert counts["resnet34_s"] > counts["resnet18_s"]
+
+
+def test_batch_independence():
+    """Per-sample outputs must not depend on batch composition."""
+    params = models.init("resnet18_s", "syncifar", seed=6)
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.normal(size=(4, 32, 32, 3)).astype(np.float32))
+    full = np.asarray(models.apply("resnet18_s", params, x))
+    single = np.asarray(models.apply("resnet18_s", params, x[1:2]))
+    np.testing.assert_allclose(full[1:2], single, rtol=1e-4, atol=1e-5)

@@ -1,0 +1,70 @@
+//! Encode/decode hot-path benchmarks: the host-side cost ApproxIFER adds
+//! on top of a replication system (paper Fig. 4 — "only an encoder and a
+//! decoder are added"). Targets (DESIGN.md §8): encode+decode ≪ model
+//! execution at K=12, N+1=31, 32×32×3 payloads.
+
+use approxifer::coding::{ApproxIferCode, CodeParams};
+use approxifer::util::bench::{bench, black_box, group};
+use approxifer::util::rng::Rng;
+
+fn payloads(k: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
+    let mut rng = Rng::new(seed);
+    (0..k).map(|_| (0..d).map(|_| rng.f32() - 0.5).collect()).collect()
+}
+
+fn main() {
+    group("encode: X~ = W.X (per group)");
+    for &(k, s, e) in &[(8usize, 1usize, 0usize), (12, 1, 0), (12, 0, 2), (12, 1, 3)] {
+        for &d in &[784usize, 3072] {
+            let code = ApproxIferCode::new(CodeParams::new(k, s, e));
+            let qs = payloads(k, d, 1);
+            let qrefs: Vec<&[f32]> = qs.iter().map(|q| &q[..]).collect();
+            let mut out: Vec<Vec<f32>> =
+                vec![Vec::with_capacity(d); code.params().num_workers()];
+            bench(&format!("encode_k{k}_s{s}_e{e}_d{d}"), || {
+                code.encode_into(black_box(&qrefs), &mut out);
+                black_box(&out);
+            });
+        }
+    }
+
+    group("decode: Y^ = D.Y~ (per group, C=10 logits)");
+    for &(k, s, e) in &[(8usize, 1usize, 0usize), (12, 1, 0), (12, 0, 2)] {
+        let params = CodeParams::new(k, s, e);
+        let code = ApproxIferCode::new(params);
+        let mut rng = Rng::new(2);
+        let m = params.decode_set_size().min(params.num_workers());
+        let avail = rng.subset(params.num_workers(), m);
+        let preds = payloads(m, 10, 3);
+        let prefs: Vec<&[f32]> = preds.iter().map(|p| &p[..]).collect();
+        // Warm the decode-matrix cache: steady-state serving reuses it.
+        let _ = code.decode(&avail, &prefs);
+        bench(&format!("decode_k{k}_s{s}_e{e}_cached"), || {
+            black_box(code.decode(black_box(&avail), &prefs));
+        });
+    }
+
+    group("decode matrix construction (cache miss path)");
+    for &(k, s) in &[(8usize, 1usize), (12, 1)] {
+        let params = CodeParams::new(k, s, 0);
+        let mut rng = Rng::new(4);
+        // Pre-generate distinct availability sets to defeat the cache.
+        let sets: Vec<Vec<usize>> =
+            (0..1024).map(|_| rng.subset(params.num_workers(), k)).collect();
+        let mut i = 0;
+        bench(&format!("decode_matrix_miss_k{k}_s{s}"), || {
+            // Fresh code object every call would measure allocation; instead
+            // rotate sets and accept ~k/1024 cache hits.
+            let code = ApproxIferCode::new(params);
+            black_box(code.decode_matrix(&sets[i % sets.len()]));
+            i += 1;
+        });
+    }
+
+    group("encoder matrix construction (per (K,S,E), startup cost)");
+    for &(k, s, e) in &[(8usize, 1usize, 0usize), (12, 0, 3)] {
+        bench(&format!("code_new_k{k}_s{s}_e{e}"), || {
+            black_box(ApproxIferCode::new(CodeParams::new(k, s, e)));
+        });
+    }
+}

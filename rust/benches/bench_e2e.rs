@@ -1,0 +1,125 @@
+//! End-to-end group-latency benchmarks: the coded pipeline vs replication
+//! vs no-redundancy under controlled worker tails (the latency side of the
+//! paper's motivation; regenerable table `latency` in the harness). Uses
+//! the DelayMockEngine so model cost is controlled exactly and the bench
+//! isolates coordination overhead + tail behaviour.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use approxifer::coding::replication::ReplicationParams;
+use approxifer::coding::CodeParams;
+use approxifer::coordinator::{FaultPlan, GroupPipeline, ReplicationPipeline};
+use approxifer::metrics::ServingMetrics;
+use approxifer::util::bench::{bench_cfg, black_box, group, BenchConfig};
+use approxifer::workers::{
+    DelayMockEngine, InferenceEngine, LatencyModel, WorkerPool, WorkerSpec,
+};
+
+fn queries(k: usize, d: usize) -> Vec<Vec<f32>> {
+    (0..k)
+        .map(|j| (0..d).map(|t| ((j as f32) * 0.29 + (t as f32) * 0.011).sin()).collect())
+        .collect()
+}
+
+fn cfg() -> BenchConfig {
+    BenchConfig {
+        warmup: Duration::from_millis(200),
+        min_time: Duration::from_millis(1500),
+        min_iters: 30,
+        max_iters: 2000,
+    }
+}
+
+fn main() {
+    let (k, d, c) = (8usize, 128usize, 10usize);
+    let compute = Duration::from_micros(200);
+    let tail = LatencyModel::Exponential { mean_ms: 2.0 };
+
+    group("group latency: coordination + tail (exp 2ms tail, 0.2ms compute)");
+    {
+        let engine: Arc<dyn InferenceEngine> = Arc::new(DelayMockEngine::new(d, c, compute));
+        let params = CodeParams::new(k, 1, 0);
+        let pool = WorkerPool::spawn(engine, &vec![WorkerSpec { latency: tail }; params.num_workers()], 1);
+        let mut pipe = GroupPipeline::new(params);
+        let metrics = ServingMetrics::new();
+        let qs = queries(k, d);
+        let qrefs: Vec<&[f32]> = qs.iter().map(|q| &q[..]).collect();
+        bench_cfg("approxifer_group_k8_s1_exp", cfg(), || {
+            black_box(pipe.infer_group(&pool, &qrefs, &FaultPlan::none(), &metrics).unwrap());
+        });
+        pool.shutdown();
+    }
+    {
+        let engine: Arc<dyn InferenceEngine> = Arc::new(DelayMockEngine::new(d, c, compute));
+        let params = ReplicationParams::new(k, 1, 0);
+        let pool = WorkerPool::spawn(engine, &vec![WorkerSpec { latency: tail }; params.num_workers()], 2);
+        let mut pipe = ReplicationPipeline::new(params);
+        let metrics = ServingMetrics::new();
+        let qs = queries(k, d);
+        let qrefs: Vec<&[f32]> = qs.iter().map(|q| &q[..]).collect();
+        bench_cfg("replication_group_k8_s1_exp", cfg(), || {
+            black_box(pipe.infer_group(&pool, &qrefs, &FaultPlan::none(), &metrics).unwrap());
+        });
+        pool.shutdown();
+    }
+    {
+        // No redundancy: replication with 1 copy (wait for all).
+        let engine: Arc<dyn InferenceEngine> = Arc::new(DelayMockEngine::new(d, c, compute));
+        let params = ReplicationParams::new(k, 0, 0);
+        let pool = WorkerPool::spawn(engine, &vec![WorkerSpec { latency: tail }; params.num_workers()], 3);
+        let mut pipe = ReplicationPipeline::new(params);
+        let metrics = ServingMetrics::new();
+        let qs = queries(k, d);
+        let qrefs: Vec<&[f32]> = qs.iter().map(|q| &q[..]).collect();
+        bench_cfg("no_redundancy_group_k8_exp", cfg(), || {
+            black_box(pipe.infer_group(&pool, &qrefs, &FaultPlan::none(), &metrics).unwrap());
+        });
+        pool.shutdown();
+    }
+
+    group("coordination floor: zero tail, zero compute (pure overhead)");
+    {
+        let engine: Arc<dyn InferenceEngine> =
+            Arc::new(DelayMockEngine::new(d, c, Duration::ZERO));
+        let params = CodeParams::new(k, 1, 0);
+        let pool = WorkerPool::spawn(
+            engine,
+            &vec![WorkerSpec { latency: LatencyModel::None }; params.num_workers()],
+            4,
+        );
+        let mut pipe = GroupPipeline::new(params);
+        let metrics = ServingMetrics::new();
+        let qs = queries(k, d);
+        let qrefs: Vec<&[f32]> = qs.iter().map(|q| &q[..]).collect();
+        bench_cfg("approxifer_group_floor_k8_s1", cfg(), || {
+            black_box(pipe.infer_group(&pool, &qrefs, &FaultPlan::none(), &metrics).unwrap());
+        });
+        pool.shutdown();
+    }
+
+    group("byzantine pipeline: locate+vote on the path (K=12, E=2)");
+    {
+        let engine: Arc<dyn InferenceEngine> =
+            Arc::new(DelayMockEngine::new(d, c, Duration::ZERO));
+        let params = CodeParams::new(12, 0, 2);
+        let pool = WorkerPool::spawn(
+            engine,
+            &vec![WorkerSpec { latency: LatencyModel::None }; params.num_workers()],
+            5,
+        );
+        let mut pipe = GroupPipeline::new(params);
+        let metrics = ServingMetrics::new();
+        let qs = queries(12, d);
+        let qrefs: Vec<&[f32]> = qs.iter().map(|q| &q[..]).collect();
+        let plan = FaultPlan {
+            byzantine: vec![3, 17],
+            byz_mode: Some(approxifer::workers::ByzantineMode::GaussianNoise { sigma: 10.0 }),
+            ..FaultPlan::none()
+        };
+        bench_cfg("approxifer_group_k12_e2_byz", cfg(), || {
+            black_box(pipe.infer_group(&pool, &qrefs, &plan, &metrics).unwrap());
+        });
+        pool.shutdown();
+    }
+}

@@ -1,0 +1,45 @@
+//! Linear-algebra substrate benchmarks at the locator's problem sizes
+//! (matrices ≤ ~60×30): QR least-squares and Jacobi SVD.
+
+use approxifer::linalg::{lstsq, min_norm_solution, Mat, Qr};
+use approxifer::util::bench::{bench, black_box, group};
+use approxifer::util::rng::Rng;
+
+fn random_mat(m: usize, n: usize, seed: u64) -> Mat {
+    let mut rng = Rng::new(seed);
+    Mat::from_fn(m, n, |_, _| rng.range_f64(-2.0, 2.0))
+}
+
+fn main() {
+    group("Householder QR least squares (locator system sizes)");
+    for &(m, n) in &[(17usize, 19usize), (28, 27), (31, 29)] {
+        // m equations, n unknowns — note the locator pads when m < n is
+        // impossible by eq. (3); sizes here are the real (N-S+1, 2(K+E)-1).
+        let (m, n) = if m >= n { (m, n) } else { (n, m) };
+        let a = random_mat(m, n, 5);
+        let b: Vec<f64> = (0..m).map(|i| (i as f64 * 0.37).sin()).collect();
+        bench(&format!("lstsq_{m}x{n}"), || {
+            black_box(lstsq(black_box(&a), &b).unwrap());
+        });
+        bench(&format!("qr_factor_{m}x{n}"), || {
+            black_box(Qr::factor(black_box(&a)).unwrap());
+        });
+    }
+
+    group("Jacobi SVD smallest singular vector (homogeneous ablation)");
+    for &(m, n) in &[(28usize, 28usize), (31, 30)] {
+        let a = random_mat(m, n, 7);
+        bench(&format!("min_norm_{m}x{n}"), || {
+            black_box(min_norm_solution(black_box(&a)).unwrap());
+        });
+    }
+
+    group("matmul (decode-matrix application scale)");
+    for &(m, k, n) in &[(12usize, 26usize, 10usize), (31, 12, 3072)] {
+        let a = random_mat(m, k, 9);
+        let b = random_mat(k, n, 10);
+        bench(&format!("matmul_{m}x{k}x{n}"), || {
+            black_box(a.matmul(black_box(&b)));
+        });
+    }
+}

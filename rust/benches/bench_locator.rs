@@ -1,0 +1,68 @@
+//! Error-locator benchmarks (Algorithms 1 and 2) plus the
+//! pinned-vs-homogeneous ablation DESIGN.md §7 calls out: the pinned
+//! (QR least-squares) variant is the production path; the homogeneous
+//! (Jacobi-SVD smallest-singular-vector) variant is the paper's pure
+//! Algorithm 1 form.
+
+use approxifer::coding::chebyshev;
+use approxifer::coding::locator::{locate, poly_eval, LocatorMethod};
+use approxifer::coding::vote::locate_by_vote;
+use approxifer::coding::CodeParams;
+use approxifer::util::bench::{bench, black_box, group};
+use approxifer::util::rng::Rng;
+
+/// Build one corrupted evaluation set for (K, E).
+fn case(k: usize, e: usize, sigma: f64, seed: u64) -> (Vec<f64>, Vec<f64>) {
+    let params = CodeParams::new(k, 0, e);
+    let xs = chebyshev::second_kind(params.n());
+    let mut rng = Rng::new(seed);
+    let p: Vec<f64> = (0..k).map(|_| rng.range_f64(-2.0, 2.0)).collect();
+    let mut ys: Vec<f64> = xs.iter().map(|&x| poly_eval(&p, x)).collect();
+    for i in rng.subset(xs.len(), e) {
+        ys[i] += rng.normal(0.0, sigma);
+    }
+    (xs, ys)
+}
+
+fn main() {
+    group("Algorithm 1 scalar locator (per class coordinate)");
+    for &(k, e) in &[(8usize, 2usize), (12, 2), (12, 3)] {
+        let (xs, ys) = case(k, e, 10.0, 11);
+        bench(&format!("locate_pinned_k{k}_e{e}"), || {
+            black_box(locate(&xs, &ys, k, e, LocatorMethod::Pinned).unwrap());
+        });
+    }
+
+    group("ablation: pinned QR vs homogeneous SVD (K=12, E=2)");
+    let (xs, ys) = case(12, 2, 10.0, 13);
+    bench("locate_pinned_k12_e2_ablation", || {
+        black_box(locate(&xs, &ys, 12, 2, LocatorMethod::Pinned).unwrap());
+    });
+    bench("locate_homogeneous_k12_e2_ablation", || {
+        black_box(locate(&xs, &ys, 12, 2, LocatorMethod::Homogeneous).unwrap());
+    });
+
+    group("Algorithm 2 vote (C classes x Algorithm 1)");
+    for &(k, e, c) in &[(12usize, 2usize, 10usize), (12, 3, 10), (8, 2, 100)] {
+        let params = CodeParams::new(k, 0, e);
+        let xs = chebyshev::second_kind(params.n());
+        let mut rng = Rng::new(17);
+        let m = xs.len();
+        let mut preds: Vec<Vec<f32>> = vec![vec![0.0; c]; m];
+        for class in 0..c {
+            let coeffs: Vec<f64> = (0..4).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+            for (i, &x) in xs.iter().enumerate() {
+                preds[i][class] = poly_eval(&coeffs, x) as f32;
+            }
+        }
+        for i in rng.subset(m, e) {
+            for v in preds[i].iter_mut() {
+                *v += rng.normal(0.0, 10.0) as f32;
+            }
+        }
+        let refs: Vec<&[f32]> = preds.iter().map(|p| &p[..]).collect();
+        bench(&format!("vote_k{k}_e{e}_c{c}"), || {
+            black_box(locate_by_vote(&xs, &refs, k, e, LocatorMethod::Pinned).unwrap());
+        });
+    }
+}

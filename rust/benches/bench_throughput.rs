@@ -1,0 +1,80 @@
+//! Online-service throughput benchmarks: the batcher + coordinator +
+//! worker-pool stack under closed-loop load with mock engines (model cost
+//! controlled), sweeping K and the flush deadline.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use approxifer::coding::CodeParams;
+use approxifer::coordinator::{Service, ServiceConfig};
+use approxifer::sim::{run_scenario, Arrivals};
+use approxifer::workers::{DelayMockEngine, InferenceEngine, WorkerSpec};
+
+fn main() {
+    let (d, c) = (128usize, 10usize);
+    println!("\n== service throughput (closed-loop, 0.1ms model, no tail) ==");
+    println!(
+        "{:<26} {:>8} {:>12} {:>12} {:>12}",
+        "config", "requests", "thrpt/s", "p50_ms", "p99_ms"
+    );
+    for &k in &[4usize, 8, 12] {
+        let params = CodeParams::new(k, 1, 0);
+        let engine: Arc<dyn InferenceEngine> =
+            Arc::new(DelayMockEngine::new(d, c, Duration::from_micros(100)));
+        let mut cfg = ServiceConfig::new(params);
+        cfg.flush_after = Duration::from_millis(5);
+        cfg.worker_specs = vec![WorkerSpec::default(); params.num_workers()];
+        let service = Arc::new(Service::start(engine, cfg));
+        let report =
+            run_scenario(&service, d, 512, Arrivals::Uniform { rate: 1e6 }, 42).unwrap();
+        println!(
+            "{:<26} {:>8} {:>12.1} {:>12.2} {:>12.2}",
+            format!("approxifer_k{k}_s1"),
+            report.sent,
+            report.throughput,
+            report.latency.p50 * 1e3,
+            report.latency.p99 * 1e3
+        );
+    }
+
+    println!("\n== flush-deadline sweep (K=8, sparse arrivals 200/s) ==");
+    println!("{:<26} {:>12} {:>12} {:>12}", "flush_after", "thrpt/s", "p50_ms", "p99_ms");
+    for &ms in &[2u64, 10, 50] {
+        let params = CodeParams::new(8, 1, 0);
+        let engine: Arc<dyn InferenceEngine> =
+            Arc::new(DelayMockEngine::new(d, c, Duration::from_micros(100)));
+        let mut cfg = ServiceConfig::new(params);
+        cfg.flush_after = Duration::from_millis(ms);
+        let service = Arc::new(Service::start(engine, cfg));
+        let report =
+            run_scenario(&service, d, 256, Arrivals::Poisson { rate: 200.0 }, 43).unwrap();
+        println!(
+            "{:<26} {:>12.1} {:>12.2} {:>12.2}",
+            format!("{ms}ms"),
+            report.throughput,
+            report.latency.p50 * 1e3,
+            report.latency.p99 * 1e3
+        );
+    }
+
+    println!("\n== encode throughput ceiling (host-side, K=8 S=1, d=3072) ==");
+    {
+        use approxifer::coding::ApproxIferCode;
+        let code = ApproxIferCode::new(CodeParams::new(8, 1, 0));
+        let qs: Vec<Vec<f32>> = (0..8).map(|j| vec![j as f32 * 0.1; 3072]).collect();
+        let qrefs: Vec<&[f32]> = qs.iter().map(|q| &q[..]).collect();
+        let mut out: Vec<Vec<f32>> = vec![Vec::new(); 9];
+        let t0 = Instant::now();
+        let iters = 20_000;
+        for _ in 0..iters {
+            code.encode_into(&qrefs, &mut out);
+        }
+        let per = t0.elapsed().as_secs_f64() / iters as f64;
+        println!(
+            "encode_into: {:.1}us/group -> {:.0} groups/s ({:.0} queries/s)",
+            per * 1e6,
+            1.0 / per,
+            8.0 / per
+        );
+    }
+}

@@ -1,0 +1,176 @@
+//! Hand-rolled CLI argument parsing (no `clap` in this environment):
+//! subcommand + `--flag value` / `--flag` options with typed accessors and
+//! a generated usage string.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    flags: BTreeMap<String, Vec<String>>,
+    positional: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown flag --{0}")]
+    Unknown(String),
+    #[error("flag --{0} expects a value")]
+    MissingValue(String),
+    #[error("flag --{flag}: cannot parse '{value}' as {ty}")]
+    BadValue { flag: String, value: String, ty: &'static str },
+}
+
+/// Specification of accepted flags: (name, takes_value).
+pub struct Spec {
+    flags: Vec<(&'static str, bool)>,
+}
+
+impl Spec {
+    pub fn new(flags: &[(&'static str, bool)]) -> Spec {
+        Spec { flags: flags.to_vec() }
+    }
+
+    fn lookup(&self, name: &str) -> Option<bool> {
+        self.flags.iter().find(|(n, _)| *n == name).map(|(_, takes)| *takes)
+    }
+}
+
+impl Args {
+    /// Parse `argv[1..]`: first non-flag token is the subcommand, the rest
+    /// are validated against `spec`.
+    pub fn parse(argv: &[String], spec: &Spec) -> Result<Args, CliError> {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                let takes = spec.lookup(name).ok_or_else(|| CliError::Unknown(name.into()))?;
+                if takes {
+                    // Support both `--k 8` and `--k=8`.
+                    let value = if let Some((n, v)) = name.split_once('=') {
+                        let _ = n;
+                        v.to_string()
+                    } else {
+                        it.next().ok_or_else(|| CliError::MissingValue(name.into()))?.clone()
+                    };
+                    out.flags.entry(name.split('=').next().unwrap().into()).or_default().push(value);
+                } else {
+                    out.flags.entry(name.into()).or_default().push("true".into());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(tok.clone());
+            } else {
+                out.positional.push(tok.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    /// All occurrences (for repeatable flags like --set).
+    pub fn get_all(&self, name: &str) -> Vec<String> {
+        self.flags.get(name).cloned().unwrap_or_default()
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| CliError::BadValue {
+                flag: name.into(),
+                value: v.into(),
+                ty: "usize",
+            }),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| CliError::BadValue {
+                flag: name.into(),
+                value: v.into(),
+                ty: "u64",
+            }),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| CliError::BadValue {
+                flag: name.into(),
+                value: v.into(),
+                ty: "f64",
+            }),
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> Spec {
+        Spec::new(&[("k", true), ("verbose", false), ("set", true)])
+    }
+
+    fn argv(toks: &[&str]) -> Vec<String> {
+        toks.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_and_flags() {
+        let a = Args::parse(&argv(&["serve", "--k", "8", "--verbose"]), &spec()).unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("serve"));
+        assert_eq!(a.get_usize("k", 0).unwrap(), 8);
+        assert!(a.has("verbose"));
+        assert!(!a.has("quiet"));
+    }
+
+    #[test]
+    fn repeatable_flags_collect() {
+        let a = Args::parse(&argv(&["run", "--set", "a=1", "--set", "b=2"]), &spec()).unwrap();
+        assert_eq!(a.get_all("set"), vec!["a=1", "b=2"]);
+    }
+
+    #[test]
+    fn unknown_flag_rejected() {
+        assert!(matches!(
+            Args::parse(&argv(&["run", "--nope"]), &spec()),
+            Err(CliError::Unknown(_))
+        ));
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(matches!(
+            Args::parse(&argv(&["run", "--k"]), &spec()),
+            Err(CliError::MissingValue(_))
+        ));
+    }
+
+    #[test]
+    fn bad_value_typed_error() {
+        let a = Args::parse(&argv(&["run", "--k", "eight"]), &spec()).unwrap();
+        assert!(matches!(a.get_usize("k", 0), Err(CliError::BadValue { .. })));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&argv(&["run"]), &spec()).unwrap();
+        assert_eq!(a.get_usize("k", 7).unwrap(), 7);
+        assert_eq!(a.get_f64("k", 1.5).unwrap(), 1.5);
+    }
+}

@@ -1,0 +1,197 @@
+//! Numerical analysis of the ApproxIFER code: decode-set conditioning
+//! (Lebesgue-style constants), per-straggler-pattern statistics, and the
+//! α/β grid-geometry diagnostics behind the S=1 midpoint effect
+//! (EXPERIMENTS.md §Deviations).
+//!
+//! Background: Berrut's interpolant over the FULL second-kind grid is
+//! extremely well conditioned, but the decoder interpolates over the
+//! *subset* of workers that replied, keeping the original `(-1)^i` signs
+//! (paper eq. (10)). Dropping nodes breaks strict sign alternation, so the
+//! weight mass `Λ_j(F) = Σ_m |ℓ̂_m(α_j)|` — a Lebesgue-constant analogue —
+//! varies with the drop pattern and bounds both noise amplification and
+//! f32 cancellation in the decode GEMM.
+
+use super::berrut;
+use super::scheme::{ApproxIferCode, CodeParams};
+
+/// Conditioning of one availability set.
+#[derive(Clone, Debug)]
+pub struct SetConditioning {
+    /// Sorted worker indices that replied.
+    pub avail: Vec<usize>,
+    /// max_j Σ_m |ℓ̂_m(α_j)| over the K decode rows.
+    pub lebesgue: f64,
+    /// Worst decode row (query index attaining `lebesgue`).
+    pub worst_query: usize,
+    /// Max |α_j − nearest available β| — interpolation-distance diagnostic.
+    pub max_node_distance: f64,
+}
+
+/// Compute conditioning diagnostics for a specific availability set.
+pub fn set_conditioning(code: &ApproxIferCode, avail: &[usize]) -> SetConditioning {
+    let nodes: Vec<f64> = avail.iter().map(|&i| code.beta()[i]).collect();
+    let signs: Vec<i32> = avail.iter().map(|&i| i as i32).collect();
+    let mut lebesgue = 0.0f64;
+    let mut worst_query = 0;
+    let mut max_node_distance = 0.0f64;
+    for (j, &a) in code.alpha().iter().enumerate() {
+        let w = berrut::weights_signed(&nodes, &signs, a);
+        let mass: f64 = w.iter().map(|x| x.abs()).sum();
+        if mass > lebesgue {
+            lebesgue = mass;
+            worst_query = j;
+        }
+        let dist = nodes.iter().map(|&b| (a - b).abs()).fold(f64::INFINITY, f64::min);
+        max_node_distance = max_node_distance.max(dist);
+    }
+    SetConditioning { avail: avail.to_vec(), lebesgue, worst_query, max_node_distance }
+}
+
+/// Statistics over all `C(N+1, S)` straggler patterns (E = 0 decode sets).
+#[derive(Clone, Debug)]
+pub struct PatternStats {
+    pub params: CodeParams,
+    pub patterns: usize,
+    pub leb_min: f64,
+    pub leb_mean: f64,
+    pub leb_max: f64,
+    /// The drop pattern attaining `leb_max`.
+    pub worst_drop: Vec<usize>,
+}
+
+/// Enumerate every S-subset of workers as the straggler set, decode from
+/// the first K of the survivors (the fastest-K protocol), and summarize
+/// the conditioning distribution. Exhaustive — use for the small grids the
+/// paper runs (C(31,3) ≈ 4500 patterns max).
+pub fn straggler_pattern_stats(params: CodeParams) -> PatternStats {
+    assert_eq!(params.e, 0, "pattern stats are for the stragglers-only decode");
+    let code = ApproxIferCode::new(params);
+    let nw = params.num_workers();
+    let k = params.k;
+    let mut leb_min = f64::INFINITY;
+    let mut leb_max = 0.0f64;
+    let mut sum = 0.0f64;
+    let mut count = 0usize;
+    let mut worst_drop = Vec::new();
+    let mut drop: Vec<usize> = (0..params.s).collect();
+    loop {
+        // Decode set: first K survivors.
+        let avail: Vec<usize> =
+            (0..nw).filter(|i| !drop.contains(i)).take(k).collect();
+        let c = set_conditioning(&code, &avail);
+        if c.lebesgue > leb_max {
+            leb_max = c.lebesgue;
+            worst_drop = drop.clone();
+        }
+        leb_min = leb_min.min(c.lebesgue);
+        sum += c.lebesgue;
+        count += 1;
+        // Next combination.
+        if !next_combination(&mut drop, nw) {
+            break;
+        }
+    }
+    PatternStats {
+        params,
+        patterns: count,
+        leb_min,
+        leb_mean: sum / count as f64,
+        leb_max,
+        worst_drop,
+    }
+}
+
+/// Advance `combo` to the next S-combination of `0..n`; false when done.
+fn next_combination(combo: &mut [usize], n: usize) -> bool {
+    let s = combo.len();
+    if s == 0 {
+        return false;
+    }
+    let mut i = s;
+    while i > 0 {
+        i -= 1;
+        if combo[i] < n - (s - i) {
+            combo[i] += 1;
+            for j in (i + 1)..s {
+                combo[j] = combo[j - 1] + 1;
+            }
+            return true;
+        }
+    }
+    false
+}
+
+/// Grid-geometry diagnostic for the S=1 midpoint effect: the mean angular
+/// distance (in units of the β spacing) from each decode point `α_j` to its
+/// nearest worker node. For `S = 1` (`N = K`) the first-kind α's sit
+/// *exactly halfway* between consecutive second-kind β's — the worst case
+/// for interpolating a sharply-varying `f∘u`; larger `N` breaks the
+/// alignment.
+pub fn midpoint_alignment(params: CodeParams) -> f64 {
+    let code = ApproxIferCode::new(params);
+    let n = params.n();
+    // Angular coordinates: α_j = cos(θ), β_i = cos(iπ/N).
+    let spacing = std::f64::consts::PI / n as f64;
+    let mut total = 0.0;
+    for &a in code.alpha() {
+        let theta = a.clamp(-1.0, 1.0).acos();
+        let frac = (theta / spacing).fract();
+        // Distance to nearest grid angle, normalized to [0, 0.5].
+        total += frac.min(1.0 - frac);
+    }
+    total / params.k as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_set_is_well_conditioned() {
+        let params = CodeParams::new(8, 1, 0);
+        let code = ApproxIferCode::new(params);
+        let all: Vec<usize> = (0..params.num_workers()).collect();
+        let c = set_conditioning(&code, &all);
+        // Full second-kind grid: Berrut's Lebesgue constant is O(log N).
+        assert!(c.lebesgue < 5.0, "leb={}", c.lebesgue);
+    }
+
+    #[test]
+    fn dropping_nodes_never_improves_worst_case() {
+        let params = CodeParams::new(8, 1, 0);
+        let stats = straggler_pattern_stats(params);
+        assert_eq!(stats.patterns, params.num_workers());
+        assert!(stats.leb_max >= stats.leb_mean);
+        assert!(stats.leb_mean >= stats.leb_min);
+        assert!(stats.leb_min >= 1.0 - 1e-12, "weights sum to 1 ⇒ mass ≥ 1");
+    }
+
+    #[test]
+    fn s1_alignment_is_exact_midpoint() {
+        // N = K: every α is exactly halfway between β's (alignment 0.5).
+        let a1 = midpoint_alignment(CodeParams::new(8, 1, 0));
+        assert!((a1 - 0.5).abs() < 1e-9, "a1={a1}");
+        // Larger N: strictly better (smaller) alignment.
+        let a2 = midpoint_alignment(CodeParams::new(8, 2, 0));
+        let a3 = midpoint_alignment(CodeParams::new(8, 3, 0));
+        assert!(a2 < a1 && a3 < a1, "a1={a1} a2={a2} a3={a3}");
+    }
+
+    #[test]
+    fn next_combination_enumerates_all() {
+        let mut combo = vec![0usize, 1];
+        let mut count = 1;
+        while next_combination(&mut combo, 5) {
+            count += 1;
+        }
+        assert_eq!(count, 10); // C(5,2)
+    }
+
+    #[test]
+    fn exhaustive_pattern_counts() {
+        let stats = straggler_pattern_stats(CodeParams::new(4, 2, 0));
+        // C(6, 2) = 15 straggler patterns.
+        assert_eq!(stats.patterns, 15);
+        assert_eq!(stats.worst_drop.len(), 2);
+    }
+}

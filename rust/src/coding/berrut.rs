@@ -1,0 +1,172 @@
+//! Berrut's rational interpolant (paper eqs. (1)–(2), (4)–(5), (10)).
+//!
+//! For nodes `x_0 > x_1 > … > x_n` and sign pattern `(-1)^{s_i}`, the
+//! barycentric basis at an evaluation point `z` is
+//!
+//! ```text
+//! ℓ_i(z) = [(-1)^{s_i} / (z − x_i)]  /  Σ_m (-1)^{s_m} / (z − x_m)
+//! ```
+//!
+//! Berrut's interpolant `r(z) = Σ_i f_i ℓ_i(z)` has no real poles and is
+//! extremely well conditioned; it is *interpolatory* (`r(x_i) = f_i`), which
+//! the evaluation guard below preserves exactly when `z` hits (or nearly
+//! hits) a node.
+//!
+//! The sign index `s_i` matters: the decoder (paper eq. (10)) interpolates
+//! over the *subset* `F` of worker nodes that responded, but keeps each
+//! node's **original** worker index `i` in the sign `(-1)^i` — it is not
+//! renumbered to the subset position. `weights_signed` takes explicit signs
+//! to support exactly that.
+
+/// Relative guard radius: if `|z − x_i|` is below this (scaled), treat `z`
+/// as the node itself and return the interpolatory unit weight.
+const NODE_GUARD: f64 = 1e-12;
+
+/// Barycentric basis weights `ℓ_i(z)` for nodes `xs` with alternating signs
+/// `(-1)^i` keyed to position (encoder case, paper eq. (5)).
+pub fn weights(xs: &[f64], z: f64) -> Vec<f64> {
+    let signs: Vec<i32> = (0..xs.len()).map(|i| i as i32).collect();
+    weights_signed(xs, &signs, z)
+}
+
+/// Barycentric basis weights with explicit sign exponents: the weight for
+/// node `i` uses `(-1)^{sign_exp[i]}`. Used by the decoder where nodes are a
+/// subset of `β` but signs stay keyed to original worker indices
+/// (paper eq. (10)).
+pub fn weights_signed(xs: &[f64], sign_exp: &[i32], z: f64) -> Vec<f64> {
+    assert_eq!(xs.len(), sign_exp.len());
+    assert!(!xs.is_empty(), "weights over zero nodes");
+    // Exact/near node: interpolatory weight (1 at that node, 0 elsewhere).
+    for (i, &x) in xs.iter().enumerate() {
+        if (z - x).abs() < NODE_GUARD {
+            let mut w = vec![0.0; xs.len()];
+            w[i] = 1.0;
+            return w;
+        }
+    }
+    let mut w: Vec<f64> = xs
+        .iter()
+        .zip(sign_exp)
+        .map(|(&x, &s)| {
+            let sign = if s % 2 == 0 { 1.0 } else { -1.0 };
+            sign / (z - x)
+        })
+        .collect();
+    let denom: f64 = w.iter().sum();
+    // Berrut's denominator never vanishes on the real line for alternating
+    // signs over sorted nodes; a defensive check anyway.
+    debug_assert!(denom.abs() > 0.0, "berrut denominator vanished at z={z}");
+    for wi in &mut w {
+        *wi /= denom;
+    }
+    w
+}
+
+/// Evaluate Berrut's interpolant `r(z) = Σ f_i ℓ_i(z)` for scalar samples.
+pub fn interpolate(xs: &[f64], fs: &[f64], z: f64) -> f64 {
+    assert_eq!(xs.len(), fs.len());
+    let w = weights(xs, z);
+    w.iter().zip(fs).map(|(wi, fi)| wi * fi).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::chebyshev;
+    use crate::testing::{assert_close, forall};
+
+    #[test]
+    fn weights_sum_to_one() {
+        forall("berrut-partition-of-unity", 100, |g| {
+            let n = g.usize_in(1, 30);
+            let xs = chebyshev::second_kind(n);
+            let z = g.f64_in(-1.0, 1.0);
+            let w = weights(&xs, z);
+            let sum: f64 = w.iter().sum();
+            assert_close(sum, 1.0, 1e-9);
+        });
+    }
+
+    #[test]
+    fn interpolatory_at_nodes() {
+        forall("berrut-interpolatory", 50, |g| {
+            let n = g.usize_in(1, 20);
+            let xs = chebyshev::second_kind(n);
+            let fs = g.vec_f64(n + 1, -5.0, 5.0);
+            let i = g.usize_in(0, n);
+            let r = interpolate(&xs, &fs, xs[i]);
+            assert_close(r, fs[i], 1e-12);
+        });
+    }
+
+    #[test]
+    fn near_node_guard_is_continuous() {
+        let xs = chebyshev::second_kind(6);
+        let fs: Vec<f64> = xs.iter().map(|x| x.sin()).collect();
+        let at = interpolate(&xs, &fs, xs[3]);
+        let near = interpolate(&xs, &fs, xs[3] + 1e-9);
+        assert_close(at, near, 1e-6);
+    }
+
+    #[test]
+    fn reproduces_constants_exactly() {
+        forall("berrut-constants", 50, |g| {
+            let n = g.usize_in(1, 25);
+            let xs = chebyshev::second_kind(n);
+            let c = g.f64_in(-10.0, 10.0);
+            let fs = vec![c; n + 1];
+            let z = g.f64_in(-1.0, 1.0);
+            assert_close(interpolate(&xs, &fs, z), c, 1e-9);
+        });
+    }
+
+    #[test]
+    fn converges_on_smooth_function() {
+        // Berrut converges O(h) on smooth functions; check error shrinks
+        // roughly linearly as nodes double.
+        let f = |x: f64| (2.0 * x).cos() + 0.5 * x;
+        let err = |n: usize| {
+            let xs = chebyshev::second_kind(n);
+            let fs: Vec<f64> = xs.iter().map(|&x| f(x)).collect();
+            let mut e = 0.0f64;
+            for t in 0..200 {
+                let z = -0.99 + 1.98 * t as f64 / 199.0;
+                e = e.max((interpolate(&xs, &fs, z) - f(z)).abs());
+            }
+            e
+        };
+        let (e8, e32, e128) = (err(8), err(32), err(128));
+        assert!(e32 < e8 * 0.6, "e8={e8} e32={e32}");
+        assert!(e128 < e32 * 0.6, "e32={e32} e128={e128}");
+    }
+
+    #[test]
+    fn subset_signs_keyed_to_original_index() {
+        // Decoder case: nodes {β_0, β_2, β_3} with signs (+, +, −) — i.e.
+        // (-1)^0, (-1)^2, (-1)^3 — not renumbered (+, −, +).
+        let beta = chebyshev::second_kind(4);
+        let sub = [beta[0], beta[2], beta[3]];
+        let w = weights_signed(&sub, &[0, 2, 3], 0.1);
+        let sum: f64 = w.iter().sum();
+        assert_close(sum, 1.0, 1e-12);
+        // Hand-computed reference.
+        let raw = [1.0 / (0.1 - beta[0]), 1.0 / (0.1 - beta[2]), -1.0 / (0.1 - beta[3])];
+        let d: f64 = raw.iter().sum();
+        for i in 0..3 {
+            assert_close(w[i], raw[i] / d, 1e-12);
+        }
+    }
+
+    #[test]
+    fn no_poles_between_nodes() {
+        // Scan densely across [-1, 1]; the interpolant of bounded data must
+        // stay bounded (no real poles — Berrut's key property).
+        let xs = chebyshev::second_kind(12);
+        let fs: Vec<f64> = (0..13).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect();
+        for t in 0..10_000 {
+            let z = -1.0 + 2.0 * t as f64 / 9999.0;
+            let r = interpolate(&xs, &fs, z);
+            assert!(r.is_finite() && r.abs() <= 50.0, "blow-up at z={z}: {r}");
+        }
+    }
+}

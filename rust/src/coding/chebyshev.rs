@@ -1,0 +1,97 @@
+//! Chebyshev evaluation points used by the ApproxIFER encoder/decoder
+//! (paper eq. (6) and eq. (8)).
+//!
+//! - Query nodes `α_j = cos((2j+1)π / 2K)` — Chebyshev points of the **first**
+//!   kind, `j ∈ [K-1]` (the decoder evaluates the recovered interpolant here).
+//! - Worker nodes `β_i = cos(iπ / N)` — Chebyshev points of the **second**
+//!   kind, `i ∈ [N]` (the encoder evaluates the query interpolant here; worker
+//!   `i` computes `f(u(β_i))`).
+
+use std::f64::consts::PI;
+
+/// `α_j = cos((2j+1)π / 2K)` for `j = 0..K-1` (first kind, paper eq. (6)).
+pub fn first_kind(k: usize) -> Vec<f64> {
+    assert!(k >= 1, "first_kind: K must be >= 1");
+    (0..k).map(|j| ((2 * j + 1) as f64 * PI / (2 * k) as f64).cos()).collect()
+}
+
+/// `β_i = cos(iπ / N)` for `i = 0..N` (second kind, paper eq. (8)).
+/// Returns `N+1` points.
+pub fn second_kind(n: usize) -> Vec<f64> {
+    assert!(n >= 1, "second_kind: N must be >= 1");
+    (0..=n).map(|i| (i as f64 * PI / n as f64).cos()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{assert_close, forall};
+
+    #[test]
+    fn first_kind_k2_known_values() {
+        let a = first_kind(2);
+        assert_close(a[0], (PI / 4.0).cos(), 1e-15);
+        assert_close(a[1], (3.0 * PI / 4.0).cos(), 1e-15);
+    }
+
+    #[test]
+    fn second_kind_endpoints() {
+        let b = second_kind(4);
+        assert_eq!(b.len(), 5);
+        assert_close(b[0], 1.0, 1e-15);
+        assert_close(b[4], -1.0, 1e-15);
+        assert_close(b[2], 0.0, 1e-15);
+    }
+
+    #[test]
+    fn nodes_strictly_decreasing_and_in_range() {
+        forall("cheb-monotone", 50, |g| {
+            let k = g.usize_in(1, 40);
+            let n = g.usize_in(1, 80);
+            let a = first_kind(k);
+            let b = second_kind(n);
+            for w in a.windows(2) {
+                assert!(w[0] > w[1], "first kind not decreasing");
+            }
+            for w in b.windows(2) {
+                assert!(w[0] > w[1], "second kind not decreasing");
+            }
+            for &x in &a {
+                assert!(x > -1.0 && x < 1.0, "first kind out of open interval");
+            }
+            for &x in &b {
+                assert!((-1.0..=1.0).contains(&x));
+            }
+        });
+    }
+
+    #[test]
+    fn first_kind_symmetric_about_zero() {
+        forall("cheb-symmetric", 30, |g| {
+            let k = g.usize_in(1, 30);
+            let a = first_kind(k);
+            for j in 0..k {
+                assert_close(a[j], -a[k - 1 - j], 1e-14);
+            }
+        });
+    }
+
+    #[test]
+    fn first_and_second_kind_nodes_distinct() {
+        // Encoder evaluates u at β, decoder evaluates r at α — the sets must
+        // not collide for the barycentric forms to stay well-posed (guarded
+        // anyway, but generically distinct).
+        for k in [2usize, 4, 8, 10, 12] {
+            for s in [1usize, 2, 3] {
+                let n = k + s - 1;
+                let a = first_kind(k);
+                let b = second_kind(n);
+                for &x in &a {
+                    for &y in &b {
+                        assert!((x - y).abs() > 1e-9 || (x - y).abs() == 0.0);
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,327 @@
+//! Error-locator for rational interpolation with erroneous evaluations —
+//! the paper's Algorithm 1 (and Appendix A / Algorithm 3 rationale).
+//!
+//! Given available evaluation points `β_i` and possibly-erroneous values
+//! `y_i`, find polynomials `P, Q` of degree `< K+E` with
+//! `P(β_i) = y_i·Q(β_i)` for all available `i`; at true error locations the
+//! error-locator factor `Λ` inside `Q` vanishes, so `|Q(β_i)|` is smallest
+//! at the corrupted indices. Following the paper's implementation note
+//! (numerical round-off makes exact `P/Q` division fragile), we do **not**
+//! divide — we evaluate `Q` at the nodes and declare the `E` smallest
+//! `|Q(β_i)|` to be the error locations.
+//!
+//! Two solver variants are provided:
+//! - [`locate_pinned`] — the paper's Algorithm 2 Step 1 form: pin `Q₀ = 1`,
+//!   solve the resulting inhomogeneous least-squares system with QR. This is
+//!   the production path (fast, stable for our sizes).
+//! - [`locate_homogeneous`] — the pure Algorithm 1 form: solve the
+//!   homogeneous system for the smallest right singular vector. Used as a
+//!   fallback when the pinned system is singular (e.g. the true `Q₀` is 0)
+//!   and as the ablation comparator.
+
+use crate::linalg::{lstsq, min_norm_solution, LinalgError, Mat};
+
+/// Which linear-system formulation the locator uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LocatorMethod {
+    /// Pin `Q₀ = 1`, inhomogeneous least squares via QR (paper Alg. 2).
+    Pinned,
+    /// Full homogeneous system, smallest singular vector via Jacobi SVD.
+    Homogeneous,
+}
+
+/// Locate up to `e` error positions among the available evaluations.
+///
+/// * `xs` — evaluation points for the available workers (`β_i`, `i ∈ A_avl`).
+/// * `ys` — the corresponding (possibly erroneous) scalar evaluations.
+/// * `k`  — number of queries `K` (the rational function's numerator and
+///   denominator degree bound is `K+E`).
+/// * `e`  — number of errors to locate.
+///
+/// Returns the positions **within `xs`** (not worker ids) of the `e` entries
+/// with smallest `|Q(x_i)|`, i.e. the suspected errors.
+pub fn locate(
+    xs: &[f64],
+    ys: &[f64],
+    k: usize,
+    e: usize,
+    method: LocatorMethod,
+) -> Result<Vec<usize>, LinalgError> {
+    assert_eq!(xs.len(), ys.len());
+    if e == 0 {
+        return Ok(Vec::new());
+    }
+    let m = xs.len();
+    let deg = k + e; // number of coefficients in each of P and Q
+    if m < 2 * deg - 1 {
+        return Err(LinalgError::Dims(format!(
+            "locator needs >= {} equations for K={k}, E={e}; have {m}",
+            2 * deg - 1
+        )));
+    }
+    let q = match method {
+        LocatorMethod::Pinned => match solve_pinned(xs, ys, deg) {
+            Ok(q) => q,
+            // Pinned system can be singular when the true Q has Q₀ ≈ 0;
+            // the homogeneous form has no such blind spot.
+            Err(LinalgError::RankDeficient { .. }) => solve_homogeneous(xs, ys, deg)?,
+            Err(err) => return Err(err),
+        },
+        LocatorMethod::Homogeneous => solve_homogeneous(xs, ys, deg)?,
+    };
+    // a_i = Q(x_i); the E smallest |a_i| are the suspected error locations.
+    let mut scored: Vec<(f64, usize)> = xs
+        .iter()
+        .enumerate()
+        .map(|(i, &x)| (poly_eval(&q, x).abs(), i))
+        .collect();
+    scored.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let mut out: Vec<usize> = scored[..e].iter().map(|&(_, i)| i).collect();
+    out.sort_unstable();
+    Ok(out)
+}
+
+/// Precomputed powers `x_i^j` shared across the per-class solves of
+/// Algorithm 2 (the evaluation points are the same for every class; only
+/// the `y`-scaled columns change).
+pub struct PowerTable {
+    m: usize,
+    deg: usize,
+    /// Row-major `m × deg`: `pow[i*deg + j] = x_i^j`.
+    pow: Vec<f64>,
+}
+
+impl PowerTable {
+    pub fn new(xs: &[f64], deg: usize) -> PowerTable {
+        let m = xs.len();
+        let mut pow = Vec::with_capacity(m * deg);
+        for &x in xs {
+            let mut p = 1.0;
+            for _ in 0..deg {
+                pow.push(p);
+                p *= x;
+            }
+        }
+        PowerTable { m, deg, pow }
+    }
+}
+
+/// Solve the pinned system: unknowns `P_0..P_{deg-1}, Q_1..Q_{deg-1}`, with
+/// `Q₀ = 1`; equations `Σ P_j x^j − y_i Σ_{j≥1} Q_j x^j = y_i`.
+/// Returns Q's coefficients `[1, Q_1, …, Q_{deg-1}]`.
+fn solve_pinned(xs: &[f64], ys: &[f64], deg: usize) -> Result<Vec<f64>, LinalgError> {
+    solve_pinned_with(&PowerTable::new(xs, deg), ys)
+}
+
+fn solve_pinned_with(pt: &PowerTable, ys: &[f64]) -> Result<Vec<f64>, LinalgError> {
+    let (m, deg) = (pt.m, pt.deg);
+    let ncols = 2 * deg - 1;
+    let mut a = Mat::zeros(m, ncols);
+    for (i, &y) in ys.iter().enumerate() {
+        let powers = &pt.pow[i * deg..(i + 1) * deg];
+        let row = a.row_mut(i);
+        row[..deg].copy_from_slice(powers);
+        for j in 1..deg {
+            row[deg + j - 1] = -y * powers[j];
+        }
+    }
+    let sol = lstsq(&a, ys)?;
+    let mut q = Vec::with_capacity(deg);
+    q.push(1.0);
+    q.extend_from_slice(&sol[deg..]);
+    Ok(q)
+}
+
+/// Algorithm 1 with a shared power table (Algorithm 2's inner loop).
+/// Semantics identical to [`locate`] with [`LocatorMethod::Pinned`]
+/// (including the homogeneous fallback on a singular pinned system).
+pub fn locate_with_powers(
+    xs: &[f64],
+    pt: &PowerTable,
+    ys: &[f64],
+    k: usize,
+    e: usize,
+) -> Result<Vec<usize>, LinalgError> {
+    assert_eq!(xs.len(), ys.len());
+    if e == 0 {
+        return Ok(Vec::new());
+    }
+    let deg = k + e;
+    debug_assert_eq!(pt.deg, deg);
+    if xs.len() < 2 * deg - 1 {
+        return Err(LinalgError::Dims(format!(
+            "locator needs >= {} equations for K={k}, E={e}; have {}",
+            2 * deg - 1,
+            xs.len()
+        )));
+    }
+    let q = match solve_pinned_with(pt, ys) {
+        Ok(q) => q,
+        Err(LinalgError::RankDeficient { .. }) => solve_homogeneous(xs, ys, deg)?,
+        Err(err) => return Err(err),
+    };
+    let mut scored: Vec<(f64, usize)> = xs
+        .iter()
+        .enumerate()
+        .map(|(i, &x)| (poly_eval(&q, x).abs(), i))
+        .collect();
+    scored.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let mut out: Vec<usize> = scored[..e].iter().map(|&(_, i)| i).collect();
+    out.sort_unstable();
+    Ok(out)
+}
+
+/// Solve the homogeneous system: unknowns `P_0..P_{deg-1}, Q_0..Q_{deg-1}`;
+/// rows `Σ P_j x^j − y_i Σ_j Q_j x^j = 0`; smallest right singular vector.
+/// Returns Q's coefficients.
+fn solve_homogeneous(xs: &[f64], ys: &[f64], deg: usize) -> Result<Vec<f64>, LinalgError> {
+    let m = xs.len();
+    let ncols = 2 * deg;
+    if m < ncols {
+        // Pad with zero rows so the SVD sees m >= n; zero rows don't change
+        // the minimizer.
+        let mut a = Mat::zeros(ncols, ncols);
+        fill_homogeneous_rows(&mut a, xs, ys, deg);
+        let sol = min_norm_solution(&a)?;
+        return Ok(sol[deg..].to_vec());
+    }
+    let mut a = Mat::zeros(m, ncols);
+    fill_homogeneous_rows(&mut a, xs, ys, deg);
+    let sol = min_norm_solution(&a)?;
+    Ok(sol[deg..].to_vec())
+}
+
+fn fill_homogeneous_rows(a: &mut Mat, xs: &[f64], ys: &[f64], deg: usize) {
+    for (i, (&x, &y)) in xs.iter().zip(ys).enumerate() {
+        let mut p = 1.0;
+        for j in 0..deg {
+            a[(i, j)] = p;
+            a[(i, deg + j)] = -y * p;
+            p *= x;
+        }
+    }
+}
+
+/// Horner evaluation of `Σ c_j x^j`.
+#[inline]
+pub fn poly_eval(c: &[f64], x: f64) -> f64 {
+    let mut acc = 0.0;
+    for &cj in c.iter().rev() {
+        acc = acc * x + cj;
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::chebyshev;
+    use crate::testing::forall;
+    use crate::util::rng::Rng;
+
+    /// Build a random degree-<K rational function r = p/q with q pole-free
+    /// on [-1,1] (q = product of (x - c) with |c| > 1.5), evaluate at the
+    /// second-kind points, corrupt `e` of them, and check the locator finds
+    /// the corrupted positions.
+    fn corruption_case(rng: &mut Rng, k: usize, e: usize, sigma: f64) -> bool {
+        let params = crate::coding::CodeParams::new(k, 0, e);
+        let n = params.n();
+        let xs = chebyshev::second_kind(n);
+        // Random rational function of the right degree class.
+        let p: Vec<f64> = (0..k).map(|_| rng.range_f64(-2.0, 2.0)).collect();
+        let qroots: Vec<f64> = (0..k.saturating_sub(1))
+            .map(|_| {
+                let sign = if rng.chance(0.5) { 1.0 } else { -1.0 };
+                sign * rng.range_f64(1.5, 4.0)
+            })
+            .collect();
+        let qeval = |x: f64| qroots.iter().map(|&c| x - c).product::<f64>();
+        let mut ys: Vec<f64> = xs.iter().map(|&x| poly_eval(&p, x) / qeval(x)).collect();
+        // Corrupt e random positions with Gaussian noise (paper §4.2).
+        let bad = rng.subset(xs.len(), e);
+        for &i in &bad {
+            ys[i] += rng.normal(0.0, sigma).max(0.05 * sigma) + 0.1; // ensure non-negligible
+        }
+        let found = locate(&xs, &ys, k, e, LocatorMethod::Pinned).unwrap();
+        found == bad
+    }
+
+    #[test]
+    fn locates_errors_in_exact_rational_functions() {
+        let mut rng = Rng::new(2024);
+        let mut ok = 0;
+        let total = 60;
+        for t in 0..total {
+            let k = 2 + (t % 5);
+            let e = 1 + (t % 3);
+            if corruption_case(&mut rng, k, e, 1.0) {
+                ok += 1;
+            }
+        }
+        // Exact rational data: locator should be essentially perfect.
+        assert!(ok >= total - 2, "located {ok}/{total}");
+    }
+
+    #[test]
+    fn wide_sigma_range() {
+        // Paper Appendix B: locator must work for sigma in {1, 10, 100}.
+        for &sigma in &[1.0, 10.0, 100.0] {
+            let mut rng = Rng::new(7 + sigma as u64);
+            let mut ok = 0;
+            for _ in 0..30 {
+                if corruption_case(&mut rng, 4, 2, sigma) {
+                    ok += 1;
+                }
+            }
+            assert!(ok >= 28, "sigma={sigma}: located {ok}/30");
+        }
+    }
+
+    #[test]
+    fn e_zero_returns_empty() {
+        let xs = chebyshev::second_kind(5);
+        let ys = vec![1.0; 6];
+        assert!(locate(&xs, &ys, 3, 0, LocatorMethod::Pinned).unwrap().is_empty());
+    }
+
+    #[test]
+    fn too_few_equations_is_error() {
+        let xs = chebyshev::second_kind(3);
+        let ys = vec![1.0; 4];
+        assert!(matches!(
+            locate(&xs, &ys, 4, 2, LocatorMethod::Pinned),
+            Err(LinalgError::Dims(_))
+        ));
+    }
+
+    #[test]
+    fn homogeneous_agrees_with_pinned_on_clean_cases() {
+        forall("locator-method-agreement", 25, |g| {
+            let k = g.usize_in(2, 5);
+            let e = g.usize_in(1, 2);
+            let params = crate::coding::CodeParams::new(k, 0, e);
+            let xs = chebyshev::second_kind(params.n());
+            let p: Vec<f64> = g.vec_f64(k, -2.0, 2.0);
+            let mut ys: Vec<f64> = xs.iter().map(|&x| poly_eval(&p, x)).collect();
+            let bad = g.subset(xs.len(), e);
+            for &i in &bad {
+                ys[i] += 3.0 + g.f64_in(0.0, 5.0);
+            }
+            let a = locate(&xs, &ys, k, e, LocatorMethod::Pinned).unwrap();
+            let b = locate(&xs, &ys, k, e, LocatorMethod::Homogeneous).unwrap();
+            assert_eq!(a, bad, "pinned missed");
+            assert_eq!(b, bad, "homogeneous missed");
+        });
+    }
+
+    #[test]
+    fn poly_eval_matches_naive() {
+        forall("horner", 50, |g| {
+            let len = g.usize_in(1, 8);
+            let c = g.vec_f64(len, -3.0, 3.0);
+            let x = g.f64_in(-2.0, 2.0);
+            let naive: f64 = c.iter().enumerate().map(|(j, &cj)| cj * x.powi(j as i32)).sum();
+            crate::testing::assert_close(poly_eval(&c, x), naive, 1e-10);
+        });
+    }
+}

@@ -1,0 +1,20 @@
+//! Coding-theory core of ApproxIFER (paper §3 and Appendix A):
+//! Chebyshev nodes, Berrut rational interpolation, the `(K,S,E)` code with
+//! its linear encoder/decoder, the Berlekamp–Welch-style rational
+//! error-locator (Algorithm 1), the per-class majority-vote locator
+//! (Algorithm 2), the replication baseline codec, and the closed-form
+//! worker-count/overhead comparisons.
+
+pub mod analysis;
+pub mod berrut;
+pub mod chebyshev;
+pub mod locator;
+pub mod replication;
+pub mod scheme;
+pub mod theory;
+pub mod vote;
+
+pub use locator::{locate, LocatorMethod};
+pub use replication::ReplicationParams;
+pub use scheme::{ApproxIferCode, CodeParams};
+pub use vote::{locate_by_vote, VoteOutcome};

@@ -1,0 +1,141 @@
+//! Replication baseline codec (paper §5, and the comparator in Figures 9–10).
+//!
+//! Proactive replication: to tolerate `S` stragglers each query is sent to
+//! `S+1` workers (first reply wins); to additionally tolerate `E` Byzantine
+//! workers each query is sent to `2E+1` workers and the result is a majority
+//! vote — hence the paper's `(2E+1)·K` worker count that ApproxIFER's
+//! `2K+2E` undercuts.
+
+use crate::tensor::Tensor;
+
+/// Replication parameters.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ReplicationParams {
+    pub k: usize,
+    pub s: usize,
+    pub e: usize,
+}
+
+impl ReplicationParams {
+    pub fn new(k: usize, s: usize, e: usize) -> ReplicationParams {
+        assert!(k >= 1);
+        ReplicationParams { k, s, e }
+    }
+
+    /// Copies per query: `max(S+1, 2E+1)` — `S+1` first-reply copies cover
+    /// stragglers; Byzantine tolerance needs a `2E+1` majority.
+    pub fn copies(&self) -> usize {
+        (self.s + 1).max(2 * self.e + 1)
+    }
+
+    /// Total workers (paper: `(2E+1)·K` in the Byzantine case).
+    pub fn num_workers(&self) -> usize {
+        self.copies() * self.k
+    }
+
+    pub fn overhead(&self) -> f64 {
+        self.copies() as f64
+    }
+
+    /// Worker index for copy `c` of query `j` (queries striped first so
+    /// copies of one query land on distinct workers).
+    pub fn worker_for(&self, query: usize, copy: usize) -> usize {
+        debug_assert!(query < self.k && copy < self.copies());
+        copy * self.k + query
+    }
+
+    /// Inverse map: which (query, copy) a worker serves.
+    pub fn assignment_of(&self, worker: usize) -> (usize, usize) {
+        debug_assert!(worker < self.num_workers());
+        (worker % self.k, worker / self.k)
+    }
+}
+
+/// Decode one query's replies by exact-majority vote on the payloads.
+/// With honest replicas the payloads are bit-identical; Byzantine replies
+/// differ, so an exact-match vote with `2E+1` replies and ≤E corruptions
+/// always yields a correct majority. Returns the majority payload.
+pub fn majority_payload(replies: &[&Tensor]) -> Tensor {
+    assert!(!replies.is_empty(), "majority over zero replies");
+    let mut best_idx = 0;
+    let mut best_count = 0;
+    for (i, a) in replies.iter().enumerate() {
+        let count = replies.iter().filter(|b| payload_eq(a, b)).count();
+        if count > best_count {
+            best_count = count;
+            best_idx = i;
+        }
+    }
+    replies[best_idx].clone()
+}
+
+fn payload_eq(a: &Tensor, b: &Tensor) -> bool {
+    a.shape() == b.shape()
+        && a.data().iter().zip(b.data()).all(|(x, y)| (x - y).abs() <= 1e-6 * (1.0 + x.abs()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::forall;
+
+    #[test]
+    fn worker_counts_match_paper() {
+        // Paper: (2E+1)K workers for E Byzantine vs ApproxIFER's 2K+2E.
+        let r = ReplicationParams::new(12, 0, 2);
+        assert_eq!(r.num_workers(), 5 * 12);
+        let a = crate::coding::CodeParams::new(12, 0, 2);
+        assert_eq!(a.num_workers(), 2 * 12 + 2 * 2);
+        assert!(a.num_workers() < r.num_workers());
+    }
+
+    #[test]
+    fn assignment_roundtrip() {
+        forall("replication-assignment", 50, |g| {
+            let k = g.usize_in(1, 16);
+            let s = g.usize_in(0, 3);
+            let e = g.usize_in(0, 3);
+            let r = ReplicationParams::new(k, s, e);
+            for q in 0..k {
+                for c in 0..r.copies() {
+                    let w = r.worker_for(q, c);
+                    assert!(w < r.num_workers());
+                    assert_eq!(r.assignment_of(w), (q, c));
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn copies_cover_both_failure_modes() {
+        let r = ReplicationParams::new(4, 2, 0);
+        assert_eq!(r.copies(), 3);
+        let r = ReplicationParams::new(4, 0, 3);
+        assert_eq!(r.copies(), 7);
+        let r = ReplicationParams::new(4, 3, 1);
+        assert_eq!(r.copies(), 4); // S+1=4 > 2E+1=3
+    }
+
+    #[test]
+    fn majority_defeats_minority_corruption() {
+        forall("replication-majority", 40, |g| {
+            let e = g.usize_in(1, 3);
+            let honest = Tensor::from_vec(&[4], vec![0.1, 0.2, 0.3, 0.4]);
+            let mut replies: Vec<Tensor> = Vec::new();
+            for i in 0..(2 * e + 1) {
+                if i < e {
+                    // Byzantine copies: distinct random garbage.
+                    replies.push(Tensor::from_vec(
+                        &[4],
+                        (0..4).map(|_| g.rng().f32() * 100.0 + i as f32).collect(),
+                    ));
+                } else {
+                    replies.push(honest.clone());
+                }
+            }
+            let refs: Vec<&Tensor> = replies.iter().collect();
+            let out = majority_payload(&refs);
+            assert_eq!(out, honest);
+        });
+    }
+}

@@ -1,0 +1,411 @@
+//! The ApproxIFER code: parameters, encoder and decoder (paper §3).
+//!
+//! For fixed `(K, S, E)` the encoder is the fixed linear map
+//! `X̃_i = Σ_j ℓ_j(β_i) · X_j` (eqs. (4)–(8)) — an `(N+1)×K` matrix applied to
+//! the query payloads — and, for a given available worker set `F`, the
+//! decoder is the linear map `Ŷ_j = Σ_{i∈F} ℓ̂_i(α_j) · Ỹ_i` (eqs. (10)–(11)).
+//! Both matrices are precomputed in f64 and applied to f32 payloads as tight
+//! SAXPY loops; decode matrices are memoized per availability set since
+//! fastest-set patterns repeat under stable worker latency distributions.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::tensor::Tensor;
+
+use super::berrut;
+use super::chebyshev;
+
+/// Code parameters: `K` queries per group, `S` stragglers tolerated, `E`
+/// Byzantine workers tolerated.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct CodeParams {
+    pub k: usize,
+    pub s: usize,
+    pub e: usize,
+}
+
+impl CodeParams {
+    pub fn new(k: usize, s: usize, e: usize) -> CodeParams {
+        assert!(k >= 1, "K must be >= 1");
+        let p = CodeParams { k, s, e };
+        assert!(p.n() >= 1, "degenerate code: N = {}", p.n());
+        p
+    }
+
+    /// `N`: workers are indexed `0..=N`. Paper §3: `N = K+S−1` when `E = 0`,
+    /// else `N = 2(K+E)+S−1`.
+    pub fn n(&self) -> usize {
+        if self.e == 0 {
+            self.k + self.s - 1
+        } else {
+            2 * (self.k + self.e) + self.s - 1
+        }
+    }
+
+    /// Total workers `N+1`.
+    pub fn num_workers(&self) -> usize {
+        self.n() + 1
+    }
+
+    /// How many coded predictions the decoder waits for: the fastest `K`
+    /// when `E = 0`, else the fastest `2(K+E)` (paper §3, Decoding).
+    pub fn wait_for(&self) -> usize {
+        if self.e == 0 {
+            self.k
+        } else {
+            2 * (self.k + self.e)
+        }
+    }
+
+    /// Resource overhead = workers / queries (paper §3: `(K+S)/K` or
+    /// `(2(K+E)+S)/K`).
+    pub fn overhead(&self) -> f64 {
+        self.num_workers() as f64 / self.k as f64
+    }
+
+    /// How many of the received evaluations the decoder interpolates over
+    /// after excluding the `E` located errors: `K` when `E = 0`, else
+    /// `2K + E` (paper eq. (10): `|F| = 2K+E` when `E > 0`).
+    pub fn decode_set_size(&self) -> usize {
+        if self.e == 0 {
+            self.k
+        } else {
+            2 * self.k + self.e
+        }
+    }
+}
+
+/// Precomputed ApproxIFER encoder/decoder for one `(K, S, E)`.
+pub struct ApproxIferCode {
+    params: CodeParams,
+    /// Query nodes `α_j` (first kind, K points).
+    alpha: Vec<f64>,
+    /// Worker nodes `β_i` (second kind, N+1 points).
+    beta: Vec<f64>,
+    /// Encode matrix, row-major `(N+1) × K`: `w_enc[i*K + j] = ℓ_j(β_i)`.
+    w_enc: Vec<f32>,
+    /// Memoized decode matrices keyed by the sorted available worker set.
+    decode_cache: Mutex<HashMap<Vec<usize>, std::sync::Arc<Vec<f32>>>>,
+}
+
+impl ApproxIferCode {
+    pub fn new(params: CodeParams) -> ApproxIferCode {
+        let n = params.n();
+        let alpha = chebyshev::first_kind(params.k);
+        let beta = chebyshev::second_kind(n);
+        let mut w_enc = Vec::with_capacity((n + 1) * params.k);
+        for &b in &beta {
+            let w = berrut::weights(&alpha, b);
+            w_enc.extend(w.iter().map(|&x| x as f32));
+        }
+        ApproxIferCode {
+            params,
+            alpha,
+            beta,
+            w_enc,
+            decode_cache: Mutex::new(HashMap::new()),
+        }
+    }
+
+    pub fn params(&self) -> CodeParams {
+        self.params
+    }
+
+    pub fn alpha(&self) -> &[f64] {
+        &self.alpha
+    }
+
+    pub fn beta(&self) -> &[f64] {
+        &self.beta
+    }
+
+    /// Encoder matrix entry `ℓ_j(β_i)` (row-major `(N+1)×K`).
+    pub fn encode_matrix(&self) -> &[f32] {
+        &self.w_enc
+    }
+
+    /// Encode `K` equal-shaped query tensors into `N+1` coded queries.
+    pub fn encode(&self, queries: &[Tensor]) -> Vec<Tensor> {
+        let k = self.params.k;
+        assert_eq!(queries.len(), k, "encode: expected {k} queries, got {}", queries.len());
+        let shape = queries[0].shape().to_vec();
+        for q in queries {
+            assert_eq!(q.shape(), &shape[..], "encode: inconsistent query shapes");
+        }
+        let d = queries[0].len();
+        let nw = self.params.num_workers();
+        let mut out = Vec::with_capacity(nw);
+        for i in 0..nw {
+            let mut acc = vec![0.0f32; d];
+            let row = &self.w_enc[i * k..(i + 1) * k];
+            for (j, q) in queries.iter().enumerate() {
+                saxpy(&mut acc, row[j], q.data());
+            }
+            out.push(Tensor::from_vec(&shape, acc));
+        }
+        out
+    }
+
+    /// Encode into preallocated output buffers (steady-state serving path —
+    /// no allocation). `out` must hold `N+1` buffers of the payload size.
+    ///
+    /// Worker-major SAXPY loop. A payload-blocked variant (chunking `d` so
+    /// the `K` query slices stay L1-resident across workers) was measured
+    /// and reverted: at serving payload sizes the whole `K·d` working set
+    /// already fits in L2, so blocking bought nothing (EXPERIMENTS.md §Perf).
+    pub fn encode_into(&self, queries: &[&[f32]], out: &mut [Vec<f32>]) {
+        let k = self.params.k;
+        assert_eq!(queries.len(), k);
+        assert_eq!(out.len(), self.params.num_workers());
+        let d = queries[0].len();
+        for (i, buf) in out.iter_mut().enumerate() {
+            buf.clear();
+            buf.resize(d, 0.0);
+            let row = &self.w_enc[i * k..(i + 1) * k];
+            for (j, q) in queries.iter().enumerate() {
+                saxpy(buf, row[j], q);
+            }
+        }
+    }
+
+    /// Decode weights for an available set (sorted worker indices): returns
+    /// the row-major `K × |F|` matrix `D[j][m] = ℓ̂_{F[m]}(α_j)` with signs
+    /// keyed to original worker indices (paper eq. (10)). Memoized.
+    pub fn decode_matrix(&self, avail: &[usize]) -> std::sync::Arc<Vec<f32>> {
+        debug_assert!(avail.windows(2).all(|w| w[0] < w[1]), "avail must be sorted unique");
+        if let Some(hit) = self.decode_cache.lock().unwrap().get(avail) {
+            return hit.clone();
+        }
+        let nodes: Vec<f64> = avail.iter().map(|&i| self.beta[i]).collect();
+        let signs: Vec<i32> = avail.iter().map(|&i| i as i32).collect();
+        let k = self.params.k;
+        let mut d = Vec::with_capacity(k * avail.len());
+        for j in 0..k {
+            let w = berrut::weights_signed(&nodes, &signs, self.alpha[j]);
+            d.extend(w.iter().map(|&x| x as f32));
+        }
+        let arc = std::sync::Arc::new(d);
+        let mut cache = self.decode_cache.lock().unwrap();
+        // Unbounded growth guard: fastest-set patterns repeat, but under
+        // adversarial churn cap the cache.
+        if cache.len() > 4096 {
+            cache.clear();
+        }
+        cache.insert(avail.to_vec(), arc.clone());
+        arc
+    }
+
+    /// Decode: recover the `K` approximate predictions from coded
+    /// predictions of the available workers. `coded[m]` is worker
+    /// `avail[m]`'s prediction payload.
+    pub fn decode(&self, avail: &[usize], coded: &[&[f32]]) -> Vec<Vec<f32>> {
+        assert_eq!(avail.len(), coded.len());
+        assert!(!coded.is_empty(), "decode with no available workers");
+        let d = coded[0].len();
+        for c in coded {
+            assert_eq!(c.len(), d, "decode: inconsistent payload sizes");
+        }
+        let k = self.params.k;
+        let w = self.decode_matrix(avail);
+        let f = avail.len();
+        let mut out = Vec::with_capacity(k);
+        for j in 0..k {
+            let mut acc = vec![0.0f32; d];
+            let row = &w[j * f..(j + 1) * f];
+            for (m, c) in coded.iter().enumerate() {
+                saxpy(&mut acc, row[m], c);
+            }
+            out.push(acc);
+        }
+        out
+    }
+}
+
+/// `acc += a * x` over f32 slices (autovectorizes; the host-side hot loop).
+#[inline]
+pub fn saxpy(acc: &mut [f32], a: f32, x: &[f32]) {
+    debug_assert_eq!(acc.len(), x.len());
+    if a == 0.0 {
+        return;
+    }
+    for (dst, &src) in acc.iter_mut().zip(x) {
+        *dst += a * src;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{assert_close, forall};
+
+    fn linear_payload(coeff: &[f64], d: usize) -> Vec<Tensor> {
+        // Query j = coeff[j] * (1..=d) — payloads linearly independent.
+        coeff
+            .iter()
+            .map(|&c| {
+                Tensor::from_vec(
+                    &[d],
+                    (0..d).map(|t| (c * (t + 1) as f64) as f32).collect(),
+                )
+            })
+            .collect()
+    }
+
+    #[test]
+    fn params_match_paper_formulas() {
+        let p = CodeParams::new(10, 1, 0);
+        assert_eq!(p.n(), 10);
+        assert_eq!(p.num_workers(), 11);
+        assert_eq!(p.wait_for(), 10);
+        assert_close(p.overhead(), 11.0 / 10.0, 1e-12);
+
+        let p = CodeParams::new(12, 0, 2);
+        assert_eq!(p.n(), 2 * 14 - 1);
+        assert_eq!(p.num_workers(), 28);
+        assert_eq!(p.wait_for(), 28);
+        assert_eq!(p.decode_set_size(), 26);
+
+        let p = CodeParams::new(12, 1, 3);
+        assert_eq!(p.n(), 30);
+        assert_eq!(p.num_workers(), 31);
+        assert_eq!(p.wait_for(), 30);
+    }
+
+    #[test]
+    fn encode_rows_are_partition_of_unity() {
+        forall("encode-partition-of-unity", 40, |g| {
+            let k = g.usize_in(2, 14);
+            let s = g.usize_in(1, 3);
+            let e = g.usize_in(0, 3);
+            let code = ApproxIferCode::new(CodeParams::new(k, s, e));
+            let w = code.encode_matrix();
+            for i in 0..code.params().num_workers() {
+                let sum: f64 = w[i * k..(i + 1) * k].iter().map(|&x| x as f64).sum();
+                assert_close(sum, 1.0, 1e-5);
+            }
+        });
+    }
+
+    #[test]
+    fn decode_matches_f64_reference_interpolation() {
+        // The decode GEMM must agree (to f32 precision, scaled by the row's
+        // weight mass) with directly evaluating eq. (10) in f64. With f = id
+        // the coded payload *is* u(β_i), so this validates the whole
+        // encode→decode plumbing against the barycentric reference.
+        forall("decode-vs-reference", 30, |g| {
+            let k = g.usize_in(2, 12);
+            let s = g.usize_in(1, 3);
+            let code = ApproxIferCode::new(CodeParams::new(k, s, 0));
+            let queries = linear_payload(&g.vec_f64(k, -2.0, 2.0), 8);
+            let coded = code.encode(&queries);
+            let avail = g.subset(code.params().num_workers(), k);
+            let payloads: Vec<&[f32]> = avail.iter().map(|&i| coded[i].data()).collect();
+            let out = code.decode(&avail, &payloads);
+            // f64 reference: r(α_j) = Σ_m ℓ̂(α_j)[m] · Ỹ[avail[m]].
+            let nodes: Vec<f64> = avail.iter().map(|&i| code.beta()[i]).collect();
+            let signs: Vec<i32> = avail.iter().map(|&i| i as i32).collect();
+            for j in 0..k {
+                let w = crate::coding::berrut::weights_signed(&nodes, &signs, code.alpha()[j]);
+                let leb: f64 = w.iter().map(|x| x.abs()).sum();
+                for t in 0..8 {
+                    let reference: f64 = w
+                        .iter()
+                        .zip(&payloads)
+                        .map(|(&wm, p)| wm * p[t] as f64)
+                        .sum();
+                    let got = out[j][t] as f64;
+                    let scale = leb.max(1.0) * (1.0 + reference.abs());
+                    assert!(
+                        (got - reference).abs() <= 1e-5 * scale,
+                        "K={k} S={s} j={j} t={t}: got {got}, ref {reference} (leb={leb})"
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn decode_error_shrinks_with_k_for_smooth_payloads() {
+        // Qualitative accuracy check on the full scheme with f = id over a
+        // smooth query family: mean decode error at K=12 must beat K=3
+        // (Berrut convergence transfers to the coded pipeline).
+        let err_at = |k: usize| -> f64 {
+            let code = ApproxIferCode::new(CodeParams::new(k, 1, 0));
+            // Queries sampled from a smooth curve: X_j = sin(3·α_j).
+            let queries: Vec<Tensor> = code
+                .alpha()
+                .iter()
+                .map(|&a| Tensor::from_vec(&[1], vec![(3.0 * a).sin() as f32]))
+                .collect();
+            let coded = code.encode(&queries);
+            // Fastest K = drop the last straggler (worker N).
+            let avail: Vec<usize> = (0..k).collect();
+            let payloads: Vec<&[f32]> = avail.iter().map(|&i| coded[i].data()).collect();
+            let out = code.decode(&avail, &payloads);
+            (0..k)
+                .map(|j| (out[j][0] as f64 - queries[j].data()[0] as f64).abs())
+                .sum::<f64>()
+                / k as f64
+        };
+        let (e3, e12) = (err_at(3), err_at(12));
+        assert!(e12 < e3, "e3={e3} e12={e12}");
+    }
+
+    #[test]
+    fn decode_of_constant_predictions_is_exact() {
+        // If every worker returns the same payload c, the decoder must
+        // return exactly c for all queries (partition of unity).
+        forall("decode-constant", 40, |g| {
+            let k = g.usize_in(2, 12);
+            let e = g.usize_in(0, 2);
+            let code = ApproxIferCode::new(CodeParams::new(k, 1, e));
+            let c = g.f64_in(-5.0, 5.0) as f32;
+            let payload = vec![c; 6];
+            let m = code.params().decode_set_size().min(code.params().num_workers());
+            let avail = g.subset(code.params().num_workers(), m);
+            let coded: Vec<&[f32]> = (0..m).map(|_| &payload[..]).collect();
+            let out = code.decode(&avail, &coded);
+            let w = code.decode_matrix(&avail);
+            for j in 0..k {
+                // Exactness is up to f32 cancellation, which is amplified by
+                // the row's Σ|w| when the subset is badly conditioned.
+                let leb: f64 = w[j * m..(j + 1) * m].iter().map(|&x| (x as f64).abs()).sum();
+                let tol = 1e-5 * leb.max(1.0) + 1e-4;
+                for t in 0..6 {
+                    assert_close(out[j][t] as f64, c as f64, tol);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn encode_into_matches_encode() {
+        let code = ApproxIferCode::new(CodeParams::new(4, 2, 0));
+        let queries = linear_payload(&[1.0, -0.5, 2.0, 0.25], 10);
+        let coded = code.encode(&queries);
+        let qrefs: Vec<&[f32]> = queries.iter().map(|q| q.data()).collect();
+        let mut out: Vec<Vec<f32>> = vec![Vec::new(); code.params().num_workers()];
+        code.encode_into(&qrefs, &mut out);
+        for (a, b) in coded.iter().zip(&out) {
+            assert_eq!(a.data(), &b[..]);
+        }
+    }
+
+    #[test]
+    fn decode_matrix_is_memoized() {
+        let code = ApproxIferCode::new(CodeParams::new(4, 1, 0));
+        let avail = vec![0, 1, 3, 4];
+        let a = code.decode_matrix(&avail);
+        let b = code.decode_matrix(&avail);
+        assert!(std::sync::Arc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    #[should_panic]
+    fn encode_rejects_wrong_group_size() {
+        let code = ApproxIferCode::new(CodeParams::new(4, 1, 0));
+        let queries = linear_payload(&[1.0, 2.0], 4);
+        code.encode(&queries);
+    }
+}

@@ -1,0 +1,116 @@
+//! Closed-form comparisons from the paper: worker counts, overheads, the
+//! existence condition (eq. (3)/(18)), and the Appendix C ParM
+//! average-vs-worst-case bound. The `tables` harness prints these as the
+//! paper's comparison rows.
+
+use super::replication::ReplicationParams;
+use super::scheme::CodeParams;
+
+/// One row of the worker-count comparison table.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkerRow {
+    pub k: usize,
+    pub s: usize,
+    pub e: usize,
+    pub approxifer_workers: usize,
+    pub replication_workers: usize,
+    /// replication / approxifer.
+    pub savings: f64,
+}
+
+/// Worker-count comparison (paper contribution 2: `2K+2E` vs `(2E+1)K`).
+pub fn worker_comparison(k: usize, s: usize, e: usize) -> WorkerRow {
+    let a = CodeParams::new(k, s, e);
+    let r = ReplicationParams::new(k, s, e);
+    WorkerRow {
+        k,
+        s,
+        e,
+        approxifer_workers: a.num_workers(),
+        replication_workers: r.num_workers(),
+        savings: r.num_workers() as f64 / a.num_workers() as f64,
+    }
+}
+
+/// The decodability condition `N ≥ 2K + 2E + S − 1` (paper eq. (3)):
+/// a non-trivial solution of the locator's homogeneous system exists.
+pub fn locator_condition_holds(n: usize, k: usize, s: usize, e: usize) -> bool {
+    n >= 2 * k + 2 * e + s - 1
+}
+
+/// ApproxIFER overhead (paper §3): `(K+S)/K` when `E = 0`,
+/// `(2(K+E)+S)/K` otherwise.
+pub fn approxifer_overhead(k: usize, s: usize, e: usize) -> f64 {
+    CodeParams::new(k, s, e).overhead()
+}
+
+/// ParM worst-case accuracy relation (paper Appendix C): ParM achieves the
+/// base accuracy with probability `1/(K+1)` (no straggler hits an uncoded
+/// prediction) and its degraded accuracy otherwise, so
+/// `avg = base/(K+1) + worst·K/(K+1)`.
+pub fn parm_average_accuracy(base_acc: f64, worst_acc: f64, k: usize) -> f64 {
+    (base_acc + k as f64 * worst_acc) / (k as f64 + 1.0)
+}
+
+/// Appendix C bound: average − worst ≤ 100/(K+1) percentage points; with
+/// K ≥ 8 that is ≤ 100/9 ≈ 11.1.
+pub fn parm_avg_worst_gap_bound(k: usize) -> f64 {
+    100.0 / (k as f64 + 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{assert_close, forall};
+
+    #[test]
+    fn paper_headline_worker_counts() {
+        // K=12, E=2: ApproxIFER 28, replication 60.
+        let row = worker_comparison(12, 0, 2);
+        assert_eq!(row.approxifer_workers, 28);
+        assert_eq!(row.replication_workers, 60);
+        assert!(row.savings > 2.0);
+    }
+
+    #[test]
+    fn approxifer_always_cheaper_for_k_at_least_2_with_errors() {
+        forall("worker-savings", 60, |g| {
+            let k = g.usize_in(2, 20);
+            let e = g.usize_in(1, 4);
+            let row = worker_comparison(k, 0, e);
+            // 2K+2E < (2E+1)K  ⇔  2E < (2E−1)K  — true for K ≥ 2, E ≥ 1.
+            assert!(
+                row.approxifer_workers < row.replication_workers,
+                "K={k} E={e}: {} vs {}",
+                row.approxifer_workers,
+                row.replication_workers
+            );
+        });
+    }
+
+    #[test]
+    fn code_satisfies_its_own_existence_condition() {
+        forall("locator-condition", 60, |g| {
+            let k = g.usize_in(1, 16);
+            let s = g.usize_in(0, 4);
+            let e = g.usize_in(1, 4);
+            let p = CodeParams::new(k, s, e);
+            assert!(locator_condition_holds(p.n(), k, s, e), "K={k} S={s} E={e} N={}", p.n());
+        });
+    }
+
+    #[test]
+    fn overheads_match_paper_formulas() {
+        assert_close(approxifer_overhead(10, 1, 0), 11.0 / 10.0, 1e-12);
+        assert_close(approxifer_overhead(12, 1, 2), (2.0 * 14.0 + 1.0) / 12.0, 1e-12);
+    }
+
+    #[test]
+    fn parm_gap_bound_for_k8() {
+        // Paper: at most 100/9 ≈ 11.1 points for K ≥ 8.
+        assert!(parm_avg_worst_gap_bound(8) <= 100.0 / 9.0 + 1e-12);
+        let avg = parm_average_accuracy(90.0, 40.0, 8);
+        assert!(avg - 40.0 <= parm_avg_worst_gap_bound(8) * 0.9 / 0.5);
+        assert_close(avg, (90.0 + 8.0 * 40.0) / 9.0, 1e-12);
+    }
+}

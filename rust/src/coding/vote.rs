@@ -1,0 +1,160 @@
+//! ApproxIFER error-locator with per-class majority vote — the paper's
+//! Algorithm 2.
+//!
+//! The coded predictions are vectors of `C` soft labels. Algorithm 1 is a
+//! scalar-function locator, so Algorithm 2 runs it once per class coordinate
+//! and majority-votes the per-class location estimates: the `E`
+//! most-frequent suspected indices across all `C` runs are declared
+//! Byzantine.
+
+use crate::linalg::LinalgError;
+
+use super::locator::{locate, locate_with_powers, LocatorMethod, PowerTable};
+
+/// Outcome of the voting locator.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct VoteOutcome {
+    /// Positions within the available set declared erroneous (sorted).
+    pub erroneous: Vec<usize>,
+    /// votes[i] = how many class coordinates flagged available-position i.
+    pub votes: Vec<usize>,
+}
+
+/// Run Algorithm 2.
+///
+/// * `xs` — evaluation points of the available workers (`β_i`, `i ∈ A_avl`).
+/// * `preds` — `preds[m]` is the coded prediction (C soft labels) of the
+///   worker at available-position `m`.
+/// * `k`, `e` — code parameters.
+///
+/// Returns the `E` most-voted positions (within the available set).
+pub fn locate_by_vote(
+    xs: &[f64],
+    preds: &[&[f32]],
+    k: usize,
+    e: usize,
+    method: LocatorMethod,
+) -> Result<VoteOutcome, LinalgError> {
+    assert_eq!(xs.len(), preds.len());
+    let m = xs.len();
+    if e == 0 || m == 0 {
+        return Ok(VoteOutcome { erroneous: Vec::new(), votes: vec![0; m] });
+    }
+    let c = preds[0].len();
+    for p in preds {
+        assert_eq!(p.len(), c, "inconsistent class counts");
+    }
+    let mut votes = vec![0usize; m];
+    let mut ys = vec![0.0f64; m];
+    // The evaluation points are identical for every class, so the power
+    // table feeding the pinned least-squares system is built once
+    // (EXPERIMENTS.md §Perf).
+    let pt = (method == LocatorMethod::Pinned).then(|| PowerTable::new(xs, k + e));
+    for class in 0..c {
+        for (i, p) in preds.iter().enumerate() {
+            ys[i] = p[class] as f64;
+        }
+        let flagged = match &pt {
+            Some(pt) => locate_with_powers(xs, pt, &ys, k, e)?,
+            None => locate(xs, &ys, k, e, method)?,
+        };
+        for i in flagged {
+            votes[i] += 1;
+        }
+    }
+    // E most-frequent positions; break ties by lower index for determinism.
+    let mut order: Vec<usize> = (0..m).collect();
+    order.sort_by(|&a, &b| votes[b].cmp(&votes[a]).then(a.cmp(&b)));
+    let mut erroneous: Vec<usize> = order[..e.min(m)].to_vec();
+    erroneous.sort_unstable();
+    Ok(VoteOutcome { erroneous, votes })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::chebyshev;
+    use crate::coding::CodeParams;
+    use crate::util::rng::Rng;
+
+    /// Simulate the real pipeline shape: coded predictions are smooth
+    /// per-class functions of β (they come from f∘u, both continuous),
+    /// corrupted at `e` random workers with Gaussian noise.
+    fn vote_case(rng: &mut Rng, k: usize, e: usize, c: usize, sigma: f64) -> bool {
+        let params = CodeParams::new(k, 0, e);
+        let xs = chebyshev::second_kind(params.n());
+        let m = xs.len();
+        // Per-class smooth signal: random low-degree poly of β.
+        let mut preds: Vec<Vec<f32>> = vec![vec![0.0; c]; m];
+        for class in 0..c {
+            let coeffs: Vec<f64> = (0..k.min(4)).map(|_| rng.range_f64(-1.0, 1.0)).collect();
+            for (i, &x) in xs.iter().enumerate() {
+                let v: f64 = coeffs.iter().enumerate().map(|(j, &cf)| cf * x.powi(j as i32)).sum();
+                preds[i][class] = v as f32;
+            }
+        }
+        let bad = rng.subset(m, e);
+        for &i in &bad {
+            for class in 0..c {
+                preds[i][class] += rng.normal(0.0, sigma) as f32;
+            }
+        }
+        let refs: Vec<&[f32]> = preds.iter().map(|p| &p[..]).collect();
+        let out = locate_by_vote(&xs, &refs, k, e, LocatorMethod::Pinned).unwrap();
+        out.erroneous == bad
+    }
+
+    #[test]
+    fn majority_vote_finds_byzantine_workers() {
+        let mut rng = Rng::new(99);
+        let mut ok = 0;
+        let total = 40;
+        for t in 0..total {
+            let k = 2 + (t % 4);
+            let e = 1 + (t % 3);
+            if vote_case(&mut rng, k, e, 10, 5.0) {
+                ok += 1;
+            }
+        }
+        assert!(ok >= total - 3, "vote located {ok}/{total}");
+    }
+
+    #[test]
+    fn sigma_sweep_like_fig11() {
+        for &sigma in &[1.0, 10.0, 100.0] {
+            let mut rng = Rng::new(1234 + sigma as u64);
+            let mut ok = 0;
+            for _ in 0..25 {
+                if vote_case(&mut rng, 8, 2, 10, sigma) {
+                    ok += 1;
+                }
+            }
+            assert!(ok >= 23, "sigma={sigma}: {ok}/25");
+        }
+    }
+
+    #[test]
+    fn e_zero_flags_nothing() {
+        let xs = chebyshev::second_kind(4);
+        let preds: Vec<Vec<f32>> = vec![vec![0.5; 3]; 5];
+        let refs: Vec<&[f32]> = preds.iter().map(|p| &p[..]).collect();
+        let out = locate_by_vote(&xs, &refs, 4, 0, LocatorMethod::Pinned).unwrap();
+        assert!(out.erroneous.is_empty());
+    }
+
+    #[test]
+    fn votes_vector_shape() {
+        let mut rng = Rng::new(5);
+        let params = CodeParams::new(3, 0, 1);
+        let xs = chebyshev::second_kind(params.n());
+        let m = xs.len();
+        let preds: Vec<Vec<f32>> =
+            (0..m).map(|_| (0..4).map(|_| rng.f32()).collect()).collect();
+        let refs: Vec<&[f32]> = preds.iter().map(|p| &p[..]).collect();
+        let out = locate_by_vote(&xs, &refs, 3, 1, LocatorMethod::Pinned).unwrap();
+        assert_eq!(out.votes.len(), m);
+        assert_eq!(out.erroneous.len(), 1);
+        let total: usize = out.votes.iter().sum();
+        assert_eq!(total, 4); // one flag per class
+    }
+}

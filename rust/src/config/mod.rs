@@ -1,0 +1,9 @@
+//! Configuration system: a TOML-subset parser (sections, key = value with
+//! strings/numbers/bools) plus the typed serving schema with defaults and
+//! CLI overrides. No `serde`/`toml` crates in this environment.
+
+pub mod parser;
+pub mod schema;
+
+pub use parser::{ConfigDoc, ConfigError};
+pub use schema::AppConfig;

@@ -1,0 +1,241 @@
+//! TOML-subset parser: `[section]` headers and `key = value` lines where a
+//! value is a quoted string, integer, float, or bool. Comments with `#`.
+//! Flat two-level structure (enough for serving configs; nested tables are
+//! rejected loudly).
+
+use std::collections::BTreeMap;
+
+/// `section.key -> raw value` document.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct ConfigDoc {
+    /// Keys are `"section.key"`; top-level keys have no prefix.
+    values: BTreeMap<String, Value>,
+}
+
+/// A parsed config value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+/// Config errors carry line numbers.
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    #[error("config line {line}: {msg}")]
+    Parse { line: usize, msg: String },
+    #[error("missing key '{0}'")]
+    Missing(String),
+    #[error("key '{key}': expected {expected}, got {got}")]
+    Type { key: String, expected: &'static str, got: String },
+}
+
+impl ConfigDoc {
+    pub fn parse(text: &str) -> Result<ConfigDoc, ConfigError> {
+        let mut doc = ConfigDoc::default();
+        let mut section = String::new();
+        for (i, raw) in text.lines().enumerate() {
+            let line_no = i + 1;
+            let line = match raw.find('#') {
+                Some(pos) if !in_string(raw, pos) => &raw[..pos],
+                _ => raw,
+            }
+            .trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .ok_or_else(|| ConfigError::Parse {
+                        line: line_no,
+                        msg: "unterminated section header".into(),
+                    })?
+                    .trim();
+                if name.contains('[') || name.contains('.') {
+                    return Err(ConfigError::Parse {
+                        line: line_no,
+                        msg: format!("nested tables not supported: '{name}'"),
+                    });
+                }
+                section = name.to_string();
+                continue;
+            }
+            let eq = line.find('=').ok_or_else(|| ConfigError::Parse {
+                line: line_no,
+                msg: format!("expected 'key = value', got '{line}'"),
+            })?;
+            let key = line[..eq].trim();
+            let value = parse_value(line[eq + 1..].trim()).map_err(|msg| {
+                ConfigError::Parse { line: line_no, msg }
+            })?;
+            let full = if section.is_empty() {
+                key.to_string()
+            } else {
+                format!("{section}.{key}")
+            };
+            doc.values.insert(full, value);
+        }
+        Ok(doc)
+    }
+
+    /// Apply a `key=value` override (CLI `--set section.key=value`).
+    pub fn set_override(&mut self, spec: &str) -> Result<(), ConfigError> {
+        let eq = spec.find('=').ok_or_else(|| ConfigError::Parse {
+            line: 0,
+            msg: format!("override must be key=value, got '{spec}'"),
+        })?;
+        let key = spec[..eq].trim().to_string();
+        let value = parse_value(spec[eq + 1..].trim())
+            .map_err(|msg| ConfigError::Parse { line: 0, msg })?;
+        self.values.insert(key, value);
+        Ok(())
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+
+    pub fn get_str(&self, key: &str) -> Option<String> {
+        match self.values.get(key) {
+            Some(Value::Str(s)) => Some(s.clone()),
+            Some(Value::Int(i)) => Some(i.to_string()),
+            Some(Value::Float(f)) => Some(f.to_string()),
+            Some(Value::Bool(b)) => Some(b.to_string()),
+            None => None,
+        }
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<Option<usize>, ConfigError> {
+        match self.values.get(key) {
+            None => Ok(None),
+            Some(Value::Int(i)) if *i >= 0 => Ok(Some(*i as usize)),
+            Some(v) => Err(ConfigError::Type {
+                key: key.into(),
+                expected: "non-negative integer",
+                got: format!("{v:?}"),
+            }),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<Option<f64>, ConfigError> {
+        match self.values.get(key) {
+            None => Ok(None),
+            Some(Value::Float(f)) => Ok(Some(*f)),
+            Some(Value::Int(i)) => Ok(Some(*i as f64)),
+            Some(v) => Err(ConfigError::Type {
+                key: key.into(),
+                expected: "number",
+                got: format!("{v:?}"),
+            }),
+        }
+    }
+
+    pub fn get_bool(&self, key: &str) -> Result<Option<bool>, ConfigError> {
+        match self.values.get(key) {
+            None => Ok(None),
+            Some(Value::Bool(b)) => Ok(Some(*b)),
+            Some(v) => Err(ConfigError::Type {
+                key: key.into(),
+                expected: "bool",
+                got: format!("{v:?}"),
+            }),
+        }
+    }
+}
+
+fn in_string(line: &str, pos: usize) -> bool {
+    line[..pos].bytes().filter(|&b| b == b'"').count() % 2 == 1
+}
+
+fn parse_value(text: &str) -> Result<Value, String> {
+    if text.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = text.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').ok_or("unterminated string")?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    match text {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = text.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = text.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value '{text}'"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = ConfigDoc::parse(
+            r#"
+            # top comment
+            name = "svc"        # trailing comment
+            [code]
+            k = 8
+            s = 1
+            [workers]
+            latency = "exp:5"
+            rate = 0.25
+            enabled = true
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get_str("name").unwrap(), "svc");
+        assert_eq!(doc.get_usize("code.k").unwrap(), Some(8));
+        assert_eq!(doc.get_str("workers.latency").unwrap(), "exp:5");
+        assert_eq!(doc.get_f64("workers.rate").unwrap(), Some(0.25));
+        assert_eq!(doc.get_bool("workers.enabled").unwrap(), Some(true));
+        assert_eq!(doc.get_usize("code.missing").unwrap(), None);
+    }
+
+    #[test]
+    fn type_errors_are_descriptive() {
+        let doc = ConfigDoc::parse("k = \"eight\"").unwrap();
+        let err = doc.get_usize("k").unwrap_err();
+        assert!(format!("{err}").contains("expected non-negative integer"));
+    }
+
+    #[test]
+    fn parse_errors_carry_line_numbers() {
+        let err = ConfigDoc::parse("a = 1\nbad line\n").unwrap_err();
+        assert!(format!("{err}").contains("line 2"));
+    }
+
+    #[test]
+    fn overrides_win() {
+        let mut doc = ConfigDoc::parse("[code]\nk = 8\n").unwrap();
+        doc.set_override("code.k=12").unwrap();
+        assert_eq!(doc.get_usize("code.k").unwrap(), Some(12));
+        assert!(doc.set_override("no-equals").is_err());
+    }
+
+    #[test]
+    fn rejects_nested_tables() {
+        assert!(ConfigDoc::parse("[a.b]\nk = 1\n").is_err());
+    }
+
+    #[test]
+    fn hash_inside_string_is_kept() {
+        let doc = ConfigDoc::parse("tag = \"a#b\"\n").unwrap();
+        assert_eq!(doc.get_str("tag").unwrap(), "a#b");
+    }
+
+    #[test]
+    fn negative_int_not_usize() {
+        let doc = ConfigDoc::parse("x = -3\n").unwrap();
+        assert!(doc.get_usize("x").is_err());
+        assert_eq!(doc.get_f64("x").unwrap(), Some(-3.0));
+    }
+}

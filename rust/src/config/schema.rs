@@ -1,0 +1,183 @@
+//! Typed application configuration: defaults ← config file ← `--set`
+//! overrides, validated into the structures the coordinator consumes.
+
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coding::CodeParams;
+use crate::coordinator::Strategy;
+use crate::workers::{ByzantineMode, LatencyModel};
+
+use super::parser::ConfigDoc;
+
+/// Fully resolved application config.
+#[derive(Clone, Debug)]
+pub struct AppConfig {
+    /// Code parameters (K, S, E).
+    pub params: CodeParams,
+    /// Serving strategy.
+    pub strategy: Strategy,
+    /// Hosted model architecture (must exist in the artifact manifest).
+    pub arch: String,
+    /// Dataset the model was trained on (selects the artifact + test set).
+    pub dataset: String,
+    /// Artifacts directory.
+    pub artifacts: String,
+    /// TCP bind address for `serve`.
+    pub bind: String,
+    /// Batcher flush deadline.
+    pub flush_after: Duration,
+    /// Worker latency model (same for all workers).
+    pub worker_latency: LatencyModel,
+    /// Fraction of groups that get forced stragglers.
+    pub straggler_rate: f64,
+    /// Forced straggler delay.
+    pub straggler_delay: Duration,
+    /// Byzantine corruption mode, if the deployment simulates adversaries.
+    pub byz_mode: Option<ByzantineMode>,
+    /// RNG seed for fault injection.
+    pub seed: u64,
+}
+
+impl Default for AppConfig {
+    fn default() -> Self {
+        AppConfig {
+            params: CodeParams::new(8, 1, 0),
+            strategy: Strategy::ApproxIfer,
+            arch: "resnet18_s".into(),
+            dataset: "syncifar".into(),
+            artifacts: "artifacts".into(),
+            bind: "127.0.0.1:7700".into(),
+            flush_after: Duration::from_millis(20),
+            worker_latency: LatencyModel::None,
+            straggler_rate: 0.0,
+            straggler_delay: Duration::from_millis(100),
+            byz_mode: None,
+            seed: 0xA11CE,
+        }
+    }
+}
+
+impl AppConfig {
+    /// Build from an optional config file plus `--set key=value` overrides.
+    pub fn load(path: Option<&str>, overrides: &[String]) -> Result<AppConfig> {
+        let mut doc = match path {
+            Some(p) => {
+                let text = std::fs::read_to_string(p)
+                    .with_context(|| format!("reading config file {p}"))?;
+                ConfigDoc::parse(&text).with_context(|| format!("parsing {p}"))?
+            }
+            None => ConfigDoc::default(),
+        };
+        for ov in overrides {
+            doc.set_override(ov).with_context(|| format!("applying override '{ov}'"))?;
+        }
+        AppConfig::from_doc(&doc)
+    }
+
+    pub fn from_doc(doc: &ConfigDoc) -> Result<AppConfig> {
+        let mut cfg = AppConfig::default();
+        let k = doc.get_usize("code.k")?.unwrap_or(cfg.params.k);
+        let s = doc.get_usize("code.s")?.unwrap_or(cfg.params.s);
+        let e = doc.get_usize("code.e")?.unwrap_or(cfg.params.e);
+        if k == 0 {
+            bail!("code.k must be >= 1");
+        }
+        if e == 0 && s == 0 {
+            bail!("code must tolerate something: set code.s or code.e > 0");
+        }
+        cfg.params = CodeParams::new(k, s, e);
+        if let Some(v) = doc.get_str("serving.strategy") {
+            cfg.strategy = Strategy::parse(&v).map_err(|e| anyhow::anyhow!(e))?;
+        }
+        if let Some(v) = doc.get_str("model.arch") {
+            cfg.arch = v;
+        }
+        if let Some(v) = doc.get_str("model.dataset") {
+            cfg.dataset = v;
+        }
+        if let Some(v) = doc.get_str("serving.artifacts") {
+            cfg.artifacts = v;
+        }
+        if let Some(v) = doc.get_str("serving.bind") {
+            cfg.bind = v;
+        }
+        if let Some(ms) = doc.get_f64("serving.flush_after_ms")? {
+            cfg.flush_after = Duration::from_secs_f64(ms / 1e3);
+        }
+        if let Some(v) = doc.get_str("workers.latency") {
+            cfg.worker_latency = LatencyModel::parse(&v).map_err(|e| anyhow::anyhow!(e))?;
+        }
+        if let Some(v) = doc.get_f64("faults.straggler_rate")? {
+            if !(0.0..=1.0).contains(&v) {
+                bail!("faults.straggler_rate must be in [0,1], got {v}");
+            }
+            cfg.straggler_rate = v;
+        }
+        if let Some(ms) = doc.get_f64("faults.straggler_delay_ms")? {
+            cfg.straggler_delay = Duration::from_secs_f64(ms / 1e3);
+        }
+        if let Some(v) = doc.get_str("faults.byzantine") {
+            cfg.byz_mode = Some(ByzantineMode::parse(&v).map_err(|e| anyhow::anyhow!(e))?);
+        }
+        if let Some(v) = doc.get_usize("faults.seed")? {
+            cfg.seed = v as u64;
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let cfg = AppConfig::load(None, &[]).unwrap();
+        assert_eq!(cfg.params, CodeParams::new(8, 1, 0));
+        assert_eq!(cfg.strategy, Strategy::ApproxIfer);
+    }
+
+    #[test]
+    fn doc_and_overrides_apply() {
+        let doc = ConfigDoc::parse(
+            r#"
+            [code]
+            k = 12
+            e = 2
+            s = 0
+            [serving]
+            strategy = "replication"
+            [workers]
+            latency = "exp:4"
+            [faults]
+            byzantine = "gauss:10"
+            straggler_rate = 0.5
+            "#,
+        )
+        .unwrap();
+        let cfg = AppConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.params, CodeParams::new(12, 0, 2));
+        assert_eq!(cfg.strategy, Strategy::Replication);
+        assert_eq!(cfg.worker_latency, LatencyModel::Exponential { mean_ms: 4.0 });
+        assert_eq!(cfg.byz_mode, Some(ByzantineMode::GaussianNoise { sigma: 10.0 }));
+        assert_eq!(cfg.straggler_rate, 0.5);
+    }
+
+    #[test]
+    fn invalid_values_rejected() {
+        let doc = ConfigDoc::parse("[faults]\nstraggler_rate = 1.5\n").unwrap();
+        assert!(AppConfig::from_doc(&doc).is_err());
+        let doc = ConfigDoc::parse("[code]\nk = 0\n").unwrap();
+        assert!(AppConfig::from_doc(&doc).is_err());
+        let doc = ConfigDoc::parse("[code]\ns = 0\ne = 0\n").unwrap();
+        assert!(AppConfig::from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn cli_override_beats_file_value() {
+        let cfg = AppConfig::load(None, &["code.k=10".to_string()]).unwrap();
+        assert_eq!(cfg.params.k, 10);
+    }
+}

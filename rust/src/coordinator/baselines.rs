@@ -1,0 +1,348 @@
+//! Baseline serving pipelines the paper compares against:
+//!
+//! * **Replication** (paper §5, Figures 9–10 comparator): each query goes to
+//!   `max(S+1, 2E+1)` workers; first reply wins under stragglers, majority
+//!   vote under Byzantine workers. Attains base accuracy but needs
+//!   `(2E+1)·K` workers where ApproxIFER needs `2K+2E`.
+//! * **ParM-proxy** (Figures 3, 5, 6 comparator): the learned-parity-model
+//!   system of Kosaian et al. reconstructed with the untrained proxy
+//!   `f_P(Σx) := K·f(Σx/K)` of the parity model's ideal
+//!   `f_P(ΣX) = Σf(X)` (substitution documented in DESIGN.md §3). The
+//!   worst case — one uncoded prediction always unavailable (paper
+//!   Appendix C) — reconstructs the lost prediction as
+//!   `f_P(ΣX) − Σ_{i≠j} f(X_i)`.
+
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::coding::replication::{majority_payload, ReplicationParams};
+use crate::metrics::ServingMetrics;
+use crate::tensor::Tensor;
+use crate::workers::{WorkerPool, WorkerTask};
+
+use super::pipeline::FaultPlan;
+
+/// Replication-based group pipeline.
+pub struct ReplicationPipeline {
+    params: ReplicationParams,
+    pub timeout: Duration,
+    group_counter: u64,
+}
+
+impl ReplicationPipeline {
+    pub fn new(params: ReplicationParams) -> ReplicationPipeline {
+        ReplicationPipeline { params, timeout: Duration::from_secs(30), group_counter: 0 }
+    }
+
+    pub fn params(&self) -> ReplicationParams {
+        self.params
+    }
+
+    /// Serve a K-group with replication. Fault semantics: a worker in
+    /// `plan.stragglers` is delayed; one in `plan.byzantine` corrupts.
+    /// Returns K prediction payloads (exact, as long as faults are within
+    /// the configured tolerance).
+    pub fn infer_group(
+        &mut self,
+        pool: &WorkerPool,
+        queries: &[&[f32]],
+        plan: &FaultPlan,
+        metrics: &ServingMetrics,
+    ) -> Result<Vec<Vec<f32>>> {
+        let p = self.params;
+        if pool.num_workers() != p.num_workers() {
+            bail!("pool has {} workers, replication needs {}", pool.num_workers(), p.num_workers());
+        }
+        if queries.len() != p.k {
+            bail!("group has {} queries, expected K={}", queries.len(), p.k);
+        }
+        let t_group = Instant::now();
+        self.group_counter += 1;
+        let group = self.group_counter;
+        metrics.groups_dispatched.inc();
+        for q in 0..p.k {
+            for c in 0..p.copies() {
+                let w = p.worker_for(q, c);
+                pool.send(
+                    w,
+                    WorkerTask {
+                        group,
+                        payload: queries[q].to_vec(),
+                        extra_delay: if plan.stragglers.contains(&w) {
+                            plan.straggler_delay
+                        } else {
+                            Duration::ZERO
+                        },
+                        corrupt: if plan.byzantine.contains(&w) { plan.byz_mode } else { None },
+                    },
+                )?;
+            }
+        }
+        // Collect: per query, need 1 reply under stragglers-only, or a
+        // 2E+1 quorum under Byzantine threat.
+        let need_per_query = if p.e == 0 { 1 } else { 2 * p.e + 1 };
+        let mut per_query: Vec<Vec<Vec<f32>>> = vec![Vec::new(); p.k];
+        let mut done = 0usize;
+        let deadline = Instant::now() + self.timeout;
+        while done < p.k {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
+                bail!("replication group {group} timed out ({done}/{} queries)", p.k);
+            }
+            let Some(reply) = pool.recv_timeout(remaining) else { continue };
+            metrics.worker_replies.inc();
+            if reply.group != group {
+                metrics.stragglers_cancelled.inc();
+                continue;
+            }
+            let (q, _copy) = p.assignment_of(reply.worker_id);
+            match reply.result {
+                Ok(logits) => {
+                    if per_query[q].len() < need_per_query {
+                        per_query[q].push(logits);
+                        if per_query[q].len() == need_per_query {
+                            done += 1;
+                        }
+                    }
+                }
+                Err(e) => {
+                    metrics.errors.inc();
+                    log::warn!("replica {} failed: {e}", reply.worker_id);
+                }
+            }
+        }
+        let out: Vec<Vec<f32>> = per_query
+            .into_iter()
+            .map(|replies| {
+                if replies.len() == 1 {
+                    replies.into_iter().next().unwrap()
+                } else {
+                    let tensors: Vec<Tensor> = replies
+                        .into_iter()
+                        .map(|r| {
+                            let n = r.len();
+                            Tensor::from_vec(&[n], r)
+                        })
+                        .collect();
+                    let refs: Vec<&Tensor> = tensors.iter().collect();
+                    majority_payload(&refs).into_vec()
+                }
+            })
+            .collect();
+        metrics.groups_decoded.inc();
+        metrics.group_latency.record(t_group.elapsed().as_secs_f64());
+        Ok(out)
+    }
+}
+
+/// ParM-proxy group pipeline (worst case: query `lost` is unavailable).
+pub struct ParmProxyPipeline {
+    pub k: usize,
+    pub timeout: Duration,
+    group_counter: u64,
+}
+
+/// Workers: `0..K` run `f` on the uncoded queries; worker `K` runs `f` on
+/// the parity input `Σx / K` (the proxy's pre-scaled sum).
+impl ParmProxyPipeline {
+    pub fn new(k: usize) -> ParmProxyPipeline {
+        ParmProxyPipeline { k, timeout: Duration::from_secs(30), group_counter: 0 }
+    }
+
+    pub fn num_workers(&self) -> usize {
+        self.k + 1
+    }
+
+    /// Serve a K-group; `lost` is the worker whose (uncoded) prediction is
+    /// unavailable this group (paper worst case: always exactly one).
+    /// Returns K prediction payloads where entry `lost` is reconstructed
+    /// from the parity prediction.
+    pub fn infer_group(
+        &mut self,
+        pool: &WorkerPool,
+        queries: &[&[f32]],
+        lost: usize,
+        metrics: &ServingMetrics,
+    ) -> Result<Vec<Vec<f32>>> {
+        let k = self.k;
+        if pool.num_workers() != k + 1 {
+            bail!("pool has {} workers, ParM needs {}", pool.num_workers(), k + 1);
+        }
+        if queries.len() != k {
+            bail!("group has {} queries, expected K={k}", queries.len());
+        }
+        if lost >= k {
+            bail!("lost index {lost} out of range");
+        }
+        self.group_counter += 1;
+        let group = self.group_counter;
+        let t_group = Instant::now();
+        metrics.groups_dispatched.inc();
+        let d = queries[0].len();
+        // Parity input: (Σ X_i) / K — the proxy evaluates f at the scaled sum.
+        let mut parity_in = vec![0.0f32; d];
+        for q in queries {
+            for (acc, &x) in parity_in.iter_mut().zip(*q) {
+                *acc += x;
+            }
+        }
+        for v in parity_in.iter_mut() {
+            *v /= k as f32;
+        }
+        for (i, q) in queries.iter().enumerate() {
+            pool.send(
+                i,
+                WorkerTask {
+                    group,
+                    payload: q.to_vec(),
+                    extra_delay: Duration::ZERO,
+                    corrupt: None,
+                },
+            )?;
+        }
+        pool.send(
+            k,
+            WorkerTask { group, payload: parity_in, extra_delay: Duration::ZERO, corrupt: None },
+        )?;
+        // Collect everything except the lost worker's reply.
+        let mut replies: Vec<Option<Vec<f32>>> = vec![None; k + 1];
+        let mut got = 0usize;
+        let deadline = Instant::now() + self.timeout;
+        while got < k {
+            // k replies: (k-1) uncoded + parity
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
+                bail!("ParM group {group} timed out");
+            }
+            let Some(reply) = pool.recv_timeout(remaining) else { continue };
+            metrics.worker_replies.inc();
+            if reply.group != group || reply.worker_id == lost {
+                continue; // worst case: lost worker's reply never arrives in time
+            }
+            if let Ok(logits) = reply.result {
+                if replies[reply.worker_id].is_none() {
+                    replies[reply.worker_id] = Some(logits);
+                    got += 1;
+                }
+            } else {
+                metrics.errors.inc();
+            }
+        }
+        // Reconstruct: f(X_lost) ≈ K·f_parity − Σ_{i≠lost} f(X_i).
+        let parity = replies[k].take().expect("parity reply");
+        let c = parity.len();
+        let mut lost_pred: Vec<f32> = parity.iter().map(|&v| v * k as f32).collect();
+        let mut out: Vec<Vec<f32>> = vec![Vec::new(); k];
+        for i in 0..k {
+            if i == lost {
+                continue;
+            }
+            let r = replies[i].take().expect("uncoded reply");
+            for t in 0..c {
+                lost_pred[t] -= r[t];
+            }
+            out[i] = r;
+        }
+        out[lost] = lost_pred;
+        metrics.groups_decoded.inc();
+        metrics.group_latency.record(t_group.elapsed().as_secs_f64());
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workers::{
+        ByzantineMode, InferenceEngine, LinearMockEngine, WorkerPool, WorkerSpec,
+    };
+    use std::sync::Arc;
+
+    fn queries(k: usize, d: usize) -> Vec<Vec<f32>> {
+        (0..k)
+            .map(|j| (0..d).map(|t| ((j * 7 + t) as f32 * 0.1).cos()).collect())
+            .collect()
+    }
+
+    #[test]
+    fn replication_stragglers_first_reply_wins() {
+        let p = ReplicationParams::new(3, 1, 0);
+        let engine = Arc::new(LinearMockEngine::new(8, 4));
+        let pool =
+            WorkerPool::spawn(engine.clone(), &vec![WorkerSpec::default(); p.num_workers()], 1);
+        let mut pipe = ReplicationPipeline::new(p);
+        let metrics = ServingMetrics::new();
+        let qs = queries(3, 8);
+        let qrefs: Vec<&[f32]> = qs.iter().map(|q| &q[..]).collect();
+        let plan = FaultPlan {
+            stragglers: vec![0], // copy 0 of query 0 straggles; copy 1 serves it
+            straggler_delay: Duration::from_millis(200),
+            ..FaultPlan::none()
+        };
+        let out = pipe.infer_group(&pool, &qrefs, &plan, &metrics).unwrap();
+        for (j, q) in qs.iter().enumerate() {
+            let want = engine.infer1(q).unwrap();
+            assert_eq!(out[j], want, "query {j} must be exact under replication");
+        }
+        pool.shutdown();
+    }
+
+    #[test]
+    fn replication_majority_beats_byzantine() {
+        let p = ReplicationParams::new(2, 0, 1); // 3 copies each, 6 workers
+        let engine = Arc::new(LinearMockEngine::new(6, 3));
+        let pool =
+            WorkerPool::spawn(engine.clone(), &vec![WorkerSpec::default(); p.num_workers()], 2);
+        let mut pipe = ReplicationPipeline::new(p);
+        let metrics = ServingMetrics::new();
+        let qs = queries(2, 6);
+        let qrefs: Vec<&[f32]> = qs.iter().map(|q| &q[..]).collect();
+        let plan = FaultPlan {
+            byzantine: vec![p.worker_for(0, 1)], // one corrupt copy of query 0
+            byz_mode: Some(ByzantineMode::GaussianNoise { sigma: 50.0 }),
+            ..FaultPlan::none()
+        };
+        let out = pipe.infer_group(&pool, &qrefs, &plan, &metrics).unwrap();
+        for (j, q) in qs.iter().enumerate() {
+            let want = engine.infer1(q).unwrap();
+            assert_eq!(out[j], want, "majority must recover query {j}");
+        }
+        pool.shutdown();
+    }
+
+    #[test]
+    fn parm_reconstructs_lost_prediction_exactly_for_linear_f() {
+        // The mock is affine: f(Σx/K)·K − Σ_{i≠j} f(x_i) = f(x_j) + bias
+        // error (K·b − K·b = 0 handled: K·(A·Σx/K + b) = A·Σx + K·b; minus
+        // Σ_{i≠j}(A·x_i + b) = A·x_j + b. Exact!).
+        let k = 4;
+        let engine = Arc::new(LinearMockEngine::new(10, 5));
+        let pool = WorkerPool::spawn(engine.clone(), &vec![WorkerSpec::default(); k + 1], 3);
+        let mut pipe = ParmProxyPipeline::new(k);
+        let metrics = ServingMetrics::new();
+        let qs = queries(k, 10);
+        let qrefs: Vec<&[f32]> = qs.iter().map(|q| &q[..]).collect();
+        let out = pipe.infer_group(&pool, &qrefs, 2, &metrics).unwrap();
+        for (j, q) in qs.iter().enumerate() {
+            let want = engine.infer1(q).unwrap();
+            for t in 0..5 {
+                let err = (out[j][t] - want[t]).abs();
+                assert!(err < 1e-4, "q{j} c{t}: {} vs {}", out[j][t], want[t]);
+            }
+        }
+        pool.shutdown();
+    }
+
+    #[test]
+    fn parm_rejects_bad_lost_index() {
+        let engine = Arc::new(LinearMockEngine::new(4, 2));
+        let pool = WorkerPool::spawn(engine, &vec![WorkerSpec::default(); 3], 4);
+        let mut pipe = ParmProxyPipeline::new(2);
+        let metrics = ServingMetrics::new();
+        let qs = queries(2, 4);
+        let qrefs: Vec<&[f32]> = qs.iter().map(|q| &q[..]).collect();
+        assert!(pipe.infer_group(&pool, &qrefs, 5, &metrics).is_err());
+        pool.shutdown();
+    }
+}

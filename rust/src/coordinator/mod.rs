@@ -1,0 +1,47 @@
+//! Layer-3 coordinator — the paper's system contribution: the coded
+//! group pipeline (encode → fan-out → fastest-subset collect → locate →
+//! decode), the online batching service on top of it, and the replication /
+//! ParM-proxy baseline pipelines the paper compares against.
+
+pub mod baselines;
+pub mod pipeline;
+pub mod service;
+
+pub use baselines::{ParmProxyPipeline, ReplicationPipeline};
+pub use pipeline::{FaultPlan, GroupOutcome, GroupPipeline};
+pub use service::{PredictionHandle, Service, ServiceConfig};
+
+/// Which serving strategy a deployment uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Strategy {
+    /// The paper's coded inference.
+    ApproxIfer,
+    /// Proactive replication baseline.
+    Replication,
+    /// Learned-parity-model baseline (proxy; DESIGN.md §3).
+    ParmProxy,
+}
+
+impl Strategy {
+    pub fn parse(s: &str) -> Result<Strategy, String> {
+        match s {
+            "approxifer" => Ok(Strategy::ApproxIfer),
+            "replication" => Ok(Strategy::Replication),
+            "parm" | "parm-proxy" => Ok(Strategy::ParmProxy),
+            _ => Err(format!("unknown strategy '{s}' (approxifer|replication|parm)")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strategy_parse() {
+        assert_eq!(Strategy::parse("approxifer").unwrap(), Strategy::ApproxIfer);
+        assert_eq!(Strategy::parse("replication").unwrap(), Strategy::Replication);
+        assert_eq!(Strategy::parse("parm").unwrap(), Strategy::ParmProxy);
+        assert!(Strategy::parse("nope").is_err());
+    }
+}

@@ -1,0 +1,295 @@
+//! The ApproxIFER group pipeline — the heart of the serving system
+//! (paper Fig. 4): encode a K-group, fan out to N+1 workers, collect the
+//! fastest subset, locate Byzantine replies, decode.
+//!
+//! This synchronous pipeline is driven either by the online
+//! [`crate::coordinator::service::Service`] (batcher thread) or directly by
+//! the experiment harness; both share exactly this code path.
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::coding::{locate_by_vote, ApproxIferCode, CodeParams, LocatorMethod};
+use crate::metrics::ServingMetrics;
+use crate::workers::{ByzantineMode, WorkerPool, WorkerTask};
+
+/// Per-group fault injection chosen by the experiment driver (the paper
+/// picks straggler/Byzantine indices at random per run).
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    /// Workers forced to straggle this group (delayed by `straggler_delay`).
+    pub stragglers: Vec<usize>,
+    /// Workers that corrupt their reply this group.
+    pub byzantine: Vec<usize>,
+    pub byz_mode: Option<ByzantineMode>,
+    pub straggler_delay: Duration,
+}
+
+impl FaultPlan {
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+}
+
+/// Outcome of one group inference.
+pub struct GroupOutcome {
+    /// K decoded prediction payloads.
+    pub predictions: Vec<Vec<f32>>,
+    /// Worker indices whose replies were used for decoding.
+    pub decode_set: Vec<usize>,
+    /// Worker indices flagged Byzantine (positions are worker ids).
+    pub flagged: Vec<usize>,
+    /// End-to-end group latency.
+    pub latency: Duration,
+}
+
+/// The coded-inference pipeline over a worker pool.
+pub struct GroupPipeline {
+    code: ApproxIferCode,
+    method: LocatorMethod,
+    /// Reply-wait timeout (a straggled worker past this is treated as lost).
+    pub timeout: Duration,
+    group_counter: u64,
+    /// Late replies from cancelled groups drain into here and are dropped.
+    stale: HashMap<u64, usize>,
+}
+
+impl GroupPipeline {
+    pub fn new(params: CodeParams) -> GroupPipeline {
+        GroupPipeline {
+            code: ApproxIferCode::new(params),
+            method: LocatorMethod::Pinned,
+            timeout: Duration::from_secs(30),
+            group_counter: 0,
+            stale: HashMap::new(),
+        }
+    }
+
+    pub fn with_locator(mut self, method: LocatorMethod) -> GroupPipeline {
+        self.method = method;
+        self
+    }
+
+    pub fn code(&self) -> &ApproxIferCode {
+        &self.code
+    }
+
+    pub fn params(&self) -> CodeParams {
+        self.code.params()
+    }
+
+    /// Run one K-group through the pool. `queries[j]` is a flattened query
+    /// payload; all must be equal length. Returns K decoded predictions.
+    pub fn infer_group(
+        &mut self,
+        pool: &WorkerPool,
+        queries: &[&[f32]],
+        plan: &FaultPlan,
+        metrics: &ServingMetrics,
+    ) -> Result<GroupOutcome> {
+        let params = self.code.params();
+        let nw = params.num_workers();
+        if pool.num_workers() != nw {
+            bail!("pool has {} workers, code needs {nw}", pool.num_workers());
+        }
+        if queries.len() != params.k {
+            bail!("group has {} queries, code needs K={}", queries.len(), params.k);
+        }
+        let t_group = Instant::now();
+        self.group_counter += 1;
+        let group = self.group_counter;
+
+        // --- encode (eq. (4)-(8): one SAXPY pass per worker) -------------
+        let t0 = Instant::now();
+        let d = queries[0].len();
+        let mut coded: Vec<Vec<f32>> = vec![vec![0.0; d]; nw];
+        self.code.encode_into(queries, &mut coded);
+        metrics.encode_latency.record(t0.elapsed().as_secs_f64());
+
+        // --- fan out -------------------------------------------------------
+        metrics.groups_dispatched.inc();
+        for (i, payload) in coded.into_iter().enumerate() {
+            let task = WorkerTask {
+                group,
+                payload,
+                extra_delay: if plan.stragglers.contains(&i) {
+                    plan.straggler_delay
+                } else {
+                    Duration::ZERO
+                },
+                corrupt: if plan.byzantine.contains(&i) { plan.byz_mode } else { None },
+            };
+            pool.send(i, task)?;
+        }
+
+        // --- collect the fastest wait_for replies ---------------------------
+        let wait_for = params.wait_for().min(nw);
+        let mut replies: Vec<Option<Vec<f32>>> = vec![None; nw];
+        let mut got = 0usize;
+        let deadline = Instant::now() + self.timeout;
+        while got < wait_for {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
+                bail!("group {group}: timed out with {got}/{wait_for} replies");
+            }
+            let Some(reply) = pool.recv_timeout(remaining) else { continue };
+            metrics.worker_replies.inc();
+            if reply.group != group {
+                // Late reply from a cancelled/fulfilled group.
+                metrics.stragglers_cancelled.inc();
+                *self.stale.entry(reply.group).or_insert(0) += 1;
+                continue;
+            }
+            match reply.result {
+                Ok(logits) => {
+                    if replies[reply.worker_id].is_none() {
+                        replies[reply.worker_id] = Some(logits);
+                        got += 1;
+                    }
+                }
+                Err(e) => {
+                    metrics.errors.inc();
+                    log::warn!("worker {} failed group {group}: {e}", reply.worker_id);
+                }
+            }
+        }
+        let avail: Vec<usize> =
+            (0..nw).filter(|&i| replies[i].is_some()).collect();
+
+        // --- locate Byzantine replies (Algorithm 2) -------------------------
+        let t0 = Instant::now();
+        let mut decode_set = avail.clone();
+        let mut flagged_workers = Vec::new();
+        if params.e > 0 {
+            let nodes: Vec<f64> = avail.iter().map(|&i| self.code.beta()[i]).collect();
+            let preds: Vec<&[f32]> =
+                avail.iter().map(|&i| replies[i].as_deref().unwrap()).collect();
+            let outcome = locate_by_vote(&nodes, &preds, params.k, params.e, self.method)?;
+            flagged_workers = outcome.erroneous.iter().map(|&pos| avail[pos]).collect();
+            metrics.byzantine_flagged.add(flagged_workers.len() as u64);
+            decode_set =
+                avail.iter().copied().filter(|i| !flagged_workers.contains(i)).collect();
+        }
+        metrics.locate_latency.record(t0.elapsed().as_secs_f64());
+
+        // --- decode (eq. (10)-(11)) -----------------------------------------
+        let t0 = Instant::now();
+        let payloads: Vec<&[f32]> =
+            decode_set.iter().map(|&i| replies[i].as_deref().unwrap()).collect();
+        let predictions = self.code.decode(&decode_set, &payloads);
+        metrics.decode_latency.record(t0.elapsed().as_secs_f64());
+        metrics.groups_decoded.inc();
+        let latency = t_group.elapsed();
+        metrics.group_latency.record(latency.as_secs_f64());
+        Ok(GroupOutcome { predictions, decode_set, flagged: flagged_workers, latency })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workers::{InferenceEngine, LinearMockEngine, WorkerPool, WorkerSpec};
+    use std::sync::Arc;
+
+    fn mk_pool(params: CodeParams, payload: usize, classes: usize) -> WorkerPool {
+        let engine = Arc::new(LinearMockEngine::new(payload, classes));
+        let specs = vec![WorkerSpec::default(); params.num_workers()];
+        WorkerPool::spawn(engine, &specs, 7)
+    }
+
+    /// Reference predictions: engine applied to the *uncoded* queries.
+    fn reference(payload: usize, classes: usize, queries: &[Vec<f32>]) -> Vec<Vec<f32>> {
+        let engine = LinearMockEngine::new(payload, classes);
+        queries.iter().map(|q| engine.infer1(q).unwrap()).collect()
+    }
+
+    fn smooth_queries(k: usize, d: usize) -> Vec<Vec<f32>> {
+        (0..k)
+            .map(|j| (0..d).map(|t| ((j as f32) * 0.2 + (t as f32) * 0.01).sin()).collect())
+            .collect()
+    }
+
+    #[test]
+    fn straggler_group_decodes_close_to_reference() {
+        let params = CodeParams::new(6, 1, 0);
+        let (d, c) = (12, 5);
+        let pool = mk_pool(params, d, c);
+        let mut pipe = GroupPipeline::new(params);
+        let metrics = ServingMetrics::new();
+        let queries = smooth_queries(6, d);
+        let qrefs: Vec<&[f32]> = queries.iter().map(|q| &q[..]).collect();
+        let plan = FaultPlan {
+            stragglers: vec![3],
+            straggler_delay: Duration::from_millis(300),
+            ..FaultPlan::none()
+        };
+        let out = pipe.infer_group(&pool, &qrefs, &plan, &metrics).unwrap();
+        assert_eq!(out.predictions.len(), 6);
+        assert!(!out.decode_set.contains(&3), "straggler should be excluded");
+        let want = reference(d, c, &queries);
+        for j in 0..6 {
+            for t in 0..c {
+                let err = (out.predictions[j][t] - want[j][t]).abs();
+                assert!(err < 0.2, "j={j} t={t}: {} vs {}", out.predictions[j][t], want[j][t]);
+            }
+        }
+        pool.shutdown();
+    }
+
+    #[test]
+    fn byzantine_worker_is_flagged_and_excluded() {
+        let params = CodeParams::new(4, 0, 1);
+        let (d, c) = (10, 6);
+        let pool = mk_pool(params, d, c);
+        let mut pipe = GroupPipeline::new(params);
+        let metrics = ServingMetrics::new();
+        let queries = smooth_queries(4, d);
+        let qrefs: Vec<&[f32]> = queries.iter().map(|q| &q[..]).collect();
+        let plan = FaultPlan {
+            byzantine: vec![2],
+            byz_mode: Some(ByzantineMode::GaussianNoise { sigma: 10.0 }),
+            ..FaultPlan::none()
+        };
+        let out = pipe.infer_group(&pool, &qrefs, &plan, &metrics).unwrap();
+        assert_eq!(out.flagged, vec![2], "votes should flag worker 2");
+        assert!(!out.decode_set.contains(&2));
+        let want = reference(d, c, &queries);
+        for j in 0..4 {
+            for t in 0..c {
+                let err = (out.predictions[j][t] - want[j][t]).abs();
+                assert!(err < 0.5, "j={j} t={t}: {} vs {}", out.predictions[j][t], want[j][t]);
+            }
+        }
+        pool.shutdown();
+    }
+
+    #[test]
+    fn wrong_group_size_is_error() {
+        let params = CodeParams::new(4, 1, 0);
+        let pool = mk_pool(params, 8, 3);
+        let mut pipe = GroupPipeline::new(params);
+        let metrics = ServingMetrics::new();
+        let q = vec![vec![0.0f32; 8]; 2];
+        let qrefs: Vec<&[f32]> = q.iter().map(|x| &x[..]).collect();
+        assert!(pipe.infer_group(&pool, &qrefs, &FaultPlan::none(), &metrics).is_err());
+        pool.shutdown();
+    }
+
+    #[test]
+    fn metrics_are_recorded() {
+        let params = CodeParams::new(3, 1, 0);
+        let pool = mk_pool(params, 6, 2);
+        let mut pipe = GroupPipeline::new(params);
+        let metrics = ServingMetrics::new();
+        let queries = smooth_queries(3, 6);
+        let qrefs: Vec<&[f32]> = queries.iter().map(|q| &q[..]).collect();
+        pipe.infer_group(&pool, &qrefs, &FaultPlan::none(), &metrics).unwrap();
+        assert_eq!(metrics.groups_dispatched.get(), 1);
+        assert_eq!(metrics.groups_decoded.get(), 1);
+        assert!(metrics.worker_replies.get() >= 3);
+        assert_eq!(metrics.group_latency.count(), 1);
+        pool.shutdown();
+    }
+}

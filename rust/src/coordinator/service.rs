@@ -1,0 +1,314 @@
+//! Online serving front: a dynamic batcher that groups incoming queries
+//! into `K`-groups (flushing on size or deadline) and drives the
+//! [`GroupPipeline`] on a dedicated coordinator thread. Clients get a
+//! oneshot-style receiver that resolves to the decoded prediction.
+//!
+//! This is the component a downstream user embeds
+//! (`Service::submit(query) → PredictionHandle`), and what the TCP server
+//! front-end calls into.
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::coding::CodeParams;
+use crate::metrics::ServingMetrics;
+use crate::util::rng::Rng;
+use crate::workers::{ByzantineMode, InferenceEngine, WorkerPool, WorkerSpec};
+
+use super::pipeline::{FaultPlan, GroupPipeline};
+
+/// Service configuration.
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    pub params: CodeParams,
+    /// Flush a partial group after this long.
+    pub flush_after: Duration,
+    /// Per-worker injected latency (experiments; `LatencyModel::None` in
+    /// production).
+    pub worker_specs: Vec<WorkerSpec>,
+    /// Chance any group gets `params.s` forced stragglers (experiments).
+    pub straggler_rate: f64,
+    pub straggler_delay: Duration,
+    /// If set, every group gets `params.e` random Byzantine workers.
+    pub byz_mode: Option<ByzantineMode>,
+    pub seed: u64,
+}
+
+impl ServiceConfig {
+    pub fn new(params: CodeParams) -> ServiceConfig {
+        ServiceConfig {
+            params,
+            flush_after: Duration::from_millis(20),
+            worker_specs: vec![WorkerSpec::default(); params.num_workers()],
+            straggler_rate: 0.0,
+            straggler_delay: Duration::from_millis(100),
+            byz_mode: None,
+            seed: 0xA11CE,
+        }
+    }
+}
+
+/// Resolves to the decoded prediction payload for one submitted query.
+pub struct PredictionHandle {
+    rx: Receiver<Result<Vec<f32>, String>>,
+}
+
+impl PredictionHandle {
+    /// Block until the prediction is ready.
+    pub fn wait(self) -> Result<Vec<f32>> {
+        self.rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("service shut down"))?
+            .map_err(|e| anyhow::anyhow!(e))
+    }
+
+    pub fn wait_timeout(self, timeout: Duration) -> Result<Vec<f32>> {
+        self.rx
+            .recv_timeout(timeout)
+            .map_err(|_| anyhow::anyhow!("prediction timed out"))?
+            .map_err(|e| anyhow::anyhow!(e))
+    }
+}
+
+struct Submission {
+    payload: Vec<f32>,
+    reply: Sender<Result<Vec<f32>, String>>,
+}
+
+enum Msg {
+    Query(Submission),
+    Shutdown,
+}
+
+/// The online coded-inference service.
+pub struct Service {
+    tx: Sender<Msg>,
+    coordinator: Option<JoinHandle<()>>,
+    pub metrics: Arc<ServingMetrics>,
+}
+
+impl Service {
+    /// Start the service over an inference engine.
+    pub fn start(engine: Arc<dyn InferenceEngine>, cfg: ServiceConfig) -> Service {
+        let metrics = Arc::new(ServingMetrics::new());
+        let (tx, rx) = channel::<Msg>();
+        let m = metrics.clone();
+        let coordinator = std::thread::Builder::new()
+            .name("coordinator".into())
+            .spawn(move || coordinator_loop(engine, cfg, rx, m))
+            .expect("spawning coordinator");
+        Service { tx, coordinator: Some(coordinator), metrics }
+    }
+
+    /// Submit one query payload; resolves when its group is decoded.
+    pub fn submit(&self, payload: Vec<f32>) -> PredictionHandle {
+        self.metrics.queries_received.inc();
+        let (reply, rx) = channel();
+        // If the coordinator is gone the handle errors on wait.
+        let _ = self.tx.send(Msg::Query(Submission { payload, reply }));
+        PredictionHandle { rx }
+    }
+
+    /// Graceful shutdown (flushes nothing — pending partial groups error out).
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.coordinator.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Service {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.coordinator.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn coordinator_loop(
+    engine: Arc<dyn InferenceEngine>,
+    cfg: ServiceConfig,
+    rx: Receiver<Msg>,
+    metrics: Arc<ServingMetrics>,
+) {
+    let pool = WorkerPool::spawn(engine, &cfg.worker_specs, cfg.seed ^ 0x77);
+    let mut pipeline = GroupPipeline::new(cfg.params);
+    let mut rng = Rng::new(cfg.seed);
+    let k = cfg.params.k;
+    let mut pending: Vec<Submission> = Vec::with_capacity(k);
+    let mut first_at: Option<Instant> = None;
+    loop {
+        // Wait: bounded by the flush deadline when a partial group exists.
+        let msg = match first_at {
+            Some(t0) => {
+                let deadline = t0 + cfg.flush_after;
+                let now = Instant::now();
+                if now >= deadline {
+                    flush(&mut pipeline, &pool, &cfg, &mut rng, &mut pending, &metrics);
+                    first_at = None;
+                    continue;
+                }
+                match rx.recv_timeout(deadline - now) {
+                    Ok(m) => m,
+                    Err(std::sync::mpsc::RecvTimeoutError::Timeout) => continue,
+                    Err(_) => break,
+                }
+            }
+            None => match rx.recv() {
+                Ok(m) => m,
+                Err(_) => break,
+            },
+        };
+        match msg {
+            Msg::Query(s) => {
+                if pending.is_empty() {
+                    first_at = Some(Instant::now());
+                }
+                pending.push(s);
+                if pending.len() == k {
+                    flush(&mut pipeline, &pool, &cfg, &mut rng, &mut pending, &metrics);
+                    first_at = None;
+                }
+            }
+            Msg::Shutdown => break,
+        }
+    }
+    // Fail any stragglers in the queue.
+    for s in pending {
+        let _ = s.reply.send(Err("service shut down before group flush".into()));
+    }
+    pool.shutdown();
+}
+
+/// Flush one (possibly partial) group: pad by repeating the last query —
+/// padded slots' predictions are discarded.
+fn flush(
+    pipeline: &mut GroupPipeline,
+    pool: &WorkerPool,
+    cfg: &ServiceConfig,
+    rng: &mut Rng,
+    pending: &mut Vec<Submission>,
+    metrics: &ServingMetrics,
+) {
+    if pending.is_empty() {
+        return;
+    }
+    let k = cfg.params.k;
+    let real = pending.len();
+    let submissions: Vec<Submission> = pending.drain(..).collect();
+    let mut payloads: Vec<&[f32]> = submissions.iter().map(|s| &s.payload[..]).collect();
+    while payloads.len() < k {
+        payloads.push(&submissions[real - 1].payload);
+    }
+    // Experiment fault injection (off by default).
+    let nw = cfg.params.num_workers();
+    let plan = FaultPlan {
+        stragglers: if cfg.params.s > 0 && rng.chance(cfg.straggler_rate) {
+            rng.subset(nw, cfg.params.s)
+        } else {
+            Vec::new()
+        },
+        byzantine: if cfg.byz_mode.is_some() && cfg.params.e > 0 {
+            rng.subset(nw, cfg.params.e)
+        } else {
+            Vec::new()
+        },
+        byz_mode: cfg.byz_mode,
+        straggler_delay: cfg.straggler_delay,
+    };
+    match pipeline.infer_group(pool, &payloads, &plan, metrics) {
+        Ok(outcome) => {
+            for (s, pred) in submissions.iter().zip(outcome.predictions.into_iter()) {
+                let _ = s.reply.send(Ok(pred));
+            }
+        }
+        Err(e) => {
+            let msg = format!("group inference failed: {e:#}");
+            for s in &submissions {
+                let _ = s.reply.send(Err(msg.clone()));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workers::LinearMockEngine;
+    // InferenceEngine is already in scope via super::* (service imports it).
+
+    fn smooth_payload(j: usize, d: usize) -> Vec<f32> {
+        (0..d).map(|t| ((j as f32) * 0.3 + (t as f32) * 0.02).sin()).collect()
+    }
+
+    #[test]
+    fn full_group_resolves_all_queries() {
+        let params = CodeParams::new(4, 1, 0);
+        let engine = Arc::new(LinearMockEngine::new(12, 5));
+        let svc = Service::start(engine.clone(), ServiceConfig::new(params));
+        let handles: Vec<PredictionHandle> =
+            (0..4).map(|j| svc.submit(smooth_payload(j, 12))).collect();
+        for (j, h) in handles.into_iter().enumerate() {
+            let pred = h.wait_timeout(Duration::from_secs(10)).unwrap();
+            let want = engine.infer1(&smooth_payload(j, 12)).unwrap();
+            for t in 0..5 {
+                assert!(
+                    (pred[t] - want[t]).abs() < 0.25,
+                    "q{j} c{t}: {} vs {}",
+                    pred[t],
+                    want[t]
+                );
+            }
+        }
+        assert_eq!(svc.metrics.queries_received.get(), 4);
+        assert_eq!(svc.metrics.groups_decoded.get(), 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn partial_group_flushes_on_deadline() {
+        let params = CodeParams::new(4, 1, 0);
+        let engine = Arc::new(LinearMockEngine::new(6, 3));
+        let mut cfg = ServiceConfig::new(params);
+        cfg.flush_after = Duration::from_millis(30);
+        let svc = Service::start(engine, cfg);
+        // Only 2 of 4 queries — deadline flush must pad and still answer.
+        let h0 = svc.submit(smooth_payload(0, 6));
+        let h1 = svc.submit(smooth_payload(1, 6));
+        assert!(h0.wait_timeout(Duration::from_secs(10)).is_ok());
+        assert!(h1.wait_timeout(Duration::from_secs(10)).is_ok());
+        svc.shutdown();
+    }
+
+    #[test]
+    fn multiple_groups_pipeline_through() {
+        let params = CodeParams::new(3, 1, 0);
+        let engine = Arc::new(LinearMockEngine::new(6, 3));
+        let svc = Service::start(engine, ServiceConfig::new(params));
+        let handles: Vec<PredictionHandle> =
+            (0..9).map(|j| svc.submit(smooth_payload(j, 6))).collect();
+        for h in handles {
+            h.wait_timeout(Duration::from_secs(10)).unwrap();
+        }
+        assert_eq!(svc.metrics.groups_decoded.get(), 3);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn shutdown_fails_pending_queries() {
+        let params = CodeParams::new(8, 1, 0);
+        let engine = Arc::new(LinearMockEngine::new(6, 3));
+        let mut cfg = ServiceConfig::new(params);
+        cfg.flush_after = Duration::from_secs(60); // never flush by deadline
+        let svc = Service::start(engine, cfg);
+        let h = svc.submit(smooth_payload(0, 6));
+        svc.shutdown();
+        assert!(h.wait().is_err());
+    }
+}

@@ -1,0 +1,106 @@
+//! Test-set loading from the exported artifacts (`artifacts/data/*.bin`)
+//! and golden cross-language vectors (`artifacts/golden/*.bin`).
+
+use anyhow::{bail, Result};
+
+use crate::runtime::artifacts::{read_tensor_f32, read_tensor_i32, GoldenEntry, Manifest};
+use crate::tensor::Tensor;
+
+/// An in-memory test split.
+pub struct TestSet {
+    /// `(count, H, W, C)`.
+    pub images: Tensor,
+    pub labels: Vec<i32>,
+    pub name: String,
+    pub num_classes: usize,
+}
+
+impl TestSet {
+    /// Load a dataset's exported test split via the manifest.
+    pub fn load(manifest: &Manifest, name: &str) -> Result<TestSet> {
+        let entry = manifest.dataset(name)?;
+        let images = read_tensor_f32(manifest.abspath(&entry.images))?;
+        let (lshape, labels) = read_tensor_i32(manifest.abspath(&entry.labels))?;
+        if images.shape()
+            != [entry.count, entry.height, entry.width, entry.channels]
+        {
+            bail!("{name}: image tensor shape {:?} disagrees with manifest", images.shape());
+        }
+        if lshape != [entry.count] {
+            bail!("{name}: label tensor shape {lshape:?} disagrees with manifest");
+        }
+        Ok(TestSet {
+            images,
+            labels,
+            name: name.to_string(),
+            num_classes: entry.num_classes,
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    /// Payload size per sample (H·W·C).
+    pub fn payload(&self) -> usize {
+        self.images.shape()[1..].iter().product()
+    }
+
+    /// The i-th image as a flat payload slice.
+    pub fn image(&self, i: usize) -> &[f32] {
+        let d = self.payload();
+        &self.images.data()[i * d..(i + 1) * d]
+    }
+}
+
+/// One loaded golden vector set (cross-checks rust coding vs python).
+pub struct Golden {
+    pub k: usize,
+    pub s: usize,
+    pub e: usize,
+    /// `(N+1, K)` python encode matrix.
+    pub enc_w: Tensor,
+    /// `(K, D)` queries.
+    pub queries: Tensor,
+    /// `(N+1, D)` python-encoded payloads.
+    pub coded: Tensor,
+    /// Available worker indices used by the python decode.
+    pub avail: Vec<usize>,
+    /// `(K, |F|)` python decode matrix.
+    pub decmat: Tensor,
+    /// `(K, D)` python-decoded payloads.
+    pub decoded: Tensor,
+}
+
+impl Golden {
+    pub fn load(manifest: &Manifest, entry: &GoldenEntry) -> Result<Golden> {
+        let g = |stem: &str| manifest.abspath(&format!("golden/{stem}_{}.bin", entry.tag));
+        let (ashape, avail_raw) = read_tensor_i32(g("avail"))?;
+        if ashape.len() != 1 {
+            bail!("golden avail must be 1-D");
+        }
+        Ok(Golden {
+            k: entry.k,
+            s: entry.s,
+            e: entry.e,
+            enc_w: read_tensor_f32(g("enc_w"))?,
+            queries: read_tensor_f32(g("queries"))?,
+            coded: read_tensor_f32(g("coded"))?,
+            avail: avail_raw.iter().map(|&x| x as usize).collect(),
+            decmat: read_tensor_f32(g("decmat"))?,
+            decoded: read_tensor_f32(g("decoded"))?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // TestSet/Golden loading against real artifacts is exercised by the
+    // integration tests (rust/tests/artifacts_runtime.rs), which skip when
+    // `make artifacts` has not run. The binary container parsing itself is
+    // covered in runtime::artifacts.
+}

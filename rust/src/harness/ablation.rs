@@ -1,0 +1,175 @@
+//! Ablations (DESIGN.md §7): locator-method comparison, decode-set
+//! conditioning, and the α/β grid-alignment analysis that explains the
+//! S=1 accuracy dip on sharp classifiers (EXPERIMENTS.md §Deviations).
+
+use anyhow::Result;
+
+use crate::coding::analysis::{midpoint_alignment, straggler_pattern_stats};
+use crate::coding::chebyshev;
+use crate::coding::locator::{locate, poly_eval, LocatorMethod};
+use crate::coding::CodeParams;
+use crate::util::rng::Rng;
+
+use super::figures::FigureContext;
+use super::report::{pct, Report, Table};
+
+/// Locator ablation: success rate and the conditions under which the
+/// pinned-Q₀ system falls back to the homogeneous SVD.
+pub fn locator_methods(rep: &mut Report, trials: usize, seed: u64) -> Result<()> {
+    let mut t = Table::new(
+        "abl_locator",
+        "Error-locator ablation: pinned QR (production) vs homogeneous SVD (paper Alg. 1)",
+        &["K", "E", "sigma", "pinned_hit%", "homog_hit%"],
+    );
+    let mut rng = Rng::new(seed);
+    for &(k, e) in &[(8usize, 2usize), (12, 2), (12, 3)] {
+        for &sigma in &[1.0, 100.0] {
+            let params = CodeParams::new(k, 0, e);
+            let xs = chebyshev::second_kind(params.n());
+            let mut hits = [0usize; 2];
+            for _ in 0..trials {
+                let p: Vec<f64> = (0..k).map(|_| rng.range_f64(-2.0, 2.0)).collect();
+                let mut ys: Vec<f64> = xs.iter().map(|&x| poly_eval(&p, x)).collect();
+                let bad = rng.subset(xs.len(), e);
+                for &i in &bad {
+                    ys[i] += rng.normal(0.0, sigma) + 0.5; // non-negligible
+                }
+                for (mi, method) in
+                    [LocatorMethod::Pinned, LocatorMethod::Homogeneous].into_iter().enumerate()
+                {
+                    if let Ok(found) = locate(&xs, &ys, k, e, method) {
+                        if found == bad {
+                            hits[mi] += 1;
+                        }
+                    }
+                }
+            }
+            t.row(&[
+                k.to_string(),
+                e.to_string(),
+                format!("{sigma}"),
+                pct(hits[0] as f64 / trials as f64),
+                pct(hits[1] as f64 / trials as f64),
+            ]);
+        }
+    }
+    rep.add(t)
+}
+
+/// Decode-set conditioning sweep: exhaustive straggler patterns per (K, S),
+/// with the grid-alignment diagnostic.
+pub fn conditioning(rep: &mut Report) -> Result<()> {
+    let mut t = Table::new(
+        "abl_conditioning",
+        "Decode-set conditioning over all straggler patterns (Lebesgue-style mass)",
+        &["K", "S", "patterns", "leb_min", "leb_mean", "leb_max", "alpha_midpoint_align"],
+    );
+    for &(k, s) in &[(8usize, 1usize), (8, 2), (8, 3), (12, 1), (12, 2)] {
+        let params = CodeParams::new(k, s, 0);
+        let stats = straggler_pattern_stats(params);
+        t.row(&[
+            k.to_string(),
+            s.to_string(),
+            stats.patterns.to_string(),
+            format!("{:.2}", stats.leb_min),
+            format!("{:.2}", stats.leb_mean),
+            format!("{:.2}", stats.leb_max),
+            format!("{:.3}", midpoint_alignment(params)),
+        ]);
+    }
+    rep.add(t)
+}
+
+/// Accuracy by which worker straggled (S=1): shows the endpoint/midpoint
+/// structure of the decode error — needs artifacts.
+pub fn drop_position(ctx: &mut FigureContext, rep: &mut Report) -> Result<()> {
+    use crate::workers::InferenceEngine;
+    let (arch, ds, k) = ("resnet18_s", "synmnist", 8usize);
+    let params = CodeParams::new(k, 1, 0);
+    let code = crate::coding::ApproxIferCode::new(params);
+    let samples = ctx.samples.min(512);
+    // Manual batched evaluation, decoding once per forced drop position.
+    let ts = crate::data::TestSet::load(&ctx.manifest, ds)?;
+    let engine = ctx.engine(arch, ds)?;
+    let groups = samples / k;
+    let d = ts.payload();
+    let c = ts.num_classes;
+    let nw = params.num_workers();
+    let w = code.encode_matrix();
+    let mut preds: Vec<Vec<f32>> = Vec::with_capacity(nw);
+    for i in 0..nw {
+        let mut coded = vec![0.0f32; groups * d];
+        for g in 0..groups {
+            let out = &mut coded[g * d..(g + 1) * d];
+            for j in 0..k {
+                let wij = w[i * k + j];
+                for (acc, &x) in out.iter_mut().zip(ts.image(g * k + j)) {
+                    *acc += wij * x;
+                }
+            }
+        }
+        preds.push(engine.infer_batch(&coded, groups)?);
+    }
+    let mut t = Table::new(
+        "abl_drop_position",
+        "S=1 accuracy by which worker straggled (resnet18_s/synmnist, K=8)",
+        &["dropped_worker", "beta", "accuracy%"],
+    );
+    for drop in 0..nw {
+        let avail: Vec<usize> = (0..nw).filter(|&i| i != drop).collect();
+        let mut correct = 0usize;
+        for g in 0..groups {
+            let payloads: Vec<&[f32]> =
+                avail.iter().map(|&i| &preds[i][g * c..(g + 1) * c]).collect();
+            let decoded = code.decode(&avail, &payloads);
+            for (j, pred) in decoded.iter().enumerate() {
+                let arg = pred
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(t, _)| t)
+                    .unwrap();
+                if arg as i32 == ts.labels[g * k + j] {
+                    correct += 1;
+                }
+            }
+        }
+        t.row(&[
+            drop.to_string(),
+            format!("{:+.3}", code.beta()[drop]),
+            pct(correct as f64 / (groups * k) as f64),
+        ]);
+    }
+    rep.add(t)
+}
+
+/// Run all ablations (conditioning + locator are artifact-free).
+pub fn run(ctx: &mut FigureContext, rep: &mut Report) -> Result<()> {
+    conditioning(rep)?;
+    locator_methods(rep, 200, ctx.seed)?;
+    drop_position(ctx, rep)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conditioning_table_builds() {
+        let mut rep = Report::new(None);
+        conditioning(&mut rep).unwrap();
+        assert_eq!(rep.tables.len(), 1);
+        assert_eq!(rep.tables[0].rows.len(), 5);
+    }
+
+    #[test]
+    fn locator_ablation_high_hit_rates() {
+        let mut rep = Report::new(None);
+        locator_methods(&mut rep, 40, 3).unwrap();
+        let t = &rep.tables[0];
+        for row in &t.rows {
+            let pinned: f64 = row[3].parse().unwrap();
+            assert!(pinned > 80.0, "pinned hit rate {row:?}");
+        }
+    }
+}

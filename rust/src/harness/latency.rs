@@ -1,0 +1,179 @@
+//! End-to-end latency/throughput experiment (the paper's §1 motivation:
+//! coded redundancy cuts tail latency at a fraction of replication's
+//! worker cost). Drives the *online* service — real worker threads with
+//! injected straggler tails — for ApproxIFER, replication and a
+//! no-redundancy baseline, and reports p50/p99/throughput per strategy.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::coding::replication::ReplicationParams;
+use crate::coding::CodeParams;
+use crate::coordinator::{FaultPlan, GroupPipeline, ReplicationPipeline};
+use crate::metrics::ServingMetrics;
+use crate::util::rng::Rng;
+use crate::util::stats::Summary;
+use crate::workers::{InferenceEngine, LatencyModel, WorkerPool, WorkerSpec};
+
+use super::report::{Report, Table};
+
+/// One strategy's measured latency profile.
+pub struct LatencyRow {
+    pub name: String,
+    pub workers: usize,
+    pub latency: Summary,
+}
+
+/// Run `groups` K-groups through the ApproxIFER pipeline with the given
+/// per-worker latency model; returns per-group latency samples.
+pub fn approxifer_latency(
+    engine: Arc<dyn InferenceEngine>,
+    params: CodeParams,
+    latency: LatencyModel,
+    groups: usize,
+    seed: u64,
+) -> Result<LatencyRow> {
+    let specs = vec![WorkerSpec { latency }; params.num_workers()];
+    let pool = WorkerPool::spawn(engine.clone(), &specs, seed);
+    let mut pipe = GroupPipeline::new(params);
+    let metrics = ServingMetrics::new();
+    let d = engine.payload();
+    let mut samples = Vec::with_capacity(groups);
+    let queries = smooth_group(params.k, d);
+    let qrefs: Vec<&[f32]> = queries.iter().map(|q| &q[..]).collect();
+    for _ in 0..groups {
+        let out = pipe.infer_group(&pool, &qrefs, &FaultPlan::none(), &metrics)?;
+        samples.push(out.latency.as_secs_f64());
+    }
+    pool.shutdown();
+    Ok(LatencyRow {
+        name: format!("approxifer(K={},S={},E={})", params.k, params.s, params.e),
+        workers: params.num_workers(),
+        latency: Summary::of(&samples),
+    })
+}
+
+/// Same workload through proactive replication.
+pub fn replication_latency(
+    engine: Arc<dyn InferenceEngine>,
+    params: ReplicationParams,
+    latency: LatencyModel,
+    groups: usize,
+    seed: u64,
+) -> Result<LatencyRow> {
+    let specs = vec![WorkerSpec { latency }; params.num_workers()];
+    let pool = WorkerPool::spawn(engine.clone(), &specs, seed);
+    let mut pipe = ReplicationPipeline::new(params);
+    let metrics = ServingMetrics::new();
+    let d = engine.payload();
+    let queries = smooth_group(params.k, d);
+    let qrefs: Vec<&[f32]> = queries.iter().map(|q| &q[..]).collect();
+    let mut samples = Vec::with_capacity(groups);
+    for _ in 0..groups {
+        let t0 = std::time::Instant::now();
+        pipe.infer_group(&pool, &qrefs, &FaultPlan::none(), &metrics)?;
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    pool.shutdown();
+    Ok(LatencyRow {
+        name: format!("replication(K={},copies={})", params.k, params.copies()),
+        workers: params.num_workers(),
+        latency: Summary::of(&samples),
+    })
+}
+
+/// No-redundancy baseline: K workers, wait for all K (tail dominated).
+pub fn no_redundancy_latency(
+    engine: Arc<dyn InferenceEngine>,
+    k: usize,
+    latency: LatencyModel,
+    groups: usize,
+    seed: u64,
+) -> Result<LatencyRow> {
+    // Replication with S=0 copies=1 is exactly "send each query once, wait
+    // for every reply".
+    let params = ReplicationParams::new(k, 0, 0);
+    let mut row = replication_latency(engine, params, latency, groups, seed)?;
+    row.name = format!("no-redundancy(K={k})");
+    Ok(row)
+}
+
+fn smooth_group(k: usize, d: usize) -> Vec<Vec<f32>> {
+    (0..k)
+        .map(|j| (0..d).map(|t| ((j as f32) * 0.31 + (t as f32) * 0.017).sin()).collect())
+        .collect()
+}
+
+/// The full latency experiment: three strategies under an exponential
+/// straggler tail, equal per-query work.
+pub fn run(rep: &mut Report, groups: usize, seed: u64) -> Result<()> {
+    let _ = Rng::new(seed); // reserved for future per-run jitter
+    let k = 8;
+    let (d, c) = (128, 10);
+    let compute = Duration::from_micros(300);
+    let tail = LatencyModel::Exponential { mean_ms: 3.0 };
+    let engine: Arc<dyn InferenceEngine> =
+        Arc::new(crate::workers::DelayMockEngine::new(d, c, compute));
+    let mut t = Table::new(
+        "latency",
+        "Group latency under exp(3ms) worker tail + 0.3ms compute (lower is better)",
+        &["strategy", "workers", "p50_ms", "p99_ms", "mean_ms"],
+    );
+    let rows = vec![
+        no_redundancy_latency(engine.clone(), k, tail, groups, seed)?,
+        approxifer_latency(engine.clone(), CodeParams::new(k, 1, 0), tail, groups, seed)?,
+        approxifer_latency(engine.clone(), CodeParams::new(k, 2, 0), tail, groups, seed)?,
+        replication_latency(engine.clone(), ReplicationParams::new(k, 1, 0), tail, groups, seed)?,
+    ];
+    for r in rows {
+        t.row(&[
+            r.name.clone(),
+            r.workers.to_string(),
+            format!("{:.2}", r.latency.p50 * 1e3),
+            format!("{:.2}", r.latency.p99 * 1e3),
+            format!("{:.2}", r.latency.mean * 1e3),
+        ]);
+    }
+    rep.add(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workers::LinearMockEngine;
+
+    #[test]
+    fn approxifer_beats_no_redundancy_tail() {
+        // With an exponential tail, waiting for K of K+S beats waiting for
+        // K of K. Small group count keeps the test fast; the effect is
+        // large enough to be stable.
+        let engine: Arc<dyn InferenceEngine> = Arc::new(LinearMockEngine::new(16, 4));
+        let tail = LatencyModel::Exponential { mean_ms: 2.0 };
+        let a =
+            approxifer_latency(engine.clone(), CodeParams::new(4, 2, 0), tail, 30, 5).unwrap();
+        let n = no_redundancy_latency(engine, 4, tail, 30, 5).unwrap();
+        assert!(
+            a.latency.p90 < n.latency.p90 * 1.1,
+            "approxifer p90 {:.4} vs none {:.4}",
+            a.latency.p90,
+            n.latency.p90
+        );
+    }
+
+    #[test]
+    fn worker_counts_in_rows() {
+        let engine: Arc<dyn InferenceEngine> = Arc::new(LinearMockEngine::new(8, 3));
+        let r = approxifer_latency(
+            engine,
+            CodeParams::new(4, 1, 0),
+            LatencyModel::None,
+            3,
+            1,
+        )
+        .unwrap();
+        assert_eq!(r.workers, 5);
+        assert_eq!(r.latency.count, 3);
+    }
+}

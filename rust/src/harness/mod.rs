@@ -1,0 +1,14 @@
+//! Experiment harness: regenerates every figure and table in the paper's
+//! evaluation (DESIGN.md §5 maps figure ids to drivers) plus the latency
+//! experiment, writing paper-style tables to stdout and CSVs for
+//! EXPERIMENTS.md.
+
+pub mod ablation;
+pub mod accuracy;
+pub mod figures;
+pub mod latency;
+pub mod report;
+
+pub use accuracy::{approxifer_accuracy, base_accuracy, parm_worst_accuracy, AccuracyReport};
+pub use figures::FigureContext;
+pub use report::{Report, Table};

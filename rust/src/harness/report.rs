@@ -1,0 +1,142 @@
+//! Experiment report collection: accumulates rows per experiment, prints
+//! paper-style tables to stdout and writes CSVs under an output directory
+//! (consumed when updating EXPERIMENTS.md).
+
+use std::fs;
+use std::io::Write;
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+/// One experiment's table under construction.
+pub struct Table {
+    pub id: String,
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(id: &str, title: &str, columns: &[&str]) -> Table {
+        Table {
+            id: id.to_string(),
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.columns.len(), "row arity mismatch in {}", self.id);
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Markdown-ish fixed-width rendering.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+        let mut out = format!("== {} — {} ==\n", self.id, self.title);
+        let hdr: Vec<String> = self
+            .columns
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{c:>w$}", w = widths[i]))
+            .collect();
+        out.push_str(&hdr.join("  "));
+        out.push('\n');
+        for row in &self.rows {
+            let line: Vec<String> = row
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{c:>w$}", w = widths[i]))
+                .collect();
+            out.push_str(&line.join("  "));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = self.columns.join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Collects tables and flushes them to stdout + CSV files.
+pub struct Report {
+    outdir: Option<PathBuf>,
+    pub tables: Vec<Table>,
+}
+
+impl Report {
+    pub fn new(outdir: Option<&str>) -> Report {
+        Report { outdir: outdir.map(PathBuf::from), tables: Vec::new() }
+    }
+
+    pub fn add(&mut self, table: Table) -> Result<()> {
+        println!("{}", table.render());
+        if let Some(dir) = &self.outdir {
+            fs::create_dir_all(dir).with_context(|| format!("creating {dir:?}"))?;
+            let path = dir.join(format!("{}.csv", table.id));
+            let mut f = fs::File::create(&path)?;
+            f.write_all(table.to_csv().as_bytes())?;
+            log::info!("wrote {path:?}");
+        }
+        self.tables.push(table);
+        Ok(())
+    }
+}
+
+/// Format an accuracy as the paper plots it (percent, one decimal).
+pub fn pct(x: f64) -> String {
+    format!("{:.1}", x * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_and_csvs() {
+        let mut t = Table::new("fig5", "accuracy", &["dataset", "approxifer", "parm"]);
+        t.row(&["synmnist".into(), "93.1".into(), "74.0".into()]);
+        let r = t.render();
+        assert!(r.contains("fig5"));
+        assert!(r.contains("93.1"));
+        let csv = t.to_csv();
+        assert!(csv.starts_with("dataset,approxifer,parm\n"));
+        assert!(csv.contains("synmnist,93.1,74.0\n"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_arity_checked() {
+        let mut t = Table::new("x", "y", &["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn report_writes_csv_files() {
+        let dir = std::env::temp_dir().join(format!("rep_{}", std::process::id()));
+        let mut rep = Report::new(Some(dir.to_str().unwrap()));
+        let mut t = Table::new("t1", "test", &["c"]);
+        t.row(&["v".into()]);
+        rep.add(t).unwrap();
+        assert!(dir.join("t1.csv").exists());
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn pct_formats() {
+        assert_eq!(pct(0.9312), "93.1");
+    }
+}

@@ -1,0 +1,43 @@
+//! # ApproxIFER — model-agnostic resilient & robust prediction serving
+//!
+//! A reproduction of *ApproxIFER: A Model-Agnostic Approach to Resilient and
+//! Robust Prediction Serving Systems* (Soleymani, Mahdavifar, Ali,
+//! Avestimehr — AAAI 2022), built as a three-layer rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the serving coordinator: request batching
+//!   into `K`-groups, Berrut rational encoding of queries, fan-out to `N+1`
+//!   workers (each running the *same* hosted model via PJRT), fastest-subset
+//!   collection, Byzantine error location (Algorithms 1–2) and Berrut
+//!   decoding, plus replication and ParM-proxy baselines, a TCP front-end,
+//!   metrics and the experiment harness that regenerates every figure in the
+//!   paper.
+//! * **Layer 2** — the hosted models: pure-JAX CNN classifiers, trained at
+//!   build time and lowered AOT to HLO text (`python/compile/`).
+//! * **Layer 1** — Pallas kernels for the compute hot spots (tiled matmul
+//!   classifier head, Berrut combine), verified against pure-`jnp` oracles.
+//!
+//! Python never runs on the request path: the rust binary loads the AOT
+//! artifacts and serves autonomously.
+//!
+//! Quickstart (after `make artifacts`):
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! cargo run --release -- figures --only fig5
+//! ```
+
+pub mod cli;
+pub mod coding;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod harness;
+pub mod linalg;
+pub mod metrics;
+pub mod runtime;
+pub mod server;
+pub mod sim;
+pub mod tensor;
+pub mod testing;
+pub mod util;
+pub mod workers;

@@ -1,0 +1,193 @@
+//! Homogeneous least-squares: `argmin_{‖x‖=1} ‖A·x‖₂` — the smallest right
+//! singular vector of `A`.
+//!
+//! This is the *pure* form of the paper's Algorithm 1 (Step 1 finds a
+//! non-trivial solution of the homogeneous system `P(β_i) − y_i Q(β_i) = 0`).
+//! The production locator uses the pinned-`Q₀=1` inhomogeneous variant
+//! (paper's Algorithm 2) solved with QR; this module provides the homogeneous
+//! variant both as a fallback when the pinned system is singular and as the
+//! ablation comparator (`bench_locator --ablation`).
+//!
+//! Method: one-sided Jacobi SVD on `A` (orthogonalize column pairs of a
+//! working copy with Givens-like rotations until convergence); the right
+//! singular vectors accumulate in `V`, and the smallest singular value's
+//! column of `V` is the answer. Matrices here are at most ~60×30, so the
+//! O(n³)·sweeps cost is negligible and robustness is what matters.
+
+use super::mat::{norm2, Mat};
+use super::qr::LinalgError;
+
+/// Full set of singular values (descending) and right singular vectors.
+pub struct Svd {
+    /// Singular values, descending.
+    pub sigma: Vec<f64>,
+    /// n×n: column j is the right singular vector for `sigma[j]`.
+    pub v: Mat,
+}
+
+/// One-sided Jacobi SVD (values + right vectors only). `a` is m×n with m ≥ n.
+pub fn svd_right(a: &Mat) -> Result<Svd, LinalgError> {
+    let (m, n) = (a.rows(), a.cols());
+    if m < n {
+        return Err(LinalgError::Dims(format!("svd_right needs m>=n, got {m}x{n}")));
+    }
+    // Work on columns of U = A (m×n), accumulate V (n×n).
+    let mut u = a.clone();
+    let mut v = Mat::eye(n);
+    let eps = 1e-15;
+    let max_sweeps = 60;
+    let mut converged = false;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for p in 0..n {
+            for q in (p + 1)..n {
+                // Gram entries for the (p,q) column pair.
+                let (mut app, mut aqq, mut apq) = (0.0, 0.0, 0.0);
+                for i in 0..m {
+                    let (x, y) = (u[(i, p)], u[(i, q)]);
+                    app += x * x;
+                    aqq += y * y;
+                    apq += x * y;
+                }
+                let denom = (app * aqq).sqrt();
+                if denom > 0.0 {
+                    off = off.max(apq.abs() / denom);
+                }
+                if apq.abs() <= eps * denom {
+                    continue;
+                }
+                // Jacobi rotation that zeroes the (p,q) Gram entry.
+                let tau = (aqq - app) / (2.0 * apq);
+                let t = tau.signum() / (tau.abs() + (1.0 + tau * tau).sqrt());
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = c * t;
+                for i in 0..m {
+                    let (x, y) = (u[(i, p)], u[(i, q)]);
+                    u[(i, p)] = c * x - s * y;
+                    u[(i, q)] = s * x + c * y;
+                }
+                for i in 0..n {
+                    let (x, y) = (v[(i, p)], v[(i, q)]);
+                    v[(i, p)] = c * x - s * y;
+                    v[(i, q)] = s * x + c * y;
+                }
+            }
+        }
+        if off < 1e-14 {
+            converged = true;
+            break;
+        }
+    }
+    if !converged {
+        // Jacobi always makes progress; for our tiny matrices this is
+        // effectively unreachable, but surface it rather than silently
+        // returning garbage.
+        return Err(LinalgError::NoConverge("jacobi svd exceeded sweep limit".into()));
+    }
+    // Singular values are the column norms of the rotated U.
+    let mut order: Vec<usize> = (0..n).collect();
+    let sig: Vec<f64> = (0..n)
+        .map(|j| {
+            let col: Vec<f64> = (0..m).map(|i| u[(i, j)]).collect();
+            norm2(&col)
+        })
+        .collect();
+    order.sort_by(|&a, &b| sig[b].partial_cmp(&sig[a]).unwrap());
+    let sigma: Vec<f64> = order.iter().map(|&j| sig[j]).collect();
+    let vperm = Mat::from_fn(n, n, |i, j| v[(i, order[j])]);
+    Ok(Svd { sigma, v: vperm })
+}
+
+/// `argmin_{‖x‖=1} ‖A·x‖` — the right singular vector of the smallest
+/// singular value.
+pub fn min_norm_solution(a: &Mat) -> Result<Vec<f64>, LinalgError> {
+    let svd = svd_right(a)?;
+    let n = a.cols();
+    let j = n - 1;
+    Ok((0..n).map(|i| svd.v[(i, j)]).collect())
+}
+
+/// 2-norm condition number estimate σ_max/σ_min.
+pub fn cond2(a: &Mat) -> Result<f64, LinalgError> {
+    let svd = svd_right(a)?;
+    let smin = *svd.sigma.last().unwrap();
+    Ok(if smin == 0.0 { f64::INFINITY } else { svd.sigma[0] / smin })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{assert_close, forall};
+
+    #[test]
+    fn svd_of_diagonal() {
+        let a = Mat::from_rows(3, 3, &[3.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 2.0]);
+        let s = svd_right(&a).unwrap();
+        assert_close(s.sigma[0], 3.0, 1e-12);
+        assert_close(s.sigma[1], 2.0, 1e-12);
+        assert_close(s.sigma[2], 1.0, 1e-12);
+    }
+
+    #[test]
+    fn min_norm_solution_annihilates_rank_deficient() {
+        // Columns: c2 = 2*c1 → nullspace direction (2, -1)/√5.
+        let a = Mat::from_rows(3, 2, &[1.0, 2.0, -1.0, -2.0, 0.5, 1.0]);
+        let x = min_norm_solution(&a).unwrap();
+        let ax = a.matvec(&x);
+        assert!(norm2(&ax) < 1e-12, "Ax = {ax:?}");
+        assert_close(norm2(&x), 1.0, 1e-12);
+    }
+
+    #[test]
+    fn singular_values_match_gram_eigenvalues() {
+        forall("svd-gram", 30, |g| {
+            let m = g.usize_in(2, 10);
+            let n = g.usize_in(1, m.min(6));
+            let a = Mat::from_fn(m, n, |_, _| g.f64_in(-4.0, 4.0));
+            let s = svd_right(&a).unwrap();
+            // ‖A‖_F² = Σ σᵢ².
+            let fro2: f64 = a.fro_norm().powi(2);
+            let sig2: f64 = s.sigma.iter().map(|x| x * x).sum();
+            assert_close(fro2, sig2, 1e-9);
+            // Descending.
+            for w in s.sigma.windows(2) {
+                assert!(w[0] >= w[1] - 1e-12);
+            }
+        });
+    }
+
+    #[test]
+    fn right_vectors_are_orthonormal() {
+        forall("svd-v-orthonormal", 30, |g| {
+            let m = g.usize_in(3, 10);
+            let n = g.usize_in(1, m.min(5));
+            let a = Mat::from_fn(m, n, |_, _| g.f64_in(-4.0, 4.0));
+            let s = svd_right(&a).unwrap();
+            let vtv = s.v.t().matmul(&s.v);
+            for i in 0..n {
+                for j in 0..n {
+                    let expect = if i == j { 1.0 } else { 0.0 };
+                    assert_close(vtv[(i, j)], expect, 1e-9);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn min_norm_residual_is_smallest_singular_value() {
+        forall("svd-min-residual", 30, |g| {
+            let m = g.usize_in(3, 10);
+            let n = g.usize_in(2, m.min(5));
+            let a = Mat::from_fn(m, n, |_, _| g.f64_in(-4.0, 4.0));
+            let s = svd_right(&a).unwrap();
+            let x = min_norm_solution(&a).unwrap();
+            let res = norm2(&a.matvec(&x));
+            assert_close(res, *s.sigma.last().unwrap(), 1e-8);
+        });
+    }
+
+    #[test]
+    fn cond2_of_identity_is_one() {
+        assert_close(cond2(&Mat::eye(4)).unwrap(), 1.0, 1e-12);
+    }
+}

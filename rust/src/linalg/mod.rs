@@ -1,0 +1,12 @@
+//! Dense linear-algebra substrate (no external crates): row-major `Mat`,
+//! Householder QR least-squares, and one-sided Jacobi SVD / homogeneous
+//! solver. Sized and tuned for the decoder's error-locator systems
+//! (tens of rows/columns, f64).
+
+pub mod homogeneous;
+pub mod mat;
+pub mod qr;
+
+pub use homogeneous::{cond2, min_norm_solution, svd_right, Svd};
+pub use mat::{dot, norm2, Mat};
+pub use qr::{lstsq, LinalgError, Qr};

@@ -1,0 +1,222 @@
+//! Householder QR factorization and least-squares solver.
+//!
+//! This is the numerical core behind the paper's error-locator
+//! (Algorithm 1 / Algorithm 2): the system `P(β_i) = y_i·Q(β_i)` with
+//! `Q`'s constant coefficient pinned to 1 becomes an overdetermined
+//! *inhomogeneous* least-squares problem, solved here via Householder QR
+//! (numerically stable for the moderately ill-conditioned Chebyshev
+//! Vandermonde blocks the locator produces).
+
+use super::mat::Mat;
+
+/// Compact Householder QR of an `m×n` matrix with `m ≥ n`:
+/// stores the reflectors in-place plus R's diagonal separately.
+pub struct Qr {
+    /// m×n: strict upper triangle = R (above diag), lower triangle +
+    /// `diag` slot = Householder vectors.
+    qr: Mat,
+    /// R's diagonal.
+    rdiag: Vec<f64>,
+}
+
+/// Errors from the linear-algebra layer.
+#[derive(Debug, thiserror::Error)]
+pub enum LinalgError {
+    #[error("matrix is rank-deficient (|r[{col}][{col}]| = {value:.3e} below tol {tol:.3e})")]
+    RankDeficient { col: usize, value: f64, tol: f64 },
+    #[error("dimension mismatch: {0}")]
+    Dims(String),
+    #[error("iteration failed to converge: {0}")]
+    NoConverge(String),
+}
+
+impl Qr {
+    /// Factor `a` (m×n, m ≥ n).
+    pub fn factor(a: &Mat) -> Result<Qr, LinalgError> {
+        let (m, n) = (a.rows(), a.cols());
+        if m < n {
+            return Err(LinalgError::Dims(format!("QR needs m>=n, got {m}x{n}")));
+        }
+        let mut qr = a.clone();
+        let mut rdiag = vec![0.0; n];
+        for k in 0..n {
+            // Norm of column k below the diagonal.
+            let mut nrm = 0.0;
+            for i in k..m {
+                nrm = hypot(nrm, qr[(i, k)]);
+            }
+            if nrm == 0.0 {
+                rdiag[k] = 0.0;
+                continue;
+            }
+            let mut nrm = nrm;
+            if qr[(k, k)] < 0.0 {
+                nrm = -nrm;
+            }
+            for i in k..m {
+                qr[(i, k)] /= nrm;
+            }
+            qr[(k, k)] += 1.0;
+            // Apply the reflector to the remaining columns.
+            for j in (k + 1)..n {
+                let mut s = 0.0;
+                for i in k..m {
+                    s += qr[(i, k)] * qr[(i, j)];
+                }
+                s = -s / qr[(k, k)];
+                for i in k..m {
+                    let vik = qr[(i, k)];
+                    qr[(i, j)] += s * vik;
+                }
+            }
+            rdiag[k] = -nrm;
+        }
+        Ok(Qr { qr, rdiag })
+    }
+
+    /// Minimum of |R_kk| over the diagonal — a cheap rank/conditioning probe.
+    pub fn min_rdiag(&self) -> f64 {
+        self.rdiag.iter().fold(f64::INFINITY, |m, x| m.min(x.abs()))
+    }
+
+    /// Solve least squares `min ‖A·x − b‖₂`. Errors if R is numerically
+    /// singular (relative tolerance on R's diagonal).
+    pub fn solve(&self, b: &[f64]) -> Result<Vec<f64>, LinalgError> {
+        let (m, n) = (self.qr.rows(), self.qr.cols());
+        if b.len() != m {
+            return Err(LinalgError::Dims(format!("rhs length {} != rows {m}", b.len())));
+        }
+        let max_r = self.rdiag.iter().fold(0.0f64, |mx, x| mx.max(x.abs()));
+        let tol = max_r * 1e-13;
+        let mut y = b.to_vec();
+        // Apply Qᵀ.
+        for k in 0..n {
+            if self.qr[(k, k)] == 0.0 {
+                continue;
+            }
+            let mut s = 0.0;
+            for i in k..m {
+                s += self.qr[(i, k)] * y[i];
+            }
+            s = -s / self.qr[(k, k)];
+            for i in k..m {
+                y[i] += s * self.qr[(i, k)];
+            }
+        }
+        // Back-substitute R x = y[..n].
+        let mut x = vec![0.0; n];
+        for k in (0..n).rev() {
+            let r = self.rdiag[k];
+            if r.abs() <= tol {
+                return Err(LinalgError::RankDeficient { col: k, value: r.abs(), tol });
+            }
+            let mut s = y[k];
+            for j in (k + 1)..n {
+                s -= self.qr[(k, j)] * x[j];
+            }
+            x[k] = s / r;
+        }
+        Ok(x)
+    }
+}
+
+/// One-shot least squares: `argmin_x ‖A·x − b‖₂` via Householder QR.
+pub fn lstsq(a: &Mat, b: &[f64]) -> Result<Vec<f64>, LinalgError> {
+    Qr::factor(a)?.solve(b)
+}
+
+/// Robust hypot (avoids overflow for the column norms).
+fn hypot(a: f64, b: f64) -> f64 {
+    let (a, b) = (a.abs(), b.abs());
+    let (hi, lo) = if a > b { (a, b) } else { (b, a) };
+    if hi == 0.0 {
+        0.0
+    } else {
+        let r = lo / hi;
+        hi * (1.0 + r * r).sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::mat::norm2;
+    use crate::testing::{assert_allclose, forall};
+
+    #[test]
+    fn solves_square_system_exactly() {
+        // x + 2y = 5 ; 3x + 4y = 11 → x=1, y=2
+        let a = Mat::from_rows(2, 2, &[1.0, 2.0, 3.0, 4.0]);
+        let x = lstsq(&a, &[5.0, 11.0]).unwrap();
+        assert_allclose(&x, &[1.0, 2.0], 1e-12);
+    }
+
+    #[test]
+    fn least_squares_residual_orthogonal_to_columns() {
+        forall("lstsq-orthogonal-residual", 50, |g| {
+            let m = g.usize_in(3, 12);
+            let n = g.usize_in(1, m.min(6));
+            let a = Mat::from_fn(m, n, |_, _| g.f64_in(-5.0, 5.0));
+            let b = g.vec_f64(m, -5.0, 5.0);
+            let x = match lstsq(&a, &b) {
+                Ok(x) => x,
+                Err(LinalgError::RankDeficient { .. }) => return, // fine for random A
+                Err(e) => panic!("{e}"),
+            };
+            let ax = a.matvec(&x);
+            let r: Vec<f64> = ax.iter().zip(&b).map(|(p, q)| p - q).collect();
+            // Residual must be orthogonal to every column of A.
+            let at = a.t();
+            for j in 0..n {
+                let d: f64 = at.row(j).iter().zip(&r).map(|(c, rr)| c * rr).sum();
+                let scale = norm2(at.row(j)) * norm2(&r) + 1.0;
+                assert!(d.abs() / scale < 1e-9, "col {j}: dot {d}");
+            }
+        });
+    }
+
+    #[test]
+    fn recovers_exact_solution_for_consistent_overdetermined() {
+        forall("lstsq-consistent", 50, |g| {
+            let m = g.usize_in(4, 14);
+            let n = g.usize_in(1, 4);
+            let a = Mat::from_fn(m, n, |_, _| g.f64_in(-3.0, 3.0));
+            let xtrue = g.vec_f64(n, -3.0, 3.0);
+            let b = a.matvec(&xtrue);
+            match lstsq(&a, &b) {
+                Ok(x) => assert_allclose(&x, &xtrue, 1e-8),
+                Err(LinalgError::RankDeficient { .. }) => {}
+                Err(e) => panic!("{e}"),
+            }
+        });
+    }
+
+    #[test]
+    fn rank_deficient_is_detected() {
+        // Second column is 2× the first.
+        let a = Mat::from_rows(3, 2, &[1.0, 2.0, 2.0, 4.0, 3.0, 6.0]);
+        assert!(matches!(
+            lstsq(&a, &[1.0, 2.0, 3.0]),
+            Err(LinalgError::RankDeficient { .. })
+        ));
+    }
+
+    #[test]
+    fn wrong_rhs_length_is_dims_error() {
+        let a = Mat::eye(3);
+        assert!(matches!(lstsq(&a, &[1.0, 2.0]), Err(LinalgError::Dims(_))));
+    }
+
+    #[test]
+    fn underdetermined_rejected() {
+        let a = Mat::zeros(2, 3);
+        assert!(matches!(Qr::factor(&a), Err(LinalgError::Dims(_))));
+    }
+
+    #[test]
+    fn hypot_no_overflow() {
+        let h = hypot(1e200, 1e200);
+        assert!(h.is_finite());
+        assert!((h - 1e200 * std::f64::consts::SQRT_2).abs() / h < 1e-12);
+    }
+}

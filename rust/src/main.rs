@@ -1,0 +1,242 @@
+//! ApproxIFER launcher.
+//!
+//! ```text
+//! approxifer serve    [--config path] [--set k=v]...      # TCP serving front
+//! approxifer infer    [--config path] [--set k=v]... [--samples N]
+//!                                                         # offline smoke inference
+//! approxifer figures  [--only figN] [--samples N] [--out DIR] [--seed S]
+//!                                                         # regenerate paper figures
+//! approxifer latency  [--groups N] [--out DIR]            # latency experiment
+//! approxifer golden                                        # cross-language goldens check
+//! approxifer info                                          # artifact inventory
+//! ```
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use approxifer::cli::{Args, Spec};
+use approxifer::config::AppConfig;
+use approxifer::coordinator::{Service, ServiceConfig, Strategy};
+use approxifer::data::{Golden, TestSet};
+use approxifer::harness::{self, FigureContext, Report};
+use approxifer::runtime::{CompiledModel, Manifest, Runtime};
+use approxifer::server::Server;
+use approxifer::util::logging;
+use approxifer::workers::{PjrtEngine, WorkerSpec};
+
+const USAGE: &str = "usage: approxifer <serve|infer|figures|latency|golden|info> [flags]
+  common: --config FILE  --set section.key=value (repeatable)  --artifacts DIR
+  figures: --only ID  --samples N  --out DIR  --seed S
+  latency: --groups N  --out DIR
+  infer:   --samples N";
+
+fn main() {
+    logging::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&argv) {
+        eprintln!("error: {e:#}");
+        eprintln!("{USAGE}");
+        std::process::exit(1);
+    }
+}
+
+fn run(argv: &[String]) -> Result<()> {
+    let spec = Spec::new(&[
+        ("config", true),
+        ("set", true),
+        ("artifacts", true),
+        ("only", true),
+        ("samples", true),
+        ("out", true),
+        ("seed", true),
+        ("groups", true),
+        ("help", false),
+    ]);
+    let args = Args::parse(argv, &spec).map_err(|e| anyhow::anyhow!("{e}"))?;
+    if args.has("help") || args.subcommand.is_none() {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    let overrides = args.get_all("set");
+    let mut cfg = AppConfig::load(args.get("config"), &overrides)?;
+    if let Some(a) = args.get("artifacts") {
+        cfg.artifacts = a.to_string();
+    }
+    match args.subcommand.as_deref().unwrap() {
+        "serve" => serve(&cfg),
+        "infer" => infer(&cfg, args.get_usize("samples", 64)?),
+        "figures" => {
+            let samples = args.get_usize("samples", 512)?;
+            let seed = args.get_u64("seed", 20220807)?;
+            let mut ctx = FigureContext::new(&cfg.artifacts, samples, seed)?;
+            let mut rep = Report::new(args.get("out"));
+            harness::figures::run(&mut ctx, &mut rep, args.get("only"))
+        }
+        "latency" => {
+            let groups = args.get_usize("groups", 200)?;
+            let mut rep = Report::new(args.get("out"));
+            harness::latency::run(&mut rep, groups, args.get_u64("seed", 7)?)
+        }
+        "golden" => golden(&cfg),
+        "info" => info(&cfg),
+        other => bail!("unknown subcommand '{other}'"),
+    }
+}
+
+/// Build the online service over the configured PJRT model.
+fn build_service(cfg: &AppConfig) -> Result<(Arc<Service>, usize)> {
+    if cfg.strategy != Strategy::ApproxIfer {
+        bail!(
+            "online serving currently runs the ApproxIFER strategy; use the \
+             harness for baseline comparisons"
+        );
+    }
+    let manifest = Manifest::load(&cfg.artifacts)?;
+    let rt = Runtime::cpu()?;
+    let entry = manifest.model(&cfg.arch, &cfg.dataset, 1)?;
+    let model = CompiledModel::load(&rt, &manifest.root, entry)?;
+    let payload = model.payload();
+    let engine = Arc::new(PjrtEngine::new(model));
+    let mut svc_cfg = ServiceConfig::new(cfg.params);
+    svc_cfg.flush_after = cfg.flush_after;
+    svc_cfg.worker_specs =
+        vec![WorkerSpec { latency: cfg.worker_latency }; cfg.params.num_workers()];
+    svc_cfg.straggler_rate = cfg.straggler_rate;
+    svc_cfg.straggler_delay = cfg.straggler_delay;
+    svc_cfg.byz_mode = cfg.byz_mode;
+    svc_cfg.seed = cfg.seed;
+    Ok((Arc::new(Service::start(engine, svc_cfg)), payload))
+}
+
+fn serve(cfg: &AppConfig) -> Result<()> {
+    let (service, payload) = build_service(cfg)?;
+    let server = Server::start(&cfg.bind, service.clone(), payload)?;
+    println!(
+        "approxifer serving {}/{} K={} S={} E={} ({} workers) on {}",
+        cfg.arch,
+        cfg.dataset,
+        cfg.params.k,
+        cfg.params.s,
+        cfg.params.e,
+        cfg.params.num_workers(),
+        server.addr()
+    );
+    // Serve until killed; dump metrics every 30s.
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(30));
+        println!("{}", service.metrics.report());
+    }
+}
+
+fn infer(cfg: &AppConfig, samples: usize) -> Result<()> {
+    let manifest = Manifest::load(&cfg.artifacts)?;
+    let testset = TestSet::load(&manifest, &cfg.dataset)?;
+    let (service, _payload) = build_service(cfg)?;
+    let n = samples.min(testset.len());
+    let t0 = std::time::Instant::now();
+    let handles: Vec<_> =
+        (0..n).map(|i| service.submit(testset.image(i).to_vec())).collect();
+    let mut correct = 0usize;
+    for (i, h) in handles.into_iter().enumerate() {
+        let pred = h.wait()?;
+        let arg = pred
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(j, _)| j)
+            .unwrap();
+        if arg as i32 == testset.labels[i] {
+            correct += 1;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "served {n} queries in {wall:.2}s ({:.1} q/s): coded accuracy {:.2}% (base {:.2}%)",
+        n as f64 / wall,
+        100.0 * correct as f64 / n as f64,
+        100.0 * manifest.model(&cfg.arch, &cfg.dataset, 1)?.base_test_acc,
+    );
+    println!("{}", service.metrics.report());
+    Ok(())
+}
+
+/// Verify the rust coding implementation bit-near against the python-exported
+/// golden vectors (encode matrix, coded payloads, decode matrix, decodes).
+fn golden(cfg: &AppConfig) -> Result<()> {
+    use approxifer::coding::{ApproxIferCode, CodeParams};
+    let manifest = Manifest::load(&cfg.artifacts)?;
+    anyhow::ensure!(!manifest.golden.is_empty(), "no golden entries in manifest");
+    for entry in &manifest.golden {
+        let g = Golden::load(&manifest, entry)
+            .with_context(|| format!("loading golden {}", entry.tag))?;
+        let code = ApproxIferCode::new(CodeParams::new(g.k, g.s, g.e));
+        // Encode matrix must match python's.
+        let w = code.encode_matrix();
+        anyhow::ensure!(w.len() == g.enc_w.len(), "{}: W size", entry.tag);
+        for (a, b) in w.iter().zip(g.enc_w.data()) {
+            anyhow::ensure!((a - b).abs() <= 1e-5, "{}: W entry {a} vs {b}", entry.tag);
+        }
+        // Encoding the golden queries must match.
+        let k = g.k;
+        let d = g.queries.shape()[1];
+        let queries: Vec<&[f32]> =
+            (0..k).map(|j| &g.queries.data()[j * d..(j + 1) * d]).collect();
+        let mut coded = vec![Vec::new(); code.params().num_workers()];
+        code.encode_into(&queries, &mut coded);
+        for (i, c) in coded.iter().enumerate() {
+            for (t, (a, b)) in
+                c.iter().zip(&g.coded.data()[i * d..(i + 1) * d]).enumerate()
+            {
+                anyhow::ensure!(
+                    (a - b).abs() <= 1e-4 * (1.0 + b.abs()),
+                    "{}: coded[{i}][{t}] {a} vs {b}",
+                    entry.tag
+                );
+            }
+        }
+        // Decoding python's coded payloads with python's availability set.
+        let payloads: Vec<&[f32]> =
+            g.avail.iter().map(|&i| &g.coded.data()[i * d..(i + 1) * d]).collect();
+        let decoded = code.decode(&g.avail, &payloads);
+        for j in 0..k {
+            for t in 0..d {
+                let a = decoded[j][t];
+                let b = g.decoded.data()[j * d + t];
+                anyhow::ensure!(
+                    (a - b).abs() <= 1e-3 * (1.0 + b.abs()),
+                    "{}: decoded[{j}][{t}] {a} vs {b}",
+                    entry.tag
+                );
+            }
+        }
+        println!("golden {}: OK (K={} S={} E={})", entry.tag, g.k, g.s, g.e);
+    }
+    println!("all {} golden sets match", manifest.golden.len());
+    Ok(())
+}
+
+fn info(cfg: &AppConfig) -> Result<()> {
+    let manifest = Manifest::load(&cfg.artifacts)?;
+    println!("artifacts at {:?}", manifest.root);
+    println!("models:");
+    for m in &manifest.models {
+        println!(
+            "  {}/{} b{} input={:?} params={} base_acc={:.4}",
+            m.arch, m.dataset, m.batch, m.input, m.param_count, m.base_test_acc
+        );
+    }
+    println!("datasets:");
+    for d in &manifest.datasets {
+        println!(
+            "  {} {}x{}x{}x{} classes={}",
+            d.name, d.count, d.height, d.width, d.channels, d.num_classes
+        );
+    }
+    println!("encoders:");
+    for e in &manifest.encoders {
+        println!("  k={} s={} d={} -> {}", e.k, e.s, e.payload, e.path);
+    }
+    println!("golden sets: {}", manifest.golden.len());
+    Ok(())
+}

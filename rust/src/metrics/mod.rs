@@ -1,0 +1,231 @@
+//! Serving metrics: counters and a log-bucketed latency histogram
+//! (hdrhistogram-lite; no external crates). Shared by the coordinator and
+//! the bench harness.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Monotonic counter.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub const fn new() -> Counter {
+        Counter(AtomicU64::new(0))
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Log-bucketed latency histogram: buckets at 1us·2^i, giving ~5% worst-case
+/// relative error on percentile reads over the range 1us..~18min.
+pub struct LatencyHistogram {
+    /// bucket i covers [2^i, 2^(i+1)) microseconds; 40 buckets + overflow.
+    buckets: [AtomicU64; 41],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    max_us: AtomicU64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> LatencyHistogram {
+        LatencyHistogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_us: AtomicU64::new(0),
+            max_us: AtomicU64::new(0),
+        }
+    }
+
+    /// Record a latency in seconds.
+    pub fn record(&self, seconds: f64) {
+        let us = (seconds * 1e6).max(0.0) as u64;
+        let idx = (64 - us.max(1).leading_zeros() as usize - 1).min(40);
+        self.buckets[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.max_us.fetch_max(us, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean_secs(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        self.sum_us.load(Ordering::Relaxed) as f64 / n as f64 / 1e6
+    }
+
+    pub fn max_secs(&self) -> f64 {
+        self.max_us.load(Ordering::Relaxed) as f64 / 1e6
+    }
+
+    /// Approximate percentile (upper bucket edge), q in [0, 1].
+    pub fn percentile_secs(&self, q: f64) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return 0.0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * n as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            seen += b.load(Ordering::Relaxed);
+            if seen >= target {
+                return (1u64 << (i + 1)) as f64 / 1e6;
+            }
+        }
+        self.max_secs()
+    }
+
+    pub fn summary_line(&self, name: &str) -> String {
+        format!(
+            "{name}: n={} mean={:.3}ms p50={:.3}ms p99={:.3}ms max={:.3}ms",
+            self.count(),
+            self.mean_secs() * 1e3,
+            self.percentile_secs(0.50) * 1e3,
+            self.percentile_secs(0.99) * 1e3,
+            self.max_secs() * 1e3,
+        )
+    }
+}
+
+/// The coordinator's metric set.
+#[derive(Default)]
+pub struct ServingMetrics {
+    pub queries_received: Counter,
+    pub groups_dispatched: Counter,
+    pub groups_decoded: Counter,
+    pub worker_replies: Counter,
+    pub stragglers_cancelled: Counter,
+    pub byzantine_flagged: Counter,
+    pub errors: Counter,
+    pub group_latency: LatencyHistogram,
+    pub encode_latency: LatencyHistogram,
+    pub decode_latency: LatencyHistogram,
+    pub locate_latency: LatencyHistogram,
+}
+
+impl ServingMetrics {
+    pub fn new() -> ServingMetrics {
+        ServingMetrics::default()
+    }
+
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "queries={} groups={} decoded={} replies={} cancelled={} flagged={} errors={}\n",
+            self.queries_received.get(),
+            self.groups_dispatched.get(),
+            self.groups_decoded.get(),
+            self.worker_replies.get(),
+            self.stragglers_cancelled.get(),
+            self.byzantine_flagged.get(),
+            self.errors.get(),
+        ));
+        out.push_str(&self.group_latency.summary_line("  group"));
+        out.push('\n');
+        out.push_str(&self.encode_latency.summary_line("  encode"));
+        out.push('\n');
+        out.push_str(&self.locate_latency.summary_line("  locate"));
+        out.push('\n');
+        out.push_str(&self.decode_latency.summary_line("  decode"));
+        out
+    }
+}
+
+/// Global registry used by the CLI `metrics` dump (simple name→line map).
+pub struct Registry {
+    lines: Mutex<Vec<String>>,
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Registry { lines: Mutex::new(Vec::new()) }
+    }
+}
+
+impl Registry {
+    pub fn publish(&self, line: String) {
+        self.lines.lock().unwrap().push(line);
+    }
+
+    pub fn dump(&self) -> Vec<String> {
+        self.lines.lock().unwrap().clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_basics() {
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+    }
+
+    #[test]
+    fn histogram_percentiles_monotone() {
+        let h = LatencyHistogram::new();
+        for i in 1..=1000 {
+            h.record(i as f64 * 1e-4); // 0.1ms .. 100ms
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.percentile_secs(0.5);
+        let p90 = h.percentile_secs(0.9);
+        let p99 = h.percentile_secs(0.99);
+        assert!(p50 <= p90 && p90 <= p99, "{p50} {p90} {p99}");
+        // p50 of uniform 0.1..100ms is ~50ms; log-bucket upper edge ≤ 2x.
+        assert!(p50 > 0.025 && p50 < 0.14, "p50={p50}");
+        assert!((h.mean_secs() - 0.05).abs() < 0.01);
+    }
+
+    #[test]
+    fn histogram_empty_is_zero() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.percentile_secs(0.99), 0.0);
+        assert_eq!(h.mean_secs(), 0.0);
+    }
+
+    #[test]
+    fn histogram_extremes_clamped() {
+        let h = LatencyHistogram::new();
+        h.record(0.0);
+        h.record(1e9); // absurd; lands in overflow bucket
+        assert_eq!(h.count(), 2);
+        assert!(h.max_secs() >= 1e8);
+    }
+
+    #[test]
+    fn metrics_report_contains_sections() {
+        let m = ServingMetrics::new();
+        m.queries_received.add(3);
+        m.group_latency.record(0.01);
+        let r = m.report();
+        assert!(r.contains("queries=3"));
+        assert!(r.contains("group"));
+    }
+}

@@ -1,0 +1,277 @@
+//! Artifact loading: the manifest index and the `AXT1` binary tensor
+//! container shared with the python build path
+//! (`python/compile/datasets.py::export_binary`).
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Tensor;
+
+use super::json::Json;
+
+/// One AOT-compiled model artifact (weights baked in).
+#[derive(Clone, Debug)]
+pub struct ModelEntry {
+    pub arch: String,
+    pub dataset: String,
+    pub batch: usize,
+    /// Path relative to the artifacts root.
+    pub path: String,
+    /// Input shape `[batch, H, W, C]`.
+    pub input: Vec<usize>,
+    pub num_classes: usize,
+    /// Test accuracy of the hosted model (the paper's "best case" line).
+    pub base_test_acc: f64,
+    pub param_count: usize,
+}
+
+/// One exported dataset test split.
+#[derive(Clone, Debug)]
+pub struct DatasetEntry {
+    pub name: String,
+    pub images: String,
+    pub labels: String,
+    pub count: usize,
+    pub height: usize,
+    pub width: usize,
+    pub channels: usize,
+    pub num_classes: usize,
+}
+
+/// One AOT-compiled Pallas encoder artifact.
+#[derive(Clone, Debug)]
+pub struct EncoderEntry {
+    pub k: usize,
+    pub s: usize,
+    pub e: usize,
+    pub payload: usize,
+    pub path: String,
+}
+
+/// One golden cross-language test-vector set.
+#[derive(Clone, Debug)]
+pub struct GoldenEntry {
+    pub k: usize,
+    pub s: usize,
+    pub e: usize,
+    pub tag: String,
+    pub payload: usize,
+}
+
+/// Parsed `artifacts/manifest.json` plus the root directory.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub root: PathBuf,
+    pub models: Vec<ModelEntry>,
+    pub datasets: Vec<DatasetEntry>,
+    pub encoders: Vec<EncoderEntry>,
+    pub golden: Vec<GoldenEntry>,
+}
+
+impl Manifest {
+    /// Load from an artifacts directory (default `artifacts/`).
+    pub fn load(root: impl AsRef<Path>) -> Result<Manifest> {
+        let root = root.as_ref().to_path_buf();
+        let path = root.join("manifest.json");
+        let text = fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let v = Json::parse(&text).context("parsing manifest.json")?;
+        let mut models = Vec::new();
+        for m in v.get("models").and_then(Json::as_arr).unwrap_or(&[]) {
+            models.push(ModelEntry {
+                arch: m.str_field("arch")?,
+                dataset: m.str_field("dataset")?,
+                batch: m.usize_field("batch")?,
+                path: m.str_field("path")?,
+                input: m
+                    .get("input")
+                    .and_then(Json::as_arr)
+                    .map(|a| a.iter().filter_map(Json::as_usize).collect())
+                    .unwrap_or_default(),
+                num_classes: m.usize_field("num_classes")?,
+                base_test_acc: m.f64_field("base_test_acc")?,
+                param_count: m.usize_field("param_count").unwrap_or(0),
+            });
+        }
+        let mut datasets = Vec::new();
+        for d in v.get("datasets").and_then(Json::as_arr).unwrap_or(&[]) {
+            datasets.push(DatasetEntry {
+                name: d.str_field("name")?,
+                images: d.str_field("images")?,
+                labels: d.str_field("labels")?,
+                count: d.usize_field("count")?,
+                height: d.usize_field("height")?,
+                width: d.usize_field("width")?,
+                channels: d.usize_field("channels")?,
+                num_classes: d.usize_field("num_classes")?,
+            });
+        }
+        let mut encoders = Vec::new();
+        for e in v.get("encoders").and_then(Json::as_arr).unwrap_or(&[]) {
+            encoders.push(EncoderEntry {
+                k: e.usize_field("k")?,
+                s: e.usize_field("s")?,
+                e: e.usize_field("e")?,
+                payload: e.usize_field("payload")?,
+                path: e.str_field("path")?,
+            });
+        }
+        let mut golden = Vec::new();
+        for g in v.get("golden").and_then(Json::as_arr).unwrap_or(&[]) {
+            golden.push(GoldenEntry {
+                k: g.usize_field("k")?,
+                s: g.usize_field("s")?,
+                e: g.usize_field("e")?,
+                tag: g.str_field("tag")?,
+                payload: g.usize_field("payload")?,
+            });
+        }
+        Ok(Manifest { root, models, datasets, encoders, golden })
+    }
+
+    /// Find the model artifact for (arch, dataset, batch).
+    pub fn model(&self, arch: &str, dataset: &str, batch: usize) -> Result<&ModelEntry> {
+        self.models
+            .iter()
+            .find(|m| m.arch == arch && m.dataset == dataset && m.batch == batch)
+            .with_context(|| format!("no artifact for {arch}/{dataset} b{batch}"))
+    }
+
+    pub fn dataset(&self, name: &str) -> Result<&DatasetEntry> {
+        self.datasets
+            .iter()
+            .find(|d| d.name == name)
+            .with_context(|| format!("no dataset '{name}' in manifest"))
+    }
+
+    /// Absolute path of a manifest-relative artifact path.
+    pub fn abspath(&self, rel: &str) -> PathBuf {
+        self.root.join(rel)
+    }
+}
+
+/// Read an `AXT1` f32 tensor file.
+pub fn read_tensor_f32(path: impl AsRef<Path>) -> Result<Tensor> {
+    let (shape, body) = read_axt(path.as_ref())?;
+    let mut data = Vec::with_capacity(body.len() / 4);
+    for chunk in body.chunks_exact(4) {
+        data.push(f32::from_le_bytes(chunk.try_into().unwrap()));
+    }
+    Ok(Tensor::from_vec(&shape, data))
+}
+
+/// Read an `AXT1` i32 tensor file (labels, index sets).
+pub fn read_tensor_i32(path: impl AsRef<Path>) -> Result<(Vec<usize>, Vec<i32>)> {
+    let (shape, body) = read_axt(path.as_ref())?;
+    let mut data = Vec::with_capacity(body.len() / 4);
+    for chunk in body.chunks_exact(4) {
+        data.push(i32::from_le_bytes(chunk.try_into().unwrap()));
+    }
+    Ok((shape, data))
+}
+
+fn read_axt(path: &Path) -> Result<(Vec<usize>, Vec<u8>)> {
+    let raw = fs::read(path).with_context(|| format!("reading tensor {path:?}"))?;
+    if raw.len() < 8 || &raw[..4] != b"AXT1" {
+        bail!("{path:?}: not an AXT1 tensor file");
+    }
+    let ndim = u32::from_le_bytes(raw[4..8].try_into().unwrap()) as usize;
+    if raw.len() < 8 + 4 * ndim {
+        bail!("{path:?}: truncated header");
+    }
+    let mut shape = Vec::with_capacity(ndim);
+    for i in 0..ndim {
+        let off = 8 + 4 * i;
+        shape.push(u32::from_le_bytes(raw[off..off + 4].try_into().unwrap()) as usize);
+    }
+    let body = raw[8 + 4 * ndim..].to_vec();
+    let expect: usize = shape.iter().product::<usize>() * 4;
+    if body.len() != expect {
+        bail!("{path:?}: body {} bytes, expected {expect}", body.len());
+    }
+    Ok((shape, body))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_axt(path: &Path, shape: &[u32], data: &[f32]) {
+        let mut f = fs::File::create(path).unwrap();
+        f.write_all(b"AXT1").unwrap();
+        f.write_all(&(shape.len() as u32).to_le_bytes()).unwrap();
+        for &d in shape {
+            f.write_all(&d.to_le_bytes()).unwrap();
+        }
+        for &x in data {
+            f.write_all(&x.to_le_bytes()).unwrap();
+        }
+    }
+
+    #[test]
+    fn axt_roundtrip() {
+        let dir = std::env::temp_dir().join("axt_test");
+        fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.bin");
+        write_axt(&p, &[2, 3], &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let t = read_tensor_f32(&p).unwrap();
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.data(), &[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn axt_rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("axt_test2");
+        fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.bin");
+        fs::write(&p, b"NOPE....").unwrap();
+        assert!(read_tensor_f32(&p).is_err());
+    }
+
+    #[test]
+    fn axt_rejects_truncated_body() {
+        let dir = std::env::temp_dir().join("axt_test3");
+        fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("trunc.bin");
+        let mut f = fs::File::create(&p).unwrap();
+        f.write_all(b"AXT1").unwrap();
+        f.write_all(&2u32.to_le_bytes()).unwrap();
+        f.write_all(&3u32.to_le_bytes()).unwrap();
+        f.write_all(&3u32.to_le_bytes()).unwrap();
+        f.write_all(&[0u8; 8]).unwrap(); // 9 floats expected, 2 provided
+        drop(f);
+        assert!(read_tensor_f32(&p).is_err());
+    }
+
+    #[test]
+    fn manifest_parse_from_synthetic_json() {
+        let dir = std::env::temp_dir().join(format!("man_test_{}", std::process::id()));
+        fs::create_dir_all(&dir).unwrap();
+        fs::write(
+            dir.join("manifest.json"),
+            r#"{"version":1,
+                "models":[{"arch":"a","dataset":"d","batch":1,"path":"m.hlo.txt",
+                           "input":[1,2,2,1],"num_classes":10,"base_test_acc":0.5,
+                           "param_count": 7}],
+                "datasets":[{"name":"d","images":"i.bin","labels":"l.bin","count":4,
+                             "height":2,"width":2,"channels":1,"num_classes":10}],
+                "encoders":[], "golden":[]}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.models.len(), 1);
+        assert_eq!(m.model("a", "d", 1).unwrap().input, vec![1, 2, 2, 1]);
+        assert!(m.model("a", "d", 64).is_err());
+        assert_eq!(m.dataset("d").unwrap().count, 4);
+        assert!(m.dataset("nope").is_err());
+    }
+
+    #[test]
+    fn manifest_missing_file_is_helpful() {
+        let err = Manifest::load("/definitely/not/here").unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

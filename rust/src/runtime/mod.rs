@@ -1,0 +1,13 @@
+//! Runtime layer: PJRT client wrapper (load + execute AOT HLO-text
+//! artifacts), the artifact manifest/tensor-container readers, and the
+//! minimal JSON parser they rely on. This is the only module that touches
+//! the `xla` crate; everything above it works with plain [`crate::tensor`]
+//! payloads.
+
+pub mod artifacts;
+pub mod json;
+pub mod model;
+
+pub use artifacts::{read_tensor_f32, read_tensor_i32, Manifest, ModelEntry};
+pub use json::Json;
+pub use model::{CompiledEncoder, CompiledModel, Executable, Runtime};

@@ -1,0 +1,211 @@
+//! PJRT runtime: load AOT HLO-text artifacts and execute them from the
+//! serving hot path. Wraps the `xla` crate (PJRT C API, CPU client).
+//!
+//! One [`Runtime`] per process; one [`CompiledModel`] per (arch, dataset,
+//! batch) artifact, shareable across worker threads (`Send + Sync` — the
+//! PJRT C API is documented thread-safe and the TFRT CPU client supports
+//! concurrent `Execute` calls; the `xla` crate types are `!Send` only
+//! because they hold raw pointers).
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Tensor;
+
+use super::artifacts::ModelEntry;
+
+/// Process-wide PJRT client handle.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+// SAFETY: the PJRT C API guarantees thread-safe clients/executables
+// (see PJRT C API header contract); the wrapper types only hold opaque
+// pointers into that API.
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
+impl Runtime {
+    /// Create the CPU PJRT client.
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        log::info!(
+            "PJRT client: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO-text artifact.
+    pub fn load_hlo_text(&self, path: impl AsRef<Path>) -> Result<Executable> {
+        let path = path.as_ref();
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {path:?}"))?;
+        log::info!("compiled {path:?} in {:.2}s", t0.elapsed().as_secs_f64());
+        Ok(Executable { exe })
+    }
+}
+
+/// A compiled PJRT executable (thin wrapper; see [`CompiledModel`] for the
+/// typed model interface).
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+// SAFETY: see Runtime.
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
+impl Executable {
+    /// Execute with f32 inputs; returns the elements of the ROOT tuple.
+    pub fn run(&self, inputs: &[(&[usize], &[f32])]) -> Result<Vec<Tensor>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (shape, data) in inputs {
+            let dims: Vec<usize> = shape.to_vec();
+            let byte_len = data.len() * 4;
+            let bytes =
+                unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, byte_len) };
+            let lit = xla::Literal::create_from_shape_and_untyped_data(
+                xla::ElementType::F32,
+                &dims,
+                bytes,
+            )
+            .context("building input literal")?;
+            literals.push(lit);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals).context("PJRT execute")?;
+        let root = result[0][0].to_literal_sync().context("fetching result")?;
+        // aot.py lowers with return_tuple=True.
+        let parts = root.to_tuple().context("untupling result")?;
+        let mut out = Vec::with_capacity(parts.len());
+        for part in parts {
+            let shape = part.array_shape().context("result shape")?;
+            let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+            let data = part.to_vec::<f32>().context("result data")?;
+            out.push(Tensor::from_vec(&dims, data));
+        }
+        Ok(out)
+    }
+}
+
+/// A hosted model `f`, compiled for a fixed batch size.
+pub struct CompiledModel {
+    exe: Executable,
+    /// `[batch, H, W, C]`.
+    pub input: Vec<usize>,
+    pub num_classes: usize,
+    pub arch: String,
+    pub dataset: String,
+}
+
+impl CompiledModel {
+    /// Load from a manifest entry.
+    pub fn load(rt: &Runtime, root: &Path, entry: &ModelEntry) -> Result<CompiledModel> {
+        let exe = rt.load_hlo_text(root.join(&entry.path))?;
+        Ok(CompiledModel {
+            exe,
+            input: entry.input.clone(),
+            num_classes: entry.num_classes,
+            arch: entry.arch.clone(),
+            dataset: entry.dataset.clone(),
+        })
+    }
+
+    pub fn batch(&self) -> usize {
+        self.input[0]
+    }
+
+    /// Payload size per query (H·W·C).
+    pub fn payload(&self) -> usize {
+        self.input[1..].iter().product()
+    }
+
+    /// Run inference on a `(B, H, W, C)` batch; returns `(B, num_classes)`
+    /// logits. The batch dimension must match the compiled batch exactly
+    /// (pad with [`CompiledModel::infer_padded`] otherwise).
+    pub fn infer(&self, x: &Tensor) -> Result<Tensor> {
+        if x.shape() != self.input.as_slice() {
+            bail!(
+                "input shape {:?} != compiled shape {:?} ({}/{})",
+                x.shape(),
+                self.input,
+                self.arch,
+                self.dataset
+            );
+        }
+        let mut out = self.exe.run(&[(&self.input, x.data())])?;
+        if out.len() != 1 {
+            bail!("expected 1 output, got {}", out.len());
+        }
+        Ok(out.remove(0))
+    }
+
+    /// Run inference on the first `n ≤ batch` rows of a padded batch: input
+    /// has any leading count, it is zero-padded/truncated to the compiled
+    /// batch, and only the first `n` logit rows are returned.
+    pub fn infer_padded(&self, x: &Tensor, n: usize) -> Result<Tensor> {
+        let b = self.batch();
+        if n > b {
+            bail!("n={n} exceeds compiled batch {b}");
+        }
+        let payload = self.payload();
+        let mut buf = vec![0.0f32; b * payload];
+        let take = n.min(x.shape()[0]) * payload;
+        buf[..take].copy_from_slice(&x.data()[..take]);
+        let padded = Tensor::from_vec(&self.input, buf);
+        let logits = self.infer(&padded)?;
+        let c = self.num_classes;
+        Ok(Tensor::from_vec(&[n, c], logits.data()[..n * c].to_vec()))
+    }
+}
+
+/// A compiled Pallas Berrut encoder: `(K, D) -> (N+1, D)`.
+pub struct CompiledEncoder {
+    exe: Executable,
+    pub k: usize,
+    pub workers: usize,
+    pub payload: usize,
+}
+
+impl CompiledEncoder {
+    pub fn load(
+        rt: &Runtime,
+        root: &Path,
+        entry: &super::artifacts::EncoderEntry,
+    ) -> Result<CompiledEncoder> {
+        let exe = rt.load_hlo_text(root.join(&entry.path))?;
+        let workers = if entry.e == 0 {
+            entry.k + entry.s
+        } else {
+            2 * (entry.k + entry.e) + entry.s
+        };
+        Ok(CompiledEncoder { exe, k: entry.k, workers, payload: entry.payload })
+    }
+
+    /// Encode `(K, D)` flattened queries into `(N+1, D)` coded payloads.
+    pub fn encode(&self, queries: &Tensor) -> Result<Tensor> {
+        if queries.shape() != [self.k, self.payload] {
+            bail!(
+                "encoder input shape {:?} != [{}, {}]",
+                queries.shape(),
+                self.k,
+                self.payload
+            );
+        }
+        let mut out = self.exe.run(&[(&[self.k, self.payload], queries.data())])?;
+        Ok(out.remove(0))
+    }
+}

@@ -1,0 +1,293 @@
+//! TCP serving front-end: a length-prefixed binary protocol over
+//! `std::net` (no tokio/hyper in this environment), a threaded server that
+//! forwards queries into the [`crate::coordinator::Service`], and a client
+//! library used by the examples and integration tests.
+//!
+//! Frame layout (all little-endian):
+//!
+//! ```text
+//! request:  u32 frame_len | u8 op | u64 request_id | u64 payload_len | f32…
+//! response: u32 frame_len | u8 status | u64 request_id | u64 payload_len | f32…
+//! ```
+//!
+//! `op`: 1 = Predict, 2 = Ping. `status`: 16 = Ok, 17 = Error (payload is
+//! a UTF-8 message). Op and status spaces are disjoint so a frame's head
+//! byte always identifies its payload encoding.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::Service;
+use crate::util::bytes::{put_f32, put_u32, put_u64, Reader};
+
+pub const OP_PREDICT: u8 = 1;
+pub const OP_PING: u8 = 2;
+pub const ST_OK: u8 = 16;
+pub const ST_ERR: u8 = 17;
+
+/// Max frame: 64 MiB (a 32×32×3 query is 12 KiB; this is generous).
+const MAX_FRAME: u32 = 64 << 20;
+
+fn write_frame(w: &mut impl Write, head: u8, id: u64, payload: &[f32]) -> Result<()> {
+    let mut buf = Vec::with_capacity(4 + 1 + 8 + 8 + payload.len() * 4);
+    put_u32(&mut buf, (1 + 8 + 8 + payload.len() * 4) as u32);
+    buf.push(head);
+    put_u64(&mut buf, id);
+    put_u64(&mut buf, payload.len() as u64);
+    for &x in payload {
+        put_f32(&mut buf, x);
+    }
+    w.write_all(&buf)?;
+    w.flush()?;
+    Ok(())
+}
+
+fn write_error(w: &mut impl Write, id: u64, msg: &str) -> Result<()> {
+    let mut buf = Vec::new();
+    put_u32(&mut buf, (1 + 8 + 8 + msg.len()) as u32);
+    buf.push(ST_ERR);
+    put_u64(&mut buf, id);
+    put_u64(&mut buf, msg.len() as u64);
+    buf.extend_from_slice(msg.as_bytes());
+    w.write_all(&buf)?;
+    w.flush()?;
+    Ok(())
+}
+
+struct Frame {
+    head: u8,
+    id: u64,
+    body: Vec<u8>,
+}
+
+fn read_frame(r: &mut impl Read) -> Result<Frame> {
+    let mut len4 = [0u8; 4];
+    r.read_exact(&mut len4).context("reading frame length")?;
+    let len = u32::from_le_bytes(len4);
+    if len < 17 || len > MAX_FRAME {
+        bail!("bad frame length {len}");
+    }
+    let mut frame = vec![0u8; len as usize];
+    r.read_exact(&mut frame).context("reading frame body")?;
+    let head = frame[0];
+    let mut rd = Reader::new(&frame[1..17]);
+    let id = rd.u64()?;
+    let plen = rd.u64()? as usize;
+    let body = frame[17..].to_vec();
+    if head == OP_PREDICT || head == ST_OK {
+        if body.len() != plen * 4 {
+            bail!("payload length mismatch: {} bytes vs {plen} floats", body.len());
+        }
+    } else if head == ST_ERR && body.len() != plen {
+        bail!("error payload length mismatch");
+    }
+    Ok(Frame { head, id, body })
+}
+
+fn body_f32(body: &[u8]) -> Vec<f32> {
+    body.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect()
+}
+
+/// Serving front-end bound to a TCP port.
+pub struct Server {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Start serving on `addr` (e.g. `127.0.0.1:0` for an ephemeral port).
+    /// One thread per connection; each Predict frame becomes a
+    /// `service.submit` whose handle resolves on the connection thread.
+    pub fn start(addr: &str, service: Arc<Service>, expected_payload: usize) -> Result<Server> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let accept_thread = std::thread::Builder::new()
+            .name("server-accept".into())
+            .spawn(move || {
+                let mut conn_id = 0u64;
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, peer)) => {
+                            conn_id += 1;
+                            log::info!("connection {conn_id} from {peer}");
+                            let service = service.clone();
+                            let _ = std::thread::Builder::new()
+                                .name(format!("conn-{conn_id}"))
+                                .spawn(move || {
+                                    if let Err(e) = serve_conn(stream, &service, expected_payload)
+                                    {
+                                        log::debug!("connection {conn_id} closed: {e:#}");
+                                    }
+                                });
+                        }
+                        Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(5));
+                        }
+                        Err(e) => {
+                            log::warn!("accept error: {e}");
+                            break;
+                        }
+                    }
+                }
+            })
+            .expect("spawning acceptor");
+        Ok(Server { addr: local, stop, accept_thread: Some(accept_thread) })
+    }
+
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn serve_conn(mut stream: TcpStream, service: &Service, expected_payload: usize) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    loop {
+        let frame = read_frame(&mut stream)?;
+        match frame.head {
+            OP_PING => write_frame(&mut stream, ST_OK, frame.id, &[])?,
+            OP_PREDICT => {
+                let payload = body_f32(&frame.body);
+                if payload.len() != expected_payload {
+                    write_error(
+                        &mut stream,
+                        frame.id,
+                        &format!(
+                            "payload has {} floats, model expects {expected_payload}",
+                            payload.len()
+                        ),
+                    )?;
+                    continue;
+                }
+                match service.submit(payload).wait_timeout(Duration::from_secs(60)) {
+                    Ok(pred) => write_frame(&mut stream, ST_OK, frame.id, &pred)?,
+                    Err(e) => write_error(&mut stream, frame.id, &format!("{e:#}"))?,
+                }
+            }
+            other => write_error(&mut stream, frame.id, &format!("unknown op {other}"))?,
+        }
+    }
+}
+
+/// Client for the serving protocol.
+pub struct Client {
+    stream: TcpStream,
+    next_id: AtomicU64,
+}
+
+impl Client {
+    pub fn connect(addr: &std::net::SocketAddr) -> Result<Client> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+        stream.set_nodelay(true).ok();
+        Ok(Client { stream, next_id: AtomicU64::new(1) })
+    }
+
+    /// Round-trip one prediction.
+    pub fn predict(&mut self, payload: &[f32]) -> Result<Vec<f32>> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        write_frame(&mut self.stream, OP_PREDICT, id, payload)?;
+        let resp = read_frame(&mut self.stream)?;
+        if resp.id != id {
+            bail!("response id {} != request id {id}", resp.id);
+        }
+        match resp.head {
+            ST_OK => Ok(body_f32(&resp.body)),
+            ST_ERR => bail!("server error: {}", String::from_utf8_lossy(&resp.body)),
+            other => bail!("unknown status {other}"),
+        }
+    }
+
+    pub fn ping(&mut self) -> Result<()> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        write_frame(&mut self.stream, OP_PING, id, &[])?;
+        let resp = read_frame(&mut self.stream)?;
+        if resp.head != ST_OK || resp.id != id {
+            bail!("bad ping response");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::CodeParams;
+    use crate::coordinator::ServiceConfig;
+    use crate::workers::LinearMockEngine;
+
+    fn start_test_server(k: usize, d: usize, c: usize) -> (Server, Arc<Service>) {
+        let engine = Arc::new(LinearMockEngine::new(d, c));
+        let params = CodeParams::new(k, 1, 0);
+        let mut cfg = ServiceConfig::new(params);
+        cfg.flush_after = Duration::from_millis(10);
+        let service = Arc::new(Service::start(engine, cfg));
+        let server = Server::start("127.0.0.1:0", service.clone(), d).unwrap();
+        (server, service)
+    }
+
+    #[test]
+    fn ping_and_predict_roundtrip() {
+        let (server, _svc) = start_test_server(2, 8, 3);
+        let mut client = Client::connect(&server.addr()).unwrap();
+        client.ping().unwrap();
+        let payload: Vec<f32> = (0..8).map(|i| i as f32 * 0.1).collect();
+        let pred = client.predict(&payload).unwrap();
+        assert_eq!(pred.len(), 3);
+        assert!(pred.iter().all(|x| x.is_finite()));
+        server.shutdown();
+    }
+
+    #[test]
+    fn wrong_payload_size_is_protocol_error() {
+        let (server, _svc) = start_test_server(2, 8, 3);
+        let mut client = Client::connect(&server.addr()).unwrap();
+        let err = client.predict(&[1.0, 2.0]).unwrap_err();
+        assert!(format!("{err:#}").contains("expects 8"), "{err:#}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn concurrent_clients_fill_groups() {
+        let (server, svc) = start_test_server(4, 6, 2);
+        let addr = server.addr();
+        let mut joins = Vec::new();
+        for t in 0..4 {
+            joins.push(std::thread::spawn(move || {
+                let mut c = Client::connect(&addr).unwrap();
+                let payload: Vec<f32> = (0..6).map(|i| (t * 6 + i) as f32 * 0.01).collect();
+                c.predict(&payload).unwrap()
+            }));
+        }
+        for j in joins {
+            let pred = j.join().unwrap();
+            assert_eq!(pred.len(), 2);
+        }
+        assert!(svc.metrics.groups_decoded.get() >= 1);
+        server.shutdown();
+    }
+}

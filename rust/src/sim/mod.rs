@@ -1,0 +1,165 @@
+//! Workload generation for the latency/throughput experiments: arrival
+//! processes (Poisson / bursty / closed-loop) and a scenario runner that
+//! drives the online [`crate::coordinator::Service`] and reports latency
+//! percentiles + sustained throughput.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::coordinator::Service;
+use crate::util::rng::Rng;
+use crate::util::stats::Summary;
+
+/// Request arrival process.
+#[derive(Clone, Copy, Debug)]
+pub enum Arrivals {
+    /// Poisson with the given rate (req/s): exponential inter-arrivals.
+    Poisson { rate: f64 },
+    /// Fixed inter-arrival gap.
+    Uniform { rate: f64 },
+    /// Bursts of `burst` back-to-back requests every `period_ms`.
+    Bursty { burst: usize, period_ms: f64 },
+}
+
+impl Arrivals {
+    /// Next inter-arrival gap.
+    pub fn next_gap(&self, rng: &mut Rng, index: usize) -> Duration {
+        match *self {
+            Arrivals::Poisson { rate } => Duration::from_secs_f64(rng.exponential(1.0 / rate)),
+            Arrivals::Uniform { rate } => Duration::from_secs_f64(1.0 / rate),
+            Arrivals::Bursty { burst, period_ms } => {
+                if index % burst == burst - 1 {
+                    Duration::from_secs_f64(period_ms / 1e3)
+                } else {
+                    Duration::ZERO
+                }
+            }
+        }
+    }
+}
+
+/// Result of one scenario run.
+#[derive(Clone, Debug)]
+pub struct ScenarioReport {
+    pub sent: usize,
+    pub completed: usize,
+    pub failed: usize,
+    pub wall: Duration,
+    /// Per-request end-to-end latency summary (seconds).
+    pub latency: Summary,
+    /// Sustained goodput (completed / wall).
+    pub throughput: f64,
+}
+
+impl ScenarioReport {
+    pub fn line(&self) -> String {
+        format!(
+            "sent={} ok={} fail={} wall={:.2}s thrpt={:.1}/s p50={:.1}ms p99={:.1}ms",
+            self.sent,
+            self.completed,
+            self.failed,
+            self.wall.as_secs_f64(),
+            self.throughput,
+            self.latency.p50 * 1e3,
+            self.latency.p99 * 1e3,
+        )
+    }
+}
+
+/// Drive `total` requests (identical payload geometry, synthesized smooth
+/// queries) into a service with the given arrival process; block for all
+/// responses.
+pub fn run_scenario(
+    service: &Arc<Service>,
+    payload_len: usize,
+    total: usize,
+    arrivals: Arrivals,
+    seed: u64,
+) -> Result<ScenarioReport> {
+    let mut rng = Rng::new(seed);
+    let start = Instant::now();
+    // Submit on this thread at the arrival schedule; resolve on collectors.
+    let mut joins = Vec::with_capacity(total);
+    for i in 0..total {
+        let payload: Vec<f32> = (0..payload_len)
+            .map(|t| ((i as f32) * 0.17 + (t as f32) * 0.013).sin())
+            .collect();
+        let t_submit = Instant::now();
+        let handle = service.submit(payload);
+        joins.push(std::thread::spawn(move || {
+            let r = handle.wait_timeout(Duration::from_secs(120));
+            (r.is_ok(), t_submit.elapsed().as_secs_f64())
+        }));
+        let gap = arrivals.next_gap(&mut rng, i);
+        if !gap.is_zero() {
+            std::thread::sleep(gap);
+        }
+    }
+    let mut latencies = Vec::with_capacity(total);
+    let mut completed = 0;
+    let mut failed = 0;
+    for j in joins {
+        let (ok, secs) = j.join().expect("collector panicked");
+        if ok {
+            completed += 1;
+            latencies.push(secs);
+        } else {
+            failed += 1;
+        }
+    }
+    let wall = start.elapsed();
+    if latencies.is_empty() {
+        latencies.push(f64::NAN);
+    }
+    Ok(ScenarioReport {
+        sent: total,
+        completed,
+        failed,
+        wall,
+        latency: Summary::of(&latencies),
+        throughput: completed as f64 / wall.as_secs_f64(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::CodeParams;
+    use crate::coordinator::ServiceConfig;
+    use crate::workers::LinearMockEngine;
+
+    #[test]
+    fn poisson_gap_mean() {
+        let mut rng = Rng::new(9);
+        let a = Arrivals::Poisson { rate: 100.0 };
+        let n = 20_000;
+        let total: f64 = (0..n).map(|i| a.next_gap(&mut rng, i).as_secs_f64()).sum();
+        let mean = total / n as f64;
+        assert!((mean - 0.01).abs() < 0.001, "mean={mean}");
+    }
+
+    #[test]
+    fn bursty_pattern() {
+        let mut rng = Rng::new(10);
+        let a = Arrivals::Bursty { burst: 4, period_ms: 10.0 };
+        assert_eq!(a.next_gap(&mut rng, 0), Duration::ZERO);
+        assert_eq!(a.next_gap(&mut rng, 3), Duration::from_millis(10));
+    }
+
+    #[test]
+    fn scenario_end_to_end_with_mock() {
+        let params = CodeParams::new(4, 1, 0);
+        let engine = Arc::new(LinearMockEngine::new(8, 3));
+        let mut cfg = ServiceConfig::new(params);
+        cfg.flush_after = Duration::from_millis(5);
+        let service = Arc::new(crate::coordinator::Service::start(engine, cfg));
+        let report =
+            run_scenario(&service, 8, 32, Arrivals::Uniform { rate: 2000.0 }, 11).unwrap();
+        assert_eq!(report.sent, 32);
+        assert_eq!(report.completed, 32);
+        assert_eq!(report.failed, 0);
+        assert!(report.throughput > 10.0);
+    }
+}

@@ -1,0 +1,188 @@
+//! Minimal row-major f32 ND tensor used for query/prediction payloads on the
+//! request path (no `ndarray` crate in this environment).
+//!
+//! Deliberately small: shape + contiguous `Vec<f32>`, with the handful of ops
+//! the coordinator needs (batch stacking/slicing, axpy-style linear
+//! combination, argmax). All heavy math happens inside the PJRT executables;
+//! the encode/decode combinations are the only host-side tensor math and are
+//! implemented as tight SAXPY loops in `coding::scheme`.
+
+use std::fmt;
+
+/// Row-major f32 tensor.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Zeros of the given shape.
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    /// Wrap existing data (length must match the shape product).
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(
+            data.len(),
+            shape.iter().product::<usize>(),
+            "Tensor::from_vec: data length {} != shape {:?}",
+            data.len(),
+            shape
+        );
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reshape (same element count).
+    pub fn reshape(mut self, shape: &[usize]) -> Tensor {
+        assert_eq!(
+            self.data.len(),
+            shape.iter().product::<usize>(),
+            "reshape: {:?} -> {:?}",
+            self.shape,
+            shape
+        );
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// Stack equal-shaped tensors along a new leading axis.
+    pub fn stack(items: &[Tensor]) -> Tensor {
+        assert!(!items.is_empty(), "stack of zero tensors");
+        let inner = items[0].shape.clone();
+        let mut data = Vec::with_capacity(items.len() * items[0].len());
+        for t in items {
+            assert_eq!(t.shape, inner, "stack: inconsistent shapes");
+            data.extend_from_slice(&t.data);
+        }
+        let mut shape = vec![items.len()];
+        shape.extend_from_slice(&inner);
+        Tensor { shape, data }
+    }
+
+    /// Slice index `i` off the leading axis (copies).
+    pub fn index0(&self, i: usize) -> Tensor {
+        assert!(!self.shape.is_empty() && i < self.shape[0], "index0 out of range");
+        let inner: usize = self.shape[1..].iter().product();
+        Tensor {
+            shape: self.shape[1..].to_vec(),
+            data: self.data[i * inner..(i + 1) * inner].to_vec(),
+        }
+    }
+
+    /// Argmax over a flat tensor (class prediction).
+    pub fn argmax(&self) -> usize {
+        let mut best = 0;
+        for (i, &v) in self.data.iter().enumerate() {
+            if v > self.data[best] {
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// Max |x|.
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, x| m.max(x.abs()))
+    }
+
+    /// Element-wise `self += alpha * other`.
+    pub fn axpy(&mut self, alpha: f32, other: &Tensor) {
+        assert_eq!(self.shape, other.shape, "axpy: shape mismatch");
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    /// Element-wise scale.
+    pub fn scale(&mut self, alpha: f32) {
+        for a in &mut self.data {
+            *a *= alpha;
+        }
+    }
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}[", self.shape)?;
+        for (i, v) in self.data.iter().take(6).enumerate() {
+            if i > 0 {
+                write!(f, ", ")?;
+            }
+            write!(f, "{v:.4}")?;
+        }
+        if self.data.len() > 6 {
+            write!(f, ", …")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stack_and_index_roundtrip() {
+        let a = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Tensor::from_vec(&[2, 2], vec![5.0, 6.0, 7.0, 8.0]);
+        let s = Tensor::stack(&[a.clone(), b.clone()]);
+        assert_eq!(s.shape(), &[2, 2, 2]);
+        assert_eq!(s.index0(0), a);
+        assert_eq!(s.index0(1), b);
+    }
+
+    #[test]
+    fn axpy_and_scale() {
+        let mut a = Tensor::from_vec(&[3], vec![1.0, 2.0, 3.0]);
+        let b = Tensor::from_vec(&[3], vec![10.0, 20.0, 30.0]);
+        a.axpy(0.5, &b);
+        assert_eq!(a.data(), &[6.0, 12.0, 18.0]);
+        a.scale(2.0);
+        assert_eq!(a.data(), &[12.0, 24.0, 36.0]);
+    }
+
+    #[test]
+    fn argmax_picks_largest() {
+        let t = Tensor::from_vec(&[5], vec![0.1, 0.9, 0.3, 0.9, 0.2]);
+        assert_eq!(t.argmax(), 1); // first of ties
+    }
+
+    #[test]
+    #[should_panic]
+    fn from_vec_rejects_bad_length() {
+        Tensor::from_vec(&[2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::from_vec(&[4], vec![1.0, 2.0, 3.0, 4.0]).reshape(&[2, 2]);
+        assert_eq!(t.shape(), &[2, 2]);
+        assert_eq!(t.data(), &[1.0, 2.0, 3.0, 4.0]);
+    }
+}

@@ -1,0 +1,205 @@
+//! Minimal property-based testing framework (no `proptest` in this
+//! environment).
+//!
+//! Usage (`no_run`: rustdoc binaries don't inherit the xla rpath):
+//!
+//! ```no_run
+//! use approxifer::testing::{forall, Gen};
+//! forall("sum is commutative", 200, |g| {
+//!     let a = g.f64_in(-1e3, 1e3);
+//!     let b = g.f64_in(-1e3, 1e3);
+//!     assert_eq!(a + b, b + a);
+//! });
+//! ```
+//!
+//! Each case runs with a fresh deterministic [`Gen`] derived from the property
+//! name and case index; on panic the harness re-raises with the reproducing
+//! seed in the message so a failure is a one-liner to replay via
+//! [`replay`].
+
+use crate::util::rng::{splitmix64, Rng};
+
+/// Random-input generator handed to each property case.
+pub struct Gen {
+    rng: Rng,
+    /// Seed that reproduces this case, reported on failure.
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn from_seed(seed: u64) -> Gen {
+        Gen { rng: Rng::new(seed), seed }
+    }
+
+    /// Raw RNG access for custom generators.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi_inclusive: usize) -> usize {
+        self.rng.range(lo, hi_inclusive + 1)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    /// f64 biased toward "interesting" magnitudes (spans several decades,
+    /// includes exact zeros and sign flips) — the cases that break numerics.
+    pub fn f64_messy(&mut self) -> f64 {
+        match self.rng.below(10) {
+            0 => 0.0,
+            1 => self.rng.range_f64(-1e-6, 1e-6),
+            2..=4 => self.rng.range_f64(-1.0, 1.0),
+            5..=7 => self.rng.range_f64(-1e3, 1e3),
+            _ => self.rng.range_f64(-1e6, 1e6),
+        }
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    pub fn vec_f64(&mut self, len: usize, lo: f64, hi: f64) -> Vec<f64> {
+        (0..len).map(|_| self.f64_in(lo, hi)).collect()
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.rng.range_f64(lo as f64, hi as f64) as f32).collect()
+    }
+
+    /// A uniformly random k-subset of 0..n, sorted.
+    pub fn subset(&mut self, n: usize, k: usize) -> Vec<usize> {
+        self.rng.subset(n, k)
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len())]
+    }
+}
+
+/// Derive the per-case seed from the property name and case index so runs are
+/// deterministic but properties don't share streams.
+fn case_seed(name: &str, case: u64) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    let mut s = h ^ case.wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    splitmix64(&mut s)
+}
+
+/// Run `cases` random cases of a property. On panic, re-panics with the
+/// failing seed embedded in the message.
+pub fn forall<F: FnMut(&mut Gen) + std::panic::UnwindSafe + Copy>(
+    name: &str,
+    cases: u64,
+    f: F,
+) {
+    // Honor APPROXIFER_PT_SEED to replay a single failing case.
+    if let Ok(seed) = std::env::var("APPROXIFER_PT_SEED") {
+        if let Ok(seed) = seed.parse::<u64>() {
+            replay(seed, f);
+            return;
+        }
+    }
+    for case in 0..cases {
+        let seed = case_seed(name, case);
+        let result = std::panic::catch_unwind(move || {
+            let mut g = Gen::from_seed(seed);
+            let mut f = f;
+            f(&mut g);
+        });
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property '{name}' failed at case {case} (replay with APPROXIFER_PT_SEED={seed}): {msg}"
+            );
+        }
+    }
+}
+
+/// Re-run a property with an exact seed (for debugging failures).
+pub fn replay<F: FnMut(&mut Gen)>(seed: u64, mut f: F) {
+    let mut g = Gen::from_seed(seed);
+    f(&mut g);
+}
+
+/// Assert two floats are close (absolute + relative tolerance).
+#[track_caller]
+pub fn assert_close(a: f64, b: f64, tol: f64) {
+    let scale = 1.0f64.max(a.abs()).max(b.abs());
+    assert!(
+        (a - b).abs() <= tol * scale,
+        "assert_close failed: {a} vs {b} (tol {tol}, scaled {})",
+        tol * scale
+    );
+}
+
+/// Assert two float slices are element-wise close.
+#[track_caller]
+pub fn assert_allclose(a: &[f64], b: &[f64], tol: f64) {
+    assert_eq!(a.len(), b.len(), "length mismatch: {} vs {}", a.len(), b.len());
+    for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+        let scale = 1.0f64.max(x.abs()).max(y.abs());
+        assert!(
+            (x - y).abs() <= tol * scale,
+            "assert_allclose failed at index {i}: {x} vs {y} (tol {tol})"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall("add-commutes", 100, |g| {
+            let a = g.f64_messy();
+            let b = g.f64_messy();
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    fn forall_reports_seed_on_failure() {
+        let result = std::panic::catch_unwind(|| {
+            forall("always-fails", 5, |_g| {
+                panic!("intentional");
+            });
+        });
+        let msg = match result {
+            Err(p) => p.downcast_ref::<String>().cloned().unwrap_or_default(),
+            Ok(_) => panic!("property should have failed"),
+        };
+        assert!(msg.contains("APPROXIFER_PT_SEED="), "msg: {msg}");
+        assert!(msg.contains("intentional"), "msg: {msg}");
+    }
+
+    #[test]
+    fn gen_is_deterministic_per_seed() {
+        let mut a = Gen::from_seed(5);
+        let mut b = Gen::from_seed(5);
+        for _ in 0..50 {
+            assert_eq!(a.f64_messy().to_bits(), b.f64_messy().to_bits());
+        }
+    }
+
+    #[test]
+    fn assert_close_tolerates_scale() {
+        assert_close(1e6, 1e6 + 1.0, 1e-5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn assert_close_catches_mismatch() {
+        assert_close(1.0, 2.0, 1e-6);
+    }
+}

@@ -1,0 +1,145 @@
+//! Minimal benchmark harness (no `criterion` in this environment).
+//!
+//! Benches are plain binaries with `harness = false`; they call
+//! [`bench`] / [`Bencher`] and print a fixed-format report line per case:
+//!
+//! ```text
+//! bench <name>  iters=<n>  mean=<t>  p50=<t>  p99=<t>  thrpt=<x>/s
+//! ```
+//!
+//! The harness does warmup, then timed batches until both a minimum iteration
+//! count and a minimum wall-time are reached, and reports per-iteration stats.
+
+use std::time::{Duration, Instant};
+
+use super::stats::Summary;
+
+/// Configuration for one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    pub warmup: Duration,
+    pub min_time: Duration,
+    pub min_iters: usize,
+    pub max_iters: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup: Duration::from_millis(200),
+            min_time: Duration::from_millis(800),
+            min_iters: 20,
+            max_iters: 200_000,
+        }
+    }
+}
+
+/// Result of one benchmark case (per-iteration seconds).
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub summary: Summary,
+}
+
+impl BenchResult {
+    /// Human-readable single-line report, shaped like the criterion output
+    /// our tooling parses.
+    pub fn report(&self) -> String {
+        format!(
+            "bench {:<44} iters={:<7} mean={:>12} p50={:>12} p99={:>12} thrpt={:>12.1}/s",
+            self.name,
+            self.iters,
+            fmt_secs(self.summary.mean),
+            fmt_secs(self.summary.p50),
+            fmt_secs(self.summary.p99),
+            1.0 / self.summary.mean.max(1e-18),
+        )
+    }
+}
+
+/// Format seconds with an adaptive unit.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{:.3}s", s)
+    }
+}
+
+/// Prevent the optimizer from eliding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Run one benchmark case with default config; prints and returns the result.
+pub fn bench<F: FnMut()>(name: &str, f: F) -> BenchResult {
+    bench_cfg(name, BenchConfig::default(), f)
+}
+
+/// Run one benchmark case with explicit config; prints and returns the result.
+pub fn bench_cfg<F: FnMut()>(name: &str, cfg: BenchConfig, mut f: F) -> BenchResult {
+    // Warmup.
+    let wstart = Instant::now();
+    while wstart.elapsed() < cfg.warmup {
+        f();
+    }
+    // Timed iterations.
+    let mut samples: Vec<f64> = Vec::with_capacity(cfg.min_iters.max(1024));
+    let start = Instant::now();
+    while (start.elapsed() < cfg.min_time || samples.len() < cfg.min_iters)
+        && samples.len() < cfg.max_iters
+    {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let result = BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        summary: Summary::of(&samples),
+    };
+    println!("{}", result.report());
+    result
+}
+
+/// Group header used by the bench binaries to mirror the paper's
+/// table/figure ids in the output.
+pub fn group(title: &str) {
+    println!("\n== {title} ==");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let cfg = BenchConfig {
+            warmup: Duration::from_millis(1),
+            min_time: Duration::from_millis(5),
+            min_iters: 5,
+            max_iters: 1000,
+        };
+        let mut acc = 0u64;
+        let r = bench_cfg("smoke", cfg, || {
+            acc = black_box(acc.wrapping_add(1));
+        });
+        assert!(r.iters >= 5);
+        assert!(r.summary.mean >= 0.0);
+        assert!(r.report().contains("smoke"));
+    }
+
+    #[test]
+    fn fmt_secs_units() {
+        assert!(fmt_secs(5e-9).ends_with("ns"));
+        assert!(fmt_secs(5e-6).ends_with("us"));
+        assert!(fmt_secs(5e-3).ends_with("ms"));
+        assert!(fmt_secs(5.0).ends_with('s'));
+    }
+}

@@ -1,0 +1,159 @@
+//! Little-endian byte encoding helpers for the wire protocol and the binary
+//! artifact/tensor formats shared with the python build path.
+
+/// Append a `u32` (LE).
+#[inline]
+pub fn put_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append a `u64` (LE).
+#[inline]
+pub fn put_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append an `f32` (LE).
+#[inline]
+pub fn put_f32(buf: &mut Vec<u8>, v: f32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Append a length-prefixed UTF-8 string.
+pub fn put_str(buf: &mut Vec<u8>, s: &str) {
+    put_u32(buf, s.len() as u32);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+/// Append a length-prefixed f32 slice.
+pub fn put_f32s(buf: &mut Vec<u8>, xs: &[f32]) {
+    put_u64(buf, xs.len() as u64);
+    for &x in xs {
+        put_f32(buf, x);
+    }
+}
+
+/// Sequential reader over a byte slice with explicit error reporting.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+/// Error type for malformed frames/artifacts.
+#[derive(Debug, thiserror::Error)]
+pub enum DecodeError {
+    #[error("unexpected end of buffer at {pos} (need {need} bytes, have {have})")]
+    Eof { pos: usize, need: usize, have: usize },
+    #[error("invalid utf-8 string at {pos}")]
+    Utf8 { pos: usize },
+    #[error("length {len} exceeds sanity limit {limit}")]
+    TooLong { len: usize, limit: usize },
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], DecodeError> {
+        if self.remaining() < n {
+            return Err(DecodeError::Eof { pos: self.pos, need: n, have: self.remaining() });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u32(&mut self) -> Result<u32, DecodeError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, DecodeError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f32(&mut self) -> Result<f32, DecodeError> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn str(&mut self) -> Result<String, DecodeError> {
+        let pos = self.pos;
+        let len = self.u32()? as usize;
+        if len > 1 << 24 {
+            return Err(DecodeError::TooLong { len, limit: 1 << 24 });
+        }
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| DecodeError::Utf8 { pos })
+    }
+
+    pub fn f32s(&mut self) -> Result<Vec<f32>, DecodeError> {
+        let len = self.u64()? as usize;
+        if len > 1 << 30 {
+            return Err(DecodeError::TooLong { len, limit: 1 << 30 });
+        }
+        let bytes = self.take(len * 4)?;
+        let mut out = Vec::with_capacity(len);
+        for chunk in bytes.chunks_exact(4) {
+            out.push(f32::from_le_bytes(chunk.try_into().unwrap()));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_types() {
+        let mut buf = Vec::new();
+        put_u32(&mut buf, 7);
+        put_u64(&mut buf, u64::MAX - 3);
+        put_f32(&mut buf, -1.5);
+        put_str(&mut buf, "héllo");
+        put_f32s(&mut buf, &[1.0, 2.0, 3.5]);
+
+        let mut r = Reader::new(&buf);
+        assert_eq!(r.u32().unwrap(), 7);
+        assert_eq!(r.u64().unwrap(), u64::MAX - 3);
+        assert_eq!(r.f32().unwrap(), -1.5);
+        assert_eq!(r.str().unwrap(), "héllo");
+        assert_eq!(r.f32s().unwrap(), vec![1.0, 2.0, 3.5]);
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn eof_is_reported() {
+        let buf = [1u8, 2];
+        let mut r = Reader::new(&buf);
+        match r.u32() {
+            Err(DecodeError::Eof { need: 4, have: 2, .. }) => {}
+            other => panic!("expected Eof, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn bad_utf8_is_reported() {
+        let mut buf = Vec::new();
+        put_u32(&mut buf, 2);
+        buf.extend_from_slice(&[0xff, 0xfe]);
+        let mut r = Reader::new(&buf);
+        assert!(matches!(r.str(), Err(DecodeError::Utf8 { .. })));
+    }
+
+    #[test]
+    fn insane_length_rejected() {
+        let mut buf = Vec::new();
+        put_u32(&mut buf, u32::MAX);
+        let mut r = Reader::new(&buf);
+        assert!(matches!(r.str(), Err(DecodeError::TooLong { .. })));
+    }
+}

@@ -1,0 +1,9 @@
+//! Cross-cutting utilities: PRNG, statistics, bench harness, byte codecs,
+//! logging. These are the substrate modules that replace the unavailable
+//! `rand`/`criterion`/`serde`/`env_logger` crates (offline environment).
+
+pub mod bench;
+pub mod bytes;
+pub mod logging;
+pub mod rng;
+pub mod stats;

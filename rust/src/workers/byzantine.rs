@@ -1,0 +1,103 @@
+//! Byzantine fault injection: how a corrupted worker mangles its
+//! prediction before replying. The paper's experiments add zero-mean
+//! Gaussian noise with σ ∈ {1, 10, 100} to the coded predictions
+//! (§4.2 and Appendix B); additional adversary shapes are provided for the
+//! robustness ablations.
+
+use crate::util::rng::Rng;
+
+/// How a Byzantine worker corrupts its reply.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ByzantineMode {
+    /// Paper §4.2: add N(0, σ²) noise to every soft label.
+    GaussianNoise { sigma: f64 },
+    /// Negate the prediction (a worst-case-ish structured attack).
+    SignFlip,
+    /// Replace with uniform random logits in [-scale, scale].
+    RandomLogits { scale: f64 },
+    /// Reply all zeros (a crash-then-garbage worker).
+    Zero,
+}
+
+impl ByzantineMode {
+    /// Corrupt a prediction payload in place.
+    pub fn corrupt(&self, logits: &mut [f32], rng: &mut Rng) {
+        match *self {
+            ByzantineMode::GaussianNoise { sigma } => {
+                for v in logits.iter_mut() {
+                    *v += rng.normal(0.0, sigma) as f32;
+                }
+            }
+            ByzantineMode::SignFlip => {
+                for v in logits.iter_mut() {
+                    *v = -*v;
+                }
+            }
+            ByzantineMode::RandomLogits { scale } => {
+                for v in logits.iter_mut() {
+                    *v = rng.range_f64(-scale, scale) as f32;
+                }
+            }
+            ByzantineMode::Zero => logits.fill(0.0),
+        }
+    }
+
+    /// Parse from a config string: `gauss:10`, `signflip`, `random:5`, `zero`.
+    pub fn parse(spec: &str) -> Result<ByzantineMode, String> {
+        let parts: Vec<&str> = spec.split(':').collect();
+        let num = |s: &str| s.parse::<f64>().map_err(|_| format!("bad number '{s}' in '{spec}'"));
+        match parts.as_slice() {
+            ["gauss", sigma] => Ok(ByzantineMode::GaussianNoise { sigma: num(sigma)? }),
+            ["signflip"] => Ok(ByzantineMode::SignFlip),
+            ["random", scale] => Ok(ByzantineMode::RandomLogits { scale: num(scale)? }),
+            ["zero"] => Ok(ByzantineMode::Zero),
+            _ => Err(format!("unknown byzantine mode '{spec}'")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gaussian_changes_values_with_expected_magnitude() {
+        let mut rng = Rng::new(5);
+        let m = ByzantineMode::GaussianNoise { sigma: 10.0 };
+        let mut v = vec![0.0f32; 10_000];
+        m.corrupt(&mut v, &mut rng);
+        let std =
+            (v.iter().map(|&x| (x as f64).powi(2)).sum::<f64>() / v.len() as f64).sqrt();
+        assert!((std - 10.0).abs() < 0.5, "std={std}");
+    }
+
+    #[test]
+    fn signflip_and_zero() {
+        let mut rng = Rng::new(6);
+        let mut v = vec![1.0f32, -2.0];
+        ByzantineMode::SignFlip.corrupt(&mut v, &mut rng);
+        assert_eq!(v, vec![-1.0, 2.0]);
+        ByzantineMode::Zero.corrupt(&mut v, &mut rng);
+        assert_eq!(v, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn random_logits_within_scale() {
+        let mut rng = Rng::new(7);
+        let mut v = vec![100.0f32; 1000];
+        ByzantineMode::RandomLogits { scale: 5.0 }.corrupt(&mut v, &mut rng);
+        assert!(v.iter().all(|&x| x.abs() <= 5.0));
+        assert!(v.iter().any(|&x| x != v[0])); // actually random
+    }
+
+    #[test]
+    fn parse_specs() {
+        assert_eq!(
+            ByzantineMode::parse("gauss:10").unwrap(),
+            ByzantineMode::GaussianNoise { sigma: 10.0 }
+        );
+        assert_eq!(ByzantineMode::parse("signflip").unwrap(), ByzantineMode::SignFlip);
+        assert_eq!(ByzantineMode::parse("zero").unwrap(), ByzantineMode::Zero);
+        assert!(ByzantineMode::parse("evil").is_err());
+    }
+}

@@ -1,0 +1,199 @@
+//! The inference-engine abstraction workers run: the production engine is a
+//! PJRT [`crate::runtime::CompiledModel`]; tests and latency-only benches use
+//! the deterministic mocks (no artifacts required).
+
+use anyhow::Result;
+
+use crate::runtime::CompiledModel;
+use crate::tensor::Tensor;
+
+/// Anything a worker can run on one query payload.
+pub trait InferenceEngine: Send + Sync {
+    /// Flattened input size per query (H·W·C).
+    fn payload(&self) -> usize;
+    /// Output size per query (number of classes).
+    fn classes(&self) -> usize;
+    /// Run one query payload → prediction payload.
+    fn infer1(&self, payload: &[f32]) -> Result<Vec<f32>>;
+    /// Run a batch of `n` query payloads (concatenated) → `n` prediction
+    /// payloads (concatenated). Default loops over `infer1`.
+    fn infer_batch(&self, payloads: &[f32], n: usize) -> Result<Vec<f32>> {
+        let d = self.payload();
+        let mut out = Vec::with_capacity(n * self.classes());
+        for i in 0..n {
+            out.extend(self.infer1(&payloads[i * d..(i + 1) * d])?);
+        }
+        Ok(out)
+    }
+}
+
+/// PJRT-backed engine around a batch-1 compiled model.
+pub struct PjrtEngine {
+    model: CompiledModel,
+}
+
+impl PjrtEngine {
+    pub fn new(model: CompiledModel) -> PjrtEngine {
+        PjrtEngine { model }
+    }
+
+    pub fn model(&self) -> &CompiledModel {
+        &self.model
+    }
+}
+
+impl InferenceEngine for PjrtEngine {
+    fn payload(&self) -> usize {
+        self.model.payload()
+    }
+
+    fn classes(&self) -> usize {
+        self.model.num_classes
+    }
+
+    fn infer1(&self, payload: &[f32]) -> Result<Vec<f32>> {
+        let shape = &self.model.input;
+        debug_assert_eq!(shape[0], 1, "PjrtEngine requires a batch-1 artifact");
+        let x = Tensor::from_vec(shape, payload.to_vec());
+        Ok(self.model.infer(&x)?.into_vec())
+    }
+
+    fn infer_batch(&self, payloads: &[f32], n: usize) -> Result<Vec<f32>> {
+        let b = self.model.batch();
+        if b == 1 {
+            // Fall back to per-query execution.
+            let d = self.payload();
+            let mut out = Vec::with_capacity(n * self.classes());
+            for i in 0..n {
+                out.extend(self.infer1(&payloads[i * d..(i + 1) * d])?);
+            }
+            return Ok(out);
+        }
+        let d = self.payload();
+        let mut out = Vec::with_capacity(n * self.classes());
+        let mut i = 0;
+        while i < n {
+            let take = (n - i).min(b);
+            let chunk = Tensor::from_vec(&[take, d], payloads[i * d..(i + take) * d].to_vec());
+            let logits = self.model.infer_padded(&chunk, take)?;
+            out.extend_from_slice(logits.data());
+            i += take;
+        }
+        Ok(out)
+    }
+}
+
+/// Mock engine: a fixed affine map `logits = A·x + b` with smooth
+/// deterministic coefficients. Linear ⇒ Berrut decode of coded predictions
+/// approximates predictions of decoded queries well, which makes pipeline
+/// tests sharp (error is pure interpolation error).
+pub struct LinearMockEngine {
+    payload: usize,
+    classes: usize,
+    a: Vec<f32>,
+    b: Vec<f32>,
+}
+
+impl LinearMockEngine {
+    pub fn new(payload: usize, classes: usize) -> LinearMockEngine {
+        // Deterministic smooth coefficients.
+        let a = (0..classes * payload)
+            .map(|i| {
+                let (c, j) = (i / payload, i % payload);
+                (0.3 * (c as f32 + 1.0) * ((j as f32 * 0.37).sin())) / payload as f32
+            })
+            .collect();
+        let b = (0..classes).map(|c| 0.05 * c as f32).collect();
+        LinearMockEngine { payload, classes, a, b }
+    }
+}
+
+impl InferenceEngine for LinearMockEngine {
+    fn payload(&self) -> usize {
+        self.payload
+    }
+
+    fn classes(&self) -> usize {
+        self.classes
+    }
+
+    fn infer1(&self, payload: &[f32]) -> Result<Vec<f32>> {
+        anyhow::ensure!(payload.len() == self.payload, "payload size mismatch");
+        let mut out = self.b.clone();
+        for c in 0..self.classes {
+            let row = &self.a[c * self.payload..(c + 1) * self.payload];
+            let mut acc = 0.0f32;
+            for (w, x) in row.iter().zip(payload) {
+                acc += w * x;
+            }
+            out[c] += acc;
+        }
+        Ok(out)
+    }
+}
+
+/// Mock engine with a busy-wait compute cost — for latency benches where the
+/// model cost must be controlled exactly.
+pub struct DelayMockEngine {
+    inner: LinearMockEngine,
+    compute: std::time::Duration,
+}
+
+impl DelayMockEngine {
+    pub fn new(payload: usize, classes: usize, compute: std::time::Duration) -> DelayMockEngine {
+        DelayMockEngine { inner: LinearMockEngine::new(payload, classes), compute }
+    }
+}
+
+impl InferenceEngine for DelayMockEngine {
+    fn payload(&self) -> usize {
+        self.inner.payload()
+    }
+
+    fn classes(&self) -> usize {
+        self.inner.classes()
+    }
+
+    fn infer1(&self, payload: &[f32]) -> Result<Vec<f32>> {
+        std::thread::sleep(self.compute);
+        self.inner.infer1(payload)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_mock_is_linear() {
+        let e = LinearMockEngine::new(16, 4);
+        let x: Vec<f32> = (0..16).map(|i| i as f32 * 0.1).collect();
+        let y: Vec<f32> = (0..16).map(|i| (16 - i) as f32 * 0.05).collect();
+        let fx = e.infer1(&x).unwrap();
+        let fy = e.infer1(&y).unwrap();
+        let xy: Vec<f32> = x.iter().zip(&y).map(|(a, b)| a + b).collect();
+        let fxy = e.infer1(&xy).unwrap();
+        // f(x+y) = f(x) + f(y) - b (affine).
+        for c in 0..4 {
+            let expect = fx[c] + fy[c] - (0.05 * c as f32);
+            assert!((fxy[c] - expect).abs() < 1e-4, "{c}: {} vs {expect}", fxy[c]);
+        }
+    }
+
+    #[test]
+    fn default_batch_matches_loop() {
+        let e = LinearMockEngine::new(8, 3);
+        let xs: Vec<f32> = (0..24).map(|i| i as f32 * 0.01).collect();
+        let batch = e.infer_batch(&xs, 3).unwrap();
+        for i in 0..3 {
+            let single = e.infer1(&xs[i * 8..(i + 1) * 8]).unwrap();
+            assert_eq!(&batch[i * 3..(i + 1) * 3], &single[..]);
+        }
+    }
+
+    #[test]
+    fn mock_rejects_wrong_payload() {
+        let e = LinearMockEngine::new(8, 3);
+        assert!(e.infer1(&[0.0; 4]).is_err());
+    }
+}

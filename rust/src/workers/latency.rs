@@ -1,0 +1,124 @@
+//! Worker latency models for straggler experiments.
+//!
+//! The paper treats stragglers abstractly ("any S stragglers"); for the
+//! end-to-end latency experiments we make the tail explicit with standard
+//! serving-latency models: exponential and Pareto service tails, plus a
+//! bimodal "straggler" model (base latency with probability `1-p`, an
+//! inflated tail with probability `p`) matching the replication literature
+//! the paper cites (Dean & Barroso, "The Tail at Scale").
+
+use std::time::Duration;
+
+use crate::util::rng::Rng;
+
+/// A worker's service-latency distribution (on top of real compute time).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LatencyModel {
+    /// No injected latency (real compute time only).
+    None,
+    /// Fixed delay.
+    Constant { ms: f64 },
+    /// Exponential with the given mean.
+    Exponential { mean_ms: f64 },
+    /// Pareto(scale, shape) — heavy tail; shape ≤ 1 has infinite mean.
+    Pareto { scale_ms: f64, shape: f64 },
+    /// Base delay, but with probability `p` an inflated straggler delay.
+    Bimodal { base_ms: f64, straggler_ms: f64, p: f64 },
+}
+
+impl LatencyModel {
+    /// Sample one service delay.
+    pub fn sample(&self, rng: &mut Rng) -> Duration {
+        let ms = match *self {
+            LatencyModel::None => 0.0,
+            LatencyModel::Constant { ms } => ms,
+            LatencyModel::Exponential { mean_ms } => rng.exponential(mean_ms),
+            LatencyModel::Pareto { scale_ms, shape } => rng.pareto(scale_ms, shape),
+            LatencyModel::Bimodal { base_ms, straggler_ms, p } => {
+                if rng.chance(p) {
+                    straggler_ms
+                } else {
+                    base_ms
+                }
+            }
+        };
+        Duration::from_secs_f64((ms / 1e3).max(0.0))
+    }
+
+    /// Parse from a config string: `none`, `const:5`, `exp:10`,
+    /// `pareto:2:1.5`, `bimodal:2:50:0.05` (all times in ms).
+    pub fn parse(spec: &str) -> Result<LatencyModel, String> {
+        let parts: Vec<&str> = spec.split(':').collect();
+        let num = |s: &str| s.parse::<f64>().map_err(|_| format!("bad number '{s}' in '{spec}'"));
+        match parts.as_slice() {
+            ["none"] => Ok(LatencyModel::None),
+            ["const", ms] => Ok(LatencyModel::Constant { ms: num(ms)? }),
+            ["exp", mean] => Ok(LatencyModel::Exponential { mean_ms: num(mean)? }),
+            ["pareto", scale, shape] => {
+                Ok(LatencyModel::Pareto { scale_ms: num(scale)?, shape: num(shape)? })
+            }
+            ["bimodal", base, strag, p] => Ok(LatencyModel::Bimodal {
+                base_ms: num(base)?,
+                straggler_ms: num(strag)?,
+                p: num(p)?,
+            }),
+            _ => Err(format!("unknown latency model '{spec}'")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_all_forms() {
+        assert_eq!(LatencyModel::parse("none").unwrap(), LatencyModel::None);
+        assert_eq!(
+            LatencyModel::parse("const:5").unwrap(),
+            LatencyModel::Constant { ms: 5.0 }
+        );
+        assert_eq!(
+            LatencyModel::parse("exp:10").unwrap(),
+            LatencyModel::Exponential { mean_ms: 10.0 }
+        );
+        assert_eq!(
+            LatencyModel::parse("pareto:2:1.5").unwrap(),
+            LatencyModel::Pareto { scale_ms: 2.0, shape: 1.5 }
+        );
+        assert_eq!(
+            LatencyModel::parse("bimodal:2:50:0.05").unwrap(),
+            LatencyModel::Bimodal { base_ms: 2.0, straggler_ms: 50.0, p: 0.05 }
+        );
+        assert!(LatencyModel::parse("what:1").is_err());
+        assert!(LatencyModel::parse("exp:abc").is_err());
+    }
+
+    #[test]
+    fn exponential_mean_approx() {
+        let mut rng = Rng::new(1);
+        let m = LatencyModel::Exponential { mean_ms: 8.0 };
+        let n = 20_000;
+        let total: f64 = (0..n).map(|_| m.sample(&mut rng).as_secs_f64()).sum();
+        let mean_ms = total / n as f64 * 1e3;
+        assert!((mean_ms - 8.0).abs() < 0.4, "mean={mean_ms}");
+    }
+
+    #[test]
+    fn bimodal_rates() {
+        let mut rng = Rng::new(2);
+        let m = LatencyModel::Bimodal { base_ms: 1.0, straggler_ms: 100.0, p: 0.1 };
+        let n = 10_000;
+        let slow = (0..n)
+            .filter(|_| m.sample(&mut rng) > Duration::from_millis(50))
+            .count();
+        let rate = slow as f64 / n as f64;
+        assert!((rate - 0.1).abs() < 0.02, "rate={rate}");
+    }
+
+    #[test]
+    fn none_is_zero() {
+        let mut rng = Rng::new(3);
+        assert_eq!(LatencyModel::None.sample(&mut rng), Duration::ZERO);
+    }
+}

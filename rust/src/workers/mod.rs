@@ -1,0 +1,14 @@
+//! The worker fleet: the inference-engine abstraction (PJRT-backed in
+//! production, deterministic mocks in tests), per-worker latency models,
+//! Byzantine corruption modes, and the thread pool the coordinator fans
+//! coded queries out to.
+
+pub mod byzantine;
+pub mod engine;
+pub mod latency;
+pub mod pool;
+
+pub use byzantine::ByzantineMode;
+pub use engine::{DelayMockEngine, InferenceEngine, LinearMockEngine, PjrtEngine};
+pub use latency::LatencyModel;
+pub use pool::{WorkerPool, WorkerReply, WorkerSpec, WorkerTask};

@@ -1,0 +1,249 @@
+//! The worker pool: `N+1` worker threads, each owning a handle to the
+//! shared inference engine, an injected-latency model and (optionally) a
+//! Byzantine corruption mode. The coordinator fans coded queries out via
+//! per-worker channels and collects replies on one shared channel —
+//! replies from cancelled (straggler) groups are simply ignored by the
+//! collector, as in a reactive serving system.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::util::rng::Rng;
+
+use super::byzantine::ByzantineMode;
+use super::engine::InferenceEngine;
+use super::latency::LatencyModel;
+
+/// A unit of work for one worker: one coded query of one group.
+pub struct WorkerTask {
+    pub group: u64,
+    /// Flattened coded query payload.
+    pub payload: Vec<f32>,
+    /// Scheduler-injected extra delay (forced-straggler experiments).
+    pub extra_delay: Duration,
+    /// If set, corrupt the reply (this worker is Byzantine for this group).
+    pub corrupt: Option<ByzantineMode>,
+}
+
+/// A worker's reply.
+pub struct WorkerReply {
+    pub group: u64,
+    pub worker_id: usize,
+    /// Prediction payload (possibly corrupted), or an error message.
+    pub result: Result<Vec<f32>, String>,
+    /// Wall time the worker spent (service latency incl. injections).
+    pub elapsed: Duration,
+}
+
+/// Static per-worker configuration.
+#[derive(Clone, Debug)]
+pub struct WorkerSpec {
+    pub latency: LatencyModel,
+}
+
+impl Default for WorkerSpec {
+    fn default() -> Self {
+        WorkerSpec { latency: LatencyModel::None }
+    }
+}
+
+/// Handle to the pool.
+pub struct WorkerPool {
+    senders: Vec<Sender<WorkerTask>>,
+    replies: Receiver<WorkerReply>,
+    handles: Vec<JoinHandle<()>>,
+    stop: Arc<AtomicBool>,
+}
+
+impl WorkerPool {
+    /// Spawn `specs.len()` workers over a shared engine. `seed` derives each
+    /// worker's private latency/corruption RNG stream.
+    pub fn spawn(
+        engine: Arc<dyn InferenceEngine>,
+        specs: &[WorkerSpec],
+        seed: u64,
+    ) -> WorkerPool {
+        let (reply_tx, replies) = channel::<WorkerReply>();
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut senders = Vec::with_capacity(specs.len());
+        let mut handles = Vec::with_capacity(specs.len());
+        let mut root = Rng::new(seed);
+        for (worker_id, spec) in specs.iter().enumerate() {
+            let (tx, rx) = channel::<WorkerTask>();
+            senders.push(tx);
+            let engine = engine.clone();
+            let reply_tx = reply_tx.clone();
+            let spec = spec.clone();
+            let mut rng = root.fork(worker_id as u64);
+            let stop = stop.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("worker-{worker_id}"))
+                .spawn(move || {
+                    while let Ok(task) = rx.recv() {
+                        if stop.load(Ordering::Relaxed) {
+                            break;
+                        }
+                        let t0 = Instant::now();
+                        let injected = spec.latency.sample(&mut rng) + task.extra_delay;
+                        if !injected.is_zero() {
+                            std::thread::sleep(injected);
+                        }
+                        let result = engine
+                            .infer1(&task.payload)
+                            .map(|mut logits| {
+                                if let Some(mode) = task.corrupt {
+                                    mode.corrupt(&mut logits, &mut rng);
+                                }
+                                logits
+                            })
+                            .map_err(|e| format!("{e:#}"));
+                        let reply = WorkerReply {
+                            group: task.group,
+                            worker_id,
+                            result,
+                            elapsed: t0.elapsed(),
+                        };
+                        if reply_tx.send(reply).is_err() {
+                            break; // coordinator gone
+                        }
+                    }
+                })
+                .expect("spawning worker thread");
+            handles.push(handle);
+        }
+        WorkerPool { senders, replies, handles, stop }
+    }
+
+    pub fn num_workers(&self) -> usize {
+        self.senders.len()
+    }
+
+    /// Send a task to worker `i`.
+    pub fn send(&self, worker: usize, task: WorkerTask) -> Result<()> {
+        self.senders[worker]
+            .send(task)
+            .map_err(|_| anyhow::anyhow!("worker {worker} has shut down"))
+    }
+
+    /// Blocking receive of the next reply (with timeout).
+    pub fn recv_timeout(&self, timeout: Duration) -> Option<WorkerReply> {
+        self.replies.recv_timeout(timeout).ok()
+    }
+
+    /// Shut down: close task channels and join threads.
+    pub fn shutdown(self) {
+        self.stop.store(true, Ordering::Relaxed);
+        drop(self.senders);
+        for h in self.handles {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workers::engine::LinearMockEngine;
+
+    fn pool(n: usize) -> WorkerPool {
+        let engine = Arc::new(LinearMockEngine::new(8, 3));
+        let specs = vec![WorkerSpec::default(); n];
+        WorkerPool::spawn(engine, &specs, 42)
+    }
+
+    #[test]
+    fn all_workers_reply() {
+        let p = pool(5);
+        for w in 0..5 {
+            p.send(
+                w,
+                WorkerTask {
+                    group: 7,
+                    payload: vec![0.1; 8],
+                    extra_delay: Duration::ZERO,
+                    corrupt: None,
+                },
+            )
+            .unwrap();
+        }
+        let mut seen = vec![false; 5];
+        for _ in 0..5 {
+            let r = p.recv_timeout(Duration::from_secs(5)).expect("reply");
+            assert_eq!(r.group, 7);
+            assert!(r.result.is_ok());
+            seen[r.worker_id] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+        p.shutdown();
+    }
+
+    #[test]
+    fn byzantine_task_corrupts_reply() {
+        let p = pool(2);
+        let payload = vec![0.5; 8];
+        p.send(
+            0,
+            WorkerTask {
+                group: 1,
+                payload: payload.clone(),
+                extra_delay: Duration::ZERO,
+                corrupt: None,
+            },
+        )
+        .unwrap();
+        p.send(
+            1,
+            WorkerTask {
+                group: 1,
+                payload,
+                extra_delay: Duration::ZERO,
+                corrupt: Some(ByzantineMode::GaussianNoise { sigma: 100.0 }),
+            },
+        )
+        .unwrap();
+        let mut honest = None;
+        let mut byz = None;
+        for _ in 0..2 {
+            let r = p.recv_timeout(Duration::from_secs(5)).unwrap();
+            if r.worker_id == 0 {
+                honest = Some(r.result.unwrap());
+            } else {
+                byz = Some(r.result.unwrap());
+            }
+        }
+        let (h, b) = (honest.unwrap(), byz.unwrap());
+        let dist: f32 = h.iter().zip(&b).map(|(a, c)| (a - c).abs()).sum();
+        assert!(dist > 1.0, "corruption too small: {dist}");
+        p.shutdown();
+    }
+
+    #[test]
+    fn extra_delay_is_respected() {
+        let p = pool(1);
+        p.send(
+            0,
+            WorkerTask {
+                group: 0,
+                payload: vec![0.0; 8],
+                extra_delay: Duration::from_millis(50),
+                corrupt: None,
+            },
+        )
+        .unwrap();
+        let r = p.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(r.elapsed >= Duration::from_millis(45), "elapsed={:?}", r.elapsed);
+        p.shutdown();
+    }
+
+    #[test]
+    fn recv_timeout_expires_cleanly() {
+        let p = pool(1);
+        assert!(p.recv_timeout(Duration::from_millis(20)).is_none());
+        p.shutdown();
+    }
+}

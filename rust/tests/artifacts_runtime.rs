@@ -1,0 +1,150 @@
+//! Integration over the real artifacts + PJRT runtime. These tests skip
+//! (pass vacuously, with a note) when `make artifacts` has not run, so
+//! `cargo test` works on a fresh checkout; CI runs `make test` which
+//! builds artifacts first.
+
+use std::sync::Arc;
+
+use approxifer::coding::{ApproxIferCode, CodeParams};
+use approxifer::data::{Golden, TestSet};
+use approxifer::harness::{approxifer_accuracy, base_accuracy};
+use approxifer::runtime::{CompiledEncoder, CompiledModel, Manifest, Runtime};
+use approxifer::tensor::Tensor;
+use approxifer::workers::{InferenceEngine, PjrtEngine};
+
+fn manifest() -> Option<Manifest> {
+    match Manifest::load("artifacts") {
+        Ok(m) => Some(m),
+        Err(_) => {
+            eprintln!("[skip] artifacts/ missing — run `make artifacts`");
+            None
+        }
+    }
+}
+
+#[test]
+fn golden_vectors_match_python() {
+    let Some(manifest) = manifest() else { return };
+    assert!(!manifest.golden.is_empty());
+    for entry in &manifest.golden {
+        let g = Golden::load(&manifest, entry).unwrap();
+        let code = ApproxIferCode::new(CodeParams::new(g.k, g.s, g.e));
+        // Encode matrix.
+        for (a, b) in code.encode_matrix().iter().zip(g.enc_w.data()) {
+            assert!((a - b).abs() <= 1e-5, "{}: {a} vs {b}", entry.tag);
+        }
+        // Decode of python's coded payloads.
+        let d = g.queries.shape()[1];
+        let payloads: Vec<&[f32]> =
+            g.avail.iter().map(|&i| &g.coded.data()[i * d..(i + 1) * d]).collect();
+        let decoded = code.decode(&g.avail, &payloads);
+        for j in 0..g.k {
+            for t in 0..d {
+                let (a, b) = (decoded[j][t], g.decoded.data()[j * d + t]);
+                assert!(
+                    (a - b).abs() <= 1e-3 * (1.0 + b.abs()),
+                    "{}: [{j}][{t}] {a} vs {b}",
+                    entry.tag
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn compiled_model_reproduces_training_accuracy() {
+    let Some(manifest) = manifest() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let entry = manifest.model("resnet18_s", "synmnist", 128).unwrap();
+    let model = CompiledModel::load(&rt, &manifest.root, entry).unwrap();
+    let engine = PjrtEngine::new(model);
+    let ts = TestSet::load(&manifest, "synmnist").unwrap();
+    let acc = base_accuracy(&engine, &ts, 256).unwrap();
+    // The artifact must carry the trained weights (see aot.py
+    // print_large_constants) — accuracy within 5 points of build-time.
+    assert!(
+        (acc - entry.base_test_acc).abs() < 0.05,
+        "artifact acc {acc} vs build-time {}",
+        entry.base_test_acc
+    );
+}
+
+#[test]
+fn batch1_and_batch128_artifacts_agree() {
+    let Some(manifest) = manifest() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let ts = TestSet::load(&manifest, "syncifar").unwrap();
+    let m1 = CompiledModel::load(&rt, &manifest.root, manifest.model("lenet5", "syncifar", 1).unwrap()).unwrap();
+    let m128 =
+        CompiledModel::load(&rt, &manifest.root, manifest.model("lenet5", "syncifar", 128).unwrap()).unwrap();
+    let e1 = PjrtEngine::new(m1);
+    let e128 = PjrtEngine::new(m128);
+    let flat: Vec<f32> = (0..4).flat_map(|i| ts.image(i).iter().copied()).collect();
+    let batched = e128.infer_batch(&flat, 4).unwrap();
+    for i in 0..4 {
+        let single = e1.infer1(ts.image(i)).unwrap();
+        for t in 0..single.len() {
+            assert!(
+                (single[t] - batched[i * 10 + t]).abs() < 1e-3 * (1.0 + single[t].abs()),
+                "sample {i} class {t}: {} vs {}",
+                single[t],
+                batched[i * 10 + t]
+            );
+        }
+    }
+}
+
+#[test]
+fn pallas_encoder_artifact_matches_host_encoder() {
+    let Some(manifest) = manifest() else { return };
+    if manifest.encoders.is_empty() {
+        eprintln!("[skip] no encoder artifacts");
+        return;
+    }
+    let rt = Runtime::cpu().unwrap();
+    let entry = &manifest.encoders[0];
+    let enc = CompiledEncoder::load(&rt, &manifest.root, entry).unwrap();
+    let code = ApproxIferCode::new(CodeParams::new(entry.k, entry.s, entry.e));
+    let d = entry.payload;
+    let queries: Vec<Vec<f32>> = (0..entry.k)
+        .map(|j| (0..d).map(|t| ((j * 7 + t) as f32 * 0.001).sin()).collect())
+        .collect();
+    let mut flat = Vec::with_capacity(entry.k * d);
+    for q in &queries {
+        flat.extend_from_slice(q);
+    }
+    // PJRT (Pallas kernel) encode.
+    let coded_pjrt = enc.encode(&Tensor::from_vec(&[entry.k, d], flat)).unwrap();
+    // Host encode.
+    let qrefs: Vec<&[f32]> = queries.iter().map(|q| &q[..]).collect();
+    let mut coded_host: Vec<Vec<f32>> = vec![Vec::new(); code.params().num_workers()];
+    code.encode_into(&qrefs, &mut coded_host);
+    assert_eq!(coded_pjrt.shape()[0], coded_host.len());
+    for i in 0..coded_host.len() {
+        for t in 0..d {
+            let a = coded_pjrt.data()[i * d + t];
+            let b = coded_host[i][t];
+            assert!(
+                (a - b).abs() <= 1e-4 * (1.0 + b.abs()),
+                "worker {i} elem {t}: pjrt {a} vs host {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn full_coded_accuracy_beats_chance_by_far() {
+    let Some(manifest) = manifest() else { return };
+    let rt = Runtime::cpu().unwrap();
+    let entry = manifest.model("resnet18_s", "synfashion", 128).unwrap();
+    let model = CompiledModel::load(&rt, &manifest.root, entry).unwrap();
+    let engine = Arc::new(PjrtEngine::new(model));
+    let ts = TestSet::load(&manifest, "synfashion").unwrap();
+    let r =
+        approxifer_accuracy(engine.as_ref(), &ts, CodeParams::new(8, 1, 0), None, 256, 5).unwrap();
+    assert!(
+        r.accuracy() > 0.5,
+        "coded accuracy {} should be far above 10% chance",
+        r.accuracy()
+    );
+}

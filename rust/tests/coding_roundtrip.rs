@@ -1,0 +1,158 @@
+//! Integration: the full coded pipeline (encode → workers → collect →
+//! decode) over mock engines, property-tested across (K, S, E) and fault
+//! placements. No artifacts required.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use approxifer::coding::CodeParams;
+use approxifer::coordinator::{FaultPlan, GroupPipeline};
+use approxifer::metrics::ServingMetrics;
+use approxifer::testing::forall;
+use approxifer::workers::{
+    ByzantineMode, InferenceEngine, LinearMockEngine, WorkerPool, WorkerSpec,
+};
+
+fn smooth_queries(k: usize, d: usize, phase: f32) -> Vec<Vec<f32>> {
+    (0..k)
+        .map(|j| {
+            (0..d).map(|t| ((j as f32) * 0.21 + (t as f32) * 0.013 + phase).sin()).collect()
+        })
+        .collect()
+}
+
+#[test]
+fn straggler_pipeline_property() {
+    forall("pipeline-stragglers", 12, |g| {
+        let k = g.usize_in(2, 10);
+        let s = g.usize_in(1, 3);
+        let d = g.usize_in(4, 32);
+        let c = g.usize_in(2, 10);
+        let params = CodeParams::new(k, s, 0);
+        let engine = Arc::new(LinearMockEngine::new(d, c));
+        let pool =
+            WorkerPool::spawn(engine.clone(), &vec![WorkerSpec::default(); params.num_workers()], g.rng().next_u64());
+        let mut pipe = GroupPipeline::new(params);
+        let metrics = ServingMetrics::new();
+        let queries = smooth_queries(k, d, g.f64_in(0.0, 3.0) as f32);
+        let qrefs: Vec<&[f32]> = queries.iter().map(|q| &q[..]).collect();
+        let plan = FaultPlan {
+            stragglers: g.subset(params.num_workers(), s),
+            straggler_delay: Duration::from_millis(150),
+            ..FaultPlan::none()
+        };
+        let out = pipe.infer_group(&pool, &qrefs, &plan, &metrics).unwrap();
+        // Invariant 1: stragglers never in the decode set.
+        for w in &plan.stragglers {
+            assert!(!out.decode_set.contains(w), "straggler {w} used");
+        }
+        // Invariant 2: K predictions of C classes each.
+        assert_eq!(out.predictions.len(), k);
+        for p in &out.predictions {
+            assert_eq!(p.len(), c);
+            assert!(p.iter().all(|x| x.is_finite()));
+        }
+        // Invariant 3: decode set size == wait_for (fast path).
+        assert_eq!(out.decode_set.len(), params.wait_for());
+        pool.shutdown();
+    });
+}
+
+#[test]
+fn byzantine_pipeline_property() {
+    forall("pipeline-byzantine", 8, |g| {
+        let k = g.usize_in(2, 6);
+        let e = g.usize_in(1, 2);
+        let d = g.usize_in(4, 16);
+        let c = g.usize_in(4, 10);
+        let params = CodeParams::new(k, 0, e);
+        let engine = Arc::new(LinearMockEngine::new(d, c));
+        let pool = WorkerPool::spawn(
+            engine.clone(),
+            &vec![WorkerSpec::default(); params.num_workers()],
+            g.rng().next_u64(),
+        );
+        let mut pipe = GroupPipeline::new(params);
+        let metrics = ServingMetrics::new();
+        let queries = smooth_queries(k, d, 0.5);
+        let qrefs: Vec<&[f32]> = queries.iter().map(|q| &q[..]).collect();
+        let byzantine = g.subset(params.num_workers(), e);
+        let plan = FaultPlan {
+            byzantine: byzantine.clone(),
+            byz_mode: Some(ByzantineMode::GaussianNoise { sigma: 25.0 }),
+            ..FaultPlan::none()
+        };
+        let out = pipe.infer_group(&pool, &qrefs, &plan, &metrics).unwrap();
+        // With strong noise on smooth linear predictions the vote locator
+        // must find the corrupted workers.
+        assert_eq!(out.flagged, byzantine, "locator missed the adversaries");
+        // Decoded predictions stay close to the honest reference.
+        for (j, q) in queries.iter().enumerate() {
+            let want = engine.infer1(q).unwrap();
+            for t in 0..c {
+                let err = (out.predictions[j][t] - want[t]).abs();
+                assert!(err < 1.0, "q{j} c{t}: {} vs {}", out.predictions[j][t], want[t]);
+            }
+        }
+        pool.shutdown();
+    });
+}
+
+#[test]
+fn zero_and_signflip_adversaries_also_located() {
+    for mode in [ByzantineMode::SignFlip, ByzantineMode::RandomLogits { scale: 20.0 }] {
+        let params = CodeParams::new(4, 0, 1);
+        // Payload scaled up so sign-flip is a large perturbation.
+        let engine = Arc::new(LinearMockEngine::new(8, 6));
+        let pool = WorkerPool::spawn(
+            engine.clone(),
+            &vec![WorkerSpec::default(); params.num_workers()],
+            77,
+        );
+        let mut pipe = GroupPipeline::new(params);
+        let metrics = ServingMetrics::new();
+        let queries: Vec<Vec<f32>> = (0..4)
+            .map(|j| (0..8).map(|t| 10.0 * ((j * 3 + t) as f32 * 0.2).sin()).collect())
+            .collect();
+        let qrefs: Vec<&[f32]> = queries.iter().map(|q| &q[..]).collect();
+        let plan = FaultPlan {
+            byzantine: vec![5],
+            byz_mode: Some(mode),
+            ..FaultPlan::none()
+        };
+        let out = pipe.infer_group(&pool, &qrefs, &plan, &metrics).unwrap();
+        assert_eq!(out.flagged, vec![5], "mode {mode:?} not located");
+        pool.shutdown();
+    }
+}
+
+#[test]
+fn repeated_groups_are_deterministic_in_math() {
+    // Two pipelines over the same queries and fault plans decode to the
+    // same predictions (thread scheduling must not leak into results).
+    let params = CodeParams::new(6, 1, 0);
+    let engine = Arc::new(LinearMockEngine::new(12, 5));
+    let queries = smooth_queries(6, 12, 1.0);
+    let qrefs: Vec<&[f32]> = queries.iter().map(|q| &q[..]).collect();
+    let plan = FaultPlan {
+        stragglers: vec![2],
+        straggler_delay: Duration::from_millis(120),
+        ..FaultPlan::none()
+    };
+    let run = || {
+        let pool = WorkerPool::spawn(
+            engine.clone(),
+            &vec![WorkerSpec::default(); params.num_workers()],
+            1,
+        );
+        let mut pipe = GroupPipeline::new(params);
+        let metrics = ServingMetrics::new();
+        let out = pipe.infer_group(&pool, &qrefs, &plan, &metrics).unwrap();
+        pool.shutdown();
+        out
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.decode_set, b.decode_set);
+    assert_eq!(a.predictions, b.predictions);
+}

@@ -1,0 +1,152 @@
+//! Failure-injection integration tests: worker errors, timeouts, late
+//! replies, partial groups — the unhappy paths of the coordinator.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use approxifer::coding::CodeParams;
+use approxifer::coordinator::{FaultPlan, GroupPipeline};
+use approxifer::metrics::ServingMetrics;
+use approxifer::workers::{InferenceEngine, LinearMockEngine, WorkerPool, WorkerSpec};
+
+/// Engine that fails on every `fail_every`-th call.
+struct FlakyEngine {
+    inner: LinearMockEngine,
+    calls: AtomicUsize,
+    fail_every: usize,
+}
+
+impl FlakyEngine {
+    fn new(payload: usize, classes: usize, fail_every: usize) -> FlakyEngine {
+        FlakyEngine {
+            inner: LinearMockEngine::new(payload, classes),
+            calls: AtomicUsize::new(0),
+            fail_every,
+        }
+    }
+}
+
+impl InferenceEngine for FlakyEngine {
+    fn payload(&self) -> usize {
+        self.inner.payload()
+    }
+
+    fn classes(&self) -> usize {
+        self.inner.classes()
+    }
+
+    fn infer1(&self, payload: &[f32]) -> Result<Vec<f32>> {
+        let n = self.calls.fetch_add(1, Ordering::SeqCst);
+        if self.fail_every > 0 && n % self.fail_every == self.fail_every - 1 {
+            anyhow::bail!("injected engine failure (call {n})");
+        }
+        self.inner.infer1(payload)
+    }
+}
+
+fn smooth_queries(k: usize, d: usize) -> Vec<Vec<f32>> {
+    (0..k)
+        .map(|j| (0..d).map(|t| ((j as f32) * 0.23 + (t as f32) * 0.017).sin()).collect())
+        .collect()
+}
+
+#[test]
+fn engine_failures_are_tolerated_like_stragglers() {
+    // 1 failure per 10 calls; S=2 spare capacity absorbs occasional losses.
+    let params = CodeParams::new(4, 2, 0);
+    let engine = Arc::new(FlakyEngine::new(8, 3, 10));
+    let pool = WorkerPool::spawn(engine, &vec![WorkerSpec::default(); params.num_workers()], 1);
+    let mut pipe = GroupPipeline::new(params);
+    pipe.timeout = Duration::from_secs(5);
+    let metrics = ServingMetrics::new();
+    let queries = smooth_queries(4, 8);
+    let qrefs: Vec<&[f32]> = queries.iter().map(|q| &q[..]).collect();
+    let mut ok = 0;
+    for _ in 0..20 {
+        // A group can still fail if > S workers error in the same group —
+        // with fail_every=10 and 6 workers that's rare; count successes.
+        if pipe.infer_group(&pool, &qrefs, &FaultPlan::none(), &metrics).is_ok() {
+            ok += 1;
+        }
+    }
+    assert!(ok >= 15, "only {ok}/20 groups succeeded");
+    assert!(metrics.errors.get() > 0, "injection never fired");
+    pool.shutdown();
+}
+
+#[test]
+fn timeout_on_too_many_stragglers_is_clean_error() {
+    // Straggle MORE workers than S tolerates: the group must time out with
+    // a descriptive error, not hang or panic.
+    let params = CodeParams::new(3, 1, 0);
+    let engine = Arc::new(LinearMockEngine::new(6, 2));
+    let pool = WorkerPool::spawn(engine, &vec![WorkerSpec::default(); params.num_workers()], 2);
+    let mut pipe = GroupPipeline::new(params);
+    pipe.timeout = Duration::from_millis(100);
+    let metrics = ServingMetrics::new();
+    let queries = smooth_queries(3, 6);
+    let qrefs: Vec<&[f32]> = queries.iter().map(|q| &q[..]).collect();
+    let plan = FaultPlan {
+        stragglers: vec![0, 1], // S+1 stragglers: only 2 fast replies < K=3
+        straggler_delay: Duration::from_secs(10),
+        ..FaultPlan::none()
+    };
+    let err = match pipe.infer_group(&pool, &qrefs, &plan, &metrics) {
+        Err(e) => e,
+        Ok(_) => panic!("group should have timed out"),
+    };
+    assert!(format!("{err:#}").contains("timed out"), "{err:#}");
+    pool.shutdown();
+}
+
+#[test]
+fn late_replies_from_timed_out_group_are_discarded() {
+    let params = CodeParams::new(3, 1, 0);
+    let engine = Arc::new(LinearMockEngine::new(6, 2));
+    let pool = WorkerPool::spawn(engine, &vec![WorkerSpec::default(); params.num_workers()], 3);
+    let mut pipe = GroupPipeline::new(params);
+    pipe.timeout = Duration::from_millis(80);
+    let metrics = ServingMetrics::new();
+    let queries = smooth_queries(3, 6);
+    let qrefs: Vec<&[f32]> = queries.iter().map(|q| &q[..]).collect();
+    // Group 1 times out (2 workers straggle for 300ms).
+    let plan = FaultPlan {
+        stragglers: vec![0, 1],
+        straggler_delay: Duration::from_millis(300),
+        ..FaultPlan::none()
+    };
+    assert!(pipe.infer_group(&pool, &qrefs, &plan, &metrics).is_err());
+    // Group 2 runs clean while group 1's late replies drain in.
+    std::thread::sleep(Duration::from_millis(350));
+    let out = pipe.infer_group(&pool, &qrefs, &FaultPlan::none(), &metrics).unwrap();
+    assert_eq!(out.predictions.len(), 3);
+    assert!(
+        metrics.stragglers_cancelled.get() > 0,
+        "late replies should have been counted as cancelled"
+    );
+    pool.shutdown();
+}
+
+#[test]
+fn pool_shutdown_mid_group_does_not_hang() {
+    let params = CodeParams::new(3, 1, 0);
+    let engine = Arc::new(LinearMockEngine::new(6, 2));
+    let pool = WorkerPool::spawn(engine, &vec![WorkerSpec::default(); params.num_workers()], 4);
+    // Send tasks then immediately shut down.
+    for w in 0..params.num_workers() {
+        pool.send(
+            w,
+            approxifer::workers::WorkerTask {
+                group: 1,
+                payload: vec![0.0; 6],
+                extra_delay: Duration::from_millis(50),
+                corrupt: None,
+            },
+        )
+        .unwrap();
+    }
+    pool.shutdown(); // must join, not deadlock
+}

@@ -1,0 +1,91 @@
+//! Integration: online service + TCP server over mock engines — the whole
+//! L3 stack minus PJRT. No artifacts required.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use approxifer::coding::CodeParams;
+use approxifer::coordinator::{Service, ServiceConfig};
+use approxifer::server::{Client, Server};
+use approxifer::sim::{run_scenario, Arrivals};
+use approxifer::workers::{
+    ByzantineMode, InferenceEngine, LatencyModel, LinearMockEngine, WorkerSpec,
+};
+
+fn service(k: usize, s: usize, e: usize, d: usize, c: usize) -> (Arc<Service>, Arc<LinearMockEngine>) {
+    let engine = Arc::new(LinearMockEngine::new(d, c));
+    let params = CodeParams::new(k, s, e);
+    let mut cfg = ServiceConfig::new(params);
+    cfg.flush_after = Duration::from_millis(10);
+    (Arc::new(Service::start(engine.clone(), cfg)), engine)
+}
+
+#[test]
+fn tcp_roundtrip_approximates_reference() {
+    let (svc, engine) = service(4, 1, 0, 16, 5);
+    let server = Server::start("127.0.0.1:0", svc.clone(), 16).unwrap();
+    let addr = server.addr();
+    let mut clients: Vec<_> = (0..4).map(|_| Client::connect(&addr).unwrap()).collect();
+    // Four queries from four connections fill exactly one group.
+    let queries: Vec<Vec<f32>> = (0..4)
+        .map(|j| (0..16).map(|t| ((j as f32) * 0.4 + (t as f32) * 0.05).sin()).collect())
+        .collect();
+    let mut joins = Vec::new();
+    for (mut cl, q) in clients.drain(..).zip(queries.clone()) {
+        joins.push(std::thread::spawn(move || cl.predict(&q).unwrap()));
+    }
+    for (j, (join, q)) in joins.into_iter().zip(&queries).enumerate() {
+        let pred = join.join().unwrap();
+        let want = engine.infer1(q).unwrap();
+        for t in 0..5 {
+            assert!(
+                (pred[t] - want[t]).abs() < 0.3,
+                "q{j} c{t}: {} vs {}",
+                pred[t],
+                want[t]
+            );
+        }
+    }
+    server.shutdown();
+}
+
+#[test]
+fn scenario_under_straggler_tail_completes() {
+    let engine = Arc::new(LinearMockEngine::new(8, 3));
+    let params = CodeParams::new(4, 1, 0);
+    let mut cfg = ServiceConfig::new(params);
+    cfg.flush_after = Duration::from_millis(5);
+    cfg.worker_specs = vec![
+        WorkerSpec { latency: LatencyModel::Bimodal { base_ms: 0.5, straggler_ms: 40.0, p: 0.1 } };
+        params.num_workers()
+    ];
+    let svc = Arc::new(Service::start(engine, cfg));
+    let report = run_scenario(&svc, 8, 64, Arrivals::Poisson { rate: 500.0 }, 3).unwrap();
+    assert_eq!(report.completed, 64);
+    assert_eq!(report.failed, 0);
+    // The tail is ridden out: p50 well under the 40ms straggler delay.
+    assert!(report.latency.p50 < 0.06, "p50={}", report.latency.p50);
+}
+
+#[test]
+fn byzantine_service_keeps_answering() {
+    let engine = Arc::new(LinearMockEngine::new(8, 6));
+    let params = CodeParams::new(3, 0, 1);
+    let mut cfg = ServiceConfig::new(params);
+    cfg.flush_after = Duration::from_millis(5);
+    cfg.byz_mode = Some(ByzantineMode::GaussianNoise { sigma: 20.0 });
+    let svc = Arc::new(Service::start(engine, cfg));
+    let report = run_scenario(&svc, 8, 30, Arrivals::Uniform { rate: 300.0 }, 4).unwrap();
+    assert_eq!(report.completed, 30);
+    assert!(svc.metrics.byzantine_flagged.get() > 0, "no adversaries flagged");
+}
+
+#[test]
+fn metrics_accumulate_across_groups() {
+    let (svc, _e) = service(2, 1, 0, 8, 3);
+    let report = run_scenario(&svc, 8, 20, Arrivals::Uniform { rate: 1e5 }, 5).unwrap();
+    assert_eq!(report.completed, 20);
+    assert_eq!(svc.metrics.queries_received.get(), 20);
+    assert_eq!(svc.metrics.groups_decoded.get(), 10);
+    assert!(svc.metrics.group_latency.count() >= 10);
+}
