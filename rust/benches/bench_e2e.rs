@@ -40,7 +40,8 @@ fn main() {
     {
         let engine: Arc<dyn InferenceEngine> = Arc::new(DelayMockEngine::new(d, c, compute));
         let params = CodeParams::new(k, 1, 0);
-        let pool = WorkerPool::spawn(engine, &vec![WorkerSpec { latency: tail }; params.num_workers()], 1);
+        let specs = vec![WorkerSpec { latency: tail }; params.num_workers()];
+        let pool = WorkerPool::spawn(engine, &specs, 1);
         let mut pipe = GroupPipeline::new(params);
         let metrics = ServingMetrics::new();
         let qs = queries(k, d);
@@ -53,7 +54,8 @@ fn main() {
     {
         let engine: Arc<dyn InferenceEngine> = Arc::new(DelayMockEngine::new(d, c, compute));
         let params = ReplicationParams::new(k, 1, 0);
-        let pool = WorkerPool::spawn(engine, &vec![WorkerSpec { latency: tail }; params.num_workers()], 2);
+        let specs = vec![WorkerSpec { latency: tail }; params.num_workers()];
+        let pool = WorkerPool::spawn(engine, &specs, 2);
         let mut pipe = ReplicationPipeline::new(params);
         let metrics = ServingMetrics::new();
         let qs = queries(k, d);
@@ -67,7 +69,8 @@ fn main() {
         // No redundancy: replication with 1 copy (wait for all).
         let engine: Arc<dyn InferenceEngine> = Arc::new(DelayMockEngine::new(d, c, compute));
         let params = ReplicationParams::new(k, 0, 0);
-        let pool = WorkerPool::spawn(engine, &vec![WorkerSpec { latency: tail }; params.num_workers()], 3);
+        let specs = vec![WorkerSpec { latency: tail }; params.num_workers()];
+        let pool = WorkerPool::spawn(engine, &specs, 3);
         let mut pipe = ReplicationPipeline::new(params);
         let metrics = ServingMetrics::new();
         let qs = queries(k, d);

@@ -1,18 +1,36 @@
-//! Online-service throughput benchmarks: the batcher + coordinator +
-//! worker-pool stack under closed-loop load with mock engines (model cost
-//! controlled), sweeping K and the flush deadline.
+//! Online-service throughput benchmarks: the batcher + concurrent
+//! coordinator + worker-pool stack under open-loop load with mock engines
+//! (model cost controlled), sweeping K, the flush deadline and — the
+//! headline — `max_inflight`, the number of K-groups the coordinator keeps
+//! in flight at once.
+//!
+//! Quick mode (`APPROXIFER_BENCH_QUICK=1`) shrinks request counts for CI
+//! smoke runs; `BENCH_PR_JSON=path` additionally writes the max_inflight
+//! sweep as a JSON artifact so the perf trajectory accumulates across PRs.
 
+use std::io::Write;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use approxifer::coding::CodeParams;
 use approxifer::coordinator::{Service, ServiceConfig};
-use approxifer::sim::{run_scenario, Arrivals};
-use approxifer::workers::{DelayMockEngine, InferenceEngine, WorkerSpec};
+use approxifer::sim::{run_scenario, Arrivals, ScenarioReport};
+use approxifer::util::bench::quick_mode;
+use approxifer::workers::{
+    DelayMockEngine, InferenceEngine, LatencyModel, LinearMockEngine, WorkerSpec,
+};
+
+struct SweepRow {
+    max_inflight: usize,
+    report: ScenarioReport,
+}
 
 fn main() {
+    let quick = quick_mode();
+    let scale = if quick { 4 } else { 1 };
     let (d, c) = (128usize, 10usize);
-    println!("\n== service throughput (closed-loop, 0.1ms model, no tail) ==");
+
+    println!("\n== service throughput (open-loop, 0.1ms model, no tail) ==");
     println!(
         "{:<26} {:>8} {:>12} {:>12} {:>12}",
         "config", "requests", "thrpt/s", "p50_ms", "p99_ms"
@@ -25,8 +43,9 @@ fn main() {
         cfg.flush_after = Duration::from_millis(5);
         cfg.worker_specs = vec![WorkerSpec::default(); params.num_workers()];
         let service = Arc::new(Service::start(engine, cfg));
+        let total = 512 / scale;
         let report =
-            run_scenario(&service, d, 512, Arrivals::Uniform { rate: 1e6 }, 42).unwrap();
+            run_scenario(&service, d, total, Arrivals::Uniform { rate: 1e6 }, 42).unwrap();
         println!(
             "{:<26} {:>8} {:>12.1} {:>12.2} {:>12.2}",
             format!("approxifer_k{k}_s1"),
@@ -46,8 +65,9 @@ fn main() {
         let mut cfg = ServiceConfig::new(params);
         cfg.flush_after = Duration::from_millis(ms);
         let service = Arc::new(Service::start(engine, cfg));
+        let total = 256 / scale;
         let report =
-            run_scenario(&service, d, 256, Arrivals::Poisson { rate: 200.0 }, 43).unwrap();
+            run_scenario(&service, d, total, Arrivals::Poisson { rate: 200.0 }, 43).unwrap();
         println!(
             "{:<26} {:>12.1} {:>12.2} {:>12.2}",
             format!("{ms}ms"),
@@ -55,6 +75,27 @@ fn main() {
             report.latency.p50 * 1e3,
             report.latency.p99 * 1e3
         );
+    }
+
+    // ---- the headline: concurrent scheduler vs serial coordinator --------
+    // N = 10 simulated workers (K=9, S=1) with a bimodal service tail:
+    // 1 ms base, 25 ms straggler with p = 0.2. A serial coordinator pays
+    // the 9th-of-10 order statistic per group (a ~25 ms stall whenever two
+    // or more workers straggle, p ≈ 0.62); the pipelined coordinator keeps
+    // the workers busy across groups so throughput approaches the
+    // per-worker service rate instead.
+    let rows = max_inflight_sweep(d, c, if quick { 27 } else { 90 });
+    let base = rows[0].report.throughput;
+    println!("\nspeedup vs max_inflight=1:");
+    for row in &rows[1..] {
+        println!(
+            "  max_inflight={}: {:.2}x",
+            row.max_inflight,
+            row.report.throughput / base
+        );
+    }
+    if let Some(path) = std::env::var_os("BENCH_PR_JSON") {
+        write_json(&path, d, &rows);
     }
 
     println!("\n== encode throughput ceiling (host-side, K=8 S=1, d=3072) ==");
@@ -65,7 +106,7 @@ fn main() {
         let qrefs: Vec<&[f32]> = qs.iter().map(|q| &q[..]).collect();
         let mut out: Vec<Vec<f32>> = vec![Vec::new(); 9];
         let t0 = Instant::now();
-        let iters = 20_000;
+        let iters = if quick { 2_000 } else { 20_000 };
         for _ in 0..iters {
             code.encode_into(&qrefs, &mut out);
         }
@@ -76,5 +117,84 @@ fn main() {
             1.0 / per,
             8.0 / per
         );
+    }
+}
+
+/// Sweep `max_inflight` at N=10 workers under a straggler-prone tail;
+/// `groups` K-groups of load per point.
+fn max_inflight_sweep(d: usize, c: usize, groups: usize) -> Vec<SweepRow> {
+    let params = CodeParams::new(9, 1, 0); // N+1 = 10 workers
+    let total = groups * params.k;
+    println!(
+        "\n== max_inflight sweep (N={} workers, K={}, bimodal 1ms/25ms p=0.2 tail) ==",
+        params.num_workers(),
+        params.k
+    );
+    println!(
+        "{:<16} {:>8} {:>12} {:>12} {:>12} {:>14}",
+        "max_inflight", "requests", "thrpt/s", "p50_ms", "p99_ms", "inflight_waits"
+    );
+    let mut rows = Vec::new();
+    for &mi in &[1usize, 2, 4, 8] {
+        let engine: Arc<dyn InferenceEngine> = Arc::new(LinearMockEngine::new(d, c));
+        let mut cfg = ServiceConfig::new(params);
+        cfg.flush_after = Duration::from_millis(2);
+        cfg.max_inflight = mi;
+        cfg.decode_threads = 2;
+        cfg.worker_specs = vec![
+            WorkerSpec {
+                latency: LatencyModel::Bimodal { base_ms: 1.0, straggler_ms: 25.0, p: 0.2 }
+            };
+            params.num_workers()
+        ];
+        let service = Arc::new(Service::start(engine, cfg));
+        // Bursty with one giant burst = submit everything immediately: a
+        // pure open-loop flood that exposes the pipeline depth.
+        let arrivals = Arrivals::Bursty { burst: total, period_ms: 0.0 };
+        let report = run_scenario(&service, d, total, arrivals, 4242).unwrap();
+        println!(
+            "{:<16} {:>8} {:>12.1} {:>12.2} {:>12.2} {:>14}",
+            mi,
+            report.sent,
+            report.throughput,
+            report.latency.p50 * 1e3,
+            report.latency.p99 * 1e3,
+            service.metrics.inflight_full_waits.get()
+        );
+        rows.push(SweepRow { max_inflight: mi, report });
+    }
+    rows
+}
+
+/// Hand-rolled JSON artifact (no serde in this environment).
+fn write_json(path: &std::ffi::OsStr, payload: usize, rows: &[SweepRow]) {
+    let base = rows[0].report.throughput;
+    let mut out = String::from("{\n");
+    out.push_str("  \"bench\": \"bench_throughput\",\n");
+    out.push_str("  \"workers\": 10,\n  \"k\": 9,\n");
+    out.push_str(&format!("  \"payload_floats\": {payload},\n"));
+    out.push_str("  \"tail\": \"bimodal base=1ms straggler=25ms p=0.2\",\n");
+    out.push_str("  \"rows\": [\n");
+    for (i, row) in rows.iter().enumerate() {
+        let r = &row.report;
+        out.push_str(&format!(
+            "    {{\"max_inflight\": {}, \"throughput_rps\": {:.1}, \"p50_ms\": {:.2}, \
+             \"p99_ms\": {:.2}, \"completed\": {}, \"failed\": {}}}{}\n",
+            row.max_inflight,
+            r.throughput,
+            r.latency.p50 * 1e3,
+            r.latency.p99 * 1e3,
+            r.completed,
+            r.failed,
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ],\n");
+    let best =
+        rows.iter().map(|r| r.report.throughput).fold(0.0f64, f64::max) / base.max(1e-9);
+    out.push_str(&format!("  \"best_speedup_vs_serial\": {best:.2}\n}}\n"));
+    match std::fs::File::create(path).and_then(|mut f| f.write_all(out.as_bytes())) {
+        Ok(()) => println!("wrote {}", path.to_string_lossy()),
+        Err(e) => eprintln!("failed to write bench json: {e}"),
     }
 }

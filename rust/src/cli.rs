@@ -12,15 +12,26 @@ pub struct Args {
     positional: Vec<String>,
 }
 
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum CliError {
-    #[error("unknown flag --{0}")]
     Unknown(String),
-    #[error("flag --{0} expects a value")]
     MissingValue(String),
-    #[error("flag --{flag}: cannot parse '{value}' as {ty}")]
     BadValue { flag: String, value: String, ty: &'static str },
 }
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CliError::Unknown(name) => write!(f, "unknown flag --{name}"),
+            CliError::MissingValue(name) => write!(f, "flag --{name} expects a value"),
+            CliError::BadValue { flag, value, ty } => {
+                write!(f, "flag --{flag}: cannot parse '{value}' as {ty}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CliError {}
 
 /// Specification of accepted flags: (name, takes_value).
 pub struct Spec {
@@ -42,20 +53,33 @@ impl Args {
     /// are validated against `spec`.
     pub fn parse(argv: &[String], spec: &Spec) -> Result<Args, CliError> {
         let mut out = Args::default();
-        let mut it = argv.iter().peekable();
+        let mut it = argv.iter();
         while let Some(tok) = it.next() {
-            if let Some(name) = tok.strip_prefix("--") {
+            if let Some(raw) = tok.strip_prefix("--") {
+                // Support both `--k 8` and `--k=8`.
+                let (name, inline) = match raw.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (raw, None),
+                };
                 let takes = spec.lookup(name).ok_or_else(|| CliError::Unknown(name.into()))?;
                 if takes {
-                    // Support both `--k 8` and `--k=8`.
-                    let value = if let Some((n, v)) = name.split_once('=') {
-                        let _ = n;
-                        v.to_string()
-                    } else {
-                        it.next().ok_or_else(|| CliError::MissingValue(name.into()))?.clone()
+                    let value = match inline {
+                        Some(v) => v,
+                        None => {
+                            it.next().ok_or_else(|| CliError::MissingValue(name.into()))?.clone()
+                        }
                     };
-                    out.flags.entry(name.split('=').next().unwrap().into()).or_default().push(value);
+                    out.flags.entry(name.into()).or_default().push(value);
                 } else {
+                    if let Some(v) = inline {
+                        // `--switch=x` on a no-value flag: refuse rather than
+                        // silently recording the switch as set.
+                        return Err(CliError::BadValue {
+                            flag: name.into(),
+                            value: v,
+                            ty: "switch (takes no value)",
+                        });
+                    }
                     out.flags.entry(name.into()).or_default().push("true".into());
                 }
             } else if out.subcommand.is_none() {
@@ -165,6 +189,22 @@ mod tests {
     fn bad_value_typed_error() {
         let a = Args::parse(&argv(&["run", "--k", "eight"]), &spec()).unwrap();
         assert!(matches!(a.get_usize("k", 0), Err(CliError::BadValue { .. })));
+    }
+
+    #[test]
+    fn equals_form_parses() {
+        let a = Args::parse(&argv(&["serve", "--k=12", "--set=a=1"]), &spec()).unwrap();
+        assert_eq!(a.get_usize("k", 0).unwrap(), 12);
+        assert_eq!(a.get_all("set"), vec!["a=1"]);
+    }
+
+    #[test]
+    fn inline_value_on_switch_rejected() {
+        // `--verbose=false` must not silently set the switch to true.
+        assert!(matches!(
+            Args::parse(&argv(&["run", "--verbose=false"]), &spec()),
+            Err(CliError::BadValue { .. })
+        ));
     }
 
     #[test]

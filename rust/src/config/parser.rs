@@ -22,15 +22,26 @@ pub enum Value {
 }
 
 /// Config errors carry line numbers.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ConfigError {
-    #[error("config line {line}: {msg}")]
     Parse { line: usize, msg: String },
-    #[error("missing key '{0}'")]
     Missing(String),
-    #[error("key '{key}': expected {expected}, got {got}")]
     Type { key: String, expected: &'static str, got: String },
 }
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::Parse { line, msg } => write!(f, "config line {line}: {msg}"),
+            ConfigError::Missing(key) => write!(f, "missing key '{key}'"),
+            ConfigError::Type { key, expected, got } => {
+                write!(f, "key '{key}': expected {expected}, got {got}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
 
 impl ConfigDoc {
     pub fn parse(text: &str) -> Result<ConfigDoc, ConfigError> {

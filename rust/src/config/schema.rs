@@ -28,6 +28,12 @@ pub struct AppConfig {
     pub bind: String,
     /// Batcher flush deadline.
     pub flush_after: Duration,
+    /// Groups that may be in flight (dispatched, undecoded) at once.
+    pub max_inflight: usize,
+    /// Threads in the coordinator's locate/decode pool.
+    pub decode_threads: usize,
+    /// Per-group collection deadline.
+    pub group_timeout: Duration,
     /// Worker latency model (same for all workers).
     pub worker_latency: LatencyModel,
     /// Fraction of groups that get forced stragglers.
@@ -50,6 +56,9 @@ impl Default for AppConfig {
             artifacts: "artifacts".into(),
             bind: "127.0.0.1:7700".into(),
             flush_after: Duration::from_millis(20),
+            max_inflight: 4,
+            decode_threads: 2,
+            group_timeout: Duration::from_secs(30),
             worker_latency: LatencyModel::None,
             straggler_rate: 0.0,
             straggler_delay: Duration::from_millis(100),
@@ -106,6 +115,24 @@ impl AppConfig {
         if let Some(ms) = doc.get_f64("serving.flush_after_ms")? {
             cfg.flush_after = Duration::from_secs_f64(ms / 1e3);
         }
+        if let Some(v) = doc.get_usize("serving.max_inflight")? {
+            if v == 0 {
+                bail!("serving.max_inflight must be >= 1");
+            }
+            cfg.max_inflight = v;
+        }
+        if let Some(v) = doc.get_usize("serving.decode_threads")? {
+            if v == 0 {
+                bail!("serving.decode_threads must be >= 1");
+            }
+            cfg.decode_threads = v;
+        }
+        if let Some(ms) = doc.get_f64("serving.group_timeout_ms")? {
+            if ms <= 0.0 {
+                bail!("serving.group_timeout_ms must be positive");
+            }
+            cfg.group_timeout = Duration::from_secs_f64(ms / 1e3);
+        }
         if let Some(v) = doc.get_str("workers.latency") {
             cfg.worker_latency = LatencyModel::parse(&v).map_err(|e| anyhow::anyhow!(e))?;
         }
@@ -137,6 +164,33 @@ mod tests {
         let cfg = AppConfig::load(None, &[]).unwrap();
         assert_eq!(cfg.params, CodeParams::new(8, 1, 0));
         assert_eq!(cfg.strategy, Strategy::ApproxIfer);
+        assert_eq!(cfg.max_inflight, 4);
+        assert_eq!(cfg.decode_threads, 2);
+        assert_eq!(cfg.group_timeout, Duration::from_secs(30));
+    }
+
+    #[test]
+    fn scheduler_knobs_parse_and_validate() {
+        let doc = ConfigDoc::parse(
+            r#"
+            [serving]
+            max_inflight = 8
+            decode_threads = 3
+            group_timeout_ms = 1500
+            "#,
+        )
+        .unwrap();
+        let cfg = AppConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.max_inflight, 8);
+        assert_eq!(cfg.decode_threads, 3);
+        assert_eq!(cfg.group_timeout, Duration::from_millis(1500));
+
+        let doc = ConfigDoc::parse("[serving]\nmax_inflight = 0\n").unwrap();
+        assert!(AppConfig::from_doc(&doc).is_err());
+        let doc = ConfigDoc::parse("[serving]\ndecode_threads = 0\n").unwrap();
+        assert!(AppConfig::from_doc(&doc).is_err());
+        let doc = ConfigDoc::parse("[serving]\ngroup_timeout_ms = 0\n").unwrap();
+        assert!(AppConfig::from_doc(&doc).is_err());
     }
 
     #[test]

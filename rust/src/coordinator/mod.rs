@@ -8,7 +8,7 @@ pub mod pipeline;
 pub mod service;
 
 pub use baselines::{ParmProxyPipeline, ReplicationPipeline};
-pub use pipeline::{FaultPlan, GroupOutcome, GroupPipeline};
+pub use pipeline::{locate_and_decode, FaultPlan, GroupOutcome, GroupPipeline};
 pub use service::{PredictionHandle, Service, ServiceConfig};
 
 /// Which serving strategy a deployment uses.

@@ -45,6 +45,46 @@ pub struct GroupOutcome {
     pub latency: Duration,
 }
 
+/// The locate + decode tail of the pipeline, shared verbatim between the
+/// synchronous [`GroupPipeline`] and the concurrent
+/// [`crate::coordinator::Service`] decode pool: given the per-worker replies
+/// of one collected group, vote out up to `E` Byzantine replies
+/// (Algorithm 2) and Berrut-decode the rest (eq. (10)-(11)).
+pub fn locate_and_decode(
+    code: &ApproxIferCode,
+    method: LocatorMethod,
+    replies: &[Option<Vec<f32>>],
+    metrics: &ServingMetrics,
+) -> Result<(Vec<Vec<f32>>, Vec<usize>, Vec<usize>)> {
+    let params = code.params();
+    let avail: Vec<usize> = (0..replies.len()).filter(|&i| replies[i].is_some()).collect();
+    if avail.is_empty() {
+        bail!("no replies to decode");
+    }
+
+    // --- locate Byzantine replies (Algorithm 2) -------------------------
+    let t0 = Instant::now();
+    let mut decode_set = avail.clone();
+    let mut flagged_workers = Vec::new();
+    if params.e > 0 {
+        let nodes: Vec<f64> = avail.iter().map(|&i| code.beta()[i]).collect();
+        let preds: Vec<&[f32]> = avail.iter().map(|&i| replies[i].as_deref().unwrap()).collect();
+        let outcome = locate_by_vote(&nodes, &preds, params.k, params.e, method)?;
+        flagged_workers = outcome.erroneous.iter().map(|&pos| avail[pos]).collect();
+        metrics.byzantine_flagged.add(flagged_workers.len() as u64);
+        decode_set = avail.iter().copied().filter(|i| !flagged_workers.contains(i)).collect();
+    }
+    metrics.locate_latency.record(t0.elapsed().as_secs_f64());
+
+    // --- decode (eq. (10)-(11)) -----------------------------------------
+    let t0 = Instant::now();
+    let payloads: Vec<&[f32]> =
+        decode_set.iter().map(|&i| replies[i].as_deref().unwrap()).collect();
+    let predictions = code.decode(&decode_set, &payloads);
+    metrics.decode_latency.record(t0.elapsed().as_secs_f64());
+    Ok((predictions, decode_set, flagged_workers))
+}
+
 /// The coded-inference pipeline over a worker pool.
 pub struct GroupPipeline {
     code: ApproxIferCode,
@@ -128,6 +168,7 @@ impl GroupPipeline {
         let wait_for = params.wait_for().min(nw);
         let mut replies: Vec<Option<Vec<f32>>> = vec![None; nw];
         let mut got = 0usize;
+        let mut errors = 0usize;
         let deadline = Instant::now() + self.timeout;
         while got < wait_for {
             let remaining = deadline.saturating_duration_since(Instant::now());
@@ -151,39 +192,27 @@ impl GroupPipeline {
                 }
                 Err(e) => {
                     metrics.errors.inc();
+                    errors += 1;
                     log::warn!("worker {} failed group {group}: {e}", reply.worker_id);
+                    // Fail fast once the wait count is unreachable (each
+                    // worker replies at most once per group) — mirrors the
+                    // concurrent router's behavior.
+                    if nw - errors < wait_for {
+                        bail!(
+                            "group {group}: undecodable, {errors} worker error(s) \
+                             leave at most {}/{wait_for} replies",
+                            nw - errors
+                        );
+                    }
                 }
             }
         }
-        let avail: Vec<usize> =
-            (0..nw).filter(|&i| replies[i].is_some()).collect();
-
-        // --- locate Byzantine replies (Algorithm 2) -------------------------
-        let t0 = Instant::now();
-        let mut decode_set = avail.clone();
-        let mut flagged_workers = Vec::new();
-        if params.e > 0 {
-            let nodes: Vec<f64> = avail.iter().map(|&i| self.code.beta()[i]).collect();
-            let preds: Vec<&[f32]> =
-                avail.iter().map(|&i| replies[i].as_deref().unwrap()).collect();
-            let outcome = locate_by_vote(&nodes, &preds, params.k, params.e, self.method)?;
-            flagged_workers = outcome.erroneous.iter().map(|&pos| avail[pos]).collect();
-            metrics.byzantine_flagged.add(flagged_workers.len() as u64);
-            decode_set =
-                avail.iter().copied().filter(|i| !flagged_workers.contains(i)).collect();
-        }
-        metrics.locate_latency.record(t0.elapsed().as_secs_f64());
-
-        // --- decode (eq. (10)-(11)) -----------------------------------------
-        let t0 = Instant::now();
-        let payloads: Vec<&[f32]> =
-            decode_set.iter().map(|&i| replies[i].as_deref().unwrap()).collect();
-        let predictions = self.code.decode(&decode_set, &payloads);
-        metrics.decode_latency.record(t0.elapsed().as_secs_f64());
+        let (predictions, decode_set, flagged) =
+            locate_and_decode(&self.code, self.method, &replies, metrics)?;
         metrics.groups_decoded.inc();
         let latency = t_group.elapsed();
         metrics.group_latency.record(latency.as_secs_f64());
-        Ok(GroupOutcome { predictions, decode_set, flagged: flagged_workers, latency })
+        Ok(GroupOutcome { predictions, decode_set, flagged, latency })
     }
 }
 

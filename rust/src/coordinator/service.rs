@@ -1,28 +1,51 @@
 //! Online serving front: a dynamic batcher that groups incoming queries
-//! into `K`-groups (flushing on size or deadline) and drives the
-//! [`GroupPipeline`] on a dedicated coordinator thread. Clients get a
-//! oneshot-style receiver that resolves to the decoded prediction.
+//! into `K`-groups (flushing on size or deadline) and keeps **multiple
+//! groups in flight at once**.
 //!
-//! This is the component a downstream user embeds
-//! (`Service::submit(query) → PredictionHandle`), and what the TCP server
-//! front-end calls into.
+//! Pipeline stages, each overlapping the others:
+//!
+//! * **Batcher** (this module's coordinator thread) — accumulates queries,
+//!   encodes a ready group and fans it out to the worker pool, then
+//!   immediately starts on the next group. A counting gate bounds the
+//!   number of dispatched-but-undecoded groups at
+//!   [`ServiceConfig::max_inflight`].
+//! * **Reply router** ([`crate::workers::ReplyRouter`]) — demultiplexes the
+//!   pool's shared reply stream per group; the moment a group's fastest
+//!   subset has arrived it is handed to the decode pool. A straggling group
+//!   g keeps collecting in the background while groups g+1.. fan out and
+//!   complete — no head-of-line blocking.
+//! * **Decode pool** — [`ServiceConfig::decode_threads`] threads pulling
+//!   collected groups from a shared queue and running Byzantine location +
+//!   Berrut decode ([`crate::coordinator::pipeline::locate_and_decode`],
+//!   the exact code path the synchronous pipeline uses), so an expensive
+//!   locate on one group never stalls fan-out or decode of another.
+//!
+//! Clients get a oneshot-style receiver that resolves to the decoded
+//! prediction ([`Service::submit`]), or register a tagged reply channel
+//! ([`Service::submit_tagged`]) so responses can be correlated by request
+//! id when they complete out of order — the TCP front-end relies on this.
 
+use std::collections::HashMap;
+use std::fmt;
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::coding::CodeParams;
+use crate::coding::{ApproxIferCode, CodeParams, LocatorMethod};
 use crate::metrics::ServingMetrics;
 use crate::util::rng::Rng;
-use crate::workers::{ByzantineMode, InferenceEngine, WorkerPool, WorkerSpec};
+use crate::workers::{
+    ByzantineMode, CollectedGroup, InferenceEngine, ReplyRouter, WorkerPool, WorkerSpec,
+    WorkerTask,
+};
 
-use super::pipeline::{FaultPlan, GroupPipeline};
+use super::pipeline::{locate_and_decode, FaultPlan};
 
 /// Service configuration.
-#[derive(Clone, Debug)]
+#[derive(Clone)]
 pub struct ServiceConfig {
     pub params: CodeParams,
     /// Flush a partial group after this long.
@@ -36,6 +59,19 @@ pub struct ServiceConfig {
     /// If set, every group gets `params.e` random Byzantine workers.
     pub byz_mode: Option<ByzantineMode>,
     pub seed: u64,
+    /// Groups that may be in flight (dispatched, not yet decoded) at once;
+    /// the batcher blocks dispatching beyond this. `1` reproduces the old
+    /// serial coordinator.
+    pub max_inflight: usize,
+    /// Threads in the locate/decode pool.
+    pub decode_threads: usize,
+    /// Per-group collection deadline (a group short of its fastest-subset
+    /// count past this errors out instead of stalling the service).
+    pub group_timeout: Duration,
+    /// Experiment hook: exact per-group fault plan keyed by group index
+    /// (1-based dispatch order). Overrides the stochastic
+    /// `straggler_rate`/`byz_mode` injection when set.
+    pub fault_hook: Option<Arc<dyn Fn(u64) -> FaultPlan + Send + Sync>>,
 }
 
 impl ServiceConfig {
@@ -48,7 +84,27 @@ impl ServiceConfig {
             straggler_delay: Duration::from_millis(100),
             byz_mode: None,
             seed: 0xA11CE,
+            max_inflight: 4,
+            decode_threads: 2,
+            group_timeout: Duration::from_secs(30),
+            fault_hook: None,
         }
+    }
+}
+
+impl fmt::Debug for ServiceConfig {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("ServiceConfig")
+            .field("params", &self.params)
+            .field("flush_after", &self.flush_after)
+            .field("workers", &self.worker_specs.len())
+            .field("straggler_rate", &self.straggler_rate)
+            .field("byz_mode", &self.byz_mode)
+            .field("max_inflight", &self.max_inflight)
+            .field("decode_threads", &self.decode_threads)
+            .field("group_timeout", &self.group_timeout)
+            .field("fault_hook", &self.fault_hook.is_some())
+            .finish()
     }
 }
 
@@ -74,9 +130,31 @@ impl PredictionHandle {
     }
 }
 
+/// Where one query's answer goes.
+enum ReplySink {
+    /// Oneshot channel backing a [`PredictionHandle`].
+    Channel(Sender<Result<Vec<f32>, String>>),
+    /// Shared channel with a caller-chosen id (TCP front-end: responses
+    /// must carry their request id because they complete out of order).
+    Tagged { id: u64, tx: Sender<(u64, Result<Vec<f32>, String>)> },
+}
+
+impl ReplySink {
+    fn send(&self, result: Result<Vec<f32>, String>) {
+        match self {
+            ReplySink::Channel(tx) => {
+                let _ = tx.send(result);
+            }
+            ReplySink::Tagged { id, tx } => {
+                let _ = tx.send((*id, result));
+            }
+        }
+    }
+}
+
 struct Submission {
     payload: Vec<f32>,
-    reply: Sender<Result<Vec<f32>, String>>,
+    reply: ReplySink,
 }
 
 enum Msg {
@@ -87,7 +165,7 @@ enum Msg {
 /// The online coded-inference service.
 pub struct Service {
     tx: Sender<Msg>,
-    coordinator: Option<JoinHandle<()>>,
+    batcher: Option<JoinHandle<()>>,
     pub metrics: Arc<ServingMetrics>,
 }
 
@@ -97,11 +175,11 @@ impl Service {
         let metrics = Arc::new(ServingMetrics::new());
         let (tx, rx) = channel::<Msg>();
         let m = metrics.clone();
-        let coordinator = std::thread::Builder::new()
+        let batcher = std::thread::Builder::new()
             .name("coordinator".into())
-            .spawn(move || coordinator_loop(engine, cfg, rx, m))
+            .spawn(move || batcher_loop(engine, cfg, rx, m))
             .expect("spawning coordinator");
-        Service { tx, coordinator: Some(coordinator), metrics }
+        Service { tx, batcher: Some(batcher), metrics }
     }
 
     /// Submit one query payload; resolves when its group is decoded.
@@ -109,14 +187,35 @@ impl Service {
         self.metrics.queries_received.inc();
         let (reply, rx) = channel();
         // If the coordinator is gone the handle errors on wait.
-        let _ = self.tx.send(Msg::Query(Submission { payload, reply }));
+        let _ = self.tx.send(Msg::Query(Submission { payload, reply: ReplySink::Channel(reply) }));
         PredictionHandle { rx }
     }
 
-    /// Graceful shutdown (flushes nothing — pending partial groups error out).
+    /// Submit with a caller-chosen id over a shared reply channel. The
+    /// `(id, result)` pair is delivered whenever the query's group decodes —
+    /// possibly out of submission order.
+    pub fn submit_tagged(
+        &self,
+        id: u64,
+        payload: Vec<f32>,
+        tx: Sender<(u64, Result<Vec<f32>, String>)>,
+    ) {
+        self.metrics.queries_received.inc();
+        let sink = ReplySink::Tagged { id, tx };
+        if let Err(e) = self.tx.send(Msg::Query(Submission { payload, reply: sink })) {
+            // Batcher is gone: answer now — a tagged client has no
+            // disconnect signal to observe and would hang otherwise.
+            if let Msg::Query(s) = e.0 {
+                s.reply.send(Err("service shut down".into()));
+            }
+        }
+    }
+
+    /// Graceful shutdown: pending partial groups error out, in-flight
+    /// groups drain.
     pub fn shutdown(mut self) {
         let _ = self.tx.send(Msg::Shutdown);
-        if let Some(h) = self.coordinator.take() {
+        if let Some(h) = self.batcher.take() {
             let _ = h.join();
         }
     }
@@ -125,22 +224,95 @@ impl Service {
 impl Drop for Service {
     fn drop(&mut self) {
         let _ = self.tx.send(Msg::Shutdown);
-        if let Some(h) = self.coordinator.take() {
+        if let Some(h) = self.batcher.take() {
             let _ = h.join();
         }
     }
 }
 
-fn coordinator_loop(
+/// Counting gate bounding dispatched-but-undecoded groups.
+struct InflightGate {
+    n: Mutex<usize>,
+    cvar: Condvar,
+}
+
+impl InflightGate {
+    fn new() -> InflightGate {
+        InflightGate { n: Mutex::new(0), cvar: Condvar::new() }
+    }
+
+    fn acquire(&self, max: usize, metrics: &ServingMetrics) {
+        let mut n = self.n.lock().unwrap();
+        if *n >= max {
+            metrics.inflight_full_waits.inc();
+        }
+        while *n >= max {
+            n = self.cvar.wait(n).unwrap();
+        }
+        *n += 1;
+    }
+
+    fn release(&self) {
+        let mut n = self.n.lock().unwrap();
+        *n -= 1;
+        self.cvar.notify_all();
+    }
+
+    /// Wait (bounded) for all in-flight groups to finish.
+    fn drain(&self, cap: Duration) {
+        let deadline = Instant::now() + cap;
+        let mut n = self.n.lock().unwrap();
+        while *n > 0 {
+            let remaining = deadline.saturating_duration_since(Instant::now());
+            if remaining.is_zero() {
+                log::warn!("shutdown: {} group(s) still in flight past drain cap", *n);
+                break;
+            }
+            let (guard, _) = self.cvar.wait_timeout(n, remaining).unwrap();
+            n = guard;
+        }
+    }
+}
+
+/// Per-group context held between dispatch and decode.
+struct GroupCtx {
+    sinks: Vec<ReplySink>,
+    started: Instant,
+}
+
+type CtxMap = Arc<Mutex<HashMap<u64, GroupCtx>>>;
+
+fn batcher_loop(
     engine: Arc<dyn InferenceEngine>,
     cfg: ServiceConfig,
     rx: Receiver<Msg>,
     metrics: Arc<ServingMetrics>,
 ) {
-    let pool = WorkerPool::spawn(engine, &cfg.worker_specs, cfg.seed ^ 0x77);
-    let mut pipeline = GroupPipeline::new(cfg.params);
+    let mut pool = WorkerPool::spawn(engine, &cfg.worker_specs, cfg.seed ^ 0x77);
+    let router = pool.start_router(metrics.clone());
+    let code = Arc::new(ApproxIferCode::new(cfg.params));
+    let ctxs: CtxMap = Arc::new(Mutex::new(HashMap::new()));
+    let gate = Arc::new(InflightGate::new());
+    let (decode_tx, decode_rx) = channel::<CollectedGroup>();
+    let decode_rx = Arc::new(Mutex::new(decode_rx));
+    let mut decode_handles = Vec::new();
+    for t in 0..cfg.decode_threads.max(1) {
+        let rx = decode_rx.clone();
+        let code = code.clone();
+        let ctxs = ctxs.clone();
+        let gate = gate.clone();
+        let metrics = metrics.clone();
+        let params = cfg.params;
+        let handle = std::thread::Builder::new()
+            .name(format!("decode-{t}"))
+            .spawn(move || decode_loop(rx, code, params, ctxs, gate, metrics))
+            .expect("spawning decode worker");
+        decode_handles.push(handle);
+    }
+
     let mut rng = Rng::new(cfg.seed);
     let k = cfg.params.k;
+    let mut group_counter = 0u64;
     let mut pending: Vec<Submission> = Vec::with_capacity(k);
     let mut first_at: Option<Instant> = None;
     loop {
@@ -150,7 +322,19 @@ fn coordinator_loop(
                 let deadline = t0 + cfg.flush_after;
                 let now = Instant::now();
                 if now >= deadline {
-                    flush(&mut pipeline, &pool, &cfg, &mut rng, &mut pending, &metrics);
+                    dispatch_group(
+                        &mut group_counter,
+                        &pool,
+                        &router,
+                        &code,
+                        &cfg,
+                        &mut rng,
+                        &ctxs,
+                        &gate,
+                        &decode_tx,
+                        &metrics,
+                        &mut pending,
+                    );
                     first_at = None;
                     continue;
                 }
@@ -172,68 +356,205 @@ fn coordinator_loop(
                 }
                 pending.push(s);
                 if pending.len() == k {
-                    flush(&mut pipeline, &pool, &cfg, &mut rng, &mut pending, &metrics);
+                    dispatch_group(
+                        &mut group_counter,
+                        &pool,
+                        &router,
+                        &code,
+                        &cfg,
+                        &mut rng,
+                        &ctxs,
+                        &gate,
+                        &decode_tx,
+                        &metrics,
+                        &mut pending,
+                    );
                     first_at = None;
                 }
             }
             Msg::Shutdown => break,
         }
     }
-    // Fail any stragglers in the queue.
+    // Fail queries still waiting for a group, and any queued behind the
+    // shutdown message (their sinks would otherwise drop unanswered).
     for s in pending {
-        let _ = s.reply.send(Err("service shut down before group flush".into()));
+        s.reply.send(Err("service shut down before group flush".into()));
     }
+    while let Ok(msg) = rx.try_recv() {
+        if let Msg::Query(s) = msg {
+            s.reply.send(Err("service shut down".into()));
+        }
+    }
+    // Drain in-flight groups: the router expires anything stuck by the
+    // group deadline, so this wait is bounded.
+    gate.drain(cfg.group_timeout + Duration::from_secs(2));
+    drop(decode_tx);
+    for h in decode_handles {
+        let _ = h.join();
+    }
+    router.shutdown();
     pool.shutdown();
+    // Final sweep: queries that raced into the channel during the drain
+    // window above. (Sends after this point fail and are answered at the
+    // submit site.)
+    while let Ok(msg) = rx.try_recv() {
+        if let Msg::Query(s) = msg {
+            s.reply.send(Err("service shut down".into()));
+        }
+    }
 }
 
-/// Flush one (possibly partial) group: pad by repeating the last query —
-/// padded slots' predictions are discarded.
-fn flush(
-    pipeline: &mut GroupPipeline,
+/// Encode, register and fan out one (possibly partial) group: pad by
+/// repeating the last query — padded slots' predictions are discarded.
+/// Blocks while `max_inflight` groups are already out.
+fn dispatch_group(
+    group_counter: &mut u64,
     pool: &WorkerPool,
+    router: &ReplyRouter,
+    code: &ApproxIferCode,
     cfg: &ServiceConfig,
     rng: &mut Rng,
-    pending: &mut Vec<Submission>,
+    ctxs: &CtxMap,
+    gate: &InflightGate,
+    decode_tx: &Sender<CollectedGroup>,
     metrics: &ServingMetrics,
+    pending: &mut Vec<Submission>,
 ) {
     if pending.is_empty() {
         return;
     }
-    let k = cfg.params.k;
+    gate.acquire(cfg.max_inflight.max(1), metrics);
+    *group_counter += 1;
+    let group = *group_counter;
+    let params = cfg.params;
+    let k = params.k;
+    let nw = params.num_workers();
     let real = pending.len();
     let submissions: Vec<Submission> = pending.drain(..).collect();
     let mut payloads: Vec<&[f32]> = submissions.iter().map(|s| &s.payload[..]).collect();
     while payloads.len() < k {
         payloads.push(&submissions[real - 1].payload);
     }
+
+    // --- encode (eq. (4)-(8)) -------------------------------------------
+    let t0 = Instant::now();
+    let d = payloads[0].len();
+    let mut coded: Vec<Vec<f32>> = vec![vec![0.0; d]; nw];
+    code.encode_into(&payloads, &mut coded);
+    metrics.encode_latency.record(t0.elapsed().as_secs_f64());
+
     // Experiment fault injection (off by default).
-    let nw = cfg.params.num_workers();
-    let plan = FaultPlan {
-        stragglers: if cfg.params.s > 0 && rng.chance(cfg.straggler_rate) {
-            rng.subset(nw, cfg.params.s)
-        } else {
-            Vec::new()
+    let plan = match &cfg.fault_hook {
+        Some(hook) => hook(group),
+        None => FaultPlan {
+            stragglers: if params.s > 0 && rng.chance(cfg.straggler_rate) {
+                rng.subset(nw, params.s)
+            } else {
+                Vec::new()
+            },
+            byzantine: if cfg.byz_mode.is_some() && params.e > 0 {
+                rng.subset(nw, params.e)
+            } else {
+                Vec::new()
+            },
+            byz_mode: cfg.byz_mode,
+            straggler_delay: cfg.straggler_delay,
         },
-        byzantine: if cfg.byz_mode.is_some() && cfg.params.e > 0 {
-            rng.subset(nw, cfg.params.e)
-        } else {
-            Vec::new()
-        },
-        byz_mode: cfg.byz_mode,
-        straggler_delay: cfg.straggler_delay,
     };
-    match pipeline.infer_group(pool, &payloads, &plan, metrics) {
-        Ok(outcome) => {
-            for (s, pred) in submissions.iter().zip(outcome.predictions.into_iter()) {
-                let _ = s.reply.send(Ok(pred));
+
+    // Register reply routing *before* fan-out: replies may beat us back.
+    let sinks: Vec<ReplySink> = submissions.into_iter().map(|s| s.reply).collect();
+    ctxs.lock().unwrap().insert(group, GroupCtx { sinks, started: Instant::now() });
+    let wait_for = params.wait_for().min(nw);
+    let deadline = Instant::now() + cfg.group_timeout;
+    router.register(group, nw, wait_for, deadline, decode_tx.clone());
+    metrics.groups_dispatched.inc();
+
+    // --- fan out ----------------------------------------------------------
+    for (i, payload) in coded.into_iter().enumerate() {
+        let task = WorkerTask {
+            group,
+            payload,
+            extra_delay: if plan.stragglers.contains(&i) {
+                plan.straggler_delay
+            } else {
+                Duration::ZERO
+            },
+            corrupt: if plan.byzantine.contains(&i) { plan.byz_mode } else { None },
+        };
+        if pool.send(i, task).is_err() {
+            // Worker pool is gone; fail the group unless the router already
+            // delivered it (whoever removes the ctx owns the gate slot).
+            router.deregister(group);
+            if let Some(ctx) = ctxs.lock().unwrap().remove(&group) {
+                metrics.groups_failed.inc();
+                for sink in &ctx.sinks {
+                    sink.send(Err("worker pool shut down".into()));
+                }
+                gate.release();
+            }
+            return;
+        }
+    }
+}
+
+fn decode_loop(
+    rx: Arc<Mutex<Receiver<CollectedGroup>>>,
+    code: Arc<ApproxIferCode>,
+    params: CodeParams,
+    ctxs: CtxMap,
+    gate: Arc<InflightGate>,
+    metrics: Arc<ServingMetrics>,
+) {
+    loop {
+        // Handoff receive: the lock is held while blocking, which is fine —
+        // a waiting peer takes the very next collected group.
+        let msg = {
+            let guard = rx.lock().unwrap();
+            guard.recv()
+        };
+        let Ok(collected) = msg else { break };
+        let Some(ctx) = ctxs.lock().unwrap().remove(&collected.group) else {
+            // Dispatch failed mid-fan-out and already answered the clients.
+            continue;
+        };
+        let nw = params.num_workers();
+        let wait_for = params.wait_for().min(nw);
+        let result = if collected.complete {
+            locate_and_decode(&code, LocatorMethod::Pinned, &collected.replies, &metrics)
+        } else {
+            // Mirror the router's two incomplete outcomes: deadline expiry
+            // vs fail-fast when worker errors made the wait count
+            // unreachable (see route_reply).
+            let why = if collected.errors > 0 && nw - collected.errors < wait_for {
+                "undecodable (too many worker errors)"
+            } else {
+                "timed out"
+            };
+            Err(anyhow::anyhow!(
+                "group {} {why} with {}/{wait_for} replies ({} worker errors)",
+                collected.group,
+                collected.received,
+                collected.errors
+            ))
+        };
+        match result {
+            Ok((predictions, _decode_set, _flagged)) => {
+                metrics.groups_decoded.inc();
+                metrics.group_latency.record(ctx.started.elapsed().as_secs_f64());
+                for (sink, pred) in ctx.sinks.iter().zip(predictions.into_iter()) {
+                    sink.send(Ok(pred));
+                }
+            }
+            Err(e) => {
+                metrics.groups_failed.inc();
+                let msg = format!("group inference failed: {e:#}");
+                for sink in &ctx.sinks {
+                    sink.send(Err(msg.clone()));
+                }
             }
         }
-        Err(e) => {
-            let msg = format!("group inference failed: {e:#}");
-            for s in &submissions {
-                let _ = s.reply.send(Err(msg.clone()));
-            }
-        }
+        gate.release();
     }
 }
 
@@ -301,6 +622,44 @@ mod tests {
     }
 
     #[test]
+    fn serial_mode_still_works() {
+        // max_inflight = 1 reproduces the old one-group-at-a-time behavior.
+        let params = CodeParams::new(2, 1, 0);
+        let engine = Arc::new(LinearMockEngine::new(6, 3));
+        let mut cfg = ServiceConfig::new(params);
+        cfg.max_inflight = 1;
+        cfg.decode_threads = 1;
+        let svc = Service::start(engine, cfg);
+        let handles: Vec<PredictionHandle> =
+            (0..8).map(|j| svc.submit(smooth_payload(j, 6))).collect();
+        for h in handles {
+            h.wait_timeout(Duration::from_secs(10)).unwrap();
+        }
+        assert_eq!(svc.metrics.groups_decoded.get(), 4);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn tagged_submissions_carry_their_ids() {
+        let params = CodeParams::new(2, 1, 0);
+        let engine = Arc::new(LinearMockEngine::new(6, 3));
+        let svc = Service::start(engine, ServiceConfig::new(params));
+        let (tx, rx) = channel();
+        for id in [17u64, 99, 3, 40] {
+            svc.submit_tagged(id, smooth_payload(id as usize, 6), tx.clone());
+        }
+        let mut seen: Vec<u64> = Vec::new();
+        for _ in 0..4 {
+            let (id, result) = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+            assert!(result.is_ok());
+            seen.push(id);
+        }
+        seen.sort_unstable();
+        assert_eq!(seen, vec![3, 17, 40, 99]);
+        svc.shutdown();
+    }
+
+    #[test]
     fn shutdown_fails_pending_queries() {
         let params = CodeParams::new(8, 1, 0);
         let engine = Arc::new(LinearMockEngine::new(6, 3));
@@ -310,5 +669,29 @@ mod tests {
         let h = svc.submit(smooth_payload(0, 6));
         svc.shutdown();
         assert!(h.wait().is_err());
+    }
+
+    #[test]
+    fn group_timeout_errors_instead_of_hanging() {
+        // Straggle every worker far past the group deadline: the submitters
+        // must get an error at ~group_timeout, not hang.
+        let params = CodeParams::new(2, 1, 0);
+        let engine = Arc::new(LinearMockEngine::new(6, 3));
+        let mut cfg = ServiceConfig::new(params);
+        cfg.group_timeout = Duration::from_millis(120);
+        let nw = params.num_workers();
+        cfg.fault_hook = Some(Arc::new(move |_g| FaultPlan {
+            stragglers: (0..nw).collect(),
+            straggler_delay: Duration::from_secs(5),
+            ..FaultPlan::none()
+        }));
+        let svc = Service::start(engine, cfg);
+        let h0 = svc.submit(smooth_payload(0, 6));
+        let h1 = svc.submit(smooth_payload(1, 6));
+        let err = h0.wait_timeout(Duration::from_secs(5)).unwrap_err();
+        assert!(format!("{err:#}").contains("timed out"), "{err:#}");
+        assert!(h1.wait_timeout(Duration::from_secs(5)).is_err());
+        assert_eq!(svc.metrics.groups_failed.get(), 1);
+        svc.shutdown();
     }
 }

@@ -6,24 +6,34 @@
 //!
 //! * **Layer 3 (this crate)** — the serving coordinator: request batching
 //!   into `K`-groups, Berrut rational encoding of queries, fan-out to `N+1`
-//!   workers (each running the *same* hosted model via PJRT), fastest-subset
-//!   collection, Byzantine error location (Algorithms 1–2) and Berrut
-//!   decoding, plus replication and ParM-proxy baselines, a TCP front-end,
-//!   metrics and the experiment harness that regenerates every figure in the
-//!   paper.
+//!   workers (each running the *same* hosted model), **concurrent
+//!   multi-group scheduling** (up to `max_inflight` groups encoded, fanned
+//!   out and collected simultaneously, with per-group reply routing and a
+//!   decode thread pool — a straggling group never head-of-line blocks the
+//!   next), fastest-subset collection, Byzantine error location
+//!   (Algorithms 1–2) and Berrut decoding, plus replication and ParM-proxy
+//!   baselines, a TCP front-end with out-of-order response delivery keyed
+//!   by request id, metrics and the experiment harness that regenerates
+//!   every figure in the paper.
 //! * **Layer 2** — the hosted models: pure-JAX CNN classifiers, trained at
 //!   build time and lowered AOT to HLO text (`python/compile/`).
 //! * **Layer 1** — Pallas kernels for the compute hot spots (tiled matmul
 //!   classifier head, Berrut combine), verified against pure-`jnp` oracles.
 //!
 //! Python never runs on the request path: the rust binary loads the AOT
-//! artifacts and serves autonomously.
+//! artifacts and serves autonomously. (The PJRT execution backend is
+//! currently a stub — see [`crate::runtime::model`]; every artifact-free
+//! path, which is all of the coding/scheduling/serving stack over mock
+//! engines, runs for real.)
 //!
-//! Quickstart (after `make artifacts`):
+//! Build, test, bench (workspace root):
 //!
 //! ```bash
-//! cargo run --release --example quickstart
-//! cargo run --release -- figures --only fig5
+//! cargo build --release
+//! cargo test -q
+//! cargo bench --bench bench_throughput   # max_inflight sweep incl.
+//! APPROXIFER_BENCH_QUICK=1 cargo bench --bench bench_coding   # CI smoke
+//! cargo run --release --example quickstart   # needs `make artifacts`
 //! ```
 
 pub mod cli;

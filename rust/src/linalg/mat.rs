@@ -203,7 +203,8 @@ mod tests {
     #[test]
     fn matmul_associative() {
         forall("matmul-assoc", 30, |g| {
-            let (m, n, p, q) = (g.usize_in(1, 6), g.usize_in(1, 6), g.usize_in(1, 6), g.usize_in(1, 6));
+            let (m, n) = (g.usize_in(1, 6), g.usize_in(1, 6));
+            let (p, q) = (g.usize_in(1, 6), g.usize_in(1, 6));
             let a = Mat::from_fn(m, n, |_, _| g.f64_in(-2.0, 2.0));
             let b = Mat::from_fn(n, p, |_, _| g.f64_in(-2.0, 2.0));
             let c = Mat::from_fn(p, q, |_, _| g.f64_in(-2.0, 2.0));

@@ -20,15 +20,27 @@ pub struct Qr {
 }
 
 /// Errors from the linear-algebra layer.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum LinalgError {
-    #[error("matrix is rank-deficient (|r[{col}][{col}]| = {value:.3e} below tol {tol:.3e})")]
     RankDeficient { col: usize, value: f64, tol: f64 },
-    #[error("dimension mismatch: {0}")]
     Dims(String),
-    #[error("iteration failed to converge: {0}")]
     NoConverge(String),
 }
+
+impl std::fmt::Display for LinalgError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LinalgError::RankDeficient { col, value, tol } => write!(
+                f,
+                "matrix is rank-deficient (|r[{col}][{col}]| = {value:.3e} below tol {tol:.3e})"
+            ),
+            LinalgError::Dims(msg) => write!(f, "dimension mismatch: {msg}"),
+            LinalgError::NoConverge(msg) => write!(f, "iteration failed to converge: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for LinalgError {}
 
 impl Qr {
     /// Factor `a` (m×n, m ≥ n).

@@ -106,6 +106,9 @@ fn build_service(cfg: &AppConfig) -> Result<(Arc<Service>, usize)> {
     svc_cfg.straggler_delay = cfg.straggler_delay;
     svc_cfg.byz_mode = cfg.byz_mode;
     svc_cfg.seed = cfg.seed;
+    svc_cfg.max_inflight = cfg.max_inflight;
+    svc_cfg.decode_threads = cfg.decode_threads;
+    svc_cfg.group_timeout = cfg.group_timeout;
     Ok((Arc::new(Service::start(engine, svc_cfg)), payload))
 }
 

@@ -116,10 +116,14 @@ pub struct ServingMetrics {
     pub queries_received: Counter,
     pub groups_dispatched: Counter,
     pub groups_decoded: Counter,
+    /// Groups that errored out (collection timeout / undecodable).
+    pub groups_failed: Counter,
     pub worker_replies: Counter,
     pub stragglers_cancelled: Counter,
     pub byzantine_flagged: Counter,
     pub errors: Counter,
+    /// Times the batcher blocked because `max_inflight` groups were out.
+    pub inflight_full_waits: Counter,
     pub group_latency: LatencyHistogram,
     pub encode_latency: LatencyHistogram,
     pub decode_latency: LatencyHistogram,
@@ -134,14 +138,17 @@ impl ServingMetrics {
     pub fn report(&self) -> String {
         let mut out = String::new();
         out.push_str(&format!(
-            "queries={} groups={} decoded={} replies={} cancelled={} flagged={} errors={}\n",
+            "queries={} groups={} decoded={} failed={} replies={} cancelled={} flagged={} \
+             errors={} inflight_waits={}\n",
             self.queries_received.get(),
             self.groups_dispatched.get(),
             self.groups_decoded.get(),
+            self.groups_failed.get(),
             self.worker_replies.get(),
             self.stragglers_cancelled.get(),
             self.byzantine_flagged.get(),
             self.errors.get(),
+            self.inflight_full_waits.get(),
         ));
         out.push_str(&self.group_latency.summary_line("  group"));
         out.push('\n');
@@ -155,14 +162,9 @@ impl ServingMetrics {
 }
 
 /// Global registry used by the CLI `metrics` dump (simple name→line map).
+#[derive(Default)]
 pub struct Registry {
     lines: Mutex<Vec<String>>,
-}
-
-impl Default for Registry {
-    fn default() -> Self {
-        Registry { lines: Mutex::new(Vec::new()) }
-    }
 }
 
 impl Registry {

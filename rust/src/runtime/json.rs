@@ -18,12 +18,19 @@ pub enum Json {
 }
 
 /// Parse error with byte offset.
-#[derive(Debug, thiserror::Error)]
-#[error("json parse error at byte {pos}: {msg}")]
+#[derive(Debug)]
 pub struct JsonError {
     pub pos: usize,
     pub msg: String,
 }
+
+impl std::fmt::Display for JsonError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "json parse error at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for JsonError {}
 
 impl Json {
     pub fn parse(text: &str) -> Result<Json, JsonError> {
@@ -277,9 +284,12 @@ impl<'a> Parser<'a> {
         if self.peek() == Some(b'-') {
             self.pos += 1;
         }
-        while matches!(self.peek(), Some(c) if c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-'))
-        {
-            self.pos += 1;
+        loop {
+            match self.peek() {
+                Some(c) if c.is_ascii_digit() => self.pos += 1,
+                Some(b'.' | b'e' | b'E' | b'+' | b'-') => self.pos += 1,
+                _ => break,
+            }
         }
         let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
         text.parse::<f64>()
@@ -309,8 +319,8 @@ mod tests {
         assert_eq!(m.str_field("arch").unwrap(), "resnet18_s");
         assert_eq!(m.usize_field("batch").unwrap(), 1);
         assert!((m.f64_field("base_test_acc").unwrap() - 0.9921).abs() < 1e-12);
-        let input: Vec<usize> =
-            m.get("input").unwrap().as_arr().unwrap().iter().map(|x| x.as_usize().unwrap()).collect();
+        let arr = m.get("input").unwrap().as_arr().unwrap();
+        let input: Vec<usize> = arr.iter().map(|x| x.as_usize().unwrap()).collect();
         assert_eq!(input, vec![1, 28, 28, 1]);
         assert_eq!(v.get("flag"), Some(&Json::Bool(true)));
         assert_eq!(v.get("nothing"), Some(&Json::Null));

@@ -1,8 +1,7 @@
-//! Runtime layer: PJRT client wrapper (load + execute AOT HLO-text
-//! artifacts), the artifact manifest/tensor-container readers, and the
-//! minimal JSON parser they rely on. This is the only module that touches
-//! the `xla` crate; everything above it works with plain [`crate::tensor`]
-//! payloads.
+//! Runtime layer: the PJRT execution facade (load + execute AOT HLO-text
+//! artifacts — currently a stub, see [`model`]), the artifact
+//! manifest/tensor-container readers, and the minimal JSON parser they rely
+//! on. Everything above it works with plain [`crate::tensor`] payloads.
 
 pub mod artifacts;
 pub mod json;

@@ -1,14 +1,17 @@
-//! PJRT runtime: load AOT HLO-text artifacts and execute them from the
-//! serving hot path. Wraps the `xla` crate (PJRT C API, CPU client).
+//! PJRT runtime facade: load AOT HLO-text artifacts and execute them from
+//! the serving hot path.
 //!
-//! One [`Runtime`] per process; one [`CompiledModel`] per (arch, dataset,
-//! batch) artifact, shareable across worker threads (`Send + Sync` — the
-//! PJRT C API is documented thread-safe and the TFRT CPU client supports
-//! concurrent `Execute` calls; the `xla` crate types are `!Send` only
-//! because they hold raw pointers).
+//! The real backend wraps the `xla` crate (PJRT C API, CPU client); that
+//! binding is not available in this build environment, so this module ships
+//! the same API surface with executable loading stubbed out: [`Runtime`]
+//! construction succeeds (so artifact-free code paths — mocks, coding,
+//! harness ablations — run unimpeded), and [`Runtime::load_hlo_text`]
+//! returns a descriptive error. Everything above this layer programs
+//! against [`CompiledModel`]/[`CompiledEncoder`] and is agnostic to which
+//! backend is underneath; swapping the real PJRT client back in is local to
+//! this file.
 
 use std::path::Path;
-use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
@@ -16,88 +19,42 @@ use crate::tensor::Tensor;
 
 use super::artifacts::ModelEntry;
 
-/// Process-wide PJRT client handle.
+/// Process-wide runtime handle (PJRT client in the real backend).
 pub struct Runtime {
-    client: xla::PjRtClient,
+    platform: String,
 }
 
-// SAFETY: the PJRT C API guarantees thread-safe clients/executables
-// (see PJRT C API header contract); the wrapper types only hold opaque
-// pointers into that API.
-unsafe impl Send for Runtime {}
-unsafe impl Sync for Runtime {}
-
 impl Runtime {
-    /// Create the CPU PJRT client.
+    /// Create the CPU runtime handle.
     pub fn cpu() -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        log::info!(
-            "PJRT client: platform={} devices={}",
-            client.platform_name(),
-            client.device_count()
-        );
-        Ok(Runtime { client })
+        log::debug!("runtime: PJRT backend unavailable, using stub (no HLO execution)");
+        Ok(Runtime { platform: "cpu-stub".to_string() })
     }
 
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        self.platform.clone()
     }
 
-    /// Load + compile an HLO-text artifact.
+    /// Load + compile an HLO-text artifact. Always errors in the stub
+    /// backend; callers surface this as "artifacts not executable here".
     pub fn load_hlo_text(&self, path: impl AsRef<Path>) -> Result<Executable> {
         let path = path.as_ref();
-        let t0 = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(path)
-            .with_context(|| format!("parsing HLO text {path:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {path:?}"))?;
-        log::info!("compiled {path:?} in {:.2}s", t0.elapsed().as_secs_f64());
-        Ok(Executable { exe })
+        // Validate the artifact exists so the error distinguishes "no
+        // artifacts built" from "backend missing".
+        std::fs::metadata(path).with_context(|| format!("reading HLO artifact {path:?}"))?;
+        bail!("PJRT backend not built: cannot compile {path:?} (xla bindings unavailable)")
     }
 }
 
-/// A compiled PJRT executable (thin wrapper; see [`CompiledModel`] for the
-/// typed model interface).
+/// A compiled executable handle (opaque; not constructible in the stub).
 pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
+    _priv: (),
 }
-
-// SAFETY: see Runtime.
-unsafe impl Send for Executable {}
-unsafe impl Sync for Executable {}
 
 impl Executable {
     /// Execute with f32 inputs; returns the elements of the ROOT tuple.
-    pub fn run(&self, inputs: &[(&[usize], &[f32])]) -> Result<Vec<Tensor>> {
-        let mut literals = Vec::with_capacity(inputs.len());
-        for (shape, data) in inputs {
-            let dims: Vec<usize> = shape.to_vec();
-            let byte_len = data.len() * 4;
-            let bytes =
-                unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, byte_len) };
-            let lit = xla::Literal::create_from_shape_and_untyped_data(
-                xla::ElementType::F32,
-                &dims,
-                bytes,
-            )
-            .context("building input literal")?;
-            literals.push(lit);
-        }
-        let result = self.exe.execute::<xla::Literal>(&literals).context("PJRT execute")?;
-        let root = result[0][0].to_literal_sync().context("fetching result")?;
-        // aot.py lowers with return_tuple=True.
-        let parts = root.to_tuple().context("untupling result")?;
-        let mut out = Vec::with_capacity(parts.len());
-        for part in parts {
-            let shape = part.array_shape().context("result shape")?;
-            let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-            let data = part.to_vec::<f32>().context("result data")?;
-            out.push(Tensor::from_vec(&dims, data));
-        }
-        Ok(out)
+    pub fn run(&self, _inputs: &[(&[usize], &[f32])]) -> Result<Vec<Tensor>> {
+        bail!("PJRT backend not built: executable cannot run")
     }
 }
 
@@ -207,5 +164,34 @@ impl CompiledEncoder {
         }
         let mut out = self.exe.run(&[(&[self.k, self.payload], queries.data())])?;
         Ok(out.remove(0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runtime_constructs_and_reports_platform() {
+        let rt = Runtime::cpu().unwrap();
+        assert_eq!(rt.platform(), "cpu-stub");
+    }
+
+    #[test]
+    fn loading_missing_artifact_is_a_read_error() {
+        let rt = Runtime::cpu().unwrap();
+        let err = rt.load_hlo_text("/definitely/not/here.hlo.txt").unwrap_err();
+        assert!(format!("{err:#}").contains("reading HLO artifact"), "{err:#}");
+    }
+
+    #[test]
+    fn loading_existing_artifact_reports_missing_backend() {
+        let dir = std::env::temp_dir().join(format!("hlo_stub_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("m.hlo.txt");
+        std::fs::write(&p, "HloModule m\n").unwrap();
+        let rt = Runtime::cpu().unwrap();
+        let err = rt.load_hlo_text(&p).unwrap_err();
+        assert!(format!("{err:#}").contains("PJRT backend not built"), "{err:#}");
     }
 }

@@ -165,33 +165,58 @@ impl Drop for Server {
     }
 }
 
+/// Serve one connection. The reader half keeps consuming frames while
+/// earlier predictions are still in flight; a responder thread writes each
+/// response **as it completes**, tagged with its request id — so a client
+/// may pipeline requests and receive responses out of order (ids are the
+/// correlation key, exactly as the concurrent coordinator resolves groups).
 fn serve_conn(mut stream: TcpStream, service: &Service, expected_payload: usize) -> Result<()> {
     stream.set_nodelay(true).ok();
-    loop {
-        let frame = read_frame(&mut stream)?;
-        match frame.head {
-            OP_PING => write_frame(&mut stream, ST_OK, frame.id, &[])?,
-            OP_PREDICT => {
-                let payload = body_f32(&frame.body);
-                if payload.len() != expected_payload {
-                    write_error(
-                        &mut stream,
-                        frame.id,
-                        &format!(
-                            "payload has {} floats, model expects {expected_payload}",
-                            payload.len()
-                        ),
-                    )?;
-                    continue;
-                }
-                match service.submit(payload).wait_timeout(Duration::from_secs(60)) {
-                    Ok(pred) => write_frame(&mut stream, ST_OK, frame.id, &pred)?,
-                    Err(e) => write_error(&mut stream, frame.id, &format!("{e:#}"))?,
+    let mut wstream = stream.try_clone().context("cloning stream for responder")?;
+    let (tx, rx) = std::sync::mpsc::channel::<(u64, Result<Vec<f32>, String>)>();
+    let responder = std::thread::Builder::new()
+        .name("conn-responder".into())
+        .spawn(move || {
+            while let Ok((id, result)) = rx.recv() {
+                let wrote = match result {
+                    Ok(pred) => write_frame(&mut wstream, ST_OK, id, &pred),
+                    Err(msg) => write_error(&mut wstream, id, &msg),
+                };
+                if wrote.is_err() {
+                    break; // peer gone; drain remaining replies and exit
                 }
             }
-            other => write_error(&mut stream, frame.id, &format!("unknown op {other}"))?,
+        })
+        .expect("spawning connection responder");
+    let read_result = (|| -> Result<()> {
+        loop {
+            let frame = read_frame(&mut stream)?;
+            match frame.head {
+                OP_PING => {
+                    let _ = tx.send((frame.id, Ok(Vec::new())));
+                }
+                OP_PREDICT => {
+                    let payload = body_f32(&frame.body);
+                    if payload.len() != expected_payload {
+                        let msg = format!(
+                            "payload has {} floats, model expects {expected_payload}",
+                            payload.len()
+                        );
+                        let _ = tx.send((frame.id, Err(msg)));
+                        continue;
+                    }
+                    service.submit_tagged(frame.id, payload, tx.clone());
+                }
+                other => {
+                    let _ = tx.send((frame.id, Err(format!("unknown op {other}"))));
+                }
+            }
         }
-    }
+    })();
+    // Let outstanding predictions flush their responses, then stop.
+    drop(tx);
+    let _ = responder.join();
+    read_result
 }
 
 /// Client for the serving protocol.
@@ -268,6 +293,105 @@ mod tests {
         let mut client = Client::connect(&server.addr()).unwrap();
         let err = client.predict(&[1.0, 2.0]).unwrap_err();
         assert!(format!("{err:#}").contains("expects 8"), "{err:#}");
+        server.shutdown();
+    }
+
+    // ---- frame codec ------------------------------------------------------
+
+    #[test]
+    fn predict_frame_roundtrips() {
+        let payload: Vec<f32> = vec![0.5, -1.25, 3.0];
+        let mut buf = Vec::new();
+        write_frame(&mut buf, OP_PREDICT, 42, &payload).unwrap();
+        let frame = read_frame(&mut &buf[..]).unwrap();
+        assert_eq!(frame.head, OP_PREDICT);
+        assert_eq!(frame.id, 42);
+        assert_eq!(body_f32(&frame.body), payload);
+    }
+
+    #[test]
+    fn ping_frame_roundtrips() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, OP_PING, u64::MAX, &[]).unwrap();
+        let frame = read_frame(&mut &buf[..]).unwrap();
+        assert_eq!(frame.head, OP_PING);
+        assert_eq!(frame.id, u64::MAX);
+        assert!(frame.body.is_empty());
+    }
+
+    #[test]
+    fn error_frame_roundtrips() {
+        let mut buf = Vec::new();
+        write_error(&mut buf, 7, "boom: worker exploded").unwrap();
+        let frame = read_frame(&mut &buf[..]).unwrap();
+        assert_eq!(frame.head, ST_ERR);
+        assert_eq!(frame.id, 7);
+        assert_eq!(String::from_utf8_lossy(&frame.body), "boom: worker exploded");
+    }
+
+    #[test]
+    fn truncated_frame_is_rejected() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, OP_PREDICT, 1, &[1.0, 2.0]).unwrap();
+        // Drop the last 3 bytes: read_exact on the body must fail.
+        buf.truncate(buf.len() - 3);
+        assert!(read_frame(&mut &buf[..]).is_err());
+    }
+
+    #[test]
+    fn undersized_and_oversized_frame_len_rejected() {
+        // Header shorter than op+id+len.
+        let mut buf = Vec::new();
+        crate::util::bytes::put_u32(&mut buf, 5);
+        buf.extend_from_slice(&[0u8; 5]);
+        let err = read_frame(&mut &buf[..]).unwrap_err();
+        assert!(format!("{err:#}").contains("bad frame length"), "{err:#}");
+        // frame_len beyond MAX_FRAME must be rejected before allocating.
+        let mut buf = Vec::new();
+        crate::util::bytes::put_u32(&mut buf, MAX_FRAME + 1);
+        buf.extend_from_slice(&[0u8; 32]);
+        let err = read_frame(&mut &buf[..]).unwrap_err();
+        assert!(format!("{err:#}").contains("bad frame length"), "{err:#}");
+    }
+
+    #[test]
+    fn payload_length_mismatch_rejected() {
+        // A predict frame whose declared float count disagrees with the body.
+        let mut buf = Vec::new();
+        crate::util::bytes::put_u32(&mut buf, (1 + 8 + 8 + 8) as u32);
+        buf.push(OP_PREDICT);
+        crate::util::bytes::put_u64(&mut buf, 3);
+        crate::util::bytes::put_u64(&mut buf, 5); // claims 5 floats
+        buf.extend_from_slice(&[0u8; 8]); // provides 2
+        let err = read_frame(&mut &buf[..]).unwrap_err();
+        assert!(format!("{err:#}").contains("mismatch"), "{err:#}");
+    }
+
+    // ---- request-id preservation under out-of-order completion -----------
+
+    #[test]
+    fn request_ids_survive_out_of_order_completion() {
+        // Pipeline a PREDICT (held back by the K=4 batcher deadline) and a
+        // PING on one raw connection: the PING response must come back
+        // first, and both responses must carry their request ids.
+        let engine = Arc::new(LinearMockEngine::new(8, 3));
+        let params = CodeParams::new(4, 1, 0);
+        let mut cfg = ServiceConfig::new(params);
+        cfg.flush_after = Duration::from_millis(150);
+        let service = Arc::new(Service::start(engine, cfg));
+        let server = Server::start("127.0.0.1:0", service.clone(), 8).unwrap();
+        let mut stream = std::net::TcpStream::connect(server.addr()).unwrap();
+        stream.set_nodelay(true).ok();
+        let payload: Vec<f32> = (0..8).map(|i| i as f32 * 0.1).collect();
+        write_frame(&mut stream, OP_PREDICT, 1001, &payload).unwrap();
+        write_frame(&mut stream, OP_PING, 2002, &[]).unwrap();
+        let first = read_frame(&mut stream).unwrap();
+        assert_eq!(first.id, 2002, "ping must complete before the batched predict");
+        assert_eq!(first.head, ST_OK);
+        let second = read_frame(&mut stream).unwrap();
+        assert_eq!(second.id, 1001, "late predict keeps its request id");
+        assert_eq!(second.head, ST_OK);
+        assert_eq!(body_f32(&second.body).len(), 3);
         server.shutdown();
     }
 

@@ -71,6 +71,13 @@ impl ScenarioReport {
 /// Drive `total` requests (identical payload geometry, synthesized smooth
 /// queries) into a service with the given arrival process; block for all
 /// responses.
+///
+/// Genuinely **open-loop**: the submitter never waits on a response — it
+/// fires tagged submissions at the arrival schedule while a single
+/// collector thread drains completions (possibly out of submission order,
+/// correlated by id). At arrival rates above a group's service time this
+/// stacks many groups in flight, which is exactly the regime the concurrent
+/// coordinator's `max_inflight` pipeline is built for.
 pub fn run_scenario(
     service: &Arc<Service>,
     payload_len: usize,
@@ -79,37 +86,47 @@ pub fn run_scenario(
     seed: u64,
 ) -> Result<ScenarioReport> {
     let mut rng = Rng::new(seed);
+    let (tx, rx) = std::sync::mpsc::channel::<(u64, Result<Vec<f32>, String>)>();
+    let collector = std::thread::Builder::new()
+        .name("scenario-collector".into())
+        .spawn(move || -> Vec<(u64, bool, Instant)> {
+            let mut done = Vec::with_capacity(total);
+            for _ in 0..total {
+                match rx.recv_timeout(Duration::from_secs(120)) {
+                    Ok((id, result)) => done.push((id, result.is_ok(), Instant::now())),
+                    Err(_) => break,
+                }
+            }
+            done
+        })
+        .expect("spawning scenario collector");
     let start = Instant::now();
-    // Submit on this thread at the arrival schedule; resolve on collectors.
-    let mut joins = Vec::with_capacity(total);
+    let mut submitted_at = Vec::with_capacity(total);
     for i in 0..total {
         let payload: Vec<f32> = (0..payload_len)
             .map(|t| ((i as f32) * 0.17 + (t as f32) * 0.013).sin())
             .collect();
-        let t_submit = Instant::now();
-        let handle = service.submit(payload);
-        joins.push(std::thread::spawn(move || {
-            let r = handle.wait_timeout(Duration::from_secs(120));
-            (r.is_ok(), t_submit.elapsed().as_secs_f64())
-        }));
+        submitted_at.push(Instant::now());
+        service.submit_tagged(i as u64, payload, tx.clone());
         let gap = arrivals.next_gap(&mut rng, i);
         if !gap.is_zero() {
             std::thread::sleep(gap);
         }
     }
-    let mut latencies = Vec::with_capacity(total);
+    drop(tx);
+    let done = collector.join().expect("collector panicked");
+    let wall = start.elapsed();
+    let mut latencies = Vec::with_capacity(done.len());
     let mut completed = 0;
-    let mut failed = 0;
-    for j in joins {
-        let (ok, secs) = j.join().expect("collector panicked");
+    let mut failed = total - done.len(); // never answered within the window
+    for (id, ok, at) in done {
         if ok {
             completed += 1;
-            latencies.push(secs);
+            latencies.push(at.duration_since(submitted_at[id as usize]).as_secs_f64());
         } else {
             failed += 1;
         }
     }
-    let wall = start.elapsed();
     if latencies.is_empty() {
         latencies.push(f64::NAN);
     }

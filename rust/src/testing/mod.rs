@@ -119,7 +119,8 @@ pub fn forall<F: FnMut(&mut Gen) + std::panic::UnwindSafe + Copy>(
                 .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
                 .unwrap_or_else(|| "<non-string panic>".to_string());
             panic!(
-                "property '{name}' failed at case {case} (replay with APPROXIFER_PT_SEED={seed}): {msg}"
+                "property '{name}' failed at case {case} \
+                 (replay with APPROXIFER_PT_SEED={seed}): {msg}"
             );
         }
     }

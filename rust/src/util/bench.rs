@@ -25,6 +25,14 @@ pub struct BenchConfig {
 
 impl Default for BenchConfig {
     fn default() -> Self {
+        if quick_mode() {
+            return BenchConfig {
+                warmup: Duration::from_millis(20),
+                min_time: Duration::from_millis(60),
+                min_iters: 5,
+                max_iters: 20_000,
+            };
+        }
         BenchConfig {
             warmup: Duration::from_millis(200),
             min_time: Duration::from_millis(800),
@@ -32,6 +40,12 @@ impl Default for BenchConfig {
             max_iters: 200_000,
         }
     }
+}
+
+/// CI smoke mode: `APPROXIFER_BENCH_QUICK=1` shrinks warmup/measure windows
+/// so the full bench suite finishes in seconds (trend tracking, not rigor).
+pub fn quick_mode() -> bool {
+    std::env::var_os("APPROXIFER_BENCH_QUICK").is_some_and(|v| !v.is_empty() && v != "0")
 }
 
 /// Result of one benchmark case (per-iteration seconds).

@@ -40,15 +40,28 @@ pub struct Reader<'a> {
 }
 
 /// Error type for malformed frames/artifacts.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum DecodeError {
-    #[error("unexpected end of buffer at {pos} (need {need} bytes, have {have})")]
     Eof { pos: usize, need: usize, have: usize },
-    #[error("invalid utf-8 string at {pos}")]
     Utf8 { pos: usize },
-    #[error("length {len} exceeds sanity limit {limit}")]
     TooLong { len: usize, limit: usize },
 }
+
+impl std::fmt::Display for DecodeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            DecodeError::Eof { pos, need, have } => {
+                write!(f, "unexpected end of buffer at {pos} (need {need} bytes, have {have})")
+            }
+            DecodeError::Utf8 { pos } => write!(f, "invalid utf-8 string at {pos}"),
+            DecodeError::TooLong { len, limit } => {
+                write!(f, "length {len} exceeds sanity limit {limit}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for DecodeError {}
 
 impl<'a> Reader<'a> {
     pub fn new(buf: &'a [u8]) -> Self {

@@ -11,4 +11,4 @@ pub mod pool;
 pub use byzantine::ByzantineMode;
 pub use engine::{DelayMockEngine, InferenceEngine, LinearMockEngine, PjrtEngine};
 pub use latency::LatencyModel;
-pub use pool::{WorkerPool, WorkerReply, WorkerSpec, WorkerTask};
+pub use pool::{CollectedGroup, ReplyRouter, WorkerPool, WorkerReply, WorkerSpec, WorkerTask};

@@ -1,18 +1,36 @@
 //! The worker pool: `N+1` worker threads, each owning a handle to the
 //! shared inference engine, an injected-latency model and (optionally) a
-//! Byzantine corruption mode. The coordinator fans coded queries out via
-//! per-worker channels and collects replies on one shared channel —
-//! replies from cancelled (straggler) groups are simply ignored by the
-//! collector, as in a reactive serving system.
+//! Byzantine corruption mode.
+//!
+//! Two collection modes:
+//!
+//! * **Direct** — the classic synchronous mode: the caller drains the shared
+//!   reply channel itself via [`WorkerPool::recv_timeout`]. Used by the
+//!   single-group [`crate::coordinator::GroupPipeline`], the experiment
+//!   harness and the benches.
+//! * **Routed** — [`WorkerPool::start_router`] moves the reply channel into a
+//!   [`ReplyRouter`] thread that demultiplexes replies **per group**: the
+//!   concurrent coordinator registers each in-flight group (wait count +
+//!   deadline) and receives a [`CollectedGroup`] on its completion channel
+//!   the moment the fastest subset has arrived — multiple groups collect
+//!   simultaneously, so a straggling group never blocks the next one.
+//!
+//! Fault-injection semantics: a worker's [`LatencyModel`] models *service
+//! time* and occupies the worker thread; a task's `extra_delay` models a
+//! forced straggler (slow network / GC pause on the reply path) and defers
+//! only the **reply** — the worker moves on to its next task immediately, as
+//! a real non-blocking serving stack would observe.
 
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::metrics::ServingMetrics;
 use crate::util::rng::Rng;
 
 use super::byzantine::ByzantineMode;
@@ -24,7 +42,8 @@ pub struct WorkerTask {
     pub group: u64,
     /// Flattened coded query payload.
     pub payload: Vec<f32>,
-    /// Scheduler-injected extra delay (forced-straggler experiments).
+    /// Scheduler-injected reply delay (forced-straggler experiments). Defers
+    /// the reply without occupying the worker.
     pub extra_delay: Duration,
     /// If set, corrupt the reply (this worker is Byzantine for this group).
     pub corrupt: Option<ByzantineMode>,
@@ -36,7 +55,7 @@ pub struct WorkerReply {
     pub worker_id: usize,
     /// Prediction payload (possibly corrupted), or an error message.
     pub result: Result<Vec<f32>, String>,
-    /// Wall time the worker spent (service latency incl. injections).
+    /// Wall time from dequeue to reply delivery (incl. injections).
     pub elapsed: Duration,
 }
 
@@ -55,7 +74,8 @@ impl Default for WorkerSpec {
 /// Handle to the pool.
 pub struct WorkerPool {
     senders: Vec<Sender<WorkerTask>>,
-    replies: Receiver<WorkerReply>,
+    /// Present in direct mode; taken by [`WorkerPool::start_router`].
+    replies: Option<Receiver<WorkerReply>>,
     handles: Vec<JoinHandle<()>>,
     stop: Arc<AtomicBool>,
 }
@@ -89,9 +109,9 @@ impl WorkerPool {
                             break;
                         }
                         let t0 = Instant::now();
-                        let injected = spec.latency.sample(&mut rng) + task.extra_delay;
-                        if !injected.is_zero() {
-                            std::thread::sleep(injected);
+                        let service = spec.latency.sample(&mut rng);
+                        if !service.is_zero() {
+                            std::thread::sleep(service);
                         }
                         let result = engine
                             .infer1(&task.payload)
@@ -102,21 +122,37 @@ impl WorkerPool {
                                 logits
                             })
                             .map_err(|e| format!("{e:#}"));
-                        let reply = WorkerReply {
-                            group: task.group,
-                            worker_id,
-                            result,
-                            elapsed: t0.elapsed(),
-                        };
-                        if reply_tx.send(reply).is_err() {
-                            break; // coordinator gone
+                        let group = task.group;
+                        if task.extra_delay.is_zero() {
+                            let reply =
+                                WorkerReply { group, worker_id, result, elapsed: t0.elapsed() };
+                            if reply_tx.send(reply).is_err() {
+                                break; // coordinator gone
+                            }
+                        } else {
+                            // Forced straggler: release the reply late from a
+                            // holder thread; this worker keeps serving.
+                            let tx = reply_tx.clone();
+                            let delay = task.extra_delay;
+                            let _ = std::thread::Builder::new()
+                                .name(format!("straggle-{worker_id}"))
+                                .spawn(move || {
+                                    std::thread::sleep(delay);
+                                    let reply = WorkerReply {
+                                        group,
+                                        worker_id,
+                                        result,
+                                        elapsed: t0.elapsed(),
+                                    };
+                                    let _ = tx.send(reply);
+                                });
                         }
                     }
                 })
                 .expect("spawning worker thread");
             handles.push(handle);
         }
-        WorkerPool { senders, replies, handles, stop }
+        WorkerPool { senders, replies: Some(replies), handles, stop }
     }
 
     pub fn num_workers(&self) -> usize {
@@ -130,9 +166,18 @@ impl WorkerPool {
             .map_err(|_| anyhow::anyhow!("worker {worker} has shut down"))
     }
 
-    /// Blocking receive of the next reply (with timeout).
+    /// Blocking receive of the next reply (direct mode; `None` after the
+    /// channel was handed to a [`ReplyRouter`] or on timeout).
     pub fn recv_timeout(&self, timeout: Duration) -> Option<WorkerReply> {
-        self.replies.recv_timeout(timeout).ok()
+        self.replies.as_ref()?.recv_timeout(timeout).ok()
+    }
+
+    /// Hand the reply channel to a per-group router thread. After this,
+    /// [`WorkerPool::recv_timeout`] always returns `None`; collection happens
+    /// through [`ReplyRouter::register`].
+    pub fn start_router(&mut self, metrics: Arc<ServingMetrics>) -> ReplyRouter {
+        let replies = self.replies.take().expect("router already started");
+        ReplyRouter::spawn(replies, metrics)
     }
 
     /// Shut down: close task channels and join threads.
@@ -143,6 +188,177 @@ impl WorkerPool {
             let _ = h.join();
         }
     }
+}
+
+/// A group whose collection finished (fastest subset arrived, or the
+/// deadline/error budget made completion impossible).
+pub struct CollectedGroup {
+    pub group: u64,
+    /// Reply payload per worker id (`None` = not received / errored).
+    pub replies: Vec<Option<Vec<f32>>>,
+    pub received: usize,
+    pub errors: usize,
+    /// True when `received` reached the registered wait count.
+    pub complete: bool,
+}
+
+struct PendingGroup {
+    wait_for: usize,
+    deadline: Instant,
+    replies: Vec<Option<Vec<f32>>>,
+    received: usize,
+    errors: usize,
+    done: Sender<CollectedGroup>,
+}
+
+/// Demultiplexes the pool's shared reply stream into per-group collections
+/// so any number of groups can be in flight at once.
+pub struct ReplyRouter {
+    routes: Arc<Mutex<HashMap<u64, PendingGroup>>>,
+    stale: Arc<AtomicU64>,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+/// How often the router wakes to check group deadlines.
+const ROUTER_TICK: Duration = Duration::from_millis(5);
+
+impl ReplyRouter {
+    fn spawn(replies: Receiver<WorkerReply>, metrics: Arc<ServingMetrics>) -> ReplyRouter {
+        let routes: Arc<Mutex<HashMap<u64, PendingGroup>>> = Arc::new(Mutex::new(HashMap::new()));
+        let stale = Arc::new(AtomicU64::new(0));
+        let stop = Arc::new(AtomicBool::new(false));
+        let r = routes.clone();
+        let s = stale.clone();
+        let st = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("reply-router".into())
+            .spawn(move || loop {
+                match replies.recv_timeout(ROUTER_TICK) {
+                    Ok(reply) => route_reply(&r, &s, &metrics, reply),
+                    Err(RecvTimeoutError::Timeout) => {}
+                    Err(RecvTimeoutError::Disconnected) => break,
+                }
+                if st.load(Ordering::Relaxed) {
+                    break;
+                }
+                expire_deadlines(&r);
+            })
+            .expect("spawning reply router");
+        ReplyRouter { routes, stale, stop, handle: Some(handle) }
+    }
+
+    /// Register a dispatched group: collect until `wait_for` distinct worker
+    /// replies arrive (→ `complete == true` on `done`) or the deadline
+    /// passes / too many workers error for completion to remain possible.
+    pub fn register(
+        &self,
+        group: u64,
+        num_workers: usize,
+        wait_for: usize,
+        deadline: Instant,
+        done: Sender<CollectedGroup>,
+    ) {
+        let pending = PendingGroup {
+            wait_for,
+            deadline,
+            replies: vec![None; num_workers],
+            received: 0,
+            errors: 0,
+            done,
+        };
+        self.routes.lock().unwrap().insert(group, pending);
+    }
+
+    /// Drop a registered group without delivering a collection (dispatch
+    /// failed mid-fan-out). Returns whether the group was still pending.
+    pub fn deregister(&self, group: u64) -> bool {
+        self.routes.lock().unwrap().remove(&group).is_some()
+    }
+
+    /// Groups currently collecting.
+    pub fn pending(&self) -> usize {
+        self.routes.lock().unwrap().len()
+    }
+
+    /// Replies that arrived for groups no longer registered.
+    pub fn stale_replies(&self) -> u64 {
+        self.stale.load(Ordering::Relaxed)
+    }
+
+    /// Stop the routing thread and join it.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ReplyRouter {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn route_reply(
+    routes: &Mutex<HashMap<u64, PendingGroup>>,
+    stale: &AtomicU64,
+    metrics: &ServingMetrics,
+    reply: WorkerReply,
+) {
+    metrics.worker_replies.inc();
+    let mut map = routes.lock().unwrap();
+    let Some(pending) = map.get_mut(&reply.group) else {
+        // Late reply from an already-collected / expired group.
+        metrics.stragglers_cancelled.inc();
+        stale.fetch_add(1, Ordering::Relaxed);
+        return;
+    };
+    match reply.result {
+        Ok(logits) => {
+            if pending.replies[reply.worker_id].is_none() {
+                pending.replies[reply.worker_id] = Some(logits);
+                pending.received += 1;
+            }
+        }
+        Err(e) => {
+            metrics.errors.inc();
+            pending.errors += 1;
+            log::warn!("worker {} failed group {}: {e}", reply.worker_id, reply.group);
+        }
+    }
+    let complete = pending.received >= pending.wait_for;
+    // Fail fast when enough workers errored that the wait count is
+    // unreachable (every worker replies at most once per group).
+    let unreachable = pending.replies.len() - pending.errors < pending.wait_for;
+    if complete || unreachable {
+        let group = reply.group;
+        let pending = map.remove(&group).unwrap();
+        drop(map);
+        deliver(group, pending, complete);
+    }
+}
+
+fn expire_deadlines(routes: &Mutex<HashMap<u64, PendingGroup>>) {
+    let now = Instant::now();
+    let expired: Vec<(u64, PendingGroup)> = {
+        let mut map = routes.lock().unwrap();
+        let ids: Vec<u64> =
+            map.iter().filter(|(_, p)| p.deadline <= now).map(|(&g, _)| g).collect();
+        ids.into_iter().map(|g| (g, map.remove(&g).unwrap())).collect()
+    };
+    for (group, pending) in expired {
+        deliver(group, pending, false);
+    }
+}
+
+fn deliver(group: u64, pending: PendingGroup, complete: bool) {
+    let PendingGroup { replies, received, errors, done, .. } = pending;
+    let _ = done.send(CollectedGroup { group, replies, received, errors, complete });
 }
 
 #[cfg(test)]
@@ -156,20 +372,15 @@ mod tests {
         WorkerPool::spawn(engine, &specs, 42)
     }
 
+    fn task(group: u64, delay: Duration) -> WorkerTask {
+        WorkerTask { group, payload: vec![0.1; 8], extra_delay: delay, corrupt: None }
+    }
+
     #[test]
     fn all_workers_reply() {
         let p = pool(5);
         for w in 0..5 {
-            p.send(
-                w,
-                WorkerTask {
-                    group: 7,
-                    payload: vec![0.1; 8],
-                    extra_delay: Duration::ZERO,
-                    corrupt: None,
-                },
-            )
-            .unwrap();
+            p.send(w, task(7, Duration::ZERO)).unwrap();
         }
         let mut seen = vec![false; 5];
         for _ in 0..5 {
@@ -225,18 +436,23 @@ mod tests {
     #[test]
     fn extra_delay_is_respected() {
         let p = pool(1);
-        p.send(
-            0,
-            WorkerTask {
-                group: 0,
-                payload: vec![0.0; 8],
-                extra_delay: Duration::from_millis(50),
-                corrupt: None,
-            },
-        )
-        .unwrap();
+        p.send(0, task(0, Duration::from_millis(50))).unwrap();
         let r = p.recv_timeout(Duration::from_secs(5)).unwrap();
         assert!(r.elapsed >= Duration::from_millis(45), "elapsed={:?}", r.elapsed);
+        p.shutdown();
+    }
+
+    #[test]
+    fn straggled_reply_does_not_occupy_the_worker() {
+        // Task A's reply is held 200ms, but the worker must serve task B
+        // immediately: B's reply arrives first.
+        let p = pool(1);
+        p.send(0, task(1, Duration::from_millis(200))).unwrap();
+        p.send(0, task(2, Duration::ZERO)).unwrap();
+        let first = p.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(first.group, 2, "fast task should reply before the held straggler");
+        let second = p.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(second.group, 1);
         p.shutdown();
     }
 
@@ -244,6 +460,68 @@ mod tests {
     fn recv_timeout_expires_cleanly() {
         let p = pool(1);
         assert!(p.recv_timeout(Duration::from_millis(20)).is_none());
+        p.shutdown();
+    }
+
+    #[test]
+    fn router_collects_two_groups_out_of_order() {
+        let mut p = pool(3);
+        let metrics = Arc::new(ServingMetrics::new());
+        let router = p.start_router(metrics);
+        assert!(p.recv_timeout(Duration::from_millis(10)).is_none(), "channel was routed");
+        let (done_tx, done_rx) = channel();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        router.register(1, 3, 2, deadline, done_tx.clone());
+        router.register(2, 3, 2, deadline, done_tx);
+        // Group 1's tasks straggle; group 2's do not.
+        for w in 0..3 {
+            p.send(w, task(1, Duration::from_millis(150))).unwrap();
+            p.send(w, task(2, Duration::ZERO)).unwrap();
+        }
+        let first = done_rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(first.group, 2, "unstraggled group must collect first");
+        assert!(first.complete);
+        assert!(first.received >= 2);
+        let second = done_rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(second.group, 1);
+        assert!(second.complete);
+        // The third (surplus) reply of each group arrives after collection
+        // and is counted stale.
+        std::thread::sleep(Duration::from_millis(250));
+        assert!(router.stale_replies() >= 1, "stale={}", router.stale_replies());
+        assert_eq!(router.pending(), 0);
+        router.shutdown();
+        p.shutdown();
+    }
+
+    #[test]
+    fn router_expires_group_on_deadline() {
+        let mut p = pool(2);
+        let metrics = Arc::new(ServingMetrics::new());
+        let router = p.start_router(metrics);
+        let (done_tx, done_rx) = channel();
+        router.register(9, 2, 2, Instant::now() + Duration::from_millis(60), done_tx);
+        // Only one worker gets a task: wait_for=2 can never be met.
+        p.send(0, task(9, Duration::ZERO)).unwrap();
+        let out = done_rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(out.group, 9);
+        assert!(!out.complete);
+        assert_eq!(out.received, 1);
+        router.shutdown();
+        p.shutdown();
+    }
+
+    #[test]
+    fn router_deregister_drops_group() {
+        let mut p = pool(1);
+        let metrics = Arc::new(ServingMetrics::new());
+        let router = p.start_router(metrics);
+        let (done_tx, done_rx) = channel();
+        router.register(4, 1, 1, Instant::now() + Duration::from_secs(5), done_tx);
+        assert!(router.deregister(4));
+        assert!(!router.deregister(4));
+        assert!(done_rx.recv_timeout(Duration::from_millis(50)).is_err());
+        router.shutdown();
         p.shutdown();
     }
 }

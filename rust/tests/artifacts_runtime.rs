@@ -74,9 +74,10 @@ fn batch1_and_batch128_artifacts_agree() {
     let Some(manifest) = manifest() else { return };
     let rt = Runtime::cpu().unwrap();
     let ts = TestSet::load(&manifest, "syncifar").unwrap();
-    let m1 = CompiledModel::load(&rt, &manifest.root, manifest.model("lenet5", "syncifar", 1).unwrap()).unwrap();
-    let m128 =
-        CompiledModel::load(&rt, &manifest.root, manifest.model("lenet5", "syncifar", 128).unwrap()).unwrap();
+    let entry1 = manifest.model("lenet5", "syncifar", 1).unwrap();
+    let entry128 = manifest.model("lenet5", "syncifar", 128).unwrap();
+    let m1 = CompiledModel::load(&rt, &manifest.root, entry1).unwrap();
+    let m128 = CompiledModel::load(&rt, &manifest.root, entry128).unwrap();
     let e1 = PjrtEngine::new(m1);
     let e128 = PjrtEngine::new(m128);
     let flat: Vec<f32> = (0..4).flat_map(|i| ts.image(i).iter().copied()).collect();

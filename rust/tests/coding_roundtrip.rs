@@ -30,8 +30,9 @@ fn straggler_pipeline_property() {
         let c = g.usize_in(2, 10);
         let params = CodeParams::new(k, s, 0);
         let engine = Arc::new(LinearMockEngine::new(d, c));
-        let pool =
-            WorkerPool::spawn(engine.clone(), &vec![WorkerSpec::default(); params.num_workers()], g.rng().next_u64());
+        let seed = g.rng().next_u64();
+        let specs = vec![WorkerSpec::default(); params.num_workers()];
+        let pool = WorkerPool::spawn(engine.clone(), &specs, seed);
         let mut pipe = GroupPipeline::new(params);
         let metrics = ServingMetrics::new();
         let queries = smooth_queries(k, d, g.f64_in(0.0, 3.0) as f32);

@@ -1,0 +1,155 @@
+//! Integration: the concurrent multi-group scheduler. Seeded and
+//! deterministic — fault placement comes from the `fault_hook`, not a
+//! clock race. The headline property: stragglers injected into group *g*
+//! must not head-of-line block groups *g+1..g+3*.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use approxifer::coding::CodeParams;
+use approxifer::coordinator::{FaultPlan, PredictionHandle, Service, ServiceConfig};
+use approxifer::workers::{ByzantineMode, DelayMockEngine, InferenceEngine, LinearMockEngine};
+
+fn payload(j: usize, d: usize) -> Vec<f32> {
+    (0..d).map(|t| ((j as f32) * 0.27 + (t as f32) * 0.019).sin()).collect()
+}
+
+#[test]
+fn straggled_group_does_not_block_later_groups() {
+    // K=3, S=1 → 4 workers, decoder waits for the fastest 3 replies.
+    // Group 1 gets S+1 = 2 forced stragglers (replies held 2s), so it
+    // cannot complete before ~2s. Groups 2..4 are fault-free and must
+    // complete well within 1s — the serial coordinator would hold them
+    // behind group 1's collect wait. (The 1s margin over ~ms of actual
+    // work derisks loaded CI runners.)
+    let params = CodeParams::new(3, 1, 0);
+    let engine = Arc::new(LinearMockEngine::new(8, 4));
+    let mut cfg = ServiceConfig::new(params);
+    cfg.max_inflight = 4;
+    cfg.decode_threads = 2;
+    cfg.seed = 7;
+    cfg.fault_hook = Some(Arc::new(|group| {
+        if group == 1 {
+            FaultPlan {
+                stragglers: vec![0, 1],
+                straggler_delay: Duration::from_secs(2),
+                ..FaultPlan::none()
+            }
+        } else {
+            FaultPlan::none()
+        }
+    }));
+    let svc = Service::start(engine.clone(), cfg);
+    let t0 = Instant::now();
+    // 12 queries = exactly 4 full K=3 groups, formed in submission order.
+    let handles: Vec<PredictionHandle> = (0..12).map(|j| svc.submit(payload(j, 8))).collect();
+    let mut handles: Vec<Option<PredictionHandle>> = handles.into_iter().map(Some).collect();
+    // Groups 2..4 (queries 3..12) first: must resolve fast.
+    for (j, slot) in handles.iter_mut().enumerate().skip(3) {
+        let h = slot.take().unwrap();
+        let pred = h.wait_timeout(Duration::from_secs(5)).unwrap();
+        let want = engine.infer1(&payload(j, 8)).unwrap();
+        for t in 0..4 {
+            assert!((pred[t] - want[t]).abs() < 0.3, "q{j} c{t}");
+        }
+    }
+    let later_done = t0.elapsed();
+    assert!(
+        later_done < Duration::from_secs(1),
+        "groups 2..4 blocked behind straggled group 1: {later_done:?}"
+    );
+    // Group 1 still completes (one straggler is ridden out, the second
+    // arrives at ~2s and fills the wait count).
+    for (j, slot) in handles.iter_mut().enumerate().take(3) {
+        let h = slot.take().unwrap();
+        let pred = h.wait_timeout(Duration::from_secs(10)).unwrap();
+        assert_eq!(pred.len(), 4, "q{j}");
+    }
+    assert_eq!(svc.metrics.groups_decoded.get(), 4);
+    svc.shutdown();
+}
+
+#[test]
+fn max_inflight_cap_is_enforced() {
+    // Slow engine (20ms/query) + max_inflight=2 + 6 instant groups: the
+    // batcher must block at least once on the inflight gate, and still
+    // answer everything.
+    let params = CodeParams::new(1, 1, 0); // 2 workers
+    let engine: Arc<dyn InferenceEngine> =
+        Arc::new(DelayMockEngine::new(6, 2, Duration::from_millis(20)));
+    let mut cfg = ServiceConfig::new(params);
+    cfg.max_inflight = 2;
+    cfg.decode_threads = 1;
+    cfg.flush_after = Duration::from_millis(1);
+    let svc = Service::start(engine, cfg);
+    let handles: Vec<PredictionHandle> = (0..6).map(|j| svc.submit(payload(j, 6))).collect();
+    for h in handles {
+        h.wait_timeout(Duration::from_secs(10)).unwrap();
+    }
+    assert_eq!(svc.metrics.groups_decoded.get(), 6);
+    assert!(
+        svc.metrics.inflight_full_waits.get() > 0,
+        "6 slow groups at max_inflight=2 should have hit the gate"
+    );
+    svc.shutdown();
+}
+
+#[test]
+fn byzantine_location_works_under_concurrency() {
+    // Deterministic adversary: worker 2 corrupts every group. Four groups
+    // in flight; every decode must flag it and stay near the reference.
+    let params = CodeParams::new(3, 0, 1);
+    let engine = Arc::new(LinearMockEngine::new(10, 6));
+    let mut cfg = ServiceConfig::new(params);
+    cfg.max_inflight = 4;
+    cfg.decode_threads = 2;
+    cfg.fault_hook = Some(Arc::new(|_group| FaultPlan {
+        byzantine: vec![2],
+        byz_mode: Some(ByzantineMode::GaussianNoise { sigma: 20.0 }),
+        ..FaultPlan::none()
+    }));
+    let svc = Service::start(engine.clone(), cfg);
+    let handles: Vec<PredictionHandle> = (0..12).map(|j| svc.submit(payload(j, 10))).collect();
+    for (j, h) in handles.into_iter().enumerate() {
+        let pred = h.wait_timeout(Duration::from_secs(10)).unwrap();
+        let want = engine.infer1(&payload(j, 10)).unwrap();
+        for t in 0..6 {
+            assert!(
+                (pred[t] - want[t]).abs() < 1.0,
+                "q{j} c{t}: {} vs {}",
+                pred[t],
+                want[t]
+            );
+        }
+    }
+    assert_eq!(svc.metrics.groups_decoded.get(), 4);
+    assert!(svc.metrics.byzantine_flagged.get() >= 4, "adversary flagged every group");
+    svc.shutdown();
+}
+
+#[test]
+fn sustained_open_loop_overlap_decodes_everything() {
+    // A flood of 20 groups through a 4-deep pipeline with per-task tail
+    // latency: everything must decode exactly once (no lost or duplicated
+    // replies under reordering).
+    use approxifer::sim::{run_scenario, Arrivals};
+    use approxifer::workers::{LatencyModel, WorkerSpec};
+    let params = CodeParams::new(4, 1, 0);
+    let engine = Arc::new(LinearMockEngine::new(8, 3));
+    let mut cfg = ServiceConfig::new(params);
+    cfg.flush_after = Duration::from_millis(2);
+    cfg.max_inflight = 4;
+    cfg.worker_specs = vec![
+        WorkerSpec {
+            latency: LatencyModel::Bimodal { base_ms: 0.5, straggler_ms: 15.0, p: 0.15 }
+        };
+        params.num_workers()
+    ];
+    let svc = Arc::new(Service::start(engine, cfg));
+    let report =
+        run_scenario(&svc, 8, 80, Arrivals::Bursty { burst: 80, period_ms: 0.0 }, 11).unwrap();
+    assert_eq!(report.completed, 80);
+    assert_eq!(report.failed, 0);
+    assert_eq!(svc.metrics.groups_decoded.get(), 20);
+    assert_eq!(svc.metrics.queries_received.get(), 80);
+}

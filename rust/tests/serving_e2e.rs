@@ -12,7 +12,13 @@ use approxifer::workers::{
     ByzantineMode, InferenceEngine, LatencyModel, LinearMockEngine, WorkerSpec,
 };
 
-fn service(k: usize, s: usize, e: usize, d: usize, c: usize) -> (Arc<Service>, Arc<LinearMockEngine>) {
+fn service(
+    k: usize,
+    s: usize,
+    e: usize,
+    d: usize,
+    c: usize,
+) -> (Arc<Service>, Arc<LinearMockEngine>) {
     let engine = Arc::new(LinearMockEngine::new(d, c));
     let params = CodeParams::new(k, s, e);
     let mut cfg = ServiceConfig::new(params);
