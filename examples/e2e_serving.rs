@@ -38,10 +38,8 @@ fn main() -> Result<()> {
     cfg.flush_after = Duration::from_millis(15);
     // Exponential service tail on every worker: the environment the paper
     // targets (coded redundancy rides out the tail).
-    cfg.worker_specs = vec![
-        WorkerSpec { latency: LatencyModel::Exponential { mean_ms: 4.0 } };
-        params.num_workers()
-    ];
+    cfg.worker_specs =
+        vec![WorkerSpec::new(LatencyModel::Exponential { mean_ms: 4.0 }); params.num_workers()];
     let service = Arc::new(Service::start(engine, cfg));
     let server = Server::start("127.0.0.1:0", service.clone(), payload)?;
     let addr = server.addr();

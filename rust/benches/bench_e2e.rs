@@ -40,7 +40,7 @@ fn main() {
     {
         let engine: Arc<dyn InferenceEngine> = Arc::new(DelayMockEngine::new(d, c, compute));
         let params = CodeParams::new(k, 1, 0);
-        let specs = vec![WorkerSpec { latency: tail }; params.num_workers()];
+        let specs = vec![WorkerSpec::new(tail); params.num_workers()];
         let pool = WorkerPool::spawn(engine, &specs, 1);
         let mut pipe = GroupPipeline::new(params);
         let metrics = ServingMetrics::new();
@@ -54,7 +54,7 @@ fn main() {
     {
         let engine: Arc<dyn InferenceEngine> = Arc::new(DelayMockEngine::new(d, c, compute));
         let params = ReplicationParams::new(k, 1, 0);
-        let specs = vec![WorkerSpec { latency: tail }; params.num_workers()];
+        let specs = vec![WorkerSpec::new(tail); params.num_workers()];
         let pool = WorkerPool::spawn(engine, &specs, 2);
         let mut pipe = ReplicationPipeline::new(params);
         let metrics = ServingMetrics::new();
@@ -69,7 +69,7 @@ fn main() {
         // No redundancy: replication with 1 copy (wait for all).
         let engine: Arc<dyn InferenceEngine> = Arc::new(DelayMockEngine::new(d, c, compute));
         let params = ReplicationParams::new(k, 0, 0);
-        let specs = vec![WorkerSpec { latency: tail }; params.num_workers()];
+        let specs = vec![WorkerSpec::new(tail); params.num_workers()];
         let pool = WorkerPool::spawn(engine, &specs, 3);
         let mut pipe = ReplicationPipeline::new(params);
         let metrics = ServingMetrics::new();
@@ -88,7 +88,7 @@ fn main() {
         let params = CodeParams::new(k, 1, 0);
         let pool = WorkerPool::spawn(
             engine,
-            &vec![WorkerSpec { latency: LatencyModel::None }; params.num_workers()],
+            &vec![WorkerSpec::new(LatencyModel::None); params.num_workers()],
             4,
         );
         let mut pipe = GroupPipeline::new(params);
@@ -108,7 +108,7 @@ fn main() {
         let params = CodeParams::new(12, 0, 2);
         let pool = WorkerPool::spawn(
             engine,
-            &vec![WorkerSpec { latency: LatencyModel::None }; params.num_workers()],
+            &vec![WorkerSpec::new(LatencyModel::None); params.num_workers()],
             5,
         );
         let mut pipe = GroupPipeline::new(params);

@@ -13,7 +13,8 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use approxifer::coding::CodeParams;
-use approxifer::coordinator::{Service, ServiceConfig};
+use approxifer::coordinator::{Service, ServiceConfig, VerifyPolicy};
+use approxifer::sim::faults::FaultProfile;
 use approxifer::sim::{run_scenario, Arrivals, ScenarioReport};
 use approxifer::util::bench::quick_mode;
 use approxifer::workers::{
@@ -23,6 +24,14 @@ use approxifer::workers::{
 struct SweepRow {
     max_inflight: usize,
     report: ScenarioReport,
+}
+
+struct FaultRow {
+    profile: &'static str,
+    report: ScenarioReport,
+    corrupt_injected: u64,
+    verify_failures: u64,
+    redispatches: u64,
 }
 
 fn main() {
@@ -94,8 +103,11 @@ fn main() {
             row.report.throughput / base
         );
     }
+    // ---- robustness overhead: the fault-profile matrix -------------------
+    let fault_rows = fault_profile_sweep(d, c, if quick { 27 } else { 90 });
+
     if let Some(path) = std::env::var_os("BENCH_PR_JSON") {
-        write_json(&path, d, &rows);
+        write_json(&path, d, &rows, &fault_rows);
     }
 
     println!("\n== encode throughput ceiling (host-side, K=8 S=1, d=3072) ==");
@@ -142,9 +154,7 @@ fn max_inflight_sweep(d: usize, c: usize, groups: usize) -> Vec<SweepRow> {
         cfg.max_inflight = mi;
         cfg.decode_threads = 2;
         cfg.worker_specs = vec![
-            WorkerSpec {
-                latency: LatencyModel::Bimodal { base_ms: 1.0, straggler_ms: 25.0, p: 0.2 }
-            };
+            WorkerSpec::new(LatencyModel::Bimodal { base_ms: 1.0, straggler_ms: 25.0, p: 0.2 });
             params.num_workers()
         ];
         let service = Arc::new(Service::start(engine, cfg));
@@ -166,8 +176,60 @@ fn max_inflight_sweep(d: usize, c: usize, groups: usize) -> Vec<SweepRow> {
     rows
 }
 
+/// Sweep the named fault profiles at fixed code (K=4, S=1, E=1 → 11
+/// workers, wait for 10) with decode verification on, so CI tracks the
+/// robustness overhead — locate + verify cost, redispatches, and failure
+/// rates under churn — alongside raw throughput.
+fn fault_profile_sweep(d: usize, c: usize, groups: usize) -> Vec<FaultRow> {
+    let params = CodeParams::new(4, 1, 1);
+    let nw = params.num_workers();
+    let total = groups * params.k;
+    println!(
+        "\n== fault-profile sweep (N={} workers, K={} S={} E={}, verify on) ==",
+        nw, params.k, params.s, params.e
+    );
+    println!(
+        "{:<22} {:>8} {:>10} {:>10} {:>10} {:>9} {:>11} {:>11}",
+        "profile", "ok", "fail", "thrpt/s", "p99_ms", "corrupt", "verify_fail", "redispatch"
+    );
+    let mut rows = Vec::new();
+    for profile in ["honest", "slow:1:25:0:1", "byz-random:1:10", "churn:3"] {
+        let engine: Arc<dyn InferenceEngine> = Arc::new(LinearMockEngine::new(d, c));
+        let mut cfg = ServiceConfig::new(params);
+        cfg.flush_after = Duration::from_millis(2);
+        cfg.max_inflight = 4;
+        cfg.decode_threads = 2;
+        cfg.verify = VerifyPolicy::on(0.4);
+        cfg.group_timeout = Duration::from_secs(5);
+        cfg.set_fault_profile(&FaultProfile::parse(profile, nw, 4242).unwrap());
+        let service = Arc::new(Service::start(engine, cfg));
+        let arrivals = Arrivals::Bursty { burst: total, period_ms: 0.0 };
+        let report = run_scenario(&service, d, total, arrivals, 77).unwrap();
+        let m = &service.metrics;
+        println!(
+            "{:<22} {:>8} {:>10} {:>10.1} {:>10.2} {:>9} {:>11} {:>11}",
+            profile,
+            report.completed,
+            report.failed,
+            report.throughput,
+            report.latency.p99 * 1e3,
+            m.corrupt_replies_injected.get(),
+            m.verify_failures.get(),
+            m.redispatches.get()
+        );
+        rows.push(FaultRow {
+            profile,
+            corrupt_injected: m.corrupt_replies_injected.get(),
+            verify_failures: m.verify_failures.get(),
+            redispatches: m.redispatches.get(),
+            report,
+        });
+    }
+    rows
+}
+
 /// Hand-rolled JSON artifact (no serde in this environment).
-fn write_json(path: &std::ffi::OsStr, payload: usize, rows: &[SweepRow]) {
+fn write_json(path: &std::ffi::OsStr, payload: usize, rows: &[SweepRow], faults: &[FaultRow]) {
     let base = rows[0].report.throughput;
     let mut out = String::from("{\n");
     out.push_str("  \"bench\": \"bench_throughput\",\n");
@@ -187,6 +249,26 @@ fn write_json(path: &std::ffi::OsStr, payload: usize, rows: &[SweepRow]) {
             r.completed,
             r.failed,
             if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ],\n");
+    out.push_str("  \"fault_rows\": [\n");
+    for (i, row) in faults.iter().enumerate() {
+        let r = &row.report;
+        out.push_str(&format!(
+            "    {{\"profile\": \"{}\", \"throughput_rps\": {:.1}, \"p50_ms\": {:.2}, \
+             \"p99_ms\": {:.2}, \"completed\": {}, \"failed\": {}, \"corrupt_injected\": {}, \
+             \"verify_failures\": {}, \"redispatches\": {}}}{}\n",
+            row.profile,
+            r.throughput,
+            r.latency.p50 * 1e3,
+            r.latency.p99 * 1e3,
+            r.completed,
+            r.failed,
+            row.corrupt_injected,
+            row.verify_failures,
+            row.redispatches,
+            if i + 1 < faults.len() { "," } else { "" }
         ));
     }
     out.push_str("  ],\n");

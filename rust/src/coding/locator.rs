@@ -315,6 +315,61 @@ mod tests {
     }
 
     #[test]
+    fn property_locates_exactly_e_corruptions_both_methods() {
+        // Random (K, E) with messy-magnitude payloads (spanning several
+        // decades, exact zeros included): corrupt exactly E positions with
+        // signal-scaled offsets and require both solver formulations to
+        // pinpoint them.
+        forall("locator-random-k-e-messy", 40, |g| {
+            let k = g.usize_in(2, 5);
+            let e = g.usize_in(1, 2);
+            let params = crate::coding::CodeParams::new(k, 0, e);
+            let xs = chebyshev::second_kind(params.n());
+            let p: Vec<f64> = (0..k).map(|_| g.f64_messy().clamp(-1e3, 1e3)).collect();
+            let clean: Vec<f64> = xs.iter().map(|&x| poly_eval(&p, x)).collect();
+            let scale = clean.iter().fold(0.0f64, |m, y| m.max(y.abs()));
+            let bad = g.subset(xs.len(), e);
+            let mut ys = clean;
+            for &i in &bad {
+                let mag = (1.0 + scale) * g.f64_in(5.0, 50.0);
+                ys[i] += if g.bool() { mag } else { -mag };
+            }
+            for method in [LocatorMethod::Pinned, LocatorMethod::Homogeneous] {
+                let found = locate(&xs, &ys, k, e, method).unwrap();
+                assert_eq!(found, bad, "{method:?} missed (scale={scale:.3e})");
+            }
+        });
+    }
+
+    #[test]
+    fn pinned_rank_deficiency_falls_back_to_homogeneous() {
+        // All-zero honest evaluations: every clean row zeroes the Q-block
+        // columns of the pinned system, leaving it rank-deficient whenever
+        // E < deg-1 — the true solution has Q₀ = 0 (P ≡ 0, Q vanishing at
+        // the corrupt nodes), which pinning Q₀ = 1 cannot represent. The
+        // locate entry points must silently fall back to the homogeneous
+        // solver and still find the corruptions.
+        forall("locator-q0-fallback", 20, |g| {
+            let k = g.usize_in(3, 6);
+            let e = 1;
+            let params = crate::coding::CodeParams::new(k, 0, e);
+            let xs = chebyshev::second_kind(params.n());
+            let mut ys = vec![0.0f64; xs.len()];
+            let bad = g.subset(xs.len(), e);
+            for &i in &bad {
+                ys[i] = 2.0 + g.f64_in(0.0, 20.0);
+            }
+            let found = locate(&xs, &ys, k, e, LocatorMethod::Pinned).unwrap();
+            assert_eq!(found, bad, "fallback path missed the corruption");
+            // The shared-power-table path used by Algorithm 2 must take the
+            // same fallback.
+            let pt = PowerTable::new(&xs, k + e);
+            let found = locate_with_powers(&xs, &pt, &ys, k, e).unwrap();
+            assert_eq!(found, bad, "power-table fallback path missed");
+        });
+    }
+
+    #[test]
     fn poly_eval_matches_naive() {
         forall("horner", 50, |g| {
             let len = g.usize_in(1, 8);

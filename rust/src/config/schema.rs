@@ -7,7 +7,8 @@ use anyhow::{bail, Context, Result};
 
 use crate::coding::CodeParams;
 use crate::coordinator::Strategy;
-use crate::workers::{ByzantineMode, LatencyModel};
+use crate::sim::faults::FaultProfile;
+use crate::workers::LatencyModel;
 
 use super::parser::ConfigDoc;
 
@@ -36,12 +37,18 @@ pub struct AppConfig {
     pub group_timeout: Duration,
     /// Worker latency model (same for all workers).
     pub worker_latency: LatencyModel,
-    /// Fraction of groups that get forced stragglers.
-    pub straggler_rate: f64,
-    /// Forced straggler delay.
-    pub straggler_delay: Duration,
-    /// Byzantine corruption mode, if the deployment simulates adversaries.
-    pub byz_mode: Option<ByzantineMode>,
+    /// Named fault profile spec (see [`FaultProfile::parse`]): which
+    /// workers crash / straggle / flake / corrupt, deterministically under
+    /// `seed`. `None` = all honest.
+    pub fault_profile: Option<String>,
+    /// Verify every decoded group by re-encoding it at the decode set's
+    /// evaluation points (escalating to the homogeneous locator and then a
+    /// group redispatch on failure). Opt-in: the tolerance is calibrated on
+    /// the linear mock engines; validate against a real nonlinear model's
+    /// Berrut residuals before enabling in production.
+    pub verify_decode: bool,
+    /// Max allowed relative re-encode residual before escalation.
+    pub verify_tol: f64,
     /// RNG seed for fault injection.
     pub seed: u64,
 }
@@ -60,9 +67,9 @@ impl Default for AppConfig {
             decode_threads: 2,
             group_timeout: Duration::from_secs(30),
             worker_latency: LatencyModel::None,
-            straggler_rate: 0.0,
-            straggler_delay: Duration::from_millis(100),
-            byz_mode: None,
+            fault_profile: None,
+            verify_decode: false,
+            verify_tol: 0.4,
             seed: 0xA11CE,
         }
     }
@@ -86,6 +93,18 @@ impl AppConfig {
     }
 
     pub fn from_doc(doc: &ConfigDoc) -> Result<AppConfig> {
+        // The stochastic per-group knobs were replaced by named fault
+        // profiles; fail loudly so an old config doesn't silently run an
+        // all-honest fleet and report perfect robustness.
+        for retired in ["faults.straggler_rate", "faults.straggler_delay_ms", "faults.byzantine"]
+        {
+            if doc.get_str(retired).is_some() {
+                bail!(
+                    "config key '{retired}' was retired; express the fault fleet as \
+                     faults.profile (e.g. \"slow:1:0:40:0.5\" or \"byz-random:2:10\")"
+                );
+            }
+        }
         let mut cfg = AppConfig::default();
         let k = doc.get_usize("code.k")?.unwrap_or(cfg.params.k);
         let s = doc.get_usize("code.s")?.unwrap_or(cfg.params.s);
@@ -136,20 +155,23 @@ impl AppConfig {
         if let Some(v) = doc.get_str("workers.latency") {
             cfg.worker_latency = LatencyModel::parse(&v).map_err(|e| anyhow::anyhow!(e))?;
         }
-        if let Some(v) = doc.get_f64("faults.straggler_rate")? {
-            if !(0.0..=1.0).contains(&v) {
-                bail!("faults.straggler_rate must be in [0,1], got {v}");
+        if let Some(v) = doc.get_bool("serving.verify_decode")? {
+            cfg.verify_decode = v;
+        }
+        if let Some(v) = doc.get_f64("serving.verify_tol")? {
+            if v <= 0.0 {
+                bail!("serving.verify_tol must be positive, got {v}");
             }
-            cfg.straggler_rate = v;
-        }
-        if let Some(ms) = doc.get_f64("faults.straggler_delay_ms")? {
-            cfg.straggler_delay = Duration::from_secs_f64(ms / 1e3);
-        }
-        if let Some(v) = doc.get_str("faults.byzantine") {
-            cfg.byz_mode = Some(ByzantineMode::parse(&v).map_err(|e| anyhow::anyhow!(e))?);
+            cfg.verify_tol = v;
         }
         if let Some(v) = doc.get_usize("faults.seed")? {
             cfg.seed = v as u64;
+        }
+        if let Some(v) = doc.get_str("faults.profile") {
+            // Validate eagerly so a typo fails at startup, not mid-serve.
+            FaultProfile::parse(&v, cfg.params.num_workers(), cfg.seed)
+                .map_err(|e| anyhow::anyhow!("faults.profile: {e}"))?;
+            cfg.fault_profile = Some(v);
         }
         Ok(cfg)
     }
@@ -203,11 +225,13 @@ mod tests {
             s = 0
             [serving]
             strategy = "replication"
+            verify_decode = true
+            verify_tol = 0.5
             [workers]
             latency = "exp:4"
             [faults]
-            byzantine = "gauss:10"
-            straggler_rate = 0.5
+            profile = "byz-random:2:10"
+            seed = 99
             "#,
         )
         .unwrap();
@@ -215,18 +239,41 @@ mod tests {
         assert_eq!(cfg.params, CodeParams::new(12, 0, 2));
         assert_eq!(cfg.strategy, Strategy::Replication);
         assert_eq!(cfg.worker_latency, LatencyModel::Exponential { mean_ms: 4.0 });
-        assert_eq!(cfg.byz_mode, Some(ByzantineMode::GaussianNoise { sigma: 10.0 }));
-        assert_eq!(cfg.straggler_rate, 0.5);
+        assert_eq!(cfg.fault_profile.as_deref(), Some("byz-random:2:10"));
+        assert!(cfg.verify_decode);
+        assert_eq!(cfg.verify_tol, 0.5);
+        assert_eq!(cfg.seed, 99);
+        // The stored spec expands deterministically for this deployment.
+        let p = FaultProfile::parse(
+            cfg.fault_profile.as_deref().unwrap(),
+            cfg.params.num_workers(),
+            cfg.seed,
+        )
+        .unwrap();
+        assert_eq!(p.faulty().len(), 2);
     }
 
     #[test]
     fn invalid_values_rejected() {
-        let doc = ConfigDoc::parse("[faults]\nstraggler_rate = 1.5\n").unwrap();
-        assert!(AppConfig::from_doc(&doc).is_err());
         let doc = ConfigDoc::parse("[code]\nk = 0\n").unwrap();
         assert!(AppConfig::from_doc(&doc).is_err());
         let doc = ConfigDoc::parse("[code]\ns = 0\ne = 0\n").unwrap();
         assert!(AppConfig::from_doc(&doc).is_err());
+        let doc = ConfigDoc::parse("[serving]\nverify_tol = 0\n").unwrap();
+        assert!(AppConfig::from_doc(&doc).is_err());
+        // Unknown profile names and over-large counts fail at load time.
+        let doc = ConfigDoc::parse("[faults]\nprofile = \"nonsense:3\"\n").unwrap();
+        assert!(AppConfig::from_doc(&doc).is_err());
+        let doc = ConfigDoc::parse("[faults]\nprofile = \"crash:99@4\"\n").unwrap();
+        assert!(AppConfig::from_doc(&doc).is_err());
+        // Retired stochastic fault knobs are rejected, not silently ignored.
+        for retired in
+            ["straggler_rate = 0.5", "straggler_delay_ms = 100", "byzantine = \"gauss:10\""]
+        {
+            let doc = ConfigDoc::parse(&format!("[faults]\n{retired}\n")).unwrap();
+            let err = AppConfig::from_doc(&doc).unwrap_err();
+            assert!(format!("{err:#}").contains("retired"), "{retired}: {err:#}");
+        }
     }
 
     #[test]

@@ -8,7 +8,10 @@ pub mod pipeline;
 pub mod service;
 
 pub use baselines::{ParmProxyPipeline, ReplicationPipeline};
-pub use pipeline::{locate_and_decode, FaultPlan, GroupOutcome, GroupPipeline};
+pub use pipeline::{
+    locate_and_decode, verified_locate_and_decode, verify_residual, FaultPlan, GroupOutcome,
+    GroupPipeline, VerifyPolicy, VerifyReport,
+};
 pub use service::{PredictionHandle, Service, ServiceConfig};
 
 /// Which serving strategy a deployment uses.

@@ -43,6 +43,175 @@ pub struct GroupOutcome {
     pub flagged: Vec<usize>,
     /// End-to-end group latency.
     pub latency: Duration,
+    /// Decode-verification report (None when verification is off).
+    pub verify: Option<VerifyReport>,
+}
+
+/// Decode-verification policy: after decoding, re-encode the decoded `Ŷ` at
+/// the decode set's evaluation points and compare against the replies the
+/// decode consumed. Honest groups reproduce their replies to within the
+/// Berrut approximation error; a corrupted reply that slipped past the
+/// locator leaves a residual on the order of the corruption itself.
+#[derive(Clone, Copy, Debug)]
+pub struct VerifyPolicy {
+    pub enabled: bool,
+    /// Max allowed residual, relative to `1 +` the median node peak of
+    /// `|Ỹ|` over the decode set (see [`verify_residual`]).
+    pub tol: f64,
+}
+
+impl VerifyPolicy {
+    pub fn off() -> VerifyPolicy {
+        VerifyPolicy { enabled: false, tol: f64::INFINITY }
+    }
+
+    pub fn on(tol: f64) -> VerifyPolicy {
+        VerifyPolicy { enabled: true, tol }
+    }
+}
+
+impl Default for VerifyPolicy {
+    fn default() -> Self {
+        VerifyPolicy::off()
+    }
+}
+
+/// What decode verification concluded for one group.
+#[derive(Clone, Copy, Debug)]
+pub struct VerifyReport {
+    /// Worst re-encode residual (normalized as in [`verify_residual`]).
+    pub residual: f64,
+    pub passed: bool,
+    /// Whether any escalation rung (full-set decode / homogeneous locator)
+    /// ran.
+    pub escalated: bool,
+}
+
+/// Worst relative residual of the re-encoded decode against the replies it
+/// was decoded from: `max_i max_t |Σ_j ℓ_j(β_i)·Ŷ_j[t] − Ỹ_i[t]|` over the
+/// decode set, scaled by `1 +` the **median** across nodes of `max_t |Ỹ_i|`.
+/// The median (not the max) keys the scale to the honest signal level: up
+/// to `E` corrupted replies in the set cannot inflate the normalizer, so
+/// the relative residual grows without bound with the corruption magnitude
+/// instead of saturating at a geometry constant. All accumulation in f64.
+pub fn verify_residual(
+    code: &ApproxIferCode,
+    decode_set: &[usize],
+    replies: &[Option<Vec<f32>>],
+    predictions: &[Vec<f32>],
+) -> f64 {
+    let k = code.params().k;
+    let w = code.encode_matrix();
+    let mut node_peaks: Vec<f64> = decode_set
+        .iter()
+        .map(|&i| {
+            replies[i]
+                .as_deref()
+                .unwrap()
+                .iter()
+                .fold(0.0f64, |m, &v| m.max((v as f64).abs()))
+        })
+        .collect();
+    node_peaks.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let scale = node_peaks.get(node_peaks.len() / 2).copied().unwrap_or(0.0);
+    let mut worst = 0.0f64;
+    for &i in decode_set {
+        let y = replies[i].as_deref().unwrap();
+        let row = &w[i * k..(i + 1) * k];
+        for (t, &yt) in y.iter().enumerate() {
+            let z: f64 =
+                row.iter().zip(predictions).map(|(&wj, p)| wj as f64 * p[t] as f64).sum();
+            worst = worst.max((z - yt as f64).abs());
+        }
+    }
+    worst / (1.0 + scale)
+}
+
+/// [`locate_and_decode`] wrapped in the verification ladder's in-decode
+/// rungs. Decode with `method` and verify by re-encoding; on failure:
+///
+/// 1. decode over **every** available reply with no exclusions — when the
+///    locator cried wolf on an honest group (with `E > 0` it must always
+///    flag `E` workers, and excluding honest nodes can leave a badly
+///    conditioned subset whose decode is garbage), the full
+///    alternating-sign node set is well conditioned and self-consistent,
+///    while any real corruption keeps the residual large;
+/// 2. retry location with the homogeneous solver (no pinned-`Q₀` blind
+///    spot) and verify that decode.
+///
+/// The final rung — group redispatch — belongs to the coordinator, which
+/// owns the query payloads.
+pub fn verified_locate_and_decode(
+    code: &ApproxIferCode,
+    method: LocatorMethod,
+    replies: &[Option<Vec<f32>>],
+    policy: VerifyPolicy,
+    metrics: &ServingMetrics,
+) -> Result<(Vec<Vec<f32>>, Vec<usize>, Vec<usize>, Option<VerifyReport>)> {
+    let (predictions, decode_set, flagged) = locate_and_decode(code, method, replies, metrics)?;
+    if !policy.enabled {
+        return Ok((predictions, decode_set, flagged, None));
+    }
+    let residual = verify_residual(code, &decode_set, replies, &predictions);
+    let e = code.params().e;
+    if residual <= policy.tol {
+        if e > 0 {
+            metrics.locator_hits.inc();
+        }
+        let report = VerifyReport { residual, passed: true, escalated: false };
+        return Ok((predictions, decode_set, flagged, Some(report)));
+    }
+    metrics.verify_failures.inc();
+    if e > 0 {
+        metrics.locator_misses.inc();
+    }
+    // Only escalate when an alternative decode actually exists: with E = 0
+    // nothing was excluded and the locator has no say, so re-running would
+    // recompute the identical decode.
+    let can_full_set = !flagged.is_empty();
+    let can_relocate = e > 0 && method != LocatorMethod::Homogeneous;
+    if !can_full_set && !can_relocate {
+        let report = VerifyReport { residual, passed: false, escalated: false };
+        return Ok((predictions, decode_set, flagged, Some(report)));
+    }
+    metrics.verify_escalations.inc();
+    let mut best = (predictions, decode_set, flagged, residual);
+    // Rung: full-set decode (exclude nothing).
+    if can_full_set {
+        let avail: Vec<usize> = (0..replies.len()).filter(|&i| replies[i].is_some()).collect();
+        let payloads: Vec<&[f32]> =
+            avail.iter().map(|&i| replies[i].as_deref().unwrap()).collect();
+        let full = code.decode(&avail, &payloads);
+        let r_full = verify_residual(code, &avail, replies, &full);
+        if r_full <= policy.tol {
+            let report = VerifyReport { residual: r_full, passed: true, escalated: true };
+            return Ok((full, avail, Vec::new(), Some(report)));
+        }
+        if r_full < best.3 {
+            best = (full, avail, Vec::new(), r_full);
+        }
+    }
+    // Rung: homogeneous locator. Located against scratch metrics so the
+    // retry does not double-count `byzantine_flagged` (and the latency
+    // histograms) for the same group.
+    if can_relocate {
+        let scratch = ServingMetrics::new();
+        let (p2, d2, f2) =
+            locate_and_decode(code, LocatorMethod::Homogeneous, replies, &scratch)?;
+        let r2 = verify_residual(code, &d2, replies, &p2);
+        if r2 <= policy.tol {
+            let report = VerifyReport { residual: r2, passed: true, escalated: true };
+            return Ok((p2, d2, f2, Some(report)));
+        }
+        if r2 < best.3 {
+            best = (p2, d2, f2, r2);
+        }
+    }
+    // Every in-decode rung failed: hand the caller the best decode found
+    // (it may redispatch the group, or serve degraded).
+    let (p, d, f, r) = best;
+    let report = VerifyReport { residual: r, passed: false, escalated: true };
+    Ok((p, d, f, Some(report)))
 }
 
 /// The locate + decode tail of the pipeline, shared verbatim between the
@@ -89,6 +258,7 @@ pub fn locate_and_decode(
 pub struct GroupPipeline {
     code: ApproxIferCode,
     method: LocatorMethod,
+    verify: VerifyPolicy,
     /// Reply-wait timeout (a straggled worker past this is treated as lost).
     pub timeout: Duration,
     group_counter: u64,
@@ -101,6 +271,7 @@ impl GroupPipeline {
         GroupPipeline {
             code: ApproxIferCode::new(params),
             method: LocatorMethod::Pinned,
+            verify: VerifyPolicy::off(),
             timeout: Duration::from_secs(30),
             group_counter: 0,
             stale: HashMap::new(),
@@ -109,6 +280,11 @@ impl GroupPipeline {
 
     pub fn with_locator(mut self, method: LocatorMethod) -> GroupPipeline {
         self.method = method;
+        self
+    }
+
+    pub fn with_verification(mut self, policy: VerifyPolicy) -> GroupPipeline {
+        self.verify = policy;
         self
     }
 
@@ -207,12 +383,12 @@ impl GroupPipeline {
                 }
             }
         }
-        let (predictions, decode_set, flagged) =
-            locate_and_decode(&self.code, self.method, &replies, metrics)?;
+        let (predictions, decode_set, flagged, verify) =
+            verified_locate_and_decode(&self.code, self.method, &replies, self.verify, metrics)?;
         metrics.groups_decoded.inc();
         let latency = t_group.elapsed();
         metrics.group_latency.record(latency.as_secs_f64());
-        Ok(GroupOutcome { predictions, decode_set, flagged, latency })
+        Ok(GroupOutcome { predictions, decode_set, flagged, latency, verify })
     }
 }
 
@@ -304,6 +480,89 @@ mod tests {
         let qrefs: Vec<&[f32]> = q.iter().map(|x| &x[..]).collect();
         assert!(pipe.infer_group(&pool, &qrefs, &FaultPlan::none(), &metrics).is_err());
         pool.shutdown();
+    }
+
+    #[test]
+    fn verification_passes_on_honest_and_located_byzantine_groups() {
+        let params = CodeParams::new(4, 0, 1);
+        let (d, c) = (10, 6);
+        let pool = mk_pool(params, d, c);
+        let mut pipe = GroupPipeline::new(params).with_verification(VerifyPolicy::on(0.4));
+        let metrics = ServingMetrics::new();
+        let queries = smooth_queries(4, d);
+        let qrefs: Vec<&[f32]> = queries.iter().map(|q| &q[..]).collect();
+        // Honest group.
+        let out = pipe.infer_group(&pool, &qrefs, &FaultPlan::none(), &metrics).unwrap();
+        let v = out.verify.expect("verification ran");
+        assert!(v.passed, "honest residual {} exceeded tol", v.residual);
+        assert!(!v.escalated);
+        // One adversary within the E=1 budget: located, excluded, verified.
+        let plan = FaultPlan {
+            byzantine: vec![2],
+            byz_mode: Some(ByzantineMode::GaussianNoise { sigma: 20.0 }),
+            ..FaultPlan::none()
+        };
+        let out = pipe.infer_group(&pool, &qrefs, &plan, &metrics).unwrap();
+        let v = out.verify.expect("verification ran");
+        assert!(v.passed, "located-adversary residual {} exceeded tol", v.residual);
+        assert_eq!(out.flagged, vec![2]);
+        assert!(metrics.locator_hits.get() >= 1);
+        pool.shutdown();
+    }
+
+    #[test]
+    fn verification_fails_when_corruption_exceeds_the_budget() {
+        // Corrupt E+1 workers: the locator can exclude at most E, so a
+        // corrupted reply must survive into the decode set and verification
+        // must catch the inconsistency.
+        let params = CodeParams::new(3, 0, 1);
+        let code = ApproxIferCode::new(params);
+        let nw = params.num_workers();
+        let d = 5;
+        let queries: Vec<Vec<f32>> = smooth_queries(3, d);
+        let qrefs: Vec<&[f32]> = queries.iter().map(|q| &q[..]).collect();
+        let mut coded: Vec<Vec<f32>> = vec![vec![0.0; d]; nw];
+        code.encode_into(&qrefs, &mut coded);
+        let mut replies: Vec<Option<Vec<f32>>> = coded.into_iter().map(Some).collect();
+        for &w in &[1usize, 4] {
+            let mode = ByzantineMode::Colluding { pact: 5, scale: 30.0 };
+            let mut rng = crate::util::rng::Rng::new(9);
+            mode.corrupt(1, replies[w].as_mut().unwrap(), &mut rng);
+        }
+        let metrics = ServingMetrics::new();
+        let (_p, _ds, _fl, report) = verified_locate_and_decode(
+            &code,
+            LocatorMethod::Pinned,
+            &replies,
+            VerifyPolicy::on(0.4),
+            &metrics,
+        )
+        .unwrap();
+        let report = report.expect("verification ran");
+        assert!(!report.passed, "over-budget corruption must fail verification");
+        assert!(report.escalated, "ladder must have tried the homogeneous rung");
+        assert!(metrics.verify_failures.get() >= 1);
+        assert_eq!(metrics.locator_misses.get(), 1);
+    }
+
+    #[test]
+    fn verify_residual_is_small_for_self_consistent_decodes() {
+        // decode(encode(smooth)) must re-encode to nearly the same coded
+        // payloads — the residual the verification ladder keys on.
+        let params = CodeParams::new(5, 1, 0);
+        let code = ApproxIferCode::new(params);
+        let d = 4;
+        let queries: Vec<Vec<f32>> = smooth_queries(5, d);
+        let qrefs: Vec<&[f32]> = queries.iter().map(|q| &q[..]).collect();
+        let mut coded: Vec<Vec<f32>> = vec![vec![0.0; d]; params.num_workers()];
+        code.encode_into(&qrefs, &mut coded);
+        let replies: Vec<Option<Vec<f32>>> = coded.into_iter().map(Some).collect();
+        let decode_set: Vec<usize> = (0..params.num_workers()).collect();
+        let payloads: Vec<&[f32]> =
+            decode_set.iter().map(|&i| replies[i].as_deref().unwrap()).collect();
+        let predictions = code.decode(&decode_set, &payloads);
+        let r = verify_residual(&code, &decode_set, &replies, &predictions);
+        assert!(r < 0.15, "self-consistent residual too large: {r}");
     }
 
     #[test]

@@ -18,7 +18,13 @@
 //!   collected groups from a shared queue and running Byzantine location +
 //!   Berrut decode ([`crate::coordinator::pipeline::locate_and_decode`],
 //!   the exact code path the synchronous pipeline uses), so an expensive
-//!   locate on one group never stalls fan-out or decode of another.
+//!   locate on one group never stalls fan-out or decode of another. With
+//!   [`ServiceConfig::verify`] enabled each decode is checked by
+//!   re-encoding it at the decode set's evaluation points; failures climb
+//!   an escalation ladder — full-set no-exclusion decode, homogeneous
+//!   locator, then one re-encoded **redispatch** of the group, then
+//!   degraded delivery (observable via the
+//!   `verify_failures`/`redispatches` counters).
 //!
 //! Clients get a oneshot-style receiver that resolves to the decoded
 //! prediction ([`Service::submit`]), or register a tagged reply channel
@@ -36,13 +42,12 @@ use anyhow::Result;
 
 use crate::coding::{ApproxIferCode, CodeParams, LocatorMethod};
 use crate::metrics::ServingMetrics;
-use crate::util::rng::Rng;
+use crate::sim::faults::FaultProfile;
 use crate::workers::{
-    ByzantineMode, CollectedGroup, InferenceEngine, ReplyRouter, WorkerPool, WorkerSpec,
-    WorkerTask,
+    CollectedGroup, InferenceEngine, ReplyRouter, WorkerPool, WorkerSpec, WorkerTask,
 };
 
-use super::pipeline::{locate_and_decode, FaultPlan};
+use super::pipeline::{verified_locate_and_decode, FaultPlan, VerifyPolicy};
 
 /// Service configuration.
 #[derive(Clone)]
@@ -50,14 +55,11 @@ pub struct ServiceConfig {
     pub params: CodeParams,
     /// Flush a partial group after this long.
     pub flush_after: Duration,
-    /// Per-worker injected latency (experiments; `LatencyModel::None` in
-    /// production).
+    /// Per-worker injected latency + fault behavior (all honest /
+    /// `LatencyModel::None` in production).
     pub worker_specs: Vec<WorkerSpec>,
-    /// Chance any group gets `params.s` forced stragglers (experiments).
-    pub straggler_rate: f64,
-    pub straggler_delay: Duration,
-    /// If set, every group gets `params.e` random Byzantine workers.
-    pub byz_mode: Option<ByzantineMode>,
+    /// Decode verification (off by default; the serve binary enables it).
+    pub verify: VerifyPolicy,
     pub seed: u64,
     /// Groups that may be in flight (dispatched, not yet decoded) at once;
     /// the batcher blocks dispatching beyond this. `1` reproduces the old
@@ -69,8 +71,8 @@ pub struct ServiceConfig {
     /// count past this errors out instead of stalling the service).
     pub group_timeout: Duration,
     /// Experiment hook: exact per-group fault plan keyed by group index
-    /// (1-based dispatch order). Overrides the stochastic
-    /// `straggler_rate`/`byz_mode` injection when set.
+    /// (1-based dispatch order). For fleet-wide behavior programs use
+    /// [`ServiceConfig::set_fault_profile`] instead.
     pub fault_hook: Option<Arc<dyn Fn(u64) -> FaultPlan + Send + Sync>>,
 }
 
@@ -80,14 +82,28 @@ impl ServiceConfig {
             params,
             flush_after: Duration::from_millis(20),
             worker_specs: vec![WorkerSpec::default(); params.num_workers()],
-            straggler_rate: 0.0,
-            straggler_delay: Duration::from_millis(100),
-            byz_mode: None,
+            verify: VerifyPolicy::off(),
             seed: 0xA11CE,
             max_inflight: 4,
             decode_threads: 2,
             group_timeout: Duration::from_secs(30),
             fault_hook: None,
+        }
+    }
+
+    /// Stamp a [`FaultProfile`]'s behavior programs onto the worker specs
+    /// (latency models are preserved).
+    pub fn set_fault_profile(&mut self, profile: &FaultProfile) {
+        assert_eq!(
+            profile.behaviors.len(),
+            self.worker_specs.len(),
+            "profile '{}' sized for {} workers, service has {}",
+            profile.name,
+            profile.behaviors.len(),
+            self.worker_specs.len()
+        );
+        for (spec, &b) in self.worker_specs.iter_mut().zip(&profile.behaviors) {
+            spec.behavior = b;
         }
     }
 }
@@ -98,8 +114,7 @@ impl fmt::Debug for ServiceConfig {
             .field("params", &self.params)
             .field("flush_after", &self.flush_after)
             .field("workers", &self.worker_specs.len())
-            .field("straggler_rate", &self.straggler_rate)
-            .field("byz_mode", &self.byz_mode)
+            .field("verify", &self.verify)
             .field("max_inflight", &self.max_inflight)
             .field("decode_threads", &self.decode_threads)
             .field("group_timeout", &self.group_timeout)
@@ -157,8 +172,19 @@ struct Submission {
     reply: ReplySink,
 }
 
+/// A group sent back around the loop after failed decode verification:
+/// same sinks and original payloads, re-encoded and re-fanned-out under a
+/// fresh group id.
+struct Redispatch {
+    sinks: Vec<ReplySink>,
+    queries: Vec<Vec<f32>>,
+    retries: u32,
+    started: Instant,
+}
+
 enum Msg {
     Query(Submission),
+    Redispatch(Redispatch),
     Shutdown,
 }
 
@@ -175,9 +201,12 @@ impl Service {
         let metrics = Arc::new(ServingMetrics::new());
         let (tx, rx) = channel::<Msg>();
         let m = metrics.clone();
+        // The batcher gets a sender back into its own queue so decode
+        // threads can requeue verification-failed groups for redispatch.
+        let loopback = tx.clone();
         let batcher = std::thread::Builder::new()
             .name("coordinator".into())
-            .spawn(move || batcher_loop(engine, cfg, rx, m))
+            .spawn(move || batcher_loop(engine, cfg, rx, loopback, m))
             .expect("spawning coordinator");
         Service { tx, batcher: Some(batcher), metrics }
     }
@@ -274,21 +303,153 @@ impl InflightGate {
     }
 }
 
-/// Per-group context held between dispatch and decode.
+/// Per-group context held between dispatch and decode. Retains the original
+/// query payloads so a verification-failed group can be re-encoded and
+/// redispatched.
 struct GroupCtx {
     sinks: Vec<ReplySink>,
+    queries: Vec<Vec<f32>>,
     started: Instant,
+    retries: u32,
 }
 
 type CtxMap = Arc<Mutex<HashMap<u64, GroupCtx>>>;
+
+/// Fail every sink of a drained queue message (shutdown paths).
+fn fail_msg(msg: Msg, why: &str) {
+    match msg {
+        Msg::Query(s) => s.reply.send(Err(why.into())),
+        Msg::Redispatch(r) => {
+            for sink in &r.sinks {
+                sink.send(Err(why.into()));
+            }
+        }
+        Msg::Shutdown => {}
+    }
+}
+
+/// The batcher's dispatch machinery: everything that is fixed for the
+/// service's lifetime, so the per-group entry points only take the group's
+/// own sinks/payloads.
+struct Dispatcher {
+    pool: WorkerPool,
+    router: ReplyRouter,
+    code: Arc<ApproxIferCode>,
+    cfg: ServiceConfig,
+    ctxs: CtxMap,
+    gate: Arc<InflightGate>,
+    decode_tx: Sender<CollectedGroup>,
+    metrics: Arc<ServingMetrics>,
+    group_counter: u64,
+}
+
+impl Dispatcher {
+    /// Flush the pending partial group: split submissions into sinks +
+    /// payloads and dispatch.
+    fn flush(&mut self, pending: &mut Vec<Submission>) {
+        if pending.is_empty() {
+            return;
+        }
+        let submissions: Vec<Submission> = pending.drain(..).collect();
+        let mut sinks = Vec::with_capacity(submissions.len());
+        let mut queries = Vec::with_capacity(submissions.len());
+        for s in submissions {
+            sinks.push(s.reply);
+            queries.push(s.payload);
+        }
+        self.dispatch(sinks, queries, Instant::now(), 0);
+    }
+
+    /// Encode, register and fan out one (possibly partial) group: pad by
+    /// repeating the last query — padded slots' predictions are discarded.
+    /// Blocks while `max_inflight` groups are already out. Also the
+    /// redispatch entry point (`retries > 0`): same sinks and payloads
+    /// under a new group id.
+    fn dispatch(
+        &mut self,
+        sinks: Vec<ReplySink>,
+        queries: Vec<Vec<f32>>,
+        started: Instant,
+        retries: u32,
+    ) {
+        self.gate.acquire(self.cfg.max_inflight.max(1), &self.metrics);
+        self.group_counter += 1;
+        let group = self.group_counter;
+        let params = self.cfg.params;
+        let k = params.k;
+        let nw = params.num_workers();
+        let real = queries.len();
+        let mut payloads: Vec<&[f32]> = queries.iter().map(|q| &q[..]).collect();
+        while payloads.len() < k {
+            payloads.push(&queries[real - 1]);
+        }
+
+        // --- encode (eq. (4)-(8)) ---------------------------------------
+        let t0 = Instant::now();
+        let d = payloads[0].len();
+        let mut coded: Vec<Vec<f32>> = vec![vec![0.0; d]; nw];
+        self.code.encode_into(&payloads, &mut coded);
+        self.metrics.encode_latency.record(t0.elapsed().as_secs_f64());
+
+        // Exact per-group fault plan (experiments; fleet-wide behavior
+        // programs live in the worker specs and need no per-dispatch work
+        // here).
+        let plan = match &self.cfg.fault_hook {
+            Some(hook) => hook(group),
+            None => FaultPlan::none(),
+        };
+
+        // Register reply routing *before* fan-out: replies may beat us
+        // back.
+        self.ctxs.lock().unwrap().insert(group, GroupCtx { sinks, queries, started, retries });
+        let wait_for = params.wait_for().min(nw);
+        let deadline = Instant::now() + self.cfg.group_timeout;
+        self.router.register(group, nw, wait_for, deadline, self.decode_tx.clone());
+        self.metrics.groups_dispatched.inc();
+
+        // --- fan out ------------------------------------------------------
+        for (i, payload) in coded.into_iter().enumerate() {
+            let task = WorkerTask {
+                group,
+                payload,
+                extra_delay: if plan.stragglers.contains(&i) {
+                    plan.straggler_delay
+                } else {
+                    Duration::ZERO
+                },
+                corrupt: if plan.byzantine.contains(&i) { plan.byz_mode } else { None },
+            };
+            if self.pool.send(i, task).is_err() {
+                // Worker pool is gone; fail the group unless the router
+                // already delivered it (whoever removes the ctx owns the
+                // gate slot).
+                self.router.deregister(group);
+                if let Some(ctx) = self.ctxs.lock().unwrap().remove(&group) {
+                    self.metrics.groups_failed.inc();
+                    for sink in &ctx.sinks {
+                        sink.send(Err("worker pool shut down".into()));
+                    }
+                    self.gate.release();
+                }
+                return;
+            }
+        }
+    }
+}
 
 fn batcher_loop(
     engine: Arc<dyn InferenceEngine>,
     cfg: ServiceConfig,
     rx: Receiver<Msg>,
+    loopback: Sender<Msg>,
     metrics: Arc<ServingMetrics>,
 ) {
-    let mut pool = WorkerPool::spawn(engine, &cfg.worker_specs, cfg.seed ^ 0x77);
+    let mut pool = WorkerPool::spawn_with_metrics(
+        engine,
+        &cfg.worker_specs,
+        cfg.seed ^ 0x77,
+        Some(metrics.clone()),
+    );
     let router = pool.start_router(metrics.clone());
     let code = Arc::new(ApproxIferCode::new(cfg.params));
     let ctxs: CtxMap = Arc::new(Mutex::new(HashMap::new()));
@@ -302,39 +463,41 @@ fn batcher_loop(
         let ctxs = ctxs.clone();
         let gate = gate.clone();
         let metrics = metrics.clone();
+        let loopback = loopback.clone();
         let params = cfg.params;
+        let verify = cfg.verify;
         let handle = std::thread::Builder::new()
             .name(format!("decode-{t}"))
-            .spawn(move || decode_loop(rx, code, params, ctxs, gate, metrics))
+            .spawn(move || decode_loop(rx, code, params, verify, ctxs, gate, loopback, metrics))
             .expect("spawning decode worker");
         decode_handles.push(handle);
     }
+    drop(loopback); // decode threads hold the only loopback clones
 
-    let mut rng = Rng::new(cfg.seed);
     let k = cfg.params.k;
-    let mut group_counter = 0u64;
+    let flush_after = cfg.flush_after;
+    let group_timeout = cfg.group_timeout;
+    let mut dispatcher = Dispatcher {
+        pool,
+        router,
+        code,
+        cfg,
+        ctxs,
+        gate,
+        decode_tx,
+        metrics,
+        group_counter: 0,
+    };
     let mut pending: Vec<Submission> = Vec::with_capacity(k);
     let mut first_at: Option<Instant> = None;
     loop {
         // Wait: bounded by the flush deadline when a partial group exists.
         let msg = match first_at {
             Some(t0) => {
-                let deadline = t0 + cfg.flush_after;
+                let deadline = t0 + flush_after;
                 let now = Instant::now();
                 if now >= deadline {
-                    dispatch_group(
-                        &mut group_counter,
-                        &pool,
-                        &router,
-                        &code,
-                        &cfg,
-                        &mut rng,
-                        &ctxs,
-                        &gate,
-                        &decode_tx,
-                        &metrics,
-                        &mut pending,
-                    );
+                    dispatcher.flush(&mut pending);
                     first_at = None;
                     continue;
                 }
@@ -356,21 +519,12 @@ fn batcher_loop(
                 }
                 pending.push(s);
                 if pending.len() == k {
-                    dispatch_group(
-                        &mut group_counter,
-                        &pool,
-                        &router,
-                        &code,
-                        &cfg,
-                        &mut rng,
-                        &ctxs,
-                        &gate,
-                        &decode_tx,
-                        &metrics,
-                        &mut pending,
-                    );
+                    dispatcher.flush(&mut pending);
                     first_at = None;
                 }
+            }
+            Msg::Redispatch(r) => {
+                dispatcher.dispatch(r.sinks, r.queries, r.started, r.retries);
             }
             Msg::Shutdown => break,
         }
@@ -381,129 +535,39 @@ fn batcher_loop(
         s.reply.send(Err("service shut down before group flush".into()));
     }
     while let Ok(msg) = rx.try_recv() {
-        if let Msg::Query(s) = msg {
-            s.reply.send(Err("service shut down".into()));
-        }
+        fail_msg(msg, "service shut down");
     }
     // Drain in-flight groups: the router expires anything stuck by the
     // group deadline, so this wait is bounded.
-    gate.drain(cfg.group_timeout + Duration::from_secs(2));
+    let Dispatcher { pool, router, gate, decode_tx, .. } = dispatcher;
+    gate.drain(group_timeout + Duration::from_secs(2));
     drop(decode_tx);
     for h in decode_handles {
         let _ = h.join();
     }
     router.shutdown();
     pool.shutdown();
-    // Final sweep: queries that raced into the channel during the drain
-    // window above. (Sends after this point fail and are answered at the
-    // submit site.)
+    // Final sweep: queries (or redispatches) that raced into the channel
+    // during the drain window above. (Sends after this point fail and are
+    // answered at the submit site.)
     while let Ok(msg) = rx.try_recv() {
-        if let Msg::Query(s) = msg {
-            s.reply.send(Err("service shut down".into()));
-        }
+        fail_msg(msg, "service shut down");
     }
 }
 
-/// Encode, register and fan out one (possibly partial) group: pad by
-/// repeating the last query — padded slots' predictions are discarded.
-/// Blocks while `max_inflight` groups are already out.
-fn dispatch_group(
-    group_counter: &mut u64,
-    pool: &WorkerPool,
-    router: &ReplyRouter,
-    code: &ApproxIferCode,
-    cfg: &ServiceConfig,
-    rng: &mut Rng,
-    ctxs: &CtxMap,
-    gate: &InflightGate,
-    decode_tx: &Sender<CollectedGroup>,
-    metrics: &ServingMetrics,
-    pending: &mut Vec<Submission>,
-) {
-    if pending.is_empty() {
-        return;
-    }
-    gate.acquire(cfg.max_inflight.max(1), metrics);
-    *group_counter += 1;
-    let group = *group_counter;
-    let params = cfg.params;
-    let k = params.k;
-    let nw = params.num_workers();
-    let real = pending.len();
-    let submissions: Vec<Submission> = pending.drain(..).collect();
-    let mut payloads: Vec<&[f32]> = submissions.iter().map(|s| &s.payload[..]).collect();
-    while payloads.len() < k {
-        payloads.push(&submissions[real - 1].payload);
-    }
+/// How many times a verification-failed group is re-encoded and
+/// re-dispatched before being served degraded.
+const MAX_REDISPATCHES: u32 = 1;
 
-    // --- encode (eq. (4)-(8)) -------------------------------------------
-    let t0 = Instant::now();
-    let d = payloads[0].len();
-    let mut coded: Vec<Vec<f32>> = vec![vec![0.0; d]; nw];
-    code.encode_into(&payloads, &mut coded);
-    metrics.encode_latency.record(t0.elapsed().as_secs_f64());
-
-    // Experiment fault injection (off by default).
-    let plan = match &cfg.fault_hook {
-        Some(hook) => hook(group),
-        None => FaultPlan {
-            stragglers: if params.s > 0 && rng.chance(cfg.straggler_rate) {
-                rng.subset(nw, params.s)
-            } else {
-                Vec::new()
-            },
-            byzantine: if cfg.byz_mode.is_some() && params.e > 0 {
-                rng.subset(nw, params.e)
-            } else {
-                Vec::new()
-            },
-            byz_mode: cfg.byz_mode,
-            straggler_delay: cfg.straggler_delay,
-        },
-    };
-
-    // Register reply routing *before* fan-out: replies may beat us back.
-    let sinks: Vec<ReplySink> = submissions.into_iter().map(|s| s.reply).collect();
-    ctxs.lock().unwrap().insert(group, GroupCtx { sinks, started: Instant::now() });
-    let wait_for = params.wait_for().min(nw);
-    let deadline = Instant::now() + cfg.group_timeout;
-    router.register(group, nw, wait_for, deadline, decode_tx.clone());
-    metrics.groups_dispatched.inc();
-
-    // --- fan out ----------------------------------------------------------
-    for (i, payload) in coded.into_iter().enumerate() {
-        let task = WorkerTask {
-            group,
-            payload,
-            extra_delay: if plan.stragglers.contains(&i) {
-                plan.straggler_delay
-            } else {
-                Duration::ZERO
-            },
-            corrupt: if plan.byzantine.contains(&i) { plan.byz_mode } else { None },
-        };
-        if pool.send(i, task).is_err() {
-            // Worker pool is gone; fail the group unless the router already
-            // delivered it (whoever removes the ctx owns the gate slot).
-            router.deregister(group);
-            if let Some(ctx) = ctxs.lock().unwrap().remove(&group) {
-                metrics.groups_failed.inc();
-                for sink in &ctx.sinks {
-                    sink.send(Err("worker pool shut down".into()));
-                }
-                gate.release();
-            }
-            return;
-        }
-    }
-}
-
+#[allow(clippy::too_many_arguments)]
 fn decode_loop(
     rx: Arc<Mutex<Receiver<CollectedGroup>>>,
     code: Arc<ApproxIferCode>,
     params: CodeParams,
+    verify: VerifyPolicy,
     ctxs: CtxMap,
     gate: Arc<InflightGate>,
+    loopback: Sender<Msg>,
     metrics: Arc<ServingMetrics>,
 ) {
     loop {
@@ -521,7 +585,13 @@ fn decode_loop(
         let nw = params.num_workers();
         let wait_for = params.wait_for().min(nw);
         let result = if collected.complete {
-            locate_and_decode(&code, LocatorMethod::Pinned, &collected.replies, &metrics)
+            verified_locate_and_decode(
+                &code,
+                LocatorMethod::Pinned,
+                &collected.replies,
+                verify,
+                &metrics,
+            )
         } else {
             // Mirror the router's two incomplete outcomes: deadline expiry
             // vs fail-fast when worker errors made the wait count
@@ -539,7 +609,46 @@ fn decode_loop(
             ))
         };
         match result {
-            Ok((predictions, _decode_set, _flagged)) => {
+            Ok((predictions, _decode_set, _flagged, report)) => {
+                if let Some(report) = report {
+                    if !report.passed {
+                        if ctx.retries < MAX_REDISPATCHES {
+                            // Rung 3 of the escalation ladder: re-encode and
+                            // re-fan-out the group. The gate slot is released
+                            // first — the redispatch acquires its own.
+                            log::warn!(
+                                "group {}: decode verification failed \
+                                 (residual {:.3}); redispatching",
+                                collected.group,
+                                report.residual
+                            );
+                            metrics.redispatches.inc();
+                            gate.release();
+                            let GroupCtx { sinks, queries, started, retries } = ctx;
+                            let msg = Msg::Redispatch(Redispatch {
+                                sinks,
+                                queries,
+                                retries: retries + 1,
+                                started,
+                            });
+                            if let Err(failed) = loopback.send(msg) {
+                                // Batcher already gone: answer now.
+                                fail_msg(failed.0, "service shut down");
+                            }
+                            continue;
+                        }
+                        // Out of retries: serve the best decode we have
+                        // rather than erroring a possibly-fine answer, but
+                        // make the degradation observable.
+                        log::warn!(
+                            "group {}: verification still failing after \
+                             {} redispatch(es) (residual {:.3}); serving degraded",
+                            collected.group,
+                            ctx.retries,
+                            report.residual
+                        );
+                    }
+                }
                 metrics.groups_decoded.inc();
                 metrics.group_latency.record(ctx.started.elapsed().as_secs_f64());
                 for (sink, pred) in ctx.sinks.iter().zip(predictions.into_iter()) {

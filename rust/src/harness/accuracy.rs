@@ -127,7 +127,7 @@ pub fn approxifer_accuracy(
             if let Some(mode) = byz_mode {
                 byz_positions = rng.subset(avail.len(), params.e);
                 for &pos in &byz_positions {
-                    mode.corrupt(&mut group_preds[pos], &mut rng);
+                    mode.corrupt(g as u64, &mut group_preds[pos], &mut rng);
                 }
             }
         }

@@ -35,7 +35,7 @@ pub fn approxifer_latency(
     groups: usize,
     seed: u64,
 ) -> Result<LatencyRow> {
-    let specs = vec![WorkerSpec { latency }; params.num_workers()];
+    let specs = vec![WorkerSpec::new(latency); params.num_workers()];
     let pool = WorkerPool::spawn(engine.clone(), &specs, seed);
     let mut pipe = GroupPipeline::new(params);
     let metrics = ServingMetrics::new();
@@ -63,7 +63,7 @@ pub fn replication_latency(
     groups: usize,
     seed: u64,
 ) -> Result<LatencyRow> {
-    let specs = vec![WorkerSpec { latency }; params.num_workers()];
+    let specs = vec![WorkerSpec::new(latency); params.num_workers()];
     let pool = WorkerPool::spawn(engine.clone(), &specs, seed);
     let mut pipe = ReplicationPipeline::new(params);
     let metrics = ServingMetrics::new();

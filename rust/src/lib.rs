@@ -13,8 +13,11 @@
 //!   next), fastest-subset collection, Byzantine error location
 //!   (Algorithms 1–2) and Berrut decoding, plus replication and ParM-proxy
 //!   baselines, a TCP front-end with out-of-order response delivery keyed
-//!   by request id, metrics and the experiment harness that regenerates
-//!   every figure in the paper.
+//!   by request id, a deterministic fault-model subsystem
+//!   ([`crate::sim::faults`]: per-worker crash / slow-tail / flaky /
+//!   Byzantine behavior programs with verified decode and an escalation
+//!   ladder), metrics and the experiment harness that regenerates every
+//!   figure in the paper.
 //! * **Layer 2** — the hosted models: pure-JAX CNN classifiers, trained at
 //!   build time and lowered AOT to HLO text (`python/compile/`).
 //! * **Layer 1** — Pallas kernels for the compute hot spots (tiled matmul

@@ -17,16 +17,19 @@ use anyhow::{bail, Context, Result};
 
 use approxifer::cli::{Args, Spec};
 use approxifer::config::AppConfig;
-use approxifer::coordinator::{Service, ServiceConfig, Strategy};
+use approxifer::coordinator::{Service, ServiceConfig, Strategy, VerifyPolicy};
 use approxifer::data::{Golden, TestSet};
 use approxifer::harness::{self, FigureContext, Report};
 use approxifer::runtime::{CompiledModel, Manifest, Runtime};
 use approxifer::server::Server;
+use approxifer::sim::faults::FaultProfile;
 use approxifer::util::logging;
 use approxifer::workers::{PjrtEngine, WorkerSpec};
 
 const USAGE: &str = "usage: approxifer <serve|infer|figures|latency|golden|info> [flags]
   common: --config FILE  --set section.key=value (repeatable)  --artifacts DIR
+          --faults PROFILE (e.g. honest, crash:2@8, slow:1:0:40:0.5,
+          flaky:1:0.2, byz-random:2:10, byz-collude:2:15, churn:3)
   figures: --only ID  --samples N  --out DIR  --seed S
   latency: --groups N  --out DIR
   infer:   --samples N";
@@ -46,6 +49,7 @@ fn run(argv: &[String]) -> Result<()> {
         ("config", true),
         ("set", true),
         ("artifacts", true),
+        ("faults", true),
         ("only", true),
         ("samples", true),
         ("out", true),
@@ -62,6 +66,18 @@ fn run(argv: &[String]) -> Result<()> {
     let mut cfg = AppConfig::load(args.get("config"), &overrides)?;
     if let Some(a) = args.get("artifacts") {
         cfg.artifacts = a.to_string();
+    }
+    if let Some(f) = args.get("faults") {
+        // Only the online-service subcommands execute behavior programs;
+        // refuse silently ignoring the flag elsewhere (the figure/latency
+        // harnesses drive their own per-group fault plans).
+        match args.subcommand.as_deref() {
+            Some("serve") | Some("infer") => cfg.fault_profile = Some(f.to_string()),
+            other => bail!(
+                "--faults applies to serve/infer only (got {})",
+                other.unwrap_or("none")
+            ),
+        }
     }
     match args.subcommand.as_deref().unwrap() {
         "serve" => serve(&cfg),
@@ -101,10 +117,18 @@ fn build_service(cfg: &AppConfig) -> Result<(Arc<Service>, usize)> {
     let mut svc_cfg = ServiceConfig::new(cfg.params);
     svc_cfg.flush_after = cfg.flush_after;
     svc_cfg.worker_specs =
-        vec![WorkerSpec { latency: cfg.worker_latency }; cfg.params.num_workers()];
-    svc_cfg.straggler_rate = cfg.straggler_rate;
-    svc_cfg.straggler_delay = cfg.straggler_delay;
-    svc_cfg.byz_mode = cfg.byz_mode;
+        vec![WorkerSpec::new(cfg.worker_latency); cfg.params.num_workers()];
+    if let Some(spec) = &cfg.fault_profile {
+        let profile = FaultProfile::parse(spec, cfg.params.num_workers(), cfg.seed)
+            .map_err(|e| anyhow::anyhow!("--faults: {e}"))?;
+        log::info!("fault profile '{}': faulty workers {:?}", profile.name, profile.faulty());
+        svc_cfg.set_fault_profile(&profile);
+    }
+    svc_cfg.verify = if cfg.verify_decode {
+        VerifyPolicy::on(cfg.verify_tol)
+    } else {
+        VerifyPolicy::off()
+    };
     svc_cfg.seed = cfg.seed;
     svc_cfg.max_inflight = cfg.max_inflight;
     svc_cfg.decode_threads = cfg.decode_threads;

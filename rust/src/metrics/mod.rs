@@ -124,6 +124,29 @@ pub struct ServingMetrics {
     pub errors: Counter,
     /// Times the batcher blocked because `max_inflight` groups were out.
     pub inflight_full_waits: Counter,
+    /// Replies corrupted by fault injection (ground truth from the
+    /// workers). `byzantine_flagged` counts flags *emitted* by locate
+    /// passes — including false alarms later retracted by verification —
+    /// so audit the locator with the verified `locator_hits`/`locator_misses`
+    /// pair rather than raw flag counts.
+    pub corrupt_replies_injected: Counter,
+    /// Requests consumed by a crashed worker behavior (no reply sent).
+    pub worker_drops: Counter,
+    /// Decodes whose re-encode residual exceeded the verification tolerance
+    /// (counted once per failed verification rung-1 attempt).
+    pub verify_failures: Counter,
+    /// Verification failures that entered the escalation ladder (full-set
+    /// decode / homogeneous locator rungs).
+    pub verify_escalations: Counter,
+    /// Groups re-encoded and re-dispatched after failed verification.
+    pub redispatches: Counter,
+    /// Verified decodes where the first (pinned) locate pass held up.
+    pub locator_hits: Counter,
+    /// Verified decodes where the first locate pass produced an
+    /// inconsistent decode — the locator misplaced an adversary, the
+    /// corruption exceeded the `E` budget (no locator could catch it), or
+    /// the exclusion left a badly conditioned decode subset.
+    pub locator_misses: Counter,
     pub group_latency: LatencyHistogram,
     pub encode_latency: LatencyHistogram,
     pub decode_latency: LatencyHistogram,
@@ -149,6 +172,17 @@ impl ServingMetrics {
             self.byzantine_flagged.get(),
             self.errors.get(),
             self.inflight_full_waits.get(),
+        ));
+        out.push_str(&format!(
+            "faults: corrupt_injected={} drops={} verify_fail={} escalated={} redispatched={} \
+             locator_hit={} locator_miss={}\n",
+            self.corrupt_replies_injected.get(),
+            self.worker_drops.get(),
+            self.verify_failures.get(),
+            self.verify_escalations.get(),
+            self.redispatches.get(),
+            self.locator_hits.get(),
+            self.locator_misses.get(),
         ));
         out.push_str(&self.group_latency.summary_line("  group"));
         out.push('\n');

@@ -1,0 +1,442 @@
+//! Deterministic fault-model subsystem: per-worker **behavior programs**
+//! that turn the worker fleet into a reproducible adversarial environment.
+//!
+//! The paper's robustness claim is that ApproxIFER rides out *any* `S`
+//! stragglers and locates *any* `E` Byzantine workers without parity-model
+//! training. The previous harness injected exactly one failure shape (a
+//! forced reply delay); this module defines the full fault matrix —
+//! crash-at-request-`k`, slow-with-configurable-tail, flaky/intermittent
+//! errors, and the Byzantine strategies of
+//! [`crate::workers::ByzantineMode`] (random noise, sign-flip,
+//! targeted-class, colluding identical corruption) — each driven by a
+//! seeded RNG so every scenario replays bit-identically.
+//!
+//! Three layers:
+//!
+//! * [`Behavior`] — the *program*: a pure description attached to a
+//!   [`crate::workers::WorkerSpec`].
+//! * [`BehaviorState`] — the *execution*: per-worker request counter + forked
+//!   RNG stream, consulted by the pool's worker thread on every task.
+//! * [`FaultProfile`] — the *fleet assignment*: a named, seed-deterministic
+//!   mapping of behaviors onto worker indices, parseable from config/CLI
+//!   specs like `byz-collude:2:15`.
+
+use std::time::Duration;
+
+use crate::util::rng::Rng;
+use crate::workers::ByzantineMode;
+
+/// One worker's behavior program.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Behavior {
+    /// Serve every request faithfully.
+    Honest,
+    /// Serve requests `0..at`, then never reply again (a crashed worker:
+    /// the request is consumed but no reply — not even an error — is sent).
+    CrashAt { at: u64 },
+    /// Defer every reply by `base_ms`, plus an Exp(`tail_ms`) tail with
+    /// probability `p`. Like the forced-straggler hook this defers only the
+    /// *reply*: the worker keeps serving its queue.
+    Slow { base_ms: f64, tail_ms: f64, p: f64 },
+    /// Intermittent: each request independently fails with an error reply
+    /// with probability `p_fail`.
+    Flaky { p_fail: f64 },
+    /// Corrupt every reply with the given strategy.
+    Byzantine(ByzantineMode),
+}
+
+/// What the behavior program decided for one request.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FaultAction {
+    /// Serve (honestly or corrupting per the behavior), deferring the reply
+    /// by `delay`.
+    Reply { delay: Duration },
+    /// Consume the request and never reply (crash semantics).
+    Drop,
+    /// Reply with an injected error.
+    Fail,
+}
+
+/// Per-worker runtime state for a behavior program: the request counter and
+/// a private RNG stream, so a fleet replays bit-identically for a fixed
+/// pool seed regardless of thread scheduling.
+pub struct BehaviorState {
+    behavior: Behavior,
+    rng: Rng,
+    requests: u64,
+}
+
+impl BehaviorState {
+    pub fn new(behavior: Behavior, rng: Rng) -> BehaviorState {
+        BehaviorState { behavior, rng, requests: 0 }
+    }
+
+    /// Requests seen so far.
+    pub fn requests(&self) -> u64 {
+        self.requests
+    }
+
+    /// Decide the fate of the next request (advances the counter and, for
+    /// stochastic behaviors, the RNG stream).
+    pub fn decide(&mut self) -> FaultAction {
+        let req = self.requests;
+        self.requests += 1;
+        match self.behavior {
+            Behavior::Honest | Behavior::Byzantine(_) => {
+                FaultAction::Reply { delay: Duration::ZERO }
+            }
+            Behavior::CrashAt { at } => {
+                if req >= at {
+                    FaultAction::Drop
+                } else {
+                    FaultAction::Reply { delay: Duration::ZERO }
+                }
+            }
+            Behavior::Slow { base_ms, tail_ms, p } => {
+                let mut ms = base_ms;
+                if self.rng.chance(p) {
+                    ms += if tail_ms > 0.0 { self.rng.exponential(tail_ms) } else { 0.0 };
+                }
+                FaultAction::Reply { delay: Duration::from_secs_f64((ms / 1e3).max(0.0)) }
+            }
+            Behavior::Flaky { p_fail } => {
+                if self.rng.chance(p_fail) {
+                    FaultAction::Fail
+                } else {
+                    FaultAction::Reply { delay: Duration::ZERO }
+                }
+            }
+        }
+    }
+
+    /// Apply the behavior's corruption (Byzantine programs only) to a reply
+    /// payload. Returns whether the payload was corrupted.
+    pub fn corrupt(&mut self, group: u64, logits: &mut [f32]) -> bool {
+        if let Behavior::Byzantine(mode) = self.behavior {
+            mode.corrupt(group, logits, &mut self.rng);
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// A named fleet-wide fault assignment: `behaviors[i]` is worker `i`'s
+/// program. Which workers are faulty is chosen by a seeded RNG, so the same
+/// `(spec, num_workers, seed)` always yields the same fleet.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultProfile {
+    pub name: String,
+    pub behaviors: Vec<Behavior>,
+}
+
+impl FaultProfile {
+    /// All-honest fleet.
+    pub fn honest(num_workers: usize) -> FaultProfile {
+        FaultProfile { name: "honest".into(), behaviors: vec![Behavior::Honest; num_workers] }
+    }
+
+    /// Assign `behavior` to a seed-deterministic `count`-subset of workers.
+    pub fn assign(
+        name: &str,
+        num_workers: usize,
+        count: usize,
+        seed: u64,
+        behavior: Behavior,
+    ) -> Result<FaultProfile, String> {
+        let mut p = FaultProfile::honest(num_workers);
+        p.name = name.to_string();
+        for &w in &chosen(name, num_workers, count, seed)? {
+            p.behaviors[w] = behavior;
+        }
+        Ok(p)
+    }
+
+    /// Worker indices with a non-honest program.
+    pub fn faulty(&self) -> Vec<usize> {
+        self.behaviors
+            .iter()
+            .enumerate()
+            .filter(|(_, b)| **b != Behavior::Honest)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Parse a named profile spec. Grammar (counts are worker counts; which
+    /// workers is a seed-deterministic choice):
+    ///
+    /// ```text
+    /// honest
+    /// crash:<count>@<request>          crash at the <request>-th request
+    /// slow:<count>:<base>:<tail>:<p>   reply delay base+Exp(tail) w.p. p (ms)
+    /// flaky:<count>:<p>                error reply with probability p
+    /// byz-random:<count>:<sigma>       Gaussian-noise adversaries
+    /// byz-signflip:<count>             sign-flip adversaries
+    /// byz-target:<count>:<class>:<boost>  targeted-class adversaries
+    /// byz-collude:<count>:<scale>      colluding adversaries (identical
+    ///                                  per-group corruption, pact = seed)
+    /// churn:<count>                    mixed flaky/slow/crash fleet
+    /// ```
+    pub fn parse(spec: &str, num_workers: usize, seed: u64) -> Result<FaultProfile, String> {
+        let num = |s: &str| s.parse::<f64>().map_err(|_| format!("bad number '{s}' in '{spec}'"));
+        let int =
+            |s: &str| s.parse::<usize>().map_err(|_| format!("bad integer '{s}' in '{spec}'"));
+        // Range checks so a typo'd scenario fails at startup instead of
+        // silently measuring the wrong thing (e.g. `flaky:1:30` meaning 30%).
+        let prob = |s: &str| {
+            let p = num(s)?;
+            if !(0.0..=1.0).contains(&p) {
+                return Err(format!("probability '{s}' not in [0,1] in '{spec}'"));
+            }
+            Ok(p)
+        };
+        let nonneg = |s: &str| {
+            let v = num(s)?;
+            if v < 0.0 {
+                return Err(format!("negative value '{s}' in '{spec}'"));
+            }
+            Ok(v)
+        };
+        let parts: Vec<&str> = spec.split(':').collect();
+        match parts.as_slice() {
+            ["honest"] => Ok(FaultProfile::honest(num_workers)),
+            ["crash", rest] => {
+                let (count, at) = rest
+                    .split_once('@')
+                    .ok_or_else(|| format!("crash spec needs <count>@<request>: '{spec}'"))?;
+                FaultProfile::assign(
+                    spec,
+                    num_workers,
+                    int(count)?,
+                    seed,
+                    Behavior::CrashAt { at: int(at)? as u64 },
+                )
+            }
+            ["slow", count, base, tail, p] => FaultProfile::assign(
+                spec,
+                num_workers,
+                int(count)?,
+                seed,
+                Behavior::Slow { base_ms: nonneg(base)?, tail_ms: nonneg(tail)?, p: prob(p)? },
+            ),
+            ["flaky", count, p] => FaultProfile::assign(
+                spec,
+                num_workers,
+                int(count)?,
+                seed,
+                Behavior::Flaky { p_fail: prob(p)? },
+            ),
+            ["byz-random", count, sigma] => FaultProfile::assign(
+                spec,
+                num_workers,
+                int(count)?,
+                seed,
+                Behavior::Byzantine(ByzantineMode::GaussianNoise { sigma: nonneg(sigma)? }),
+            ),
+            ["byz-signflip", count] => FaultProfile::assign(
+                spec,
+                num_workers,
+                int(count)?,
+                seed,
+                Behavior::Byzantine(ByzantineMode::SignFlip),
+            ),
+            ["byz-target", count, class, boost] => FaultProfile::assign(
+                spec,
+                num_workers,
+                int(count)?,
+                seed,
+                Behavior::Byzantine(ByzantineMode::TargetedClass {
+                    class: int(class)?,
+                    boost: num(boost)?,
+                }),
+            ),
+            ["byz-collude", count, scale] => FaultProfile::assign(
+                spec,
+                num_workers,
+                int(count)?,
+                seed,
+                Behavior::Byzantine(ByzantineMode::Colluding {
+                    pact: seed,
+                    scale: nonneg(scale)?,
+                }),
+            ),
+            ["churn", count] => {
+                // Mixed degradation: round-robin flaky / slow / crash over a
+                // seeded subset — the "everything is a little broken" fleet.
+                let programs = [
+                    Behavior::Flaky { p_fail: 0.1 },
+                    Behavior::Slow { base_ms: 0.0, tail_ms: 20.0, p: 0.3 },
+                    Behavior::CrashAt { at: 16 },
+                ];
+                let mut p = FaultProfile::honest(num_workers);
+                p.name = spec.to_string();
+                for (j, &w) in chosen(spec, num_workers, int(count)?, seed)?.iter().enumerate() {
+                    p.behaviors[w] = programs[j % programs.len()];
+                }
+                Ok(p)
+            }
+            _ => Err(format!("unknown fault profile '{spec}'")),
+        }
+    }
+}
+
+/// Seed-deterministic choice of `count` faulty workers for a profile spec
+/// (the spec name salts the stream so different profiles with the same seed
+/// don't always hit the same workers).
+fn chosen(name: &str, num_workers: usize, count: usize, seed: u64) -> Result<Vec<usize>, String> {
+    if count > num_workers {
+        return Err(format!("profile '{name}' wants {count} faulty of {num_workers} workers"));
+    }
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    let mut rng = Rng::new(seed ^ h);
+    Ok(rng.subset(num_workers, count))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crash_behavior_counts_requests() {
+        let mut s = BehaviorState::new(Behavior::CrashAt { at: 2 }, Rng::new(1));
+        assert!(matches!(s.decide(), FaultAction::Reply { .. }));
+        assert!(matches!(s.decide(), FaultAction::Reply { .. }));
+        assert_eq!(s.decide(), FaultAction::Drop);
+        assert_eq!(s.decide(), FaultAction::Drop);
+        assert_eq!(s.requests(), 4);
+    }
+
+    #[test]
+    fn slow_behavior_delay_bounds() {
+        let mut s = BehaviorState::new(
+            Behavior::Slow { base_ms: 5.0, tail_ms: 10.0, p: 0.5 },
+            Rng::new(2),
+        );
+        let mut saw_tail = false;
+        for _ in 0..200 {
+            match s.decide() {
+                FaultAction::Reply { delay } => {
+                    assert!(delay >= Duration::from_millis(5), "delay {delay:?} below base");
+                    if delay > Duration::from_millis(5) {
+                        saw_tail = true;
+                    }
+                }
+                other => panic!("slow behavior must always reply, got {other:?}"),
+            }
+        }
+        assert!(saw_tail, "tail never sampled at p=0.5");
+    }
+
+    #[test]
+    fn flaky_behavior_rate() {
+        let mut s = BehaviorState::new(Behavior::Flaky { p_fail: 0.3 }, Rng::new(3));
+        let fails = (0..10_000).filter(|_| s.decide() == FaultAction::Fail).count();
+        let rate = fails as f64 / 10_000.0;
+        assert!((rate - 0.3).abs() < 0.03, "rate={rate}");
+    }
+
+    #[test]
+    fn honest_and_byzantine_always_reply_instantly() {
+        for b in [
+            Behavior::Honest,
+            Behavior::Byzantine(ByzantineMode::SignFlip),
+        ] {
+            let mut s = BehaviorState::new(b, Rng::new(4));
+            for _ in 0..10 {
+                assert_eq!(s.decide(), FaultAction::Reply { delay: Duration::ZERO });
+            }
+        }
+    }
+
+    #[test]
+    fn corrupt_only_fires_for_byzantine() {
+        let mut honest = BehaviorState::new(Behavior::Honest, Rng::new(5));
+        let mut v = vec![1.0f32; 4];
+        assert!(!honest.corrupt(1, &mut v));
+        assert_eq!(v, vec![1.0; 4]);
+        let mut byz =
+            BehaviorState::new(Behavior::Byzantine(ByzantineMode::SignFlip), Rng::new(5));
+        assert!(byz.corrupt(1, &mut v));
+        assert_eq!(v, vec![-1.0; 4]);
+    }
+
+    #[test]
+    fn profile_parse_is_seed_deterministic() {
+        for spec in [
+            "honest",
+            "crash:2@4",
+            "slow:2:1:40:0.5",
+            "flaky:2:0.3",
+            "byz-random:2:10",
+            "byz-signflip:1",
+            "byz-target:1:3:50",
+            "byz-collude:2:15",
+            "churn:3",
+        ] {
+            let a = FaultProfile::parse(spec, 8, 42).unwrap();
+            let b = FaultProfile::parse(spec, 8, 42).unwrap();
+            assert_eq!(a, b, "profile '{spec}' must replay identically");
+            assert_eq!(a.behaviors.len(), 8);
+        }
+    }
+
+    #[test]
+    fn different_profiles_salt_the_assignment() {
+        // Same seed, different specs: the faulty subsets should not be
+        // forced to coincide (they *may* by chance; these two differ).
+        let a = FaultProfile::parse("crash:2@4", 12, 7).unwrap();
+        let b = FaultProfile::parse("flaky:2:0.5", 12, 7).unwrap();
+        assert_eq!(a.faulty().len(), 2);
+        assert_eq!(b.faulty().len(), 2);
+    }
+
+    #[test]
+    fn colluders_share_the_seed_pact() {
+        let p = FaultProfile::parse("byz-collude:3:15", 10, 99).unwrap();
+        let faulty = p.faulty();
+        assert_eq!(faulty.len(), 3);
+        for &w in &faulty {
+            assert_eq!(
+                p.behaviors[w],
+                Behavior::Byzantine(ByzantineMode::Colluding { pact: 99, scale: 15.0 })
+            );
+        }
+    }
+
+    #[test]
+    fn bad_specs_are_rejected() {
+        assert!(FaultProfile::parse("nope", 4, 1).is_err());
+        assert!(FaultProfile::parse("crash:2", 4, 1).is_err()); // missing @request
+        assert!(FaultProfile::parse("flaky:9:0.5", 4, 1).is_err()); // count > workers
+        assert!(FaultProfile::parse("slow:1:a:b:c", 4, 1).is_err());
+        // Out-of-range probabilities/magnitudes fail at parse time.
+        assert!(FaultProfile::parse("flaky:1:30", 4, 1).is_err()); // 30 ≠ 30%
+        assert!(FaultProfile::parse("flaky:1:-0.1", 4, 1).is_err());
+        assert!(FaultProfile::parse("slow:1:0:40:1.5", 4, 1).is_err());
+        assert!(FaultProfile::parse("slow:1:-5:40:0.5", 4, 1).is_err());
+        assert!(FaultProfile::parse("byz-random:1:-3", 4, 1).is_err());
+        assert!(FaultProfile::parse("byz-collude:1:-3", 4, 1).is_err());
+    }
+
+    #[test]
+    fn churn_mixes_programs() {
+        let p = FaultProfile::parse("churn:3", 9, 5).unwrap();
+        let faulty = p.faulty();
+        assert_eq!(faulty.len(), 3);
+        let mut kinds: Vec<&str> = faulty
+            .iter()
+            .map(|&w| match p.behaviors[w] {
+                Behavior::Flaky { .. } => "flaky",
+                Behavior::Slow { .. } => "slow",
+                Behavior::CrashAt { .. } => "crash",
+                _ => "other",
+            })
+            .collect();
+        kinds.sort_unstable();
+        assert_eq!(kinds, vec!["crash", "flaky", "slow"]);
+    }
+}

@@ -1,7 +1,12 @@
 //! Workload generation for the latency/throughput experiments: arrival
-//! processes (Poisson / bursty / closed-loop) and a scenario runner that
-//! drives the online [`crate::coordinator::Service`] and reports latency
-//! percentiles + sustained throughput.
+//! processes (Poisson / bursty / closed-loop), the deterministic
+//! fault-model subsystem ([`faults`]) and a scenario runner that drives the
+//! online [`crate::coordinator::Service`] and reports latency percentiles +
+//! sustained throughput.
+
+pub mod faults;
+
+pub use faults::{Behavior, BehaviorState, FaultAction, FaultProfile};
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};

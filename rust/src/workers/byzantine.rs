@@ -2,7 +2,13 @@
 //! prediction before replying. The paper's experiments add zero-mean
 //! Gaussian noise with σ ∈ {1, 10, 100} to the coded predictions
 //! (§4.2 and Appendix B); additional adversary shapes are provided for the
-//! robustness ablations.
+//! robustness ablations, including a colluding mode where every adversary
+//! sharing a pact emits **bit-identical** corruption per group — the attack
+//! that defeats comparison/majority defenses but not the rational locator.
+//!
+//! `corrupt` takes the group id so corruption can be keyed to the group
+//! rather than the worker's private RNG stream: colluders must agree on the
+//! garbage they inject without communicating.
 
 use crate::util::rng::Rng;
 
@@ -17,11 +23,20 @@ pub enum ByzantineMode {
     RandomLogits { scale: f64 },
     /// Reply all zeros (a crash-then-garbage worker).
     Zero,
+    /// Targeted-class attack: boost one class's logit to steer the argmax
+    /// while leaving every other coordinate untouched (stealthy — only one
+    /// class coordinate carries evidence for the locator).
+    TargetedClass { class: usize, boost: f64 },
+    /// Colluding adversaries: additive N(0, scale²) corruption drawn from a
+    /// generator seeded by `(pact, group)` — every worker sharing `pact`
+    /// injects the *same* corruption in the same group.
+    Colluding { pact: u64, scale: f64 },
 }
 
 impl ByzantineMode {
-    /// Corrupt a prediction payload in place.
-    pub fn corrupt(&self, logits: &mut [f32], rng: &mut Rng) {
+    /// Corrupt a prediction payload in place. `group` keys group-coherent
+    /// modes (colluding); per-worker randomness comes from `rng`.
+    pub fn corrupt(&self, group: u64, logits: &mut [f32], rng: &mut Rng) {
         match *self {
             ByzantineMode::GaussianNoise { sigma } => {
                 for v in logits.iter_mut() {
@@ -39,18 +54,47 @@ impl ByzantineMode {
                 }
             }
             ByzantineMode::Zero => logits.fill(0.0),
+            ByzantineMode::TargetedClass { class, boost } => {
+                // Out-of-range targets are a misconfiguration (the class
+                // count is unknown at parse time): fail loudly in debug
+                // builds, no-op in release rather than silently attacking
+                // a different class.
+                debug_assert!(
+                    class < logits.len(),
+                    "targeted class {class} out of range for {} logits",
+                    logits.len()
+                );
+                if let Some(v) = logits.get_mut(class) {
+                    *v += boost as f32;
+                }
+            }
+            ByzantineMode::Colluding { pact, scale } => {
+                let mut shared = Rng::new(pact ^ group.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+                for v in logits.iter_mut() {
+                    *v += shared.normal(0.0, scale) as f32;
+                }
+            }
         }
     }
 
-    /// Parse from a config string: `gauss:10`, `signflip`, `random:5`, `zero`.
+    /// Parse from a config string: `gauss:10`, `signflip`, `random:5`,
+    /// `zero`, `target:3:50`, `collude:99:15`.
     pub fn parse(spec: &str) -> Result<ByzantineMode, String> {
         let parts: Vec<&str> = spec.split(':').collect();
         let num = |s: &str| s.parse::<f64>().map_err(|_| format!("bad number '{s}' in '{spec}'"));
+        let int = |s: &str| s.parse::<u64>().map_err(|_| format!("bad integer '{s}' in '{spec}'"));
         match parts.as_slice() {
             ["gauss", sigma] => Ok(ByzantineMode::GaussianNoise { sigma: num(sigma)? }),
             ["signflip"] => Ok(ByzantineMode::SignFlip),
             ["random", scale] => Ok(ByzantineMode::RandomLogits { scale: num(scale)? }),
             ["zero"] => Ok(ByzantineMode::Zero),
+            ["target", class, boost] => Ok(ByzantineMode::TargetedClass {
+                class: int(class)? as usize,
+                boost: num(boost)?,
+            }),
+            ["collude", pact, scale] => {
+                Ok(ByzantineMode::Colluding { pact: int(pact)?, scale: num(scale)? })
+            }
             _ => Err(format!("unknown byzantine mode '{spec}'")),
         }
     }
@@ -65,9 +109,8 @@ mod tests {
         let mut rng = Rng::new(5);
         let m = ByzantineMode::GaussianNoise { sigma: 10.0 };
         let mut v = vec![0.0f32; 10_000];
-        m.corrupt(&mut v, &mut rng);
-        let std =
-            (v.iter().map(|&x| (x as f64).powi(2)).sum::<f64>() / v.len() as f64).sqrt();
+        m.corrupt(1, &mut v, &mut rng);
+        let std = (v.iter().map(|&x| (x as f64).powi(2)).sum::<f64>() / v.len() as f64).sqrt();
         assert!((std - 10.0).abs() < 0.5, "std={std}");
     }
 
@@ -75,9 +118,9 @@ mod tests {
     fn signflip_and_zero() {
         let mut rng = Rng::new(6);
         let mut v = vec![1.0f32, -2.0];
-        ByzantineMode::SignFlip.corrupt(&mut v, &mut rng);
+        ByzantineMode::SignFlip.corrupt(1, &mut v, &mut rng);
         assert_eq!(v, vec![-1.0, 2.0]);
-        ByzantineMode::Zero.corrupt(&mut v, &mut rng);
+        ByzantineMode::Zero.corrupt(1, &mut v, &mut rng);
         assert_eq!(v, vec![0.0, 0.0]);
     }
 
@@ -85,9 +128,41 @@ mod tests {
     fn random_logits_within_scale() {
         let mut rng = Rng::new(7);
         let mut v = vec![100.0f32; 1000];
-        ByzantineMode::RandomLogits { scale: 5.0 }.corrupt(&mut v, &mut rng);
+        ByzantineMode::RandomLogits { scale: 5.0 }.corrupt(1, &mut v, &mut rng);
         assert!(v.iter().all(|&x| x.abs() <= 5.0));
         assert!(v.iter().any(|&x| x != v[0])); // actually random
+    }
+
+    #[test]
+    fn targeted_class_touches_one_coordinate() {
+        let mut rng = Rng::new(8);
+        let mut v = vec![0.5f32; 6];
+        ByzantineMode::TargetedClass { class: 2, boost: 40.0 }.corrupt(1, &mut v, &mut rng);
+        assert_eq!(v[2], 40.5);
+        for (i, &x) in v.iter().enumerate() {
+            if i != 2 {
+                assert_eq!(x, 0.5, "coordinate {i} must be untouched");
+            }
+        }
+    }
+
+    #[test]
+    fn colluders_agree_within_a_group_and_differ_across_groups() {
+        let m = ByzantineMode::Colluding { pact: 77, scale: 10.0 };
+        let mut rng_a = Rng::new(1);
+        let mut rng_b = Rng::new(999); // different private streams
+        let mut a = vec![0.0f32; 16];
+        let mut b = vec![0.0f32; 16];
+        m.corrupt(5, &mut a, &mut rng_a);
+        m.corrupt(5, &mut b, &mut rng_b);
+        assert_eq!(a, b, "colluders must inject identical corruption per group");
+        let mut c = vec![0.0f32; 16];
+        m.corrupt(6, &mut c, &mut rng_a);
+        assert_ne!(a, c, "corruption must vary across groups");
+        // And a different pact disagrees.
+        let mut d = vec![0.0f32; 16];
+        ByzantineMode::Colluding { pact: 78, scale: 10.0 }.corrupt(5, &mut d, &mut rng_b);
+        assert_ne!(a, d);
     }
 
     #[test]
@@ -98,6 +173,15 @@ mod tests {
         );
         assert_eq!(ByzantineMode::parse("signflip").unwrap(), ByzantineMode::SignFlip);
         assert_eq!(ByzantineMode::parse("zero").unwrap(), ByzantineMode::Zero);
+        assert_eq!(
+            ByzantineMode::parse("target:3:50").unwrap(),
+            ByzantineMode::TargetedClass { class: 3, boost: 50.0 }
+        );
+        assert_eq!(
+            ByzantineMode::parse("collude:99:15").unwrap(),
+            ByzantineMode::Colluding { pact: 99, scale: 15.0 }
+        );
         assert!(ByzantineMode::parse("evil").is_err());
+        assert!(ByzantineMode::parse("collude:x:15").is_err());
     }
 }

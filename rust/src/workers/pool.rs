@@ -16,10 +16,14 @@
 //!   simultaneously, so a straggling group never blocks the next one.
 //!
 //! Fault-injection semantics: a worker's [`LatencyModel`] models *service
-//! time* and occupies the worker thread; a task's `extra_delay` models a
-//! forced straggler (slow network / GC pause on the reply path) and defers
-//! only the **reply** — the worker moves on to its next task immediately, as
-//! a real non-blocking serving stack would observe.
+//! time* and occupies the worker thread; its [`Behavior`] program (the
+//! deterministic fault subsystem, [`crate::sim::faults`]) decides per
+//! request whether to serve, crash, flake, defer the reply or corrupt it;
+//! and a task's `extra_delay`/`corrupt` fields carry scheduler-chosen
+//! per-group injections (exact experiment plans). Reply deferrals — from
+//! either source — model a slow network / GC pause on the reply path and
+//! defer only the **reply**: the worker moves on to its next task
+//! immediately, as a real non-blocking serving stack would observe.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -31,6 +35,7 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use crate::metrics::ServingMetrics;
+use crate::sim::faults::{Behavior, BehaviorState, FaultAction};
 use crate::util::rng::Rng;
 
 use super::byzantine::ByzantineMode;
@@ -63,11 +68,24 @@ pub struct WorkerReply {
 #[derive(Clone, Debug)]
 pub struct WorkerSpec {
     pub latency: LatencyModel,
+    /// Fault behavior program (honest by default).
+    pub behavior: Behavior,
+}
+
+impl WorkerSpec {
+    pub fn new(latency: LatencyModel) -> WorkerSpec {
+        WorkerSpec { latency, behavior: Behavior::Honest }
+    }
+
+    pub fn with_behavior(mut self, behavior: Behavior) -> WorkerSpec {
+        self.behavior = behavior;
+        self
+    }
 }
 
 impl Default for WorkerSpec {
     fn default() -> Self {
-        WorkerSpec { latency: LatencyModel::None }
+        WorkerSpec::new(LatencyModel::None)
     }
 }
 
@@ -82,11 +100,22 @@ pub struct WorkerPool {
 
 impl WorkerPool {
     /// Spawn `specs.len()` workers over a shared engine. `seed` derives each
-    /// worker's private latency/corruption RNG stream.
+    /// worker's private latency/behavior/corruption RNG streams.
     pub fn spawn(
         engine: Arc<dyn InferenceEngine>,
         specs: &[WorkerSpec],
         seed: u64,
+    ) -> WorkerPool {
+        WorkerPool::spawn_with_metrics(engine, specs, seed, None)
+    }
+
+    /// Like [`WorkerPool::spawn`], additionally counting fault-injection
+    /// events (corrupted replies, crash drops) into `metrics`.
+    pub fn spawn_with_metrics(
+        engine: Arc<dyn InferenceEngine>,
+        specs: &[WorkerSpec],
+        seed: u64,
+        metrics: Option<Arc<ServingMetrics>>,
     ) -> WorkerPool {
         let (reply_tx, replies) = channel::<WorkerReply>();
         let stop = Arc::new(AtomicBool::new(false));
@@ -100,6 +129,12 @@ impl WorkerPool {
             let reply_tx = reply_tx.clone();
             let spec = spec.clone();
             let mut rng = root.fork(worker_id as u64);
+            // The behavior program gets its own stream so its decisions
+            // replay bit-identically regardless of how many draws the
+            // latency model or plan-level corruption consume.
+            let behavior_rng = rng.fork(0xFA);
+            let mut behavior = BehaviorState::new(spec.behavior, behavior_rng);
+            let metrics = metrics.clone();
             let stop = stop.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("worker-{worker_id}"))
@@ -109,31 +144,62 @@ impl WorkerPool {
                             break;
                         }
                         let t0 = Instant::now();
+                        let (fail, behavior_delay) = match behavior.decide() {
+                            FaultAction::Drop => {
+                                // Crashed: consume the request, reply never.
+                                if let Some(m) = &metrics {
+                                    m.worker_drops.inc();
+                                }
+                                continue;
+                            }
+                            FaultAction::Fail => (true, Duration::ZERO),
+                            FaultAction::Reply { delay } => (false, delay),
+                        };
                         let service = spec.latency.sample(&mut rng);
                         if !service.is_zero() {
                             std::thread::sleep(service);
                         }
-                        let result = engine
-                            .infer1(&task.payload)
-                            .map(|mut logits| {
-                                if let Some(mode) = task.corrupt {
-                                    mode.corrupt(&mut logits, &mut rng);
-                                }
-                                logits
-                            })
-                            .map_err(|e| format!("{e:#}"));
+                        let result = if fail {
+                            Err(format!("worker {worker_id}: injected intermittent fault"))
+                        } else {
+                            engine
+                                .infer1(&task.payload)
+                                .map(|mut logits| {
+                                    // One reply counts once even when both
+                                    // injection layers (per-group plan +
+                                    // behavior program) corrupt it.
+                                    let mut corrupted = false;
+                                    if let Some(mode) = task.corrupt {
+                                        mode.corrupt(task.group, &mut logits, &mut rng);
+                                        corrupted = true;
+                                    }
+                                    corrupted |= behavior.corrupt(task.group, &mut logits);
+                                    if corrupted {
+                                        if let Some(m) = &metrics {
+                                            m.corrupt_replies_injected.inc();
+                                        }
+                                    }
+                                    logits
+                                })
+                                .map_err(|e| format!("{e:#}"))
+                        };
                         let group = task.group;
-                        if task.extra_delay.is_zero() {
+                        let delay = task.extra_delay + behavior_delay;
+                        if delay.is_zero() {
                             let reply =
                                 WorkerReply { group, worker_id, result, elapsed: t0.elapsed() };
                             if reply_tx.send(reply).is_err() {
                                 break; // coordinator gone
                             }
                         } else {
-                            // Forced straggler: release the reply late from a
-                            // holder thread; this worker keeps serving.
+                            // Deferred reply (forced straggler / slow
+                            // behavior): release it late from a holder
+                            // thread; this worker keeps serving. Thread-per
+                            // -deferral is fine at experiment rates; a fleet
+                            // of persistently slow workers under production
+                            // load would want a single timer thread draining
+                            // a delay-ordered queue instead.
                             let tx = reply_tx.clone();
-                            let delay = task.extra_delay;
                             let _ = std::thread::Builder::new()
                                 .name(format!("straggle-{worker_id}"))
                                 .spawn(move || {
@@ -508,6 +574,69 @@ mod tests {
         assert!(!out.complete);
         assert_eq!(out.received, 1);
         router.shutdown();
+        p.shutdown();
+    }
+
+    fn pool_with(behaviors: &[Behavior]) -> WorkerPool {
+        let engine = Arc::new(LinearMockEngine::new(8, 3));
+        let specs: Vec<WorkerSpec> =
+            behaviors.iter().map(|&b| WorkerSpec::default().with_behavior(b)).collect();
+        WorkerPool::spawn(engine, &specs, 42)
+    }
+
+    #[test]
+    fn crashed_worker_consumes_but_never_replies() {
+        let p = pool_with(&[Behavior::CrashAt { at: 1 }]);
+        p.send(0, task(1, Duration::ZERO)).unwrap();
+        let first = p.recv_timeout(Duration::from_secs(5)).expect("request 0 served");
+        assert_eq!(first.group, 1);
+        assert!(first.result.is_ok());
+        p.send(0, task(2, Duration::ZERO)).unwrap();
+        assert!(
+            p.recv_timeout(Duration::from_millis(100)).is_none(),
+            "crashed worker must not reply"
+        );
+        p.shutdown();
+    }
+
+    #[test]
+    fn flaky_worker_sends_error_replies() {
+        let p = pool_with(&[Behavior::Flaky { p_fail: 1.0 }]);
+        p.send(0, task(3, Duration::ZERO)).unwrap();
+        let r = p.recv_timeout(Duration::from_secs(5)).unwrap();
+        let err = r.result.unwrap_err();
+        assert!(err.contains("injected"), "{err}");
+        p.shutdown();
+    }
+
+    #[test]
+    fn slow_behavior_defers_the_reply() {
+        let p = pool_with(&[Behavior::Slow { base_ms: 120.0, tail_ms: 0.0, p: 0.0 }]);
+        p.send(0, task(4, Duration::ZERO)).unwrap();
+        let r = p.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(r.elapsed >= Duration::from_millis(110), "elapsed={:?}", r.elapsed);
+        p.shutdown();
+    }
+
+    #[test]
+    fn colluding_behaviors_reply_identically() {
+        let collude = Behavior::Byzantine(ByzantineMode::Colluding { pact: 7, scale: 10.0 });
+        let p = pool_with(&[collude, collude, Behavior::Honest]);
+        for w in 0..3 {
+            p.send(w, task(9, Duration::ZERO)).unwrap();
+        }
+        let mut by_worker: Vec<Option<Vec<f32>>> = vec![None; 3];
+        for _ in 0..3 {
+            let r = p.recv_timeout(Duration::from_secs(5)).unwrap();
+            by_worker[r.worker_id] = Some(r.result.unwrap());
+        }
+        let (a, b, honest) = (
+            by_worker[0].take().unwrap(),
+            by_worker[1].take().unwrap(),
+            by_worker[2].take().unwrap(),
+        );
+        assert_eq!(a, b, "colluders must emit identical corruption");
+        assert_ne!(a, honest, "colluders must actually corrupt");
         p.shutdown();
     }
 

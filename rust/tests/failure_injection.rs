@@ -1,5 +1,8 @@
 //! Failure-injection integration tests: worker errors, timeouts, late
-//! replies, partial groups — the unhappy paths of the coordinator.
+//! replies, partial groups, and the named fault-profile matrix (crash /
+//! slow-tail / flaky / random-Byzantine / colluding-Byzantine) with
+//! verified decode — the unhappy paths of the coordinator. Every profile
+//! scenario is deterministic under its fixed seed.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
@@ -8,9 +11,12 @@ use std::time::Duration;
 use anyhow::Result;
 
 use approxifer::coding::CodeParams;
-use approxifer::coordinator::{FaultPlan, GroupPipeline};
+use approxifer::coordinator::{FaultPlan, GroupPipeline, Service, ServiceConfig, VerifyPolicy};
 use approxifer::metrics::ServingMetrics;
-use approxifer::workers::{InferenceEngine, LinearMockEngine, WorkerPool, WorkerSpec};
+use approxifer::sim::faults::FaultProfile;
+use approxifer::workers::{
+    ByzantineMode, InferenceEngine, LinearMockEngine, WorkerPool, WorkerSpec,
+};
 
 /// Engine that fails on every `fail_every`-th call.
 struct FlakyEngine {
@@ -128,6 +134,260 @@ fn late_replies_from_timed_out_group_are_discarded() {
         "late replies should have been counted as cancelled"
     );
     pool.shutdown();
+}
+
+// ---- the named fault-profile matrix ------------------------------------
+
+/// Pool whose worker behaviors come from a named profile.
+fn profiled_pool(
+    params: CodeParams,
+    spec: &str,
+    seed: u64,
+    payload: usize,
+    classes: usize,
+) -> (WorkerPool, FaultProfile, Arc<LinearMockEngine>) {
+    let profile = FaultProfile::parse(spec, params.num_workers(), seed).unwrap();
+    let engine = Arc::new(LinearMockEngine::new(payload, classes));
+    let specs: Vec<WorkerSpec> = profile
+        .behaviors
+        .iter()
+        .map(|&b| WorkerSpec::default().with_behavior(b))
+        .collect();
+    let pool = WorkerPool::spawn(engine.clone(), &specs, seed);
+    (pool, profile, engine)
+}
+
+#[test]
+fn named_profiles_replay_bit_identically() {
+    // The acceptance contract: every named profile expands to the same
+    // fleet assignment under a fixed seed.
+    for spec in
+        ["crash:2@4", "slow:2:1:40:0.5", "flaky:2:0.3", "byz-random:2:10", "byz-collude:2:15"]
+    {
+        let a = FaultProfile::parse(spec, 10, 0xFEED).unwrap();
+        let b = FaultProfile::parse(spec, 10, 0xFEED).unwrap();
+        assert_eq!(a, b, "profile '{spec}' must be deterministic");
+        assert_eq!(a.faulty().len(), 2, "profile '{spec}'");
+    }
+}
+
+#[test]
+fn crash_profile_is_tolerated_within_slack() {
+    // K=3, S=2: N = K+S-1 = 4 → five workers, decoder waits for the
+    // fastest 3. Two workers crash at their 2nd request — the first two
+    // groups see the full fleet, later groups run on the 3 survivors,
+    // which covers wait_for exactly (zero remaining slack: any further
+    // fault in this test would time groups out).
+    let params = CodeParams::new(3, 2, 0);
+    let (pool, profile, _engine) = profiled_pool(params, "crash:2@2", 11, 8, 4);
+    let crashed = profile.faulty();
+    assert_eq!(crashed.len(), 2);
+    let mut pipe = GroupPipeline::new(params);
+    pipe.timeout = Duration::from_secs(5);
+    let metrics = ServingMetrics::new();
+    let queries = smooth_queries(3, 8);
+    let qrefs: Vec<&[f32]> = queries.iter().map(|q| &q[..]).collect();
+    for g in 0..6 {
+        let out = pipe
+            .infer_group(&pool, &qrefs, &FaultPlan::none(), &metrics)
+            .unwrap_or_else(|e| panic!("group {g} failed: {e:#}"));
+        if g >= 2 {
+            for w in &crashed {
+                assert!(!out.decode_set.contains(w), "group {g} used crashed worker {w}");
+            }
+        }
+    }
+    pool.shutdown();
+}
+
+#[test]
+fn slow_tail_profile_is_ridden_out() {
+    // One worker delays every reply by a constant 60ms (base, no tail).
+    // With S=1 the decoder's fastest-subset collection must never include
+    // it: the code absorbs the straggler with zero added latency.
+    let params = CodeParams::new(4, 1, 0);
+    let (pool, profile, _engine) = profiled_pool(params, "slow:1:60:0:1", 12, 8, 4);
+    let slow = profile.faulty();
+    assert_eq!(slow.len(), 1);
+    let mut pipe = GroupPipeline::new(params);
+    pipe.timeout = Duration::from_secs(5);
+    let metrics = ServingMetrics::new();
+    let queries = smooth_queries(4, 8);
+    let qrefs: Vec<&[f32]> = queries.iter().map(|q| &q[..]).collect();
+    for _ in 0..3 {
+        let out = pipe.infer_group(&pool, &qrefs, &FaultPlan::none(), &metrics).unwrap();
+        assert!(!out.decode_set.contains(&slow[0]), "slow worker in decode set");
+    }
+    pool.shutdown();
+}
+
+#[test]
+fn flaky_profile_errors_are_absorbed() {
+    // One worker errors on every request (p_fail = 1); with S=1 slack the
+    // remaining workers still reach the wait count and every group decodes.
+    let params = CodeParams::new(3, 1, 0);
+    let (pool, profile, _engine) = profiled_pool(params, "flaky:1:1.0", 13, 8, 4);
+    assert_eq!(profile.faulty().len(), 1);
+    let mut pipe = GroupPipeline::new(params);
+    pipe.timeout = Duration::from_secs(5);
+    let metrics = ServingMetrics::new();
+    let queries = smooth_queries(3, 8);
+    let qrefs: Vec<&[f32]> = queries.iter().map(|q| &q[..]).collect();
+    for _ in 0..5 {
+        pipe.infer_group(&pool, &qrefs, &FaultPlan::none(), &metrics).unwrap();
+    }
+    // The error reply races the honest replies against wait_for, so not
+    // every one is observed before collection stops — but across 5 groups
+    // at least one must be.
+    assert!(metrics.errors.get() >= 1, "flaky worker never errored");
+    pool.shutdown();
+}
+
+#[test]
+fn random_byzantine_profile_is_located_and_verified() {
+    // One Gaussian-noise adversary within the E=1 budget: located,
+    // excluded, and the decode passes re-encode verification.
+    let params = CodeParams::new(3, 0, 1);
+    let (pool, profile, engine) = profiled_pool(params, "byz-random:1:20", 14, 8, 6);
+    let byz = profile.faulty();
+    assert_eq!(byz.len(), 1);
+    let mut pipe =
+        GroupPipeline::new(params).with_verification(VerifyPolicy::on(0.4));
+    pipe.timeout = Duration::from_secs(5);
+    let metrics = ServingMetrics::new();
+    let queries = smooth_queries(3, 8);
+    let qrefs: Vec<&[f32]> = queries.iter().map(|q| &q[..]).collect();
+    let out = pipe.infer_group(&pool, &qrefs, &FaultPlan::none(), &metrics).unwrap();
+    assert_eq!(out.flagged, byz, "locator missed the noisy adversary");
+    let report = out.verify.expect("verification ran");
+    assert!(report.passed, "residual {} failed verification", report.residual);
+    for (j, q) in queries.iter().enumerate() {
+        let want = engine.infer1(q).unwrap();
+        for t in 0..6 {
+            assert!((out.predictions[j][t] - want[t]).abs() < 0.6, "q{j} c{t}");
+        }
+    }
+    pool.shutdown();
+}
+
+#[test]
+fn colluding_byzantine_detected_and_verified_at_e2() {
+    // The acceptance scenario: E = 2 colluding adversaries injecting
+    // *identical* per-group corruption — the attack that defeats
+    // majority/comparison defenses. The rational locator must still flag
+    // both, the decode must pass verification, and the whole scenario must
+    // replay bit-identically under its fixed seed.
+    let params = CodeParams::new(3, 0, 2);
+    let seed = 0xC0FFEE;
+    let run = || {
+        let (pool, profile, engine) = profiled_pool(params, "byz-collude:2:15", seed, 8, 6);
+        let mut pipe =
+            GroupPipeline::new(params).with_verification(VerifyPolicy::on(0.4));
+        pipe.timeout = Duration::from_secs(5);
+        let metrics = ServingMetrics::new();
+        let queries = smooth_queries(3, 8);
+        let qrefs: Vec<&[f32]> = queries.iter().map(|q| &q[..]).collect();
+        let out = pipe.infer_group(&pool, &qrefs, &FaultPlan::none(), &metrics).unwrap();
+        pool.shutdown();
+        (out, profile.faulty(), engine, queries)
+    };
+    let (out, colluders, engine, queries) = run();
+    assert_eq!(colluders.len(), 2);
+    assert_eq!(out.flagged, colluders, "locator must flag both colluders");
+    for w in &colluders {
+        assert!(!out.decode_set.contains(w));
+    }
+    let report = out.verify.expect("verification ran");
+    assert!(report.passed, "residual {} failed verification", report.residual);
+    assert!(!report.escalated, "pinned locate should hold on the first rung");
+    for (j, q) in queries.iter().enumerate() {
+        let want = engine.infer1(q).unwrap();
+        for t in 0..6 {
+            assert!(
+                (out.predictions[j][t] - want[t]).abs() < 0.6,
+                "q{j} c{t}: {} vs {}",
+                out.predictions[j][t],
+                want[t]
+            );
+        }
+    }
+    // Bit-identical replay: S = 0 means the decode set is scheduling-free
+    // and the colluders' corruption is keyed to (pact, group).
+    let (out2, colluders2, _engine, _queries) = run();
+    assert_eq!(colluders2, colluders);
+    assert_eq!(out2.flagged, out.flagged);
+    assert_eq!(out2.predictions, out.predictions, "replay must be bit-identical");
+}
+
+#[test]
+fn verification_failure_redispatches_and_recovers() {
+    // Rung 3 of the escalation ladder, end to end: group 1 is corrupted
+    // *beyond* the E = 1 budget (two colluding workers), so both locate
+    // rungs produce inconsistent decodes and the coordinator redispatches.
+    // The redispatched group (id 2) is clean, verifies, and the clients
+    // get accurate answers — transparently.
+    let params = CodeParams::new(2, 0, 1);
+    let engine = Arc::new(LinearMockEngine::new(8, 6));
+    let mut cfg = ServiceConfig::new(params);
+    cfg.flush_after = Duration::from_millis(5);
+    cfg.verify = VerifyPolicy::on(0.4);
+    cfg.fault_hook = Some(Arc::new(|group| {
+        if group == 1 {
+            FaultPlan {
+                byzantine: vec![0, 1],
+                byz_mode: Some(ByzantineMode::Colluding { pact: 777, scale: 25.0 }),
+                ..FaultPlan::none()
+            }
+        } else {
+            FaultPlan::none()
+        }
+    }));
+    let svc = Service::start(engine.clone(), cfg);
+    let queries = smooth_queries(2, 8);
+    let handles: Vec<_> = queries.iter().map(|q| svc.submit(q.clone())).collect();
+    for (j, h) in handles.into_iter().enumerate() {
+        let pred = h.wait_timeout(Duration::from_secs(10)).unwrap();
+        let want = engine.infer1(&queries[j]).unwrap();
+        for t in 0..6 {
+            assert!(
+                (pred[t] - want[t]).abs() < 0.6,
+                "q{j} c{t}: {} vs {} (redispatch must recover accuracy)",
+                pred[t],
+                want[t]
+            );
+        }
+    }
+    assert_eq!(svc.metrics.redispatches.get(), 1, "exactly one redispatch");
+    assert!(svc.metrics.verify_failures.get() >= 1);
+    assert!(svc.metrics.verify_escalations.get() >= 1);
+    assert_eq!(svc.metrics.groups_decoded.get(), 1);
+    svc.shutdown();
+}
+
+#[test]
+fn persistent_overbudget_corruption_serves_degraded_not_hung() {
+    // If every dispatch (including the redispatch) is corrupted beyond
+    // budget, the service must still answer — degraded, observable in the
+    // metrics — rather than hang or error the group.
+    let params = CodeParams::new(2, 0, 1);
+    let engine = Arc::new(LinearMockEngine::new(8, 6));
+    let mut cfg = ServiceConfig::new(params);
+    cfg.flush_after = Duration::from_millis(5);
+    cfg.verify = VerifyPolicy::on(0.4);
+    cfg.fault_hook = Some(Arc::new(|_group| FaultPlan {
+        byzantine: vec![0, 1],
+        byz_mode: Some(ByzantineMode::Colluding { pact: 4242, scale: 25.0 }),
+        ..FaultPlan::none()
+    }));
+    let svc = Service::start(engine, cfg);
+    let queries = smooth_queries(2, 8);
+    let handles: Vec<_> = queries.iter().map(|q| svc.submit(q.clone())).collect();
+    for h in handles {
+        assert!(h.wait_timeout(Duration::from_secs(10)).is_ok(), "degraded group must answer");
+    }
+    assert_eq!(svc.metrics.redispatches.get(), 1, "redispatch budget is one");
+    assert!(svc.metrics.verify_failures.get() >= 2, "both dispatches must fail verification");
+    svc.shutdown();
 }
 
 #[test]

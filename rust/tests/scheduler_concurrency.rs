@@ -140,9 +140,7 @@ fn sustained_open_loop_overlap_decodes_everything() {
     cfg.flush_after = Duration::from_millis(2);
     cfg.max_inflight = 4;
     cfg.worker_specs = vec![
-        WorkerSpec {
-            latency: LatencyModel::Bimodal { base_ms: 0.5, straggler_ms: 15.0, p: 0.15 }
-        };
+        WorkerSpec::new(LatencyModel::Bimodal { base_ms: 0.5, straggler_ms: 15.0, p: 0.15 });
         params.num_workers()
     ];
     let svc = Arc::new(Service::start(engine, cfg));

@@ -1,16 +1,16 @@
 //! Integration: online service + TCP server over mock engines — the whole
 //! L3 stack minus PJRT. No artifacts required.
 
+use std::io::{Read, Write};
 use std::sync::Arc;
 use std::time::Duration;
 
 use approxifer::coding::CodeParams;
-use approxifer::coordinator::{Service, ServiceConfig};
+use approxifer::coordinator::{Service, ServiceConfig, VerifyPolicy};
 use approxifer::server::{Client, Server};
+use approxifer::sim::faults::{Behavior, FaultProfile};
 use approxifer::sim::{run_scenario, Arrivals};
-use approxifer::workers::{
-    ByzantineMode, InferenceEngine, LatencyModel, LinearMockEngine, WorkerSpec,
-};
+use approxifer::workers::{InferenceEngine, LatencyModel, LinearMockEngine, WorkerSpec};
 
 fn service(
     k: usize,
@@ -62,7 +62,7 @@ fn scenario_under_straggler_tail_completes() {
     let mut cfg = ServiceConfig::new(params);
     cfg.flush_after = Duration::from_millis(5);
     cfg.worker_specs = vec![
-        WorkerSpec { latency: LatencyModel::Bimodal { base_ms: 0.5, straggler_ms: 40.0, p: 0.1 } };
+        WorkerSpec::new(LatencyModel::Bimodal { base_ms: 0.5, straggler_ms: 40.0, p: 0.1 });
         params.num_workers()
     ];
     let svc = Arc::new(Service::start(engine, cfg));
@@ -75,15 +75,137 @@ fn scenario_under_straggler_tail_completes() {
 
 #[test]
 fn byzantine_service_keeps_answering() {
+    // One Gaussian-noise adversary (behavior program, not a per-group
+    // plan) with decode verification on: every group must still answer,
+    // the adversary must be flagged, and verification must hold up.
     let engine = Arc::new(LinearMockEngine::new(8, 6));
     let params = CodeParams::new(3, 0, 1);
     let mut cfg = ServiceConfig::new(params);
     cfg.flush_after = Duration::from_millis(5);
-    cfg.byz_mode = Some(ByzantineMode::GaussianNoise { sigma: 20.0 });
+    cfg.verify = VerifyPolicy::on(0.4);
+    let profile =
+        FaultProfile::parse("byz-random:1:20", params.num_workers(), cfg.seed).unwrap();
+    cfg.set_fault_profile(&profile);
     let svc = Arc::new(Service::start(engine, cfg));
     let report = run_scenario(&svc, 8, 30, Arrivals::Uniform { rate: 300.0 }, 4).unwrap();
     assert_eq!(report.completed, 30);
     assert!(svc.metrics.byzantine_flagged.get() > 0, "no adversaries flagged");
+    assert!(svc.metrics.corrupt_replies_injected.get() > 0, "injection never fired");
+    assert!(svc.metrics.locator_hits.get() > 0, "verification never confirmed a locate");
+    assert_eq!(svc.metrics.redispatches.get(), 0, "clean groups must not redispatch");
+}
+
+// ---- raw wire-protocol helpers (the documented frame layout, rebuilt
+// here so the test exercises the format independently of the server's own
+// codec): u32 frame_len | u8 head | u64 id | u64 payload_len | body.
+
+const OP_PREDICT: u8 = 1;
+const ST_OK: u8 = 16;
+
+fn send_predict(stream: &mut std::net::TcpStream, id: u64, payload: &[f32]) {
+    let mut buf = Vec::new();
+    buf.extend_from_slice(&((1 + 8 + 8 + payload.len() * 4) as u32).to_le_bytes());
+    buf.push(OP_PREDICT);
+    buf.extend_from_slice(&id.to_le_bytes());
+    buf.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    for &x in payload {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+    stream.write_all(&buf).unwrap();
+    stream.flush().unwrap();
+}
+
+fn recv_response(stream: &mut std::net::TcpStream) -> (u8, u64, Vec<f32>) {
+    let mut len4 = [0u8; 4];
+    stream.read_exact(&mut len4).unwrap();
+    let len = u32::from_le_bytes(len4) as usize;
+    let mut frame = vec![0u8; len];
+    stream.read_exact(&mut frame).unwrap();
+    let head = frame[0];
+    let id = u64::from_le_bytes(frame[1..9].try_into().unwrap());
+    let body: Vec<f32> = frame[17..]
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect();
+    (head, id, body)
+}
+
+fn payload_for(id: u64, d: usize) -> Vec<f32> {
+    (0..d).map(|t| ((id as f32) * 0.11 + (t as f32) * 0.023).sin()).collect()
+}
+
+#[test]
+fn interleaved_request_ids_survive_slow_worker_reordering() {
+    // Two raw connections pipeline interleaved request ids into a service
+    // whose fleet runs a slow-worker behavior profile, with every other
+    // group additionally straggled far past the fast groups. Responses
+    // complete out of submission order; every reply must carry its request
+    // id and the prediction for *that id's* payload (no crossed wires).
+    let d = 8;
+    let engine = Arc::new(LinearMockEngine::new(d, 3));
+    let params = CodeParams::new(2, 1, 0);
+    let mut cfg = ServiceConfig::new(params);
+    cfg.flush_after = Duration::from_millis(3);
+    cfg.max_inflight = 8;
+    for spec in cfg.worker_specs.iter_mut() {
+        spec.behavior = Behavior::Slow { base_ms: 0.0, tail_ms: 15.0, p: 0.5 };
+    }
+    use approxifer::coordinator::FaultPlan;
+    cfg.fault_hook = Some(Arc::new(|group| {
+        if group % 2 == 1 {
+            FaultPlan {
+                stragglers: vec![0, 1, 2],
+                straggler_delay: Duration::from_millis(80),
+                ..FaultPlan::none()
+            }
+        } else {
+            FaultPlan::none()
+        }
+    }));
+    let svc = Arc::new(Service::start(engine.clone(), cfg));
+    let server = Server::start("127.0.0.1:0", svc.clone(), d).unwrap();
+    let addr = server.addr();
+
+    let per_conn = 8usize;
+    let mut joins = Vec::new();
+    for conn in 0..2u64 {
+        let engine = engine.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut stream = std::net::TcpStream::connect(addr).unwrap();
+            stream.set_nodelay(true).ok();
+            let ids: Vec<u64> = (0..per_conn as u64).map(|i| 100 + conn + 2 * i).collect();
+            for &id in &ids {
+                send_predict(&mut stream, id, &payload_for(id, d));
+            }
+            let mut seen = Vec::new();
+            for _ in 0..per_conn {
+                let (head, id, pred) = recv_response(&mut stream);
+                assert_eq!(head, ST_OK, "id {id} errored");
+                assert!(ids.contains(&id), "unknown id {id} on connection {conn}");
+                // The payload must be the prediction for THIS id's query.
+                let want = engine.infer1(&payload_for(id, d)).unwrap();
+                for t in 0..3 {
+                    assert!(
+                        (pred[t] - want[t]).abs() < 0.3,
+                        "id {id} c{t}: {} vs {}",
+                        pred[t],
+                        want[t]
+                    );
+                }
+                seen.push(id);
+            }
+            let mut sorted = seen.clone();
+            sorted.sort_unstable();
+            let mut expect = ids.clone();
+            expect.sort_unstable();
+            assert_eq!(sorted, expect, "connection {conn} lost or duplicated replies");
+        }));
+    }
+    for j in joins {
+        j.join().unwrap();
+    }
+    assert_eq!(svc.metrics.queries_received.get(), 2 * per_conn as u64);
+    server.shutdown();
 }
 
 #[test]
