@@ -13,13 +13,13 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use approxifer::coding::CodeParams;
-use approxifer::coordinator::{Service, ServiceConfig};
+use approxifer::coding::{ApproxIferCode, CodeParams};
+use approxifer::coordinator::Service;
 use approxifer::data::TestSet;
 use approxifer::runtime::{CompiledModel, Manifest, Runtime};
 use approxifer::server::{Client, Server};
 use approxifer::util::stats::Summary;
-use approxifer::workers::{LatencyModel, PjrtEngine, WorkerSpec};
+use approxifer::workers::{LatencyModel, PjrtEngine};
 
 fn main() -> Result<()> {
     approxifer::util::logging::init();
@@ -34,13 +34,15 @@ fn main() -> Result<()> {
     let payload = model.payload();
     let testset = TestSet::load(&manifest, dataset)?;
     let engine = Arc::new(PjrtEngine::new(model));
-    let mut cfg = ServiceConfig::new(params);
-    cfg.flush_after = Duration::from_millis(15);
     // Exponential service tail on every worker: the environment the paper
     // targets (coded redundancy rides out the tail).
-    cfg.worker_specs =
-        vec![WorkerSpec::new(LatencyModel::Exponential { mean_ms: 4.0 }); params.num_workers()];
-    let service = Arc::new(Service::start(engine, cfg));
+    let service = Arc::new(
+        Service::builder(Arc::new(ApproxIferCode::new(params)))
+            .engine(engine)
+            .flush_after(Duration::from_millis(15))
+            .worker_latency(LatencyModel::Exponential { mean_ms: 4.0 })
+            .spawn()?,
+    );
     let server = Server::start("127.0.0.1:0", service.clone(), payload)?;
     let addr = server.addr();
     println!(

@@ -1,20 +1,17 @@
-//! End-to-end group-latency benchmarks: the coded pipeline vs replication
+//! End-to-end group-latency benchmarks: the coded scheme vs replication
 //! vs no-redundancy under controlled worker tails (the latency side of the
-//! paper's motivation; regenerable table `latency` in the harness). Uses
-//! the DelayMockEngine so model cost is controlled exactly and the bench
-//! isolates coordination overhead + tail behaviour.
+//! paper's motivation; regenerable table `latency` in the harness). Every
+//! strategy runs through the **same** scheme-agnostic online `Service`
+//! with the DelayMockEngine, so model cost is controlled exactly and the
+//! bench isolates coordination overhead + tail behaviour.
 
 use std::sync::Arc;
 use std::time::Duration;
 
-use approxifer::coding::replication::ReplicationParams;
-use approxifer::coding::CodeParams;
-use approxifer::coordinator::{FaultPlan, GroupPipeline, ReplicationPipeline};
-use approxifer::metrics::ServingMetrics;
+use approxifer::coding::{ApproxIferCode, CodeParams, Replication, ServingScheme, Uncoded};
+use approxifer::coordinator::{FaultPlan, Service};
 use approxifer::util::bench::{bench_cfg, black_box, group, BenchConfig};
-use approxifer::workers::{
-    DelayMockEngine, InferenceEngine, LatencyModel, WorkerPool, WorkerSpec,
-};
+use approxifer::workers::{ByzantineMode, DelayMockEngine, InferenceEngine, LatencyModel};
 
 fn queries(k: usize, d: usize) -> Vec<Vec<f32>> {
     (0..k)
@@ -31,98 +28,83 @@ fn cfg() -> BenchConfig {
     }
 }
 
+/// One closed-loop group through a service: submit K queries, wait for all.
+fn one_group(svc: &Service, qs: &[Vec<f32>]) {
+    let handles: Vec<_> = qs.iter().map(|q| svc.submit(q.clone())).collect();
+    for h in handles {
+        black_box(h.wait().unwrap());
+    }
+}
+
+fn service(
+    scheme: Arc<dyn ServingScheme>,
+    compute: Duration,
+    tail: LatencyModel,
+    seed: u64,
+) -> Service {
+    let (d, c) = (128usize, 10usize);
+    let engine: Arc<dyn InferenceEngine> = Arc::new(DelayMockEngine::new(d, c, compute));
+    Service::builder(scheme)
+        .engine(engine)
+        .worker_latency(tail)
+        .flush_after(Duration::from_millis(1))
+        .seed(seed)
+        .spawn()
+        .unwrap()
+}
+
 fn main() {
-    let (k, d, c) = (8usize, 128usize, 10usize);
+    let (k, d) = (8usize, 128usize);
     let compute = Duration::from_micros(200);
     let tail = LatencyModel::Exponential { mean_ms: 2.0 };
+    let qs = queries(k, d);
 
     group("group latency: coordination + tail (exp 2ms tail, 0.2ms compute)");
     {
-        let engine: Arc<dyn InferenceEngine> = Arc::new(DelayMockEngine::new(d, c, compute));
-        let params = CodeParams::new(k, 1, 0);
-        let specs = vec![WorkerSpec::new(tail); params.num_workers()];
-        let pool = WorkerPool::spawn(engine, &specs, 1);
-        let mut pipe = GroupPipeline::new(params);
-        let metrics = ServingMetrics::new();
-        let qs = queries(k, d);
-        let qrefs: Vec<&[f32]> = qs.iter().map(|q| &q[..]).collect();
-        bench_cfg("approxifer_group_k8_s1_exp", cfg(), || {
-            black_box(pipe.infer_group(&pool, &qrefs, &FaultPlan::none(), &metrics).unwrap());
-        });
-        pool.shutdown();
+        let scheme = Arc::new(ApproxIferCode::new(CodeParams::new(k, 1, 0)));
+        let svc = service(scheme, compute, tail, 1);
+        bench_cfg("approxifer_group_k8_s1_exp", cfg(), || one_group(&svc, &qs));
+        svc.shutdown();
     }
     {
-        let engine: Arc<dyn InferenceEngine> = Arc::new(DelayMockEngine::new(d, c, compute));
-        let params = ReplicationParams::new(k, 1, 0);
-        let specs = vec![WorkerSpec::new(tail); params.num_workers()];
-        let pool = WorkerPool::spawn(engine, &specs, 2);
-        let mut pipe = ReplicationPipeline::new(params);
-        let metrics = ServingMetrics::new();
-        let qs = queries(k, d);
-        let qrefs: Vec<&[f32]> = qs.iter().map(|q| &q[..]).collect();
-        bench_cfg("replication_group_k8_s1_exp", cfg(), || {
-            black_box(pipe.infer_group(&pool, &qrefs, &FaultPlan::none(), &metrics).unwrap());
-        });
-        pool.shutdown();
+        let scheme = Arc::new(Replication::new(k, 1, 0));
+        let svc = service(scheme, compute, tail, 2);
+        bench_cfg("replication_group_k8_s1_exp", cfg(), || one_group(&svc, &qs));
+        svc.shutdown();
     }
     {
-        // No redundancy: replication with 1 copy (wait for all).
-        let engine: Arc<dyn InferenceEngine> = Arc::new(DelayMockEngine::new(d, c, compute));
-        let params = ReplicationParams::new(k, 0, 0);
-        let specs = vec![WorkerSpec::new(tail); params.num_workers()];
-        let pool = WorkerPool::spawn(engine, &specs, 3);
-        let mut pipe = ReplicationPipeline::new(params);
-        let metrics = ServingMetrics::new();
-        let qs = queries(k, d);
-        let qrefs: Vec<&[f32]> = qs.iter().map(|q| &q[..]).collect();
-        bench_cfg("no_redundancy_group_k8_exp", cfg(), || {
-            black_box(pipe.infer_group(&pool, &qrefs, &FaultPlan::none(), &metrics).unwrap());
-        });
-        pool.shutdown();
+        let scheme = Arc::new(Uncoded::new(k));
+        let svc = service(scheme, compute, tail, 3);
+        bench_cfg("no_redundancy_group_k8_exp", cfg(), || one_group(&svc, &qs));
+        svc.shutdown();
     }
 
     group("coordination floor: zero tail, zero compute (pure overhead)");
     {
-        let engine: Arc<dyn InferenceEngine> =
-            Arc::new(DelayMockEngine::new(d, c, Duration::ZERO));
-        let params = CodeParams::new(k, 1, 0);
-        let pool = WorkerPool::spawn(
-            engine,
-            &vec![WorkerSpec::new(LatencyModel::None); params.num_workers()],
-            4,
-        );
-        let mut pipe = GroupPipeline::new(params);
-        let metrics = ServingMetrics::new();
-        let qs = queries(k, d);
-        let qrefs: Vec<&[f32]> = qs.iter().map(|q| &q[..]).collect();
-        bench_cfg("approxifer_group_floor_k8_s1", cfg(), || {
-            black_box(pipe.infer_group(&pool, &qrefs, &FaultPlan::none(), &metrics).unwrap());
-        });
-        pool.shutdown();
+        let scheme = Arc::new(ApproxIferCode::new(CodeParams::new(k, 1, 0)));
+        let svc = service(scheme, Duration::ZERO, LatencyModel::None, 4);
+        bench_cfg("approxifer_group_floor_k8_s1", cfg(), || one_group(&svc, &qs));
+        svc.shutdown();
     }
 
     group("byzantine pipeline: locate+vote on the path (K=12, E=2)");
     {
+        let qs12 = queries(12, d);
+        let scheme = Arc::new(ApproxIferCode::new(CodeParams::new(12, 0, 2)));
         let engine: Arc<dyn InferenceEngine> =
-            Arc::new(DelayMockEngine::new(d, c, Duration::ZERO));
-        let params = CodeParams::new(12, 0, 2);
-        let pool = WorkerPool::spawn(
-            engine,
-            &vec![WorkerSpec::new(LatencyModel::None); params.num_workers()],
-            5,
-        );
-        let mut pipe = GroupPipeline::new(params);
-        let metrics = ServingMetrics::new();
-        let qs = queries(12, d);
-        let qrefs: Vec<&[f32]> = qs.iter().map(|q| &q[..]).collect();
-        let plan = FaultPlan {
-            byzantine: vec![3, 17],
-            byz_mode: Some(approxifer::workers::ByzantineMode::GaussianNoise { sigma: 10.0 }),
-            ..FaultPlan::none()
-        };
-        bench_cfg("approxifer_group_k12_e2_byz", cfg(), || {
-            black_box(pipe.infer_group(&pool, &qrefs, &plan, &metrics).unwrap());
-        });
-        pool.shutdown();
+            Arc::new(DelayMockEngine::new(d, 10, Duration::ZERO));
+        let svc = Service::builder(scheme)
+            .engine(engine)
+            .flush_after(Duration::from_millis(1))
+            .seed(5)
+            .fault_hook(Arc::new(|_group| FaultPlan {
+                byzantine: vec![3, 17],
+                byz_mode: Some(ByzantineMode::GaussianNoise { sigma: 10.0 }),
+                ..FaultPlan::none()
+            }))
+            .spawn()
+            .unwrap();
+        bench_cfg("approxifer_group_k12_e2_byz", cfg(), || one_group(&svc, &qs12));
+        svc.shutdown();
     }
 }

@@ -1,25 +1,27 @@
 //! Online-service throughput benchmarks: the batcher + concurrent
 //! coordinator + worker-pool stack under open-loop load with mock engines
-//! (model cost controlled), sweeping K, the flush deadline and — the
-//! headline — `max_inflight`, the number of K-groups the coordinator keeps
-//! in flight at once.
+//! (model cost controlled), sweeping K, the flush deadline, `max_inflight`
+//! (the number of K-groups the coordinator keeps in flight at once) and —
+//! new with the scheme-agnostic engine — the serving scheme itself at
+//! matched worker counts (ApproxIFER vs replication vs uncoded).
 //!
 //! Quick mode (`APPROXIFER_BENCH_QUICK=1`) shrinks request counts for CI
 //! smoke runs; `BENCH_PR_JSON=path` additionally writes the max_inflight
-//! sweep as a JSON artifact so the perf trajectory accumulates across PRs.
+//! and scheme sweeps as a JSON artifact so the perf trajectory accumulates
+//! across PRs.
 
 use std::io::Write;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use approxifer::coding::CodeParams;
-use approxifer::coordinator::{Service, ServiceConfig, VerifyPolicy};
+use approxifer::coding::{
+    ApproxIferCode, CodeParams, Replication, ServingScheme, Uncoded, VerifyPolicy,
+};
+use approxifer::coordinator::Service;
 use approxifer::sim::faults::FaultProfile;
 use approxifer::sim::{run_scenario, Arrivals, ScenarioReport};
 use approxifer::util::bench::quick_mode;
-use approxifer::workers::{
-    DelayMockEngine, InferenceEngine, LatencyModel, LinearMockEngine, WorkerSpec,
-};
+use approxifer::workers::{DelayMockEngine, InferenceEngine, LatencyModel, LinearMockEngine};
 
 struct SweepRow {
     max_inflight: usize,
@@ -34,6 +36,13 @@ struct FaultRow {
     redispatches: u64,
 }
 
+struct SchemeRow {
+    name: String,
+    workers: usize,
+    k: usize,
+    report: ScenarioReport,
+}
+
 fn main() {
     let quick = quick_mode();
     let scale = if quick { 4 } else { 1 };
@@ -45,13 +54,15 @@ fn main() {
         "config", "requests", "thrpt/s", "p50_ms", "p99_ms"
     );
     for &k in &[4usize, 8, 12] {
-        let params = CodeParams::new(k, 1, 0);
         let engine: Arc<dyn InferenceEngine> =
             Arc::new(DelayMockEngine::new(d, c, Duration::from_micros(100)));
-        let mut cfg = ServiceConfig::new(params);
-        cfg.flush_after = Duration::from_millis(5);
-        cfg.worker_specs = vec![WorkerSpec::default(); params.num_workers()];
-        let service = Arc::new(Service::start(engine, cfg));
+        let service = Arc::new(
+            Service::builder(Arc::new(ApproxIferCode::new(CodeParams::new(k, 1, 0))))
+                .engine(engine)
+                .flush_after(Duration::from_millis(5))
+                .spawn()
+                .unwrap(),
+        );
         let total = 512 / scale;
         let report =
             run_scenario(&service, d, total, Arrivals::Uniform { rate: 1e6 }, 42).unwrap();
@@ -68,12 +79,15 @@ fn main() {
     println!("\n== flush-deadline sweep (K=8, sparse arrivals 200/s) ==");
     println!("{:<26} {:>12} {:>12} {:>12}", "flush_after", "thrpt/s", "p50_ms", "p99_ms");
     for &ms in &[2u64, 10, 50] {
-        let params = CodeParams::new(8, 1, 0);
         let engine: Arc<dyn InferenceEngine> =
             Arc::new(DelayMockEngine::new(d, c, Duration::from_micros(100)));
-        let mut cfg = ServiceConfig::new(params);
-        cfg.flush_after = Duration::from_millis(ms);
-        let service = Arc::new(Service::start(engine, cfg));
+        let service = Arc::new(
+            Service::builder(Arc::new(ApproxIferCode::new(CodeParams::new(8, 1, 0))))
+                .engine(engine)
+                .flush_after(Duration::from_millis(ms))
+                .spawn()
+                .unwrap(),
+        );
         let total = 256 / scale;
         let report =
             run_scenario(&service, d, total, Arrivals::Poisson { rate: 200.0 }, 43).unwrap();
@@ -106,13 +120,15 @@ fn main() {
     // ---- robustness overhead: the fault-profile matrix -------------------
     let fault_rows = fault_profile_sweep(d, c, if quick { 27 } else { 90 });
 
+    // ---- scheme comparison at matched worker counts ----------------------
+    let scheme_rows = scheme_comparison_sweep(d, c, if quick { 27 } else { 90 });
+
     if let Some(path) = std::env::var_os("BENCH_PR_JSON") {
-        write_json(&path, d, &rows, &fault_rows);
+        write_json(&path, d, &rows, &fault_rows, &scheme_rows);
     }
 
     println!("\n== encode throughput ceiling (host-side, K=8 S=1, d=3072) ==");
     {
-        use approxifer::coding::ApproxIferCode;
         let code = ApproxIferCode::new(CodeParams::new(8, 1, 0));
         let qs: Vec<Vec<f32>> = (0..8).map(|j| vec![j as f32 * 0.1; 3072]).collect();
         let qrefs: Vec<&[f32]> = qs.iter().map(|q| &q[..]).collect();
@@ -149,15 +165,20 @@ fn max_inflight_sweep(d: usize, c: usize, groups: usize) -> Vec<SweepRow> {
     let mut rows = Vec::new();
     for &mi in &[1usize, 2, 4, 8] {
         let engine: Arc<dyn InferenceEngine> = Arc::new(LinearMockEngine::new(d, c));
-        let mut cfg = ServiceConfig::new(params);
-        cfg.flush_after = Duration::from_millis(2);
-        cfg.max_inflight = mi;
-        cfg.decode_threads = 2;
-        cfg.worker_specs = vec![
-            WorkerSpec::new(LatencyModel::Bimodal { base_ms: 1.0, straggler_ms: 25.0, p: 0.2 });
-            params.num_workers()
-        ];
-        let service = Arc::new(Service::start(engine, cfg));
+        let service = Arc::new(
+            Service::builder(Arc::new(ApproxIferCode::new(params)))
+                .engine(engine)
+                .flush_after(Duration::from_millis(2))
+                .max_inflight(mi)
+                .decode_threads(2)
+                .worker_latency(LatencyModel::Bimodal {
+                    base_ms: 1.0,
+                    straggler_ms: 25.0,
+                    p: 0.2,
+                })
+                .spawn()
+                .unwrap(),
+        );
         // Bursty with one giant burst = submit everything immediately: a
         // pure open-loop flood that exposes the pipeline depth.
         let arrivals = Arrivals::Bursty { burst: total, period_ms: 0.0 };
@@ -195,14 +216,18 @@ fn fault_profile_sweep(d: usize, c: usize, groups: usize) -> Vec<FaultRow> {
     let mut rows = Vec::new();
     for profile in ["honest", "slow:1:25:0:1", "byz-random:1:10", "churn:3"] {
         let engine: Arc<dyn InferenceEngine> = Arc::new(LinearMockEngine::new(d, c));
-        let mut cfg = ServiceConfig::new(params);
-        cfg.flush_after = Duration::from_millis(2);
-        cfg.max_inflight = 4;
-        cfg.decode_threads = 2;
-        cfg.verify = VerifyPolicy::on(0.4);
-        cfg.group_timeout = Duration::from_secs(5);
-        cfg.set_fault_profile(&FaultProfile::parse(profile, nw, 4242).unwrap());
-        let service = Arc::new(Service::start(engine, cfg));
+        let service = Arc::new(
+            Service::builder(Arc::new(ApproxIferCode::new(params)))
+                .engine(engine)
+                .flush_after(Duration::from_millis(2))
+                .max_inflight(4)
+                .decode_threads(2)
+                .verify(VerifyPolicy::on(0.4))
+                .group_timeout(Duration::from_secs(5))
+                .fault_profile(FaultProfile::parse(profile, nw, 4242).unwrap())
+                .spawn()
+                .unwrap(),
+        );
         let arrivals = Arrivals::Bursty { burst: total, period_ms: 0.0 };
         let report = run_scenario(&service, d, total, arrivals, 77).unwrap();
         let m = &service.metrics;
@@ -228,8 +253,69 @@ fn fault_profile_sweep(d: usize, c: usize, groups: usize) -> Vec<FaultRow> {
     rows
 }
 
+/// The scheme-agnostic engine's headline: ApproxIFER vs replication vs
+/// uncoded at a matched 10-worker fleet under the same bimodal tail, all
+/// through the identical `Service` stack. ApproxIFER serves K=9 per group
+/// on 10 workers; replication serves K=5 with 2 copies each; uncoded
+/// serves K=10 with no slack (and pays the full 10th-order-statistic
+/// tail).
+fn scheme_comparison_sweep(d: usize, c: usize, groups: usize) -> Vec<SchemeRow> {
+    let schemes: Vec<Arc<dyn ServingScheme>> = vec![
+        Arc::new(ApproxIferCode::new(CodeParams::new(9, 1, 0))),
+        Arc::new(Replication::new(5, 1, 0)),
+        Arc::new(Uncoded::new(10)),
+    ];
+    println!("\n== scheme sweep (matched 10-worker fleet, bimodal 1ms/25ms p=0.2 tail) ==");
+    println!(
+        "{:<22} {:>8} {:>8} {:>8} {:>12} {:>12} {:>12}",
+        "scheme", "workers", "K", "ok", "thrpt/s", "p50_ms", "p99_ms"
+    );
+    let mut rows = Vec::new();
+    for scheme in schemes {
+        let k = scheme.group_size();
+        let workers = scheme.num_workers();
+        let name = scheme.name().to_string();
+        let total = groups * k;
+        let engine: Arc<dyn InferenceEngine> = Arc::new(LinearMockEngine::new(d, c));
+        let service = Arc::new(
+            Service::builder(scheme)
+                .engine(engine)
+                .flush_after(Duration::from_millis(2))
+                .max_inflight(4)
+                .decode_threads(2)
+                .worker_latency(LatencyModel::Bimodal {
+                    base_ms: 1.0,
+                    straggler_ms: 25.0,
+                    p: 0.2,
+                })
+                .spawn()
+                .unwrap(),
+        );
+        let arrivals = Arrivals::Bursty { burst: total, period_ms: 0.0 };
+        let report = run_scenario(&service, d, total, arrivals, 909).unwrap();
+        println!(
+            "{:<22} {:>8} {:>8} {:>8} {:>12.1} {:>12.2} {:>12.2}",
+            name,
+            workers,
+            k,
+            report.completed,
+            report.throughput,
+            report.latency.p50 * 1e3,
+            report.latency.p99 * 1e3
+        );
+        rows.push(SchemeRow { name, workers, k, report });
+    }
+    rows
+}
+
 /// Hand-rolled JSON artifact (no serde in this environment).
-fn write_json(path: &std::ffi::OsStr, payload: usize, rows: &[SweepRow], faults: &[FaultRow]) {
+fn write_json(
+    path: &std::ffi::OsStr,
+    payload: usize,
+    rows: &[SweepRow],
+    faults: &[FaultRow],
+    schemes: &[SchemeRow],
+) {
     let base = rows[0].report.throughput;
     let mut out = String::from("{\n");
     out.push_str("  \"bench\": \"bench_throughput\",\n");
@@ -269,6 +355,24 @@ fn write_json(path: &std::ffi::OsStr, payload: usize, rows: &[SweepRow], faults:
             row.verify_failures,
             row.redispatches,
             if i + 1 < faults.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ],\n");
+    out.push_str("  \"scheme_rows\": [\n");
+    for (i, row) in schemes.iter().enumerate() {
+        let r = &row.report;
+        out.push_str(&format!(
+            "    {{\"scheme\": \"{}\", \"workers\": {}, \"k\": {}, \"throughput_rps\": {:.1}, \
+             \"p50_ms\": {:.2}, \"p99_ms\": {:.2}, \"completed\": {}, \"failed\": {}}}{}\n",
+            row.name,
+            row.workers,
+            row.k,
+            r.throughput,
+            r.latency.p50 * 1e3,
+            r.latency.p99 * 1e3,
+            r.completed,
+            r.failed,
+            if i + 1 < schemes.len() { "," } else { "" }
         ));
     }
     out.push_str("  ],\n");

@@ -2,8 +2,10 @@
 //! Chebyshev nodes, Berrut rational interpolation, the `(K,S,E)` code with
 //! its linear encoder/decoder, the Berlekamp–Welch-style rational
 //! error-locator (Algorithm 1), the per-class majority-vote locator
-//! (Algorithm 2), the replication baseline codec, and the closed-form
-//! worker-count/overhead comparisons.
+//! (Algorithm 2), the replication baseline codec, the closed-form
+//! worker-count/overhead comparisons — and the [`serving::ServingScheme`]
+//! contract that packages each strategy (ApproxIFER / replication /
+//! ParM-proxy / uncoded) for the scheme-agnostic serving engine.
 
 pub mod analysis;
 pub mod berrut;
@@ -11,10 +13,15 @@ pub mod chebyshev;
 pub mod locator;
 pub mod replication;
 pub mod scheme;
+pub mod serving;
 pub mod theory;
 pub mod vote;
 
 pub use locator::{locate, LocatorMethod};
 pub use replication::ReplicationParams;
 pub use scheme::{ApproxIferCode, CodeParams};
+pub use serving::{
+    locate_and_decode, verified_locate_and_decode, verify_residual, CollectPolicy, ParmProxy,
+    Replication, SchemeDecode, ServingScheme, Uncoded, VerifyPolicy, VerifyReport,
+};
 pub use vote::{locate_by_vote, VoteOutcome};

@@ -6,8 +6,6 @@
 //! vote — hence the paper's `(2E+1)·K` worker count that ApproxIFER's
 //! `2K+2E` undercuts.
 
-use crate::tensor::Tensor;
-
 /// Replication parameters.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ReplicationParams {
@@ -22,10 +20,14 @@ impl ReplicationParams {
         ReplicationParams { k, s, e }
     }
 
-    /// Copies per query: `max(S+1, 2E+1)` — `S+1` first-reply copies cover
-    /// stragglers; Byzantine tolerance needs a `2E+1` majority.
+    /// Copies per query: `S + 2E + 1`. The decoder needs a `2E+1` quorum
+    /// per query (a bare majority under ≤E corruptions; first-reply when
+    /// `E = 0`), and covering `S` stragglers *on top of* that quorum takes
+    /// `S` spare copies — `max(S+1, 2E+1)` would silently collapse the
+    /// straggler budget to `max(S−2E, 0)` whenever `E > 0`. Reduces to the
+    /// paper's `S+1` (straggler-only) and `2E+1` (Byzantine-only) counts.
     pub fn copies(&self) -> usize {
-        (self.s + 1).max(2 * self.e + 1)
+        self.s + 2 * self.e + 1
     }
 
     /// Total workers (paper: `(2E+1)·K` in the Byzantine case).
@@ -51,27 +53,33 @@ impl ReplicationParams {
     }
 }
 
-/// Decode one query's replies by exact-majority vote on the payloads.
-/// With honest replicas the payloads are bit-identical; Byzantine replies
-/// differ, so an exact-match vote with `2E+1` replies and ≤E corruptions
-/// always yields a correct majority. Returns the majority payload.
-pub fn majority_payload(replies: &[&Tensor]) -> Tensor {
+/// Decode one query's replies by exact-majority vote on the payloads:
+/// position (and vote count) of the majority payload among `replies`, ties
+/// broken by first occurrence. With honest replicas the payloads are
+/// bit-identical; Byzantine replies differ, so an approximate-match vote
+/// (f32 bit-wobble tolerant) with `2E+1` replies and ≤E corruptions always
+/// yields a correct majority.
+pub fn majority_position(replies: &[&[f32]]) -> (usize, usize) {
     assert!(!replies.is_empty(), "majority over zero replies");
     let mut best_idx = 0;
     let mut best_count = 0;
     for (i, a) in replies.iter().enumerate() {
-        let count = replies.iter().filter(|b| payload_eq(a, b)).count();
+        let count = replies.iter().filter(|b| slice_eq(a, b)).count();
         if count > best_count {
             best_count = count;
             best_idx = i;
         }
     }
-    replies[best_idx].clone()
+    (best_idx, best_count)
 }
 
-fn payload_eq(a: &Tensor, b: &Tensor) -> bool {
-    a.shape() == b.shape()
-        && a.data().iter().zip(b.data()).all(|(x, y)| (x - y).abs() <= 1e-6 * (1.0 + x.abs()))
+/// Replica-payload approximate equality — the single tolerance shared by
+/// the majority vote and the serving scheme's agreement/flagging pass
+/// (tuning one without the other would let a reply win the vote while
+/// being flagged Byzantine).
+pub(crate) fn slice_eq(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len()
+        && a.iter().zip(b).all(|(x, y)| (x - y).abs() <= 1e-6 * (1.0 + x.abs()))
 }
 
 #[cfg(test)]
@@ -112,30 +120,30 @@ mod tests {
         assert_eq!(r.copies(), 3);
         let r = ReplicationParams::new(4, 0, 3);
         assert_eq!(r.copies(), 7);
+        // Mixed budget: the 2E+1 quorum plus S spares — S stragglers and
+        // E Byzantine workers are tolerated *simultaneously*.
         let r = ReplicationParams::new(4, 3, 1);
-        assert_eq!(r.copies(), 4); // S+1=4 > 2E+1=3
+        assert_eq!(r.copies(), 6);
     }
 
     #[test]
     fn majority_defeats_minority_corruption() {
         forall("replication-majority", 40, |g| {
             let e = g.usize_in(1, 3);
-            let honest = Tensor::from_vec(&[4], vec![0.1, 0.2, 0.3, 0.4]);
-            let mut replies: Vec<Tensor> = Vec::new();
+            let honest: Vec<f32> = vec![0.1, 0.2, 0.3, 0.4];
+            let mut replies: Vec<Vec<f32>> = Vec::new();
             for i in 0..(2 * e + 1) {
                 if i < e {
                     // Byzantine copies: distinct random garbage.
-                    replies.push(Tensor::from_vec(
-                        &[4],
-                        (0..4).map(|_| g.rng().f32() * 100.0 + i as f32).collect(),
-                    ));
+                    replies.push((0..4).map(|_| g.rng().f32() * 100.0 + i as f32).collect());
                 } else {
                     replies.push(honest.clone());
                 }
             }
-            let refs: Vec<&Tensor> = replies.iter().collect();
-            let out = majority_payload(&refs);
-            assert_eq!(out, honest);
+            let refs: Vec<&[f32]> = replies.iter().map(|r| &r[..]).collect();
+            let (winner, votes) = majority_position(&refs);
+            assert_eq!(refs[winner], &honest[..]);
+            assert!(votes >= e + 1, "honest majority undercounted: {votes}");
         });
     }
 }

@@ -9,6 +9,7 @@
 //! fastest-set patterns repeat under stable worker latency distributions.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
 use crate::tensor::Tensor;
@@ -85,9 +86,24 @@ pub struct ApproxIferCode {
     beta: Vec<f64>,
     /// Encode matrix, row-major `(N+1) × K`: `w_enc[i*K + j] = ℓ_j(β_i)`.
     w_enc: Vec<f32>,
-    /// Memoized decode matrices keyed by the sorted available worker set.
-    decode_cache: Mutex<HashMap<Vec<usize>, std::sync::Arc<Vec<f32>>>>,
+    /// Memoized decode matrices keyed by the sorted available worker set,
+    /// with per-entry hit counts driving the bounded eviction.
+    decode_cache: Mutex<HashMap<Vec<usize>, CacheEntry>>,
+    /// Entries evicted so far; drained into `ServingMetrics` by the scheme
+    /// decode path ([`ApproxIferCode::take_cache_evictions`]).
+    cache_evictions: AtomicU64,
 }
+
+struct CacheEntry {
+    mat: std::sync::Arc<Vec<f32>>,
+    hits: u64,
+}
+
+/// Decode-matrix cache capacity. Fastest-set patterns repeat under stable
+/// worker latency distributions, but adversarial churn can touch
+/// arbitrarily many availability sets — cap the map and evict the cold
+/// half when it fills.
+const DECODE_CACHE_CAP: usize = 4096;
 
 impl ApproxIferCode {
     pub fn new(params: CodeParams) -> ApproxIferCode {
@@ -105,6 +121,7 @@ impl ApproxIferCode {
             beta,
             w_enc,
             decode_cache: Mutex::new(HashMap::new()),
+            cache_evictions: AtomicU64::new(0),
         }
     }
 
@@ -174,8 +191,9 @@ impl ApproxIferCode {
     /// keyed to original worker indices (paper eq. (10)). Memoized.
     pub fn decode_matrix(&self, avail: &[usize]) -> std::sync::Arc<Vec<f32>> {
         debug_assert!(avail.windows(2).all(|w| w[0] < w[1]), "avail must be sorted unique");
-        if let Some(hit) = self.decode_cache.lock().unwrap().get(avail) {
-            return hit.clone();
+        if let Some(entry) = self.decode_cache.lock().unwrap().get_mut(avail) {
+            entry.hits += 1;
+            return entry.mat.clone();
         }
         let nodes: Vec<f64> = avail.iter().map(|&i| self.beta[i]).collect();
         let signs: Vec<i32> = avail.iter().map(|&i| i as i32).collect();
@@ -187,13 +205,35 @@ impl ApproxIferCode {
         }
         let arc = std::sync::Arc::new(d);
         let mut cache = self.decode_cache.lock().unwrap();
-        // Unbounded growth guard: fastest-set patterns repeat, but under
-        // adversarial churn cap the cache.
-        if cache.len() > 4096 {
-            cache.clear();
+        if cache.len() >= DECODE_CACHE_CAP && !cache.contains_key(avail) {
+            // Bounded eviction that keeps hot entries: rank by hit count,
+            // drop the cold half, and halve the survivors' counts so stale
+            // heat ages out instead of pinning entries forever.
+            let mut entries: Vec<(Vec<usize>, CacheEntry)> = cache.drain().collect();
+            let keep = entries.len() / 2;
+            entries.select_nth_unstable_by(keep, |a, b| b.1.hits.cmp(&a.1.hits));
+            let evicted = (entries.len() - keep) as u64;
+            entries.truncate(keep);
+            self.cache_evictions.fetch_add(evicted, Ordering::Relaxed);
+            for (key, mut entry) in entries {
+                entry.hits /= 2;
+                cache.insert(key, entry);
+            }
         }
-        cache.insert(avail.to_vec(), arc.clone());
+        cache.insert(avail.to_vec(), CacheEntry { mat: arc.clone(), hits: 0 });
         arc
+    }
+
+    /// Decode-matrix cache entries currently memoized.
+    pub fn decode_cache_len(&self) -> usize {
+        self.decode_cache.lock().unwrap().len()
+    }
+
+    /// Drain the eviction counter (returns evictions since the last call).
+    /// The serving path adds the drained count to
+    /// `ServingMetrics::decode_cache_evictions`.
+    pub fn take_cache_evictions(&self) -> u64 {
+        self.cache_evictions.swap(0, Ordering::Relaxed)
     }
 
     /// Decode: recover the `K` approximate predictions from coded
@@ -399,6 +439,43 @@ mod tests {
         let a = code.decode_matrix(&avail);
         let b = code.decode_matrix(&avail);
         assert!(std::sync::Arc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn decode_cache_eviction_is_bounded_and_keeps_hot_entries() {
+        // A wide code gives plenty of distinct availability pairs to churn
+        // the cache past its cap.
+        let code = ApproxIferCode::new(CodeParams::new(2, 119, 0));
+        let nw = code.params().num_workers();
+        let hot = vec![0usize, 1];
+        let hot_mat = code.decode_matrix(&hot);
+        // Heat up the hot entry so eviction must spare it.
+        for _ in 0..64 {
+            code.decode_matrix(&hot);
+        }
+        // Churn: enough distinct pairs to overflow the 4096-entry cap.
+        let mut inserted = 1usize;
+        'outer: for i in 0..nw {
+            for j in (i + 1)..nw {
+                if (i, j) == (0, 1) {
+                    continue;
+                }
+                code.decode_matrix(&[i, j]);
+                inserted += 1;
+                if inserted > 4500 {
+                    break 'outer;
+                }
+            }
+        }
+        assert!(code.decode_cache_len() < 4096, "cache unbounded: {}", code.decode_cache_len());
+        assert!(code.take_cache_evictions() >= 2048, "eviction never fired");
+        assert_eq!(code.take_cache_evictions(), 0, "drain must reset the counter");
+        // The hot entry survived the eviction pass (same memoized Arc).
+        let again = code.decode_matrix(&hot);
+        assert!(
+            std::sync::Arc::ptr_eq(&hot_mat, &again),
+            "hot entry was evicted despite its hit count"
+        );
     }
 
     #[test]

@@ -1,0 +1,954 @@
+//! The serving-scheme contract: every redundancy strategy the system can
+//! serve with — ApproxIFER's Berrut code, proactive replication, the
+//! ParM-proxy parity model and the uncoded passthrough — expressed as one
+//! trait the scheme-agnostic [`crate::coordinator::Service`] is generic
+//! over.
+//!
+//! A scheme owns the *math* of redundancy; the coordinator owns the
+//! *mechanics* of serving. The split:
+//!
+//! * [`ServingScheme::encode_into`] — K query payloads → one task payload
+//!   per worker (the paper's eq. (4)–(8) for ApproxIFER; copies for
+//!   replication; queries + scaled sum for ParM; identity for uncoded).
+//! * [`ServingScheme::collect_policy`] — when a group's reply collection is
+//!   complete, expressed as a slot quota the reply router enforces
+//!   ([`CollectPolicy`]): "any fastest `wait_for`" for the coded schemes,
+//!   "`need` copies of every query" for replication.
+//! * [`ServingScheme::decode`] — collected replies → K predictions, with
+//!   Byzantine location (Algorithm 2) and the optional verification hook:
+//!   re-encode-residual checking for ApproxIFER, majority-agreement
+//!   checking for replication, `None` where no redundancy remains to
+//!   cross-check (uncoded, ParM).
+//! * Overhead/tolerance accounting ([`ServingScheme::overhead`],
+//!   [`ServingScheme::stragglers_tolerated`],
+//!   [`ServingScheme::byzantine_tolerated`]) — the paper's comparison
+//!   tables fall out of the trait.
+//!
+//! Because every scheme runs through the same `Service`, all of them get
+//! multi-group concurrency, named fault profiles, verified decode with the
+//! escalation ladder, and identical [`crate::metrics::ServingMetrics`] —
+//! the fair-measurement requirement behind the paper's Figures 3–11.
+
+use anyhow::{bail, Result};
+
+use crate::metrics::ServingMetrics;
+
+use super::locator::LocatorMethod;
+use super::replication::{majority_position, slice_eq, ReplicationParams};
+use super::scheme::ApproxIferCode;
+use super::vote::locate_by_vote;
+
+// ---------------------------------------------------------------------------
+// Collection policy
+// ---------------------------------------------------------------------------
+
+/// When is a group's reply collection complete? Every scheme reduces to a
+/// slot quota: worker `w` feeds slot `slots[w]`, and the group is complete
+/// once every slot has at least `need` successful replies.
+///
+/// * Fastest-subset collection (ApproxIFER, ParM, uncoded): a single slot
+///   containing every worker with `need = wait_for`.
+/// * Per-query quorums (replication): slot = query index, `need = 1` under
+///   stragglers-only or `2E+1` for a Byzantine majority.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CollectPolicy {
+    /// `slots[w]` is the slot worker `w`'s reply counts toward.
+    pub slots: Vec<usize>,
+    /// Successful replies required per slot.
+    pub need: usize,
+}
+
+impl CollectPolicy {
+    /// Single-slot policy: complete after any `wait_for` distinct replies.
+    pub fn fastest(num_workers: usize, wait_for: usize) -> CollectPolicy {
+        CollectPolicy { slots: vec![0; num_workers], need: wait_for.min(num_workers).max(1) }
+    }
+
+    /// Per-slot quorum policy.
+    pub fn per_slot(slots: Vec<usize>, need: usize) -> CollectPolicy {
+        assert!(need >= 1, "collect policy needs at least one reply per slot");
+        CollectPolicy { slots, need }
+    }
+
+    pub fn num_workers(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn num_slots(&self) -> usize {
+        self.slots.iter().max().map_or(0, |&m| m + 1)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Verification policy / report (shared by all schemes)
+// ---------------------------------------------------------------------------
+
+/// Decode-verification policy. For ApproxIFER: after decoding, re-encode
+/// the decoded `Ŷ` at the decode set's evaluation points and compare
+/// against the replies the decode consumed. For replication: check the
+/// majority margin of every per-query vote. Schemes with no residual
+/// redundancy (uncoded, ParM) report `None` regardless of policy.
+#[derive(Clone, Copy, Debug)]
+pub struct VerifyPolicy {
+    pub enabled: bool,
+    /// Max allowed residual. For ApproxIFER it is relative to `1 +` the
+    /// median node peak of `|Ỹ|` over the decode set (see
+    /// [`verify_residual`]); for replication it is the max tolerated
+    /// disagreeing-vote fraction per query.
+    pub tol: f64,
+}
+
+impl VerifyPolicy {
+    pub fn off() -> VerifyPolicy {
+        VerifyPolicy { enabled: false, tol: f64::INFINITY }
+    }
+
+    pub fn on(tol: f64) -> VerifyPolicy {
+        VerifyPolicy { enabled: true, tol }
+    }
+}
+
+impl Default for VerifyPolicy {
+    fn default() -> Self {
+        VerifyPolicy::off()
+    }
+}
+
+/// What decode verification concluded for one group.
+#[derive(Clone, Copy, Debug)]
+pub struct VerifyReport {
+    /// Worst residual (scheme-specific normalization, see [`VerifyPolicy`]).
+    pub residual: f64,
+    pub passed: bool,
+    /// Whether any escalation rung (full-set decode / homogeneous locator)
+    /// ran.
+    pub escalated: bool,
+}
+
+/// Outcome of one scheme decode.
+pub struct SchemeDecode {
+    /// K prediction payloads, in query order.
+    pub predictions: Vec<Vec<f32>>,
+    /// Worker indices whose replies were consumed by the decode.
+    pub decode_set: Vec<usize>,
+    /// Worker indices flagged Byzantine.
+    pub flagged: Vec<usize>,
+    /// Verification report (`None` when verification is off or the scheme
+    /// has no redundancy left to cross-check).
+    pub verify: Option<VerifyReport>,
+}
+
+// ---------------------------------------------------------------------------
+// The trait
+// ---------------------------------------------------------------------------
+
+/// A serving strategy the scheme-agnostic [`crate::coordinator::Service`]
+/// can run: the full contract from encoding through verified decode, plus
+/// worker/overhead accounting.
+pub trait ServingScheme: Send + Sync {
+    /// Short stable name (metrics rows, bench output).
+    fn name(&self) -> &str;
+
+    /// `K`: queries per group.
+    fn group_size(&self) -> usize;
+
+    /// Worker-pool size the scheme encodes for.
+    fn num_workers(&self) -> usize;
+
+    /// Stragglers tolerated without losing the group. Fidelity of the
+    /// tolerance is scheme-specific: replication absorbs them exactly,
+    /// ApproxIFER up to the Berrut approximation, and ParM serves the lost
+    /// slot via its *approximate* proxy reconstruction (degraded for
+    /// nonlinear models — the very gap Figures 3/5/6 measure).
+    fn stragglers_tolerated(&self) -> usize;
+
+    /// Byzantine workers tolerated (located and excluded, or outvoted).
+    fn byzantine_tolerated(&self) -> usize;
+
+    /// Resource overhead = workers / queries.
+    fn overhead(&self) -> f64 {
+        self.num_workers() as f64 / self.group_size() as f64
+    }
+
+    /// Reply-collection policy for the router. Default: any fastest
+    /// `num_workers` replies (wait for everyone); schemes override.
+    fn collect_policy(&self) -> CollectPolicy {
+        CollectPolicy::fastest(self.num_workers(), self.num_workers())
+    }
+
+    /// Encode a K-group into one payload per worker. `queries` has exactly
+    /// `group_size()` equal-length payloads; `out` has `num_workers()`
+    /// buffers which are cleared and refilled (steady-state path: no
+    /// allocation once buffers reach payload size).
+    fn encode_into(&self, queries: &[&[f32]], out: &mut [Vec<f32>]);
+
+    /// Locate + decode (+ verify under `policy`) one collected group.
+    /// `replies[w]` is worker `w`'s payload, `None` if missing/errored.
+    fn decode(
+        &self,
+        replies: &[Option<Vec<f32>>],
+        policy: VerifyPolicy,
+        metrics: &ServingMetrics,
+    ) -> Result<SchemeDecode>;
+}
+
+// ---------------------------------------------------------------------------
+// ApproxIFER (paper §3): the Berrut-coded scheme
+// ---------------------------------------------------------------------------
+
+impl ServingScheme for ApproxIferCode {
+    fn name(&self) -> &str {
+        "approxifer"
+    }
+
+    fn group_size(&self) -> usize {
+        self.params().k
+    }
+
+    fn num_workers(&self) -> usize {
+        self.params().num_workers()
+    }
+
+    fn stragglers_tolerated(&self) -> usize {
+        self.params().s
+    }
+
+    fn byzantine_tolerated(&self) -> usize {
+        self.params().e
+    }
+
+    fn overhead(&self) -> f64 {
+        self.params().overhead()
+    }
+
+    fn collect_policy(&self) -> CollectPolicy {
+        CollectPolicy::fastest(self.params().num_workers(), self.params().wait_for())
+    }
+
+    fn encode_into(&self, queries: &[&[f32]], out: &mut [Vec<f32>]) {
+        // The inherent SAXPY encoder (same name resolves to the inherent
+        // method, which takes precedence over the trait's).
+        ApproxIferCode::encode_into(self, queries, out);
+    }
+
+    fn decode(
+        &self,
+        replies: &[Option<Vec<f32>>],
+        policy: VerifyPolicy,
+        metrics: &ServingMetrics,
+    ) -> Result<SchemeDecode> {
+        let (predictions, decode_set, flagged, verify) =
+            verified_locate_and_decode(self, LocatorMethod::Pinned, replies, policy, metrics)?;
+        // Drain decode-matrix cache evictions into the observing service's
+        // metrics (the code object may be shared; counts land with whoever
+        // decodes next).
+        let evicted = self.take_cache_evictions();
+        if evicted > 0 {
+            metrics.decode_cache_evictions.add(evicted);
+        }
+        Ok(SchemeDecode { predictions, decode_set, flagged, verify })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Replication (paper §5): S + 2E + 1 copies per query
+// ---------------------------------------------------------------------------
+
+/// Proactive replication: each query goes to `S + 2E + 1` workers — a
+/// `2E+1` quorum (first reply when `E = 0`) plus `S` straggler spares;
+/// first reply wins under stragglers, exact-majority vote under Byzantine
+/// threat. Attains base accuracy but needs `(2E+1)·K` workers where
+/// ApproxIFER needs `2K+2E`.
+pub struct Replication {
+    params: ReplicationParams,
+}
+
+impl Replication {
+    pub fn new(k: usize, s: usize, e: usize) -> Replication {
+        Replication { params: ReplicationParams::new(k, s, e) }
+    }
+
+    pub fn params(&self) -> ReplicationParams {
+        self.params
+    }
+
+    /// Successful replies needed per query: 1 under stragglers-only, a
+    /// `2E+1` quorum under Byzantine threat.
+    fn need(&self) -> usize {
+        if self.params.e == 0 {
+            1
+        } else {
+            2 * self.params.e + 1
+        }
+    }
+}
+
+impl ServingScheme for Replication {
+    fn name(&self) -> &str {
+        "replication"
+    }
+
+    fn group_size(&self) -> usize {
+        self.params.k
+    }
+
+    fn num_workers(&self) -> usize {
+        self.params.num_workers()
+    }
+
+    fn stragglers_tolerated(&self) -> usize {
+        // A straggler is absorbed while every query keeps `need` live
+        // copies.
+        self.params.copies() - self.need()
+    }
+
+    fn byzantine_tolerated(&self) -> usize {
+        self.params.e
+    }
+
+    fn overhead(&self) -> f64 {
+        self.params.overhead()
+    }
+
+    fn collect_policy(&self) -> CollectPolicy {
+        let p = self.params;
+        let slots: Vec<usize> = (0..p.num_workers()).map(|w| p.assignment_of(w).0).collect();
+        CollectPolicy::per_slot(slots, self.need())
+    }
+
+    fn encode_into(&self, queries: &[&[f32]], out: &mut [Vec<f32>]) {
+        let p = self.params;
+        assert_eq!(queries.len(), p.k);
+        assert_eq!(out.len(), p.num_workers());
+        for (w, buf) in out.iter_mut().enumerate() {
+            let (q, _copy) = p.assignment_of(w);
+            buf.clear();
+            buf.extend_from_slice(queries[q]);
+        }
+    }
+
+    fn decode(
+        &self,
+        replies: &[Option<Vec<f32>>],
+        policy: VerifyPolicy,
+        metrics: &ServingMetrics,
+    ) -> Result<SchemeDecode> {
+        let p = self.params;
+        let t0 = std::time::Instant::now();
+        let mut predictions = Vec::with_capacity(p.k);
+        let mut decode_set = Vec::new();
+        let mut flagged = Vec::new();
+        // Worst disagreement fraction across queries (verification signal).
+        let mut worst_residual = 0.0f64;
+        let mut verified_ok = true;
+        for q in 0..p.k {
+            // This query's live copies, in worker order (deterministic).
+            let mut workers = Vec::with_capacity(p.copies());
+            for c in 0..p.copies() {
+                let w = p.worker_for(q, c);
+                if replies[w].is_some() {
+                    workers.push(w);
+                }
+            }
+            if workers.is_empty() {
+                bail!("replication: query {q} has no surviving replies");
+            }
+            if self.need() == 1 {
+                // Stragglers-only: any copy serves (honest copies are
+                // bit-identical).
+                predictions.push(replies[workers[0]].clone().unwrap());
+                decode_set.push(workers[0]);
+                continue;
+            }
+            // Byzantine quorum: exact-majority vote over the live copies.
+            let refs: Vec<&[f32]> =
+                workers.iter().map(|&w| replies[w].as_deref().unwrap()).collect();
+            let (winner, votes) = majority_position(&refs);
+            predictions.push(refs[winner].to_vec());
+            for (i, &w) in workers.iter().enumerate() {
+                if slice_eq(refs[winner], refs[i]) {
+                    decode_set.push(w);
+                } else {
+                    flagged.push(w);
+                }
+            }
+            let disagree = 1.0 - votes as f64 / refs.len() as f64;
+            worst_residual = worst_residual.max(disagree);
+            // A true majority (≥ E+1 of 2E+1) guarantees correctness under
+            // the ≤E-corruption assumption.
+            if votes < p.e + 1 {
+                verified_ok = false;
+            }
+        }
+        metrics.byzantine_flagged.add(flagged.len() as u64);
+        metrics.decode_latency.record(t0.elapsed().as_secs_f64());
+        let verify = if policy.enabled && p.e > 0 {
+            // The pass criterion is the vote count alone: a winner with
+            // >= E+1 of the votes is provably correct under <=E corrupt
+            // copies, and that bound holds however many surplus copies
+            // happened to arrive. `policy.tol` is calibrated for Berrut
+            // re-encode residuals — comparing a vote *fraction* against it
+            // would fail in-envelope E>=3 quorums (e.g. 4-of-7 ~= 0.43
+            // disagreement). The reported residual (worst disagreeing
+            // fraction over the copies that arrived) is diagnostic only
+            // and, like `flagged`, depends on arrival timing when
+            // copies > need.
+            let passed = verified_ok;
+            if !passed {
+                metrics.verify_failures.inc();
+            }
+            Some(VerifyReport { residual: worst_residual, passed, escalated: false })
+        } else {
+            None
+        };
+        Ok(SchemeDecode { predictions, decode_set, flagged, verify })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ParM proxy (Kosaian et al., paper Figures 3/5/6 comparator)
+// ---------------------------------------------------------------------------
+
+/// The learned-parity-model system reconstructed with the untrained proxy
+/// `f_P(Σx) := K·f(Σx/K)` of the parity model's ideal `f_P(ΣX) = Σf(X)`
+/// (substitution documented in DESIGN.md §3). Workers `0..K` run `f` on
+/// the uncoded queries; worker `K` runs `f` on the pre-scaled parity input
+/// `Σx/K`. The decoder waits for the fastest `K` of `K+1` replies and, when
+/// an uncoded prediction is the missing one, reconstructs it as
+/// `K·f_parity − Σ_{i≠j} f(X_i)`.
+pub struct ParmProxy {
+    k: usize,
+}
+
+impl ParmProxy {
+    pub fn new(k: usize) -> ParmProxy {
+        assert!(k >= 1, "ParM needs K >= 1");
+        ParmProxy { k }
+    }
+}
+
+impl ServingScheme for ParmProxy {
+    fn name(&self) -> &str {
+        "parm-proxy"
+    }
+
+    fn group_size(&self) -> usize {
+        self.k
+    }
+
+    fn num_workers(&self) -> usize {
+        self.k + 1
+    }
+
+    fn stragglers_tolerated(&self) -> usize {
+        // Lossy tolerance: the lost prediction is reconstructed through
+        // the proxy, not recovered exactly (see the trait doc).
+        1
+    }
+
+    fn byzantine_tolerated(&self) -> usize {
+        0
+    }
+
+    fn collect_policy(&self) -> CollectPolicy {
+        CollectPolicy::fastest(self.k + 1, self.k)
+    }
+
+    fn encode_into(&self, queries: &[&[f32]], out: &mut [Vec<f32>]) {
+        let k = self.k;
+        assert_eq!(queries.len(), k);
+        assert_eq!(out.len(), k + 1);
+        let d = queries[0].len();
+        for (i, buf) in out.iter_mut().take(k).enumerate() {
+            buf.clear();
+            buf.extend_from_slice(queries[i]);
+        }
+        // Parity input: (Σ X_i) / K — the proxy evaluates f at the scaled
+        // sum.
+        let parity = &mut out[k];
+        parity.clear();
+        parity.resize(d, 0.0);
+        for q in queries {
+            for (acc, &x) in parity.iter_mut().zip(*q) {
+                *acc += x;
+            }
+        }
+        for v in parity.iter_mut() {
+            *v /= k as f32;
+        }
+    }
+
+    fn decode(
+        &self,
+        replies: &[Option<Vec<f32>>],
+        _policy: VerifyPolicy,
+        metrics: &ServingMetrics,
+    ) -> Result<SchemeDecode> {
+        let k = self.k;
+        let t0 = std::time::Instant::now();
+        let missing: Vec<usize> = (0..k).filter(|&i| replies[i].is_none()).collect();
+        if missing.len() > 1 {
+            bail!("ParM tolerates one lost prediction, {} are missing", missing.len());
+        }
+        let mut decode_set: Vec<usize> =
+            (0..=k).filter(|&i| replies[i].is_some()).collect();
+        let mut predictions: Vec<Vec<f32>> = Vec::with_capacity(k);
+        if missing.is_empty() {
+            // Every uncoded prediction arrived; the parity reply is unused.
+            for r in replies.iter().take(k) {
+                predictions.push(r.clone().unwrap());
+            }
+            decode_set.retain(|&i| i < k);
+        } else {
+            let lost = missing[0];
+            let Some(parity) = replies[k].as_deref() else {
+                bail!("ParM: prediction {lost} and the parity reply are both missing");
+            };
+            // Reconstruct: f(X_lost) ≈ K·f_parity − Σ_{i≠lost} f(X_i).
+            let mut lost_pred: Vec<f32> = parity.iter().map(|&v| v * k as f32).collect();
+            for (i, r) in replies.iter().take(k).enumerate() {
+                if i == lost {
+                    continue;
+                }
+                let r = r.as_deref().unwrap();
+                for (acc, &x) in lost_pred.iter_mut().zip(r) {
+                    *acc -= x;
+                }
+            }
+            for i in 0..k {
+                if i == lost {
+                    predictions.push(lost_pred.clone());
+                } else {
+                    predictions.push(replies[i].clone().unwrap());
+                }
+            }
+        }
+        metrics.decode_latency.record(t0.elapsed().as_secs_f64());
+        // No verification hook: the single parity unit is consumed by
+        // straggler tolerance, leaving no redundancy to cross-check.
+        Ok(SchemeDecode { predictions, decode_set, flagged: Vec::new(), verify: None })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Uncoded passthrough (the no-redundancy baseline)
+// ---------------------------------------------------------------------------
+
+/// No redundancy: K queries on K workers, wait for every reply. The
+/// tail-latency floor every redundant scheme is measured against.
+pub struct Uncoded {
+    k: usize,
+}
+
+impl Uncoded {
+    pub fn new(k: usize) -> Uncoded {
+        assert!(k >= 1, "uncoded needs K >= 1");
+        Uncoded { k }
+    }
+}
+
+impl ServingScheme for Uncoded {
+    fn name(&self) -> &str {
+        "uncoded"
+    }
+
+    fn group_size(&self) -> usize {
+        self.k
+    }
+
+    fn num_workers(&self) -> usize {
+        self.k
+    }
+
+    fn stragglers_tolerated(&self) -> usize {
+        0
+    }
+
+    fn byzantine_tolerated(&self) -> usize {
+        0
+    }
+
+    fn collect_policy(&self) -> CollectPolicy {
+        // Each worker is its own slot: every query needs its one reply.
+        CollectPolicy::per_slot((0..self.k).collect(), 1)
+    }
+
+    fn encode_into(&self, queries: &[&[f32]], out: &mut [Vec<f32>]) {
+        assert_eq!(queries.len(), self.k);
+        assert_eq!(out.len(), self.k);
+        for (buf, q) in out.iter_mut().zip(queries) {
+            buf.clear();
+            buf.extend_from_slice(q);
+        }
+    }
+
+    fn decode(
+        &self,
+        replies: &[Option<Vec<f32>>],
+        _policy: VerifyPolicy,
+        metrics: &ServingMetrics,
+    ) -> Result<SchemeDecode> {
+        let t0 = std::time::Instant::now();
+        let mut predictions = Vec::with_capacity(self.k);
+        for (i, r) in replies.iter().take(self.k).enumerate() {
+            match r {
+                Some(p) => predictions.push(p.clone()),
+                None => bail!("uncoded: worker {i}'s reply is missing (no redundancy)"),
+            }
+        }
+        metrics.decode_latency.record(t0.elapsed().as_secs_f64());
+        Ok(SchemeDecode {
+            predictions,
+            decode_set: (0..self.k).collect(),
+            flagged: Vec::new(),
+            verify: None,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ApproxIFER verified decode (moved from coordinator::pipeline so the
+// scheme trait can live in the coding layer)
+// ---------------------------------------------------------------------------
+
+/// Worst relative residual of the re-encoded decode against the replies it
+/// was decoded from: `max_i max_t |Σ_j ℓ_j(β_i)·Ŷ_j[t] − Ỹ_i[t]|` over the
+/// decode set, scaled by `1 +` the **median** across nodes of `max_t |Ỹ_i|`.
+/// The median (not the max) keys the scale to the honest signal level: up
+/// to `E` corrupted replies in the set cannot inflate the normalizer, so
+/// the relative residual grows without bound with the corruption magnitude
+/// instead of saturating at a geometry constant. All accumulation in f64.
+pub fn verify_residual(
+    code: &ApproxIferCode,
+    decode_set: &[usize],
+    replies: &[Option<Vec<f32>>],
+    predictions: &[Vec<f32>],
+) -> f64 {
+    let k = code.params().k;
+    let w = code.encode_matrix();
+    let mut node_peaks: Vec<f64> = decode_set
+        .iter()
+        .map(|&i| {
+            replies[i]
+                .as_deref()
+                .unwrap()
+                .iter()
+                .fold(0.0f64, |m, &v| m.max((v as f64).abs()))
+        })
+        .collect();
+    node_peaks.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let scale = node_peaks.get(node_peaks.len() / 2).copied().unwrap_or(0.0);
+    let mut worst = 0.0f64;
+    for &i in decode_set {
+        let y = replies[i].as_deref().unwrap();
+        let row = &w[i * k..(i + 1) * k];
+        for (t, &yt) in y.iter().enumerate() {
+            let z: f64 =
+                row.iter().zip(predictions).map(|(&wj, p)| wj as f64 * p[t] as f64).sum();
+            worst = worst.max((z - yt as f64).abs());
+        }
+    }
+    worst / (1.0 + scale)
+}
+
+/// [`locate_and_decode`] wrapped in the verification ladder's in-decode
+/// rungs. Decode with `method` and verify by re-encoding; on failure:
+///
+/// 1. decode over **every** available reply with no exclusions — when the
+///    locator cried wolf on an honest group (with `E > 0` it must always
+///    flag `E` workers, and excluding honest nodes can leave a badly
+///    conditioned subset whose decode is garbage), the full
+///    alternating-sign node set is well conditioned and self-consistent,
+///    while any real corruption keeps the residual large;
+/// 2. retry location with the homogeneous solver (no pinned-`Q₀` blind
+///    spot) and verify that decode.
+///
+/// The final rung — group redispatch — belongs to the coordinator, which
+/// owns the query payloads.
+pub fn verified_locate_and_decode(
+    code: &ApproxIferCode,
+    method: LocatorMethod,
+    replies: &[Option<Vec<f32>>],
+    policy: VerifyPolicy,
+    metrics: &ServingMetrics,
+) -> Result<(Vec<Vec<f32>>, Vec<usize>, Vec<usize>, Option<VerifyReport>)> {
+    let (predictions, decode_set, flagged) = locate_and_decode(code, method, replies, metrics)?;
+    if !policy.enabled {
+        return Ok((predictions, decode_set, flagged, None));
+    }
+    let residual = verify_residual(code, &decode_set, replies, &predictions);
+    let e = code.params().e;
+    if residual <= policy.tol {
+        if e > 0 {
+            metrics.locator_hits.inc();
+        }
+        let report = VerifyReport { residual, passed: true, escalated: false };
+        return Ok((predictions, decode_set, flagged, Some(report)));
+    }
+    metrics.verify_failures.inc();
+    if e > 0 {
+        metrics.locator_misses.inc();
+    }
+    // Only escalate when an alternative decode actually exists: with E = 0
+    // nothing was excluded and the locator has no say, so re-running would
+    // recompute the identical decode.
+    let can_full_set = !flagged.is_empty();
+    let can_relocate = e > 0 && method != LocatorMethod::Homogeneous;
+    if !can_full_set && !can_relocate {
+        let report = VerifyReport { residual, passed: false, escalated: false };
+        return Ok((predictions, decode_set, flagged, Some(report)));
+    }
+    metrics.verify_escalations.inc();
+    let mut best = (predictions, decode_set, flagged, residual);
+    // Rung: full-set decode (exclude nothing).
+    if can_full_set {
+        let avail: Vec<usize> = (0..replies.len()).filter(|&i| replies[i].is_some()).collect();
+        let payloads: Vec<&[f32]> =
+            avail.iter().map(|&i| replies[i].as_deref().unwrap()).collect();
+        let full = code.decode(&avail, &payloads);
+        let r_full = verify_residual(code, &avail, replies, &full);
+        if r_full <= policy.tol {
+            let report = VerifyReport { residual: r_full, passed: true, escalated: true };
+            return Ok((full, avail, Vec::new(), Some(report)));
+        }
+        if r_full < best.3 {
+            best = (full, avail, Vec::new(), r_full);
+        }
+    }
+    // Rung: homogeneous locator. Located against scratch metrics so the
+    // retry does not double-count `byzantine_flagged` (and the latency
+    // histograms) for the same group.
+    if can_relocate {
+        let scratch = ServingMetrics::new();
+        let (p2, d2, f2) =
+            locate_and_decode(code, LocatorMethod::Homogeneous, replies, &scratch)?;
+        let r2 = verify_residual(code, &d2, replies, &p2);
+        if r2 <= policy.tol {
+            let report = VerifyReport { residual: r2, passed: true, escalated: true };
+            return Ok((p2, d2, f2, Some(report)));
+        }
+        if r2 < best.3 {
+            best = (p2, d2, f2, r2);
+        }
+    }
+    // Every in-decode rung failed: hand the caller the best decode found
+    // (it may redispatch the group, or serve degraded).
+    let (p, d, f, r) = best;
+    let report = VerifyReport { residual: r, passed: false, escalated: true };
+    Ok((p, d, f, Some(report)))
+}
+
+/// The locate + decode tail of the ApproxIFER pipeline, shared verbatim
+/// between the synchronous [`crate::coordinator::GroupPipeline`] and the
+/// concurrent [`crate::coordinator::Service`] decode pool: given the
+/// per-worker replies of one collected group, vote out up to `E` Byzantine
+/// replies (Algorithm 2) and Berrut-decode the rest (eq. (10)-(11)).
+pub fn locate_and_decode(
+    code: &ApproxIferCode,
+    method: LocatorMethod,
+    replies: &[Option<Vec<f32>>],
+    metrics: &ServingMetrics,
+) -> Result<(Vec<Vec<f32>>, Vec<usize>, Vec<usize>)> {
+    let params = code.params();
+    let avail: Vec<usize> = (0..replies.len()).filter(|&i| replies[i].is_some()).collect();
+    if avail.is_empty() {
+        bail!("no replies to decode");
+    }
+
+    // --- locate Byzantine replies (Algorithm 2) -------------------------
+    let t0 = std::time::Instant::now();
+    let mut decode_set = avail.clone();
+    let mut flagged_workers = Vec::new();
+    if params.e > 0 {
+        let nodes: Vec<f64> = avail.iter().map(|&i| code.beta()[i]).collect();
+        let preds: Vec<&[f32]> = avail.iter().map(|&i| replies[i].as_deref().unwrap()).collect();
+        let outcome = locate_by_vote(&nodes, &preds, params.k, params.e, method)?;
+        flagged_workers = outcome.erroneous.iter().map(|&pos| avail[pos]).collect();
+        metrics.byzantine_flagged.add(flagged_workers.len() as u64);
+        decode_set = avail.iter().copied().filter(|i| !flagged_workers.contains(i)).collect();
+    }
+    metrics.locate_latency.record(t0.elapsed().as_secs_f64());
+
+    // --- decode (eq. (10)-(11)) -----------------------------------------
+    let t0 = std::time::Instant::now();
+    let payloads: Vec<&[f32]> =
+        decode_set.iter().map(|&i| replies[i].as_deref().unwrap()).collect();
+    let predictions = code.decode(&decode_set, &payloads);
+    metrics.decode_latency.record(t0.elapsed().as_secs_f64());
+    Ok((predictions, decode_set, flagged_workers))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::CodeParams;
+
+    fn smooth_queries(k: usize, d: usize) -> Vec<Vec<f32>> {
+        (0..k)
+            .map(|j| (0..d).map(|t| ((j as f32) * 0.23 + (t as f32) * 0.017).sin()).collect())
+            .collect()
+    }
+
+    fn encode(scheme: &dyn ServingScheme, queries: &[Vec<f32>]) -> Vec<Option<Vec<f32>>> {
+        let qrefs: Vec<&[f32]> = queries.iter().map(|q| &q[..]).collect();
+        let mut out: Vec<Vec<f32>> = vec![Vec::new(); scheme.num_workers()];
+        scheme.encode_into(&qrefs, &mut out);
+        out.into_iter().map(Some).collect()
+    }
+
+    #[test]
+    fn collect_policy_shapes() {
+        let p = CollectPolicy::fastest(5, 3);
+        assert_eq!(p.num_workers(), 5);
+        assert_eq!(p.num_slots(), 1);
+        assert_eq!(p.need, 3);
+        let p = CollectPolicy::per_slot(vec![0, 1, 0, 1], 2);
+        assert_eq!(p.num_slots(), 2);
+    }
+
+    #[test]
+    fn scheme_envelopes_match_paper_accounting() {
+        let apx = ApproxIferCode::new(CodeParams::new(12, 0, 2));
+        assert_eq!(ServingScheme::num_workers(&apx), 28);
+        assert_eq!(apx.byzantine_tolerated(), 2);
+        let rep = Replication::new(12, 0, 2);
+        assert_eq!(ServingScheme::num_workers(&rep), 60);
+        assert_eq!(rep.byzantine_tolerated(), 2);
+        assert!(ServingScheme::overhead(&apx) < ServingScheme::overhead(&rep));
+        let parm = ParmProxy::new(12);
+        assert_eq!(ServingScheme::num_workers(&parm), 13);
+        assert_eq!(parm.stragglers_tolerated(), 1);
+        let un = Uncoded::new(12);
+        assert_eq!(ServingScheme::overhead(&un), 1.0);
+        assert_eq!(un.stragglers_tolerated(), 0);
+    }
+
+    #[test]
+    fn replication_roundtrip_with_copy_loss() {
+        let scheme = Replication::new(3, 1, 0);
+        let queries = smooth_queries(3, 6);
+        let mut replies = encode(&scheme, &queries);
+        // Lose one copy of query 1: its other copy must serve it.
+        let lost = scheme.params().worker_for(1, 0);
+        replies[lost] = None;
+        let m = ServingMetrics::new();
+        let out = scheme.decode(&replies, VerifyPolicy::off(), &m).unwrap();
+        assert_eq!(out.predictions.len(), 3);
+        for (q, pred) in queries.iter().zip(&out.predictions) {
+            assert_eq!(&q[..], &pred[..], "replication must be exact");
+        }
+        assert!(out.verify.is_none());
+    }
+
+    #[test]
+    fn replication_majority_flags_minority() {
+        let scheme = Replication::new(2, 0, 1); // 3 copies each
+        let queries = smooth_queries(2, 5);
+        let mut replies = encode(&scheme, &queries);
+        // Corrupt one copy of query 0.
+        let bad = scheme.params().worker_for(0, 2);
+        for v in replies[bad].as_mut().unwrap().iter_mut() {
+            *v += 100.0;
+        }
+        let m = ServingMetrics::new();
+        let out = scheme.decode(&replies, VerifyPolicy::on(0.5), &m).unwrap();
+        assert_eq!(out.flagged, vec![bad]);
+        assert_eq!(&out.predictions[0][..], &queries[0][..]);
+        let v = out.verify.expect("verification ran");
+        assert!(v.passed, "2-of-3 majority must verify (residual {})", v.residual);
+        assert!(m.byzantine_flagged.get() >= 1);
+    }
+
+    #[test]
+    fn replication_large_quorum_verifies_despite_high_disagreement_fraction() {
+        // E=3: 7 copies, 3 corrupt → disagreeing fraction 3/7 exceeds any
+        // Berrut-style tolerance, but 4 votes ≥ E+1 proves the majority;
+        // verification must key on the vote count, not the fraction.
+        let scheme = Replication::new(1, 0, 3);
+        let queries = smooth_queries(1, 4);
+        let mut replies = encode(&scheme, &queries);
+        for c in 0..3 {
+            let w = scheme.params().worker_for(0, c);
+            for v in replies[w].as_mut().unwrap().iter_mut() {
+                *v += 50.0 + c as f32;
+            }
+        }
+        let m = ServingMetrics::new();
+        let out = scheme.decode(&replies, VerifyPolicy::on(0.4), &m).unwrap();
+        assert_eq!(&out.predictions[0][..], &queries[0][..]);
+        let v = out.verify.expect("verification ran");
+        assert!(v.passed, "4-of-7 majority must verify (residual {})", v.residual);
+        assert_eq!(out.flagged.len(), 3);
+    }
+
+    #[test]
+    fn parm_reconstructs_the_lost_prediction() {
+        // With f = id the proxy identity is exact: K·(Σx/K) − Σ_{i≠j} x_i
+        // = x_j.
+        let scheme = ParmProxy::new(4);
+        let queries = smooth_queries(4, 6);
+        let mut replies = encode(&scheme, &queries);
+        replies[2] = None; // lose uncoded prediction 2
+        let m = ServingMetrics::new();
+        let out = scheme.decode(&replies, VerifyPolicy::off(), &m).unwrap();
+        for (j, q) in queries.iter().enumerate() {
+            for t in 0..6 {
+                assert!(
+                    (out.predictions[j][t] - q[t]).abs() < 1e-4,
+                    "q{j} c{t}: {} vs {}",
+                    out.predictions[j][t],
+                    q[t]
+                );
+            }
+        }
+        assert!(out.verify.is_none());
+    }
+
+    #[test]
+    fn parm_two_losses_is_an_error() {
+        let scheme = ParmProxy::new(3);
+        let queries = smooth_queries(3, 4);
+        let mut replies = encode(&scheme, &queries);
+        replies[0] = None;
+        replies[1] = None;
+        let m = ServingMetrics::new();
+        assert!(scheme.decode(&replies, VerifyPolicy::off(), &m).is_err());
+    }
+
+    #[test]
+    fn uncoded_is_identity_and_fragile() {
+        let scheme = Uncoded::new(3);
+        let queries = smooth_queries(3, 4);
+        let replies = encode(&scheme, &queries);
+        let m = ServingMetrics::new();
+        let out = scheme.decode(&replies, VerifyPolicy::off(), &m).unwrap();
+        for (q, pred) in queries.iter().zip(&out.predictions) {
+            assert_eq!(&q[..], &pred[..]);
+        }
+        let mut broken = encode(&scheme, &queries);
+        broken[1] = None;
+        assert!(scheme.decode(&broken, VerifyPolicy::off(), &m).is_err());
+    }
+
+    #[test]
+    fn approxifer_scheme_decode_matches_direct_decode() {
+        let code = ApproxIferCode::new(CodeParams::new(4, 1, 0));
+        let queries = smooth_queries(4, 6);
+        let mut replies = encode(&code, &queries);
+        replies[2] = None; // one straggler within S=1
+        let m = ServingMetrics::new();
+        let out = ServingScheme::decode(&code, &replies, VerifyPolicy::off(), &m).unwrap();
+        assert_eq!(out.predictions.len(), 4);
+        assert!(!out.decode_set.contains(&2));
+        for (j, q) in queries.iter().enumerate() {
+            for t in 0..6 {
+                assert!(
+                    (out.predictions[j][t] - q[t]).abs() < 0.3,
+                    "q{j} c{t}: {} vs {}",
+                    out.predictions[j][t],
+                    q[t]
+                );
+            }
+        }
+    }
+}

@@ -48,6 +48,11 @@ pub fn approxifer_overhead(k: usize, s: usize, e: usize) -> f64 {
 /// base accuracy with probability `1/(K+1)` (no straggler hits an uncoded
 /// prediction) and its degraded accuracy otherwise, so
 /// `avg = base/(K+1) + worst·K/(K+1)`.
+///
+/// The worst-case accuracy is *measured* off the unified service's
+/// per-slot counts ([`crate::harness::AccuracyReport::slot_accuracy`]);
+/// the figure drivers derive the average-case column from it through this
+/// relation.
 pub fn parm_average_accuracy(base_acc: f64, worst_acc: f64, k: usize) -> f64 {
     (base_acc + k as f64 * worst_acc) / (k as f64 + 1.0)
 }

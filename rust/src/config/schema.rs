@@ -15,7 +15,13 @@ use super::parser::ConfigDoc;
 /// Fully resolved application config.
 #[derive(Clone, Debug)]
 pub struct AppConfig {
-    /// Code parameters (K, S, E).
+    /// Code parameters (K, S, E). Normally the configured triple verbatim;
+    /// the one exception is a K=1, S=0, E=0 passthrough deployment
+    /// (uncoded/parm), where S is stored as 1 to keep the coded-geometry
+    /// invariant `N = K+S−1 >= 1` — those strategies ignore S, and the
+    /// rewrite is logged. Report fault envelopes from the scheme
+    /// (`stragglers_tolerated`/`byzantine_tolerated`), not from this
+    /// triple.
     pub params: CodeParams,
     /// Serving strategy.
     pub strategy: Strategy,
@@ -112,13 +118,29 @@ impl AppConfig {
         if k == 0 {
             bail!("code.k must be >= 1");
         }
-        if e == 0 && s == 0 {
-            bail!("code must tolerate something: set code.s or code.e > 0");
-        }
-        cfg.params = CodeParams::new(k, s, e);
         if let Some(v) = doc.get_str("serving.strategy") {
             cfg.strategy = Strategy::parse(&v).map_err(|e| anyhow::anyhow!(e))?;
         }
+        // The coded strategies exist to tolerate faults; an (S=0, E=0)
+        // ApproxIFER or replication deployment is a misconfiguration. The
+        // passthrough baselines tolerate nothing by design.
+        if e == 0 && s == 0 && !matches!(cfg.strategy, Strategy::Uncoded | Strategy::ParmProxy) {
+            bail!("code must tolerate something: set code.s or code.e > 0");
+        }
+        // CodeParams models the coded geometry (N = K+S−1 >= 1). Only the
+        // passthrough baselines can reach here with K=1, S=0, E=0 — they
+        // ignore S entirely, so store S=1 to keep the triple constructible
+        // instead of rejecting a valid uncoded/parm deployment. Logged so
+        // the stored triple never silently diverges from the file.
+        let s_stored = if e == 0 && k + s < 2 { 1 } else { s };
+        if s_stored != s {
+            log::warn!(
+                "code.s stored as {s_stored} (configured {s}): K=1 passthrough deployments \
+                 need a constructible code triple; the {:?} strategy ignores S",
+                cfg.strategy
+            );
+        }
+        cfg.params = CodeParams::new(k, s_stored, e);
         if let Some(v) = doc.get_str("model.arch") {
             cfg.arch = v;
         }
@@ -169,7 +191,11 @@ impl AppConfig {
         }
         if let Some(v) = doc.get_str("faults.profile") {
             // Validate eagerly so a typo fails at startup, not mid-serve.
-            FaultProfile::parse(&v, cfg.params.num_workers(), cfg.seed)
+            // Sized against the *strategy's* worker count — replication
+            // fleets are larger than the ApproxIFER fleet for the same
+            // (K,S,E), and a mis-sized profile must fail here, not panic
+            // later.
+            FaultProfile::parse(&v, cfg.strategy.num_workers(cfg.params), cfg.seed)
                 .map_err(|e| anyhow::anyhow!("faults.profile: {e}"))?;
             cfg.fault_profile = Some(v);
         }

@@ -1,18 +1,24 @@
-//! Layer-3 coordinator — the paper's system contribution: the coded
-//! group pipeline (encode → fan-out → fastest-subset collect → locate →
-//! decode), the online batching service on top of it, and the replication /
-//! ParM-proxy baseline pipelines the paper compares against.
+//! Layer-3 coordinator — the paper's system contribution: the
+//! scheme-agnostic online serving engine ([`Service`], built through
+//! [`ServiceBuilder`]) that runs any [`crate::coding::ServingScheme`]
+//! (ApproxIFER, replication, ParM-proxy, uncoded) with identical batching,
+//! concurrency, fault profiles and metrics, plus the synchronous
+//! single-group [`GroupPipeline`] the experiment harness drives directly.
 
-pub mod baselines;
 pub mod pipeline;
 pub mod service;
 
-pub use baselines::{ParmProxyPipeline, ReplicationPipeline};
-pub use pipeline::{
-    locate_and_decode, verified_locate_and_decode, verify_residual, FaultPlan, GroupOutcome,
-    GroupPipeline, VerifyPolicy, VerifyReport,
+pub use crate::coding::{
+    locate_and_decode, verified_locate_and_decode, verify_residual, VerifyPolicy, VerifyReport,
 };
-pub use service::{PredictionHandle, Service, ServiceConfig};
+pub use pipeline::{FaultPlan, GroupOutcome, GroupPipeline};
+pub use service::{PredictionHandle, Service, ServiceBuilder};
+
+use std::sync::Arc;
+
+use crate::coding::{
+    ApproxIferCode, CodeParams, ParmProxy, Replication, ReplicationParams, ServingScheme, Uncoded,
+};
 
 /// Which serving strategy a deployment uses.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -23,6 +29,8 @@ pub enum Strategy {
     Replication,
     /// Learned-parity-model baseline (proxy; DESIGN.md §3).
     ParmProxy,
+    /// No-redundancy passthrough baseline.
+    Uncoded,
 }
 
 impl Strategy {
@@ -31,7 +39,36 @@ impl Strategy {
             "approxifer" => Ok(Strategy::ApproxIfer),
             "replication" => Ok(Strategy::Replication),
             "parm" | "parm-proxy" => Ok(Strategy::ParmProxy),
-            _ => Err(format!("unknown strategy '{s}' (approxifer|replication|parm)")),
+            "uncoded" | "none" => Ok(Strategy::Uncoded),
+            _ => Err(format!(
+                "unknown strategy '{s}' (approxifer|replication|parm|uncoded)"
+            )),
+        }
+    }
+
+    /// Instantiate the strategy's [`ServingScheme`] for the given code
+    /// parameters (`K` queries, `S` stragglers, `E` Byzantine — the
+    /// baselines use the subset of the triple they understand).
+    pub fn scheme(self, params: CodeParams) -> Arc<dyn ServingScheme> {
+        match self {
+            Strategy::ApproxIfer => Arc::new(ApproxIferCode::new(params)),
+            Strategy::Replication => Arc::new(Replication::new(params.k, params.s, params.e)),
+            Strategy::ParmProxy => Arc::new(ParmProxy::new(params.k)),
+            Strategy::Uncoded => Arc::new(Uncoded::new(params.k)),
+        }
+    }
+
+    /// Worker count the strategy needs for `params`, without building the
+    /// scheme (config validation path — avoids precomputing encoder
+    /// matrices just to size a fault profile).
+    pub fn num_workers(self, params: CodeParams) -> usize {
+        match self {
+            Strategy::ApproxIfer => params.num_workers(),
+            Strategy::Replication => {
+                ReplicationParams::new(params.k, params.s, params.e).num_workers()
+            }
+            Strategy::ParmProxy => params.k + 1,
+            Strategy::Uncoded => params.k,
         }
     }
 }
@@ -45,6 +82,17 @@ mod tests {
         assert_eq!(Strategy::parse("approxifer").unwrap(), Strategy::ApproxIfer);
         assert_eq!(Strategy::parse("replication").unwrap(), Strategy::Replication);
         assert_eq!(Strategy::parse("parm").unwrap(), Strategy::ParmProxy);
+        assert_eq!(Strategy::parse("uncoded").unwrap(), Strategy::Uncoded);
         assert!(Strategy::parse("nope").is_err());
+    }
+
+    #[test]
+    fn strategy_worker_counts_match_their_schemes() {
+        let params = CodeParams::new(8, 1, 0);
+        for s in
+            [Strategy::ApproxIfer, Strategy::Replication, Strategy::ParmProxy, Strategy::Uncoded]
+        {
+            assert_eq!(s.num_workers(params), s.scheme(params).num_workers(), "{s:?}");
+        }
     }
 }

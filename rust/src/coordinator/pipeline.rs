@@ -2,16 +2,21 @@
 //! (paper Fig. 4): encode a K-group, fan out to N+1 workers, collect the
 //! fastest subset, locate Byzantine replies, decode.
 //!
-//! This synchronous pipeline is driven either by the online
-//! [`crate::coordinator::service::Service`] (batcher thread) or directly by
-//! the experiment harness; both share exactly this code path.
+//! This synchronous single-group pipeline is driven directly by the
+//! experiment harness and the examples; the online
+//! [`crate::coordinator::service::Service`] shares the same
+//! locate/decode/verify tail through the ApproxIFER
+//! [`crate::coding::ServingScheme`] implementation.
 
 use std::collections::HashMap;
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
-use crate::coding::{locate_by_vote, ApproxIferCode, CodeParams, LocatorMethod};
+use crate::coding::{
+    verified_locate_and_decode, ApproxIferCode, CodeParams, LocatorMethod, VerifyPolicy,
+    VerifyReport,
+};
 use crate::metrics::ServingMetrics;
 use crate::workers::{ByzantineMode, WorkerPool, WorkerTask};
 
@@ -47,214 +52,14 @@ pub struct GroupOutcome {
     pub verify: Option<VerifyReport>,
 }
 
-/// Decode-verification policy: after decoding, re-encode the decoded `Ŷ` at
-/// the decode set's evaluation points and compare against the replies the
-/// decode consumed. Honest groups reproduce their replies to within the
-/// Berrut approximation error; a corrupted reply that slipped past the
-/// locator leaves a residual on the order of the corruption itself.
-#[derive(Clone, Copy, Debug)]
-pub struct VerifyPolicy {
-    pub enabled: bool,
-    /// Max allowed residual, relative to `1 +` the median node peak of
-    /// `|Ỹ|` over the decode set (see [`verify_residual`]).
-    pub tol: f64,
-}
-
-impl VerifyPolicy {
-    pub fn off() -> VerifyPolicy {
-        VerifyPolicy { enabled: false, tol: f64::INFINITY }
-    }
-
-    pub fn on(tol: f64) -> VerifyPolicy {
-        VerifyPolicy { enabled: true, tol }
-    }
-}
-
-impl Default for VerifyPolicy {
-    fn default() -> Self {
-        VerifyPolicy::off()
-    }
-}
-
-/// What decode verification concluded for one group.
-#[derive(Clone, Copy, Debug)]
-pub struct VerifyReport {
-    /// Worst re-encode residual (normalized as in [`verify_residual`]).
-    pub residual: f64,
-    pub passed: bool,
-    /// Whether any escalation rung (full-set decode / homogeneous locator)
-    /// ran.
-    pub escalated: bool,
-}
-
-/// Worst relative residual of the re-encoded decode against the replies it
-/// was decoded from: `max_i max_t |Σ_j ℓ_j(β_i)·Ŷ_j[t] − Ỹ_i[t]|` over the
-/// decode set, scaled by `1 +` the **median** across nodes of `max_t |Ỹ_i|`.
-/// The median (not the max) keys the scale to the honest signal level: up
-/// to `E` corrupted replies in the set cannot inflate the normalizer, so
-/// the relative residual grows without bound with the corruption magnitude
-/// instead of saturating at a geometry constant. All accumulation in f64.
-pub fn verify_residual(
-    code: &ApproxIferCode,
-    decode_set: &[usize],
-    replies: &[Option<Vec<f32>>],
-    predictions: &[Vec<f32>],
-) -> f64 {
-    let k = code.params().k;
-    let w = code.encode_matrix();
-    let mut node_peaks: Vec<f64> = decode_set
-        .iter()
-        .map(|&i| {
-            replies[i]
-                .as_deref()
-                .unwrap()
-                .iter()
-                .fold(0.0f64, |m, &v| m.max((v as f64).abs()))
-        })
-        .collect();
-    node_peaks.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let scale = node_peaks.get(node_peaks.len() / 2).copied().unwrap_or(0.0);
-    let mut worst = 0.0f64;
-    for &i in decode_set {
-        let y = replies[i].as_deref().unwrap();
-        let row = &w[i * k..(i + 1) * k];
-        for (t, &yt) in y.iter().enumerate() {
-            let z: f64 =
-                row.iter().zip(predictions).map(|(&wj, p)| wj as f64 * p[t] as f64).sum();
-            worst = worst.max((z - yt as f64).abs());
-        }
-    }
-    worst / (1.0 + scale)
-}
-
-/// [`locate_and_decode`] wrapped in the verification ladder's in-decode
-/// rungs. Decode with `method` and verify by re-encoding; on failure:
-///
-/// 1. decode over **every** available reply with no exclusions — when the
-///    locator cried wolf on an honest group (with `E > 0` it must always
-///    flag `E` workers, and excluding honest nodes can leave a badly
-///    conditioned subset whose decode is garbage), the full
-///    alternating-sign node set is well conditioned and self-consistent,
-///    while any real corruption keeps the residual large;
-/// 2. retry location with the homogeneous solver (no pinned-`Q₀` blind
-///    spot) and verify that decode.
-///
-/// The final rung — group redispatch — belongs to the coordinator, which
-/// owns the query payloads.
-pub fn verified_locate_and_decode(
-    code: &ApproxIferCode,
-    method: LocatorMethod,
-    replies: &[Option<Vec<f32>>],
-    policy: VerifyPolicy,
-    metrics: &ServingMetrics,
-) -> Result<(Vec<Vec<f32>>, Vec<usize>, Vec<usize>, Option<VerifyReport>)> {
-    let (predictions, decode_set, flagged) = locate_and_decode(code, method, replies, metrics)?;
-    if !policy.enabled {
-        return Ok((predictions, decode_set, flagged, None));
-    }
-    let residual = verify_residual(code, &decode_set, replies, &predictions);
-    let e = code.params().e;
-    if residual <= policy.tol {
-        if e > 0 {
-            metrics.locator_hits.inc();
-        }
-        let report = VerifyReport { residual, passed: true, escalated: false };
-        return Ok((predictions, decode_set, flagged, Some(report)));
-    }
-    metrics.verify_failures.inc();
-    if e > 0 {
-        metrics.locator_misses.inc();
-    }
-    // Only escalate when an alternative decode actually exists: with E = 0
-    // nothing was excluded and the locator has no say, so re-running would
-    // recompute the identical decode.
-    let can_full_set = !flagged.is_empty();
-    let can_relocate = e > 0 && method != LocatorMethod::Homogeneous;
-    if !can_full_set && !can_relocate {
-        let report = VerifyReport { residual, passed: false, escalated: false };
-        return Ok((predictions, decode_set, flagged, Some(report)));
-    }
-    metrics.verify_escalations.inc();
-    let mut best = (predictions, decode_set, flagged, residual);
-    // Rung: full-set decode (exclude nothing).
-    if can_full_set {
-        let avail: Vec<usize> = (0..replies.len()).filter(|&i| replies[i].is_some()).collect();
-        let payloads: Vec<&[f32]> =
-            avail.iter().map(|&i| replies[i].as_deref().unwrap()).collect();
-        let full = code.decode(&avail, &payloads);
-        let r_full = verify_residual(code, &avail, replies, &full);
-        if r_full <= policy.tol {
-            let report = VerifyReport { residual: r_full, passed: true, escalated: true };
-            return Ok((full, avail, Vec::new(), Some(report)));
-        }
-        if r_full < best.3 {
-            best = (full, avail, Vec::new(), r_full);
-        }
-    }
-    // Rung: homogeneous locator. Located against scratch metrics so the
-    // retry does not double-count `byzantine_flagged` (and the latency
-    // histograms) for the same group.
-    if can_relocate {
-        let scratch = ServingMetrics::new();
-        let (p2, d2, f2) =
-            locate_and_decode(code, LocatorMethod::Homogeneous, replies, &scratch)?;
-        let r2 = verify_residual(code, &d2, replies, &p2);
-        if r2 <= policy.tol {
-            let report = VerifyReport { residual: r2, passed: true, escalated: true };
-            return Ok((p2, d2, f2, Some(report)));
-        }
-        if r2 < best.3 {
-            best = (p2, d2, f2, r2);
-        }
-    }
-    // Every in-decode rung failed: hand the caller the best decode found
-    // (it may redispatch the group, or serve degraded).
-    let (p, d, f, r) = best;
-    let report = VerifyReport { residual: r, passed: false, escalated: true };
-    Ok((p, d, f, Some(report)))
-}
-
-/// The locate + decode tail of the pipeline, shared verbatim between the
-/// synchronous [`GroupPipeline`] and the concurrent
-/// [`crate::coordinator::Service`] decode pool: given the per-worker replies
-/// of one collected group, vote out up to `E` Byzantine replies
-/// (Algorithm 2) and Berrut-decode the rest (eq. (10)-(11)).
-pub fn locate_and_decode(
-    code: &ApproxIferCode,
-    method: LocatorMethod,
-    replies: &[Option<Vec<f32>>],
-    metrics: &ServingMetrics,
-) -> Result<(Vec<Vec<f32>>, Vec<usize>, Vec<usize>)> {
-    let params = code.params();
-    let avail: Vec<usize> = (0..replies.len()).filter(|&i| replies[i].is_some()).collect();
-    if avail.is_empty() {
-        bail!("no replies to decode");
-    }
-
-    // --- locate Byzantine replies (Algorithm 2) -------------------------
-    let t0 = Instant::now();
-    let mut decode_set = avail.clone();
-    let mut flagged_workers = Vec::new();
-    if params.e > 0 {
-        let nodes: Vec<f64> = avail.iter().map(|&i| code.beta()[i]).collect();
-        let preds: Vec<&[f32]> = avail.iter().map(|&i| replies[i].as_deref().unwrap()).collect();
-        let outcome = locate_by_vote(&nodes, &preds, params.k, params.e, method)?;
-        flagged_workers = outcome.erroneous.iter().map(|&pos| avail[pos]).collect();
-        metrics.byzantine_flagged.add(flagged_workers.len() as u64);
-        decode_set = avail.iter().copied().filter(|i| !flagged_workers.contains(i)).collect();
-    }
-    metrics.locate_latency.record(t0.elapsed().as_secs_f64());
-
-    // --- decode (eq. (10)-(11)) -----------------------------------------
-    let t0 = Instant::now();
-    let payloads: Vec<&[f32]> =
-        decode_set.iter().map(|&i| replies[i].as_deref().unwrap()).collect();
-    let predictions = code.decode(&decode_set, &payloads);
-    metrics.decode_latency.record(t0.elapsed().as_secs_f64());
-    Ok((predictions, decode_set, flagged_workers))
-}
-
 /// The coded-inference pipeline over a worker pool.
+///
+/// The locate/decode/verify tail — [`crate::coding::locate_and_decode`],
+/// [`crate::coding::verified_locate_and_decode`],
+/// [`crate::coding::verify_residual`] and the
+/// [`VerifyPolicy`]/[`VerifyReport`] types — lives in
+/// [`crate::coding::serving`] with the scheme contract; this synchronous
+/// pipeline and the concurrent service share exactly that code path.
 pub struct GroupPipeline {
     code: ApproxIferCode,
     method: LocatorMethod,
@@ -395,6 +200,7 @@ impl GroupPipeline {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coding::verify_residual;
     use crate::workers::{InferenceEngine, LinearMockEngine, WorkerPool, WorkerSpec};
     use std::sync::Arc;
 

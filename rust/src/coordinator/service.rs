@@ -1,29 +1,46 @@
-//! Online serving front: a dynamic batcher that groups incoming queries
-//! into `K`-groups (flushing on size or deadline) and keeps **multiple
-//! groups in flight at once**.
+//! The scheme-agnostic online serving engine: a dynamic batcher that
+//! groups incoming queries into `K`-groups (flushing on size or deadline)
+//! and keeps **multiple groups in flight at once**, generic over any
+//! [`ServingScheme`] (ApproxIFER, replication, ParM-proxy, uncoded). Every
+//! scheme gets the same batching, concurrency, named fault profiles,
+//! verified decode with the escalation ladder, and
+//! [`crate::metrics::ServingMetrics`] — the fair-measurement substrate the
+//! paper's comparisons rest on.
+//!
+//! Construction goes through one public entry point:
+//!
+//! ```ignore
+//! let service = Service::builder(Arc::new(ApproxIferCode::new(params)))
+//!     .engine(engine)
+//!     .fault_profile(FaultProfile::parse("byz-random:1:10", nw, seed)?)
+//!     .verify(VerifyPolicy::on(0.4))
+//!     .spawn()?;
+//! ```
+//!
+//! [`ServiceBuilder::spawn`] validates the configuration — scheme worker
+//! count vs. worker specs vs. fault-profile size — and returns `Err`
+//! instead of panicking mid-serve.
 //!
 //! Pipeline stages, each overlapping the others:
 //!
 //! * **Batcher** (this module's coordinator thread) — accumulates queries,
-//!   encodes a ready group and fans it out to the worker pool, then
-//!   immediately starts on the next group. A counting gate bounds the
-//!   number of dispatched-but-undecoded groups at
-//!   [`ServiceConfig::max_inflight`].
+//!   encodes a ready group via [`ServingScheme::encode_into`] and fans it
+//!   out to the worker pool, then immediately starts on the next group. A
+//!   counting gate bounds the number of dispatched-but-undecoded groups at
+//!   [`ServiceBuilder::max_inflight`].
 //! * **Reply router** ([`crate::workers::ReplyRouter`]) — demultiplexes the
-//!   pool's shared reply stream per group; the moment a group's fastest
-//!   subset has arrived it is handed to the decode pool. A straggling group
-//!   g keeps collecting in the background while groups g+1.. fan out and
-//!   complete — no head-of-line blocking.
-//! * **Decode pool** — [`ServiceConfig::decode_threads`] threads pulling
-//!   collected groups from a shared queue and running Byzantine location +
-//!   Berrut decode ([`crate::coordinator::pipeline::locate_and_decode`],
-//!   the exact code path the synchronous pipeline uses), so an expensive
-//!   locate on one group never stalls fan-out or decode of another. With
-//!   [`ServiceConfig::verify`] enabled each decode is checked by
-//!   re-encoding it at the decode set's evaluation points; failures climb
-//!   an escalation ladder — full-set no-exclusion decode, homogeneous
-//!   locator, then one re-encoded **redispatch** of the group, then
-//!   degraded delivery (observable via the
+//!   pool's shared reply stream per group under the scheme's
+//!   [`crate::coding::CollectPolicy`]; the moment a group's slot quotas are
+//!   met it is handed to the decode pool. A straggling group g keeps
+//!   collecting in the background while groups g+1.. fan out and complete —
+//!   no head-of-line blocking.
+//! * **Decode pool** — [`ServiceBuilder::decode_threads`] threads pulling
+//!   collected groups from a shared queue and running
+//!   [`ServingScheme::decode`] (Byzantine location + decode + the scheme's
+//!   verification hook), so an expensive locate on one group never stalls
+//!   fan-out or decode of another. A failed verification climbs the
+//!   escalation ladder's final rung here: one re-encoded **redispatch** of
+//!   the group, then degraded delivery (observable via the
 //!   `verify_failures`/`redispatches` counters).
 //!
 //! Clients get a oneshot-style receiver that resolves to the decoded
@@ -32,56 +49,61 @@
 //! id when they complete out of order — the TCP front-end relies on this.
 
 use std::collections::HashMap;
-use std::fmt;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
-use crate::coding::{ApproxIferCode, CodeParams, LocatorMethod};
+use crate::coding::{CollectPolicy, ServingScheme, VerifyPolicy};
 use crate::metrics::ServingMetrics;
 use crate::sim::faults::FaultProfile;
 use crate::workers::{
-    CollectedGroup, InferenceEngine, ReplyRouter, WorkerPool, WorkerSpec, WorkerTask,
+    CollectedGroup, InferenceEngine, LatencyModel, ReplyRouter, WorkerPool, WorkerSpec,
+    WorkerTask,
 };
 
-use super::pipeline::{verified_locate_and_decode, FaultPlan, VerifyPolicy};
+use super::pipeline::FaultPlan;
 
-/// Service configuration.
+/// Validated service tuning, fixed at spawn (internal — callers go through
+/// [`ServiceBuilder`]).
 #[derive(Clone)]
-pub struct ServiceConfig {
-    pub params: CodeParams,
-    /// Flush a partial group after this long.
-    pub flush_after: Duration,
-    /// Per-worker injected latency + fault behavior (all honest /
-    /// `LatencyModel::None` in production).
-    pub worker_specs: Vec<WorkerSpec>,
-    /// Decode verification (off by default; the serve binary enables it).
-    pub verify: VerifyPolicy,
-    pub seed: u64,
-    /// Groups that may be in flight (dispatched, not yet decoded) at once;
-    /// the batcher blocks dispatching beyond this. `1` reproduces the old
-    /// serial coordinator.
-    pub max_inflight: usize,
-    /// Threads in the locate/decode pool.
-    pub decode_threads: usize,
-    /// Per-group collection deadline (a group short of its fastest-subset
-    /// count past this errors out instead of stalling the service).
-    pub group_timeout: Duration,
-    /// Experiment hook: exact per-group fault plan keyed by group index
-    /// (1-based dispatch order). For fleet-wide behavior programs use
-    /// [`ServiceConfig::set_fault_profile`] instead.
-    pub fault_hook: Option<Arc<dyn Fn(u64) -> FaultPlan + Send + Sync>>,
+struct Tuning {
+    flush_after: Duration,
+    verify: VerifyPolicy,
+    seed: u64,
+    max_inflight: usize,
+    decode_threads: usize,
+    group_timeout: Duration,
+    fault_hook: Option<Arc<dyn Fn(u64) -> FaultPlan + Send + Sync>>,
 }
 
-impl ServiceConfig {
-    pub fn new(params: CodeParams) -> ServiceConfig {
-        ServiceConfig {
-            params,
+/// Builder for the online service — the single public way to start one.
+pub struct ServiceBuilder {
+    scheme: Arc<dyn ServingScheme>,
+    engine: Option<Arc<dyn InferenceEngine>>,
+    worker_specs: Option<Vec<WorkerSpec>>,
+    worker_latency: Option<LatencyModel>,
+    fault_profile: Option<FaultProfile>,
+    flush_after: Duration,
+    verify: VerifyPolicy,
+    seed: u64,
+    max_inflight: usize,
+    decode_threads: usize,
+    group_timeout: Duration,
+    fault_hook: Option<Arc<dyn Fn(u64) -> FaultPlan + Send + Sync>>,
+}
+
+impl ServiceBuilder {
+    fn new(scheme: Arc<dyn ServingScheme>) -> ServiceBuilder {
+        ServiceBuilder {
+            scheme,
+            engine: None,
+            worker_specs: None,
+            worker_latency: None,
+            fault_profile: None,
             flush_after: Duration::from_millis(20),
-            worker_specs: vec![WorkerSpec::default(); params.num_workers()],
             verify: VerifyPolicy::off(),
             seed: 0xA11CE,
             max_inflight: 4,
@@ -91,35 +113,172 @@ impl ServiceConfig {
         }
     }
 
-    /// Stamp a [`FaultProfile`]'s behavior programs onto the worker specs
-    /// (latency models are preserved).
-    pub fn set_fault_profile(&mut self, profile: &FaultProfile) {
-        assert_eq!(
-            profile.behaviors.len(),
-            self.worker_specs.len(),
-            "profile '{}' sized for {} workers, service has {}",
-            profile.name,
-            profile.behaviors.len(),
-            self.worker_specs.len()
-        );
-        for (spec, &b) in self.worker_specs.iter_mut().zip(&profile.behaviors) {
-            spec.behavior = b;
-        }
+    /// The inference engine every worker runs (required).
+    pub fn engine(mut self, engine: Arc<dyn InferenceEngine>) -> Self {
+        self.engine = Some(engine);
+        self
     }
-}
 
-impl fmt::Debug for ServiceConfig {
-    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        f.debug_struct("ServiceConfig")
-            .field("params", &self.params)
-            .field("flush_after", &self.flush_after)
-            .field("workers", &self.worker_specs.len())
-            .field("verify", &self.verify)
-            .field("max_inflight", &self.max_inflight)
-            .field("decode_threads", &self.decode_threads)
-            .field("group_timeout", &self.group_timeout)
-            .field("fault_hook", &self.fault_hook.is_some())
-            .finish()
+    /// Explicit per-worker specs; must match the scheme's worker count at
+    /// spawn. Default: an all-honest, zero-latency fleet.
+    pub fn workers(mut self, specs: Vec<WorkerSpec>) -> Self {
+        self.worker_specs = Some(specs);
+        self
+    }
+
+    /// Uniform injected service-latency model for the whole fleet
+    /// (composes with [`ServiceBuilder::workers`]: overrides each spec's
+    /// latency, preserves behaviors).
+    pub fn worker_latency(mut self, latency: LatencyModel) -> Self {
+        self.worker_latency = Some(latency);
+        self
+    }
+
+    /// Stamp a [`FaultProfile`]'s behavior programs onto the fleet
+    /// (latency models are preserved). Size-checked at spawn.
+    pub fn fault_profile(mut self, profile: FaultProfile) -> Self {
+        self.fault_profile = Some(profile);
+        self
+    }
+
+    /// Decode verification policy (off by default).
+    pub fn verify(mut self, policy: VerifyPolicy) -> Self {
+        self.verify = policy;
+        self
+    }
+
+    /// Flush a partial group after this long.
+    pub fn flush_after(mut self, d: Duration) -> Self {
+        self.flush_after = d;
+        self
+    }
+
+    /// RNG seed deriving worker latency/behavior/corruption streams.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Groups that may be in flight (dispatched, not yet decoded) at once;
+    /// the batcher blocks dispatching beyond this. `1` reproduces a serial
+    /// coordinator.
+    pub fn max_inflight(mut self, n: usize) -> Self {
+        self.max_inflight = n;
+        self
+    }
+
+    /// Threads in the locate/decode pool.
+    pub fn decode_threads(mut self, n: usize) -> Self {
+        self.decode_threads = n;
+        self
+    }
+
+    /// Per-group collection deadline (a group short of its quota past this
+    /// errors out instead of stalling the service).
+    pub fn group_timeout(mut self, d: Duration) -> Self {
+        self.group_timeout = d;
+        self
+    }
+
+    /// Experiment hook: exact per-group fault plan keyed by group index
+    /// (1-based dispatch order). For fleet-wide behavior programs use
+    /// [`ServiceBuilder::fault_profile`] instead.
+    pub fn fault_hook(mut self, hook: Arc<dyn Fn(u64) -> FaultPlan + Send + Sync>) -> Self {
+        self.fault_hook = Some(hook);
+        self
+    }
+
+    /// Validate and start the service. Misconfiguration — a worker-spec or
+    /// fault-profile count that doesn't match the scheme's pool — is an
+    /// `Err` here, never a mid-serve panic.
+    pub fn spawn(self) -> Result<Service> {
+        let scheme = self.scheme;
+        let nw = scheme.num_workers();
+        let name = scheme.name().to_string();
+        let Some(engine) = self.engine else {
+            bail!("service '{name}': no inference engine configured");
+        };
+        if self.max_inflight == 0 {
+            bail!("service '{name}': max_inflight must be >= 1");
+        }
+        if self.decode_threads == 0 {
+            bail!("service '{name}': decode_threads must be >= 1");
+        }
+        if scheme.group_size() == 0 {
+            bail!("service '{name}': scheme has a zero group size");
+        }
+        // The collect policy is consulted by the router on every reply;
+        // an inconsistent one must fail here, not panic the router thread.
+        let policy = scheme.collect_policy();
+        if policy.num_workers() != nw {
+            bail!(
+                "service '{name}': collect policy covers {} workers, scheme encodes for {nw}",
+                policy.num_workers()
+            );
+        }
+        let mut slot_size = vec![0usize; policy.num_slots()];
+        for &s in &policy.slots {
+            slot_size[s] += 1;
+        }
+        if slot_size.iter().any(|&n| n < policy.need) {
+            bail!(
+                "service '{name}': collect policy needs {} replies from a slot with fewer \
+                 workers",
+                policy.need
+            );
+        }
+        let mut specs = match self.worker_specs {
+            Some(specs) => {
+                if specs.len() != nw {
+                    bail!(
+                        "service '{name}': {} worker specs for a scheme that encodes \
+                         for {nw} workers",
+                        specs.len()
+                    );
+                }
+                specs
+            }
+            None => vec![WorkerSpec::default(); nw],
+        };
+        if let Some(latency) = self.worker_latency {
+            for spec in specs.iter_mut() {
+                spec.latency = latency;
+            }
+        }
+        if let Some(profile) = &self.fault_profile {
+            if profile.behaviors.len() != nw {
+                bail!(
+                    "service '{name}': fault profile '{}' sized for {} workers, scheme \
+                     needs {nw}",
+                    profile.name,
+                    profile.behaviors.len()
+                );
+            }
+            for (spec, &b) in specs.iter_mut().zip(&profile.behaviors) {
+                spec.behavior = b;
+            }
+        }
+        let tuning = Tuning {
+            flush_after: self.flush_after,
+            verify: self.verify,
+            seed: self.seed,
+            max_inflight: self.max_inflight,
+            decode_threads: self.decode_threads,
+            group_timeout: self.group_timeout,
+            fault_hook: self.fault_hook,
+        };
+        let metrics = Arc::new(ServingMetrics::new());
+        let (tx, rx) = channel::<Msg>();
+        let m = metrics.clone();
+        let s = scheme.clone();
+        // The batcher gets a sender back into its own queue so decode
+        // threads can requeue verification-failed groups for redispatch.
+        let loopback = tx.clone();
+        let batcher = std::thread::Builder::new()
+            .name("coordinator".into())
+            .spawn(move || batcher_loop(engine, s, specs, policy, tuning, rx, loopback, m))
+            .map_err(|e| anyhow::anyhow!("spawning coordinator: {e}"))?;
+        Ok(Service { tx, batcher: Some(batcher), scheme, metrics })
     }
 }
 
@@ -188,27 +347,24 @@ enum Msg {
     Shutdown,
 }
 
-/// The online coded-inference service.
+/// The online serving engine, generic over its [`ServingScheme`].
 pub struct Service {
     tx: Sender<Msg>,
     batcher: Option<JoinHandle<()>>,
+    scheme: Arc<dyn ServingScheme>,
     pub metrics: Arc<ServingMetrics>,
 }
 
 impl Service {
-    /// Start the service over an inference engine.
-    pub fn start(engine: Arc<dyn InferenceEngine>, cfg: ServiceConfig) -> Service {
-        let metrics = Arc::new(ServingMetrics::new());
-        let (tx, rx) = channel::<Msg>();
-        let m = metrics.clone();
-        // The batcher gets a sender back into its own queue so decode
-        // threads can requeue verification-failed groups for redispatch.
-        let loopback = tx.clone();
-        let batcher = std::thread::Builder::new()
-            .name("coordinator".into())
-            .spawn(move || batcher_loop(engine, cfg, rx, loopback, m))
-            .expect("spawning coordinator");
-        Service { tx, batcher: Some(batcher), metrics }
+    /// Start building a service over a serving scheme. [`ServiceBuilder`]
+    /// is the only way to construct a [`Service`].
+    pub fn builder(scheme: Arc<dyn ServingScheme>) -> ServiceBuilder {
+        ServiceBuilder::new(scheme)
+    }
+
+    /// The scheme this service runs.
+    pub fn scheme(&self) -> &Arc<dyn ServingScheme> {
+        &self.scheme
     }
 
     /// Submit one query payload; resolves when its group is decoded.
@@ -334,8 +490,12 @@ fn fail_msg(msg: Msg, why: &str) {
 struct Dispatcher {
     pool: WorkerPool,
     router: ReplyRouter,
-    code: Arc<ApproxIferCode>,
-    cfg: ServiceConfig,
+    scheme: Arc<dyn ServingScheme>,
+    /// The scheme's collect policy, computed (and validated) once at
+    /// spawn — pure function of the immutable scheme, so per-dispatch
+    /// rebuilding would be wasted work.
+    policy: CollectPolicy,
+    tuning: Tuning,
     ctxs: CtxMap,
     gate: Arc<InflightGate>,
     decode_tx: Sender<CollectedGroup>,
@@ -372,29 +532,27 @@ impl Dispatcher {
         started: Instant,
         retries: u32,
     ) {
-        self.gate.acquire(self.cfg.max_inflight.max(1), &self.metrics);
+        self.gate.acquire(self.tuning.max_inflight, &self.metrics);
         self.group_counter += 1;
         let group = self.group_counter;
-        let params = self.cfg.params;
-        let k = params.k;
-        let nw = params.num_workers();
+        let k = self.scheme.group_size();
+        let nw = self.scheme.num_workers();
         let real = queries.len();
         let mut payloads: Vec<&[f32]> = queries.iter().map(|q| &q[..]).collect();
         while payloads.len() < k {
             payloads.push(&queries[real - 1]);
         }
 
-        // --- encode (eq. (4)-(8)) ---------------------------------------
+        // --- encode (scheme-specific) -----------------------------------
         let t0 = Instant::now();
-        let d = payloads[0].len();
-        let mut coded: Vec<Vec<f32>> = vec![vec![0.0; d]; nw];
-        self.code.encode_into(&payloads, &mut coded);
+        let mut coded: Vec<Vec<f32>> = vec![Vec::new(); nw];
+        self.scheme.encode_into(&payloads, &mut coded);
         self.metrics.encode_latency.record(t0.elapsed().as_secs_f64());
 
         // Exact per-group fault plan (experiments; fleet-wide behavior
         // programs live in the worker specs and need no per-dispatch work
         // here).
-        let plan = match &self.cfg.fault_hook {
+        let plan = match &self.tuning.fault_hook {
             Some(hook) => hook(group),
             None => FaultPlan::none(),
         };
@@ -402,9 +560,8 @@ impl Dispatcher {
         // Register reply routing *before* fan-out: replies may beat us
         // back.
         self.ctxs.lock().unwrap().insert(group, GroupCtx { sinks, queries, started, retries });
-        let wait_for = params.wait_for().min(nw);
-        let deadline = Instant::now() + self.cfg.group_timeout;
-        self.router.register(group, nw, wait_for, deadline, self.decode_tx.clone());
+        let deadline = Instant::now() + self.tuning.group_timeout;
+        self.router.register(group, self.policy.clone(), deadline, self.decode_tx.clone());
         self.metrics.groups_dispatched.inc();
 
         // --- fan out ------------------------------------------------------
@@ -437,51 +594,54 @@ impl Dispatcher {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn batcher_loop(
     engine: Arc<dyn InferenceEngine>,
-    cfg: ServiceConfig,
+    scheme: Arc<dyn ServingScheme>,
+    worker_specs: Vec<WorkerSpec>,
+    policy: CollectPolicy,
+    tuning: Tuning,
     rx: Receiver<Msg>,
     loopback: Sender<Msg>,
     metrics: Arc<ServingMetrics>,
 ) {
     let mut pool = WorkerPool::spawn_with_metrics(
         engine,
-        &cfg.worker_specs,
-        cfg.seed ^ 0x77,
+        &worker_specs,
+        tuning.seed ^ 0x77,
         Some(metrics.clone()),
     );
     let router = pool.start_router(metrics.clone());
-    let code = Arc::new(ApproxIferCode::new(cfg.params));
     let ctxs: CtxMap = Arc::new(Mutex::new(HashMap::new()));
     let gate = Arc::new(InflightGate::new());
     let (decode_tx, decode_rx) = channel::<CollectedGroup>();
     let decode_rx = Arc::new(Mutex::new(decode_rx));
     let mut decode_handles = Vec::new();
-    for t in 0..cfg.decode_threads.max(1) {
+    for t in 0..tuning.decode_threads {
         let rx = decode_rx.clone();
-        let code = code.clone();
+        let scheme = scheme.clone();
         let ctxs = ctxs.clone();
         let gate = gate.clone();
         let metrics = metrics.clone();
         let loopback = loopback.clone();
-        let params = cfg.params;
-        let verify = cfg.verify;
+        let verify = tuning.verify;
         let handle = std::thread::Builder::new()
             .name(format!("decode-{t}"))
-            .spawn(move || decode_loop(rx, code, params, verify, ctxs, gate, loopback, metrics))
+            .spawn(move || decode_loop(rx, scheme, verify, ctxs, gate, loopback, metrics))
             .expect("spawning decode worker");
         decode_handles.push(handle);
     }
     drop(loopback); // decode threads hold the only loopback clones
 
-    let k = cfg.params.k;
-    let flush_after = cfg.flush_after;
-    let group_timeout = cfg.group_timeout;
+    let k = scheme.group_size();
+    let flush_after = tuning.flush_after;
+    let group_timeout = tuning.group_timeout;
     let mut dispatcher = Dispatcher {
         pool,
         router,
-        code,
-        cfg,
+        scheme,
+        policy,
+        tuning,
         ctxs,
         gate,
         decode_tx,
@@ -559,11 +719,9 @@ fn batcher_loop(
 /// re-dispatched before being served degraded.
 const MAX_REDISPATCHES: u32 = 1;
 
-#[allow(clippy::too_many_arguments)]
 fn decode_loop(
     rx: Arc<Mutex<Receiver<CollectedGroup>>>,
-    code: Arc<ApproxIferCode>,
-    params: CodeParams,
+    scheme: Arc<dyn ServingScheme>,
     verify: VerifyPolicy,
     ctxs: CtxMap,
     gate: Arc<InflightGate>,
@@ -582,40 +740,32 @@ fn decode_loop(
             // Dispatch failed mid-fan-out and already answered the clients.
             continue;
         };
-        let nw = params.num_workers();
-        let wait_for = params.wait_for().min(nw);
         let result = if collected.complete {
-            verified_locate_and_decode(
-                &code,
-                LocatorMethod::Pinned,
-                &collected.replies,
-                verify,
-                &metrics,
-            )
+            scheme.decode(&collected.replies, verify, &metrics)
         } else {
             // Mirror the router's two incomplete outcomes: deadline expiry
-            // vs fail-fast when worker errors made the wait count
-            // unreachable (see route_reply).
-            let why = if collected.errors > 0 && nw - collected.errors < wait_for {
+            // vs fail-fast when worker errors made the quota unreachable.
+            let why = if collected.undecodable {
                 "undecodable (too many worker errors)"
             } else {
                 "timed out"
             };
             Err(anyhow::anyhow!(
-                "group {} {why} with {}/{wait_for} replies ({} worker errors)",
+                "group {} {why} with {} replies ({} worker errors)",
                 collected.group,
                 collected.received,
                 collected.errors
             ))
         };
         match result {
-            Ok((predictions, _decode_set, _flagged, report)) => {
-                if let Some(report) = report {
+            Ok(out) => {
+                if let Some(report) = out.verify {
                     if !report.passed {
                         if ctx.retries < MAX_REDISPATCHES {
-                            // Rung 3 of the escalation ladder: re-encode and
-                            // re-fan-out the group. The gate slot is released
-                            // first — the redispatch acquires its own.
+                            // Final rung of the escalation ladder: re-encode
+                            // and re-fan-out the group. The gate slot is
+                            // released first — the redispatch acquires its
+                            // own.
                             log::warn!(
                                 "group {}: decode verification failed \
                                  (residual {:.3}); redispatching",
@@ -651,7 +801,7 @@ fn decode_loop(
                 }
                 metrics.groups_decoded.inc();
                 metrics.group_latency.record(ctx.started.elapsed().as_secs_f64());
-                for (sink, pred) in ctx.sinks.iter().zip(predictions.into_iter()) {
+                for (sink, pred) in ctx.sinks.iter().zip(out.predictions.into_iter()) {
                     sink.send(Ok(pred));
                 }
             }
@@ -670,6 +820,7 @@ fn decode_loop(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coding::{ApproxIferCode, CodeParams, ParmProxy, Replication, Uncoded};
     use crate::workers::LinearMockEngine;
     // InferenceEngine is already in scope via super::* (service imports it).
 
@@ -677,11 +828,14 @@ mod tests {
         (0..d).map(|t| ((j as f32) * 0.3 + (t as f32) * 0.02).sin()).collect()
     }
 
+    fn approxifer(k: usize, s: usize, e: usize) -> Arc<dyn ServingScheme> {
+        Arc::new(ApproxIferCode::new(CodeParams::new(k, s, e)))
+    }
+
     #[test]
     fn full_group_resolves_all_queries() {
-        let params = CodeParams::new(4, 1, 0);
         let engine = Arc::new(LinearMockEngine::new(12, 5));
-        let svc = Service::start(engine.clone(), ServiceConfig::new(params));
+        let svc = Service::builder(approxifer(4, 1, 0)).engine(engine.clone()).spawn().unwrap();
         let handles: Vec<PredictionHandle> =
             (0..4).map(|j| svc.submit(smooth_payload(j, 12))).collect();
         for (j, h) in handles.into_iter().enumerate() {
@@ -703,11 +857,12 @@ mod tests {
 
     #[test]
     fn partial_group_flushes_on_deadline() {
-        let params = CodeParams::new(4, 1, 0);
         let engine = Arc::new(LinearMockEngine::new(6, 3));
-        let mut cfg = ServiceConfig::new(params);
-        cfg.flush_after = Duration::from_millis(30);
-        let svc = Service::start(engine, cfg);
+        let svc = Service::builder(approxifer(4, 1, 0))
+            .engine(engine)
+            .flush_after(Duration::from_millis(30))
+            .spawn()
+            .unwrap();
         // Only 2 of 4 queries — deadline flush must pad and still answer.
         let h0 = svc.submit(smooth_payload(0, 6));
         let h1 = svc.submit(smooth_payload(1, 6));
@@ -718,9 +873,8 @@ mod tests {
 
     #[test]
     fn multiple_groups_pipeline_through() {
-        let params = CodeParams::new(3, 1, 0);
         let engine = Arc::new(LinearMockEngine::new(6, 3));
-        let svc = Service::start(engine, ServiceConfig::new(params));
+        let svc = Service::builder(approxifer(3, 1, 0)).engine(engine).spawn().unwrap();
         let handles: Vec<PredictionHandle> =
             (0..9).map(|j| svc.submit(smooth_payload(j, 6))).collect();
         for h in handles {
@@ -733,12 +887,13 @@ mod tests {
     #[test]
     fn serial_mode_still_works() {
         // max_inflight = 1 reproduces the old one-group-at-a-time behavior.
-        let params = CodeParams::new(2, 1, 0);
         let engine = Arc::new(LinearMockEngine::new(6, 3));
-        let mut cfg = ServiceConfig::new(params);
-        cfg.max_inflight = 1;
-        cfg.decode_threads = 1;
-        let svc = Service::start(engine, cfg);
+        let svc = Service::builder(approxifer(2, 1, 0))
+            .engine(engine)
+            .max_inflight(1)
+            .decode_threads(1)
+            .spawn()
+            .unwrap();
         let handles: Vec<PredictionHandle> =
             (0..8).map(|j| svc.submit(smooth_payload(j, 6))).collect();
         for h in handles {
@@ -750,9 +905,8 @@ mod tests {
 
     #[test]
     fn tagged_submissions_carry_their_ids() {
-        let params = CodeParams::new(2, 1, 0);
         let engine = Arc::new(LinearMockEngine::new(6, 3));
-        let svc = Service::start(engine, ServiceConfig::new(params));
+        let svc = Service::builder(approxifer(2, 1, 0)).engine(engine).spawn().unwrap();
         let (tx, rx) = channel();
         for id in [17u64, 99, 3, 40] {
             svc.submit_tagged(id, smooth_payload(id as usize, 6), tx.clone());
@@ -770,11 +924,12 @@ mod tests {
 
     #[test]
     fn shutdown_fails_pending_queries() {
-        let params = CodeParams::new(8, 1, 0);
         let engine = Arc::new(LinearMockEngine::new(6, 3));
-        let mut cfg = ServiceConfig::new(params);
-        cfg.flush_after = Duration::from_secs(60); // never flush by deadline
-        let svc = Service::start(engine, cfg);
+        let svc = Service::builder(approxifer(8, 1, 0))
+            .engine(engine)
+            .flush_after(Duration::from_secs(60)) // never flush by deadline
+            .spawn()
+            .unwrap();
         let h = svc.submit(smooth_payload(0, 6));
         svc.shutdown();
         assert!(h.wait().is_err());
@@ -784,23 +939,135 @@ mod tests {
     fn group_timeout_errors_instead_of_hanging() {
         // Straggle every worker far past the group deadline: the submitters
         // must get an error at ~group_timeout, not hang.
-        let params = CodeParams::new(2, 1, 0);
+        let scheme = approxifer(2, 1, 0);
+        let nw = scheme.num_workers();
         let engine = Arc::new(LinearMockEngine::new(6, 3));
-        let mut cfg = ServiceConfig::new(params);
-        cfg.group_timeout = Duration::from_millis(120);
-        let nw = params.num_workers();
-        cfg.fault_hook = Some(Arc::new(move |_g| FaultPlan {
-            stragglers: (0..nw).collect(),
-            straggler_delay: Duration::from_secs(5),
-            ..FaultPlan::none()
-        }));
-        let svc = Service::start(engine, cfg);
+        let svc = Service::builder(scheme)
+            .engine(engine)
+            .group_timeout(Duration::from_millis(120))
+            .fault_hook(Arc::new(move |_g| FaultPlan {
+                stragglers: (0..nw).collect(),
+                straggler_delay: Duration::from_secs(5),
+                ..FaultPlan::none()
+            }))
+            .spawn()
+            .unwrap();
         let h0 = svc.submit(smooth_payload(0, 6));
         let h1 = svc.submit(smooth_payload(1, 6));
         let err = h0.wait_timeout(Duration::from_secs(5)).unwrap_err();
         assert!(format!("{err:#}").contains("timed out"), "{err:#}");
         assert!(h1.wait_timeout(Duration::from_secs(5)).is_err());
         assert_eq!(svc.metrics.groups_failed.get(), 1);
+        svc.shutdown();
+    }
+
+    // ---- builder validation (mismatches are Err, not mid-serve panics) ----
+
+    #[test]
+    fn builder_requires_an_engine() {
+        assert!(Service::builder(approxifer(2, 1, 0)).spawn().is_err());
+    }
+
+    #[test]
+    fn builder_rejects_mismatched_worker_specs() {
+        let engine = Arc::new(LinearMockEngine::new(6, 3));
+        // approxifer(2,1,0) encodes for 3 workers; hand it 5 specs.
+        let err = Service::builder(approxifer(2, 1, 0))
+            .engine(engine)
+            .workers(vec![WorkerSpec::default(); 5])
+            .spawn()
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("worker specs"), "{err:#}");
+    }
+
+    #[test]
+    fn builder_rejects_mismatched_fault_profile() {
+        let engine = Arc::new(LinearMockEngine::new(6, 3));
+        let profile = FaultProfile::honest(7); // scheme needs 3
+        let err = Service::builder(approxifer(2, 1, 0))
+            .engine(engine)
+            .fault_profile(profile)
+            .spawn()
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("fault profile"), "{err:#}");
+    }
+
+    #[test]
+    fn builder_rejects_zero_knobs() {
+        let engine: Arc<LinearMockEngine> = Arc::new(LinearMockEngine::new(6, 3));
+        let e: Arc<dyn InferenceEngine> = engine.clone();
+        assert!(Service::builder(approxifer(2, 1, 0))
+            .engine(e.clone())
+            .max_inflight(0)
+            .spawn()
+            .is_err());
+        assert!(Service::builder(approxifer(2, 1, 0))
+            .engine(e)
+            .decode_threads(0)
+            .spawn()
+            .is_err());
+    }
+
+    // ---- every scheme serves through the same engine ----------------------
+
+    #[test]
+    fn replication_scheme_serves_exact_predictions() {
+        let engine = Arc::new(LinearMockEngine::new(8, 4));
+        let svc = Service::builder(Arc::new(Replication::new(3, 1, 0)))
+            .engine(engine.clone())
+            .spawn()
+            .unwrap();
+        let handles: Vec<PredictionHandle> =
+            (0..3).map(|j| svc.submit(smooth_payload(j, 8))).collect();
+        for (j, h) in handles.into_iter().enumerate() {
+            let pred = h.wait_timeout(Duration::from_secs(10)).unwrap();
+            let want = engine.infer1(&smooth_payload(j, 8)).unwrap();
+            assert_eq!(pred, want, "replication must be exact for query {j}");
+        }
+        assert_eq!(svc.metrics.groups_decoded.get(), 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn parm_scheme_serves_through_the_engine() {
+        let engine = Arc::new(LinearMockEngine::new(8, 4));
+        let svc = Service::builder(Arc::new(ParmProxy::new(4)))
+            .engine(engine.clone())
+            .spawn()
+            .unwrap();
+        let handles: Vec<PredictionHandle> =
+            (0..4).map(|j| svc.submit(smooth_payload(j, 8))).collect();
+        for (j, h) in handles.into_iter().enumerate() {
+            let pred = h.wait_timeout(Duration::from_secs(10)).unwrap();
+            let want = engine.infer1(&smooth_payload(j, 8)).unwrap();
+            for t in 0..4 {
+                // Affine engine ⇒ the parity identity is near-exact even if
+                // the parity reply replaced a straggler.
+                assert!(
+                    (pred[t] - want[t]).abs() < 1e-3,
+                    "q{j} c{t}: {} vs {}",
+                    pred[t],
+                    want[t]
+                );
+            }
+        }
+        svc.shutdown();
+    }
+
+    #[test]
+    fn uncoded_scheme_is_exact_passthrough() {
+        let engine = Arc::new(LinearMockEngine::new(8, 4));
+        let svc = Service::builder(Arc::new(Uncoded::new(3)))
+            .engine(engine.clone())
+            .spawn()
+            .unwrap();
+        let handles: Vec<PredictionHandle> =
+            (0..3).map(|j| svc.submit(smooth_payload(j, 8))).collect();
+        for (j, h) in handles.into_iter().enumerate() {
+            let pred = h.wait_timeout(Duration::from_secs(10)).unwrap();
+            let want = engine.infer1(&smooth_payload(j, 8)).unwrap();
+            assert_eq!(pred, want, "uncoded must be exact for query {j}");
+        }
         svc.shutdown();
     }
 }

@@ -1,21 +1,20 @@
 //! End-to-end latency/throughput experiment (the paper's §1 motivation:
 //! coded redundancy cuts tail latency at a fraction of replication's
-//! worker cost). Drives the *online* service — real worker threads with
-//! injected straggler tails — for ApproxIFER, replication and a
-//! no-redundancy baseline, and reports p50/p99/throughput per strategy.
+//! worker cost). Every strategy — ApproxIFER, replication and the uncoded
+//! no-redundancy baseline — runs through the **same** scheme-agnostic
+//! online [`Service`] (real worker threads with injected straggler tails),
+//! so the comparison isolates the redundancy math, not coordinator
+//! differences. Reports p50/p99 per strategy.
 
 use std::sync::Arc;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::coding::replication::ReplicationParams;
-use crate::coding::CodeParams;
-use crate::coordinator::{FaultPlan, GroupPipeline, ReplicationPipeline};
-use crate::metrics::ServingMetrics;
-use crate::util::rng::Rng;
+use crate::coding::{ApproxIferCode, CodeParams, Replication, ServingScheme, Uncoded};
+use crate::coordinator::Service;
 use crate::util::stats::Summary;
-use crate::workers::{InferenceEngine, LatencyModel, WorkerPool, WorkerSpec};
+use crate::workers::{InferenceEngine, LatencyModel};
 
 use super::report::{Report, Table};
 
@@ -26,78 +25,44 @@ pub struct LatencyRow {
     pub latency: Summary,
 }
 
-/// Run `groups` K-groups through the ApproxIFER pipeline with the given
-/// per-worker latency model; returns per-group latency samples.
-pub fn approxifer_latency(
+/// Run `groups` closed-loop K-groups through the unified service for any
+/// scheme under a uniform injected worker-latency model; returns per-group
+/// latency samples. Closed loop — one group in flight at a time — so the
+/// samples measure group service latency, not queueing.
+pub fn scheme_latency(
     engine: Arc<dyn InferenceEngine>,
-    params: CodeParams,
+    scheme: Arc<dyn ServingScheme>,
     latency: LatencyModel,
     groups: usize,
     seed: u64,
 ) -> Result<LatencyRow> {
-    let specs = vec![WorkerSpec::new(latency); params.num_workers()];
-    let pool = WorkerPool::spawn(engine.clone(), &specs, seed);
-    let mut pipe = GroupPipeline::new(params);
-    let metrics = ServingMetrics::new();
+    let k = scheme.group_size();
+    let workers = scheme.num_workers();
+    let name = format!(
+        "{}(K={k},S={},E={})",
+        scheme.name(),
+        scheme.stragglers_tolerated(),
+        scheme.byzantine_tolerated()
+    );
     let d = engine.payload();
-    let mut samples = Vec::with_capacity(groups);
-    let queries = smooth_group(params.k, d);
-    let qrefs: Vec<&[f32]> = queries.iter().map(|q| &q[..]).collect();
-    for _ in 0..groups {
-        let out = pipe.infer_group(&pool, &qrefs, &FaultPlan::none(), &metrics)?;
-        samples.push(out.latency.as_secs_f64());
-    }
-    pool.shutdown();
-    Ok(LatencyRow {
-        name: format!("approxifer(K={},S={},E={})", params.k, params.s, params.e),
-        workers: params.num_workers(),
-        latency: Summary::of(&samples),
-    })
-}
-
-/// Same workload through proactive replication.
-pub fn replication_latency(
-    engine: Arc<dyn InferenceEngine>,
-    params: ReplicationParams,
-    latency: LatencyModel,
-    groups: usize,
-    seed: u64,
-) -> Result<LatencyRow> {
-    let specs = vec![WorkerSpec::new(latency); params.num_workers()];
-    let pool = WorkerPool::spawn(engine.clone(), &specs, seed);
-    let mut pipe = ReplicationPipeline::new(params);
-    let metrics = ServingMetrics::new();
-    let d = engine.payload();
-    let queries = smooth_group(params.k, d);
-    let qrefs: Vec<&[f32]> = queries.iter().map(|q| &q[..]).collect();
+    let svc = Service::builder(scheme)
+        .engine(engine)
+        .worker_latency(latency)
+        .flush_after(Duration::from_millis(1))
+        .seed(seed)
+        .spawn()?;
+    let queries = smooth_group(k, d);
     let mut samples = Vec::with_capacity(groups);
     for _ in 0..groups {
-        let t0 = std::time::Instant::now();
-        pipe.infer_group(&pool, &qrefs, &FaultPlan::none(), &metrics)?;
+        let t0 = Instant::now();
+        let handles: Vec<_> = queries.iter().map(|q| svc.submit(q.clone())).collect();
+        for h in handles {
+            h.wait_timeout(Duration::from_secs(30))?;
+        }
         samples.push(t0.elapsed().as_secs_f64());
     }
-    pool.shutdown();
-    Ok(LatencyRow {
-        name: format!("replication(K={},copies={})", params.k, params.copies()),
-        workers: params.num_workers(),
-        latency: Summary::of(&samples),
-    })
-}
-
-/// No-redundancy baseline: K workers, wait for all K (tail dominated).
-pub fn no_redundancy_latency(
-    engine: Arc<dyn InferenceEngine>,
-    k: usize,
-    latency: LatencyModel,
-    groups: usize,
-    seed: u64,
-) -> Result<LatencyRow> {
-    // Replication with S=0 copies=1 is exactly "send each query once, wait
-    // for every reply".
-    let params = ReplicationParams::new(k, 0, 0);
-    let mut row = replication_latency(engine, params, latency, groups, seed)?;
-    row.name = format!("no-redundancy(K={k})");
-    Ok(row)
+    svc.shutdown();
+    Ok(LatencyRow { name, workers, latency: Summary::of(&samples) })
 }
 
 fn smooth_group(k: usize, d: usize) -> Vec<Vec<f32>> {
@@ -107,9 +72,8 @@ fn smooth_group(k: usize, d: usize) -> Vec<Vec<f32>> {
 }
 
 /// The full latency experiment: three strategies under an exponential
-/// straggler tail, equal per-query work.
+/// straggler tail, equal per-query work, one serving engine.
 pub fn run(rep: &mut Report, groups: usize, seed: u64) -> Result<()> {
-    let _ = Rng::new(seed); // reserved for future per-run jitter
     let k = 8;
     let (d, c) = (128, 10);
     let compute = Duration::from_micros(300);
@@ -121,13 +85,14 @@ pub fn run(rep: &mut Report, groups: usize, seed: u64) -> Result<()> {
         "Group latency under exp(3ms) worker tail + 0.3ms compute (lower is better)",
         &["strategy", "workers", "p50_ms", "p99_ms", "mean_ms"],
     );
-    let rows = vec![
-        no_redundancy_latency(engine.clone(), k, tail, groups, seed)?,
-        approxifer_latency(engine.clone(), CodeParams::new(k, 1, 0), tail, groups, seed)?,
-        approxifer_latency(engine.clone(), CodeParams::new(k, 2, 0), tail, groups, seed)?,
-        replication_latency(engine.clone(), ReplicationParams::new(k, 1, 0), tail, groups, seed)?,
+    let schemes: Vec<Arc<dyn ServingScheme>> = vec![
+        Arc::new(Uncoded::new(k)),
+        Arc::new(ApproxIferCode::new(CodeParams::new(k, 1, 0))),
+        Arc::new(ApproxIferCode::new(CodeParams::new(k, 2, 0))),
+        Arc::new(Replication::new(k, 1, 0)),
     ];
-    for r in rows {
+    for scheme in schemes {
+        let r = scheme_latency(engine.clone(), scheme, tail, groups, seed)?;
         t.row(&[
             r.name.clone(),
             r.workers.to_string(),
@@ -151,9 +116,15 @@ mod tests {
         // large enough to be stable.
         let engine: Arc<dyn InferenceEngine> = Arc::new(LinearMockEngine::new(16, 4));
         let tail = LatencyModel::Exponential { mean_ms: 2.0 };
-        let a =
-            approxifer_latency(engine.clone(), CodeParams::new(4, 2, 0), tail, 30, 5).unwrap();
-        let n = no_redundancy_latency(engine, 4, tail, 30, 5).unwrap();
+        let a = scheme_latency(
+            engine.clone(),
+            Arc::new(ApproxIferCode::new(CodeParams::new(4, 2, 0))),
+            tail,
+            30,
+            5,
+        )
+        .unwrap();
+        let n = scheme_latency(engine, Arc::new(Uncoded::new(4)), tail, 30, 5).unwrap();
         assert!(
             a.latency.p90 < n.latency.p90 * 1.1,
             "approxifer p90 {:.4} vs none {:.4}",
@@ -165,9 +136,9 @@ mod tests {
     #[test]
     fn worker_counts_in_rows() {
         let engine: Arc<dyn InferenceEngine> = Arc::new(LinearMockEngine::new(8, 3));
-        let r = approxifer_latency(
+        let r = scheme_latency(
             engine,
-            CodeParams::new(4, 1, 0),
+            Arc::new(ApproxIferCode::new(CodeParams::new(4, 1, 0))),
             LatencyModel::None,
             3,
             1,

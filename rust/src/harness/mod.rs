@@ -9,6 +9,6 @@ pub mod figures;
 pub mod latency;
 pub mod report;
 
-pub use accuracy::{approxifer_accuracy, base_accuracy, parm_worst_accuracy, AccuracyReport};
+pub use accuracy::{approxifer_accuracy, base_accuracy, scheme_accuracy, AccuracyReport};
 pub use figures::FigureContext;
 pub use report::{Report, Table};

@@ -4,20 +4,40 @@
 //! Robust Prediction Serving Systems* (Soleymani, Mahdavifar, Ali,
 //! Avestimehr — AAAI 2022), built as a three-layer rust + JAX + Pallas stack:
 //!
-//! * **Layer 3 (this crate)** — the serving coordinator: request batching
-//!   into `K`-groups, Berrut rational encoding of queries, fan-out to `N+1`
-//!   workers (each running the *same* hosted model), **concurrent
+//! * **Layer 3 (this crate)** — the serving stack, split into a *scheme*
+//!   contract and a *scheme-agnostic engine*:
+//!
+//!   The [`crate::coding::ServingScheme`] trait captures everything a
+//!   redundancy strategy is — `encode_into` (K queries → one payload per
+//!   worker), a [`crate::coding::CollectPolicy`] telling the reply router
+//!   when collection is complete (fastest subset / per-query quorums),
+//!   `decode` (Byzantine location + reconstruction + the scheme's
+//!   verification hook), and overhead/tolerance accounting. Four
+//!   implementations ship:
+//!
+//!   | scheme | workers for (K,S,E) | stragglers | Byzantine | verification |
+//!   |---|---|---|---|---|
+//!   | [`crate::coding::ApproxIferCode`] | `K+S`, or `2(K+E)+S` | `S` | `E` | re-encode residual |
+//!   | [`crate::coding::Replication`] | `(S+2E+1)·K` | `S` | `E` (outvoted) | majority margin |
+//!   | [`crate::coding::ParmProxy`] | `K+1` | 1 (lossy) | 0 | none (no slack left) |
+//!   | [`crate::coding::Uncoded`] | `K` | 0 | 0 | none |
+//!
+//!   The [`crate::coordinator::Service`] (built via
+//!   `Service::builder(scheme)…spawn()?`, the single construction path —
+//!   spawn-time validation, no mid-serve panics) runs **any** scheme with
+//!   the same machinery: request batching into `K`-groups, **concurrent
 //!   multi-group scheduling** (up to `max_inflight` groups encoded, fanned
 //!   out and collected simultaneously, with per-group reply routing and a
 //!   decode thread pool — a straggling group never head-of-line blocks the
-//!   next), fastest-subset collection, Byzantine error location
-//!   (Algorithms 1–2) and Berrut decoding, plus replication and ParM-proxy
-//!   baselines, a TCP front-end with out-of-order response delivery keyed
-//!   by request id, a deterministic fault-model subsystem
+//!   next), named fault profiles, verified decode with the escalation
+//!   ladder (full-set decode → homogeneous locator → group redispatch →
+//!   degraded delivery) and shared [`crate::metrics::ServingMetrics`] — so
+//!   every paper comparison measures redundancy math, not coordinator
+//!   differences. Around it: a TCP front-end with out-of-order response
+//!   delivery keyed by request id, the deterministic fault-model subsystem
 //!   ([`crate::sim::faults`]: per-worker crash / slow-tail / flaky /
-//!   Byzantine behavior programs with verified decode and an escalation
-//!   ladder), metrics and the experiment harness that regenerates every
-//!   figure in the paper.
+//!   Byzantine behavior programs), and the experiment harness that
+//!   regenerates every figure in the paper through the same service.
 //! * **Layer 2** — the hosted models: pure-JAX CNN classifiers, trained at
 //!   build time and lowered AOT to HLO text (`python/compile/`).
 //! * **Layer 1** — Pallas kernels for the compute hot spots (tiled matmul

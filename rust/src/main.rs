@@ -16,15 +16,16 @@ use std::sync::Arc;
 use anyhow::{bail, Context, Result};
 
 use approxifer::cli::{Args, Spec};
+use approxifer::coding::ServingScheme;
 use approxifer::config::AppConfig;
-use approxifer::coordinator::{Service, ServiceConfig, Strategy, VerifyPolicy};
+use approxifer::coordinator::{Service, VerifyPolicy};
 use approxifer::data::{Golden, TestSet};
 use approxifer::harness::{self, FigureContext, Report};
 use approxifer::runtime::{CompiledModel, Manifest, Runtime};
 use approxifer::server::Server;
 use approxifer::sim::faults::FaultProfile;
 use approxifer::util::logging;
-use approxifer::workers::{PjrtEngine, WorkerSpec};
+use approxifer::workers::PjrtEngine;
 
 const USAGE: &str = "usage: approxifer <serve|infer|figures|latency|golden|info> [flags]
   common: --config FILE  --set section.key=value (repeatable)  --artifacts DIR
@@ -100,53 +101,54 @@ fn run(argv: &[String]) -> Result<()> {
     }
 }
 
-/// Build the online service over the configured PJRT model.
+/// Build the online service over the configured PJRT model: any strategy
+/// (approxifer / replication / parm / uncoded) serves through the one
+/// scheme-agnostic engine.
 fn build_service(cfg: &AppConfig) -> Result<(Arc<Service>, usize)> {
-    if cfg.strategy != Strategy::ApproxIfer {
-        bail!(
-            "online serving currently runs the ApproxIFER strategy; use the \
-             harness for baseline comparisons"
-        );
-    }
     let manifest = Manifest::load(&cfg.artifacts)?;
     let rt = Runtime::cpu()?;
     let entry = manifest.model(&cfg.arch, &cfg.dataset, 1)?;
     let model = CompiledModel::load(&rt, &manifest.root, entry)?;
     let payload = model.payload();
     let engine = Arc::new(PjrtEngine::new(model));
-    let mut svc_cfg = ServiceConfig::new(cfg.params);
-    svc_cfg.flush_after = cfg.flush_after;
-    svc_cfg.worker_specs =
-        vec![WorkerSpec::new(cfg.worker_latency); cfg.params.num_workers()];
+    let scheme = cfg.strategy.scheme(cfg.params);
+    let mut builder = Service::builder(scheme.clone())
+        .engine(engine)
+        .flush_after(cfg.flush_after)
+        .worker_latency(cfg.worker_latency)
+        .verify(if cfg.verify_decode {
+            VerifyPolicy::on(cfg.verify_tol)
+        } else {
+            VerifyPolicy::off()
+        })
+        .seed(cfg.seed)
+        .max_inflight(cfg.max_inflight)
+        .decode_threads(cfg.decode_threads)
+        .group_timeout(cfg.group_timeout);
     if let Some(spec) = &cfg.fault_profile {
-        let profile = FaultProfile::parse(spec, cfg.params.num_workers(), cfg.seed)
+        let profile = FaultProfile::parse(spec, scheme.num_workers(), cfg.seed)
             .map_err(|e| anyhow::anyhow!("--faults: {e}"))?;
         log::info!("fault profile '{}': faulty workers {:?}", profile.name, profile.faulty());
-        svc_cfg.set_fault_profile(&profile);
+        builder = builder.fault_profile(profile);
     }
-    svc_cfg.verify = if cfg.verify_decode {
-        VerifyPolicy::on(cfg.verify_tol)
-    } else {
-        VerifyPolicy::off()
-    };
-    svc_cfg.seed = cfg.seed;
-    svc_cfg.max_inflight = cfg.max_inflight;
-    svc_cfg.decode_threads = cfg.decode_threads;
-    svc_cfg.group_timeout = cfg.group_timeout;
-    Ok((Arc::new(Service::start(engine, svc_cfg)), payload))
+    Ok((Arc::new(builder.spawn()?), payload))
 }
 
 fn serve(cfg: &AppConfig) -> Result<()> {
     let (service, payload) = build_service(cfg)?;
     let server = Server::start(&cfg.bind, service.clone(), payload)?;
+    // Report the scheme's actual envelope, not the raw config triple (the
+    // baselines interpret (K,S,E) their own way).
+    let scheme = service.scheme();
     println!(
-        "approxifer serving {}/{} K={} S={} E={} ({} workers) on {}",
+        "approxifer serving {}/{} scheme={} K={} tolerates S={} E={} ({} workers) on {}",
         cfg.arch,
         cfg.dataset,
-        cfg.params.k,
-        cfg.params.s,
-        cfg.params.e,
-        cfg.params.num_workers(),
+        scheme.name(),
+        scheme.group_size(),
+        scheme.stragglers_tolerated(),
+        scheme.byzantine_tolerated(),
+        scheme.num_workers(),
         server.addr()
     );
     // Serve until killed; dump metrics every 30s.

@@ -140,6 +140,9 @@ pub struct ServingMetrics {
     pub verify_escalations: Counter,
     /// Groups re-encoded and re-dispatched after failed verification.
     pub redispatches: Counter,
+    /// Decode-matrix cache entries evicted by the bounded hot-entry
+    /// eviction (drained from the code object by the scheme decode path).
+    pub decode_cache_evictions: Counter,
     /// Verified decodes where the first (pinned) locate pass held up.
     pub locator_hits: Counter,
     /// Verified decodes where the first locate pass produced an
@@ -175,7 +178,7 @@ impl ServingMetrics {
         ));
         out.push_str(&format!(
             "faults: corrupt_injected={} drops={} verify_fail={} escalated={} redispatched={} \
-             locator_hit={} locator_miss={}\n",
+             locator_hit={} locator_miss={} cache_evictions={}\n",
             self.corrupt_replies_injected.get(),
             self.worker_drops.get(),
             self.verify_failures.get(),
@@ -183,6 +186,7 @@ impl ServingMetrics {
             self.redispatches.get(),
             self.locator_hits.get(),
             self.locator_misses.get(),
+            self.decode_cache_evictions.get(),
         ));
         out.push_str(&self.group_latency.summary_line("  group"));
         out.push('\n');

@@ -261,16 +261,19 @@ impl Client {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coding::CodeParams;
-    use crate::coordinator::ServiceConfig;
+    use crate::coding::{ApproxIferCode, CodeParams};
     use crate::workers::LinearMockEngine;
 
     fn start_test_server(k: usize, d: usize, c: usize) -> (Server, Arc<Service>) {
         let engine = Arc::new(LinearMockEngine::new(d, c));
-        let params = CodeParams::new(k, 1, 0);
-        let mut cfg = ServiceConfig::new(params);
-        cfg.flush_after = Duration::from_millis(10);
-        let service = Arc::new(Service::start(engine, cfg));
+        let scheme = Arc::new(ApproxIferCode::new(CodeParams::new(k, 1, 0)));
+        let service = Arc::new(
+            Service::builder(scheme)
+                .engine(engine)
+                .flush_after(Duration::from_millis(10))
+                .spawn()
+                .unwrap(),
+        );
         let server = Server::start("127.0.0.1:0", service.clone(), d).unwrap();
         (server, service)
     }
@@ -375,10 +378,14 @@ mod tests {
         // PING on one raw connection: the PING response must come back
         // first, and both responses must carry their request ids.
         let engine = Arc::new(LinearMockEngine::new(8, 3));
-        let params = CodeParams::new(4, 1, 0);
-        let mut cfg = ServiceConfig::new(params);
-        cfg.flush_after = Duration::from_millis(150);
-        let service = Arc::new(Service::start(engine, cfg));
+        let scheme = Arc::new(ApproxIferCode::new(CodeParams::new(4, 1, 0)));
+        let service = Arc::new(
+            Service::builder(scheme)
+                .engine(engine)
+                .flush_after(Duration::from_millis(150))
+                .spawn()
+                .unwrap(),
+        );
         let server = Server::start("127.0.0.1:0", service.clone(), 8).unwrap();
         let mut stream = std::net::TcpStream::connect(server.addr()).unwrap();
         stream.set_nodelay(true).ok();

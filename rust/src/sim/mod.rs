@@ -149,7 +149,6 @@ pub fn run_scenario(
 mod tests {
     use super::*;
     use crate::coding::CodeParams;
-    use crate::coordinator::ServiceConfig;
     use crate::workers::LinearMockEngine;
 
     #[test]
@@ -172,11 +171,15 @@ mod tests {
 
     #[test]
     fn scenario_end_to_end_with_mock() {
-        let params = CodeParams::new(4, 1, 0);
         let engine = Arc::new(LinearMockEngine::new(8, 3));
-        let mut cfg = ServiceConfig::new(params);
-        cfg.flush_after = Duration::from_millis(5);
-        let service = Arc::new(crate::coordinator::Service::start(engine, cfg));
+        let scheme = Arc::new(crate::coding::ApproxIferCode::new(CodeParams::new(4, 1, 0)));
+        let service = Arc::new(
+            crate::coordinator::Service::builder(scheme)
+                .engine(engine)
+                .flush_after(Duration::from_millis(5))
+                .spawn()
+                .unwrap(),
+        );
         let report =
             run_scenario(&service, 8, 32, Arrivals::Uniform { rate: 2000.0 }, 11).unwrap();
         assert_eq!(report.sent, 32);

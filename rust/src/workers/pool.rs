@@ -10,10 +10,12 @@
 //!   harness and the benches.
 //! * **Routed** — [`WorkerPool::start_router`] moves the reply channel into a
 //!   [`ReplyRouter`] thread that demultiplexes replies **per group**: the
-//!   concurrent coordinator registers each in-flight group (wait count +
-//!   deadline) and receives a [`CollectedGroup`] on its completion channel
-//!   the moment the fastest subset has arrived — multiple groups collect
-//!   simultaneously, so a straggling group never blocks the next one.
+//!   concurrent coordinator registers each in-flight group (a scheme's
+//!   [`CollectPolicy`] + deadline) and receives a [`CollectedGroup`] on its
+//!   completion channel the moment the policy's slot quotas are met — the
+//!   fastest subset for the coded schemes, per-query quorums for
+//!   replication. Multiple groups collect simultaneously, so a straggling
+//!   group never blocks the next one.
 //!
 //! Fault-injection semantics: a worker's [`LatencyModel`] models *service
 //! time* and occupies the worker thread; its [`Behavior`] program (the
@@ -34,6 +36,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::coding::serving::CollectPolicy;
 use crate::metrics::ServingMetrics;
 use crate::sim::faults::{Behavior, BehaviorState, FaultAction};
 use crate::util::rng::Rng;
@@ -256,24 +259,34 @@ impl WorkerPool {
     }
 }
 
-/// A group whose collection finished (fastest subset arrived, or the
-/// deadline/error budget made completion impossible).
+/// A group whose collection finished (the policy's slot quotas were met,
+/// or the deadline/error budget made completion impossible).
 pub struct CollectedGroup {
     pub group: u64,
     /// Reply payload per worker id (`None` = not received / errored).
     pub replies: Vec<Option<Vec<f32>>>,
     pub received: usize,
     pub errors: usize,
-    /// True when `received` reached the registered wait count.
+    /// True when every collection slot met its reply quota.
     pub complete: bool,
+    /// True when collection stopped because worker errors made the quota
+    /// unreachable (vs. a deadline expiry).
+    pub undecodable: bool,
 }
 
 struct PendingGroup {
-    wait_for: usize,
+    policy: CollectPolicy,
     deadline: Instant,
     replies: Vec<Option<Vec<f32>>>,
     received: usize,
     errors: usize,
+    /// Per-slot successful-reply and error counts.
+    slot_ok: Vec<usize>,
+    slot_err: Vec<usize>,
+    /// Workers feeding each slot.
+    slot_size: Vec<usize>,
+    /// Slots still short of the policy's `need`.
+    slots_pending: usize,
     done: Sender<CollectedGroup>,
 }
 
@@ -314,23 +327,36 @@ impl ReplyRouter {
         ReplyRouter { routes, stale, stop, handle: Some(handle) }
     }
 
-    /// Register a dispatched group: collect until `wait_for` distinct worker
-    /// replies arrive (→ `complete == true` on `done`) or the deadline
+    /// Register a dispatched group: collect until every slot of `policy`
+    /// has its reply quota (→ `complete == true` on `done`) or the deadline
     /// passes / too many workers error for completion to remain possible.
     pub fn register(
         &self,
         group: u64,
-        num_workers: usize,
-        wait_for: usize,
+        policy: CollectPolicy,
         deadline: Instant,
         done: Sender<CollectedGroup>,
     ) {
+        let num_workers = policy.num_workers();
+        let n_slots = policy.num_slots();
+        let mut slot_size = vec![0usize; n_slots];
+        for &s in &policy.slots {
+            slot_size[s] += 1;
+        }
+        debug_assert!(
+            slot_size.iter().all(|&n| n >= policy.need),
+            "collect policy demands more replies than a slot has workers"
+        );
         let pending = PendingGroup {
-            wait_for,
+            policy,
             deadline,
             replies: vec![None; num_workers],
             received: 0,
             errors: 0,
+            slot_ok: vec![0; n_slots],
+            slot_err: vec![0; n_slots],
+            slot_size,
+            slots_pending: n_slots,
             done,
         };
         self.routes.lock().unwrap().insert(group, pending);
@@ -384,28 +410,37 @@ fn route_reply(
         stale.fetch_add(1, Ordering::Relaxed);
         return;
     };
+    let slot = pending.policy.slots[reply.worker_id];
     match reply.result {
         Ok(logits) => {
             if pending.replies[reply.worker_id].is_none() {
                 pending.replies[reply.worker_id] = Some(logits);
                 pending.received += 1;
+                pending.slot_ok[slot] += 1;
+                if pending.slot_ok[slot] == pending.policy.need {
+                    pending.slots_pending -= 1;
+                }
             }
         }
         Err(e) => {
             metrics.errors.inc();
             pending.errors += 1;
+            pending.slot_err[slot] += 1;
             log::warn!("worker {} failed group {}: {e}", reply.worker_id, reply.group);
         }
     }
-    let complete = pending.received >= pending.wait_for;
-    // Fail fast when enough workers errored that the wait count is
-    // unreachable (every worker replies at most once per group).
-    let unreachable = pending.replies.len() - pending.errors < pending.wait_for;
+    let complete = pending.slots_pending == 0;
+    // Fail fast when enough of a slot's workers errored that its quota is
+    // unreachable (every worker replies at most once per group). Only the
+    // slot this reply touched can have changed.
+    let unreachable = !complete
+        && pending.slot_ok[slot] < pending.policy.need
+        && pending.slot_size[slot] - pending.slot_err[slot] < pending.policy.need;
     if complete || unreachable {
         let group = reply.group;
         let pending = map.remove(&group).unwrap();
         drop(map);
-        deliver(group, pending, complete);
+        deliver(group, pending, complete, unreachable);
     }
 }
 
@@ -418,13 +453,13 @@ fn expire_deadlines(routes: &Mutex<HashMap<u64, PendingGroup>>) {
         ids.into_iter().map(|g| (g, map.remove(&g).unwrap())).collect()
     };
     for (group, pending) in expired {
-        deliver(group, pending, false);
+        deliver(group, pending, false, false);
     }
 }
 
-fn deliver(group: u64, pending: PendingGroup, complete: bool) {
+fn deliver(group: u64, pending: PendingGroup, complete: bool, undecodable: bool) {
     let PendingGroup { replies, received, errors, done, .. } = pending;
-    let _ = done.send(CollectedGroup { group, replies, received, errors, complete });
+    let _ = done.send(CollectedGroup { group, replies, received, errors, complete, undecodable });
 }
 
 #[cfg(test)]
@@ -537,8 +572,8 @@ mod tests {
         assert!(p.recv_timeout(Duration::from_millis(10)).is_none(), "channel was routed");
         let (done_tx, done_rx) = channel();
         let deadline = Instant::now() + Duration::from_secs(5);
-        router.register(1, 3, 2, deadline, done_tx.clone());
-        router.register(2, 3, 2, deadline, done_tx);
+        router.register(1, CollectPolicy::fastest(3, 2), deadline, done_tx.clone());
+        router.register(2, CollectPolicy::fastest(3, 2), deadline, done_tx);
         // Group 1's tasks straggle; group 2's do not.
         for w in 0..3 {
             p.send(w, task(1, Duration::from_millis(150))).unwrap();
@@ -566,7 +601,12 @@ mod tests {
         let metrics = Arc::new(ServingMetrics::new());
         let router = p.start_router(metrics);
         let (done_tx, done_rx) = channel();
-        router.register(9, 2, 2, Instant::now() + Duration::from_millis(60), done_tx);
+        router.register(
+            9,
+            CollectPolicy::fastest(2, 2),
+            Instant::now() + Duration::from_millis(60),
+            done_tx,
+        );
         // Only one worker gets a task: wait_for=2 can never be met.
         p.send(0, task(9, Duration::ZERO)).unwrap();
         let out = done_rx.recv_timeout(Duration::from_secs(5)).unwrap();
@@ -641,12 +681,40 @@ mod tests {
     }
 
     #[test]
+    fn router_per_slot_policy_waits_for_every_slot() {
+        // Replication-style policy: workers {0,2} feed slot 0, {1,3} feed
+        // slot 1, need 1 each. A reply on only one slot must NOT complete
+        // the group; one reply per slot must.
+        let mut p = pool(4);
+        let metrics = Arc::new(ServingMetrics::new());
+        let router = p.start_router(metrics);
+        let (done_tx, done_rx) = channel();
+        let deadline = Instant::now() + Duration::from_secs(5);
+        router.register(3, CollectPolicy::per_slot(vec![0, 1, 0, 1], 1), deadline, done_tx);
+        // Both slot-0 workers reply; slot 1 stays silent for 100ms.
+        p.send(0, task(3, Duration::ZERO)).unwrap();
+        p.send(2, task(3, Duration::ZERO)).unwrap();
+        assert!(
+            done_rx.recv_timeout(Duration::from_millis(100)).is_err(),
+            "group completed with an empty slot"
+        );
+        p.send(1, task(3, Duration::ZERO)).unwrap();
+        let out = done_rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(out.complete);
+        assert!(!out.undecodable);
+        assert!(out.replies[1].is_some());
+        router.shutdown();
+        p.shutdown();
+    }
+
+    #[test]
     fn router_deregister_drops_group() {
         let mut p = pool(1);
         let metrics = Arc::new(ServingMetrics::new());
         let router = p.start_router(metrics);
         let (done_tx, done_rx) = channel();
-        router.register(4, 1, 1, Instant::now() + Duration::from_secs(5), done_tx);
+        let deadline = Instant::now() + Duration::from_secs(5);
+        router.register(4, CollectPolicy::fastest(1, 1), deadline, done_tx);
         assert!(router.deregister(4));
         assert!(!router.deregister(4));
         assert!(done_rx.recv_timeout(Duration::from_millis(50)).is_err());

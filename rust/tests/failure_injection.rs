@@ -10,8 +10,8 @@ use std::time::Duration;
 
 use anyhow::Result;
 
-use approxifer::coding::CodeParams;
-use approxifer::coordinator::{FaultPlan, GroupPipeline, Service, ServiceConfig, VerifyPolicy};
+use approxifer::coding::{ApproxIferCode, CodeParams};
+use approxifer::coordinator::{FaultPlan, GroupPipeline, Service, VerifyPolicy};
 use approxifer::metrics::ServingMetrics;
 use approxifer::sim::faults::FaultProfile;
 use approxifer::workers::{
@@ -326,23 +326,24 @@ fn verification_failure_redispatches_and_recovers() {
     // rungs produce inconsistent decodes and the coordinator redispatches.
     // The redispatched group (id 2) is clean, verifies, and the clients
     // get accurate answers — transparently.
-    let params = CodeParams::new(2, 0, 1);
     let engine = Arc::new(LinearMockEngine::new(8, 6));
-    let mut cfg = ServiceConfig::new(params);
-    cfg.flush_after = Duration::from_millis(5);
-    cfg.verify = VerifyPolicy::on(0.4);
-    cfg.fault_hook = Some(Arc::new(|group| {
-        if group == 1 {
-            FaultPlan {
-                byzantine: vec![0, 1],
-                byz_mode: Some(ByzantineMode::Colluding { pact: 777, scale: 25.0 }),
-                ..FaultPlan::none()
+    let svc = Service::builder(Arc::new(ApproxIferCode::new(CodeParams::new(2, 0, 1))))
+        .engine(engine.clone())
+        .flush_after(Duration::from_millis(5))
+        .verify(VerifyPolicy::on(0.4))
+        .fault_hook(Arc::new(|group| {
+            if group == 1 {
+                FaultPlan {
+                    byzantine: vec![0, 1],
+                    byz_mode: Some(ByzantineMode::Colluding { pact: 777, scale: 25.0 }),
+                    ..FaultPlan::none()
+                }
+            } else {
+                FaultPlan::none()
             }
-        } else {
-            FaultPlan::none()
-        }
-    }));
-    let svc = Service::start(engine.clone(), cfg);
+        }))
+        .spawn()
+        .unwrap();
     let queries = smooth_queries(2, 8);
     let handles: Vec<_> = queries.iter().map(|q| svc.submit(q.clone())).collect();
     for (j, h) in handles.into_iter().enumerate() {
@@ -369,17 +370,18 @@ fn persistent_overbudget_corruption_serves_degraded_not_hung() {
     // If every dispatch (including the redispatch) is corrupted beyond
     // budget, the service must still answer — degraded, observable in the
     // metrics — rather than hang or error the group.
-    let params = CodeParams::new(2, 0, 1);
     let engine = Arc::new(LinearMockEngine::new(8, 6));
-    let mut cfg = ServiceConfig::new(params);
-    cfg.flush_after = Duration::from_millis(5);
-    cfg.verify = VerifyPolicy::on(0.4);
-    cfg.fault_hook = Some(Arc::new(|_group| FaultPlan {
-        byzantine: vec![0, 1],
-        byz_mode: Some(ByzantineMode::Colluding { pact: 4242, scale: 25.0 }),
-        ..FaultPlan::none()
-    }));
-    let svc = Service::start(engine, cfg);
+    let svc = Service::builder(Arc::new(ApproxIferCode::new(CodeParams::new(2, 0, 1))))
+        .engine(engine)
+        .flush_after(Duration::from_millis(5))
+        .verify(VerifyPolicy::on(0.4))
+        .fault_hook(Arc::new(|_group| FaultPlan {
+            byzantine: vec![0, 1],
+            byz_mode: Some(ByzantineMode::Colluding { pact: 4242, scale: 25.0 }),
+            ..FaultPlan::none()
+        }))
+        .spawn()
+        .unwrap();
     let queries = smooth_queries(2, 8);
     let handles: Vec<_> = queries.iter().map(|q| svc.submit(q.clone())).collect();
     for h in handles {

@@ -6,12 +6,16 @@
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use approxifer::coding::CodeParams;
-use approxifer::coordinator::{FaultPlan, PredictionHandle, Service, ServiceConfig};
+use approxifer::coding::{ApproxIferCode, CodeParams, ServingScheme};
+use approxifer::coordinator::{FaultPlan, PredictionHandle, Service};
 use approxifer::workers::{ByzantineMode, DelayMockEngine, InferenceEngine, LinearMockEngine};
 
 fn payload(j: usize, d: usize) -> Vec<f32> {
     (0..d).map(|t| ((j as f32) * 0.27 + (t as f32) * 0.019).sin()).collect()
+}
+
+fn approxifer(k: usize, s: usize, e: usize) -> Arc<dyn ServingScheme> {
+    Arc::new(ApproxIferCode::new(CodeParams::new(k, s, e)))
 }
 
 #[test]
@@ -22,24 +26,25 @@ fn straggled_group_does_not_block_later_groups() {
     // complete well within 1s — the serial coordinator would hold them
     // behind group 1's collect wait. (The 1s margin over ~ms of actual
     // work derisks loaded CI runners.)
-    let params = CodeParams::new(3, 1, 0);
     let engine = Arc::new(LinearMockEngine::new(8, 4));
-    let mut cfg = ServiceConfig::new(params);
-    cfg.max_inflight = 4;
-    cfg.decode_threads = 2;
-    cfg.seed = 7;
-    cfg.fault_hook = Some(Arc::new(|group| {
-        if group == 1 {
-            FaultPlan {
-                stragglers: vec![0, 1],
-                straggler_delay: Duration::from_secs(2),
-                ..FaultPlan::none()
+    let svc = Service::builder(approxifer(3, 1, 0))
+        .engine(engine.clone())
+        .max_inflight(4)
+        .decode_threads(2)
+        .seed(7)
+        .fault_hook(Arc::new(|group| {
+            if group == 1 {
+                FaultPlan {
+                    stragglers: vec![0, 1],
+                    straggler_delay: Duration::from_secs(2),
+                    ..FaultPlan::none()
+                }
+            } else {
+                FaultPlan::none()
             }
-        } else {
-            FaultPlan::none()
-        }
-    }));
-    let svc = Service::start(engine.clone(), cfg);
+        }))
+        .spawn()
+        .unwrap();
     let t0 = Instant::now();
     // 12 queries = exactly 4 full K=3 groups, formed in submission order.
     let handles: Vec<PredictionHandle> = (0..12).map(|j| svc.submit(payload(j, 8))).collect();
@@ -74,14 +79,15 @@ fn max_inflight_cap_is_enforced() {
     // Slow engine (20ms/query) + max_inflight=2 + 6 instant groups: the
     // batcher must block at least once on the inflight gate, and still
     // answer everything.
-    let params = CodeParams::new(1, 1, 0); // 2 workers
     let engine: Arc<dyn InferenceEngine> =
         Arc::new(DelayMockEngine::new(6, 2, Duration::from_millis(20)));
-    let mut cfg = ServiceConfig::new(params);
-    cfg.max_inflight = 2;
-    cfg.decode_threads = 1;
-    cfg.flush_after = Duration::from_millis(1);
-    let svc = Service::start(engine, cfg);
+    let svc = Service::builder(approxifer(1, 1, 0)) // 2 workers
+        .engine(engine)
+        .max_inflight(2)
+        .decode_threads(1)
+        .flush_after(Duration::from_millis(1))
+        .spawn()
+        .unwrap();
     let handles: Vec<PredictionHandle> = (0..6).map(|j| svc.submit(payload(j, 6))).collect();
     for h in handles {
         h.wait_timeout(Duration::from_secs(10)).unwrap();
@@ -98,17 +104,18 @@ fn max_inflight_cap_is_enforced() {
 fn byzantine_location_works_under_concurrency() {
     // Deterministic adversary: worker 2 corrupts every group. Four groups
     // in flight; every decode must flag it and stay near the reference.
-    let params = CodeParams::new(3, 0, 1);
     let engine = Arc::new(LinearMockEngine::new(10, 6));
-    let mut cfg = ServiceConfig::new(params);
-    cfg.max_inflight = 4;
-    cfg.decode_threads = 2;
-    cfg.fault_hook = Some(Arc::new(|_group| FaultPlan {
-        byzantine: vec![2],
-        byz_mode: Some(ByzantineMode::GaussianNoise { sigma: 20.0 }),
-        ..FaultPlan::none()
-    }));
-    let svc = Service::start(engine.clone(), cfg);
+    let svc = Service::builder(approxifer(3, 0, 1))
+        .engine(engine.clone())
+        .max_inflight(4)
+        .decode_threads(2)
+        .fault_hook(Arc::new(|_group| FaultPlan {
+            byzantine: vec![2],
+            byz_mode: Some(ByzantineMode::GaussianNoise { sigma: 20.0 }),
+            ..FaultPlan::none()
+        }))
+        .spawn()
+        .unwrap();
     let handles: Vec<PredictionHandle> = (0..12).map(|j| svc.submit(payload(j, 10))).collect();
     for (j, h) in handles.into_iter().enumerate() {
         let pred = h.wait_timeout(Duration::from_secs(10)).unwrap();
@@ -133,17 +140,17 @@ fn sustained_open_loop_overlap_decodes_everything() {
     // latency: everything must decode exactly once (no lost or duplicated
     // replies under reordering).
     use approxifer::sim::{run_scenario, Arrivals};
-    use approxifer::workers::{LatencyModel, WorkerSpec};
-    let params = CodeParams::new(4, 1, 0);
+    use approxifer::workers::LatencyModel;
     let engine = Arc::new(LinearMockEngine::new(8, 3));
-    let mut cfg = ServiceConfig::new(params);
-    cfg.flush_after = Duration::from_millis(2);
-    cfg.max_inflight = 4;
-    cfg.worker_specs = vec![
-        WorkerSpec::new(LatencyModel::Bimodal { base_ms: 0.5, straggler_ms: 15.0, p: 0.15 });
-        params.num_workers()
-    ];
-    let svc = Arc::new(Service::start(engine, cfg));
+    let svc = Arc::new(
+        Service::builder(approxifer(4, 1, 0))
+            .engine(engine)
+            .flush_after(Duration::from_millis(2))
+            .max_inflight(4)
+            .worker_latency(LatencyModel::Bimodal { base_ms: 0.5, straggler_ms: 15.0, p: 0.15 })
+            .spawn()
+            .unwrap(),
+    );
     let report =
         run_scenario(&svc, 8, 80, Arrivals::Bursty { burst: 80, period_ms: 0.0 }, 11).unwrap();
     assert_eq!(report.completed, 80);

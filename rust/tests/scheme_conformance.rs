@@ -1,0 +1,234 @@
+//! Scheme-conformance suite: every [`ServingScheme`] implementation runs
+//! the same encode → fault → collect → decode matrix through the unified
+//! `Service` — honest, `crash:1@0` and `byz-random` profiles under fixed
+//! seeds — and each scheme's documented tolerance envelope
+//! (`stragglers_tolerated` / `byzantine_tolerated`) is asserted to hold:
+//! in-envelope faults must be absorbed accurately, out-of-envelope faults
+//! must degrade or fail cleanly (never hang).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use approxifer::coding::{
+    ApproxIferCode, CodeParams, ParmProxy, Replication, ServingScheme, Uncoded, VerifyPolicy,
+};
+use approxifer::coordinator::Service;
+use approxifer::sim::faults::FaultProfile;
+use approxifer::workers::{InferenceEngine, LinearMockEngine};
+
+const D: usize = 8;
+const C: usize = 6;
+const SEED: u64 = 0x5EED;
+
+fn payload(j: usize) -> Vec<f32> {
+    (0..D).map(|t| ((j as f32) * 0.21 + (t as f32) * 0.019).sin()).collect()
+}
+
+/// The conformance fleet: every scheme, at straggler- and (where
+/// supported) Byzantine-tolerant parameters.
+fn straggler_schemes() -> Vec<Arc<dyn ServingScheme>> {
+    vec![
+        Arc::new(ApproxIferCode::new(CodeParams::new(4, 1, 0))),
+        Arc::new(Replication::new(4, 1, 0)),
+        Arc::new(ParmProxy::new(4)),
+    ]
+}
+
+fn byzantine_schemes() -> Vec<Arc<dyn ServingScheme>> {
+    vec![
+        Arc::new(ApproxIferCode::new(CodeParams::new(3, 0, 1))),
+        Arc::new(Replication::new(3, 0, 1)),
+    ]
+}
+
+/// Serve `groups` full K-groups through a freshly built service; returns
+/// per-query results (in submission order) and the service for metrics.
+fn serve(
+    scheme: Arc<dyn ServingScheme>,
+    profile: FaultProfile,
+    verify: VerifyPolicy,
+    groups: usize,
+    group_timeout: Duration,
+) -> (Vec<anyhow::Result<Vec<f32>>>, Service, Arc<LinearMockEngine>) {
+    let engine = Arc::new(LinearMockEngine::new(D, C));
+    let svc = Service::builder(scheme)
+        .engine(engine.clone())
+        .flush_after(Duration::from_millis(5))
+        .verify(verify)
+        .seed(SEED)
+        .group_timeout(group_timeout)
+        .fault_profile(profile)
+        .spawn()
+        .unwrap();
+    let k = svc.scheme().group_size();
+    let handles: Vec<_> = (0..groups * k).map(|j| svc.submit(payload(j))).collect();
+    let results: Vec<anyhow::Result<Vec<f32>>> =
+        handles.into_iter().map(|h| h.wait_timeout(Duration::from_secs(20))).collect();
+    (results, svc, engine)
+}
+
+/// Max per-class deviation from the engine's reference prediction a scheme
+/// is allowed: coded approximation error for ApproxIFER, numerical noise
+/// for the exact schemes.
+fn tolerance(scheme: &dyn ServingScheme) -> f32 {
+    if scheme.name() == "approxifer" {
+        if scheme.byzantine_tolerated() > 0 {
+            0.6
+        } else {
+            0.35
+        }
+    } else {
+        1e-3
+    }
+}
+
+fn assert_accurate(
+    name: &str,
+    results: &[anyhow::Result<Vec<f32>>],
+    engine: &LinearMockEngine,
+    tol: f32,
+) {
+    for (j, r) in results.iter().enumerate() {
+        let pred = r.as_ref().unwrap_or_else(|e| panic!("{name}: query {j} failed: {e:#}"));
+        let want = engine.infer1(&payload(j)).unwrap();
+        for t in 0..C {
+            assert!(
+                (pred[t] - want[t]).abs() < tol,
+                "{name}: q{j} c{t}: {} vs {} (tol {tol})",
+                pred[t],
+                want[t]
+            );
+        }
+    }
+}
+
+#[test]
+fn honest_fleet_every_scheme_is_accurate() {
+    let mut all: Vec<Arc<dyn ServingScheme>> = straggler_schemes();
+    all.extend(byzantine_schemes());
+    all.push(Arc::new(Uncoded::new(4)));
+    for scheme in all {
+        let name = scheme.name().to_string();
+        let tol = tolerance(scheme.as_ref());
+        let nw = scheme.num_workers();
+        let verify = if scheme.byzantine_tolerated() > 0 {
+            VerifyPolicy::on(0.4)
+        } else {
+            VerifyPolicy::off()
+        };
+        let (results, svc, engine) = serve(
+            scheme,
+            FaultProfile::honest(nw),
+            verify,
+            3,
+            Duration::from_secs(20),
+        );
+        assert_accurate(&name, &results, &engine, tol);
+        assert_eq!(svc.metrics.groups_decoded.get(), 3, "{name}");
+        assert_eq!(svc.metrics.groups_failed.get(), 0, "{name}");
+        svc.shutdown();
+    }
+}
+
+#[test]
+fn one_crashed_worker_is_absorbed_by_straggler_tolerant_schemes() {
+    // crash:1@0 = one seed-chosen worker never answers — a permanent
+    // straggler. Every scheme advertising stragglers_tolerated >= 1 must
+    // serve every query at full accuracy.
+    for scheme in straggler_schemes() {
+        let name = scheme.name().to_string();
+        assert!(scheme.stragglers_tolerated() >= 1, "{name} not in this matrix");
+        let tol = tolerance(scheme.as_ref());
+        let profile = FaultProfile::parse("crash:1@0", scheme.num_workers(), SEED).unwrap();
+        let (results, svc, engine) =
+            serve(scheme, profile, VerifyPolicy::off(), 3, Duration::from_secs(20));
+        assert_accurate(&name, &results, &engine, tol);
+        assert_eq!(svc.metrics.groups_failed.get(), 0, "{name}");
+        svc.shutdown();
+    }
+}
+
+#[test]
+fn one_crashed_worker_fails_uncoded_cleanly() {
+    // Uncoded advertises stragglers_tolerated == 0: with one crashed
+    // worker its groups must error out at the collection deadline — a
+    // clean, observable failure, not a hang.
+    let scheme: Arc<dyn ServingScheme> = Arc::new(Uncoded::new(4));
+    assert_eq!(scheme.stragglers_tolerated(), 0);
+    let profile = FaultProfile::parse("crash:1@0", scheme.num_workers(), SEED).unwrap();
+    let (results, svc, _engine) =
+        serve(scheme, profile, VerifyPolicy::off(), 2, Duration::from_millis(400));
+    for (j, r) in results.iter().enumerate() {
+        assert!(r.is_err(), "query {j} should have failed with a crashed worker");
+    }
+    assert_eq!(svc.metrics.groups_failed.get(), 2);
+    assert_eq!(svc.metrics.groups_decoded.get(), 0);
+    svc.shutdown();
+}
+
+#[test]
+fn one_byzantine_worker_is_defeated_by_tolerant_schemes() {
+    // byz-random:1:15 = one seed-chosen Gaussian-noise adversary. Schemes
+    // with byzantine_tolerated >= 1 must locate/outvote it and stay
+    // accurate; verification must confirm the decode.
+    for scheme in byzantine_schemes() {
+        let name = scheme.name().to_string();
+        assert!(scheme.byzantine_tolerated() >= 1, "{name} not in this matrix");
+        let tol = tolerance(scheme.as_ref());
+        let profile = FaultProfile::parse("byz-random:1:15", scheme.num_workers(), SEED).unwrap();
+        let (results, svc, engine) =
+            serve(scheme, profile, VerifyPolicy::on(0.4), 3, Duration::from_secs(20));
+        assert_accurate(&name, &results, &engine, tol);
+        assert!(
+            svc.metrics.corrupt_replies_injected.get() > 0,
+            "{name}: injection never fired"
+        );
+        assert!(svc.metrics.byzantine_flagged.get() > 0, "{name}: adversary never flagged");
+        assert_eq!(svc.metrics.redispatches.get(), 0, "{name}: in-envelope must not redispatch");
+        svc.shutdown();
+    }
+}
+
+#[test]
+fn byzantine_worker_corrupts_unprotected_schemes_but_service_survives() {
+    // Uncoded has no Byzantine tolerance: the adversary's answers go
+    // straight through. The envelope claim under test is liveness — every
+    // query still resolves — and that the injection actually happened.
+    let scheme: Arc<dyn ServingScheme> = Arc::new(Uncoded::new(3));
+    assert_eq!(scheme.byzantine_tolerated(), 0);
+    let profile = FaultProfile::parse("byz-random:1:15", scheme.num_workers(), SEED).unwrap();
+    let (results, svc, _engine) =
+        serve(scheme, profile, VerifyPolicy::off(), 3, Duration::from_secs(20));
+    for (j, r) in results.iter().enumerate() {
+        assert!(r.is_ok(), "query {j} must still resolve: {:?}", r.as_ref().err());
+    }
+    assert!(svc.metrics.corrupt_replies_injected.get() > 0, "injection never fired");
+    assert_eq!(svc.metrics.groups_failed.get(), 0);
+    svc.shutdown();
+}
+
+#[test]
+fn crash_scenario_replays_bit_identically_for_every_scheme() {
+    // Fixed seed + crash profile → the decode set is scheduling-free for
+    // every scheme, so the served predictions must be byte-identical
+    // across runs (the determinism contract the fault subsystem
+    // guarantees).
+    let build: Vec<fn() -> Arc<dyn ServingScheme>> = vec![
+        || Arc::new(ApproxIferCode::new(CodeParams::new(4, 1, 0))),
+        || Arc::new(Replication::new(4, 1, 0)),
+        || Arc::new(ParmProxy::new(4)),
+    ];
+    for mk in build {
+        let run = || {
+            let scheme = mk();
+            let profile =
+                FaultProfile::parse("crash:1@0", scheme.num_workers(), SEED).unwrap();
+            let (results, svc, _engine) =
+                serve(scheme, profile, VerifyPolicy::off(), 2, Duration::from_secs(20));
+            svc.shutdown();
+            results.into_iter().map(|r| r.unwrap()).collect::<Vec<_>>()
+        };
+        let (a, b) = (run(), run());
+        assert_eq!(a, b, "replay diverged");
+    }
+}

@@ -5,12 +5,16 @@ use std::io::{Read, Write};
 use std::sync::Arc;
 use std::time::Duration;
 
-use approxifer::coding::CodeParams;
-use approxifer::coordinator::{Service, ServiceConfig, VerifyPolicy};
+use approxifer::coding::{ApproxIferCode, CodeParams, ServingScheme};
+use approxifer::coordinator::{Service, VerifyPolicy};
 use approxifer::server::{Client, Server};
 use approxifer::sim::faults::{Behavior, FaultProfile};
 use approxifer::sim::{run_scenario, Arrivals};
 use approxifer::workers::{InferenceEngine, LatencyModel, LinearMockEngine, WorkerSpec};
+
+fn approxifer(k: usize, s: usize, e: usize) -> Arc<dyn ServingScheme> {
+    Arc::new(ApproxIferCode::new(CodeParams::new(k, s, e)))
+}
 
 fn service(
     k: usize,
@@ -20,10 +24,12 @@ fn service(
     c: usize,
 ) -> (Arc<Service>, Arc<LinearMockEngine>) {
     let engine = Arc::new(LinearMockEngine::new(d, c));
-    let params = CodeParams::new(k, s, e);
-    let mut cfg = ServiceConfig::new(params);
-    cfg.flush_after = Duration::from_millis(10);
-    (Arc::new(Service::start(engine.clone(), cfg)), engine)
+    let svc = Service::builder(approxifer(k, s, e))
+        .engine(engine.clone())
+        .flush_after(Duration::from_millis(10))
+        .spawn()
+        .unwrap();
+    (Arc::new(svc), engine)
 }
 
 #[test]
@@ -58,14 +64,23 @@ fn tcp_roundtrip_approximates_reference() {
 #[test]
 fn scenario_under_straggler_tail_completes() {
     let engine = Arc::new(LinearMockEngine::new(8, 3));
-    let params = CodeParams::new(4, 1, 0);
-    let mut cfg = ServiceConfig::new(params);
-    cfg.flush_after = Duration::from_millis(5);
-    cfg.worker_specs = vec![
-        WorkerSpec::new(LatencyModel::Bimodal { base_ms: 0.5, straggler_ms: 40.0, p: 0.1 });
-        params.num_workers()
-    ];
-    let svc = Arc::new(Service::start(engine, cfg));
+    let scheme = approxifer(4, 1, 0);
+    let nw = scheme.num_workers();
+    let svc = Arc::new(
+        Service::builder(scheme)
+            .engine(engine)
+            .flush_after(Duration::from_millis(5))
+            .workers(vec![
+                WorkerSpec::new(LatencyModel::Bimodal {
+                    base_ms: 0.5,
+                    straggler_ms: 40.0,
+                    p: 0.1
+                });
+                nw
+            ])
+            .spawn()
+            .unwrap(),
+    );
     let report = run_scenario(&svc, 8, 64, Arrivals::Poisson { rate: 500.0 }, 3).unwrap();
     assert_eq!(report.completed, 64);
     assert_eq!(report.failed, 0);
@@ -79,14 +94,17 @@ fn byzantine_service_keeps_answering() {
     // plan) with decode verification on: every group must still answer,
     // the adversary must be flagged, and verification must hold up.
     let engine = Arc::new(LinearMockEngine::new(8, 6));
-    let params = CodeParams::new(3, 0, 1);
-    let mut cfg = ServiceConfig::new(params);
-    cfg.flush_after = Duration::from_millis(5);
-    cfg.verify = VerifyPolicy::on(0.4);
-    let profile =
-        FaultProfile::parse("byz-random:1:20", params.num_workers(), cfg.seed).unwrap();
-    cfg.set_fault_profile(&profile);
-    let svc = Arc::new(Service::start(engine, cfg));
+    let scheme = approxifer(3, 0, 1);
+    let profile = FaultProfile::parse("byz-random:1:20", scheme.num_workers(), 0xA11CE).unwrap();
+    let svc = Arc::new(
+        Service::builder(scheme)
+            .engine(engine)
+            .flush_after(Duration::from_millis(5))
+            .verify(VerifyPolicy::on(0.4))
+            .fault_profile(profile)
+            .spawn()
+            .unwrap(),
+    );
     let report = run_scenario(&svc, 8, 30, Arrivals::Uniform { rate: 300.0 }, 4).unwrap();
     assert_eq!(report.completed, 30);
     assert!(svc.metrics.byzantine_flagged.get() > 0, "no adversaries flagged");
@@ -143,26 +161,33 @@ fn interleaved_request_ids_survive_slow_worker_reordering() {
     // id and the prediction for *that id's* payload (no crossed wires).
     let d = 8;
     let engine = Arc::new(LinearMockEngine::new(d, 3));
-    let params = CodeParams::new(2, 1, 0);
-    let mut cfg = ServiceConfig::new(params);
-    cfg.flush_after = Duration::from_millis(3);
-    cfg.max_inflight = 8;
-    for spec in cfg.worker_specs.iter_mut() {
-        spec.behavior = Behavior::Slow { base_ms: 0.0, tail_ms: 15.0, p: 0.5 };
+    let scheme = approxifer(2, 1, 0);
+    let nw = scheme.num_workers();
+    let mut profile = FaultProfile::honest(nw);
+    for b in profile.behaviors.iter_mut() {
+        *b = Behavior::Slow { base_ms: 0.0, tail_ms: 15.0, p: 0.5 };
     }
     use approxifer::coordinator::FaultPlan;
-    cfg.fault_hook = Some(Arc::new(|group| {
-        if group % 2 == 1 {
-            FaultPlan {
-                stragglers: vec![0, 1, 2],
-                straggler_delay: Duration::from_millis(80),
-                ..FaultPlan::none()
-            }
-        } else {
-            FaultPlan::none()
-        }
-    }));
-    let svc = Arc::new(Service::start(engine.clone(), cfg));
+    let svc = Arc::new(
+        Service::builder(scheme)
+            .engine(engine.clone())
+            .flush_after(Duration::from_millis(3))
+            .max_inflight(8)
+            .fault_profile(profile)
+            .fault_hook(Arc::new(|group| {
+                if group % 2 == 1 {
+                    FaultPlan {
+                        stragglers: vec![0, 1, 2],
+                        straggler_delay: Duration::from_millis(80),
+                        ..FaultPlan::none()
+                    }
+                } else {
+                    FaultPlan::none()
+                }
+            }))
+            .spawn()
+            .unwrap(),
+    );
     let server = Server::start("127.0.0.1:0", svc.clone(), d).unwrap();
     let addr = server.addr();
 
