@@ -8,7 +8,9 @@
 use std::sync::Arc;
 use std::time::Duration;
 
-use approxifer::coding::{ApproxIferCode, CodeParams, Replication, ServingScheme, Uncoded};
+use approxifer::coding::{
+    ApproxIferCode, CodeParams, Replication, ServingScheme, Uncoded, VerifyPolicy,
+};
 use approxifer::coordinator::{FaultPlan, Service};
 use approxifer::util::bench::{bench_cfg, black_box, group, BenchConfig};
 use approxifer::workers::{ByzantineMode, DelayMockEngine, InferenceEngine, LatencyModel};
@@ -84,6 +86,36 @@ fn main() {
         let scheme = Arc::new(ApproxIferCode::new(CodeParams::new(k, 1, 0)));
         let svc = service(scheme, Duration::ZERO, LatencyModel::None, 4);
         bench_cfg("approxifer_group_floor_k8_s1", cfg(), || one_group(&svc, &qs));
+        svc.shutdown();
+    }
+
+    group("slo hedge: straggler-stalled group served at the hedge deadline (K=4 S=1 E=1)");
+    {
+        // Two forced 200ms stragglers stall the full 10-of-11 quota; the
+        // 10ms SLO hedge decodes from the 9 fast replies instead, so the
+        // measured group latency sits at ~the hedge deadline, not the
+        // straggler tail.
+        let qs4 = queries(4, d);
+        let scheme = Arc::new(ApproxIferCode::new(CodeParams::new(4, 1, 1)));
+        let engine: Arc<dyn InferenceEngine> =
+            Arc::new(DelayMockEngine::new(d, 10, Duration::ZERO));
+        let svc = Service::builder(scheme)
+            .engine(engine)
+            .flush_after(Duration::from_millis(1))
+            .seed(6)
+            .slo(Duration::from_millis(10))
+            .group_timeout(Duration::from_secs(5))
+            // Required whenever an SLO coexists with a Byzantine budget
+            // (the hedge leans on the verification ladder).
+            .verify(VerifyPolicy::on(0.4))
+            .fault_hook(Arc::new(|_group| FaultPlan {
+                stragglers: vec![0, 1],
+                straggler_delay: Duration::from_millis(200),
+                ..FaultPlan::none()
+            }))
+            .spawn()
+            .unwrap();
+        bench_cfg("approxifer_group_k4_s1_e1_hedged", cfg(), || one_group(&svc, &qs4));
         svc.shutdown();
     }
 

@@ -18,6 +18,7 @@ use approxifer::coding::{
     ApproxIferCode, CodeParams, Replication, ServingScheme, Uncoded, VerifyPolicy,
 };
 use approxifer::coordinator::Service;
+use approxifer::harness::latency::{drifting_comparison, DriftRow};
 use approxifer::sim::faults::FaultProfile;
 use approxifer::sim::{run_scenario, Arrivals, ScenarioReport};
 use approxifer::util::bench::quick_mode;
@@ -123,8 +124,11 @@ fn main() {
     // ---- scheme comparison at matched worker counts ----------------------
     let scheme_rows = scheme_comparison_sweep(d, c, if quick { 27 } else { 90 });
 
+    // ---- adaptive control plane on the drifting-fault trace --------------
+    let adaptive_rows = adaptive_drift_sweep(d, c, if quick { 10 } else { 40 });
+
     if let Some(path) = std::env::var_os("BENCH_PR_JSON") {
-        write_json(&path, d, &rows, &fault_rows, &scheme_rows);
+        write_json(&path, d, &rows, &fault_rows, &scheme_rows, &adaptive_rows);
     }
 
     println!("\n== encode throughput ceiling (host-side, K=8 S=1, d=3072) ==");
@@ -308,6 +312,52 @@ fn scheme_comparison_sweep(d: usize, c: usize, groups: usize) -> Vec<SchemeRow> 
     rows
 }
 
+/// The adaptive control plane's headline: the drifting-fault trace
+/// (honest → slow-burst → byz-burst → recovered) served adaptive vs
+/// static-pessimistic vs static-oracle at K=4, provisioned (S=1, E=1).
+/// The adaptive run should undercut static-pessimistic worker overhead
+/// while tracking static-oracle accuracy.
+fn adaptive_drift_sweep(d: usize, c: usize, groups_per_phase: usize) -> Vec<DriftRow> {
+    println!(
+        "\n== adaptive drift sweep (K=4 provisioned S=1 E=1, slo=15ms, \
+         {groups_per_phase} groups/phase) =="
+    );
+    println!(
+        "{:<20} {:<12} {:>10} {:>10} {:>10} {:>13} {:>8}",
+        "run", "phase", "p50_ms", "p99_ms", "accuracy", "mean_workers", "(S,E)"
+    );
+    let engine: Arc<dyn InferenceEngine> = Arc::new(LinearMockEngine::new(d, c));
+    let rows = drifting_comparison(engine, 4, groups_per_phase, 20220807)
+        .expect("drifting trace failed");
+    for r in &rows {
+        println!(
+            "{:<20} {:<12} {:>10.2} {:>10.2} {:>10.3} {:>13.1} {:>8}",
+            r.run,
+            r.phase,
+            r.p50 * 1e3,
+            r.p99 * 1e3,
+            r.accuracy,
+            r.mean_workers,
+            format!("({},{})", r.s, r.e)
+        );
+    }
+    // Whole-trace headline per run (phases are equal-length, so the mean
+    // over phases is the trace mean).
+    for run in ["adaptive", "static-pessimistic", "static-oracle"] {
+        let sel: Vec<&DriftRow> = rows.iter().filter(|r| r.run == run).collect();
+        let acc = sel.iter().map(|r| r.accuracy).sum::<f64>() / sel.len().max(1) as f64;
+        let workers =
+            sel.iter().map(|r| r.mean_workers).sum::<f64>() / sel.len().max(1) as f64;
+        let p99 = sel.iter().map(|r| r.p99).fold(0.0f64, f64::max);
+        println!(
+            "  {run}: trace accuracy {acc:.3}, mean workers {workers:.1}, worst p99 \
+             {:.2}ms",
+            p99 * 1e3
+        );
+    }
+    rows
+}
+
 /// Hand-rolled JSON artifact (no serde in this environment).
 fn write_json(
     path: &std::ffi::OsStr,
@@ -315,6 +365,7 @@ fn write_json(
     rows: &[SweepRow],
     faults: &[FaultRow],
     schemes: &[SchemeRow],
+    adaptive: &[DriftRow],
 ) {
     let base = rows[0].report.throughput;
     let mut out = String::from("{\n");
@@ -373,6 +424,23 @@ fn write_json(
             r.completed,
             r.failed,
             if i + 1 < schemes.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ],\n");
+    out.push_str("  \"adaptive_rows\": [\n");
+    for (i, row) in adaptive.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"run\": \"{}\", \"phase\": \"{}\", \"p50_ms\": {:.2}, \"p99_ms\": {:.2}, \
+             \"accuracy\": {:.4}, \"mean_workers\": {:.2}, \"s\": {}, \"e\": {}}}{}\n",
+            row.run,
+            row.phase,
+            row.p50 * 1e3,
+            row.p99 * 1e3,
+            row.accuracy,
+            row.mean_workers,
+            row.s,
+            row.e,
+            if i + 1 < adaptive.len() { "," } else { "" }
         ));
     }
     out.push_str("  ],\n");

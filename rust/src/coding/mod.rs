@@ -7,14 +7,25 @@
 //! contract that packages each strategy (ApproxIFER / replication /
 //! ParM-proxy / uncoded) for the scheme-agnostic serving engine.
 
+// `serving` (the public scheme contract) carries complete rustdoc under
+// the crate's `missing_docs` lint; the math-internal submodules are the
+// tracked remainder of the documentation pass.
+#[allow(missing_docs)]
 pub mod analysis;
+#[allow(missing_docs)]
 pub mod berrut;
+#[allow(missing_docs)]
 pub mod chebyshev;
+#[allow(missing_docs)]
 pub mod locator;
+#[allow(missing_docs)]
 pub mod replication;
+#[allow(missing_docs)]
 pub mod scheme;
 pub mod serving;
+#[allow(missing_docs)]
 pub mod theory;
+#[allow(missing_docs)]
 pub mod vote;
 
 pub use locator::{locate, LocatorMethod};

@@ -29,13 +29,15 @@
 //! escalation ladder, and identical [`crate::metrics::ServingMetrics`] —
 //! the fair-measurement requirement behind the paper's Figures 3–11.
 
+use std::sync::Arc;
+
 use anyhow::{bail, Result};
 
 use crate::metrics::ServingMetrics;
 
 use super::locator::LocatorMethod;
 use super::replication::{majority_position, slice_eq, ReplicationParams};
-use super::scheme::ApproxIferCode;
+use super::scheme::{ApproxIferCode, CodeParams};
 use super::vote::locate_by_vote;
 
 // ---------------------------------------------------------------------------
@@ -50,30 +52,55 @@ use super::vote::locate_by_vote;
 ///   containing every worker with `need = wait_for`.
 /// * Per-query quorums (replication): slot = query index, `need = 1` under
 ///   stragglers-only or `2E+1` for a Byzantine majority.
+///
+/// A policy may additionally carry a **hedge quota** (`hedge_need`): a
+/// reduced per-slot quota that is still *decodable* (though with less
+/// redundancy to cross-check). When the service runs with an SLO
+/// (`serving.slo_ms`), the reply router delivers a group early once the
+/// hedge deadline passes and every slot meets `hedge_need` — trading
+/// guaranteed location margin for tail latency, with the verification
+/// ladder (and ultimately a redispatch) as the safety net.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct CollectPolicy {
     /// `slots[w]` is the slot worker `w`'s reply counts toward.
     pub slots: Vec<usize>,
     /// Successful replies required per slot.
     pub need: usize,
+    /// Reduced per-slot quota acceptable for an SLO-hedged early decode
+    /// (`None` = the scheme cannot decode below `need`, hedging disabled).
+    pub hedge_need: Option<usize>,
 }
 
 impl CollectPolicy {
     /// Single-slot policy: complete after any `wait_for` distinct replies.
     pub fn fastest(num_workers: usize, wait_for: usize) -> CollectPolicy {
-        CollectPolicy { slots: vec![0; num_workers], need: wait_for.min(num_workers).max(1) }
+        CollectPolicy {
+            slots: vec![0; num_workers],
+            need: wait_for.min(num_workers).max(1),
+            hedge_need: None,
+        }
     }
 
     /// Per-slot quorum policy.
     pub fn per_slot(slots: Vec<usize>, need: usize) -> CollectPolicy {
         assert!(need >= 1, "collect policy needs at least one reply per slot");
-        CollectPolicy { slots, need }
+        CollectPolicy { slots, need, hedge_need: None }
     }
 
+    /// Attach a hedge quota (clamped to `1..=need`; a hedge quota equal to
+    /// `need` is dropped — it could never fire before normal completion).
+    pub fn with_hedge(mut self, hedge_need: usize) -> CollectPolicy {
+        let h = hedge_need.max(1);
+        self.hedge_need = if h < self.need { Some(h) } else { None };
+        self
+    }
+
+    /// Workers the policy covers.
     pub fn num_workers(&self) -> usize {
         self.slots.len()
     }
 
+    /// Distinct collection slots.
     pub fn num_slots(&self) -> usize {
         self.slots.iter().max().map_or(0, |&m| m + 1)
     }
@@ -90,6 +117,7 @@ impl CollectPolicy {
 /// redundancy (uncoded, ParM) report `None` regardless of policy.
 #[derive(Clone, Copy, Debug)]
 pub struct VerifyPolicy {
+    /// Whether decode verification runs at all.
     pub enabled: bool,
     /// Max allowed residual. For ApproxIFER it is relative to `1 +` the
     /// median node peak of `|Ỹ|` over the decode set (see
@@ -99,10 +127,12 @@ pub struct VerifyPolicy {
 }
 
 impl VerifyPolicy {
+    /// Verification disabled.
     pub fn off() -> VerifyPolicy {
         VerifyPolicy { enabled: false, tol: f64::INFINITY }
     }
 
+    /// Verification enabled with the given residual tolerance.
     pub fn on(tol: f64) -> VerifyPolicy {
         VerifyPolicy { enabled: true, tol }
     }
@@ -119,6 +149,7 @@ impl Default for VerifyPolicy {
 pub struct VerifyReport {
     /// Worst residual (scheme-specific normalization, see [`VerifyPolicy`]).
     pub residual: f64,
+    /// Whether the residual stayed within the policy's tolerance.
     pub passed: bool,
     /// Whether any escalation rung (full-set decode / homogeneous locator)
     /// ran.
@@ -131,8 +162,17 @@ pub struct SchemeDecode {
     pub predictions: Vec<Vec<f32>>,
     /// Worker indices whose replies were consumed by the decode.
     pub decode_set: Vec<usize>,
-    /// Worker indices flagged Byzantine.
+    /// Worker indices flagged Byzantine. NOTE: with `E > 0` the ApproxIFER
+    /// locator must always flag `E` workers, so on an honest group this
+    /// holds forced false alarms — prevalence estimation must use
+    /// [`SchemeDecode::confirmed_adversaries`] instead.
     pub flagged: Vec<usize>,
+    /// Flagged workers whose replies *actually* disagree with the verified
+    /// decode (re-encode residual above tolerance for ApproxIFER; vote
+    /// losers for replication) — the adaptive controller's Byzantine
+    /// prevalence evidence. `None` when verification did not run or did
+    /// not pass (no trustworthy decode to measure against).
+    pub confirmed_adversaries: Option<usize>,
     /// Verification report (`None` when verification is off or the scheme
     /// has no redundancy left to cross-check).
     pub verify: Option<VerifyReport>,
@@ -144,7 +184,41 @@ pub struct SchemeDecode {
 
 /// A serving strategy the scheme-agnostic [`crate::coordinator::Service`]
 /// can run: the full contract from encoding through verified decode, plus
-/// worker/overhead accounting.
+/// worker/overhead accounting and (where the math permits) live
+/// re-parameterization via [`ServingScheme::reconfigure`].
+///
+/// # Examples
+///
+/// Every scheme is driven through the same calls — encode a K-group, feed
+/// the collected replies back, read the decoded predictions:
+///
+/// ```
+/// use approxifer::coding::{
+///     ApproxIferCode, CodeParams, ServingScheme, VerifyPolicy,
+/// };
+/// use approxifer::metrics::ServingMetrics;
+///
+/// let scheme = ApproxIferCode::new(CodeParams::new(4, 1, 0));
+/// let queries: Vec<Vec<f32>> =
+///     (0..4).map(|j| vec![j as f32 * 0.1; 8]).collect();
+/// let qrefs: Vec<&[f32]> = queries.iter().map(|q| &q[..]).collect();
+///
+/// // K = 4 queries fan out to K + S = 5 workers.
+/// let mut coded = vec![Vec::new(); ServingScheme::num_workers(&scheme)];
+/// scheme.encode_into(&qrefs, &mut coded);
+///
+/// // One worker straggles (S = 1): decode from the other four.
+/// let mut replies: Vec<Option<Vec<f32>>> = coded.into_iter().map(Some).collect();
+/// replies[2] = None;
+/// let metrics = ServingMetrics::new();
+/// let out = ServingScheme::decode(&scheme, &replies, VerifyPolicy::off(), &metrics)?;
+/// assert_eq!(out.predictions.len(), 4);
+///
+/// // The adaptive control plane re-tunes the same K to a new (S, E):
+/// let widened = ServingScheme::reconfigure(&scheme, 1, 1)?;
+/// assert_eq!(widened.byzantine_tolerated(), 1);
+/// # Ok::<(), anyhow::Error>(())
+/// ```
 pub trait ServingScheme: Send + Sync {
     /// Short stable name (metrics rows, bench output).
     fn name(&self) -> &str;
@@ -190,6 +264,22 @@ pub trait ServingScheme: Send + Sync {
         policy: VerifyPolicy,
         metrics: &ServingMetrics,
     ) -> Result<SchemeDecode>;
+
+    /// Re-tune the scheme to a new `(S, E)` at the **same** group size `K`,
+    /// returning a fresh scheme the coordinator swaps in at the next group
+    /// boundary (the adaptive control plane's epoch mechanism — see
+    /// [`crate::coordinator::adaptive`]).
+    ///
+    /// Model-agnostic codes can do this with zero retraining: ApproxIFER
+    /// rebuilds its redundancy ladder (new node set and decode-matrix
+    /// cache), replication recomputes `copies = S + 2E + 1`. Schemes whose
+    /// redundancy is baked in (ParM's trained parity model, the uncoded
+    /// passthrough) return `Err`, and the controller degrades to alerting
+    /// (`adaptive_alerts` metric) instead of swapping.
+    fn reconfigure(&self, s: usize, e: usize) -> Result<Arc<dyn ServingScheme>> {
+        let _ = (s, e);
+        bail!("scheme '{}' does not support live (S, E) reconfiguration", self.name())
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -222,7 +312,21 @@ impl ServingScheme for ApproxIferCode {
     }
 
     fn collect_policy(&self) -> CollectPolicy {
-        CollectPolicy::fastest(self.params().num_workers(), self.params().wait_for())
+        let p = self.params();
+        let policy = CollectPolicy::fastest(p.num_workers(), p.wait_for());
+        if p.e > 0 {
+            // Hedged early decode: `2(K+E)−1` replies — the error locator
+            // solves for `2(K+E)−1` coefficients, so this is the smallest
+            // reply set it can still locate over (one fewer than the full
+            // `2(K+E)` wait, i.e. one excess straggler absorbed early). A
+            // hedged decode that misses a corruption fails verification
+            // and the escalation ladder (ultimately a redispatch)
+            // recovers.
+            policy.with_hedge(p.wait_for() - 1)
+        } else {
+            // E = 0 already waits for the bare decodable minimum K.
+            policy
+        }
     }
 
     fn encode_into(&self, queries: &[&[f32]], out: &mut [Vec<f32>]) {
@@ -239,6 +343,19 @@ impl ServingScheme for ApproxIferCode {
     ) -> Result<SchemeDecode> {
         let (predictions, decode_set, flagged, verify) =
             verified_locate_and_decode(self, LocatorMethod::Pinned, replies, policy, metrics)?;
+        // Prevalence evidence for the adaptive controller: only measurable
+        // against a decode verification vouched for.
+        let confirmed_adversaries = match verify {
+            Some(report) if report.passed => Some(confirm_flagged(
+                self,
+                &flagged,
+                &decode_set,
+                replies,
+                &predictions,
+                policy.tol,
+            )),
+            _ => None,
+        };
         // Drain decode-matrix cache evictions into the observing service's
         // metrics (the code object may be shared; counts land with whoever
         // decodes next).
@@ -246,7 +363,18 @@ impl ServingScheme for ApproxIferCode {
         if evicted > 0 {
             metrics.decode_cache_evictions.add(evicted);
         }
-        Ok(SchemeDecode { predictions, decode_set, flagged, verify })
+        Ok(SchemeDecode { predictions, decode_set, flagged, confirmed_adversaries, verify })
+    }
+
+    fn reconfigure(&self, s: usize, e: usize) -> Result<Arc<dyn ServingScheme>> {
+        let k = self.params().k;
+        if e == 0 && k + s < 2 {
+            bail!("approxifer: (K={k}, S={s}, E={e}) is a degenerate code (N = K+S-1 < 1)");
+        }
+        // Zero retraining: the new ladder is just a fresh node set + encode
+        // matrix (and an empty decode-matrix cache keyed to the new
+        // geometry).
+        Ok(Arc::new(ApproxIferCode::new(CodeParams::new(k, s, e))))
     }
 }
 
@@ -264,10 +392,13 @@ pub struct Replication {
 }
 
 impl Replication {
+    /// Replication for `K` queries tolerating `S` stragglers and `E`
+    /// Byzantine copies per query (`S + 2E + 1` copies each).
     pub fn new(k: usize, s: usize, e: usize) -> Replication {
         Replication { params: ReplicationParams::new(k, s, e) }
     }
 
+    /// The copy-placement parameters.
     pub fn params(&self) -> ReplicationParams {
         self.params
     }
@@ -313,7 +444,16 @@ impl ServingScheme for Replication {
     fn collect_policy(&self) -> CollectPolicy {
         let p = self.params;
         let slots: Vec<usize> = (0..p.num_workers()).map(|w| p.assignment_of(w).0).collect();
-        CollectPolicy::per_slot(slots, self.need())
+        let policy = CollectPolicy::per_slot(slots, self.need());
+        if p.e > 0 {
+            // Hedged quorum: `E+1` copies per query instead of `2E+1`. A
+            // unanimous `E+1` vote still proves correctness under ≤E
+            // corruptions; any disagreement fails verification and the
+            // ladder recovers.
+            policy.with_hedge(p.e + 1)
+        } else {
+            policy
+        }
     }
 
     fn encode_into(&self, queries: &[&[f32]], out: &mut [Vec<f32>]) {
@@ -338,8 +478,10 @@ impl ServingScheme for Replication {
         let mut predictions = Vec::with_capacity(p.k);
         let mut decode_set = Vec::new();
         let mut flagged = Vec::new();
-        // Worst disagreement fraction across queries (verification signal).
+        // Worst disagreement fraction across queries (verification signal)
+        // and worst per-query disagreeing-copy count (prevalence signal).
         let mut worst_residual = 0.0f64;
+        let mut worst_disagreeing = 0usize;
         let mut verified_ok = true;
         for q in 0..p.k {
             // This query's live copies, in worker order (deterministic).
@@ -365,13 +507,16 @@ impl ServingScheme for Replication {
                 workers.iter().map(|&w| replies[w].as_deref().unwrap()).collect();
             let (winner, votes) = majority_position(&refs);
             predictions.push(refs[winner].to_vec());
+            let mut disagreeing = 0usize;
             for (i, &w) in workers.iter().enumerate() {
                 if slice_eq(refs[winner], refs[i]) {
                     decode_set.push(w);
                 } else {
                     flagged.push(w);
+                    disagreeing += 1;
                 }
             }
+            worst_disagreeing = worst_disagreeing.max(disagreeing);
             let disagree = 1.0 - votes as f64 / refs.len() as f64;
             worst_residual = worst_residual.max(disagree);
             // A true majority (≥ E+1 of 2E+1) guarantees correctness under
@@ -401,7 +546,20 @@ impl ServingScheme for Replication {
         } else {
             None
         };
-        Ok(SchemeDecode { predictions, decode_set, flagged, verify })
+        // Replication's flags are vote losers, i.e. genuine disagreement —
+        // the budget dimension is corrupt copies per query, so prevalence
+        // evidence is the worst per-query disagreeing count. Only reported
+        // off a vote that proved its majority.
+        let confirmed_adversaries = match verify {
+            Some(report) if report.passed => Some(worst_disagreeing),
+            _ => None,
+        };
+        Ok(SchemeDecode { predictions, decode_set, flagged, confirmed_adversaries, verify })
+    }
+
+    fn reconfigure(&self, s: usize, e: usize) -> Result<Arc<dyn ServingScheme>> {
+        // Replication re-tunes trivially: copies = S + 2E + 1 per query.
+        Ok(Arc::new(Replication::new(self.params.k, s, e)))
     }
 }
 
@@ -421,6 +579,7 @@ pub struct ParmProxy {
 }
 
 impl ParmProxy {
+    /// ParM proxy over `K` queries (`K + 1` workers, one parity unit).
     pub fn new(k: usize) -> ParmProxy {
         assert!(k >= 1, "ParM needs K >= 1");
         ParmProxy { k }
@@ -526,7 +685,13 @@ impl ServingScheme for ParmProxy {
         metrics.decode_latency.record(t0.elapsed().as_secs_f64());
         // No verification hook: the single parity unit is consumed by
         // straggler tolerance, leaving no redundancy to cross-check.
-        Ok(SchemeDecode { predictions, decode_set, flagged: Vec::new(), verify: None })
+        Ok(SchemeDecode {
+            predictions,
+            decode_set,
+            flagged: Vec::new(),
+            confirmed_adversaries: None,
+            verify: None,
+        })
     }
 }
 
@@ -541,6 +706,7 @@ pub struct Uncoded {
 }
 
 impl Uncoded {
+    /// Uncoded passthrough over `K` queries on `K` workers.
     pub fn new(k: usize) -> Uncoded {
         assert!(k >= 1, "uncoded needs K >= 1");
         Uncoded { k }
@@ -601,6 +767,7 @@ impl ServingScheme for Uncoded {
             predictions,
             decode_set: (0..self.k).collect(),
             flagged: Vec::new(),
+            confirmed_adversaries: None,
             verify: None,
         })
     }
@@ -624,9 +791,19 @@ pub fn verify_residual(
     replies: &[Option<Vec<f32>>],
     predictions: &[Vec<f32>],
 ) -> f64 {
-    let k = code.params().k;
-    let w = code.encode_matrix();
-    let mut node_peaks: Vec<f64> = decode_set
+    let scale = residual_scale(decode_set, replies);
+    let mut worst = 0.0f64;
+    for &i in decode_set {
+        let y = replies[i].as_deref().unwrap();
+        worst = worst.max(node_residual(code, i, y, predictions));
+    }
+    worst / (1.0 + scale)
+}
+
+/// Median across `set` of each node's reply peak `max_t |Ỹ_i|` — the
+/// corruption-robust scale verification and per-node confirmation share.
+fn residual_scale(set: &[usize], replies: &[Option<Vec<f32>>]) -> f64 {
+    let mut node_peaks: Vec<f64> = set
         .iter()
         .map(|&i| {
             replies[i]
@@ -637,18 +814,50 @@ pub fn verify_residual(
         })
         .collect();
     node_peaks.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let scale = node_peaks.get(node_peaks.len() / 2).copied().unwrap_or(0.0);
+    node_peaks.get(node_peaks.len() / 2).copied().unwrap_or(0.0)
+}
+
+/// Unnormalized re-encode residual of one worker's reply against the
+/// decoded predictions: `max_t |Σ_j ℓ_j(β_i)·Ŷ_j[t] − Ỹ_i[t]|`.
+fn node_residual(code: &ApproxIferCode, i: usize, y: &[f32], predictions: &[Vec<f32>]) -> f64 {
+    let k = code.params().k;
+    let row = &code.encode_matrix()[i * k..(i + 1) * k];
     let mut worst = 0.0f64;
-    for &i in decode_set {
-        let y = replies[i].as_deref().unwrap();
-        let row = &w[i * k..(i + 1) * k];
-        for (t, &yt) in y.iter().enumerate() {
-            let z: f64 =
-                row.iter().zip(predictions).map(|(&wj, p)| wj as f64 * p[t] as f64).sum();
-            worst = worst.max((z - yt as f64).abs());
-        }
+    for (t, &yt) in y.iter().enumerate() {
+        let z: f64 = row.iter().zip(predictions).map(|(&wj, p)| wj as f64 * p[t] as f64).sum();
+        worst = worst.max((z - yt as f64).abs());
     }
-    worst / (1.0 + scale)
+    worst
+}
+
+/// Of the locator's `flagged` workers, count those whose replies *actually*
+/// disagree with the verified decode (re-encode residual above `tol`,
+/// normalized like [`verify_residual`]).
+///
+/// With `E > 0` the locator is forced to flag `E` workers even on an
+/// all-honest group, so the raw flag count always reads `E`; this
+/// post-verification check is what turns flags into a usable Byzantine
+/// *prevalence* signal for the adaptive controller. Flagged workers whose
+/// reply is missing count as stragglers, not adversaries.
+pub fn confirm_flagged(
+    code: &ApproxIferCode,
+    flagged: &[usize],
+    decode_set: &[usize],
+    replies: &[Option<Vec<f32>>],
+    predictions: &[Vec<f32>],
+    tol: f64,
+) -> usize {
+    if flagged.is_empty() {
+        return 0;
+    }
+    let scale = residual_scale(decode_set, replies);
+    flagged
+        .iter()
+        .filter(|&&i| match replies[i].as_deref() {
+            Some(y) => node_residual(code, i, y, predictions) / (1.0 + scale) > tol,
+            None => false,
+        })
+        .count()
 }
 
 /// [`locate_and_decode`] wrapped in the verification ladder's in-decode
@@ -802,8 +1011,99 @@ mod tests {
         assert_eq!(p.num_workers(), 5);
         assert_eq!(p.num_slots(), 1);
         assert_eq!(p.need, 3);
+        assert_eq!(p.hedge_need, None);
         let p = CollectPolicy::per_slot(vec![0, 1, 0, 1], 2);
         assert_eq!(p.num_slots(), 2);
+    }
+
+    #[test]
+    fn hedge_quota_clamps() {
+        let p = CollectPolicy::fastest(10, 6).with_hedge(4);
+        assert_eq!(p.hedge_need, Some(4));
+        // A hedge quota that cannot fire before normal completion is dropped.
+        assert_eq!(CollectPolicy::fastest(10, 6).with_hedge(6).hedge_need, None);
+        assert_eq!(CollectPolicy::fastest(10, 6).with_hedge(9).hedge_need, None);
+        assert_eq!(CollectPolicy::fastest(10, 6).with_hedge(0).hedge_need, Some(1));
+    }
+
+    #[test]
+    fn scheme_hedge_policies_match_their_math() {
+        // ApproxIFER E>0: hedge at 2(K+E)-1 (the locator's rank floor) of
+        // the full 2(K+E) wait.
+        let apx = ApproxIferCode::new(CodeParams::new(4, 1, 2));
+        let p = ServingScheme::collect_policy(&apx);
+        assert_eq!(p.need, 12);
+        assert_eq!(p.hedge_need, Some(11));
+        // E = 0 already waits for the decodable minimum: no hedge.
+        let apx0 = ApproxIferCode::new(CodeParams::new(4, 2, 0));
+        assert_eq!(ServingScheme::collect_policy(&apx0).hedge_need, None);
+        // Replication E>0: hedge quorum E+1 of 2E+1.
+        let rep = Replication::new(3, 1, 2);
+        let p = rep.collect_policy();
+        assert_eq!(p.need, 5);
+        assert_eq!(p.hedge_need, Some(3));
+        assert_eq!(Replication::new(3, 1, 0).collect_policy().hedge_need, None);
+        // No residual redundancy, no hedge.
+        assert_eq!(ParmProxy::new(4).collect_policy().hedge_need, None);
+        assert_eq!(Uncoded::new(4).collect_policy().hedge_need, None);
+    }
+
+    #[test]
+    fn honest_forced_flags_are_not_confirmed_adversaries() {
+        // With E=1 the locator must flag one worker even on an all-honest
+        // group; the confirmed-prevalence count must still read zero (its
+        // reply re-encodes consistently with the verified decode).
+        let code = ApproxIferCode::new(CodeParams::new(4, 1, 1));
+        let queries = smooth_queries(4, 6);
+        let replies = encode(&code, &queries);
+        let m = ServingMetrics::new();
+        let out =
+            ServingScheme::decode(&code, &replies, VerifyPolicy::on(0.4), &m).unwrap();
+        let v = out.verify.expect("verification ran");
+        assert!(v.passed, "honest group must verify (residual {})", v.residual);
+        assert_eq!(out.flagged.len(), 1, "E=1 locator always flags one");
+        assert_eq!(out.confirmed_adversaries, Some(0), "honest flags are false alarms");
+    }
+
+    #[test]
+    fn genuine_corruption_is_confirmed() {
+        let code = ApproxIferCode::new(CodeParams::new(4, 0, 1));
+        let queries = smooth_queries(4, 6);
+        let mut replies = encode(&code, &queries);
+        for v in replies[3].as_mut().unwrap().iter_mut() {
+            *v += 50.0;
+        }
+        let m = ServingMetrics::new();
+        let out =
+            ServingScheme::decode(&code, &replies, VerifyPolicy::on(0.4), &m).unwrap();
+        let v = out.verify.expect("verification ran");
+        assert!(v.passed, "located corruption must verify out (residual {})", v.residual);
+        assert!(out.flagged.contains(&3), "corrupted worker must be flagged");
+        assert_eq!(out.confirmed_adversaries, Some(1));
+    }
+
+    #[test]
+    fn reconfigure_preserves_k_and_swaps_the_envelope() {
+        let apx = ApproxIferCode::new(CodeParams::new(6, 1, 0));
+        let up = ServingScheme::reconfigure(&apx, 1, 2).unwrap();
+        assert_eq!(up.group_size(), 6);
+        assert_eq!(up.stragglers_tolerated(), 1);
+        assert_eq!(up.byzantine_tolerated(), 2);
+        assert_eq!(up.num_workers(), 2 * (6 + 2) + 1);
+        let down = up.reconfigure(0, 0).unwrap();
+        assert_eq!(down.num_workers(), 6);
+        // Degenerate K=1 straggler-less code is refused, not a panic.
+        let one = ApproxIferCode::new(CodeParams::new(1, 1, 0));
+        assert!(ServingScheme::reconfigure(&one, 0, 0).is_err());
+
+        let rep = Replication::new(3, 1, 0);
+        let up = ServingScheme::reconfigure(&rep, 1, 1).unwrap();
+        assert_eq!(up.group_size(), 3);
+        assert_eq!(up.num_workers(), (1 + 2 + 1) * 3);
+
+        // Fixed-redundancy schemes refuse: the controller must alert.
+        assert!(ServingScheme::reconfigure(&ParmProxy::new(4), 1, 0).is_err());
+        assert!(ServingScheme::reconfigure(&Uncoded::new(4), 1, 0).is_err());
     }
 
     #[test]
@@ -856,6 +1156,7 @@ mod tests {
         assert_eq!(&out.predictions[0][..], &queries[0][..]);
         let v = out.verify.expect("verification ran");
         assert!(v.passed, "2-of-3 majority must verify (residual {})", v.residual);
+        assert_eq!(out.confirmed_adversaries, Some(1), "vote loser is confirmed prevalence");
         assert!(m.byzantine_flagged.get() >= 1);
     }
 

@@ -6,7 +6,7 @@ use std::time::Duration;
 use anyhow::{bail, Context, Result};
 
 use crate::coding::CodeParams;
-use crate::coordinator::Strategy;
+use crate::coordinator::{AdaptiveConfig, Strategy};
 use crate::sim::faults::FaultProfile;
 use crate::workers::LatencyModel;
 
@@ -41,6 +41,13 @@ pub struct AppConfig {
     pub decode_threads: usize,
     /// Per-group collection deadline.
     pub group_timeout: Duration,
+    /// Per-group latency SLO (`serving.slo_ms`): past this the reply
+    /// router attempts a hedged early decode with the scheme's reduced
+    /// quota. `None` disables hedging and the adaptive straggler loop.
+    pub slo: Option<Duration>,
+    /// Adaptive redundancy control plane (`adaptive.*` namespace); `None`
+    /// when `adaptive.enabled` is unset/false.
+    pub adaptive: Option<AdaptiveConfig>,
     /// Worker latency model (same for all workers).
     pub worker_latency: LatencyModel,
     /// Named fault profile spec (see [`FaultProfile::parse`]): which
@@ -72,6 +79,8 @@ impl Default for AppConfig {
             max_inflight: 4,
             decode_threads: 2,
             group_timeout: Duration::from_secs(30),
+            slo: None,
+            adaptive: None,
             worker_latency: LatencyModel::None,
             fault_profile: None,
             verify_decode: false,
@@ -174,6 +183,50 @@ impl AppConfig {
             }
             cfg.group_timeout = Duration::from_secs_f64(ms / 1e3);
         }
+        if let Some(ms) = doc.get_f64("serving.slo_ms")? {
+            if ms <= 0.0 {
+                bail!("serving.slo_ms must be positive");
+            }
+            let slo = Duration::from_secs_f64(ms / 1e3);
+            if slo >= cfg.group_timeout {
+                bail!(
+                    "serving.slo_ms ({ms}) must be shorter than serving.group_timeout_ms \
+                     ({}) — the hedge deadline precedes the hard deadline",
+                    cfg.group_timeout.as_secs_f64() * 1e3
+                );
+            }
+            cfg.slo = Some(slo);
+        }
+        if doc.get_bool("adaptive.enabled")?.unwrap_or(false) {
+            let mut adaptive = AdaptiveConfig::default();
+            if let Some(w) = doc.get_usize("adaptive.window")? {
+                if w == 0 {
+                    bail!("adaptive.window must be >= 1");
+                }
+                adaptive.window = w;
+            }
+            if let Some(r) = doc.get_f64("adaptive.target_miss_rate")? {
+                if !(0.0..1.0).contains(&r) {
+                    bail!("adaptive.target_miss_rate must be in [0, 1), got {r}");
+                }
+                adaptive.target_miss_rate = r;
+            }
+            if let Some(c) = doc.get_usize("adaptive.cooldown")? {
+                if c == 0 {
+                    bail!("adaptive.cooldown must be >= 1");
+                }
+                adaptive.cooldown = c;
+            }
+            cfg.adaptive = Some(adaptive);
+        } else {
+            // Refuse sub-keys without the master switch: a config that
+            // tunes a disabled controller is a footgun, not a no-op.
+            for key in ["adaptive.window", "adaptive.target_miss_rate", "adaptive.cooldown"] {
+                if doc.get_str(key).is_some() {
+                    bail!("'{key}' is set but adaptive.enabled is not true");
+                }
+            }
+        }
         if let Some(v) = doc.get_str("workers.latency") {
             cfg.worker_latency = LatencyModel::parse(&v).map_err(|e| anyhow::anyhow!(e))?;
         }
@@ -185,6 +238,21 @@ impl AppConfig {
                 bail!("serving.verify_tol must be positive, got {v}");
             }
             cfg.verify_tol = v;
+        }
+        // Hedged decodes and the adaptive Byzantine loop both lean on the
+        // verification ladder; surface the spawn-time rule at config load
+        // so the operator sees it before the fleet starts. (Checked here,
+        // after every serving.*/adaptive.* knob above has been applied.)
+        if (cfg.slo.is_some() || cfg.adaptive.is_some())
+            && cfg.params.e > 0
+            && !cfg.verify_decode
+            && matches!(cfg.strategy, Strategy::ApproxIfer | Strategy::Replication)
+        {
+            bail!(
+                "serving.slo_ms / adaptive.enabled with code.e > 0 requires \
+                 serving.verify_decode = true (hedged decodes and the controller's \
+                 Byzantine loop lean on the verification ladder)"
+            );
         }
         if let Some(v) = doc.get_usize("faults.seed")? {
             cfg.seed = v as u64;
@@ -239,6 +307,82 @@ mod tests {
         assert!(AppConfig::from_doc(&doc).is_err());
         let doc = ConfigDoc::parse("[serving]\ngroup_timeout_ms = 0\n").unwrap();
         assert!(AppConfig::from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn adaptive_and_slo_knobs_parse() {
+        let doc = ConfigDoc::parse(
+            r#"
+            [serving]
+            slo_ms = 50
+            [adaptive]
+            enabled = true
+            window = 16
+            target_miss_rate = 0.02
+            cooldown = 3
+            "#,
+        )
+        .unwrap();
+        let cfg = AppConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.slo, Some(Duration::from_millis(50)));
+        let a = cfg.adaptive.expect("adaptive enabled");
+        assert_eq!(a.window, 16);
+        assert_eq!(a.cooldown, 3);
+        assert!((a.target_miss_rate - 0.02).abs() < 1e-12);
+
+        // Defaults apply when only the switch is set.
+        let doc = ConfigDoc::parse("[adaptive]\nenabled = true\n").unwrap();
+        let cfg = AppConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.adaptive.unwrap().window, 32);
+        assert_eq!(cfg.slo, None);
+    }
+
+    #[test]
+    fn adaptive_and_slo_invalid_values_rejected() {
+        // The hedge deadline must undercut the hard deadline.
+        let doc =
+            ConfigDoc::parse("[serving]\ngroup_timeout_ms = 100\nslo_ms = 100\n").unwrap();
+        assert!(AppConfig::from_doc(&doc).is_err());
+        let doc = ConfigDoc::parse("[serving]\nslo_ms = 0\n").unwrap();
+        assert!(AppConfig::from_doc(&doc).is_err());
+        // Orphan adaptive keys without the master switch are refused.
+        let doc = ConfigDoc::parse("[adaptive]\nwindow = 8\n").unwrap();
+        let err = AppConfig::from_doc(&doc).unwrap_err();
+        assert!(format!("{err:#}").contains("adaptive.enabled"), "{err:#}");
+        // Out-of-range tuning fails at load time.
+        let doc = ConfigDoc::parse("[adaptive]\nenabled = true\nwindow = 0\n").unwrap();
+        assert!(AppConfig::from_doc(&doc).is_err());
+        let doc =
+            ConfigDoc::parse("[adaptive]\nenabled = true\ntarget_miss_rate = 1.5\n").unwrap();
+        assert!(AppConfig::from_doc(&doc).is_err());
+        let doc = ConfigDoc::parse("[adaptive]\nenabled = true\ncooldown = 0\n").unwrap();
+        assert!(AppConfig::from_doc(&doc).is_err());
+        // SLO + Byzantine budget without the verification safety net is
+        // refused at load time (ordering-sensitive: verify_decode is set
+        // in the same file).
+        let doc = ConfigDoc::parse(
+            "[code]\nk = 4\ns = 0\ne = 1\n[serving]\nslo_ms = 20\n",
+        )
+        .unwrap();
+        let err = AppConfig::from_doc(&doc).unwrap_err();
+        assert!(format!("{err:#}").contains("verify_decode"), "{err:#}");
+        let doc = ConfigDoc::parse(
+            "[code]\nk = 4\ns = 0\ne = 1\n[serving]\nslo_ms = 20\nverify_decode = true\n",
+        )
+        .unwrap();
+        assert!(AppConfig::from_doc(&doc).is_ok());
+        // Same rule for the adaptive controller's Byzantine loop.
+        let doc = ConfigDoc::parse(
+            "[code]\nk = 4\ns = 0\ne = 1\n[adaptive]\nenabled = true\n",
+        )
+        .unwrap();
+        assert!(AppConfig::from_doc(&doc).is_err());
+        let doc = ConfigDoc::parse(
+            "[code]\nk = 4\ns = 0\ne = 1\n[adaptive]\nenabled = true\n\
+             [serving]\nverify_decode = true\n",
+        )
+        .unwrap();
+        assert!(AppConfig::from_doc(&doc).is_ok());
     }
 
     #[test]

@@ -1,0 +1,415 @@
+//! The adaptive redundancy control plane: online estimation of the fleet's
+//! *actual* straggler and Byzantine prevalence, driving live `(S, E)`
+//! re-tuning of the serving scheme with **zero retraining**.
+//!
+//! The paper (and every comparison system) fixes `(K, S, E)` up front:
+//! ParM is locked to its trained parity model, NeRCC fixes its regression
+//! degrees offline. A model-agnostic code is the one design where the
+//! redundancy budget is just *parameters of a linear map* — so it can
+//! follow drift. This module closes the loop the serving stack already
+//! exposes signals for:
+//!
+//! * **Inputs** — one [`GroupObservation`] per decoded group, distilled in
+//!   the decode pool from the fault-model world of the verified-decode
+//!   path: adversaries the locator identified *and verification confirmed*,
+//!   residual-check failures (corruption past the current budget),
+//!   SLO misses against `serving.slo_ms`, hedged deliveries, and outright
+//!   group failures.
+//! * **Estimators** — a sliding window of the last `window` observations.
+//!   At each window boundary the controller compares the windowed evidence
+//!   (max confirmed adversary count, any verification failure, SLO
+//!   miss-rate vs `target_miss_rate`) against the current budgets.
+//! * **Output** — a [`Reconfigure`] epoch. The coordinator's batcher
+//!   applies it at the next group boundary by calling
+//!   [`crate::coding::ServingScheme::reconfigure`]: in-flight groups
+//!   finish under the scheme that encoded them (each group carries its
+//!   scheme through collect → decode), new groups use the new ladder.
+//!
+//! Control law (deliberately simple, hysteretic, and deterministic so
+//! drift scenarios replay bit-identically):
+//!
+//! * **Raise fast.** Any verification failure in a window means the
+//!   corruption exceeded what the current `E` could locate → step `E` up
+//!   immediately. Confirmed located adversaries above the current budget
+//!   raise `E` to the observed count. An SLO miss-rate above
+//!   `target_miss_rate` steps `S` up.
+//! * **Lower slowly.** Only after `cooldown` consecutive *calm* windows
+//!   (no failures, observed adversaries strictly below budget; miss-rate
+//!   at most half the target) does the matching budget step down by one.
+//! * **Stay inside the fleet.** Budgets are clamped to the provisioned
+//!   ceiling — the worker fleet is sized at spawn, so the controller tunes
+//!   *within* it (spare workers idle when the budget shrinks) and can
+//!   always climb back to the provisioned maximum.
+//!
+//! Schemes that cannot re-tune (ParM, uncoded) reject the epoch; the
+//! coordinator then degrades to alerting via the `adaptive_alerts`
+//! counter, leaving the fleet as provisioned.
+
+use std::time::Duration;
+
+/// Tuning for the [`AdaptiveController`], normally built from the
+/// `adaptive.*` config namespace via [`AdaptiveConfig::default`] plus
+/// overrides.
+#[derive(Clone, Copy, Debug)]
+pub struct AdaptiveConfig {
+    /// Observations (decoded groups) per decision window.
+    pub window: usize,
+    /// Tolerated fraction of SLO misses per window before `S` steps up.
+    pub target_miss_rate: f64,
+    /// Calm windows required before a budget steps down.
+    pub cooldown: usize,
+    /// Lower bound for the straggler budget.
+    pub s_min: usize,
+    /// Upper bound for the straggler budget (the provisioned fleet).
+    pub s_max: usize,
+    /// Lower bound for the Byzantine budget.
+    pub e_min: usize,
+    /// Upper bound for the Byzantine budget (the provisioned fleet).
+    pub e_max: usize,
+}
+
+impl Default for AdaptiveConfig {
+    fn default() -> Self {
+        AdaptiveConfig {
+            window: 32,
+            target_miss_rate: 0.05,
+            cooldown: 2,
+            s_min: 0,
+            s_max: usize::MAX,
+            e_min: 0,
+            e_max: usize::MAX,
+        }
+    }
+}
+
+impl AdaptiveConfig {
+    /// Clamp the budget bounds to a provisioned `(S, E)` ceiling (the
+    /// scheme the service was spawned with — the fleet cannot grow past
+    /// it).
+    pub fn bounded_by(mut self, s_max: usize, e_max: usize) -> AdaptiveConfig {
+        self.s_max = self.s_max.min(s_max);
+        self.e_max = self.e_max.min(e_max);
+        self
+    }
+}
+
+/// What one decoded group told the controller.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GroupObservation {
+    /// Adversaries the locator identified on a decode whose verification
+    /// (where enabled) held up — confirmed prevalence evidence.
+    pub confirmed_adversaries: usize,
+    /// The decode's residual check failed at the final rung served to the
+    /// client, or the group was redispatched — corruption (or a locator
+    /// blind spot) beyond the current `E` budget.
+    pub verify_failed: bool,
+    /// End-to-end group latency exceeded the configured SLO (always false
+    /// when no SLO is set, which disables the straggler-budget loop).
+    pub slo_miss: bool,
+    /// The group was served through the SLO hedge path.
+    pub hedged: bool,
+    /// The group failed outright (collection timeout / undecodable).
+    /// Availability-shaped evidence: it reaches the straggler loop through
+    /// `slo_miss`, never the Byzantine loop (see [`AdaptiveController`]).
+    pub failed: bool,
+}
+
+/// A re-tuning epoch the coordinator applies at the next group boundary.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Reconfigure {
+    /// New straggler budget.
+    pub s: usize,
+    /// New Byzantine budget.
+    pub e: usize,
+}
+
+/// Online `(S, E)` estimator/decider. Single-threaded by construction —
+/// the service serializes observations through a mutex; decisions depend
+/// only on the observation sequence, never on wall-clock time, so a seeded
+/// scenario replays to the same epoch sequence.
+pub struct AdaptiveController {
+    cfg: AdaptiveConfig,
+    s: usize,
+    e: usize,
+    window: Vec<GroupObservation>,
+    /// Consecutive calm windows (straggler loop).
+    calm_s: usize,
+    /// Consecutive calm windows (Byzantine loop).
+    calm_e: usize,
+    /// Whether an SLO is configured (no SLO → the `S` loop holds still).
+    slo_aware: bool,
+    epochs: u64,
+}
+
+impl AdaptiveController {
+    /// A controller starting at the provisioned `(s0, e0)` operating point.
+    pub fn new(cfg: AdaptiveConfig, s0: usize, e0: usize, slo: Option<Duration>) -> Self {
+        let cfg = AdaptiveConfig { window: cfg.window.max(1), ..cfg };
+        AdaptiveController {
+            cfg,
+            s: s0.clamp(cfg.s_min, cfg.s_max),
+            e: e0.clamp(cfg.e_min, cfg.e_max),
+            window: Vec::with_capacity(cfg.window),
+            calm_s: 0,
+            calm_e: 0,
+            slo_aware: slo.is_some(),
+            epochs: 0,
+        }
+    }
+
+    /// Current operating point.
+    pub fn current(&self) -> (usize, usize) {
+        (self.s, self.e)
+    }
+
+    /// Align the controller with an operating point the coordinator
+    /// *actually applied* — called on every successful epoch, including
+    /// manual [`crate::coordinator::Service::reconfigure`] requests that
+    /// bypassed this controller's decisions. Resets the observation window
+    /// and both hysteresis counters: everything observed so far was under
+    /// the old scheme, and a phantom baseline would otherwise issue epochs
+    /// that silently revert the operator's setting. Values are taken as-is
+    /// (the configured bounds clamp this controller's *decisions*, not the
+    /// operator's).
+    pub fn sync(&mut self, s: usize, e: usize) {
+        self.s = s;
+        self.e = e;
+        self.window.clear();
+        self.calm_s = 0;
+        self.calm_e = 0;
+    }
+
+    /// Epochs issued so far.
+    pub fn epochs(&self) -> u64 {
+        self.epochs
+    }
+
+    /// Feed one decoded group's evidence; at each window boundary this may
+    /// return a [`Reconfigure`] epoch (already recorded as the new
+    /// operating point — the caller's job is only to apply it).
+    pub fn observe(&mut self, obs: GroupObservation) -> Option<Reconfigure> {
+        self.window.push(obs);
+        if self.window.len() < self.cfg.window {
+            return None;
+        }
+        self.decide()
+    }
+
+    fn decide(&mut self) -> Option<Reconfigure> {
+        let n = self.window.len() as f64;
+        // Only *verification* failures are Byzantine evidence. Outright
+        // group failures (collection timeouts, crash-driven undecodables)
+        // are straggler/availability-shaped: folding them into the E loop
+        // would ratchet the quota up under pure straggle — which grows the
+        // quota and makes timeouts *more* likely. They reach the S loop
+        // through their `slo_miss` flag instead.
+        let any_fail = self.window.iter().any(|o| o.verify_failed);
+        let max_confirmed = self
+            .window
+            .iter()
+            .map(|o| o.confirmed_adversaries)
+            .max()
+            .unwrap_or(0);
+        let miss_rate =
+            self.window.iter().filter(|o| o.slo_miss).count() as f64 / n.max(1.0);
+        self.window.clear();
+
+        let mut s = self.s;
+        let mut e = self.e;
+
+        // --- Byzantine loop ------------------------------------------------
+        if any_fail {
+            // Corruption the current budget could not locate: raise one
+            // step immediately (prevalence is unobservable past the budget,
+            // so climb a rung at a time).
+            e = (self.e + 1).clamp(self.cfg.e_min, self.cfg.e_max);
+            self.calm_e = 0;
+        } else if max_confirmed > self.e {
+            // The locator proved more adversaries than budgeted (possible
+            // when a wider decode set happened to be collected): jump to
+            // the observed count.
+            e = max_confirmed.clamp(self.cfg.e_min, self.cfg.e_max);
+            self.calm_e = 0;
+        } else if max_confirmed < self.e {
+            self.calm_e += 1;
+            if self.calm_e >= self.cfg.cooldown {
+                e = (self.e - 1).max(self.cfg.e_min);
+                self.calm_e = 0;
+            }
+        } else {
+            // Budget exactly matches observed prevalence: hold.
+            self.calm_e = 0;
+        }
+
+        // --- straggler loop (only with an SLO to aim at) -------------------
+        if self.slo_aware {
+            if miss_rate > self.cfg.target_miss_rate {
+                s = (self.s + 1).clamp(self.cfg.s_min, self.cfg.s_max);
+                self.calm_s = 0;
+            } else if miss_rate * 2.0 <= self.cfg.target_miss_rate && self.s > self.cfg.s_min
+            {
+                self.calm_s += 1;
+                if self.calm_s >= self.cfg.cooldown {
+                    s = self.s - 1;
+                    self.calm_s = 0;
+                }
+            } else {
+                self.calm_s = 0;
+            }
+        }
+
+        if s == self.s && e == self.e {
+            return None;
+        }
+        self.s = s;
+        self.e = e;
+        self.epochs += 1;
+        Some(Reconfigure { s, e })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(window: usize, cooldown: usize) -> AdaptiveConfig {
+        AdaptiveConfig {
+            window,
+            cooldown,
+            target_miss_rate: 0.1,
+            ..AdaptiveConfig::default()
+        }
+        .bounded_by(2, 2)
+    }
+
+    fn calm() -> GroupObservation {
+        GroupObservation::default()
+    }
+
+    #[test]
+    fn verify_failure_raises_e_within_one_window() {
+        let mut c = AdaptiveController::new(cfg(4, 2), 1, 0, None);
+        for _ in 0..3 {
+            assert_eq!(c.observe(calm()), None);
+        }
+        let epoch = c
+            .observe(GroupObservation { verify_failed: true, ..calm() })
+            .expect("window with a verify failure must raise E");
+        assert_eq!(epoch, Reconfigure { s: 1, e: 1 });
+        assert_eq!(c.current(), (1, 1));
+        assert_eq!(c.epochs(), 1);
+    }
+
+    #[test]
+    fn confirmed_count_jumps_e_to_prevalence() {
+        let mut c = AdaptiveController::new(cfg(2, 2), 0, 1, None);
+        c.observe(calm());
+        let epoch = c.observe(GroupObservation { confirmed_adversaries: 2, ..calm() });
+        assert_eq!(epoch, Some(Reconfigure { s: 0, e: 2 }));
+    }
+
+    #[test]
+    fn e_steps_down_only_after_cooldown_calm_windows() {
+        let mut c = AdaptiveController::new(cfg(2, 2), 0, 2, None);
+        // Window 1: calm — no epoch yet (cooldown 2).
+        c.observe(calm());
+        assert_eq!(c.observe(calm()), None);
+        // Window 2: calm — steps down one rung.
+        c.observe(calm());
+        assert_eq!(c.observe(calm()), Some(Reconfigure { s: 0, e: 1 }));
+        // An active window resets the calm streak.
+        c.observe(GroupObservation { confirmed_adversaries: 1, ..calm() });
+        assert_eq!(c.observe(calm()), None);
+        c.observe(calm());
+        assert_eq!(c.observe(calm()), None, "streak was reset");
+        c.observe(calm());
+        assert_eq!(c.observe(calm()), Some(Reconfigure { s: 0, e: 0 }));
+    }
+
+    #[test]
+    fn e_is_clamped_to_the_provisioned_fleet() {
+        let mut c = AdaptiveController::new(cfg(1, 1), 0, 2, None);
+        assert_eq!(
+            c.observe(GroupObservation { verify_failed: true, ..calm() }),
+            None,
+            "already at the e_max=2 ceiling"
+        );
+        assert_eq!(c.current(), (0, 2));
+    }
+
+    #[test]
+    fn slo_miss_rate_drives_s_both_ways() {
+        let slo = Some(Duration::from_millis(50));
+        let mut c = AdaptiveController::new(cfg(4, 1), 0, 0, slo);
+        // 2/4 misses > 10% target: S steps up.
+        for _ in 0..2 {
+            c.observe(GroupObservation { slo_miss: true, ..calm() });
+        }
+        c.observe(calm());
+        assert_eq!(c.observe(calm()), Some(Reconfigure { s: 1, e: 0 }));
+        // A clean window (cooldown 1) steps it back down.
+        for _ in 0..3 {
+            c.observe(calm());
+        }
+        assert_eq!(c.observe(calm()), Some(Reconfigure { s: 0, e: 0 }));
+    }
+
+    #[test]
+    fn without_an_slo_the_straggler_loop_holds() {
+        let mut c = AdaptiveController::new(cfg(2, 1), 2, 0, None);
+        for _ in 0..20 {
+            c.observe(calm());
+        }
+        assert_eq!(c.current().0, 2, "no SLO signal, S must not drift");
+    }
+
+    #[test]
+    fn sync_resets_the_baseline_after_an_external_epoch() {
+        let mut c = AdaptiveController::new(cfg(2, 2), 1, 2, None);
+        c.observe(calm());
+        // An operator manually re-tuned to (1, 0): the controller must
+        // reason from there, not phantom-step the budget it no longer
+        // holds.
+        c.sync(1, 0);
+        assert_eq!(c.current(), (1, 0));
+        c.observe(calm());
+        assert_eq!(c.observe(calm()), None, "fresh window, budget matches prevalence");
+        assert_eq!(c.current(), (1, 0));
+        assert_eq!(c.epochs(), 0);
+    }
+
+    #[test]
+    fn group_failures_do_not_ratchet_e() {
+        // Pure-availability failures (timeouts) must not read as Byzantine
+        // evidence: E holds (it would otherwise climb and widen the quota,
+        // making the timeouts worse).
+        let mut c = AdaptiveController::new(cfg(2, 10), 0, 0, None);
+        for _ in 0..10 {
+            c.observe(GroupObservation { failed: true, ..calm() });
+        }
+        assert_eq!(c.current(), (0, 0));
+        assert_eq!(c.epochs(), 0);
+    }
+
+    #[test]
+    fn decisions_are_a_pure_function_of_the_observation_sequence() {
+        let seq: Vec<GroupObservation> = (0..40)
+            .map(|i| GroupObservation {
+                confirmed_adversaries: usize::from(i % 7 == 0),
+                verify_failed: i % 13 == 0,
+                slo_miss: i % 5 == 0,
+                ..calm()
+            })
+            .collect();
+        let run = || {
+            let mut c = AdaptiveController::new(
+                cfg(4, 1),
+                1,
+                1,
+                Some(Duration::from_millis(10)),
+            );
+            seq.iter().map(|&o| c.observe(o)).collect::<Vec<_>>()
+        };
+        assert_eq!(run(), run(), "controller must replay bit-identically");
+    }
+}

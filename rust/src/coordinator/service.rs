@@ -47,6 +47,25 @@
 //! prediction ([`Service::submit`]), or register a tagged reply channel
 //! ([`Service::submit_tagged`]) so responses can be correlated by request
 //! id when they complete out of order — the TCP front-end relies on this.
+//!
+//! Two control-plane features ride on the pipeline (see
+//! [`crate::coordinator::adaptive`] and `docs/ARCHITECTURE.md`):
+//!
+//! * **Adaptive `(S, E)` epochs** — with [`ServiceBuilder::adaptive`], the
+//!   decode pool distills each group into a
+//!   [`crate::coordinator::adaptive::GroupObservation`]; the controller's
+//!   `Reconfigure` decisions loop back to the batcher, which swaps in the
+//!   re-tuned scheme at the next group boundary. Every group carries the
+//!   scheme that encoded it, so in-flight groups decode consistently
+//!   across an epoch flip.
+//! * **SLO-aware hedged decode** — with [`ServiceBuilder::slo`], each
+//!   dispatch derives *one* monotonic clock reading into both the hedge
+//!   deadline (`dispatched + slo`) and the hard deadline
+//!   (`dispatched + group_timeout`), and the router fires at most one of
+//!   them per group — a hedged group can never also take the stale
+//!   `group_timeout` path (and double-count failures/escalations), which
+//!   is also why [`PredictionHandle::wait_timeout`]'s client-side bound is
+//!   layered *over* these, never raced against them.
 
 use std::collections::HashMap;
 use std::sync::mpsc::{channel, Receiver, Sender};
@@ -64,6 +83,7 @@ use crate::workers::{
     WorkerTask,
 };
 
+use super::adaptive::{AdaptiveConfig, AdaptiveController, GroupObservation};
 use super::pipeline::FaultPlan;
 
 /// Validated service tuning, fixed at spawn (internal — callers go through
@@ -76,6 +96,8 @@ struct Tuning {
     max_inflight: usize,
     decode_threads: usize,
     group_timeout: Duration,
+    slo: Option<Duration>,
+    adaptive: Option<AdaptiveConfig>,
     fault_hook: Option<Arc<dyn Fn(u64) -> FaultPlan + Send + Sync>>,
 }
 
@@ -92,6 +114,8 @@ pub struct ServiceBuilder {
     max_inflight: usize,
     decode_threads: usize,
     group_timeout: Duration,
+    slo: Option<Duration>,
+    adaptive: Option<AdaptiveConfig>,
     fault_hook: Option<Arc<dyn Fn(u64) -> FaultPlan + Send + Sync>>,
 }
 
@@ -109,6 +133,8 @@ impl ServiceBuilder {
             max_inflight: 4,
             decode_threads: 2,
             group_timeout: Duration::from_secs(30),
+            slo: None,
+            adaptive: None,
             fault_hook: None,
         }
     }
@@ -180,6 +206,27 @@ impl ServiceBuilder {
         self
     }
 
+    /// Per-group latency SLO. Past `dispatch + slo` the reply router stops
+    /// waiting for the scheme's full quota and delivers the group early as
+    /// soon as the reduced [`CollectPolicy::hedge_need`] quota is met
+    /// (hedged decode, with the verification/redispatch ladder as the
+    /// safety net). Also drives the adaptive straggler-budget loop and the
+    /// `slo_misses` counter. Must be shorter than the group timeout.
+    pub fn slo(mut self, d: Duration) -> Self {
+        self.slo = Some(d);
+        self
+    }
+
+    /// Enable the adaptive redundancy control plane (see
+    /// [`crate::coordinator::adaptive`]): per-group decode evidence feeds
+    /// an [`AdaptiveController`] whose `Reconfigure { s, e }` epochs the
+    /// batcher applies at group boundaries. Budgets are bounded by the
+    /// scheme provisioned here at spawn — the fleet cannot grow past it.
+    pub fn adaptive(mut self, cfg: AdaptiveConfig) -> Self {
+        self.adaptive = Some(cfg);
+        self
+    }
+
     /// Experiment hook: exact per-group fault plan keyed by group index
     /// (1-based dispatch order). For fleet-wide behavior programs use
     /// [`ServiceBuilder::fault_profile`] instead.
@@ -207,26 +254,47 @@ impl ServiceBuilder {
         if scheme.group_size() == 0 {
             bail!("service '{name}': scheme has a zero group size");
         }
+        if let Some(slo) = self.slo {
+            if slo.is_zero() {
+                bail!("service '{name}': slo must be positive");
+            }
+            if slo >= self.group_timeout {
+                bail!(
+                    "service '{name}': slo ({slo:?}) must be shorter than the group \
+                     timeout ({:?}) — both deadlines derive from the one dispatch clock",
+                    self.group_timeout
+                );
+            }
+            // A hedged decode under a Byzantine budget gives up the full
+            // quorum/locate margin; verification is the safety net that
+            // makes that sound. Refusing here (not silently serving
+            // possibly-corrupt hedged decodes) keeps the <=E guarantee.
+            if scheme.byzantine_tolerated() > 0 && !self.verify.enabled {
+                bail!(
+                    "service '{name}': an SLO with a Byzantine budget (E={}) requires \
+                     decode verification — the hedge path leans on the verification \
+                     ladder as its safety net",
+                    scheme.byzantine_tolerated()
+                );
+            }
+        }
+        // Same rule for the control plane: without verification the E loop
+        // is blind (no confirmed-adversary or residual-failure evidence
+        // ever arrives), so calm windows would shed the Byzantine budget
+        // to zero with nothing to raise it back.
+        if self.adaptive.is_some() && scheme.byzantine_tolerated() > 0 && !self.verify.enabled
+        {
+            bail!(
+                "service '{name}': adaptive control with a Byzantine budget (E={}) \
+                 requires decode verification — it is the controller's only Byzantine \
+                 evidence",
+                scheme.byzantine_tolerated()
+            );
+        }
         // The collect policy is consulted by the router on every reply;
-        // an inconsistent one must fail here, not panic the router thread.
-        let policy = scheme.collect_policy();
-        if policy.num_workers() != nw {
-            bail!(
-                "service '{name}': collect policy covers {} workers, scheme encodes for {nw}",
-                policy.num_workers()
-            );
-        }
-        let mut slot_size = vec![0usize; policy.num_slots()];
-        for &s in &policy.slots {
-            slot_size[s] += 1;
-        }
-        if slot_size.iter().any(|&n| n < policy.need) {
-            bail!(
-                "service '{name}': collect policy needs {} replies from a slot with fewer \
-                 workers",
-                policy.need
-            );
-        }
+        // an inconsistent one must fail here (and at every reconfigure
+        // epoch), not panic the router thread.
+        let policy = validated_policy(&name, scheme.as_ref())?;
         let mut specs = match self.worker_specs {
             Some(specs) => {
                 if specs.len() != nw {
@@ -265,9 +333,13 @@ impl ServiceBuilder {
             max_inflight: self.max_inflight,
             decode_threads: self.decode_threads,
             group_timeout: self.group_timeout,
+            slo: self.slo,
+            adaptive: self.adaptive,
             fault_hook: self.fault_hook,
         };
         let metrics = Arc::new(ServingMetrics::new());
+        metrics.current_s.set(scheme.stragglers_tolerated() as u64);
+        metrics.current_e.set(scheme.byzantine_tolerated() as u64);
         let (tx, rx) = channel::<Msg>();
         let m = metrics.clone();
         let s = scheme.clone();
@@ -296,6 +368,14 @@ impl PredictionHandle {
             .map_err(|e| anyhow::anyhow!(e))
     }
 
+    /// [`PredictionHandle::wait`] with a client-side patience bound.
+    ///
+    /// This bound is *layered over* the service's own deadlines, never
+    /// raced against them: the group's hedge (`slo`) and hard
+    /// (`group_timeout`) deadlines both derive from the single monotonic
+    /// clock reading taken at dispatch, and the router fires at most one
+    /// of them per group — so a timeout here only means this client
+    /// stopped waiting, not that the group's fate changed.
     pub fn wait_timeout(self, timeout: Duration) -> Result<Vec<f32>> {
         self.rx
             .recv_timeout(timeout)
@@ -344,6 +424,9 @@ struct Redispatch {
 enum Msg {
     Query(Submission),
     Redispatch(Redispatch),
+    /// Apply a new (S, E) operating point at the next group boundary —
+    /// from the adaptive controller or [`Service::reconfigure`].
+    Reconfigure { s: usize, e: usize },
     Shutdown,
 }
 
@@ -352,6 +435,9 @@ pub struct Service {
     tx: Sender<Msg>,
     batcher: Option<JoinHandle<()>>,
     scheme: Arc<dyn ServingScheme>,
+    /// The service's live counters/histograms (shared with the batcher,
+    /// router and decode pool; gauges `current_s`/`current_e` track the
+    /// operating point across reconfigure epochs).
     pub metrics: Arc<ServingMetrics>,
 }
 
@@ -362,9 +448,20 @@ impl Service {
         ServiceBuilder::new(scheme)
     }
 
-    /// The scheme this service runs.
+    /// The scheme this service was *provisioned* with (the fleet ceiling).
+    /// Under adaptive control the currently *serving* scheme may be a
+    /// re-tuned variant — read the `current_s`/`current_e` gauges for the
+    /// live operating point.
     pub fn scheme(&self) -> &Arc<dyn ServingScheme> {
         &self.scheme
+    }
+
+    /// Request a manual `(S, E)` re-tune, applied at the next group
+    /// boundary (the same path the adaptive controller uses). Fire and
+    /// forget: an unsupported or fleet-exceeding request is counted in
+    /// `adaptive_alerts` and logged, leaving the current scheme serving.
+    pub fn reconfigure(&self, s: usize, e: usize) {
+        let _ = self.tx.send(Msg::Reconfigure { s, e });
     }
 
     /// Submit one query payload; resolves when its group is decoded.
@@ -461,10 +558,12 @@ impl InflightGate {
 
 /// Per-group context held between dispatch and decode. Retains the original
 /// query payloads so a verification-failed group can be re-encoded and
-/// redispatched.
+/// redispatched, and the scheme that encoded the group so it decodes
+/// consistently even if a reconfigure epoch lands while it is in flight.
 struct GroupCtx {
     sinks: Vec<ReplySink>,
     queries: Vec<Vec<f32>>,
+    scheme: Arc<dyn ServingScheme>,
     started: Instant,
     retries: u32,
 }
@@ -480,8 +579,34 @@ fn fail_msg(msg: Msg, why: &str) {
                 sink.send(Err(why.into()));
             }
         }
-        Msg::Shutdown => {}
+        Msg::Reconfigure { .. } | Msg::Shutdown => {}
     }
+}
+
+/// A scheme's collect policy, checked for internal consistency (the router
+/// consults it on every reply, so a bad one must fail at spawn or at the
+/// reconfigure boundary — never panic the router thread).
+fn validated_policy(name: &str, scheme: &dyn ServingScheme) -> Result<CollectPolicy> {
+    let nw = scheme.num_workers();
+    let policy = scheme.collect_policy();
+    if policy.num_workers() != nw {
+        bail!(
+            "service '{name}': collect policy covers {} workers, scheme encodes for {nw}",
+            policy.num_workers()
+        );
+    }
+    let mut slot_size = vec![0usize; policy.num_slots()];
+    for &s in &policy.slots {
+        slot_size[s] += 1;
+    }
+    if slot_size.iter().any(|&n| n < policy.need) {
+        bail!(
+            "service '{name}': collect policy needs {} replies from a slot with fewer \
+             workers",
+            policy.need
+        );
+    }
+    Ok(policy)
 }
 
 /// The batcher's dispatch machinery: everything that is fixed for the
@@ -490,16 +615,23 @@ fn fail_msg(msg: Msg, why: &str) {
 struct Dispatcher {
     pool: WorkerPool,
     router: ReplyRouter,
+    /// The scheme currently encoding new groups. Reconfigure epochs swap
+    /// it (with `policy`) at group boundaries; in-flight groups keep the
+    /// scheme recorded in their [`GroupCtx`].
     scheme: Arc<dyn ServingScheme>,
-    /// The scheme's collect policy, computed (and validated) once at
-    /// spawn — pure function of the immutable scheme, so per-dispatch
-    /// rebuilding would be wasted work.
+    /// The current scheme's collect policy, computed (and validated) once
+    /// per epoch — pure function of the scheme, so per-dispatch rebuilding
+    /// would be wasted work.
     policy: CollectPolicy,
     tuning: Tuning,
     ctxs: CtxMap,
     gate: Arc<InflightGate>,
     decode_tx: Sender<CollectedGroup>,
     metrics: Arc<ServingMetrics>,
+    /// Synced on every applied epoch so manual [`Service::reconfigure`]
+    /// requests can't leave the controller reasoning from a stale
+    /// baseline (and silently reverting the operator).
+    controller: Option<Arc<Mutex<AdaptiveController>>>,
     group_counter: u64,
 }
 
@@ -535,8 +667,9 @@ impl Dispatcher {
         self.gate.acquire(self.tuning.max_inflight, &self.metrics);
         self.group_counter += 1;
         let group = self.group_counter;
-        let k = self.scheme.group_size();
-        let nw = self.scheme.num_workers();
+        let scheme = self.scheme.clone();
+        let k = scheme.group_size();
+        let nw = scheme.num_workers();
         let real = queries.len();
         let mut payloads: Vec<&[f32]> = queries.iter().map(|q| &q[..]).collect();
         while payloads.len() < k {
@@ -546,7 +679,7 @@ impl Dispatcher {
         // --- encode (scheme-specific) -----------------------------------
         let t0 = Instant::now();
         let mut coded: Vec<Vec<f32>> = vec![Vec::new(); nw];
-        self.scheme.encode_into(&payloads, &mut coded);
+        scheme.encode_into(&payloads, &mut coded);
         self.metrics.encode_latency.record(t0.elapsed().as_secs_f64());
 
         // Exact per-group fault plan (experiments; fleet-wide behavior
@@ -559,9 +692,23 @@ impl Dispatcher {
 
         // Register reply routing *before* fan-out: replies may beat us
         // back.
-        self.ctxs.lock().unwrap().insert(group, GroupCtx { sinks, queries, started, retries });
-        let deadline = Instant::now() + self.tuning.group_timeout;
-        self.router.register(group, self.policy.clone(), deadline, self.decode_tx.clone());
+        self.ctxs
+            .lock()
+            .unwrap()
+            .insert(group, GroupCtx { sinks, queries, scheme, started, retries });
+        // ONE clock reading anchors every deadline this group can fire —
+        // hedge and expiry cannot drift apart, and the router delivers the
+        // group at most once (see the module docs on the old race).
+        let dispatched = Instant::now();
+        let deadline = dispatched + self.tuning.group_timeout;
+        let hedge_at = self.tuning.slo.map(|slo| dispatched + slo);
+        self.router.register_hedged(
+            group,
+            self.policy.clone(),
+            hedge_at,
+            deadline,
+            self.decode_tx.clone(),
+        );
         self.metrics.groups_dispatched.inc();
 
         // --- fan out ------------------------------------------------------
@@ -592,6 +739,72 @@ impl Dispatcher {
             }
         }
     }
+
+    /// Apply a `(S, E)` epoch at the group boundary: build the re-tuned
+    /// scheme, validate it against the provisioned fleet, and swap it (and
+    /// its collect policy) in for all *subsequent* groups. Any rejection —
+    /// a scheme that cannot re-tune, a changed group size, a fleet the
+    /// pool cannot cover — degrades to alerting (`adaptive_alerts`).
+    fn apply_reconfigure(&mut self, s: usize, e: usize) {
+        let name = self.scheme.name().to_string();
+        let swapped = self.scheme.reconfigure(s, e).and_then(|new| {
+            if new.group_size() != self.scheme.group_size() {
+                bail!(
+                    "reconfigured scheme changed the group size ({} -> {})",
+                    self.scheme.group_size(),
+                    new.group_size()
+                );
+            }
+            if new.num_workers() > self.pool.num_workers() {
+                bail!(
+                    "(S={s}, E={e}) needs {} workers, fleet was provisioned with {}",
+                    new.num_workers(),
+                    self.pool.num_workers()
+                );
+            }
+            // Mirror the spawn-time rules: hedging or adaptive control +
+            // Byzantine budget needs the verification safety net
+            // (reachable via a manual reconfigure on a service spawned at
+            // E=0).
+            if (self.tuning.slo.is_some() || self.controller.is_some())
+                && new.byzantine_tolerated() > 0
+                && !self.tuning.verify.enabled
+            {
+                bail!(
+                    "E={} under an SLO or adaptive control requires decode \
+                     verification (the hedge and the controller's Byzantine loop \
+                     both lean on it)",
+                    new.byzantine_tolerated()
+                );
+            }
+            let policy = validated_policy(&name, new.as_ref())?;
+            Ok((new, policy))
+        });
+        match swapped {
+            Ok((new, policy)) => {
+                log::info!(
+                    "scheme '{name}': reconfigure epoch -> S={s} E={e} ({} of {} workers)",
+                    new.num_workers(),
+                    self.pool.num_workers()
+                );
+                self.metrics.current_s.set(new.stragglers_tolerated() as u64);
+                self.metrics.current_e.set(new.byzantine_tolerated() as u64);
+                self.metrics.reconfigure_epochs.inc();
+                if let Some(controller) = &self.controller {
+                    controller
+                        .lock()
+                        .unwrap()
+                        .sync(new.stragglers_tolerated(), new.byzantine_tolerated());
+                }
+                self.scheme = new;
+                self.policy = policy;
+            }
+            Err(err) => {
+                self.metrics.adaptive_alerts.inc();
+                log::warn!("scheme '{name}': reconfigure to (S={s}, E={e}) refused: {err:#}");
+            }
+        }
+    }
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -616,18 +829,33 @@ fn batcher_loop(
     let gate = Arc::new(InflightGate::new());
     let (decode_tx, decode_rx) = channel::<CollectedGroup>();
     let decode_rx = Arc::new(Mutex::new(decode_rx));
+    // The adaptive controller starts at — and is bounded by — the
+    // provisioned operating point: the fleet was sized for it at spawn,
+    // so the control plane tunes within it and can always climb back.
+    let controller = tuning.adaptive.map(|cfg| {
+        let (s0, e0) = (scheme.stragglers_tolerated(), scheme.byzantine_tolerated());
+        Arc::new(Mutex::new(AdaptiveController::new(
+            cfg.bounded_by(s0, e0),
+            s0,
+            e0,
+            tuning.slo,
+        )))
+    });
     let mut decode_handles = Vec::new();
     for t in 0..tuning.decode_threads {
         let rx = decode_rx.clone();
-        let scheme = scheme.clone();
         let ctxs = ctxs.clone();
         let gate = gate.clone();
         let metrics = metrics.clone();
         let loopback = loopback.clone();
-        let verify = tuning.verify;
+        let env = DecodeEnv {
+            verify: tuning.verify,
+            slo: tuning.slo,
+            controller: controller.clone(),
+        };
         let handle = std::thread::Builder::new()
             .name(format!("decode-{t}"))
-            .spawn(move || decode_loop(rx, scheme, verify, ctxs, gate, loopback, metrics))
+            .spawn(move || decode_loop(rx, env, ctxs, gate, loopback, metrics))
             .expect("spawning decode worker");
         decode_handles.push(handle);
     }
@@ -646,6 +874,7 @@ fn batcher_loop(
         gate,
         decode_tx,
         metrics,
+        controller,
         group_counter: 0,
     };
     let mut pending: Vec<Submission> = Vec::with_capacity(k);
@@ -686,6 +915,11 @@ fn batcher_loop(
             Msg::Redispatch(r) => {
                 dispatcher.dispatch(r.sinks, r.queries, r.started, r.retries);
             }
+            Msg::Reconfigure { s, e } => {
+                // Group boundary by construction: the batcher applies the
+                // epoch between dispatches, never mid-group.
+                dispatcher.apply_reconfigure(s, e);
+            }
             Msg::Shutdown => break,
         }
     }
@@ -719,10 +953,43 @@ fn batcher_loop(
 /// re-dispatched before being served degraded.
 const MAX_REDISPATCHES: u32 = 1;
 
+/// Per-thread decode environment (everything fixed for the service's
+/// lifetime; the per-group scheme travels in the [`GroupCtx`]).
+struct DecodeEnv {
+    verify: VerifyPolicy,
+    slo: Option<Duration>,
+    controller: Option<Arc<Mutex<AdaptiveController>>>,
+}
+
+impl DecodeEnv {
+    /// Feed one group's evidence to the adaptive controller and loop any
+    /// epoch decision back to the batcher (which applies it at the next
+    /// group boundary).
+    fn observe(&self, obs: GroupObservation, loopback: &Sender<Msg>) {
+        if let Some(controller) = &self.controller {
+            if let Some(epoch) = controller.lock().unwrap().observe(obs) {
+                let _ = loopback.send(Msg::Reconfigure { s: epoch.s, e: epoch.e });
+            }
+        }
+    }
+}
+
+/// Send a verification-failed (or hedge-broken) group back around the loop
+/// for one re-encoded redispatch. Consumes the ctx; the gate slot must
+/// already be released.
+fn redispatch(ctx: GroupCtx, loopback: &Sender<Msg>, metrics: &ServingMetrics) {
+    metrics.redispatches.inc();
+    let GroupCtx { sinks, queries, started, retries, .. } = ctx;
+    let msg = Msg::Redispatch(Redispatch { sinks, queries, retries: retries + 1, started });
+    if let Err(failed) = loopback.send(msg) {
+        // Batcher already gone: answer now.
+        fail_msg(failed.0, "service shut down");
+    }
+}
+
 fn decode_loop(
     rx: Arc<Mutex<Receiver<CollectedGroup>>>,
-    scheme: Arc<dyn ServingScheme>,
-    verify: VerifyPolicy,
+    env: DecodeEnv,
     ctxs: CtxMap,
     gate: Arc<InflightGate>,
     loopback: Sender<Msg>,
@@ -741,7 +1008,7 @@ fn decode_loop(
             continue;
         };
         let result = if collected.complete {
-            scheme.decode(&collected.replies, verify, &metrics)
+            ctx.scheme.decode(&collected.replies, env.verify, &metrics)
         } else {
             // Mirror the router's two incomplete outcomes: deadline expiry
             // vs fail-fast when worker errors made the quota unreachable.
@@ -759,58 +1026,112 @@ fn decode_loop(
         };
         match result {
             Ok(out) => {
-                if let Some(report) = out.verify {
-                    if !report.passed {
-                        if ctx.retries < MAX_REDISPATCHES {
-                            // Final rung of the escalation ladder: re-encode
-                            // and re-fan-out the group. The gate slot is
-                            // released first — the redispatch acquires its
-                            // own.
-                            log::warn!(
-                                "group {}: decode verification failed \
-                                 (residual {:.3}); redispatching",
-                                collected.group,
-                                report.residual
-                            );
-                            metrics.redispatches.inc();
-                            gate.release();
-                            let GroupCtx { sinks, queries, started, retries } = ctx;
-                            let msg = Msg::Redispatch(Redispatch {
-                                sinks,
-                                queries,
-                                retries: retries + 1,
-                                started,
-                            });
-                            if let Err(failed) = loopback.send(msg) {
-                                // Batcher already gone: answer now.
-                                fail_msg(failed.0, "service shut down");
-                            }
-                            continue;
-                        }
-                        // Out of retries: serve the best decode we have
-                        // rather than erroring a possibly-fine answer, but
-                        // make the degradation observable.
+                let verify_failed = out.verify.is_some_and(|report| !report.passed);
+                if verify_failed {
+                    let residual = out.verify.map_or(f64::NAN, |r| r.residual);
+                    if ctx.retries < MAX_REDISPATCHES {
+                        // Final rung of the escalation ladder: re-encode
+                        // and re-fan-out the group. The gate slot is
+                        // released first — the redispatch acquires its
+                        // own.
                         log::warn!(
-                            "group {}: verification still failing after \
-                             {} redispatch(es) (residual {:.3}); serving degraded",
-                            collected.group,
-                            ctx.retries,
-                            report.residual
+                            "group {}: decode verification failed \
+                             (residual {residual:.3}); redispatching",
+                            collected.group
                         );
+                        gate.release();
+                        redispatch(ctx, &loopback, &metrics);
+                        env.observe(
+                            GroupObservation {
+                                verify_failed: true,
+                                hedged: collected.hedged,
+                                ..GroupObservation::default()
+                            },
+                            &loopback,
+                        );
+                        continue;
                     }
+                    // Out of retries: serve the best decode we have
+                    // rather than erroring a possibly-fine answer, but
+                    // make the degradation observable.
+                    log::warn!(
+                        "group {}: verification still failing after \
+                         {} redispatch(es) (residual {residual:.3}); serving degraded",
+                        collected.group,
+                        ctx.retries
+                    );
+                }
+                let latency = ctx.started.elapsed();
+                let slo_miss = env.slo.is_some_and(|d| latency > d);
+                if slo_miss {
+                    metrics.slo_misses.inc();
+                }
+                if collected.hedged && !verify_failed {
+                    metrics.hedge_wins.inc();
                 }
                 metrics.groups_decoded.inc();
-                metrics.group_latency.record(ctx.started.elapsed().as_secs_f64());
+                metrics.group_latency.record(latency.as_secs_f64());
                 for (sink, pred) in ctx.sinks.iter().zip(out.predictions.into_iter()) {
                     sink.send(Ok(pred));
                 }
+                env.observe(
+                    GroupObservation {
+                        confirmed_adversaries: out.confirmed_adversaries.unwrap_or(0),
+                        verify_failed,
+                        slo_miss,
+                        hedged: collected.hedged,
+                        failed: false,
+                    },
+                    &loopback,
+                );
             }
             Err(e) => {
+                // Honest SLO accounting on the failure paths too: the
+                // miss is a fact about elapsed time, not about the
+                // outcome (a fail-fast undecodable group can die well
+                // under the SLO and must not read as a miss).
+                let slo_miss = env.slo.is_some_and(|d| ctx.started.elapsed() > d);
+                if slo_miss {
+                    metrics.slo_misses.inc();
+                }
+                if collected.hedged && ctx.retries < MAX_REDISPATCHES {
+                    // A hedged early decode that could not even decode
+                    // (reduced reply set left the scheme short) falls back
+                    // through the same ladder instead of failing clients
+                    // the full deadline might still have served. This is a
+                    // reply-shortfall (straggler-shaped) retry, not
+                    // Byzantine evidence — observed as latency pressure
+                    // only.
+                    log::warn!(
+                        "group {}: hedged decode failed ({e:#}); redispatching",
+                        collected.group
+                    );
+                    gate.release();
+                    redispatch(ctx, &loopback, &metrics);
+                    env.observe(
+                        GroupObservation {
+                            hedged: true,
+                            slo_miss,
+                            ..GroupObservation::default()
+                        },
+                        &loopback,
+                    );
+                    continue;
+                }
                 metrics.groups_failed.inc();
                 let msg = format!("group inference failed: {e:#}");
                 for sink in &ctx.sinks {
                     sink.send(Err(msg.clone()));
                 }
+                env.observe(
+                    GroupObservation {
+                        failed: true,
+                        slo_miss,
+                        hedged: collected.hedged,
+                        ..GroupObservation::default()
+                    },
+                    &loopback,
+                );
             }
         }
         gate.release();
@@ -1006,6 +1327,193 @@ mod tests {
             .decode_threads(0)
             .spawn()
             .is_err());
+    }
+
+    // ---- adaptive control plane & SLO hedging -----------------------------
+
+    #[test]
+    fn manual_reconfigure_applies_at_group_boundary() {
+        let engine = Arc::new(LinearMockEngine::new(6, 3));
+        let svc = Service::builder(approxifer(4, 1, 1)).engine(engine).spawn().unwrap();
+        assert_eq!(svc.metrics.current_s.get(), 1);
+        assert_eq!(svc.metrics.current_e.get(), 1);
+        let handles: Vec<PredictionHandle> =
+            (0..4).map(|j| svc.submit(smooth_payload(j, 6))).collect();
+        for h in handles {
+            h.wait_timeout(Duration::from_secs(10)).unwrap();
+        }
+        // The epoch lands before the next group: tx ordering guarantees
+        // the Reconfigure message precedes the queries below.
+        svc.reconfigure(1, 0);
+        let handles: Vec<PredictionHandle> =
+            (0..4).map(|j| svc.submit(smooth_payload(j, 6))).collect();
+        for h in handles {
+            h.wait_timeout(Duration::from_secs(10)).unwrap();
+        }
+        assert_eq!(svc.metrics.reconfigure_epochs.get(), 1);
+        assert_eq!(svc.metrics.adaptive_alerts.get(), 0);
+        assert_eq!(svc.metrics.current_s.get(), 1);
+        assert_eq!(svc.metrics.current_e.get(), 0);
+        assert_eq!(svc.metrics.groups_decoded.get(), 2);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn reconfigure_beyond_the_provisioned_fleet_alerts() {
+        // Provisioned (4,1,0) = 5 workers; (S=1, E=2) needs 2(4+2)+1 = 13.
+        let engine = Arc::new(LinearMockEngine::new(6, 3));
+        let svc = Service::builder(approxifer(4, 1, 0)).engine(engine).spawn().unwrap();
+        svc.reconfigure(1, 2);
+        let handles: Vec<PredictionHandle> =
+            (0..4).map(|j| svc.submit(smooth_payload(j, 6))).collect();
+        for h in handles {
+            h.wait_timeout(Duration::from_secs(10)).unwrap();
+        }
+        assert_eq!(svc.metrics.adaptive_alerts.get(), 1);
+        assert_eq!(svc.metrics.reconfigure_epochs.get(), 0);
+        assert_eq!(svc.metrics.current_e.get(), 0, "operating point unchanged");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn fixed_redundancy_scheme_degrades_to_alerting() {
+        let engine = Arc::new(LinearMockEngine::new(6, 3));
+        let svc =
+            Service::builder(Arc::new(Uncoded::new(3))).engine(engine).spawn().unwrap();
+        svc.reconfigure(1, 0);
+        let handles: Vec<PredictionHandle> =
+            (0..3).map(|j| svc.submit(smooth_payload(j, 6))).collect();
+        for h in handles {
+            h.wait_timeout(Duration::from_secs(10)).unwrap();
+        }
+        assert_eq!(svc.metrics.adaptive_alerts.get(), 1);
+        assert_eq!(svc.metrics.reconfigure_epochs.get(), 0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn builder_rejects_slo_at_or_past_the_group_timeout() {
+        let engine: Arc<LinearMockEngine> = Arc::new(LinearMockEngine::new(6, 3));
+        let e: Arc<dyn InferenceEngine> = engine;
+        let err = Service::builder(approxifer(2, 1, 0))
+            .engine(e.clone())
+            .group_timeout(Duration::from_millis(100))
+            .slo(Duration::from_millis(100))
+            .spawn()
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("slo"), "{err:#}");
+        assert!(Service::builder(approxifer(2, 1, 0))
+            .engine(e)
+            .slo(Duration::ZERO)
+            .spawn()
+            .is_err());
+    }
+
+    #[test]
+    fn slo_hedge_serves_before_the_stragglers() {
+        // K=2, S=1, E=1: 7 workers, full quota 6, hedge quota 2(K+E)-1 = 5.
+        // Two workers straggle for 2s — the full quota stalls, but the
+        // hedge deadline (150ms) releases the group with the 5 fast
+        // replies and the clients are served ~13x before the stragglers
+        // land. Verification is on (required whenever an SLO coexists
+        // with a Byzantine budget): a clean hedged decode counts a win,
+        // and even if the residual check were to send it through the
+        // redispatch rung the clients are still served fast.
+        let scheme = approxifer(2, 1, 1);
+        let engine = Arc::new(LinearMockEngine::new(6, 3));
+        let svc = Service::builder(scheme)
+            .engine(engine)
+            .slo(Duration::from_millis(150))
+            .group_timeout(Duration::from_secs(10))
+            .verify(VerifyPolicy::on(0.4))
+            .fault_hook(Arc::new(|_g| FaultPlan {
+                stragglers: vec![0, 1],
+                straggler_delay: Duration::from_secs(2),
+                ..FaultPlan::none()
+            }))
+            .spawn()
+            .unwrap();
+        let t0 = Instant::now();
+        let h0 = svc.submit(smooth_payload(0, 6));
+        let h1 = svc.submit(smooth_payload(1, 6));
+        assert!(h0.wait_timeout(Duration::from_secs(8)).is_ok());
+        assert!(h1.wait_timeout(Duration::from_secs(8)).is_ok());
+        let elapsed = t0.elapsed();
+        assert!(
+            elapsed < Duration::from_millis(1500),
+            "hedge must beat the 2s stragglers, took {elapsed:?}"
+        );
+        assert!(svc.metrics.hedge_attempts.get() >= 1);
+        assert!(
+            svc.metrics.hedge_wins.get() + svc.metrics.redispatches.get() >= 1,
+            "the hedge either won or engaged the ladder"
+        );
+        // The unified deadline source: a hedged group must not also fire
+        // the group-timeout path.
+        assert_eq!(svc.metrics.groups_failed.get(), 0);
+        assert_eq!(svc.metrics.groups_decoded.get(), 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn builder_requires_verification_for_adaptive_with_a_byzantine_budget() {
+        // Without verification the controller's E loop has no evidence
+        // stream: calm windows would shed the budget with nothing to
+        // raise it back. Refused at spawn.
+        let engine: Arc<LinearMockEngine> = Arc::new(LinearMockEngine::new(6, 3));
+        let e: Arc<dyn InferenceEngine> = engine;
+        let err = Service::builder(approxifer(2, 1, 1))
+            .engine(e.clone())
+            .adaptive(AdaptiveConfig::default())
+            .spawn()
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("verification"), "{err:#}");
+        // E = 0 provisioned (the ceiling): the E loop can never arm, so
+        // the combination is fine.
+        assert!(Service::builder(approxifer(2, 1, 0))
+            .engine(e)
+            .adaptive(AdaptiveConfig::default())
+            .spawn()
+            .is_ok());
+    }
+
+    #[test]
+    fn builder_requires_verification_for_hedging_with_a_byzantine_budget() {
+        // Hedged decodes give up quorum/locate margin; without the
+        // verification safety net that silently voids the <=E guarantee,
+        // so spawn refuses the combination.
+        let engine: Arc<LinearMockEngine> = Arc::new(LinearMockEngine::new(6, 3));
+        let e: Arc<dyn InferenceEngine> = engine;
+        let err = Service::builder(approxifer(2, 1, 1))
+            .engine(e.clone())
+            .slo(Duration::from_millis(50))
+            .spawn()
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("verification"), "{err:#}");
+        // Fine with E = 0 (no hedge exists to go wrong)…
+        assert!(Service::builder(approxifer(2, 1, 0))
+            .engine(e.clone())
+            .slo(Duration::from_millis(50))
+            .spawn()
+            .is_ok());
+        // …but a manual reconfigure to E > 0 on that service alerts
+        // instead of arming an unverified hedge. The wide (S=7) fleet
+        // makes (S=1, E=1) fit in workers (11 = 11), so the refusal below
+        // is the verification rule, not the fleet-size check.
+        let svc = Service::builder(approxifer(4, 7, 0))
+            .engine(e)
+            .slo(Duration::from_millis(200))
+            .spawn()
+            .unwrap();
+        svc.reconfigure(1, 1);
+        let handles: Vec<PredictionHandle> =
+            (0..4).map(|j| svc.submit(smooth_payload(j, 6))).collect();
+        for h in handles {
+            h.wait_timeout(Duration::from_secs(10)).unwrap();
+        }
+        assert_eq!(svc.metrics.adaptive_alerts.get(), 1);
+        assert_eq!(svc.metrics.current_e.get(), 0);
+        svc.shutdown();
     }
 
     // ---- every scheme serves through the same engine ----------------------

@@ -5,16 +5,24 @@
 //! online [`Service`] (real worker threads with injected straggler tails),
 //! so the comparison isolates the redundancy math, not coordinator
 //! differences. Reports p50/p99 per strategy.
+//!
+//! Also home to the **drifting-fault trace** ([`drifting_comparison`]):
+//! the adaptive control plane's benchmark scenario — an honest fleet that
+//! drifts into a straggler burst, then a Byzantine burst, then recovers —
+//! comparing a live-re-tuned service against the static-pessimistic
+//! (provisioned worst-case forever) and static-oracle (per-phase matched,
+//! i.e. clairvoyant) deployments on tail latency, served accuracy and
+//! worker overhead.
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use crate::coding::{ApproxIferCode, CodeParams, Replication, ServingScheme, Uncoded};
-use crate::coordinator::Service;
+use crate::coordinator::{AdaptiveConfig, FaultPlan, Service, VerifyPolicy};
 use crate::util::stats::Summary;
-use crate::workers::{InferenceEngine, LatencyModel};
+use crate::workers::{ByzantineMode, InferenceEngine, LatencyModel};
 
 use super::report::{Report, Table};
 
@@ -69,6 +77,222 @@ fn smooth_group(k: usize, d: usize) -> Vec<Vec<f32>> {
     (0..k)
         .map(|j| (0..d).map(|t| ((j as f32) * 0.31 + (t as f32) * 0.017).sin()).collect())
         .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Drifting-fault trace: the adaptive control plane's benchmark scenario
+// ---------------------------------------------------------------------------
+
+/// One phase of a drifting-fault trace: `groups` K-groups served under one
+/// fixed per-group [`FaultPlan`].
+pub struct DriftPhase {
+    /// Phase label in the emitted rows.
+    pub name: &'static str,
+    /// K-groups served in this phase.
+    pub groups: usize,
+    /// Fault plan applied to every group of the phase.
+    pub plan: FaultPlan,
+}
+
+/// The canonical drifting trace: honest → slow-burst (one worker straggles
+/// 25 ms, blowing the 15 ms SLO unless `S` covers it) → byz-burst (one
+/// worker corrupts every reply) → recovered (honest again, so an adaptive
+/// controller can shed the raised budgets).
+pub fn drift_phases(groups_per_phase: usize) -> Vec<DriftPhase> {
+    vec![
+        DriftPhase { name: "honest", groups: groups_per_phase, plan: FaultPlan::none() },
+        DriftPhase {
+            name: "slow-burst",
+            groups: groups_per_phase,
+            plan: FaultPlan {
+                stragglers: vec![0],
+                straggler_delay: Duration::from_millis(25),
+                ..FaultPlan::none()
+            },
+        },
+        DriftPhase {
+            name: "byz-burst",
+            groups: groups_per_phase,
+            plan: FaultPlan {
+                byzantine: vec![0],
+                byz_mode: Some(ByzantineMode::GaussianNoise { sigma: 8.0 }),
+                ..FaultPlan::none()
+            },
+        },
+        DriftPhase { name: "recovered", groups: groups_per_phase, plan: FaultPlan::none() },
+    ]
+}
+
+/// One `(run, phase)` measurement of a drifting-trace experiment.
+pub struct DriftRow {
+    /// `adaptive`, `static-pessimistic` or `static-oracle`.
+    pub run: &'static str,
+    /// Phase label from [`DriftPhase`].
+    pub phase: &'static str,
+    /// Median group latency (seconds).
+    pub p50: f64,
+    /// p99 group latency (seconds).
+    pub p99: f64,
+    /// Fraction of queries served within tolerance of the engine's ground
+    /// truth (failed queries count as wrong).
+    pub accuracy: f64,
+    /// Mean workers engaged per group — the redundancy overhead actually
+    /// paid (the adaptive run idles provisioned spares when budgets drop).
+    pub mean_workers: f64,
+    /// Straggler budget at phase end.
+    pub s: usize,
+    /// Byzantine budget at phase end.
+    pub e: usize,
+}
+
+/// Serve a drifting trace through one service (closed loop, one group in
+/// flight) and measure each phase. The fault plan is swapped at phase
+/// boundaries through the shared hook — no in-flight group straddles a
+/// phase under the closed loop.
+fn run_trace(
+    run: &'static str,
+    engine: Arc<dyn InferenceEngine>,
+    provisioned: CodeParams,
+    adaptive: Option<AdaptiveConfig>,
+    slo: Duration,
+    phases: &[DriftPhase],
+    seed: u64,
+) -> Result<Vec<DriftRow>> {
+    let current: Arc<Mutex<FaultPlan>> = Arc::new(Mutex::new(FaultPlan::none()));
+    let hook = {
+        let cur = current.clone();
+        Arc::new(move |_g: u64| cur.lock().unwrap().clone())
+    };
+    let k = provisioned.k;
+    let d = engine.payload();
+    let mut builder = Service::builder(Arc::new(ApproxIferCode::new(provisioned)))
+        .engine(engine.clone())
+        .flush_after(Duration::from_millis(1))
+        .verify(VerifyPolicy::on(0.4))
+        .max_inflight(1)
+        .decode_threads(1)
+        .group_timeout(Duration::from_secs(10))
+        .slo(slo)
+        .seed(seed)
+        .fault_hook(hook);
+    if let Some(cfg) = adaptive {
+        builder = builder.adaptive(cfg);
+    }
+    let svc = builder.spawn()?;
+    let mut rows = Vec::with_capacity(phases.len());
+    let mut group_index = 0usize;
+    for phase in phases {
+        *current.lock().unwrap() = phase.plan.clone();
+        let mut latencies = Vec::with_capacity(phase.groups);
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        let mut worker_sum = 0.0f64;
+        for _ in 0..phase.groups {
+            let queries: Vec<Vec<f32>> = (0..k)
+                .map(|j| {
+                    let i = (group_index * k + j) as f32;
+                    (0..d).map(|t| (i * 0.13 + (t as f32) * 0.017).sin()).collect()
+                })
+                .collect();
+            let t0 = Instant::now();
+            let handles: Vec<_> = queries.iter().map(|q| svc.submit(q.clone())).collect();
+            let preds: Vec<Result<Vec<f32>>> =
+                handles.into_iter().map(|h| h.wait_timeout(Duration::from_secs(30))).collect();
+            latencies.push(t0.elapsed().as_secs_f64());
+            for (q, p) in queries.iter().zip(&preds) {
+                total += 1;
+                if let Ok(p) = p {
+                    let want = engine.infer1(q)?;
+                    let err =
+                        want.iter().zip(p).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+                    if err < 0.25 {
+                        correct += 1;
+                    }
+                }
+            }
+            let (s, e) =
+                (svc.metrics.current_s.get() as usize, svc.metrics.current_e.get() as usize);
+            worker_sum += CodeParams::new(k, s, e).num_workers() as f64;
+            group_index += 1;
+        }
+        let summary = Summary::of(&latencies);
+        rows.push(DriftRow {
+            run,
+            phase: phase.name,
+            p50: summary.p50,
+            p99: summary.p99,
+            accuracy: correct as f64 / total.max(1) as f64,
+            mean_workers: worker_sum / phase.groups.max(1) as f64,
+            s: svc.metrics.current_s.get() as usize,
+            e: svc.metrics.current_e.get() as usize,
+        });
+    }
+    svc.shutdown();
+    Ok(rows)
+}
+
+/// The adaptive-vs-static comparison on the canonical drifting trace:
+///
+/// * **adaptive** — provisioned at `(K, 1, 1)`, controller free to re-tune
+///   within it;
+/// * **static-pessimistic** — the provisioned worst case `(1, 1)` serving
+///   every phase (what an operator ships without a control plane);
+/// * **static-oracle** — a clairvoyant per-phase matched static
+///   deployment: `(0,0)` honest, `(1,0)` for the straggler burst, `(0,1)`
+///   for the Byzantine burst — unrealizable, but the accuracy/latency
+///   ceiling the controller is judged against.
+///
+/// The acceptance bar: the adaptive run's worker overhead stays below
+/// static-pessimistic while its served accuracy tracks the oracle.
+pub fn drifting_comparison(
+    engine: Arc<dyn InferenceEngine>,
+    k: usize,
+    groups_per_phase: usize,
+    seed: u64,
+) -> Result<Vec<DriftRow>> {
+    let phases = drift_phases(groups_per_phase);
+    let provisioned = CodeParams::new(k, 1, 1);
+    let slo = Duration::from_millis(15);
+    // Window small enough to react within a few groups of a burst (a
+    // degraded group contributes two observations: the redispatch and the
+    // degraded serve); cooldown long enough that a budget steps down at
+    // most once per phase (no thrash).
+    let adaptive = AdaptiveConfig {
+        window: (groups_per_phase / 10).clamp(2, 8),
+        cooldown: 4,
+        ..AdaptiveConfig::default()
+    };
+    let mut rows =
+        run_trace("adaptive", engine.clone(), provisioned, Some(adaptive), slo, &phases, seed)?;
+    rows.extend(run_trace(
+        "static-pessimistic",
+        engine.clone(),
+        provisioned,
+        None,
+        slo,
+        &phases,
+        seed,
+    )?);
+    // The oracle serves each phase with its own matched deployment.
+    let matched = [(0usize, 0usize), (1, 0), (0, 1), (0, 0)];
+    for (phase, (s, e)) in phases.into_iter().zip(matched) {
+        let name = phase.name;
+        let oracle = run_trace(
+            "static-oracle",
+            engine.clone(),
+            CodeParams::new(k, s, e),
+            None,
+            slo,
+            &[phase],
+            seed,
+        )?;
+        debug_assert_eq!(oracle.len(), 1);
+        rows.extend(oracle.into_iter().map(|mut r| {
+            r.phase = name;
+            r
+        }));
+    }
+    Ok(rows)
 }
 
 /// The full latency experiment: three strategies under an exponential
@@ -131,6 +355,36 @@ mod tests {
             a.latency.p90,
             n.latency.p90
         );
+    }
+
+    #[test]
+    fn drift_trace_static_honest_run_is_accurate() {
+        let engine: Arc<dyn InferenceEngine> = Arc::new(LinearMockEngine::new(12, 4));
+        let phases = vec![DriftPhase { name: "honest", groups: 3, plan: FaultPlan::none() }];
+        let rows = run_trace(
+            "static-oracle",
+            engine,
+            CodeParams::new(4, 1, 0),
+            None,
+            Duration::from_millis(50),
+            &phases,
+            7,
+        )
+        .unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].phase, "honest");
+        assert!(rows[0].accuracy > 0.99, "acc={}", rows[0].accuracy);
+        assert_eq!(rows[0].mean_workers, 5.0);
+        assert_eq!((rows[0].s, rows[0].e), (1, 0));
+    }
+
+    #[test]
+    fn drift_phases_cover_the_burst_shapes() {
+        let phases = drift_phases(10);
+        let names: Vec<&str> = phases.iter().map(|p| p.name).collect();
+        assert_eq!(names, vec!["honest", "slow-burst", "byz-burst", "recovered"]);
+        assert!(phases[1].plan.stragglers.contains(&0));
+        assert!(phases[2].plan.byz_mode.is_some());
     }
 
     #[test]

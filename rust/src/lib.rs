@@ -2,7 +2,9 @@
 //!
 //! A reproduction of *ApproxIFER: A Model-Agnostic Approach to Resilient and
 //! Robust Prediction Serving Systems* (Soleymani, Mahdavifar, Ali,
-//! Avestimehr — AAAI 2022), built as a three-layer rust + JAX + Pallas stack:
+//! Avestimehr — AAAI 2022), built as a three-layer rust + JAX + Pallas stack.
+//! The full layer map, a group's life-cycle data-flow diagram and the
+//! adaptive epoch protocol live in `docs/ARCHITECTURE.md` at the repo root.
 //!
 //! * **Layer 3 (this crate)** — the serving stack, split into a *scheme*
 //!   contract and a *scheme-agnostic engine*:
@@ -33,7 +35,14 @@
 //!   ladder (full-set decode → homogeneous locator → group redispatch →
 //!   degraded delivery) and shared [`crate::metrics::ServingMetrics`] — so
 //!   every paper comparison measures redundancy math, not coordinator
-//!   differences. Around it: a TCP front-end with out-of-order response
+//!   differences. On top of the engine sits the **adaptive redundancy
+//!   control plane** ([`crate::coordinator::adaptive`]): online estimators
+//!   of straggler/Byzantine prevalence fed by the decode pool issue
+//!   `Reconfigure { s, e }` epochs that re-tune the live scheme — with
+//!   zero retraining, the property only a model-agnostic code has — and an
+//!   **SLO-aware hedged decode** path (`serving.slo_ms`) where the reply
+//!   router delivers a stalled group early on a reduced-but-decodable
+//!   quota. Around it: a TCP front-end with out-of-order response
 //!   delivery keyed by request id, the deterministic fault-model subsystem
 //!   ([`crate::sim::faults`]: per-worker crash / slow-tail / flaky /
 //!   Byzantine behavior programs), and the experiment harness that
@@ -59,18 +68,37 @@
 //! cargo run --release --example quickstart   # needs `make artifacts`
 //! ```
 
+// Public-API documentation is enforced: the serving contract
+// (coding/serving.rs), the coordinator (service/adaptive) the fault model
+// (sim/faults.rs) and the metrics surface carry complete rustdoc. Modules
+// below tagged `allow(missing_docs)` are the tracked remainder of the
+// documentation pass — shrink the list, never grow it (the CI
+// `cargo doc --no-deps` step keeps the warnings visible).
+#![warn(missing_docs)]
+
+#[allow(missing_docs)] // tracked gap: flag/typed-accessor internals
 pub mod cli;
 pub mod coding;
+#[allow(missing_docs)] // tracked gap: config parser internals
 pub mod config;
 pub mod coordinator;
+#[allow(missing_docs)] // tracked gap: dataset/golden loaders
 pub mod data;
+#[allow(missing_docs)] // tracked gap: figure drivers & report writers
 pub mod harness;
+#[allow(missing_docs)] // tracked gap: dense linalg kernels
 pub mod linalg;
 pub mod metrics;
+#[allow(missing_docs)] // tracked gap: artifact/PJRT-stub runtime
 pub mod runtime;
+#[allow(missing_docs)] // tracked gap: TCP frame codec
 pub mod server;
 pub mod sim;
+#[allow(missing_docs)] // tracked gap: tensor container
 pub mod tensor;
+#[allow(missing_docs)] // tracked gap: forall/property-test helpers
 pub mod testing;
+#[allow(missing_docs)] // tracked gap: rng/stats/bench utilities
 pub mod util;
+#[allow(missing_docs)] // tracked gap: pool/engine internals
 pub mod workers;

@@ -31,6 +31,9 @@ const USAGE: &str = "usage: approxifer <serve|infer|figures|latency|golden|info>
   common: --config FILE  --set section.key=value (repeatable)  --artifacts DIR
           --faults PROFILE (e.g. honest, crash:2@8, slow:1:0:40:0.5,
           flaky:1:0.2, byz-random:2:10, byz-collude:2:15, churn:3)
+          --adaptive (live (S,E) re-tuning; tune via --set adaptive.window=N
+          --set adaptive.target_miss_rate=R; SLO hedging via --set
+          serving.slo_ms=MS)
   figures: --only ID  --samples N  --out DIR  --seed S
   latency: --groups N  --out DIR
   infer:   --samples N";
@@ -51,6 +54,7 @@ fn run(argv: &[String]) -> Result<()> {
         ("set", true),
         ("artifacts", true),
         ("faults", true),
+        ("adaptive", false),
         ("only", true),
         ("samples", true),
         ("out", true),
@@ -76,6 +80,21 @@ fn run(argv: &[String]) -> Result<()> {
             Some("serve") | Some("infer") => cfg.fault_profile = Some(f.to_string()),
             other => bail!(
                 "--faults applies to serve/infer only (got {})",
+                other.unwrap_or("none")
+            ),
+        }
+    }
+    if args.has("adaptive") {
+        // Same scope as --faults: only the online service has a control
+        // plane to switch on.
+        match args.subcommand.as_deref() {
+            Some("serve") | Some("infer") => {
+                if cfg.adaptive.is_none() {
+                    cfg.adaptive = Some(Default::default());
+                }
+            }
+            other => bail!(
+                "--adaptive applies to serve/infer only (got {})",
                 other.unwrap_or("none")
             ),
         }
@@ -125,6 +144,18 @@ fn build_service(cfg: &AppConfig) -> Result<(Arc<Service>, usize)> {
         .max_inflight(cfg.max_inflight)
         .decode_threads(cfg.decode_threads)
         .group_timeout(cfg.group_timeout);
+    if let Some(slo) = cfg.slo {
+        builder = builder.slo(slo);
+    }
+    if let Some(adaptive) = cfg.adaptive {
+        builder = builder.adaptive(adaptive);
+        log::info!(
+            "adaptive control plane on: window={} target_miss_rate={} cooldown={}",
+            adaptive.window,
+            adaptive.target_miss_rate,
+            adaptive.cooldown
+        );
+    }
     if let Some(spec) = &cfg.fault_profile {
         let profile = FaultProfile::parse(spec, scheme.num_workers(), cfg.seed)
             .map_err(|e| anyhow::anyhow!("--faults: {e}"))?;

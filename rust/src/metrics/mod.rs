@@ -10,20 +10,46 @@ use std::sync::Mutex;
 pub struct Counter(AtomicU64);
 
 impl Counter {
+    /// A counter starting at zero.
     pub const fn new() -> Counter {
         Counter(AtomicU64::new(0))
     }
 
+    /// Add one.
     #[inline]
     pub fn inc(&self) {
         self.add(1);
     }
 
+    /// Add `n`.
     #[inline]
     pub fn add(&self, n: u64) {
         self.0.fetch_add(n, Ordering::Relaxed);
     }
 
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-value gauge (e.g. the controller's current straggler budget). Unlike
+/// [`Counter`] it moves in both directions; reads see the most recent `set`.
+#[derive(Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    /// A gauge starting at zero.
+    pub const fn new() -> Gauge {
+        Gauge(AtomicU64::new(0))
+    }
+
+    /// Overwrite the gauge.
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    /// Current value.
     pub fn get(&self) -> u64 {
         self.0.load(Ordering::Relaxed)
     }
@@ -65,10 +91,12 @@ impl LatencyHistogram {
         self.max_us.fetch_max(us, Ordering::Relaxed);
     }
 
+    /// Samples recorded.
     pub fn count(&self) -> u64 {
         self.count.load(Ordering::Relaxed)
     }
 
+    /// Mean of the recorded latencies, in seconds.
     pub fn mean_secs(&self) -> f64 {
         let n = self.count();
         if n == 0 {
@@ -77,6 +105,7 @@ impl LatencyHistogram {
         self.sum_us.load(Ordering::Relaxed) as f64 / n as f64 / 1e6
     }
 
+    /// Largest recorded latency, in seconds.
     pub fn max_secs(&self) -> f64 {
         self.max_us.load(Ordering::Relaxed) as f64 / 1e6
     }
@@ -98,6 +127,7 @@ impl LatencyHistogram {
         self.max_secs()
     }
 
+    /// One-line `n/mean/p50/p99/max` summary labeled `name`.
     pub fn summary_line(&self, name: &str) -> String {
         format!(
             "{name}: n={} mean={:.3}ms p50={:.3}ms p99={:.3}ms max={:.3}ms",
@@ -113,14 +143,23 @@ impl LatencyHistogram {
 /// The coordinator's metric set.
 #[derive(Default)]
 pub struct ServingMetrics {
+    /// Queries accepted by [`crate::coordinator::Service::submit`] /
+    /// `submit_tagged`.
     pub queries_received: Counter,
+    /// K-groups encoded and fanned out (redispatches included).
     pub groups_dispatched: Counter,
+    /// Groups that decoded and answered their clients.
     pub groups_decoded: Counter,
     /// Groups that errored out (collection timeout / undecodable).
     pub groups_failed: Counter,
+    /// Worker replies routed (successes and errors).
     pub worker_replies: Counter,
+    /// Late replies for groups already collected or expired.
     pub stragglers_cancelled: Counter,
+    /// Byzantine flags emitted by locate passes (see
+    /// [`ServingMetrics::corrupt_replies_injected`] for the caveat).
     pub byzantine_flagged: Counter,
+    /// Worker error replies.
     pub errors: Counter,
     /// Times the batcher blocked because `max_inflight` groups were out.
     pub inflight_full_waits: Counter,
@@ -150,17 +189,42 @@ pub struct ServingMetrics {
     /// corruption exceeded the `E` budget (no locator could catch it), or
     /// the exclusion left a badly conditioned decode subset.
     pub locator_misses: Counter,
+    /// Groups the reply router delivered early on the SLO hedge deadline
+    /// (reduced-quota collection; see `serving.slo_ms`).
+    pub hedge_attempts: Counter,
+    /// Hedged groups whose early decode was served (verification, where
+    /// enabled, did not send them back through the redispatch rung).
+    pub hedge_wins: Counter,
+    /// Groups whose end-to-end latency exceeded the configured SLO.
+    pub slo_misses: Counter,
+    /// `Reconfigure { s, e }` epochs the batcher applied (adaptive control
+    /// plane or [`crate::coordinator::Service::reconfigure`]).
+    pub reconfigure_epochs: Counter,
+    /// Reconfigure requests the active scheme rejected (unsupported scheme,
+    /// fleet too small, changed group size) — the controller degrades to
+    /// alerting through this counter.
+    pub adaptive_alerts: Counter,
+    /// Straggler budget `S` of the scheme currently serving.
+    pub current_s: Gauge,
+    /// Byzantine budget `E` of the scheme currently serving.
+    pub current_e: Gauge,
+    /// End-to-end group latency (flush to delivery).
     pub group_latency: LatencyHistogram,
+    /// Scheme `encode_into` latency per group.
     pub encode_latency: LatencyHistogram,
+    /// Scheme decode latency per group (location excluded).
     pub decode_latency: LatencyHistogram,
+    /// Byzantine-location latency per group.
     pub locate_latency: LatencyHistogram,
 }
 
 impl ServingMetrics {
+    /// A fresh all-zero metric set.
     pub fn new() -> ServingMetrics {
         ServingMetrics::default()
     }
 
+    /// Multi-line human-readable dump of every counter and histogram.
     pub fn report(&self) -> String {
         let mut out = String::new();
         out.push_str(&format!(
@@ -188,6 +252,17 @@ impl ServingMetrics {
             self.locator_misses.get(),
             self.decode_cache_evictions.get(),
         ));
+        out.push_str(&format!(
+            "adaptive: S={} E={} epochs={} alerts={} hedge_attempts={} hedge_wins={} \
+             slo_misses={}\n",
+            self.current_s.get(),
+            self.current_e.get(),
+            self.reconfigure_epochs.get(),
+            self.adaptive_alerts.get(),
+            self.hedge_attempts.get(),
+            self.hedge_wins.get(),
+            self.slo_misses.get(),
+        ));
         out.push_str(&self.group_latency.summary_line("  group"));
         out.push('\n');
         out.push_str(&self.encode_latency.summary_line("  encode"));
@@ -206,10 +281,12 @@ pub struct Registry {
 }
 
 impl Registry {
+    /// Append a preformatted metrics line.
     pub fn publish(&self, line: String) {
         self.lines.lock().unwrap().push(line);
     }
 
+    /// Snapshot of every published line.
     pub fn dump(&self) -> Vec<String> {
         self.lines.lock().unwrap().clone()
     }
@@ -225,6 +302,15 @@ mod tests {
         c.inc();
         c.add(4);
         assert_eq!(c.get(), 5);
+    }
+
+    #[test]
+    fn gauge_overwrites() {
+        let g = Gauge::new();
+        assert_eq!(g.get(), 0);
+        g.set(7);
+        g.set(3);
+        assert_eq!(g.get(), 3);
     }
 
     #[test]

@@ -67,6 +67,8 @@ pub struct BehaviorState {
 }
 
 impl BehaviorState {
+    /// Runtime state for one worker's `behavior`, drawing from its own
+    /// forked `rng` stream.
     pub fn new(behavior: Behavior, rng: Rng) -> BehaviorState {
         BehaviorState { behavior, rng, requests: 0 }
     }
@@ -126,7 +128,9 @@ impl BehaviorState {
 /// `(spec, num_workers, seed)` always yields the same fleet.
 #[derive(Clone, Debug, PartialEq)]
 pub struct FaultProfile {
+    /// The spec string the profile was parsed from (metrics/log label).
     pub name: String,
+    /// `behaviors[i]` is worker `i`'s program.
     pub behaviors: Vec<Behavior>,
 }
 
@@ -176,6 +180,29 @@ impl FaultProfile {
     /// byz-collude:<count>:<scale>      colluding adversaries (identical
     ///                                  per-group corruption, pact = seed)
     /// churn:<count>                    mixed flaky/slow/crash fleet
+    /// ```
+    ///
+    /// # Examples
+    ///
+    /// The same `(spec, num_workers, seed)` always expands to the same
+    /// fleet, so a scenario replays bit-identically:
+    ///
+    /// ```
+    /// use approxifer::sim::faults::{Behavior, FaultProfile};
+    ///
+    /// let profile = FaultProfile::parse("byz-random:2:10", 8, 42)
+    ///     .expect("valid spec");
+    /// assert_eq!(profile.behaviors.len(), 8);
+    /// assert_eq!(profile.faulty().len(), 2);
+    /// assert_eq!(profile, FaultProfile::parse("byz-random:2:10", 8, 42).unwrap());
+    ///
+    /// // Typos and out-of-range parameters fail at parse time, not
+    /// // mid-serve: probabilities must live in [0, 1].
+    /// assert!(FaultProfile::parse("flaky:1:30", 8, 42).is_err());
+    /// assert!(matches!(
+    ///     FaultProfile::parse("honest", 3, 0).unwrap().behaviors[0],
+    ///     Behavior::Honest
+    /// ));
     /// ```
     pub fn parse(spec: &str, num_workers: usize, seed: u64) -> Result<FaultProfile, String> {
         let num = |s: &str| s.parse::<f64>().map_err(|_| format!("bad number '{s}' in '{spec}'"));

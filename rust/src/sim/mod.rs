@@ -48,9 +48,13 @@ impl Arrivals {
 /// Result of one scenario run.
 #[derive(Clone, Debug)]
 pub struct ScenarioReport {
+    /// Requests submitted.
     pub sent: usize,
+    /// Requests answered successfully.
     pub completed: usize,
+    /// Requests that errored or were never answered in the window.
     pub failed: usize,
+    /// Wall time for the whole scenario.
     pub wall: Duration,
     /// Per-request end-to-end latency summary (seconds).
     pub latency: Summary,
@@ -59,6 +63,7 @@ pub struct ScenarioReport {
 }
 
 impl ScenarioReport {
+    /// One-line human-readable summary.
     pub fn line(&self) -> String {
         format!(
             "sent={} ok={} fail={} wall={:.2}s thrpt={:.1}/s p50={:.1}ms p99={:.1}ms",

@@ -260,23 +260,35 @@ impl WorkerPool {
 }
 
 /// A group whose collection finished (the policy's slot quotas were met,
-/// or the deadline/error budget made completion impossible).
+/// the SLO hedge deadline passed with a decodable reduced quota, or the
+/// deadline/error budget made completion impossible).
 pub struct CollectedGroup {
+    /// Group id the coordinator registered.
     pub group: u64,
     /// Reply payload per worker id (`None` = not received / errored).
     pub replies: Vec<Option<Vec<f32>>>,
+    /// Successful replies collected.
     pub received: usize,
+    /// Error replies seen.
     pub errors: usize,
-    /// True when every collection slot met its reply quota.
+    /// True when the delivered reply set is decodable: every slot met its
+    /// quota — the full `need`, or `hedge_need` for a hedged delivery.
     pub complete: bool,
     /// True when collection stopped because worker errors made the quota
     /// unreachable (vs. a deadline expiry).
     pub undecodable: bool,
+    /// True when the group was delivered early on the SLO hedge deadline
+    /// with the reduced [`CollectPolicy::hedge_need`] quota.
+    pub hedged: bool,
 }
 
 struct PendingGroup {
     policy: CollectPolicy,
     deadline: Instant,
+    /// SLO hedge deadline: past this instant the group is delivered as soon
+    /// as (and as long as) every slot meets the policy's reduced
+    /// `hedge_need` quota. `None` = no hedging for this group.
+    hedge_at: Option<Instant>,
     replies: Vec<Option<Vec<f32>>>,
     received: usize,
     errors: usize,
@@ -288,6 +300,17 @@ struct PendingGroup {
     /// Slots still short of the policy's `need`.
     slots_pending: usize,
     done: Sender<CollectedGroup>,
+}
+
+impl PendingGroup {
+    /// Every slot meets the hedge quota (callable only when the policy has
+    /// one).
+    fn hedge_satisfiable(&self) -> bool {
+        match self.policy.hedge_need {
+            Some(h) => self.slot_ok.iter().all(|&ok| ok >= h),
+            None => false,
+        }
+    }
 }
 
 /// Demultiplexes the pool's shared reply stream into per-group collections
@@ -321,7 +344,7 @@ impl ReplyRouter {
                 if st.load(Ordering::Relaxed) {
                     break;
                 }
-                expire_deadlines(&r);
+                sweep_deadlines(&r, &metrics);
             })
             .expect("spawning reply router");
         ReplyRouter { routes, stale, stop, handle: Some(handle) }
@@ -337,6 +360,24 @@ impl ReplyRouter {
         deadline: Instant,
         done: Sender<CollectedGroup>,
     ) {
+        self.register_hedged(group, policy, None, deadline, done);
+    }
+
+    /// [`ReplyRouter::register`] with an SLO hedge deadline: once `hedge_at`
+    /// passes (strictly before `deadline` — both derived from the one
+    /// dispatch-time clock reading, see the coordinator), the group is
+    /// delivered early as soon as every slot meets the policy's reduced
+    /// `hedge_need` quota, marked `hedged` on the [`CollectedGroup`]. A
+    /// group is delivered **exactly once**: hedge delivery removes it, so
+    /// the full deadline can never also fire for it.
+    pub fn register_hedged(
+        &self,
+        group: u64,
+        policy: CollectPolicy,
+        hedge_at: Option<Instant>,
+        deadline: Instant,
+        done: Sender<CollectedGroup>,
+    ) {
         let num_workers = policy.num_workers();
         let n_slots = policy.num_slots();
         let mut slot_size = vec![0usize; n_slots];
@@ -347,9 +388,16 @@ impl ReplyRouter {
             slot_size.iter().all(|&n| n >= policy.need),
             "collect policy demands more replies than a slot has workers"
         );
+        // A hedge deadline without a hedge quota (or one at/after the full
+        // deadline) can never usefully fire.
+        let hedge_at = match (hedge_at, policy.hedge_need) {
+            (Some(t), Some(_)) if t < deadline => Some(t),
+            _ => None,
+        };
         let pending = PendingGroup {
             policy,
             deadline,
+            hedge_at,
             replies: vec![None; num_workers],
             received: 0,
             errors: 0,
@@ -432,34 +480,88 @@ fn route_reply(
     let complete = pending.slots_pending == 0;
     // Fail fast when enough of a slot's workers errored that its quota is
     // unreachable (every worker replies at most once per group). Only the
-    // slot this reply touched can have changed.
+    // slot this reply touched can have changed. With hedging armed the
+    // floor is the *hedge* quota: a group whose full quota died but whose
+    // hedge quota is still reachable keeps collecting and is served at
+    // the hedge deadline instead of being failed to the clients.
+    let floor = match (pending.hedge_at, pending.policy.hedge_need) {
+        (Some(_), Some(h)) => h,
+        _ => pending.policy.need,
+    };
     let unreachable = !complete
         && pending.slot_ok[slot] < pending.policy.need
-        && pending.slot_size[slot] - pending.slot_err[slot] < pending.policy.need;
-    if complete || unreachable {
+        && pending.slot_size[slot] - pending.slot_err[slot] < floor;
+    // Past the hedge deadline a decodable reduced quota releases the group
+    // the moment this reply satisfies it — no wait for the next tick.
+    let hedge_ready = !complete
+        && !unreachable
+        && pending.hedge_at.is_some_and(|t| t <= Instant::now())
+        && pending.hedge_satisfiable();
+    if complete || unreachable || hedge_ready {
         let group = reply.group;
         let pending = map.remove(&group).unwrap();
         drop(map);
-        deliver(group, pending, complete, unreachable);
+        if hedge_ready {
+            metrics.hedge_attempts.inc();
+        }
+        deliver(group, pending, complete || hedge_ready, unreachable, hedge_ready);
     }
 }
 
-fn expire_deadlines(routes: &Mutex<HashMap<u64, PendingGroup>>) {
+/// The router's periodic deadline pass: one sweep handles both the SLO
+/// hedge deadlines and the hard expiry, and a group is removed before
+/// delivery — so each group fires at most one of {hedged delivery, expiry},
+/// never both.
+fn sweep_deadlines(routes: &Mutex<HashMap<u64, PendingGroup>>, metrics: &ServingMetrics) {
     let now = Instant::now();
-    let expired: Vec<(u64, PendingGroup)> = {
+    enum Fire {
+        Expire,
+        Hedge,
+    }
+    let due: Vec<(u64, PendingGroup, Fire)> = {
         let mut map = routes.lock().unwrap();
-        let ids: Vec<u64> =
-            map.iter().filter(|(_, p)| p.deadline <= now).map(|(&g, _)| g).collect();
-        ids.into_iter().map(|g| (g, map.remove(&g).unwrap())).collect()
+        let ids: Vec<(u64, Fire)> = map
+            .iter()
+            .filter_map(|(&g, p)| {
+                if p.deadline <= now {
+                    Some((g, Fire::Expire))
+                } else if p.hedge_at.is_some_and(|t| t <= now) && p.hedge_satisfiable() {
+                    Some((g, Fire::Hedge))
+                } else {
+                    None
+                }
+            })
+            .collect();
+        ids.into_iter().map(|(g, fire)| (g, map.remove(&g).unwrap(), fire)).collect()
     };
-    for (group, pending) in expired {
-        deliver(group, pending, false, false);
+    for (group, pending, fire) in due {
+        match fire {
+            Fire::Expire => deliver(group, pending, false, false, false),
+            Fire::Hedge => {
+                metrics.hedge_attempts.inc();
+                deliver(group, pending, true, false, true);
+            }
+        }
     }
 }
 
-fn deliver(group: u64, pending: PendingGroup, complete: bool, undecodable: bool) {
+fn deliver(
+    group: u64,
+    pending: PendingGroup,
+    complete: bool,
+    undecodable: bool,
+    hedged: bool,
+) {
     let PendingGroup { replies, received, errors, done, .. } = pending;
-    let _ = done.send(CollectedGroup { group, replies, received, errors, complete, undecodable });
+    let _ = done.send(CollectedGroup {
+        group,
+        replies,
+        received,
+        errors,
+        complete,
+        undecodable,
+        hedged,
+    });
 }
 
 #[cfg(test)]
@@ -703,6 +805,132 @@ mod tests {
         assert!(out.complete);
         assert!(!out.undecodable);
         assert!(out.replies[1].is_some());
+        router.shutdown();
+        p.shutdown();
+    }
+
+    #[test]
+    fn router_hedges_past_slo_deadline() {
+        // Full quota 4-of-4 can never fill (one worker never gets a task);
+        // the hedge deadline must release the group with the reduced quota
+        // of 3, marked hedged, well before the 5s hard deadline.
+        let mut p = pool(4);
+        let metrics = Arc::new(ServingMetrics::new());
+        let router = p.start_router(metrics.clone());
+        let (done_tx, done_rx) = channel();
+        let now = Instant::now();
+        let policy = CollectPolicy::fastest(4, 4).with_hedge(3);
+        router.register_hedged(
+            0,
+            policy,
+            Some(now + Duration::from_millis(60)),
+            now + Duration::from_secs(5),
+            done_tx,
+        );
+        for w in 0..3 {
+            p.send(w, task(0, Duration::ZERO)).unwrap();
+        }
+        let out = done_rx.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert!(out.hedged);
+        assert!(out.complete, "hedged delivery is decodable");
+        assert!(!out.undecodable);
+        assert_eq!(out.received, 3);
+        assert_eq!(metrics.hedge_attempts.get(), 1);
+        assert_eq!(router.pending(), 0, "hedged group must be delivered exactly once");
+        router.shutdown();
+        p.shutdown();
+    }
+
+    #[test]
+    fn hedge_below_quota_waits_for_the_hard_deadline() {
+        // Only 2 replies against a hedge quota of 3: the hedge deadline
+        // must NOT fire; the group expires incomplete at the hard deadline
+        // (and only once — no double delivery).
+        let mut p = pool(4);
+        let metrics = Arc::new(ServingMetrics::new());
+        let router = p.start_router(metrics.clone());
+        let (done_tx, done_rx) = channel();
+        let now = Instant::now();
+        let policy = CollectPolicy::fastest(4, 4).with_hedge(3);
+        router.register_hedged(
+            1,
+            policy,
+            Some(now + Duration::from_millis(40)),
+            now + Duration::from_millis(160),
+            done_tx,
+        );
+        p.send(0, task(1, Duration::ZERO)).unwrap();
+        p.send(1, task(1, Duration::ZERO)).unwrap();
+        let out = done_rx.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert!(!out.hedged);
+        assert!(!out.complete);
+        assert_eq!(out.received, 2);
+        assert_eq!(metrics.hedge_attempts.get(), 0);
+        assert!(
+            done_rx.recv_timeout(Duration::from_millis(100)).is_err(),
+            "group delivered twice"
+        );
+        router.shutdown();
+        p.shutdown();
+    }
+
+    #[test]
+    fn late_reply_releases_an_open_hedge_window() {
+        // The quota-satisfying reply arrives after the hedge deadline has
+        // already passed: route_reply itself must release the group without
+        // waiting for the next sweep tick.
+        let mut p = pool(4);
+        let metrics = Arc::new(ServingMetrics::new());
+        let router = p.start_router(metrics.clone());
+        let (done_tx, done_rx) = channel();
+        let now = Instant::now();
+        let policy = CollectPolicy::fastest(4, 4).with_hedge(2);
+        router.register_hedged(
+            2,
+            policy,
+            Some(now + Duration::from_millis(30)),
+            now + Duration::from_secs(5),
+            done_tx,
+        );
+        p.send(0, task(2, Duration::ZERO)).unwrap();
+        // Second reply lands ~90ms in, past the 30ms hedge deadline.
+        p.send(1, task(2, Duration::from_millis(90))).unwrap();
+        let out = done_rx.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert!(out.hedged);
+        assert_eq!(out.received, 2);
+        router.shutdown();
+        p.shutdown();
+    }
+
+    #[test]
+    fn errors_past_the_full_quota_leave_a_hedgeable_group_alive() {
+        // Two error replies make the full 4-of-4 quota unreachable, but
+        // the hedge floor of 2 is still coverable by the two healthy
+        // workers: the router must NOT fail the group undecodable — it
+        // must serve it at the hedge deadline.
+        let flaky = Behavior::Flaky { p_fail: 1.0 };
+        let mut p = pool_with(&[flaky, flaky, Behavior::Honest, Behavior::Honest]);
+        let metrics = Arc::new(ServingMetrics::new());
+        let router = p.start_router(metrics.clone());
+        let (done_tx, done_rx) = channel();
+        let now = Instant::now();
+        let policy = CollectPolicy::fastest(4, 4).with_hedge(2);
+        router.register_hedged(
+            5,
+            policy,
+            Some(now + Duration::from_millis(60)),
+            now + Duration::from_secs(5),
+            done_tx,
+        );
+        for w in 0..4 {
+            p.send(w, task(5, Duration::ZERO)).unwrap();
+        }
+        let out = done_rx.recv_timeout(Duration::from_secs(2)).unwrap();
+        assert!(!out.undecodable, "hedge floor still reachable");
+        assert!(out.hedged);
+        assert!(out.complete);
+        assert_eq!(out.received, 2);
+        assert_eq!(out.errors, 2);
         router.shutdown();
         p.shutdown();
     }

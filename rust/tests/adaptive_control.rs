@@ -1,0 +1,194 @@
+//! Adaptive control-plane integration tests: a deterministic drift
+//! scenario (honest fleet → Byzantine burst → recovery) asserting the
+//! controller raises `E` within one window and sheds it after the burst,
+//! plus bit-identical replay with the control plane disabled and the SLO
+//! hedge riding alongside adaptation.
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use approxifer::coding::{ApproxIferCode, CodeParams};
+use approxifer::coordinator::{AdaptiveConfig, FaultPlan, Service, VerifyPolicy};
+use approxifer::sim::faults::FaultProfile;
+use approxifer::workers::{ByzantineMode, InferenceEngine, LinearMockEngine};
+
+const K: usize = 4;
+const D: usize = 8;
+
+fn group_queries(group: usize) -> Vec<Vec<f32>> {
+    (0..K)
+        .map(|j| {
+            let i = (group * K + j) as f32;
+            (0..D).map(|t| (i * 0.19 + (t as f32) * 0.023).sin()).collect()
+        })
+        .collect()
+}
+
+/// Serve `n` closed-loop groups; returns the last group's predictions.
+fn run_groups(svc: &Service, start: usize, n: usize) -> Vec<Vec<f32>> {
+    let mut last = Vec::new();
+    for g in start..start + n {
+        let queries = group_queries(g);
+        let handles: Vec<_> = queries.iter().map(|q| svc.submit(q.clone())).collect();
+        last = handles
+            .into_iter()
+            .map(|h| h.wait_timeout(Duration::from_secs(20)).expect("group served"))
+            .collect();
+    }
+    last
+}
+
+/// The controller's decision and the batcher's application of it are
+/// asynchronous to the served groups: poll briefly before asserting. The
+/// observations that *drive* the decision are all in by the time this is
+/// called — only the epoch hand-off is in flight.
+fn await_current_e(svc: &Service, want: u64) {
+    for _ in 0..400 {
+        if svc.metrics.current_e.get() == want {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(svc.metrics.current_e.get(), want, "controller never settled");
+}
+
+#[test]
+fn controller_raises_e_in_one_window_and_sheds_it_after_the_burst() {
+    let engine = Arc::new(LinearMockEngine::new(D, 3));
+    // Provisioned (S=1, E=1): an 11-worker fleet the controller tunes
+    // within. The fault plan is swapped between phases through the hook;
+    // the closed loop guarantees no group straddles a phase.
+    let plan: Arc<Mutex<FaultPlan>> = Arc::new(Mutex::new(FaultPlan::none()));
+    let hook = {
+        let plan = plan.clone();
+        Arc::new(move |_g: u64| plan.lock().unwrap().clone())
+    };
+    let svc = Service::builder(Arc::new(ApproxIferCode::new(CodeParams::new(K, 1, 1))))
+        .engine(engine.clone())
+        .flush_after(Duration::from_millis(1))
+        .max_inflight(1)
+        .decode_threads(1)
+        .verify(VerifyPolicy::on(0.4))
+        .adaptive(AdaptiveConfig { window: 4, cooldown: 1, ..AdaptiveConfig::default() })
+        .fault_hook(hook.clone())
+        .spawn()
+        .unwrap();
+    assert_eq!(svc.metrics.current_e.get(), 1, "starts at the provisioned point");
+
+    // Phase A — honest drift-down: one calm window (cooldown 1) sheds the
+    // unused Byzantine budget. S holds: without an SLO the straggler loop
+    // is inert.
+    run_groups(&svc, 0, 5);
+    await_current_e(&svc, 0);
+    assert_eq!(svc.metrics.current_s.get(), 1, "no SLO: S must hold");
+
+    // Phase B — Byzantine burst: worker 0 corrupts every reply; worker 4
+    // (the straggler spare) is delayed so the fastest-4-of-5 collection is
+    // deterministic and always contains the corruption. At E=0 the decode
+    // cannot locate it: verification fails, the redispatch rung fails
+    // again, and the evidence raises E within one window (two groups —
+    // each failed group contributes the redispatch and the degraded-serve
+    // observation).
+    *plan.lock().unwrap() = FaultPlan {
+        byzantine: vec![0],
+        byz_mode: Some(ByzantineMode::GaussianNoise { sigma: 10.0 }),
+        stragglers: vec![4],
+        straggler_delay: Duration::from_millis(80),
+        ..FaultPlan::none()
+    };
+    let last = run_groups(&svc, 5, 8);
+    await_current_e(&svc, 1); // raised within one window of the burst
+    assert!(svc.metrics.verify_failures.get() >= 1);
+    assert!(svc.metrics.redispatches.get() >= 1);
+    // With E restored the adversary is located and excluded: the last
+    // burst group decodes accurately again.
+    let queries = group_queries(5 + 8 - 1);
+    for (q, p) in queries.iter().zip(&last) {
+        let want = engine.infer1(q).unwrap();
+        for (a, b) in want.iter().zip(p) {
+            assert!((a - b).abs() < 0.3, "post-raise decode inaccurate: {a} vs {b}");
+        }
+    }
+
+    // Phase C — recovery: calm windows shed the budget again.
+    *plan.lock().unwrap() = FaultPlan::none();
+    run_groups(&svc, 13, 10);
+    await_current_e(&svc, 0); // recovery sheds E again
+    assert!(svc.metrics.reconfigure_epochs.get() >= 3, "down, up, down again");
+    assert_eq!(svc.metrics.adaptive_alerts.get(), 0);
+    svc.shutdown();
+}
+
+#[test]
+fn replay_is_bit_identical_with_adaptive_disabled() {
+    // (K=4, S=0, E=1) waits for every reply, so the decode set is not a
+    // race; with adaptive.enabled=false the serving path must replay a
+    // seeded Byzantine profile bit-identically.
+    let run = || {
+        let engine = Arc::new(LinearMockEngine::new(D, 3));
+        let params = CodeParams::new(K, 0, 1);
+        let profile =
+            FaultProfile::parse("byz-random:1:10", params.num_workers(), 42).unwrap();
+        let svc = Service::builder(Arc::new(ApproxIferCode::new(params)))
+            .engine(engine)
+            .flush_after(Duration::from_millis(1))
+            .max_inflight(1)
+            .decode_threads(1)
+            .verify(VerifyPolicy::on(0.4))
+            .seed(42)
+            .fault_profile(profile)
+            .spawn()
+            .unwrap();
+        let mut all = Vec::new();
+        for g in 0..6 {
+            all.extend(run_groups(&svc, g, 1));
+        }
+        let epochs = svc.metrics.reconfigure_epochs.get();
+        svc.shutdown();
+        (all, epochs)
+    };
+    let (a, ea) = run();
+    let (b, eb) = run();
+    assert_eq!(ea, 0, "no control plane, no epochs");
+    assert_eq!(eb, 0);
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x, y, "replay must be bit-identical");
+    }
+}
+
+#[test]
+fn slo_hedge_rides_alongside_the_control_plane() {
+    // Two 60ms stragglers stall the full 10-of-11 quota at (S=1, E=1);
+    // the 20ms SLO hedges the group through with the 9 fast replies
+    // (2(K+E)-1, the locator's rank floor). The
+    // controller sees the misses but S is already at the provisioned
+    // ceiling, so the service keeps hedging instead of thrashing.
+    let engine = Arc::new(LinearMockEngine::new(D, 3));
+    let svc = Service::builder(Arc::new(ApproxIferCode::new(CodeParams::new(K, 1, 1))))
+        .engine(engine)
+        .flush_after(Duration::from_millis(1))
+        .max_inflight(1)
+        .decode_threads(1)
+        .verify(VerifyPolicy::on(0.4))
+        .slo(Duration::from_millis(20))
+        .group_timeout(Duration::from_secs(5))
+        .adaptive(AdaptiveConfig { window: 2, cooldown: 10, ..AdaptiveConfig::default() })
+        .fault_hook(Arc::new(|_g| FaultPlan {
+            stragglers: vec![0, 1],
+            straggler_delay: Duration::from_millis(60),
+            ..FaultPlan::none()
+        }))
+        .spawn()
+        .unwrap();
+    run_groups(&svc, 0, 4);
+    assert!(svc.metrics.hedge_attempts.get() >= 1, "hedge must fire");
+    assert!(svc.metrics.slo_misses.get() >= 1);
+    assert_eq!(svc.metrics.groups_failed.get(), 0, "hedged groups must not also time out");
+    assert_eq!(
+        svc.metrics.current_s.get(),
+        1,
+        "S is clamped at the provisioned ceiling, no thrash"
+    );
+    svc.shutdown();
+}
