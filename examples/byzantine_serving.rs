@@ -61,7 +61,7 @@ fn main() -> Result<()> {
         let hit = out.flagged == byzantine;
         located += hit as usize;
         for (j, pred) in out.predictions.iter().enumerate() {
-            let t = Tensor::from_vec(&[pred.len()], pred.clone());
+            let t = Tensor::from_vec(&[pred.len()], pred.to_vec());
             if t.argmax() as i32 == testset.labels[g * params.k + j] {
                 correct += 1;
             }

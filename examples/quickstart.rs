@@ -67,7 +67,7 @@ fn main() -> Result<()> {
     let out = pipeline.infer_group(&pool, &queries, &plan, &metrics)?;
     let mut coded_correct = 0;
     for (j, pred) in out.predictions.iter().enumerate() {
-        let t = Tensor::from_vec(&[pred.len()], pred.clone());
+        let t = Tensor::from_vec(&[pred.len()], pred.to_vec());
         if t.argmax() as i32 == testset.labels[j] {
             coded_correct += 1;
         }

@@ -55,7 +55,7 @@ fn main() -> Result<()> {
             let queries: Vec<&[f32]> = (0..k).map(|j| testset.image(g * k + j)).collect();
             let out = pipeline.infer_group(&pool, &queries, &plan, &metrics)?;
             for (j, pred) in out.predictions.iter().enumerate() {
-                let t = Tensor::from_vec(&[pred.len()], pred.clone());
+                let t = Tensor::from_vec(&[pred.len()], pred.to_vec());
                 if t.argmax() as i32 == testset.labels[g * k + j] {
                     correct += 1;
                 }

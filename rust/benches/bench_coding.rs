@@ -3,7 +3,7 @@
 //! decoder are added"). Targets (DESIGN.md §8): encode+decode ≪ model
 //! execution at K=12, N+1=31, 32×32×3 payloads.
 
-use approxifer::coding::{ApproxIferCode, CodeParams};
+use approxifer::coding::{ApproxIferCode, BlockPool, CodeParams, GroupBlock};
 use approxifer::util::bench::{bench, black_box, group};
 use approxifer::util::rng::Rng;
 
@@ -13,22 +13,25 @@ fn payloads(k: usize, d: usize, seed: u64) -> Vec<Vec<f32>> {
 }
 
 fn main() {
-    group("encode: X~ = W.X (per group)");
+    group("encode: X~ = W.X (blocked GEMM over flat blocks, per group)");
     for &(k, s, e) in &[(8usize, 1usize, 0usize), (12, 1, 0), (12, 0, 2), (12, 1, 3)] {
         for &d in &[784usize, 3072] {
             let code = ApproxIferCode::new(CodeParams::new(k, s, e));
             let qs = payloads(k, d, 1);
             let qrefs: Vec<&[f32]> = qs.iter().map(|q| &q[..]).collect();
-            let mut out: Vec<Vec<f32>> =
-                vec![Vec::with_capacity(d); code.params().num_workers()];
+            let queries = GroupBlock::from_rows(&qrefs);
+            let pool = BlockPool::new();
             bench(&format!("encode_k{k}_s{s}_e{e}_d{d}"), || {
-                code.encode_into(black_box(&qrefs), &mut out);
-                black_box(&out);
+                // Steady-state shape: take a recycled block, encode,
+                // freeze, retire (the drop recycles it for the next iter).
+                let mut out = pool.take(code.params().num_workers(), d);
+                code.encode_block(black_box(&queries), &mut out);
+                black_box(out.freeze());
             });
         }
     }
 
-    group("decode: Y^ = D.Y~ (per group, C=10 logits)");
+    group("decode: Y^ = D.Y~ (GEMM into recycled block, per group, C=10 logits)");
     for &(k, s, e) in &[(8usize, 1usize, 0usize), (12, 1, 0), (12, 0, 2)] {
         let params = CodeParams::new(k, s, e);
         let code = ApproxIferCode::new(params);
@@ -37,10 +40,11 @@ fn main() {
         let avail = rng.subset(params.num_workers(), m);
         let preds = payloads(m, 10, 3);
         let prefs: Vec<&[f32]> = preds.iter().map(|p| &p[..]).collect();
+        let pool = BlockPool::new();
         // Warm the decode-matrix cache: steady-state serving reuses it.
-        let _ = code.decode(&avail, &prefs);
+        let _ = code.decode_block(&avail, &prefs, &pool);
         bench(&format!("decode_k{k}_s{s}_e{e}_cached"), || {
-            black_box(code.decode(black_box(&avail), &prefs));
+            black_box(code.decode_block(black_box(&avail), &prefs, &pool));
         });
     }
 

@@ -1,8 +1,10 @@
-//! Linear-algebra substrate benchmarks at the locator's problem sizes
-//! (matrices ≤ ~60×30): QR least-squares and Jacobi SVD.
+//! Linear-algebra substrate benchmarks: the f32 codec GEMM micro-kernel
+//! (naive vs cache-blocked, the `linalg_rows` perf baseline) and the f64
+//! locator solvers (QR least-squares and Jacobi SVD at ≤ ~60×30).
 
+use approxifer::coding::linalg::gemm_sweep;
 use approxifer::linalg::{lstsq, min_norm_solution, Mat, Qr};
-use approxifer::util::bench::{bench, black_box, group};
+use approxifer::util::bench::{bench, black_box, group, quick_mode};
 use approxifer::util::rng::Rng;
 
 fn random_mat(m: usize, n: usize, seed: u64) -> Mat {
@@ -11,6 +13,18 @@ fn random_mat(m: usize, n: usize, seed: u64) -> Mat {
 }
 
 fn main() {
+    group("codec GEMM micro-kernel: naive vs cache-blocked (linalg_rows sweep)");
+    println!(
+        "{:<6} {:>6} {:>6} {:>12} {:>12} {:>9}",
+        "K", "d", "rows", "naive_us", "blocked_us", "speedup"
+    );
+    for r in gemm_sweep(quick_mode()) {
+        println!(
+            "{:<6} {:>6} {:>6} {:>12.2} {:>12.2} {:>8.2}x",
+            r.k, r.d, r.m, r.naive_us, r.blocked_us, r.speedup
+        );
+    }
+
     group("Householder QR least squares (locator system sizes)");
     for &(m, n) in &[(17usize, 19usize), (28, 27), (31, 29)] {
         // m equations, n unknowns — note the locator pads when m < n is

@@ -14,8 +14,10 @@ use std::io::Write;
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use approxifer::coding::linalg::{gemm_sweep, GemmSweepRow};
 use approxifer::coding::{
-    ApproxIferCode, CodeParams, Replication, ServingScheme, Uncoded, VerifyPolicy,
+    ApproxIferCode, BlockPool, CodeParams, GroupBlock, Replication, ServingScheme, Uncoded,
+    VerifyPolicy,
 };
 use approxifer::coordinator::Service;
 use approxifer::harness::latency::{drifting_comparison, DriftRow};
@@ -127,27 +129,47 @@ fn main() {
     // ---- adaptive control plane on the drifting-fault trace --------------
     let adaptive_rows = adaptive_drift_sweep(d, c, if quick { 10 } else { 40 });
 
-    if let Some(path) = std::env::var_os("BENCH_PR_JSON") {
-        write_json(&path, d, &rows, &fault_rows, &scheme_rows, &adaptive_rows);
+    // ---- codec GEMM baseline: naive vs cache-blocked ----------------------
+    println!("\n== codec GEMM micro-kernel sweep (naive vs blocked, linalg_rows) ==");
+    println!(
+        "{:<6} {:>6} {:>6} {:>12} {:>12} {:>9}",
+        "K", "d", "rows", "naive_us", "blocked_us", "speedup"
+    );
+    let linalg_rows = gemm_sweep(quick);
+    for r in &linalg_rows {
+        println!(
+            "{:<6} {:>6} {:>6} {:>12.2} {:>12.2} {:>8.2}x",
+            r.k, r.d, r.m, r.naive_us, r.blocked_us, r.speedup
+        );
     }
 
-    println!("\n== encode throughput ceiling (host-side, K=8 S=1, d=3072) ==");
+    if let Some(path) = std::env::var_os("BENCH_PR_JSON") {
+        write_json(&path, d, &rows, &fault_rows, &scheme_rows, &adaptive_rows, &linalg_rows);
+    }
+
+    println!("\n== encode throughput ceiling (host-side flat path, K=8 S=1, d=3072) ==");
     {
         let code = ApproxIferCode::new(CodeParams::new(8, 1, 0));
         let qs: Vec<Vec<f32>> = (0..8).map(|j| vec![j as f32 * 0.1; 3072]).collect();
         let qrefs: Vec<&[f32]> = qs.iter().map(|q| &q[..]).collect();
-        let mut out: Vec<Vec<f32>> = vec![Vec::new(); 9];
+        let queries = GroupBlock::from_rows(&qrefs);
+        let pool = BlockPool::new();
         let t0 = Instant::now();
         let iters = if quick { 2_000 } else { 20_000 };
         for _ in 0..iters {
-            code.encode_into(&qrefs, &mut out);
+            // The serving batcher's exact shape: pooled take → GEMM →
+            // freeze → retire (drop recycles the block).
+            let mut out = pool.take(9, 3072);
+            code.encode_block(&queries, &mut out);
+            std::hint::black_box(out.freeze());
         }
         let per = t0.elapsed().as_secs_f64() / iters as f64;
         println!(
-            "encode_into: {:.1}us/group -> {:.0} groups/s ({:.0} queries/s)",
+            "encode_block: {:.1}us/group -> {:.0} groups/s ({:.0} queries/s, pool reuse {})",
             per * 1e6,
             1.0 / per,
-            8.0 / per
+            8.0 / per,
+            pool.reused()
         );
     }
 }
@@ -359,6 +381,7 @@ fn adaptive_drift_sweep(d: usize, c: usize, groups_per_phase: usize) -> Vec<Drif
 }
 
 /// Hand-rolled JSON artifact (no serde in this environment).
+#[allow(clippy::too_many_arguments)]
 fn write_json(
     path: &std::ffi::OsStr,
     payload: usize,
@@ -366,6 +389,7 @@ fn write_json(
     faults: &[FaultRow],
     schemes: &[SchemeRow],
     adaptive: &[DriftRow],
+    linalg: &[GemmSweepRow],
 ) {
     let base = rows[0].report.throughput;
     let mut out = String::from("{\n");
@@ -441,6 +465,21 @@ fn write_json(
             row.s,
             row.e,
             if i + 1 < adaptive.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ],\n");
+    out.push_str("  \"linalg_rows\": [\n");
+    for (i, row) in linalg.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"k\": {}, \"d\": {}, \"rows\": {}, \"naive_us\": {:.3}, \
+             \"blocked_us\": {:.3}, \"speedup\": {:.3}}}{}\n",
+            row.k,
+            row.d,
+            row.m,
+            row.naive_us,
+            row.blocked_us,
+            row.speedup,
+            if i + 1 < linalg.len() { "," } else { "" }
         ));
     }
     out.push_str("  ],\n");

@@ -25,8 +25,33 @@ const NODE_GUARD: f64 = 1e-12;
 /// Barycentric basis weights `ℓ_i(z)` for nodes `xs` with alternating signs
 /// `(-1)^i` keyed to position (encoder case, paper eq. (5)).
 pub fn weights(xs: &[f64], z: f64) -> Vec<f64> {
-    let signs: Vec<i32> = (0..xs.len()).map(|i| i as i32).collect();
-    weights_signed(xs, &signs, z)
+    let mut out = Vec::new();
+    weights_into(xs, z, &mut out);
+    out
+}
+
+/// [`weights`] into a caller-owned scratch vector — the positional fast
+/// path: signs come from each node's index parity directly, so no sign
+/// buffer is built, and reusing `out` across calls makes per-group weight
+/// computation allocation-free after warmup (the encoder-matrix build and
+/// every decode-matrix cache miss run this in a loop).
+pub fn weights_into(xs: &[f64], z: f64, out: &mut Vec<f64>) {
+    assert!(!xs.is_empty(), "weights over zero nodes");
+    out.clear();
+    // Exact/near node: interpolatory weight (1 at that node, 0 elsewhere).
+    for (i, &x) in xs.iter().enumerate() {
+        if (z - x).abs() < NODE_GUARD {
+            out.resize(xs.len(), 0.0);
+            out[i] = 1.0;
+            return;
+        }
+    }
+    out.reserve(xs.len());
+    for (i, &x) in xs.iter().enumerate() {
+        let sign = if i % 2 == 0 { 1.0 } else { -1.0 };
+        out.push(sign / (z - x));
+    }
+    normalize(out, z);
 }
 
 /// Barycentric basis weights with explicit sign exponents: the weight for
@@ -34,32 +59,42 @@ pub fn weights(xs: &[f64], z: f64) -> Vec<f64> {
 /// subset of `β` but signs stay keyed to original worker indices
 /// (paper eq. (10)).
 pub fn weights_signed(xs: &[f64], sign_exp: &[i32], z: f64) -> Vec<f64> {
+    let mut out = Vec::new();
+    weights_signed_into(xs, sign_exp, z, &mut out);
+    out
+}
+
+/// [`weights_signed`] into a caller-owned scratch vector (see
+/// [`weights_into`] — the decode-matrix builder reuses one scratch across
+/// all `K` evaluation points).
+pub fn weights_signed_into(xs: &[f64], sign_exp: &[i32], z: f64, out: &mut Vec<f64>) {
     assert_eq!(xs.len(), sign_exp.len());
     assert!(!xs.is_empty(), "weights over zero nodes");
-    // Exact/near node: interpolatory weight (1 at that node, 0 elsewhere).
+    out.clear();
     for (i, &x) in xs.iter().enumerate() {
         if (z - x).abs() < NODE_GUARD {
-            let mut w = vec![0.0; xs.len()];
-            w[i] = 1.0;
-            return w;
+            out.resize(xs.len(), 0.0);
+            out[i] = 1.0;
+            return;
         }
     }
-    let mut w: Vec<f64> = xs
-        .iter()
-        .zip(sign_exp)
-        .map(|(&x, &s)| {
-            let sign = if s % 2 == 0 { 1.0 } else { -1.0 };
-            sign / (z - x)
-        })
-        .collect();
+    out.reserve(xs.len());
+    for (&x, &s) in xs.iter().zip(sign_exp) {
+        let sign = if s % 2 == 0 { 1.0 } else { -1.0 };
+        out.push(sign / (z - x));
+    }
+    normalize(out, z);
+}
+
+#[inline]
+fn normalize(w: &mut [f64], z: f64) {
     let denom: f64 = w.iter().sum();
     // Berrut's denominator never vanishes on the real line for alternating
     // signs over sorted nodes; a defensive check anyway.
     debug_assert!(denom.abs() > 0.0, "berrut denominator vanished at z={z}");
-    for wi in &mut w {
+    for wi in w.iter_mut() {
         *wi /= denom;
     }
-    w
 }
 
 /// Evaluate Berrut's interpolant `r(z) = Σ f_i ℓ_i(z)` for scalar samples.
@@ -155,6 +190,32 @@ mod tests {
         for i in 0..3 {
             assert_close(w[i], raw[i] / d, 1e-12);
         }
+    }
+
+    #[test]
+    fn positional_fast_path_matches_explicit_signs_bitwise() {
+        // The allocation-free positional path must be bit-identical to the
+        // explicit-sign path with signs (-1)^i, including near-node guard
+        // hits, and the scratch must be reusable across calls.
+        forall("berrut-positional-fast-path", 60, |g| {
+            let n = g.usize_in(1, 24);
+            let xs = chebyshev::second_kind(n);
+            let z = if g.bool() { g.f64_in(-1.0, 1.0) } else { xs[g.usize_in(0, n)] };
+            let signs: Vec<i32> = (0..xs.len()).map(|i| i as i32).collect();
+            let explicit = weights_signed(&xs, &signs, z);
+            let mut scratch = Vec::new();
+            weights_into(&xs, z, &mut scratch);
+            assert_eq!(scratch.len(), explicit.len());
+            for (a, b) in scratch.iter().zip(&explicit) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{a} vs {b} at z={z}");
+            }
+            // Scratch reuse: a second call with other nodes fully resets it.
+            let xs2 = chebyshev::second_kind(n + 1);
+            weights_into(&xs2, 0.123, &mut scratch);
+            assert_eq!(scratch.len(), xs2.len());
+            let sum: f64 = scratch.iter().sum();
+            assert_close(sum, 1.0, 1e-9);
+        });
     }
 
     #[test]

@@ -1,0 +1,429 @@
+//! The flat-buffer data plane: contiguous group matrices with `Arc`-shared
+//! row views and a recycling buffer pool.
+//!
+//! The serving hot path moves three matrices per group — the query stack
+//! `K×d`, the coded fan-out `(N+1)×d`, and the decoded predictions `K×c`.
+//! Each is one [`GroupBlock`]: a row-major flat `Vec<f32>` behind an `Arc`,
+//! carved into cheap [`RowView`]s that the worker pool, reply router,
+//! decode pool and TCP server pass around **without copying payload bytes**
+//! — cloning a view bumps a refcount, nothing else.
+//!
+//! Lifecycle: a [`BlockPool`] hands out mutable [`BlockBuf`] staging
+//! buffers (free-list recycled, *not* zeroed — producers fully overwrite,
+//! which `tests/flat_dataplane.rs` proves against poisoned buffers);
+//! [`BlockBuf::freeze`] seals one into an immutable [`GroupBlock`]; and
+//! when the last `Arc` holder (block or view) drops, the backing `Vec`
+//! returns to the pool's free list automatically instead of being freed —
+//! steady-state serving allocates nothing per group. Blocks built outside
+//! a pool ([`GroupBlock::from_rows`], [`RowView::from_vec`]) simply free
+//! on drop.
+
+use std::fmt;
+use std::ops::Deref;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, Weak};
+
+/// Free-list depth cap: enough for every stage of a deep pipeline
+/// (`max_inflight` query + coded blocks plus decode outputs in flight)
+/// while bounding how much payload memory an idle pool pins.
+const MAX_FREE: usize = 64;
+
+/// Shared pool state. The backing buffers hold a `Weak` to this so a pool
+/// can be dropped while its blocks are still alive (they then free
+/// normally).
+struct PoolInner {
+    free: Mutex<Vec<Vec<f32>>>,
+    recycled: AtomicU64,
+    reused: AtomicU64,
+    allocated: AtomicU64,
+}
+
+impl PoolInner {
+    fn put(&self, v: Vec<f32>) {
+        if v.capacity() == 0 {
+            return;
+        }
+        let mut free = self.free.lock().unwrap();
+        if free.len() < MAX_FREE {
+            free.push(v);
+            self.recycled.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// A flat f32 buffer that returns itself to its pool's free list when the
+/// last `Arc` holding it drops (the "recycle at group retirement" rule —
+/// retirement is simply the last row view dying, wherever that happens).
+struct PooledBuf {
+    data: Vec<f32>,
+    pool: Weak<PoolInner>,
+}
+
+impl Drop for PooledBuf {
+    fn drop(&mut self) {
+        if let Some(pool) = self.pool.upgrade() {
+            pool.put(std::mem::take(&mut self.data));
+        }
+    }
+}
+
+/// Recycling free-list pool for group buffers. Cloning shares the pool.
+#[derive(Clone)]
+pub struct BlockPool {
+    inner: Arc<PoolInner>,
+}
+
+impl Default for BlockPool {
+    fn default() -> Self {
+        BlockPool::new()
+    }
+}
+
+impl BlockPool {
+    /// An empty pool.
+    pub fn new() -> BlockPool {
+        BlockPool {
+            inner: Arc::new(PoolInner {
+                free: Mutex::new(Vec::new()),
+                recycled: AtomicU64::new(0),
+                reused: AtomicU64::new(0),
+                allocated: AtomicU64::new(0),
+            }),
+        }
+    }
+
+    /// Take a `rows × dim` staging buffer, reusing a retired backing `Vec`
+    /// when one is free. **The buffer is not zeroed**: any prefix that fit
+    /// in the recycled allocation still holds the previous group's floats,
+    /// and the producer contract is to overwrite every element (all
+    /// encoders/decoders do — the GEMM kernel and the copy encoders write
+    /// each output exactly once).
+    pub fn take(&self, rows: usize, dim: usize) -> BlockBuf {
+        assert!(rows > 0 && dim > 0, "zero-sized block");
+        let need = rows * dim;
+        let mut data = match self.inner.free.lock().unwrap().pop() {
+            Some(v) => {
+                self.inner.reused.fetch_add(1, Ordering::Relaxed);
+                v
+            }
+            None => {
+                self.inner.allocated.fetch_add(1, Ordering::Relaxed);
+                Vec::new()
+            }
+        };
+        if data.len() < need {
+            data.resize(need, 0.0);
+        } else {
+            data.truncate(need);
+        }
+        BlockBuf { data, rows, dim, pool: Arc::downgrade(&self.inner) }
+    }
+
+    /// Buffers currently parked on the free list.
+    pub fn free_buffers(&self) -> usize {
+        self.inner.free.lock().unwrap().len()
+    }
+
+    /// Buffers returned to the free list so far (block retirements).
+    pub fn recycled(&self) -> u64 {
+        self.inner.recycled.load(Ordering::Relaxed)
+    }
+
+    /// Takes served from the free list (steady-state hits).
+    pub fn reused(&self) -> u64 {
+        self.inner.reused.load(Ordering::Relaxed)
+    }
+
+    /// Takes that had to allocate a fresh backing `Vec` (cold starts).
+    pub fn allocated(&self) -> u64 {
+        self.inner.allocated.load(Ordering::Relaxed)
+    }
+}
+
+/// A mutable `rows × dim` staging buffer checked out of a [`BlockPool`].
+/// Fill it (every element!) and [`BlockBuf::freeze`] it into a
+/// [`GroupBlock`]. Dropping it unfrozen returns the storage to the pool.
+pub struct BlockBuf {
+    data: Vec<f32>,
+    rows: usize,
+    dim: usize,
+    pool: Weak<PoolInner>,
+}
+
+impl BlockBuf {
+    /// A pool-less staging buffer (tests, one-shot harness paths). Unlike
+    /// pooled takes this one *is* zeroed — it is fresh memory anyway.
+    pub fn unpooled(rows: usize, dim: usize) -> BlockBuf {
+        assert!(rows > 0 && dim > 0, "zero-sized block");
+        BlockBuf { data: vec![0.0; rows * dim], rows, dim, pool: Weak::new() }
+    }
+
+    /// Rows of the staged matrix.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Row length of the staged matrix.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// The whole row-major buffer.
+    pub fn as_slice(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// The whole row-major buffer, mutably.
+    pub fn as_mut_slice(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Row `i`, mutably.
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Seal the staged matrix into an immutable, `Arc`-shared block.
+    pub fn freeze(mut self) -> GroupBlock {
+        let data = std::mem::take(&mut self.data);
+        let pool = std::mem::replace(&mut self.pool, Weak::new());
+        GroupBlock {
+            buf: Arc::new(PooledBuf { data, pool }),
+            rows: self.rows,
+            dim: self.dim,
+        }
+    }
+}
+
+impl Drop for BlockBuf {
+    fn drop(&mut self) {
+        // Freeze takes the data; an unfrozen drop returns it to the pool.
+        if self.data.capacity() > 0 {
+            if let Some(pool) = self.pool.upgrade() {
+                pool.put(std::mem::take(&mut self.data));
+            }
+        }
+    }
+}
+
+/// An immutable row-major `rows × dim` f32 matrix shared by `Arc`. The
+/// unit the data plane passes between pipeline stages; rows are borrowed
+/// with [`GroupBlock::row`] or detached as owning [`RowView`]s.
+#[derive(Clone)]
+pub struct GroupBlock {
+    buf: Arc<PooledBuf>,
+    rows: usize,
+    dim: usize,
+}
+
+impl GroupBlock {
+    /// Build an unpooled block by copying `rows` equal-length slices
+    /// (harness/test convenience; the serving path stages through a
+    /// [`BlockPool`] instead).
+    pub fn from_rows(rows: &[&[f32]]) -> GroupBlock {
+        assert!(!rows.is_empty(), "empty block");
+        let dim = rows[0].len();
+        let mut data = Vec::with_capacity(rows.len() * dim);
+        for r in rows {
+            assert_eq!(r.len(), dim, "ragged rows");
+            data.extend_from_slice(r);
+        }
+        GroupBlock::from_vec(data, rows.len(), dim)
+    }
+
+    /// Wrap an owned flat buffer as an unpooled block.
+    pub fn from_vec(data: Vec<f32>, rows: usize, dim: usize) -> GroupBlock {
+        assert_eq!(data.len(), rows * dim, "shape mismatch");
+        GroupBlock {
+            buf: Arc::new(PooledBuf { data, pool: Weak::new() }),
+            rows,
+            dim,
+        }
+    }
+
+    /// Rows in the matrix.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Row length.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// The whole row-major buffer.
+    pub fn data(&self) -> &[f32] {
+        &self.buf.data
+    }
+
+    /// Borrow row `i`.
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.buf.data[i * self.dim..(i + 1) * self.dim]
+    }
+
+    /// Detach row `i` as an owning view — a refcount bump, no copy.
+    pub fn row_view(&self, i: usize) -> RowView {
+        assert!(i < self.rows, "row {i} of {}", self.rows);
+        RowView { buf: self.buf.clone(), start: i * self.dim, len: self.dim }
+    }
+
+    /// All rows as owning views, in order.
+    pub fn row_views(&self) -> Vec<RowView> {
+        (0..self.rows).map(|i| self.row_view(i)).collect()
+    }
+}
+
+impl fmt::Debug for GroupBlock {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "GroupBlock({}x{})", self.rows, self.dim)
+    }
+}
+
+/// A cheap, clonable, read-only view of one row of an `Arc`-shared flat
+/// buffer — the payload type worker tasks, worker replies and decoded
+/// predictions travel as. Derefs to `[f32]`, so call sites index and
+/// iterate it like a slice; clones share the backing buffer.
+#[derive(Clone)]
+pub struct RowView {
+    buf: Arc<PooledBuf>,
+    start: usize,
+    len: usize,
+}
+
+impl RowView {
+    /// Wrap an owned payload as a single-row view (the worker pool uses
+    /// this for engine outputs; the buffer frees on last drop).
+    pub fn from_vec(v: Vec<f32>) -> RowView {
+        let len = v.len();
+        RowView { buf: Arc::new(PooledBuf { data: v, pool: Weak::new() }), start: 0, len }
+    }
+
+    /// A zero-length view (protocol pings, placeholder replies).
+    pub fn empty() -> RowView {
+        RowView::from_vec(Vec::new())
+    }
+
+    /// The viewed floats.
+    pub fn as_slice(&self) -> &[f32] {
+        &self.buf.data[self.start..self.start + self.len]
+    }
+}
+
+impl Deref for RowView {
+    type Target = [f32];
+
+    fn deref(&self) -> &[f32] {
+        self.as_slice()
+    }
+}
+
+impl AsRef<[f32]> for RowView {
+    fn as_ref(&self) -> &[f32] {
+        self.as_slice()
+    }
+}
+
+impl fmt::Debug for RowView {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(self.as_slice(), f)
+    }
+}
+
+impl PartialEq for RowView {
+    fn eq(&self, other: &RowView) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl PartialEq<Vec<f32>> for RowView {
+    fn eq(&self, other: &Vec<f32>) -> bool {
+        self.as_slice() == &other[..]
+    }
+}
+
+impl PartialEq<RowView> for Vec<f32> {
+    fn eq(&self, other: &RowView) -> bool {
+        &self[..] == other.as_slice()
+    }
+}
+
+impl PartialEq<[f32]> for RowView {
+    fn eq(&self, other: &[f32]) -> bool {
+        self.as_slice() == other
+    }
+}
+
+impl PartialEq<&[f32]> for RowView {
+    fn eq(&self, other: &&[f32]) -> bool {
+        self.as_slice() == *other
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn block_rows_and_views_share_storage() {
+        let block = GroupBlock::from_rows(&[&[1.0f32, 2.0], &[3.0, 4.0]]);
+        assert_eq!(block.rows(), 2);
+        assert_eq!(block.dim(), 2);
+        assert_eq!(block.row(1), &[3.0, 4.0]);
+        let v = block.row_view(1);
+        assert_eq!(v, &[3.0f32, 4.0][..]);
+        // Zero-copy: the view aliases the block's storage.
+        assert_eq!(v.as_slice().as_ptr(), block.row(1).as_ptr());
+        let v2 = v.clone();
+        assert_eq!(v2.as_slice().as_ptr(), v.as_slice().as_ptr());
+    }
+
+    #[test]
+    fn pool_recycles_after_last_holder_drops() {
+        let pool = BlockPool::new();
+        let mut buf = pool.take(2, 3);
+        assert_eq!(pool.allocated(), 1);
+        buf.as_mut_slice().copy_from_slice(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let block = buf.freeze();
+        let view = block.row_view(0);
+        drop(block);
+        // The view still pins the buffer: nothing recycled yet.
+        assert_eq!(pool.free_buffers(), 0);
+        assert_eq!(view[0], 1.0);
+        drop(view);
+        assert_eq!(pool.free_buffers(), 1);
+        assert_eq!(pool.recycled(), 1);
+        // The next take reuses the retired buffer instead of allocating.
+        let _again = pool.take(2, 3);
+        assert_eq!(pool.reused(), 1);
+        assert_eq!(pool.allocated(), 1);
+        assert_eq!(pool.free_buffers(), 0);
+    }
+
+    #[test]
+    fn unfrozen_buf_returns_to_pool() {
+        let pool = BlockPool::new();
+        drop(pool.take(1, 4));
+        assert_eq!(pool.free_buffers(), 1);
+    }
+
+    #[test]
+    fn pool_survives_outliving_blocks_and_vice_versa() {
+        let pool = BlockPool::new();
+        let block = pool.take(1, 2).freeze();
+        drop(pool);
+        drop(block); // pool gone: frees without panicking
+        let v = RowView::from_vec(vec![9.0]);
+        assert_eq!(v, vec![9.0f32]);
+    }
+
+    #[test]
+    fn take_resizes_recycled_buffers() {
+        let pool = BlockPool::new();
+        drop(pool.take(4, 8)); // park a 32-float buffer
+        let small = pool.take(2, 3);
+        assert_eq!(small.as_slice().len(), 6);
+        drop(small);
+        let big = pool.take(5, 10);
+        assert_eq!(big.as_slice().len(), 50);
+    }
+}

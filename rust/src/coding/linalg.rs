@@ -1,0 +1,242 @@
+//! The f32 GEMM micro-kernel behind the codec hot path.
+//!
+//! Every host-side hot loop of the data plane — the encoder's
+//! `X̃ = W·X` (eq. (4)–(8)), the decoder's `Ŷ = D·Ỹ` (eq. (10)–(11)), and
+//! the verification re-encode `Z = W_F·Ŷ` — is the same shape of problem:
+//! a small dense matrix (≤ ~60 rows of ≤ ~30 weights) applied to a stack
+//! of long f32 payload rows. [`gemm_rows`] is the one cache-blocked kernel
+//! they all share: the payload dimension is tiled so the `K` input rows
+//! stay cache-resident while every output row sweeps over them, and the
+//! inner loop is a plain slice [`axpy`] the compiler autovectorizes (no
+//! external BLAS, no unsafe, no FMA contraction — plain f32 mul+add).
+//!
+//! **Bit-exactness contract.** For each output element the kernel performs
+//! exactly the additions `0 + a₀·b₀ + a₁·b₁ + …` in index order with a
+//! single f32 accumulator — the same floating-point sequence as the
+//! retained naive reference [`gemm_rows_naive`] — so the blocked path is
+//! *bit-identical* to the reference for every block size and payload
+//! length (`tests/flat_dataplane.rs` asserts this forall over (K, S, E)
+//! and ragged payload sizes). Replays and golden vectors therefore do not
+//! depend on which kernel decoded them.
+
+use std::time::Instant;
+
+/// Payload-dimension tile: 512 f32 = 2 KiB per row-block, so a K=25 query
+/// stack holds a 50 KiB working set per tile that stays cache-resident
+/// across all output rows even at d = 4096.
+///
+/// History: an earlier payload-blocked encoder was measured and reverted
+/// (EXPERIMENTS.md §Perf) because at the then-current serving sizes
+/// (K ≤ 12, d ≤ 3072) the whole `K·d` working set already fit in L2 and
+/// blocking bought nothing. The paper's target sizes (K to 25+, d in the
+/// thousands, figs 7/8) push `K·d` past that, which is the premise for
+/// reinstating tiling — but the premise is *recorded, not asserted*: the
+/// `linalg_rows` sweep ([`gemm_sweep`], emitted into BENCH_PR.json every
+/// CI run) times naive vs blocked at exactly these shapes, and because
+/// the two kernels are bit-identical, reverting to the naive loop (or
+/// retuning the tile) is a pure perf decision if the numbers come back
+/// flat at small shapes.
+pub const GEMM_BLOCK: usize = 512;
+
+/// `acc[t] += a * x[t]` over f32 slices — the autovectorized inner loop of
+/// [`gemm_rows`]. Unlike the encoder's historical SAXPY this does **not**
+/// skip `a == 0.0`: the skip broke the bit-exactness contract with the
+/// naive reference on `-0.0` accumulators, and a branch per row costs more
+/// than the multiply it saves.
+#[inline]
+pub fn axpy(acc: &mut [f32], a: f32, x: &[f32]) {
+    debug_assert_eq!(acc.len(), x.len());
+    for (dst, &src) in acc.iter_mut().zip(x) {
+        *dst += a * src;
+    }
+}
+
+/// Blocked `out[m×n] = A·B` with both matrices given as row slices:
+/// `a_rows[i]` holds row `i`'s `k` weights, `b_rows[l]` holds payload row
+/// `l` (`n` f32s). `out` is row-major `m×n` and is fully overwritten.
+///
+/// Rows may live in different allocations (gathered reply payloads) or be
+/// windows of one contiguous block — the kernel only assumes per-row
+/// contiguity, which is what the cache blocking exploits.
+pub fn gemm_rows(a_rows: &[&[f32]], b_rows: &[&[f32]], out: &mut [f32]) {
+    let m = a_rows.len();
+    let k = b_rows.len();
+    assert!(m > 0 && k > 0, "gemm over an empty matrix");
+    let n = b_rows[0].len();
+    for b in b_rows {
+        assert_eq!(b.len(), n, "gemm: ragged payload rows");
+    }
+    for a in a_rows {
+        assert_eq!(a.len(), k, "gemm: weight row length != payload rows");
+    }
+    assert_eq!(out.len(), m * n, "gemm: output shape mismatch");
+    let mut start = 0;
+    while start < n {
+        let end = (start + GEMM_BLOCK).min(n);
+        for (i, arow) in a_rows.iter().enumerate() {
+            let orow = &mut out[i * n + start..i * n + end];
+            orow.fill(0.0);
+            for (brow, &w) in b_rows.iter().zip(arow.iter()) {
+                axpy(orow, w, &brow[start..end]);
+            }
+        }
+        start = end;
+    }
+}
+
+/// The retained naive reference for [`gemm_rows`]: the textbook triple
+/// loop, one scalar accumulator per output element, additions in row
+/// order. Kept (and exercised by the conformance suite) purely as the
+/// bit-exactness oracle for the blocked kernel — never on a serving path.
+pub fn gemm_rows_naive(a_rows: &[&[f32]], b_rows: &[&[f32]], out: &mut [f32]) {
+    let m = a_rows.len();
+    let k = b_rows.len();
+    assert!(m > 0 && k > 0, "gemm over an empty matrix");
+    let n = b_rows[0].len();
+    assert_eq!(out.len(), m * n, "gemm: output shape mismatch");
+    for (i, arow) in a_rows.iter().enumerate() {
+        assert_eq!(arow.len(), k);
+        for t in 0..n {
+            let mut acc = 0.0f32;
+            for (l, brow) in b_rows.iter().enumerate() {
+                acc += arow[l] * brow[t];
+            }
+            out[i * n + t] = acc;
+        }
+    }
+}
+
+/// One row of the naive-vs-blocked GEMM sweep ([`gemm_sweep`]).
+pub struct GemmSweepRow {
+    /// Queries per group (the GEMM inner dimension).
+    pub k: usize,
+    /// Payload length (the tiled dimension).
+    pub d: usize,
+    /// Output rows (workers; `K+1` at `S = 1`).
+    pub m: usize,
+    /// Mean microseconds per naive-kernel group encode.
+    pub naive_us: f64,
+    /// Mean microseconds per blocked-kernel group encode.
+    pub blocked_us: f64,
+    /// `naive_us / blocked_us`.
+    pub speedup: f64,
+}
+
+/// The `linalg_rows` perf baseline: time naive vs blocked GEMM at the
+/// encode shapes the paper targets (d ∈ {256, 1024, 4096} × K ∈ {4, 10,
+/// 25}, `m = K+1` workers at S = 1). Shared by `bench_linalg` (human
+/// output) and `bench_throughput` (the `linalg_rows` block of
+/// BENCH_PR.json), so the perf trajectory has one definition of the
+/// measurement.
+pub fn gemm_sweep(quick: bool) -> Vec<GemmSweepRow> {
+    let flop_budget: usize = if quick { 4_000_000 } else { 200_000_000 };
+    let mut rows = Vec::new();
+    for &k in &[4usize, 10, 25] {
+        for &d in &[256usize, 1024, 4096] {
+            let m = k + 1;
+            let a: Vec<f32> = (0..m * k).map(|i| ((i as f32) * 0.37).sin()).collect();
+            let b: Vec<f32> = (0..k * d).map(|i| ((i as f32) * 0.011).sin()).collect();
+            let a_rows: Vec<&[f32]> = a.chunks_exact(k).collect();
+            let b_rows: Vec<&[f32]> = b.chunks_exact(d).collect();
+            let mut out = vec![0.0f32; m * d];
+            let iters = (flop_budget / (2 * m * k * d)).clamp(3, 2000);
+            let mut time = |f: &mut dyn FnMut(&mut [f32])| -> f64 {
+                f(&mut out); // warm the caches and the page tables
+                let t0 = Instant::now();
+                for _ in 0..iters {
+                    f(&mut out);
+                }
+                std::hint::black_box(&out);
+                t0.elapsed().as_secs_f64() / iters as f64 * 1e6
+            };
+            let naive_us = time(&mut |o| gemm_rows_naive(&a_rows, &b_rows, o));
+            let blocked_us = time(&mut |o| gemm_rows(&a_rows, &b_rows, o));
+            rows.push(GemmSweepRow {
+                k,
+                d,
+                m,
+                naive_us,
+                blocked_us,
+                speedup: naive_us / blocked_us.max(1e-9),
+            });
+        }
+    }
+    rows
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn payload(k: usize, n: usize, phase: f32) -> Vec<f32> {
+        (0..k * n).map(|i| ((i as f32) * 0.013 + phase).sin()).collect()
+    }
+
+    #[test]
+    fn blocked_matches_naive_bitwise_across_shapes() {
+        // Shapes straddling the tile boundary, incl. n not divisible by
+        // GEMM_BLOCK and n < GEMM_BLOCK.
+        for &(m, k, n) in &[
+            (1usize, 1usize, 1usize),
+            (5, 4, 7),
+            (11, 10, GEMM_BLOCK - 1),
+            (11, 10, GEMM_BLOCK),
+            (11, 10, GEMM_BLOCK + 13),
+            (26, 25, 3 * GEMM_BLOCK + 101),
+        ] {
+            let a = payload(m, k, 0.3);
+            let b = payload(k, n, 1.1);
+            let a_rows: Vec<&[f32]> = a.chunks_exact(k).collect();
+            let b_rows: Vec<&[f32]> = b.chunks_exact(n).collect();
+            let mut fast = vec![0.0f32; m * n];
+            let mut slow = vec![1.0f32; m * n]; // poisoned: must be overwritten
+            gemm_rows(&a_rows, &b_rows, &mut fast);
+            gemm_rows_naive(&a_rows, &b_rows, &mut slow);
+            for (i, (x, y)) in fast.iter().zip(&slow).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "({m}x{k}x{n}) elem {i}: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_identity_passthrough() {
+        // A = I: output rows are the payload rows verbatim.
+        let n = 700; // spans two tiles
+        let k = 3;
+        let b = payload(k, n, 0.0);
+        let b_rows: Vec<&[f32]> = b.chunks_exact(n).collect();
+        let eye: Vec<f32> = (0..k * k)
+            .map(|i| if i / k == i % k { 1.0 } else { 0.0 })
+            .collect();
+        let a_rows: Vec<&[f32]> = eye.chunks_exact(k).collect();
+        let mut out = vec![0.0f32; k * n];
+        gemm_rows(&a_rows, &b_rows, &mut out);
+        assert_eq!(&out, &b);
+    }
+
+    #[test]
+    fn axpy_accumulates() {
+        let mut acc = vec![1.0f32, 2.0, 3.0];
+        axpy(&mut acc, 2.0, &[1.0, 1.0, 1.0]);
+        assert_eq!(acc, vec![3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_is_rejected() {
+        let a = [0.5f32; 2];
+        let b = [0.5f32; 4];
+        let mut out = vec![0.0f32; 5]; // wrong: should be 1*4
+        gemm_rows(&[&a], &[&b[..2], &b[2..]], &mut out);
+    }
+
+    #[test]
+    fn sweep_produces_the_full_grid() {
+        let rows = gemm_sweep(true);
+        assert_eq!(rows.len(), 9);
+        for r in &rows {
+            assert!(r.naive_us > 0.0 && r.blocked_us > 0.0);
+            assert_eq!(r.m, r.k + 1);
+        }
+    }
+}

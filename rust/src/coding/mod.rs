@@ -3,19 +3,25 @@
 //! its linear encoder/decoder, the Berlekamp–Welch-style rational
 //! error-locator (Algorithm 1), the per-class majority-vote locator
 //! (Algorithm 2), the replication baseline codec, the closed-form
-//! worker-count/overhead comparisons — and the [`serving::ServingScheme`]
-//! contract that packages each strategy (ApproxIFER / replication /
-//! ParM-proxy / uncoded) for the scheme-agnostic serving engine.
+//! worker-count/overhead comparisons — the flat-buffer data plane
+//! ([`block::GroupBlock`] / [`block::RowView`] / [`block::BlockPool`])
+//! with its shared blocked-GEMM micro-kernel ([`linalg::gemm_rows`]) —
+//! and the [`serving::ServingScheme`] contract that packages each strategy
+//! (ApproxIFER / replication / ParM-proxy / uncoded) for the
+//! scheme-agnostic serving engine.
 
-// `serving` (the public scheme contract) carries complete rustdoc under
+// `serving` (the public scheme contract), `block` (the flat-buffer data
+// plane) and `linalg` (the GEMM micro-kernel) carry complete rustdoc under
 // the crate's `missing_docs` lint; the math-internal submodules are the
 // tracked remainder of the documentation pass.
 #[allow(missing_docs)]
 pub mod analysis;
 #[allow(missing_docs)]
 pub mod berrut;
+pub mod block;
 #[allow(missing_docs)]
 pub mod chebyshev;
+pub mod linalg;
 #[allow(missing_docs)]
 pub mod locator;
 #[allow(missing_docs)]
@@ -28,6 +34,7 @@ pub mod theory;
 #[allow(missing_docs)]
 pub mod vote;
 
+pub use block::{BlockBuf, BlockPool, GroupBlock, RowView};
 pub use locator::{locate, LocatorMethod};
 pub use replication::ReplicationParams;
 pub use scheme::{ApproxIferCode, CodeParams};

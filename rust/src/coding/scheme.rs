@@ -4,18 +4,29 @@
 //! `X̃_i = Σ_j ℓ_j(β_i) · X_j` (eqs. (4)–(8)) — an `(N+1)×K` matrix applied to
 //! the query payloads — and, for a given available worker set `F`, the
 //! decoder is the linear map `Ŷ_j = Σ_{i∈F} ℓ̂_i(α_j) · Ỹ_i` (eqs. (10)–(11)).
-//! Both matrices are precomputed in f64 and applied to f32 payloads as tight
-//! SAXPY loops; decode matrices are memoized per availability set since
-//! fastest-set patterns repeat under stable worker latency distributions.
+//! Both matrices are precomputed in f64 and applied to f32 payloads as one
+//! cache-blocked GEMM each over flat [`GroupBlock`] buffers (the shared
+//! [`super::linalg::gemm_rows`] micro-kernel); decode matrices are memoized
+//! per availability set in a sharded read-mostly cache, since fastest-set
+//! patterns repeat under stable worker latency distributions.
+//!
+//! Naive reference paths ([`ApproxIferCode::encode_reference`],
+//! [`ApproxIferCode::decode_reference`]) are retained with a bit-identical
+//! contract against the GEMM paths — the conformance suite
+//! (`tests/flat_dataplane.rs`) holds the kernels to it.
 
+use std::collections::hash_map::DefaultHasher;
 use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, RwLock};
 
 use crate::tensor::Tensor;
 
 use super::berrut;
+use super::block::{BlockBuf, BlockPool, GroupBlock};
 use super::chebyshev;
+use super::linalg::{gemm_rows, gemm_rows_naive};
 
 /// Code parameters: `K` queries per group, `S` stragglers tolerated, `E`
 /// Byzantine workers tolerated.
@@ -77,6 +88,27 @@ impl CodeParams {
     }
 }
 
+/// Decode-matrix cache shards. Hit lookups take only a shard's read lock
+/// (hit counts are atomics), so concurrent decode threads never serialize
+/// on a global mutex; misses and the eviction pass write-lock one shard.
+const DECODE_CACHE_SHARDS: usize = 8;
+
+/// Decode-matrix cache capacity (total across shards). Fastest-set
+/// patterns repeat under stable worker latency distributions, but
+/// adversarial churn can touch arbitrarily many availability sets — cap
+/// the map and evict each shard's cold half when it fills.
+const DECODE_CACHE_CAP: usize = 4096;
+
+/// Per-shard capacity.
+const SHARD_CAP: usize = DECODE_CACHE_CAP / DECODE_CACHE_SHARDS;
+
+struct CacheEntry {
+    mat: Arc<Vec<f32>>,
+    /// Bumped under the shard's *read* lock — heat tracking without write
+    /// contention on the hit path.
+    hits: AtomicU64,
+}
+
 /// Precomputed ApproxIFER encoder/decoder for one `(K, S, E)`.
 pub struct ApproxIferCode {
     params: CodeParams,
@@ -87,23 +119,13 @@ pub struct ApproxIferCode {
     /// Encode matrix, row-major `(N+1) × K`: `w_enc[i*K + j] = ℓ_j(β_i)`.
     w_enc: Vec<f32>,
     /// Memoized decode matrices keyed by the sorted available worker set,
-    /// with per-entry hit counts driving the bounded eviction.
-    decode_cache: Mutex<HashMap<Vec<usize>, CacheEntry>>,
+    /// sharded by key hash; per-entry hit counts drive the bounded
+    /// eviction.
+    decode_cache: [RwLock<HashMap<Vec<usize>, CacheEntry>>; DECODE_CACHE_SHARDS],
     /// Entries evicted so far; drained into `ServingMetrics` by the scheme
     /// decode path ([`ApproxIferCode::take_cache_evictions`]).
     cache_evictions: AtomicU64,
 }
-
-struct CacheEntry {
-    mat: std::sync::Arc<Vec<f32>>,
-    hits: u64,
-}
-
-/// Decode-matrix cache capacity. Fastest-set patterns repeat under stable
-/// worker latency distributions, but adversarial churn can touch
-/// arbitrarily many availability sets — cap the map and evict the cold
-/// half when it fills.
-const DECODE_CACHE_CAP: usize = 4096;
 
 impl ApproxIferCode {
     pub fn new(params: CodeParams) -> ApproxIferCode {
@@ -111,16 +133,17 @@ impl ApproxIferCode {
         let alpha = chebyshev::first_kind(params.k);
         let beta = chebyshev::second_kind(n);
         let mut w_enc = Vec::with_capacity((n + 1) * params.k);
+        let mut scratch = Vec::with_capacity(params.k);
         for &b in &beta {
-            let w = berrut::weights(&alpha, b);
-            w_enc.extend(w.iter().map(|&x| x as f32));
+            berrut::weights_into(&alpha, b, &mut scratch);
+            w_enc.extend(scratch.iter().map(|&x| x as f32));
         }
         ApproxIferCode {
             params,
             alpha,
             beta,
             w_enc,
-            decode_cache: Mutex::new(HashMap::new()),
+            decode_cache: std::array::from_fn(|_| RwLock::new(HashMap::new())),
             cache_evictions: AtomicU64::new(0),
         }
     }
@@ -142,7 +165,9 @@ impl ApproxIferCode {
         &self.w_enc
     }
 
-    /// Encode `K` equal-shaped query tensors into `N+1` coded queries.
+    /// Encode `K` equal-shaped query tensors into `N+1` coded queries
+    /// (allocating convenience path for the harness; the serving path is
+    /// [`ApproxIferCode::encode_block`]).
     pub fn encode(&self, queries: &[Tensor]) -> Vec<Tensor> {
         let k = self.params.k;
         assert_eq!(queries.len(), k, "encode: expected {k} queries, got {}", queries.len());
@@ -151,82 +176,149 @@ impl ApproxIferCode {
             assert_eq!(q.shape(), &shape[..], "encode: inconsistent query shapes");
         }
         let d = queries[0].len();
-        let nw = self.params.num_workers();
-        let mut out = Vec::with_capacity(nw);
-        for i in 0..nw {
-            let mut acc = vec![0.0f32; d];
-            let row = &self.w_enc[i * k..(i + 1) * k];
-            for (j, q) in queries.iter().enumerate() {
-                saxpy(&mut acc, row[j], q.data());
-            }
-            out.push(Tensor::from_vec(&shape, acc));
-        }
-        out
+        let qrefs: Vec<&[f32]> = queries.iter().map(|q| q.data()).collect();
+        let block = GroupBlock::from_rows(&qrefs);
+        let mut out = BlockBuf::unpooled(self.params.num_workers(), d);
+        self.encode_block(&block, &mut out);
+        let coded = out.freeze();
+        (0..self.params.num_workers())
+            .map(|i| Tensor::from_vec(&shape, coded.row(i).to_vec()))
+            .collect()
     }
 
-    /// Encode into preallocated output buffers (steady-state serving path —
-    /// no allocation). `out` must hold `N+1` buffers of the payload size.
-    ///
-    /// Worker-major SAXPY loop. A payload-blocked variant (chunking `d` so
-    /// the `K` query slices stay L1-resident across workers) was measured
-    /// and reverted: at serving payload sizes the whole `K·d` working set
-    /// already fits in L2, so blocking bought nothing (EXPERIMENTS.md §Perf).
-    pub fn encode_into(&self, queries: &[&[f32]], out: &mut [Vec<f32>]) {
+    /// Encode a `K×d` query block into a pre-staged `(N+1)×d` coded block:
+    /// one blocked GEMM `X̃ = W·X` over flat buffers — the serving hot
+    /// path. Fully overwrites `out` (the recycled-buffer contract).
+    pub fn encode_block(&self, queries: &GroupBlock, out: &mut BlockBuf) {
         let k = self.params.k;
-        assert_eq!(queries.len(), k);
-        assert_eq!(out.len(), self.params.num_workers());
-        let d = queries[0].len();
-        for (i, buf) in out.iter_mut().enumerate() {
-            buf.clear();
-            buf.resize(d, 0.0);
-            let row = &self.w_enc[i * k..(i + 1) * k];
-            for (j, q) in queries.iter().enumerate() {
-                saxpy(buf, row[j], q);
-            }
-        }
+        let nw = self.params.num_workers();
+        assert_eq!(queries.rows(), k, "encode: expected {k} query rows");
+        assert_eq!(out.rows(), nw, "encode: output staged for {} rows", out.rows());
+        assert_eq!(out.dim(), queries.dim(), "encode: payload length mismatch");
+        let a_rows: Vec<&[f32]> = self.w_enc.chunks_exact(k).collect();
+        let b_rows: Vec<&[f32]> = (0..k).map(|j| queries.row(j)).collect();
+        gemm_rows(&a_rows, &b_rows, out.as_mut_slice());
     }
 
-    /// Decode weights for an available set (sorted worker indices): returns
-    /// the row-major `K × |F|` matrix `D[j][m] = ℓ̂_{F[m]}(α_j)` with signs
-    /// keyed to original worker indices (paper eq. (10)). Memoized.
-    pub fn decode_matrix(&self, avail: &[usize]) -> std::sync::Arc<Vec<f32>> {
-        debug_assert!(avail.windows(2).all(|w| w[0] < w[1]), "avail must be sorted unique");
-        if let Some(entry) = self.decode_cache.lock().unwrap().get_mut(avail) {
-            entry.hits += 1;
-            return entry.mat.clone();
-        }
+    /// Retained naive reference for [`ApproxIferCode::encode_block`]
+    /// (textbook per-element loop). **Bit-identical contract**: for every
+    /// query block and output shape the two produce the same f32 bits —
+    /// asserted by the conformance suite. Never on a serving path.
+    pub fn encode_reference(&self, queries: &GroupBlock, out: &mut BlockBuf) {
+        let k = self.params.k;
+        assert_eq!(queries.rows(), k);
+        assert_eq!(out.rows(), self.params.num_workers());
+        assert_eq!(out.dim(), queries.dim());
+        let a_rows: Vec<&[f32]> = self.w_enc.chunks_exact(k).collect();
+        let b_rows: Vec<&[f32]> = (0..k).map(|j| queries.row(j)).collect();
+        gemm_rows_naive(&a_rows, &b_rows, out.as_mut_slice());
+    }
+
+    /// Which shard an availability key lives in.
+    fn shard_of(avail: &[usize]) -> usize {
+        let mut h = DefaultHasher::new();
+        avail.hash(&mut h);
+        (h.finish() as usize) % DECODE_CACHE_SHARDS
+    }
+
+    /// Build the row-major `K × |F|` decode matrix for one availability
+    /// set (the cache-miss path; scratch reused across the K rows).
+    fn build_decode_matrix(&self, avail: &[usize]) -> Vec<f32> {
         let nodes: Vec<f64> = avail.iter().map(|&i| self.beta[i]).collect();
         let signs: Vec<i32> = avail.iter().map(|&i| i as i32).collect();
         let k = self.params.k;
         let mut d = Vec::with_capacity(k * avail.len());
+        let mut scratch = Vec::with_capacity(avail.len());
         for j in 0..k {
-            let w = berrut::weights_signed(&nodes, &signs, self.alpha[j]);
-            d.extend(w.iter().map(|&x| x as f32));
+            berrut::weights_signed_into(&nodes, &signs, self.alpha[j], &mut scratch);
+            d.extend(scratch.iter().map(|&x| x as f32));
         }
-        let arc = std::sync::Arc::new(d);
-        let mut cache = self.decode_cache.lock().unwrap();
-        if cache.len() >= DECODE_CACHE_CAP && !cache.contains_key(avail) {
-            // Bounded eviction that keeps hot entries: rank by hit count,
-            // drop the cold half, and halve the survivors' counts so stale
-            // heat ages out instead of pinning entries forever.
-            let mut entries: Vec<(Vec<usize>, CacheEntry)> = cache.drain().collect();
-            let keep = entries.len() / 2;
-            entries.select_nth_unstable_by(keep, |a, b| b.1.hits.cmp(&a.1.hits));
-            let evicted = (entries.len() - keep) as u64;
-            entries.truncate(keep);
-            self.cache_evictions.fetch_add(evicted, Ordering::Relaxed);
-            for (key, mut entry) in entries {
-                entry.hits /= 2;
-                cache.insert(key, entry);
-            }
-        }
-        cache.insert(avail.to_vec(), CacheEntry { mat: arc.clone(), hits: 0 });
-        arc
+        d
     }
 
-    /// Decode-matrix cache entries currently memoized.
+    /// Decode weights for an available set (sorted worker indices): returns
+    /// the row-major `K × |F|` matrix `D[j][m] = ℓ̂_{F[m]}(α_j)` with signs
+    /// keyed to original worker indices (paper eq. (10)). Memoized in a
+    /// sharded read-mostly cache: hits take one shard's read lock and bump
+    /// an atomic heat counter; misses compute **off-lock** and reuse a
+    /// racing thread's insert rather than double-inserting.
+    pub fn decode_matrix(&self, avail: &[usize]) -> Arc<Vec<f32>> {
+        debug_assert!(avail.windows(2).all(|w| w[0] < w[1]), "avail must be sorted unique");
+        let shard = &self.decode_cache[Self::shard_of(avail)];
+        if let Some(entry) = shard.read().unwrap().get(avail) {
+            entry.hits.fetch_add(1, Ordering::Relaxed);
+            return entry.mat.clone();
+        }
+        // Miss: build the matrix without holding any lock.
+        let mat = Arc::new(self.build_decode_matrix(avail));
+        let len_after = {
+            let mut map = shard.write().unwrap();
+            match map.entry(avail.to_vec()) {
+                std::collections::hash_map::Entry::Occupied(e) => {
+                    // A racing thread computed it first — adopt its entry so
+                    // the cache keeps one canonical Arc per key.
+                    e.get().hits.fetch_add(1, Ordering::Relaxed);
+                    return e.get().mat.clone();
+                }
+                std::collections::hash_map::Entry::Vacant(v) => {
+                    v.insert(CacheEntry { mat: mat.clone(), hits: AtomicU64::new(0) });
+                }
+            }
+            map.len()
+        };
+        if len_after > SHARD_CAP {
+            self.evict_shard(shard, avail);
+        }
+        mat
+    }
+
+    /// Bounded eviction keeping hot entries: snapshot `(key, hits)` under
+    /// the read lock, rank the cold half **off-lock**, then take the write
+    /// lock only to remove those keys and halve the survivors' heat so
+    /// stale hits age out instead of pinning entries forever. `protect` is
+    /// the key whose insert triggered this pass — it starts at zero hits
+    /// and would otherwise rank among the coldest, evicting the very entry
+    /// the caller just memoized (the pre-shard code inserted *after*
+    /// evicting for the same reason).
+    fn evict_shard(&self, shard: &RwLock<HashMap<Vec<usize>, CacheEntry>>, protect: &[usize]) {
+        let mut snapshot: Vec<(Vec<usize>, u64)> = shard
+            .read()
+            .unwrap()
+            .iter()
+            .filter(|(k, _)| k.as_slice() != protect)
+            .map(|(k, e)| (k.clone(), e.hits.load(Ordering::Relaxed)))
+            .collect();
+        if snapshot.len() < SHARD_CAP {
+            return; // a racing eviction already trimmed this shard
+        }
+        // Coldest first; ties by key for determinism.
+        snapshot.sort_by(|a, b| a.1.cmp(&b.1).then_with(|| a.0.cmp(&b.0)));
+        let keep = snapshot.len() / 2;
+        let cold = snapshot.len() - keep;
+        let mut evicted = 0u64;
+        {
+            let mut map = shard.write().unwrap();
+            for (key, _) in snapshot.iter().take(cold) {
+                if map.len() <= keep {
+                    break;
+                }
+                if map.remove(key).is_some() {
+                    evicted += 1;
+                }
+            }
+            for entry in map.values() {
+                let h = entry.hits.load(Ordering::Relaxed);
+                entry.hits.store(h / 2, Ordering::Relaxed);
+            }
+        }
+        if evicted > 0 {
+            self.cache_evictions.fetch_add(evicted, Ordering::Relaxed);
+        }
+    }
+
+    /// Decode-matrix cache entries currently memoized (all shards).
     pub fn decode_cache_len(&self) -> usize {
-        self.decode_cache.lock().unwrap().len()
+        self.decode_cache.iter().map(|s| s.read().unwrap().len()).sum()
     }
 
     /// Drain the eviction counter (returns evictions since the last call).
@@ -236,10 +328,9 @@ impl ApproxIferCode {
         self.cache_evictions.swap(0, Ordering::Relaxed)
     }
 
-    /// Decode: recover the `K` approximate predictions from coded
-    /// predictions of the available workers. `coded[m]` is worker
-    /// `avail[m]`'s prediction payload.
-    pub fn decode(&self, avail: &[usize], coded: &[&[f32]]) -> Vec<Vec<f32>> {
+    /// GEMM decode into a flat `K × d` output slice: `Ŷ = D·Ỹ` over the
+    /// gathered reply rows. `out` is fully overwritten.
+    fn decode_into(&self, avail: &[usize], coded: &[&[f32]], out: &mut [f32]) {
         assert_eq!(avail.len(), coded.len());
         assert!(!coded.is_empty(), "decode with no available workers");
         let d = coded[0].len();
@@ -249,20 +340,69 @@ impl ApproxIferCode {
         let k = self.params.k;
         let w = self.decode_matrix(avail);
         let f = avail.len();
-        let mut out = Vec::with_capacity(k);
-        for j in 0..k {
-            let mut acc = vec![0.0f32; d];
-            let row = &w[j * f..(j + 1) * f];
-            for (m, c) in coded.iter().enumerate() {
-                saxpy(&mut acc, row[m], c);
-            }
-            out.push(acc);
-        }
-        out
+        let a_rows: Vec<&[f32]> = w.chunks_exact(f).collect();
+        assert_eq!(a_rows.len(), k);
+        gemm_rows(&a_rows, coded, out);
+    }
+
+    /// Decode the `K` approximate predictions into a pooled block (the
+    /// serving hot path — the decode pool's output block is free-list
+    /// recycled once the last client-held row view drops). `coded[m]` is
+    /// worker `avail[m]`'s prediction payload.
+    pub fn decode_block(&self, avail: &[usize], coded: &[&[f32]], pool: &BlockPool) -> GroupBlock {
+        assert!(!coded.is_empty(), "decode with no available workers");
+        let d = coded[0].len();
+        let mut out = pool.take(self.params.k, d);
+        self.decode_into(avail, coded, out.as_mut_slice());
+        out.freeze()
+    }
+
+    /// Decode: recover the `K` approximate predictions from coded
+    /// predictions of the available workers (allocating convenience path
+    /// for the harness/offline evaluators; same GEMM kernel as
+    /// [`ApproxIferCode::decode_block`]).
+    pub fn decode(&self, avail: &[usize], coded: &[&[f32]]) -> Vec<Vec<f32>> {
+        assert!(!coded.is_empty(), "decode with no available workers");
+        let d = coded[0].len();
+        let k = self.params.k;
+        let mut flat = vec![0.0f32; k * d];
+        self.decode_into(avail, coded, &mut flat);
+        flat.chunks_exact(d).map(|r| r.to_vec()).collect()
+    }
+
+    /// Retained naive reference for the decode GEMM — bit-identical
+    /// contract with [`ApproxIferCode::decode_block`] /
+    /// [`ApproxIferCode::decode`] (conformance-tested). Never on a serving
+    /// path.
+    pub fn decode_reference(&self, avail: &[usize], coded: &[&[f32]]) -> Vec<Vec<f32>> {
+        assert_eq!(avail.len(), coded.len());
+        assert!(!coded.is_empty(), "decode with no available workers");
+        let d = coded[0].len();
+        let k = self.params.k;
+        let w = self.decode_matrix(avail);
+        let f = avail.len();
+        let a_rows: Vec<&[f32]> = w.chunks_exact(f).collect();
+        let mut flat = vec![0.0f32; k * d];
+        gemm_rows_naive(&a_rows, coded, &mut flat);
+        flat.chunks_exact(d).map(|r| r.to_vec()).collect()
+    }
+
+    /// Verification re-encode: `Z = W_F·Ŷ` — evaluate the decoded
+    /// predictions back at the given workers' nodes as one GEMM over the
+    /// gathered encoder rows. `out` is row-major `workers.len() × c` and
+    /// fully overwritten.
+    pub fn re_encode_rows(&self, workers: &[usize], predictions: &[&[f32]], out: &mut [f32]) {
+        let k = self.params.k;
+        assert_eq!(predictions.len(), k, "re-encode needs all {k} predictions");
+        let a_rows: Vec<&[f32]> =
+            workers.iter().map(|&i| &self.w_enc[i * k..(i + 1) * k]).collect();
+        gemm_rows(&a_rows, predictions, out);
     }
 }
 
-/// `acc += a * x` over f32 slices (autovectorizes; the host-side hot loop).
+/// `acc += a * x` over f32 slices (autovectorizes). Retained for the
+/// Tensor-path encoder and external callers; the flat data plane uses the
+/// blocked GEMM in [`super::linalg`] instead.
 #[inline]
 pub fn saxpy(acc: &mut [f32], a: f32, x: &[f32]) {
     debug_assert_eq!(acc.len(), x.len());
@@ -420,15 +560,44 @@ mod tests {
     }
 
     #[test]
-    fn encode_into_matches_encode() {
+    fn encode_block_matches_tensor_encode() {
         let code = ApproxIferCode::new(CodeParams::new(4, 2, 0));
         let queries = linear_payload(&[1.0, -0.5, 2.0, 0.25], 10);
         let coded = code.encode(&queries);
         let qrefs: Vec<&[f32]> = queries.iter().map(|q| q.data()).collect();
-        let mut out: Vec<Vec<f32>> = vec![Vec::new(); code.params().num_workers()];
-        code.encode_into(&qrefs, &mut out);
-        for (a, b) in coded.iter().zip(&out) {
-            assert_eq!(a.data(), &b[..]);
+        let block = GroupBlock::from_rows(&qrefs);
+        let mut out = BlockBuf::unpooled(code.params().num_workers(), 10);
+        code.encode_block(&block, &mut out);
+        let flat = out.freeze();
+        for (i, a) in coded.iter().enumerate() {
+            assert_eq!(a.data(), flat.row(i));
+        }
+    }
+
+    #[test]
+    fn gemm_paths_match_references_bitwise() {
+        let code = ApproxIferCode::new(CodeParams::new(5, 2, 0));
+        let d = 700; // spans two GEMM tiles
+        let qrefs: Vec<Vec<f32>> = (0..5)
+            .map(|j| (0..d).map(|t| ((j * 13 + t) as f32 * 0.003).sin()).collect())
+            .collect();
+        let rows: Vec<&[f32]> = qrefs.iter().map(|q| &q[..]).collect();
+        let block = GroupBlock::from_rows(&rows);
+        let nw = code.params().num_workers();
+        let mut fast = BlockBuf::unpooled(nw, d);
+        let mut slow = BlockBuf::unpooled(nw, d);
+        code.encode_block(&block, &mut fast);
+        code.encode_reference(&block, &mut slow);
+        for (a, b) in fast.as_slice().iter().zip(slow.as_slice()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let coded = fast.freeze();
+        let avail: Vec<usize> = (0..5).collect();
+        let payloads: Vec<&[f32]> = avail.iter().map(|&i| coded.row(i)).collect();
+        let fast_dec = code.decode(&avail, &payloads);
+        let ref_dec = code.decode_reference(&avail, &payloads);
+        for (a, b) in fast_dec.iter().flatten().zip(ref_dec.iter().flatten()) {
+            assert_eq!(a.to_bits(), b.to_bits());
         }
     }
 
@@ -438,7 +607,7 @@ mod tests {
         let avail = vec![0, 1, 3, 4];
         let a = code.decode_matrix(&avail);
         let b = code.decode_matrix(&avail);
-        assert!(std::sync::Arc::ptr_eq(&a, &b));
+        assert!(Arc::ptr_eq(&a, &b));
     }
 
     #[test]
@@ -453,7 +622,7 @@ mod tests {
         for _ in 0..64 {
             code.decode_matrix(&hot);
         }
-        // Churn: enough distinct pairs to overflow the 4096-entry cap.
+        // Churn: enough distinct pairs to overflow every shard's cap.
         let mut inserted = 1usize;
         'outer: for i in 0..nw {
             for j in (i + 1)..nw {
@@ -462,20 +631,75 @@ mod tests {
                 }
                 code.decode_matrix(&[i, j]);
                 inserted += 1;
-                if inserted > 4500 {
+                if inserted > 6000 {
                     break 'outer;
                 }
             }
         }
-        assert!(code.decode_cache_len() < 4096, "cache unbounded: {}", code.decode_cache_len());
-        assert!(code.take_cache_evictions() >= 2048, "eviction never fired");
+        // A brand-new key whose own insert trips the eviction pass must
+        // survive it (it starts at zero hits and would otherwise rank
+        // among the coldest — the pass protects the triggering key).
+        let fresh = vec![0usize, 2, 4];
+        let first = code.decode_matrix(&fresh);
+        let again = code.decode_matrix(&fresh);
+        assert!(
+            Arc::ptr_eq(&first, &again),
+            "fresh insert was evicted by the eviction pass it triggered"
+        );
+        assert!(
+            code.decode_cache_len() <= DECODE_CACHE_CAP,
+            "cache unbounded: {}",
+            code.decode_cache_len()
+        );
+        assert!(code.take_cache_evictions() >= 1000, "eviction never fired");
         assert_eq!(code.take_cache_evictions(), 0, "drain must reset the counter");
         // The hot entry survived the eviction pass (same memoized Arc).
         let again = code.decode_matrix(&hot);
         assert!(
-            std::sync::Arc::ptr_eq(&hot_mat, &again),
+            Arc::ptr_eq(&hot_mat, &again),
             "hot entry was evicted despite its hit count"
         );
+    }
+
+    #[test]
+    fn decode_matrix_concurrent_misses_converge_to_one_entry() {
+        // Hammer one key from many threads: whatever insert races happen,
+        // every caller must end with the same memoized Arc afterwards.
+        let code = Arc::new(ApproxIferCode::new(CodeParams::new(4, 3, 0)));
+        let avail = vec![0usize, 2, 4, 6];
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let code = code.clone();
+                let avail = avail.clone();
+                std::thread::spawn(move || code.decode_matrix(&avail))
+            })
+            .collect();
+        let mats: Vec<Arc<Vec<f32>>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        let canonical = code.decode_matrix(&avail);
+        for m in &mats {
+            assert_eq!(&**m, &*canonical, "racing inserts disagreed on the matrix");
+        }
+        assert!(Arc::ptr_eq(&code.decode_matrix(&avail), &canonical));
+    }
+
+    #[test]
+    fn re_encode_rows_is_the_encode_restricted_to_a_subset() {
+        let code = ApproxIferCode::new(CodeParams::new(3, 2, 0));
+        let d = 9;
+        let preds: Vec<Vec<f32>> = (0..3)
+            .map(|j| (0..d).map(|t| ((j * 5 + t) as f32 * 0.1).sin()).collect())
+            .collect();
+        let prefs: Vec<&[f32]> = preds.iter().map(|p| &p[..]).collect();
+        let block = GroupBlock::from_rows(&prefs);
+        let nw = code.params().num_workers();
+        let mut full = BlockBuf::unpooled(nw, d);
+        code.encode_block(&block, &mut full);
+        let subset = vec![1usize, 3];
+        let mut z = vec![0.0f32; subset.len() * d];
+        code.re_encode_rows(&subset, &prefs, &mut z);
+        for (m, &i) in subset.iter().enumerate() {
+            assert_eq!(&z[m * d..(m + 1) * d], &full.as_slice()[i * d..(i + 1) * d]);
+        }
     }
 
     #[test]

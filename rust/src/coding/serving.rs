@@ -7,18 +7,25 @@
 //! A scheme owns the *math* of redundancy; the coordinator owns the
 //! *mechanics* of serving. The split:
 //!
-//! * [`ServingScheme::encode_into`] — K query payloads → one task payload
-//!   per worker (the paper's eq. (4)–(8) for ApproxIFER; copies for
-//!   replication; queries + scaled sum for ParM; identity for uncoded).
+//! * [`ServingScheme::encode_into`] — a flat `K×d` query [`GroupBlock`] →
+//!   one contiguous `(workers)×d` coded block (the paper's eq. (4)–(8) as
+//!   one blocked GEMM for ApproxIFER; row copies for replication; queries +
+//!   scaled sum for ParM; identity for uncoded). The coordinator fans the
+//!   frozen block out as zero-copy [`RowView`]s.
 //! * [`ServingScheme::collect_policy`] — when a group's reply collection is
 //!   complete, expressed as a slot quota the reply router enforces
 //!   ([`CollectPolicy`]): "any fastest `wait_for`" for the coded schemes,
 //!   "`need` copies of every query" for replication.
-//! * [`ServingScheme::decode`] — collected replies → K predictions, with
-//!   Byzantine location (Algorithm 2) and the optional verification hook:
-//!   re-encode-residual checking for ApproxIFER, majority-agreement
-//!   checking for replication, `None` where no redundancy remains to
-//!   cross-check (uncoded, ParM).
+//! * [`ServingScheme::decode`] — collected reply views → K prediction
+//!   views, with Byzantine location (Algorithm 2) and the optional
+//!   verification hook: re-encode-residual checking for ApproxIFER,
+//!   majority-agreement checking for replication, `None` where no
+//!   redundancy remains to cross-check (uncoded, ParM). Schemes that must
+//!   materialize new payloads (ApproxIFER's GEMM decode, ParM's
+//!   reconstruction) write into blocks recycled through the caller's
+//!   [`BlockPool`]; schemes that pass replies through (replication,
+//!   uncoded, ParM's arrived slots) return `Arc` clones of the reply views
+//!   — no payload copies anywhere in decode.
 //! * Overhead/tolerance accounting ([`ServingScheme::overhead`],
 //!   [`ServingScheme::stragglers_tolerated`],
 //!   [`ServingScheme::byzantine_tolerated`]) — the paper's comparison
@@ -35,6 +42,8 @@ use anyhow::{bail, Result};
 
 use crate::metrics::ServingMetrics;
 
+use super::block::{BlockBuf, BlockPool, GroupBlock, RowView};
+use super::linalg::axpy;
 use super::locator::LocatorMethod;
 use super::replication::{majority_position, slice_eq, ReplicationParams};
 use super::scheme::{ApproxIferCode, CodeParams};
@@ -158,8 +167,10 @@ pub struct VerifyReport {
 
 /// Outcome of one scheme decode.
 pub struct SchemeDecode {
-    /// K prediction payloads, in query order.
-    pub predictions: Vec<Vec<f32>>,
+    /// K prediction payloads, in query order — `Arc`-shared views into
+    /// either the decode-output block (coded schemes) or the reply buffers
+    /// themselves (pass-through schemes). Cloning one is a refcount bump.
+    pub predictions: Vec<RowView>,
     /// Worker indices whose replies were consumed by the decode.
     pub decode_set: Vec<usize>,
     /// Worker indices flagged Byzantine. NOTE: with `E > 0` the ApproxIFER
@@ -189,29 +200,35 @@ pub struct SchemeDecode {
 ///
 /// # Examples
 ///
-/// Every scheme is driven through the same calls — encode a K-group, feed
-/// the collected replies back, read the decoded predictions:
+/// Every scheme is driven through the same calls — encode a K-group block,
+/// feed the collected reply views back, read the decoded predictions:
 ///
 /// ```
 /// use approxifer::coding::{
-///     ApproxIferCode, CodeParams, ServingScheme, VerifyPolicy,
+///     ApproxIferCode, BlockPool, CodeParams, GroupBlock, RowView,
+///     ServingScheme, VerifyPolicy,
 /// };
 /// use approxifer::metrics::ServingMetrics;
 ///
 /// let scheme = ApproxIferCode::new(CodeParams::new(4, 1, 0));
+/// let pool = BlockPool::new();
 /// let queries: Vec<Vec<f32>> =
 ///     (0..4).map(|j| vec![j as f32 * 0.1; 8]).collect();
 /// let qrefs: Vec<&[f32]> = queries.iter().map(|q| &q[..]).collect();
+/// let block = GroupBlock::from_rows(&qrefs);
 ///
-/// // K = 4 queries fan out to K + S = 5 workers.
-/// let mut coded = vec![Vec::new(); ServingScheme::num_workers(&scheme)];
-/// scheme.encode_into(&qrefs, &mut coded);
+/// // K = 4 queries fan out to K + S = 5 workers, zero-copy row views.
+/// let mut staged = pool.take(ServingScheme::num_workers(&scheme), 8);
+/// scheme.encode_into(&block, &mut staged);
+/// let coded = staged.freeze();
 ///
 /// // One worker straggles (S = 1): decode from the other four.
-/// let mut replies: Vec<Option<Vec<f32>>> = coded.into_iter().map(Some).collect();
+/// let mut replies: Vec<Option<RowView>> =
+///     (0..5).map(|i| Some(coded.row_view(i))).collect();
 /// replies[2] = None;
 /// let metrics = ServingMetrics::new();
-/// let out = ServingScheme::decode(&scheme, &replies, VerifyPolicy::off(), &metrics)?;
+/// let out =
+///     ServingScheme::decode(&scheme, &replies, VerifyPolicy::off(), &metrics, &pool)?;
 /// assert_eq!(out.predictions.len(), 4);
 ///
 /// // The adaptive control plane re-tunes the same K to a new (S, E):
@@ -250,19 +267,22 @@ pub trait ServingScheme: Send + Sync {
         CollectPolicy::fastest(self.num_workers(), self.num_workers())
     }
 
-    /// Encode a K-group into one payload per worker. `queries` has exactly
-    /// `group_size()` equal-length payloads; `out` has `num_workers()`
-    /// buffers which are cleared and refilled (steady-state path: no
-    /// allocation once buffers reach payload size).
-    fn encode_into(&self, queries: &[&[f32]], out: &mut [Vec<f32>]);
+    /// Encode a K-group into one contiguous coded block. `queries` is a
+    /// `group_size() × d` block; `out` is staged `num_workers() × d` (the
+    /// coordinator checks one out of its [`BlockPool`]) and must be
+    /// **fully overwritten** — recycled staging buffers still hold the
+    /// previous group's floats.
+    fn encode_into(&self, queries: &GroupBlock, out: &mut BlockBuf);
 
     /// Locate + decode (+ verify under `policy`) one collected group.
-    /// `replies[w]` is worker `w`'s payload, `None` if missing/errored.
+    /// `replies[w]` is worker `w`'s payload view, `None` if
+    /// missing/errored. `pool` recycles decode-output blocks.
     fn decode(
         &self,
-        replies: &[Option<Vec<f32>>],
+        replies: &[Option<RowView>],
         policy: VerifyPolicy,
         metrics: &ServingMetrics,
+        pool: &BlockPool,
     ) -> Result<SchemeDecode>;
 
     /// Re-tune the scheme to a new `(S, E)` at the **same** group size `K`,
@@ -329,20 +349,26 @@ impl ServingScheme for ApproxIferCode {
         }
     }
 
-    fn encode_into(&self, queries: &[&[f32]], out: &mut [Vec<f32>]) {
-        // The inherent SAXPY encoder (same name resolves to the inherent
-        // method, which takes precedence over the trait's).
-        ApproxIferCode::encode_into(self, queries, out);
+    fn encode_into(&self, queries: &GroupBlock, out: &mut BlockBuf) {
+        // The blocked-GEMM encoder (eq. (4)-(8) as X̃ = W·X).
+        self.encode_block(queries, out);
     }
 
     fn decode(
         &self,
-        replies: &[Option<Vec<f32>>],
+        replies: &[Option<RowView>],
         policy: VerifyPolicy,
         metrics: &ServingMetrics,
+        pool: &BlockPool,
     ) -> Result<SchemeDecode> {
-        let (predictions, decode_set, flagged, verify) =
-            verified_locate_and_decode(self, LocatorMethod::Pinned, replies, policy, metrics)?;
+        let (predictions, decode_set, flagged, verify) = verified_locate_and_decode(
+            self,
+            LocatorMethod::Pinned,
+            replies,
+            policy,
+            metrics,
+            pool,
+        )?;
         // Prevalence evidence for the adaptive controller: only measurable
         // against a decode verification vouched for.
         let confirmed_adversaries = match verify {
@@ -456,26 +482,27 @@ impl ServingScheme for Replication {
         }
     }
 
-    fn encode_into(&self, queries: &[&[f32]], out: &mut [Vec<f32>]) {
+    fn encode_into(&self, queries: &GroupBlock, out: &mut BlockBuf) {
         let p = self.params;
-        assert_eq!(queries.len(), p.k);
-        assert_eq!(out.len(), p.num_workers());
-        for (w, buf) in out.iter_mut().enumerate() {
+        assert_eq!(queries.rows(), p.k);
+        assert_eq!(out.rows(), p.num_workers());
+        assert_eq!(out.dim(), queries.dim());
+        for w in 0..p.num_workers() {
             let (q, _copy) = p.assignment_of(w);
-            buf.clear();
-            buf.extend_from_slice(queries[q]);
+            out.row_mut(w).copy_from_slice(queries.row(q));
         }
     }
 
     fn decode(
         &self,
-        replies: &[Option<Vec<f32>>],
+        replies: &[Option<RowView>],
         policy: VerifyPolicy,
         metrics: &ServingMetrics,
+        _pool: &BlockPool,
     ) -> Result<SchemeDecode> {
         let p = self.params;
         let t0 = std::time::Instant::now();
-        let mut predictions = Vec::with_capacity(p.k);
+        let mut predictions: Vec<RowView> = Vec::with_capacity(p.k);
         let mut decode_set = Vec::new();
         let mut flagged = Vec::new();
         // Worst disagreement fraction across queries (verification signal)
@@ -497,7 +524,8 @@ impl ServingScheme for Replication {
             }
             if self.need() == 1 {
                 // Stragglers-only: any copy serves (honest copies are
-                // bit-identical).
+                // bit-identical). Arc clone — the reply buffer *is* the
+                // prediction.
                 predictions.push(replies[workers[0]].clone().unwrap());
                 decode_set.push(workers[0]);
                 continue;
@@ -506,7 +534,7 @@ impl ServingScheme for Replication {
             let refs: Vec<&[f32]> =
                 workers.iter().map(|&w| replies[w].as_deref().unwrap()).collect();
             let (winner, votes) = majority_position(&refs);
-            predictions.push(refs[winner].to_vec());
+            predictions.push(replies[workers[winner]].clone().unwrap());
             let mut disagreeing = 0usize;
             for (i, &w) in workers.iter().enumerate() {
                 if slice_eq(refs[winner], refs[i]) {
@@ -613,24 +641,20 @@ impl ServingScheme for ParmProxy {
         CollectPolicy::fastest(self.k + 1, self.k)
     }
 
-    fn encode_into(&self, queries: &[&[f32]], out: &mut [Vec<f32>]) {
+    fn encode_into(&self, queries: &GroupBlock, out: &mut BlockBuf) {
         let k = self.k;
-        assert_eq!(queries.len(), k);
-        assert_eq!(out.len(), k + 1);
-        let d = queries[0].len();
-        for (i, buf) in out.iter_mut().take(k).enumerate() {
-            buf.clear();
-            buf.extend_from_slice(queries[i]);
+        assert_eq!(queries.rows(), k);
+        assert_eq!(out.rows(), k + 1);
+        assert_eq!(out.dim(), queries.dim());
+        for i in 0..k {
+            out.row_mut(i).copy_from_slice(queries.row(i));
         }
         // Parity input: (Σ X_i) / K — the proxy evaluates f at the scaled
-        // sum.
-        let parity = &mut out[k];
-        parity.clear();
-        parity.resize(d, 0.0);
-        for q in queries {
-            for (acc, &x) in parity.iter_mut().zip(*q) {
-                *acc += x;
-            }
+        // sum (shared axpy kernel; the fill overwrites recycled bytes).
+        let parity = out.row_mut(k);
+        parity.fill(0.0);
+        for i in 0..k {
+            axpy(parity, 1.0, queries.row(i));
         }
         for v in parity.iter_mut() {
             *v /= k as f32;
@@ -639,9 +663,10 @@ impl ServingScheme for ParmProxy {
 
     fn decode(
         &self,
-        replies: &[Option<Vec<f32>>],
+        replies: &[Option<RowView>],
         _policy: VerifyPolicy,
         metrics: &ServingMetrics,
+        pool: &BlockPool,
     ) -> Result<SchemeDecode> {
         let k = self.k;
         let t0 = std::time::Instant::now();
@@ -651,9 +676,10 @@ impl ServingScheme for ParmProxy {
         }
         let mut decode_set: Vec<usize> =
             (0..=k).filter(|&i| replies[i].is_some()).collect();
-        let mut predictions: Vec<Vec<f32>> = Vec::with_capacity(k);
+        let mut predictions: Vec<RowView> = Vec::with_capacity(k);
         if missing.is_empty() {
             // Every uncoded prediction arrived; the parity reply is unused.
+            // Predictions are the reply views themselves (zero-copy).
             for r in replies.iter().take(k) {
                 predictions.push(r.clone().unwrap());
             }
@@ -663,22 +689,27 @@ impl ServingScheme for ParmProxy {
             let Some(parity) = replies[k].as_deref() else {
                 bail!("ParM: prediction {lost} and the parity reply are both missing");
             };
-            // Reconstruct: f(X_lost) ≈ K·f_parity − Σ_{i≠lost} f(X_i).
-            let mut lost_pred: Vec<f32> = parity.iter().map(|&v| v * k as f32).collect();
-            for (i, r) in replies.iter().take(k).enumerate() {
-                if i == lost {
-                    continue;
+            // Reconstruct: f(X_lost) ≈ K·f_parity − Σ_{i≠lost} f(X_i) —
+            // the one materialized payload, written into a pooled block.
+            let mut staged = pool.take(1, parity.len());
+            {
+                let row = staged.row_mut(0);
+                for (dst, &v) in row.iter_mut().zip(parity) {
+                    *dst = v * k as f32;
                 }
-                let r = r.as_deref().unwrap();
-                for (acc, &x) in lost_pred.iter_mut().zip(r) {
-                    *acc -= x;
+                for (i, r) in replies.iter().take(k).enumerate() {
+                    if i == lost {
+                        continue;
+                    }
+                    axpy(row, -1.0, r.as_deref().unwrap());
                 }
             }
-            for i in 0..k {
+            let lost_pred = staged.freeze().row_view(0);
+            for (i, r) in replies.iter().take(k).enumerate() {
                 if i == lost {
                     predictions.push(lost_pred.clone());
                 } else {
-                    predictions.push(replies[i].clone().unwrap());
+                    predictions.push(r.clone().unwrap());
                 }
             }
         }
@@ -739,23 +770,24 @@ impl ServingScheme for Uncoded {
         CollectPolicy::per_slot((0..self.k).collect(), 1)
     }
 
-    fn encode_into(&self, queries: &[&[f32]], out: &mut [Vec<f32>]) {
-        assert_eq!(queries.len(), self.k);
-        assert_eq!(out.len(), self.k);
-        for (buf, q) in out.iter_mut().zip(queries) {
-            buf.clear();
-            buf.extend_from_slice(q);
+    fn encode_into(&self, queries: &GroupBlock, out: &mut BlockBuf) {
+        assert_eq!(queries.rows(), self.k);
+        assert_eq!(out.rows(), self.k);
+        assert_eq!(out.dim(), queries.dim());
+        for i in 0..self.k {
+            out.row_mut(i).copy_from_slice(queries.row(i));
         }
     }
 
     fn decode(
         &self,
-        replies: &[Option<Vec<f32>>],
+        replies: &[Option<RowView>],
         _policy: VerifyPolicy,
         metrics: &ServingMetrics,
+        _pool: &BlockPool,
     ) -> Result<SchemeDecode> {
         let t0 = std::time::Instant::now();
-        let mut predictions = Vec::with_capacity(self.k);
+        let mut predictions: Vec<RowView> = Vec::with_capacity(self.k);
         for (i, r) in replies.iter().take(self.k).enumerate() {
             match r {
                 Some(p) => predictions.push(p.clone()),
@@ -784,25 +816,25 @@ impl ServingScheme for Uncoded {
 /// The median (not the max) keys the scale to the honest signal level: up
 /// to `E` corrupted replies in the set cannot inflate the normalizer, so
 /// the relative residual grows without bound with the corruption magnitude
-/// instead of saturating at a geometry constant. All accumulation in f64.
+/// instead of saturating at a geometry constant. The re-encode itself is
+/// one GEMM `Z = W_F·Ŷ` over the flat buffers (the same micro-kernel as
+/// encode/decode); the max-residual reduction compares in f64.
 pub fn verify_residual(
     code: &ApproxIferCode,
     decode_set: &[usize],
-    replies: &[Option<Vec<f32>>],
-    predictions: &[Vec<f32>],
+    replies: &[Option<RowView>],
+    predictions: &[RowView],
 ) -> f64 {
     let scale = residual_scale(decode_set, replies);
-    let mut worst = 0.0f64;
-    for &i in decode_set {
-        let y = replies[i].as_deref().unwrap();
-        worst = worst.max(node_residual(code, i, y, predictions));
-    }
-    worst / (1.0 + scale)
+    node_residuals(code, decode_set, replies, predictions)
+        .into_iter()
+        .fold(0.0f64, f64::max)
+        / (1.0 + scale)
 }
 
 /// Median across `set` of each node's reply peak `max_t |Ỹ_i|` — the
 /// corruption-robust scale verification and per-node confirmation share.
-fn residual_scale(set: &[usize], replies: &[Option<Vec<f32>>]) -> f64 {
+fn residual_scale(set: &[usize], replies: &[Option<RowView>]) -> f64 {
     let mut node_peaks: Vec<f64> = set
         .iter()
         .map(|&i| {
@@ -817,17 +849,32 @@ fn residual_scale(set: &[usize], replies: &[Option<Vec<f32>>]) -> f64 {
     node_peaks.get(node_peaks.len() / 2).copied().unwrap_or(0.0)
 }
 
-/// Unnormalized re-encode residual of one worker's reply against the
-/// decoded predictions: `max_t |Σ_j ℓ_j(β_i)·Ŷ_j[t] − Ỹ_i[t]|`.
-fn node_residual(code: &ApproxIferCode, i: usize, y: &[f32], predictions: &[Vec<f32>]) -> f64 {
-    let k = code.params().k;
-    let row = &code.encode_matrix()[i * k..(i + 1) * k];
-    let mut worst = 0.0f64;
-    for (t, &yt) in y.iter().enumerate() {
-        let z: f64 = row.iter().zip(predictions).map(|(&wj, p)| wj as f64 * p[t] as f64).sum();
-        worst = worst.max((z - yt as f64).abs());
+/// Unnormalized per-node re-encode residuals for a worker subset: one GEMM
+/// `Z = W_set·Ŷ` and a per-row `max_t |Z_i[t] − Ỹ_i[t]|` reduction. Every
+/// `set` index must have a present reply.
+fn node_residuals(
+    code: &ApproxIferCode,
+    set: &[usize],
+    replies: &[Option<RowView>],
+    predictions: &[RowView],
+) -> Vec<f64> {
+    if set.is_empty() {
+        return Vec::new();
     }
-    worst
+    let pred_rows: Vec<&[f32]> = predictions.iter().map(|p| p.as_slice()).collect();
+    let c = pred_rows[0].len();
+    let mut z = vec![0.0f32; set.len() * c];
+    code.re_encode_rows(set, &pred_rows, &mut z);
+    set.iter()
+        .enumerate()
+        .map(|(m, &i)| {
+            let y = replies[i].as_deref().unwrap();
+            z[m * c..(m + 1) * c]
+                .iter()
+                .zip(y)
+                .fold(0.0f64, |worst, (&zt, &yt)| worst.max((zt as f64 - yt as f64).abs()))
+        })
+        .collect()
 }
 
 /// Of the locator's `flagged` workers, count those whose replies *actually*
@@ -843,20 +890,19 @@ pub fn confirm_flagged(
     code: &ApproxIferCode,
     flagged: &[usize],
     decode_set: &[usize],
-    replies: &[Option<Vec<f32>>],
-    predictions: &[Vec<f32>],
+    replies: &[Option<RowView>],
+    predictions: &[RowView],
     tol: f64,
 ) -> usize {
-    if flagged.is_empty() {
+    let present: Vec<usize> =
+        flagged.iter().copied().filter(|&i| replies[i].is_some()).collect();
+    if present.is_empty() {
         return 0;
     }
     let scale = residual_scale(decode_set, replies);
-    flagged
-        .iter()
-        .filter(|&&i| match replies[i].as_deref() {
-            Some(y) => node_residual(code, i, y, predictions) / (1.0 + scale) > tol,
-            None => false,
-        })
+    node_residuals(code, &present, replies, predictions)
+        .into_iter()
+        .filter(|r| r / (1.0 + scale) > tol)
         .count()
 }
 
@@ -877,11 +923,13 @@ pub fn confirm_flagged(
 pub fn verified_locate_and_decode(
     code: &ApproxIferCode,
     method: LocatorMethod,
-    replies: &[Option<Vec<f32>>],
+    replies: &[Option<RowView>],
     policy: VerifyPolicy,
     metrics: &ServingMetrics,
-) -> Result<(Vec<Vec<f32>>, Vec<usize>, Vec<usize>, Option<VerifyReport>)> {
-    let (predictions, decode_set, flagged) = locate_and_decode(code, method, replies, metrics)?;
+    pool: &BlockPool,
+) -> Result<(Vec<RowView>, Vec<usize>, Vec<usize>, Option<VerifyReport>)> {
+    let (predictions, decode_set, flagged) =
+        locate_and_decode(code, method, replies, metrics, pool)?;
     if !policy.enabled {
         return Ok((predictions, decode_set, flagged, None));
     }
@@ -914,7 +962,7 @@ pub fn verified_locate_and_decode(
         let avail: Vec<usize> = (0..replies.len()).filter(|&i| replies[i].is_some()).collect();
         let payloads: Vec<&[f32]> =
             avail.iter().map(|&i| replies[i].as_deref().unwrap()).collect();
-        let full = code.decode(&avail, &payloads);
+        let full = code.decode_block(&avail, &payloads, pool).row_views();
         let r_full = verify_residual(code, &avail, replies, &full);
         if r_full <= policy.tol {
             let report = VerifyReport { residual: r_full, passed: true, escalated: true };
@@ -930,7 +978,7 @@ pub fn verified_locate_and_decode(
     if can_relocate {
         let scratch = ServingMetrics::new();
         let (p2, d2, f2) =
-            locate_and_decode(code, LocatorMethod::Homogeneous, replies, &scratch)?;
+            locate_and_decode(code, LocatorMethod::Homogeneous, replies, &scratch, pool)?;
         let r2 = verify_residual(code, &d2, replies, &p2);
         if r2 <= policy.tol {
             let report = VerifyReport { residual: r2, passed: true, escalated: true };
@@ -950,14 +998,16 @@ pub fn verified_locate_and_decode(
 /// The locate + decode tail of the ApproxIFER pipeline, shared verbatim
 /// between the synchronous [`crate::coordinator::GroupPipeline`] and the
 /// concurrent [`crate::coordinator::Service`] decode pool: given the
-/// per-worker replies of one collected group, vote out up to `E` Byzantine
-/// replies (Algorithm 2) and Berrut-decode the rest (eq. (10)-(11)).
+/// per-worker reply views of one collected group, vote out up to `E`
+/// Byzantine replies (Algorithm 2) and Berrut-decode the rest
+/// (eq. (10)-(11)) into a pooled output block.
 pub fn locate_and_decode(
     code: &ApproxIferCode,
     method: LocatorMethod,
-    replies: &[Option<Vec<f32>>],
+    replies: &[Option<RowView>],
     metrics: &ServingMetrics,
-) -> Result<(Vec<Vec<f32>>, Vec<usize>, Vec<usize>)> {
+    pool: &BlockPool,
+) -> Result<(Vec<RowView>, Vec<usize>, Vec<usize>)> {
     let params = code.params();
     let avail: Vec<usize> = (0..replies.len()).filter(|&i| replies[i].is_some()).collect();
     if avail.is_empty() {
@@ -978,11 +1028,11 @@ pub fn locate_and_decode(
     }
     metrics.locate_latency.record(t0.elapsed().as_secs_f64());
 
-    // --- decode (eq. (10)-(11)) -----------------------------------------
+    // --- decode (eq. (10)-(11)): one GEMM into a recycled block ---------
     let t0 = std::time::Instant::now();
     let payloads: Vec<&[f32]> =
         decode_set.iter().map(|&i| replies[i].as_deref().unwrap()).collect();
-    let predictions = code.decode(&decode_set, &payloads);
+    let predictions = code.decode_block(&decode_set, &payloads, pool).row_views();
     metrics.decode_latency.record(t0.elapsed().as_secs_f64());
     Ok((predictions, decode_set, flagged_workers))
 }
@@ -998,11 +1048,22 @@ mod tests {
             .collect()
     }
 
-    fn encode(scheme: &dyn ServingScheme, queries: &[Vec<f32>]) -> Vec<Option<Vec<f32>>> {
+    fn encode(scheme: &dyn ServingScheme, queries: &[Vec<f32>]) -> Vec<Option<RowView>> {
         let qrefs: Vec<&[f32]> = queries.iter().map(|q| &q[..]).collect();
-        let mut out: Vec<Vec<f32>> = vec![Vec::new(); scheme.num_workers()];
-        scheme.encode_into(&qrefs, &mut out);
-        out.into_iter().map(Some).collect()
+        let block = GroupBlock::from_rows(&qrefs);
+        let mut out = BlockBuf::unpooled(scheme.num_workers(), queries[0].len());
+        scheme.encode_into(&block, &mut out);
+        let coded = out.freeze();
+        coded.row_views().into_iter().map(Some).collect()
+    }
+
+    /// Replace one reply with a perturbed copy (views are immutable).
+    fn perturb(replies: &mut [Option<RowView>], i: usize, delta: f32) {
+        let mut v = replies[i].as_deref().unwrap().to_vec();
+        for x in v.iter_mut() {
+            *x += delta;
+        }
+        replies[i] = Some(RowView::from_vec(v));
     }
 
     #[test]
@@ -1057,8 +1118,9 @@ mod tests {
         let queries = smooth_queries(4, 6);
         let replies = encode(&code, &queries);
         let m = ServingMetrics::new();
+        let pool = BlockPool::new();
         let out =
-            ServingScheme::decode(&code, &replies, VerifyPolicy::on(0.4), &m).unwrap();
+            ServingScheme::decode(&code, &replies, VerifyPolicy::on(0.4), &m, &pool).unwrap();
         let v = out.verify.expect("verification ran");
         assert!(v.passed, "honest group must verify (residual {})", v.residual);
         assert_eq!(out.flagged.len(), 1, "E=1 locator always flags one");
@@ -1070,12 +1132,11 @@ mod tests {
         let code = ApproxIferCode::new(CodeParams::new(4, 0, 1));
         let queries = smooth_queries(4, 6);
         let mut replies = encode(&code, &queries);
-        for v in replies[3].as_mut().unwrap().iter_mut() {
-            *v += 50.0;
-        }
+        perturb(&mut replies, 3, 50.0);
         let m = ServingMetrics::new();
+        let pool = BlockPool::new();
         let out =
-            ServingScheme::decode(&code, &replies, VerifyPolicy::on(0.4), &m).unwrap();
+            ServingScheme::decode(&code, &replies, VerifyPolicy::on(0.4), &m, &pool).unwrap();
         let v = out.verify.expect("verification ran");
         assert!(v.passed, "located corruption must verify out (residual {})", v.residual);
         assert!(out.flagged.contains(&3), "corrupted worker must be flagged");
@@ -1132,12 +1193,33 @@ mod tests {
         let lost = scheme.params().worker_for(1, 0);
         replies[lost] = None;
         let m = ServingMetrics::new();
-        let out = scheme.decode(&replies, VerifyPolicy::off(), &m).unwrap();
+        let pool = BlockPool::new();
+        let out = scheme.decode(&replies, VerifyPolicy::off(), &m, &pool).unwrap();
         assert_eq!(out.predictions.len(), 3);
         for (q, pred) in queries.iter().zip(&out.predictions) {
             assert_eq!(&q[..], &pred[..], "replication must be exact");
         }
         assert!(out.verify.is_none());
+    }
+
+    #[test]
+    fn replication_predictions_alias_the_reply_buffers() {
+        // Zero-copy contract: the served prediction IS the winning reply
+        // view, not a copy of it.
+        let scheme = Replication::new(2, 1, 0);
+        let queries = smooth_queries(2, 5);
+        let replies = encode(&scheme, &queries);
+        let m = ServingMetrics::new();
+        let pool = BlockPool::new();
+        let out = scheme.decode(&replies, VerifyPolicy::off(), &m, &pool).unwrap();
+        for (q, pred) in out.decode_set.iter().zip(&out.predictions) {
+            let reply = replies[*q].as_ref().unwrap();
+            assert_eq!(
+                reply.as_slice().as_ptr(),
+                pred.as_slice().as_ptr(),
+                "prediction copied instead of shared"
+            );
+        }
     }
 
     #[test]
@@ -1147,11 +1229,10 @@ mod tests {
         let mut replies = encode(&scheme, &queries);
         // Corrupt one copy of query 0.
         let bad = scheme.params().worker_for(0, 2);
-        for v in replies[bad].as_mut().unwrap().iter_mut() {
-            *v += 100.0;
-        }
+        perturb(&mut replies, bad, 100.0);
         let m = ServingMetrics::new();
-        let out = scheme.decode(&replies, VerifyPolicy::on(0.5), &m).unwrap();
+        let pool = BlockPool::new();
+        let out = scheme.decode(&replies, VerifyPolicy::on(0.5), &m, &pool).unwrap();
         assert_eq!(out.flagged, vec![bad]);
         assert_eq!(&out.predictions[0][..], &queries[0][..]);
         let v = out.verify.expect("verification ran");
@@ -1170,12 +1251,11 @@ mod tests {
         let mut replies = encode(&scheme, &queries);
         for c in 0..3 {
             let w = scheme.params().worker_for(0, c);
-            for v in replies[w].as_mut().unwrap().iter_mut() {
-                *v += 50.0 + c as f32;
-            }
+            perturb(&mut replies, w, 50.0 + c as f32);
         }
         let m = ServingMetrics::new();
-        let out = scheme.decode(&replies, VerifyPolicy::on(0.4), &m).unwrap();
+        let pool = BlockPool::new();
+        let out = scheme.decode(&replies, VerifyPolicy::on(0.4), &m, &pool).unwrap();
         assert_eq!(&out.predictions[0][..], &queries[0][..]);
         let v = out.verify.expect("verification ran");
         assert!(v.passed, "4-of-7 majority must verify (residual {})", v.residual);
@@ -1191,7 +1271,8 @@ mod tests {
         let mut replies = encode(&scheme, &queries);
         replies[2] = None; // lose uncoded prediction 2
         let m = ServingMetrics::new();
-        let out = scheme.decode(&replies, VerifyPolicy::off(), &m).unwrap();
+        let pool = BlockPool::new();
+        let out = scheme.decode(&replies, VerifyPolicy::off(), &m, &pool).unwrap();
         for (j, q) in queries.iter().enumerate() {
             for t in 0..6 {
                 assert!(
@@ -1213,7 +1294,8 @@ mod tests {
         replies[0] = None;
         replies[1] = None;
         let m = ServingMetrics::new();
-        assert!(scheme.decode(&replies, VerifyPolicy::off(), &m).is_err());
+        let pool = BlockPool::new();
+        assert!(scheme.decode(&replies, VerifyPolicy::off(), &m, &pool).is_err());
     }
 
     #[test]
@@ -1222,13 +1304,14 @@ mod tests {
         let queries = smooth_queries(3, 4);
         let replies = encode(&scheme, &queries);
         let m = ServingMetrics::new();
-        let out = scheme.decode(&replies, VerifyPolicy::off(), &m).unwrap();
+        let pool = BlockPool::new();
+        let out = scheme.decode(&replies, VerifyPolicy::off(), &m, &pool).unwrap();
         for (q, pred) in queries.iter().zip(&out.predictions) {
             assert_eq!(&q[..], &pred[..]);
         }
         let mut broken = encode(&scheme, &queries);
         broken[1] = None;
-        assert!(scheme.decode(&broken, VerifyPolicy::off(), &m).is_err());
+        assert!(scheme.decode(&broken, VerifyPolicy::off(), &m, &pool).is_err());
     }
 
     #[test]
@@ -1238,7 +1321,9 @@ mod tests {
         let mut replies = encode(&code, &queries);
         replies[2] = None; // one straggler within S=1
         let m = ServingMetrics::new();
-        let out = ServingScheme::decode(&code, &replies, VerifyPolicy::off(), &m).unwrap();
+        let pool = BlockPool::new();
+        let out =
+            ServingScheme::decode(&code, &replies, VerifyPolicy::off(), &m, &pool).unwrap();
         assert_eq!(out.predictions.len(), 4);
         assert!(!out.decode_set.contains(&2));
         for (j, q) in queries.iter().enumerate() {
@@ -1251,5 +1336,26 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn decode_output_blocks_recycle_through_the_pool() {
+        // The decode pool's output block goes back to the free list once
+        // the last prediction view drops — steady-state decode allocates
+        // nothing.
+        let code = ApproxIferCode::new(CodeParams::new(3, 1, 0));
+        let queries = smooth_queries(3, 6);
+        let replies = encode(&code, &queries);
+        let m = ServingMetrics::new();
+        let pool = BlockPool::new();
+        let out =
+            ServingScheme::decode(&code, &replies, VerifyPolicy::off(), &m, &pool).unwrap();
+        assert_eq!(pool.free_buffers(), 0, "views still pin the block");
+        drop(out);
+        assert_eq!(pool.free_buffers(), 1, "retired block must recycle");
+        let out2 =
+            ServingScheme::decode(&code, &replies, VerifyPolicy::off(), &m, &pool).unwrap();
+        assert_eq!(pool.reused(), 1, "second decode must reuse the buffer");
+        drop(out2);
     }
 }

@@ -13,7 +13,8 @@ pub mod pipeline;
 pub mod service;
 
 pub use crate::coding::{
-    locate_and_decode, verified_locate_and_decode, verify_residual, VerifyPolicy, VerifyReport,
+    locate_and_decode, verified_locate_and_decode, verify_residual, BlockPool, GroupBlock,
+    RowView, VerifyPolicy, VerifyReport,
 };
 pub use adaptive::{AdaptiveConfig, AdaptiveController, GroupObservation, Reconfigure};
 pub use pipeline::{FaultPlan, GroupOutcome, GroupPipeline};

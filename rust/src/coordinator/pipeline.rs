@@ -6,7 +6,9 @@
 //! experiment harness and the examples; the online
 //! [`crate::coordinator::service::Service`] shares the same
 //! locate/decode/verify tail through the ApproxIFER
-//! [`crate::coding::ServingScheme`] implementation.
+//! [`crate::coding::ServingScheme`] implementation — and, since the
+//! flat-buffer data plane, the same [`crate::coding::BlockPool`]-staged
+//! encode and zero-copy [`crate::coding::RowView`] fan-out.
 
 use std::collections::HashMap;
 use std::time::{Duration, Instant};
@@ -14,8 +16,8 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Result};
 
 use crate::coding::{
-    verified_locate_and_decode, ApproxIferCode, CodeParams, LocatorMethod, VerifyPolicy,
-    VerifyReport,
+    verified_locate_and_decode, ApproxIferCode, BlockPool, CodeParams, LocatorMethod, RowView,
+    VerifyPolicy, VerifyReport,
 };
 use crate::metrics::ServingMetrics;
 use crate::workers::{ByzantineMode, WorkerPool, WorkerTask};
@@ -40,8 +42,8 @@ impl FaultPlan {
 
 /// Outcome of one group inference.
 pub struct GroupOutcome {
-    /// K decoded prediction payloads.
-    pub predictions: Vec<Vec<f32>>,
+    /// K decoded prediction payloads (`Arc`-shared row views).
+    pub predictions: Vec<RowView>,
     /// Worker indices whose replies were used for decoding.
     pub decode_set: Vec<usize>,
     /// Worker indices flagged Byzantine (positions are worker ids).
@@ -64,6 +66,9 @@ pub struct GroupPipeline {
     code: ApproxIferCode,
     method: LocatorMethod,
     verify: VerifyPolicy,
+    /// Query/coded/decode blocks are staged here and free-list recycled
+    /// across groups (steady state: no payload allocation per group).
+    blocks: BlockPool,
     /// Reply-wait timeout (a straggled worker past this is treated as lost).
     pub timeout: Duration,
     group_counter: u64,
@@ -77,6 +82,7 @@ impl GroupPipeline {
             code: ApproxIferCode::new(params),
             method: LocatorMethod::Pinned,
             verify: VerifyPolicy::off(),
+            blocks: BlockPool::new(),
             timeout: Duration::from_secs(30),
             group_counter: 0,
             stale: HashMap::new(),
@@ -122,19 +128,33 @@ impl GroupPipeline {
         self.group_counter += 1;
         let group = self.group_counter;
 
-        // --- encode (eq. (4)-(8): one SAXPY pass per worker) -------------
+        // --- stage the query block + encode (eq. (4)-(8), one GEMM) ------
         let t0 = Instant::now();
         let d = queries[0].len();
-        let mut coded: Vec<Vec<f32>> = vec![vec![0.0; d]; nw];
-        self.code.encode_into(queries, &mut coded);
+        if d == 0 {
+            // Mirror the service batcher: a zero-length payload cannot
+            // stage a block — error, don't panic in BlockPool::take.
+            bail!("group {group}: empty query payloads");
+        }
+        let mut staged = self.blocks.take(params.k, d);
+        for (j, q) in queries.iter().enumerate() {
+            if q.len() != d {
+                bail!("group queries have inconsistent payload lengths");
+            }
+            staged.row_mut(j).copy_from_slice(q);
+        }
+        let query_block = staged.freeze();
+        let mut coded_buf = self.blocks.take(nw, d);
+        self.code.encode_block(&query_block, &mut coded_buf);
+        let coded = coded_buf.freeze();
         metrics.encode_latency.record(t0.elapsed().as_secs_f64());
 
-        // --- fan out -------------------------------------------------------
+        // --- fan out (zero-copy row views) --------------------------------
         metrics.groups_dispatched.inc();
-        for (i, payload) in coded.into_iter().enumerate() {
+        for i in 0..nw {
             let task = WorkerTask {
                 group,
-                payload,
+                payload: coded.row_view(i),
                 extra_delay: if plan.stragglers.contains(&i) {
                     plan.straggler_delay
                 } else {
@@ -144,10 +164,11 @@ impl GroupPipeline {
             };
             pool.send(i, task)?;
         }
+        drop(coded); // workers hold the row views; retire the block handle
 
         // --- collect the fastest wait_for replies ---------------------------
         let wait_for = params.wait_for().min(nw);
-        let mut replies: Vec<Option<Vec<f32>>> = vec![None; nw];
+        let mut replies: Vec<Option<RowView>> = vec![None; nw];
         let mut got = 0usize;
         let mut errors = 0usize;
         let deadline = Instant::now() + self.timeout;
@@ -188,8 +209,14 @@ impl GroupPipeline {
                 }
             }
         }
-        let (predictions, decode_set, flagged, verify) =
-            verified_locate_and_decode(&self.code, self.method, &replies, self.verify, metrics)?;
+        let (predictions, decode_set, flagged, verify) = verified_locate_and_decode(
+            &self.code,
+            self.method,
+            &replies,
+            self.verify,
+            metrics,
+            &self.blocks,
+        )?;
         metrics.groups_decoded.inc();
         let latency = t_group.elapsed();
         metrics.group_latency.record(latency.as_secs_f64());
@@ -200,7 +227,7 @@ impl GroupPipeline {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coding::verify_residual;
+    use crate::coding::{verify_residual, BlockBuf, GroupBlock};
     use crate::workers::{InferenceEngine, LinearMockEngine, WorkerPool, WorkerSpec};
     use std::sync::Arc;
 
@@ -220,6 +247,16 @@ mod tests {
         (0..k)
             .map(|j| (0..d).map(|t| ((j as f32) * 0.2 + (t as f32) * 0.01).sin()).collect())
             .collect()
+    }
+
+    /// Encode a group through the flat path and return per-worker reply
+    /// views (the shape `verified_locate_and_decode` consumes).
+    fn encode_views(code: &ApproxIferCode, queries: &[Vec<f32>]) -> Vec<Option<RowView>> {
+        let qrefs: Vec<&[f32]> = queries.iter().map(|q| &q[..]).collect();
+        let block = GroupBlock::from_rows(&qrefs);
+        let mut out = BlockBuf::unpooled(code.params().num_workers(), queries[0].len());
+        code.encode_block(&block, &mut out);
+        out.freeze().row_views().into_iter().map(Some).collect()
     }
 
     #[test]
@@ -289,6 +326,29 @@ mod tests {
     }
 
     #[test]
+    fn pipeline_blocks_recycle_across_groups() {
+        // Steady state: after the first group retires its blocks, later
+        // groups reuse them instead of allocating fresh payload buffers.
+        let params = CodeParams::new(3, 1, 0);
+        let pool = mk_pool(params, 8, 3);
+        let mut pipe = GroupPipeline::new(params);
+        let metrics = ServingMetrics::new();
+        let queries = smooth_queries(3, 8);
+        let qrefs: Vec<&[f32]> = queries.iter().map(|q| &q[..]).collect();
+        let out1 = pipe.infer_group(&pool, &qrefs, &FaultPlan::none(), &metrics).unwrap();
+        drop(out1); // retire the prediction views so the decode block recycles
+        let reused_before = pipe.blocks.reused();
+        let out2 = pipe.infer_group(&pool, &qrefs, &FaultPlan::none(), &metrics).unwrap();
+        assert!(
+            pipe.blocks.reused() > reused_before,
+            "second group must reuse retired buffers (reused={})",
+            pipe.blocks.reused()
+        );
+        drop(out2);
+        pool.shutdown();
+    }
+
+    #[test]
     fn verification_passes_on_honest_and_located_byzantine_groups() {
         let params = CodeParams::new(4, 0, 1);
         let (d, c) = (10, 6);
@@ -323,25 +383,25 @@ mod tests {
         // must catch the inconsistency.
         let params = CodeParams::new(3, 0, 1);
         let code = ApproxIferCode::new(params);
-        let nw = params.num_workers();
         let d = 5;
         let queries: Vec<Vec<f32>> = smooth_queries(3, d);
-        let qrefs: Vec<&[f32]> = queries.iter().map(|q| &q[..]).collect();
-        let mut coded: Vec<Vec<f32>> = vec![vec![0.0; d]; nw];
-        code.encode_into(&qrefs, &mut coded);
-        let mut replies: Vec<Option<Vec<f32>>> = coded.into_iter().map(Some).collect();
+        let mut replies = encode_views(&code, &queries);
         for &w in &[1usize, 4] {
             let mode = ByzantineMode::Colluding { pact: 5, scale: 30.0 };
             let mut rng = crate::util::rng::Rng::new(9);
-            mode.corrupt(1, replies[w].as_mut().unwrap(), &mut rng);
+            let mut v = replies[w].as_deref().unwrap().to_vec();
+            mode.corrupt(1, &mut v, &mut rng);
+            replies[w] = Some(RowView::from_vec(v));
         }
         let metrics = ServingMetrics::new();
+        let blocks = BlockPool::new();
         let (_p, _ds, _fl, report) = verified_locate_and_decode(
             &code,
             LocatorMethod::Pinned,
             &replies,
             VerifyPolicy::on(0.4),
             &metrics,
+            &blocks,
         )
         .unwrap();
         let report = report.expect("verification ran");
@@ -359,14 +419,12 @@ mod tests {
         let code = ApproxIferCode::new(params);
         let d = 4;
         let queries: Vec<Vec<f32>> = smooth_queries(5, d);
-        let qrefs: Vec<&[f32]> = queries.iter().map(|q| &q[..]).collect();
-        let mut coded: Vec<Vec<f32>> = vec![vec![0.0; d]; params.num_workers()];
-        code.encode_into(&qrefs, &mut coded);
-        let replies: Vec<Option<Vec<f32>>> = coded.into_iter().map(Some).collect();
+        let replies = encode_views(&code, &queries);
         let decode_set: Vec<usize> = (0..params.num_workers()).collect();
         let payloads: Vec<&[f32]> =
-            decode_set.iter().map(|&i| replies[i].as_deref().unwrap()).collect();
-        let predictions = code.decode(&decode_set, &payloads);
+            decode_set.iter().map(|i| replies[*i].as_deref().unwrap()).collect();
+        let blocks = BlockPool::new();
+        let predictions = code.decode_block(&decode_set, &payloads, &blocks).row_views();
         let r = verify_residual(&code, &decode_set, &replies, &predictions);
         assert!(r < 0.15, "self-consistent residual too large: {r}");
     }

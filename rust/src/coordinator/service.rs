@@ -24,10 +24,15 @@
 //! Pipeline stages, each overlapping the others:
 //!
 //! * **Batcher** (this module's coordinator thread) — accumulates queries,
-//!   encodes a ready group via [`ServingScheme::encode_into`] and fans it
-//!   out to the worker pool, then immediately starts on the next group. A
-//!   counting gate bounds the number of dispatched-but-undecoded groups at
-//!   [`ServiceBuilder::max_inflight`].
+//!   stages them into a contiguous [`GroupBlock`] from the service's
+//!   recycling [`BlockPool`], encodes via [`ServingScheme::encode_into`]
+//!   (one blocked GEMM for ApproxIFER) and fans the frozen coded block out
+//!   to the worker pool as zero-copy [`RowView`]s, then immediately starts
+//!   on the next group. A counting gate bounds the number of
+//!   dispatched-but-undecoded groups at [`ServiceBuilder::max_inflight`].
+//!   Retired blocks (group decoded, views dropped) return to the pool's
+//!   free list instead of being freed — steady-state serving allocates no
+//!   payload buffers.
 //! * **Reply router** ([`crate::workers::ReplyRouter`]) — demultiplexes the
 //!   pool's shared reply stream per group under the scheme's
 //!   [`crate::coding::CollectPolicy`]; the moment a group's slot quotas are
@@ -75,7 +80,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
-use crate::coding::{CollectPolicy, ServingScheme, VerifyPolicy};
+use crate::coding::{BlockPool, CollectPolicy, GroupBlock, RowView, ServingScheme, VerifyPolicy};
 use crate::metrics::ServingMetrics;
 use crate::sim::faults::FaultProfile;
 use crate::workers::{
@@ -355,13 +360,16 @@ impl ServiceBuilder {
 }
 
 /// Resolves to the decoded prediction payload for one submitted query.
+/// The payload is an `Arc`-shared [`RowView`] into the group's decode
+/// output (or, for pass-through schemes, the worker's reply buffer) —
+/// derefs to `[f32]`, no copy is made on delivery.
 pub struct PredictionHandle {
-    rx: Receiver<Result<Vec<f32>, String>>,
+    rx: Receiver<Result<RowView, String>>,
 }
 
 impl PredictionHandle {
     /// Block until the prediction is ready.
-    pub fn wait(self) -> Result<Vec<f32>> {
+    pub fn wait(self) -> Result<RowView> {
         self.rx
             .recv()
             .map_err(|_| anyhow::anyhow!("service shut down"))?
@@ -376,7 +384,7 @@ impl PredictionHandle {
     /// clock reading taken at dispatch, and the router fires at most one
     /// of them per group — so a timeout here only means this client
     /// stopped waiting, not that the group's fate changed.
-    pub fn wait_timeout(self, timeout: Duration) -> Result<Vec<f32>> {
+    pub fn wait_timeout(self, timeout: Duration) -> Result<RowView> {
         self.rx
             .recv_timeout(timeout)
             .map_err(|_| anyhow::anyhow!("prediction timed out"))?
@@ -387,14 +395,14 @@ impl PredictionHandle {
 /// Where one query's answer goes.
 enum ReplySink {
     /// Oneshot channel backing a [`PredictionHandle`].
-    Channel(Sender<Result<Vec<f32>, String>>),
+    Channel(Sender<Result<RowView, String>>),
     /// Shared channel with a caller-chosen id (TCP front-end: responses
     /// must carry their request id because they complete out of order).
-    Tagged { id: u64, tx: Sender<(u64, Result<Vec<f32>, String>)> },
+    Tagged { id: u64, tx: Sender<(u64, Result<RowView, String>)> },
 }
 
 impl ReplySink {
-    fn send(&self, result: Result<Vec<f32>, String>) {
+    fn send(&self, result: Result<RowView, String>) {
         match self {
             ReplySink::Channel(tx) => {
                 let _ = tx.send(result);
@@ -412,11 +420,11 @@ struct Submission {
 }
 
 /// A group sent back around the loop after failed decode verification:
-/// same sinks and original payloads, re-encoded and re-fanned-out under a
-/// fresh group id.
+/// same sinks and the `Arc`-shared query block (no payload clone),
+/// re-encoded and re-fanned-out under a fresh group id.
 struct Redispatch {
     sinks: Vec<ReplySink>,
-    queries: Vec<Vec<f32>>,
+    queries: GroupBlock,
     retries: u32,
     started: Instant,
 }
@@ -480,7 +488,7 @@ impl Service {
         &self,
         id: u64,
         payload: Vec<f32>,
-        tx: Sender<(u64, Result<Vec<f32>, String>)>,
+        tx: Sender<(u64, Result<RowView, String>)>,
     ) {
         self.metrics.queries_received.inc();
         let sink = ReplySink::Tagged { id, tx };
@@ -556,13 +564,15 @@ impl InflightGate {
     }
 }
 
-/// Per-group context held between dispatch and decode. Retains the original
-/// query payloads so a verification-failed group can be re-encoded and
-/// redispatched, and the scheme that encoded the group so it decodes
-/// consistently even if a reconfigure epoch lands while it is in flight.
+/// Per-group context held between dispatch and decode. Retains the
+/// `Arc`-shared query block so a verification-failed group can be
+/// re-encoded and redispatched without copying payloads, and the scheme
+/// that encoded the group so it decodes consistently even if a reconfigure
+/// epoch lands while it is in flight. Dropping the ctx retires the block
+/// back to the batcher's [`BlockPool`].
 struct GroupCtx {
     sinks: Vec<ReplySink>,
-    queries: Vec<Vec<f32>>,
+    queries: GroupBlock,
     scheme: Arc<dyn ServingScheme>,
     started: Instant,
     retries: u32,
@@ -626,6 +636,9 @@ struct Dispatcher {
     tuning: Tuning,
     ctxs: CtxMap,
     gate: Arc<InflightGate>,
+    /// Query/coded staging buffers, free-list recycled at group retirement
+    /// (shared with the decode pool, whose output blocks recycle here too).
+    blocks: BlockPool,
     decode_tx: Sender<CollectedGroup>,
     metrics: Arc<ServingMetrics>,
     /// Synced on every applied epoch so manual [`Service::reconfigure`]
@@ -636,31 +649,55 @@ struct Dispatcher {
 }
 
 impl Dispatcher {
-    /// Flush the pending partial group: split submissions into sinks +
-    /// payloads and dispatch.
+    /// Flush the pending partial group: split submissions into sinks and
+    /// stage their payloads into one contiguous query block (padding a
+    /// partial group by repeating the last query — padded slots'
+    /// predictions are discarded), then dispatch.
     fn flush(&mut self, pending: &mut Vec<Submission>) {
         if pending.is_empty() {
             return;
         }
         let submissions: Vec<Submission> = pending.drain(..).collect();
-        let mut sinks = Vec::with_capacity(submissions.len());
-        let mut queries = Vec::with_capacity(submissions.len());
-        for s in submissions {
-            sinks.push(s.reply);
-            queries.push(s.payload);
+        let k = self.scheme.group_size();
+        let real = submissions.len();
+        let d = submissions[0].payload.len();
+        if d == 0 {
+            // A zero-length payload cannot stage a block; answer instead of
+            // panicking the batcher (the TCP front-end never lets one in).
+            for s in submissions {
+                s.reply.send(Err("empty query payload".into()));
+            }
+            return;
         }
-        self.dispatch(sinks, queries, Instant::now(), 0);
+        let mut sinks = Vec::with_capacity(real);
+        let mut staged = self.blocks.take(k, d);
+        for (j, s) in submissions.into_iter().enumerate() {
+            // Defensive length normalization: the TCP front-end validates
+            // payload sizes, but `Service::submit` is public — a short or
+            // long payload is truncated/zero-padded into its row rather
+            // than corrupting a neighbor (recycled rows must be fully
+            // overwritten).
+            let row = staged.row_mut(j);
+            let n = s.payload.len().min(d);
+            row[..n].copy_from_slice(&s.payload[..n]);
+            row[n..].fill(0.0);
+            sinks.push(s.reply);
+        }
+        for j in real..k {
+            let (done, rest) = staged.as_mut_slice().split_at_mut(j * d);
+            rest[..d].copy_from_slice(&done[(real - 1) * d..real * d]);
+        }
+        self.dispatch(sinks, staged.freeze(), Instant::now(), 0);
     }
 
-    /// Encode, register and fan out one (possibly partial) group: pad by
-    /// repeating the last query — padded slots' predictions are discarded.
-    /// Blocks while `max_inflight` groups are already out. Also the
-    /// redispatch entry point (`retries > 0`): same sinks and payloads
-    /// under a new group id.
+    /// Encode, register and fan out one staged group block. Blocks while
+    /// `max_inflight` groups are already out. Also the redispatch entry
+    /// point (`retries > 0`): same sinks and the same `Arc`-shared query
+    /// block under a new group id.
     fn dispatch(
         &mut self,
         sinks: Vec<ReplySink>,
-        queries: Vec<Vec<f32>>,
+        queries: GroupBlock,
         started: Instant,
         retries: u32,
     ) {
@@ -668,18 +705,13 @@ impl Dispatcher {
         self.group_counter += 1;
         let group = self.group_counter;
         let scheme = self.scheme.clone();
-        let k = scheme.group_size();
         let nw = scheme.num_workers();
-        let real = queries.len();
-        let mut payloads: Vec<&[f32]> = queries.iter().map(|q| &q[..]).collect();
-        while payloads.len() < k {
-            payloads.push(&queries[real - 1]);
-        }
 
-        // --- encode (scheme-specific) -----------------------------------
+        // --- encode (scheme-specific, into a pooled coded block) ---------
         let t0 = Instant::now();
-        let mut coded: Vec<Vec<f32>> = vec![Vec::new(); nw];
-        scheme.encode_into(&payloads, &mut coded);
+        let mut staged = self.blocks.take(nw, queries.dim());
+        scheme.encode_into(&queries, &mut staged);
+        let coded = staged.freeze();
         self.metrics.encode_latency.record(t0.elapsed().as_secs_f64());
 
         // Exact per-group fault plan (experiments; fleet-wide behavior
@@ -691,7 +723,7 @@ impl Dispatcher {
         };
 
         // Register reply routing *before* fan-out: replies may beat us
-        // back.
+        // back. The ctx keeps the query block Arc for redispatch.
         self.ctxs
             .lock()
             .unwrap()
@@ -711,11 +743,12 @@ impl Dispatcher {
         );
         self.metrics.groups_dispatched.inc();
 
-        // --- fan out ------------------------------------------------------
-        for (i, payload) in coded.into_iter().enumerate() {
+        // --- fan out (zero-copy: each task holds a row view of the one
+        // coded block; the block recycles once the workers are done) ------
+        for i in 0..nw {
             let task = WorkerTask {
                 group,
-                payload,
+                payload: coded.row_view(i),
                 extra_delay: if plan.stragglers.contains(&i) {
                     plan.straggler_delay
                 } else {
@@ -827,6 +860,9 @@ fn batcher_loop(
     let router = pool.start_router(metrics.clone());
     let ctxs: CtxMap = Arc::new(Mutex::new(HashMap::new()));
     let gate = Arc::new(InflightGate::new());
+    // One pool for the whole data plane: query blocks, coded blocks and
+    // decode-output blocks all recycle through the same free list.
+    let blocks = BlockPool::new();
     let (decode_tx, decode_rx) = channel::<CollectedGroup>();
     let decode_rx = Arc::new(Mutex::new(decode_rx));
     // The adaptive controller starts at — and is bounded by — the
@@ -852,6 +888,7 @@ fn batcher_loop(
             verify: tuning.verify,
             slo: tuning.slo,
             controller: controller.clone(),
+            blocks: blocks.clone(),
         };
         let handle = std::thread::Builder::new()
             .name(format!("decode-{t}"))
@@ -872,6 +909,7 @@ fn batcher_loop(
         tuning,
         ctxs,
         gate,
+        blocks,
         decode_tx,
         metrics,
         controller,
@@ -959,6 +997,9 @@ struct DecodeEnv {
     verify: VerifyPolicy,
     slo: Option<Duration>,
     controller: Option<Arc<Mutex<AdaptiveController>>>,
+    /// Decode-output blocks are taken from (and retire back to) the
+    /// service's shared buffer pool.
+    blocks: BlockPool,
 }
 
 impl DecodeEnv {
@@ -1008,7 +1049,7 @@ fn decode_loop(
             continue;
         };
         let result = if collected.complete {
-            ctx.scheme.decode(&collected.replies, env.verify, &metrics)
+            ctx.scheme.decode(&collected.replies, env.verify, &metrics, &env.blocks)
         } else {
             // Mirror the router's two incomplete outcomes: deadline expiry
             // vs fail-fast when worker errors made the quota unreachable.

@@ -258,7 +258,7 @@ pub fn scheme_accuracy(
     for (i, h) in handles.into_iter().enumerate() {
         let Ok(pred) = h.wait() else { continue };
         let c = pred.len();
-        let t = Tensor::from_vec(&[c], pred);
+        let t = Tensor::from_vec(&[c], pred.to_vec());
         if t.argmax() as i32 == testset.labels[i] {
             correct += 1;
             slot_correct[i % k] += 1;

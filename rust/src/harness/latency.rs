@@ -196,15 +196,18 @@ fn run_trace(
                 .collect();
             let t0 = Instant::now();
             let handles: Vec<_> = queries.iter().map(|q| svc.submit(q.clone())).collect();
-            let preds: Vec<Result<Vec<f32>>> =
+            let preds: Vec<Result<crate::coordinator::RowView>> =
                 handles.into_iter().map(|h| h.wait_timeout(Duration::from_secs(30))).collect();
             latencies.push(t0.elapsed().as_secs_f64());
             for (q, p) in queries.iter().zip(&preds) {
                 total += 1;
                 if let Ok(p) = p {
                     let want = engine.infer1(q)?;
-                    let err =
-                        want.iter().zip(p).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+                    let err = want
+                        .iter()
+                        .zip(p.iter())
+                        .map(|(a, b)| (a - b).abs())
+                        .fold(0.0f32, f32::max);
                     if err < 0.25 {
                         correct += 1;
                     }

@@ -35,8 +35,15 @@
 //!   ladder (full-set decode → homogeneous locator → group redispatch →
 //!   degraded delivery) and shared [`crate::metrics::ServingMetrics`] — so
 //!   every paper comparison measures redundancy math, not coordinator
-//!   differences. On top of the engine sits the **adaptive redundancy
-//!   control plane** ([`crate::coordinator::adaptive`]): online estimators
+//!   differences. Underneath runs a **flat-buffer, zero-copy data plane**
+//!   ([`crate::coding::block`]): each group's payloads live in contiguous
+//!   pool-recycled [`crate::coding::GroupBlock`]s, the codec hot loops are
+//!   cache-blocked GEMMs over them ([`crate::coding::linalg`],
+//!   bit-identical to the retained naive reference), and worker tasks,
+//!   replies and predictions travel as `Arc`-shared
+//!   [`crate::coding::RowView`]s all the way to the TCP serializer. On
+//!   top of the engine sits the **adaptive redundancy control plane**
+//!   ([`crate::coordinator::adaptive`]): online estimators
 //!   of straggler/Byzantine prevalence fed by the decode pool issue
 //!   `Reconfigure { s, e }` epochs that re-tune the live scheme — with
 //!   zero retraining, the property only a model-agnostic code has — and an

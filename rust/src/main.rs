@@ -240,13 +240,15 @@ fn golden(cfg: &AppConfig) -> Result<()> {
         // Encoding the golden queries must match.
         let k = g.k;
         let d = g.queries.shape()[1];
-        let queries: Vec<&[f32]> =
-            (0..k).map(|j| &g.queries.data()[j * d..(j + 1) * d]).collect();
-        let mut coded = vec![Vec::new(); code.params().num_workers()];
-        code.encode_into(&queries, &mut coded);
-        for (i, c) in coded.iter().enumerate() {
+        // The production flat-buffer path: stage the golden queries as one
+        // block and GEMM-encode, exactly as the serving batcher does.
+        let queries = approxifer::coding::GroupBlock::from_vec(g.queries.data().to_vec(), k, d);
+        let mut staged = approxifer::coding::BlockBuf::unpooled(code.params().num_workers(), d);
+        code.encode_block(&queries, &mut staged);
+        let coded = staged.freeze();
+        for i in 0..code.params().num_workers() {
             for (t, (a, b)) in
-                c.iter().zip(&g.coded.data()[i * d..(i + 1) * d]).enumerate()
+                coded.row(i).iter().zip(&g.coded.data()[i * d..(i + 1) * d]).enumerate()
             {
                 anyhow::ensure!(
                     (a - b).abs() <= 1e-4 * (1.0 + b.abs()),

@@ -23,7 +23,7 @@ use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
-use crate::coordinator::Service;
+use crate::coordinator::{RowView, Service};
 use crate::util::bytes::{put_f32, put_u32, put_u64, Reader};
 
 pub const OP_PREDICT: u8 = 1;
@@ -173,7 +173,7 @@ impl Drop for Server {
 fn serve_conn(mut stream: TcpStream, service: &Service, expected_payload: usize) -> Result<()> {
     stream.set_nodelay(true).ok();
     let mut wstream = stream.try_clone().context("cloning stream for responder")?;
-    let (tx, rx) = std::sync::mpsc::channel::<(u64, Result<Vec<f32>, String>)>();
+    let (tx, rx) = std::sync::mpsc::channel::<(u64, Result<RowView, String>)>();
     let responder = std::thread::Builder::new()
         .name("conn-responder".into())
         .spawn(move || {
@@ -193,7 +193,7 @@ fn serve_conn(mut stream: TcpStream, service: &Service, expected_payload: usize)
             let frame = read_frame(&mut stream)?;
             match frame.head {
                 OP_PING => {
-                    let _ = tx.send((frame.id, Ok(Vec::new())));
+                    let _ = tx.send((frame.id, Ok(RowView::empty())));
                 }
                 OP_PREDICT => {
                     let payload = body_f32(&frame.body);

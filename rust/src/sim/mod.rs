@@ -13,7 +13,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
-use crate::coordinator::Service;
+use crate::coordinator::{RowView, Service};
 use crate::util::rng::Rng;
 use crate::util::stats::Summary;
 
@@ -96,7 +96,7 @@ pub fn run_scenario(
     seed: u64,
 ) -> Result<ScenarioReport> {
     let mut rng = Rng::new(seed);
-    let (tx, rx) = std::sync::mpsc::channel::<(u64, Result<Vec<f32>, String>)>();
+    let (tx, rx) = std::sync::mpsc::channel::<(u64, Result<RowView, String>)>();
     let collector = std::thread::Builder::new()
         .name("scenario-collector".into())
         .spawn(move || -> Vec<(u64, bool, Instant)> {

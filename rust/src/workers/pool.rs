@@ -36,6 +36,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::coding::block::RowView;
 use crate::coding::serving::CollectPolicy;
 use crate::metrics::ServingMetrics;
 use crate::sim::faults::{Behavior, BehaviorState, FaultAction};
@@ -48,8 +49,10 @@ use super::latency::LatencyModel;
 /// A unit of work for one worker: one coded query of one group.
 pub struct WorkerTask {
     pub group: u64,
-    /// Flattened coded query payload.
-    pub payload: Vec<f32>,
+    /// Flattened coded query payload — an `Arc`-shared row view of the
+    /// group's coded block (fan-out copies nothing; the block recycles
+    /// once every worker's view drops).
+    pub payload: RowView,
     /// Scheduler-injected reply delay (forced-straggler experiments). Defers
     /// the reply without occupying the worker.
     pub extra_delay: Duration,
@@ -61,8 +64,10 @@ pub struct WorkerTask {
 pub struct WorkerReply {
     pub group: u64,
     pub worker_id: usize,
-    /// Prediction payload (possibly corrupted), or an error message.
-    pub result: Result<Vec<f32>, String>,
+    /// Prediction payload (possibly corrupted), or an error message. The
+    /// payload is an `Arc`-shared view: routing, collection and (for the
+    /// pass-through schemes) delivery all share this one buffer.
+    pub result: Result<RowView, String>,
     /// Wall time from dequeue to reply delivery (incl. injections).
     pub elapsed: Duration,
 }
@@ -182,7 +187,9 @@ impl WorkerPool {
                                             m.corrupt_replies_injected.inc();
                                         }
                                     }
-                                    logits
+                                    // Wrap once; every downstream stage
+                                    // shares this buffer by refcount.
+                                    RowView::from_vec(logits)
                                 })
                                 .map_err(|e| format!("{e:#}"))
                         };
@@ -265,8 +272,10 @@ impl WorkerPool {
 pub struct CollectedGroup {
     /// Group id the coordinator registered.
     pub group: u64,
-    /// Reply payload per worker id (`None` = not received / errored).
-    pub replies: Vec<Option<Vec<f32>>>,
+    /// Reply payload view per worker id (`None` = not received /
+    /// errored). Views are `Arc`-shared with the worker's reply — the
+    /// router never copies payload bytes.
+    pub replies: Vec<Option<RowView>>,
     /// Successful replies collected.
     pub received: usize,
     /// Error replies seen.
@@ -289,7 +298,7 @@ struct PendingGroup {
     /// as (and as long as) every slot meets the policy's reduced
     /// `hedge_need` quota. `None` = no hedging for this group.
     hedge_at: Option<Instant>,
-    replies: Vec<Option<Vec<f32>>>,
+    replies: Vec<Option<RowView>>,
     received: usize,
     errors: usize,
     /// Per-slot successful-reply and error counts.
@@ -576,7 +585,12 @@ mod tests {
     }
 
     fn task(group: u64, delay: Duration) -> WorkerTask {
-        WorkerTask { group, payload: vec![0.1; 8], extra_delay: delay, corrupt: None }
+        WorkerTask {
+            group,
+            payload: RowView::from_vec(vec![0.1; 8]),
+            extra_delay: delay,
+            corrupt: None,
+        }
     }
 
     #[test]
@@ -599,7 +613,7 @@ mod tests {
     #[test]
     fn byzantine_task_corrupts_reply() {
         let p = pool(2);
-        let payload = vec![0.5; 8];
+        let payload = RowView::from_vec(vec![0.5; 8]);
         p.send(
             0,
             WorkerTask {
@@ -631,7 +645,7 @@ mod tests {
             }
         }
         let (h, b) = (honest.unwrap(), byz.unwrap());
-        let dist: f32 = h.iter().zip(&b).map(|(a, c)| (a - c).abs()).sum();
+        let dist: f32 = h.iter().zip(b.iter()).map(|(a, c)| (a - c).abs()).sum();
         assert!(dist > 1.0, "corruption too small: {dist}");
         p.shutdown();
     }
@@ -767,7 +781,7 @@ mod tests {
         for w in 0..3 {
             p.send(w, task(9, Duration::ZERO)).unwrap();
         }
-        let mut by_worker: Vec<Option<Vec<f32>>> = vec![None; 3];
+        let mut by_worker: Vec<Option<RowView>> = vec![None; 3];
         for _ in 0..3 {
             let r = p.recv_timeout(Duration::from_secs(5)).unwrap();
             by_worker[r.worker_id] = Some(r.result.unwrap());

@@ -7,7 +7,7 @@
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
-use approxifer::coding::{ApproxIferCode, CodeParams};
+use approxifer::coding::{ApproxIferCode, CodeParams, RowView};
 use approxifer::coordinator::{AdaptiveConfig, FaultPlan, Service, VerifyPolicy};
 use approxifer::sim::faults::FaultProfile;
 use approxifer::workers::{ByzantineMode, InferenceEngine, LinearMockEngine};
@@ -25,7 +25,7 @@ fn group_queries(group: usize) -> Vec<Vec<f32>> {
 }
 
 /// Serve `n` closed-loop groups; returns the last group's predictions.
-fn run_groups(svc: &Service, start: usize, n: usize) -> Vec<Vec<f32>> {
+fn run_groups(svc: &Service, start: usize, n: usize) -> Vec<RowView> {
     let mut last = Vec::new();
     for g in start..start + n {
         let queries = group_queries(g);
@@ -105,7 +105,7 @@ fn controller_raises_e_in_one_window_and_sheds_it_after_the_burst() {
     let queries = group_queries(5 + 8 - 1);
     for (q, p) in queries.iter().zip(&last) {
         let want = engine.infer1(q).unwrap();
-        for (a, b) in want.iter().zip(p) {
+        for (a, b) in want.iter().zip(p.iter()) {
             assert!((a - b).abs() < 0.3, "post-raise decode inaccurate: {a} vs {b}");
         }
     }

@@ -116,15 +116,17 @@ fn pallas_encoder_artifact_matches_host_encoder() {
     }
     // PJRT (Pallas kernel) encode.
     let coded_pjrt = enc.encode(&Tensor::from_vec(&[entry.k, d], flat)).unwrap();
-    // Host encode.
+    // Host encode through the production flat-buffer path.
     let qrefs: Vec<&[f32]> = queries.iter().map(|q| &q[..]).collect();
-    let mut coded_host: Vec<Vec<f32>> = vec![Vec::new(); code.params().num_workers()];
-    code.encode_into(&qrefs, &mut coded_host);
-    assert_eq!(coded_pjrt.shape()[0], coded_host.len());
-    for i in 0..coded_host.len() {
+    let block = approxifer::coding::GroupBlock::from_rows(&qrefs);
+    let mut staged = approxifer::coding::BlockBuf::unpooled(code.params().num_workers(), d);
+    code.encode_block(&block, &mut staged);
+    let coded_host = staged.freeze();
+    assert_eq!(coded_pjrt.shape()[0], coded_host.rows());
+    for i in 0..coded_host.rows() {
         for t in 0..d {
             let a = coded_pjrt.data()[i * d + t];
-            let b = coded_host[i][t];
+            let b = coded_host.row(i)[t];
             assert!(
                 (a - b).abs() <= 1e-4 * (1.0 + b.abs()),
                 "worker {i} elem {t}: pjrt {a} vs host {b}"

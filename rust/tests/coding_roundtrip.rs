@@ -137,7 +137,7 @@ fn encode_drop_corrupt_decode_roundtrip_property() {
     // approximation bound (Berrut's interpolant converges O(h) on smooth
     // functions; two interpolation passes over ≥ 2K+E nodes of a gentle
     // sine keep the error well under 0.35 of the unit amplitude).
-    use approxifer::coding::ApproxIferCode;
+    use approxifer::coding::{ApproxIferCode, BlockPool, RowView};
     use approxifer::coordinator::locate_and_decode;
     use approxifer::tensor::Tensor;
 
@@ -165,21 +165,28 @@ fn encode_drop_corrupt_decode_roundtrip_property() {
         let alive: Vec<usize> = (0..nw).filter(|i| !dropped.contains(i)).collect();
         let byz: Vec<usize> =
             g.subset(alive.len(), e).into_iter().map(|p| alive[p]).collect();
-        let mut replies: Vec<Option<Vec<f32>>> = vec![None; nw];
+        let mut replies: Vec<Option<RowView>> = vec![None; nw];
         for &i in &alive {
-            replies[i] = Some(coded[i].data().to_vec());
+            replies[i] = Some(RowView::from_vec(coded[i].data().to_vec()));
         }
         for &b in &byz {
-            let reply = replies[b].as_mut().unwrap();
+            let mut reply = replies[b].as_deref().unwrap().to_vec();
             for v in reply.iter_mut() {
                 let delta = 5.0 + g.rng().normal(0.0, 15.0).abs();
                 *v += if g.bool() { delta as f32 } else { -delta as f32 };
             }
+            replies[b] = Some(RowView::from_vec(reply));
         }
         let metrics = ServingMetrics::new();
-        let (decoded, decode_set, flagged) =
-            locate_and_decode(&code, approxifer::coding::LocatorMethod::Pinned, &replies, &metrics)
-                .unwrap();
+        let blocks = BlockPool::new();
+        let (decoded, decode_set, flagged) = locate_and_decode(
+            &code,
+            approxifer::coding::LocatorMethod::Pinned,
+            &replies,
+            &metrics,
+            &blocks,
+        )
+        .unwrap();
         assert_eq!(flagged, byz, "K={k} S={s} E={e}: locator missed the corruptions");
         for &b in &byz {
             assert!(!decode_set.contains(&b));

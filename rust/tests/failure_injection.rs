@@ -403,7 +403,7 @@ fn pool_shutdown_mid_group_does_not_hang() {
             w,
             approxifer::workers::WorkerTask {
                 group: 1,
-                payload: vec![0.0; 6],
+                payload: approxifer::coding::RowView::from_vec(vec![0.0; 6]),
                 extra_delay: Duration::from_millis(50),
                 corrupt: None,
             },

@@ -1,0 +1,214 @@
+//! Flat-buffer data-plane conformance: the blocked-GEMM codec must be
+//! **bit-identical** to the retained naive reference across the whole
+//! (K, S, E) × payload-size space (including payloads not divisible by the
+//! GEMM tile and subset decodes), and the buffer pool's recycled blocks
+//! must be fully overwritten by every producer (no stale floats leaking
+//! between groups).
+
+use std::sync::Arc;
+
+use approxifer::coding::linalg::GEMM_BLOCK;
+use approxifer::coding::{
+    ApproxIferCode, BlockBuf, BlockPool, CodeParams, GroupBlock, ParmProxy, Replication,
+    RowView, ServingScheme, Uncoded, VerifyPolicy,
+};
+use approxifer::metrics::ServingMetrics;
+use approxifer::testing::forall;
+
+/// Payload lengths that straddle the kernel tile: 1, tiny, odd primes, the
+/// tile edge ±1, and a multi-tile ragged size.
+const PAYLOAD_SIZES: [usize; 8] =
+    [1, 3, 17, 100, GEMM_BLOCK - 1, GEMM_BLOCK, GEMM_BLOCK + 13, 2 * GEMM_BLOCK + 101];
+
+fn random_queries(g: &mut approxifer::testing::Gen, k: usize, d: usize) -> Vec<Vec<f32>> {
+    (0..k)
+        .map(|_| (0..d).map(|_| (g.f64_in(-3.0, 3.0)) as f32).collect())
+        .collect()
+}
+
+#[test]
+fn encode_gemm_is_bit_identical_to_reference_forall_kse_and_ragged_d() {
+    forall("flat-encode-conformance", 40, |g| {
+        let k = g.usize_in(1, 25);
+        // Guard degeneracy: E = 0 needs N = K+S-1 >= 1.
+        let s = g.usize_in(if k == 1 { 1 } else { 0 }, 3);
+        let e = g.usize_in(0, 3);
+        let d = PAYLOAD_SIZES[g.usize_in(0, PAYLOAD_SIZES.len() - 1)];
+        let code = ApproxIferCode::new(CodeParams::new(k, s, e));
+        let nw = code.params().num_workers();
+        let queries = random_queries(g, k, d);
+        let qrefs: Vec<&[f32]> = queries.iter().map(|q| &q[..]).collect();
+        let block = GroupBlock::from_rows(&qrefs);
+        let mut fast = BlockBuf::unpooled(nw, d);
+        let mut slow = BlockBuf::unpooled(nw, d);
+        code.encode_block(&block, &mut fast);
+        code.encode_reference(&block, &mut slow);
+        for (i, (a, b)) in fast.as_slice().iter().zip(slow.as_slice()).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "K={k} S={s} E={e} d={d} elem {i}: blocked {a} vs naive {b}"
+            );
+        }
+    });
+}
+
+#[test]
+fn subset_decode_gemm_is_bit_identical_to_reference() {
+    forall("flat-decode-conformance", 40, |g| {
+        let k = g.usize_in(1, 12);
+        let s = g.usize_in(1, 3);
+        let e = g.usize_in(0, 2);
+        let code = ApproxIferCode::new(CodeParams::new(k, s, e));
+        let nw = code.params().num_workers();
+        let d = PAYLOAD_SIZES[g.usize_in(0, PAYLOAD_SIZES.len() - 1)];
+        // Random availability subset of random size — ragged decode shapes
+        // included, not just the canonical decode_set_size().
+        let m = g.usize_in(1, nw);
+        let avail = g.subset(nw, m);
+        let payloads_owned = random_queries(g, m, d);
+        let payloads: Vec<&[f32]> = payloads_owned.iter().map(|p| &p[..]).collect();
+        let pool = BlockPool::new();
+        let fast = code.decode_block(&avail, &payloads, &pool);
+        let slow = code.decode_reference(&avail, &payloads);
+        assert_eq!(fast.rows(), k);
+        for j in 0..k {
+            for (t, (a, b)) in fast.row(j).iter().zip(&slow[j]).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "K={k} S={s} E={e} d={d} |F|={m} row {j} elem {t}: {a} vs {b}"
+                );
+            }
+        }
+        // The allocating convenience path rides the same kernel.
+        let mid = code.decode(&avail, &payloads);
+        for j in 0..k {
+            assert_eq!(&mid[j][..], fast.row(j));
+        }
+    });
+}
+
+#[test]
+fn recycled_blocks_are_fully_overwritten_by_every_scheme_encoder() {
+    // Poison a pooled buffer with NaN, recycle it, and encode through each
+    // scheme: the output must carry no NaN (every element written) and be
+    // bitwise equal to the same encode into fresh memory — recycled blocks
+    // can never leak a previous group's floats.
+    let k = 4;
+    let d = GEMM_BLOCK + 7; // ragged: the tile tail must be overwritten too
+    let queries: Vec<Vec<f32>> =
+        (0..k).map(|j| (0..d).map(|t| ((j * 31 + t) as f32 * 0.01).sin()).collect()).collect();
+    let qrefs: Vec<&[f32]> = queries.iter().map(|q| &q[..]).collect();
+    let block = GroupBlock::from_rows(&qrefs);
+    let schemes: Vec<Arc<dyn ServingScheme>> = vec![
+        Arc::new(ApproxIferCode::new(CodeParams::new(k, 1, 1))),
+        Arc::new(Replication::new(k, 1, 1)),
+        Arc::new(ParmProxy::new(k)),
+        Arc::new(Uncoded::new(k)),
+    ];
+    for scheme in schemes {
+        let nw = scheme.num_workers();
+        let pool = BlockPool::new();
+        // Poison, then retire the buffer to the free list.
+        {
+            let mut poisoned = pool.take(nw, d);
+            poisoned.as_mut_slice().fill(f32::NAN);
+            drop(poisoned);
+        }
+        assert_eq!(pool.free_buffers(), 1);
+        let mut recycled = pool.take(nw, d);
+        assert_eq!(pool.reused(), 1, "{}: take must reuse the poisoned buffer", scheme.name());
+        assert!(
+            recycled.as_slice().iter().all(|v| v.is_nan()),
+            "{}: pool.take must NOT zero (the overwrite contract is the producer's)",
+            scheme.name()
+        );
+        scheme.encode_into(&block, &mut recycled);
+        let mut fresh = BlockBuf::unpooled(nw, d);
+        scheme.encode_into(&block, &mut fresh);
+        for (i, (a, b)) in recycled.as_slice().iter().zip(fresh.as_slice()).enumerate() {
+            assert!(!a.is_nan(), "{}: stale NaN survived at {i}", scheme.name());
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "{}: recycled encode differs from fresh at {i}",
+                scheme.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn recycled_decode_output_blocks_are_fully_overwritten() {
+    let code = ApproxIferCode::new(CodeParams::new(3, 1, 0));
+    let d = 37;
+    let queries: Vec<Vec<f32>> =
+        (0..3).map(|j| (0..d).map(|t| ((j * 7 + t) as f32 * 0.05).sin()).collect()).collect();
+    let qrefs: Vec<&[f32]> = queries.iter().map(|q| &q[..]).collect();
+    let block = GroupBlock::from_rows(&qrefs);
+    let mut staged = BlockBuf::unpooled(code.params().num_workers(), d);
+    code.encode_block(&block, &mut staged);
+    let coded = staged.freeze();
+    let avail: Vec<usize> = (0..3).collect();
+    let payloads: Vec<&[f32]> = avail.iter().map(|&i| coded.row(i)).collect();
+    let pool = BlockPool::new();
+    {
+        let mut poisoned = pool.take(3, d);
+        poisoned.as_mut_slice().fill(f32::NAN);
+        drop(poisoned);
+    }
+    let out = code.decode_block(&avail, &payloads, &pool);
+    assert_eq!(pool.reused(), 1, "decode must have taken the poisoned buffer");
+    assert!(
+        out.data().iter().all(|v| !v.is_nan()),
+        "stale NaN leaked through a recycled decode block"
+    );
+    let reference = code.decode_reference(&avail, &payloads);
+    for j in 0..3 {
+        assert_eq!(&reference[j][..], out.row(j));
+    }
+}
+
+#[test]
+fn scheme_decode_predictions_share_reply_or_block_storage() {
+    // The zero-copy contract end to end at the scheme layer: ApproxIFER
+    // predictions are rows of ONE output block; uncoded predictions are
+    // the reply buffers themselves.
+    let metrics = ServingMetrics::new();
+    let pool = BlockPool::new();
+    let k = 3;
+    let d = 9;
+    let queries: Vec<Vec<f32>> =
+        (0..k).map(|j| (0..d).map(|t| ((j + t) as f32 * 0.2).sin()).collect()).collect();
+    let qrefs: Vec<&[f32]> = queries.iter().map(|q| &q[..]).collect();
+    let block = GroupBlock::from_rows(&qrefs);
+
+    let un = Uncoded::new(k);
+    let mut staged = pool.take(k, d);
+    un.encode_into(&block, &mut staged);
+    let coded = staged.freeze();
+    let replies: Vec<Option<RowView>> = coded.row_views().into_iter().map(Some).collect();
+    let out = un.decode(&replies, VerifyPolicy::off(), &metrics, &pool).unwrap();
+    for (i, pred) in out.predictions.iter().enumerate() {
+        assert_eq!(
+            pred.as_slice().as_ptr(),
+            replies[i].as_ref().unwrap().as_slice().as_ptr(),
+            "uncoded prediction {i} was copied"
+        );
+    }
+
+    let apx = ApproxIferCode::new(CodeParams::new(k, 1, 0));
+    let mut staged = pool.take(ServingScheme::num_workers(&apx), d);
+    ServingScheme::encode_into(&apx, &block, &mut staged);
+    let coded = staged.freeze();
+    let replies: Vec<Option<RowView>> = coded.row_views().into_iter().map(Some).collect();
+    let out = ServingScheme::decode(&apx, &replies, VerifyPolicy::off(), &metrics, &pool)
+        .unwrap();
+    // Consecutive rows of one block: fixed stride d between row pointers.
+    for w in out.predictions.windows(2) {
+        let a = w[0].as_slice().as_ptr() as usize;
+        let b = w[1].as_slice().as_ptr() as usize;
+        assert_eq!(b - a, d * std::mem::size_of::<f32>(), "predictions not one block");
+    }
+}

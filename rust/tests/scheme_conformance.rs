@@ -10,7 +10,8 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use approxifer::coding::{
-    ApproxIferCode, CodeParams, ParmProxy, Replication, ServingScheme, Uncoded, VerifyPolicy,
+    ApproxIferCode, CodeParams, ParmProxy, Replication, RowView, ServingScheme, Uncoded,
+    VerifyPolicy,
 };
 use approxifer::coordinator::Service;
 use approxifer::sim::faults::FaultProfile;
@@ -49,7 +50,7 @@ fn serve(
     verify: VerifyPolicy,
     groups: usize,
     group_timeout: Duration,
-) -> (Vec<anyhow::Result<Vec<f32>>>, Service, Arc<LinearMockEngine>) {
+) -> (Vec<anyhow::Result<RowView>>, Service, Arc<LinearMockEngine>) {
     let engine = Arc::new(LinearMockEngine::new(D, C));
     let svc = Service::builder(scheme)
         .engine(engine.clone())
@@ -62,7 +63,7 @@ fn serve(
         .unwrap();
     let k = svc.scheme().group_size();
     let handles: Vec<_> = (0..groups * k).map(|j| svc.submit(payload(j))).collect();
-    let results: Vec<anyhow::Result<Vec<f32>>> =
+    let results: Vec<anyhow::Result<RowView>> =
         handles.into_iter().map(|h| h.wait_timeout(Duration::from_secs(20))).collect();
     (results, svc, engine)
 }
@@ -84,7 +85,7 @@ fn tolerance(scheme: &dyn ServingScheme) -> f32 {
 
 fn assert_accurate(
     name: &str,
-    results: &[anyhow::Result<Vec<f32>>],
+    results: &[anyhow::Result<RowView>],
     engine: &LinearMockEngine,
     tol: f32,
 ) {
