@@ -1,0 +1,181 @@
+//! Open-loop overload bench: goodput and tail latency vs offered load,
+//! per scheme and per fault profile, through the admission-controlled
+//! online service. Emits `overload_rows` into `BENCH_PR_JSON` (appended to
+//! bench_throughput's artifact when it already exists) so the p99-vs-load
+//! knee is a tracked regression surface.
+//!
+//! Every row re-asserts the overload accounting invariant
+//! `submitted == served + degraded + shed + rejected + failed` — the
+//! harness refuses to return an unbalanced report, which makes the CI
+//! smoke run a hard gate on the accounting, not just a perf printout.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use approxifer::coding::{ApproxIferCode, CodeParams, Replication, ServingScheme};
+use approxifer::coordinator::{AdmissionConfig, Priority, Service, ShedPolicy};
+use approxifer::harness::overload::{drive, LoadTrace, OverloadReport};
+use approxifer::sim::faults::FaultProfile;
+use approxifer::util::bench::quick_mode;
+use approxifer::workers::{DelayMockEngine, InferenceEngine};
+
+const PAYLOAD: usize = 64;
+const CLASSES: usize = 8;
+
+fn schemes() -> Vec<(&'static str, Arc<dyn ServingScheme>)> {
+    vec![
+        ("approxifer(K=4,S=1,E=0)", Arc::new(ApproxIferCode::new(CodeParams::new(4, 1, 0)))),
+        ("replication(K=4,S=1,E=0)", Arc::new(Replication::new(4, 1, 0))),
+    ]
+}
+
+fn service(scheme: Arc<dyn ServingScheme>, faults: Option<&str>, seed: u64) -> Service {
+    let engine: Arc<dyn InferenceEngine> =
+        Arc::new(DelayMockEngine::new(PAYLOAD, CLASSES, Duration::from_micros(100)));
+    let mut builder = Service::builder(scheme.clone())
+        .engine(engine)
+        .batch_deadline(Duration::from_millis(5))
+        .admission(AdmissionConfig {
+            queue_depth: 64,
+            shed_policy: ShedPolicy::ShedBatch,
+            default_priority: Priority::Interactive,
+        })
+        .seed(seed);
+    if let Some(spec) = faults {
+        let profile = FaultProfile::parse(spec, scheme.num_workers(), seed)
+            .expect("bench fault profile must parse");
+        builder = builder.fault_profile(profile);
+    }
+    builder.spawn().unwrap()
+}
+
+fn run_row(
+    scheme_label: &str,
+    scheme: Arc<dyn ServingScheme>,
+    trace: LoadTrace,
+    fault_label: &str,
+    fault_spec: Option<&str>,
+    total: usize,
+    seed: u64,
+) -> OverloadReport {
+    let svc = service(scheme, fault_spec, seed);
+    // Every 4th query rides the sheddable batch class so shed:batch has
+    // victims under overload.
+    let report = drive(&svc, &trace, total, PAYLOAD, seed, 4, scheme_label, fault_label)
+        .expect("overload accounting must balance");
+    svc.shutdown();
+    if fault_spec.is_none() {
+        assert_eq!(
+            report.failed, 0,
+            "an honest fleet must not fail queries downstream: {}",
+            report.line()
+        );
+    }
+    report
+}
+
+fn main() {
+    let quick = quick_mode();
+    let total = if quick { 160 } else { 1200 };
+    let mut rows: Vec<OverloadReport> = Vec::new();
+
+    println!("== open-loop overload: goodput + tail vs offered load ==");
+    println!("(requests/row: {total}; every 4th query batch-priority; queue_depth=64)");
+
+    // The offered-load curve: a Poisson rate sweep straddling the knee.
+    let rates: &[f64] = if quick { &[500.0, 4000.0] } else { &[500.0, 1500.0, 4000.0, 8000.0] };
+    for (label, scheme) in schemes() {
+        for &rate in rates {
+            let r = run_row(
+                label,
+                scheme.clone(),
+                LoadTrace::Poisson { rate },
+                "honest",
+                None,
+                total,
+                11,
+            );
+            println!("{}", r.line());
+            rows.push(r);
+        }
+    }
+
+    // The arrival shapes at a fixed mid-sweep intensity.
+    let shaped: &[LoadTrace] = &[
+        LoadTrace::Diurnal { low: 200.0, high: 4000.0, period_s: 0.5 },
+        LoadTrace::OnOff { rate: 6000.0, on_ms: 40.0, off_ms: 120.0 },
+        LoadTrace::FlashCrowd { base: 400.0, spike: 8000.0, at_ms: 100.0, spike_ms: 60.0 },
+    ];
+    for (label, scheme) in schemes() {
+        for trace in shaped {
+            let r = run_row(label, scheme.clone(), *trace, "honest", None, total, 13);
+            println!("{}", r.line());
+            rows.push(r);
+        }
+    }
+
+    // Straggler fleet (full mode only: the 40ms injected stalls make the
+    // rows slow, and the honest matrix already gates the accounting in CI).
+    if !quick {
+        for (label, scheme) in schemes() {
+            let r = run_row(
+                label,
+                scheme.clone(),
+                LoadTrace::Poisson { rate: 1500.0 },
+                "slow:1:0:40:0.5",
+                Some("slow:1:0:40:0.5"),
+                total,
+                17,
+            );
+            println!("{}", r.line());
+            rows.push(r);
+        }
+    }
+
+    for r in &rows {
+        assert!(r.accounting_balances(), "unbalanced row: {}", r.line());
+    }
+    println!("\n{} rows, accounting invariant holds on every one", rows.len());
+
+    if let Some(path) = std::env::var_os("BENCH_PR_JSON") {
+        write_json(&path, &rows);
+    }
+}
+
+/// Append `overload_rows` to the `BENCH_PR_JSON` artifact: spliced into
+/// bench_throughput's object when that bench already wrote it (replacing
+/// any previous `overload_rows` block on a re-run), standalone otherwise.
+fn write_json(path: &std::ffi::OsStr, rows: &[OverloadReport]) {
+    let mut body = String::from("  \"overload_rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        body.push_str(&format!(
+            "    {}{}\n",
+            r.json_row(),
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    body.push_str("  ]\n");
+    let out = match std::fs::read_to_string(path) {
+        Ok(existing) => {
+            let existing = match existing.find(",\n  \"overload_rows\"") {
+                Some(pos) => format!("{}\n}}\n", &existing[..pos]),
+                None => existing,
+            };
+            let trimmed = existing.trim_end();
+            match trimmed.strip_suffix('}') {
+                Some(head) => format!("{},\n{body}}}\n", head.trim_end()),
+                // Not an object we understand — don't clobber it.
+                None => {
+                    eprintln!("BENCH_PR_JSON exists but is not a JSON object; leaving it");
+                    return;
+                }
+            }
+        }
+        Err(_) => format!("{{\n  \"bench\": \"bench_overload\",\n{body}}}\n"),
+    };
+    if let Err(e) = std::fs::write(path, out) {
+        eprintln!("writing BENCH_PR_JSON: {e}");
+    } else {
+        println!("wrote overload_rows ({}) to {:?}", rows.len(), path);
+    }
+}

@@ -68,6 +68,28 @@ impl Drop for PooledBuf {
 }
 
 /// Recycling free-list pool for group buffers. Cloning shares the pool.
+///
+/// The full take → freeze → retire cycle:
+///
+/// ```
+/// use approxifer::coding::BlockPool;
+///
+/// let pool = BlockPool::new();
+/// let mut buf = pool.take(1, 4);           // mutable staging, NOT zeroed
+/// buf.row_mut(0).copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+/// let block = buf.freeze();                // immutable, Arc-shared
+/// let view = block.row_view(0);
+/// assert_eq!(&view[..], &[1.0, 2.0, 3.0, 4.0]);
+///
+/// drop(block);                             // a view still holds the Arc...
+/// assert_eq!(pool.free_buffers(), 0);      // ...so nothing retired yet
+/// drop(view);                              // last holder gone:
+/// assert_eq!(pool.free_buffers(), 1);      // backing Vec is back on the
+/// assert_eq!(pool.recycled(), 1);          // free list, not freed
+///
+/// let _again = pool.take(2, 2);            // same capacity, zero allocs
+/// assert_eq!(pool.reused(), 1);
+/// ```
 #[derive(Clone)]
 pub struct BlockPool {
     inner: Arc<PoolInner>,

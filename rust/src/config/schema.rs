@@ -6,11 +6,44 @@ use std::time::Duration;
 use anyhow::{bail, Context, Result};
 
 use crate::coding::CodeParams;
-use crate::coordinator::{AdaptiveConfig, Strategy};
+use crate::coordinator::{AdaptiveConfig, AdmissionConfig, Priority, ShedPolicy, Strategy};
 use crate::sim::faults::FaultProfile;
 use crate::workers::LatencyModel;
 
 use super::parser::ConfigDoc;
+
+/// Every config key the repo accepts — the schema's single source of
+/// truth. [`AppConfig::from_doc`] rejects any key outside this list, and
+/// the `docs_knobs` integration test diffs it against the knob table in
+/// `docs/OPERATIONS.md`, so key, code and handbook cannot drift apart.
+pub const KNOWN_KEYS: &[&str] = &[
+    "code.k",
+    "code.s",
+    "code.e",
+    "serving.strategy",
+    "serving.artifacts",
+    "serving.bind",
+    "serving.batch_deadline_ms",
+    "serving.max_inflight",
+    "serving.decode_threads",
+    "serving.group_timeout_ms",
+    "serving.slo_ms",
+    "serving.verify_decode",
+    "serving.verify_tol",
+    "model.arch",
+    "model.dataset",
+    "adaptive.enabled",
+    "adaptive.window",
+    "adaptive.target_miss_rate",
+    "adaptive.cooldown",
+    "admission.enabled",
+    "admission.queue_depth",
+    "admission.shed_policy",
+    "admission.priority",
+    "workers.latency",
+    "faults.profile",
+    "faults.seed",
+];
 
 /// Fully resolved application config.
 #[derive(Clone, Debug)]
@@ -33,8 +66,10 @@ pub struct AppConfig {
     pub artifacts: String,
     /// TCP bind address for `serve`.
     pub bind: String,
-    /// Batcher flush deadline.
-    pub flush_after: Duration,
+    /// Batching deadline (`serving.batch_deadline_ms`): a partial group
+    /// closes — zero-padded to `K` — once its oldest query has waited this
+    /// long, so a trickle workload never stalls waiting for a full group.
+    pub batch_deadline: Duration,
     /// Groups that may be in flight (dispatched, undecoded) at once.
     pub max_inflight: usize,
     /// Threads in the coordinator's locate/decode pool.
@@ -48,6 +83,11 @@ pub struct AppConfig {
     /// Adaptive redundancy control plane (`adaptive.*` namespace); `None`
     /// when `adaptive.enabled` is unset/false.
     pub adaptive: Option<AdaptiveConfig>,
+    /// Admission control (`admission.*` namespace): bounded ingress queue,
+    /// priority classes and load shedding. `None` when `admission.enabled`
+    /// is unset/false — the ingress queue is then unbounded and overload
+    /// shows up as queueing delay instead of explicit backpressure.
+    pub admission: Option<AdmissionConfig>,
     /// Worker latency model (same for all workers).
     pub worker_latency: LatencyModel,
     /// Named fault profile spec (see [`FaultProfile::parse`]): which
@@ -75,12 +115,13 @@ impl Default for AppConfig {
             dataset: "syncifar".into(),
             artifacts: "artifacts".into(),
             bind: "127.0.0.1:7700".into(),
-            flush_after: Duration::from_millis(20),
+            batch_deadline: Duration::from_millis(20),
             max_inflight: 4,
             decode_threads: 2,
             group_timeout: Duration::from_secs(30),
             slo: None,
             adaptive: None,
+            admission: None,
             worker_latency: LatencyModel::None,
             fault_profile: None,
             verify_decode: false,
@@ -117,6 +158,23 @@ impl AppConfig {
                 bail!(
                     "config key '{retired}' was retired; express the fault fleet as \
                      faults.profile (e.g. \"slow:1:0:40:0.5\" or \"byz-random:2:10\")"
+                );
+            }
+        }
+        if doc.get_str("serving.flush_after_ms").is_some() {
+            bail!(
+                "config key 'serving.flush_after_ms' was renamed; set \
+                 serving.batch_deadline_ms (same meaning: a partial group closes \
+                 after this many milliseconds)"
+            );
+        }
+        // Reject unknown keys outright: a typo'd knob that silently falls
+        // back to its default is the worst failure mode a config can have.
+        for key in doc.keys() {
+            if !KNOWN_KEYS.contains(&key) {
+                bail!(
+                    "unknown config key '{key}' (see docs/OPERATIONS.md for the \
+                     full knob table)"
                 );
             }
         }
@@ -162,8 +220,11 @@ impl AppConfig {
         if let Some(v) = doc.get_str("serving.bind") {
             cfg.bind = v;
         }
-        if let Some(ms) = doc.get_f64("serving.flush_after_ms")? {
-            cfg.flush_after = Duration::from_secs_f64(ms / 1e3);
+        if let Some(ms) = doc.get_f64("serving.batch_deadline_ms")? {
+            if ms <= 0.0 {
+                bail!("serving.batch_deadline_ms must be positive");
+            }
+            cfg.batch_deadline = Duration::from_secs_f64(ms / 1e3);
         }
         if let Some(v) = doc.get_usize("serving.max_inflight")? {
             if v == 0 {
@@ -224,6 +285,34 @@ impl AppConfig {
             for key in ["adaptive.window", "adaptive.target_miss_rate", "adaptive.cooldown"] {
                 if doc.get_str(key).is_some() {
                     bail!("'{key}' is set but adaptive.enabled is not true");
+                }
+            }
+        }
+        if doc.get_bool("admission.enabled")?.unwrap_or(false) {
+            let mut admission = AdmissionConfig::default();
+            if let Some(d) = doc.get_usize("admission.queue_depth")? {
+                if d == 0 {
+                    bail!("admission.queue_depth must be >= 1");
+                }
+                admission.queue_depth = d;
+            }
+            if let Some(p) = doc.get_str("admission.shed_policy") {
+                admission.shed_policy = ShedPolicy::parse(&p)
+                    .with_context(|| "admission.shed_policy".to_string())?;
+            }
+            if let Some(p) = doc.get_str("admission.priority") {
+                admission.default_priority =
+                    Priority::parse(&p).with_context(|| "admission.priority".to_string())?;
+            }
+            cfg.admission = Some(admission);
+        } else {
+            // Same rule as adaptive.*: tuning a disabled gate is a footgun,
+            // not a no-op.
+            for key in
+                ["admission.queue_depth", "admission.shed_policy", "admission.priority"]
+            {
+                if doc.get_str(key).is_some() {
+                    bail!("'{key}' is set but admission.enabled is not true");
                 }
             }
         }
@@ -450,5 +539,84 @@ mod tests {
     fn cli_override_beats_file_value() {
         let cfg = AppConfig::load(None, &["code.k=10".to_string()]).unwrap();
         assert_eq!(cfg.params.k, 10);
+    }
+
+    #[test]
+    fn batch_deadline_parses_and_old_spelling_is_retired() {
+        let doc = ConfigDoc::parse("[serving]\nbatch_deadline_ms = 5\n").unwrap();
+        let cfg = AppConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.batch_deadline, Duration::from_millis(5));
+
+        let doc = ConfigDoc::parse("[serving]\nbatch_deadline_ms = 0\n").unwrap();
+        assert!(AppConfig::from_doc(&doc).is_err());
+
+        let doc = ConfigDoc::parse("[serving]\nflush_after_ms = 5\n").unwrap();
+        let err = AppConfig::from_doc(&doc).unwrap_err();
+        assert!(format!("{err:#}").contains("batch_deadline_ms"), "{err:#}");
+    }
+
+    #[test]
+    fn admission_knobs_parse_and_gate() {
+        let doc = ConfigDoc::parse(
+            r#"
+            [admission]
+            enabled = true
+            queue_depth = 256
+            shed_policy = "shed:batch"
+            priority = "batch"
+            "#,
+        )
+        .unwrap();
+        let cfg = AppConfig::from_doc(&doc).unwrap();
+        let a = cfg.admission.expect("admission enabled");
+        assert_eq!(a.queue_depth, 256);
+        assert_eq!(a.shed_policy, ShedPolicy::ShedBatch);
+        assert_eq!(a.default_priority, Priority::Batch);
+
+        // Defaults apply when only the switch is set.
+        let doc = ConfigDoc::parse("[admission]\nenabled = true\n").unwrap();
+        let a = AppConfig::from_doc(&doc).unwrap().admission.unwrap();
+        assert_eq!(a.queue_depth, 1024);
+        assert_eq!(a.shed_policy, ShedPolicy::Reject);
+        assert_eq!(a.default_priority, Priority::Interactive);
+
+        // Orphan sub-keys without the master switch are refused.
+        let doc = ConfigDoc::parse("[admission]\nqueue_depth = 64\n").unwrap();
+        let err = AppConfig::from_doc(&doc).unwrap_err();
+        assert!(format!("{err:#}").contains("admission.enabled"), "{err:#}");
+
+        // Out-of-range / unparseable values fail at load time.
+        let doc = ConfigDoc::parse("[admission]\nenabled = true\nqueue_depth = 0\n").unwrap();
+        assert!(AppConfig::from_doc(&doc).is_err());
+        let doc = ConfigDoc::parse(
+            "[admission]\nenabled = true\nshed_policy = \"drop-everything\"\n",
+        )
+        .unwrap();
+        assert!(AppConfig::from_doc(&doc).is_err());
+        let doc =
+            ConfigDoc::parse("[admission]\nenabled = true\npriority = \"bulk\"\n").unwrap();
+        assert!(AppConfig::from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn unknown_keys_are_rejected() {
+        let doc = ConfigDoc::parse("[serving]\nflish_after_ms = 5\n").unwrap();
+        let err = AppConfig::from_doc(&doc).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown config key"), "{err:#}");
+        let err = AppConfig::load(None, &["serving.stratgy=uncoded".into()]).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown config key"), "{err:#}");
+    }
+
+    #[test]
+    fn known_keys_cover_every_parsed_key() {
+        // Self-check on the schema list: every key the parser consults is
+        // declared, and the declared list has no duplicates.
+        let mut seen = std::collections::BTreeSet::new();
+        for k in KNOWN_KEYS {
+            assert!(seen.insert(*k), "duplicate key {k}");
+        }
+        for k in ["serving.batch_deadline_ms", "admission.queue_depth", "adaptive.cooldown"] {
+            assert!(KNOWN_KEYS.contains(&k), "{k} missing from KNOWN_KEYS");
+        }
     }
 }

@@ -13,8 +13,9 @@
 //!   the decode pool from the fault-model world of the verified-decode
 //!   path: adversaries the locator identified *and verification confirmed*,
 //!   residual-check failures (corruption past the current budget),
-//!   SLO misses against `serving.slo_ms`, hedged deliveries, and outright
-//!   group failures.
+//!   SLO misses against `serving.slo_ms`, hedged deliveries, outright
+//!   group failures, and admission shed pressure (the gate refused work
+//!   since the previous dispatch).
 //! * **Estimators** — a sliding window of the last `window` observations.
 //!   At each window boundary the controller compares the windowed evidence
 //!   (max confirmed adversary count, any verification failure, SLO
@@ -112,6 +113,13 @@ pub struct GroupObservation {
     /// Availability-shaped evidence: it reaches the straggler loop through
     /// `slo_miss`, never the Byzantine loop (see [`AdaptiveController`]).
     pub failed: bool,
+    /// The admission gate shed or rejected queries between this group's
+    /// dispatch and the previous one — the service is past saturation.
+    /// Overload evidence inverts the straggler loop: adding redundancy
+    /// under overload consumes the capacity the gate is starved for, so
+    /// shed pressure steps `S` *down* and vetoes miss-rate raises (see
+    /// [`AdaptiveController`]).
+    pub shed_pressure: bool,
 }
 
 /// A re-tuning epoch the coordinator applies at the next group boundary.
@@ -212,6 +220,8 @@ impl AdaptiveController {
             .unwrap_or(0);
         let miss_rate =
             self.window.iter().filter(|o| o.slo_miss).count() as f64 / n.max(1.0);
+        let shed_rate =
+            self.window.iter().filter(|o| o.shed_pressure).count() as f64 / n.max(1.0);
         self.window.clear();
 
         let mut s = self.s;
@@ -241,8 +251,24 @@ impl AdaptiveController {
             self.calm_e = 0;
         }
 
+        // --- overload loop (admission shed pressure) -----------------------
+        // Shed pressure means the admission gate is refusing work: the
+        // bottleneck is aggregate capacity, not per-group stragglers. An
+        // SLO miss in this regime is queueing delay wearing a straggler
+        // costume — raising S would add a worker task per group and deepen
+        // the overload. Step S *down* instead (each rung freed is fleet
+        // capacity returned to goodput) and veto the miss-rate raise below.
+        // Runs even without an SLO: shedding is observable on its own.
+        let overloaded = shed_rate > self.cfg.target_miss_rate;
+        if overloaded {
+            if self.s > self.cfg.s_min {
+                s = self.s - 1;
+            }
+            self.calm_s = 0;
+        }
+
         // --- straggler loop (only with an SLO to aim at) -------------------
-        if self.slo_aware {
+        if self.slo_aware && !overloaded {
             if miss_rate > self.cfg.target_miss_rate {
                 s = (self.s + 1).clamp(self.cfg.s_min, self.cfg.s_max);
                 self.calm_s = 0;
@@ -392,12 +418,47 @@ mod tests {
     }
 
     #[test]
+    fn shed_pressure_steps_s_down_even_without_an_slo() {
+        let mut c = AdaptiveController::new(cfg(4, 2), 2, 0, None);
+        for _ in 0..3 {
+            c.observe(GroupObservation { shed_pressure: true, ..calm() });
+        }
+        let epoch = c.observe(calm()).expect("shed-heavy window must shrink S");
+        assert_eq!(epoch, Reconfigure { s: 1, e: 0 });
+        assert_eq!(c.current(), (1, 0));
+    }
+
+    #[test]
+    fn shed_pressure_vetoes_the_miss_rate_raise() {
+        // Every group misses the SLO *and* the gate is shedding: queueing
+        // delay under overload, not stragglers. S must fall, not climb.
+        let slo = Some(Duration::from_millis(10));
+        let mut c = AdaptiveController::new(cfg(4, 2), 1, 0, slo);
+        for _ in 0..3 {
+            c.observe(GroupObservation { slo_miss: true, shed_pressure: true, ..calm() });
+        }
+        let epoch = c.observe(GroupObservation { slo_miss: true, ..calm() });
+        assert_eq!(epoch, Some(Reconfigure { s: 0, e: 0 }));
+    }
+
+    #[test]
+    fn shed_pressure_at_s_min_holds_without_an_epoch() {
+        let mut c = AdaptiveController::new(cfg(2, 2), 0, 0, None);
+        for _ in 0..10 {
+            c.observe(GroupObservation { shed_pressure: true, ..calm() });
+        }
+        assert_eq!(c.current(), (0, 0));
+        assert_eq!(c.epochs(), 0, "nothing left to shed from the budget");
+    }
+
+    #[test]
     fn decisions_are_a_pure_function_of_the_observation_sequence() {
         let seq: Vec<GroupObservation> = (0..40)
             .map(|i| GroupObservation {
                 confirmed_adversaries: usize::from(i % 7 == 0),
                 verify_failed: i % 13 == 0,
                 slo_miss: i % 5 == 0,
+                shed_pressure: i % 11 == 0,
                 ..calm()
             })
             .collect();

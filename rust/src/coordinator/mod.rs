@@ -18,7 +18,9 @@ pub use crate::coding::{
 };
 pub use adaptive::{AdaptiveConfig, AdaptiveController, GroupObservation, Reconfigure};
 pub use pipeline::{FaultPlan, GroupOutcome, GroupPipeline};
-pub use service::{PredictionHandle, Service, ServiceBuilder};
+pub use service::{
+    AdmissionConfig, PredictionHandle, Priority, Service, ServiceBuilder, ShedPolicy,
+};
 
 use std::sync::Arc;
 

@@ -23,8 +23,30 @@
 //!
 //! Pipeline stages, each overlapping the others:
 //!
-//! * **Batcher** (this module's coordinator thread) — accumulates queries,
-//!   stages them into a contiguous [`GroupBlock`] from the service's
+//! * **Admission gate** (internal `Ingress`) — every submission lands in a
+//!   two-class priority queue (interactive ahead of batch) in front of the
+//!   batcher. With an [`AdmissionConfig`] the queue is bounded: a full
+//!   queue either rejects the arrival or — under
+//!   [`ShedPolicy::ShedBatch`] — evicts the oldest queued batch-priority
+//!   query to admit an interactive one. Victims are answered immediately
+//!   with an error, so nothing is silently dropped and the accounting
+//!   invariant holds exactly:
+//!   `queries_received == queries_served + queries_degraded + queries_shed
+//!   + queries_rejected + queries_failed`. Backpressure propagates
+//!   end-to-end: when all `max_inflight` slots are taken the batcher
+//!   stalls in the gate below, the ingress queue fills, and the admission
+//!   gate starts shedding — which the adaptive controller observes as
+//!   `shed_pressure` and answers by *shrinking* the straggler budget
+//!   (redundancy is the wrong thing to spend capacity on past
+//!   saturation).
+//! * **Batcher** (this module's coordinator thread) — accumulates admitted
+//!   queries until the group reaches `K` **or** the batching deadline
+//!   ([`ServiceBuilder::batch_deadline`]) fires, whichever comes first, so
+//!   a trickle workload never waits for a full group. Short groups are
+//!   zero-padded to `K` (pad slots carry no reply sink; their predictions
+//!   are dropped on delivery and excluded from accuracy and accounting,
+//!   observable via the `pad_slots` counter). The group is staged
+//!   into a contiguous [`GroupBlock`] from the service's
 //!   recycling [`BlockPool`], encodes via [`ServingScheme::encode_into`]
 //!   (one blocked GEMM for ApproxIFER) and fans the frozen coded block out
 //!   to the worker pool as zero-copy [`RowView`]s, then immediately starts
@@ -72,7 +94,7 @@
 //!   is also why [`PredictionHandle::wait_timeout`]'s client-side bound is
 //!   layered *over* these, never raced against them.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
@@ -95,7 +117,7 @@ use super::pipeline::FaultPlan;
 /// [`ServiceBuilder`]).
 #[derive(Clone)]
 struct Tuning {
-    flush_after: Duration,
+    batch_deadline: Duration,
     verify: VerifyPolicy,
     seed: u64,
     max_inflight: usize,
@@ -106,6 +128,80 @@ struct Tuning {
     fault_hook: Option<Arc<dyn Fn(u64) -> FaultPlan + Send + Sync>>,
 }
 
+/// Priority class of one submitted query. Interactive queries are batched
+/// ahead of batch-priority queries, and under [`ShedPolicy::ShedBatch`] a
+/// full ingress queue sheds its oldest batch query to admit an interactive
+/// one.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Priority {
+    /// Latency-sensitive traffic (the default class).
+    Interactive,
+    /// Throughput traffic, shed first under overload.
+    Batch,
+}
+
+impl Priority {
+    /// Parse `"interactive"` / `"batch"` (the `admission.priority` knob).
+    pub fn parse(s: &str) -> Result<Priority> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "interactive" => Ok(Priority::Interactive),
+            "batch" => Ok(Priority::Batch),
+            other => bail!("unknown priority '{other}' (expected interactive|batch)"),
+        }
+    }
+}
+
+/// What the admission gate does with an arrival when the ingress queue is
+/// full.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShedPolicy {
+    /// Refuse the new arrival, whatever its class.
+    Reject,
+    /// An interactive arrival evicts the oldest queued batch-priority
+    /// query (the victim is answered with an error immediately); with no
+    /// batch query queued, or for a batch arrival, fall back to
+    /// rejecting.
+    ShedBatch,
+}
+
+impl ShedPolicy {
+    /// Parse `"reject"` / `"shed:batch"` (the `admission.shed_policy`
+    /// knob).
+    pub fn parse(s: &str) -> Result<ShedPolicy> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "reject" => Ok(ShedPolicy::Reject),
+            "shed:batch" => Ok(ShedPolicy::ShedBatch),
+            other => bail!("unknown shed policy '{other}' (expected reject|shed:batch)"),
+        }
+    }
+}
+
+/// Admission-control tuning (the `admission.*` config namespace), set with
+/// [`ServiceBuilder::admission`]. A service built without one runs an
+/// unbounded ingress queue: nothing is ever shed or rejected, and overload
+/// shows up as queueing delay instead of explicit backpressure.
+#[derive(Clone, Copy, Debug)]
+pub struct AdmissionConfig {
+    /// Queued (admitted, not yet batched) queries allowed before the gate
+    /// sheds or rejects. Must be >= 1.
+    pub queue_depth: usize,
+    /// Full-queue behavior.
+    pub shed_policy: ShedPolicy,
+    /// Class assigned to submissions that don't state one
+    /// ([`Service::submit`] / [`Service::submit_tagged`]).
+    pub default_priority: Priority,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig {
+            queue_depth: 1024,
+            shed_policy: ShedPolicy::Reject,
+            default_priority: Priority::Interactive,
+        }
+    }
+}
+
 /// Builder for the online service — the single public way to start one.
 pub struct ServiceBuilder {
     scheme: Arc<dyn ServingScheme>,
@@ -113,7 +209,8 @@ pub struct ServiceBuilder {
     worker_specs: Option<Vec<WorkerSpec>>,
     worker_latency: Option<LatencyModel>,
     fault_profile: Option<FaultProfile>,
-    flush_after: Duration,
+    batch_deadline: Duration,
+    admission: Option<AdmissionConfig>,
     verify: VerifyPolicy,
     seed: u64,
     max_inflight: usize,
@@ -132,7 +229,8 @@ impl ServiceBuilder {
             worker_specs: None,
             worker_latency: None,
             fault_profile: None,
-            flush_after: Duration::from_millis(20),
+            batch_deadline: Duration::from_millis(20),
+            admission: None,
             verify: VerifyPolicy::off(),
             seed: 0xA11CE,
             max_inflight: 4,
@@ -178,9 +276,29 @@ impl ServiceBuilder {
         self
     }
 
-    /// Flush a partial group after this long.
-    pub fn flush_after(mut self, d: Duration) -> Self {
-        self.flush_after = d;
+    /// The batching deadline: a group closes when it reaches `K` queries
+    /// *or* this long after its first query arrived, whichever fires
+    /// first. Short groups are zero-padded to `K`; pad slots are excluded
+    /// from accuracy and accounting. Bounds any query's wait for
+    /// groupmates — a trickle workload completes within
+    /// `batch_deadline + group latency`.
+    pub fn batch_deadline(mut self, d: Duration) -> Self {
+        self.batch_deadline = d;
+        self
+    }
+
+    /// Alias for [`ServiceBuilder::batch_deadline`] (the knob's pre-rename
+    /// spelling; kept so existing call sites read naturally).
+    pub fn flush_after(self, d: Duration) -> Self {
+        self.batch_deadline(d)
+    }
+
+    /// Bound the ingress queue and enable admission control: priority
+    /// classes, load shedding and the served/degraded/shed/rejected
+    /// accounting. Without this the ingress queue is unbounded (overload
+    /// turns into unbounded queueing delay instead of explicit shedding).
+    pub fn admission(mut self, cfg: AdmissionConfig) -> Self {
+        self.admission = Some(cfg);
         self
     }
 
@@ -259,6 +377,14 @@ impl ServiceBuilder {
         if scheme.group_size() == 0 {
             bail!("service '{name}': scheme has a zero group size");
         }
+        if let Some(a) = &self.admission {
+            if a.queue_depth == 0 {
+                bail!(
+                    "service '{name}': admission.queue_depth must be >= 1 (a zero-depth \
+                     queue admits nothing; disable admission instead)"
+                );
+            }
+        }
         if let Some(slo) = self.slo {
             if slo.is_zero() {
                 bail!("service '{name}': slo must be positive");
@@ -332,7 +458,7 @@ impl ServiceBuilder {
             }
         }
         let tuning = Tuning {
-            flush_after: self.flush_after,
+            batch_deadline: self.batch_deadline,
             verify: self.verify,
             seed: self.seed,
             max_inflight: self.max_inflight,
@@ -345,17 +471,19 @@ impl ServiceBuilder {
         let metrics = Arc::new(ServingMetrics::new());
         metrics.current_s.set(scheme.stragglers_tolerated() as u64);
         metrics.current_e.set(scheme.byzantine_tolerated() as u64);
-        let (tx, rx) = channel::<Msg>();
+        let default_priority =
+            self.admission.map_or(Priority::Interactive, |a| a.default_priority);
+        // The ingress doubles as the batcher's loopback: decode threads
+        // requeue verification-failed groups through its control lane.
+        let ingress = Arc::new(Ingress::new(self.admission));
         let m = metrics.clone();
         let s = scheme.clone();
-        // The batcher gets a sender back into its own queue so decode
-        // threads can requeue verification-failed groups for redispatch.
-        let loopback = tx.clone();
+        let ing = ingress.clone();
         let batcher = std::thread::Builder::new()
             .name("coordinator".into())
-            .spawn(move || batcher_loop(engine, s, specs, policy, tuning, rx, loopback, m))
+            .spawn(move || batcher_loop(engine, s, specs, policy, tuning, ing, m))
             .map_err(|e| anyhow::anyhow!("spawning coordinator: {e}"))?;
-        Ok(Service { tx, batcher: Some(batcher), scheme, metrics })
+        Ok(Service { ingress, batcher: Some(batcher), scheme, default_priority, metrics })
     }
 }
 
@@ -429,8 +557,12 @@ struct Redispatch {
     started: Instant,
 }
 
-enum Msg {
-    Query(Submission),
+/// Control-plane messages into the batcher. Queries travel the
+/// admission-controlled data lanes of [`Ingress`] instead; the control
+/// lane is unbounded and always drains ahead of them (the control plane
+/// is never shed, and a redispatch must not queue behind the very backlog
+/// that delayed its group).
+enum Control {
     Redispatch(Redispatch),
     /// Apply a new (S, E) operating point at the next group boundary —
     /// from the adaptive controller or [`Service::reconfigure`].
@@ -438,11 +570,153 @@ enum Msg {
     Shutdown,
 }
 
+/// What the admission gate decided about one arrival.
+enum AdmitResult {
+    /// Queued — possibly after evicting a shed victim, which is returned
+    /// for the caller to answer and account.
+    Admitted { shed: Option<Submission> },
+    /// Queue full with nothing sheddable: the arrival bounces back.
+    Rejected(Submission),
+    /// The batcher has shut down; the arrival bounces back.
+    Closed(Submission),
+}
+
+/// One pull by the batcher.
+enum Pulled {
+    Control(Control),
+    Query(Submission),
+    /// The batching deadline passed with a partial group pending.
+    DeadlineExpired,
+}
+
+#[derive(Default)]
+struct IngressState {
+    control: VecDeque<Control>,
+    interactive: VecDeque<Submission>,
+    batch: VecDeque<Submission>,
+    closed: bool,
+}
+
+/// The batcher's front door: a condvar-signalled multi-lane queue
+/// replacing a plain mpsc channel, so that (a) the admission gate can see
+/// — and bound — the backlog it is gating, (b) interactive arrivals order
+/// ahead of batch ones, and (c) the batcher's blocking wait doubles as
+/// the batching-deadline timer. Control messages are pulled without
+/// disturbing an armed deadline: a reconfigure epoch landing mid-wait is
+/// applied and the partial group still flushes on its original clock.
+struct Ingress {
+    state: Mutex<IngressState>,
+    cvar: Condvar,
+    admission: Option<AdmissionConfig>,
+}
+
+impl Ingress {
+    fn new(admission: Option<AdmissionConfig>) -> Ingress {
+        Ingress {
+            state: Mutex::new(IngressState::default()),
+            cvar: Condvar::new(),
+            admission,
+        }
+    }
+
+    /// Queue a control message (unbounded). Returns the message back if
+    /// the batcher has shut down, so the caller can answer its sinks.
+    fn push_control(&self, msg: Control) -> Result<(), Control> {
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            return Err(msg);
+        }
+        st.control.push_back(msg);
+        drop(st);
+        self.cvar.notify_all();
+        Ok(())
+    }
+
+    /// The admission gate: bounded enqueue with priority classes. The
+    /// *caller* answers and accounts victims/rejects — the gate only
+    /// decides.
+    fn admit(&self, sub: Submission, pri: Priority) -> AdmitResult {
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            return AdmitResult::Closed(sub);
+        }
+        let mut shed = None;
+        if let Some(cfg) = &self.admission {
+            if st.interactive.len() + st.batch.len() >= cfg.queue_depth {
+                let can_shed = cfg.shed_policy == ShedPolicy::ShedBatch
+                    && pri == Priority::Interactive;
+                match can_shed.then(|| st.batch.pop_front()).flatten() {
+                    Some(victim) => shed = Some(victim),
+                    None => return AdmitResult::Rejected(sub),
+                }
+            }
+        }
+        match pri {
+            Priority::Interactive => st.interactive.push_back(sub),
+            Priority::Batch => st.batch.push_back(sub),
+        }
+        drop(st);
+        self.cvar.notify_all();
+        AdmitResult::Admitted { shed }
+    }
+
+    /// Queued (admitted, not yet batched) queries right now.
+    fn depth(&self) -> usize {
+        let st = self.state.lock().unwrap();
+        st.interactive.len() + st.batch.len()
+    }
+
+    /// Blocking pull: control messages first, then interactive queries,
+    /// then batch. With a `deadline` the wait is bounded — an empty pull
+    /// past it reports [`Pulled::DeadlineExpired`] so the batcher can
+    /// flush its partial group.
+    fn pop(&self, deadline: Option<Instant>) -> Pulled {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(msg) = st.control.pop_front() {
+                return Pulled::Control(msg);
+            }
+            if let Some(sub) = st.interactive.pop_front() {
+                return Pulled::Query(sub);
+            }
+            if let Some(sub) = st.batch.pop_front() {
+                return Pulled::Query(sub);
+            }
+            match deadline {
+                Some(d) => {
+                    let now = Instant::now();
+                    if now >= d {
+                        return Pulled::DeadlineExpired;
+                    }
+                    let (guard, _) = self.cvar.wait_timeout(st, d - now).unwrap();
+                    st = guard;
+                }
+                None => st = self.cvar.wait(st).unwrap(),
+            }
+        }
+    }
+
+    /// Mark the ingress closed (subsequent pushes bounce back to their
+    /// callers) and take every queued message for the shutdown drain.
+    fn close(&self) -> (VecDeque<Control>, Vec<Submission>) {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        let control = std::mem::take(&mut st.control);
+        let mut queries: Vec<Submission> = st.interactive.drain(..).collect();
+        queries.extend(st.batch.drain(..));
+        drop(st);
+        self.cvar.notify_all();
+        (control, queries)
+    }
+}
+
 /// The online serving engine, generic over its [`ServingScheme`].
 pub struct Service {
-    tx: Sender<Msg>,
+    ingress: Arc<Ingress>,
     batcher: Option<JoinHandle<()>>,
     scheme: Arc<dyn ServingScheme>,
+    /// Class assigned to submissions that don't state one.
+    default_priority: Priority,
     /// The service's live counters/histograms (shared with the batcher,
     /// router and decode pool; gauges `current_s`/`current_e` track the
     /// operating point across reconfigure epochs).
@@ -469,15 +743,24 @@ impl Service {
     /// forget: an unsupported or fleet-exceeding request is counted in
     /// `adaptive_alerts` and logged, leaving the current scheme serving.
     pub fn reconfigure(&self, s: usize, e: usize) {
-        let _ = self.tx.send(Msg::Reconfigure { s, e });
+        let _ = self.ingress.push_control(Control::Reconfigure { s, e });
     }
 
-    /// Submit one query payload; resolves when its group is decoded.
+    /// Submit one query payload at the configured default priority;
+    /// resolves when its group is decoded — or errors immediately when the
+    /// admission gate rejects it.
     pub fn submit(&self, payload: Vec<f32>) -> PredictionHandle {
-        self.metrics.queries_received.inc();
+        self.submit_with_priority(payload, self.default_priority)
+    }
+
+    /// [`Service::submit`] with an explicit [`Priority`] class.
+    pub fn submit_with_priority(
+        &self,
+        payload: Vec<f32>,
+        priority: Priority,
+    ) -> PredictionHandle {
         let (reply, rx) = channel();
-        // If the coordinator is gone the handle errors on wait.
-        let _ = self.tx.send(Msg::Query(Submission { payload, reply: ReplySink::Channel(reply) }));
+        self.admit(Submission { payload, reply: ReplySink::Channel(reply) }, priority);
         PredictionHandle { rx }
     }
 
@@ -490,21 +773,58 @@ impl Service {
         payload: Vec<f32>,
         tx: Sender<(u64, Result<RowView, String>)>,
     ) {
+        self.submit_tagged_with_priority(id, payload, tx, self.default_priority);
+    }
+
+    /// [`Service::submit_tagged`] with an explicit [`Priority`] class.
+    pub fn submit_tagged_with_priority(
+        &self,
+        id: u64,
+        payload: Vec<f32>,
+        tx: Sender<(u64, Result<RowView, String>)>,
+        priority: Priority,
+    ) {
+        self.admit(Submission { payload, reply: ReplySink::Tagged { id, tx } }, priority);
+    }
+
+    /// Run one submission through the admission gate, answering and
+    /// accounting any victim on the spot. *Every* submission increments
+    /// `queries_received` — shed and rejected ones included — which is
+    /// what makes the accounting invariant exact: every received query
+    /// lands in exactly one of served / degraded / shed / rejected /
+    /// failed.
+    fn admit(&self, sub: Submission, priority: Priority) {
         self.metrics.queries_received.inc();
-        let sink = ReplySink::Tagged { id, tx };
-        if let Err(e) = self.tx.send(Msg::Query(Submission { payload, reply: sink })) {
-            // Batcher is gone: answer now — a tagged client has no
-            // disconnect signal to observe and would hang otherwise.
-            if let Msg::Query(s) = e.0 {
-                s.reply.send(Err("service shut down".into()));
+        match self.ingress.admit(sub, priority) {
+            AdmitResult::Admitted { shed } => {
+                if let Some(victim) = shed {
+                    self.metrics.queries_shed.inc();
+                    victim.reply.send(Err(
+                        "shed under overload (batch query evicted by an interactive \
+                         arrival)"
+                            .into(),
+                    ));
+                }
+            }
+            AdmitResult::Rejected(sub) => {
+                self.metrics.queries_rejected.inc();
+                sub.reply.send(Err("rejected: admission queue full".into()));
+            }
+            AdmitResult::Closed(sub) => {
+                // Post-shutdown submissions count as rejected (refused at
+                // the gate) so the accounting invariant holds without a
+                // special case.
+                self.metrics.queries_rejected.inc();
+                sub.reply.send(Err("service shut down".into()));
             }
         }
+        self.metrics.ingress_depth.set(self.ingress.depth() as u64);
     }
 
     /// Graceful shutdown: pending partial groups error out, in-flight
     /// groups drain.
     pub fn shutdown(mut self) {
-        let _ = self.tx.send(Msg::Shutdown);
+        let _ = self.ingress.push_control(Control::Shutdown);
         if let Some(h) = self.batcher.take() {
             let _ = h.join();
         }
@@ -513,7 +833,7 @@ impl Service {
 
 impl Drop for Service {
     fn drop(&mut self) {
-        let _ = self.tx.send(Msg::Shutdown);
+        let _ = self.ingress.push_control(Control::Shutdown);
         if let Some(h) = self.batcher.take() {
             let _ = h.join();
         }
@@ -576,20 +896,24 @@ struct GroupCtx {
     scheme: Arc<dyn ServingScheme>,
     started: Instant,
     retries: u32,
+    /// The admission gate shed or rejected arrivals between this group's
+    /// dispatch and the previous one — overload evidence stamped at
+    /// dispatch so the decode pool reports it with the group's other
+    /// adaptive evidence.
+    shed_pressure: bool,
 }
 
 type CtxMap = Arc<Mutex<HashMap<u64, GroupCtx>>>;
 
-/// Fail every sink of a drained queue message (shutdown paths).
-fn fail_msg(msg: Msg, why: &str) {
+/// Fail every sink of a drained control message (shutdown paths).
+fn fail_control(msg: Control, why: &str) {
     match msg {
-        Msg::Query(s) => s.reply.send(Err(why.into())),
-        Msg::Redispatch(r) => {
+        Control::Redispatch(r) => {
             for sink in &r.sinks {
                 sink.send(Err(why.into()));
             }
         }
-        Msg::Reconfigure { .. } | Msg::Shutdown => {}
+        Control::Reconfigure { .. } | Control::Shutdown => {}
     }
 }
 
@@ -646,13 +970,17 @@ struct Dispatcher {
     /// baseline (and silently reverting the operator).
     controller: Option<Arc<Mutex<AdaptiveController>>>,
     group_counter: u64,
+    /// `queries_shed + queries_rejected` as of the previous dispatch —
+    /// the delta stamps `shed_pressure` on each new group.
+    last_shed: u64,
 }
 
 impl Dispatcher {
     /// Flush the pending partial group: split submissions into sinks and
-    /// stage their payloads into one contiguous query block (padding a
-    /// partial group by repeating the last query — padded slots'
-    /// predictions are discarded), then dispatch.
+    /// stage their payloads into one contiguous query block (zero-padding
+    /// a short group up to `K` — pad slots carry no reply sink, so their
+    /// predictions are dropped on delivery and never counted), then
+    /// dispatch.
     fn flush(&mut self, pending: &mut Vec<Submission>) {
         if pending.is_empty() {
             return;
@@ -664,6 +992,7 @@ impl Dispatcher {
         if d == 0 {
             // A zero-length payload cannot stage a block; answer instead of
             // panicking the batcher (the TCP front-end never lets one in).
+            self.metrics.queries_failed.add(submissions.len() as u64);
             for s in submissions {
                 s.reply.send(Err("empty query payload".into()));
             }
@@ -683,9 +1012,13 @@ impl Dispatcher {
             row[n..].fill(0.0);
             sinks.push(s.reply);
         }
-        for j in real..k {
-            let (done, rest) = staged.as_mut_slice().split_at_mut(j * d);
-            rest[..d].copy_from_slice(&done[(real - 1) * d..real * d]);
+        if real < k {
+            // Zero-fill the pad slots (recycled blocks must be fully
+            // overwritten). Pad rows ride the normal encode/decode path
+            // but never reach a client and are excluded from the
+            // served/degraded accounting.
+            self.metrics.pad_slots.add((k - real) as u64);
+            staged.as_mut_slice()[real * d..].fill(0.0);
         }
         self.dispatch(sinks, staged.freeze(), Instant::now(), 0);
     }
@@ -702,6 +1035,14 @@ impl Dispatcher {
         retries: u32,
     ) {
         self.gate.acquire(self.tuning.max_inflight, &self.metrics);
+        // Overload evidence for the adaptive plane: did the admission gate
+        // shed or reject anything since the previous dispatch? Stamped on
+        // the group so the decode pool reports it alongside the group's
+        // latency/verification evidence.
+        let shed_now =
+            self.metrics.queries_shed.get() + self.metrics.queries_rejected.get();
+        let shed_pressure = shed_now > self.last_shed;
+        self.last_shed = shed_now;
         self.group_counter += 1;
         let group = self.group_counter;
         let scheme = self.scheme.clone();
@@ -724,10 +1065,10 @@ impl Dispatcher {
 
         // Register reply routing *before* fan-out: replies may beat us
         // back. The ctx keeps the query block Arc for redispatch.
-        self.ctxs
-            .lock()
-            .unwrap()
-            .insert(group, GroupCtx { sinks, queries, scheme, started, retries });
+        self.ctxs.lock().unwrap().insert(
+            group,
+            GroupCtx { sinks, queries, scheme, started, retries, shed_pressure },
+        );
         // ONE clock reading anchors every deadline this group can fire —
         // hedge and expiry cannot drift apart, and the router delivers the
         // group at most once (see the module docs on the old race).
@@ -763,6 +1104,7 @@ impl Dispatcher {
                 self.router.deregister(group);
                 if let Some(ctx) = self.ctxs.lock().unwrap().remove(&group) {
                     self.metrics.groups_failed.inc();
+                    self.metrics.queries_failed.add(ctx.sinks.len() as u64);
                     for sink in &ctx.sinks {
                         sink.send(Err("worker pool shut down".into()));
                     }
@@ -847,8 +1189,7 @@ fn batcher_loop(
     worker_specs: Vec<WorkerSpec>,
     policy: CollectPolicy,
     tuning: Tuning,
-    rx: Receiver<Msg>,
-    loopback: Sender<Msg>,
+    ingress: Arc<Ingress>,
     metrics: Arc<ServingMetrics>,
 ) {
     let mut pool = WorkerPool::spawn_with_metrics(
@@ -883,7 +1224,7 @@ fn batcher_loop(
         let ctxs = ctxs.clone();
         let gate = gate.clone();
         let metrics = metrics.clone();
-        let loopback = loopback.clone();
+        let ingress = ingress.clone();
         let env = DecodeEnv {
             verify: tuning.verify,
             slo: tuning.slo,
@@ -892,14 +1233,13 @@ fn batcher_loop(
         };
         let handle = std::thread::Builder::new()
             .name(format!("decode-{t}"))
-            .spawn(move || decode_loop(rx, env, ctxs, gate, loopback, metrics))
+            .spawn(move || decode_loop(rx, env, ctxs, gate, ingress, metrics))
             .expect("spawning decode worker");
         decode_handles.push(handle);
     }
-    drop(loopback); // decode threads hold the only loopback clones
 
     let k = scheme.group_size();
-    let flush_after = tuning.flush_after;
+    let batch_deadline = tuning.batch_deadline;
     let group_timeout = tuning.group_timeout;
     let mut dispatcher = Dispatcher {
         pool,
@@ -914,33 +1254,24 @@ fn batcher_loop(
         metrics,
         controller,
         group_counter: 0,
+        last_shed: 0,
     };
     let mut pending: Vec<Submission> = Vec::with_capacity(k);
     let mut first_at: Option<Instant> = None;
     loop {
-        // Wait: bounded by the flush deadline when a partial group exists.
-        let msg = match first_at {
-            Some(t0) => {
-                let deadline = t0 + flush_after;
-                let now = Instant::now();
-                if now >= deadline {
-                    dispatcher.flush(&mut pending);
-                    first_at = None;
-                    continue;
-                }
-                match rx.recv_timeout(deadline - now) {
-                    Ok(m) => m,
-                    Err(std::sync::mpsc::RecvTimeoutError::Timeout) => continue,
-                    Err(_) => break,
-                }
+        // The wait is bounded by the batching deadline whenever a partial
+        // group exists. Control messages are handled without touching
+        // `first_at`: a reconfigure epoch landing while the timer is armed
+        // applies immediately, and the partial group still flushes on its
+        // original clock.
+        let deadline = first_at.map(|t0| t0 + batch_deadline);
+        match ingress.pop(deadline) {
+            Pulled::DeadlineExpired => {
+                dispatcher.metrics.deadline_flushes.inc();
+                dispatcher.flush(&mut pending);
+                first_at = None;
             }
-            None => match rx.recv() {
-                Ok(m) => m,
-                Err(_) => break,
-            },
-        };
-        match msg {
-            Msg::Query(s) => {
+            Pulled::Query(s) => {
                 if pending.is_empty() {
                     first_at = Some(Instant::now());
                 }
@@ -950,27 +1281,35 @@ fn batcher_loop(
                     first_at = None;
                 }
             }
-            Msg::Redispatch(r) => {
+            Pulled::Control(Control::Redispatch(r)) => {
                 dispatcher.dispatch(r.sinks, r.queries, r.started, r.retries);
             }
-            Msg::Reconfigure { s, e } => {
+            Pulled::Control(Control::Reconfigure { s, e }) => {
                 // Group boundary by construction: the batcher applies the
                 // epoch between dispatches, never mid-group.
                 dispatcher.apply_reconfigure(s, e);
             }
-            Msg::Shutdown => break,
+            Pulled::Control(Control::Shutdown) => break,
         }
     }
-    // Fail queries still waiting for a group, and any queued behind the
-    // shutdown message (their sinks would otherwise drop unanswered).
+    // Close the front door — submissions from here on bounce off the
+    // ingress and are answered at the submit site — then fail queries
+    // still waiting for a group and everything queued behind the shutdown
+    // message (their sinks would otherwise drop unanswered).
+    let (control, queries) = ingress.close();
     for s in pending {
         s.reply.send(Err("service shut down before group flush".into()));
     }
-    while let Ok(msg) = rx.try_recv() {
-        fail_msg(msg, "service shut down");
+    for s in queries {
+        s.reply.send(Err("service shut down".into()));
+    }
+    for msg in control {
+        fail_control(msg, "service shut down");
     }
     // Drain in-flight groups: the router expires anything stuck by the
-    // group deadline, so this wait is bounded.
+    // group deadline, so this wait is bounded. Redispatches racing in
+    // during the drain bounce off the closed ingress and are answered at
+    // the push site — no post-drain sweep is needed.
     let Dispatcher { pool, router, gate, decode_tx, .. } = dispatcher;
     gate.drain(group_timeout + Duration::from_secs(2));
     drop(decode_tx);
@@ -979,12 +1318,6 @@ fn batcher_loop(
     }
     router.shutdown();
     pool.shutdown();
-    // Final sweep: queries (or redispatches) that raced into the channel
-    // during the drain window above. (Sends after this point fail and are
-    // answered at the submit site.)
-    while let Ok(msg) = rx.try_recv() {
-        fail_msg(msg, "service shut down");
-    }
 }
 
 /// How many times a verification-failed group is re-encoded and
@@ -1005,11 +1338,11 @@ struct DecodeEnv {
 impl DecodeEnv {
     /// Feed one group's evidence to the adaptive controller and loop any
     /// epoch decision back to the batcher (which applies it at the next
-    /// group boundary).
-    fn observe(&self, obs: GroupObservation, loopback: &Sender<Msg>) {
+    /// group boundary) through the ingress control lane.
+    fn observe(&self, obs: GroupObservation, ingress: &Ingress) {
         if let Some(controller) = &self.controller {
             if let Some(epoch) = controller.lock().unwrap().observe(obs) {
-                let _ = loopback.send(Msg::Reconfigure { s: epoch.s, e: epoch.e });
+                let _ = ingress.push_control(Control::Reconfigure { s: epoch.s, e: epoch.e });
             }
         }
     }
@@ -1018,13 +1351,13 @@ impl DecodeEnv {
 /// Send a verification-failed (or hedge-broken) group back around the loop
 /// for one re-encoded redispatch. Consumes the ctx; the gate slot must
 /// already be released.
-fn redispatch(ctx: GroupCtx, loopback: &Sender<Msg>, metrics: &ServingMetrics) {
+fn redispatch(ctx: GroupCtx, ingress: &Ingress, metrics: &ServingMetrics) {
     metrics.redispatches.inc();
     let GroupCtx { sinks, queries, started, retries, .. } = ctx;
-    let msg = Msg::Redispatch(Redispatch { sinks, queries, retries: retries + 1, started });
-    if let Err(failed) = loopback.send(msg) {
+    let msg = Control::Redispatch(Redispatch { sinks, queries, retries: retries + 1, started });
+    if let Err(failed) = ingress.push_control(msg) {
         // Batcher already gone: answer now.
-        fail_msg(failed.0, "service shut down");
+        fail_control(failed, "service shut down");
     }
 }
 
@@ -1033,7 +1366,7 @@ fn decode_loop(
     env: DecodeEnv,
     ctxs: CtxMap,
     gate: Arc<InflightGate>,
-    loopback: Sender<Msg>,
+    ingress: Arc<Ingress>,
     metrics: Arc<ServingMetrics>,
 ) {
     loop {
@@ -1048,6 +1381,7 @@ fn decode_loop(
             // Dispatch failed mid-fan-out and already answered the clients.
             continue;
         };
+        let shed_pressure = ctx.shed_pressure;
         let result = if collected.complete {
             ctx.scheme.decode(&collected.replies, env.verify, &metrics, &env.blocks)
         } else {
@@ -1081,14 +1415,15 @@ fn decode_loop(
                             collected.group
                         );
                         gate.release();
-                        redispatch(ctx, &loopback, &metrics);
+                        redispatch(ctx, &ingress, &metrics);
                         env.observe(
                             GroupObservation {
                                 verify_failed: true,
                                 hedged: collected.hedged,
+                                shed_pressure,
                                 ..GroupObservation::default()
                             },
-                            &loopback,
+                            &ingress,
                         );
                         continue;
                     }
@@ -1112,6 +1447,15 @@ fn decode_loop(
                 }
                 metrics.groups_decoded.inc();
                 metrics.group_latency.record(latency.as_secs_f64());
+                // Per-query accounting by sink count: pad slots have no
+                // sink, so the zip below drops their predictions and they
+                // never reach these counters.
+                let answered = ctx.sinks.len() as u64;
+                if verify_failed {
+                    metrics.queries_degraded.add(answered);
+                } else {
+                    metrics.queries_served.add(answered);
+                }
                 for (sink, pred) in ctx.sinks.iter().zip(out.predictions.into_iter()) {
                     sink.send(Ok(pred));
                 }
@@ -1122,8 +1466,9 @@ fn decode_loop(
                         slo_miss,
                         hedged: collected.hedged,
                         failed: false,
+                        shed_pressure,
                     },
-                    &loopback,
+                    &ingress,
                 );
             }
             Err(e) => {
@@ -1148,18 +1493,20 @@ fn decode_loop(
                         collected.group
                     );
                     gate.release();
-                    redispatch(ctx, &loopback, &metrics);
+                    redispatch(ctx, &ingress, &metrics);
                     env.observe(
                         GroupObservation {
                             hedged: true,
                             slo_miss,
+                            shed_pressure,
                             ..GroupObservation::default()
                         },
-                        &loopback,
+                        &ingress,
                     );
                     continue;
                 }
                 metrics.groups_failed.inc();
+                metrics.queries_failed.add(ctx.sinks.len() as u64);
                 let msg = format!("group inference failed: {e:#}");
                 for sink in &ctx.sinks {
                     sink.send(Err(msg.clone()));
@@ -1169,9 +1516,10 @@ fn decode_loop(
                         failed: true,
                         slo_miss,
                         hedged: collected.hedged,
+                        shed_pressure,
                         ..GroupObservation::default()
                     },
-                    &loopback,
+                    &ingress,
                 );
             }
         }
@@ -1183,7 +1531,7 @@ fn decode_loop(
 mod tests {
     use super::*;
     use crate::coding::{ApproxIferCode, CodeParams, ParmProxy, Replication, Uncoded};
-    use crate::workers::LinearMockEngine;
+    use crate::workers::{DelayMockEngine, LinearMockEngine};
     // InferenceEngine is already in scope via super::* (service imports it).
 
     fn smooth_payload(j: usize, d: usize) -> Vec<f32> {
@@ -1618,5 +1966,252 @@ mod tests {
             assert_eq!(pred, want, "uncoded must be exact for query {j}");
         }
         svc.shutdown();
+    }
+
+    // ---- deadline-aware batching ------------------------------------------
+
+    #[test]
+    fn deadline_flush_of_a_single_query_pads_and_serves() {
+        // A trickle of 1 query into a K=4 scheme: the deadline must close
+        // the group, zero-pad the 3 empty slots and still answer — and the
+        // pads must stay out of the per-query accounting.
+        let engine = Arc::new(LinearMockEngine::new(6, 3));
+        let svc = Service::builder(approxifer(4, 1, 0))
+            .engine(engine.clone())
+            .batch_deadline(Duration::from_millis(15))
+            .spawn()
+            .unwrap();
+        let t0 = Instant::now();
+        let pred = svc.submit(smooth_payload(0, 6)).wait_timeout(Duration::from_secs(10)).unwrap();
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "deadline flush must not wait for a full group"
+        );
+        let want = engine.infer1(&smooth_payload(0, 6)).unwrap();
+        for t in 0..3 {
+            // Zero pads make the query interpolant less smooth than a full
+            // group of neighboring queries, so the tolerance is looser than
+            // the full-group test's — but the answer must stay recognizable.
+            assert!((pred[t] - want[t]).abs() < 0.75, "c{t}: {} vs {}", pred[t], want[t]);
+        }
+        assert_eq!(svc.metrics.pad_slots.get(), 3);
+        assert_eq!(svc.metrics.deadline_flushes.get(), 1);
+        assert_eq!(svc.metrics.queries_served.get(), 1);
+        assert_eq!(svc.metrics.queries_received.get(), 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn deadline_flush_pads_replication_group_exactly() {
+        // Replication replies are per-slot, so pad slots cannot perturb the
+        // real query at all: the padded single-query group must be exact.
+        let engine = Arc::new(LinearMockEngine::new(8, 4));
+        let svc = Service::builder(Arc::new(Replication::new(3, 1, 0)))
+            .engine(engine.clone())
+            .batch_deadline(Duration::from_millis(15))
+            .spawn()
+            .unwrap();
+        let pred = svc.submit(smooth_payload(0, 8)).wait_timeout(Duration::from_secs(10)).unwrap();
+        let want = engine.infer1(&smooth_payload(0, 8)).unwrap();
+        assert_eq!(pred, want, "padding must not perturb a replicated query");
+        assert_eq!(svc.metrics.pad_slots.get(), 2);
+        assert_eq!(svc.metrics.queries_served.get(), 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn deadline_and_k_flush_racing_serve_each_query_once() {
+        // Arrival gaps straddle the (tiny) batching deadline, so groups
+        // close by K and by deadline interleaved. However the race lands,
+        // every query must be answered exactly once.
+        let engine = Arc::new(LinearMockEngine::new(6, 3));
+        let svc = Service::builder(approxifer(2, 1, 0))
+            .engine(engine)
+            .batch_deadline(Duration::from_millis(1))
+            .spawn()
+            .unwrap();
+        let handles: Vec<PredictionHandle> = (0..40)
+            .map(|j| {
+                if j % 2 == 1 {
+                    std::thread::sleep(Duration::from_micros(700));
+                }
+                svc.submit(smooth_payload(j, 6))
+            })
+            .collect();
+        for h in handles {
+            h.wait_timeout(Duration::from_secs(10)).unwrap();
+        }
+        assert_eq!(svc.metrics.queries_received.get(), 40);
+        assert_eq!(svc.metrics.queries_served.get(), 40);
+        assert_eq!(svc.metrics.queries_shed.get(), 0);
+        assert_eq!(svc.metrics.queries_rejected.get(), 0);
+        assert_eq!(svc.metrics.queries_failed.get(), 0);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn reconfigure_while_a_deadline_is_armed_applies_without_losing_it() {
+        // A control message landing while the batcher's deadline timer is
+        // armed must be applied from the control lane without dropping the
+        // pending query or rearming its deadline.
+        let engine = Arc::new(LinearMockEngine::new(6, 3));
+        let svc = Service::builder(approxifer(4, 1, 1))
+            .engine(engine)
+            .batch_deadline(Duration::from_millis(120))
+            .spawn()
+            .unwrap();
+        let t0 = Instant::now();
+        let h = svc.submit(smooth_payload(0, 6)); // arms the 120ms deadline
+        svc.reconfigure(1, 0); // control lane: processed ahead of queries
+        assert!(h.wait_timeout(Duration::from_secs(10)).is_ok());
+        assert!(
+            t0.elapsed() < Duration::from_millis(800),
+            "the reconfigure must not stall or rearm the deadline, took {:?}",
+            t0.elapsed()
+        );
+        assert_eq!(svc.metrics.reconfigure_epochs.get(), 1);
+        assert_eq!(svc.metrics.current_s.get(), 1);
+        assert_eq!(svc.metrics.current_e.get(), 0);
+        assert_eq!(svc.metrics.deadline_flushes.get(), 1);
+        svc.shutdown();
+    }
+
+    // ---- admission control ------------------------------------------------
+
+    /// Pin the pipeline: K=1, one inflight slot, one decode thread and a
+    /// slow engine. Two interactive submissions park the batcher inside
+    /// `dispatch` (first group computing, second blocked on the inflight
+    /// gate) so everything submitted afterwards sits in the ingress queue
+    /// where admission decisions are deterministic.
+    fn pinned_service(admission: Option<AdmissionConfig>) -> (Service, PredictionHandle, PredictionHandle) {
+        let engine = Arc::new(DelayMockEngine::new(6, 3, Duration::from_millis(300)));
+        let mut b = Service::builder(Arc::new(Uncoded::new(1)))
+            .engine(engine)
+            .max_inflight(1)
+            .decode_threads(1);
+        if let Some(cfg) = admission {
+            b = b.admission(cfg);
+        }
+        let svc = b.spawn().unwrap();
+        let h1 = svc.submit(smooth_payload(0, 6));
+        let h2 = svc.submit(smooth_payload(1, 6));
+        // Let the batcher drain both into the pipeline and block.
+        std::thread::sleep(Duration::from_millis(100));
+        (svc, h1, h2)
+    }
+
+    #[test]
+    fn full_queue_burst_sheds_deterministically_and_accounts_exactly() {
+        let (svc, h1, h2) = pinned_service(Some(AdmissionConfig {
+            queue_depth: 2,
+            shed_policy: ShedPolicy::ShedBatch,
+            default_priority: Priority::Interactive,
+        }));
+        // Queue (depth 2) fills with batch traffic…
+        let b1 = svc.submit_with_priority(smooth_payload(2, 6), Priority::Batch);
+        let b2 = svc.submit_with_priority(smooth_payload(3, 6), Priority::Batch);
+        // …a third batch arrival bounces off the full queue…
+        let b3 = svc.submit_with_priority(smooth_payload(4, 6), Priority::Batch);
+        // …interactive arrivals evict the queued batch queries in FIFO
+        // order…
+        let i3 = svc.submit(smooth_payload(5, 6));
+        let i4 = svc.submit(smooth_payload(6, 6));
+        // …and with no batch victims left, interactive is rejected too.
+        let i5 = svc.submit(smooth_payload(7, 6));
+
+        let shed_b1 = format!("{:#}", b1.wait_timeout(Duration::from_secs(5)).unwrap_err());
+        let shed_b2 = format!("{:#}", b2.wait_timeout(Duration::from_secs(5)).unwrap_err());
+        assert!(shed_b1.contains("shed under overload"), "{shed_b1}");
+        assert!(shed_b2.contains("shed under overload"), "{shed_b2}");
+        let rej_b3 = format!("{:#}", b3.wait_timeout(Duration::from_secs(5)).unwrap_err());
+        let rej_i5 = format!("{:#}", i5.wait_timeout(Duration::from_secs(5)).unwrap_err());
+        assert!(rej_b3.contains("admission queue full"), "{rej_b3}");
+        assert!(rej_i5.contains("admission queue full"), "{rej_i5}");
+        for h in [h1, h2, i3, i4] {
+            assert!(h.wait_timeout(Duration::from_secs(10)).is_ok());
+        }
+        let m = &svc.metrics;
+        assert_eq!(m.queries_received.get(), 8);
+        assert_eq!(m.queries_served.get(), 4);
+        assert_eq!(m.queries_shed.get(), 2);
+        assert_eq!(m.queries_rejected.get(), 2);
+        assert_eq!(m.queries_degraded.get(), 0);
+        assert_eq!(m.queries_failed.get(), 0);
+        assert_eq!(
+            m.queries_received.get(),
+            m.queries_served.get()
+                + m.queries_degraded.get()
+                + m.queries_shed.get()
+                + m.queries_rejected.get()
+                + m.queries_failed.get(),
+            "accounting invariant"
+        );
+        svc.shutdown();
+    }
+
+    #[test]
+    fn interactive_queries_jump_ahead_of_batch_queries() {
+        let (svc, h1, h2) = pinned_service(Some(AdmissionConfig::default()));
+        let (tx, rx) = channel();
+        // Queued while the batcher is pinned: batch first, interactive
+        // second. The serial pipeline then completes them in pop order —
+        // interactive must come out first despite arriving later.
+        svc.submit_tagged_with_priority(100, smooth_payload(2, 6), tx.clone(), Priority::Batch);
+        svc.submit_tagged_with_priority(
+            200,
+            smooth_payload(3, 6),
+            tx.clone(),
+            Priority::Interactive,
+        );
+        assert!(h1.wait_timeout(Duration::from_secs(10)).is_ok());
+        assert!(h2.wait_timeout(Duration::from_secs(10)).is_ok());
+        let (first, r1) = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        let (second, r2) = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert!(r1.is_ok() && r2.is_ok());
+        assert_eq!((first, second), (200, 100), "interactive must be batched first");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn submissions_after_shutdown_are_rejected_and_accounted() {
+        let engine = Arc::new(LinearMockEngine::new(6, 3));
+        let svc = Service::builder(approxifer(2, 1, 0)).engine(engine).spawn().unwrap();
+        // Ask the batcher to exit, then wait for it to close the ingress
+        // (shutdown() itself consumes the service, so drive the control
+        // lane directly).
+        let _ = svc.ingress.push_control(Control::Shutdown);
+        for _ in 0..500 {
+            if svc.ingress.state.lock().unwrap().closed {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert!(svc.ingress.state.lock().unwrap().closed, "batcher never closed the ingress");
+        let err = format!("{:#}", svc.submit(smooth_payload(0, 6)).wait().unwrap_err());
+        assert!(err.contains("shut down"), "{err}");
+        assert_eq!(svc.metrics.queries_received.get(), 1);
+        assert_eq!(svc.metrics.queries_rejected.get(), 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn builder_rejects_zero_queue_depth() {
+        let engine: Arc<dyn InferenceEngine> = Arc::new(LinearMockEngine::new(6, 3));
+        let err = Service::builder(approxifer(2, 1, 0))
+            .engine(engine)
+            .admission(AdmissionConfig { queue_depth: 0, ..AdmissionConfig::default() })
+            .spawn()
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("queue_depth"), "{err:#}");
+    }
+
+    #[test]
+    fn admission_knob_parsers_round_trip() {
+        assert_eq!(Priority::parse("interactive").unwrap(), Priority::Interactive);
+        assert_eq!(Priority::parse(" Batch ").unwrap(), Priority::Batch);
+        assert!(Priority::parse("bulk").is_err());
+        assert_eq!(ShedPolicy::parse("reject").unwrap(), ShedPolicy::Reject);
+        assert_eq!(ShedPolicy::parse("shed:batch").unwrap(), ShedPolicy::ShedBatch);
+        assert!(ShedPolicy::parse("shed:interactive").is_err());
     }
 }

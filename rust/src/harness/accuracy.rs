@@ -33,7 +33,9 @@ use crate::workers::{ByzantineMode, InferenceEngine};
 /// Accuracy outcome of one evaluation.
 #[derive(Clone, Debug)]
 pub struct AccuracyReport {
+    /// Predictions matching ground truth across all evaluated queries.
     pub correct: usize,
+    /// Queries evaluated (failed queries still count toward the total).
     pub total: usize,
     /// Groups whose Byzantine location was confirmed. The two evaluators
     /// count this differently: [`approxifer_accuracy`] requires an exact
@@ -43,6 +45,8 @@ pub struct AccuracyReport {
     /// agree when corruption is large enough that a mislocation cannot
     /// pass verification.
     pub locator_hits: usize,
+    /// Groups where the locator had adversaries to find (the denominator
+    /// of [`AccuracyReport::locator_rate`]).
     pub locator_trials: usize,
     /// Correct predictions per within-group position: `slot_correct[j]`
     /// counts query position `j` across all K-groups. Lets drivers score a
@@ -52,6 +56,7 @@ pub struct AccuracyReport {
 }
 
 impl AccuracyReport {
+    /// Top-1 accuracy over every evaluated query (0.0 when empty).
     pub fn accuracy(&self) -> f64 {
         if self.total == 0 {
             0.0
@@ -60,6 +65,8 @@ impl AccuracyReport {
         }
     }
 
+    /// Fraction of locator trials confirmed (1.0 when nothing was
+    /// injected — no trials means nothing to miss).
     pub fn locator_rate(&self) -> f64 {
         if self.locator_trials == 0 {
             1.0

@@ -26,9 +26,12 @@ use super::report::{pct, Report, Table};
 
 /// Shared state across figure drivers: loaded engines + test sets, cached.
 pub struct FigureContext {
+    /// Artifact manifest (models, datasets, recorded base accuracies).
     pub manifest: Manifest,
     runtime: Runtime,
+    /// Test images evaluated per figure point.
     pub samples: usize,
+    /// Seed for every random draw (straggler/Byzantine selection).
     pub seed: u64,
     engines: HashMap<(String, String), PjrtEngine>,
     /// Batch-1 engines for the unified-service rows (the online service
@@ -38,6 +41,8 @@ pub struct FigureContext {
 }
 
 impl FigureContext {
+    /// Load the artifact manifest under `artifacts` and set up an empty
+    /// engine/test-set cache for the figure drivers.
     pub fn new(artifacts: &str, samples: usize, seed: u64) -> Result<FigureContext> {
         let manifest = Manifest::load(artifacts)?;
         let runtime = Runtime::cpu()?;
@@ -99,6 +104,7 @@ impl FigureContext {
         scheme_accuracy(engine, ts, scheme, profile, verify, samples, seed)
     }
 
+    /// Test set for `dataset`, loaded once and cached.
     pub fn testset(&mut self, dataset: &str) -> Result<&TestSet> {
         if !self.testsets.contains_key(dataset) {
             let ts = TestSet::load(&self.manifest, dataset)?;
@@ -107,6 +113,8 @@ impl FigureContext {
         Ok(self.testsets.get(dataset).unwrap())
     }
 
+    /// The uncoded baseline accuracy recorded in the manifest at build
+    /// time (no inference needed).
     pub fn base_acc_from_manifest(&self, arch: &str, dataset: &str) -> Result<f64> {
         Ok(self.manifest.model(arch, dataset, 128)?.base_test_acc)
     }
@@ -224,14 +232,17 @@ fn fig_accuracy_vs_parm(
     rep.add(t)
 }
 
+/// Figure 3: ApproxIFER vs ParM accuracy under one straggler, K=10.
 pub fn fig3(ctx: &mut FigureContext, rep: &mut Report) -> Result<()> {
     fig_accuracy_vs_parm(ctx, rep, "fig3", 10)
 }
 
+/// Figure 5: ApproxIFER vs ParM accuracy under one straggler, K=8.
 pub fn fig5(ctx: &mut FigureContext, rep: &mut Report) -> Result<()> {
     fig_accuracy_vs_parm(ctx, rep, "fig5", 8)
 }
 
+/// Figure 6: ApproxIFER vs ParM accuracy under one straggler, K=12.
 pub fn fig6(ctx: &mut FigureContext, rep: &mut Report) -> Result<()> {
     fig_accuracy_vs_parm(ctx, rep, "fig6", 12)
 }

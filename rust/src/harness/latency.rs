@@ -28,8 +28,11 @@ use super::report::{Report, Table};
 
 /// One strategy's measured latency profile.
 pub struct LatencyRow {
+    /// Strategy label as printed in the table.
     pub name: String,
+    /// Fleet size the strategy needs at the configured `(K, S, E)`.
     pub workers: usize,
+    /// Per-group latency distribution (mean / percentiles / max).
     pub latency: Summary,
 }
 

@@ -7,8 +7,10 @@ pub mod ablation;
 pub mod accuracy;
 pub mod figures;
 pub mod latency;
+pub mod overload;
 pub mod report;
 
 pub use accuracy::{approxifer_accuracy, base_accuracy, scheme_accuracy, AccuracyReport};
 pub use figures::FigureContext;
+pub use overload::{LoadTrace, OverloadReport};
 pub use report::{Report, Table};

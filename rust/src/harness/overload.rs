@@ -1,0 +1,607 @@
+//! Open-loop overload harness: sustained arrival-process load generation
+//! against the online [`Service`], past saturation.
+//!
+//! The closed-loop experiments elsewhere in the harness (latency, drift)
+//! keep one group in flight and therefore can never observe overload. This
+//! module is the opposite regime: an **open-loop** generator submits on an
+//! arrival schedule derived from a [`LoadTrace`] — *without* waiting for
+//! completions — so queueing, deadline flushes, shedding and rejection all
+//! become visible. Every submission is answered exactly once (served,
+//! degraded, shed, rejected or failed), which is what makes the accounting
+//! invariant in [`OverloadReport::accounting_balances`] exact rather than
+//! statistical.
+//!
+//! The schedule is *virtual-time absolute*: arrival `i` is due at
+//! `start + t_i` where `t_i` comes from the trace alone, so a slow service
+//! cannot slow the generator down (the defining property of open-loop
+//! load — see "coordinated omission").
+
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coordinator::{AdmissionConfig, Priority, Service, ShedPolicy, Strategy};
+use crate::coding::CodeParams;
+use crate::util::rng::Rng;
+use crate::util::stats::percentile_sorted;
+use crate::workers::{DelayMockEngine, InferenceEngine};
+
+/// An arrival-process trace: the offered-load shape the open-loop
+/// generator follows. All rates are in requests per (virtual) second.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum LoadTrace {
+    /// Constant-rate Poisson arrivals.
+    Poisson {
+        /// Mean arrival rate (req/s).
+        rate: f64,
+    },
+    /// A smooth day/night swing: the rate follows a raised cosine between
+    /// `low` and `high` with the given period.
+    Diurnal {
+        /// Trough arrival rate (req/s).
+        low: f64,
+        /// Peak arrival rate (req/s).
+        high: f64,
+        /// Full swing period in (virtual) seconds.
+        period_s: f64,
+    },
+    /// Bursty on/off (interrupted Poisson): `rate` during `on_ms` bursts,
+    /// silence for `off_ms` between them.
+    OnOff {
+        /// Arrival rate inside a burst (req/s).
+        rate: f64,
+        /// Burst length (ms).
+        on_ms: f64,
+        /// Silence between bursts (ms).
+        off_ms: f64,
+    },
+    /// A flash crowd: steady `base` rate with one `spike` burst of
+    /// `spike_ms` starting at `at_ms`.
+    FlashCrowd {
+        /// Steady-state arrival rate (req/s).
+        base: f64,
+        /// Spike arrival rate (req/s).
+        spike: f64,
+        /// Spike onset (ms into the run).
+        at_ms: f64,
+        /// Spike duration (ms).
+        spike_ms: f64,
+    },
+}
+
+impl LoadTrace {
+    /// Parse a trace spec: a bare name (`poisson`, `diurnal`, `bursty`,
+    /// `flash-crowd`) takes that shape's defaults; the colon-separated
+    /// long forms pin every parameter.
+    ///
+    /// ```
+    /// use approxifer::harness::overload::LoadTrace;
+    ///
+    /// assert_eq!(LoadTrace::parse("poisson:200").unwrap(),
+    ///            LoadTrace::Poisson { rate: 200.0 });
+    /// assert_eq!(LoadTrace::parse("bursty:300:50:150").unwrap(),
+    ///            LoadTrace::OnOff { rate: 300.0, on_ms: 50.0, off_ms: 150.0 });
+    /// // Bare names give a canonical default shape:
+    /// assert!(matches!(LoadTrace::parse("flash-crowd").unwrap(),
+    ///                  LoadTrace::FlashCrowd { .. }));
+    /// assert!(LoadTrace::parse("warp-drive").is_err());
+    /// ```
+    ///
+    /// Long forms: `poisson:RATE`, `diurnal:LOW:HIGH:PERIOD_S`,
+    /// `bursty:RATE:ON_MS:OFF_MS`, `flash-crowd:BASE:SPIKE:AT_MS:SPIKE_MS`.
+    pub fn parse(spec: &str) -> Result<LoadTrace> {
+        let spec = spec.trim();
+        let (name, rest) = match spec.split_once(':') {
+            Some((n, r)) => (n, Some(r)),
+            None => (spec, None),
+        };
+        let nums = |r: &str, n: usize| -> Result<Vec<f64>> {
+            let xs: Vec<f64> = r
+                .split(':')
+                .map(|x| x.parse::<f64>().with_context(|| format!("bad number '{x}' in '{spec}'")))
+                .collect::<Result<_>>()?;
+            if xs.len() != n {
+                bail!("trace '{spec}': expected {n} parameter(s), got {}", xs.len());
+            }
+            if xs.iter().any(|x| !x.is_finite() || *x <= 0.0) {
+                bail!("trace '{spec}': parameters must be positive and finite");
+            }
+            Ok(xs)
+        };
+        match (name, rest) {
+            ("poisson", None) => Ok(LoadTrace::Poisson { rate: 200.0 }),
+            ("poisson", Some(r)) => {
+                let p = nums(r, 1)?;
+                Ok(LoadTrace::Poisson { rate: p[0] })
+            }
+            ("diurnal", None) => {
+                Ok(LoadTrace::Diurnal { low: 50.0, high: 400.0, period_s: 2.0 })
+            }
+            ("diurnal", Some(r)) => {
+                let p = nums(r, 3)?;
+                if p[1] < p[0] {
+                    bail!("trace '{spec}': high rate below low rate");
+                }
+                Ok(LoadTrace::Diurnal { low: p[0], high: p[1], period_s: p[2] })
+            }
+            ("bursty", None) => {
+                Ok(LoadTrace::OnOff { rate: 300.0, on_ms: 50.0, off_ms: 150.0 })
+            }
+            ("bursty", Some(r)) => {
+                let p = nums(r, 3)?;
+                Ok(LoadTrace::OnOff { rate: p[0], on_ms: p[1], off_ms: p[2] })
+            }
+            ("flash-crowd", None) => Ok(LoadTrace::FlashCrowd {
+                base: 50.0,
+                spike: 2000.0,
+                at_ms: 250.0,
+                spike_ms: 150.0,
+            }),
+            ("flash-crowd", Some(r)) => {
+                let p = nums(r, 4)?;
+                Ok(LoadTrace::FlashCrowd { base: p[0], spike: p[1], at_ms: p[2], spike_ms: p[3] })
+            }
+            _ => bail!(
+                "unknown trace '{spec}' (poisson[:RATE] | diurnal[:LOW:HIGH:PERIOD_S] | \
+                 bursty[:RATE:ON_MS:OFF_MS] | flash-crowd[:BASE:SPIKE:AT_MS:SPIKE_MS])"
+            ),
+        }
+    }
+
+    /// Short label for report rows (`poisson`, `diurnal`, `bursty`,
+    /// `flash-crowd`).
+    pub fn label(&self) -> &'static str {
+        match self {
+            LoadTrace::Poisson { .. } => "poisson",
+            LoadTrace::Diurnal { .. } => "diurnal",
+            LoadTrace::OnOff { .. } => "bursty",
+            LoadTrace::FlashCrowd { .. } => "flash-crowd",
+        }
+    }
+
+    /// Instantaneous arrival rate (req/s) at virtual time `t` seconds.
+    pub fn rate_at(&self, t: f64) -> f64 {
+        match *self {
+            LoadTrace::Poisson { rate } => rate,
+            LoadTrace::Diurnal { low, high, period_s } => {
+                let phase = 2.0 * std::f64::consts::PI * t / period_s;
+                low + (high - low) * 0.5 * (1.0 - phase.cos())
+            }
+            LoadTrace::OnOff { rate, on_ms, off_ms } => {
+                let cycle = (on_ms + off_ms) / 1e3;
+                let pos = t.rem_euclid(cycle);
+                if pos < on_ms / 1e3 {
+                    rate
+                } else {
+                    0.0
+                }
+            }
+            LoadTrace::FlashCrowd { base, spike, at_ms, spike_ms } => {
+                let (at, end) = (at_ms / 1e3, (at_ms + spike_ms) / 1e3);
+                if t >= at && t < end {
+                    spike
+                } else {
+                    base
+                }
+            }
+        }
+    }
+
+    /// Next arrival instant after virtual time `t` (seconds). Sampled as
+    /// an exponential gap at the instantaneous rate — exact for the
+    /// homogeneous shapes, a standard piecewise approximation for the
+    /// time-varying ones (rate changes are slow or step-shaped relative
+    /// to typical gaps). Off periods are skipped, not sampled.
+    pub fn next_arrival(&self, t: f64, rng: &mut Rng) -> f64 {
+        let mut at = t;
+        // Jump over silent stretches (OnOff's off window is the only
+        // zero-rate region any shape produces).
+        if self.rate_at(at) <= 0.0 {
+            if let LoadTrace::OnOff { on_ms, off_ms, .. } = *self {
+                let cycle = (on_ms + off_ms) / 1e3;
+                at = (at / cycle).floor() * cycle + cycle; // next on-edge
+            }
+        }
+        at + rng.exponential(1.0 / self.rate_at(at))
+    }
+
+    /// Mean offered rate over the first `horizon_s` seconds (req/s) —
+    /// the x-axis value of an offered-load curve.
+    pub fn mean_rate(&self, horizon_s: f64) -> f64 {
+        match *self {
+            LoadTrace::Poisson { rate } => rate,
+            LoadTrace::OnOff { rate, on_ms, off_ms } => rate * on_ms / (on_ms + off_ms),
+            // Numerical average is robust for the time-varying shapes and
+            // this is a reporting path, not a hot one.
+            _ => {
+                let steps = 1000;
+                (0..steps)
+                    .map(|i| self.rate_at(horizon_s * (i as f64 + 0.5) / steps as f64))
+                    .sum::<f64>()
+                    / steps as f64
+            }
+        }
+    }
+}
+
+/// One open-loop run's outcome: the offered load, the per-class
+/// accounting, goodput and the served-latency tail.
+#[derive(Clone, Debug)]
+pub struct OverloadReport {
+    /// Trace label ([`LoadTrace::label`]).
+    pub trace: String,
+    /// Serving scheme label (e.g. `approxifer(K=4,S=1,E=0)`).
+    pub scheme: String,
+    /// Fault profile label (`honest`, `straggler`, …).
+    pub faults: String,
+    /// Mean offered arrival rate over the run (req/s).
+    pub offered_rps: f64,
+    /// Queries submitted (== received by the admission gate).
+    pub submitted: u64,
+    /// Served with a verified (or verification-off) decode.
+    pub served: u64,
+    /// Served from a decode that failed verification out of retries.
+    pub degraded: u64,
+    /// Evicted from the ingress queue by the shed policy.
+    pub shed: u64,
+    /// Refused at the admission gate (queue full, or post-shutdown).
+    pub rejected: u64,
+    /// Admitted but failed downstream (group timeout, pool gone…).
+    pub failed: u64,
+    /// Successfully served queries per wall-clock second.
+    pub goodput_rps: f64,
+    /// Median served latency (ms).
+    pub p50_ms: f64,
+    /// p99 served latency (ms).
+    pub p99_ms: f64,
+    /// p99.9 served latency (ms).
+    pub p999_ms: f64,
+    /// Wall-clock run duration (seconds).
+    pub wall_s: f64,
+}
+
+impl OverloadReport {
+    /// The overload accounting invariant: every submitted query lands in
+    /// exactly one terminal class.
+    pub fn accounting_balances(&self) -> bool {
+        self.submitted == self.served + self.degraded + self.shed + self.rejected + self.failed
+    }
+
+    /// One human-readable report line.
+    pub fn line(&self) -> String {
+        format!(
+            "{:<12} {:<24} {:<10} offered={:>7.0}rps goodput={:>7.0}rps \
+             served={} degraded={} shed={} rejected={} failed={} \
+             p50={:.2}ms p99={:.2}ms p99.9={:.2}ms",
+            self.trace,
+            self.scheme,
+            self.faults,
+            self.offered_rps,
+            self.goodput_rps,
+            self.served,
+            self.degraded,
+            self.shed,
+            self.rejected,
+            self.failed,
+            self.p50_ms,
+            self.p99_ms,
+            self.p999_ms,
+        )
+    }
+
+    /// One JSON object row for `BENCH_PR.json` overload curves.
+    pub fn json_row(&self) -> String {
+        format!(
+            "{{\"trace\": \"{}\", \"scheme\": \"{}\", \"faults\": \"{}\", \
+             \"offered_rps\": {:.1}, \"goodput_rps\": {:.1}, \
+             \"submitted\": {}, \"served\": {}, \"degraded\": {}, \"shed\": {}, \
+             \"rejected\": {}, \"failed\": {}, \
+             \"p50_ms\": {:.3}, \"p99_ms\": {:.3}, \"p999_ms\": {:.3}, \
+             \"wall_s\": {:.3}}}",
+            self.trace,
+            self.scheme,
+            self.faults,
+            self.offered_rps,
+            self.goodput_rps,
+            self.submitted,
+            self.served,
+            self.degraded,
+            self.shed,
+            self.rejected,
+            self.failed,
+            self.p50_ms,
+            self.p99_ms,
+            self.p999_ms,
+            self.wall_s,
+        )
+    }
+}
+
+/// Snapshot of the per-query accounting counters, for before/after deltas.
+struct Accounting {
+    received: u64,
+    served: u64,
+    degraded: u64,
+    shed: u64,
+    rejected: u64,
+    failed: u64,
+}
+
+fn snapshot(svc: &Service) -> Accounting {
+    let m = &svc.metrics;
+    Accounting {
+        received: m.queries_received.get(),
+        served: m.queries_served.get(),
+        degraded: m.queries_degraded.get(),
+        shed: m.queries_shed.get(),
+        rejected: m.queries_rejected.get(),
+        failed: m.queries_failed.get(),
+    }
+}
+
+/// Drive `total` open-loop arrivals from `trace` into a running service
+/// and wait for every one of them to resolve.
+///
+/// * The schedule is absolute virtual time: arrival `i` fires at
+///   `start + t_i`, independent of service backpressure (open loop).
+/// * `batch_every` > 0 tags every `batch_every`-th query [`Priority::Batch`]
+///   (the sheddable class); 0 submits everything at the default priority.
+/// * Latency percentiles cover **successfully served** queries only —
+///   shed/rejected answers are immediate errors and would fake a fast tail.
+/// * `payload_dim` is the engine's query payload dimension (the service
+///   does not hold its engine, so the caller supplies it).
+#[allow(clippy::too_many_arguments)]
+pub fn drive(
+    svc: &Service,
+    trace: &LoadTrace,
+    total: usize,
+    payload_dim: usize,
+    seed: u64,
+    batch_every: usize,
+    scheme_label: &str,
+    fault_label: &str,
+) -> Result<OverloadReport> {
+    assert!(total > 0, "overload drive needs at least one arrival");
+    let d = payload_dim;
+    let before = snapshot(svc);
+    let (tx, rx) = channel();
+    let collector = std::thread::Builder::new()
+        .name("overload-collector".into())
+        .spawn(move || {
+            let mut done: Vec<(u64, bool, Instant)> = Vec::with_capacity(total);
+            for _ in 0..total {
+                // Every submission is answered exactly once (served,
+                // degraded, shed, rejected or failed), so this loop always
+                // terminates after `total` messages.
+                let (id, res) = match rx.recv() {
+                    Ok(m) => m,
+                    Err(_) => break,
+                };
+                done.push((id, res.is_ok(), Instant::now()));
+            }
+            done
+        })
+        .map_err(|e| anyhow::anyhow!("spawning overload collector: {e}"))?;
+
+    let mut rng = Rng::new(seed);
+    let start = Instant::now();
+    let mut t_virtual = 0.0f64;
+    let mut submitted_at: Vec<Instant> = Vec::with_capacity(total);
+    for id in 0..total as u64 {
+        t_virtual = trace.next_arrival(t_virtual, &mut rng);
+        let due = start + Duration::from_secs_f64(t_virtual);
+        let now = Instant::now();
+        if due > now {
+            std::thread::sleep(due - now);
+        }
+        let payload: Vec<f32> =
+            (0..d).map(|t| ((id as f32) * 0.13 + (t as f32) * 0.017).sin()).collect();
+        let priority = if batch_every > 0 && (id as usize) % batch_every == batch_every - 1 {
+            Priority::Batch
+        } else {
+            Priority::Interactive
+        };
+        submitted_at.push(Instant::now());
+        svc.submit_tagged_with_priority(id, payload, tx.clone(), priority);
+    }
+    drop(tx);
+    let done = collector.join().expect("overload collector panicked");
+    let wall = start.elapsed().as_secs_f64();
+    if done.len() != total {
+        bail!("overload collector saw {} of {total} replies", done.len());
+    }
+
+    let mut served_lat: Vec<f64> = done
+        .iter()
+        .filter(|(_, ok, _)| *ok)
+        .map(|(id, _, at)| at.duration_since(submitted_at[*id as usize]).as_secs_f64())
+        .collect();
+    served_lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |q: f64| {
+        if served_lat.is_empty() {
+            0.0
+        } else {
+            percentile_sorted(&served_lat, q) * 1e3
+        }
+    };
+
+    let after = snapshot(svc);
+    let report = OverloadReport {
+        trace: trace.label().to_string(),
+        scheme: scheme_label.to_string(),
+        faults: fault_label.to_string(),
+        offered_rps: total as f64 / t_virtual.max(1e-9),
+        submitted: after.received - before.received,
+        served: after.served - before.served,
+        degraded: after.degraded - before.degraded,
+        shed: after.shed - before.shed,
+        rejected: after.rejected - before.rejected,
+        failed: after.failed - before.failed,
+        goodput_rps: (after.served - before.served) as f64 / wall.max(1e-9),
+        p50_ms: pct(0.50),
+        p99_ms: pct(0.99),
+        p999_ms: pct(0.999),
+        wall_s: wall,
+    };
+    if !report.accounting_balances() {
+        bail!(
+            "overload accounting does not balance: submitted={} vs \
+             served={} + degraded={} + shed={} + rejected={} + failed={}",
+            report.submitted,
+            report.served,
+            report.degraded,
+            report.shed,
+            report.rejected,
+            report.failed,
+        );
+    }
+    Ok(report)
+}
+
+/// CLI entry (the `overload` subcommand): run one trace against a
+/// mock-engine deployment of a scheme with admission control, print the
+/// report line. Artifact-free by design — the point is the serving
+/// dynamics, not the model.
+pub fn run(
+    strategy: Strategy,
+    trace_spec: &str,
+    admission_spec: Option<&str>,
+    requests: usize,
+    queue_depth: usize,
+    seed: u64,
+) -> Result<()> {
+    let trace = LoadTrace::parse(trace_spec)?;
+    let shed_policy = match admission_spec {
+        Some(s) => ShedPolicy::parse(s)?,
+        None => ShedPolicy::Reject,
+    };
+    // Shedding only has victims when a sheddable class exists: under
+    // shed:batch, tag every 4th query Batch so the policy is exercised.
+    let batch_every = if shed_policy == ShedPolicy::ShedBatch { 4 } else { 0 };
+    let params = CodeParams::new(4, 1, 0);
+    let scheme = strategy.scheme(params);
+    let label = format!(
+        "{}(K={},S={},E={})",
+        scheme.name(),
+        scheme.group_size(),
+        scheme.stragglers_tolerated(),
+        scheme.byzantine_tolerated(),
+    );
+    let engine: Arc<dyn InferenceEngine> =
+        Arc::new(DelayMockEngine::new(64, 8, Duration::from_micros(400)));
+    let svc = Service::builder(scheme)
+        .engine(engine)
+        .batch_deadline(Duration::from_millis(5))
+        .admission(AdmissionConfig {
+            queue_depth,
+            shed_policy,
+            default_priority: Priority::Interactive,
+        })
+        .seed(seed)
+        .spawn()?;
+    println!(
+        "overload: trace={trace_spec} scheme={label} queue_depth={queue_depth} \
+         shed_policy={shed_policy:?}{}",
+        if batch_every > 0 {
+            format!(" (every {batch_every}th query tagged batch)")
+        } else {
+            String::new()
+        },
+    );
+    let report = drive(&svc, &trace, requests, 64, seed, batch_every, &label, "honest")?;
+    println!("{}", report.line());
+    svc.shutdown();
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::ApproxIferCode;
+    use crate::workers::LinearMockEngine;
+
+    #[test]
+    fn parse_covers_all_shapes_and_rejects_junk() {
+        assert_eq!(LoadTrace::parse("poisson:120").unwrap(), LoadTrace::Poisson { rate: 120.0 });
+        assert_eq!(
+            LoadTrace::parse("diurnal:10:100:3").unwrap(),
+            LoadTrace::Diurnal { low: 10.0, high: 100.0, period_s: 3.0 }
+        );
+        assert_eq!(
+            LoadTrace::parse("flash-crowd:50:900:100:80").unwrap(),
+            LoadTrace::FlashCrowd { base: 50.0, spike: 900.0, at_ms: 100.0, spike_ms: 80.0 }
+        );
+        for bare in ["poisson", "diurnal", "bursty", "flash-crowd"] {
+            assert!(LoadTrace::parse(bare).is_ok(), "{bare}");
+        }
+        assert!(LoadTrace::parse("poisson:0").is_err(), "zero rate");
+        assert!(LoadTrace::parse("poisson:1:2").is_err(), "arity");
+        assert!(LoadTrace::parse("diurnal:100:10:3").is_err(), "high < low");
+        assert!(LoadTrace::parse("sawtooth:5").is_err(), "unknown shape");
+    }
+
+    #[test]
+    fn rates_follow_their_shapes() {
+        let d = LoadTrace::Diurnal { low: 10.0, high: 110.0, period_s: 2.0 };
+        assert!((d.rate_at(0.0) - 10.0).abs() < 1e-9, "trough at t=0");
+        assert!((d.rate_at(1.0) - 110.0).abs() < 1e-9, "peak at half period");
+        let b = LoadTrace::OnOff { rate: 200.0, on_ms: 50.0, off_ms: 150.0 };
+        assert_eq!(b.rate_at(0.01), 200.0);
+        assert_eq!(b.rate_at(0.1), 0.0);
+        assert_eq!(b.rate_at(0.21), 200.0, "second cycle");
+        let f = LoadTrace::FlashCrowd { base: 20.0, spike: 500.0, at_ms: 100.0, spike_ms: 50.0 };
+        assert_eq!(f.rate_at(0.05), 20.0);
+        assert_eq!(f.rate_at(0.12), 500.0);
+        assert_eq!(f.rate_at(0.2), 20.0);
+    }
+
+    #[test]
+    fn arrivals_advance_and_skip_off_windows() {
+        let mut rng = Rng::new(11);
+        let b = LoadTrace::OnOff { rate: 1000.0, on_ms: 10.0, off_ms: 990.0 };
+        let mut t = 0.0;
+        for _ in 0..100 {
+            let next = b.next_arrival(t, &mut rng);
+            assert!(next > t, "virtual time must advance");
+            t = next;
+        }
+        // 100 arrivals at 1000 req/s over 10ms-on/990ms-off cycles need
+        // ~10 cycles of virtual time — the off windows were skipped, not
+        // waited through at rate 0 (which would never return).
+        assert!(t > 1.0, "off windows must be jumped: t={t}");
+    }
+
+    #[test]
+    fn mean_rate_matches_the_duty_cycle() {
+        let b = LoadTrace::OnOff { rate: 400.0, on_ms: 50.0, off_ms: 150.0 };
+        assert!((b.mean_rate(10.0) - 100.0).abs() < 1e-9);
+        let d = LoadTrace::Diurnal { low: 0.5, high: 99.5, period_s: 1.0 };
+        // Raised cosine averages to the midpoint over whole periods.
+        assert!((d.mean_rate(4.0) - 50.0).abs() < 1.0, "{}", d.mean_rate(4.0));
+    }
+
+    #[test]
+    fn open_loop_drive_accounts_every_submission() {
+        let engine: Arc<dyn InferenceEngine> = Arc::new(LinearMockEngine::new(8, 3));
+        let svc = Service::builder(Arc::new(ApproxIferCode::new(CodeParams::new(4, 1, 0))))
+            .engine(engine)
+            .batch_deadline(Duration::from_millis(3))
+            .admission(AdmissionConfig {
+                queue_depth: 16,
+                shed_policy: ShedPolicy::ShedBatch,
+                default_priority: Priority::Interactive,
+            })
+            .spawn()
+            .unwrap();
+        let trace = LoadTrace::Poisson { rate: 2000.0 };
+        let report =
+            drive(&svc, &trace, 120, 8, 7, 3, "approxifer(K=4,S=1,E=0)", "honest").unwrap();
+        assert_eq!(report.submitted, 120);
+        assert!(report.accounting_balances(), "{}", report.line());
+        assert!(report.served > 0, "{}", report.line());
+        assert!(report.wall_s > 0.0);
+        svc.shutdown();
+    }
+}

@@ -10,13 +10,18 @@ use anyhow::{Context, Result};
 
 /// One experiment's table under construction.
 pub struct Table {
+    /// Short identifier; doubles as the CSV file stem.
     pub id: String,
+    /// Human-readable caption printed above the rendered table.
     pub title: String,
+    /// Column headers; every row must match this arity.
     pub columns: Vec<String>,
+    /// Accumulated rows, already formatted as strings.
     pub rows: Vec<Vec<String>>,
 }
 
 impl Table {
+    /// Start an empty table with the given identity and column headers.
     pub fn new(id: &str, title: &str, columns: &[&str]) -> Table {
         Table {
             id: id.to_string(),
@@ -26,6 +31,7 @@ impl Table {
         }
     }
 
+    /// Append one row; panics on a column-count mismatch (a driver bug).
     pub fn row(&mut self, cells: &[String]) {
         assert_eq!(cells.len(), self.columns.len(), "row arity mismatch in {}", self.id);
         self.rows.push(cells.to_vec());
@@ -60,6 +66,7 @@ impl Table {
         out
     }
 
+    /// Plain CSV rendering (header line + one line per row).
     pub fn to_csv(&self) -> String {
         let mut out = self.columns.join(",");
         out.push('\n');
@@ -74,14 +81,19 @@ impl Table {
 /// Collects tables and flushes them to stdout + CSV files.
 pub struct Report {
     outdir: Option<PathBuf>,
+    /// Every table added so far, in insertion order.
     pub tables: Vec<Table>,
 }
 
 impl Report {
+    /// A report that prints to stdout and, with `outdir` set, also writes
+    /// one `<id>.csv` per table under that directory.
     pub fn new(outdir: Option<&str>) -> Report {
         Report { outdir: outdir.map(PathBuf::from), tables: Vec::new() }
     }
 
+    /// Render the table to stdout, persist its CSV (when an output
+    /// directory is configured), and retain it in [`Report::tables`].
     pub fn add(&mut self, table: Table) -> Result<()> {
         println!("{}", table.render());
         if let Some(dir) = &self.outdir {

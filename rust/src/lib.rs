@@ -91,7 +91,6 @@ pub mod config;
 pub mod coordinator;
 #[allow(missing_docs)] // tracked gap: dataset/golden loaders
 pub mod data;
-#[allow(missing_docs)] // tracked gap: figure drivers & report writers
 pub mod harness;
 #[allow(missing_docs)] // tracked gap: dense linalg kernels
 pub mod linalg;

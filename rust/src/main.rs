@@ -7,6 +7,8 @@
 //! approxifer figures  [--only figN] [--samples N] [--out DIR] [--seed S]
 //!                                                         # regenerate paper figures
 //! approxifer latency  [--groups N] [--out DIR]            # latency experiment
+//! approxifer overload [--trace SPEC] [--admission POLICY] [--requests N]
+//!                     [--queue-depth N]                   # open-loop overload run
 //! approxifer golden                                        # cross-language goldens check
 //! approxifer info                                          # artifact inventory
 //! ```
@@ -27,7 +29,7 @@ use approxifer::sim::faults::FaultProfile;
 use approxifer::util::logging;
 use approxifer::workers::PjrtEngine;
 
-const USAGE: &str = "usage: approxifer <serve|infer|figures|latency|golden|info> [flags]
+const USAGE: &str = "usage: approxifer <serve|infer|figures|latency|overload|golden|info> [flags]
   common: --config FILE  --set section.key=value (repeatable)  --artifacts DIR
           --faults PROFILE (e.g. honest, crash:2@8, slow:1:0:40:0.5,
           flaky:1:0.2, byz-random:2:10, byz-collude:2:15, churn:3)
@@ -36,6 +38,10 @@ const USAGE: &str = "usage: approxifer <serve|infer|figures|latency|golden|info>
           serving.slo_ms=MS)
   figures: --only ID  --samples N  --out DIR  --seed S
   latency: --groups N  --out DIR
+  overload: --trace SPEC (poisson[:RATE] | diurnal[:LOW:HIGH:PERIOD_S] |
+            bursty[:RATE:ON_MS:OFF_MS] | flash-crowd[:BASE:SPIKE:AT_MS:SPIKE_MS])
+            --admission POLICY (reject | shed:batch)  --requests N
+            --queue-depth N  --seed S
   infer:   --samples N";
 
 fn main() {
@@ -60,6 +66,10 @@ fn run(argv: &[String]) -> Result<()> {
         ("out", true),
         ("seed", true),
         ("groups", true),
+        ("trace", true),
+        ("admission", true),
+        ("requests", true),
+        ("queue-depth", true),
         ("help", false),
     ]);
     let args = Args::parse(argv, &spec).map_err(|e| anyhow::anyhow!("{e}"))?;
@@ -82,6 +92,16 @@ fn run(argv: &[String]) -> Result<()> {
                 "--faults applies to serve/infer only (got {})",
                 other.unwrap_or("none")
             ),
+        }
+    }
+    for flag in ["trace", "admission", "requests", "queue-depth"] {
+        // The overload generator owns these; refuse silently ignoring them
+        // on the other subcommands (same policy as --faults).
+        if args.get(flag).is_some() && args.subcommand.as_deref() != Some("overload") {
+            bail!(
+                "--{flag} applies to overload only (got {})",
+                args.subcommand.as_deref().unwrap_or("none")
+            );
         }
     }
     if args.has("adaptive") {
@@ -114,6 +134,14 @@ fn run(argv: &[String]) -> Result<()> {
             let mut rep = Report::new(args.get("out"));
             harness::latency::run(&mut rep, groups, args.get_u64("seed", 7)?)
         }
+        "overload" => harness::overload::run(
+            cfg.strategy,
+            args.get("trace").unwrap_or("poisson"),
+            args.get("admission"),
+            args.get_usize("requests", 2000)?,
+            args.get_usize("queue-depth", 256)?,
+            args.get_u64("seed", 7)?,
+        ),
         "golden" => golden(&cfg),
         "info" => info(&cfg),
         other => bail!("unknown subcommand '{other}'"),
@@ -133,7 +161,7 @@ fn build_service(cfg: &AppConfig) -> Result<(Arc<Service>, usize)> {
     let scheme = cfg.strategy.scheme(cfg.params);
     let mut builder = Service::builder(scheme.clone())
         .engine(engine)
-        .flush_after(cfg.flush_after)
+        .batch_deadline(cfg.batch_deadline)
         .worker_latency(cfg.worker_latency)
         .verify(if cfg.verify_decode {
             VerifyPolicy::on(cfg.verify_tol)
@@ -146,6 +174,15 @@ fn build_service(cfg: &AppConfig) -> Result<(Arc<Service>, usize)> {
         .group_timeout(cfg.group_timeout);
     if let Some(slo) = cfg.slo {
         builder = builder.slo(slo);
+    }
+    if let Some(admission) = cfg.admission {
+        builder = builder.admission(admission);
+        log::info!(
+            "admission control on: queue_depth={} shed_policy={:?} priority={:?}",
+            admission.queue_depth,
+            admission.shed_policy,
+            admission.default_priority
+        );
     }
     if let Some(adaptive) = cfg.adaptive {
         builder = builder.adaptive(adaptive);

@@ -204,6 +204,28 @@ pub struct ServingMetrics {
     /// fleet too small, changed group size) — the controller degrades to
     /// alerting through this counter.
     pub adaptive_alerts: Counter,
+    /// Queries answered with a verified (or verification-disabled) decode.
+    pub queries_served: Counter,
+    /// Queries answered from a decode that failed verification after the
+    /// redispatch budget was spent — delivered best-effort, flagged here.
+    pub queries_degraded: Counter,
+    /// Queued batch-priority queries evicted by an interactive arrival while
+    /// the ingress queue was full (`admission.shed_policy = shed:batch`).
+    pub queries_shed: Counter,
+    /// Queries refused at the admission gate because the ingress queue was
+    /// full and no shed victim was available.
+    pub queries_rejected: Counter,
+    /// Queries answered with an error after admission (group failure,
+    /// empty payload, or worker fleet gone).
+    pub queries_failed: Counter,
+    /// Zero-filled group slots dispatched to round a short group up to K.
+    /// Pad slots carry no reply sink and are excluded from the
+    /// served/degraded/shed/rejected accounting.
+    pub pad_slots: Counter,
+    /// Groups closed by the batching deadline rather than by reaching K.
+    pub deadline_flushes: Counter,
+    /// Queued (admitted, not yet batched) queries after the last admit.
+    pub ingress_depth: Gauge,
     /// Straggler budget `S` of the scheme currently serving.
     pub current_s: Gauge,
     /// Byzantine budget `E` of the scheme currently serving.
@@ -262,6 +284,18 @@ impl ServingMetrics {
             self.hedge_attempts.get(),
             self.hedge_wins.get(),
             self.slo_misses.get(),
+        ));
+        out.push_str(&format!(
+            "admission: served={} degraded={} shed={} rejected={} failed={} pad_slots={} \
+             deadline_flushes={} depth={}\n",
+            self.queries_served.get(),
+            self.queries_degraded.get(),
+            self.queries_shed.get(),
+            self.queries_rejected.get(),
+            self.queries_failed.get(),
+            self.pad_slots.get(),
+            self.deadline_flushes.get(),
+            self.ingress_depth.get(),
         ));
         out.push_str(&self.group_latency.summary_line("  group"));
         out.push('\n');
@@ -353,5 +387,17 @@ mod tests {
         let r = m.report();
         assert!(r.contains("queries=3"));
         assert!(r.contains("group"));
+    }
+
+    #[test]
+    fn metrics_report_has_admission_line() {
+        let m = ServingMetrics::new();
+        m.queries_served.add(5);
+        m.queries_shed.add(2);
+        m.deadline_flushes.inc();
+        let r = m.report();
+        assert!(r.contains("admission: served=5"));
+        assert!(r.contains("shed=2"));
+        assert!(r.contains("deadline_flushes=1"));
     }
 }

@@ -13,6 +13,7 @@ pub struct Summary {
     pub p50: f64,
     pub p90: f64,
     pub p99: f64,
+    pub p999: f64,
 }
 
 impl Summary {
@@ -37,6 +38,7 @@ impl Summary {
             p50: percentile_sorted(&sorted, 0.50),
             p90: percentile_sorted(&sorted, 0.90),
             p99: percentile_sorted(&sorted, 0.99),
+            p999: percentile_sorted(&sorted, 0.999),
         }
     }
 }
@@ -120,6 +122,7 @@ mod tests {
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 5.0);
         assert!((s.p50 - 3.0).abs() < 1e-12);
+        assert!(s.p99 <= s.p999 && s.p999 <= s.max, "percentiles must be ordered");
     }
 
     #[test]

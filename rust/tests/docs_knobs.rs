@@ -1,0 +1,74 @@
+//! Documentation drift gates: the operator's handbook must document every
+//! config knob the schema parses (and nothing else), and the entry-point
+//! docs must link to it.
+
+use std::collections::BTreeSet;
+
+use approxifer::config::KNOWN_KEYS;
+
+const OPERATIONS: &str =
+    include_str!(concat!(env!("CARGO_MANIFEST_DIR"), "/../docs/OPERATIONS.md"));
+const README: &str = include_str!(concat!(env!("CARGO_MANIFEST_DIR"), "/../README.md"));
+const ARCHITECTURE: &str =
+    include_str!(concat!(env!("CARGO_MANIFEST_DIR"), "/../docs/ARCHITECTURE.md"));
+
+/// Knob-table rows in OPERATIONS.md look like `| `section.key` | ... |`;
+/// the first backticked cell is the key.
+fn documented_knobs() -> BTreeSet<String> {
+    let mut keys = BTreeSet::new();
+    for line in OPERATIONS.lines() {
+        let Some(rest) = line.trim_start().strip_prefix("| `") else { continue };
+        let Some(end) = rest.find('`') else { continue };
+        let key = &rest[..end];
+        // Only dotted section.key cells are knobs; other tables may lead
+        // with backticked words (metric names, CLI flags).
+        if key.contains('.') && !key.contains(' ') {
+            keys.insert(key.to_string());
+        }
+    }
+    keys
+}
+
+#[test]
+fn operations_handbook_documents_every_config_knob() {
+    let documented = documented_knobs();
+    let known: BTreeSet<String> = KNOWN_KEYS.iter().map(|k| k.to_string()).collect();
+    let missing: Vec<_> = known.difference(&documented).collect();
+    let stale: Vec<_> = documented.difference(&known).collect();
+    assert!(
+        missing.is_empty(),
+        "knobs parsed by the config schema but absent from docs/OPERATIONS.md: {missing:?}"
+    );
+    assert!(
+        stale.is_empty(),
+        "knobs documented in docs/OPERATIONS.md but unknown to the config schema: {stale:?}"
+    );
+}
+
+#[test]
+fn readme_and_architecture_link_to_the_handbook() {
+    assert!(
+        README.contains("docs/OPERATIONS.md"),
+        "README.md must point operators at docs/OPERATIONS.md"
+    );
+    assert!(
+        ARCHITECTURE.contains("OPERATIONS.md"),
+        "docs/ARCHITECTURE.md must link to the operator's handbook"
+    );
+}
+
+#[test]
+fn handbook_covers_the_overload_outcome_vocabulary() {
+    for word in ["served", "degraded", "shed", "rejected", "failed"] {
+        assert!(
+            OPERATIONS.contains(word),
+            "docs/OPERATIONS.md must define the '{word}' outcome class"
+        );
+    }
+    for section in ["runbook", "Runbook"] {
+        if OPERATIONS.contains(section) {
+            return;
+        }
+    }
+    panic!("docs/OPERATIONS.md must contain a runbook section");
+}

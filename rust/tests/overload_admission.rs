@@ -1,0 +1,123 @@
+//! Integration tests for the overload subsystem: deadline-aware batching
+//! under trickle load, and the admission accounting invariant under a
+//! deterministic flash-crowd driven through the open-loop harness.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use approxifer::coding::{ApproxIferCode, CodeParams};
+use approxifer::coordinator::{AdmissionConfig, Priority, Service, ShedPolicy};
+use approxifer::harness::overload::{drive, LoadTrace};
+use approxifer::workers::{DelayMockEngine, InferenceEngine, LinearMockEngine};
+
+fn payload(j: usize, d: usize) -> Vec<f32> {
+    (0..d).map(|t| ((j as f32) * 0.23 + (t as f32) * 0.013).sin()).collect()
+}
+
+/// The acceptance bar for deadline-aware batching: a trickle workload
+/// (arrival rate far below K per deadline) completes **every** query within
+/// the batching deadline plus group service latency — nothing waits for a
+/// full group that will never form.
+#[test]
+fn trickle_workload_never_waits_for_a_full_group() {
+    let deadline = Duration::from_millis(25);
+    let engine: Arc<dyn InferenceEngine> = Arc::new(LinearMockEngine::new(8, 3));
+    let svc = Service::builder(Arc::new(ApproxIferCode::new(CodeParams::new(4, 1, 0))))
+        .engine(engine)
+        .batch_deadline(deadline)
+        .spawn()
+        .unwrap();
+    let queries = 6;
+    for j in 0..queries {
+        let t0 = Instant::now();
+        let h = svc.submit(payload(j, 8));
+        h.wait_timeout(Duration::from_secs(10)).unwrap();
+        let elapsed = t0.elapsed();
+        // Generous decode/scheduling slack on CI boxes, but far below the
+        // "wait forever for 3 more queries" failure mode this guards.
+        assert!(
+            elapsed < deadline + Duration::from_secs(2),
+            "query {j} took {elapsed:?} — stalled past the batching deadline"
+        );
+        // Spacing: the next query arrives after this one's group closed,
+        // so every group is a singleton deadline flush.
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(svc.metrics.queries_served.get(), queries as u64);
+    assert_eq!(svc.metrics.deadline_flushes.get(), queries as u64);
+    assert_eq!(svc.metrics.pad_slots.get(), (queries * 3) as u64);
+    svc.shutdown();
+}
+
+/// The accounting invariant under a deterministic flash-crowd: arrivals
+/// far outrun a deliberately slow pipeline, the bounded queue sheds and
+/// rejects, and submitted == served + degraded + shed + rejected + failed
+/// still balances exactly.
+#[test]
+fn flash_crowd_overload_accounts_every_query() {
+    let engine: Arc<dyn InferenceEngine> =
+        Arc::new(DelayMockEngine::new(8, 3, Duration::from_millis(2)));
+    let svc = Service::builder(Arc::new(ApproxIferCode::new(CodeParams::new(4, 1, 0))))
+        .engine(engine)
+        .batch_deadline(Duration::from_millis(5))
+        .max_inflight(1)
+        .decode_threads(1)
+        .admission(AdmissionConfig {
+            queue_depth: 4,
+            shed_policy: ShedPolicy::ShedBatch,
+            default_priority: Priority::Interactive,
+        })
+        .spawn()
+        .unwrap();
+    // ~10ms of gentle base load, then 300-odd arrivals at 50k req/s into a
+    // depth-4 queue over a pipeline that serves one 4-group per ~8ms+:
+    // overload is certain, not probabilistic.
+    let trace =
+        LoadTrace::FlashCrowd { base: 400.0, spike: 50_000.0, at_ms: 10.0, spike_ms: 500.0 };
+    let report =
+        drive(&svc, &trace, 320, 8, 23, 4, "approxifer(K=4,S=1,E=0)", "honest").unwrap();
+    assert_eq!(report.submitted, 320, "{}", report.line());
+    assert!(report.accounting_balances(), "{}", report.line());
+    assert!(
+        report.shed + report.rejected > 0,
+        "the spike must overflow the depth-4 queue: {}",
+        report.line()
+    );
+    assert!(report.served > 0, "{}", report.line());
+    assert_eq!(report.failed, 0, "honest fleet must not fail downstream: {}", report.line());
+    // The service metrics agree with the report deltas.
+    let m = &svc.metrics;
+    assert_eq!(
+        m.queries_received.get(),
+        m.queries_served.get()
+            + m.queries_degraded.get()
+            + m.queries_shed.get()
+            + m.queries_rejected.get()
+            + m.queries_failed.get()
+    );
+    // The shed/served split shows up on the human report line too.
+    let line = m.report();
+    assert!(line.contains("admission:"), "{line}");
+    svc.shutdown();
+}
+
+/// Offered load below capacity with admission on: nothing is shed, and the
+/// goodput matches the served count (sanity for the bench's curve math).
+#[test]
+fn underload_with_admission_serves_everything() {
+    let engine: Arc<dyn InferenceEngine> = Arc::new(LinearMockEngine::new(8, 3));
+    let svc = Service::builder(Arc::new(ApproxIferCode::new(CodeParams::new(4, 1, 0))))
+        .engine(engine)
+        .batch_deadline(Duration::from_millis(3))
+        .admission(AdmissionConfig::default())
+        .spawn()
+        .unwrap();
+    let trace = LoadTrace::Poisson { rate: 300.0 };
+    let report =
+        drive(&svc, &trace, 60, 8, 31, 0, "approxifer(K=4,S=1,E=0)", "honest").unwrap();
+    assert_eq!(report.served, 60, "{}", report.line());
+    assert_eq!(report.shed + report.rejected + report.failed, 0, "{}", report.line());
+    assert!(report.p50_ms > 0.0 && report.p50_ms <= report.p999_ms, "{}", report.line());
+    assert!(report.goodput_rps > 0.0);
+    svc.shutdown();
+}
