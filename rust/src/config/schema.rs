@@ -8,7 +8,7 @@ use anyhow::{bail, Context, Result};
 use crate::coding::CodeParams;
 use crate::coordinator::{AdaptiveConfig, AdmissionConfig, Priority, ShedPolicy, Strategy};
 use crate::sim::faults::FaultProfile;
-use crate::workers::LatencyModel;
+use crate::workers::{FleetConfig, LatencyModel};
 
 use super::parser::ConfigDoc;
 
@@ -43,6 +43,11 @@ pub const KNOWN_KEYS: &[&str] = &[
     "workers.latency",
     "faults.profile",
     "faults.seed",
+    "fleet.enabled",
+    "fleet.bind",
+    "fleet.workers",
+    "fleet.heartbeat_ms",
+    "fleet.miss_threshold",
 ];
 
 /// Fully resolved application config.
@@ -90,6 +95,11 @@ pub struct AppConfig {
     pub admission: Option<AdmissionConfig>,
     /// Worker latency model (same for all workers).
     pub worker_latency: LatencyModel,
+    /// Remote worker fleet (`fleet.*` namespace): when set, `serve` binds
+    /// a fleet listener and waits for `approxifer worker` processes to
+    /// join instead of spawning in-process worker threads. `None` when
+    /// `fleet.enabled` is unset/false.
+    pub fleet: Option<FleetConfig>,
     /// Named fault profile spec (see [`FaultProfile::parse`]): which
     /// workers crash / straggle / flake / corrupt, deterministically under
     /// `seed`. `None` = all honest.
@@ -123,6 +133,7 @@ impl Default for AppConfig {
             adaptive: None,
             admission: None,
             worker_latency: LatencyModel::None,
+            fleet: None,
             fault_profile: None,
             verify_decode: false,
             verify_tol: 0.4,
@@ -318,6 +329,41 @@ impl AppConfig {
         }
         if let Some(v) = doc.get_str("workers.latency") {
             cfg.worker_latency = LatencyModel::parse(&v).map_err(|e| anyhow::anyhow!(e))?;
+        }
+        if doc.get_bool("fleet.enabled")?.unwrap_or(false) {
+            let mut fleet = FleetConfig::default();
+            if let Some(v) = doc.get_str("fleet.bind") {
+                fleet.bind = v;
+            }
+            if let Some(v) = doc.get_usize("fleet.workers")? {
+                if v == 0 {
+                    bail!("fleet.workers must be >= 1");
+                }
+                fleet.workers = Some(v);
+            }
+            if let Some(ms) = doc.get_f64("fleet.heartbeat_ms")? {
+                if ms <= 0.0 {
+                    bail!("fleet.heartbeat_ms must be positive");
+                }
+                fleet.heartbeat = Duration::from_secs_f64(ms / 1e3);
+            }
+            if let Some(v) = doc.get_usize("fleet.miss_threshold")? {
+                if v == 0 {
+                    bail!("fleet.miss_threshold must be >= 1");
+                }
+                fleet.miss_threshold = v as u32;
+            }
+            cfg.fleet = Some(fleet);
+        } else {
+            // Same rule as adaptive.*/admission.*: tuning a disabled fleet
+            // listener is a footgun, not a no-op.
+            for key in
+                ["fleet.bind", "fleet.workers", "fleet.heartbeat_ms", "fleet.miss_threshold"]
+            {
+                if doc.get_str(key).is_some() {
+                    bail!("'{key}' is set but fleet.enabled is not true");
+                }
+            }
         }
         if let Some(v) = doc.get_bool("serving.verify_decode")? {
             cfg.verify_decode = v;
@@ -596,6 +642,48 @@ mod tests {
         let doc =
             ConfigDoc::parse("[admission]\nenabled = true\npriority = \"bulk\"\n").unwrap();
         assert!(AppConfig::from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn fleet_knobs_parse_and_gate() {
+        let doc = ConfigDoc::parse(
+            r#"
+            [fleet]
+            enabled = true
+            bind = "0.0.0.0:7801"
+            workers = 12
+            heartbeat_ms = 250
+            miss_threshold = 5
+            "#,
+        )
+        .unwrap();
+        let cfg = AppConfig::from_doc(&doc).unwrap();
+        let f = cfg.fleet.expect("fleet enabled");
+        assert_eq!(f.bind, "0.0.0.0:7801");
+        assert_eq!(f.workers, Some(12));
+        assert_eq!(f.heartbeat, Duration::from_millis(250));
+        assert_eq!(f.miss_threshold, 5);
+
+        // Defaults apply when only the switch is set; the slot count then
+        // follows the scheme's worker need at serve time.
+        let doc = ConfigDoc::parse("[fleet]\nenabled = true\n").unwrap();
+        let f = AppConfig::from_doc(&doc).unwrap().fleet.unwrap();
+        assert_eq!(f.bind, "127.0.0.1:7800");
+        assert_eq!(f.workers, None);
+        assert_eq!(f.heartbeat, Duration::from_millis(500));
+        assert_eq!(f.miss_threshold, 3);
+
+        // Orphan sub-keys without the master switch are refused.
+        let doc = ConfigDoc::parse("[fleet]\nbind = \"0.0.0.0:7801\"\n").unwrap();
+        let err = AppConfig::from_doc(&doc).unwrap_err();
+        assert!(format!("{err:#}").contains("fleet.enabled"), "{err:#}");
+
+        // Out-of-range values fail at load time.
+        for bad in ["workers = 0", "heartbeat_ms = 0", "miss_threshold = 0"] {
+            let doc =
+                ConfigDoc::parse(&format!("[fleet]\nenabled = true\n{bad}\n")).unwrap();
+            assert!(AppConfig::from_doc(&doc).is_err(), "{bad} should be rejected");
+        }
     }
 
     #[test]

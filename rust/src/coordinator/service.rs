@@ -106,8 +106,8 @@ use crate::coding::{BlockPool, CollectPolicy, GroupBlock, RowView, ServingScheme
 use crate::metrics::ServingMetrics;
 use crate::sim::faults::FaultProfile;
 use crate::workers::{
-    CollectedGroup, InferenceEngine, LatencyModel, ReplyRouter, WorkerPool, WorkerSpec,
-    WorkerTask,
+    CollectedGroup, InferenceEngine, LatencyModel, ReplyRouter, WorkerFleet, WorkerPool,
+    WorkerSpec, WorkerTask,
 };
 
 use super::adaptive::{AdaptiveConfig, AdaptiveController, GroupObservation};
@@ -126,6 +126,15 @@ struct Tuning {
     slo: Option<Duration>,
     adaptive: Option<AdaptiveConfig>,
     fault_hook: Option<Arc<dyn Fn(u64) -> FaultPlan + Send + Sync>>,
+}
+
+/// What the batcher builds its worker fleet from: an engine + specs for
+/// the in-process thread pool (the default), or a pre-built fleet the
+/// caller attached with [`ServiceBuilder::fleet`] (typically a
+/// [`crate::workers::RemoteFleet`], where workers own their engines).
+enum FleetSource {
+    InProcess { engine: Arc<dyn InferenceEngine>, specs: Vec<WorkerSpec> },
+    Attached(Box<dyn WorkerFleet>),
 }
 
 /// Priority class of one submitted query. Interactive queries are batched
@@ -219,6 +228,7 @@ pub struct ServiceBuilder {
     slo: Option<Duration>,
     adaptive: Option<AdaptiveConfig>,
     fault_hook: Option<Arc<dyn Fn(u64) -> FaultPlan + Send + Sync>>,
+    fleet: Option<Box<dyn WorkerFleet>>,
 }
 
 impl ServiceBuilder {
@@ -239,6 +249,7 @@ impl ServiceBuilder {
             slo: None,
             adaptive: None,
             fault_hook: None,
+            fleet: None,
         }
     }
 
@@ -358,6 +369,18 @@ impl ServiceBuilder {
         self
     }
 
+    /// Run on a pre-built worker fleet instead of spawning the in-process
+    /// pool — typically a bound [`crate::workers::RemoteFleet`]. Mutually
+    /// exclusive with [`ServiceBuilder::engine`] (a remote fleet's workers
+    /// own their engines) and with the in-process injection surface
+    /// ([`ServiceBuilder::workers`]/`worker_latency`/`fault_profile`/
+    /// `fault_hook` — with remote workers, fault programs run inside the
+    /// worker binary). The fleet must cover the scheme's worker count.
+    pub fn fleet(mut self, fleet: Box<dyn WorkerFleet>) -> Self {
+        self.fleet = Some(fleet);
+        self
+    }
+
     /// Validate and start the service. Misconfiguration — a worker-spec or
     /// fault-profile count that doesn't match the scheme's pool — is an
     /// `Err` here, never a mid-serve panic.
@@ -365,9 +388,6 @@ impl ServiceBuilder {
         let scheme = self.scheme;
         let nw = scheme.num_workers();
         let name = scheme.name().to_string();
-        let Some(engine) = self.engine else {
-            bail!("service '{name}': no inference engine configured");
-        };
         if self.max_inflight == 0 {
             bail!("service '{name}': max_inflight must be >= 1");
         }
@@ -426,37 +446,81 @@ impl ServiceBuilder {
         // an inconsistent one must fail here (and at every reconfigure
         // epoch), not panic the router thread.
         let policy = validated_policy(&name, scheme.as_ref())?;
-        let mut specs = match self.worker_specs {
-            Some(specs) => {
-                if specs.len() != nw {
+        let source = match self.fleet {
+            Some(fleet) => {
+                // A remote (or otherwise pre-built) fleet: its workers own
+                // their engines, and the in-process injection surface
+                // (specs, uniform latency, stamped fault profiles, the
+                // per-group fault hook) cannot reach them.
+                if self.engine.is_some() {
                     bail!(
-                        "service '{name}': {} worker specs for a scheme that encodes \
-                         for {nw} workers",
-                        specs.len()
+                        "service '{name}': don't set an engine with an attached fleet — \
+                         fleet workers own their engines"
                     );
                 }
-                specs
+                if self.worker_specs.is_some()
+                    || self.worker_latency.is_some()
+                    || self.fault_profile.is_some()
+                {
+                    bail!(
+                        "service '{name}': worker specs/latency/fault profiles are \
+                         in-process pool injections; with an attached fleet, run fault \
+                         programs inside the worker binary (worker --behavior)"
+                    );
+                }
+                if self.fault_hook.is_some() {
+                    bail!(
+                        "service '{name}': the per-group fault hook is an in-process \
+                         scheduler injection and cannot reach an attached fleet"
+                    );
+                }
+                if fleet.num_workers() < nw {
+                    bail!(
+                        "service '{name}': attached fleet has {} slots, scheme encodes \
+                         for {nw} workers",
+                        fleet.num_workers()
+                    );
+                }
+                FleetSource::Attached(fleet)
             }
-            None => vec![WorkerSpec::default(); nw],
+            None => {
+                let Some(engine) = self.engine else {
+                    bail!("service '{name}': no inference engine configured");
+                };
+                let mut specs = match self.worker_specs {
+                    Some(specs) => {
+                        if specs.len() != nw {
+                            bail!(
+                                "service '{name}': {} worker specs for a scheme that \
+                                 encodes for {nw} workers",
+                                specs.len()
+                            );
+                        }
+                        specs
+                    }
+                    None => vec![WorkerSpec::default(); nw],
+                };
+                if let Some(latency) = self.worker_latency {
+                    for spec in specs.iter_mut() {
+                        spec.latency = latency;
+                    }
+                }
+                if let Some(profile) = &self.fault_profile {
+                    if profile.behaviors.len() != nw {
+                        bail!(
+                            "service '{name}': fault profile '{}' sized for {} workers, \
+                             scheme needs {nw}",
+                            profile.name,
+                            profile.behaviors.len()
+                        );
+                    }
+                    for (spec, &b) in specs.iter_mut().zip(&profile.behaviors) {
+                        spec.behavior = b;
+                    }
+                }
+                FleetSource::InProcess { engine, specs }
+            }
         };
-        if let Some(latency) = self.worker_latency {
-            for spec in specs.iter_mut() {
-                spec.latency = latency;
-            }
-        }
-        if let Some(profile) = &self.fault_profile {
-            if profile.behaviors.len() != nw {
-                bail!(
-                    "service '{name}': fault profile '{}' sized for {} workers, scheme \
-                     needs {nw}",
-                    profile.name,
-                    profile.behaviors.len()
-                );
-            }
-            for (spec, &b) in specs.iter_mut().zip(&profile.behaviors) {
-                spec.behavior = b;
-            }
-        }
         let tuning = Tuning {
             batch_deadline: self.batch_deadline,
             verify: self.verify,
@@ -481,7 +545,7 @@ impl ServiceBuilder {
         let ing = ingress.clone();
         let batcher = std::thread::Builder::new()
             .name("coordinator".into())
-            .spawn(move || batcher_loop(engine, s, specs, policy, tuning, ing, m))
+            .spawn(move || batcher_loop(source, s, policy, tuning, ing, m))
             .map_err(|e| anyhow::anyhow!("spawning coordinator: {e}"))?;
         Ok(Service { ingress, batcher: Some(batcher), scheme, default_priority, metrics })
     }
@@ -947,7 +1011,7 @@ fn validated_policy(name: &str, scheme: &dyn ServingScheme) -> Result<CollectPol
 /// service's lifetime, so the per-group entry points only take the group's
 /// own sinks/payloads.
 struct Dispatcher {
-    pool: WorkerPool,
+    fleet: Box<dyn WorkerFleet>,
     router: ReplyRouter,
     /// The scheme currently encoding new groups. Reconfigure epochs swap
     /// it (with `policy`) at group boundaries; in-flight groups keep the
@@ -1097,16 +1161,17 @@ impl Dispatcher {
                 },
                 corrupt: if plan.byzantine.contains(&i) { plan.byz_mode } else { None },
             };
-            if self.pool.send(i, task).is_err() {
-                // Worker pool is gone; fail the group unless the router
-                // already delivered it (whoever removes the ctx owns the
-                // gate slot).
+            if self.fleet.send(i, task).is_err() {
+                // The fleet itself is gone (per-worker unavailability comes
+                // back through the reply stream instead); fail the group
+                // unless the router already delivered it (whoever removes
+                // the ctx owns the gate slot).
                 self.router.deregister(group);
                 if let Some(ctx) = self.ctxs.lock().unwrap().remove(&group) {
                     self.metrics.groups_failed.inc();
                     self.metrics.queries_failed.add(ctx.sinks.len() as u64);
                     for sink in &ctx.sinks {
-                        sink.send(Err("worker pool shut down".into()));
+                        sink.send(Err("worker fleet shut down".into()));
                     }
                     self.gate.release();
                 }
@@ -1130,11 +1195,11 @@ impl Dispatcher {
                     new.group_size()
                 );
             }
-            if new.num_workers() > self.pool.num_workers() {
+            if new.num_workers() > self.fleet.num_workers() {
                 bail!(
                     "(S={s}, E={e}) needs {} workers, fleet was provisioned with {}",
                     new.num_workers(),
-                    self.pool.num_workers()
+                    self.fleet.num_workers()
                 );
             }
             // Mirror the spawn-time rules: hedging or adaptive control +
@@ -1160,7 +1225,7 @@ impl Dispatcher {
                 log::info!(
                     "scheme '{name}': reconfigure epoch -> S={s} E={e} ({} of {} workers)",
                     new.num_workers(),
-                    self.pool.num_workers()
+                    self.fleet.num_workers()
                 );
                 self.metrics.current_s.set(new.stragglers_tolerated() as u64);
                 self.metrics.current_e.set(new.byzantine_tolerated() as u64);
@@ -1184,21 +1249,29 @@ impl Dispatcher {
 
 #[allow(clippy::too_many_arguments)]
 fn batcher_loop(
-    engine: Arc<dyn InferenceEngine>,
+    source: FleetSource,
     scheme: Arc<dyn ServingScheme>,
-    worker_specs: Vec<WorkerSpec>,
     policy: CollectPolicy,
     tuning: Tuning,
     ingress: Arc<Ingress>,
     metrics: Arc<ServingMetrics>,
 ) {
-    let mut pool = WorkerPool::spawn_with_metrics(
-        engine,
-        &worker_specs,
-        tuning.seed ^ 0x77,
-        Some(metrics.clone()),
-    );
-    let router = pool.start_router(metrics.clone());
+    let mut fleet: Box<dyn WorkerFleet> = match source {
+        FleetSource::InProcess { engine, specs } => Box::new(WorkerPool::spawn_with_metrics(
+            engine,
+            &specs,
+            tuning.seed ^ 0x77,
+            Some(metrics.clone()),
+        )),
+        FleetSource::Attached(fleet) => {
+            // Replays any churn the fleet counted before the service
+            // existed into the service's counters.
+            fleet.attach_metrics(metrics.clone());
+            fleet
+        }
+    };
+    let replies = fleet.take_replies().expect("fleet reply stream already taken");
+    let router = ReplyRouter::start(replies, metrics.clone());
     let ctxs: CtxMap = Arc::new(Mutex::new(HashMap::new()));
     let gate = Arc::new(InflightGate::new());
     // One pool for the whole data plane: query blocks, coded blocks and
@@ -1242,7 +1315,7 @@ fn batcher_loop(
     let batch_deadline = tuning.batch_deadline;
     let group_timeout = tuning.group_timeout;
     let mut dispatcher = Dispatcher {
-        pool,
+        fleet,
         router,
         scheme,
         policy,
@@ -1310,14 +1383,14 @@ fn batcher_loop(
     // group deadline, so this wait is bounded. Redispatches racing in
     // during the drain bounce off the closed ingress and are answered at
     // the push site — no post-drain sweep is needed.
-    let Dispatcher { pool, router, gate, decode_tx, .. } = dispatcher;
+    let Dispatcher { fleet, router, gate, decode_tx, .. } = dispatcher;
     gate.drain(group_timeout + Duration::from_secs(2));
     drop(decode_tx);
     for h in decode_handles {
         let _ = h.join();
     }
     router.shutdown();
-    pool.shutdown();
+    fleet.shutdown();
 }
 
 /// How many times a verification-failed group is re-encoded and
@@ -1716,6 +1789,66 @@ mod tests {
             .decode_threads(0)
             .spawn()
             .is_err());
+    }
+
+    // ---- attached fleets (the WorkerFleet seam) ---------------------------
+
+    #[test]
+    fn builder_rejects_engine_with_attached_fleet() {
+        let engine: Arc<dyn InferenceEngine> = Arc::new(LinearMockEngine::new(6, 3));
+        let pool = WorkerPool::spawn(engine.clone(), &vec![WorkerSpec::default(); 3], 1);
+        let err = Service::builder(approxifer(2, 1, 0))
+            .engine(engine)
+            .fleet(Box::new(pool))
+            .spawn()
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("own their engines"), "{err:#}");
+    }
+
+    #[test]
+    fn builder_rejects_injection_surface_with_attached_fleet() {
+        let engine: Arc<dyn InferenceEngine> = Arc::new(LinearMockEngine::new(6, 3));
+        let pool = WorkerPool::spawn(engine, &vec![WorkerSpec::default(); 3], 1);
+        let err = Service::builder(approxifer(2, 1, 0))
+            .fleet(Box::new(pool))
+            .fault_profile(FaultProfile::honest(3))
+            .spawn()
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("worker binary"), "{err:#}");
+    }
+
+    #[test]
+    fn builder_rejects_undersized_fleet() {
+        let engine: Arc<dyn InferenceEngine> = Arc::new(LinearMockEngine::new(6, 3));
+        // approxifer(2,1,0) needs 3 workers; the fleet has 2 slots.
+        let pool = WorkerPool::spawn(engine, &vec![WorkerSpec::default(); 2], 1);
+        let err = Service::builder(approxifer(2, 1, 0))
+            .fleet(Box::new(pool))
+            .spawn()
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("2 slots"), "{err:#}");
+    }
+
+    #[test]
+    fn service_runs_on_an_attached_fleet() {
+        // Attach an externally built pool through the WorkerFleet seam: the
+        // service must serve exactly as if it had spawned the pool itself.
+        let engine: Arc<dyn InferenceEngine> = Arc::new(LinearMockEngine::new(6, 3));
+        let pool = WorkerPool::spawn(engine, &vec![WorkerSpec::default(); 3], 1);
+        let svc = Service::builder(approxifer(2, 1, 0))
+            .fleet(Box::new(pool))
+            .flush_after(Duration::from_millis(5))
+            .spawn()
+            .unwrap();
+        let h0 = svc.submit(smooth_payload(0, 6));
+        let h1 = svc.submit(smooth_payload(1, 6));
+        let p0 = h0.wait_timeout(Duration::from_secs(10)).unwrap();
+        let p1 = h1.wait_timeout(Duration::from_secs(10)).unwrap();
+        assert_eq!(p0.len(), 3);
+        assert_eq!(p1.len(), 3);
+        assert!(p0.iter().chain(p1.iter()).all(|x| x.is_finite()));
+        assert_eq!(svc.metrics.groups_decoded.get(), 1);
+        svc.shutdown();
     }
 
     // ---- adaptive control plane & SLO hedging -----------------------------

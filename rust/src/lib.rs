@@ -54,6 +54,13 @@
 //!   ([`crate::sim::faults`]: per-worker crash / slow-tail / flaky /
 //!   Byzantine behavior programs), and the experiment harness that
 //!   regenerates every figure in the paper through the same service.
+//!   The fleet itself sits behind the [`crate::workers::WorkerFleet`]
+//!   trait with two interchangeable implementations — the in-process
+//!   thread [`crate::workers::WorkerPool`] and the
+//!   [`crate::workers::RemoteFleet`] of `approxifer worker` processes
+//!   speaking the shared frame codec over TCP, with heartbeat eviction,
+//!   reconnect backoff, and join/leave churn surfaced to the same
+//!   collect-quota/redispatch/degraded ladder.
 //! * **Layer 2** — the hosted models: pure-JAX CNN classifiers, trained at
 //!   build time and lowered AOT to HLO text (`python/compile/`).
 //! * **Layer 1** — Pallas kernels for the compute hot spots (tiled matmul

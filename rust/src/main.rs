@@ -11,6 +11,8 @@
 //!                     [--queue-depth N]                   # open-loop overload run
 //! approxifer golden                                        # cross-language goldens check
 //! approxifer info                                          # artifact inventory
+//! approxifer worker   [--connect ADDR] [--slot N] [--engine SPEC]
+//!                     [--behavior PROG]                    # standalone fleet worker
 //! ```
 
 use std::sync::Arc;
@@ -29,7 +31,7 @@ use approxifer::sim::faults::FaultProfile;
 use approxifer::util::logging;
 use approxifer::workers::PjrtEngine;
 
-const USAGE: &str = "usage: approxifer <serve|infer|figures|latency|overload|golden|info> [flags]
+const USAGE: &str = "usage: approxifer <serve|infer|figures|latency|overload|golden|info|worker> [flags]
   common: --config FILE  --set section.key=value (repeatable)  --artifacts DIR
           --faults PROFILE (e.g. honest, crash:2@8, slow:1:0:40:0.5,
           flaky:1:0.2, byz-random:2:10, byz-collude:2:15, churn:3)
@@ -42,7 +44,13 @@ const USAGE: &str = "usage: approxifer <serve|infer|figures|latency|overload|gol
             bursty[:RATE:ON_MS:OFF_MS] | flash-crowd[:BASE:SPIKE:AT_MS:SPIKE_MS])
             --admission POLICY (reject | shed:batch)  --requests N
             --queue-depth N  --seed S
-  infer:   --samples N";
+  infer:   --samples N
+  worker:  --connect ADDR (coordinator fleet address)  --slot N
+           --engine SPEC (mock:<payload>:<classes>[:<delay_ms>])
+           --behavior PROG (honest | crash@R | slow:B:T:P | flaky:P |
+           byz-random:SIGMA | byz-signflip | byz-target:CLASS:BOOST |
+           byz-collude:PACT:SCALE)  --seed S  --heartbeat-ms MS
+           --reconnect-max N  --mute-after-ms MS (test hook)";
 
 fn main() {
     logging::init();
@@ -70,6 +78,13 @@ fn run(argv: &[String]) -> Result<()> {
         ("admission", true),
         ("requests", true),
         ("queue-depth", true),
+        ("connect", true),
+        ("slot", true),
+        ("engine", true),
+        ("behavior", true),
+        ("heartbeat-ms", true),
+        ("reconnect-max", true),
+        ("mute-after-ms", true),
         ("help", false),
     ]);
     let args = Args::parse(argv, &spec).map_err(|e| anyhow::anyhow!("{e}"))?;
@@ -100,6 +115,17 @@ fn run(argv: &[String]) -> Result<()> {
         if args.get(flag).is_some() && args.subcommand.as_deref() != Some("overload") {
             bail!(
                 "--{flag} applies to overload only (got {})",
+                args.subcommand.as_deref().unwrap_or("none")
+            );
+        }
+    }
+    for flag in
+        ["connect", "slot", "engine", "behavior", "heartbeat-ms", "reconnect-max", "mute-after-ms"]
+    {
+        // Same policy for the worker process's own knobs.
+        if args.get(flag).is_some() && args.subcommand.as_deref() != Some("worker") {
+            bail!(
+                "--{flag} applies to worker only (got {})",
                 args.subcommand.as_deref().unwrap_or("none")
             );
         }
@@ -144,25 +170,66 @@ fn run(argv: &[String]) -> Result<()> {
         ),
         "golden" => golden(&cfg),
         "info" => info(&cfg),
+        "worker" => worker(&args, cfg.seed),
         other => bail!("unknown subcommand '{other}'"),
     }
 }
 
+/// Run one standalone fleet worker process: dial the coordinator's fleet
+/// listener, claim a slot, and serve `OP_TASK` frames through a local
+/// engine — with the configured fault program executing worker-side.
+fn worker(args: &approxifer::cli::Args, config_seed: u64) -> Result<()> {
+    use approxifer::server::worker::{parse_engine_spec, run_worker, WorkerOptions};
+    use approxifer::sim::faults::Behavior;
+    use std::time::Duration;
+
+    let engine = parse_engine_spec(args.get("engine").unwrap_or("mock:8:10"))?;
+    let mut opts = WorkerOptions::default();
+    if let Some(c) = args.get("connect") {
+        opts.connect = c.to_string();
+    }
+    opts.slot = args.get_usize("slot", 0)?;
+    if let Some(b) = args.get("behavior") {
+        opts.behavior = Behavior::parse(b).map_err(|e| anyhow::anyhow!("--behavior: {e}"))?;
+    }
+    // The in-process pool salts the configured seed before deriving
+    // per-worker streams; mirror it so `--seed S --slot i` replays exactly
+    // the behavior that in-process worker i would have run under seed S.
+    opts.seed = args.get_u64("seed", config_seed)? ^ 0x77;
+    let hb = args.get_u64("heartbeat-ms", opts.heartbeat.as_millis() as u64)?;
+    if hb == 0 {
+        bail!("--heartbeat-ms must be >= 1");
+    }
+    opts.heartbeat = Duration::from_millis(hb);
+    opts.max_reconnects = args.get_u64("reconnect-max", opts.max_reconnects as u64)? as u32;
+    if args.get("mute-after-ms").is_some() {
+        opts.mute_after = Some(Duration::from_millis(args.get_u64("mute-after-ms", 0)?));
+    }
+    log::info!(
+        "worker starting: connect={} slot={} behavior={:?}",
+        opts.connect,
+        opts.slot,
+        opts.behavior
+    );
+    run_worker(engine, opts)
+}
+
 /// Build the online service over the configured PJRT model: any strategy
 /// (approxifer / replication / parm / uncoded) serves through the one
-/// scheme-agnostic engine.
+/// scheme-agnostic engine. With `fleet.enabled` the engine lives in the
+/// worker processes instead: bind the fleet listener and wait for
+/// `approxifer worker` joins.
 fn build_service(cfg: &AppConfig) -> Result<(Arc<Service>, usize)> {
+    use approxifer::workers::RemoteFleet;
+
     let manifest = Manifest::load(&cfg.artifacts)?;
-    let rt = Runtime::cpu()?;
     let entry = manifest.model(&cfg.arch, &cfg.dataset, 1)?;
-    let model = CompiledModel::load(&rt, &manifest.root, entry)?;
-    let payload = model.payload();
-    let engine = Arc::new(PjrtEngine::new(model));
+    // Payload size comes straight from the manifest: only the in-process
+    // path compiles the model (remote fleet workers own their engines).
+    let payload: usize = entry.input[1..].iter().product();
     let scheme = cfg.strategy.scheme(cfg.params);
     let mut builder = Service::builder(scheme.clone())
-        .engine(engine)
         .batch_deadline(cfg.batch_deadline)
-        .worker_latency(cfg.worker_latency)
         .verify(if cfg.verify_decode {
             VerifyPolicy::on(cfg.verify_tol)
         } else {
@@ -193,13 +260,71 @@ fn build_service(cfg: &AppConfig) -> Result<(Arc<Service>, usize)> {
             adaptive.cooldown
         );
     }
-    if let Some(spec) = &cfg.fault_profile {
-        let profile = FaultProfile::parse(spec, scheme.num_workers(), cfg.seed)
-            .map_err(|e| anyhow::anyhow!("--faults: {e}"))?;
-        log::info!("fault profile '{}': faulty workers {:?}", profile.name, profile.faulty());
-        builder = builder.fault_profile(profile);
+    let mut fleet_handle = None;
+    match &cfg.fleet {
+        Some(fc) => {
+            // The coordinator can't reach into a worker process: fault
+            // programs and latency models run inside the worker binary
+            // (`worker --behavior`, `--engine mock:D:C:DELAY`).
+            if cfg.fault_profile.is_some() {
+                bail!(
+                    "--faults/faults.profile with fleet.enabled: run the fault program \
+                     inside the worker binary (approxifer worker --behavior PROG)"
+                );
+            }
+            if cfg.worker_latency != approxifer::workers::LatencyModel::None {
+                bail!(
+                    "workers.latency models in-process workers; with fleet.enabled a \
+                     worker's latency is real (use --engine mock:D:C:DELAY_MS on the \
+                     worker for a synthetic one)"
+                );
+            }
+            let need = scheme.num_workers();
+            let slots = fc.workers.unwrap_or(need).max(need);
+            let fleet = RemoteFleet::bind(fc, slots)?;
+            println!(
+                "fleet listening on {} ({slots} slots, scheme needs {need}); join with: \
+                 approxifer worker --connect {} --slot <i> --engine mock:{payload}:{}",
+                fleet.addr(),
+                fleet.addr(),
+                entry.num_classes
+            );
+            fleet_handle = Some(fleet.handle());
+            builder = builder.fleet(Box::new(fleet));
+        }
+        None => {
+            let rt = Runtime::cpu()?;
+            let model = CompiledModel::load(&rt, &manifest.root, entry)?;
+            builder = builder
+                .engine(Arc::new(PjrtEngine::new(model)))
+                .worker_latency(cfg.worker_latency);
+            if let Some(spec) = &cfg.fault_profile {
+                let profile = FaultProfile::parse(spec, scheme.num_workers(), cfg.seed)
+                    .map_err(|e| anyhow::anyhow!("--faults: {e}"))?;
+                log::info!(
+                    "fault profile '{}': faulty workers {:?}",
+                    profile.name,
+                    profile.faulty()
+                );
+                builder = builder.fault_profile(profile);
+            }
+        }
     }
-    Ok((Arc::new(builder.spawn()?), payload))
+    let service = Arc::new(builder.spawn()?);
+    if let Some(handle) = fleet_handle {
+        // Don't serve errors into the first groups just because the
+        // workers are still starting; but don't block forever either —
+        // joins are accepted for the life of the service.
+        let need = scheme.num_workers();
+        if !handle.wait_for_workers(need, std::time::Duration::from_secs(10)) {
+            log::warn!(
+                "only {}/{need} fleet workers joined after 10s; groups will lean on the \
+                 code's straggler budget until the rest join",
+                handle.live_workers()
+            );
+        }
+    }
+    Ok((service, payload))
 }
 
 fn serve(cfg: &AppConfig) -> Result<()> {

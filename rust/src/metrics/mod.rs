@@ -224,6 +224,22 @@ pub struct ServingMetrics {
     pub pad_slots: Counter,
     /// Groups closed by the batching deadline rather than by reaching K.
     pub deadline_flushes: Counter,
+    /// Remote workers that completed a join handshake (first joins and
+    /// rejoins both count; see `fleet_reconnects` for the rejoin subset).
+    pub fleet_joins: Counter,
+    /// Joins by a worker that had held its slot before (crash-recovery or
+    /// network-blip rejoins).
+    pub fleet_reconnects: Counter,
+    /// Remote workers evicted for missing `fleet.miss_threshold`
+    /// consecutive heartbeat windows (hung process, one-way partition).
+    pub fleet_evictions: Counter,
+    /// Remote workers whose connection dropped (process death, clean
+    /// disconnect) — detected at the socket, before the heartbeat monitor.
+    pub fleet_leaves: Counter,
+    /// Heartbeat pings received from remote workers.
+    pub fleet_heartbeats: Counter,
+    /// Remote workers currently connected.
+    pub fleet_live: Gauge,
     /// Queued (admitted, not yet batched) queries after the last admit.
     pub ingress_depth: Gauge,
     /// Straggler budget `S` of the scheme currently serving.
@@ -296,6 +312,15 @@ impl ServingMetrics {
             self.pad_slots.get(),
             self.deadline_flushes.get(),
             self.ingress_depth.get(),
+        ));
+        out.push_str(&format!(
+            "fleet: live={} joins={} reconnects={} evictions={} leaves={} heartbeats={}\n",
+            self.fleet_live.get(),
+            self.fleet_joins.get(),
+            self.fleet_reconnects.get(),
+            self.fleet_evictions.get(),
+            self.fleet_leaves.get(),
+            self.fleet_heartbeats.get(),
         ));
         out.push_str(&self.group_latency.summary_line("  group"));
         out.push('\n');

@@ -1,0 +1,148 @@
+//! The length-prefixed binary frame codec shared by every wire surface:
+//! the client-facing serving protocol and the coordinator↔worker fleet
+//! protocol speak the same frames, so there is exactly one parser to
+//! harden against adversarial input.
+//!
+//! Frame layout (all little-endian):
+//!
+//! ```text
+//! u32 frame_len | u8 head | u64 id | u64 payload_len | payload…
+//! ```
+//!
+//! `frame_len` counts everything after itself (head + id + payload_len +
+//! payload). The head byte identifies both the message kind and its
+//! payload encoding; op and status spaces are disjoint so a frame is
+//! self-describing:
+//!
+//! | head | direction | id | payload |
+//! |---|---|---|---|
+//! | [`OP_PREDICT`] = 1 | client → server | request id | `f32` query |
+//! | [`OP_PING`] = 2 | client → server, worker → coordinator | request id | empty |
+//! | [`OP_HELLO`] = 3 | worker → coordinator | slot index | empty |
+//! | [`OP_TASK`] = 4 | coordinator → worker | group id | `f32` coded row |
+//! | [`ST_OK`] = 16 | reply | correlates | `f32` prediction / empty ack |
+//! | [`ST_ERR`] = 17 | reply | correlates | UTF-8 message |
+//!
+//! [`read_frame`] validates the declared `payload_len` against the
+//! already-bounded `frame_len` *before* trusting it anywhere: `frame_len`
+//! is capped at [`MAX_FRAME`], and the float-payload check multiplies with
+//! `checked_mul` so an adversarial `payload_len` near `2^62` — whose
+//! `* 4` wraps in release builds — is a clean protocol error, never an
+//! allocation or a slipped length check. Unknown head bytes are rejected
+//! at this layer too: every byte sequence either parses into one of the
+//! six frames above or errors without panicking.
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::bytes::{put_f32, put_u32, put_u64, Reader};
+
+/// Client query: payload is the flattened `f32` input.
+pub const OP_PREDICT: u8 = 1;
+/// Liveness probe: empty payload. Doubles as the worker heartbeat.
+pub const OP_PING: u8 = 2;
+/// Worker join/rejoin: `id` is the fleet slot the worker claims.
+pub const OP_HELLO: u8 = 3;
+/// Coordinator → worker dispatch: `id` is the group, payload the coded row.
+pub const OP_TASK: u8 = 4;
+/// Success reply: payload is the `f32` result (empty for ping/hello acks).
+pub const ST_OK: u8 = 16;
+/// Error reply: payload is a UTF-8 message.
+pub const ST_ERR: u8 = 17;
+
+/// Max frame: 64 MiB (a 32×32×3 query is 12 KiB; this is generous).
+pub const MAX_FRAME: u32 = 64 << 20;
+
+/// Bytes of head + id + payload_len — the minimum legal `frame_len`.
+const HEADER: u32 = 1 + 8 + 8;
+
+/// One parsed frame: the head byte, the correlation id and the raw
+/// payload bytes (already length-validated against the head's encoding).
+pub struct Frame {
+    /// Message kind (one of the `OP_*` / `ST_*` constants).
+    pub head: u8,
+    /// Correlation id: request id, group id or slot index per the head.
+    pub id: u64,
+    /// Raw payload bytes; decode floats with [`body_f32`].
+    pub body: Vec<u8>,
+}
+
+/// Serialize one frame with an `f32` payload (or an empty one).
+pub fn write_frame(w: &mut impl Write, head: u8, id: u64, payload: &[f32]) -> Result<()> {
+    let mut buf = Vec::with_capacity(4 + HEADER as usize + payload.len() * 4);
+    put_u32(&mut buf, HEADER + (payload.len() * 4) as u32);
+    buf.push(head);
+    put_u64(&mut buf, id);
+    put_u64(&mut buf, payload.len() as u64);
+    for &x in payload {
+        put_f32(&mut buf, x);
+    }
+    w.write_all(&buf)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Serialize an [`ST_ERR`] frame carrying a UTF-8 message.
+pub fn write_error(w: &mut impl Write, id: u64, msg: &str) -> Result<()> {
+    let mut buf = Vec::with_capacity(4 + HEADER as usize + msg.len());
+    put_u32(&mut buf, HEADER + msg.len() as u32);
+    buf.push(ST_ERR);
+    put_u64(&mut buf, id);
+    put_u64(&mut buf, msg.len() as u64);
+    buf.extend_from_slice(msg.as_bytes());
+    w.write_all(&buf)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read and validate one frame. Every malformed input — truncation, an
+/// out-of-range `frame_len`, a `payload_len` that disagrees with the frame
+/// (including wrap-around values), a payload on a payload-less op, or an
+/// unknown head byte — is an `Err`, never a panic and never an oversized
+/// allocation (`frame_len` is bounded by [`MAX_FRAME`] before the body is
+/// read).
+pub fn read_frame(r: &mut impl Read) -> Result<Frame> {
+    let mut len4 = [0u8; 4];
+    r.read_exact(&mut len4).context("reading frame length")?;
+    let len = u32::from_le_bytes(len4);
+    if len < HEADER || len > MAX_FRAME {
+        bail!("bad frame length {len}");
+    }
+    let mut frame = vec![0u8; len as usize];
+    r.read_exact(&mut frame).context("reading frame body")?;
+    let head = frame[0];
+    let mut rd = Reader::new(&frame[1..HEADER as usize]);
+    let id = rd.u64()?;
+    let plen = rd.u64()?;
+    // Cross-validate the declared payload length against the measured one
+    // *before* touching the payload. `plen` is attacker-controlled and
+    // 64-bit: the float check must use checked_mul — `plen * 4` wraps for
+    // plen >= 2^62 in release builds and would slip an equality check
+    // against a small body.
+    let body_len = (len - HEADER) as u64;
+    match head {
+        OP_PREDICT | OP_TASK | ST_OK => {
+            if plen.checked_mul(4) != Some(body_len) {
+                bail!("payload length mismatch: {body_len} bytes vs {plen} floats");
+            }
+        }
+        ST_ERR => {
+            if plen != body_len {
+                bail!("error payload length mismatch: {body_len} bytes vs {plen} declared");
+            }
+        }
+        OP_PING | OP_HELLO => {
+            if plen != 0 || body_len != 0 {
+                bail!("unexpected payload ({body_len} bytes) on payload-less op {head}");
+            }
+        }
+        other => bail!("unknown frame head {other}"),
+    }
+    Ok(Frame { head, id, body: frame[HEADER as usize..].to_vec() })
+}
+
+/// Decode a little-endian `f32` payload.
+pub fn body_f32(body: &[u8]) -> Vec<f32> {
+    body.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect()
+}

@@ -3,102 +3,68 @@
 //! forwards queries into the [`crate::coordinator::Service`], and a client
 //! library used by the examples and integration tests.
 //!
-//! Frame layout (all little-endian):
+//! The frame layout and the hardened parser live in [`frame`] (shared with
+//! the worker-fleet protocol); the worker-side loop of that protocol lives
+//! in [`worker`].
 //!
-//! ```text
-//! request:  u32 frame_len | u8 op | u64 request_id | u64 payload_len | f32…
-//! response: u32 frame_len | u8 status | u64 request_id | u64 payload_len | f32…
-//! ```
+//! Front-end resilience invariants (each carries a regression test):
 //!
-//! `op`: 1 = Predict, 2 = Ping. `status`: 16 = Ok, 17 = Error (payload is
-//! a UTF-8 message). Op and status spaces are disjoint so a frame's head
-//! byte always identifies its payload encoding.
+//! * A transient `accept` failure (`EMFILE`, `ECONNABORTED`, …) logs and
+//!   backs off briefly — it never kills the accept loop.
+//! * [`Server::shutdown`] closes every live connection, not just the
+//!   acceptor: per-connection threads are tracked in a registry and their
+//!   sockets are shut down so readers blocked in `read_frame` unblock and
+//!   the threads are joined.
 
-use std::io::{Read, Write};
-use std::net::{TcpListener, TcpStream};
+use std::collections::HashMap;
+use std::io::Read;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
 use crate::coordinator::{RowView, Service};
-use crate::util::bytes::{put_f32, put_u32, put_u64, Reader};
 
-pub const OP_PREDICT: u8 = 1;
-pub const OP_PING: u8 = 2;
-pub const ST_OK: u8 = 16;
-pub const ST_ERR: u8 = 17;
+pub mod frame;
+pub mod worker;
 
-/// Max frame: 64 MiB (a 32×32×3 query is 12 KiB; this is generous).
-const MAX_FRAME: u32 = 64 << 20;
+pub use frame::{
+    body_f32, read_frame, write_error, write_frame, Frame, MAX_FRAME, OP_HELLO, OP_PING,
+    OP_PREDICT, OP_TASK, ST_ERR, ST_OK,
+};
 
-fn write_frame(w: &mut impl Write, head: u8, id: u64, payload: &[f32]) -> Result<()> {
-    let mut buf = Vec::with_capacity(4 + 1 + 8 + 8 + payload.len() * 4);
-    put_u32(&mut buf, (1 + 8 + 8 + payload.len() * 4) as u32);
-    buf.push(head);
-    put_u64(&mut buf, id);
-    put_u64(&mut buf, payload.len() as u64);
-    for &x in payload {
-        put_f32(&mut buf, x);
+/// How long the acceptor sleeps after a non-`WouldBlock` accept error
+/// before retrying. Transient failures (fd exhaustion, a connection reset
+/// mid-handshake) resolve themselves; the backoff just keeps a persistent
+/// failure from busy-looping the log.
+const ACCEPT_BACKOFF: Duration = Duration::from_millis(25);
+
+/// Something the accept loop can pull connections from. `TcpListener` in
+/// production; tests substitute an implementation that injects transient
+/// accept failures.
+trait Acceptor: Send + 'static {
+    fn accept(&self) -> std::io::Result<(TcpStream, SocketAddr)>;
+}
+
+impl Acceptor for TcpListener {
+    fn accept(&self) -> std::io::Result<(TcpStream, SocketAddr)> {
+        TcpListener::accept(self)
     }
-    w.write_all(&buf)?;
-    w.flush()?;
-    Ok(())
-}
-
-fn write_error(w: &mut impl Write, id: u64, msg: &str) -> Result<()> {
-    let mut buf = Vec::new();
-    put_u32(&mut buf, (1 + 8 + 8 + msg.len()) as u32);
-    buf.push(ST_ERR);
-    put_u64(&mut buf, id);
-    put_u64(&mut buf, msg.len() as u64);
-    buf.extend_from_slice(msg.as_bytes());
-    w.write_all(&buf)?;
-    w.flush()?;
-    Ok(())
-}
-
-struct Frame {
-    head: u8,
-    id: u64,
-    body: Vec<u8>,
-}
-
-fn read_frame(r: &mut impl Read) -> Result<Frame> {
-    let mut len4 = [0u8; 4];
-    r.read_exact(&mut len4).context("reading frame length")?;
-    let len = u32::from_le_bytes(len4);
-    if len < 17 || len > MAX_FRAME {
-        bail!("bad frame length {len}");
-    }
-    let mut frame = vec![0u8; len as usize];
-    r.read_exact(&mut frame).context("reading frame body")?;
-    let head = frame[0];
-    let mut rd = Reader::new(&frame[1..17]);
-    let id = rd.u64()?;
-    let plen = rd.u64()? as usize;
-    let body = frame[17..].to_vec();
-    if head == OP_PREDICT || head == ST_OK {
-        if body.len() != plen * 4 {
-            bail!("payload length mismatch: {} bytes vs {plen} floats", body.len());
-        }
-    } else if head == ST_ERR && body.len() != plen {
-        bail!("error payload length mismatch");
-    }
-    Ok(Frame { head, id, body })
-}
-
-fn body_f32(body: &[u8]) -> Vec<f32> {
-    body.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect()
 }
 
 /// Serving front-end bound to a TCP port.
 pub struct Server {
-    addr: std::net::SocketAddr,
+    addr: SocketAddr,
     stop: Arc<AtomicBool>,
     accept_thread: Option<JoinHandle<()>>,
+    /// Live connection registry: cloned stream handles keyed by connection
+    /// id, inserted by the acceptor and removed by each connection thread
+    /// on exit. `shutdown` sweeps it to unblock readers.
+    conns: Arc<Mutex<HashMap<u64, TcpStream>>>,
+    conn_threads: Arc<Mutex<Vec<JoinHandle<()>>>>,
 }
 
 impl Server {
@@ -109,48 +75,95 @@ impl Server {
         let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
+        Server::start_on(Box::new(listener), local, service, expected_payload)
+    }
+
+    fn start_on(
+        acceptor: Box<dyn Acceptor>,
+        local: SocketAddr,
+        service: Arc<Service>,
+        expected_payload: usize,
+    ) -> Result<Server> {
         let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<HashMap<u64, TcpStream>>> = Arc::new(Mutex::new(HashMap::new()));
+        let conn_threads: Arc<Mutex<Vec<JoinHandle<()>>>> = Arc::new(Mutex::new(Vec::new()));
         let stop2 = stop.clone();
+        let conns2 = conns.clone();
+        let threads2 = conn_threads.clone();
         let accept_thread = std::thread::Builder::new()
             .name("server-accept".into())
             .spawn(move || {
                 let mut conn_id = 0u64;
                 while !stop2.load(Ordering::Relaxed) {
-                    match listener.accept() {
+                    match acceptor.accept() {
                         Ok((stream, peer)) => {
                             conn_id += 1;
                             log::info!("connection {conn_id} from {peer}");
+                            if let Ok(handle) = stream.try_clone() {
+                                conns2.lock().unwrap().insert(conn_id, handle);
+                            }
                             let service = service.clone();
-                            let _ = std::thread::Builder::new()
+                            let registry = conns2.clone();
+                            let spawned = std::thread::Builder::new()
                                 .name(format!("conn-{conn_id}"))
                                 .spawn(move || {
                                     if let Err(e) = serve_conn(stream, &service, expected_payload)
                                     {
                                         log::debug!("connection {conn_id} closed: {e:#}");
                                     }
+                                    registry.lock().unwrap().remove(&conn_id);
                                 });
+                            match spawned {
+                                Ok(h) => threads2.lock().unwrap().push(h),
+                                Err(e) => {
+                                    log::warn!("spawning connection thread: {e}");
+                                    conns2.lock().unwrap().remove(&conn_id);
+                                }
+                            }
                         }
                         Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                             std::thread::sleep(Duration::from_millis(5));
                         }
                         Err(e) => {
-                            log::warn!("accept error: {e}");
-                            break;
+                            // One refused/aborted accept (EMFILE under fd
+                            // pressure, ECONNABORTED from a client that gave
+                            // up mid-handshake) must not take the whole
+                            // front-end down: log, back off, keep accepting.
+                            log::warn!("accept error (front-end stays up): {e}");
+                            std::thread::sleep(ACCEPT_BACKOFF);
                         }
                     }
                 }
             })
             .expect("spawning acceptor");
-        Ok(Server { addr: local, stop, accept_thread: Some(accept_thread) })
+        Ok(Server { addr: local, stop, accept_thread: Some(accept_thread), conns, conn_threads })
     }
 
-    pub fn addr(&self) -> std::net::SocketAddr {
+    pub fn addr(&self) -> SocketAddr {
         self.addr
     }
 
+    /// Stop accepting, close every live connection and join all threads.
     pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
         self.stop.store(true, Ordering::Relaxed);
+        // Join the acceptor first: after it exits no new connections can be
+        // registered, so sweeping the registry below catches everything.
         if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+        let streams: Vec<TcpStream> =
+            self.conns.lock().unwrap().drain().map(|(_, s)| s).collect();
+        for s in streams {
+            // Unblocks the connection thread's reader mid-`read_frame`.
+            let _ = s.shutdown(Shutdown::Both);
+        }
+        let handles: Vec<JoinHandle<()>> =
+            self.conn_threads.lock().unwrap().drain(..).collect();
+        for h in handles {
             let _ = h.join();
         }
     }
@@ -158,10 +171,7 @@ impl Server {
 
 impl Drop for Server {
     fn drop(&mut self) {
-        self.stop.store(true, Ordering::Relaxed);
-        if let Some(h) = self.accept_thread.take() {
-            let _ = h.join();
-        }
+        self.stop_and_join();
     }
 }
 
@@ -207,8 +217,9 @@ fn serve_conn(mut stream: TcpStream, service: &Service, expected_payload: usize)
                     }
                     service.submit_tagged(frame.id, payload, tx.clone());
                 }
+                // Codec-valid heads that belong to the worker protocol.
                 other => {
-                    let _ = tx.send((frame.id, Err(format!("unknown op {other}"))));
+                    let _ = tx.send((frame.id, Err(format!("unsupported op {other}"))));
                 }
             }
         }
@@ -226,7 +237,7 @@ pub struct Client {
 }
 
 impl Client {
-    pub fn connect(addr: &std::net::SocketAddr) -> Result<Client> {
+    pub fn connect(addr: &SocketAddr) -> Result<Client> {
         let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
         stream.set_nodelay(true).ok();
         Ok(Client { stream, next_id: AtomicU64::new(1) })
@@ -264,16 +275,20 @@ mod tests {
     use crate::coding::{ApproxIferCode, CodeParams};
     use crate::workers::LinearMockEngine;
 
-    fn start_test_server(k: usize, d: usize, c: usize) -> (Server, Arc<Service>) {
+    fn start_test_service(k: usize, d: usize, c: usize) -> Arc<Service> {
         let engine = Arc::new(LinearMockEngine::new(d, c));
         let scheme = Arc::new(ApproxIferCode::new(CodeParams::new(k, 1, 0)));
-        let service = Arc::new(
+        Arc::new(
             Service::builder(scheme)
                 .engine(engine)
                 .flush_after(Duration::from_millis(10))
                 .spawn()
                 .unwrap(),
-        );
+        )
+    }
+
+    fn start_test_server(k: usize, d: usize, c: usize) -> (Server, Arc<Service>) {
+        let service = start_test_service(k, d, c);
         let server = Server::start("127.0.0.1:0", service.clone(), d).unwrap();
         (server, service)
     }
@@ -297,6 +312,79 @@ mod tests {
         let err = client.predict(&[1.0, 2.0]).unwrap_err();
         assert!(format!("{err:#}").contains("expects 8"), "{err:#}");
         server.shutdown();
+    }
+
+    // ---- front-end resilience ---------------------------------------------
+
+    /// Fails the first `fail_first` accepts with a transient error, then
+    /// delegates to the real (nonblocking) listener.
+    struct FlakyAcceptor {
+        inner: TcpListener,
+        remaining_failures: AtomicU64,
+    }
+
+    impl Acceptor for FlakyAcceptor {
+        fn accept(&self) -> std::io::Result<(TcpStream, SocketAddr)> {
+            if self.remaining_failures.load(Ordering::Relaxed) > 0 {
+                self.remaining_failures.fetch_sub(1, Ordering::Relaxed);
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::ConnectionAborted,
+                    "injected transient accept failure",
+                ));
+            }
+            TcpListener::accept(&self.inner)
+        }
+    }
+
+    #[test]
+    fn transient_accept_errors_do_not_kill_the_front_end() {
+        let service = start_test_service(2, 8, 3);
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let local = listener.local_addr().unwrap();
+        listener.set_nonblocking(true).unwrap();
+        let acceptor =
+            FlakyAcceptor { inner: listener, remaining_failures: AtomicU64::new(3) };
+        let server = Server::start_on(Box::new(acceptor), local, service, 8).unwrap();
+        // The old accept loop `break`s on the first injected error and
+        // never serves anyone; the fixed loop backs off and keeps going.
+        // Bound the reads so a dead acceptor fails the test instead of
+        // hanging it.
+        let mut stream = TcpStream::connect(server.addr()).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        write_frame(&mut stream, OP_PING, 7, &[]).unwrap();
+        let resp = read_frame(&mut stream).expect("server must survive transient accept errors");
+        assert_eq!((resp.head, resp.id), (ST_OK, 7));
+        // And connections keep being accepted afterwards.
+        let mut second = Client::connect(&server.addr()).unwrap();
+        second.ping().unwrap();
+        server.shutdown();
+    }
+
+    #[test]
+    fn shutdown_closes_live_connections() {
+        let (server, _svc) = start_test_server(2, 8, 3);
+        // A pipelined client: connection established and served, then left
+        // idle (reader parked in read_frame on the server side).
+        let mut stream = TcpStream::connect(server.addr()).unwrap();
+        write_frame(&mut stream, OP_PING, 1, &[]).unwrap();
+        let resp = read_frame(&mut stream).unwrap();
+        assert_eq!((resp.head, resp.id), (ST_OK, 1));
+        server.shutdown();
+        // The connection must observe the close promptly — EOF or a reset,
+        // never a read that outlives the server.
+        stream.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let mut byte = [0u8; 1];
+        match stream.read(&mut byte) {
+            Ok(0) => {}  // clean EOF
+            Ok(_) => panic!("unexpected data after shutdown"),
+            Err(e) => assert!(
+                !matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ),
+                "connection still open after shutdown(): {e}"
+            ),
+        }
     }
 
     // ---- frame codec ------------------------------------------------------
@@ -370,6 +458,20 @@ mod tests {
         assert!(format!("{err:#}").contains("mismatch"), "{err:#}");
     }
 
+    #[test]
+    fn wrapping_payload_length_rejected() {
+        // plen = 2^62 + 2: `plen * 4` wraps to 8 in release builds, exactly
+        // matching an 8-byte body — the old unchecked multiply accepted it.
+        let mut buf = Vec::new();
+        crate::util::bytes::put_u32(&mut buf, (1 + 8 + 8 + 8) as u32);
+        buf.push(OP_PREDICT);
+        crate::util::bytes::put_u64(&mut buf, 9);
+        crate::util::bytes::put_u64(&mut buf, (1u64 << 62) + 2);
+        buf.extend_from_slice(&[0u8; 8]);
+        let err = read_frame(&mut &buf[..]).unwrap_err();
+        assert!(format!("{err:#}").contains("mismatch"), "{err:#}");
+    }
+
     // ---- request-id preservation under out-of-order completion -----------
 
     #[test]
@@ -387,7 +489,7 @@ mod tests {
                 .unwrap(),
         );
         let server = Server::start("127.0.0.1:0", service.clone(), 8).unwrap();
-        let mut stream = std::net::TcpStream::connect(server.addr()).unwrap();
+        let mut stream = TcpStream::connect(server.addr()).unwrap();
         stream.set_nodelay(true).ok();
         let payload: Vec<f32> = (0..8).map(|i| i as f32 * 0.1).collect();
         write_frame(&mut stream, OP_PREDICT, 1001, &payload).unwrap();

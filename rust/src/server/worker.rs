@@ -1,0 +1,347 @@
+//! The worker side of the fleet wire protocol: a standalone process that
+//! dials the coordinator, claims a fleet slot with [`OP_HELLO`], then
+//! serves [`OP_TASK`] frames with its local engine — running a
+//! [`Behavior`] fault program whose RNG stream is bit-identical to the
+//! in-process pool's (see [`crate::sim::faults::behavior_rng`]).
+//!
+//! Session lifecycle, worker's view:
+//!
+//! ```text
+//! connect ── HELLO(slot) ──▶ ST_OK ack ──▶ serve tasks + heartbeat pings
+//!    ▲                          │ ST_ERR = rejected (fatal: bad slot)
+//!    └── exponential backoff ◀── connection lost (coordinator restart,
+//!        (base·2ⁿ, capped)       network blip, eviction)
+//! ```
+//!
+//! Reconnect is the worker's job — the coordinator only listens. A worker
+//! that rejoins a slot it previously held is what the coordinator counts
+//! as a *reconnect*; the backoff is capped and gives up after
+//! `max_reconnects` consecutive connection failures so a decommissioned
+//! coordinator doesn't leave worker processes spinning forever.
+
+use std::io::ErrorKind;
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::server::frame::{
+    body_f32, read_frame, write_error, write_frame, OP_HELLO, OP_PING, OP_TASK, ST_ERR, ST_OK,
+};
+use crate::sim::faults::{behavior_rng, Behavior, BehaviorState, FaultAction};
+use crate::workers::{DelayMockEngine, InferenceEngine, LinearMockEngine};
+
+/// Everything a worker process needs besides its engine.
+pub struct WorkerOptions {
+    /// Coordinator address to dial, e.g. `127.0.0.1:7800`.
+    pub connect: String,
+    /// Fleet slot this worker claims in its HELLO.
+    pub slot: usize,
+    /// Fault program to run (parsed with [`Behavior::parse`]).
+    pub behavior: Behavior,
+    /// Pool seed: with `slot` this pins the behavior RNG stream to the one
+    /// the in-process pool would have used, so replay survives the move.
+    pub seed: u64,
+    /// Heartbeat period ([`OP_PING`] cadence while a session is live).
+    pub heartbeat: Duration,
+    /// First reconnect backoff; doubles per consecutive failure.
+    pub reconnect_base: Duration,
+    /// Backoff ceiling.
+    pub reconnect_cap: Duration,
+    /// Consecutive connection failures before giving up.
+    pub max_reconnects: u32,
+    /// Test hook: after this long, stop heartbeating and replying while
+    /// keeping the socket open — a hung process, as seen by the
+    /// coordinator's miss-threshold eviction. Once disconnected, park
+    /// forever instead of reconnecting.
+    pub mute_after: Option<Duration>,
+}
+
+impl Default for WorkerOptions {
+    fn default() -> WorkerOptions {
+        WorkerOptions {
+            connect: "127.0.0.1:7800".into(),
+            slot: 0,
+            behavior: Behavior::Honest,
+            seed: 0xA11CE,
+            heartbeat: Duration::from_millis(200),
+            reconnect_base: Duration::from_millis(50),
+            reconnect_cap: Duration::from_secs(2),
+            max_reconnects: 30,
+            mute_after: None,
+        }
+    }
+}
+
+/// Why a session ended.
+enum SessionEnd {
+    /// Connection lost (EOF, reset, write failure): reconnect with backoff.
+    CoordinatorGone,
+    /// Coordinator refused the HELLO (bad slot, slot policy): fatal.
+    Rejected(String),
+    /// The mute test-hook fired and the connection has since closed: park.
+    Muted,
+}
+
+/// Run the worker loop until the coordinator rejects us or reconnection
+/// gives up. The behavior program's state (request counter, RNG stream)
+/// persists across sessions — a reconnect is the same worker resuming, not
+/// a fresh one.
+pub fn run_worker(engine: Arc<dyn InferenceEngine>, opts: WorkerOptions) -> Result<()> {
+    let started = Instant::now();
+    let mute_deadline = opts.mute_after.map(|d| started + d);
+    let mut behavior = BehaviorState::new(opts.behavior, behavior_rng(opts.seed, opts.slot));
+    let mut consecutive_failures = 0u32;
+    loop {
+        match TcpStream::connect(&opts.connect) {
+            Ok(stream) => {
+                consecutive_failures = 0;
+                match serve_session(stream, &engine, &opts, &mut behavior, mute_deadline) {
+                    SessionEnd::CoordinatorGone => {
+                        log::info!("worker {}: coordinator gone, reconnecting", opts.slot);
+                    }
+                    SessionEnd::Rejected(msg) => {
+                        bail!("worker {}: coordinator rejected join: {msg}", opts.slot);
+                    }
+                    SessionEnd::Muted => {
+                        // A hung process doesn't reconnect; it just sits
+                        // there. Park so the coordinator-side eviction test
+                        // observes a stable post-eviction state.
+                        log::info!("worker {}: muted, parking", opts.slot);
+                        loop {
+                            std::thread::park();
+                        }
+                    }
+                }
+            }
+            Err(e) => {
+                consecutive_failures += 1;
+                if consecutive_failures > opts.max_reconnects {
+                    bail!(
+                        "worker {}: giving up on {} after {} failed connects: {e}",
+                        opts.slot,
+                        opts.connect,
+                        consecutive_failures
+                    );
+                }
+                log::debug!("worker {}: connect failed ({e}), backing off", opts.slot);
+            }
+        }
+        // Exponential backoff before the next dial, shared by the
+        // connect-failed and connection-lost paths.
+        let exp = consecutive_failures.saturating_sub(1).min(16);
+        let backoff = opts
+            .reconnect_base
+            .saturating_mul(1u32 << exp)
+            .min(opts.reconnect_cap)
+            .max(opts.reconnect_base);
+        std::thread::sleep(backoff);
+    }
+}
+
+fn muted(deadline: Option<Instant>) -> bool {
+    deadline.is_some_and(|d| Instant::now() >= d)
+}
+
+fn serve_session(
+    mut stream: TcpStream,
+    engine: &Arc<dyn InferenceEngine>,
+    opts: &WorkerOptions,
+    behavior: &mut BehaviorState,
+    mute_deadline: Option<Instant>,
+) -> SessionEnd {
+    stream.set_nodelay(true).ok();
+    // Join handshake: HELLO carries our slot; the ack must arrive promptly
+    // or the coordinator is wedged and we should redial.
+    if write_frame(&mut stream, OP_HELLO, opts.slot as u64, &[]).is_err() {
+        return SessionEnd::CoordinatorGone;
+    }
+    if stream.set_read_timeout(Some(Duration::from_secs(5))).is_err() {
+        return SessionEnd::CoordinatorGone;
+    }
+    let ack = match read_frame(&mut stream) {
+        Ok(f) => f,
+        Err(_) => return SessionEnd::CoordinatorGone,
+    };
+    match ack.head {
+        ST_OK => {}
+        ST_ERR => return SessionEnd::Rejected(String::from_utf8_lossy(&ack.body).into_owned()),
+        _ => return SessionEnd::CoordinatorGone,
+    }
+    if stream.set_read_timeout(None).is_err() {
+        return SessionEnd::CoordinatorGone;
+    }
+
+    // The reply writer is shared between the task loop and the heartbeat
+    // thread; frames are written whole under the lock so they never
+    // interleave.
+    let writer = match stream.try_clone() {
+        Ok(w) => Arc::new(Mutex::new(w)),
+        Err(_) => return SessionEnd::CoordinatorGone,
+    };
+    let session_live = Arc::new(AtomicBool::new(true));
+    let hb_writer = writer.clone();
+    let hb_live = session_live.clone();
+    let hb_period = opts.heartbeat;
+    let heartbeat = std::thread::Builder::new()
+        .name(format!("worker-{}-heartbeat", opts.slot))
+        .spawn(move || {
+            while hb_live.load(Ordering::Relaxed) {
+                std::thread::sleep(hb_period);
+                if !hb_live.load(Ordering::Relaxed) || muted(mute_deadline) {
+                    break;
+                }
+                let mut w = hb_writer.lock().unwrap();
+                if write_frame(&mut *w, OP_PING, 0, &[]).is_err() {
+                    break;
+                }
+            }
+        })
+        .expect("spawning heartbeat thread");
+
+    let end = task_loop(&mut stream, engine, behavior, &writer, mute_deadline, opts.slot);
+    session_live.store(false, Ordering::Relaxed);
+    let _ = heartbeat.join();
+    end
+}
+
+fn task_loop(
+    stream: &mut TcpStream,
+    engine: &Arc<dyn InferenceEngine>,
+    behavior: &mut BehaviorState,
+    writer: &Arc<Mutex<TcpStream>>,
+    mute_deadline: Option<Instant>,
+    slot: usize,
+) -> SessionEnd {
+    loop {
+        let frame = match read_frame(stream) {
+            Ok(f) => f,
+            Err(_) => {
+                return if muted(mute_deadline) {
+                    SessionEnd::Muted
+                } else {
+                    SessionEnd::CoordinatorGone
+                };
+            }
+        };
+        if muted(mute_deadline) {
+            // Hung process: consume input, produce nothing.
+            continue;
+        }
+        if frame.head != OP_TASK {
+            log::warn!("worker {slot}: unexpected frame head {} — ignoring", frame.head);
+            continue;
+        }
+        let group = frame.id;
+        match behavior.decide() {
+            FaultAction::Drop => {
+                // Crash semantics: the task is consumed, no reply ever.
+            }
+            FaultAction::Fail => {
+                let mut w = writer.lock().unwrap();
+                let msg = format!("worker {slot}: injected intermittent fault");
+                if write_error(&mut *w, group, &msg).is_err() {
+                    return SessionEnd::CoordinatorGone;
+                }
+            }
+            FaultAction::Reply { delay } => {
+                if !delay.is_zero() {
+                    std::thread::sleep(delay);
+                }
+                let payload = body_f32(&frame.body);
+                let reply = match engine.infer1(&payload) {
+                    Ok(mut logits) => {
+                        behavior.corrupt(group, &mut logits);
+                        Ok(logits)
+                    }
+                    Err(e) => Err(format!("worker {slot}: {e:#}")),
+                };
+                let mut w = writer.lock().unwrap();
+                let wrote = match reply {
+                    Ok(logits) => write_frame(&mut *w, ST_OK, group, &logits),
+                    Err(msg) => write_error(&mut *w, group, &msg),
+                };
+                if wrote.is_err() {
+                    return SessionEnd::CoordinatorGone;
+                }
+            }
+        }
+    }
+}
+
+/// Parse a worker engine spec. Grammar:
+///
+/// ```text
+/// mock:<payload>:<classes>             LinearMockEngine
+/// mock:<payload>:<classes>:<delay_ms>  DelayMockEngine (busy compute)
+/// ```
+///
+/// Mock engines are fully determined by their dimensions, so a worker
+/// process reconstructs the exact engine the coordinator's groups expect
+/// from the spec alone — no artifact shipping.
+pub fn parse_engine_spec(spec: &str) -> Result<Arc<dyn InferenceEngine>> {
+    let parts: Vec<&str> = spec.split(':').collect();
+    let int = |s: &str, what: &str| {
+        s.parse::<usize>().with_context(|| format!("bad {what} '{s}' in engine spec '{spec}'"))
+    };
+    match parts.as_slice() {
+        ["mock", d, c] => {
+            Ok(Arc::new(LinearMockEngine::new(int(d, "payload")?, int(c, "classes")?)))
+        }
+        ["mock", d, c, delay_ms] => {
+            let delay = Duration::from_millis(
+                delay_ms
+                    .parse::<u64>()
+                    .with_context(|| format!("bad delay '{delay_ms}' in engine spec '{spec}'"))?,
+            );
+            Ok(Arc::new(DelayMockEngine::new(int(d, "payload")?, int(c, "classes")?, delay)))
+        }
+        _ => bail!("unknown engine spec '{spec}' (expected mock:<payload>:<classes>[:<delay_ms>])"),
+    }
+}
+
+/// `true` for the io error kinds a lost peer produces — used by callers
+/// that want to distinguish a clean shutdown from a protocol violation.
+pub fn is_disconnect(kind: ErrorKind) -> bool {
+    matches!(
+        kind,
+        ErrorKind::UnexpectedEof
+            | ErrorKind::ConnectionReset
+            | ErrorKind::ConnectionAborted
+            | ErrorKind::BrokenPipe
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_specs_parse() {
+        let e = parse_engine_spec("mock:8:3").unwrap();
+        assert_eq!((e.payload(), e.classes()), (8, 3));
+        let e = parse_engine_spec("mock:16:10:25").unwrap();
+        assert_eq!((e.payload(), e.classes()), (16, 10));
+        assert!(parse_engine_spec("mock:8").is_err());
+        assert!(parse_engine_spec("onnx:model.bin").is_err());
+        assert!(parse_engine_spec("mock:a:b").is_err());
+    }
+
+    #[test]
+    fn worker_gives_up_when_no_coordinator_listens() {
+        // Dial a port nobody listens on with a tiny backoff budget: the
+        // loop must terminate with an error, not spin forever.
+        let opts = WorkerOptions {
+            connect: "127.0.0.1:1".into(),
+            reconnect_base: Duration::from_millis(1),
+            reconnect_cap: Duration::from_millis(2),
+            max_reconnects: 3,
+            ..WorkerOptions::default()
+        };
+        let engine = parse_engine_spec("mock:4:2").unwrap();
+        let err = run_worker(engine, opts).unwrap_err();
+        assert!(format!("{err:#}").contains("giving up"), "{err:#}");
+    }
+}

@@ -45,6 +45,92 @@ pub enum Behavior {
     Byzantine(ByzantineMode),
 }
 
+impl Behavior {
+    /// Parse a **single-worker** behavior spec — the grammar a remote
+    /// worker process accepts via `worker --behavior`. It mirrors the
+    /// fleet-level [`FaultProfile::parse`] grammar minus the `<count>`
+    /// field (a process is one worker) and minus `churn` (a fleet mix):
+    ///
+    /// ```text
+    /// honest
+    /// crash@<request>                  crash at the <request>-th request
+    /// slow:<base>:<tail>:<p>           reply delay base+Exp(tail) w.p. p (ms)
+    /// flaky:<p>                        error reply with probability p
+    /// byz-random:<sigma>               Gaussian-noise adversary
+    /// byz-signflip                     sign-flip adversary
+    /// byz-target:<class>:<boost>       targeted-class adversary
+    /// byz-collude:<pact>:<scale>       colluding adversary (explicit pact —
+    ///                                  colluders must agree on it out of band)
+    /// ```
+    ///
+    /// Deterministic replay across the process boundary: pair the parsed
+    /// behavior with [`behavior_rng`]`(pool_seed, slot)` and the remote
+    /// worker's fault stream is bit-identical to the in-process pool's.
+    pub fn parse(spec: &str) -> Result<Behavior, String> {
+        let num = |s: &str| s.parse::<f64>().map_err(|_| format!("bad number '{s}' in '{spec}'"));
+        let int =
+            |s: &str| s.parse::<usize>().map_err(|_| format!("bad integer '{s}' in '{spec}'"));
+        let prob = |s: &str| {
+            let p = num(s)?;
+            if !(0.0..=1.0).contains(&p) {
+                return Err(format!("probability '{s}' not in [0,1] in '{spec}'"));
+            }
+            Ok(p)
+        };
+        let nonneg = |s: &str| {
+            let v = num(s)?;
+            if v < 0.0 {
+                return Err(format!("negative value '{s}' in '{spec}'"));
+            }
+            Ok(v)
+        };
+        let parts: Vec<&str> = spec.split(':').collect();
+        match parts.as_slice() {
+            ["honest"] => Ok(Behavior::Honest),
+            [crash] if crash.starts_with("crash@") => {
+                let at = &crash["crash@".len()..];
+                Ok(Behavior::CrashAt { at: int(at)? as u64 })
+            }
+            ["slow", base, tail, p] => Ok(Behavior::Slow {
+                base_ms: nonneg(base)?,
+                tail_ms: nonneg(tail)?,
+                p: prob(p)?,
+            }),
+            ["flaky", p] => Ok(Behavior::Flaky { p_fail: prob(p)? }),
+            ["byz-random", sigma] => {
+                Ok(Behavior::Byzantine(ByzantineMode::GaussianNoise { sigma: nonneg(sigma)? }))
+            }
+            ["byz-signflip"] => Ok(Behavior::Byzantine(ByzantineMode::SignFlip)),
+            ["byz-target", class, boost] => Ok(Behavior::Byzantine(ByzantineMode::TargetedClass {
+                class: int(class)?,
+                boost: num(boost)?,
+            })),
+            ["byz-collude", pact, scale] => Ok(Behavior::Byzantine(ByzantineMode::Colluding {
+                pact: pact.parse::<u64>().map_err(|_| format!("bad pact '{pact}' in '{spec}'"))?,
+                scale: nonneg(scale)?,
+            })),
+            _ => Err(format!("unknown worker behavior '{spec}'")),
+        }
+    }
+}
+
+/// The behavior-program RNG stream for worker `worker_id` of a fleet seeded
+/// with `pool_seed` — exactly the stream [`crate::workers::WorkerPool`]
+/// hands that worker's [`BehaviorState`]. The pool forks its root RNG once
+/// per worker *in slot order* (each fork advances the root), then forks the
+/// per-worker stream at salt `0xFA` for the behavior program; a remote
+/// worker process replays that derivation from `(pool_seed, slot)` alone,
+/// so moving a fault program across the process boundary preserves
+/// bit-identical replay.
+pub fn behavior_rng(pool_seed: u64, worker_id: usize) -> Rng {
+    let mut root = Rng::new(pool_seed);
+    let mut rng = root.fork(0);
+    for w in 1..=worker_id {
+        rng = root.fork(w as u64);
+    }
+    rng.fork(0xFA)
+}
+
 /// What the behavior program decided for one request.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub enum FaultAction {
@@ -447,6 +533,62 @@ mod tests {
         assert!(FaultProfile::parse("slow:1:-5:40:0.5", 4, 1).is_err());
         assert!(FaultProfile::parse("byz-random:1:-3", 4, 1).is_err());
         assert!(FaultProfile::parse("byz-collude:1:-3", 4, 1).is_err());
+    }
+
+    #[test]
+    fn single_worker_behavior_specs_parse() {
+        assert_eq!(Behavior::parse("honest").unwrap(), Behavior::Honest);
+        assert_eq!(Behavior::parse("crash@4").unwrap(), Behavior::CrashAt { at: 4 });
+        assert_eq!(
+            Behavior::parse("slow:1:40:0.5").unwrap(),
+            Behavior::Slow { base_ms: 1.0, tail_ms: 40.0, p: 0.5 }
+        );
+        assert_eq!(Behavior::parse("flaky:0.3").unwrap(), Behavior::Flaky { p_fail: 0.3 });
+        assert_eq!(
+            Behavior::parse("byz-random:10").unwrap(),
+            Behavior::Byzantine(ByzantineMode::GaussianNoise { sigma: 10.0 })
+        );
+        assert_eq!(
+            Behavior::parse("byz-signflip").unwrap(),
+            Behavior::Byzantine(ByzantineMode::SignFlip)
+        );
+        assert_eq!(
+            Behavior::parse("byz-target:3:50").unwrap(),
+            Behavior::Byzantine(ByzantineMode::TargetedClass { class: 3, boost: 50.0 })
+        );
+        assert_eq!(
+            Behavior::parse("byz-collude:99:15").unwrap(),
+            Behavior::Byzantine(ByzantineMode::Colluding { pact: 99, scale: 15.0 })
+        );
+        // Rejections mirror the fleet grammar's range checks.
+        assert!(Behavior::parse("nope").is_err());
+        assert!(Behavior::parse("crash:4").is_err()); // fleet syntax, not worker syntax
+        assert!(Behavior::parse("flaky:30").is_err());
+        assert!(Behavior::parse("slow:-1:40:0.5").is_err());
+        assert!(Behavior::parse("byz-random:-3").is_err());
+    }
+
+    #[test]
+    fn behavior_rng_matches_pool_derivation() {
+        // Replicate the pool's loop: root forked once per worker in slot
+        // order, then the behavior stream forked at 0xFA.
+        let seed = 0xA11CEu64 ^ 0x77;
+        for target in 0..5usize {
+            let mut root = Rng::new(seed);
+            let mut expected = None;
+            for worker_id in 0..=target {
+                let mut rng = root.fork(worker_id as u64);
+                let b = rng.fork(0xFA);
+                if worker_id == target {
+                    expected = Some(b);
+                }
+            }
+            let mut expected = expected.unwrap();
+            let mut got = behavior_rng(seed, target);
+            for _ in 0..16 {
+                assert_eq!(got.next_u64(), expected.next_u64(), "worker {target} stream differs");
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,48 @@
+//! The fleet abstraction: the dispatch/reply surface the coordinator's
+//! dispatcher and [`crate::workers::ReplyRouter`] consume, implemented by
+//! both the in-process [`crate::workers::WorkerPool`] and the
+//! [`crate::workers::RemoteFleet`] of worker processes — so `Service`,
+//! schemes, the verification ladder and the adaptive controller never know
+//! which one they're running on.
+
+use std::sync::mpsc::Receiver;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::metrics::ServingMetrics;
+
+use super::pool::{WorkerReply, WorkerTask};
+
+/// A fleet of workers addressable by slot index, producing one shared
+/// reply stream.
+///
+/// Contract the router depends on: `send` to an *unavailable* worker must
+/// not error the caller — an implementation either queues the task (the
+/// in-process pool's channels) or resolves the slot as an error
+/// [`WorkerReply`] (the remote fleet for an unjoined/evicted slot), so
+/// group collection always converges through the quota/fail-fast logic
+/// instead of hanging or killing the whole group.
+pub trait WorkerFleet: Send {
+    /// Number of worker slots (joined or not).
+    fn num_workers(&self) -> usize;
+
+    /// Dispatch one task to worker `worker`. `Err` means the fleet itself
+    /// is shut down — per-worker unavailability is surfaced through the
+    /// reply stream instead (see the trait docs).
+    fn send(&self, worker: usize, task: WorkerTask) -> Result<()>;
+
+    /// Take the shared reply stream (once; `None` thereafter). The caller
+    /// hands it to a [`crate::workers::ReplyRouter`].
+    fn take_replies(&mut self) -> Option<Receiver<WorkerReply>>;
+
+    /// Attach the service's metric set. Implementations that counted
+    /// events before attachment (a remote fleet accepts joins as soon as
+    /// it binds, before the `Service` exists) replay those totals so the
+    /// counters never undercount.
+    fn attach_metrics(&self, metrics: Arc<ServingMetrics>);
+
+    /// Stop the fleet: close dispatch channels/connections and join
+    /// internal threads.
+    fn shutdown(self: Box<Self>);
+}

@@ -1,14 +1,20 @@
 //! The worker fleet: the inference-engine abstraction (PJRT-backed in
 //! production, deterministic mocks in tests), per-worker latency models,
-//! Byzantine corruption modes, and the thread pool the coordinator fans
-//! coded queries out to.
+//! Byzantine corruption modes, and two interchangeable fleets behind the
+//! [`WorkerFleet`] trait — the in-process thread [`WorkerPool`] and the
+//! [`RemoteFleet`] of worker processes speaking the shared frame codec
+//! over TCP.
 
 pub mod byzantine;
 pub mod engine;
+pub mod fleet;
 pub mod latency;
 pub mod pool;
+pub mod remote;
 
 pub use byzantine::ByzantineMode;
 pub use engine::{DelayMockEngine, InferenceEngine, LinearMockEngine, PjrtEngine};
+pub use fleet::WorkerFleet;
 pub use latency::LatencyModel;
 pub use pool::{CollectedGroup, ReplyRouter, WorkerPool, WorkerReply, WorkerSpec, WorkerTask};
+pub use remote::{FleetConfig, FleetHandle, FleetSnapshot, RemoteFleet};

@@ -266,6 +266,29 @@ impl WorkerPool {
     }
 }
 
+impl super::fleet::WorkerFleet for WorkerPool {
+    fn num_workers(&self) -> usize {
+        WorkerPool::num_workers(self)
+    }
+
+    fn send(&self, worker: usize, task: WorkerTask) -> Result<()> {
+        WorkerPool::send(self, worker, task)
+    }
+
+    fn take_replies(&mut self) -> Option<Receiver<WorkerReply>> {
+        self.replies.take()
+    }
+
+    fn attach_metrics(&self, _metrics: Arc<ServingMetrics>) {
+        // The pool is constructed with its metric set
+        // ([`WorkerPool::spawn_with_metrics`]); nothing to replay.
+    }
+
+    fn shutdown(self: Box<Self>) {
+        WorkerPool::shutdown(*self)
+    }
+}
+
 /// A group whose collection finished (the policy's slot quotas were met,
 /// the SLO hedge deadline passed with a decodable reduced quota, or the
 /// deadline/error budget made completion impossible).
@@ -335,6 +358,13 @@ pub struct ReplyRouter {
 const ROUTER_TICK: Duration = Duration::from_millis(5);
 
 impl ReplyRouter {
+    /// Spawn a router over an arbitrary fleet's reply stream (the
+    /// [`super::fleet::WorkerFleet`] path; [`WorkerPool::start_router`] is
+    /// the pool-specific convenience).
+    pub fn start(replies: Receiver<WorkerReply>, metrics: Arc<ServingMetrics>) -> ReplyRouter {
+        ReplyRouter::spawn(replies, metrics)
+    }
+
     fn spawn(replies: Receiver<WorkerReply>, metrics: Arc<ServingMetrics>) -> ReplyRouter {
         let routes: Arc<Mutex<HashMap<u64, PendingGroup>>> = Arc::new(Mutex::new(HashMap::new()));
         let stale = Arc::new(AtomicU64::new(0));

@@ -1,0 +1,769 @@
+//! The remote worker fleet: worker *processes* speaking the shared frame
+//! codec over loopback/LAN TCP, presented to the coordinator through the
+//! same [`WorkerFleet`] dispatch/reply surface as the in-process pool —
+//! `Service`, schemes, the verification ladder and the adaptive controller
+//! are unchanged consumers.
+//!
+//! Topology: the fleet **listens**, workers **dial**. A worker claims a
+//! slot with [`OP_HELLO`]`(id = slot)` and gets an [`ST_OK`] ack (or
+//! [`ST_ERR`] if the slot is out of range); thereafter the coordinator
+//! pushes [`OP_TASK`]`(id = group, payload = coded row)` frames and the
+//! worker answers with `ST_OK`/`ST_ERR` frames correlated by group id,
+//! heartbeating with [`OP_PING`] in between. Reconnection is entirely the
+//! worker's job (see [`crate::server::worker`]); the fleet just counts a
+//! rejoin of a previously-held slot as a *reconnect*.
+//!
+//! Slot availability state machine, coordinator's view:
+//!
+//! ```text
+//!            HELLO(slot) + ack
+//!   empty ───────────────────────▶ live ──┬─ EOF/reset ──▶ left
+//!     ▲                                   └─ silent for miss_threshold
+//!     │                                      heartbeat windows ──▶ evicted
+//!     └───────── rejoin (counted as reconnect) ──────────────────────┘
+//! ```
+//!
+//! Availability is surfaced through the reply stream, never as a dispatch
+//! error: a task sent to an empty/left/evicted slot resolves immediately
+//! as an error [`WorkerReply`], and a departing worker's in-flight slots
+//! are failed the same way — so the router's collect-quota/fail-fast logic
+//! (and above it the redispatch/degraded ladder) absorbs churn and a group
+//! can never hang on a dead worker.
+
+use std::collections::HashMap;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::coding::block::RowView;
+use crate::metrics::ServingMetrics;
+use crate::server::frame::{
+    body_f32, read_frame, write_error, write_frame, OP_HELLO, OP_PING, OP_TASK, ST_ERR, ST_OK,
+};
+
+use super::fleet::WorkerFleet;
+use super::pool::{WorkerReply, WorkerTask};
+
+/// Remote-fleet configuration (the `fleet.*` config keys).
+#[derive(Clone, Debug)]
+pub struct FleetConfig {
+    /// Address the fleet listens on for worker joins.
+    pub bind: String,
+    /// Slot count; `None` sizes the fleet to the scheme's worker need.
+    pub workers: Option<usize>,
+    /// Expected heartbeat period (workers should ping at least this often).
+    pub heartbeat: Duration,
+    /// Consecutive silent heartbeat windows before a live slot is evicted.
+    pub miss_threshold: u32,
+}
+
+impl Default for FleetConfig {
+    fn default() -> FleetConfig {
+        FleetConfig {
+            bind: "127.0.0.1:7800".into(),
+            workers: None,
+            heartbeat: Duration::from_millis(500),
+            miss_threshold: 3,
+        }
+    }
+}
+
+/// Point-in-time fleet churn totals (mirrors the `fleet_*` metrics, but
+/// readable without a `Service` attached).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FleetSnapshot {
+    /// Completed join handshakes (first joins + rejoins).
+    pub joins: u64,
+    /// Joins by a worker that had held its slot before.
+    pub reconnects: u64,
+    /// Slots evicted by the heartbeat monitor.
+    pub evictions: u64,
+    /// Slots whose connection dropped at the socket.
+    pub leaves: u64,
+    /// Heartbeat pings received.
+    pub heartbeats: u64,
+    /// Slots currently live.
+    pub live: u64,
+}
+
+/// Per-slot connection state. `generation` increments on every join and
+/// disconnect so a stale reader thread (or a racing monitor eviction) can
+/// tell it lost the slot and must not double-account the departure.
+struct Slot {
+    /// Writer handle of the live connection, if joined.
+    conn: Option<TcpStream>,
+    last_seen: Instant,
+    /// Dispatched-but-unanswered tasks: group id → dispatch time.
+    inflight: HashMap<u64, Instant>,
+    generation: u64,
+    ever_joined: bool,
+}
+
+struct Shared {
+    slots: Vec<Mutex<Slot>>,
+    reply_tx: Sender<WorkerReply>,
+    stop: AtomicBool,
+    heartbeat: Duration,
+    miss_threshold: u32,
+    /// Raw churn totals, kept fleet-side because the fleet exists (and
+    /// accepts joins) before the `Service` — and its metrics — do.
+    joins: AtomicU64,
+    reconnects: AtomicU64,
+    evictions: AtomicU64,
+    leaves: AtomicU64,
+    heartbeats: AtomicU64,
+    live: AtomicU64,
+    /// Service metric set, once attached. The lock also serializes stat
+    /// updates against [`Shared::attach`]'s replay so totals never skew.
+    metrics: Mutex<Option<Arc<ServingMetrics>>>,
+    readers: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl Shared {
+    fn attach(&self, metrics: Arc<ServingMetrics>) {
+        let mut m = self.metrics.lock().unwrap();
+        // Replay everything counted before the service existed.
+        metrics.fleet_joins.add(self.joins.load(Ordering::Relaxed));
+        metrics.fleet_reconnects.add(self.reconnects.load(Ordering::Relaxed));
+        metrics.fleet_evictions.add(self.evictions.load(Ordering::Relaxed));
+        metrics.fleet_leaves.add(self.leaves.load(Ordering::Relaxed));
+        metrics.fleet_heartbeats.add(self.heartbeats.load(Ordering::Relaxed));
+        metrics.fleet_live.set(self.live.load(Ordering::Relaxed));
+        *m = Some(metrics);
+    }
+
+    /// Count one churn event into the fleet stats and, when attached, the
+    /// service metrics (under the attach lock, so replay can't double- or
+    /// under-count a racing event).
+    fn record(&self, event: impl Fn(&Shared), metric: impl Fn(&ServingMetrics)) {
+        let m = self.metrics.lock().unwrap();
+        event(self);
+        if let Some(metrics) = m.as_ref() {
+            metric(metrics);
+            metrics.fleet_live.set(self.live.load(Ordering::Relaxed));
+        }
+    }
+
+    fn record_join(&self, reconnect: bool) {
+        self.record(
+            |s| {
+                s.joins.fetch_add(1, Ordering::Relaxed);
+                s.live.fetch_add(1, Ordering::Relaxed);
+                if reconnect {
+                    s.reconnects.fetch_add(1, Ordering::Relaxed);
+                }
+            },
+            |m| {
+                m.fleet_joins.inc();
+                if reconnect {
+                    m.fleet_reconnects.inc();
+                }
+            },
+        );
+    }
+
+    fn record_heartbeat(&self) {
+        self.record(
+            |s| {
+                s.heartbeats.fetch_add(1, Ordering::Relaxed);
+            },
+            |m| m.fleet_heartbeats.inc(),
+        );
+    }
+
+    /// Tear down a live slot connection (the caller holds the slot lock
+    /// and has checked `conn.is_some()`): close the socket, bump the
+    /// generation so the slot's reader thread no-ops, fail every in-flight
+    /// task into the reply stream, and account the departure once — as an
+    /// eviction (heartbeat monitor) or a leave (socket-level disconnect).
+    fn disconnect(&self, slot_idx: usize, slot: &mut Slot, evict: bool) {
+        let Some(conn) = slot.conn.take() else { return };
+        let _ = conn.shutdown(Shutdown::Both);
+        slot.generation += 1;
+        let reason = if evict {
+            format!(
+                "worker {slot_idx} evicted: silent for {} heartbeat windows",
+                self.miss_threshold
+            )
+        } else {
+            format!("worker {slot_idx} left the fleet")
+        };
+        for (group, t0) in slot.inflight.drain() {
+            let _ = self.reply_tx.send(WorkerReply {
+                group,
+                worker_id: slot_idx,
+                result: Err(reason.clone()),
+                elapsed: t0.elapsed(),
+            });
+        }
+        self.record(
+            |s| {
+                s.live.fetch_sub(1, Ordering::Relaxed);
+                if evict {
+                    s.evictions.fetch_add(1, Ordering::Relaxed);
+                } else {
+                    s.leaves.fetch_add(1, Ordering::Relaxed);
+                }
+            },
+            |m| {
+                if evict {
+                    m.fleet_evictions.inc();
+                } else {
+                    m.fleet_leaves.inc();
+                }
+            },
+        );
+    }
+
+    fn snapshot(&self) -> FleetSnapshot {
+        FleetSnapshot {
+            joins: self.joins.load(Ordering::Relaxed),
+            reconnects: self.reconnects.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            leaves: self.leaves.load(Ordering::Relaxed),
+            heartbeats: self.heartbeats.load(Ordering::Relaxed),
+            live: self.live.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Cheap stats handle to a fleet that has been boxed into a `Service`
+/// (clone it before handing the fleet over).
+#[derive(Clone)]
+pub struct FleetHandle {
+    shared: Arc<Shared>,
+}
+
+impl FleetHandle {
+    /// Current churn totals.
+    pub fn snapshot(&self) -> FleetSnapshot {
+        self.shared.snapshot()
+    }
+
+    /// Slots currently live.
+    pub fn live_workers(&self) -> usize {
+        self.shared.live.load(Ordering::Relaxed) as usize
+    }
+
+    /// Block until at least `n` workers are live (true) or `timeout`
+    /// elapses (false).
+    pub fn wait_for_workers(&self, n: usize, timeout: Duration) -> bool {
+        let deadline = Instant::now() + timeout;
+        while self.live_workers() < n {
+            if Instant::now() >= deadline {
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        true
+    }
+}
+
+/// The coordinator-side fleet of remote worker processes. See the module
+/// docs for the protocol and availability semantics.
+pub struct RemoteFleet {
+    shared: Arc<Shared>,
+    addr: SocketAddr,
+    replies: Option<Receiver<WorkerReply>>,
+    accept_thread: Option<JoinHandle<()>>,
+    monitor_thread: Option<JoinHandle<()>>,
+}
+
+impl RemoteFleet {
+    /// Bind the join listener and start accepting workers for `slots`
+    /// slots. Workers may join immediately — before the `Service` exists;
+    /// churn counted in that window is replayed into the service metrics
+    /// at attach time.
+    pub fn bind(cfg: &FleetConfig, slots: usize) -> Result<RemoteFleet> {
+        anyhow::ensure!(slots > 0, "a fleet needs at least one slot");
+        let listener =
+            TcpListener::bind(&cfg.bind).with_context(|| format!("binding fleet on {}", cfg.bind))?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let (reply_tx, replies) = channel::<WorkerReply>();
+        let shared = Arc::new(Shared {
+            slots: (0..slots)
+                .map(|_| {
+                    Mutex::new(Slot {
+                        conn: None,
+                        last_seen: Instant::now(),
+                        inflight: HashMap::new(),
+                        generation: 0,
+                        ever_joined: false,
+                    })
+                })
+                .collect(),
+            reply_tx,
+            stop: AtomicBool::new(false),
+            heartbeat: cfg.heartbeat,
+            miss_threshold: cfg.miss_threshold.max(1),
+            joins: AtomicU64::new(0),
+            reconnects: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            leaves: AtomicU64::new(0),
+            heartbeats: AtomicU64::new(0),
+            live: AtomicU64::new(0),
+            metrics: Mutex::new(None),
+            readers: Mutex::new(Vec::new()),
+        });
+
+        let s = shared.clone();
+        let accept_thread = std::thread::Builder::new()
+            .name("fleet-accept".into())
+            .spawn(move || {
+                while !s.stop.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, peer)) => {
+                            log::debug!("fleet: connection from {peer}");
+                            let s2 = s.clone();
+                            let h = std::thread::Builder::new()
+                                .name("fleet-join".into())
+                                .spawn(move || handle_worker(s2, stream))
+                                .expect("spawning fleet join handler");
+                            s.readers.lock().unwrap().push(h);
+                        }
+                        Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(5));
+                        }
+                        Err(e) => {
+                            // Same resilience rule as the client front-end:
+                            // a transient accept failure must not take the
+                            // fleet down.
+                            log::warn!("fleet accept error (listener stays up): {e}");
+                            std::thread::sleep(Duration::from_millis(25));
+                        }
+                    }
+                }
+            })
+            .expect("spawning fleet acceptor");
+
+        let s = shared.clone();
+        let monitor_thread = std::thread::Builder::new()
+            .name("fleet-monitor".into())
+            .spawn(move || {
+                let cutoff = s.heartbeat * s.miss_threshold;
+                let tick = (s.heartbeat / 2).max(Duration::from_millis(1));
+                while !s.stop.load(Ordering::Relaxed) {
+                    std::thread::sleep(tick);
+                    for (i, slot) in s.slots.iter().enumerate() {
+                        let mut slot = slot.lock().unwrap();
+                        if slot.conn.is_some() && slot.last_seen.elapsed() > cutoff {
+                            log::warn!("fleet: evicting worker {i} (missed heartbeats)");
+                            s.disconnect(i, &mut slot, true);
+                        }
+                    }
+                }
+            })
+            .expect("spawning fleet monitor");
+
+        Ok(RemoteFleet {
+            shared,
+            addr,
+            replies: Some(replies),
+            accept_thread: Some(accept_thread),
+            monitor_thread: Some(monitor_thread),
+        })
+    }
+
+    /// The bound join address (useful with an ephemeral `:0` bind).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stats handle that outlives handing the fleet to a `Service`.
+    pub fn handle(&self) -> FleetHandle {
+        FleetHandle { shared: self.shared.clone() }
+    }
+
+    /// Slots currently live.
+    pub fn live_workers(&self) -> usize {
+        self.shared.live.load(Ordering::Relaxed) as usize
+    }
+
+    /// Block until at least `n` workers are live (true) or `timeout`
+    /// elapses (false).
+    pub fn wait_for_workers(&self, n: usize, timeout: Duration) -> bool {
+        self.handle().wait_for_workers(n, timeout)
+    }
+
+    /// Current churn totals.
+    pub fn snapshot(&self) -> FleetSnapshot {
+        self.shared.snapshot()
+    }
+
+    fn stop_and_join(&mut self) {
+        if self.shared.stop.swap(true, Ordering::Relaxed) {
+            return;
+        }
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.monitor_thread.take() {
+            let _ = h.join();
+        }
+        // Close every live connection so reader threads unblock; shutdown
+        // churn is not leave/evict churn, so don't route it through
+        // `disconnect`'s accounting — but do fail any in-flight tasks.
+        for (i, slot) in self.shared.slots.iter().enumerate() {
+            let mut slot = slot.lock().unwrap();
+            if let Some(conn) = slot.conn.take() {
+                let _ = conn.shutdown(Shutdown::Both);
+                slot.generation += 1;
+                for (group, t0) in slot.inflight.drain() {
+                    let _ = self.shared.reply_tx.send(WorkerReply {
+                        group,
+                        worker_id: i,
+                        result: Err(format!("worker {i}: fleet shut down")),
+                        elapsed: t0.elapsed(),
+                    });
+                }
+            }
+        }
+        let handles: Vec<JoinHandle<()>> =
+            self.shared.readers.lock().unwrap().drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for RemoteFleet {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+impl WorkerFleet for RemoteFleet {
+    fn num_workers(&self) -> usize {
+        self.shared.slots.len()
+    }
+
+    fn send(&self, worker: usize, task: WorkerTask) -> Result<()> {
+        if self.shared.stop.load(Ordering::Relaxed) {
+            bail!("worker fleet has shut down");
+        }
+        // Plan-level injections (`extra_delay`, `corrupt`) are in-process
+        // scheduler hooks; the builder forbids them alongside a remote
+        // fleet, where fault programs run inside the worker binary.
+        let mut slot = self.shared.slots[worker].lock().unwrap();
+        let wrote = match slot.conn.as_mut() {
+            Some(conn) => write_frame(conn, OP_TASK, task.group, &task.payload).is_ok(),
+            None => false,
+        };
+        if wrote {
+            slot.inflight.insert(task.group, Instant::now());
+        } else {
+            if slot.conn.is_some() {
+                // The write just discovered a dead connection.
+                self.shared.disconnect(worker, &mut slot, false);
+            }
+            // Per-worker unavailability becomes an error reply, so the
+            // router's quota/fail-fast logic absorbs it — never a hang,
+            // never a whole-group dispatch failure.
+            let _ = self.shared.reply_tx.send(WorkerReply {
+                group: task.group,
+                worker_id: worker,
+                result: Err(format!("worker {worker} unavailable (not joined, left, or evicted)")),
+                elapsed: Duration::ZERO,
+            });
+        }
+        Ok(())
+    }
+
+    fn take_replies(&mut self) -> Option<Receiver<WorkerReply>> {
+        self.replies.take()
+    }
+
+    fn attach_metrics(&self, metrics: Arc<ServingMetrics>) {
+        self.shared.attach(metrics);
+    }
+
+    fn shutdown(mut self: Box<Self>) {
+        self.stop_and_join();
+    }
+}
+
+/// Handshake + read loop for one worker connection (runs on its own
+/// thread, spawned per accepted connection).
+fn handle_worker(shared: Arc<Shared>, mut stream: TcpStream) {
+    stream.set_nodelay(true).ok();
+    // Bound the pre-HELLO read so a silent connection can't wedge this
+    // thread past shutdown.
+    if stream.set_read_timeout(Some(Duration::from_secs(5))).is_err() {
+        return;
+    }
+    let hello = match read_frame(&mut stream) {
+        Ok(f) => f,
+        Err(e) => {
+            log::debug!("fleet: join handshake failed: {e:#}");
+            return;
+        }
+    };
+    if hello.head != OP_HELLO {
+        let _ = write_error(&mut stream, hello.id, "expected HELLO");
+        return;
+    }
+    let slot_idx = hello.id as usize;
+    if slot_idx >= shared.slots.len() {
+        let n = shared.slots.len();
+        let _ = write_error(
+            &mut stream,
+            hello.id,
+            &format!("slot {slot_idx} out of range (fleet has {n} slots)"),
+        );
+        return;
+    }
+    if stream.set_read_timeout(None).is_err() {
+        return;
+    }
+    let generation;
+    let reconnect;
+    {
+        let mut slot = shared.slots[slot_idx].lock().unwrap();
+        if slot.conn.is_some() {
+            // A fresh join replaces a stale connection (half-dead socket
+            // the monitor hasn't noticed yet): account the old one as a
+            // leave, then install the new one.
+            shared.disconnect(slot_idx, &mut slot, false);
+        }
+        let writer = match stream.try_clone() {
+            Ok(w) => w,
+            Err(_) => return,
+        };
+        // Ack while holding the lock so no task can be dispatched on a
+        // connection whose worker hasn't seen its ack yet.
+        if write_frame(&mut stream, ST_OK, hello.id, &[]).is_err() {
+            return;
+        }
+        slot.generation += 1;
+        generation = slot.generation;
+        reconnect = slot.ever_joined;
+        slot.ever_joined = true;
+        slot.last_seen = Instant::now();
+        slot.conn = Some(writer);
+    }
+    log::info!(
+        "fleet: worker joined slot {slot_idx}{}",
+        if reconnect { " (reconnect)" } else { "" }
+    );
+    shared.record_join(reconnect);
+    read_worker(&shared, slot_idx, generation, stream);
+}
+
+fn read_worker(shared: &Arc<Shared>, slot_idx: usize, generation: u64, mut stream: TcpStream) {
+    loop {
+        let frame = match read_frame(&mut stream) {
+            Ok(f) => f,
+            Err(_) => {
+                // EOF/reset — or our own side closed it (eviction,
+                // replacement, shutdown). Only the generation owner
+                // accounts the leave; a bumped generation means someone
+                // else already did.
+                let mut slot = shared.slots[slot_idx].lock().unwrap();
+                if slot.generation == generation && slot.conn.is_some() {
+                    shared.disconnect(slot_idx, &mut slot, false);
+                }
+                return;
+            }
+        };
+        match frame.head {
+            OP_PING => {
+                let mut slot = shared.slots[slot_idx].lock().unwrap();
+                if slot.generation == generation {
+                    slot.last_seen = Instant::now();
+                    drop(slot);
+                    shared.record_heartbeat();
+                }
+            }
+            ST_OK | ST_ERR => {
+                let group = frame.id;
+                let result = if frame.head == ST_OK {
+                    Ok(RowView::from_vec(body_f32(&frame.body)))
+                } else {
+                    Err(String::from_utf8_lossy(&frame.body).into_owned())
+                };
+                let mut slot = shared.slots[slot_idx].lock().unwrap();
+                if slot.generation != generation {
+                    // The slot moved on (evicted/replaced); its in-flight
+                    // tasks were already failed — don't double-reply.
+                    return;
+                }
+                slot.last_seen = Instant::now();
+                let elapsed =
+                    slot.inflight.remove(&group).map(|t0| t0.elapsed()).unwrap_or_default();
+                drop(slot);
+                let _ = shared.reply_tx.send(WorkerReply {
+                    group,
+                    worker_id: slot_idx,
+                    result,
+                    elapsed,
+                });
+            }
+            other => {
+                log::warn!("fleet: worker {slot_idx} sent unexpected head {other} — ignoring");
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_cfg() -> FleetConfig {
+        FleetConfig {
+            bind: "127.0.0.1:0".into(),
+            workers: None,
+            heartbeat: Duration::from_millis(100),
+            // Tall threshold: these tests exercise join/leave/dispatch, not
+            // eviction timing.
+            miss_threshold: 100,
+        }
+    }
+
+    /// Minimal in-test worker: join, then answer each task by echoing its
+    /// payload scaled by 2.
+    fn fake_worker(addr: SocketAddr, slot: u64) -> TcpStream {
+        let mut s = TcpStream::connect(addr).unwrap();
+        write_frame(&mut s, OP_HELLO, slot, &[]).unwrap();
+        let ack = read_frame(&mut s).unwrap();
+        assert_eq!((ack.head, ack.id), (ST_OK, slot));
+        s
+    }
+
+    #[test]
+    fn join_dispatch_reply_roundtrip() {
+        let mut fleet = RemoteFleet::bind(&test_cfg(), 2).unwrap();
+        let replies = fleet.take_replies().unwrap();
+        let mut w = fake_worker(fleet.addr(), 0);
+        assert!(fleet.wait_for_workers(1, Duration::from_secs(5)));
+
+        let task = WorkerTask {
+            group: 9,
+            payload: RowView::from_vec(vec![1.0, 2.0, 3.0]),
+            extra_delay: Duration::ZERO,
+            corrupt: None,
+        };
+        WorkerFleet::send(&fleet, 0, task).unwrap();
+        let f = read_frame(&mut w).unwrap();
+        assert_eq!((f.head, f.id), (OP_TASK, 9));
+        let xs: Vec<f32> = body_f32(&f.body).iter().map(|x| x * 2.0).collect();
+        write_frame(&mut w, ST_OK, 9, &xs).unwrap();
+
+        let reply = replies.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!((reply.group, reply.worker_id), (9, 0));
+        assert_eq!(reply.result.unwrap().as_slice(), &[2.0, 4.0, 6.0]);
+        assert_eq!(fleet.snapshot().joins, 1);
+    }
+
+    #[test]
+    fn out_of_range_slot_is_rejected() {
+        let fleet = RemoteFleet::bind(&test_cfg(), 2).unwrap();
+        let mut s = TcpStream::connect(fleet.addr()).unwrap();
+        write_frame(&mut s, OP_HELLO, 7, &[]).unwrap();
+        let resp = read_frame(&mut s).unwrap();
+        assert_eq!(resp.head, ST_ERR);
+        assert!(String::from_utf8_lossy(&resp.body).contains("out of range"));
+        assert_eq!(fleet.snapshot().joins, 0);
+    }
+
+    #[test]
+    fn unjoined_slot_resolves_as_error_reply_not_hang() {
+        let mut fleet = RemoteFleet::bind(&test_cfg(), 1).unwrap();
+        let replies = fleet.take_replies().unwrap();
+        let task = WorkerTask {
+            group: 4,
+            payload: RowView::from_vec(vec![1.0]),
+            extra_delay: Duration::ZERO,
+            corrupt: None,
+        };
+        WorkerFleet::send(&fleet, 0, task).unwrap();
+        let reply = replies.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!((reply.group, reply.worker_id), (4, 0));
+        assert!(reply.result.unwrap_err().contains("unavailable"));
+    }
+
+    #[test]
+    fn disconnect_fails_inflight_and_counts_a_leave() {
+        let mut fleet = RemoteFleet::bind(&test_cfg(), 1).unwrap();
+        let replies = fleet.take_replies().unwrap();
+        let w = fake_worker(fleet.addr(), 0);
+        assert!(fleet.wait_for_workers(1, Duration::from_secs(5)));
+        let task = WorkerTask {
+            group: 11,
+            payload: RowView::from_vec(vec![1.0]),
+            extra_delay: Duration::ZERO,
+            corrupt: None,
+        };
+        WorkerFleet::send(&fleet, 0, task).unwrap();
+        // Worker dies without answering: its in-flight slot must resolve
+        // as an error reply, and the departure counts as a leave.
+        drop(w);
+        let reply = replies.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!((reply.group, reply.worker_id), (11, 0));
+        assert!(reply.result.is_err());
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while fleet.snapshot().leaves == 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let snap = fleet.snapshot();
+        assert_eq!(snap.leaves, 1);
+        assert_eq!(snap.live, 0);
+    }
+
+    #[test]
+    fn rejoin_counts_as_reconnect() {
+        let fleet = RemoteFleet::bind(&test_cfg(), 1).unwrap();
+        let w = fake_worker(fleet.addr(), 0);
+        assert!(fleet.wait_for_workers(1, Duration::from_secs(5)));
+        drop(w);
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while fleet.live_workers() > 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let _w2 = fake_worker(fleet.addr(), 0);
+        assert!(fleet.wait_for_workers(1, Duration::from_secs(5)));
+        let snap = fleet.snapshot();
+        assert_eq!(snap.joins, 2);
+        assert_eq!(snap.reconnects, 1);
+        assert_eq!(snap.leaves, 1);
+    }
+
+    #[test]
+    fn silent_worker_is_evicted() {
+        let cfg = FleetConfig {
+            bind: "127.0.0.1:0".into(),
+            workers: None,
+            heartbeat: Duration::from_millis(30),
+            miss_threshold: 3,
+        };
+        let fleet = RemoteFleet::bind(&cfg, 1).unwrap();
+        // Join and then never heartbeat: the monitor must evict.
+        let _w = fake_worker(fleet.addr(), 0);
+        assert!(fleet.wait_for_workers(1, Duration::from_secs(5)));
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while fleet.snapshot().evictions == 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        let snap = fleet.snapshot();
+        assert_eq!(snap.evictions, 1, "{snap:?}");
+        assert_eq!(snap.live, 0);
+    }
+
+    #[test]
+    fn metrics_attach_replays_pre_attach_churn() {
+        let fleet = RemoteFleet::bind(&test_cfg(), 1).unwrap();
+        let _w = fake_worker(fleet.addr(), 0);
+        assert!(fleet.wait_for_workers(1, Duration::from_secs(5)));
+        // Attach after the join: the counter must still see it.
+        let metrics = Arc::new(ServingMetrics::new());
+        fleet.attach_metrics(metrics.clone());
+        assert_eq!(metrics.fleet_joins.get(), 1);
+        assert_eq!(metrics.fleet_live.get(), 1);
+    }
+}

@@ -1,0 +1,139 @@
+//! Adversarial input sweep over the shared frame codec.
+//!
+//! Both wire surfaces — the client-facing serving protocol and the
+//! coordinator↔worker fleet protocol — parse with the one
+//! `server::frame::read_frame`, so this table hardens both at once: every
+//! truncated, oversized, wrapping-length or garbage-head input must come
+//! back as a clean `Err`, never a panic, a hang, or an oversized
+//! allocation.
+
+use std::io::Cursor;
+
+use approxifer::server::{
+    body_f32, read_frame, write_error, write_frame, MAX_FRAME, OP_HELLO, OP_PING, OP_PREDICT,
+    OP_TASK, ST_ERR, ST_OK,
+};
+
+/// Hand-assemble a frame with full control over every field — including
+/// the inconsistent ones a well-behaved writer can't produce.
+fn raw_frame(frame_len: u32, head: u8, id: u64, plen: u64, body: &[u8]) -> Vec<u8> {
+    let mut buf = Vec::new();
+    buf.extend_from_slice(&frame_len.to_le_bytes());
+    buf.push(head);
+    buf.extend_from_slice(&id.to_le_bytes());
+    buf.extend_from_slice(&plen.to_le_bytes());
+    buf.extend_from_slice(body);
+    buf
+}
+
+/// `frame_len` for a consistent frame carrying `body_len` payload bytes.
+fn flen(body_len: usize) -> u32 {
+    17 + body_len as u32
+}
+
+#[test]
+fn legitimate_frames_roundtrip_for_every_head() {
+    // Float-payload heads: client query, worker dispatch, success reply.
+    for head in [OP_PREDICT, OP_TASK, ST_OK] {
+        let payload = [1.5f32, -2.0, 0.25];
+        let mut buf = Vec::new();
+        write_frame(&mut buf, head, 42, &payload).unwrap();
+        let f = read_frame(&mut Cursor::new(buf)).unwrap();
+        assert_eq!(f.head, head);
+        assert_eq!(f.id, 42);
+        assert_eq!(body_f32(&f.body), payload);
+    }
+    // Payload-less heads: liveness probe / heartbeat, worker join.
+    for head in [OP_PING, OP_HELLO] {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, head, 7, &[]).unwrap();
+        let f = read_frame(&mut Cursor::new(buf)).unwrap();
+        assert_eq!(f.head, head);
+        assert_eq!(f.id, 7);
+        assert!(f.body.is_empty());
+    }
+    // Byte-payload head: error reply.
+    let mut buf = Vec::new();
+    write_error(&mut buf, 9, "worker 3: injected fault").unwrap();
+    let f = read_frame(&mut Cursor::new(buf)).unwrap();
+    assert_eq!(f.head, ST_ERR);
+    assert_eq!(f.id, 9);
+    assert_eq!(std::str::from_utf8(&f.body).unwrap(), "worker 3: injected fault");
+
+    // An empty success reply (the ping/hello ack) also roundtrips.
+    let mut buf = Vec::new();
+    write_frame(&mut buf, ST_OK, 0, &[]).unwrap();
+    let f = read_frame(&mut Cursor::new(buf)).unwrap();
+    assert_eq!(f.head, ST_OK);
+    assert!(f.body.is_empty());
+}
+
+#[test]
+fn malformed_frames_are_clean_protocol_errors() {
+    // The value whose `* 4` wraps to exactly 8 in release builds: if the
+    // length check used unchecked multiplication, this frame would pass
+    // validation with a 2^62-float declared payload over an 8-byte body.
+    let wrap8 = (1u64 << 62) + 2;
+
+    let cases: Vec<(&str, Vec<u8>)> = vec![
+        // --- frame_len bounds ---
+        ("frame_len zero", raw_frame(0, OP_PREDICT, 1, 0, &[])),
+        ("frame_len below header", raw_frame(16, OP_PREDICT, 1, 0, &[])),
+        ("frame_len above MAX_FRAME", raw_frame(MAX_FRAME + 1, OP_PREDICT, 1, 0, &[])),
+        ("frame_len u32::MAX", raw_frame(u32::MAX, OP_PREDICT, 1, 0, &[])),
+        // --- truncation at every interesting offset ---
+        ("empty input", Vec::new()),
+        ("truncated length prefix", vec![0x11, 0x00]),
+        ("length only, no body", flen(0).to_le_bytes().to_vec()),
+        ("body shorter than declared", {
+            let mut b = raw_frame(flen(8), OP_PREDICT, 1, 2, &[0u8; 8]);
+            b.truncate(b.len() - 5);
+            b
+        }),
+        ("header itself truncated", {
+            let mut b = raw_frame(flen(0), OP_PING, 1, 0, &[]);
+            b.truncate(9);
+            b
+        }),
+        // --- wrapping / oversized payload_len on every float head ---
+        ("wrapping payload_len on PREDICT", raw_frame(flen(8), OP_PREDICT, 1, wrap8, &[0u8; 8])),
+        ("wrapping payload_len on TASK", raw_frame(flen(8), OP_TASK, 1, wrap8, &[0u8; 8])),
+        ("wrapping payload_len on OK", raw_frame(flen(8), ST_OK, 1, wrap8, &[0u8; 8])),
+        ("payload_len u64::MAX", raw_frame(flen(8), OP_PREDICT, 1, u64::MAX, &[0u8; 8])),
+        // --- plain payload_len / body disagreements ---
+        ("declared floats exceed body", raw_frame(flen(8), OP_PREDICT, 1, 3, &[0u8; 8])),
+        ("declared floats undershoot body", raw_frame(flen(8), OP_TASK, 1, 1, &[0u8; 8])),
+        ("non-multiple-of-4 float body", raw_frame(flen(7), ST_OK, 1, 2, &[0u8; 7])),
+        ("error byte count mismatch", raw_frame(flen(3), ST_ERR, 1, 5, b"abc")),
+        // --- payload smuggled onto payload-less ops ---
+        ("payload on PING", raw_frame(flen(4), OP_PING, 1, 1, &[0u8; 4])),
+        ("payload on HELLO", raw_frame(flen(4), OP_HELLO, 1, 1, &[0u8; 4])),
+        ("declared-but-absent payload on PING", raw_frame(flen(0), OP_PING, 1, 9, &[])),
+        // --- garbage head bytes ---
+        ("head 0", raw_frame(flen(0), 0, 1, 0, &[])),
+        ("head 5 (past the op space)", raw_frame(flen(0), 5, 1, 0, &[])),
+        ("head 200", raw_frame(flen(4), 200, 1, 1, &[0u8; 4])),
+    ];
+
+    for (name, bytes) in cases {
+        let res = read_frame(&mut Cursor::new(bytes));
+        assert!(res.is_err(), "{name}: expected a protocol error, got a parsed frame");
+    }
+}
+
+#[test]
+fn error_messages_identify_the_violation() {
+    // Spot-check that the three distinct failure classes are
+    // distinguishable in the error text (operators grep these).
+    let wrap = raw_frame(flen(8), OP_PREDICT, 1, (1u64 << 62) + 2, &[0u8; 8]);
+    let err = read_frame(&mut Cursor::new(wrap)).unwrap_err();
+    assert!(format!("{err:#}").contains("payload length mismatch"), "{err:#}");
+
+    let huge = raw_frame(MAX_FRAME + 1, OP_PREDICT, 1, 0, &[]);
+    let err = read_frame(&mut Cursor::new(huge)).unwrap_err();
+    assert!(format!("{err:#}").contains("bad frame length"), "{err:#}");
+
+    let garbage = raw_frame(flen(0), 99, 1, 0, &[]);
+    let err = read_frame(&mut Cursor::new(garbage)).unwrap_err();
+    assert!(format!("{err:#}").contains("unknown frame head"), "{err:#}");
+}

@@ -1,0 +1,246 @@
+//! Integration: the remote worker fleet with *real* worker processes.
+//!
+//! These tests exec the compiled `approxifer` binary's `worker`
+//! subcommand over loopback TCP — the full production topology in
+//! miniature: bind the fleet listener, let worker processes join, serve
+//! coded groups through the unified `Service`, and then do terrible
+//! things to the workers (SIGKILL mid-group, going silent) to prove the
+//! coordinator's churn handling: a lost worker's in-flight slots resolve
+//! as error replies into the existing collect-quota machinery, so groups
+//! complete (or fail fast) but never hang.
+
+use std::process::{Child, Command, Stdio};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use approxifer::coding::{ApproxIferCode, CodeParams};
+use approxifer::coordinator::Service;
+use approxifer::workers::{FleetConfig, RemoteFleet};
+
+/// Kill-on-drop guard so a panicking assertion never leaks worker
+/// processes into the test runner.
+struct Reap(Vec<Child>);
+
+impl Reap {
+    fn push(&mut self, c: Child) {
+        self.0.push(c);
+    }
+}
+
+impl Drop for Reap {
+    fn drop(&mut self) {
+        for c in &mut self.0 {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+    }
+}
+
+/// Spawn one `approxifer worker` process against the fleet listener.
+fn spawn_worker(addr: &str, slot: usize, engine: &str, extra: &[&str]) -> Child {
+    let mut cmd = Command::new(env!("CARGO_BIN_EXE_approxifer"));
+    cmd.arg("worker")
+        .arg("--connect")
+        .arg(addr)
+        .arg("--slot")
+        .arg(slot.to_string())
+        .arg("--engine")
+        .arg(engine)
+        .args(extra)
+        .stdout(Stdio::null())
+        .stderr(Stdio::null());
+    cmd.spawn().expect("spawning worker process")
+}
+
+fn poll_until(timeout: Duration, mut cond: impl FnMut() -> bool) -> bool {
+    let deadline = Instant::now() + timeout;
+    loop {
+        if cond() {
+            return true;
+        }
+        if Instant::now() >= deadline {
+            return false;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    }
+}
+
+/// The acceptance-path test: three real worker processes serve a group,
+/// one is SIGKILLed mid-group, the group still completes through the
+/// straggler budget, and the replacement process counts as a reconnect.
+#[test]
+fn killed_worker_mid_group_completes_and_reconnect_counts() {
+    // K=2, S=1, E=0: three workers, tolerates one loss per group. The
+    // miss threshold is high so the kill is observed as a *leave* (reader
+    // EOF), not racily as an eviction.
+    let fleet = RemoteFleet::bind(
+        &FleetConfig {
+            bind: "127.0.0.1:0".into(),
+            workers: None,
+            heartbeat: Duration::from_millis(100),
+            miss_threshold: 100,
+        },
+        3,
+    )
+    .unwrap();
+    let addr = fleet.addr().to_string();
+    let handle = fleet.handle();
+
+    let mut kids = Reap(Vec::new());
+    for slot in 0..3 {
+        // 40ms of synthetic compute per task: wide enough to land the
+        // kill while the group is in flight.
+        kids.push(spawn_worker(&addr, slot, "mock:8:3:40", &["--heartbeat-ms", "50"]));
+    }
+    assert!(
+        handle.wait_for_workers(3, Duration::from_secs(30)),
+        "workers never joined: live={}",
+        handle.live_workers()
+    );
+
+    let svc = Service::builder(Arc::new(ApproxIferCode::new(CodeParams::new(2, 1, 0))))
+        .fleet(Box::new(fleet))
+        .flush_after(Duration::from_millis(20))
+        .group_timeout(Duration::from_secs(15))
+        .spawn()
+        .unwrap();
+    assert_eq!(svc.metrics.fleet_joins.get(), 3, "pre-attach joins must replay into metrics");
+
+    // Two queries fill one K=2 group, fanned out to all three workers.
+    let q: Vec<Vec<f32>> = (0..2)
+        .map(|j| (0..8).map(|t| ((j * 8 + t) as f32 * 0.1).sin()).collect())
+        .collect();
+    let handles: Vec<_> = q.iter().map(|x| svc.submit(x.clone())).collect();
+
+    // SIGKILL worker 2 while its 40ms inference is (very likely) still
+    // running. Whatever the interleaving, the group must complete: either
+    // the reply beat the kill, or the dead connection resolves the slot
+    // as an error reply and the decode proceeds on the K fastest.
+    std::thread::sleep(Duration::from_millis(15));
+    let mut victim = kids.0.remove(2);
+    victim.kill().unwrap();
+    victim.wait().unwrap();
+
+    for (j, h) in handles.into_iter().enumerate() {
+        let pred = h.wait_timeout(Duration::from_secs(20)).expect("group must complete");
+        assert_eq!(pred.len(), 3, "query {j}");
+        assert!(pred.iter().all(|v| v.is_finite()), "query {j}: {pred:?}");
+    }
+
+    // The kill surfaces as fleet churn once the reader sees the reset.
+    assert!(
+        poll_until(Duration::from_secs(10), || handle.snapshot().leaves >= 1),
+        "no leave recorded after SIGKILL: {:?}",
+        handle.snapshot()
+    );
+    assert!(svc.metrics.fleet_leaves.get() >= 1);
+
+    // A replacement process on the same slot is a *reconnect*.
+    kids.push(spawn_worker(&addr, 2, "mock:8:3:40", &["--heartbeat-ms", "50"]));
+    assert!(
+        poll_until(Duration::from_secs(30), || handle.snapshot().reconnects >= 1),
+        "replacement worker never counted as reconnect: {:?}",
+        handle.snapshot()
+    );
+    assert!(handle.wait_for_workers(3, Duration::from_secs(30)));
+    assert!(svc.metrics.fleet_reconnects.get() >= 1);
+
+    // The healed fleet serves the next group end to end.
+    let handles: Vec<_> = q.iter().map(|x| svc.submit(x.clone())).collect();
+    for h in handles {
+        let pred = h.wait_timeout(Duration::from_secs(20)).expect("post-heal group");
+        assert!(pred.iter().all(|v| v.is_finite()));
+    }
+    assert!(svc.metrics.fleet_heartbeats.get() > 0, "workers should have heartbeated");
+
+    svc.shutdown();
+}
+
+/// A worker that goes silent (open socket, no heartbeats, no replies —
+/// a hung process) is evicted after `miss_threshold` silent windows.
+#[test]
+fn silent_worker_is_evicted_by_heartbeat_misses() {
+    let fleet = RemoteFleet::bind(
+        &FleetConfig {
+            bind: "127.0.0.1:0".into(),
+            workers: None,
+            heartbeat: Duration::from_millis(60),
+            miss_threshold: 3,
+        },
+        1,
+    )
+    .unwrap();
+    let addr = fleet.addr().to_string();
+    let handle = fleet.handle();
+
+    let mut kids = Reap(Vec::new());
+    kids.push(spawn_worker(
+        &addr,
+        0,
+        "mock:4:2",
+        &["--heartbeat-ms", "40", "--mute-after-ms", "150"],
+    ));
+    assert!(handle.wait_for_workers(1, Duration::from_secs(30)), "worker never joined");
+    assert!(
+        poll_until(Duration::from_secs(10), || handle.snapshot().heartbeats >= 1),
+        "no heartbeat before the mute kicked in: {:?}",
+        handle.snapshot()
+    );
+
+    // After 150ms the worker mutes; ~3 silent 60ms windows later the
+    // monitor must evict the slot.
+    assert!(
+        poll_until(Duration::from_secs(10), || handle.snapshot().evictions >= 1),
+        "silent worker was never evicted: {:?}",
+        handle.snapshot()
+    );
+    assert_eq!(handle.live_workers(), 0, "evicted slot must not count as live");
+
+    // RemoteFleet's Drop closes the listener and joins its threads.
+    drop(fleet);
+}
+
+/// With no workers joined at all, dispatch resolves every slot as an
+/// error reply: submissions fail fast through the quota/redispatch
+/// ladder instead of hanging until the group timeout.
+#[test]
+fn unjoined_fleet_fails_groups_fast_instead_of_hanging() {
+    let fleet = RemoteFleet::bind(
+        &FleetConfig {
+            bind: "127.0.0.1:0".into(),
+            workers: None,
+            heartbeat: Duration::from_millis(200),
+            miss_threshold: 100,
+        },
+        3,
+    )
+    .unwrap();
+
+    let svc = Service::builder(Arc::new(ApproxIferCode::new(CodeParams::new(2, 1, 0))))
+        .fleet(Box::new(fleet))
+        .flush_after(Duration::from_millis(10))
+        .group_timeout(Duration::from_secs(60))
+        .spawn()
+        .unwrap();
+
+    let t0 = Instant::now();
+    let handles: Vec<_> =
+        (0..2).map(|_| svc.submit(vec![0.5f32; 8])).collect();
+    for h in handles {
+        let res = h.wait_timeout(Duration::from_secs(10));
+        let err = res.expect_err("no workers: prediction must fail");
+        // The failure must come from the service's fail-fast path, not
+        // from our client-side patience bound expiring.
+        assert!(
+            !err.to_string().contains("timed out"),
+            "group hung instead of failing fast: {err}"
+        );
+    }
+    assert!(
+        t0.elapsed() < Duration::from_secs(10),
+        "fail-fast took {:?}",
+        t0.elapsed()
+    );
+
+    svc.shutdown();
+}
