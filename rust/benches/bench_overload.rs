@@ -64,6 +64,14 @@ fn run_row(
     let report = drive(&svc, &trace, total, PAYLOAD, seed, 4, scheme_label, fault_label)
         .expect("overload accounting must balance");
     svc.shutdown();
+    // The per-class tail split must partition the successes — every
+    // served/degraded query is interactive xor batch, never both/neither.
+    assert_eq!(
+        report.interactive.count + report.batch.count,
+        report.served + report.degraded,
+        "per-class latency split must partition the successes: {}",
+        report.line()
+    );
     if fault_spec.is_none() {
         assert_eq!(
             report.failed, 0,

@@ -1,0 +1,266 @@
+//! Multi-tenant fairness bench: two tenants with different schemes and
+//! weights share one worker fleet through the [`TenantRegistry`]'s
+//! weighted-round-robin dispatch scheduler. Emits `tenant_rows` into
+//! `BENCH_PR_JSON` (spliced into the existing artifact when present) so
+//! per-tenant goodput, tail latency and the accounting invariant are a
+//! tracked regression surface.
+//!
+//! Two scenarios per run:
+//! * `honest` — both tenants closed-loop at their natural rate.
+//! * `byz-neighbor` — tenant alpha's groups carry a Byzantine fault plan
+//!   (worker 0 corrupts every reply) while beta stays honest. The
+//!   fairness property under test: beta still serves **everything**, and
+//!   its tail stays bounded, because alpha's in-flight budget caps how
+//!   much of the shared fleet its recovery ladder can hold.
+//!
+//! Every row re-asserts the per-tenant accounting invariant
+//! `received == served + degraded + shed + rejected + failed`, and the
+//! registry asserts it globally — CI runs this in quick mode as a hard
+//! gate, not just a perf printout.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use approxifer::coding::CodeParams;
+use approxifer::coordinator::{
+    Accounting, FaultPlan, Strategy, TenantRegistry, TenantSpec, VerifyPolicy,
+};
+use approxifer::harness::overload::ClassLatency;
+use approxifer::util::bench::quick_mode;
+use approxifer::workers::{
+    ByzantineMode, InferenceEngine, LinearMockEngine, WorkerPool, WorkerSpec,
+};
+
+const D: usize = 16;
+
+fn query(i: usize) -> Vec<f32> {
+    (0..D).map(|t| ((i as f32) * 0.13 + (t as f32) * 0.029).sin()).collect()
+}
+
+/// One per-tenant result row for a scenario.
+struct TenantRow {
+    scenario: &'static str,
+    tenant: String,
+    scheme: String,
+    weight: u64,
+    budget: usize,
+    grants: u64,
+    acc: Accounting,
+    latency: ClassLatency,
+}
+
+impl TenantRow {
+    fn line(&self) -> String {
+        format!(
+            "{:<12} {:<6} {:<24} weight={} budget={} grants={:>5} \
+             served={} degraded={} shed={} rejected={} failed={} \
+             p50={:.2}ms p99={:.2}ms",
+            self.scenario,
+            self.tenant,
+            self.scheme,
+            self.weight,
+            self.budget,
+            self.grants,
+            self.acc.served,
+            self.acc.degraded,
+            self.acc.shed,
+            self.acc.rejected,
+            self.acc.failed,
+            self.latency.p50_ms,
+            self.latency.p99_ms,
+        )
+    }
+
+    fn json(&self) -> String {
+        format!(
+            "{{\"scenario\": \"{}\", \"tenant\": \"{}\", \"scheme\": \"{}\", \
+             \"weight\": {}, \"budget\": {}, \"grants\": {}, \
+             \"received\": {}, \"served\": {}, \"degraded\": {}, \"shed\": {}, \
+             \"rejected\": {}, \"failed\": {}, \"latency\": {}}}",
+            self.scenario,
+            self.tenant,
+            self.scheme,
+            self.weight,
+            self.budget,
+            self.grants,
+            self.acc.received,
+            self.acc.served,
+            self.acc.degraded,
+            self.acc.shed,
+            self.acc.rejected,
+            self.acc.failed,
+            self.latency.json(),
+        )
+    }
+}
+
+fn scheme_label(spec: &TenantSpec) -> String {
+    format!(
+        "approxifer(K={},S={},E={})",
+        spec.params.k, spec.params.s, spec.params.e
+    )
+}
+
+/// Run one two-tenant scenario and return a row per tenant. `byz` turns
+/// on alpha's Byzantine fault plan; beta is always honest.
+fn run_scenario(scenario: &'static str, byz: bool, groups: usize) -> Vec<TenantRow> {
+    // alpha (2,1,1) needs 7 workers and runs verified (it has a Byzantine
+    // budget to spend); beta (4,1,0) needs 5. One pool serves both, with
+    // each worker holding both tenants' engines.
+    let engines: Vec<Arc<dyn InferenceEngine>> =
+        vec![Arc::new(LinearMockEngine::new(D, 4)), Arc::new(LinearMockEngine::new(D, 8))];
+    let pool =
+        WorkerPool::spawn_multi(engines, &vec![WorkerSpec::default(); 7], 0xBE5C, None);
+    let mut spec_a = TenantSpec {
+        name: "alpha".into(),
+        strategy: Strategy::ApproxIfer,
+        params: CodeParams::new(2, 1, 1),
+        verify: VerifyPolicy::on(0.4),
+        weight: 3,
+        budget: 2,
+        batch_deadline: Duration::from_millis(2),
+        ..TenantSpec::default()
+    };
+    spec_a.engine = format!("mock:{D}:4");
+    let mut spec_b = TenantSpec {
+        name: "beta".into(),
+        strategy: Strategy::ApproxIfer,
+        params: CodeParams::new(4, 1, 0),
+        weight: 1,
+        budget: 2,
+        batch_deadline: Duration::from_millis(2),
+        ..TenantSpec::default()
+    };
+    spec_b.engine = format!("mock:{D}:8");
+    let specs = vec![spec_a, spec_b];
+    let labels: Vec<String> = specs.iter().map(scheme_label).collect();
+    let registry = TenantRegistry::spawn_with(Box::new(pool), specs, 3, |i, b| {
+        if byz && i == 0 {
+            b.fault_hook(Arc::new(|_g| FaultPlan {
+                byzantine: vec![0],
+                byz_mode: Some(ByzantineMode::GaussianNoise { sigma: 10.0 }),
+                ..FaultPlan::none()
+            }))
+        } else {
+            b
+        }
+    })
+    .expect("tenant registry spawns");
+
+    // One closed-loop driver thread per tenant, measuring per-query
+    // latency from submit to answer.
+    let drivers: Vec<_> = (0..registry.tenants().len())
+        .map(|i| {
+            let svc = registry.tenants()[i].service.clone();
+            let k = registry.tenants()[i].spec.params.k;
+            std::thread::spawn(move || {
+                let mut lat_s: Vec<f64> = Vec::with_capacity(groups * k);
+                for g in 0..groups {
+                    let handles: Vec<_> =
+                        (0..k).map(|j| (Instant::now(), svc.submit(query(g * k + j)))).collect();
+                    for (t0, h) in handles {
+                        if h.wait_timeout(Duration::from_secs(60)).is_ok() {
+                            lat_s.push(t0.elapsed().as_secs_f64());
+                        }
+                    }
+                }
+                lat_s
+            })
+        })
+        .collect();
+    let latencies: Vec<Vec<f64>> =
+        drivers.into_iter().map(|d| d.join().expect("tenant driver")).collect();
+
+    registry.assert_balanced().expect("per-tenant + global accounting");
+    let grants = registry.scheduler().grants();
+    let rows: Vec<TenantRow> = (0..registry.tenants().len())
+        .map(|i| {
+            let t = &registry.tenants()[i];
+            TenantRow {
+                scenario,
+                tenant: t.spec.name.clone(),
+                scheme: labels[i].clone(),
+                weight: t.spec.weight,
+                budget: t.spec.budget,
+                grants: grants[i],
+                acc: registry.accounting(i),
+                latency: ClassLatency::of(latencies[i].clone()),
+            }
+        })
+        .collect();
+
+    // The isolation property in numbers: the honest tenant serves its
+    // whole workload whatever its neighbor is doing.
+    let beta = &rows[1];
+    assert_eq!(
+        beta.acc.served,
+        (groups * 4) as u64,
+        "honest beta must serve everything in scenario {scenario}"
+    );
+    for r in &rows {
+        assert!(r.acc.balanced(), "unbalanced tenant row: {}", r.line());
+        assert!(r.grants > 0, "tenant {} never dispatched", r.tenant);
+    }
+    registry.shutdown();
+    rows
+}
+
+fn main() {
+    let quick = quick_mode();
+    let groups = if quick { 40 } else { 250 };
+
+    println!("== multi-tenant fairness: two schemes, one fleet, WRR dispatch ==");
+    println!("(groups/tenant/scenario: {groups}; weights alpha:beta = 3:1; capacity 3)");
+
+    let mut rows = run_scenario("honest", false, groups);
+    rows.extend(run_scenario("byz-neighbor", true, groups));
+    for r in &rows {
+        println!("{}", r.line());
+    }
+    println!(
+        "\n{} rows, per-tenant and global accounting invariants hold on every scenario",
+        rows.len()
+    );
+
+    if let Some(path) = std::env::var_os("BENCH_PR_JSON") {
+        write_json(&path, &rows);
+    }
+}
+
+/// Append `tenant_rows` to the `BENCH_PR_JSON` artifact: spliced into the
+/// existing object when another bench already wrote it (replacing any
+/// previous `tenant_rows` block on a re-run), standalone otherwise.
+fn write_json(path: &std::ffi::OsStr, rows: &[TenantRow]) {
+    let mut body = String::from("  \"tenant_rows\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        body.push_str(&format!(
+            "    {}{}\n",
+            r.json(),
+            if i + 1 < rows.len() { "," } else { "" }
+        ));
+    }
+    body.push_str("  ]\n");
+    let out = match std::fs::read_to_string(path) {
+        Ok(existing) => {
+            let existing = match existing.find(",\n  \"tenant_rows\"") {
+                Some(pos) => format!("{}\n}}\n", &existing[..pos]),
+                None => existing,
+            };
+            let trimmed = existing.trim_end();
+            match trimmed.strip_suffix('}') {
+                Some(head) => format!("{},\n{body}}}\n", head.trim_end()),
+                // Not an object we understand — don't clobber it.
+                None => {
+                    eprintln!("BENCH_PR_JSON exists but is not a JSON object; leaving it");
+                    return;
+                }
+            }
+        }
+        Err(_) => format!("{{\n  \"bench\": \"bench_tenants\",\n{body}}}\n"),
+    };
+    if let Err(e) = std::fs::write(path, out) {
+        eprintln!("writing BENCH_PR_JSON: {e}");
+    } else {
+        println!("wrote tenant_rows ({}) to {:?}", rows.len(), path);
+    }
+}

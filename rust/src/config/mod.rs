@@ -6,4 +6,4 @@ pub mod parser;
 pub mod schema;
 
 pub use parser::{ConfigDoc, ConfigError};
-pub use schema::{AppConfig, KNOWN_KEYS};
+pub use schema::{AppConfig, TenantsConfig, KNOWN_KEYS, TENANT_FIELDS};

@@ -5,8 +5,10 @@ use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
-use crate::coding::CodeParams;
-use crate::coordinator::{AdaptiveConfig, AdmissionConfig, Priority, ShedPolicy, Strategy};
+use crate::coding::{CodeParams, VerifyPolicy};
+use crate::coordinator::{
+    AdaptiveConfig, AdmissionConfig, Priority, ShedPolicy, Strategy, TenantSpec,
+};
 use crate::sim::faults::FaultProfile;
 use crate::workers::{FleetConfig, LatencyModel};
 
@@ -46,9 +48,41 @@ pub const KNOWN_KEYS: &[&str] = &[
     "fleet.enabled",
     "fleet.bind",
     "fleet.workers",
+    "fleet.spare_slots",
     "fleet.heartbeat_ms",
     "fleet.miss_threshold",
+    "tenants.enabled",
+    "tenants.capacity",
 ];
+
+/// Fields accepted under a `tenants.<name>.` prefix. The `<name>` segment
+/// is free-form, so these keys cannot live in [`KNOWN_KEYS`]; the schema
+/// validates them with this whitelist instead.
+pub const TENANT_FIELDS: &[&str] = &[
+    "engine",
+    "scheme",
+    "k",
+    "s",
+    "e",
+    "slo_ms",
+    "priority",
+    "queue_depth",
+    "weight",
+    "budget",
+];
+
+/// Multi-tenant serving (`tenants.*` namespace): per-tenant serving
+/// contracts plus the shared fairness capacity, consumed by
+/// [`crate::coordinator::TenantRegistry`].
+#[derive(Clone, Debug)]
+pub struct TenantsConfig {
+    /// Global bound on in-flight groups across all tenants
+    /// (`tenants.capacity`; defaults to the sum of tenant budgets).
+    pub capacity: usize,
+    /// Per-tenant specs in alphabetical name order — which is also the
+    /// tenant tag order on the shared fleet.
+    pub specs: Vec<TenantSpec>,
+}
 
 /// Fully resolved application config.
 #[derive(Clone, Debug)]
@@ -100,6 +134,12 @@ pub struct AppConfig {
     /// join instead of spawning in-process worker threads. `None` when
     /// `fleet.enabled` is unset/false.
     pub fleet: Option<FleetConfig>,
+    /// Multi-tenant serving (`tenants.*` namespace): one shared fleet,
+    /// one service pipeline per tenant, fairness-scheduled dispatch.
+    /// `None` when `tenants.enabled` is unset/false — the server then
+    /// runs the single default tenant described by the rest of the
+    /// config.
+    pub tenants: Option<TenantsConfig>,
     /// Named fault profile spec (see [`FaultProfile::parse`]): which
     /// workers crash / straggle / flake / corrupt, deterministically under
     /// `seed`. `None` = all honest.
@@ -134,6 +174,7 @@ impl Default for AppConfig {
             admission: None,
             worker_latency: LatencyModel::None,
             fleet: None,
+            tenants: None,
             fault_profile: None,
             verify_decode: false,
             verify_tol: 0.4,
@@ -181,7 +222,13 @@ impl AppConfig {
         }
         // Reject unknown keys outright: a typo'd knob that silently falls
         // back to its default is the worst failure mode a config can have.
+        // `tenants.<name>.<field>` keys carry a free-form name segment, so
+        // they bypass the static list here and are validated against the
+        // [`TENANT_FIELDS`] whitelist in the tenants block below.
         for key in doc.keys() {
+            if key.starts_with("tenants.") {
+                continue;
+            }
             if !KNOWN_KEYS.contains(&key) {
                 bail!(
                     "unknown config key '{key}' (see docs/OPERATIONS.md for the \
@@ -341,6 +388,9 @@ impl AppConfig {
                 }
                 fleet.workers = Some(v);
             }
+            if let Some(v) = doc.get_usize("fleet.spare_slots")? {
+                fleet.spare_slots = v;
+            }
             if let Some(ms) = doc.get_f64("fleet.heartbeat_ms")? {
                 if ms <= 0.0 {
                     bail!("fleet.heartbeat_ms must be positive");
@@ -357,9 +407,13 @@ impl AppConfig {
         } else {
             // Same rule as adaptive.*/admission.*: tuning a disabled fleet
             // listener is a footgun, not a no-op.
-            for key in
-                ["fleet.bind", "fleet.workers", "fleet.heartbeat_ms", "fleet.miss_threshold"]
-            {
+            for key in [
+                "fleet.bind",
+                "fleet.workers",
+                "fleet.spare_slots",
+                "fleet.heartbeat_ms",
+                "fleet.miss_threshold",
+            ] {
                 if doc.get_str(key).is_some() {
                     bail!("'{key}' is set but fleet.enabled is not true");
                 }
@@ -388,6 +442,137 @@ impl AppConfig {
                  serving.verify_decode = true (hedged decodes and the controller's \
                  Byzantine loop lean on the verification ladder)"
             );
+        }
+        if doc.get_bool("tenants.enabled")?.unwrap_or(false) {
+            // Tenant names are discovered by prefix scan: every
+            // `tenants.<name>.<field>` key declares (or extends) a tenant.
+            // BTreeSet gives a deterministic alphabetical tag order.
+            let mut names = std::collections::BTreeSet::new();
+            for key in doc.keys() {
+                let Some(rest) = key.strip_prefix("tenants.") else { continue };
+                if rest == "enabled" || rest == "capacity" {
+                    continue;
+                }
+                let Some((name, field)) = rest.split_once('.') else {
+                    bail!(
+                        "unknown config key '{key}' (tenant fields are \
+                         tenants.<name>.<field>)"
+                    );
+                };
+                if name.is_empty() || !TENANT_FIELDS.contains(&field) {
+                    bail!(
+                        "unknown tenant field in '{key}' (expected tenants.<name>.<field> \
+                         with field one of {})",
+                        TENANT_FIELDS.join("|")
+                    );
+                }
+                names.insert(name.to_string());
+            }
+            if names.is_empty() {
+                bail!(
+                    "tenants.enabled = true but no tenants.<name>.<field> keys define \
+                     any tenant"
+                );
+            }
+            let mut specs = Vec::with_capacity(names.len());
+            for name in &names {
+                let mut spec = TenantSpec { name: name.clone(), ..TenantSpec::default() };
+                let field = |f: &str| format!("tenants.{name}.{f}");
+                if let Some(v) = doc.get_str(&field("engine")) {
+                    spec.engine = v;
+                }
+                if let Some(v) = doc.get_str(&field("scheme")) {
+                    spec.strategy = Strategy::parse(&v)
+                        .map_err(|e| anyhow::anyhow!("tenants.{name}.scheme: {e}"))?;
+                }
+                let k = doc.get_usize(&field("k"))?.unwrap_or(spec.params.k);
+                let s = doc.get_usize(&field("s"))?.unwrap_or(spec.params.s);
+                let e = doc.get_usize(&field("e"))?.unwrap_or(spec.params.e);
+                if k == 0 {
+                    bail!("tenants.{name}.k must be >= 1");
+                }
+                // Same rules as the top-level code.* triple: coded
+                // strategies must tolerate something, and a K=1
+                // passthrough stores S=1 to keep the triple constructible.
+                if e == 0
+                    && s == 0
+                    && !matches!(spec.strategy, Strategy::Uncoded | Strategy::ParmProxy)
+                {
+                    bail!("tenant '{name}': code must tolerate something — set s or e > 0");
+                }
+                let s_stored = if e == 0 && k + s < 2 { 1 } else { s };
+                spec.params = CodeParams::new(k, s_stored, e);
+                if let Some(ms) = doc.get_f64(&field("slo_ms"))? {
+                    if ms <= 0.0 {
+                        bail!("tenants.{name}.slo_ms must be positive");
+                    }
+                    spec.slo = Some(Duration::from_secs_f64(ms / 1e3));
+                }
+                if let Some(p) = doc.get_str(&field("priority")) {
+                    spec.priority = Priority::parse(&p)
+                        .with_context(|| format!("tenants.{name}.priority"))?;
+                }
+                if let Some(d) = doc.get_usize(&field("queue_depth"))? {
+                    if d == 0 {
+                        bail!("tenants.{name}.queue_depth must be >= 1");
+                    }
+                    spec.queue_depth = Some(d);
+                }
+                if let Some(w) = doc.get_usize(&field("weight"))? {
+                    if w == 0 {
+                        bail!("tenants.{name}.weight must be >= 1");
+                    }
+                    spec.weight = w as u64;
+                }
+                if let Some(b) = doc.get_usize(&field("budget"))? {
+                    if b == 0 {
+                        bail!("tenants.{name}.budget must be >= 1");
+                    }
+                    spec.budget = b;
+                }
+                // Tenants inherit the global serving policies that are
+                // not per-tenant knobs (yet): verification, batching and
+                // the hard group deadline.
+                spec.verify = if cfg.verify_decode {
+                    VerifyPolicy::on(cfg.verify_tol)
+                } else {
+                    VerifyPolicy::off()
+                };
+                spec.batch_deadline = cfg.batch_deadline;
+                spec.group_timeout = cfg.group_timeout;
+                if spec.slo.is_some() && spec.params.e > 0 && !spec.verify.enabled {
+                    bail!(
+                        "tenants.{name}.slo_ms with e > 0 requires \
+                         serving.verify_decode = true (hedged decodes lean on the \
+                         verification ladder)"
+                    );
+                }
+                if let Some(slo) = spec.slo {
+                    if slo >= spec.group_timeout {
+                        bail!(
+                            "tenants.{name}.slo_ms must be shorter than \
+                             serving.group_timeout_ms"
+                        );
+                    }
+                }
+                specs.push(spec);
+            }
+            let capacity = match doc.get_usize("tenants.capacity")? {
+                Some(0) => bail!("tenants.capacity must be >= 1"),
+                Some(c) => c,
+                // Default: the sum of budgets — every tenant can reach its
+                // own in-flight bound simultaneously.
+                None => specs.iter().map(|s| s.budget).sum(),
+            };
+            cfg.tenants = Some(TenantsConfig { capacity, specs });
+        } else {
+            // Same rule as adaptive.*/admission.*/fleet.*: a tenant table
+            // without the master switch is a footgun, not a no-op.
+            for key in doc.keys() {
+                if key.starts_with("tenants.") && key != "tenants.enabled" {
+                    bail!("'{key}' is set but tenants.enabled is not true");
+                }
+            }
         }
         if let Some(v) = doc.get_usize("faults.seed")? {
             cfg.seed = v as u64;
@@ -652,6 +837,7 @@ mod tests {
             enabled = true
             bind = "0.0.0.0:7801"
             workers = 12
+            spare_slots = 2
             heartbeat_ms = 250
             miss_threshold = 5
             "#,
@@ -661,6 +847,7 @@ mod tests {
         let f = cfg.fleet.expect("fleet enabled");
         assert_eq!(f.bind, "0.0.0.0:7801");
         assert_eq!(f.workers, Some(12));
+        assert_eq!(f.spare_slots, 2);
         assert_eq!(f.heartbeat, Duration::from_millis(250));
         assert_eq!(f.miss_threshold, 5);
 
@@ -670,6 +857,7 @@ mod tests {
         let f = AppConfig::from_doc(&doc).unwrap().fleet.unwrap();
         assert_eq!(f.bind, "127.0.0.1:7800");
         assert_eq!(f.workers, None);
+        assert_eq!(f.spare_slots, 0);
         assert_eq!(f.heartbeat, Duration::from_millis(500));
         assert_eq!(f.miss_threshold, 3);
 
@@ -684,6 +872,98 @@ mod tests {
                 ConfigDoc::parse(&format!("[fleet]\nenabled = true\n{bad}\n")).unwrap();
             assert!(AppConfig::from_doc(&doc).is_err(), "{bad} should be rejected");
         }
+    }
+
+    #[test]
+    fn tenant_table_parses_with_defaults_and_overrides() {
+        let doc = ConfigDoc::parse(
+            r#"
+            [tenants]
+            enabled = true
+            capacity = 6
+            alpha.engine = "mock:8:3"
+            alpha.scheme = "approxifer"
+            alpha.k = 2
+            alpha.s = 1
+            alpha.weight = 3
+            alpha.budget = 2
+            beta.engine = "mock:8:5"
+            beta.scheme = "replication"
+            beta.k = 2
+            beta.s = 1
+            beta.priority = "batch"
+            beta.queue_depth = 64
+            "#,
+        )
+        .unwrap();
+        let cfg = AppConfig::from_doc(&doc).unwrap();
+        let t = cfg.tenants.expect("tenants enabled");
+        assert_eq!(t.capacity, 6);
+        assert_eq!(t.specs.len(), 2);
+        // Specs come out in alphabetical name order — the tag order.
+        assert_eq!(t.specs[0].name, "alpha");
+        assert_eq!(t.specs[0].engine, "mock:8:3");
+        assert_eq!(t.specs[0].params, CodeParams::new(2, 1, 0));
+        assert_eq!(t.specs[0].weight, 3);
+        assert_eq!(t.specs[0].budget, 2);
+        assert_eq!(t.specs[1].name, "beta");
+        assert_eq!(t.specs[1].strategy, Strategy::Replication);
+        assert_eq!(t.specs[1].priority, Priority::Batch);
+        assert_eq!(t.specs[1].queue_depth, Some(64));
+        // Unset capacity defaults to the sum of budgets.
+        let doc = ConfigDoc::parse(
+            "[tenants]\nenabled = true\nalpha.budget = 3\nbeta.budget = 2\n",
+        )
+        .unwrap();
+        let t = AppConfig::from_doc(&doc).unwrap().tenants.unwrap();
+        assert_eq!(t.capacity, 5);
+        // Tenants inherit the global verification policy.
+        let doc = ConfigDoc::parse(
+            "[serving]\nverify_decode = true\nverify_tol = 0.5\n\
+             [tenants]\nenabled = true\nalpha.k = 2\n",
+        )
+        .unwrap();
+        let t = AppConfig::from_doc(&doc).unwrap().tenants.unwrap();
+        assert!(t.specs[0].verify.enabled);
+        assert_eq!(t.specs[0].verify.tol, 0.5);
+    }
+
+    #[test]
+    fn tenant_keys_gate_on_enabled_and_bad_fields_fail() {
+        // Orphan tenant keys without the master switch are refused.
+        let doc = ConfigDoc::parse("[tenants]\nalpha.k = 4\n").unwrap();
+        let err = AppConfig::from_doc(&doc).unwrap_err();
+        assert!(format!("{err:#}").contains("tenants.enabled"), "{err:#}");
+        // Unknown tenant fields fail against the whitelist.
+        let doc =
+            ConfigDoc::parse("[tenants]\nenabled = true\nalpha.k = 4\nalpha.burst = 9\n")
+                .unwrap();
+        let err = AppConfig::from_doc(&doc).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown tenant field"), "{err:#}");
+        // A bare tenants key that is neither a switch nor a field table.
+        let doc = ConfigDoc::parse("[tenants]\nenabled = true\nbogus = 1\n").unwrap();
+        assert!(AppConfig::from_doc(&doc).is_err());
+        // The switch without any tenant definitions is a misconfiguration.
+        let doc = ConfigDoc::parse("[tenants]\nenabled = true\n").unwrap();
+        let err = AppConfig::from_doc(&doc).unwrap_err();
+        assert!(format!("{err:#}").contains("define any tenant"), "{err:#}");
+        // Zero-valued tenant knobs fail at load time.
+        for bad in
+            ["alpha.k = 0", "alpha.weight = 0", "alpha.budget = 0", "alpha.queue_depth = 0"]
+        {
+            let doc =
+                ConfigDoc::parse(&format!("[tenants]\nenabled = true\n{bad}\n")).unwrap();
+            assert!(AppConfig::from_doc(&doc).is_err(), "{bad} should be rejected");
+        }
+        // Per-tenant Byzantine budgets need the shared verification ladder
+        // once the tenant hedges under an SLO.
+        let doc = ConfigDoc::parse(
+            "[tenants]\nenabled = true\nalpha.k = 2\nalpha.s = 0\nalpha.e = 1\n\
+             alpha.slo_ms = 20\n",
+        )
+        .unwrap();
+        let err = AppConfig::from_doc(&doc).unwrap_err();
+        assert!(format!("{err:#}").contains("verify_decode"), "{err:#}");
     }
 
     #[test]

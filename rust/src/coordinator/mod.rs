@@ -4,13 +4,16 @@
 //! (ApproxIFER, replication, ParM-proxy, uncoded) with identical batching,
 //! concurrency, fault profiles and metrics; the adaptive redundancy
 //! control plane ([`adaptive`]) that re-tunes a live service's `(S, E)`
-//! from observed drift; plus the synchronous single-group
-//! [`GroupPipeline`] the experiment harness drives directly.
+//! from observed drift; the multi-tenant registry and fairness scheduler
+//! ([`tenants`]) that run many such services over one shared fleet; plus
+//! the synchronous single-group [`GroupPipeline`] the experiment harness
+//! drives directly.
 
 pub mod adaptive;
 #[allow(missing_docs)] // tracked gap: synchronous harness pipeline internals
 pub mod pipeline;
 pub mod service;
+pub mod tenants;
 
 pub use crate::coding::{
     locate_and_decode, verified_locate_and_decode, verify_residual, BlockPool, GroupBlock,
@@ -21,6 +24,7 @@ pub use pipeline::{FaultPlan, GroupOutcome, GroupPipeline};
 pub use service::{
     AdmissionConfig, PredictionHandle, Priority, Service, ServiceBuilder, ShedPolicy,
 };
+pub use tenants::{Accounting, FairLease, FairScheduler, Tenant, TenantRegistry, TenantSpec};
 
 use std::sync::Arc;
 

@@ -112,6 +112,7 @@ use crate::workers::{
 
 use super::adaptive::{AdaptiveConfig, AdaptiveController, GroupObservation};
 use super::pipeline::FaultPlan;
+use super::tenants::FairLease;
 
 /// Validated service tuning, fixed at spawn (internal — callers go through
 /// [`ServiceBuilder`]).
@@ -126,6 +127,7 @@ struct Tuning {
     slo: Option<Duration>,
     adaptive: Option<AdaptiveConfig>,
     fault_hook: Option<Arc<dyn Fn(u64) -> FaultPlan + Send + Sync>>,
+    fairness: Option<FairLease>,
 }
 
 /// What the batcher builds its worker fleet from: an engine + specs for
@@ -229,6 +231,7 @@ pub struct ServiceBuilder {
     adaptive: Option<AdaptiveConfig>,
     fault_hook: Option<Arc<dyn Fn(u64) -> FaultPlan + Send + Sync>>,
     fleet: Option<Box<dyn WorkerFleet>>,
+    fairness: Option<FairLease>,
 }
 
 impl ServiceBuilder {
@@ -250,6 +253,7 @@ impl ServiceBuilder {
             adaptive: None,
             fault_hook: None,
             fleet: None,
+            fairness: None,
         }
     }
 
@@ -381,6 +385,17 @@ impl ServiceBuilder {
         self
     }
 
+    /// Gate dispatch through a shared fairness scheduler. Each group this
+    /// service puts in flight first acquires a slot from the lease's
+    /// weighted round-robin scheduler, so tenants sharing one fleet get
+    /// proportional dispatch bandwidth and a bounded in-flight budget —
+    /// a tenant under a Byzantine burst (whose groups redispatch and
+    /// linger) cannot starve a healthy neighbor.
+    pub fn fairness(mut self, lease: FairLease) -> Self {
+        self.fairness = Some(lease);
+        self
+    }
+
     /// Validate and start the service. Misconfiguration — a worker-spec or
     /// fault-profile count that doesn't match the scheme's pool — is an
     /// `Err` here, never a mid-serve panic.
@@ -468,7 +483,7 @@ impl ServiceBuilder {
                          programs inside the worker binary (worker --behavior)"
                     );
                 }
-                if self.fault_hook.is_some() {
+                if self.fault_hook.is_some() && !fleet.supports_task_faults() {
                     bail!(
                         "service '{name}': the per-group fault hook is an in-process \
                          scheduler injection and cannot reach an attached fleet"
@@ -531,6 +546,7 @@ impl ServiceBuilder {
             slo: self.slo,
             adaptive: self.adaptive,
             fault_hook: self.fault_hook,
+            fairness: self.fairness,
         };
         let metrics = Arc::new(ServingMetrics::new());
         metrics.current_s.set(scheme.stragglers_tolerated() as u64);
@@ -904,15 +920,20 @@ impl Drop for Service {
     }
 }
 
-/// Counting gate bounding dispatched-but-undecoded groups.
+/// Counting gate bounding dispatched-but-undecoded groups. When the
+/// service shares a fleet with other tenants, the gate also holds a
+/// [`FairLease`]: each acquire takes the local slot first, then a slot
+/// from the shared weighted round-robin scheduler, so every release site
+/// (decode, redispatch, dispatch failure) pairs both automatically.
 struct InflightGate {
     n: Mutex<usize>,
     cvar: Condvar,
+    fair: Option<FairLease>,
 }
 
 impl InflightGate {
-    fn new() -> InflightGate {
-        InflightGate { n: Mutex::new(0), cvar: Condvar::new() }
+    fn new(fair: Option<FairLease>) -> InflightGate {
+        InflightGate { n: Mutex::new(0), cvar: Condvar::new(), fair }
     }
 
     fn acquire(&self, max: usize, metrics: &ServingMetrics) {
@@ -924,9 +945,19 @@ impl InflightGate {
             n = self.cvar.wait(n).unwrap();
         }
         *n += 1;
+        drop(n);
+        // The shared-fleet slot is taken *outside* the local lock: a
+        // blocked fair acquire must not hold up this tenant's decode
+        // releases (which take the same mutex).
+        if let Some(lease) = &self.fair {
+            lease.acquire();
+        }
     }
 
     fn release(&self) {
+        if let Some(lease) = &self.fair {
+            lease.release();
+        }
         let mut n = self.n.lock().unwrap();
         *n -= 1;
         self.cvar.notify_all();
@@ -1187,6 +1218,10 @@ impl Dispatcher {
     /// pool cannot cover — degrades to alerting (`adaptive_alerts`).
     fn apply_reconfigure(&mut self, s: usize, e: usize) {
         let name = self.scheme.name().to_string();
+        // Epoch boundaries are also when a spare worker that joined an
+        // unclaimed slot after startup is admitted into the dispatch
+        // range — the fleet logs and counts the widening itself.
+        self.fleet.admit_spares();
         let swapped = self.scheme.reconfigure(s, e).and_then(|new| {
             if new.group_size() != self.scheme.group_size() {
                 bail!(
@@ -1273,7 +1308,7 @@ fn batcher_loop(
     let replies = fleet.take_replies().expect("fleet reply stream already taken");
     let router = ReplyRouter::start(replies, metrics.clone());
     let ctxs: CtxMap = Arc::new(Mutex::new(HashMap::new()));
-    let gate = Arc::new(InflightGate::new());
+    let gate = Arc::new(InflightGate::new(tuning.fairness.clone()));
     // One pool for the whole data plane: query blocks, coded blocks and
     // decode-output blocks all recycle through the same free list.
     let blocks = BlockPool::new();

@@ -1,0 +1,692 @@
+//! Multi-tenant serving: one worker fleet, many models.
+//!
+//! A [`TenantSpec`] names a tenant and fixes its serving contract — which
+//! engine its workers host, which [`Strategy`] and `(K, S, E)` triple
+//! encode its groups, its latency SLO and admission class, and its share
+//! of the fleet (a weighted-round-robin `weight` and an in-flight
+//! `budget`). The [`TenantRegistry`] spawns one full [`Service`] pipeline
+//! per tenant — its own deadline batcher, decode pool, [`BlockPool`] slice
+//! and adaptive controller — and splits a single shared
+//! [`WorkerFleet`](crate::workers::WorkerFleet) into per-tenant facades
+//! through [`FleetMux`](crate::workers::FleetMux), so every tenant's
+//! groups dispatch onto the same worker processes (tagged with the tenant
+//! index in the top byte of the group id).
+//!
+//! The shared dispatch boundary is arbitrated by the [`FairScheduler`]:
+//! before a group goes in flight, its service acquires a slot from the
+//! scheduler through a [`FairLease`]. The scheduler runs stride-style
+//! weighted round-robin over the tenants that are actually waiting, with
+//! two hard bounds per tenant — its in-flight `budget` and the global
+//! `capacity`. The budget is the isolation property: a tenant whose
+//! groups linger (a Byzantine burst forcing redispatches, a straggling
+//! model) saturates its own budget and stops there, so a healthy
+//! neighbor's dispatch bandwidth is untouched.
+//!
+//! [`BlockPool`]: crate::coding::BlockPool
+
+use std::collections::BTreeSet;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::coding::{CodeParams, VerifyPolicy};
+use crate::metrics::ServingMetrics;
+use crate::workers::{FleetMux, WorkerFleet};
+
+use super::adaptive::AdaptiveConfig;
+use super::service::{AdmissionConfig, Priority, Service, ServiceBuilder};
+use super::Strategy;
+
+// ---------------------------------------------------------------------------
+// Fairness scheduler
+// ---------------------------------------------------------------------------
+
+/// Stride-scheduled weighted round-robin over tenants sharing one fleet,
+/// with a per-tenant in-flight budget and a global in-flight capacity.
+///
+/// Each tenant carries a signed credit. Granting a slot to tenant `t`
+/// charges `t` the total weight and pays every tenant its own weight, so
+/// over time grants converge to the weight ratio; credits are clamped so
+/// an idle tenant's accumulated claim (or a lone tenant's accumulated
+/// debt) stays a bounded burst rather than an unbounded catch-up.
+/// Selection only considers tenants that are actually waiting and under
+/// budget, so the scheduler is work-conserving: a lone active tenant is
+/// never throttled to its weight share of an idle fleet.
+pub struct FairScheduler {
+    state: Mutex<FairState>,
+    cvar: Condvar,
+}
+
+struct FairState {
+    tenants: Vec<TenantSlot>,
+    /// Global bound on in-flight groups across all tenants.
+    capacity: usize,
+    /// Current total in-flight groups.
+    in_flight: usize,
+    total_weight: u64,
+    /// Slots granted per tenant over the scheduler's lifetime.
+    grants: Vec<u64>,
+}
+
+struct TenantSlot {
+    weight: u64,
+    budget: usize,
+    in_flight: usize,
+    /// Threads currently blocked in [`FairScheduler::acquire`] for this
+    /// tenant. Selection skips non-waiting tenants (work conservation).
+    waiting: usize,
+    credit: i64,
+}
+
+impl FairState {
+    fn eligible(&self, t: usize) -> bool {
+        let s = &self.tenants[t];
+        s.waiting > 0 && s.in_flight < s.budget
+    }
+
+    /// The eligible tenant with the highest credit (ties to the lowest
+    /// index, so selection is deterministic).
+    fn next(&self) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for t in 0..self.tenants.len() {
+            if !self.eligible(t) {
+                continue;
+            }
+            match best {
+                Some(b) if self.tenants[t].credit <= self.tenants[b].credit => {}
+                _ => best = Some(t),
+            }
+        }
+        best
+    }
+
+    /// Stride update for a grant to `t`: everyone earns their weight, `t`
+    /// pays the total. The sum of credits is invariant (zero) until the
+    /// clamp engages; the clamp bounds how far ahead an idle tenant's
+    /// claim (or behind a lone tenant's debt) can drift.
+    fn charge(&mut self, t: usize) {
+        let total = self.total_weight as i64;
+        let clamp = 8 * total;
+        for slot in self.tenants.iter_mut() {
+            slot.credit += slot.weight as i64;
+        }
+        self.tenants[t].credit -= total;
+        for slot in self.tenants.iter_mut() {
+            slot.credit = slot.credit.clamp(-clamp, clamp);
+        }
+    }
+}
+
+impl FairScheduler {
+    /// Build a scheduler for `tenants` given as `(weight, budget)` pairs.
+    pub fn new(tenants: &[(u64, usize)], capacity: usize) -> Result<Arc<FairScheduler>> {
+        if tenants.is_empty() {
+            bail!("fair scheduler needs at least one tenant");
+        }
+        if capacity == 0 {
+            bail!("fair scheduler capacity must be >= 1");
+        }
+        for (i, &(w, b)) in tenants.iter().enumerate() {
+            if w == 0 {
+                bail!("tenant {i}: fairness weight must be >= 1");
+            }
+            if b == 0 {
+                bail!("tenant {i}: in-flight budget must be >= 1");
+            }
+        }
+        let total_weight = tenants.iter().map(|&(w, _)| w).sum();
+        Ok(Arc::new(FairScheduler {
+            state: Mutex::new(FairState {
+                tenants: tenants
+                    .iter()
+                    .map(|&(weight, budget)| TenantSlot {
+                        weight,
+                        budget,
+                        in_flight: 0,
+                        waiting: 0,
+                        credit: 0,
+                    })
+                    .collect(),
+                capacity,
+                in_flight: 0,
+                total_weight,
+                grants: vec![0; tenants.len()],
+            }),
+            cvar: Condvar::new(),
+        }))
+    }
+
+    /// Block until tenant `t` is granted an in-flight slot.
+    pub fn acquire(&self, t: usize) {
+        let mut st = self.state.lock().unwrap();
+        st.tenants[t].waiting += 1;
+        // `next() == Some(t)` implies `t` is eligible (under budget); the
+        // capacity check bounds the fleet-wide total.
+        while !(st.in_flight < st.capacity && st.next() == Some(t)) {
+            st = self.cvar.wait(st).unwrap();
+        }
+        st.tenants[t].waiting -= 1;
+        st.tenants[t].in_flight += 1;
+        st.in_flight += 1;
+        st.grants[t] += 1;
+        st.charge(t);
+        drop(st);
+        // The charge may have made another waiting tenant "next".
+        self.cvar.notify_all();
+    }
+
+    /// Return tenant `t`'s slot. Every `acquire` must be paired with
+    /// exactly one `release`.
+    pub fn release(&self, t: usize) {
+        let mut st = self.state.lock().unwrap();
+        assert!(st.tenants[t].in_flight > 0, "fairness release without acquire (tenant {t})");
+        st.tenants[t].in_flight -= 1;
+        st.in_flight -= 1;
+        drop(st);
+        self.cvar.notify_all();
+    }
+
+    /// Slots granted per tenant since the scheduler was built.
+    pub fn grants(&self) -> Vec<u64> {
+        self.state.lock().unwrap().grants.clone()
+    }
+
+    /// Currently held slots per tenant.
+    pub fn in_flight(&self) -> Vec<usize> {
+        self.state.lock().unwrap().tenants.iter().map(|s| s.in_flight).collect()
+    }
+}
+
+/// One tenant's handle on the shared [`FairScheduler`] — what a
+/// [`Service`] threads into its in-flight gate
+/// ([`ServiceBuilder::fairness`]) so every group it dispatches holds a
+/// scheduler slot until decoded, redispatched or failed.
+#[derive(Clone)]
+pub struct FairLease {
+    sched: Arc<FairScheduler>,
+    tenant: usize,
+}
+
+impl FairLease {
+    /// A lease for tenant index `tenant` on `sched`.
+    pub fn new(sched: Arc<FairScheduler>, tenant: usize) -> FairLease {
+        FairLease { sched, tenant }
+    }
+
+    /// The tenant index this lease acquires for.
+    pub fn tenant(&self) -> usize {
+        self.tenant
+    }
+
+    /// Block until the scheduler grants this tenant a slot.
+    pub fn acquire(&self) {
+        self.sched.acquire(self.tenant);
+    }
+
+    /// Return the slot.
+    pub fn release(&self) {
+        self.sched.release(self.tenant);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tenant specs and the registry
+// ---------------------------------------------------------------------------
+
+/// One tenant's serving contract (the `tenants.<name>.*` config table).
+#[derive(Clone, Debug)]
+pub struct TenantSpec {
+    /// Tenant name (the config table key and the routing label).
+    pub name: String,
+    /// Engine spec for this tenant's model slot on every worker (see
+    /// `server::worker::parse_engine_spec`). The registry itself never
+    /// parses it — the serve wiring builds the engine table from it.
+    pub engine: String,
+    /// Serving strategy for this tenant's groups.
+    pub strategy: Strategy,
+    /// Code parameters `(K, S, E)`.
+    pub params: CodeParams,
+    /// Per-group latency SLO; `None` disables hedging and the straggler
+    /// loop for this tenant.
+    pub slo: Option<Duration>,
+    /// Default admission class for the tenant's queries.
+    pub priority: Priority,
+    /// Bounded ingress depth; `Some` enables the admission gate.
+    pub queue_depth: Option<usize>,
+    /// Weighted-round-robin share of the fleet's dispatch bandwidth.
+    pub weight: u64,
+    /// Max groups this tenant may have in flight on the shared fleet —
+    /// the isolation bound, and also the tenant service's local
+    /// `max_inflight`.
+    pub budget: usize,
+    /// Per-tenant adaptive `(S, E)` controller; `None` = static scheme.
+    pub adaptive: Option<AdaptiveConfig>,
+    /// Per-tenant decode-verification policy.
+    pub verify: VerifyPolicy,
+    /// Partial groups close after this long.
+    pub batch_deadline: Duration,
+    /// Hard per-group collection deadline.
+    pub group_timeout: Duration,
+}
+
+impl Default for TenantSpec {
+    fn default() -> Self {
+        TenantSpec {
+            name: String::new(),
+            engine: "mock:8:4".into(),
+            strategy: Strategy::ApproxIfer,
+            params: CodeParams::new(4, 1, 0),
+            slo: None,
+            priority: Priority::Interactive,
+            queue_depth: None,
+            weight: 1,
+            budget: 2,
+            adaptive: None,
+            verify: VerifyPolicy::off(),
+            batch_deadline: Duration::from_millis(20),
+            group_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// A spawned tenant: its spec and its live service pipeline.
+pub struct Tenant {
+    /// The contract the tenant was spawned with.
+    pub spec: TenantSpec,
+    /// The tenant's service (own batcher, decode pool, metrics).
+    pub service: Arc<Service>,
+}
+
+/// Per-tenant (or global) query accounting, read from a service's
+/// [`ServingMetrics`]. The conservation invariant is
+/// `received == served + degraded + shed + rejected + failed` — every
+/// accepted query resolves exactly once.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Accounting {
+    /// Queries submitted.
+    pub received: u64,
+    /// Served with a full-quality decode.
+    pub served: u64,
+    /// Served degraded (escalation ladder exhausted, best effort).
+    pub degraded: u64,
+    /// Shed by the admission gate under overload.
+    pub shed: u64,
+    /// Rejected by the admission gate at arrival.
+    pub rejected: u64,
+    /// Failed outright.
+    pub failed: u64,
+}
+
+impl Accounting {
+    /// Snapshot the accounting counters of one service.
+    pub fn of(m: &ServingMetrics) -> Accounting {
+        Accounting {
+            received: m.queries_received.get(),
+            served: m.queries_served.get(),
+            degraded: m.queries_degraded.get(),
+            shed: m.queries_shed.get(),
+            rejected: m.queries_rejected.get(),
+            failed: m.queries_failed.get(),
+        }
+    }
+
+    /// Does the conservation invariant hold? (Only meaningful once the
+    /// service is quiescent — in-flight queries are received but not yet
+    /// resolved.)
+    pub fn balanced(&self) -> bool {
+        self.received == self.served + self.degraded + self.shed + self.rejected + self.failed
+    }
+
+    /// Accumulate another tenant's accounting into this one.
+    pub fn absorb(&mut self, other: &Accounting) {
+        self.received += other.received;
+        self.served += other.served;
+        self.degraded += other.degraded;
+        self.shed += other.shed;
+        self.rejected += other.rejected;
+        self.failed += other.failed;
+    }
+}
+
+/// The registry: one shared fleet, one service pipeline per tenant, one
+/// fairness scheduler arbitrating the dispatch boundary.
+pub struct TenantRegistry {
+    tenants: Vec<Tenant>,
+    sched: Arc<FairScheduler>,
+}
+
+impl TenantRegistry {
+    /// Spawn every tenant in `specs` over `fleet`. The fleet must cover
+    /// the largest tenant's worker need; `capacity` bounds total
+    /// in-flight groups across all tenants.
+    pub fn spawn(
+        fleet: Box<dyn WorkerFleet>,
+        specs: Vec<TenantSpec>,
+        capacity: usize,
+    ) -> Result<TenantRegistry> {
+        TenantRegistry::spawn_with(fleet, specs, capacity, |_, b| b)
+    }
+
+    /// [`TenantRegistry::spawn`] with a per-tenant builder hook, applied
+    /// after the spec's own knobs — the experiment surface (fault hooks,
+    /// seeds) for tests and benches.
+    pub fn spawn_with(
+        fleet: Box<dyn WorkerFleet>,
+        specs: Vec<TenantSpec>,
+        capacity: usize,
+        mut tune: impl FnMut(usize, ServiceBuilder) -> ServiceBuilder,
+    ) -> Result<TenantRegistry> {
+        if specs.is_empty() {
+            bail!("tenant registry: no tenants configured");
+        }
+        let mut names = BTreeSet::new();
+        for spec in &specs {
+            if spec.name.is_empty() {
+                bail!("tenant registry: a tenant spec has an empty name");
+            }
+            if !names.insert(spec.name.clone()) {
+                bail!("tenant registry: duplicate tenant name '{}'", spec.name);
+            }
+            let need = spec.strategy.num_workers(spec.params);
+            let have = fleet.num_workers();
+            if need > have {
+                bail!(
+                    "tenant '{}': scheme needs {need} workers, shared fleet has {have}",
+                    spec.name
+                );
+            }
+            if let Some(slo) = spec.slo {
+                if slo >= spec.group_timeout {
+                    bail!(
+                        "tenant '{}': slo ({slo:?}) must be shorter than the group \
+                         timeout ({:?})",
+                        spec.name,
+                        spec.group_timeout
+                    );
+                }
+            }
+            // Mirror the service's spawn-time rule with tenant attribution.
+            if (spec.slo.is_some() || spec.adaptive.is_some())
+                && spec.params.e > 0
+                && !spec.verify.enabled
+            {
+                bail!(
+                    "tenant '{}': an SLO or adaptive control with a Byzantine budget \
+                     (E={}) requires decode verification",
+                    spec.name,
+                    spec.params.e
+                );
+            }
+        }
+        let shares: Vec<(u64, usize)> = specs.iter().map(|s| (s.weight, s.budget)).collect();
+        let sched = FairScheduler::new(&shares, capacity)?;
+        let facades = FleetMux::split(fleet, specs.len())?;
+        let mut tenants = Vec::with_capacity(specs.len());
+        for ((i, spec), facade) in specs.into_iter().enumerate().zip(facades) {
+            let scheme = spec.strategy.scheme(spec.params);
+            let mut b = Service::builder(scheme)
+                .fleet(Box::new(facade))
+                .fairness(FairLease::new(sched.clone(), i))
+                .batch_deadline(spec.batch_deadline)
+                .group_timeout(spec.group_timeout)
+                // The local in-flight bound and the scheduler budget are
+                // the same number: the batcher never queues on the fair
+                // scheduler deeper than the scheduler will ever grant.
+                .max_inflight(spec.budget)
+                .verify(spec.verify);
+            if let Some(slo) = spec.slo {
+                b = b.slo(slo);
+            }
+            if let Some(cfg) = spec.adaptive {
+                b = b.adaptive(cfg);
+            }
+            if let Some(depth) = spec.queue_depth {
+                let mut adm = AdmissionConfig::default();
+                adm.queue_depth = depth;
+                adm.default_priority = spec.priority;
+                b = b.admission(adm);
+            }
+            b = tune(i, b);
+            let service = Arc::new(
+                b.spawn().with_context(|| format!("spawning tenant '{}'", spec.name))?,
+            );
+            tenants.push(Tenant { spec, service });
+        }
+        Ok(TenantRegistry { tenants, sched })
+    }
+
+    /// The spawned tenants, in spec order (= tenant tag order).
+    pub fn tenants(&self) -> &[Tenant] {
+        &self.tenants
+    }
+
+    /// Look a tenant up by name.
+    pub fn get(&self, name: &str) -> Option<&Tenant> {
+        self.tenants.iter().find(|t| t.spec.name == name)
+    }
+
+    /// The shared fairness scheduler (grant/in-flight introspection).
+    pub fn scheduler(&self) -> &Arc<FairScheduler> {
+        &self.sched
+    }
+
+    /// Tenant `i`'s accounting snapshot.
+    pub fn accounting(&self, i: usize) -> Accounting {
+        Accounting::of(&self.tenants[i].service.metrics)
+    }
+
+    /// Fleet-wide accounting: the sum over tenants.
+    pub fn global_accounting(&self) -> Accounting {
+        let mut total = Accounting::default();
+        for t in &self.tenants {
+            total.absorb(&Accounting::of(&t.service.metrics));
+        }
+        total
+    }
+
+    /// Assert the conservation invariant per tenant *and* globally. Call
+    /// on a quiescent registry (all submissions resolved).
+    pub fn assert_balanced(&self) -> Result<()> {
+        let mut total = Accounting::default();
+        for (i, t) in self.tenants.iter().enumerate() {
+            let a = Accounting::of(&t.service.metrics);
+            if !a.balanced() {
+                bail!("tenant '{}' (index {i}) accounting is unbalanced: {a:?}", t.spec.name);
+            }
+            total.absorb(&a);
+        }
+        if !total.balanced() {
+            bail!("global accounting is unbalanced: {total:?}");
+        }
+        Ok(())
+    }
+
+    /// Shut every tenant service down (each drains its in-flight groups).
+    /// The shared fleet shuts down when the last facade does.
+    pub fn shutdown(self) {
+        for t in self.tenants {
+            match Arc::try_unwrap(t.service) {
+                Ok(svc) => svc.shutdown(),
+                // Another holder (e.g. a front-end server) drains it when
+                // the last reference drops.
+                Err(arc) => drop(arc),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workers::{InferenceEngine, LinearMockEngine, WorkerPool, WorkerSpec};
+
+    // -- scheduler ----------------------------------------------------------
+
+    #[test]
+    fn stride_grants_follow_weights() {
+        let sched = FairScheduler::new(&[(3, 8), (1, 8)], 16).unwrap();
+        let mut st = sched.state.lock().unwrap();
+        st.tenants[0].waiting = 1;
+        st.tenants[1].waiting = 1;
+        let mut grants = [0u64; 2];
+        for _ in 0..12 {
+            let t = st.next().expect("both tenants are eligible");
+            grants[t] += 1;
+            st.charge(t);
+        }
+        // 3:1 weights over 12 grants: exactly 9 and 3.
+        assert_eq!(grants, [9, 3]);
+    }
+
+    #[test]
+    fn budget_full_tenant_is_skipped() {
+        let sched = FairScheduler::new(&[(3, 1), (1, 8)], 16).unwrap();
+        let mut st = sched.state.lock().unwrap();
+        st.tenants[0].waiting = 1;
+        st.tenants[1].waiting = 1;
+        st.tenants[0].in_flight = 1; // at budget
+        assert_eq!(st.next(), Some(1), "a budget-full tenant must not win, whatever its weight");
+    }
+
+    #[test]
+    fn selection_is_work_conserving() {
+        let sched = FairScheduler::new(&[(8, 4), (1, 4)], 16).unwrap();
+        let mut st = sched.state.lock().unwrap();
+        // Tenant 0 has the credit claim but is not waiting: the lone
+        // waiter wins immediately instead of the fleet idling.
+        st.tenants[0].credit = 100;
+        st.tenants[1].waiting = 1;
+        assert_eq!(st.next(), Some(1));
+        st.tenants[1].waiting = 0;
+        assert_eq!(st.next(), None);
+    }
+
+    #[test]
+    fn concurrent_acquires_all_complete_within_capacity() {
+        let sched = FairScheduler::new(&[(1, 4), (1, 4)], 2).unwrap();
+        let mut handles = Vec::new();
+        for t in 0..2 {
+            let lease = FairLease::new(sched.clone(), t);
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..50 {
+                    lease.acquire();
+                    lease.release();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(sched.grants(), vec![50, 50]);
+        assert_eq!(sched.in_flight(), vec![0, 0]);
+    }
+
+    #[test]
+    fn hoarding_tenant_cannot_block_a_neighbor() {
+        let sched = FairScheduler::new(&[(8, 2), (1, 2)], 4).unwrap();
+        let hog = FairLease::new(sched.clone(), 0);
+        // Tenant 0 takes its full budget and holds it forever (a wedged
+        // Byzantine burst, in miniature).
+        hog.acquire();
+        hog.acquire();
+        let neighbor = FairLease::new(sched.clone(), 1);
+        let (tx, rx) = std::sync::mpsc::channel();
+        std::thread::spawn(move || {
+            neighbor.acquire();
+            tx.send(()).unwrap();
+            neighbor.release();
+        });
+        assert!(
+            rx.recv_timeout(Duration::from_secs(5)).is_ok(),
+            "neighbor starved behind a budget-hoarding tenant"
+        );
+        assert_eq!(sched.grants()[1], 1);
+    }
+
+    #[test]
+    fn scheduler_rejects_degenerate_shares() {
+        assert!(FairScheduler::new(&[], 4).is_err());
+        assert!(FairScheduler::new(&[(1, 1)], 0).is_err());
+        assert!(FairScheduler::new(&[(0, 1)], 4).is_err());
+        assert!(FairScheduler::new(&[(1, 0)], 4).is_err());
+    }
+
+    // -- registry -----------------------------------------------------------
+
+    fn two_tenant_fleet() -> Box<dyn WorkerFleet> {
+        // Same payload width, different class counts: a reply's width
+        // proves which tenant's engine produced it.
+        let engines: Vec<Arc<dyn InferenceEngine>> = vec![
+            Arc::new(LinearMockEngine::new(6, 3)),
+            Arc::new(LinearMockEngine::new(6, 5)),
+        ];
+        Box::new(WorkerPool::spawn_multi(engines, &vec![WorkerSpec::default(); 5], 7, None))
+    }
+
+    fn two_specs() -> Vec<TenantSpec> {
+        vec![
+            TenantSpec {
+                name: "alpha".into(),
+                params: CodeParams::new(2, 1, 0),
+                ..TenantSpec::default()
+            },
+            TenantSpec {
+                name: "beta".into(),
+                params: CodeParams::new(4, 1, 0),
+                ..TenantSpec::default()
+            },
+        ]
+    }
+
+    #[test]
+    fn registry_serves_two_schemes_over_one_fleet() {
+        let reg = TenantRegistry::spawn(two_tenant_fleet(), two_specs(), 8).unwrap();
+        let alpha = reg.get("alpha").unwrap().service.clone();
+        let beta = reg.get("beta").unwrap().service.clone();
+        let query = |j: usize| (0..6).map(|t| ((j * 6 + t) as f32 * 0.1).sin()).collect::<Vec<_>>();
+        let ha: Vec<_> = (0..2).map(|j| alpha.submit(query(j))).collect();
+        let hb: Vec<_> = (0..4).map(|j| beta.submit(query(j))).collect();
+        for h in ha {
+            let pred = h.wait_timeout(Duration::from_secs(20)).expect("alpha prediction");
+            assert_eq!(pred.len(), 3, "alpha must decode through its own 3-class engine");
+            assert!(pred.iter().all(|v| v.is_finite()));
+        }
+        for h in hb {
+            let pred = h.wait_timeout(Duration::from_secs(20)).expect("beta prediction");
+            assert_eq!(pred.len(), 5, "beta must decode through its own 5-class engine");
+            assert!(pred.iter().all(|v| v.is_finite()));
+        }
+        // Both tenants dispatched through the shared scheduler, and the
+        // accounting invariant holds per tenant and globally.
+        let grants = reg.scheduler().grants();
+        assert!(grants[0] >= 1 && grants[1] >= 1, "grants: {grants:?}");
+        reg.assert_balanced().unwrap();
+        let g = reg.global_accounting();
+        assert_eq!(g.received, 6);
+        assert_eq!(g.served + g.degraded, 6);
+        reg.shutdown();
+    }
+
+    #[test]
+    fn registry_rejects_bad_spec_tables() {
+        // Empty table.
+        assert!(TenantRegistry::spawn(two_tenant_fleet(), vec![], 8).is_err());
+        // Duplicate names.
+        let mut specs = two_specs();
+        specs[1].name = "alpha".into();
+        let err = TenantRegistry::spawn(two_tenant_fleet(), specs, 8).unwrap_err();
+        assert!(format!("{err:#}").contains("duplicate"), "{err:#}");
+        // A scheme the shared fleet cannot cover, attributed to its tenant.
+        let mut specs = two_specs();
+        specs[1].params = CodeParams::new(16, 1, 0);
+        let err = TenantRegistry::spawn(two_tenant_fleet(), specs, 8).unwrap_err();
+        assert!(format!("{err:#}").contains("beta"), "{err:#}");
+        // SLO + Byzantine budget without verification, attributed.
+        let mut specs = two_specs();
+        specs[0].params = CodeParams::new(2, 0, 1);
+        specs[0].slo = Some(Duration::from_millis(50));
+        let err = TenantRegistry::spawn(two_tenant_fleet(), specs, 8).unwrap_err();
+        assert!(format!("{err:#}").contains("alpha"), "{err:#}");
+    }
+}

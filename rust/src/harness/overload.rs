@@ -226,6 +226,47 @@ impl LoadTrace {
     }
 }
 
+/// Served-latency percentiles for one admission class (or any other
+/// query slice — the per-tenant bench rows reuse it). All-zero when the
+/// slice served nothing.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ClassLatency {
+    /// Queries in the slice that were answered successfully.
+    pub count: u64,
+    /// Median served latency (ms).
+    pub p50_ms: f64,
+    /// p99 served latency (ms).
+    pub p99_ms: f64,
+    /// p99.9 served latency (ms).
+    pub p999_ms: f64,
+}
+
+impl ClassLatency {
+    /// Percentiles of an unsorted latency sample in **seconds** (the
+    /// collector's native unit); reported in ms.
+    pub fn of(mut lat_s: Vec<f64>) -> ClassLatency {
+        if lat_s.is_empty() {
+            return ClassLatency::default();
+        }
+        lat_s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |q: f64| percentile_sorted(&lat_s, q) * 1e3;
+        ClassLatency {
+            count: lat_s.len() as u64,
+            p50_ms: pct(0.50),
+            p99_ms: pct(0.99),
+            p999_ms: pct(0.999),
+        }
+    }
+
+    /// One JSON object (`{"count": …, "p50_ms": …, …}`) for report rows.
+    pub fn json(&self) -> String {
+        format!(
+            "{{\"count\": {}, \"p50_ms\": {:.3}, \"p99_ms\": {:.3}, \"p999_ms\": {:.3}}}",
+            self.count, self.p50_ms, self.p99_ms, self.p999_ms,
+        )
+    }
+}
+
 /// One open-loop run's outcome: the offered load, the per-class
 /// accounting, goodput and the served-latency tail.
 #[derive(Clone, Debug)]
@@ -258,6 +299,12 @@ pub struct OverloadReport {
     pub p99_ms: f64,
     /// p99.9 served latency (ms).
     pub p999_ms: f64,
+    /// Latency tail of the interactive class alone — the population an
+    /// SLO is written against, undiluted by sheddable batch traffic.
+    pub interactive: ClassLatency,
+    /// Latency tail of the batch class alone (all-zero when no queries
+    /// were tagged batch).
+    pub batch: ClassLatency,
     /// Wall-clock run duration (seconds).
     pub wall_s: f64,
 }
@@ -288,7 +335,17 @@ impl OverloadReport {
             self.p50_ms,
             self.p99_ms,
             self.p999_ms,
-        )
+        ) + &if self.batch.count > 0 {
+            format!(
+                " | int(n={} p99={:.2}ms) batch(n={} p99={:.2}ms)",
+                self.interactive.count,
+                self.interactive.p99_ms,
+                self.batch.count,
+                self.batch.p99_ms,
+            )
+        } else {
+            String::new()
+        }
     }
 
     /// One JSON object row for `BENCH_PR.json` overload curves.
@@ -299,6 +356,7 @@ impl OverloadReport {
              \"submitted\": {}, \"served\": {}, \"degraded\": {}, \"shed\": {}, \
              \"rejected\": {}, \"failed\": {}, \
              \"p50_ms\": {:.3}, \"p99_ms\": {:.3}, \"p999_ms\": {:.3}, \
+             \"interactive\": {}, \"batch\": {}, \
              \"wall_s\": {:.3}}}",
             self.trace,
             self.scheme,
@@ -314,6 +372,8 @@ impl OverloadReport {
             self.p50_ms,
             self.p99_ms,
             self.p999_ms,
+            self.interactive.json(),
+            self.batch.json(),
             self.wall_s,
         )
     }
@@ -413,11 +473,26 @@ pub fn drive(
         bail!("overload collector saw {} of {total} replies", done.len());
     }
 
-    let mut served_lat: Vec<f64> = done
-        .iter()
-        .filter(|(_, ok, _)| *ok)
-        .map(|(id, _, at)| at.duration_since(submitted_at[*id as usize]).as_secs_f64())
-        .collect();
+    // Split the served tail by admission class before pooling: the
+    // interactive percentiles are the SLO population, and pooling them
+    // with sheddable batch latencies hides exactly the inversion an
+    // operator cares about (batch soaking up queue headroom).
+    let is_batch =
+        |id: u64| batch_every > 0 && (id as usize) % batch_every == batch_every - 1;
+    let mut int_lat: Vec<f64> = Vec::new();
+    let mut batch_lat: Vec<f64> = Vec::new();
+    for (id, ok, at) in &done {
+        if !*ok {
+            continue;
+        }
+        let lat = at.duration_since(submitted_at[*id as usize]).as_secs_f64();
+        if is_batch(*id) {
+            batch_lat.push(lat);
+        } else {
+            int_lat.push(lat);
+        }
+    }
+    let mut served_lat: Vec<f64> = int_lat.iter().chain(&batch_lat).copied().collect();
     served_lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let pct = |q: f64| {
         if served_lat.is_empty() {
@@ -426,6 +501,7 @@ pub fn drive(
             percentile_sorted(&served_lat, q) * 1e3
         }
     };
+    let (interactive, batch) = (ClassLatency::of(int_lat), ClassLatency::of(batch_lat));
 
     let after = snapshot(svc);
     let report = OverloadReport {
@@ -443,6 +519,8 @@ pub fn drive(
         p50_ms: pct(0.50),
         p99_ms: pct(0.99),
         p999_ms: pct(0.999),
+        interactive,
+        batch,
         wall_s: wall,
     };
     if !report.accounting_balances() {
@@ -602,6 +680,34 @@ mod tests {
         assert!(report.accounting_balances(), "{}", report.line());
         assert!(report.served > 0, "{}", report.line());
         assert!(report.wall_s > 0.0);
+        // The per-class split partitions the successful replies: every
+        // served/degraded query is in exactly one class, and with
+        // batch_every=3 both classes saw traffic.
+        assert_eq!(
+            report.interactive.count + report.batch.count,
+            report.served + report.degraded,
+            "{}",
+            report.line()
+        );
+        if report.interactive.count > 0 {
+            assert!(report.interactive.p50_ms > 0.0);
+            assert!(report.interactive.p99_ms >= report.interactive.p50_ms);
+        }
+        let json = report.json_row();
+        assert!(json.contains("\"interactive\": {\"count\""), "{json}");
+        assert!(json.contains("\"batch\": {\"count\""), "{json}");
         svc.shutdown();
+    }
+
+    #[test]
+    fn class_latency_percentiles_are_ordered_and_empty_is_zero() {
+        let empty = ClassLatency::of(vec![]);
+        assert_eq!(empty.count, 0);
+        assert_eq!(empty.p99_ms, 0.0);
+        let lat: Vec<f64> = (1..=1000).map(|i| i as f64 / 1e3).collect();
+        let c = ClassLatency::of(lat);
+        assert_eq!(c.count, 1000);
+        assert!(c.p50_ms <= c.p99_ms && c.p99_ms <= c.p999_ms, "{c:?}");
+        assert!((c.p50_ms - 500.0).abs() < 2.0, "p50 of 1..1000ms near 500: {c:?}");
     }
 }

@@ -46,7 +46,8 @@ const USAGE: &str = "usage: approxifer <serve|infer|figures|latency|overload|gol
             --queue-depth N  --seed S
   infer:   --samples N
   worker:  --connect ADDR (coordinator fleet address)  --slot N
-           --engine SPEC (mock:<payload>:<classes>[:<delay_ms>])
+           --engine SPEC (mock:<payload>:<classes>[:<delay_ms>]; repeat the
+           flag in a multi-tenant fleet — tenant t's model is the t-th spec)
            --behavior PROG (honest | crash@R | slow:B:T:P | flaky:P |
            byz-random:SIGMA | byz-signflip | byz-target:CLASS:BOOST |
            byz-collude:PACT:SCALE)  --seed S  --heartbeat-ms MS
@@ -183,7 +184,14 @@ fn worker(args: &approxifer::cli::Args, config_seed: u64) -> Result<()> {
     use approxifer::sim::faults::Behavior;
     use std::time::Duration;
 
-    let engine = parse_engine_spec(args.get("engine").unwrap_or("mock:8:10"))?;
+    // One engine per tenant, in flag order; a single-tenant fleet passes
+    // one (or none, for the default mock).
+    let specs = args.get_all("engine");
+    let engines = if specs.is_empty() {
+        vec![parse_engine_spec("mock:8:10")?]
+    } else {
+        specs.iter().map(|s| parse_engine_spec(s)).collect::<Result<Vec<_>>>()?
+    };
     let mut opts = WorkerOptions::default();
     if let Some(c) = args.get("connect") {
         opts.connect = c.to_string();
@@ -206,12 +214,13 @@ fn worker(args: &approxifer::cli::Args, config_seed: u64) -> Result<()> {
         opts.mute_after = Some(Duration::from_millis(args.get_u64("mute-after-ms", 0)?));
     }
     log::info!(
-        "worker starting: connect={} slot={} behavior={:?}",
+        "worker starting: connect={} slot={} engines={} behavior={:?}",
         opts.connect,
         opts.slot,
+        engines.len(),
         opts.behavior
     );
-    run_worker(engine, opts)
+    run_worker(engines, opts)
 }
 
 /// Build the online service over the configured PJRT model: any strategy
@@ -328,6 +337,9 @@ fn build_service(cfg: &AppConfig) -> Result<(Arc<Service>, usize)> {
 }
 
 fn serve(cfg: &AppConfig) -> Result<()> {
+    if let Some(tc) = &cfg.tenants {
+        return serve_tenants(cfg, tc);
+    }
     let (service, payload) = build_service(cfg)?;
     let server = Server::start(&cfg.bind, service.clone(), payload)?;
     // Report the scheme's actual envelope, not the raw config triple (the
@@ -348,6 +360,115 @@ fn serve(cfg: &AppConfig) -> Result<()> {
     loop {
         std::thread::sleep(std::time::Duration::from_secs(30));
         println!("{}", service.metrics.report());
+    }
+}
+
+/// Multi-tenant serving: one shared fleet (in-process pool or remote),
+/// one service pipeline per `tenants.<name>` table, one fairness scheduler
+/// at the dispatch boundary. Tenant models come from their engine specs —
+/// every worker hosts the whole engine table, indexed by the tenant tag
+/// in each task's group id.
+fn serve_tenants(cfg: &AppConfig, tc: &approxifer::config::TenantsConfig) -> Result<()> {
+    use approxifer::coordinator::TenantRegistry;
+    use approxifer::server::worker::parse_engine_spec;
+    use approxifer::workers::{RemoteFleet, WorkerFleet, WorkerPool, WorkerSpec};
+
+    if cfg.fault_profile.is_some() {
+        bail!(
+            "--faults/faults.profile with tenants.enabled: which tenant would it hit? \
+             Fault programs run worker-side (fleet workers: --behavior) or through the \
+             test/bench harness hooks"
+        );
+    }
+    // Tenant i's model is engine-table slot i on every worker.
+    let engines = tc
+        .specs
+        .iter()
+        .map(|s| {
+            parse_engine_spec(&s.engine)
+                .with_context(|| format!("tenant '{}' engine spec", s.name))
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let payloads: Vec<usize> = engines.iter().map(|e| e.payload()).collect();
+    let need =
+        tc.specs.iter().map(|s| s.strategy.num_workers(s.params)).max().unwrap_or(1);
+
+    let mut fleet_handle = None;
+    let fleet: Box<dyn WorkerFleet> = match &cfg.fleet {
+        Some(fc) => {
+            if cfg.worker_latency != approxifer::workers::LatencyModel::None {
+                bail!(
+                    "workers.latency models in-process workers; with fleet.enabled a \
+                     worker's latency is real"
+                );
+            }
+            let slots = fc.workers.unwrap_or(need).max(need);
+            let fleet = RemoteFleet::bind(fc, slots)?;
+            let engine_flags: Vec<String> =
+                tc.specs.iter().map(|s| format!("--engine {}", s.engine)).collect();
+            println!(
+                "fleet listening on {} ({slots} slots, largest tenant needs {need}); join \
+                 with: approxifer worker --connect {} --slot <i> {}",
+                fleet.addr(),
+                fleet.addr(),
+                engine_flags.join(" ")
+            );
+            fleet_handle = Some(fleet.handle());
+            Box::new(fleet)
+        }
+        None => Box::new(WorkerPool::spawn_multi(
+            engines,
+            &vec![WorkerSpec::new(cfg.worker_latency); need],
+            cfg.seed,
+            None,
+        )),
+    };
+    let registry = TenantRegistry::spawn(fleet, tc.specs.clone(), tc.capacity)?;
+    if let Some(handle) = fleet_handle {
+        if !handle.wait_for_workers(need, std::time::Duration::from_secs(10)) {
+            log::warn!(
+                "only {}/{need} fleet workers joined after 10s; groups will lean on the \
+                 codes' straggler budgets until the rest join",
+                handle.live_workers()
+            );
+        }
+    }
+    let server = Server::start_tenants(
+        &cfg.bind,
+        registry
+            .tenants()
+            .iter()
+            .zip(&payloads)
+            .map(|(t, &p)| (t.service.clone(), p))
+            .collect(),
+    )?;
+    for (i, t) in registry.tenants().iter().enumerate() {
+        let scheme = t.service.scheme();
+        println!(
+            "tenant {i} '{}': scheme={} K={} tolerates S={} E={} weight={} budget={} \
+             payload={}",
+            t.spec.name,
+            scheme.name(),
+            scheme.group_size(),
+            scheme.stragglers_tolerated(),
+            scheme.byzantine_tolerated(),
+            t.spec.weight,
+            t.spec.budget,
+            payloads[i]
+        );
+    }
+    println!(
+        "approxifer serving {} tenants (fair capacity {}) on {}",
+        registry.tenants().len(),
+        tc.capacity,
+        server.addr()
+    );
+    // Serve until killed; dump per-tenant metrics every 30s.
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(30));
+        for t in registry.tenants() {
+            println!("[tenant {}]\n{}", t.spec.name, t.service.metrics.report());
+        }
     }
 }
 

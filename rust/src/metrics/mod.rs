@@ -238,6 +238,9 @@ pub struct ServingMetrics {
     pub fleet_leaves: Counter,
     /// Heartbeat pings received from remote workers.
     pub fleet_heartbeats: Counter,
+    /// Spare worker slots admitted into the dispatched range at a
+    /// `Reconfigure` epoch boundary (see `fleet.spare_slots`).
+    pub fleet_spares_admitted: Counter,
     /// Remote workers currently connected.
     pub fleet_live: Gauge,
     /// Queued (admitted, not yet batched) queries after the last admit.
@@ -314,13 +317,15 @@ impl ServingMetrics {
             self.ingress_depth.get(),
         ));
         out.push_str(&format!(
-            "fleet: live={} joins={} reconnects={} evictions={} leaves={} heartbeats={}\n",
+            "fleet: live={} joins={} reconnects={} evictions={} leaves={} heartbeats={} \
+             spares_admitted={}\n",
             self.fleet_live.get(),
             self.fleet_joins.get(),
             self.fleet_reconnects.get(),
             self.fleet_evictions.get(),
             self.fleet_leaves.get(),
             self.fleet_heartbeats.get(),
+            self.fleet_spares_admitted.get(),
         ));
         out.push_str(&self.group_latency.summary_line("  group"));
         out.push('\n');

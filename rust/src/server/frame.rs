@@ -20,6 +20,7 @@
 //! | [`OP_PING`] = 2 | client → server, worker → coordinator | request id | empty |
 //! | [`OP_HELLO`] = 3 | worker → coordinator | slot index | empty |
 //! | [`OP_TASK`] = 4 | coordinator → worker | group id | `f32` coded row |
+//! | [`OP_PREDICT_T`] = 5 | client → server | request id | `u16` tenant + `f32` query |
 //! | [`ST_OK`] = 16 | reply | correlates | `f32` prediction / empty ack |
 //! | [`ST_ERR`] = 17 | reply | correlates | UTF-8 message |
 //!
@@ -46,6 +47,10 @@ pub const OP_PING: u8 = 2;
 pub const OP_HELLO: u8 = 3;
 /// Coordinator → worker dispatch: `id` is the group, payload the coded row.
 pub const OP_TASK: u8 = 4;
+/// Tenant-tagged client query: payload is a little-endian `u16` tenant
+/// index followed by the flattened `f32` input. [`OP_PREDICT`] remains the
+/// single-tenant spelling (tenant 0).
+pub const OP_PREDICT_T: u8 = 5;
 /// Success reply: payload is the `f32` result (empty for ping/hello acks).
 pub const ST_OK: u8 = 16;
 /// Error reply: payload is a UTF-8 message.
@@ -127,6 +132,19 @@ pub fn read_frame(r: &mut impl Read) -> Result<Frame> {
                 bail!("payload length mismatch: {body_len} bytes vs {plen} floats");
             }
         }
+        OP_PREDICT_T => {
+            // Two tag bytes precede the floats; `plen` still counts floats
+            // only. Same checked_mul discipline as the untagged ops.
+            let Some(f32_bytes) = body_len.checked_sub(2) else {
+                bail!("tenant-tagged predict frame shorter than its tenant tag");
+            };
+            if plen.checked_mul(4) != Some(f32_bytes) {
+                bail!(
+                    "payload length mismatch: {f32_bytes} bytes vs {plen} floats \
+                     after the tenant tag"
+                );
+            }
+        }
         ST_ERR => {
             if plen != body_len {
                 bail!("error payload length mismatch: {body_len} bytes vs {plen} declared");
@@ -142,7 +160,32 @@ pub fn read_frame(r: &mut impl Read) -> Result<Frame> {
     Ok(Frame { head, id, body: frame[HEADER as usize..].to_vec() })
 }
 
+/// Serialize an [`OP_PREDICT_T`] frame: the 2-byte LE tenant tag, then the
+/// `f32` query payload.
+pub fn write_predict_t(w: &mut impl Write, id: u64, tenant: u16, payload: &[f32]) -> Result<()> {
+    let mut buf = Vec::with_capacity(4 + HEADER as usize + 2 + payload.len() * 4);
+    put_u32(&mut buf, HEADER + 2 + (payload.len() * 4) as u32);
+    buf.push(OP_PREDICT_T);
+    put_u64(&mut buf, id);
+    put_u64(&mut buf, payload.len() as u64);
+    buf.extend_from_slice(&tenant.to_le_bytes());
+    for &x in payload {
+        put_f32(&mut buf, x);
+    }
+    w.write_all(&buf)?;
+    w.flush()?;
+    Ok(())
+}
+
 /// Decode a little-endian `f32` payload.
 pub fn body_f32(body: &[u8]) -> Vec<f32> {
     body.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect()
+}
+
+/// Split a validated [`OP_PREDICT_T`] body into its tenant tag and `f32`
+/// query. Only call on a body [`read_frame`] accepted under that head —
+/// the ≥ 2-byte bound is established there.
+pub fn body_tenant_f32(body: &[u8]) -> (u16, Vec<f32>) {
+    let tenant = u16::from_le_bytes([body[0], body[1]]);
+    (tenant, body_f32(&body[2..]))
 }

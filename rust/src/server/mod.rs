@@ -3,6 +3,12 @@
 //! forwards queries into the [`crate::coordinator::Service`], and a client
 //! library used by the examples and integration tests.
 //!
+//! The front-end is tenant-aware: [`Server::start_tenants`] serves a table
+//! of per-tenant services, an [`OP_PREDICT_T`] frame carries the tenant
+//! index it routes to, and plain [`OP_PREDICT`] remains the single-tenant
+//! spelling (tenant 0) — old clients keep working against a multi-tenant
+//! deployment's default tenant.
+//!
 //! The frame layout and the hardened parser live in [`frame`] (shared with
 //! the worker-fleet protocol); the worker-side loop of that protocol lives
 //! in [`worker`].
@@ -32,8 +38,8 @@ pub mod frame;
 pub mod worker;
 
 pub use frame::{
-    body_f32, read_frame, write_error, write_frame, Frame, MAX_FRAME, OP_HELLO, OP_PING,
-    OP_PREDICT, OP_TASK, ST_ERR, ST_OK,
+    body_f32, body_tenant_f32, read_frame, write_error, write_frame, write_predict_t, Frame,
+    MAX_FRAME, OP_HELLO, OP_PING, OP_PREDICT, OP_PREDICT_T, OP_TASK, ST_ERR, ST_OK,
 };
 
 /// How long the acceptor sleeps after a non-`WouldBlock` accept error
@@ -72,17 +78,29 @@ impl Server {
     /// One thread per connection; each Predict frame becomes a
     /// `service.submit` whose handle resolves on the connection thread.
     pub fn start(addr: &str, service: Arc<Service>, expected_payload: usize) -> Result<Server> {
+        Server::start_tenants(addr, vec![(service, expected_payload)])
+    }
+
+    /// Start a multi-tenant front-end: `tenants[i]` is tenant `i`'s
+    /// service and its model's payload width. [`OP_PREDICT_T`] frames
+    /// route by their tenant tag; plain [`OP_PREDICT`] routes to tenant 0.
+    pub fn start_tenants(
+        addr: &str,
+        tenants: Vec<(Arc<Service>, usize)>,
+    ) -> Result<Server> {
+        if tenants.is_empty() {
+            bail!("server needs at least one tenant service");
+        }
         let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
-        Server::start_on(Box::new(listener), local, service, expected_payload)
+        Server::start_on(Box::new(listener), local, Arc::new(tenants))
     }
 
     fn start_on(
         acceptor: Box<dyn Acceptor>,
         local: SocketAddr,
-        service: Arc<Service>,
-        expected_payload: usize,
+        tenants: Arc<Vec<(Arc<Service>, usize)>>,
     ) -> Result<Server> {
         let stop = Arc::new(AtomicBool::new(false));
         let conns: Arc<Mutex<HashMap<u64, TcpStream>>> = Arc::new(Mutex::new(HashMap::new()));
@@ -102,13 +120,12 @@ impl Server {
                             if let Ok(handle) = stream.try_clone() {
                                 conns2.lock().unwrap().insert(conn_id, handle);
                             }
-                            let service = service.clone();
+                            let tenants = tenants.clone();
                             let registry = conns2.clone();
                             let spawned = std::thread::Builder::new()
                                 .name(format!("conn-{conn_id}"))
                                 .spawn(move || {
-                                    if let Err(e) = serve_conn(stream, &service, expected_payload)
-                                    {
+                                    if let Err(e) = serve_conn(stream, &tenants) {
                                         log::debug!("connection {conn_id} closed: {e:#}");
                                     }
                                     registry.lock().unwrap().remove(&conn_id);
@@ -180,7 +197,9 @@ impl Drop for Server {
 /// response **as it completes**, tagged with its request id — so a client
 /// may pipeline requests and receive responses out of order (ids are the
 /// correlation key, exactly as the concurrent coordinator resolves groups).
-fn serve_conn(mut stream: TcpStream, service: &Service, expected_payload: usize) -> Result<()> {
+/// Each query routes to its tenant's service; payload width is validated
+/// against the routed tenant's model.
+fn serve_conn(mut stream: TcpStream, tenants: &[(Arc<Service>, usize)]) -> Result<()> {
     stream.set_nodelay(true).ok();
     let mut wstream = stream.try_clone().context("cloning stream for responder")?;
     let (tx, rx) = std::sync::mpsc::channel::<(u64, Result<RowView, String>)>();
@@ -205,9 +224,22 @@ fn serve_conn(mut stream: TcpStream, service: &Service, expected_payload: usize)
                 OP_PING => {
                     let _ = tx.send((frame.id, Ok(RowView::empty())));
                 }
-                OP_PREDICT => {
-                    let payload = body_f32(&frame.body);
-                    if payload.len() != expected_payload {
+                OP_PREDICT | OP_PREDICT_T => {
+                    let (tenant, payload) = if frame.head == OP_PREDICT_T {
+                        let (t, p) = body_tenant_f32(&frame.body);
+                        (t as usize, p)
+                    } else {
+                        (0, body_f32(&frame.body))
+                    };
+                    let Some((service, expected_payload)) = tenants.get(tenant) else {
+                        let msg = format!(
+                            "unknown tenant {tenant} (serving {} tenants)",
+                            tenants.len()
+                        );
+                        let _ = tx.send((frame.id, Err(msg)));
+                        continue;
+                    };
+                    if payload.len() != *expected_payload {
                         let msg = format!(
                             "payload has {} floats, model expects {expected_payload}",
                             payload.len()
@@ -243,10 +275,22 @@ impl Client {
         Ok(Client { stream, next_id: AtomicU64::new(1) })
     }
 
-    /// Round-trip one prediction.
+    /// Round-trip one prediction (the single-tenant spelling: tenant 0).
     pub fn predict(&mut self, payload: &[f32]) -> Result<Vec<f32>> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         write_frame(&mut self.stream, OP_PREDICT, id, payload)?;
+        self.read_prediction(id)
+    }
+
+    /// Round-trip one prediction against tenant `tenant` of a
+    /// multi-tenant deployment.
+    pub fn predict_tenant(&mut self, tenant: u16, payload: &[f32]) -> Result<Vec<f32>> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        write_predict_t(&mut self.stream, id, tenant, payload)?;
+        self.read_prediction(id)
+    }
+
+    fn read_prediction(&mut self, id: u64) -> Result<Vec<f32>> {
         let resp = read_frame(&mut self.stream)?;
         if resp.id != id {
             bail!("response id {} != request id {id}", resp.id);
@@ -314,6 +358,31 @@ mod tests {
         server.shutdown();
     }
 
+    #[test]
+    fn tenant_tagged_queries_route_to_their_service() {
+        // Two services with different payload widths and class counts
+        // stand in for two tenants; the front-end routes by tag.
+        let a = start_test_service(2, 8, 3);
+        let b = start_test_service(2, 6, 5);
+        let server = Server::start_tenants("127.0.0.1:0", vec![(a, 8), (b, 6)]).unwrap();
+        let mut client = Client::connect(&server.addr()).unwrap();
+        // Untagged OP_PREDICT is the single-tenant spelling: tenant 0.
+        let pred =
+            client.predict(&(0..8).map(|i| i as f32 * 0.1).collect::<Vec<_>>()).unwrap();
+        assert_eq!(pred.len(), 3);
+        let pred = client
+            .predict_tenant(1, &(0..6).map(|i| i as f32 * 0.1).collect::<Vec<_>>())
+            .unwrap();
+        assert_eq!(pred.len(), 5, "tenant 1 must decode through its own 5-class model");
+        // Tag bounds are enforced per frame, as a reply not a disconnect.
+        let err = client.predict_tenant(7, &[0.0; 6]).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown tenant 7"), "{err:#}");
+        // Payload width is validated against the *routed* tenant's model.
+        let err = client.predict_tenant(1, &[0.0; 8]).unwrap_err();
+        assert!(format!("{err:#}").contains("expects 6"), "{err:#}");
+        server.shutdown();
+    }
+
     // ---- front-end resilience ---------------------------------------------
 
     /// Fails the first `fail_first` accepts with a transient error, then
@@ -344,7 +413,8 @@ mod tests {
         listener.set_nonblocking(true).unwrap();
         let acceptor =
             FlakyAcceptor { inner: listener, remaining_failures: AtomicU64::new(3) };
-        let server = Server::start_on(Box::new(acceptor), local, service, 8).unwrap();
+        let server =
+            Server::start_on(Box::new(acceptor), local, Arc::new(vec![(service, 8)])).unwrap();
         // The old accept loop `break`s on the first injected error and
         // never serves anyone; the fixed loop backs off and keeps going.
         // Bound the reads so a dead acceptor fails the test instead of
@@ -418,6 +488,40 @@ mod tests {
         assert_eq!(frame.head, ST_ERR);
         assert_eq!(frame.id, 7);
         assert_eq!(String::from_utf8_lossy(&frame.body), "boom: worker exploded");
+    }
+
+    #[test]
+    fn tenant_predict_frame_roundtrips() {
+        let payload: Vec<f32> = vec![0.5, -1.25, 3.0];
+        let mut buf = Vec::new();
+        write_predict_t(&mut buf, 42, 513, &payload).unwrap();
+        let frame = read_frame(&mut &buf[..]).unwrap();
+        assert_eq!(frame.head, OP_PREDICT_T);
+        assert_eq!(frame.id, 42);
+        let (tenant, floats) = body_tenant_f32(&frame.body);
+        assert_eq!(tenant, 513);
+        assert_eq!(floats, payload);
+    }
+
+    #[test]
+    fn tenant_predict_frame_length_abuse_is_rejected() {
+        // A tagged predict whose body is shorter than the 2-byte tag.
+        let mut buf = Vec::new();
+        crate::util::bytes::put_u32(&mut buf, 1 + 8 + 8);
+        buf.push(OP_PREDICT_T);
+        crate::util::bytes::put_u64(&mut buf, 3);
+        crate::util::bytes::put_u64(&mut buf, 0);
+        let err = read_frame(&mut &buf[..]).unwrap_err();
+        assert!(format!("{err:#}").contains("tenant tag"), "{err:#}");
+        // A tag plus a float count that disagrees with the remaining bytes.
+        let mut buf = Vec::new();
+        crate::util::bytes::put_u32(&mut buf, (1 + 8 + 8 + 2 + 8) as u32);
+        buf.push(OP_PREDICT_T);
+        crate::util::bytes::put_u64(&mut buf, 3);
+        crate::util::bytes::put_u64(&mut buf, 5); // claims 5 floats, provides 2
+        buf.extend_from_slice(&[0u8; 10]);
+        let err = read_frame(&mut &buf[..]).unwrap_err();
+        assert!(format!("{err:#}").contains("mismatch"), "{err:#}");
     }
 
     #[test]

@@ -1,8 +1,15 @@
 //! The worker side of the fleet wire protocol: a standalone process that
 //! dials the coordinator, claims a fleet slot with [`OP_HELLO`], then
-//! serves [`OP_TASK`] frames with its local engine — running a
+//! serves [`OP_TASK`] frames with its local engines — running a
 //! [`Behavior`] fault program whose RNG stream is bit-identical to the
 //! in-process pool's (see [`crate::sim::faults::behavior_rng`]).
+//!
+//! A worker hosts one engine per tenant: task frames arrive with the
+//! tenant index in the top bits of the group id (see
+//! [`crate::workers::mux`]), and the loop picks `engines[tenant]` the same
+//! way the in-process pool's multi-engine task loop does. A tag outside
+//! the engine table is answered with [`ST_ERR`] rather than dropped, so
+//! a mis-wired coordinator fails loudly instead of timing out.
 //!
 //! Session lifecycle, worker's view:
 //!
@@ -31,7 +38,7 @@ use crate::server::frame::{
     body_f32, read_frame, write_error, write_frame, OP_HELLO, OP_PING, OP_TASK, ST_ERR, ST_OK,
 };
 use crate::sim::faults::{behavior_rng, Behavior, BehaviorState, FaultAction};
-use crate::workers::{DelayMockEngine, InferenceEngine, LinearMockEngine};
+use crate::workers::{tenant_of, DelayMockEngine, InferenceEngine, LinearMockEngine};
 
 /// Everything a worker process needs besides its engine.
 pub struct WorkerOptions {
@@ -89,7 +96,13 @@ enum SessionEnd {
 /// gives up. The behavior program's state (request counter, RNG stream)
 /// persists across sessions — a reconnect is the same worker resuming, not
 /// a fresh one.
-pub fn run_worker(engine: Arc<dyn InferenceEngine>, opts: WorkerOptions) -> Result<()> {
+///
+/// `engines[t]` serves tenant `t`'s tasks; a single-tenant deployment
+/// passes a one-element vec and every untagged group lands on index 0.
+pub fn run_worker(engines: Vec<Arc<dyn InferenceEngine>>, opts: WorkerOptions) -> Result<()> {
+    if engines.is_empty() {
+        bail!("worker {}: needs at least one engine", opts.slot);
+    }
     let started = Instant::now();
     let mute_deadline = opts.mute_after.map(|d| started + d);
     let mut behavior = BehaviorState::new(opts.behavior, behavior_rng(opts.seed, opts.slot));
@@ -98,7 +111,7 @@ pub fn run_worker(engine: Arc<dyn InferenceEngine>, opts: WorkerOptions) -> Resu
         match TcpStream::connect(&opts.connect) {
             Ok(stream) => {
                 consecutive_failures = 0;
-                match serve_session(stream, &engine, &opts, &mut behavior, mute_deadline) {
+                match serve_session(stream, &engines, &opts, &mut behavior, mute_deadline) {
                     SessionEnd::CoordinatorGone => {
                         log::info!("worker {}: coordinator gone, reconnecting", opts.slot);
                     }
@@ -147,7 +160,7 @@ fn muted(deadline: Option<Instant>) -> bool {
 
 fn serve_session(
     mut stream: TcpStream,
-    engine: &Arc<dyn InferenceEngine>,
+    engines: &[Arc<dyn InferenceEngine>],
     opts: &WorkerOptions,
     behavior: &mut BehaviorState,
     mute_deadline: Option<Instant>,
@@ -201,7 +214,7 @@ fn serve_session(
         })
         .expect("spawning heartbeat thread");
 
-    let end = task_loop(&mut stream, engine, behavior, &writer, mute_deadline, opts.slot);
+    let end = task_loop(&mut stream, engines, behavior, &writer, mute_deadline, opts.slot);
     session_live.store(false, Ordering::Relaxed);
     let _ = heartbeat.join();
     end
@@ -209,7 +222,7 @@ fn serve_session(
 
 fn task_loop(
     stream: &mut TcpStream,
-    engine: &Arc<dyn InferenceEngine>,
+    engines: &[Arc<dyn InferenceEngine>],
     behavior: &mut BehaviorState,
     writer: &Arc<Mutex<TcpStream>>,
     mute_deadline: Option<Instant>,
@@ -250,6 +263,19 @@ fn task_loop(
                 if !delay.is_zero() {
                     std::thread::sleep(delay);
                 }
+                let tenant = tenant_of(group) as usize;
+                let Some(engine) = engines.get(tenant) else {
+                    let mut w = writer.lock().unwrap();
+                    let msg = format!(
+                        "worker {slot}: no engine for tenant tag {tenant} \
+                         (hosting {} engines)",
+                        engines.len()
+                    );
+                    if write_error(&mut *w, group, &msg).is_err() {
+                        return SessionEnd::CoordinatorGone;
+                    }
+                    continue;
+                };
                 let payload = body_f32(&frame.body);
                 let reply = match engine.infer1(&payload) {
                     Ok(mut logits) => {
@@ -341,7 +367,13 @@ mod tests {
             ..WorkerOptions::default()
         };
         let engine = parse_engine_spec("mock:4:2").unwrap();
-        let err = run_worker(engine, opts).unwrap_err();
+        let err = run_worker(vec![engine], opts).unwrap_err();
         assert!(format!("{err:#}").contains("giving up"), "{err:#}");
+    }
+
+    #[test]
+    fn worker_refuses_an_empty_engine_table() {
+        let err = run_worker(vec![], WorkerOptions::default()).unwrap_err();
+        assert!(format!("{err:#}").contains("at least one engine"), "{err:#}");
     }
 }

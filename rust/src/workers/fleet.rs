@@ -42,6 +42,26 @@ pub trait WorkerFleet: Send {
     /// counters never undercount.
     fn attach_metrics(&self, metrics: Arc<ServingMetrics>);
 
+    /// Whether this fleet honors the per-task fault-injection fields
+    /// ([`WorkerTask::corrupt`] / [`WorkerTask::extra_delay`]) stamped by
+    /// the dispatcher's fault hook. The in-process pool executes them in
+    /// its task loop; a remote fleet does not (remote fault programs run
+    /// inside the worker binary), so the service builder refuses the hook
+    /// there. Facades over a task-fault-capable fleet forward `true`.
+    fn supports_task_faults(&self) -> bool {
+        false
+    }
+
+    /// Admit any spare workers that joined capacity beyond the dispatched
+    /// slot range. Called by the dispatcher at a `Reconfigure` epoch
+    /// boundary — the one point where the scheme's worker need can grow —
+    /// so a fleet may widen `num_workers` there instead of rejecting
+    /// late joiners forever. Returns the number of newly admitted slots
+    /// (0 for fleets with fixed membership, the default).
+    fn admit_spares(&self) -> usize {
+        0
+    }
+
     /// Stop the fleet: close dispatch channels/connections and join
     /// internal threads.
     fn shutdown(self: Box<Self>);

@@ -3,12 +3,14 @@
 //! Byzantine corruption modes, and two interchangeable fleets behind the
 //! [`WorkerFleet`] trait — the in-process thread [`WorkerPool`] and the
 //! [`RemoteFleet`] of worker processes speaking the shared frame codec
-//! over TCP.
+//! over TCP — plus the tenant multiplexer ([`FleetMux`]) that splits one
+//! shared fleet into per-tenant [`TenantFleet`] facades.
 
 pub mod byzantine;
 pub mod engine;
 pub mod fleet;
 pub mod latency;
+pub mod mux;
 pub mod pool;
 pub mod remote;
 
@@ -16,5 +18,6 @@ pub use byzantine::ByzantineMode;
 pub use engine::{DelayMockEngine, InferenceEngine, LinearMockEngine, PjrtEngine};
 pub use fleet::WorkerFleet;
 pub use latency::LatencyModel;
+pub use mux::{tag_group, tenant_of, untag_group, FleetMux, TenantFleet, MAX_TENANTS};
 pub use pool::{CollectedGroup, ReplyRouter, WorkerPool, WorkerReply, WorkerSpec, WorkerTask};
 pub use remote::{FleetConfig, FleetHandle, FleetSnapshot, RemoteFleet};

@@ -1,0 +1,314 @@
+//! Tenant multiplexing over one shared fleet: [`FleetMux::split`] turns a
+//! single [`WorkerFleet`] into per-tenant [`TenantFleet`] facades that are
+//! themselves `WorkerFleet`s, so every tenant's `Service` runs unchanged —
+//! its own batcher, reply router, decode pool and metrics — while all
+//! tenants' groups dispatch onto the same worker slots.
+//!
+//! The multiplexing key is the group id: the top [`TENANT_SHIFT`]..64 bits
+//! carry the tenant tag ([`tag_group`]), the low bits the tenant-local
+//! group counter. Workers never learn about tenancy beyond the tag — the
+//! in-process pool and the remote worker binary select the engine for a
+//! task by `tenant_of(task.group)` and echo the tagged id back, and the
+//! mux's demux thread routes each reply to its tenant's stream with the
+//! tag stripped, so every tenant's [`crate::workers::ReplyRouter`] sees
+//! exactly the ids it registered.
+//!
+//! Shutdown is refcounted: each facade's `shutdown` drops one reference;
+//! the last one shuts the inner fleet down (which disconnects the reply
+//! stream and lets the demux thread exit) and joins the demux thread.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{bail, Result};
+
+use crate::metrics::ServingMetrics;
+
+use super::fleet::WorkerFleet;
+use super::pool::{WorkerReply, WorkerTask};
+
+/// Bit position of the tenant tag inside a group id: bits `56..64` are the
+/// tenant, bits `0..56` the tenant-local group counter.
+pub const TENANT_SHIFT: u32 = 56;
+
+/// Mask selecting the tenant-local group counter bits.
+pub const GROUP_MASK: u64 = (1u64 << TENANT_SHIFT) - 1;
+
+/// Hard ceiling on tenants sharing one fleet (the tag is 8 bits).
+pub const MAX_TENANTS: usize = 256;
+
+/// Tenant tag carried by a group id (0 for untenanted deployments — no
+/// dispatcher ever counts a tenant-local group id past [`GROUP_MASK`]).
+pub fn tenant_of(group: u64) -> u8 {
+    (group >> TENANT_SHIFT) as u8
+}
+
+/// Stamp `tenant` into `group`'s tag bits.
+pub fn tag_group(tenant: u8, group: u64) -> u64 {
+    ((tenant as u64) << TENANT_SHIFT) | (group & GROUP_MASK)
+}
+
+/// Strip the tenant tag, recovering the tenant-local group id.
+pub fn untag_group(group: u64) -> u64 {
+    group & GROUP_MASK
+}
+
+/// State shared by every [`TenantFleet`] facade of one mux.
+struct MuxShared {
+    /// The shared fleet. A `Mutex` (not `RwLock`) because `WorkerFleet`
+    /// implementations are `Send` but not necessarily `Sync` (the pool's
+    /// task `Sender`s, for one); tenant dispatches therefore serialize at
+    /// this lock. Sends are channel pushes / small TCP writes, so the
+    /// critical section is short; `None` after the last facade shut down.
+    inner: Mutex<Option<Box<dyn WorkerFleet>>>,
+    /// Demux thread, joined by the last facade's shutdown.
+    demux: Mutex<Option<JoinHandle<()>>>,
+    /// Live facade count (the shutdown refcount).
+    facades: AtomicUsize,
+    /// Whether the inner fleet honors task-stamped fault fields (captured
+    /// at split time; forwarded by every facade).
+    task_faults: bool,
+}
+
+/// Splits one [`WorkerFleet`] into per-tenant facades. This is a
+/// constructor-only type: [`FleetMux::split`] consumes the fleet and
+/// returns the facades.
+pub struct FleetMux;
+
+impl FleetMux {
+    /// Split `inner` into `tenants` facades. Takes the fleet's reply
+    /// stream and spawns the demux thread; fleet-level metrics (worker
+    /// churn, injection counts) should be attached to `inner` *before*
+    /// splitting — per-tenant `attach_metrics` on a facade is a no-op,
+    /// because one fleet cannot report its churn into several tenants'
+    /// counters without multi-counting.
+    pub fn split(mut inner: Box<dyn WorkerFleet>, tenants: usize) -> Result<Vec<TenantFleet>> {
+        if tenants == 0 {
+            bail!("fleet mux needs at least one tenant");
+        }
+        if tenants > MAX_TENANTS {
+            bail!("fleet mux supports at most {MAX_TENANTS} tenants, got {tenants}");
+        }
+        let Some(replies) = inner.take_replies() else {
+            bail!("fleet reply stream already taken; cannot mux a routed fleet");
+        };
+        let mut txs: Vec<Sender<WorkerReply>> = Vec::with_capacity(tenants);
+        let mut rxs: Vec<Receiver<WorkerReply>> = Vec::with_capacity(tenants);
+        for _ in 0..tenants {
+            let (tx, rx) = channel();
+            txs.push(tx);
+            rxs.push(rx);
+        }
+        let demux = std::thread::Builder::new()
+            .name("fleet-demux".into())
+            .spawn(move || {
+                // Exits when the inner fleet disconnects the reply stream
+                // (its shutdown path), which the last facade triggers.
+                while let Ok(mut reply) = replies.recv() {
+                    let tenant = tenant_of(reply.group) as usize;
+                    let Some(tx) = txs.get(tenant) else {
+                        // A worker echoed a tag no tenant owns — only
+                        // possible with a corrupted remote reply.
+                        log::warn!(
+                            "dropping reply for unknown tenant tag {tenant} \
+                             (group {:#x})",
+                            reply.group
+                        );
+                        continue;
+                    };
+                    reply.group = untag_group(reply.group);
+                    // A tenant whose service already shut down just drops
+                    // its replies; the other tenants keep serving.
+                    let _ = tx.send(reply);
+                }
+            })
+            .map_err(|e| anyhow::anyhow!("spawning fleet demux thread: {e}"))?;
+        let shared = Arc::new(MuxShared {
+            task_faults: inner.supports_task_faults(),
+            inner: Mutex::new(Some(inner)),
+            demux: Mutex::new(Some(demux)),
+            facades: AtomicUsize::new(tenants),
+        });
+        Ok(rxs
+            .into_iter()
+            .enumerate()
+            .map(|(t, rx)| TenantFleet {
+                shared: shared.clone(),
+                tenant: t as u8,
+                replies: Some(rx),
+            })
+            .collect())
+    }
+}
+
+/// One tenant's view of the shared fleet: tags outgoing group ids, yields
+/// the tenant's demuxed reply stream, and forwards everything else.
+pub struct TenantFleet {
+    shared: Arc<MuxShared>,
+    tenant: u8,
+    replies: Option<Receiver<WorkerReply>>,
+}
+
+impl TenantFleet {
+    /// The tenant tag this facade stamps onto group ids.
+    pub fn tenant(&self) -> u8 {
+        self.tenant
+    }
+}
+
+impl WorkerFleet for TenantFleet {
+    fn num_workers(&self) -> usize {
+        // Forwarded live, not cached: spare admission can widen the inner
+        // fleet after the mux was split.
+        self.shared.inner.lock().unwrap().as_ref().map_or(0, |f| f.num_workers())
+    }
+
+    fn send(&self, worker: usize, mut task: WorkerTask) -> Result<()> {
+        task.group = tag_group(self.tenant, task.group);
+        match self.shared.inner.lock().unwrap().as_ref() {
+            Some(f) => f.send(worker, task),
+            None => bail!("fleet mux has shut down"),
+        }
+    }
+
+    fn take_replies(&mut self) -> Option<Receiver<WorkerReply>> {
+        self.replies.take()
+    }
+
+    fn attach_metrics(&self, _metrics: Arc<ServingMetrics>) {
+        // Fleet-level churn/injection counters belong to the shared fleet
+        // and are attached before the split; counting them into one
+        // tenant's metrics would misattribute shared events.
+    }
+
+    fn supports_task_faults(&self) -> bool {
+        self.shared.task_faults
+    }
+
+    fn admit_spares(&self) -> usize {
+        self.shared.inner.lock().unwrap().as_ref().map_or(0, |f| f.admit_spares())
+    }
+
+    fn shutdown(self: Box<Self>) {
+        if self.shared.facades.fetch_sub(1, Ordering::AcqRel) != 1 {
+            return; // other tenants still serving
+        }
+        // Last facade out: stop the shared fleet (disconnecting the reply
+        // stream, which ends the demux thread) and join the demuxer.
+        if let Some(inner) = self.shared.inner.lock().unwrap().take() {
+            inner.shutdown();
+        }
+        if let Some(h) = self.shared.demux.lock().unwrap().take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workers::engine::{InferenceEngine, LinearMockEngine};
+    use crate::workers::pool::{WorkerPool, WorkerSpec};
+    use crate::coding::block::RowView;
+    use std::time::Duration;
+
+    #[test]
+    fn tag_roundtrip_preserves_both_halves() {
+        for tenant in [0u8, 1, 7, 255] {
+            for group in [0u64, 1, 41, GROUP_MASK] {
+                let tagged = tag_group(tenant, group);
+                assert_eq!(tenant_of(tagged), tenant);
+                assert_eq!(untag_group(tagged), group);
+            }
+        }
+        // Tagging masks an overflowing local counter instead of leaking
+        // into the tenant bits.
+        assert_eq!(tenant_of(tag_group(3, u64::MAX)), 3);
+    }
+
+    fn two_tenant_pool() -> Box<dyn WorkerFleet> {
+        // Tenant 0's model has 3 classes, tenant 1's has 5 — reply width
+        // proves which engine served a task.
+        let engines: Vec<Arc<dyn InferenceEngine>> = vec![
+            Arc::new(LinearMockEngine::new(8, 3)),
+            Arc::new(LinearMockEngine::new(8, 5)),
+        ];
+        Box::new(WorkerPool::spawn_multi(engines, &vec![WorkerSpec::default(); 3], 42, None))
+    }
+
+    #[test]
+    fn facades_route_replies_to_their_tenant_with_tags_stripped() {
+        let mut facades = FleetMux::split(two_tenant_pool(), 2).unwrap();
+        let mut f1 = facades.pop().unwrap();
+        let mut f0 = facades.pop().unwrap();
+        let r0 = f0.take_replies().unwrap();
+        let r1 = f1.take_replies().unwrap();
+        let payload = RowView::from_vec(vec![0.1; 8]);
+        for w in 0..3 {
+            let task = |group| WorkerTask {
+                group,
+                payload: payload.clone(),
+                extra_delay: Duration::ZERO,
+                corrupt: None,
+            };
+            f0.send(w, task(7)).unwrap();
+            f1.send(w, task(7)).unwrap();
+        }
+        for _ in 0..3 {
+            let a = r0.recv_timeout(Duration::from_secs(5)).unwrap();
+            assert_eq!(a.group, 7, "tenant 0 sees its untagged group id");
+            assert_eq!(a.result.unwrap().len(), 3, "tenant 0's engine replied");
+            let b = r1.recv_timeout(Duration::from_secs(5)).unwrap();
+            assert_eq!(b.group, 7, "same local id, different tenant — no crosstalk");
+            assert_eq!(b.result.unwrap().len(), 5, "tenant 1's engine replied");
+        }
+        Box::new(f0).shutdown();
+        Box::new(f1).shutdown(); // last facade shuts the pool + demuxer down
+    }
+
+    #[test]
+    fn facade_forwards_fleet_surface() {
+        let facades = FleetMux::split(two_tenant_pool(), 2).unwrap();
+        assert_eq!(facades.len(), 2);
+        for (t, f) in facades.iter().enumerate() {
+            assert_eq!(f.tenant() as usize, t);
+            assert_eq!(WorkerFleet::num_workers(f), 3);
+            assert!(f.supports_task_faults(), "pool honors task-stamped faults");
+            assert_eq!(f.admit_spares(), 0, "pools have fixed membership");
+        }
+        for f in facades {
+            Box::new(f).shutdown();
+        }
+    }
+
+    #[test]
+    fn tenant_count_bounds_are_enforced() {
+        assert!(FleetMux::split(two_tenant_pool(), 0).is_err());
+        assert!(FleetMux::split(two_tenant_pool(), MAX_TENANTS + 1).is_err());
+    }
+
+    #[test]
+    fn out_of_table_tenant_tag_resolves_as_error_reply() {
+        // A single-engine pool receiving a task tagged tenant 5: the
+        // worker must answer with an error reply (absorbed by the collect
+        // quota), never panic or mis-serve through engine 0.
+        let engine: Arc<dyn InferenceEngine> = Arc::new(LinearMockEngine::new(8, 3));
+        let pool = WorkerPool::spawn_multi(vec![engine], &[WorkerSpec::default()], 1, None);
+        pool.send(
+            0,
+            WorkerTask {
+                group: tag_group(5, 9),
+                payload: RowView::from_vec(vec![0.2; 8]),
+                extra_delay: Duration::ZERO,
+                corrupt: None,
+            },
+        )
+        .unwrap();
+        let reply = pool.recv_timeout(Duration::from_secs(5)).unwrap();
+        let err = reply.result.unwrap_err();
+        assert!(err.contains("no engine for tenant tag 5"), "{err}");
+        pool.shutdown();
+    }
+}

@@ -125,6 +125,22 @@ impl WorkerPool {
         seed: u64,
         metrics: Option<Arc<ServingMetrics>>,
     ) -> WorkerPool {
+        WorkerPool::spawn_multi(vec![engine], specs, seed, metrics)
+    }
+
+    /// Spawn workers each holding one engine **per tenant**: a task's
+    /// engine is selected by the tenant tag in its group id (see
+    /// [`crate::workers::mux::tenant_of`]). Untenanted deployments tag 0,
+    /// so `spawn_with_metrics` is exactly `spawn_multi` with one engine.
+    /// A task tagged past the engine table resolves as an error reply —
+    /// the router's quota logic absorbs it like any other worker fault.
+    pub fn spawn_multi(
+        engines: Vec<Arc<dyn InferenceEngine>>,
+        specs: &[WorkerSpec],
+        seed: u64,
+        metrics: Option<Arc<ServingMetrics>>,
+    ) -> WorkerPool {
+        assert!(!engines.is_empty(), "worker pool needs at least one engine");
         let (reply_tx, replies) = channel::<WorkerReply>();
         let stop = Arc::new(AtomicBool::new(false));
         let mut senders = Vec::with_capacity(specs.len());
@@ -133,7 +149,7 @@ impl WorkerPool {
         for (worker_id, spec) in specs.iter().enumerate() {
             let (tx, rx) = channel::<WorkerTask>();
             senders.push(tx);
-            let engine = engine.clone();
+            let engines = engines.clone();
             let reply_tx = reply_tx.clone();
             let spec = spec.clone();
             let mut rng = root.fork(worker_id as u64);
@@ -167,10 +183,17 @@ impl WorkerPool {
                         if !service.is_zero() {
                             std::thread::sleep(service);
                         }
+                        let tag = super::mux::tenant_of(task.group) as usize;
                         let result = if fail {
                             Err(format!("worker {worker_id}: injected intermittent fault"))
+                        } else if tag >= engines.len() {
+                            Err(format!(
+                                "worker {worker_id}: no engine for tenant tag {tag} \
+                                 (hosting {})",
+                                engines.len()
+                            ))
                         } else {
-                            engine
+                            engines[tag]
                                 .infer1(&task.payload)
                                 .map(|mut logits| {
                                     // One reply counts once even when both
@@ -282,6 +305,12 @@ impl super::fleet::WorkerFleet for WorkerPool {
     fn attach_metrics(&self, _metrics: Arc<ServingMetrics>) {
         // The pool is constructed with its metric set
         // ([`WorkerPool::spawn_with_metrics`]); nothing to replay.
+    }
+
+    fn supports_task_faults(&self) -> bool {
+        // The task loop executes `corrupt`/`extra_delay` stamped by the
+        // dispatcher's fault hook.
+        true
     }
 
     fn shutdown(self: Box<Self>) {

@@ -32,7 +32,7 @@
 
 use std::collections::HashMap;
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -56,6 +56,11 @@ pub struct FleetConfig {
     pub bind: String,
     /// Slot count; `None` sizes the fleet to the scheme's worker need.
     pub workers: Option<usize>,
+    /// Spare slots past the dispatched range: a late worker may claim one
+    /// and park there; it is admitted into the dispatched range at the
+    /// next `Reconfigure` epoch boundary (see
+    /// [`WorkerFleet::admit_spares`]) instead of being rejected outright.
+    pub spare_slots: usize,
     /// Expected heartbeat period (workers should ping at least this often).
     pub heartbeat: Duration,
     /// Consecutive silent heartbeat windows before a live slot is evicted.
@@ -67,6 +72,7 @@ impl Default for FleetConfig {
         FleetConfig {
             bind: "127.0.0.1:7800".into(),
             workers: None,
+            spare_slots: 0,
             heartbeat: Duration::from_millis(500),
             miss_threshold: 3,
         }
@@ -89,6 +95,8 @@ pub struct FleetSnapshot {
     pub heartbeats: u64,
     /// Slots currently live.
     pub live: u64,
+    /// Spare slots admitted into the dispatched range at epoch boundaries.
+    pub spares_admitted: u64,
 }
 
 /// Per-slot connection state. `generation` increments on every join and
@@ -106,6 +114,10 @@ struct Slot {
 
 struct Shared {
     slots: Vec<Mutex<Slot>>,
+    /// Dispatched slot range: the coordinator fans out over slots
+    /// `0..admitted`. Starts at the base slot count; grows (never past
+    /// `slots.len()`) when parked spares are admitted at an epoch boundary.
+    admitted: AtomicUsize,
     reply_tx: Sender<WorkerReply>,
     stop: AtomicBool,
     heartbeat: Duration,
@@ -118,6 +130,7 @@ struct Shared {
     leaves: AtomicU64,
     heartbeats: AtomicU64,
     live: AtomicU64,
+    spares_admitted: AtomicU64,
     /// Service metric set, once attached. The lock also serializes stat
     /// updates against [`Shared::attach`]'s replay so totals never skew.
     metrics: Mutex<Option<Arc<ServingMetrics>>>,
@@ -133,6 +146,7 @@ impl Shared {
         metrics.fleet_evictions.add(self.evictions.load(Ordering::Relaxed));
         metrics.fleet_leaves.add(self.leaves.load(Ordering::Relaxed));
         metrics.fleet_heartbeats.add(self.heartbeats.load(Ordering::Relaxed));
+        metrics.fleet_spares_admitted.add(self.spares_admitted.load(Ordering::Relaxed));
         metrics.fleet_live.set(self.live.load(Ordering::Relaxed));
         *m = Some(metrics);
     }
@@ -228,6 +242,7 @@ impl Shared {
             leaves: self.leaves.load(Ordering::Relaxed),
             heartbeats: self.heartbeats.load(Ordering::Relaxed),
             live: self.live.load(Ordering::Relaxed),
+            spares_admitted: self.spares_admitted.load(Ordering::Relaxed),
         }
     }
 }
@@ -276,18 +291,22 @@ pub struct RemoteFleet {
 
 impl RemoteFleet {
     /// Bind the join listener and start accepting workers for `slots`
-    /// slots. Workers may join immediately — before the `Service` exists;
-    /// churn counted in that window is replayed into the service metrics
-    /// at attach time.
+    /// dispatched slots plus `cfg.spare_slots` parked spares. Workers may
+    /// join immediately — before the `Service` exists; churn counted in
+    /// that window is replayed into the service metrics at attach time. A
+    /// spare slot accepts joins from the start but stays outside the
+    /// dispatched range (`num_workers`) until [`WorkerFleet::admit_spares`]
+    /// runs at an epoch boundary.
     pub fn bind(cfg: &FleetConfig, slots: usize) -> Result<RemoteFleet> {
         anyhow::ensure!(slots > 0, "a fleet needs at least one slot");
+        let total = slots + cfg.spare_slots;
         let listener =
             TcpListener::bind(&cfg.bind).with_context(|| format!("binding fleet on {}", cfg.bind))?;
         let addr = listener.local_addr()?;
         listener.set_nonblocking(true)?;
         let (reply_tx, replies) = channel::<WorkerReply>();
         let shared = Arc::new(Shared {
-            slots: (0..slots)
+            slots: (0..total)
                 .map(|_| {
                     Mutex::new(Slot {
                         conn: None,
@@ -298,6 +317,7 @@ impl RemoteFleet {
                     })
                 })
                 .collect(),
+            admitted: AtomicUsize::new(slots),
             reply_tx,
             stop: AtomicBool::new(false),
             heartbeat: cfg.heartbeat,
@@ -308,6 +328,7 @@ impl RemoteFleet {
             leaves: AtomicU64::new(0),
             heartbeats: AtomicU64::new(0),
             live: AtomicU64::new(0),
+            spares_admitted: AtomicU64::new(0),
             metrics: Mutex::new(None),
             readers: Mutex::new(Vec::new()),
         });
@@ -440,7 +461,10 @@ impl Drop for RemoteFleet {
 
 impl WorkerFleet for RemoteFleet {
     fn num_workers(&self) -> usize {
-        self.shared.slots.len()
+        // The *dispatched* range, not the allocated one: parked spares
+        // stay invisible to the coordinator until an epoch boundary
+        // admits them.
+        self.shared.admitted.load(Ordering::Relaxed)
     }
 
     fn send(&self, worker: usize, task: WorkerTask) -> Result<()> {
@@ -481,6 +505,37 @@ impl WorkerFleet for RemoteFleet {
 
     fn attach_metrics(&self, metrics: Arc<ServingMetrics>) {
         self.shared.attach(metrics);
+    }
+
+    fn admit_spares(&self) -> usize {
+        // Widen the dispatched range over the longest contiguous run of
+        // *live* parked spares. Contiguity matters: admitting slot
+        // `admitted + 1` past an empty `admitted` would make the empty
+        // slot a permanent error-reply source in every fan-out.
+        let mut admitted = self.shared.admitted.load(Ordering::Relaxed);
+        let before = admitted;
+        while admitted < self.shared.slots.len() {
+            let slot = self.shared.slots[admitted].lock().unwrap();
+            if slot.conn.is_none() {
+                break;
+            }
+            admitted += 1;
+        }
+        let newly = admitted - before;
+        if newly > 0 {
+            self.shared.admitted.store(admitted, Ordering::Relaxed);
+            log::info!(
+                "fleet: admitted {newly} spare worker(s) at epoch boundary \
+                 (dispatched range now {admitted})"
+            );
+            self.shared.record(
+                |s| {
+                    s.spares_admitted.fetch_add(newly as u64, Ordering::Relaxed);
+                },
+                |m| m.fleet_spares_admitted.add(newly as u64),
+            );
+        }
+        newly
     }
 
     fn shutdown(mut self: Box<Self>) {
@@ -619,6 +674,7 @@ mod tests {
         FleetConfig {
             bind: "127.0.0.1:0".into(),
             workers: None,
+            spare_slots: 0,
             heartbeat: Duration::from_millis(100),
             // Tall threshold: these tests exercise join/leave/dispatch, not
             // eviction timing.
@@ -739,6 +795,7 @@ mod tests {
         let cfg = FleetConfig {
             bind: "127.0.0.1:0".into(),
             workers: None,
+            spare_slots: 0,
             heartbeat: Duration::from_millis(30),
             miss_threshold: 3,
         };
@@ -753,6 +810,52 @@ mod tests {
         let snap = fleet.snapshot();
         assert_eq!(snap.evictions, 1, "{snap:?}");
         assert_eq!(snap.live, 0);
+    }
+
+    #[test]
+    fn spare_worker_parks_until_epoch_admission() {
+        let cfg = FleetConfig { spare_slots: 2, ..test_cfg() };
+        let fleet = RemoteFleet::bind(&cfg, 2).unwrap();
+        assert_eq!(WorkerFleet::num_workers(&fleet), 2, "spares start undispatched");
+
+        // A worker joining the first spare slot is accepted — not rejected
+        // as out of range — but the dispatched range stays put.
+        let _spare = fake_worker(fleet.addr(), 2);
+        assert!(fleet.wait_for_workers(1, Duration::from_secs(5)));
+        assert_eq!(WorkerFleet::num_workers(&fleet), 2);
+
+        // The epoch boundary admits the live spare; the empty second spare
+        // slot stays parked (contiguity rule).
+        assert_eq!(fleet.admit_spares(), 1);
+        assert_eq!(WorkerFleet::num_workers(&fleet), 3);
+        assert_eq!(fleet.snapshot().spares_admitted, 1);
+
+        // Idempotent with no new joiners.
+        assert_eq!(fleet.admit_spares(), 0);
+        assert_eq!(WorkerFleet::num_workers(&fleet), 3);
+
+        // Joins past the allocated spares are still rejected.
+        let mut s = TcpStream::connect(fleet.addr()).unwrap();
+        write_frame(&mut s, OP_HELLO, 4, &[]).unwrap();
+        let resp = read_frame(&mut s).unwrap();
+        assert_eq!(resp.head, ST_ERR);
+    }
+
+    #[test]
+    fn non_contiguous_spare_is_not_admitted() {
+        let cfg = FleetConfig { spare_slots: 2, ..test_cfg() };
+        let fleet = RemoteFleet::bind(&cfg, 1).unwrap();
+        // Only the *second* spare slot joins: admitting it would leave the
+        // empty first spare inside the fan-out range, so nothing happens.
+        let _spare = fake_worker(fleet.addr(), 2);
+        assert!(fleet.wait_for_workers(1, Duration::from_secs(5)));
+        assert_eq!(fleet.admit_spares(), 0);
+        assert_eq!(WorkerFleet::num_workers(&fleet), 1);
+        // Once the gap fills, both spares admit in one boundary.
+        let _gap = fake_worker(fleet.addr(), 1);
+        assert!(fleet.wait_for_workers(2, Duration::from_secs(5)));
+        assert_eq!(fleet.admit_spares(), 2);
+        assert_eq!(WorkerFleet::num_workers(&fleet), 3);
     }
 
     #[test]

@@ -77,6 +77,7 @@ fn killed_worker_mid_group_completes_and_reconnect_counts() {
         &FleetConfig {
             bind: "127.0.0.1:0".into(),
             workers: None,
+            spare_slots: 0,
             heartbeat: Duration::from_millis(100),
             miss_threshold: 100,
         },
@@ -164,6 +165,7 @@ fn silent_worker_is_evicted_by_heartbeat_misses() {
         &FleetConfig {
             bind: "127.0.0.1:0".into(),
             workers: None,
+            spare_slots: 0,
             heartbeat: Duration::from_millis(60),
             miss_threshold: 3,
         },
@@ -209,6 +211,7 @@ fn unjoined_fleet_fails_groups_fast_instead_of_hanging() {
         &FleetConfig {
             bind: "127.0.0.1:0".into(),
             workers: None,
+            spare_slots: 0,
             heartbeat: Duration::from_millis(200),
             miss_threshold: 100,
         },

@@ -1,0 +1,335 @@
+//! Multi-tenant serving integration: two schemes sharing one worker
+//! fleet, Byzantine-neighbor isolation (the headline property of the
+//! fairness scheduler's in-flight budgets), and the per-tenant + global
+//! accounting invariant under admission-gate shedding.
+
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use approxifer::coding::CodeParams;
+use approxifer::coordinator::{
+    AdaptiveConfig, FaultPlan, Strategy, TenantRegistry, TenantSpec, VerifyPolicy,
+};
+use approxifer::workers::{
+    ByzantineMode, DelayMockEngine, InferenceEngine, LinearMockEngine, WorkerPool, WorkerSpec,
+};
+
+const D: usize = 6;
+
+fn query(i: usize) -> Vec<f32> {
+    (0..D).map(|t| ((i as f32) * 0.19 + (t as f32) * 0.023).sin()).collect()
+}
+
+/// A shared pool hosting both tenants' models: slot 0 = alpha's engine,
+/// slot 1 = beta's, selected per task by the tenant tag in the group id.
+fn shared_pool(
+    engines: Vec<Arc<dyn InferenceEngine>>,
+    workers: usize,
+    seed: u64,
+) -> WorkerPool {
+    WorkerPool::spawn_multi(engines, &vec![WorkerSpec::default(); workers], seed, None)
+}
+
+fn spec(name: &str, params: CodeParams) -> TenantSpec {
+    TenantSpec {
+        name: name.into(),
+        strategy: Strategy::ApproxIfer,
+        params,
+        batch_deadline: Duration::from_millis(2),
+        ..TenantSpec::default()
+    }
+}
+
+#[test]
+fn two_schemes_serve_concurrently_and_accurately_over_one_fleet() {
+    let alpha_engine = Arc::new(LinearMockEngine::new(D, 3));
+    let beta_engine = Arc::new(LinearMockEngine::new(D, 5));
+    // alpha (2,1,0) needs 3 workers, beta (4,1,0) needs 5: the fleet is
+    // sized for the largest tenant and shared by both.
+    let pool = shared_pool(vec![alpha_engine.clone(), beta_engine.clone()], 5, 17);
+    let registry = TenantRegistry::spawn(
+        Box::new(pool),
+        vec![spec("alpha", CodeParams::new(2, 1, 0)), spec("beta", CodeParams::new(4, 1, 0))],
+        4,
+    )
+    .unwrap();
+
+    let alpha = registry.tenants()[0].service.clone();
+    let beta = registry.tenants()[1].service.clone();
+    let alpha_thread = std::thread::spawn(move || {
+        let handles: Vec<_> = (0..20).map(|i| alpha.submit(query(i))).collect();
+        handles
+            .into_iter()
+            .map(|h| h.wait_timeout(Duration::from_secs(20)).expect("alpha served").to_vec())
+            .collect::<Vec<_>>()
+    });
+    let beta_preds: Vec<Vec<f32>> = {
+        let handles: Vec<_> = (0..20).map(|i| beta.submit(query(i))).collect();
+        handles
+            .into_iter()
+            .map(|h| h.wait_timeout(Duration::from_secs(20)).expect("beta served").to_vec())
+            .collect()
+    };
+    let alpha_preds = alpha_thread.join().unwrap();
+
+    // Each tenant's answers come from *its* model — right width, right
+    // values (Berrut decode is approximate, hence the tolerance).
+    for (i, p) in alpha_preds.iter().enumerate() {
+        let want = alpha_engine.infer1(&query(i)).unwrap();
+        assert_eq!(p.len(), 3, "alpha prediction width");
+        for (a, b) in want.iter().zip(p) {
+            assert!((a - b).abs() < 0.3, "alpha query {i}: {a} vs {b}");
+        }
+    }
+    for (i, p) in beta_preds.iter().enumerate() {
+        let want = beta_engine.infer1(&query(i)).unwrap();
+        assert_eq!(p.len(), 5, "beta prediction width");
+        for (a, b) in want.iter().zip(p) {
+            assert!((a - b).abs() < 0.3, "beta query {i}: {a} vs {b}");
+        }
+    }
+    let grants = registry.scheduler().grants();
+    assert!(grants[0] > 0 && grants[1] > 0, "both tenants dispatched: {grants:?}");
+    registry.assert_balanced().unwrap();
+    drop(beta);
+    registry.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Byzantine-neighbor isolation
+// ---------------------------------------------------------------------------
+
+/// Everything observable about tenant B after a run: its predictions, its
+/// accounting counters and its adaptive `(S, E)` operating point.
+struct BRun {
+    preds: Vec<Vec<f32>>,
+    accounting: approxifer::coordinator::Accounting,
+    s: u64,
+    e: u64,
+    max_latency: Duration,
+}
+
+/// Serve tenant B's fixed closed-loop workload over the shared fleet,
+/// with or without a Byzantine neighbor (tenant A under a byz-random
+/// fault hook) hammering the same workers concurrently.
+///
+/// Determinism notes, because the comparison below is `==` on floats:
+/// * B's code points have `S = 0`, so every group's collection quota is
+///   the *full* dispatch set — the decode always sees the same worker
+///   subset, not a timing-dependent "fastest" one.
+/// * B's groups are phase-gated on the adaptive gauge: 4 groups fill the
+///   observation window at E=1, then the run waits for the controller's
+///   shed-to-0 epoch to land before serving the last 2 — so each group's
+///   epoch (and hence its decode geometry) is pinned, not racing the
+///   asynchronous reconfigure hand-off.
+fn run_b(with_byz_neighbor: bool) -> BRun {
+    let engines: Vec<Arc<dyn InferenceEngine>> =
+        vec![Arc::new(LinearMockEngine::new(D, 3)), Arc::new(LinearMockEngine::new(D, 5))];
+    // A (2,1,1) needs 7 workers; B (4,0,1) needs 10. B runs adaptive with
+    // verification so its (S, E) gauges are live state, not constants.
+    let pool = shared_pool(engines, 10, 42);
+    let mut spec_a = spec("alpha", CodeParams::new(2, 1, 1));
+    spec_a.verify = VerifyPolicy::on(0.4);
+    let mut spec_b = spec("beta", CodeParams::new(4, 0, 1));
+    spec_b.verify = VerifyPolicy::on(0.4);
+    spec_b.adaptive = Some(AdaptiveConfig { window: 4, cooldown: 1, ..Default::default() });
+    let registry = TenantRegistry::spawn_with(
+        Box::new(pool),
+        vec![spec_a, spec_b],
+        8,
+        |i, b| {
+            if i == 0 {
+                // Tenant A's dispatches corrupt worker 0 every group. The
+                // hook is per-service: only A's groups carry the fault.
+                b.fault_hook(Arc::new(|_g| FaultPlan {
+                    byzantine: vec![0],
+                    byz_mode: Some(ByzantineMode::GaussianNoise { sigma: 10.0 }),
+                    ..FaultPlan::none()
+                }))
+            } else {
+                b
+            }
+        },
+    )
+    .unwrap();
+
+    let a_thread = with_byz_neighbor.then(|| {
+        let svc = registry.tenants()[0].service.clone();
+        std::thread::spawn(move || {
+            let handles: Vec<_> = (0..12).map(|i| svc.submit(query(100 + i))).collect();
+            for h in handles {
+                // A's answers may be degraded under its own corruption;
+                // they must still all resolve.
+                let _ = h.wait_timeout(Duration::from_secs(30)).expect("alpha resolved");
+            }
+        })
+    });
+
+    let svc_b = registry.tenants()[1].service.clone();
+    let mut preds = Vec::new();
+    let mut max_latency = Duration::ZERO;
+    let mut serve_groups = |range: std::ops::Range<usize>| {
+        for g in range {
+            let t0 = Instant::now();
+            let handles: Vec<_> = (0..4).map(|j| svc_b.submit(query(g * 4 + j))).collect();
+            for h in handles {
+                preds
+                    .push(h.wait_timeout(Duration::from_secs(30)).expect("beta served").to_vec());
+            }
+            max_latency = max_latency.max(t0.elapsed());
+        }
+    };
+    // Phase 1: one full observation window at the provisioned E=1.
+    serve_groups(0..4);
+    // B is honest, so one calm window (cooldown 1) sheds the unused
+    // Byzantine budget; wait out the asynchronous epoch hand-off so
+    // phase 2 runs entirely at E=0.
+    for _ in 0..400 {
+        if svc_b.metrics.current_e.get() == 0 {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    assert_eq!(svc_b.metrics.current_e.get(), 0, "B's controller never shed E");
+    // Phase 2: the post-shed epoch.
+    serve_groups(4..6);
+    if let Some(t) = a_thread {
+        t.join().unwrap();
+    }
+    registry.assert_balanced().unwrap();
+    let out = BRun {
+        preds,
+        accounting: registry.accounting(1),
+        s: svc_b.metrics.current_s.get(),
+        e: svc_b.metrics.current_e.get(),
+        max_latency,
+    };
+    drop(svc_b);
+    registry.shutdown();
+    out
+}
+
+#[test]
+fn byzantine_neighbor_leaves_an_honest_tenant_bit_identical() {
+    let alone = run_b(false);
+    let shared = run_b(true);
+
+    // The isolation contract: everything deterministic about B — its
+    // decoded predictions, its query accounting and its adaptive (S, E)
+    // operating point — is bit-identical whether or not a Byzantine
+    // neighbor shares the fleet. Wall-clock latency is the one axis that
+    // cannot be bit-identical (B shares physical workers with A), so the
+    // tail is bounded loosely instead: the fairness budget keeps B's
+    // groups flowing, it does not freeze the clock.
+    assert_eq!(alone.preds.len(), shared.preds.len());
+    for (i, (a, b)) in alone.preds.iter().zip(&shared.preds).enumerate() {
+        assert_eq!(a, b, "B's prediction {i} changed under a Byzantine neighbor");
+    }
+    assert_eq!(alone.accounting, shared.accounting, "B's accounting changed");
+    assert_eq!((alone.s, alone.e), (shared.s, shared.e), "B's (S, E) changed");
+    assert_eq!(shared.accounting.received, 24);
+    assert_eq!(shared.accounting.served, 24, "honest B must serve everything");
+    assert!(
+        shared.max_latency < Duration::from_secs(10),
+        "B's worst group took {:?} next to a Byzantine neighbor",
+        shared.max_latency
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Accounting under shed + fairness under flood
+// ---------------------------------------------------------------------------
+
+#[test]
+fn accounting_balances_per_tenant_and_globally_under_shedding() {
+    let engines: Vec<Arc<dyn InferenceEngine>> =
+        vec![Arc::new(LinearMockEngine::new(D, 3)), Arc::new(LinearMockEngine::new(D, 5))];
+    let pool = shared_pool(engines, 5, 23);
+    let mut spec_a = spec("alpha", CodeParams::new(2, 1, 0));
+    // A tiny admission queue: an open-loop flood must overflow it, and
+    // every overflow victim still lands in exactly one terminal class.
+    spec_a.queue_depth = Some(4);
+    let spec_b = spec("beta", CodeParams::new(4, 1, 0));
+    let registry =
+        TenantRegistry::spawn(Box::new(pool), vec![spec_a, spec_b], 4).unwrap();
+
+    let (tx, rx) = channel();
+    let alpha = &registry.tenants()[0].service;
+    for i in 0..200u64 {
+        alpha.submit_tagged(i, query(i as usize), tx.clone());
+    }
+    drop(tx);
+    let mut answered = 0;
+    while rx.recv().is_ok() {
+        answered += 1;
+    }
+    assert_eq!(answered, 200, "every open-loop submission resolves exactly once");
+
+    let beta = &registry.tenants()[1].service;
+    let handles: Vec<_> = (0..8).map(|i| beta.submit(query(i))).collect();
+    for h in handles {
+        h.wait_timeout(Duration::from_secs(20)).expect("beta served");
+    }
+
+    let a = registry.accounting(0);
+    assert_eq!(a.received, 200);
+    assert!(a.rejected > 0 || a.shed > 0, "the flood must overflow queue_depth=4: {a:?}");
+    assert!(a.balanced(), "{a:?}");
+    let g = registry.global_accounting();
+    assert_eq!(g.received, 208);
+    registry.assert_balanced().unwrap();
+    registry.shutdown();
+}
+
+#[test]
+fn a_flooding_tenant_cannot_starve_its_neighbor() {
+    // Alpha's model is slow (2ms/task) and alpha floods open-loop with 8×
+    // beta's weight; the shared capacity (3) is below the summed budgets,
+    // so every dispatch is contended. Beta's closed-loop groups must still
+    // flow: the in-flight budget caps alpha at 2 slots, leaving one for
+    // beta whenever it asks.
+    let engines: Vec<Arc<dyn InferenceEngine>> = vec![
+        Arc::new(DelayMockEngine::new(D, 3, Duration::from_millis(2))),
+        Arc::new(LinearMockEngine::new(D, 5)),
+    ];
+    let pool = shared_pool(engines, 5, 31);
+    let mut spec_a = spec("alpha", CodeParams::new(2, 1, 0));
+    spec_a.weight = 8;
+    spec_a.budget = 2;
+    let mut spec_b = spec("beta", CodeParams::new(4, 1, 0));
+    spec_b.weight = 1;
+    spec_b.budget = 2;
+    let registry =
+        TenantRegistry::spawn(Box::new(pool), vec![spec_a, spec_b], 3).unwrap();
+
+    let alpha = registry.tenants()[0].service.clone();
+    let flood = std::thread::spawn(move || {
+        let (tx, rx) = channel();
+        for i in 0..300u64 {
+            alpha.submit_tagged(i, query(i as usize), tx.clone());
+        }
+        drop(tx);
+        while rx.recv().is_ok() {}
+    });
+
+    let beta = &registry.tenants()[1].service;
+    let t0 = Instant::now();
+    for g in 0..10 {
+        let handles: Vec<_> = (0..4).map(|j| beta.submit(query(g * 4 + j))).collect();
+        for h in handles {
+            h.wait_timeout(Duration::from_secs(20))
+                .expect("beta starved behind the flooding tenant");
+        }
+    }
+    let beta_wall = t0.elapsed();
+    flood.join().unwrap();
+    assert!(
+        beta_wall < Duration::from_secs(15),
+        "beta's 10 groups took {beta_wall:?} behind the flood"
+    );
+    let grants = registry.scheduler().grants();
+    assert!(grants[1] >= 10, "beta got {} grants", grants[1]);
+    registry.assert_balanced().unwrap();
+    registry.shutdown();
+}
