@@ -16,8 +16,8 @@ use std::time::{Duration, Instant};
 
 use approxifer::coding::linalg::{gemm_sweep, GemmSweepRow};
 use approxifer::coding::{
-    ApproxIferCode, BlockPool, CodeParams, GroupBlock, Replication, ServingScheme, Uncoded,
-    VerifyPolicy,
+    ApproxIferCode, BlockPool, CodeParams, GroupBlock, NerccCode, NerccParams, Replication,
+    ServingScheme, Uncoded, VerifyPolicy,
 };
 use approxifer::coordinator::Service;
 use approxifer::harness::latency::{drifting_comparison, DriftRow};
@@ -279,15 +279,16 @@ fn fault_profile_sweep(d: usize, c: usize, groups: usize) -> Vec<FaultRow> {
     rows
 }
 
-/// The scheme-agnostic engine's headline: ApproxIFER vs replication vs
-/// uncoded at a matched 10-worker fleet under the same bimodal tail, all
-/// through the identical `Service` stack. ApproxIFER serves K=9 per group
-/// on 10 workers; replication serves K=5 with 2 copies each; uncoded
-/// serves K=10 with no slack (and pays the full 10th-order-statistic
-/// tail).
+/// The scheme-agnostic engine's headline: ApproxIFER vs NeRCC vs
+/// replication vs uncoded at a matched 10-worker fleet under the same
+/// bimodal tail, all through the identical `Service` stack. ApproxIFER and
+/// NeRCC each serve K=9 per group on 10 workers (one straggler of slack);
+/// replication serves K=5 with 2 copies each; uncoded serves K=10 with no
+/// slack (and pays the full 10th-order-statistic tail).
 fn scheme_comparison_sweep(d: usize, c: usize, groups: usize) -> Vec<SchemeRow> {
     let schemes: Vec<Arc<dyn ServingScheme>> = vec![
         Arc::new(ApproxIferCode::new(CodeParams::new(9, 1, 0))),
+        Arc::new(NerccCode::new(NerccParams::new(9, 1, 0))),
         Arc::new(Replication::new(5, 1, 0)),
         Arc::new(Uncoded::new(10)),
     ];

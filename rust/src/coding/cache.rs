@@ -1,0 +1,216 @@
+//! Sharded read-mostly decode-matrix cache, shared by every coded scheme.
+//!
+//! Decode matrices are keyed by the sorted availability set: fastest-set
+//! patterns repeat under stable worker latency distributions, so decodes
+//! hit a precomputed matrix almost always. Hits take only one shard's read
+//! lock and bump an atomic heat counter; misses compute the matrix
+//! **off-lock** and adopt a racing thread's insert rather than
+//! double-inserting, so concurrent decode threads never serialize on a
+//! global mutex. When a shard overflows its capacity, the cold half is
+//! evicted (the triggering key is protected — it starts at zero hits and
+//! would otherwise rank among the coldest) and survivor heat is halved so
+//! stale hits age out instead of pinning entries forever.
+//!
+//! Each scheme instance owns its **own** cache ([`ApproxIferCode`] and
+//! [`NerccCode`] both embed one), so entries — and evictions — never cross
+//! scheme families even when a service interleaves decodes from both.
+//!
+//! [`ApproxIferCode`]: super::scheme::ApproxIferCode
+//! [`NerccCode`]: super::nercc::NerccCode
+
+use std::collections::hash_map::DefaultHasher;
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+
+/// Decode-matrix cache shards. Hit lookups take only a shard's read lock
+/// (hit counts are atomics), so concurrent decode threads never serialize
+/// on a global mutex; misses and the eviction pass write-lock one shard.
+const DECODE_CACHE_SHARDS: usize = 8;
+
+/// Decode-matrix cache capacity (total across shards). Fastest-set
+/// patterns repeat under stable worker latency distributions, but
+/// adversarial churn can touch arbitrarily many availability sets — cap
+/// the map and evict each shard's cold half when it fills.
+pub const DECODE_CACHE_CAP: usize = 4096;
+
+/// Per-shard capacity.
+const SHARD_CAP: usize = DECODE_CACHE_CAP / DECODE_CACHE_SHARDS;
+
+struct CacheEntry {
+    mat: Arc<Vec<f32>>,
+    /// Bumped under the shard's *read* lock — heat tracking without write
+    /// contention on the hit path.
+    hits: AtomicU64,
+}
+
+/// One scheme instance's memoized decode matrices, keyed by sorted
+/// availability set. See the module docs for the concurrency contract.
+pub struct DecodeMatrixCache {
+    shards: [RwLock<HashMap<Vec<usize>, CacheEntry>>; DECODE_CACHE_SHARDS],
+    /// Entries evicted so far; drained into `ServingMetrics` by the scheme
+    /// decode path ([`DecodeMatrixCache::take_evictions`]).
+    evictions: AtomicU64,
+}
+
+impl Default for DecodeMatrixCache {
+    fn default() -> Self {
+        DecodeMatrixCache::new()
+    }
+}
+
+impl DecodeMatrixCache {
+    /// An empty cache (no allocation beyond the shard array).
+    pub fn new() -> DecodeMatrixCache {
+        DecodeMatrixCache {
+            shards: std::array::from_fn(|_| RwLock::new(HashMap::new())),
+            evictions: AtomicU64::new(0),
+        }
+    }
+
+    /// Which shard an availability key lives in.
+    fn shard_of(avail: &[usize]) -> usize {
+        let mut h = DefaultHasher::new();
+        avail.hash(&mut h);
+        (h.finish() as usize) % DECODE_CACHE_SHARDS
+    }
+
+    /// Look up the decode matrix for `avail` (sorted unique worker
+    /// indices), building it with `build` on a miss. The build runs
+    /// off-lock; if a racing thread inserted first, its entry is adopted
+    /// so the cache keeps one canonical `Arc` per key.
+    pub fn get_or_build(
+        &self,
+        avail: &[usize],
+        build: impl FnOnce(&[usize]) -> Vec<f32>,
+    ) -> Arc<Vec<f32>> {
+        debug_assert!(avail.windows(2).all(|w| w[0] < w[1]), "avail must be sorted unique");
+        let shard = &self.shards[Self::shard_of(avail)];
+        if let Some(entry) = shard.read().unwrap().get(avail) {
+            entry.hits.fetch_add(1, Ordering::Relaxed);
+            return entry.mat.clone();
+        }
+        // Miss: build the matrix without holding any lock.
+        let mat = Arc::new(build(avail));
+        let len_after = {
+            let mut map = shard.write().unwrap();
+            match map.entry(avail.to_vec()) {
+                std::collections::hash_map::Entry::Occupied(e) => {
+                    e.get().hits.fetch_add(1, Ordering::Relaxed);
+                    return e.get().mat.clone();
+                }
+                std::collections::hash_map::Entry::Vacant(v) => {
+                    v.insert(CacheEntry { mat: mat.clone(), hits: AtomicU64::new(0) });
+                }
+            }
+            map.len()
+        };
+        if len_after > SHARD_CAP {
+            self.evict_shard(shard, avail);
+        }
+        mat
+    }
+
+    /// Bounded eviction keeping hot entries: snapshot `(key, hits)` under
+    /// the read lock, rank the cold half **off-lock**, then take the write
+    /// lock only to remove those keys and halve the survivors' heat so
+    /// stale hits age out instead of pinning entries forever. `protect` is
+    /// the key whose insert triggered this pass — it starts at zero hits
+    /// and would otherwise rank among the coldest, evicting the very entry
+    /// the caller just memoized.
+    fn evict_shard(&self, shard: &RwLock<HashMap<Vec<usize>, CacheEntry>>, protect: &[usize]) {
+        let mut snapshot: Vec<(Vec<usize>, u64)> = shard
+            .read()
+            .unwrap()
+            .iter()
+            .filter(|(k, _)| k.as_slice() != protect)
+            .map(|(k, e)| (k.clone(), e.hits.load(Ordering::Relaxed)))
+            .collect();
+        if snapshot.len() < SHARD_CAP {
+            return; // a racing eviction already trimmed this shard
+        }
+        // Coldest first; ties by key for determinism.
+        snapshot.sort_by(|a, b| a.1.cmp(&b.1).then_with(|| a.0.cmp(&b.0)));
+        let keep = snapshot.len() / 2;
+        let cold = snapshot.len() - keep;
+        let mut evicted = 0u64;
+        {
+            let mut map = shard.write().unwrap();
+            for (key, _) in snapshot.iter().take(cold) {
+                if map.len() <= keep {
+                    break;
+                }
+                if map.remove(key).is_some() {
+                    evicted += 1;
+                }
+            }
+            for entry in map.values() {
+                let h = entry.hits.load(Ordering::Relaxed);
+                entry.hits.store(h / 2, Ordering::Relaxed);
+            }
+        }
+        if evicted > 0 {
+            self.evictions.fetch_add(evicted, Ordering::Relaxed);
+        }
+    }
+
+    /// Entries currently memoized (all shards).
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.read().unwrap().len()).sum()
+    }
+
+    /// Whether the cache holds no entries.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drain the eviction counter (returns evictions since the last call).
+    /// The serving path adds the drained count to
+    /// `ServingMetrics::decode_cache_evictions`.
+    pub fn take_evictions(&self) -> u64 {
+        self.evictions.swap(0, Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn miss_builds_once_and_hits_after() {
+        let cache = DecodeMatrixCache::new();
+        let built = AtomicU64::new(0);
+        let key = vec![0usize, 2, 3];
+        for _ in 0..4 {
+            let m = cache.get_or_build(&key, |a| {
+                built.fetch_add(1, Ordering::Relaxed);
+                a.iter().map(|&i| i as f32).collect()
+            });
+            assert_eq!(m.as_slice(), &[0.0, 2.0, 3.0]);
+        }
+        assert_eq!(built.load(Ordering::Relaxed), 1);
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.take_evictions(), 0);
+    }
+
+    #[test]
+    fn overflow_evicts_cold_half_and_counts() {
+        let cache = DecodeMatrixCache::new();
+        // Drive one shard far past SHARD_CAP; total entries must stay
+        // bounded and the eviction counter must account the removals.
+        let mut inserted = 0usize;
+        for i in 0..(DECODE_CACHE_CAP * 2) {
+            let key = vec![i, i + 1];
+            cache.get_or_build(&key, |_| vec![1.0]);
+            inserted += 1;
+        }
+        assert!(inserted == DECODE_CACHE_CAP * 2);
+        assert!(
+            cache.len() <= DECODE_CACHE_CAP + DECODE_CACHE_SHARDS,
+            "cache unbounded: {} entries",
+            cache.len()
+        );
+        assert!(cache.take_evictions() > 0);
+    }
+}

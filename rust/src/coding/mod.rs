@@ -7,8 +7,10 @@
 //! ([`block::GroupBlock`] / [`block::RowView`] / [`block::BlockPool`])
 //! with its shared blocked-GEMM micro-kernel ([`linalg::gemm_rows`]) —
 //! and the [`serving::ServingScheme`] contract that packages each strategy
-//! (ApproxIFER / replication / ParM-proxy / uncoded) for the
-//! scheme-agnostic serving engine.
+//! (ApproxIFER / NeRCC / replication / ParM-proxy / uncoded) for the
+//! scheme-agnostic serving engine. [`nercc`] hosts the nested-regression
+//! successor scheme; [`cache`] the sharded decode-matrix cache every coded
+//! scheme embeds.
 
 // `serving` (the public scheme contract), `block` (the flat-buffer data
 // plane) and `linalg` (the GEMM micro-kernel) carry complete rustdoc under
@@ -19,11 +21,13 @@ pub mod analysis;
 #[allow(missing_docs)]
 pub mod berrut;
 pub mod block;
+pub mod cache;
 #[allow(missing_docs)]
 pub mod chebyshev;
 pub mod linalg;
 #[allow(missing_docs)]
 pub mod locator;
+pub mod nercc;
 #[allow(missing_docs)]
 pub mod replication;
 #[allow(missing_docs)]
@@ -35,7 +39,9 @@ pub mod theory;
 pub mod vote;
 
 pub use block::{BlockBuf, BlockPool, GroupBlock, RowView};
+pub use cache::DecodeMatrixCache;
 pub use locator::{locate, LocatorMethod};
+pub use nercc::{NerccCode, NerccParams, NerccTuning};
 pub use replication::ReplicationParams;
 pub use scheme::{ApproxIferCode, CodeParams};
 pub use serving::{

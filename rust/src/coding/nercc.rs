@@ -1,0 +1,887 @@
+//! NeRCC — Nested-Regression Coded Computing (arXiv 2402.04377), the
+//! direct successor to ApproxIFER from the same group — as a fifth
+//! [`ServingScheme`].
+//!
+//! Where ApproxIFER interpolates with Berrut rational weights, NeRCC fits
+//! two nested ridge regressions over the same structured point sets:
+//!
+//! * **Encoder** — fit a smooth regularized regression through the `K`
+//!   query payloads at the first-kind Chebyshev points `α_j` and evaluate
+//!   it at the `N` second-kind worker points `β_i`. With the Chebyshev
+//!   basis `T_0..T_{K−1}` this is the fixed linear map
+//!   `W = Φ_β (Φ_αᵀΦ_α + λ_enc I)⁻¹ Φ_αᵀ` — an `N×K` matrix applied to
+//!   the query block as one cache-blocked GEMM, exactly like ApproxIFER's
+//!   encoder.
+//! * **Decoder** — fit a second regression through the returned worker
+//!   outputs at their `β` points and read it back at the `α` points:
+//!   `D(F) = Φ_α (Φ_Fᵀ Φ_F + λ_dec I)⁻¹ Φ_Fᵀ` for each availability set
+//!   `F`, memoized in the shared sharded [`DecodeMatrixCache`].
+//!
+//! Both regressions are precomputed in f64 and applied as f32 GEMMs over
+//! the PR 5 flat-buffer data plane ([`GroupBlock`] / [`BlockBuf`] /
+//! [`super::linalg::gemm_rows`]) — encode and decode each stay one GEMM.
+//!
+//! **Geometry.** `N = K + S + 2E` workers, decode from the fastest
+//! `K + 2E`. The `2E` margin is the classical adversary premium: with `E`
+//! corrupted replies among `K + 2E` collected, dropping any `E`-subset
+//! still leaves `≥ K` points, and only the subset that drops the actual
+//! adversaries fits the remaining points consistently. That makes the
+//! locator a deterministic subset search (below) instead of ApproxIFER's
+//! majority vote, and it undercuts ApproxIFER's `2(K+E)+S` workers for
+//! every `K > 1`.
+//!
+//! **Location.** A preliminary regression over every collected reply is
+//! re-encoded back at the collected workers' points; if the worst
+//! normalized residual stays under [`NERCC_LOCATE_TOL`] the group is
+//! consistent and nothing is flagged (unlike ApproxIFER's vote, which
+//! must flag `E` workers even on honest groups). Otherwise every
+//! `E`-subset drop is refit and the subset whose *kept* points fit best
+//! is excluded — numerically this separates cleanly: honest fits land at
+//! residual `~1e−6` while any corruption that matters pushes the full-set
+//! residual orders of magnitude above the gate.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Result};
+
+use crate::metrics::ServingMetrics;
+
+use super::block::{BlockBuf, BlockPool, GroupBlock, RowView};
+use super::cache::DecodeMatrixCache;
+use super::chebyshev;
+use super::linalg::{gemm_rows, gemm_rows_naive};
+use super::serving::{
+    residual_scale, CollectPolicy, SchemeDecode, ServingScheme, VerifyPolicy, VerifyReport,
+};
+
+/// Consistency gate for the locator's preliminary full-set regression:
+/// below this normalized re-encode residual the collected replies are
+/// mutually consistent and no subset search runs. Calibrated numerically
+/// against the repo's point sets: honest f64 residuals stay under `3e−5`
+/// up to `K = 25` (f32 GEMM noise adds `~1e−4`), while corruption large
+/// enough to matter pushes the residual past `1e−2`; a corruption *under*
+/// this gate perturbs the decoded predictions by less than the serving
+/// tolerance envelope.
+pub const NERCC_LOCATE_TOL: f64 = 0.02;
+
+/// NeRCC code parameters: `K` queries per group, `S` stragglers tolerated,
+/// `E` Byzantine workers tolerated (each adversary costs two workers — the
+/// classical location margin).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct NerccParams {
+    /// Queries per group (the regression degree: basis `T_0..T_{K−1}`).
+    pub k: usize,
+    /// Stragglers tolerated.
+    pub s: usize,
+    /// Byzantine workers tolerated.
+    pub e: usize,
+}
+
+impl NerccParams {
+    /// Validated constructor (`K ≥ 1`, at least two workers so the
+    /// second-kind point set is well defined).
+    pub fn new(k: usize, s: usize, e: usize) -> NerccParams {
+        assert!(k >= 1, "K must be >= 1");
+        let p = NerccParams { k, s, e };
+        assert!(p.num_workers() >= 2, "degenerate code: N = {} workers", p.num_workers());
+        p
+    }
+
+    /// Total workers `N = K + S + 2E`.
+    pub fn num_workers(&self) -> usize {
+        self.k + self.s + 2 * self.e
+    }
+
+    /// Replies the decoder waits for: the fastest `K + 2E`.
+    pub fn wait_for(&self) -> usize {
+        self.k + 2 * self.e
+    }
+
+    /// Resource overhead = workers / queries = `(K+S+2E)/K`.
+    pub fn overhead(&self) -> f64 {
+        self.num_workers() as f64 / self.k as f64
+    }
+}
+
+/// Ridge-regularization knobs (`nercc.lambda_enc` / `nercc.lambda_dec`).
+/// The defaults are calibrated on the repo's Chebyshev point sets: small
+/// enough that the honest decode error stays below `1e−3` across the
+/// whole conformance sweep (including worst-case one-sided availability
+/// sets), large enough to keep both Gram systems well conditioned.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct NerccTuning {
+    /// Encoder ridge weight `λ_enc` (must be positive).
+    pub lambda_enc: f64,
+    /// Decoder ridge weight `λ_dec` (must be positive).
+    pub lambda_dec: f64,
+}
+
+impl Default for NerccTuning {
+    fn default() -> Self {
+        NerccTuning { lambda_enc: 1e-6, lambda_dec: 1e-6 }
+    }
+}
+
+/// Precomputed NeRCC encoder/decoder for one `(K, S, E)` and tuning.
+pub struct NerccCode {
+    params: NerccParams,
+    tuning: NerccTuning,
+    /// Query nodes `α_j` (first kind, K points).
+    alpha: Vec<f64>,
+    /// Worker nodes `β_i` (second kind, N points).
+    beta: Vec<f64>,
+    /// Chebyshev basis at the query nodes, row-major `K × K`
+    /// (`phi_alpha[j*K + t] = T_t(α_j)`).
+    phi_alpha: Vec<f64>,
+    /// Chebyshev basis at the worker nodes, row-major `N × K`.
+    phi_beta: Vec<f64>,
+    /// Encode matrix, row-major `N × K` (f64-precomputed, f32-applied).
+    w_enc: Vec<f32>,
+    /// Memoized decode matrices keyed by the sorted available worker set
+    /// (own instance — entries never cross scheme families).
+    decode_cache: DecodeMatrixCache,
+}
+
+/// Evaluate the Chebyshev basis `T_0..T_{m−1}` at each point of `pts`,
+/// row-major `pts.len() × m`, by the three-term recurrence.
+fn chebyshev_basis(pts: &[f64], m: usize) -> Vec<f64> {
+    let mut p = vec![0.0f64; pts.len() * m];
+    for (i, &x) in pts.iter().enumerate() {
+        let row = &mut p[i * m..(i + 1) * m];
+        row[0] = 1.0;
+        if m > 1 {
+            row[1] = x;
+        }
+        for t in 2..m {
+            row[t] = 2.0 * x * row[t - 1] - row[t - 2];
+        }
+    }
+    p
+}
+
+/// Solve `A·X = B` in place by Gaussian elimination with partial pivoting
+/// (`a`: `m×m` row-major, consumed; `b`: `m×r` row-major, replaced by
+/// `X`). The ridge term keeps every system here strictly nonsingular.
+fn solve_in_place(a: &mut [f64], b: &mut [f64], m: usize, r: usize) {
+    debug_assert_eq!(a.len(), m * m);
+    debug_assert_eq!(b.len(), m * r);
+    for col in 0..m {
+        let mut piv = col;
+        for row in (col + 1)..m {
+            if a[row * m + col].abs() > a[piv * m + col].abs() {
+                piv = row;
+            }
+        }
+        if piv != col {
+            for t in 0..m {
+                a.swap(col * m + t, piv * m + t);
+            }
+            for t in 0..r {
+                b.swap(col * r + t, piv * r + t);
+            }
+        }
+        let d = a[col * m + col];
+        assert!(d != 0.0, "singular regression system (ridge term missing?)");
+        for row in (col + 1)..m {
+            let f = a[row * m + col] / d;
+            if f == 0.0 {
+                continue;
+            }
+            for t in col..m {
+                a[row * m + t] -= f * a[col * m + t];
+            }
+            for t in 0..r {
+                b[row * r + t] -= f * b[col * r + t];
+            }
+        }
+    }
+    for col in (0..m).rev() {
+        let d = a[col * m + col];
+        for t in 0..r {
+            b[col * r + t] /= d;
+        }
+        for row in 0..col {
+            let f = a[row * m + col];
+            if f == 0.0 {
+                continue;
+            }
+            for t in 0..r {
+                b[row * r + t] -= f * b[col * r + t];
+            }
+        }
+    }
+}
+
+/// The ridge projector `M = Φ_target · (PᵀP + λI)⁻¹ Pᵀ`: fit a regression
+/// through values sampled at `p`'s rows, read it back at `target`'s rows.
+/// `p` is `rows × m`, `target` is `t_rows × m`; returns `t_rows × rows`.
+fn ridge_projector(
+    p: &[f64],
+    rows: usize,
+    m: usize,
+    lambda: f64,
+    target: &[f64],
+    t_rows: usize,
+) -> Vec<f64> {
+    assert!(lambda > 0.0, "ridge weight must be positive");
+    // Gram matrix G = PᵀP + λI.
+    let mut g = vec![0.0f64; m * m];
+    for i in 0..rows {
+        let row = &p[i * m..(i + 1) * m];
+        for (a, &ra) in row.iter().enumerate() {
+            for (b, &rb) in row.iter().enumerate() {
+                g[a * m + b] += ra * rb;
+            }
+        }
+    }
+    for a in 0..m {
+        g[a * m + a] += lambda;
+    }
+    // Z = G⁻¹ Pᵀ (m × rows).
+    let mut z = vec![0.0f64; m * rows];
+    for i in 0..rows {
+        for a in 0..m {
+            z[a * rows + i] = p[i * m + a];
+        }
+    }
+    solve_in_place(&mut g, &mut z, m, rows);
+    // M = target · Z.
+    let mut out = vec![0.0f64; t_rows * rows];
+    for i in 0..t_rows {
+        let trow = &target[i * m..(i + 1) * m];
+        for j in 0..rows {
+            let mut acc = 0.0f64;
+            for (a, &ta) in trow.iter().enumerate() {
+                acc += ta * z[a * rows + j];
+            }
+            out[i * rows + j] = acc;
+        }
+    }
+    out
+}
+
+impl NerccCode {
+    /// Build the code with default tuning.
+    pub fn new(params: NerccParams) -> NerccCode {
+        NerccCode::with_tuning(params, NerccTuning::default())
+    }
+
+    /// Build the code with explicit ridge weights: precompute the basis
+    /// matrices and the `N×K` encoder in f64, store the encoder in f32
+    /// for the GEMM path.
+    pub fn with_tuning(params: NerccParams, tuning: NerccTuning) -> NerccCode {
+        assert!(
+            tuning.lambda_enc > 0.0 && tuning.lambda_dec > 0.0,
+            "nercc ridge weights must be positive"
+        );
+        let k = params.k;
+        let n = params.num_workers();
+        let alpha = chebyshev::first_kind(k);
+        // `second_kind(n)` yields n+1 points; we need exactly N.
+        let beta = chebyshev::second_kind(n - 1);
+        debug_assert_eq!(beta.len(), n);
+        let phi_alpha = chebyshev_basis(&alpha, k);
+        let phi_beta = chebyshev_basis(&beta, k);
+        let w64 = ridge_projector(&phi_alpha, k, k, tuning.lambda_enc, &phi_beta, n);
+        let w_enc = w64.iter().map(|&x| x as f32).collect();
+        NerccCode {
+            params,
+            tuning,
+            alpha,
+            beta,
+            phi_alpha,
+            phi_beta,
+            w_enc,
+            decode_cache: DecodeMatrixCache::new(),
+        }
+    }
+
+    /// The `(K, S, E)` triple.
+    pub fn params(&self) -> NerccParams {
+        self.params
+    }
+
+    /// The ridge weights this code was built with.
+    pub fn tuning(&self) -> NerccTuning {
+        self.tuning
+    }
+
+    /// Query nodes `α_j` (first kind, K points).
+    pub fn alpha(&self) -> &[f64] {
+        &self.alpha
+    }
+
+    /// Worker nodes `β_i` (second kind, N points).
+    pub fn beta(&self) -> &[f64] {
+        &self.beta
+    }
+
+    /// Encoder matrix (row-major `N × K`).
+    pub fn encode_matrix(&self) -> &[f32] {
+        &self.w_enc
+    }
+
+    /// Encode a `K×d` query block into a pre-staged `N×d` coded block:
+    /// one blocked GEMM `X̃ = W·X` (the serving hot path). Fully
+    /// overwrites `out` (the recycled-buffer contract).
+    pub fn encode_block(&self, queries: &GroupBlock, out: &mut BlockBuf) {
+        let k = self.params.k;
+        let nw = self.params.num_workers();
+        assert_eq!(queries.rows(), k, "encode: expected {k} query rows");
+        assert_eq!(out.rows(), nw, "encode: output staged for {} rows", out.rows());
+        assert_eq!(out.dim(), queries.dim(), "encode: payload length mismatch");
+        let a_rows: Vec<&[f32]> = self.w_enc.chunks_exact(k).collect();
+        let b_rows: Vec<&[f32]> = (0..k).map(|j| queries.row(j)).collect();
+        gemm_rows(&a_rows, &b_rows, out.as_mut_slice());
+    }
+
+    /// Retained naive reference for [`NerccCode::encode_block`] —
+    /// bit-identical contract with the blocked GEMM, same as ApproxIFER's
+    /// reference paths. Never on a serving path.
+    pub fn encode_reference(&self, queries: &GroupBlock, out: &mut BlockBuf) {
+        let k = self.params.k;
+        assert_eq!(queries.rows(), k);
+        assert_eq!(out.rows(), self.params.num_workers());
+        assert_eq!(out.dim(), queries.dim());
+        let a_rows: Vec<&[f32]> = self.w_enc.chunks_exact(k).collect();
+        let b_rows: Vec<&[f32]> = (0..k).map(|j| queries.row(j)).collect();
+        gemm_rows_naive(&a_rows, &b_rows, out.as_mut_slice());
+    }
+
+    /// Build the row-major `K × |F|` decode matrix for one availability
+    /// set (the cache-miss path): ridge-fit over the set's `β` points,
+    /// read back at the `α` points.
+    fn build_decode_matrix(&self, avail: &[usize]) -> Vec<f32> {
+        let k = self.params.k;
+        let mut pf = Vec::with_capacity(avail.len() * k);
+        for &i in avail {
+            pf.extend_from_slice(&self.phi_beta[i * k..(i + 1) * k]);
+        }
+        let d64 =
+            ridge_projector(&pf, avail.len(), k, self.tuning.lambda_dec, &self.phi_alpha, k);
+        d64.iter().map(|&x| x as f32).collect()
+    }
+
+    /// Decode weights for an available set (sorted worker indices),
+    /// memoized in the shared sharded cache.
+    pub fn decode_matrix(&self, avail: &[usize]) -> Arc<Vec<f32>> {
+        self.decode_cache.get_or_build(avail, |a| self.build_decode_matrix(a))
+    }
+
+    /// Decode-matrix cache entries currently memoized (all shards).
+    pub fn decode_cache_len(&self) -> usize {
+        self.decode_cache.len()
+    }
+
+    /// Drain the eviction counter (returns evictions since the last
+    /// call); the serving path adds the drained count to
+    /// `ServingMetrics::decode_cache_evictions`.
+    pub fn take_cache_evictions(&self) -> u64 {
+        self.decode_cache.take_evictions()
+    }
+
+    /// GEMM decode into a flat `K × d` output slice (`Ŷ = D·Ỹ`), through
+    /// the cache.
+    fn decode_into(&self, avail: &[usize], coded: &[&[f32]], out: &mut [f32]) {
+        assert_eq!(avail.len(), coded.len());
+        assert!(!coded.is_empty(), "decode with no available workers");
+        let mat = self.decode_matrix(avail);
+        let f = avail.len();
+        let a_rows: Vec<&[f32]> = mat.chunks_exact(f).collect();
+        gemm_rows(&a_rows, coded, out);
+    }
+
+    /// Decode the `K` predictions into a pooled block (the serving hot
+    /// path). `coded[m]` is worker `avail[m]`'s prediction payload.
+    pub fn decode_block(&self, avail: &[usize], coded: &[&[f32]], pool: &BlockPool) -> GroupBlock {
+        assert!(!coded.is_empty(), "decode with no available workers");
+        let d = coded[0].len();
+        let mut out = pool.take(self.params.k, d);
+        self.decode_into(avail, coded, out.as_mut_slice());
+        out.freeze()
+    }
+
+    /// Verification re-encode `Z = W_F·Ŷ`: evaluate the decoded
+    /// predictions back at the given workers' points as one GEMM over the
+    /// gathered encoder rows. `out` is row-major `workers.len() × c` and
+    /// fully overwritten.
+    pub fn re_encode_rows(&self, workers: &[usize], predictions: &[&[f32]], out: &mut [f32]) {
+        let k = self.params.k;
+        assert_eq!(predictions.len(), k, "re-encode needs all {k} predictions");
+        let a_rows: Vec<&[f32]> =
+            workers.iter().map(|&i| &self.w_enc[i * k..(i + 1) * k]).collect();
+        gemm_rows(&a_rows, predictions, out);
+    }
+
+    /// Unnormalized per-node re-encode residuals
+    /// `max_t |(W·Ŷ)_i[t] − Ỹ_i[t]|` for a worker subset. Every `set`
+    /// index must have a present reply.
+    fn node_residuals(
+        &self,
+        set: &[usize],
+        replies: &[Option<RowView>],
+        predictions: &[&[f32]],
+    ) -> Vec<f64> {
+        if set.is_empty() {
+            return Vec::new();
+        }
+        let c = predictions[0].len();
+        let mut z = vec![0.0f32; set.len() * c];
+        self.re_encode_rows(set, predictions, &mut z);
+        set.iter()
+            .enumerate()
+            .map(|(m, &i)| {
+                let y = replies[i].as_deref().unwrap();
+                z[m * c..(m + 1) * c]
+                    .iter()
+                    .zip(y)
+                    .fold(0.0f64, |worst, (&zt, &yt)| worst.max((zt as f64 - yt as f64).abs()))
+            })
+            .collect()
+    }
+
+    /// Worst normalized re-encode residual of `predictions` over `set`
+    /// (same corruption-robust `1 +` median-node-peak normalization as
+    /// ApproxIFER's [`super::serving::verify_residual`]).
+    fn worst_residual(
+        &self,
+        set: &[usize],
+        replies: &[Option<RowView>],
+        predictions: &[&[f32]],
+    ) -> f64 {
+        let scale = residual_scale(set, replies);
+        self.node_residuals(set, replies, predictions).into_iter().fold(0.0f64, f64::max)
+            / (1.0 + scale)
+    }
+}
+
+/// Gather the payload slices of a worker subset (every index must have a
+/// present reply).
+fn gather<'r>(replies: &'r [Option<RowView>], set: &[usize]) -> Vec<&'r [f32]> {
+    set.iter().map(|&i| replies[i].as_deref().unwrap()).collect()
+}
+
+/// Visit every `r`-combination of `0..n` in lexicographic order.
+fn for_each_combination(n: usize, r: usize, mut f: impl FnMut(&[usize])) {
+    if r > n {
+        return;
+    }
+    let mut idx: Vec<usize> = (0..r).collect();
+    loop {
+        f(&idx);
+        let mut i = r;
+        while i > 0 && idx[i - 1] == n - r + (i - 1) {
+            i -= 1;
+        }
+        if i == 0 {
+            return;
+        }
+        idx[i - 1] += 1;
+        for j in i..r {
+            idx[j] = idx[j - 1] + 1;
+        }
+    }
+}
+
+impl ServingScheme for NerccCode {
+    fn name(&self) -> &str {
+        "nercc"
+    }
+
+    fn group_size(&self) -> usize {
+        self.params.k
+    }
+
+    fn num_workers(&self) -> usize {
+        self.params.num_workers()
+    }
+
+    fn stragglers_tolerated(&self) -> usize {
+        self.params.s
+    }
+
+    fn byzantine_tolerated(&self) -> usize {
+        self.params.e
+    }
+
+    fn overhead(&self) -> f64 {
+        self.params.overhead()
+    }
+
+    fn collect_policy(&self) -> CollectPolicy {
+        let p = self.params;
+        let policy = CollectPolicy::fastest(p.num_workers(), p.wait_for());
+        if p.e > 0 {
+            // Hedged early decode at `K+2E−1` replies: the subset search
+            // can still drop `E` candidates and keep `≥ K` fit points, so
+            // location remains possible (with one unit less margin); a
+            // hedge that misses a corruption fails verification and the
+            // escalation ladder recovers.
+            policy.with_hedge(p.wait_for() - 1)
+        } else {
+            policy
+        }
+    }
+
+    fn encode_into(&self, queries: &GroupBlock, out: &mut BlockBuf) {
+        self.encode_block(queries, out);
+    }
+
+    fn decode(
+        &self,
+        replies: &[Option<RowView>],
+        policy: VerifyPolicy,
+        metrics: &ServingMetrics,
+        pool: &BlockPool,
+    ) -> Result<SchemeDecode> {
+        let avail: Vec<usize> = (0..replies.len()).filter(|&i| replies[i].is_some()).collect();
+        if avail.is_empty() {
+            bail!("no replies to decode");
+        }
+        let e = self.params.e;
+        let k = self.params.k;
+
+        // --- locate: threshold-gated subset search -----------------------
+        let t0 = std::time::Instant::now();
+        let mut decode_set = avail.clone();
+        let mut flagged: Vec<usize> = Vec::new();
+        if e > 0 && avail.len() > k {
+            // Preliminary regression over everything collected, re-encoded
+            // back at the collected points. Honest groups pass the gate
+            // and are never flagged (no forced false alarms — unlike the
+            // ApproxIFER vote locator).
+            let prelim = self.decode_block(&avail, &gather(replies, &avail), pool);
+            let prows: Vec<&[f32]> = (0..k).map(|j| prelim.row(j)).collect();
+            let prelim_res = self.worst_residual(&avail, replies, &prows);
+            if prelim_res > NERCC_LOCATE_TOL {
+                // Inconsistent: refit every E-subset drop (fewer if the
+                // collection was hedged short) and keep the drop whose
+                // remaining points fit best. Candidate fits bypass the
+                // cache — only the chosen set is worth memoizing.
+                let drops = e.min(avail.len() - k);
+                let scale = 1.0 + residual_scale(&avail, replies);
+                let mut best: Option<(f64, Vec<usize>)> = None;
+                for_each_combination(avail.len(), drops, |drop| {
+                    let keep: Vec<usize> =
+                        (0..avail.len()).filter(|i| !drop.contains(i)).map(|i| avail[i]).collect();
+                    let coded = gather(replies, &keep);
+                    let d = coded[0].len();
+                    let mat = self.build_decode_matrix(&keep);
+                    let a_rows: Vec<&[f32]> = mat.chunks_exact(keep.len()).collect();
+                    let mut fit = vec![0.0f32; k * d];
+                    gemm_rows(&a_rows, &coded, &mut fit);
+                    let frows: Vec<&[f32]> = fit.chunks_exact(d).collect();
+                    let res = self
+                        .node_residuals(&keep, replies, &frows)
+                        .into_iter()
+                        .fold(0.0f64, f64::max)
+                        / scale;
+                    if best.as_ref().map_or(true, |(b, _)| res < *b) {
+                        best = Some((res, keep));
+                    }
+                });
+                if let Some((_, keep)) = best {
+                    flagged = avail.iter().copied().filter(|i| !keep.contains(i)).collect();
+                    decode_set = keep;
+                    metrics.byzantine_flagged.add(flagged.len() as u64);
+                }
+            }
+        }
+        metrics.locate_latency.record(t0.elapsed().as_secs_f64());
+
+        // --- decode: one GEMM through the shared cache -------------------
+        let t0 = std::time::Instant::now();
+        let block = self.decode_block(&decode_set, &gather(replies, &decode_set), pool);
+        let mut predictions = block.row_views();
+        metrics.decode_latency.record(t0.elapsed().as_secs_f64());
+
+        // --- verify + in-decode escalation -------------------------------
+        let verify = if policy.enabled {
+            let prows: Vec<&[f32]> = predictions.iter().map(|p| p.as_slice()).collect();
+            let residual = self.worst_residual(&decode_set, replies, &prows);
+            if residual <= policy.tol {
+                if e > 0 {
+                    metrics.locator_hits.inc();
+                }
+                Some(VerifyReport { residual, passed: true, escalated: false })
+            } else {
+                metrics.verify_failures.inc();
+                if e > 0 {
+                    metrics.locator_misses.inc();
+                }
+                if flagged.is_empty() {
+                    // Nothing was excluded, so no alternative decode
+                    // exists in-scheme; the coordinator's redispatch rung
+                    // takes over.
+                    Some(VerifyReport { residual, passed: false, escalated: false })
+                } else {
+                    // Rung: full-set decode (exclude nothing) — if the
+                    // subset search cried wolf, the full regression is
+                    // self-consistent while real corruption keeps the
+                    // residual large.
+                    metrics.verify_escalations.inc();
+                    let full = self.decode_block(&avail, &gather(replies, &avail), pool);
+                    let fviews = full.row_views();
+                    let frows: Vec<&[f32]> = fviews.iter().map(|p| p.as_slice()).collect();
+                    let r_full = self.worst_residual(&avail, replies, &frows);
+                    if r_full <= policy.tol || r_full < residual {
+                        predictions = fviews;
+                        decode_set = avail.clone();
+                        flagged.clear();
+                        Some(VerifyReport {
+                            residual: r_full,
+                            passed: r_full <= policy.tol,
+                            escalated: true,
+                        })
+                    } else {
+                        Some(VerifyReport { residual, passed: false, escalated: true })
+                    }
+                }
+            }
+        } else {
+            None
+        };
+
+        // Prevalence evidence for the adaptive controller: flagged workers
+        // whose replies actually disagree with a decode verification
+        // vouched for.
+        let confirmed_adversaries = match verify {
+            Some(report) if report.passed => {
+                let present: Vec<usize> =
+                    flagged.iter().copied().filter(|&i| replies[i].is_some()).collect();
+                if present.is_empty() {
+                    Some(0)
+                } else {
+                    let prows: Vec<&[f32]> =
+                        predictions.iter().map(|p| p.as_slice()).collect();
+                    let scale = 1.0 + residual_scale(&decode_set, replies);
+                    Some(
+                        self.node_residuals(&present, replies, &prows)
+                            .into_iter()
+                            .filter(|r| r / scale > policy.tol)
+                            .count(),
+                    )
+                }
+            }
+            _ => None,
+        };
+
+        let evicted = self.take_cache_evictions();
+        if evicted > 0 {
+            metrics.decode_cache_evictions.add(evicted);
+        }
+        Ok(SchemeDecode { predictions, decode_set, flagged, confirmed_adversaries, verify })
+    }
+
+    fn reconfigure(&self, s: usize, e: usize) -> Result<Arc<dyn ServingScheme>> {
+        let k = self.params.k;
+        if k + s + 2 * e < 2 {
+            bail!("nercc: (K={k}, S={s}, E={e}) is a degenerate code (fewer than 2 workers)");
+        }
+        // Zero retraining: both regressions are refit offline — a fresh
+        // point set, encoder matrix and (empty) decode-matrix cache keyed
+        // to the new geometry, same ridge weights.
+        Ok(Arc::new(NerccCode::with_tuning(NerccParams::new(k, s, e), self.tuning)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::scheme::ApproxIferCode;
+    use crate::coding::CodeParams;
+
+    fn smooth_queries(k: usize, d: usize) -> Vec<Vec<f32>> {
+        (0..k)
+            .map(|j| (0..d).map(|t| ((j * 7 + t) as f32 * 0.013).sin()).collect())
+            .collect()
+    }
+
+    fn encode(code: &NerccCode, queries: &[Vec<f32>]) -> Vec<Option<RowView>> {
+        let qrefs: Vec<&[f32]> = queries.iter().map(|q| &q[..]).collect();
+        let block = GroupBlock::from_rows(&qrefs);
+        let mut out = BlockBuf::unpooled(code.params().num_workers(), queries[0].len());
+        code.encode_block(&block, &mut out);
+        let coded = out.freeze();
+        (0..code.params().num_workers()).map(|i| Some(coded.row_view(i))).collect()
+    }
+
+    #[test]
+    fn params_formulas() {
+        let p = NerccParams::new(8, 1, 0);
+        assert_eq!(p.num_workers(), 9);
+        assert_eq!(p.wait_for(), 8);
+        let p = NerccParams::new(4, 1, 2);
+        assert_eq!(p.num_workers(), 9);
+        assert_eq!(p.wait_for(), 8);
+        assert!((p.overhead() - 9.0 / 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn honest_decode_recovers_the_queries() {
+        // With identity "inference" the decoded predictions must match the
+        // raw queries to regression accuracy — across shapes, including
+        // the worst-case one-sided availability sets.
+        for (k, s, e) in [(2, 1, 0), (4, 2, 0), (8, 1, 1), (5, 0, 2)] {
+            let code = NerccCode::new(NerccParams::new(k, s, e));
+            let queries = smooth_queries(k, 6);
+            let replies = encode(&code, &queries);
+            let metrics = ServingMetrics::new();
+            let pool = BlockPool::new();
+            let out = code.decode(&replies, VerifyPolicy::on(0.4), &metrics, &pool).unwrap();
+            assert_eq!(out.predictions.len(), k);
+            assert!(out.flagged.is_empty(), "honest group flagged: {:?}", out.flagged);
+            assert!(out.verify.unwrap().passed);
+            for (j, q) in queries.iter().enumerate() {
+                for (t, &want) in q.iter().enumerate() {
+                    let got = out.predictions[j][t];
+                    assert!(
+                        (got - want).abs() < 5e-3,
+                        "K={k} S={s} E={e}: q{j}[{t}] {got} vs {want}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn stragglers_within_s_are_absorbed() {
+        let code = NerccCode::new(NerccParams::new(4, 2, 0));
+        let queries = smooth_queries(4, 5);
+        let mut replies = encode(&code, &queries);
+        replies[1] = None;
+        replies[4] = None;
+        let metrics = ServingMetrics::new();
+        let pool = BlockPool::new();
+        let out = code.decode(&replies, VerifyPolicy::on(0.4), &metrics, &pool).unwrap();
+        assert_eq!(out.decode_set.len(), 4);
+        for (j, q) in queries.iter().enumerate() {
+            for (t, &want) in q.iter().enumerate() {
+                assert!((out.predictions[j][t] - want).abs() < 5e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn corrupted_replies_are_located_and_excluded() {
+        let code = NerccCode::new(NerccParams::new(4, 1, 1));
+        let queries = smooth_queries(4, 6);
+        let mut replies = encode(&code, &queries);
+        // Corrupt one reply hard; one more is a straggler.
+        let bad = 2usize;
+        let corrupted: Vec<f32> =
+            replies[bad].as_deref().unwrap().iter().map(|v| v + 3.0).collect();
+        replies[bad] = Some(RowView::from_vec(corrupted));
+        replies[5] = None;
+        let metrics = ServingMetrics::new();
+        let pool = BlockPool::new();
+        let out = code.decode(&replies, VerifyPolicy::on(0.4), &metrics, &pool).unwrap();
+        assert_eq!(out.flagged, vec![bad], "locator missed the adversary");
+        assert!(!out.decode_set.contains(&bad));
+        let report = out.verify.unwrap();
+        assert!(report.passed, "verification failed: residual {}", report.residual);
+        assert_eq!(out.confirmed_adversaries, Some(1));
+        for (j, q) in queries.iter().enumerate() {
+            for (t, &want) in q.iter().enumerate() {
+                assert!(
+                    (out.predictions[j][t] - want).abs() < 5e-3,
+                    "q{j}[{t}]: {} vs {want}",
+                    out.predictions[j][t]
+                );
+            }
+        }
+        assert_eq!(metrics.byzantine_flagged.get(), 1);
+        assert_eq!(metrics.locator_hits.get(), 1);
+    }
+
+    #[test]
+    fn reconfigure_preserves_k_and_tuning() {
+        let tuned = NerccTuning { lambda_enc: 1e-5, lambda_dec: 1e-4 };
+        let code = NerccCode::with_tuning(NerccParams::new(4, 1, 0), tuned);
+        let wider = code.reconfigure(2, 1).unwrap();
+        assert_eq!(wider.group_size(), 4);
+        assert_eq!(wider.stragglers_tolerated(), 2);
+        assert_eq!(wider.byzantine_tolerated(), 1);
+        assert_eq!(wider.num_workers(), 4 + 2 + 2);
+    }
+
+    #[test]
+    fn mixed_scheme_cache_misses_converge_and_never_cross_families() {
+        // Satellite: interleaved ApproxIFER + NeRCC misses on the same
+        // availability key converge to one entry per cache, and churning
+        // one scheme's cache past its cap evicts nothing from the other.
+        let apx = Arc::new(ApproxIferCode::new(CodeParams::new(2, 119, 0)));
+        let nercc = Arc::new(NerccCode::new(NerccParams::new(2, 119, 0)));
+        let key = vec![0usize, 1];
+        let handles: Vec<_> = (0..8)
+            .map(|i| {
+                let apx = apx.clone();
+                let nercc = nercc.clone();
+                let key = key.clone();
+                std::thread::spawn(move || {
+                    if i % 2 == 0 {
+                        (Some(apx.decode_matrix(&key)), None)
+                    } else {
+                        (None, Some(nercc.decode_matrix(&key)))
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(apx.decode_cache_len(), 1, "racing ApproxIFER misses double-inserted");
+        assert_eq!(nercc.decode_cache_len(), 1, "racing NeRCC misses double-inserted");
+        let apx_mat = apx.decode_matrix(&key);
+        let nercc_mat = nercc.decode_matrix(&key);
+        assert!(Arc::ptr_eq(&apx.decode_matrix(&key), &apx_mat));
+        assert!(Arc::ptr_eq(&nercc.decode_matrix(&key), &nercc_mat));
+        // The two families must not share entries: same key, different
+        // matrices (Berrut weights vs ridge projector).
+        assert_ne!(apx_mat.as_slice(), nercc_mat.as_slice());
+
+        // Churn only the NeRCC cache past its cap: its evictions fire,
+        // ApproxIFER's cache is untouched and keeps its canonical entry.
+        let nw = nercc.params().num_workers();
+        let mut inserted = 0usize;
+        'outer: for i in 0..nw {
+            for j in (i + 1)..nw {
+                if (i, j) == (0, 1) {
+                    continue;
+                }
+                nercc.decode_matrix(&[i, j]);
+                inserted += 1;
+                if inserted > 6000 {
+                    break 'outer;
+                }
+            }
+        }
+        assert!(nercc.take_cache_evictions() > 0, "nercc eviction never fired");
+        assert_eq!(apx.take_cache_evictions(), 0, "eviction crossed scheme families");
+        assert_eq!(apx.decode_cache_len(), 1);
+        assert!(Arc::ptr_eq(&apx.decode_matrix(&key), &apx_mat));
+    }
+
+    #[test]
+    fn combination_enumeration_is_exhaustive() {
+        let mut seen = Vec::new();
+        for_each_combination(4, 2, |c| seen.push(c.to_vec()));
+        assert_eq!(
+            seen,
+            vec![
+                vec![0, 1],
+                vec![0, 2],
+                vec![0, 3],
+                vec![1, 2],
+                vec![1, 3],
+                vec![2, 3]
+            ]
+        );
+        let mut count = 0;
+        for_each_combination(5, 0, |c| {
+            assert!(c.is_empty());
+            count += 1;
+        });
+        assert_eq!(count, 1);
+    }
+}

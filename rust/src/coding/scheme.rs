@@ -15,16 +15,13 @@
 //! contract against the GEMM paths — the conformance suite
 //! (`tests/flat_dataplane.rs`) holds the kernels to it.
 
-use std::collections::hash_map::DefaultHasher;
-use std::collections::HashMap;
-use std::hash::{Hash, Hasher};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, RwLock};
+use std::sync::Arc;
 
 use crate::tensor::Tensor;
 
 use super::berrut;
 use super::block::{BlockBuf, BlockPool, GroupBlock};
+use super::cache::DecodeMatrixCache;
 use super::chebyshev;
 use super::linalg::{gemm_rows, gemm_rows_naive};
 
@@ -88,27 +85,6 @@ impl CodeParams {
     }
 }
 
-/// Decode-matrix cache shards. Hit lookups take only a shard's read lock
-/// (hit counts are atomics), so concurrent decode threads never serialize
-/// on a global mutex; misses and the eviction pass write-lock one shard.
-const DECODE_CACHE_SHARDS: usize = 8;
-
-/// Decode-matrix cache capacity (total across shards). Fastest-set
-/// patterns repeat under stable worker latency distributions, but
-/// adversarial churn can touch arbitrarily many availability sets — cap
-/// the map and evict each shard's cold half when it fills.
-const DECODE_CACHE_CAP: usize = 4096;
-
-/// Per-shard capacity.
-const SHARD_CAP: usize = DECODE_CACHE_CAP / DECODE_CACHE_SHARDS;
-
-struct CacheEntry {
-    mat: Arc<Vec<f32>>,
-    /// Bumped under the shard's *read* lock — heat tracking without write
-    /// contention on the hit path.
-    hits: AtomicU64,
-}
-
 /// Precomputed ApproxIFER encoder/decoder for one `(K, S, E)`.
 pub struct ApproxIferCode {
     params: CodeParams,
@@ -118,13 +94,10 @@ pub struct ApproxIferCode {
     beta: Vec<f64>,
     /// Encode matrix, row-major `(N+1) × K`: `w_enc[i*K + j] = ℓ_j(β_i)`.
     w_enc: Vec<f32>,
-    /// Memoized decode matrices keyed by the sorted available worker set,
-    /// sharded by key hash; per-entry hit counts drive the bounded
-    /// eviction.
-    decode_cache: [RwLock<HashMap<Vec<usize>, CacheEntry>>; DECODE_CACHE_SHARDS],
-    /// Entries evicted so far; drained into `ServingMetrics` by the scheme
-    /// decode path ([`ApproxIferCode::take_cache_evictions`]).
-    cache_evictions: AtomicU64,
+    /// Memoized decode matrices keyed by the sorted available worker set
+    /// (the shared sharded cache — one instance per code object, so
+    /// entries never cross scheme families).
+    decode_cache: DecodeMatrixCache,
 }
 
 impl ApproxIferCode {
@@ -138,14 +111,7 @@ impl ApproxIferCode {
             berrut::weights_into(&alpha, b, &mut scratch);
             w_enc.extend(scratch.iter().map(|&x| x as f32));
         }
-        ApproxIferCode {
-            params,
-            alpha,
-            beta,
-            w_enc,
-            decode_cache: std::array::from_fn(|_| RwLock::new(HashMap::new())),
-            cache_evictions: AtomicU64::new(0),
-        }
+        ApproxIferCode { params, alpha, beta, w_enc, decode_cache: DecodeMatrixCache::new() }
     }
 
     pub fn params(&self) -> CodeParams {
@@ -214,13 +180,6 @@ impl ApproxIferCode {
         gemm_rows_naive(&a_rows, &b_rows, out.as_mut_slice());
     }
 
-    /// Which shard an availability key lives in.
-    fn shard_of(avail: &[usize]) -> usize {
-        let mut h = DefaultHasher::new();
-        avail.hash(&mut h);
-        (h.finish() as usize) % DECODE_CACHE_SHARDS
-    }
-
     /// Build the row-major `K × |F|` decode matrix for one availability
     /// set (the cache-miss path; scratch reused across the K rows).
     fn build_decode_matrix(&self, avail: &[usize]) -> Vec<f32> {
@@ -243,89 +202,19 @@ impl ApproxIferCode {
     /// an atomic heat counter; misses compute **off-lock** and reuse a
     /// racing thread's insert rather than double-inserting.
     pub fn decode_matrix(&self, avail: &[usize]) -> Arc<Vec<f32>> {
-        debug_assert!(avail.windows(2).all(|w| w[0] < w[1]), "avail must be sorted unique");
-        let shard = &self.decode_cache[Self::shard_of(avail)];
-        if let Some(entry) = shard.read().unwrap().get(avail) {
-            entry.hits.fetch_add(1, Ordering::Relaxed);
-            return entry.mat.clone();
-        }
-        // Miss: build the matrix without holding any lock.
-        let mat = Arc::new(self.build_decode_matrix(avail));
-        let len_after = {
-            let mut map = shard.write().unwrap();
-            match map.entry(avail.to_vec()) {
-                std::collections::hash_map::Entry::Occupied(e) => {
-                    // A racing thread computed it first — adopt its entry so
-                    // the cache keeps one canonical Arc per key.
-                    e.get().hits.fetch_add(1, Ordering::Relaxed);
-                    return e.get().mat.clone();
-                }
-                std::collections::hash_map::Entry::Vacant(v) => {
-                    v.insert(CacheEntry { mat: mat.clone(), hits: AtomicU64::new(0) });
-                }
-            }
-            map.len()
-        };
-        if len_after > SHARD_CAP {
-            self.evict_shard(shard, avail);
-        }
-        mat
-    }
-
-    /// Bounded eviction keeping hot entries: snapshot `(key, hits)` under
-    /// the read lock, rank the cold half **off-lock**, then take the write
-    /// lock only to remove those keys and halve the survivors' heat so
-    /// stale hits age out instead of pinning entries forever. `protect` is
-    /// the key whose insert triggered this pass — it starts at zero hits
-    /// and would otherwise rank among the coldest, evicting the very entry
-    /// the caller just memoized (the pre-shard code inserted *after*
-    /// evicting for the same reason).
-    fn evict_shard(&self, shard: &RwLock<HashMap<Vec<usize>, CacheEntry>>, protect: &[usize]) {
-        let mut snapshot: Vec<(Vec<usize>, u64)> = shard
-            .read()
-            .unwrap()
-            .iter()
-            .filter(|(k, _)| k.as_slice() != protect)
-            .map(|(k, e)| (k.clone(), e.hits.load(Ordering::Relaxed)))
-            .collect();
-        if snapshot.len() < SHARD_CAP {
-            return; // a racing eviction already trimmed this shard
-        }
-        // Coldest first; ties by key for determinism.
-        snapshot.sort_by(|a, b| a.1.cmp(&b.1).then_with(|| a.0.cmp(&b.0)));
-        let keep = snapshot.len() / 2;
-        let cold = snapshot.len() - keep;
-        let mut evicted = 0u64;
-        {
-            let mut map = shard.write().unwrap();
-            for (key, _) in snapshot.iter().take(cold) {
-                if map.len() <= keep {
-                    break;
-                }
-                if map.remove(key).is_some() {
-                    evicted += 1;
-                }
-            }
-            for entry in map.values() {
-                let h = entry.hits.load(Ordering::Relaxed);
-                entry.hits.store(h / 2, Ordering::Relaxed);
-            }
-        }
-        if evicted > 0 {
-            self.cache_evictions.fetch_add(evicted, Ordering::Relaxed);
-        }
+        self.decode_cache.get_or_build(avail, |a| self.build_decode_matrix(a))
     }
 
     /// Decode-matrix cache entries currently memoized (all shards).
     pub fn decode_cache_len(&self) -> usize {
-        self.decode_cache.iter().map(|s| s.read().unwrap().len()).sum()
+        self.decode_cache.len()
     }
 
     /// Drain the eviction counter (returns evictions since the last call).
     /// The serving path adds the drained count to
     /// `ServingMetrics::decode_cache_evictions`.
     pub fn take_cache_evictions(&self) -> u64 {
-        self.cache_evictions.swap(0, Ordering::Relaxed)
+        self.decode_cache.take_evictions()
     }
 
     /// GEMM decode into a flat `K × d` output slice: `Ŷ = D·Ỹ` over the
@@ -417,6 +306,7 @@ pub fn saxpy(acc: &mut [f32], a: f32, x: &[f32]) {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coding::cache::DECODE_CACHE_CAP;
     use crate::testing::{assert_close, forall};
 
     fn linear_payload(coeff: &[f64], d: usize) -> Vec<Tensor> {

@@ -833,8 +833,9 @@ pub fn verify_residual(
 }
 
 /// Median across `set` of each node's reply peak `max_t |Ỹ_i|` — the
-/// corruption-robust scale verification and per-node confirmation share.
-fn residual_scale(set: &[usize], replies: &[Option<RowView>]) -> f64 {
+/// corruption-robust scale verification and per-node confirmation share
+/// (also reused by the NeRCC scheme's regression residuals).
+pub(crate) fn residual_scale(set: &[usize], replies: &[Option<RowView>]) -> f64 {
     let mut node_peaks: Vec<f64> = set
         .iter()
         .map(|&i| {

@@ -5,7 +5,7 @@ use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
-use crate::coding::{CodeParams, VerifyPolicy};
+use crate::coding::{CodeParams, NerccTuning, VerifyPolicy};
 use crate::coordinator::{
     AdaptiveConfig, AdmissionConfig, Priority, ShedPolicy, Strategy, TenantSpec,
 };
@@ -32,6 +32,8 @@ pub const KNOWN_KEYS: &[&str] = &[
     "serving.slo_ms",
     "serving.verify_decode",
     "serving.verify_tol",
+    "nercc.lambda_enc",
+    "nercc.lambda_dec",
     "model.arch",
     "model.dataset",
     "adaptive.enabled",
@@ -152,6 +154,11 @@ pub struct AppConfig {
     pub verify_decode: bool,
     /// Max allowed relative re-encode residual before escalation.
     pub verify_tol: f64,
+    /// NeRCC ridge weights (`nercc.*` namespace). Applied wherever a
+    /// `nercc` scheme is built — the global strategy or any tenant whose
+    /// `scheme = "nercc"`; every other strategy ignores them, so they are
+    /// always present (defaulted) rather than gated behind a switch.
+    pub nercc: NerccTuning,
     /// RNG seed for fault injection.
     pub seed: u64,
 }
@@ -178,6 +185,7 @@ impl Default for AppConfig {
             fault_profile: None,
             verify_decode: false,
             verify_tol: 0.4,
+            nercc: NerccTuning::default(),
             seed: 0xA11CE,
         }
     }
@@ -428,6 +436,22 @@ impl AppConfig {
             }
             cfg.verify_tol = v;
         }
+        // NeRCC ridge weights: strictly positive (a zero ridge would let
+        // the regression Gram systems go singular on degenerate point
+        // subsets). Accepted regardless of the global strategy — a tenant
+        // table may host a nercc scheme under any global default.
+        if let Some(v) = doc.get_f64("nercc.lambda_enc")? {
+            if v <= 0.0 {
+                bail!("nercc.lambda_enc must be positive, got {v}");
+            }
+            cfg.nercc.lambda_enc = v;
+        }
+        if let Some(v) = doc.get_f64("nercc.lambda_dec")? {
+            if v <= 0.0 {
+                bail!("nercc.lambda_dec must be positive, got {v}");
+            }
+            cfg.nercc.lambda_dec = v;
+        }
         // Hedged decodes and the adaptive Byzantine loop both lean on the
         // verification ladder; surface the spawn-time rule at config load
         // so the operator sees it before the fleet starts. (Checked here,
@@ -435,7 +459,10 @@ impl AppConfig {
         if (cfg.slo.is_some() || cfg.adaptive.is_some())
             && cfg.params.e > 0
             && !cfg.verify_decode
-            && matches!(cfg.strategy, Strategy::ApproxIfer | Strategy::Replication)
+            && matches!(
+                cfg.strategy,
+                Strategy::ApproxIfer | Strategy::Nercc | Strategy::Replication
+            )
         {
             bail!(
                 "serving.slo_ms / adaptive.enabled with code.e > 0 requires \
@@ -540,6 +567,7 @@ impl AppConfig {
                 };
                 spec.batch_deadline = cfg.batch_deadline;
                 spec.group_timeout = cfg.group_timeout;
+                spec.nercc = cfg.nercc;
                 if spec.slo.is_some() && spec.params.e > 0 && !spec.verify.enabled {
                     bail!(
                         "tenants.{name}.slo_ms with e > 0 requires \
@@ -627,6 +655,38 @@ mod tests {
         assert!(AppConfig::from_doc(&doc).is_err());
         let doc = ConfigDoc::parse("[serving]\ngroup_timeout_ms = 0\n").unwrap();
         assert!(AppConfig::from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn nercc_knobs_parse_validate_and_inherit() {
+        let doc = ConfigDoc::parse(
+            r#"
+            [serving]
+            strategy = "nercc"
+            [nercc]
+            lambda_enc = 1e-4
+            lambda_dec = 2e-5
+            [tenants]
+            enabled = true
+            alpha.scheme = "nercc"
+            alpha.k = 2
+            alpha.s = 1
+            "#,
+        )
+        .unwrap();
+        let cfg = AppConfig::from_doc(&doc).unwrap();
+        assert_eq!(cfg.strategy, Strategy::Nercc);
+        assert!((cfg.nercc.lambda_enc - 1e-4).abs() < 1e-18);
+        assert!((cfg.nercc.lambda_dec - 2e-5).abs() < 1e-18);
+        // Tenants inherit the global ridge weights like the other
+        // non-per-tenant serving policies.
+        let t = cfg.tenants.expect("tenants enabled");
+        assert_eq!(t.specs[0].nercc, cfg.nercc);
+
+        for bad in ["lambda_enc = 0.0", "lambda_dec = -1e-6"] {
+            let doc = ConfigDoc::parse(&format!("[nercc]\n{bad}\n")).unwrap();
+            assert!(AppConfig::from_doc(&doc).is_err(), "{bad}");
+        }
     }
 
     #[test]

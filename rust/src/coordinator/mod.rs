@@ -29,7 +29,8 @@ pub use tenants::{Accounting, FairLease, FairScheduler, Tenant, TenantRegistry, 
 use std::sync::Arc;
 
 use crate::coding::{
-    ApproxIferCode, CodeParams, ParmProxy, Replication, ReplicationParams, ServingScheme, Uncoded,
+    ApproxIferCode, CodeParams, NerccCode, NerccParams, NerccTuning, ParmProxy, Replication,
+    ReplicationParams, ServingScheme, Uncoded,
 };
 
 /// Which serving strategy a deployment uses.
@@ -37,6 +38,9 @@ use crate::coding::{
 pub enum Strategy {
     /// The paper's coded inference.
     ApproxIfer,
+    /// Nested-regression coded computing (arXiv 2402.04377), ApproxIFER's
+    /// direct successor.
+    Nercc,
     /// Proactive replication baseline.
     Replication,
     /// Learned-parity-model baseline (proxy; DESIGN.md §3).
@@ -46,25 +50,41 @@ pub enum Strategy {
 }
 
 impl Strategy {
-    /// Parse a strategy name (`approxifer|replication|parm|uncoded`).
+    /// Parse a strategy name (`approxifer|nercc|replication|parm|uncoded`).
     pub fn parse(s: &str) -> Result<Strategy, String> {
         match s {
             "approxifer" => Ok(Strategy::ApproxIfer),
+            "nercc" => Ok(Strategy::Nercc),
             "replication" => Ok(Strategy::Replication),
             "parm" | "parm-proxy" => Ok(Strategy::ParmProxy),
             "uncoded" | "none" => Ok(Strategy::Uncoded),
             _ => Err(format!(
-                "unknown strategy '{s}' (approxifer|replication|parm|uncoded)"
+                "unknown strategy '{s}' (approxifer|nercc|replication|parm|uncoded)"
             )),
         }
     }
 
     /// Instantiate the strategy's [`ServingScheme`] for the given code
     /// parameters (`K` queries, `S` stragglers, `E` Byzantine — the
-    /// baselines use the subset of the triple they understand).
+    /// baselines use the subset of the triple they understand), with
+    /// default scheme tuning.
     pub fn scheme(self, params: CodeParams) -> Arc<dyn ServingScheme> {
+        self.scheme_tuned(params, NerccTuning::default())
+    }
+
+    /// [`Strategy::scheme`] with explicit NeRCC ridge weights (the
+    /// `nercc.*` config knobs; every other strategy ignores them).
+    pub fn scheme_tuned(
+        self,
+        params: CodeParams,
+        nercc: NerccTuning,
+    ) -> Arc<dyn ServingScheme> {
         match self {
             Strategy::ApproxIfer => Arc::new(ApproxIferCode::new(params)),
+            Strategy::Nercc => Arc::new(NerccCode::with_tuning(
+                NerccParams::new(params.k, params.s, params.e),
+                nercc,
+            )),
             Strategy::Replication => Arc::new(Replication::new(params.k, params.s, params.e)),
             Strategy::ParmProxy => Arc::new(ParmProxy::new(params.k)),
             Strategy::Uncoded => Arc::new(Uncoded::new(params.k)),
@@ -77,6 +97,7 @@ impl Strategy {
     pub fn num_workers(self, params: CodeParams) -> usize {
         match self {
             Strategy::ApproxIfer => params.num_workers(),
+            Strategy::Nercc => NerccParams::new(params.k, params.s, params.e).num_workers(),
             Strategy::Replication => {
                 ReplicationParams::new(params.k, params.s, params.e).num_workers()
             }
@@ -93,6 +114,7 @@ mod tests {
     #[test]
     fn strategy_parse() {
         assert_eq!(Strategy::parse("approxifer").unwrap(), Strategy::ApproxIfer);
+        assert_eq!(Strategy::parse("nercc").unwrap(), Strategy::Nercc);
         assert_eq!(Strategy::parse("replication").unwrap(), Strategy::Replication);
         assert_eq!(Strategy::parse("parm").unwrap(), Strategy::ParmProxy);
         assert_eq!(Strategy::parse("uncoded").unwrap(), Strategy::Uncoded);
@@ -102,9 +124,13 @@ mod tests {
     #[test]
     fn strategy_worker_counts_match_their_schemes() {
         let params = CodeParams::new(8, 1, 0);
-        for s in
-            [Strategy::ApproxIfer, Strategy::Replication, Strategy::ParmProxy, Strategy::Uncoded]
-        {
+        for s in [
+            Strategy::ApproxIfer,
+            Strategy::Nercc,
+            Strategy::Replication,
+            Strategy::ParmProxy,
+            Strategy::Uncoded,
+        ] {
             assert_eq!(s.num_workers(params), s.scheme(params).num_workers(), "{s:?}");
         }
     }

@@ -30,7 +30,7 @@ use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
-use crate::coding::{CodeParams, VerifyPolicy};
+use crate::coding::{CodeParams, NerccTuning, VerifyPolicy};
 use crate::metrics::ServingMetrics;
 use crate::workers::{FleetMux, WorkerFleet};
 
@@ -268,6 +268,9 @@ pub struct TenantSpec {
     pub batch_deadline: Duration,
     /// Hard per-group collection deadline.
     pub group_timeout: Duration,
+    /// NeRCC ridge weights (inherited from the global `nercc.*` knobs;
+    /// ignored unless `strategy` is [`Strategy::Nercc`]).
+    pub nercc: NerccTuning,
 }
 
 impl Default for TenantSpec {
@@ -286,6 +289,7 @@ impl Default for TenantSpec {
             verify: VerifyPolicy::off(),
             batch_deadline: Duration::from_millis(20),
             group_timeout: Duration::from_secs(30),
+            nercc: NerccTuning::default(),
         }
     }
 }
@@ -424,7 +428,7 @@ impl TenantRegistry {
         let facades = FleetMux::split(fleet, specs.len())?;
         let mut tenants = Vec::with_capacity(specs.len());
         for ((i, spec), facade) in specs.into_iter().enumerate().zip(facades) {
-            let scheme = spec.strategy.scheme(spec.params);
+            let scheme = spec.strategy.scheme_tuned(spec.params, spec.nercc);
             let mut b = Service::builder(scheme)
                 .fleet(Box::new(facade))
                 .fairness(FairLease::new(sched.clone(), i))

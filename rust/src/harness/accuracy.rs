@@ -393,6 +393,32 @@ mod tests {
     }
 
     #[test]
+    fn scheme_accuracy_nercc_locates_byzantine_and_stays_near_exact() {
+        // NeRCC's regression decoder is near-exact for an affine engine
+        // (calibrated ≲ 1e-3), so a self-labeled set should stay essentially
+        // perfect even with a Gaussian-noise adversary in the fleet — the
+        // subset-search locator drops it before the final fit.
+        let engine = Arc::new(LinearMockEngine::new(12, 6));
+        let ts = mock_testset(&engine, 96, 12, 6);
+        let params = crate::coding::NerccParams::new(4, 1, 1);
+        let profile =
+            crate::sim::faults::FaultProfile::parse("byz-random:1:10", params.num_workers(), 9)
+                .unwrap();
+        let r = scheme_accuracy(
+            engine,
+            &ts,
+            Arc::new(crate::coding::NerccCode::new(params)),
+            profile,
+            VerifyPolicy::on(0.4),
+            96,
+            9,
+        )
+        .unwrap();
+        assert!(r.accuracy() > 0.95, "acc={}", r.accuracy());
+        assert!(r.locator_rate() > 0.85, "locator rate {}", r.locator_rate());
+    }
+
+    #[test]
     fn scheme_accuracy_approxifer_rides_out_a_crashed_worker() {
         let engine = Arc::new(LinearMockEngine::new(16, 5));
         let ts = mock_testset(&engine, 96, 16, 5);

@@ -236,7 +236,7 @@ fn build_service(cfg: &AppConfig) -> Result<(Arc<Service>, usize)> {
     // Payload size comes straight from the manifest: only the in-process
     // path compiles the model (remote fleet workers own their engines).
     let payload: usize = entry.input[1..].iter().product();
-    let scheme = cfg.strategy.scheme(cfg.params);
+    let scheme = cfg.strategy.scheme_tuned(cfg.params, cfg.nercc);
     let mut builder = Service::builder(scheme.clone())
         .batch_deadline(cfg.batch_deadline)
         .verify(if cfg.verify_decode {
