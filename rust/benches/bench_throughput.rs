@@ -46,6 +46,15 @@ struct SchemeRow {
     report: ScenarioReport,
 }
 
+struct HealthRow {
+    fleet: &'static str,
+    report: ScenarioReport,
+    corrupt_injected: u64,
+    verify_failures: u64,
+    quarantines: u64,
+    effective_overhead: f64,
+}
+
 fn main() {
     let quick = quick_mode();
     let scale = if quick { 4 } else { 1 };
@@ -129,6 +138,10 @@ fn main() {
     // ---- adaptive control plane on the drifting-fault trace --------------
     let adaptive_rows = adaptive_drift_sweep(d, c, if quick { 10 } else { 40 });
 
+    // ---- worker health plane vs memoryless fleet under a persistent
+    //      adversary -------------------------------------------------------
+    let health_rows = health_plane_sweep(d, c, if quick { 27 } else { 90 });
+
     // ---- codec GEMM baseline: naive vs cache-blocked ----------------------
     println!("\n== codec GEMM micro-kernel sweep (naive vs blocked, linalg_rows) ==");
     println!(
@@ -144,7 +157,16 @@ fn main() {
     }
 
     if let Some(path) = std::env::var_os("BENCH_PR_JSON") {
-        write_json(&path, d, &rows, &fault_rows, &scheme_rows, &adaptive_rows, &linalg_rows);
+        write_json(
+            &path,
+            d,
+            &rows,
+            &fault_rows,
+            &scheme_rows,
+            &adaptive_rows,
+            &health_rows,
+            &linalg_rows,
+        );
     }
 
     println!("\n== encode throughput ceiling (host-side flat path, K=8 S=1, d=3072) ==");
@@ -335,6 +357,94 @@ fn scheme_comparison_sweep(d: usize, c: usize, groups: usize) -> Vec<SchemeRow> 
     rows
 }
 
+/// The health plane's headline: one worker corrupts every reply for the
+/// whole run (a persistent adversary, not a burst). The memoryless fleet
+/// pays the locate + verify ladder on every group forever; the
+/// health-plane fleet convicts the slot within a few groups, quarantines
+/// it, and backfills from a spare, after which groups are clean. Both arms
+/// run the identical service stack, scheme, and load; `ovh` is worker
+/// tasks delivered per completed query (probe duplicates excluded).
+fn health_plane_sweep(d: usize, c: usize, groups: usize) -> Vec<HealthRow> {
+    use approxifer::sim::faults::Behavior;
+    use approxifer::workers::{
+        ByzantineMode, HealthConfig, HealthGate, HealthPlane, WorkerPool, WorkerSpec,
+    };
+    let params = CodeParams::new(4, 0, 1); // 10 workers, every reply collected
+    let nw = params.num_workers();
+    let total = groups * params.k;
+    println!(
+        "\n== worker health plane (persistent adversary at slot 2, N={nw} K={} E=1, \
+         verify on) ==",
+        params.k
+    );
+    println!(
+        "{:<16} {:>8} {:>10} {:>10} {:>9} {:>12} {:>12} {:>7}",
+        "fleet", "ok", "thrpt/s", "p99_ms", "corrupt", "verify_fail", "quarantines", "ovh"
+    );
+    let mut rows = Vec::new();
+    for &(label, gated) in &[("memoryless", false), ("health-plane", true)] {
+        let engine: Arc<dyn InferenceEngine> = Arc::new(LinearMockEngine::new(d, c));
+        // The gated arm carries one honest spare as backfill capacity.
+        let width = if gated { nw + 1 } else { nw };
+        let mut specs = vec![WorkerSpec::default(); width];
+        specs[2] = WorkerSpec::default().with_behavior(Behavior::Byzantine(
+            ByzantineMode::Colluding { pact: 3117, scale: 15.0 },
+        ));
+        let pool = WorkerPool::spawn(engine, &specs, 4242);
+        let mut builder = Service::builder(Arc::new(ApproxIferCode::new(params)));
+        let plane = if gated {
+            let plane = Arc::new(HealthPlane::new(HealthConfig::default(), 4242));
+            let gate = HealthGate::attach(Box::new(pool), nw, plane.clone());
+            builder = builder.fleet(Box::new(gate)).health_plane(plane.clone(), 0);
+            Some(plane)
+        } else {
+            builder = builder.fleet(Box::new(pool));
+            None
+        };
+        let service = Arc::new(
+            builder
+                .flush_after(Duration::from_millis(2))
+                // Shallow pipeline: evidence decoded before quarantine can
+                // only misattribute the one other in-flight group.
+                .max_inflight(2)
+                .decode_threads(2)
+                .verify(VerifyPolicy::on(0.4))
+                .group_timeout(Duration::from_secs(5))
+                .spawn()
+                .unwrap(),
+        );
+        let arrivals = Arrivals::Bursty { burst: total, period_ms: 0.0 };
+        let report = run_scenario(&service, d, total, arrivals, 2718).unwrap();
+        let m = &service.metrics;
+        let completed = report.completed.max(1) as f64;
+        let effective_overhead = match &plane {
+            Some(p) => p.stats().delivered as f64 / completed,
+            None => nw as f64 / params.k as f64,
+        };
+        let quarantines = plane.as_ref().map(|p| p.stats().quarantines).unwrap_or(0);
+        println!(
+            "{:<16} {:>8} {:>10.1} {:>10.2} {:>9} {:>12} {:>12} {:>6.2}x",
+            label,
+            report.completed,
+            report.throughput,
+            report.latency.p99 * 1e3,
+            m.corrupt_replies_injected.get(),
+            m.verify_failures.get(),
+            quarantines,
+            effective_overhead
+        );
+        rows.push(HealthRow {
+            fleet: label,
+            corrupt_injected: m.corrupt_replies_injected.get(),
+            verify_failures: m.verify_failures.get(),
+            quarantines,
+            effective_overhead,
+            report,
+        });
+    }
+    rows
+}
+
 /// The adaptive control plane's headline: the drifting-fault trace
 /// (honest → slow-burst → byz-burst → recovered) served adaptive vs
 /// static-pessimistic vs static-oracle at K=4, provisioned (S=1, E=1).
@@ -390,6 +500,7 @@ fn write_json(
     faults: &[FaultRow],
     schemes: &[SchemeRow],
     adaptive: &[DriftRow],
+    health: &[HealthRow],
     linalg: &[GemmSweepRow],
 ) {
     let base = rows[0].report.throughput;
@@ -466,6 +577,27 @@ fn write_json(
             row.s,
             row.e,
             if i + 1 < adaptive.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ],\n");
+    out.push_str("  \"health_rows\": [\n");
+    for (i, row) in health.iter().enumerate() {
+        let r = &row.report;
+        out.push_str(&format!(
+            "    {{\"fleet\": \"{}\", \"throughput_rps\": {:.1}, \"p50_ms\": {:.2}, \
+             \"p99_ms\": {:.2}, \"completed\": {}, \"failed\": {}, \"corrupt_injected\": {}, \
+             \"verify_failures\": {}, \"quarantines\": {}, \"effective_overhead\": {:.2}}}{}\n",
+            row.fleet,
+            r.throughput,
+            r.latency.p50 * 1e3,
+            r.latency.p99 * 1e3,
+            r.completed,
+            r.failed,
+            row.corrupt_injected,
+            row.verify_failures,
+            row.quarantines,
+            row.effective_overhead,
+            if i + 1 < health.len() { "," } else { "" }
         ));
     }
     out.push_str("  ],\n");

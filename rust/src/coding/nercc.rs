@@ -645,32 +645,34 @@ impl ServingScheme for NerccCode {
         // Prevalence evidence for the adaptive controller: flagged workers
         // whose replies actually disagree with a decode verification
         // vouched for.
-        let confirmed_adversaries = match verify {
+        let (confirmed_adversaries, convicted) = match verify {
             Some(report) if report.passed => {
                 let present: Vec<usize> =
                     flagged.iter().copied().filter(|&i| replies[i].is_some()).collect();
                 if present.is_empty() {
-                    Some(0)
+                    (Some(0), Vec::new())
                 } else {
                     let prows: Vec<&[f32]> =
                         predictions.iter().map(|p| p.as_slice()).collect();
                     let scale = 1.0 + residual_scale(&decode_set, replies);
-                    Some(
-                        self.node_residuals(&present, replies, &prows)
-                            .into_iter()
-                            .filter(|r| r / scale > policy.tol)
-                            .count(),
-                    )
+                    let convicted: Vec<usize> = present
+                        .iter()
+                        .copied()
+                        .zip(self.node_residuals(&present, replies, &prows))
+                        .filter(|(_, r)| r / scale > policy.tol)
+                        .map(|(i, _)| i)
+                        .collect();
+                    (Some(convicted.len()), convicted)
                 }
             }
-            _ => None,
+            _ => (None, Vec::new()),
         };
 
         let evicted = self.take_cache_evictions();
         if evicted > 0 {
             metrics.decode_cache_evictions.add(evicted);
         }
-        Ok(SchemeDecode { predictions, decode_set, flagged, confirmed_adversaries, verify })
+        Ok(SchemeDecode { predictions, decode_set, flagged, confirmed_adversaries, convicted, verify })
     }
 
     fn reconfigure(&self, s: usize, e: usize) -> Result<Arc<dyn ServingScheme>> {

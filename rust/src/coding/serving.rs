@@ -184,6 +184,15 @@ pub struct SchemeDecode {
     /// prevalence evidence. `None` when verification did not run or did
     /// not pass (no trustworthy decode to measure against).
     pub confirmed_adversaries: Option<usize>,
+    /// Worker indices whose replies verification *confirmed* adversarial
+    /// (the attributions behind `confirmed_adversaries` — for ApproxIFER
+    /// the flagged workers whose re-encode residual exceeds tolerance, for
+    /// replication every vote loser). Empty when verification did not run
+    /// or did not pass. The worker health plane's per-slot conviction
+    /// evidence. NOTE: replication's `confirmed_adversaries` is the worst
+    /// *per-query* disagreeing-copy count (the budget dimension), so it is
+    /// not necessarily `convicted.len()` there.
+    pub convicted: Vec<usize>,
     /// Verification report (`None` when verification is off or the scheme
     /// has no redundancy left to cross-check).
     pub verify: Option<VerifyReport>,
@@ -371,16 +380,19 @@ impl ServingScheme for ApproxIferCode {
         )?;
         // Prevalence evidence for the adaptive controller: only measurable
         // against a decode verification vouched for.
-        let confirmed_adversaries = match verify {
-            Some(report) if report.passed => Some(confirm_flagged(
-                self,
-                &flagged,
-                &decode_set,
-                replies,
-                &predictions,
-                policy.tol,
-            )),
-            _ => None,
+        let (confirmed_adversaries, convicted) = match verify {
+            Some(report) if report.passed => {
+                let convicted = confirm_flagged(
+                    self,
+                    &flagged,
+                    &decode_set,
+                    replies,
+                    &predictions,
+                    policy.tol,
+                );
+                (Some(convicted.len()), convicted)
+            }
+            _ => (None, Vec::new()),
         };
         // Drain decode-matrix cache evictions into the observing service's
         // metrics (the code object may be shared; counts land with whoever
@@ -389,7 +401,7 @@ impl ServingScheme for ApproxIferCode {
         if evicted > 0 {
             metrics.decode_cache_evictions.add(evicted);
         }
-        Ok(SchemeDecode { predictions, decode_set, flagged, confirmed_adversaries, verify })
+        Ok(SchemeDecode { predictions, decode_set, flagged, confirmed_adversaries, convicted, verify })
     }
 
     fn reconfigure(&self, s: usize, e: usize) -> Result<Arc<dyn ServingScheme>> {
@@ -578,11 +590,11 @@ impl ServingScheme for Replication {
         // the budget dimension is corrupt copies per query, so prevalence
         // evidence is the worst per-query disagreeing count. Only reported
         // off a vote that proved its majority.
-        let confirmed_adversaries = match verify {
-            Some(report) if report.passed => Some(worst_disagreeing),
-            _ => None,
+        let (confirmed_adversaries, convicted) = match verify {
+            Some(report) if report.passed => (Some(worst_disagreeing), flagged.clone()),
+            _ => (None, Vec::new()),
         };
-        Ok(SchemeDecode { predictions, decode_set, flagged, confirmed_adversaries, verify })
+        Ok(SchemeDecode { predictions, decode_set, flagged, confirmed_adversaries, convicted, verify })
     }
 
     fn reconfigure(&self, s: usize, e: usize) -> Result<Arc<dyn ServingScheme>> {
@@ -721,6 +733,7 @@ impl ServingScheme for ParmProxy {
             decode_set,
             flagged: Vec::new(),
             confirmed_adversaries: None,
+            convicted: Vec::new(),
             verify: None,
         })
     }
@@ -800,6 +813,7 @@ impl ServingScheme for Uncoded {
             decode_set: (0..self.k).collect(),
             flagged: Vec::new(),
             confirmed_adversaries: None,
+            convicted: Vec::new(),
             verify: None,
         })
     }
@@ -878,14 +892,15 @@ fn node_residuals(
         .collect()
 }
 
-/// Of the locator's `flagged` workers, count those whose replies *actually*
-/// disagree with the verified decode (re-encode residual above `tol`,
-/// normalized like [`verify_residual`]).
+/// Of the locator's `flagged` workers, the indices whose replies
+/// *actually* disagree with the verified decode (re-encode residual above
+/// `tol`, normalized like [`verify_residual`]).
 ///
 /// With `E > 0` the locator is forced to flag `E` workers even on an
 /// all-honest group, so the raw flag count always reads `E`; this
 /// post-verification check is what turns flags into a usable Byzantine
-/// *prevalence* signal for the adaptive controller. Flagged workers whose
+/// *prevalence* signal for the adaptive controller and into per-slot
+/// conviction evidence for the worker health plane. Flagged workers whose
 /// reply is missing count as stragglers, not adversaries.
 pub fn confirm_flagged(
     code: &ApproxIferCode,
@@ -894,17 +909,20 @@ pub fn confirm_flagged(
     replies: &[Option<RowView>],
     predictions: &[RowView],
     tol: f64,
-) -> usize {
+) -> Vec<usize> {
     let present: Vec<usize> =
         flagged.iter().copied().filter(|&i| replies[i].is_some()).collect();
     if present.is_empty() {
-        return 0;
+        return Vec::new();
     }
     let scale = residual_scale(decode_set, replies);
-    node_residuals(code, &present, replies, predictions)
-        .into_iter()
-        .filter(|r| r / (1.0 + scale) > tol)
-        .count()
+    present
+        .iter()
+        .copied()
+        .zip(node_residuals(code, &present, replies, predictions))
+        .filter(|(_, r)| r / (1.0 + scale) > tol)
+        .map(|(i, _)| i)
+        .collect()
 }
 
 /// [`locate_and_decode`] wrapped in the verification ladder's in-decode
@@ -1126,6 +1144,7 @@ mod tests {
         assert!(v.passed, "honest group must verify (residual {})", v.residual);
         assert_eq!(out.flagged.len(), 1, "E=1 locator always flags one");
         assert_eq!(out.confirmed_adversaries, Some(0), "honest flags are false alarms");
+        assert!(out.convicted.is_empty(), "no conviction evidence on an honest group");
     }
 
     #[test]
@@ -1142,6 +1161,7 @@ mod tests {
         assert!(v.passed, "located corruption must verify out (residual {})", v.residual);
         assert!(out.flagged.contains(&3), "corrupted worker must be flagged");
         assert_eq!(out.confirmed_adversaries, Some(1));
+        assert_eq!(out.convicted, vec![3], "conviction attributes the corrupted slot");
     }
 
     #[test]
@@ -1239,6 +1259,7 @@ mod tests {
         let v = out.verify.expect("verification ran");
         assert!(v.passed, "2-of-3 majority must verify (residual {})", v.residual);
         assert_eq!(out.confirmed_adversaries, Some(1), "vote loser is confirmed prevalence");
+        assert_eq!(out.convicted, vec![bad], "vote loser is convicted by slot");
         assert!(m.byzantine_flagged.get() >= 1);
     }
 

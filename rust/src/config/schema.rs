@@ -10,7 +10,7 @@ use crate::coordinator::{
     AdaptiveConfig, AdmissionConfig, Priority, ShedPolicy, Strategy, TenantSpec,
 };
 use crate::sim::faults::FaultProfile;
-use crate::workers::{FleetConfig, LatencyModel};
+use crate::workers::{FleetConfig, HealthConfig, LatencyModel};
 
 use super::parser::ConfigDoc;
 
@@ -55,6 +55,16 @@ pub const KNOWN_KEYS: &[&str] = &[
     "fleet.miss_threshold",
     "tenants.enabled",
     "tenants.capacity",
+    "health.enabled",
+    "health.quarantine_threshold",
+    "health.decay",
+    "health.conviction_weight",
+    "health.error_weight",
+    "health.straggle_weight",
+    "health.heartbeat_weight",
+    "health.probation_ms",
+    "health.probation_passes",
+    "health.emergency_verify_failures",
 ];
 
 /// Fields accepted under a `tenants.<name>.` prefix. The `<name>` segment
@@ -136,6 +146,14 @@ pub struct AppConfig {
     /// join instead of spawning in-process worker threads. `None` when
     /// `fleet.enabled` is unset/false.
     pub fleet: Option<FleetConfig>,
+    /// Worker health plane (`health.*` namespace): per-slot suspicion
+    /// scoring over decode-path and heartbeat evidence, quarantine with
+    /// spare-backed slot replacement, and probation-based re-entry. `None`
+    /// when `health.enabled` is unset/false — every slot then stays in the
+    /// dispatch rotation no matter how often it's convicted. Tenants
+    /// inherit this table verbatim (the plane guards the shared physical
+    /// fleet, so it cannot differ per tenant).
+    pub health: Option<HealthConfig>,
     /// Multi-tenant serving (`tenants.*` namespace): one shared fleet,
     /// one service pipeline per tenant, fairness-scheduled dispatch.
     /// `None` when `tenants.enabled` is unset/false — the server then
@@ -181,6 +199,7 @@ impl Default for AppConfig {
             admission: None,
             worker_latency: LatencyModel::None,
             fleet: None,
+            health: None,
             tenants: None,
             fault_profile: None,
             verify_decode: false,
@@ -427,6 +446,59 @@ impl AppConfig {
                 }
             }
         }
+        if doc.get_bool("health.enabled")?.unwrap_or(false) {
+            let mut h = HealthConfig::default();
+            if let Some(v) = doc.get_f64("health.quarantine_threshold")? {
+                h.quarantine_threshold = v;
+            }
+            if let Some(v) = doc.get_f64("health.decay")? {
+                h.decay = v;
+            }
+            if let Some(v) = doc.get_f64("health.conviction_weight")? {
+                h.conviction_weight = v;
+            }
+            if let Some(v) = doc.get_f64("health.error_weight")? {
+                h.error_weight = v;
+            }
+            if let Some(v) = doc.get_f64("health.straggle_weight")? {
+                h.straggle_weight = v;
+            }
+            if let Some(v) = doc.get_f64("health.heartbeat_weight")? {
+                h.heartbeat_weight = v;
+            }
+            if let Some(v) = doc.get_usize("health.probation_ms")? {
+                h.probation_ms = v as u64;
+            }
+            if let Some(v) = doc.get_usize("health.probation_passes")? {
+                h.probation_passes = v;
+            }
+            if let Some(v) = doc.get_usize("health.emergency_verify_failures")? {
+                h.emergency_verify_failures = v;
+            }
+            // Range semantics (threshold > 0, decay in [0,1), weights >= 0,
+            // probation_passes/emergency >= 1) live in one place: the
+            // plane's own validator.
+            h.validate().context("health.* config")?;
+            cfg.health = Some(h);
+        } else {
+            // Same rule as adaptive.*/admission.*/fleet.*: tuning a
+            // disabled health plane is a footgun, not a no-op.
+            for key in [
+                "health.quarantine_threshold",
+                "health.decay",
+                "health.conviction_weight",
+                "health.error_weight",
+                "health.straggle_weight",
+                "health.heartbeat_weight",
+                "health.probation_ms",
+                "health.probation_passes",
+                "health.emergency_verify_failures",
+            ] {
+                if doc.get_str(key).is_some() {
+                    bail!("'{key}' is set but health.enabled is not true");
+                }
+            }
+        }
         if let Some(v) = doc.get_bool("serving.verify_decode")? {
             cfg.verify_decode = v;
         }
@@ -568,6 +640,7 @@ impl AppConfig {
                 spec.batch_deadline = cfg.batch_deadline;
                 spec.group_timeout = cfg.group_timeout;
                 spec.nercc = cfg.nercc;
+                spec.health = cfg.health.clone();
                 if spec.slo.is_some() && spec.params.e > 0 && !spec.verify.enabled {
                     bail!(
                         "tenants.{name}.slo_ms with e > 0 requires \
@@ -1024,6 +1097,73 @@ mod tests {
         .unwrap();
         let err = AppConfig::from_doc(&doc).unwrap_err();
         assert!(format!("{err:#}").contains("verify_decode"), "{err:#}");
+    }
+
+    #[test]
+    fn health_knobs_parse_gate_and_inherit() {
+        let doc = ConfigDoc::parse(
+            r#"
+            [health]
+            enabled = true
+            quarantine_threshold = 4.5
+            decay = 0.9
+            conviction_weight = 3.0
+            error_weight = 0.5
+            straggle_weight = 0.1
+            heartbeat_weight = 2.0
+            probation_ms = 400
+            probation_passes = 3
+            emergency_verify_failures = 5
+            "#,
+        )
+        .unwrap();
+        let cfg = AppConfig::from_doc(&doc).unwrap();
+        let h = cfg.health.expect("health enabled");
+        assert_eq!(h.quarantine_threshold, 4.5);
+        assert_eq!(h.decay, 0.9);
+        assert_eq!(h.conviction_weight, 3.0);
+        assert_eq!(h.error_weight, 0.5);
+        assert_eq!(h.straggle_weight, 0.1);
+        assert_eq!(h.heartbeat_weight, 2.0);
+        assert_eq!(h.probation_ms, 400);
+        assert_eq!(h.probation_passes, 3);
+        assert_eq!(h.emergency_verify_failures, 5);
+
+        // Defaults apply when only the switch is set.
+        let doc = ConfigDoc::parse("[health]\nenabled = true\n").unwrap();
+        let h = AppConfig::from_doc(&doc).unwrap().health.unwrap();
+        assert_eq!(h, HealthConfig::default());
+
+        // Orphan sub-keys without the master switch are refused.
+        let doc = ConfigDoc::parse("[health]\ndecay = 0.5\n").unwrap();
+        let err = AppConfig::from_doc(&doc).unwrap_err();
+        assert!(format!("{err:#}").contains("health.enabled"), "{err:#}");
+
+        // Out-of-range values fail at load time through the plane's own
+        // validator.
+        for bad in [
+            "quarantine_threshold = 0",
+            "decay = 1.0",
+            "decay = -0.1",
+            "conviction_weight = -1.0",
+            "probation_passes = 0",
+            "emergency_verify_failures = 0",
+        ] {
+            let doc =
+                ConfigDoc::parse(&format!("[health]\nenabled = true\n{bad}\n")).unwrap();
+            assert!(AppConfig::from_doc(&doc).is_err(), "{bad} should be rejected");
+        }
+
+        // Tenants inherit the shared plane's table verbatim.
+        let doc = ConfigDoc::parse(
+            "[health]\nenabled = true\nquarantine_threshold = 5.0\n\
+             [tenants]\nenabled = true\nalpha.k = 2\nalpha.s = 1\n",
+        )
+        .unwrap();
+        let cfg = AppConfig::from_doc(&doc).unwrap();
+        let t = cfg.tenants.expect("tenants enabled");
+        assert_eq!(t.specs[0].health, cfg.health);
+        assert_eq!(t.specs[0].health.as_ref().unwrap().quarantine_threshold, 5.0);
     }
 
     #[test]

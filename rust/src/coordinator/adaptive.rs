@@ -67,6 +67,15 @@ pub struct AdaptiveConfig {
     pub e_min: usize,
     /// Upper bound for the Byzantine budget (the provisioned fleet).
     pub e_max: usize,
+    /// Emergency raise: this many *consecutive* verification failures
+    /// trigger an immediate one-step `E` raise without waiting out the
+    /// rest of a window (`None` disables — the default; wired from
+    /// `health.emergency_verify_failures` when the health plane is on).
+    /// A full window's decision subsumes it, so the emergency path only
+    /// fires mid-window, and it clears the window: the post-raise
+    /// baseline starts fresh, preventing the same evidence from raising
+    /// twice.
+    pub emergency_verify_failures: Option<usize>,
 }
 
 impl Default for AdaptiveConfig {
@@ -79,6 +88,7 @@ impl Default for AdaptiveConfig {
             s_max: usize::MAX,
             e_min: 0,
             e_max: usize::MAX,
+            emergency_verify_failures: None,
         }
     }
 }
@@ -144,6 +154,8 @@ pub struct AdaptiveController {
     calm_s: usize,
     /// Consecutive calm windows (Byzantine loop).
     calm_e: usize,
+    /// Consecutive verification failures (emergency-raise trigger).
+    verify_fail_streak: usize,
     /// Whether an SLO is configured (no SLO → the `S` loop holds still).
     slo_aware: bool,
     epochs: u64,
@@ -160,6 +172,7 @@ impl AdaptiveController {
             window: Vec::with_capacity(cfg.window),
             calm_s: 0,
             calm_e: 0,
+            verify_fail_streak: 0,
             slo_aware: slo.is_some(),
             epochs: 0,
         }
@@ -185,6 +198,7 @@ impl AdaptiveController {
         self.window.clear();
         self.calm_s = 0;
         self.calm_e = 0;
+        self.verify_fail_streak = 0;
     }
 
     /// Epochs issued so far.
@@ -196,8 +210,31 @@ impl AdaptiveController {
     /// return a [`Reconfigure`] epoch (already recorded as the new
     /// operating point — the caller's job is only to apply it).
     pub fn observe(&mut self, obs: GroupObservation) -> Option<Reconfigure> {
+        if obs.verify_failed {
+            self.verify_fail_streak += 1;
+        } else {
+            self.verify_fail_streak = 0;
+        }
         self.window.push(obs);
         if self.window.len() < self.cfg.window {
+            // Emergency raise: an unbroken run of verification failures is
+            // corruption past the budget landing *right now* — every group
+            // in it rode the escalation ladder (often to a redispatch).
+            // Waiting out the window just queues more casualties, so step
+            // `E` immediately. The window is cleared: evidence observed
+            // under the old budget must not also drive the next boundary
+            // decision (no double-raise from one burst).
+            if let Some(threshold) = self.cfg.emergency_verify_failures {
+                if self.verify_fail_streak >= threshold && self.e < self.cfg.e_max {
+                    let e = (self.e + 1).clamp(self.cfg.e_min, self.cfg.e_max);
+                    self.window.clear();
+                    self.verify_fail_streak = 0;
+                    self.calm_e = 0;
+                    self.e = e;
+                    self.epochs += 1;
+                    return Some(Reconfigure { s: self.s, e });
+                }
+            }
             return None;
         }
         self.decide()
@@ -449,6 +486,65 @@ mod tests {
         }
         assert_eq!(c.current(), (0, 0));
         assert_eq!(c.epochs(), 0, "nothing left to shed from the budget");
+    }
+
+    #[test]
+    fn emergency_raise_fires_mid_window_on_a_failure_streak() {
+        let mut c = AdaptiveController::new(
+            AdaptiveConfig { emergency_verify_failures: Some(3), ..cfg(32, 2) },
+            1,
+            0,
+            None,
+        );
+        let bad = GroupObservation { verify_failed: true, ..calm() };
+        assert_eq!(c.observe(bad), None);
+        assert_eq!(c.observe(bad), None);
+        // Third consecutive failure, 29 observations short of the window:
+        // the emergency path must not wait.
+        assert_eq!(c.observe(bad), Some(Reconfigure { s: 1, e: 1 }));
+        assert_eq!(c.current(), (1, 1));
+        // The window was cleared: the burst's evidence cannot also drive a
+        // boundary decision. After the coordinator applies and syncs, calm
+        // traffic produces no post-window double-raise.
+        c.sync(1, 1);
+        for _ in 0..40 {
+            assert!(c.observe(calm()).is_none() || c.current().1 <= 1);
+        }
+        assert_eq!(c.current().1, 1, "no second raise without new failures");
+    }
+
+    #[test]
+    fn calm_and_interleaved_traffic_never_trips_the_emergency_path() {
+        let mut c = AdaptiveController::new(
+            AdaptiveConfig { emergency_verify_failures: Some(3), ..cfg(32, 2) },
+            0,
+            0,
+            None,
+        );
+        let bad = GroupObservation { verify_failed: true, ..calm() };
+        // Failures interleaved with clean decodes never build a streak.
+        for _ in 0..10 {
+            assert_eq!(c.observe(bad), None);
+            assert_eq!(c.observe(bad), None);
+            assert_eq!(c.observe(calm()), None, "streak broken before the threshold");
+        }
+        assert_eq!(c.current(), (0, 0));
+        assert_eq!(c.epochs(), 0);
+    }
+
+    #[test]
+    fn emergency_raise_respects_the_provisioned_ceiling() {
+        let mut c = AdaptiveController::new(
+            AdaptiveConfig { emergency_verify_failures: Some(2), ..cfg(32, 2) },
+            0,
+            2,
+            None,
+        );
+        let bad = GroupObservation { verify_failed: true, ..calm() };
+        for _ in 0..6 {
+            assert_eq!(c.observe(bad), None, "already at e_max");
+        }
+        assert_eq!(c.current(), (0, 2));
     }
 
     #[test]

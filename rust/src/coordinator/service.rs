@@ -106,8 +106,8 @@ use crate::coding::{BlockPool, CollectPolicy, GroupBlock, RowView, ServingScheme
 use crate::metrics::ServingMetrics;
 use crate::sim::faults::FaultProfile;
 use crate::workers::{
-    CollectedGroup, InferenceEngine, LatencyModel, ReplyRouter, WorkerFleet, WorkerPool,
-    WorkerSpec, WorkerTask,
+    CollectedGroup, HealthConfig, HealthGate, HealthPlane, InferenceEngine, LatencyModel,
+    ReplyRouter, WorkerFleet, WorkerPool, WorkerSpec, WorkerTask,
 };
 
 use super::adaptive::{AdaptiveConfig, AdaptiveController, GroupObservation};
@@ -128,6 +128,16 @@ struct Tuning {
     adaptive: Option<AdaptiveConfig>,
     fault_hook: Option<Arc<dyn Fn(u64) -> FaultPlan + Send + Sync>>,
     fairness: Option<FairLease>,
+    /// Build an internal health plane over the fleet at spawn.
+    health: Option<HealthConfig>,
+    /// Pre-built shared plane (tenant registries, tests): the caller
+    /// already wrapped the fleet in a [`HealthGate`]; this service only
+    /// registers its collect quota and feeds decode evidence.
+    health_plane: Option<Arc<HealthPlane>>,
+    /// Tenant tag OR'd onto group ids before any plane call, so probe keys
+    /// and quota registrations from different tenants sharing one plane
+    /// never collide (0 for a single-tenant service).
+    health_tag: u64,
 }
 
 /// What the batcher builds its worker fleet from: an engine + specs for
@@ -232,6 +242,8 @@ pub struct ServiceBuilder {
     fault_hook: Option<Arc<dyn Fn(u64) -> FaultPlan + Send + Sync>>,
     fleet: Option<Box<dyn WorkerFleet>>,
     fairness: Option<FairLease>,
+    health: Option<HealthConfig>,
+    health_plane: Option<(Arc<HealthPlane>, u64)>,
 }
 
 impl ServiceBuilder {
@@ -254,6 +266,8 @@ impl ServiceBuilder {
             fault_hook: None,
             fleet: None,
             fairness: None,
+            health: None,
+            health_plane: None,
         }
     }
 
@@ -385,6 +399,31 @@ impl ServiceBuilder {
         self
     }
 
+    /// Enable the worker health plane over this service's fleet: the
+    /// batcher wraps the fleet in a [`HealthGate`] at spawn, per-slot
+    /// evidence from every decode feeds EWMA suspicion scores, and slots
+    /// crossing `health.quarantine_threshold` are quarantined (backfilled
+    /// from spare fleet capacity, or absorbed as standing stragglers under
+    /// the collect-quota clamp) until probation reinstates them. Mutually
+    /// exclusive with [`ServiceBuilder::health_plane`].
+    pub fn health(mut self, cfg: HealthConfig) -> Self {
+        self.health = Some(cfg);
+        self
+    }
+
+    /// Feed decode evidence into a pre-built shared [`HealthPlane`]
+    /// instead of building one: the caller has already wrapped the fleet
+    /// passed to [`ServiceBuilder::fleet`] in a [`HealthGate`] over this
+    /// plane (the tenant registry's path — one plane scores the physical
+    /// fleet while every tenant's pipeline convicts through it). `tag` is
+    /// OR'd onto group ids for plane calls (the tenant tag; 0 when the
+    /// fleet is not multiplexed) and must match what the gate sees on the
+    /// wire. Mutually exclusive with [`ServiceBuilder::health`].
+    pub fn health_plane(mut self, plane: Arc<HealthPlane>, tag: u64) -> Self {
+        self.health_plane = Some((plane, tag));
+        self
+    }
+
     /// Gate dispatch through a shared fairness scheduler. Each group this
     /// service puts in flight first acquires a slot from the lease's
     /// weighted round-robin scheduler, so tenants sharing one fleet get
@@ -456,6 +495,15 @@ impl ServiceBuilder {
                  evidence",
                 scheme.byzantine_tolerated()
             );
+        }
+        if let Some(h) = &self.health {
+            h.validate().map_err(|e| anyhow::anyhow!("service '{name}': {e}"))?;
+            if self.health_plane.is_some() {
+                bail!(
+                    "service '{name}': health() and health_plane() are mutually \
+                     exclusive — a shared plane's gate is built by its owner"
+                );
+            }
         }
         // The collect policy is consulted by the router on every reply;
         // an inconsistent one must fail here (and at every reconfigure
@@ -547,6 +595,9 @@ impl ServiceBuilder {
             adaptive: self.adaptive,
             fault_hook: self.fault_hook,
             fairness: self.fairness,
+            health: self.health,
+            health_plane: self.health_plane.as_ref().map(|(p, _)| p.clone()),
+            health_tag: self.health_plane.map_or(0, |(_, tag)| tag),
         };
         let metrics = Arc::new(ServingMetrics::new());
         metrics.current_s.set(scheme.stragglers_tolerated() as u64);
@@ -1064,6 +1115,9 @@ struct Dispatcher {
     /// requests can't leave the controller reasoning from a stale
     /// baseline (and silently reverting the operator).
     controller: Option<Arc<Mutex<AdaptiveController>>>,
+    /// Worker health plane (re-registers the collect quota on every
+    /// applied epoch so the suppression clamp tracks the live scheme).
+    plane: Option<Arc<HealthPlane>>,
     group_counter: u64,
     /// `queries_shed + queries_rejected` as of the previous dispatch —
     /// the delta stamps `shed_pressure` on each new group.
@@ -1271,6 +1325,10 @@ impl Dispatcher {
                         .unwrap()
                         .sync(new.stragglers_tolerated(), new.byzantine_tolerated());
                 }
+                if let Some(plane) = &self.plane {
+                    // The clamp must defend the *new* quota from now on.
+                    plane.register_policy(self.tuning.health_tag, &policy);
+                }
                 self.scheme = new;
                 self.policy = policy;
             }
@@ -1305,6 +1363,30 @@ fn batcher_loop(
             fleet
         }
     };
+    // Worker health plane. The internal path (`ServiceBuilder::health`)
+    // builds the plane and wraps the fleet in a [`HealthGate`] here; the
+    // shared-plane path (`ServiceBuilder::health_plane`) expects the
+    // caller to have wrapped the fleet already (the tenant registry gates
+    // the physical fleet *before* the mux splits it), so this service only
+    // registers its quota and feeds evidence.
+    let health_plane: Option<Arc<HealthPlane>> = match (&tuning.health, &tuning.health_plane)
+    {
+        (Some(cfg), _) => {
+            let plane = Arc::new(HealthPlane::new(cfg.clone(), tuning.seed ^ 0x48EA));
+            plane.attach_metrics(metrics.clone());
+            // Out-of-band evidence (remote heartbeat misses) first, so the
+            // inner fleet reports physical slots directly to the plane.
+            fleet.attach_health(plane.clone());
+            fleet = Box::new(HealthGate::attach(fleet, scheme.num_workers(), plane.clone()));
+            Some(plane)
+        }
+        (None, Some(plane)) => Some(plane.clone()),
+        (None, None) => None,
+    };
+    if let Some(plane) = &health_plane {
+        // The collect quota the clamp must preserve for this pipeline.
+        plane.register_policy(tuning.health_tag, &policy);
+    }
     let replies = fleet.take_replies().expect("fleet reply stream already taken");
     let router = ReplyRouter::start(replies, metrics.clone());
     let ctxs: CtxMap = Arc::new(Mutex::new(HashMap::new()));
@@ -1319,12 +1401,16 @@ fn batcher_loop(
     // so the control plane tunes within it and can always climb back.
     let controller = tuning.adaptive.map(|cfg| {
         let (s0, e0) = (scheme.stragglers_tolerated(), scheme.byzantine_tolerated());
-        Arc::new(Mutex::new(AdaptiveController::new(
-            cfg.bounded_by(s0, e0),
-            s0,
-            e0,
-            tuning.slo,
-        )))
+        let mut cfg = cfg.bounded_by(s0, e0);
+        // The health plane arms the emergency raise path by default: a run
+        // of `health.emergency_verify_failures` consecutive verification
+        // failures raises E mid-window instead of waiting the window out.
+        if cfg.emergency_verify_failures.is_none() {
+            if let Some(plane) = &health_plane {
+                cfg.emergency_verify_failures = Some(plane.config().emergency_verify_failures);
+            }
+        }
+        Arc::new(Mutex::new(AdaptiveController::new(cfg, s0, e0, tuning.slo)))
     });
     let mut decode_handles = Vec::new();
     for t in 0..tuning.decode_threads {
@@ -1338,6 +1424,8 @@ fn batcher_loop(
             slo: tuning.slo,
             controller: controller.clone(),
             blocks: blocks.clone(),
+            plane: health_plane.clone(),
+            health_tag: tuning.health_tag,
         };
         let handle = std::thread::Builder::new()
             .name(format!("decode-{t}"))
@@ -1361,6 +1449,7 @@ fn batcher_loop(
         decode_tx,
         metrics,
         controller,
+        plane: health_plane,
         group_counter: 0,
         last_shed: 0,
     };
@@ -1441,6 +1530,11 @@ struct DecodeEnv {
     /// Decode-output blocks are taken from (and retire back to) the
     /// service's shared buffer pool.
     blocks: BlockPool,
+    /// Worker health plane (per-slot evidence sink), when enabled.
+    plane: Option<Arc<HealthPlane>>,
+    /// Tenant tag OR'd back onto group ids for plane calls — the gate saw
+    /// tagged groups on the wire; this decode loop sees untagged ones.
+    health_tag: u64,
 }
 
 impl DecodeEnv {
@@ -1453,6 +1547,25 @@ impl DecodeEnv {
                 let _ = ingress.push_control(Control::Reconfigure { s: epoch.s, e: epoch.e });
             }
         }
+    }
+
+    /// Feed one collected group's per-slot evidence to the health plane:
+    /// settle its probation probes against the (verified) reply set, then
+    /// score convictions, error replies and straggles. Hedged deliveries
+    /// contribute no straggle evidence — an early delivery leaves most of
+    /// the fleet legitimately "late".
+    fn observe_health(&self, collected: &CollectedGroup, convicted: &[usize], verify_ok: bool) {
+        let Some(plane) = &self.plane else { return };
+        let tagged = self.health_tag | collected.group;
+        plane.resolve_probes(tagged, &collected.replies, verify_ok);
+        let straggled: Vec<usize> = if collected.hedged {
+            Vec::new()
+        } else {
+            (0..collected.replies.len())
+                .filter(|&i| collected.replies[i].is_none() && !collected.errored[i])
+                .collect()
+        };
+        plane.observe_group(convicted, &collected.errored, &straggled);
     }
 }
 
@@ -1510,6 +1623,11 @@ fn decode_loop(
         match result {
             Ok(out) => {
                 let verify_failed = out.verify.is_some_and(|report| !report.passed);
+                // Per-slot health evidence: convictions from this decode,
+                // error replies and straggles from the collection. With
+                // verification off there is no adversary oracle, so live
+                // replies are trusted for probe cross-checks.
+                env.observe_health(&collected, &out.convicted, !verify_failed);
                 if verify_failed {
                     let residual = out.verify.map_or(f64::NAN, |r| r.residual);
                     if ctx.retries < MAX_REDISPATCHES {
@@ -1580,6 +1698,10 @@ fn decode_loop(
                 );
             }
             Err(e) => {
+                // No decode to convict against; error replies and
+                // straggles are still per-slot evidence, and outstanding
+                // probes resolve inconclusive (no verified reference).
+                env.observe_health(&collected, &[], false);
                 // Honest SLO accounting on the failure paths too: the
                 // miss is a fact about elapsed time, not about the
                 // outcome (a fail-fast undecodable group can die well

@@ -32,7 +32,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::coding::{CodeParams, NerccTuning, VerifyPolicy};
 use crate::metrics::ServingMetrics;
-use crate::workers::{FleetMux, WorkerFleet};
+use crate::workers::{tag_group, FleetMux, HealthConfig, HealthGate, HealthPlane, WorkerFleet};
 
 use super::adaptive::AdaptiveConfig;
 use super::service::{AdmissionConfig, Priority, Service, ServiceBuilder};
@@ -271,6 +271,12 @@ pub struct TenantSpec {
     /// NeRCC ridge weights (inherited from the global `nercc.*` knobs;
     /// ignored unless `strategy` is [`Strategy::Nercc`]).
     pub nercc: NerccTuning,
+    /// Worker health plane config (inherited from the global `health.*`
+    /// table by the config loader). The plane guards *physical* fleet
+    /// slots shared by every tenant, so the registry builds exactly one
+    /// shared plane and requires all tenants that set this to agree on
+    /// it; `None` everywhere disables the plane.
+    pub health: Option<HealthConfig>,
 }
 
 impl Default for TenantSpec {
@@ -290,6 +296,7 @@ impl Default for TenantSpec {
             batch_deadline: Duration::from_millis(20),
             group_timeout: Duration::from_secs(30),
             nercc: NerccTuning::default(),
+            health: None,
         }
     }
 }
@@ -358,7 +365,16 @@ impl Accounting {
 pub struct TenantRegistry {
     tenants: Vec<Tenant>,
     sched: Arc<FairScheduler>,
+    /// The shared worker health plane, when any tenant configured one.
+    health: Option<Arc<HealthPlane>>,
 }
+
+/// Seed for the registry's shared [`HealthPlane`]. The plane's probe
+/// scheduling must replay bit-identically across runs and there is no
+/// registry-level seed knob, so the seed is a fixed constant (the
+/// single-service path derives its plane seed from the service seed
+/// instead).
+const REGISTRY_HEALTH_SEED: u64 = 0x48EA;
 
 impl TenantRegistry {
     /// Spawn every tenant in `specs` over `fleet`. The fleet must cover
@@ -423,8 +439,56 @@ impl TenantRegistry {
                 );
             }
         }
+        // The health plane guards physical slots every tenant shares, so
+        // there is exactly one, built from the (inherited) config — mixed
+        // or disagreeing per-tenant tables would make quarantine policy
+        // depend on which tenant's evidence arrived first.
+        let mut health_cfg: Option<(String, HealthConfig)> = None;
+        for spec in &specs {
+            let Some(h) = &spec.health else { continue };
+            if let Some((first, h0)) = &health_cfg {
+                if h0 != h {
+                    bail!(
+                        "tenant '{}': health config differs from tenant '{first}' — \
+                         the health plane guards the shared fleet and must be \
+                         configured globally",
+                        spec.name
+                    );
+                }
+            } else {
+                health_cfg = Some((spec.name.clone(), h.clone()));
+            }
+        }
+        if let Some((first, _)) = &health_cfg {
+            if let Some(bare) = specs.iter().find(|s| s.health.is_none()) {
+                bail!(
+                    "tenant '{}': health is configured for tenant '{first}' but not \
+                     here — the shared plane covers every tenant or none",
+                    bare.name
+                );
+            }
+        }
         let shares: Vec<(u64, usize)> = specs.iter().map(|s| (s.weight, s.budget)).collect();
         let sched = FairScheduler::new(&shares, capacity)?;
+        // Wrap the *shared* fleet in the health gate before the mux split:
+        // the gate sees tenant-tagged groups and physical slot indices, so
+        // one plane's quarantine/backfill decisions cover every tenant.
+        let mut fleet = fleet;
+        let health = match health_cfg {
+            Some((_, cfg)) => {
+                cfg.validate().context("tenant registry: health config")?;
+                let positions = specs
+                    .iter()
+                    .map(|s| s.strategy.num_workers(s.params))
+                    .max()
+                    .expect("specs is non-empty");
+                let plane = Arc::new(HealthPlane::new(cfg, REGISTRY_HEALTH_SEED));
+                fleet.attach_health(plane.clone());
+                fleet = Box::new(HealthGate::attach(fleet, positions, plane.clone()));
+                Some(plane)
+            }
+            None => None,
+        };
         let facades = FleetMux::split(fleet, specs.len())?;
         let mut tenants = Vec::with_capacity(specs.len());
         for ((i, spec), facade) in specs.into_iter().enumerate().zip(facades) {
@@ -439,6 +503,11 @@ impl TenantRegistry {
                 // scheduler deeper than the scheduler will ever grant.
                 .max_inflight(spec.budget)
                 .verify(spec.verify);
+            if let Some(plane) = &health {
+                // The tenant tag doubles as the plane's policy key, so
+                // per-tenant collect quotas clamp quarantine independently.
+                b = b.health_plane(plane.clone(), tag_group(i as u8, 0));
+            }
             if let Some(slo) = spec.slo {
                 b = b.slo(slo);
             }
@@ -457,7 +526,19 @@ impl TenantRegistry {
             );
             tenants.push(Tenant { spec, service });
         }
-        Ok(TenantRegistry { tenants, sched })
+        if let Some(plane) = &health {
+            // The plane is fleet-wide, not per-tenant; its counters and
+            // health table land on the first tenant's metric set (the
+            // registry has no metric set of its own).
+            plane.attach_metrics(tenants[0].service.metrics.clone());
+        }
+        Ok(TenantRegistry { tenants, sched, health })
+    }
+
+    /// The shared worker health plane, if any tenant configured one —
+    /// quarantine stats and the per-slot health table for the whole fleet.
+    pub fn health_plane(&self) -> Option<&Arc<HealthPlane>> {
+        self.health.as_ref()
     }
 
     /// The spawned tenants, in spec order (= tenant tag order).
@@ -523,7 +604,7 @@ impl TenantRegistry {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::workers::{InferenceEngine, LinearMockEngine, WorkerPool, WorkerSpec};
+    use crate::workers::{InferenceEngine, LinearMockEngine, SlotState, WorkerPool, WorkerSpec};
 
     // -- scheduler ----------------------------------------------------------
 
@@ -670,6 +751,55 @@ mod tests {
         assert_eq!(g.received, 6);
         assert_eq!(g.served + g.degraded, 6);
         reg.shutdown();
+    }
+
+    #[test]
+    fn registry_builds_one_shared_health_plane_over_the_fleet() {
+        let mut specs = two_specs();
+        for s in &mut specs {
+            s.health = Some(HealthConfig::default());
+        }
+        let reg = TenantRegistry::spawn(two_tenant_fleet(), specs, 8).unwrap();
+        let plane = reg.health_plane().expect("health configured on every tenant").clone();
+        // One plane spanning the physical fleet: per-slot rows for all 5
+        // workers, every slot mapped and healthy.
+        let snap = plane.snapshot();
+        assert_eq!(snap.len(), 5);
+        assert!(snap.iter().all(|s| s.state == SlotState::Active && s.score == 0.0));
+        let alpha = reg.get("alpha").unwrap().service.clone();
+        let beta = reg.get("beta").unwrap().service.clone();
+        let query = |j: usize| (0..6).map(|t| ((j * 6 + t) as f32 * 0.1).cos()).collect::<Vec<_>>();
+        let ha: Vec<_> = (0..2).map(|j| alpha.submit(query(j))).collect();
+        let hb: Vec<_> = (0..4).map(|j| beta.submit(query(j))).collect();
+        for h in ha.into_iter().chain(hb) {
+            let pred = h.wait_timeout(Duration::from_secs(20)).expect("prediction");
+            assert!(pred.iter().all(|v| v.is_finite()));
+        }
+        // An honest fleet gathers no evidence: groups flowed through the
+        // gate, nothing was quarantined or suppressed.
+        let stats = plane.stats();
+        assert!(stats.delivered > 0, "tenant groups must dispatch through the gate");
+        assert_eq!(stats.quarantines, 0);
+        assert_eq!(stats.suppressed, 0);
+        reg.assert_balanced().unwrap();
+        reg.shutdown();
+    }
+
+    #[test]
+    fn registry_rejects_disagreeing_or_partial_health_tables() {
+        // Disagreeing configs: the plane guards shared physical slots.
+        let mut specs = two_specs();
+        specs[0].health = Some(HealthConfig::default());
+        let mut other = HealthConfig::default();
+        other.quarantine_threshold += 1.0;
+        specs[1].health = Some(other);
+        let err = TenantRegistry::spawn(two_tenant_fleet(), specs, 8).unwrap_err();
+        assert!(format!("{err:#}").contains("differs"), "{err:#}");
+        // Partial coverage: every tenant or none.
+        let mut specs = two_specs();
+        specs[0].health = Some(HealthConfig::default());
+        let err = TenantRegistry::spawn(two_tenant_fleet(), specs, 8).unwrap_err();
+        assert!(format!("{err:#}").contains("but not"), "{err:#}");
     }
 
     #[test]

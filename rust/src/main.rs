@@ -269,6 +269,17 @@ fn build_service(cfg: &AppConfig) -> Result<(Arc<Service>, usize)> {
             adaptive.cooldown
         );
     }
+    if let Some(health) = &cfg.health {
+        builder = builder.health(health.clone());
+        log::info!(
+            "worker health plane on: quarantine_threshold={} decay={} probation_ms={} \
+             probation_passes={}",
+            health.quarantine_threshold,
+            health.decay,
+            health.probation_ms,
+            health.probation_passes
+        );
+    }
     let mut fleet_handle = None;
     match &cfg.fleet {
         Some(fc) => {
@@ -423,6 +434,11 @@ fn serve_tenants(cfg: &AppConfig, tc: &approxifer::config::TenantsConfig) -> Res
             None,
         )),
     };
+    // Tenant specs inherit the global health.* table at config load; the
+    // registry builds the one shared plane over the physical fleet from it.
+    if cfg.health.is_some() {
+        log::info!("worker health plane on (shared across all tenants)");
+    }
     let registry = TenantRegistry::spawn(fleet, tc.specs.clone(), tc.capacity)?;
     if let Some(handle) = fleet_handle {
         if !handle.wait_for_workers(need, std::time::Duration::from_secs(10)) {

@@ -241,6 +241,16 @@ pub struct ServingMetrics {
     /// Spare worker slots admitted into the dispatched range at a
     /// `Reconfigure` epoch boundary (see `fleet.spare_slots`).
     pub fleet_spares_admitted: Counter,
+    /// Worker slots quarantined by the health plane (suspicion score
+    /// crossed `health.quarantine_threshold`).
+    pub worker_quarantines: Counter,
+    /// Quarantined slots that entered probation (shadow probing).
+    pub worker_probations: Counter,
+    /// Probationed slots reinstated after clean probes.
+    pub worker_reinstated: Counter,
+    /// The health plane's per-slot table, refreshed on every observation
+    /// (empty when no plane is attached); appended to [`ServingMetrics::report`].
+    pub health_table: Mutex<String>,
     /// Remote workers currently connected.
     pub fleet_live: Gauge,
     /// Queued (admitted, not yet batched) queries after the last admit.
@@ -327,6 +337,18 @@ impl ServingMetrics {
             self.fleet_heartbeats.get(),
             self.fleet_spares_admitted.get(),
         ));
+        out.push_str(&format!(
+            "health: quarantines={} probations={} reinstated={}\n",
+            self.worker_quarantines.get(),
+            self.worker_probations.get(),
+            self.worker_reinstated.get(),
+        ));
+        {
+            let table = self.health_table.lock().unwrap();
+            if !table.is_empty() {
+                out.push_str(&table);
+            }
+        }
         out.push_str(&self.group_latency.summary_line("  group"));
         out.push('\n');
         out.push_str(&self.encode_latency.summary_line("  encode"));

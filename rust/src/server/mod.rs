@@ -263,35 +263,108 @@ fn serve_conn(mut stream: TcpStream, tenants: &[(Arc<Service>, usize)]) -> Resul
 }
 
 /// Client for the serving protocol.
+///
+/// By default a request blocks until the server answers and any failure
+/// surfaces immediately. [`Client::with_timeout`] bounds each request's
+/// read, and [`Client::with_retries`] retries *transient transport*
+/// failures (a dropped/refused connection, an EOF from a restarting
+/// front-end, a timed-out read) on a fresh connection with linear
+/// backoff. Only the idempotent round-trips retry — predictions are pure
+/// reads of the model, so a duplicate submission is harmless — and a
+/// server-side `ST_ERR` reply is a *result*, never retried.
 pub struct Client {
+    addr: SocketAddr,
     stream: TcpStream,
     next_id: AtomicU64,
+    timeout: Option<Duration>,
+    retries: u32,
+    backoff: Duration,
 }
 
 impl Client {
     pub fn connect(addr: &SocketAddr) -> Result<Client> {
         let stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
         stream.set_nodelay(true).ok();
-        Ok(Client { stream, next_id: AtomicU64::new(1) })
+        Ok(Client {
+            addr: *addr,
+            stream,
+            next_id: AtomicU64::new(1),
+            timeout: None,
+            retries: 0,
+            backoff: Duration::from_millis(20),
+        })
+    }
+
+    /// Bound every request's read: a reply that takes longer fails the
+    /// request (as a transient error, so it retries when retries are
+    /// configured).
+    pub fn with_timeout(mut self, timeout: Duration) -> Result<Client> {
+        self.stream
+            .set_read_timeout(Some(timeout))
+            .context("setting client read timeout")?;
+        self.timeout = Some(timeout);
+        Ok(self)
+    }
+
+    /// Retry transient transport failures up to `retries` times, sleeping
+    /// `backoff × attempt` between attempts.
+    pub fn with_retries(mut self, retries: u32, backoff: Duration) -> Client {
+        self.retries = retries;
+        self.backoff = backoff;
+        self
     }
 
     /// Round-trip one prediction (the single-tenant spelling: tenant 0).
     pub fn predict(&mut self, payload: &[f32]) -> Result<Vec<f32>> {
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        write_frame(&mut self.stream, OP_PREDICT, id, payload)?;
-        self.read_prediction(id)
+        self.request(|stream, id| write_frame(stream, OP_PREDICT, id, payload))
     }
 
     /// Round-trip one prediction against tenant `tenant` of a
     /// multi-tenant deployment.
     pub fn predict_tenant(&mut self, tenant: u16, payload: &[f32]) -> Result<Vec<f32>> {
-        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        write_predict_t(&mut self.stream, id, tenant, payload)?;
-        self.read_prediction(id)
+        self.request(|stream, id| write_predict_t(stream, id, tenant, payload))
     }
 
-    fn read_prediction(&mut self, id: u64) -> Result<Vec<f32>> {
-        let resp = read_frame(&mut self.stream)?;
+    /// One send/receive round-trip with the configured timeout/retry
+    /// policy. Every attempt uses a fresh request id, and a retry always
+    /// reconnects first, so a late reply on the old connection can never
+    /// be mistaken for the retry's response.
+    fn request(
+        &mut self,
+        send: impl Fn(&mut TcpStream, u64) -> Result<()>,
+    ) -> Result<Vec<f32>> {
+        let mut attempt: u32 = 0;
+        loop {
+            let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+            let outcome = send(&mut self.stream, id)
+                .and_then(|()| Self::read_prediction(&mut self.stream, id));
+            match outcome {
+                Ok(pred) => return Ok(pred),
+                Err(err) if attempt < self.retries && is_transient(&err) => {
+                    attempt += 1;
+                    log::debug!(
+                        "client: transient failure, retrying ({attempt}/{}): {err:#}",
+                        self.retries
+                    );
+                    std::thread::sleep(self.backoff * attempt);
+                    if let Ok(fresh) = TcpStream::connect(self.addr) {
+                        fresh.set_nodelay(true).ok();
+                        if let Some(t) = self.timeout {
+                            fresh.set_read_timeout(Some(t)).ok();
+                        }
+                        self.stream = fresh;
+                    }
+                    // If the reconnect itself failed, the next attempt on
+                    // the dead stream fails transiently again and consumes
+                    // another retry — bounded either way.
+                }
+                Err(err) => return Err(err),
+            }
+        }
+    }
+
+    fn read_prediction(stream: &mut TcpStream, id: u64) -> Result<Vec<f32>> {
+        let resp = read_frame(stream)?;
         if resp.id != id {
             bail!("response id {} != request id {id}", resp.id);
         }
@@ -311,6 +384,26 @@ impl Client {
         }
         Ok(())
     }
+}
+
+/// Is this a transport-level failure worth retrying on a fresh
+/// connection? Anything the *server* said (`ST_ERR`, an id mismatch) is a
+/// result, not a transient.
+fn is_transient(err: &anyhow::Error) -> bool {
+    err.chain().any(|cause| {
+        cause.downcast_ref::<std::io::Error>().is_some_and(|io| {
+            matches!(
+                io.kind(),
+                std::io::ErrorKind::UnexpectedEof
+                    | std::io::ErrorKind::ConnectionReset
+                    | std::io::ErrorKind::ConnectionAborted
+                    | std::io::ErrorKind::ConnectionRefused
+                    | std::io::ErrorKind::BrokenPipe
+                    | std::io::ErrorKind::TimedOut
+                    | std::io::ErrorKind::WouldBlock
+            )
+        })
+    })
 }
 
 #[cfg(test)]
@@ -381,6 +474,56 @@ mod tests {
         let err = client.predict_tenant(1, &[0.0; 8]).unwrap_err();
         assert!(format!("{err:#}").contains("expects 6"), "{err:#}");
         server.shutdown();
+    }
+
+    // ---- client-side robustness -------------------------------------------
+
+    #[test]
+    fn client_retries_a_dropped_connection() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let handle = std::thread::spawn(move || {
+            // First connection: accept and slam shut (a restarting
+            // front-end, in miniature).
+            let (first, _) = listener.accept().unwrap();
+            drop(first);
+            // Second connection (the retry): serve one predict by hand.
+            let (mut conn, _) = listener.accept().unwrap();
+            let frame = read_frame(&mut conn).unwrap();
+            assert_eq!(frame.head, OP_PREDICT);
+            let doubled: Vec<f32> = body_f32(&frame.body).iter().map(|x| x * 2.0).collect();
+            write_frame(&mut conn, ST_OK, frame.id, &doubled).unwrap();
+        });
+        let mut client = Client::connect(&addr)
+            .unwrap()
+            .with_timeout(Duration::from_secs(10))
+            .unwrap()
+            .with_retries(3, Duration::from_millis(10));
+        let pred = client.predict(&[1.0, 2.0]).expect("retry must survive the dropped conn");
+        assert_eq!(pred, vec![2.0, 4.0]);
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn server_side_errors_are_not_retried() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let handle = std::thread::spawn(move || {
+            // Serve exactly one connection, answer with ST_ERR, exit. A
+            // (wrong) retry would reconnect and fail on transport instead
+            // of surfacing this reply.
+            let (mut conn, _) = listener.accept().unwrap();
+            let frame = read_frame(&mut conn).unwrap();
+            write_error(&mut conn, frame.id, "model exploded").unwrap();
+        });
+        let mut client =
+            Client::connect(&addr).unwrap().with_retries(3, Duration::from_millis(1));
+        let err = client.predict(&[1.0]).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("server error: model exploded"),
+            "an ST_ERR reply is a result, not a transient: {err:#}"
+        );
+        handle.join().unwrap();
     }
 
     // ---- front-end resilience ---------------------------------------------

@@ -12,6 +12,7 @@ use anyhow::Result;
 
 use crate::metrics::ServingMetrics;
 
+use super::health::HealthPlane;
 use super::pool::{WorkerReply, WorkerTask};
 
 /// A fleet of workers addressable by slot index, producing one shared
@@ -51,6 +52,12 @@ pub trait WorkerFleet: Send {
     fn supports_task_faults(&self) -> bool {
         false
     }
+
+    /// Attach a worker health plane so the fleet can feed it out-of-band
+    /// per-slot evidence (today: the remote fleet's heartbeat-miss
+    /// monitor). Fleets with no such evidence ignore it (the default);
+    /// facades forward to the fleet they wrap.
+    fn attach_health(&self, _plane: Arc<HealthPlane>) {}
 
     /// Admit any spare workers that joined capacity beyond the dispatched
     /// slot range. Called by the dispatcher at a `Reconfigure` epoch

@@ -1,0 +1,1148 @@
+//! Per-worker health plane: suspicion scoring, quarantine/probation, and
+//! spare-backed slot replacement.
+//!
+//! ApproxIFER tolerates `E` Byzantine workers *per group*, but a memoryless
+//! dispatcher keeps assigning work to a worker the locator convicts in
+//! group after group — a single persistent adversary permanently taxes the
+//! fleet with the full `2E` redundancy overhead. This module remembers.
+//!
+//! The plane is split into two cooperating pieces:
+//!
+//! * [`HealthPlane`] — the shared scorekeeper. Every fleet slot (a
+//!   *physical* worker) carries an EWMA suspicion score fed by four
+//!   evidence streams the decode path already produces:
+//!   verification-confirmed adversary attributions
+//!   ([`crate::coding::SchemeDecode::convicted`]), error replies,
+//!   straggles past a group's collection, and heartbeat misses from a
+//!   remote fleet's monitor — each with its own weight. A score crossing
+//!   [`HealthConfig::quarantine_threshold`] quarantines the slot.
+//! * [`HealthGate`] — a [`WorkerFleet`] decorator that enacts the plane's
+//!   decisions on the dispatch path. It maintains a *logical → physical*
+//!   slot mapping: the service dispatches to logical positions
+//!   `0..positions`, and the gate translates. When a quarantined slot next
+//!   receives work the gate backfills its position from the fleet's spare
+//!   capacity (unmapped healthy physicals, pulling remote spare joins in
+//!   via `admit_spares`); with no spare available the position is
+//!   *suppressed* — absorbed as a standing straggler — but only when the
+//!   collect-quota clamp proves every registered scheme can still meet its
+//!   quota without it. A slot the clamp refuses to suppress keeps serving,
+//!   marked `clamped` (quarantine degrades, it never deadlocks).
+//!
+//! Quarantined slots re-enter through probation: after
+//! [`HealthConfig::probation_ms`] the gate piggybacks shadow duplicates of
+//! a live position's task onto the quarantined physical. The probe's reply
+//! never reaches the reply router — the gate diverts it into the plane,
+//! and after the group's verified decode the probe is byte-compared
+//! against the duplicated position's accepted reply.
+//! [`HealthConfig::probation_passes`] clean probes reinstate the slot
+//! (score reset, suppression lifted or the physical returned to the spare
+//! pool); a disagreeing probe re-quarantines it with a fresh dwell.
+//!
+//! Determinism: the plane makes no random choices — transitions are pure
+//! functions of the evidence sequence, and probes piggyback on dispatch
+//! order — so a seeded scenario (the fault subsystem's RNG streams drive
+//! all injected behavior) replays bit-identically. The constructor seed is
+//! recorded in the health table for replay bookkeeping.
+//!
+//! Evidence is attributed to the *physical* slot through the current
+//! mapping regardless of which tenant's group produced it, so a
+//! multi-tenant deployment shares one plane across every pipeline (see
+//! `TenantRegistry::spawn_with_health`). A group that was in flight across
+//! a remap can blame evidence on the slot's replacement; the misattribution
+//! is bounded to those groups and decays.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::coding::{CollectPolicy, RowView};
+use crate::metrics::ServingMetrics;
+
+use super::fleet::WorkerFleet;
+use super::pool::{WorkerReply, WorkerTask};
+
+/// Tuning for the worker health plane (the `health.*` config namespace).
+#[derive(Clone, Debug, PartialEq)]
+pub struct HealthConfig {
+    /// Suspicion score past which a slot is quarantined. Must be > 0.
+    pub quarantine_threshold: f64,
+    /// EWMA retention per observed group, in `[0, 1)`: each group the
+    /// score becomes `score * decay + evidence`. Higher = longer memory.
+    pub decay: f64,
+    /// Score bump for a verification-confirmed adversary attribution.
+    pub conviction_weight: f64,
+    /// Score bump for an error reply.
+    pub error_weight: f64,
+    /// Score bump for straggling past a group's collection (not counted
+    /// for hedged early deliveries, where most of the fleet is "late").
+    pub straggle_weight: f64,
+    /// Score bump for a heartbeat miss reported by a remote fleet.
+    pub heartbeat_weight: f64,
+    /// Quarantine dwell before the first probation probe is sent.
+    pub probation_ms: u64,
+    /// Consecutive clean probes required to reinstate a slot. Must be
+    /// >= 1. A disagreeing probe resets the count and the dwell.
+    pub probation_passes: usize,
+    /// Consecutive verification failures inside a partial adaptive window
+    /// that trigger an immediate emergency `E`-raise (wired into
+    /// [`crate::coordinator::adaptive::AdaptiveConfig`] when both planes
+    /// are enabled). Must be >= 1.
+    pub emergency_verify_failures: usize,
+}
+
+impl Default for HealthConfig {
+    fn default() -> Self {
+        HealthConfig {
+            quarantine_threshold: 3.0,
+            decay: 0.8,
+            conviction_weight: 2.0,
+            error_weight: 1.0,
+            straggle_weight: 0.25,
+            heartbeat_weight: 2.5,
+            probation_ms: 250,
+            probation_passes: 2,
+            emergency_verify_failures: 3,
+        }
+    }
+}
+
+impl HealthConfig {
+    /// Check the knobs for internal consistency (an invalid config is an
+    /// `Err` at spawn, never a mid-serve panic).
+    pub fn validate(&self) -> Result<()> {
+        if !(self.quarantine_threshold > 0.0) {
+            bail!("health.quarantine_threshold must be > 0");
+        }
+        if !(0.0..1.0).contains(&self.decay) {
+            bail!("health.decay must be in [0, 1)");
+        }
+        for (name, w) in [
+            ("health.conviction_weight", self.conviction_weight),
+            ("health.error_weight", self.error_weight),
+            ("health.straggle_weight", self.straggle_weight),
+            ("health.heartbeat_weight", self.heartbeat_weight),
+        ] {
+            if !(w >= 0.0) {
+                bail!("{name} must be >= 0");
+            }
+        }
+        if self.probation_passes == 0 {
+            bail!("health.probation_passes must be >= 1");
+        }
+        if self.emergency_verify_failures == 0 {
+            bail!("health.emergency_verify_failures must be >= 1");
+        }
+        Ok(())
+    }
+}
+
+/// Lifecycle state of one physical fleet slot.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SlotState {
+    /// Healthy: receives dispatches, accrues/decays evidence.
+    Active,
+    /// Suspicion crossed the threshold: no new work (backfilled or
+    /// suppressed at the next send), waiting out the probation dwell.
+    Quarantined,
+    /// Receiving shadow probes; clean probes count toward reinstatement.
+    Probation,
+}
+
+/// Point-in-time view of one physical slot (test/bench introspection and
+/// the metrics health table).
+#[derive(Clone, Debug)]
+pub struct SlotSnapshot {
+    /// Lifecycle state.
+    pub state: SlotState,
+    /// Current EWMA suspicion score.
+    pub score: f64,
+    /// Quarantine decided but the collect-quota clamp (and an empty spare
+    /// pool) kept the slot serving.
+    pub clamped: bool,
+    /// Logical position this physical currently serves (`None` = spare /
+    /// replaced).
+    pub logical: Option<usize>,
+    /// Clean probes accumulated toward reinstatement.
+    pub probes_passed: usize,
+    /// Cumulative confirmed-adversary attributions.
+    pub convictions: u64,
+    /// Cumulative error replies.
+    pub errors: u64,
+    /// Cumulative straggles past collection.
+    pub straggles: u64,
+    /// Cumulative heartbeat misses.
+    pub heartbeat_misses: u64,
+}
+
+/// Cumulative plane counters (test/bench introspection; the same numbers
+/// feed the `worker_*` metrics).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HealthStats {
+    /// Tasks delivered to a live physical slot.
+    pub delivered: u64,
+    /// Tasks absorbed by suppressed positions (standing stragglers).
+    pub suppressed: u64,
+    /// Active → Quarantined transitions.
+    pub quarantines: u64,
+    /// Quarantined → Probation transitions.
+    pub probations: u64,
+    /// Reinstatements (probation completed clean).
+    pub reinstated: u64,
+}
+
+#[derive(Clone, Debug)]
+struct SlotHealth {
+    score: f64,
+    state: SlotState,
+    /// Quarantine entry (or last failed probe): the probation dwell anchor.
+    since: Option<Instant>,
+    probes_passed: usize,
+    /// Outstanding probe's (tagged) group id — at most one per slot.
+    probing: Option<u64>,
+    convictions: u64,
+    errors: u64,
+    straggles: u64,
+    heartbeat_misses: u64,
+    clamped: bool,
+}
+
+impl SlotHealth {
+    fn new() -> SlotHealth {
+        SlotHealth {
+            score: 0.0,
+            state: SlotState::Active,
+            since: None,
+            probes_passed: 0,
+            probing: None,
+            convictions: 0,
+            errors: 0,
+            straggles: 0,
+            heartbeat_misses: 0,
+            clamped: false,
+        }
+    }
+}
+
+struct Probe {
+    /// Logical position whose task was duplicated — the reference reply
+    /// for the cross-check.
+    logical: usize,
+    /// Filled by the gate's reply-forwarding thread when the probe answers.
+    reply: Option<std::result::Result<RowView, String>>,
+}
+
+#[derive(Default)]
+struct PlaneState {
+    /// Logical position → physical slot.
+    map: Vec<usize>,
+    /// Physical slot → logical position (`None` = spare pool / replaced).
+    logical_of: Vec<Option<usize>>,
+    /// Per-physical health records.
+    slots: Vec<SlotHealth>,
+    /// Logical positions currently absorbed as standing stragglers.
+    suppressed: Vec<bool>,
+    /// Registered collect quotas, keyed by tenant tag: `(slot classes,
+    /// need)`. The clamp proves suppression safe against every entry.
+    policies: HashMap<u64, (Vec<usize>, usize)>,
+    /// Outstanding probes keyed by (tagged group, physical slot).
+    probes: HashMap<(u64, usize), Probe>,
+    delivered: u64,
+    suppressed_tasks: u64,
+    quarantines: u64,
+    probations: u64,
+    reinstated: u64,
+}
+
+/// What [`HealthPlane::decide`] told the gate to do with one send.
+struct Decision {
+    /// Deliver the task to this physical slot (`None` = suppressed).
+    deliver: Option<usize>,
+    /// Shadow-probe these physicals with a duplicate of the task.
+    probes: Vec<usize>,
+    /// A quarantined mapped slot found no free physical: the gate should
+    /// `admit_spares()` on the inner fleet and re-decide.
+    want_spares: bool,
+}
+
+/// The shared scorekeeper: per-physical-slot suspicion scores, the
+/// logical→physical mapping, quarantine/probation state, the registered
+/// collect quotas, and outstanding probes. One plane serves every pipeline
+/// sharing a fleet; all decisions are made under one internal lock.
+pub struct HealthPlane {
+    cfg: HealthConfig,
+    seed: u64,
+    state: Mutex<PlaneState>,
+    metrics: Mutex<Option<Arc<ServingMetrics>>>,
+}
+
+impl HealthPlane {
+    /// Build a plane with validated tuning. The seed is bookkeeping for
+    /// replay (the plane itself is decision-deterministic); it is recorded
+    /// in the health table so a captured report pins the scenario.
+    pub fn new(cfg: HealthConfig, seed: u64) -> HealthPlane {
+        HealthPlane {
+            cfg,
+            seed,
+            state: Mutex::new(PlaneState::default()),
+            metrics: Mutex::new(None),
+        }
+    }
+
+    /// The plane's tuning.
+    pub fn config(&self) -> &HealthConfig {
+        &self.cfg
+    }
+
+    /// Wire the plane's counters and health table into a metrics set
+    /// (typically the service's — or, multi-tenant, the registry's global
+    /// set, so evidence from every tenant lands in one place).
+    pub fn attach_metrics(&self, metrics: Arc<ServingMetrics>) {
+        *self.metrics.lock().unwrap() = Some(metrics);
+        let st = self.state.lock().unwrap();
+        self.publish(&st);
+    }
+
+    /// Register (or replace) the collect quota the clamp must preserve for
+    /// one pipeline. Keyed by tenant tag (`0` for a single-tenant
+    /// service); re-registered at every reconfigure epoch.
+    pub fn register_policy(&self, tag: u64, policy: &CollectPolicy) {
+        let mut st = self.state.lock().unwrap();
+        st.policies.insert(tag, (policy.slots.clone(), policy.need));
+    }
+
+    /// Identity-map `positions` logical slots onto the first `positions`
+    /// physicals of a `width`-wide fleet; the surplus is the spare pool.
+    /// Called by [`HealthGate::attach`].
+    fn init(&self, positions: usize, width: usize) {
+        let width = width.max(positions);
+        let mut st = self.state.lock().unwrap();
+        st.map = (0..positions).collect();
+        st.logical_of = (0..width).map(|p| (p < positions).then_some(p)).collect();
+        st.slots = vec![SlotHealth::new(); width];
+        st.suppressed = vec![false; positions];
+        self.publish(&st);
+    }
+
+    /// Grow the per-physical tables when the inner fleet widens (remote
+    /// spare joins admitted after attach).
+    fn ensure_width(st: &mut PlaneState, width: usize) {
+        while st.logical_of.len() < width {
+            st.logical_of.push(None);
+            st.slots.push(SlotHealth::new());
+        }
+    }
+
+    /// Cumulative plane counters.
+    pub fn stats(&self) -> HealthStats {
+        let st = self.state.lock().unwrap();
+        HealthStats {
+            delivered: st.delivered,
+            suppressed: st.suppressed_tasks,
+            quarantines: st.quarantines,
+            probations: st.probations,
+            reinstated: st.reinstated,
+        }
+    }
+
+    /// Point-in-time view of every physical slot.
+    pub fn snapshot(&self) -> Vec<SlotSnapshot> {
+        let st = self.state.lock().unwrap();
+        st.slots
+            .iter()
+            .enumerate()
+            .map(|(p, s)| SlotSnapshot {
+                state: s.state,
+                score: s.score,
+                clamped: s.clamped,
+                logical: st.logical_of[p],
+                probes_passed: s.probes_passed,
+                convictions: s.convictions,
+                errors: s.errors,
+                straggles: s.straggles,
+                heartbeat_misses: s.heartbeat_misses,
+            })
+            .collect()
+    }
+
+    /// Feed one decoded (or expired) group's per-slot evidence, indexed by
+    /// *logical* position: `convicted` are verification-confirmed
+    /// adversary attributions, `errored[i]` marks error replies, and
+    /// `straggled` lists positions that never answered. Applies the EWMA
+    /// decay to every active slot, bumps the implicated ones, and
+    /// quarantines any slot crossing the threshold. Evidence against
+    /// suppressed positions is skipped — a suppressed slot got no task, so
+    /// its silence is the plane's own doing, not new evidence.
+    pub fn observe_group(&self, convicted: &[usize], errored: &[bool], straggled: &[usize]) {
+        let mut st = self.state.lock().unwrap();
+        let mut add = vec![0.0f64; st.slots.len()];
+        {
+            let st = &mut *st;
+            let mut implicate = |l: usize, w: f64, kind: u8| {
+                if l >= st.map.len() || st.suppressed[l] {
+                    return;
+                }
+                let p = st.map[l];
+                add[p] += w;
+                match kind {
+                    0 => st.slots[p].convictions += 1,
+                    1 => st.slots[p].errors += 1,
+                    _ => st.slots[p].straggles += 1,
+                }
+            };
+            for &l in convicted {
+                implicate(l, self.cfg.conviction_weight, 0);
+            }
+            for (l, &e) in errored.iter().enumerate() {
+                if e {
+                    implicate(l, self.cfg.error_weight, 1);
+                }
+            }
+            for &l in straggled {
+                implicate(l, self.cfg.straggle_weight, 2);
+            }
+        }
+        for p in 0..st.slots.len() {
+            if st.slots[p].state == SlotState::Active {
+                st.slots[p].score = st.slots[p].score * self.cfg.decay + add[p];
+                if st.slots[p].score > self.cfg.quarantine_threshold {
+                    self.quarantine(&mut st, p);
+                }
+            }
+        }
+        self.publish(&st);
+    }
+
+    /// A remote fleet's heartbeat monitor lost a worker: out-of-band
+    /// evidence against the physical slot (no EWMA decay — misses are not
+    /// per-group events).
+    pub fn record_heartbeat_miss(&self, physical: usize) {
+        let mut st = self.state.lock().unwrap();
+        Self::ensure_width(&mut st, physical + 1);
+        st.slots[physical].heartbeat_misses += 1;
+        if st.slots[physical].state == SlotState::Active {
+            st.slots[physical].score += self.cfg.heartbeat_weight;
+            if st.slots[physical].score > self.cfg.quarantine_threshold {
+                self.quarantine(&mut st, physical);
+            }
+        }
+        self.publish(&st);
+    }
+
+    fn quarantine(&self, st: &mut PlaneState, p: usize) {
+        st.slots[p].state = SlotState::Quarantined;
+        st.slots[p].since = Some(Instant::now());
+        st.slots[p].probes_passed = 0;
+        st.slots[p].clamped = false;
+        st.quarantines += 1;
+        if let Some(m) = self.metrics.lock().unwrap().as_ref() {
+            m.worker_quarantines.inc();
+        }
+        log::warn!(
+            "health: quarantining worker slot {p} (score {:.2} > {:.2})",
+            st.slots[p].score,
+            self.cfg.quarantine_threshold
+        );
+    }
+
+    /// Settle every outstanding probe of one (tagged) group against its
+    /// verified decode. A probe whose payload byte-matches the duplicated
+    /// position's accepted reply counts toward reinstatement; a
+    /// disagreeing (or error) probe re-quarantines with a fresh dwell; a
+    /// probe with no reply yet, no reference reply, or an unverified
+    /// decode is inconclusive and simply re-armed.
+    pub fn resolve_probes(&self, tagged_group: u64, replies: &[Option<RowView>], verify_ok: bool) {
+        let mut st = self.state.lock().unwrap();
+        let due: Vec<(u64, usize)> =
+            st.probes.keys().filter(|&&(g, _)| g == tagged_group).copied().collect();
+        if due.is_empty() {
+            return;
+        }
+        for key in due {
+            let probe = st.probes.remove(&key).unwrap();
+            let p = key.1;
+            st.slots[p].probing = None;
+            if st.slots[p].state != SlotState::Probation {
+                continue;
+            }
+            enum Verdict {
+                Pass,
+                Fail,
+                Inconclusive,
+            }
+            let verdict = match probe.reply {
+                None => Verdict::Inconclusive,
+                Some(Err(_)) => Verdict::Fail,
+                Some(Ok(row)) => {
+                    if !verify_ok {
+                        Verdict::Inconclusive
+                    } else {
+                        match replies.get(probe.logical).and_then(|r| r.as_ref()) {
+                            None => Verdict::Inconclusive,
+                            Some(live) if bits_equal(&row, live) => Verdict::Pass,
+                            Some(_) => Verdict::Fail,
+                        }
+                    }
+                }
+            };
+            match verdict {
+                Verdict::Pass => {
+                    st.slots[p].probes_passed += 1;
+                    if st.slots[p].probes_passed >= self.cfg.probation_passes {
+                        self.reinstate(&mut st, p);
+                    }
+                }
+                Verdict::Fail => {
+                    st.slots[p].probes_passed = 0;
+                    st.slots[p].state = SlotState::Quarantined;
+                    st.slots[p].since = Some(Instant::now());
+                    log::warn!("health: worker slot {p} failed a probation probe; re-quarantined");
+                }
+                Verdict::Inconclusive => {}
+            }
+        }
+        self.publish(&st);
+    }
+
+    fn reinstate(&self, st: &mut PlaneState, p: usize) {
+        st.slots[p].state = SlotState::Active;
+        st.slots[p].score = 0.0;
+        st.slots[p].since = None;
+        st.slots[p].probes_passed = 0;
+        st.slots[p].clamped = false;
+        if let Some(l) = st.logical_of[p] {
+            // Suppressed-in-place slot: resume its position's work.
+            if l < st.suppressed.len() {
+                st.suppressed[l] = false;
+            }
+        }
+        // A replaced physical (logical_of == None) rejoins the spare pool.
+        st.reinstated += 1;
+        if let Some(m) = self.metrics.lock().unwrap().as_ref() {
+            m.worker_reinstated.inc();
+        }
+        log::info!("health: worker slot {p} reinstated after clean probation");
+    }
+
+    /// Plan one send to logical position `worker` of (tagged) group
+    /// `group`. Enacts pending quarantines (backfill / suppress / clamp)
+    /// and schedules probation probes to piggyback on the task. When
+    /// `after_spares` is false and a backfill found no free physical, the
+    /// plan asks the gate to admit spares and re-decide instead.
+    fn decide(&self, worker: usize, group: u64, inner_width: usize, after_spares: bool) -> Decision {
+        let mut st = self.state.lock().unwrap();
+        Self::ensure_width(&mut st, inner_width);
+        let mut decision = Decision { deliver: None, probes: Vec::new(), want_spares: false };
+        if worker >= st.map.len() {
+            // Out-of-range logical (defensive: the dispatcher never sends
+            // past the scheme width): pass through when the fleet covers
+            // it, otherwise drop.
+            decision.deliver = (worker < inner_width).then_some(worker);
+            return decision;
+        }
+        if st.suppressed[worker] {
+            st.suppressed_tasks += 1;
+        } else {
+            let p = st.map[worker];
+            match st.slots[p].state {
+                SlotState::Active => decision.deliver = Some(p),
+                SlotState::Quarantined | SlotState::Probation => {
+                    // Enact the eviction now, at the first send after the
+                    // quarantine decision.
+                    let free = (0..inner_width).find(|&q| {
+                        st.logical_of[q].is_none() && st.slots[q].state == SlotState::Active
+                    });
+                    if let Some(q) = free {
+                        st.map[worker] = q;
+                        st.logical_of[q] = Some(worker);
+                        st.logical_of[p] = None;
+                        decision.deliver = Some(q);
+                        log::info!(
+                            "health: logical position {worker} backfilled: \
+                             physical {p} -> spare {q}"
+                        );
+                    } else if !after_spares {
+                        decision.want_spares = true;
+                        return decision;
+                    } else if self.suppression_allowed(&st, worker) {
+                        st.suppressed[worker] = true;
+                        st.suppressed_tasks += 1;
+                        log::warn!(
+                            "health: no spare for quarantined slot {p}; suppressing \
+                             logical position {worker} as a standing straggler"
+                        );
+                    } else {
+                        // The clamp held: quota would be unmeetable without
+                        // this position. The slot keeps serving.
+                        st.slots[p].clamped = true;
+                        decision.deliver = Some(p);
+                    }
+                }
+            }
+        }
+        if decision.deliver.is_some() {
+            st.delivered += 1;
+            // Piggyback probation probes onto this live task: its accepted
+            // reply is the probe's cross-check reference.
+            let due: Vec<usize> = (0..st.slots.len())
+                .filter(|&q| {
+                    let s = &st.slots[q];
+                    !s.clamped
+                        && s.probing.is_none()
+                        && match s.state {
+                            SlotState::Probation => true,
+                            SlotState::Quarantined => s.since.is_some_and(|t| {
+                                t.elapsed() >= Duration::from_millis(self.cfg.probation_ms)
+                            }),
+                            SlotState::Active => false,
+                        }
+                        && !st.probes.contains_key(&(group, q))
+                })
+                .collect();
+            for q in due {
+                if st.slots[q].state == SlotState::Quarantined {
+                    st.slots[q].state = SlotState::Probation;
+                    st.probations += 1;
+                    if let Some(m) = self.metrics.lock().unwrap().as_ref() {
+                        m.worker_probations.inc();
+                    }
+                    log::info!("health: worker slot {q} entering probation");
+                }
+                st.slots[q].probing = Some(group);
+                st.probes.insert((group, q), Probe { logical: worker, reply: None });
+                decision.probes.push(q);
+            }
+        }
+        decision
+    }
+
+    /// The collect-quota clamp: suppressing logical position `l` is safe
+    /// only if, for *every* registered policy covering it, the position's
+    /// slot class keeps at least `need` unsuppressed workers without it.
+    /// With no policy registered the clamp is conservative and denies.
+    fn suppression_allowed(&self, st: &PlaneState, l: usize) -> bool {
+        if st.policies.is_empty() {
+            return false;
+        }
+        st.policies.values().all(|(slots, need)| {
+            if l >= slots.len() {
+                return true;
+            }
+            let class = slots[l];
+            let live = slots
+                .iter()
+                .enumerate()
+                .filter(|&(w, &c)| c == class && !st.suppressed.get(w).copied().unwrap_or(true))
+                .count();
+            live > *need
+        })
+    }
+
+    /// Route one raw fleet reply: divert probe replies into the plane
+    /// (`None`), translate mapped physicals to their logical position, and
+    /// drop replies from unmapped physicals (a replaced slot's stragglers).
+    fn translate(&self, mut reply: WorkerReply) -> Option<WorkerReply> {
+        let mut st = self.state.lock().unwrap();
+        let phys = reply.worker_id;
+        if let Some(probe) = st.probes.get_mut(&(reply.group, phys)) {
+            probe.reply = Some(reply.result);
+            return None;
+        }
+        match st.logical_of.get(phys).copied().flatten() {
+            Some(l) => {
+                reply.worker_id = l;
+                Some(reply)
+            }
+            None => None,
+        }
+    }
+
+    /// Refresh the metrics health table from the locked state.
+    fn publish(&self, st: &PlaneState) {
+        let Some(metrics) = self.metrics.lock().unwrap().as_ref().cloned() else {
+            return;
+        };
+        let mut table = format!(
+            "worker health (seed {:#x}): delivered={} suppressed={}\n",
+            self.seed, st.delivered, st.suppressed_tasks
+        );
+        table.push_str(" slot state        score  conv  err strag   hb  pos\n");
+        for (p, s) in st.slots.iter().enumerate() {
+            let state = if s.clamped {
+                "clamped"
+            } else {
+                match s.state {
+                    SlotState::Active => "active",
+                    SlotState::Quarantined => "quarantined",
+                    SlotState::Probation => "probation",
+                }
+            };
+            let pos = match st.logical_of[p] {
+                Some(l) if st.suppressed.get(l).copied().unwrap_or(false) => {
+                    format!("{l}(supp)")
+                }
+                Some(l) => format!("{l}"),
+                None => "spare".into(),
+            };
+            table.push_str(&format!(
+                " {p:>4} {state:<12} {score:>5.2} {conv:>5} {err:>4} {strag:>5} {hb:>4}  {pos}\n",
+                score = s.score,
+                conv = s.convictions,
+                err = s.errors,
+                strag = s.straggles,
+                hb = s.heartbeat_misses,
+            ));
+        }
+        *metrics.health_table.lock().unwrap() = table;
+    }
+}
+
+/// Bitwise f32 equality — the probe cross-check must not accept an
+/// "approximately right" adversary.
+fn bits_equal(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b.iter()).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// A [`WorkerFleet`] decorator enacting a [`HealthPlane`]'s decisions on
+/// the dispatch path: logical→physical translation, quarantine backfill
+/// from spare capacity, suppression under the collect-quota clamp, probe
+/// piggybacking, and reply-stream translation (probe replies diverted into
+/// the plane, replaced slots' stragglers dropped).
+///
+/// `num_workers()` reports the *logical* width (`positions`), hiding the
+/// spare pool from the service's sizing checks. With the gate attached,
+/// surplus fleet capacity backfills quarantined slots instead of widening
+/// the dispatch range at `Reconfigure` epochs (`admit_spares` pulls remote
+/// joins into the pool but reports 0 new positions).
+pub struct HealthGate {
+    inner: Box<dyn WorkerFleet>,
+    positions: usize,
+    plane: Arc<HealthPlane>,
+}
+
+impl HealthGate {
+    /// Wrap `inner`, exposing `positions` logical slots (identity-mapped
+    /// onto the first `positions` physicals); physicals beyond that are
+    /// the spare pool. Callers wanting remote heartbeat evidence should
+    /// `inner.attach_health(plane)` *before* wrapping.
+    pub fn attach(inner: Box<dyn WorkerFleet>, positions: usize, plane: Arc<HealthPlane>) -> HealthGate {
+        plane.init(positions, inner.num_workers());
+        HealthGate { inner, positions, plane }
+    }
+}
+
+impl WorkerFleet for HealthGate {
+    fn num_workers(&self) -> usize {
+        self.positions
+    }
+
+    fn send(&self, worker: usize, task: WorkerTask) -> Result<()> {
+        // Decide under the plane lock; deliver with it released (the inner
+        // fleet takes its own locks, and a remote monitor thread feeding
+        // heartbeat evidence takes them in the opposite order).
+        let mut d = self.plane.decide(worker, task.group, self.inner.num_workers(), false);
+        if d.want_spares {
+            self.inner.admit_spares();
+            d = self.plane.decide(worker, task.group, self.inner.num_workers(), true);
+        }
+        for &q in &d.probes {
+            let probe = WorkerTask {
+                group: task.group,
+                payload: task.payload.clone(),
+                extra_delay: Duration::ZERO,
+                corrupt: None,
+            };
+            // A failed probe send leaves the entry to resolve inconclusive.
+            let _ = self.inner.send(q, probe);
+        }
+        match d.deliver {
+            Some(p) => self.inner.send(p, task),
+            // Suppressed position: the task is absorbed (standing
+            // straggler); the group's quota is met by the live slots.
+            None => Ok(()),
+        }
+    }
+
+    fn take_replies(&mut self) -> Option<Receiver<WorkerReply>> {
+        let inner_rx = self.inner.take_replies()?;
+        let (tx, rx) = channel();
+        let plane = self.plane.clone();
+        std::thread::Builder::new()
+            .name("health-gate".into())
+            .spawn(move || {
+                while let Ok(reply) = inner_rx.recv() {
+                    if let Some(translated) = plane.translate(reply) {
+                        if tx.send(translated).is_err() {
+                            break;
+                        }
+                    }
+                }
+            })
+            .expect("spawning health gate forwarder");
+        Some(rx)
+    }
+
+    fn attach_metrics(&self, metrics: Arc<ServingMetrics>) {
+        self.plane.attach_metrics(metrics.clone());
+        self.inner.attach_metrics(metrics);
+    }
+
+    fn attach_health(&self, plane: Arc<HealthPlane>) {
+        self.inner.attach_health(plane);
+    }
+
+    fn supports_task_faults(&self) -> bool {
+        self.inner.supports_task_faults()
+    }
+
+    fn admit_spares(&self) -> usize {
+        // Pull remote spare joins into the pool, but keep them as backfill
+        // capacity: the dispatch range stays at `positions`.
+        self.inner.admit_spares();
+        0
+    }
+
+    fn shutdown(self: Box<Self>) {
+        self.inner.shutdown()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coding::BlockPool;
+    use std::sync::mpsc::Sender;
+
+    fn policy_fastest(nw: usize, need: usize) -> CollectPolicy {
+        CollectPolicy::fastest(nw, need)
+    }
+
+    fn row(vals: &[f32]) -> RowView {
+        RowView::from_vec(vals.to_vec())
+    }
+
+    fn cfg() -> HealthConfig {
+        HealthConfig {
+            quarantine_threshold: 3.0,
+            decay: 0.5,
+            conviction_weight: 2.0,
+            error_weight: 1.0,
+            straggle_weight: 0.25,
+            heartbeat_weight: 2.5,
+            probation_ms: 0,
+            probation_passes: 2,
+            emergency_verify_failures: 3,
+        }
+    }
+
+    /// Recording fleet: remembers (physical, group) sends, exposes a reply
+    /// sender for hand-fed replies.
+    struct RecordingFleet {
+        width: usize,
+        sends: Arc<Mutex<Vec<(usize, u64)>>>,
+        tx: Sender<WorkerReply>,
+        rx: Mutex<Option<Receiver<WorkerReply>>>,
+    }
+
+    impl RecordingFleet {
+        fn new(width: usize) -> (RecordingFleet, Arc<Mutex<Vec<(usize, u64)>>>, Sender<WorkerReply>) {
+            let (tx, rx) = channel();
+            let sends = Arc::new(Mutex::new(Vec::new()));
+            let fleet = RecordingFleet {
+                width,
+                sends: sends.clone(),
+                tx: tx.clone(),
+                rx: Mutex::new(Some(rx)),
+            };
+            (fleet, sends, tx)
+        }
+    }
+
+    impl WorkerFleet for RecordingFleet {
+        fn num_workers(&self) -> usize {
+            self.width
+        }
+
+        fn send(&self, worker: usize, task: WorkerTask) -> Result<()> {
+            assert!(worker < self.width, "send past the inner width");
+            self.sends.lock().unwrap().push((worker, task.group));
+            Ok(())
+        }
+
+        fn take_replies(&mut self) -> Option<Receiver<WorkerReply>> {
+            self.rx.lock().unwrap().take()
+        }
+
+        fn attach_metrics(&self, _metrics: Arc<ServingMetrics>) {}
+
+        fn shutdown(self: Box<Self>) {
+            drop(self.tx);
+        }
+    }
+
+    fn task(group: u64) -> WorkerTask {
+        let pool = BlockPool::new();
+        let mut b = pool.take(1, 2);
+        b.row_mut(0).copy_from_slice(&[1.0, 2.0]);
+        WorkerTask {
+            group,
+            payload: b.freeze().row_view(0),
+            extra_delay: Duration::ZERO,
+            corrupt: None,
+        }
+    }
+
+    #[test]
+    fn config_validation_rejects_bad_knobs() {
+        assert!(HealthConfig::default().validate().is_ok());
+        let mut c = cfg();
+        c.decay = 1.0;
+        assert!(c.validate().is_err());
+        let mut c = cfg();
+        c.quarantine_threshold = 0.0;
+        assert!(c.validate().is_err());
+        let mut c = cfg();
+        c.probation_passes = 0;
+        assert!(c.validate().is_err());
+        let mut c = cfg();
+        c.error_weight = -1.0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn convictions_cross_the_threshold_and_quarantine() {
+        let plane = HealthPlane::new(cfg(), 7);
+        plane.init(4, 4);
+        plane.register_policy(0, &policy_fastest(4, 3));
+        // conviction weight 2, decay 0.5: scores 2.0, 3.0, 3.5 — the
+        // third conviction crosses 3.0.
+        plane.observe_group(&[2], &[false; 4], &[]);
+        plane.observe_group(&[2], &[false; 4], &[]);
+        assert_eq!(plane.snapshot()[2].state, SlotState::Active);
+        plane.observe_group(&[2], &[false; 4], &[]);
+        assert_eq!(plane.snapshot()[2].state, SlotState::Quarantined);
+        assert_eq!(plane.stats().quarantines, 1);
+        // Healthy slots decayed to zero score and stayed active.
+        assert_eq!(plane.snapshot()[0].state, SlotState::Active);
+        assert!(plane.snapshot()[0].score.abs() < 1e-12);
+    }
+
+    #[test]
+    fn scores_decay_so_transient_evidence_heals() {
+        let plane = HealthPlane::new(cfg(), 7);
+        plane.init(3, 3);
+        plane.register_policy(0, &policy_fastest(3, 2));
+        let mut errored = vec![false; 3];
+        errored[1] = true;
+        plane.observe_group(&[], &errored, &[]);
+        let high = plane.snapshot()[1].score;
+        assert!(high > 0.0);
+        for _ in 0..8 {
+            plane.observe_group(&[], &[false; 3], &[]);
+        }
+        assert!(plane.snapshot()[1].score < high / 10.0);
+        assert_eq!(plane.stats().quarantines, 0);
+    }
+
+    #[test]
+    fn gate_backfills_a_quarantined_slot_from_the_spare_pool() {
+        // 4 positions over a 5-wide fleet: physical 4 is the spare.
+        let (fleet, sends, _tx) = RecordingFleet::new(5);
+        let plane = Arc::new(HealthPlane::new(cfg(), 7));
+        let gate = HealthGate::attach(Box::new(fleet), 4, plane.clone());
+        assert_eq!(gate.num_workers(), 4);
+        plane.register_policy(0, &policy_fastest(4, 3));
+        for _ in 0..3 {
+            plane.observe_group(&[1], &[false; 4], &[]);
+        }
+        assert_eq!(plane.snapshot()[1].state, SlotState::Quarantined);
+        for w in 0..4 {
+            gate.send(w, task(10)).unwrap();
+        }
+        let got = sends.lock().unwrap().clone();
+        // Logical 1 went to the spare physical 4; 0/2/3 unchanged. The
+        // quarantined physical also got a probation probe (probation_ms=0).
+        assert!(got.contains(&(4, 10)), "{got:?}");
+        assert_eq!(plane.snapshot()[4].logical, Some(1));
+        assert_eq!(plane.snapshot()[1].logical, None);
+        assert_eq!(plane.snapshot()[1].state, SlotState::Probation);
+        assert_eq!(plane.stats().probations, 1);
+    }
+
+    #[test]
+    fn clamp_refuses_suppression_below_the_collect_quota() {
+        // 3 positions, no spares, need = 3: suppression would leave 2 < 3.
+        let (fleet, sends, _tx) = RecordingFleet::new(3);
+        let plane = Arc::new(HealthPlane::new(cfg(), 7));
+        let gate = HealthGate::attach(Box::new(fleet), 3, plane.clone());
+        plane.register_policy(0, &policy_fastest(3, 3));
+        for _ in 0..3 {
+            plane.observe_group(&[0], &[false; 3], &[]);
+        }
+        assert_eq!(plane.snapshot()[0].state, SlotState::Quarantined);
+        for w in 0..3 {
+            gate.send(w, task(5)).unwrap();
+        }
+        // The clamp held: physical 0 still serves, marked clamped.
+        let got = sends.lock().unwrap().clone();
+        assert!(got.contains(&(0, 5)), "{got:?}");
+        assert!(plane.snapshot()[0].clamped);
+        assert_eq!(plane.stats().suppressed, 0);
+    }
+
+    #[test]
+    fn suppression_absorbs_the_slot_when_the_quota_allows() {
+        // 4 positions, no spares, need = 3: one suppression is safe,
+        // a second would violate the quota and must clamp.
+        let (fleet, sends, _tx) = RecordingFleet::new(4);
+        let plane = Arc::new(HealthPlane::new(cfg(), 7));
+        let gate = HealthGate::attach(Box::new(fleet), 4, plane.clone());
+        plane.register_policy(0, &policy_fastest(4, 3));
+        for _ in 0..3 {
+            plane.observe_group(&[1], &[false; 4], &[]);
+        }
+        for w in 0..4 {
+            gate.send(w, task(1)).unwrap();
+        }
+        assert!(!sends.lock().unwrap().iter().any(|&(p, g)| p == 1 && g == 1));
+        assert_eq!(plane.stats().suppressed, 1);
+        // Quarantine a second slot: quota (3) forces the clamp.
+        for _ in 0..3 {
+            plane.observe_group(&[2], &[false; 4], &[]);
+        }
+        for w in 0..4 {
+            gate.send(w, task(2)).unwrap();
+        }
+        assert!(sends.lock().unwrap().iter().any(|&(p, g)| p == 2 && g == 2));
+        assert!(plane.snapshot()[2].clamped);
+    }
+
+    #[test]
+    fn probes_cross_check_and_reinstate_a_suppressed_slot() {
+        let (fleet, sends, _tx) = RecordingFleet::new(4);
+        let plane = Arc::new(HealthPlane::new(cfg(), 7));
+        let gate = HealthGate::attach(Box::new(fleet), 4, plane.clone());
+        plane.register_policy(0, &policy_fastest(4, 3));
+        for _ in 0..3 {
+            plane.observe_group(&[1], &[false; 4], &[]);
+        }
+        // Group 1: enact suppression; logical 0's task carries the probe
+        // for physical 1 (probation_ms = 0).
+        for w in 0..4 {
+            gate.send(w, task(1)).unwrap();
+        }
+        assert!(sends.lock().unwrap().iter().any(|&(p, g)| p == 1 && g == 1), "probe sent");
+        assert_eq!(plane.snapshot()[1].state, SlotState::Probation);
+        // Probe reply agrees with the live reply at its reference logical.
+        let live = row(&[0.5, -1.5]);
+        plane.translate(WorkerReply {
+            group: 1,
+            worker_id: 1,
+            result: Ok(live.clone()),
+            elapsed: Duration::ZERO,
+        });
+        let mut replies: Vec<Option<RowView>> = vec![None; 4];
+        replies[0] = Some(live.clone());
+        plane.resolve_probes(1, &replies, true);
+        assert_eq!(plane.snapshot()[1].probes_passed, 1);
+        // Second clean probe reinstates and lifts the suppression.
+        for w in 0..4 {
+            gate.send(w, task(2)).unwrap();
+        }
+        plane.translate(WorkerReply {
+            group: 2,
+            worker_id: 1,
+            result: Ok(live.clone()),
+            elapsed: Duration::ZERO,
+        });
+        plane.resolve_probes(2, &replies, true);
+        assert_eq!(plane.snapshot()[1].state, SlotState::Active);
+        assert_eq!(plane.stats().reinstated, 1);
+        // Suppression lifted: the next send reaches physical 1 again.
+        for w in 0..4 {
+            gate.send(w, task(3)).unwrap();
+        }
+        assert!(sends.lock().unwrap().iter().any(|&(p, g)| p == 1 && g == 3));
+    }
+
+    #[test]
+    fn a_disagreeing_probe_requarantines() {
+        let (fleet, _sends, _tx) = RecordingFleet::new(4);
+        let plane = Arc::new(HealthPlane::new(cfg(), 7));
+        let gate = HealthGate::attach(Box::new(fleet), 4, plane.clone());
+        plane.register_policy(0, &policy_fastest(4, 3));
+        for _ in 0..3 {
+            plane.observe_group(&[1], &[false; 4], &[]);
+        }
+        for w in 0..4 {
+            gate.send(w, task(1)).unwrap();
+        }
+        plane.translate(WorkerReply {
+            group: 1,
+            worker_id: 1,
+            result: Ok(row(&[9.9, 9.9])),
+            elapsed: Duration::ZERO,
+        });
+        let mut replies: Vec<Option<RowView>> = vec![None; 4];
+        replies[0] = Some(row(&[0.5, -1.5]));
+        plane.resolve_probes(1, &replies, true);
+        assert_eq!(plane.snapshot()[1].state, SlotState::Quarantined);
+        assert_eq!(plane.stats().reinstated, 0);
+    }
+
+    #[test]
+    fn probe_replies_are_diverted_and_replaced_slots_are_muted() {
+        let (fleet, _sends, _tx) = RecordingFleet::new(5);
+        let plane = Arc::new(HealthPlane::new(cfg(), 7));
+        let gate = HealthGate::attach(Box::new(fleet), 4, plane.clone());
+        plane.register_policy(0, &policy_fastest(4, 3));
+        // Mapped physical forwards under its logical id.
+        let fwd = plane.translate(WorkerReply {
+            group: 9,
+            worker_id: 3,
+            result: Ok(row(&[1.0])),
+            elapsed: Duration::ZERO,
+        });
+        assert_eq!(fwd.map(|r| r.worker_id), Some(3));
+        // Unmapped spare physical is dropped.
+        let dropped = plane.translate(WorkerReply {
+            group: 9,
+            worker_id: 4,
+            result: Ok(row(&[1.0])),
+            elapsed: Duration::ZERO,
+        });
+        assert!(dropped.is_none());
+        // After a backfill remap, the replaced physical's replies drop too.
+        for _ in 0..3 {
+            plane.observe_group(&[2], &[false; 4], &[]);
+        }
+        for w in 0..4 {
+            gate.send(w, task(1)).unwrap();
+        }
+        assert_eq!(plane.snapshot()[2].logical, None);
+        let dropped = plane.translate(WorkerReply {
+            group: 1,
+            worker_id: 2,
+            result: Ok(row(&[1.0])),
+            elapsed: Duration::ZERO,
+        });
+        // (group 1, physical 2) is an outstanding probe key — the reply is
+        // stashed as the probe answer, not forwarded.
+        assert!(dropped.is_none());
+    }
+
+    #[test]
+    fn heartbeat_misses_quarantine_without_group_evidence() {
+        let plane = HealthPlane::new(cfg(), 7);
+        plane.init(3, 3);
+        plane.register_policy(0, &policy_fastest(3, 2));
+        plane.record_heartbeat_miss(2);
+        assert_eq!(plane.snapshot()[2].state, SlotState::Active);
+        plane.record_heartbeat_miss(2);
+        // 2.5 + 2.5 = 5.0 > 3.0.
+        assert_eq!(plane.snapshot()[2].state, SlotState::Quarantined);
+        assert_eq!(plane.snapshot()[2].heartbeat_misses, 2);
+    }
+}

@@ -9,6 +9,7 @@
 pub mod byzantine;
 pub mod engine;
 pub mod fleet;
+pub mod health;
 pub mod latency;
 pub mod mux;
 pub mod pool;
@@ -17,6 +18,7 @@ pub mod remote;
 pub use byzantine::ByzantineMode;
 pub use engine::{DelayMockEngine, InferenceEngine, LinearMockEngine, PjrtEngine};
 pub use fleet::WorkerFleet;
+pub use health::{HealthConfig, HealthGate, HealthPlane, HealthStats, SlotSnapshot, SlotState};
 pub use latency::LatencyModel;
 pub use mux::{tag_group, tenant_of, untag_group, FleetMux, TenantFleet, MAX_TENANTS};
 pub use pool::{CollectedGroup, ReplyRouter, WorkerPool, WorkerReply, WorkerSpec, WorkerTask};

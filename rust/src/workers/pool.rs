@@ -341,6 +341,10 @@ pub struct CollectedGroup {
     /// True when the group was delivered early on the SLO hedge deadline
     /// with the reduced [`CollectPolicy::hedge_need`] quota.
     pub hedged: bool,
+    /// `errored[w]` = worker `w` answered this group with an error reply —
+    /// per-slot evidence for the worker health plane (the aggregate
+    /// `errors` count cannot attribute).
+    pub errored: Vec<bool>,
 }
 
 struct PendingGroup {
@@ -353,6 +357,8 @@ struct PendingGroup {
     replies: Vec<Option<RowView>>,
     received: usize,
     errors: usize,
+    /// Per-worker error flags (who the aggregate `errors` came from).
+    errored: Vec<bool>,
     /// Per-slot successful-reply and error counts.
     slot_ok: Vec<usize>,
     slot_err: Vec<usize>,
@@ -469,6 +475,7 @@ impl ReplyRouter {
             replies: vec![None; num_workers],
             received: 0,
             errors: 0,
+            errored: vec![false; num_workers],
             slot_ok: vec![0; n_slots],
             slot_err: vec![0; n_slots],
             slot_size,
@@ -541,6 +548,7 @@ fn route_reply(
         Err(e) => {
             metrics.errors.inc();
             pending.errors += 1;
+            pending.errored[reply.worker_id] = true;
             pending.slot_err[slot] += 1;
             log::warn!("worker {} failed group {}: {e}", reply.worker_id, reply.group);
         }
@@ -620,7 +628,7 @@ fn deliver(
     undecodable: bool,
     hedged: bool,
 ) {
-    let PendingGroup { replies, received, errors, done, .. } = pending;
+    let PendingGroup { replies, received, errors, errored, done, .. } = pending;
     let _ = done.send(CollectedGroup {
         group,
         replies,
@@ -629,6 +637,7 @@ fn deliver(
         complete,
         undecodable,
         hedged,
+        errored,
     });
 }
 

@@ -47,6 +47,7 @@ use crate::server::frame::{
 };
 
 use super::fleet::WorkerFleet;
+use super::health::HealthPlane;
 use super::pool::{WorkerReply, WorkerTask};
 
 /// Remote-fleet configuration (the `fleet.*` config keys).
@@ -134,6 +135,10 @@ struct Shared {
     /// Service metric set, once attached. The lock also serializes stat
     /// updates against [`Shared::attach`]'s replay so totals never skew.
     metrics: Mutex<Option<Arc<ServingMetrics>>>,
+    /// Worker health plane, once attached: the heartbeat monitor feeds it
+    /// eviction evidence — the one fault signal the decode path can't see,
+    /// because an evicted slot's tasks resolve as generic error replies.
+    health: Mutex<Option<Arc<HealthPlane>>>,
     readers: Mutex<Vec<JoinHandle<()>>>,
 }
 
@@ -330,6 +335,7 @@ impl RemoteFleet {
             live: AtomicU64::new(0),
             spares_admitted: AtomicU64::new(0),
             metrics: Mutex::new(None),
+            health: Mutex::new(None),
             readers: Mutex::new(Vec::new()),
         });
 
@@ -371,11 +377,24 @@ impl RemoteFleet {
                 let tick = (s.heartbeat / 2).max(Duration::from_millis(1));
                 while !s.stop.load(Ordering::Relaxed) {
                     std::thread::sleep(tick);
+                    let mut evicted: Vec<usize> = Vec::new();
                     for (i, slot) in s.slots.iter().enumerate() {
                         let mut slot = slot.lock().unwrap();
                         if slot.conn.is_some() && slot.last_seen.elapsed() > cutoff {
                             log::warn!("fleet: evicting worker {i} (missed heartbeats)");
                             s.disconnect(i, &mut slot, true);
+                            evicted.push(i);
+                        }
+                    }
+                    // Report evidence with every slot lock released: the
+                    // plane takes its own lock and must never nest inside
+                    // a slot mutex.
+                    if !evicted.is_empty() {
+                        let plane = s.health.lock().unwrap().clone();
+                        if let Some(plane) = plane {
+                            for i in evicted {
+                                plane.record_heartbeat_miss(i);
+                            }
                         }
                     }
                 }
@@ -505,6 +524,10 @@ impl WorkerFleet for RemoteFleet {
 
     fn attach_metrics(&self, metrics: Arc<ServingMetrics>) {
         self.shared.attach(metrics);
+    }
+
+    fn attach_health(&self, plane: Arc<HealthPlane>) {
+        *self.shared.health.lock().unwrap() = Some(plane);
     }
 
     fn admit_spares(&self) -> usize {
@@ -810,6 +833,34 @@ mod tests {
         let snap = fleet.snapshot();
         assert_eq!(snap.evictions, 1, "{snap:?}");
         assert_eq!(snap.live, 0);
+    }
+
+    #[test]
+    fn heartbeat_eviction_feeds_the_health_plane() {
+        use super::super::health::HealthConfig;
+        let cfg = FleetConfig {
+            bind: "127.0.0.1:0".into(),
+            workers: None,
+            spare_slots: 0,
+            heartbeat: Duration::from_millis(30),
+            miss_threshold: 3,
+        };
+        let fleet = RemoteFleet::bind(&cfg, 1).unwrap();
+        let mut hcfg = HealthConfig::default();
+        // One missed-heartbeat eviction (weight 2.5) must cross.
+        hcfg.quarantine_threshold = 2.0;
+        let plane = Arc::new(HealthPlane::new(hcfg, 7));
+        fleet.attach_health(plane.clone());
+        let _w = fake_worker(fleet.addr(), 0);
+        assert!(fleet.wait_for_workers(1, Duration::from_secs(5)));
+        // Never heartbeat: the monitor evicts and reports the miss as
+        // health evidence.
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while plane.stats().quarantines == 0 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert_eq!(plane.stats().quarantines, 1);
+        assert_eq!(plane.snapshot()[0].heartbeat_misses, 1);
     }
 
     #[test]
