@@ -207,6 +207,10 @@ struct SlotHealth {
     straggles: u64,
     heartbeat_misses: u64,
     clamped: bool,
+    /// Value of [`PlaneState::spares_epoch`] when the clamp was last
+    /// evaluated: the failed spare search is not repeated until the pool
+    /// changes.
+    clamp_epoch: u64,
 }
 
 impl SlotHealth {
@@ -222,6 +226,7 @@ impl SlotHealth {
             straggles: 0,
             heartbeat_misses: 0,
             clamped: false,
+            clamp_epoch: 0,
         }
     }
 }
@@ -249,6 +254,10 @@ struct PlaneState {
     policies: HashMap<u64, (Vec<usize>, usize)>,
     /// Outstanding probes keyed by (tagged group, physical slot).
     probes: HashMap<(u64, usize), Probe>,
+    /// Bumped whenever the spare pool may have gained capacity (fleet
+    /// widened, slot reinstated): clamped slots retry their spare search
+    /// only when this moves.
+    spares_epoch: u64,
     delivered: u64,
     suppressed_tasks: u64,
     quarantines: u64,
@@ -307,31 +316,87 @@ impl HealthPlane {
 
     /// Register (or replace) the collect quota the clamp must preserve for
     /// one pipeline. Keyed by tenant tag (`0` for a single-tenant
-    /// service); re-registered at every reconfigure epoch.
+    /// service); re-registered at every reconfigure epoch. A tightened
+    /// quota (an adaptive/emergency `E`-raise growing `need`) re-validates
+    /// every standing suppression and lifts the ones whose absence would
+    /// now leave the quota unmeetable — the lifted position's slot is
+    /// forced back into service at its next send (backfilled if a spare
+    /// exists, clamped otherwise), so no registered quota ever deadlocks.
     pub fn register_policy(&self, tag: u64, policy: &CollectPolicy) {
         let mut st = self.state.lock().unwrap();
         st.policies.insert(tag, (policy.slots.clone(), policy.need));
+        self.reclamp_suppressions(&mut st);
+        self.publish(&st);
+    }
+
+    /// Lift standing suppressions that the current policy set no longer
+    /// tolerates, lowest logical position first (deterministic, and lifts
+    /// the minimum number: each lift is re-checked against the remainder).
+    fn reclamp_suppressions(&self, st: &mut PlaneState) {
+        loop {
+            let mut violating = None;
+            for l in 0..st.suppressed.len() {
+                if st.suppressed[l] && !self.suppression_still_safe(&*st, l) {
+                    violating = Some(l);
+                    break;
+                }
+            }
+            let Some(l) = violating else { break };
+            st.suppressed[l] = false;
+            log::warn!(
+                "health: quota tightened; lifting suppression of logical position {l} \
+                 (physical {} returns to service at its next send)",
+                st.map[l]
+            );
+        }
+    }
+
+    /// Whether an *already suppressed* position `l` still satisfies every
+    /// registered policy: each policy covering it must keep at least
+    /// `need` unsuppressed workers in `l`'s slot class without it.
+    fn suppression_still_safe(&self, st: &PlaneState, l: usize) -> bool {
+        st.policies.values().all(|(slots, need)| {
+            if l >= slots.len() {
+                return true;
+            }
+            let class = slots[l];
+            let live = slots
+                .iter()
+                .enumerate()
+                .filter(|&(w, &c)| c == class && !st.suppressed.get(w).copied().unwrap_or(true))
+                .count();
+            live >= *need
+        })
     }
 
     /// Identity-map `positions` logical slots onto the first `positions`
     /// physicals of a `width`-wide fleet; the surplus is the spare pool.
-    /// Called by [`HealthGate::attach`].
+    /// Called by [`HealthGate::attach`]. Slot records that already exist
+    /// (a remote fleet's monitor thread can report heartbeat misses
+    /// between `attach_health` and the gate wrap) keep their evidence —
+    /// only the logical mapping is rebuilt.
     fn init(&self, positions: usize, width: usize) {
-        let width = width.max(positions);
         let mut st = self.state.lock().unwrap();
+        let width = width.max(positions).max(st.slots.len());
         st.map = (0..positions).collect();
         st.logical_of = (0..width).map(|p| (p < positions).then_some(p)).collect();
-        st.slots = vec![SlotHealth::new(); width];
+        while st.slots.len() < width {
+            st.slots.push(SlotHealth::new());
+        }
         st.suppressed = vec![false; positions];
         self.publish(&st);
     }
 
     /// Grow the per-physical tables when the inner fleet widens (remote
-    /// spare joins admitted after attach).
+    /// spare joins admitted after attach). New physicals are spare
+    /// capacity, so growth advances the spare-pool epoch.
     fn ensure_width(st: &mut PlaneState, width: usize) {
-        while st.logical_of.len() < width {
-            st.logical_of.push(None);
-            st.slots.push(SlotHealth::new());
+        if st.logical_of.len() < width {
+            st.spares_epoch += 1;
+            while st.logical_of.len() < width {
+                st.logical_of.push(None);
+                st.slots.push(SlotHealth::new());
+            }
         }
     }
 
@@ -518,7 +583,9 @@ impl HealthPlane {
                 st.suppressed[l] = false;
             }
         }
-        // A replaced physical (logical_of == None) rejoins the spare pool.
+        // A replaced physical (logical_of == None) rejoins the spare pool;
+        // either way capacity changed, so clamped slots may retry.
+        st.spares_epoch += 1;
         st.reinstated += 1;
         if let Some(m) = self.metrics.lock().unwrap().as_ref() {
             m.worker_reinstated.inc();
@@ -543,14 +610,44 @@ impl HealthPlane {
             return decision;
         }
         if st.suppressed[worker] {
-            st.suppressed_tasks += 1;
+            // A standing straggler — but spare capacity may have appeared
+            // since the suppression (remote join, reinstatement). Retry the
+            // backfill before absorbing the task.
+            let free = (0..inner_width).find(|&q| {
+                st.logical_of[q].is_none() && st.slots[q].state == SlotState::Active
+            });
+            if let Some(q) = free {
+                let p = st.map[worker];
+                st.map[worker] = q;
+                st.logical_of[q] = Some(worker);
+                if st.logical_of[p] == Some(worker) {
+                    st.logical_of[p] = None;
+                }
+                st.suppressed[worker] = false;
+                decision.deliver = Some(q);
+                log::info!(
+                    "health: suppressed logical position {worker} backfilled: \
+                     physical {p} -> spare {q}; suppression lifted"
+                );
+            } else {
+                st.suppressed_tasks += 1;
+            }
         } else {
             let p = st.map[worker];
             match st.slots[p].state {
                 SlotState::Active => decision.deliver = Some(p),
+                SlotState::Quarantined | SlotState::Probation
+                    if st.slots[p].clamped && st.slots[p].clamp_epoch == st.spares_epoch =>
+                {
+                    // The clamp already held against the current spare
+                    // pool: keep serving without repeating the failed
+                    // search or the admit_spares round-trip.
+                    decision.deliver = Some(p);
+                }
                 SlotState::Quarantined | SlotState::Probation => {
                     // Enact the eviction now, at the first send after the
-                    // quarantine decision.
+                    // quarantine decision (or retry a stale clamp against
+                    // a changed spare pool).
                     let free = (0..inner_width).find(|&q| {
                         st.logical_of[q].is_none() && st.slots[q].state == SlotState::Active
                     });
@@ -558,6 +655,9 @@ impl HealthPlane {
                         st.map[worker] = q;
                         st.logical_of[q] = Some(worker);
                         st.logical_of[p] = None;
+                        // No longer serving: rejoin the normal probation
+                        // path (probe eligibility filters on !clamped).
+                        st.slots[p].clamped = false;
                         decision.deliver = Some(q);
                         log::info!(
                             "health: logical position {worker} backfilled: \
@@ -569,14 +669,17 @@ impl HealthPlane {
                     } else if self.suppression_allowed(&st, worker) {
                         st.suppressed[worker] = true;
                         st.suppressed_tasks += 1;
+                        st.slots[p].clamped = false;
                         log::warn!(
                             "health: no spare for quarantined slot {p}; suppressing \
                              logical position {worker} as a standing straggler"
                         );
                     } else {
                         // The clamp held: quota would be unmeetable without
-                        // this position. The slot keeps serving.
+                        // this position. The slot keeps serving until the
+                        // spare pool changes.
                         st.slots[p].clamped = true;
+                        st.slots[p].clamp_epoch = st.spares_epoch;
                         decision.deliver = Some(p);
                     }
                 }
@@ -813,6 +916,7 @@ impl WorkerFleet for HealthGate {
 mod tests {
     use super::*;
     use crate::coding::BlockPool;
+    use std::sync::atomic::{AtomicUsize, Ordering};
     use std::sync::mpsc::Sender;
 
     fn policy_fastest(nw: usize, need: usize) -> CollectPolicy {
@@ -838,9 +942,11 @@ mod tests {
     }
 
     /// Recording fleet: remembers (physical, group) sends, exposes a reply
-    /// sender for hand-fed replies.
+    /// sender for hand-fed replies, counts `admit_spares` calls, and lets
+    /// tests grow the width mid-run (a remote spare join).
     struct RecordingFleet {
-        width: usize,
+        width: Arc<AtomicUsize>,
+        admits: Arc<AtomicUsize>,
         sends: Arc<Mutex<Vec<(usize, u64)>>>,
         tx: Sender<WorkerReply>,
         rx: Mutex<Option<Receiver<WorkerReply>>>,
@@ -851,7 +957,8 @@ mod tests {
             let (tx, rx) = channel();
             let sends = Arc::new(Mutex::new(Vec::new()));
             let fleet = RecordingFleet {
-                width,
+                width: Arc::new(AtomicUsize::new(width)),
+                admits: Arc::new(AtomicUsize::new(0)),
                 sends: sends.clone(),
                 tx: tx.clone(),
                 rx: Mutex::new(Some(rx)),
@@ -862,11 +969,11 @@ mod tests {
 
     impl WorkerFleet for RecordingFleet {
         fn num_workers(&self) -> usize {
-            self.width
+            self.width.load(Ordering::SeqCst)
         }
 
         fn send(&self, worker: usize, task: WorkerTask) -> Result<()> {
-            assert!(worker < self.width, "send past the inner width");
+            assert!(worker < self.num_workers(), "send past the inner width");
             self.sends.lock().unwrap().push((worker, task.group));
             Ok(())
         }
@@ -876,6 +983,11 @@ mod tests {
         }
 
         fn attach_metrics(&self, _metrics: Arc<ServingMetrics>) {}
+
+        fn admit_spares(&self) -> usize {
+            self.admits.fetch_add(1, Ordering::SeqCst);
+            0
+        }
 
         fn shutdown(self: Box<Self>) {
             drop(self.tx);
@@ -1144,5 +1256,114 @@ mod tests {
         // 2.5 + 2.5 = 5.0 > 3.0.
         assert_eq!(plane.snapshot()[2].state, SlotState::Quarantined);
         assert_eq!(plane.snapshot()[2].heartbeat_misses, 2);
+    }
+
+    #[test]
+    fn a_tightened_quota_lifts_a_standing_suppression() {
+        // 4 positions, no spares, need = 3: suppressing slot 1 is safe.
+        let (fleet, sends, _tx) = RecordingFleet::new(4);
+        let plane = Arc::new(HealthPlane::new(cfg(), 7));
+        let gate = HealthGate::attach(Box::new(fleet), 4, plane.clone());
+        plane.register_policy(0, &policy_fastest(4, 3));
+        for _ in 0..3 {
+            plane.observe_group(&[1], &[false; 4], &[]);
+        }
+        for w in 0..4 {
+            gate.send(w, task(1)).unwrap();
+        }
+        assert_eq!(plane.stats().suppressed, 1);
+        // An emergency E-raise tightens the quota to need = 4: the
+        // suppression must be lifted or every later group misses quota.
+        plane.register_policy(0, &policy_fastest(4, 4));
+        for w in 0..4 {
+            gate.send(w, task(2)).unwrap();
+        }
+        // Position 1 serves again (clamped back into service — no spare),
+        // and no further task was absorbed.
+        assert!(sends.lock().unwrap().iter().any(|&(p, g)| p == 1 && g == 2));
+        assert!(plane.snapshot()[1].clamped);
+        assert_eq!(plane.stats().suppressed, 1);
+    }
+
+    #[test]
+    fn a_clamped_slot_backfills_and_rejoins_probation_when_a_spare_appears() {
+        // 3 positions, no spares, need = 3: quarantining slot 0 clamps it.
+        let (fleet, sends, _tx) = RecordingFleet::new(3);
+        let width = fleet.width.clone();
+        let admits = fleet.admits.clone();
+        let plane = Arc::new(HealthPlane::new(cfg(), 7));
+        let gate = HealthGate::attach(Box::new(fleet), 3, plane.clone());
+        plane.register_policy(0, &policy_fastest(3, 3));
+        for _ in 0..3 {
+            plane.observe_group(&[0], &[false; 3], &[]);
+        }
+        for w in 0..3 {
+            gate.send(w, task(1)).unwrap();
+        }
+        assert!(plane.snapshot()[0].clamped);
+        assert_eq!(admits.load(Ordering::SeqCst), 1);
+        // While the spare pool is unchanged, re-sends skip the failed
+        // spare search (no extra admit_spares round-trips).
+        for w in 0..3 {
+            gate.send(w, task(2)).unwrap();
+        }
+        assert!(sends.lock().unwrap().iter().any(|&(p, g)| p == 0 && g == 2));
+        assert_eq!(admits.load(Ordering::SeqCst), 1);
+        // A spare joins: the clamp is retried, the position backfills, and
+        // the formerly clamped physical re-enters the probation path.
+        width.store(4, Ordering::SeqCst);
+        for w in 0..3 {
+            gate.send(w, task(3)).unwrap();
+        }
+        let got = sends.lock().unwrap().clone();
+        assert!(got.contains(&(3, 3)), "{got:?}");
+        assert!(got.contains(&(0, 3)), "probe expected: {got:?}");
+        assert_eq!(plane.snapshot()[3].logical, Some(0));
+        assert!(!plane.snapshot()[0].clamped);
+        assert_eq!(plane.snapshot()[0].state, SlotState::Probation);
+    }
+
+    #[test]
+    fn a_suppressed_position_backfills_when_a_spare_appears() {
+        // 4 positions, no spares, need = 3: slot 1 is suppressed.
+        let (fleet, sends, _tx) = RecordingFleet::new(4);
+        let width = fleet.width.clone();
+        let plane = Arc::new(HealthPlane::new(cfg(), 7));
+        let gate = HealthGate::attach(Box::new(fleet), 4, plane.clone());
+        plane.register_policy(0, &policy_fastest(4, 3));
+        for _ in 0..3 {
+            plane.observe_group(&[1], &[false; 4], &[]);
+        }
+        for w in 0..4 {
+            gate.send(w, task(1)).unwrap();
+        }
+        assert_eq!(plane.stats().suppressed, 1);
+        // A spare joins: the next send to the suppressed position backfills
+        // and lifts the suppression instead of absorbing the task.
+        width.store(5, Ordering::SeqCst);
+        for w in 0..4 {
+            gate.send(w, task(2)).unwrap();
+        }
+        assert!(sends.lock().unwrap().iter().any(|&(p, g)| p == 4 && g == 2));
+        assert_eq!(plane.snapshot()[4].logical, Some(1));
+        assert_eq!(plane.snapshot()[1].logical, None);
+        assert_eq!(plane.stats().suppressed, 1, "no further tasks absorbed");
+    }
+
+    #[test]
+    fn init_preserves_evidence_recorded_before_the_gate_wrap() {
+        // A remote monitor can report heartbeat misses between
+        // fleet.attach_health(plane) and the HealthGate wrap; attach must
+        // not wipe them.
+        let (fleet, _sends, _tx) = RecordingFleet::new(3);
+        let plane = Arc::new(HealthPlane::new(cfg(), 7));
+        plane.record_heartbeat_miss(2);
+        plane.record_heartbeat_miss(2);
+        assert_eq!(plane.snapshot()[2].state, SlotState::Quarantined);
+        let gate = HealthGate::attach(Box::new(fleet), 3, plane.clone());
+        assert_eq!(gate.num_workers(), 3);
+        assert_eq!(plane.snapshot()[2].heartbeat_misses, 2);
+        assert_eq!(plane.snapshot()[2].state, SlotState::Quarantined);
+        assert_eq!(plane.stats().quarantines, 1);
     }
 }
